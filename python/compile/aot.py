@@ -1,0 +1,104 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+Run once via ``make artifacts``; never on the request path.  Emits, per
+K ∈ {2,4,8}::
+
+    artifacts/assign_k{K}.hlo.txt
+    artifacts/step_k{K}.hlo.txt
+    artifacts/local_k{K}.hlo.txt
+
+plus ``artifacts/manifest.json`` describing every artifact's I/O signature
+for the rust loader (rust/src/runtime/manifest.rs).
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Graphs are lowered with ``return_tuple=True`` so every artifact returns a
+tuple; the rust side unwraps with ``Literal::to_tuple``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_desc(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def _out_descs(fn, args) -> list:
+    outs = jax.eval_shape(fn, *args)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    return [_spec_desc(o) for o in outs]
+
+
+def build_artifacts(out_dir: str, ks=model.KS, chunk: int = model.CHUNK,
+                    channels: int = model.CHANNELS) -> dict:
+    """Lower all graphs, write HLO text + manifest; return the manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for k in ks:
+        for name, (fn, args) in model.specs(k, chunk, channels).items():
+            art_name = f"{name}_k{k}"
+            text = to_hlo_text(jax.jit(fn).lower(*args))
+            fname = f"{art_name}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "name": art_name,
+                    "file": fname,
+                    "kind": name,
+                    "k": k,
+                    "chunk": chunk,
+                    "channels": channels,
+                    "inputs": [_spec_desc(a) for a in args],
+                    "outputs": _out_descs(fn, args),
+                    "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                }
+            )
+            print(f"  wrote {fname}  ({len(text)} chars)")
+    manifest = {
+        "format": 1,
+        "chunk": chunk,
+        "channels": channels,
+        "local_iters": model.LOCAL_ITERS,
+        "ks": list(ks),
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(entries)} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower blockms graphs to HLO text")
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build_artifacts(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

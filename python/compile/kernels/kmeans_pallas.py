@@ -1,0 +1,191 @@
+"""L1 — Pallas kernels for the per-block K-Means hot spot.
+
+The paper's compute hot spot is the per-pixel nearest-centroid search over
+every pixel of every block.  Here it is expressed as tiled Pallas kernels:
+
+- :func:`assign_pallas`  — nearest-centroid assignment (labels + min d²),
+- :func:`step_pallas`    — fused assignment + masked per-cluster partial
+  sums / counts / inertia accumulation (one Lloyd accumulation step).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles for
+MATLAB parpool workers; we tile for VMEM.  Pixels stream through the grid
+in ``TILE×C`` tiles (12 KiB at the default tile — far under VMEM) while the
+``K×C`` centroid panel stays resident, and the distance computation is
+written in the expanded form
+
+    d²(x, c) = ‖x‖² − 2·x@cᵀ + ‖c‖²
+
+so its inner term is a ``(TILE×C)·(C×K)`` matmul that maps onto the MXU
+systolic array on a real TPU.  Everything here lowers with
+``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic
+custom-calls — so these kernels are *structure-correct* TPU kernels
+validated numerically on CPU (see DESIGN.md §Perf for the VMEM/MXU
+estimates).
+
+The accumulating outputs of ``step`` revisit the same output block on every
+grid step (``index_map = lambda i: (0, 0)``) with a ``@pl.when(first)``
+zero-init — the standard Pallas reduction idiom.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default pixel-tile length.  48 KiB of pixel data per tile at C=3/f32 —
+# well under VMEM (≈16 MiB) with room for double-buffering, MXU/VPU
+# friendly (multiple of 8×128 lanes when reshaped), and measured fastest
+# on the CPU-interpret path too (EXPERIMENTS.md §Perf: 1024→4096 raised
+# step throughput 18.8→45.3 Mpx/s; 4 grid steps per chunk keep the
+# output-accumulator pattern exercised).
+DEFAULT_TILE = 4096
+
+
+def _sqdist_tile(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Expanded-form squared distances for one tile: f32[TILE, K].
+
+    The ``x @ c.T`` contraction is the MXU-eligible term; the squared-norm
+    rank-1 corrections ride on the VPU.  ``maximum(..., 0)`` guards the
+    tiny negative residues the expansion can produce in f32.
+    """
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # [TILE, 1]
+    c2 = jnp.sum(c * c, axis=1)  # [K]
+    d2 = x2 - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32) + c2[None, :]
+    return jnp.maximum(d2, 0.0)
+
+
+def _assign_kernel(x_ref, c_ref, labels_ref, mind2_ref):
+    """One grid step: assign a TILE of pixels against the resident centroids."""
+    x = x_ref[...]
+    c = c_ref[...]
+    d2 = _sqdist_tile(x, c)
+    labels_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    mind2_ref[...] = jnp.min(d2, axis=1)
+
+
+def _step_kernel(x_ref, m_ref, c_ref, sums_ref, counts_ref, inertia_ref):
+    """One grid step: fused assign + masked partial-sum accumulation.
+
+    ``sums/counts/inertia`` map every grid step onto the same output block,
+    so they act as VMEM-resident accumulators across the pixel stream.
+    """
+    first = pl.program_id(0) == 0
+
+    @pl.when(first)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        inertia_ref[...] = jnp.zeros_like(inertia_ref)
+
+    x = x_ref[...]
+    m = m_ref[...]
+    c = c_ref[...]
+    k = c.shape[0]
+
+    d2 = _sqdist_tile(x, c)
+    labels = jnp.argmin(d2, axis=1)
+    min_d2 = jnp.min(d2, axis=1)
+
+    # Masked one-hot membership, then the per-cluster reduction is another
+    # MXU-shaped contraction: onehotᵀ[K,TILE] @ x[TILE,C].
+    onehot = (labels[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+    onehot = onehot * m[:, None]
+    sums_ref[...] += jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
+    counts_ref[...] += jnp.sum(onehot, axis=0)
+    inertia_ref[...] += jnp.sum(min_d2 * m, keepdims=True)[None, :]
+
+
+def _effective_tile(p: int, tile: int) -> int:
+    """Clamp the tile to the chunk length (small chunks = single tile)."""
+    tile = min(tile, p)
+    if p % tile != 0:
+        raise ValueError(f"pixel count {p} must be a multiple of tile {tile}")
+    return tile
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def assign_pallas(
+    pixels: jnp.ndarray,
+    centroids: jnp.ndarray,
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+):
+    """Tiled nearest-centroid assignment.
+
+    Args:
+      pixels:    f32[P, C], P a multiple of ``tile``.
+      centroids: f32[K, C].
+    Returns:
+      ``(labels i32[P], min_d2 f32[P])`` — matching :func:`ref.assign`.
+    """
+    p, c_dim = pixels.shape
+    k, _ = centroids.shape
+    tile = _effective_tile(p, tile)
+    grid = (p // tile,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, c_dim), lambda i: (i, 0)),
+            pl.BlockSpec((k, c_dim), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), jnp.int32),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pixels, centroids)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def step_pallas(
+    pixels: jnp.ndarray,
+    mask: jnp.ndarray,
+    centroids: jnp.ndarray,
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+):
+    """Fused Lloyd accumulation step over a pixel chunk.
+
+    Args:
+      pixels:    f32[P, C], P a multiple of ``tile``.
+      mask:      f32[P] — 1.0 valid / 0.0 padding.
+      centroids: f32[K, C].
+    Returns:
+      ``(sums f32[K,C], counts f32[K], inertia f32[])`` matching
+      :func:`ref.step`.
+    """
+    p, c_dim = pixels.shape
+    k, _ = centroids.shape
+    tile = _effective_tile(p, tile)
+    grid = (p // tile,)
+    sums, counts, inertia = pl.pallas_call(
+        _step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, c_dim), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((k, c_dim), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, c_dim), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, c_dim), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pixels, mask, centroids)
+    return sums, counts, inertia[0, 0]

@@ -1,0 +1,101 @@
+"""Pure-jnp reference implementations (correctness oracle).
+
+Everything the Pallas kernels in :mod:`kmeans_pallas` compute is
+re-implemented here with plain ``jax.numpy`` ops, in the most direct way
+possible.  pytest (``python/tests/``) asserts the kernels match these
+references over swept shapes/dtypes/masks; the rust integration tests then
+assert the AOT artifacts match a rust port of the same math, closing the
+loop across all three layers.
+
+Conventions (shared with the kernels, the L2 model and the rust runtime):
+
+- ``pixels``    f32[P, C]   — one chunk of flattened block pixels.
+- ``mask``      f32[P]      — 1.0 for valid pixels, 0.0 for padding.
+- ``centroids`` f32[K, C]   — current cluster centres.
+- ``labels``    i32[P]      — argmin cluster index per pixel.
+- ``min_d2``    f32[P]      — squared distance to the owning centre.
+- ``sums``      f32[K, C]   — masked per-cluster coordinate sums.
+- ``counts``    f32[K]      — masked per-cluster member counts.
+- ``inertia``   f32[]       — masked sum of ``min_d2``.
+
+Ties in the argmin resolve to the lowest cluster index (jnp.argmin
+semantics); the kernels and the rust baseline must match this exactly so
+that global-mode parallel K-Means is bit-identical to the sequential
+baseline.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sqdist(pixels: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs squared euclidean distances, f32[P, K].
+
+    Computed the *direct* way — ``sum((x - c)^2)`` — rather than the
+    expanded ``x2 - 2xc + c2`` form the kernels use, so the test catches
+    algebra mistakes in the expansion.
+    """
+    diff = pixels[:, None, :] - centroids[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def assign(pixels: jnp.ndarray, centroids: jnp.ndarray):
+    """Nearest-centroid assignment.  Returns ``(labels i32[P], min_d2 f32[P])``."""
+    d2 = pairwise_sqdist(pixels, centroids)
+    labels = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    min_d2 = jnp.min(d2, axis=1)
+    return labels, min_d2
+
+
+def step(pixels: jnp.ndarray, mask: jnp.ndarray, centroids: jnp.ndarray):
+    """One masked Lloyd accumulation step.
+
+    Returns ``(sums f32[K,C], counts f32[K], inertia f32[])``.  The caller
+    (leader, in rust) reduces these across chunks/blocks and divides to get
+    the new centroids — that division deliberately does NOT happen here so
+    the reduction stays associative across any block partition.
+    """
+    k = centroids.shape[0]
+    labels, min_d2 = assign(pixels, centroids)
+    onehot = (labels[:, None] == jnp.arange(k)[None, :]).astype(pixels.dtype)
+    onehot = onehot * mask[:, None]
+    sums = onehot.T @ pixels
+    counts = jnp.sum(onehot, axis=0)
+    inertia = jnp.sum(min_d2 * mask)
+    return sums, counts, inertia
+
+
+def update_centroids(
+    sums: jnp.ndarray, counts: jnp.ndarray, old_centroids: jnp.ndarray
+) -> jnp.ndarray:
+    """Centroid update with empty-cluster carry-over.
+
+    A cluster that captured no pixels keeps its previous centre (the same
+    policy the rust sequential baseline uses), avoiding NaNs.
+    """
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    fresh = sums / safe
+    return jnp.where(counts[:, None] > 0.0, fresh, old_centroids)
+
+
+def local_kmeans(
+    pixels: jnp.ndarray,
+    mask: jnp.ndarray,
+    centroids: jnp.ndarray,
+    iters: int,
+):
+    """Full per-block Lloyd loop (reference for the ``local_k*`` artifact).
+
+    Returns ``(centroids f32[K,C], labels i32[P], inertia f32[])`` after
+    ``iters`` fixed iterations (the AOT artifact compiles the loop length
+    in; convergence short-circuiting happens at the rust layer by comparing
+    successive inertias).
+    """
+    c = centroids
+    for _ in range(iters):
+        sums, counts, _ = step(pixels, mask, c)
+        c = update_centroids(sums, counts, c)
+    labels, min_d2 = assign(pixels, c)
+    inertia = jnp.sum(min_d2 * mask)
+    return c, labels, inertia

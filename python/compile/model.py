@@ -1,0 +1,82 @@
+"""L2 — JAX compute graphs lowered AOT for the rust runtime.
+
+Each function here is a *fixed-shape* graph over one pixel chunk.  The rust
+coordinator streams arbitrary-size blocks through these graphs in chunks of
+``CHUNK`` pixels (zero-masking the tail), reduces the partial results, and
+owns the outer Lloyd loop — so the graphs stay associative and the same
+artifacts serve every block shape the paper studies.
+
+Artifacts produced by :mod:`aot` (per K ∈ {2, 4, 8}):
+
+- ``assign_k{K}``  — ``(pixels[P,C], centroids[K,C]) -> (labels, min_d2)``
+- ``step_k{K}``    — ``(pixels, mask, centroids) -> (sums, counts, inertia)``
+- ``local_k{K}``   — ``(pixels, mask, centroids) ->
+                       (centroids', labels, inertia)`` — a full
+  ``LOCAL_ITERS``-iteration per-block K-Means (the paper's per-block
+  ``blockproc(@kmeans)`` mode) compiled into one executable.
+
+All heavy lifting inside these graphs happens in the L1 Pallas kernels
+(:mod:`kernels.kmeans_pallas`); this layer adds the centroid update and the
+iteration ``scan`` — both cheap, both fusible by XLA.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kmeans_pallas as kp
+
+# Fixed chunk geometry shared with the rust runtime (see
+# rust/src/runtime/manifest.rs).  CHUNK is the pixel count per executable
+# call; CHANNELS is the band count (paper images are RGB).
+CHUNK = 16384
+CHANNELS = 3
+KS = (2, 4, 8)
+LOCAL_ITERS = 8
+
+
+def assign_fn(pixels: jnp.ndarray, centroids: jnp.ndarray):
+    """Chunk-level nearest-centroid assignment (labels + min d²)."""
+    return kp.assign_pallas(pixels, centroids)
+
+
+def step_fn(pixels: jnp.ndarray, mask: jnp.ndarray, centroids: jnp.ndarray):
+    """One masked Lloyd accumulation step over a chunk."""
+    return kp.step_pallas(pixels, mask, centroids)
+
+
+def _update(sums: jnp.ndarray, counts: jnp.ndarray, old: jnp.ndarray):
+    """Centroid update with empty-cluster carry-over (matches ref + rust)."""
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    fresh = sums / safe
+    return jnp.where(counts[:, None] > 0.0, fresh, old)
+
+
+def local_kmeans_fn(pixels: jnp.ndarray, mask: jnp.ndarray, centroids: jnp.ndarray):
+    """Per-block K-Means: LOCAL_ITERS Lloyd iterations + final assignment.
+
+    ``lax.scan`` keeps the HLO compact (one loop, not LOCAL_ITERS unrolled
+    copies) and lets XLA reuse the iteration buffers.
+    """
+
+    def body(c, _):
+        sums, counts, _inertia = kp.step_pallas(pixels, mask, c)
+        return _update(sums, counts, c), None
+
+    final_c, _ = jax.lax.scan(body, centroids, None, length=LOCAL_ITERS)
+    labels, min_d2 = kp.assign_pallas(pixels, final_c)
+    inertia = jnp.sum(min_d2 * mask)
+    return final_c, labels, inertia
+
+
+def specs(k: int, chunk: int = CHUNK, channels: int = CHANNELS):
+    """ShapeDtypeStructs for the three graphs at cluster count ``k``."""
+    px = jax.ShapeDtypeStruct((chunk, channels), jnp.float32)
+    msk = jax.ShapeDtypeStruct((chunk,), jnp.float32)
+    cen = jax.ShapeDtypeStruct((k, channels), jnp.float32)
+    return {
+        "assign": (assign_fn, (px, cen)),
+        "step": (step_fn, (px, msk, cen)),
+        "local": (local_kmeans_fn, (px, msk, cen)),
+    }

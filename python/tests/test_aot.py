@@ -1,0 +1,89 @@
+"""AOT path: artifacts lower, parse, and the manifest describes them truly."""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """Build a small-chunk artifact set once for the whole module."""
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build_artifacts(out, ks=(2, 4), chunk=1024, channels=3)
+    return out, manifest
+
+
+def test_manifest_lists_all_artifacts(built):
+    out, manifest = built
+    names = {e["name"] for e in manifest["artifacts"]}
+    assert names == {
+        "assign_k2", "step_k2", "local_k2",
+        "assign_k4", "step_k4", "local_k4",
+    }
+    assert manifest["chunk"] == 1024
+    assert manifest["channels"] == 3
+    assert manifest["local_iters"] == model.LOCAL_ITERS
+
+
+def test_files_exist_and_hash_match(built):
+    out, manifest = built
+    for e in manifest["artifacts"]:
+        path = os.path.join(out, e["file"])
+        assert os.path.exists(path)
+        text = open(path).read()
+        assert hashlib.sha256(text.encode()).hexdigest() == e["sha256"]
+
+
+def test_hlo_text_is_hlo(built):
+    out, manifest = built
+    for e in manifest["artifacts"]:
+        text = open(os.path.join(out, e["file"])).read()
+        assert text.startswith("HloModule"), e["name"]
+        assert "entry_computation_layout" in text
+        # No Mosaic custom-calls may leak through: interpret=True only.
+        assert "tpu_custom_call" not in text, e["name"]
+        assert "mosaic" not in text.lower(), e["name"]
+
+
+def test_manifest_signatures_match_model(built):
+    out, manifest = built
+    by_name = {e["name"]: e for e in manifest["artifacts"]}
+    step4 = by_name["step_k4"]
+    assert step4["inputs"] == [
+        {"shape": [1024, 3], "dtype": "float32"},
+        {"shape": [1024], "dtype": "float32"},
+        {"shape": [4, 3], "dtype": "float32"},
+    ]
+    assert step4["outputs"] == [
+        {"shape": [4, 3], "dtype": "float32"},
+        {"shape": [4], "dtype": "float32"},
+        {"shape": [], "dtype": "float32"},
+    ]
+    assign2 = by_name["assign_k2"]
+    assert assign2["outputs"][0] == {"shape": [1024], "dtype": "int32"}
+
+
+def test_manifest_json_round_trips(built):
+    out, manifest = built
+    loaded = json.load(open(os.path.join(out, "manifest.json")))
+    assert loaded == manifest
+
+
+def test_entry_layout_mentions_shapes(built):
+    """The HLO entry layout must carry the exact chunk shapes the rust
+    runtime will feed — a mismatch here is the classic silent-garbage bug."""
+    out, manifest = built
+    for e in manifest["artifacts"]:
+        head = open(os.path.join(out, e["file"])).readline()
+        k = e["k"]
+        if e["kind"] in ("step", "local"):
+            assert f"f32[{k},3]" in head
+            assert "f32[1024,3]" in head and "f32[1024]" in head
+        else:
+            assert f"f32[{k},3]" in head and "f32[1024,3]" in head

@@ -1,0 +1,184 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Two layers of coverage:
+
+- deterministic parametrized cases over the shapes the artifacts actually
+  ship (chunk tiles, K ∈ {2,4,8}, C = 3) plus adversarial inputs
+  (duplicate pixels → argmin ties, empty clusters, all-padding masks,
+  huge/tiny magnitudes);
+- hypothesis sweeps over random shapes/values within the kernel's shape
+  contract (P a multiple of the tile).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kmeans_pallas as kp
+from compile.kernels import ref
+
+TILE = 128  # small tile so tests sweep many grid steps cheaply
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def _rand_case(seed, p, k, c, mask_frac=0.8, scale=1.0):
+    g = _rng(seed)
+    x = jnp.asarray((g.normal(size=(p, c)) * scale).astype(np.float32))
+    m = jnp.asarray((g.random(p) < mask_frac).astype(np.float32))
+    cen = jnp.asarray((g.normal(size=(k, c)) * scale).astype(np.float32))
+    return x, m, cen
+
+
+def _assert_assign_matches(x, cen):
+    """Labels must match except where two centroids are so close to
+    equidistant that f32 rounding of the expanded-form distance
+    (x² − 2xc + c²) legitimately flips the argmin vs the direct form."""
+    l_ref, d_ref = ref.assign(x, cen)
+    l_pal, d_pal = kp.assign_pallas(x, cen, tile=TILE)
+    l_ref, d_ref = np.asarray(l_ref), np.asarray(d_ref)
+    l_pal, d_pal = np.asarray(l_pal), np.asarray(d_pal)
+    # all-pairs distances in f64 as the tie arbiter
+    xs = np.asarray(x, dtype=np.float64)
+    cs = np.asarray(cen, dtype=np.float64)
+    d_all = ((xs[:, None, :] - cs[None, :, :]) ** 2).sum(-1)
+    mism = l_ref != l_pal
+    if mism.any():
+        picked = d_all[np.arange(len(l_pal)), l_pal]
+        best = d_all.min(axis=1)
+        scale = np.maximum(best, 1e-12)
+        gap = (picked - best) / scale
+        assert gap[mism].max() < 1e-4, (
+            f"non-tie label mismatches: worst relative gap {gap[mism].max()}"
+        )
+    np.testing.assert_allclose(d_ref, d_pal, rtol=1e-3, atol=1e-3)
+
+
+def _assert_step_matches(x, m, cen, rtol=1e-4, atol=1e-4):
+    s_ref, n_ref, i_ref = ref.step(x, m, cen)
+    s_pal, n_pal, i_pal = kp.step_pallas(x, m, cen, tile=TILE)
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_pal), rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(n_ref), np.asarray(n_pal), rtol=rtol)
+    np.testing.assert_allclose(float(i_ref), float(i_pal), rtol=1e-3, atol=atol)
+
+
+@pytest.mark.parametrize("k", [2, 4, 8])
+@pytest.mark.parametrize("p", [TILE, 4 * TILE])
+@pytest.mark.parametrize("c", [1, 3, 4])
+def test_assign_matches_ref(k, p, c):
+    x, _, cen = _rand_case(1234 + k * 17 + p + c, p, k, c)
+    _assert_assign_matches(x, cen)
+
+
+@pytest.mark.parametrize("k", [2, 4, 8])
+@pytest.mark.parametrize("p", [TILE, 4 * TILE])
+@pytest.mark.parametrize("c", [1, 3, 4])
+def test_step_matches_ref(k, p, c):
+    x, m, cen = _rand_case(4321 + k * 31 + p + c, p, k, c)
+    _assert_step_matches(x, m, cen)
+
+
+def test_argmin_tie_breaks_low_index():
+    """Pixels equidistant from several centroids must pick the lowest index
+    (jnp.argmin semantics) — the rust baseline mirrors this, and global-mode
+    equivalence depends on it."""
+    p, c = TILE, 3
+    x = jnp.zeros((p, c), jnp.float32)
+    # all four centroids at distance 1 from the origin
+    cen = jnp.asarray(
+        [[1, 0, 0], [0, 1, 0], [0, 0, 1], [-1, 0, 0]], dtype=jnp.float32
+    )
+    labels, _ = kp.assign_pallas(x, cen, tile=TILE)
+    np.testing.assert_array_equal(np.asarray(labels), np.zeros(p, np.int32))
+
+
+def test_duplicate_pixels_consistent():
+    x, _, cen = _rand_case(7, TILE, 4, 3)
+    x = jnp.tile(x[:1], (TILE, 1))  # every pixel identical
+    labels, d2 = kp.assign_pallas(x, cen, tile=TILE)
+    assert len(np.unique(np.asarray(labels))) == 1
+    assert np.allclose(np.asarray(d2), np.asarray(d2)[0])
+
+
+def test_step_all_padding_mask_is_zero():
+    x, _, cen = _rand_case(8, 2 * TILE, 4, 3)
+    m = jnp.zeros((2 * TILE,), jnp.float32)
+    s, n, i = kp.step_pallas(x, m, cen, tile=TILE)
+    assert np.allclose(np.asarray(s), 0.0)
+    assert np.allclose(np.asarray(n), 0.0)
+    assert float(i) == 0.0
+
+
+def test_step_empty_cluster_contributes_zero():
+    """A centroid far from every pixel gets zero count and zero sum."""
+    g = _rng(9)
+    x = jnp.asarray(g.normal(size=(TILE, 3)).astype(np.float32))
+    m = jnp.ones((TILE,), jnp.float32)
+    cen = jnp.asarray(
+        np.vstack([np.zeros((1, 3)), np.full((1, 3), 1e6)]).astype(np.float32)
+    )
+    s, n, _ = kp.step_pallas(x, m, cen, tile=TILE)
+    assert float(np.asarray(n)[1]) == 0.0
+    assert np.allclose(np.asarray(s)[1], 0.0)
+
+
+def test_counts_sum_to_mask_total():
+    x, m, cen = _rand_case(10, 4 * TILE, 8, 3, mask_frac=0.5)
+    _, n, _ = kp.step_pallas(x, m, cen, tile=TILE)
+    np.testing.assert_allclose(float(np.sum(np.asarray(n))), float(jnp.sum(m)), rtol=1e-6)
+
+
+def test_large_magnitudes_stable():
+    """The expanded d² form loses precision at huge magnitudes; the kernel
+    clamps at 0 and must still agree with ref on labels."""
+    x, m, cen = _rand_case(11, TILE, 4, 3, scale=1e3)
+    l_ref, _ = ref.assign(x, cen)
+    l_pal, _ = kp.assign_pallas(x, cen, tile=TILE)
+    np.testing.assert_array_equal(np.asarray(l_ref), np.asarray(l_pal))
+
+
+def test_pixel_scale_8bit_range():
+    """Realistic image data: values in [0, 255] (the paper's 8/16-bit DNs)."""
+    g = _rng(12)
+    x = jnp.asarray((g.random((2 * TILE, 3)) * 255).astype(np.float32))
+    cen = jnp.asarray((g.random((4, 3)) * 255).astype(np.float32))
+    m = jnp.ones((2 * TILE,), jnp.float32)
+    _assert_step_matches(x, m, cen, rtol=1e-3, atol=1e-2)
+
+
+def test_rejects_non_multiple_tile():
+    x = jnp.zeros((TILE + 1, 3), jnp.float32)
+    cen = jnp.zeros((2, 3), jnp.float32)
+    with pytest.raises(ValueError, match="multiple"):
+        kp.assign_pallas(x, cen, tile=TILE)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 4),
+    k=st.integers(2, 8),
+    c=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+    mask_frac=st.floats(0.0, 1.0),
+)
+def test_hypothesis_step_matches_ref(tiles, k, c, seed, mask_frac):
+    x, m, cen = _rand_case(seed, tiles * TILE, k, c, mask_frac=mask_frac)
+    _assert_step_matches(x, m, cen)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 4),
+    k=st.integers(2, 8),
+    c=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+)
+def test_hypothesis_assign_matches_ref(tiles, k, c, seed, scale):
+    x, _, cen = _rand_case(seed, tiles * TILE, k, c, scale=scale)
+    _assert_assign_matches(x, cen)

@@ -1,0 +1,121 @@
+"""L2 correctness: the AOT-able graphs vs the reference Lloyd loop."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+CHUNK = model.CHUNK
+
+
+def _case(seed, p=CHUNK, k=4, c=model.CHANNELS, mask_frac=0.9):
+    g = np.random.default_rng(seed)
+    x = jnp.asarray((g.random((p, c)) * 255).astype(np.float32))
+    m = jnp.asarray((g.random(p) < mask_frac).astype(np.float32))
+    cen = jnp.asarray((g.random((k, c)) * 255).astype(np.float32))
+    return x, m, cen
+
+
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_assign_fn_matches_ref(k):
+    x, _, cen = _case(100 + k, k=k)
+    l1, d1 = model.assign_fn(x, cen)
+    l2, d2 = ref.assign(x, cen)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-3, atol=1e-2)
+
+
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_step_fn_matches_ref(k):
+    x, m, cen = _case(200 + k, k=k)
+    s1, n1, i1 = model.step_fn(x, m, cen)
+    s2, n2, i2 = ref.step(x, m, cen)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(n1), np.asarray(n2), rtol=1e-6)
+    np.testing.assert_allclose(float(i1), float(i2), rtol=1e-4)
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_local_kmeans_matches_ref_loop(k):
+    x, m, cen = _case(300 + k, k=k)
+    c1, l1, i1 = model.local_kmeans_fn(x, m, cen)
+    c2, l2, i2 = ref.local_kmeans(x, m, cen, model.LOCAL_ITERS)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-4, atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    np.testing.assert_allclose(float(i1), float(i2), rtol=1e-4)
+
+
+def test_local_kmeans_reduces_inertia():
+    """Inertia after LOCAL_ITERS iterations ≤ inertia at the init centroids."""
+    x, m, cen = _case(42)
+    _, _, i0 = ref.step(x, m, cen)
+    _, _, i_final = model.local_kmeans_fn(x, m, cen)
+    assert float(i_final) <= float(i0) + 1e-3
+
+
+def test_update_empty_cluster_keeps_old_centre():
+    old = jnp.asarray([[1.0, 2.0, 3.0], [4.0, 5.0, 6.0]])
+    sums = jnp.asarray([[10.0, 10.0, 10.0], [0.0, 0.0, 0.0]])
+    counts = jnp.asarray([2.0, 0.0])
+    new = model._update(sums, counts, old)
+    np.testing.assert_allclose(np.asarray(new)[0], [5.0, 5.0, 5.0])
+    np.testing.assert_allclose(np.asarray(new)[1], [4.0, 5.0, 6.0])
+
+
+def test_step_is_block_associative():
+    """Summing two half-chunk steps equals one full-chunk step — the exact
+    property the rust leader's cross-block reduction relies on."""
+    x, m, cen = _case(7)
+    h = CHUNK // 2
+    s_a, n_a, i_a = model.step_fn(
+        jnp.concatenate([x[:h], jnp.zeros_like(x[:h])]),
+        jnp.concatenate([m[:h], jnp.zeros_like(m[:h])]),
+        cen,
+    )
+    s_b, n_b, i_b = model.step_fn(
+        jnp.concatenate([x[h:], jnp.zeros_like(x[h:])]),
+        jnp.concatenate([m[h:], jnp.zeros_like(m[h:])]),
+        cen,
+    )
+    s, n, i = model.step_fn(x, m, cen)
+    np.testing.assert_allclose(np.asarray(s_a + s_b), np.asarray(s), rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(n_a + n_b), np.asarray(n), rtol=1e-6)
+    np.testing.assert_allclose(float(i_a + i_b), float(i), rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_local_monotone_under_seeds(k, seed):
+    """Lloyd never increases inertia between iterations, any seed, any K."""
+    x, m, cen = _case(seed, k=k)
+    c = cen
+    prev = float(ref.step(x, m, c)[2])
+    for _ in range(4):
+        s, n, _ = ref.step(x, m, c)
+        c = model._update(s, n, c)
+        cur = float(ref.step(x, m, c)[2])
+        assert cur <= prev * (1 + 1e-5) + 1e-3
+        prev = cur
+
+
+def test_specs_cover_all_kinds():
+    sp = model.specs(4)
+    assert set(sp) == {"assign", "step", "local"}
+    fn, args = sp["step"]
+    assert args[0].shape == (model.CHUNK, model.CHANNELS)
+    assert args[1].shape == (model.CHUNK,)
+    assert args[2].shape == (4, model.CHANNELS)
+
+
+def test_graphs_lower_without_python_callbacks():
+    """The lowered HLO must be self-contained (no host callbacks) or the
+    rust runtime could not execute it."""
+    for kind, (fn, args) in model.specs(2).items():
+        txt = jax.jit(fn).lower(*args).compiler_ir("stablehlo")
+        assert "callback" not in str(txt), f"{kind} captured a python callback"

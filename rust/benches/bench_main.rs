@@ -1,0 +1,275 @@
+//! `cargo bench` entry point (criterion is not vendored offline, so this
+//! is a self-contained harness on `blockms::metrics` + `blockms::util`).
+//!
+//! Two tiers:
+//!
+//! 1. **micro** — steady-state throughput of every hot-path component
+//!    (native/PJRT kernel step, block crop, strip reads, assembly,
+//!    coordinator end-to-end, scene generation);
+//! 2. **paper** — regenerates every table (1–19) and the Cases 1–3
+//!    analysis at bench scale, printing the paper-shaped rows. These are
+//!    the `cargo bench` analogues of the paper's entire evaluation
+//!    section; `blockms paper-tables --scale 1` reproduces them at full
+//!    size.
+//!
+//! Filter by substring: `cargo bench -- micro` or `cargo bench -- table12`.
+//! Scale override: `BLOCKMS_BENCH_SCALE=0.25 cargo bench -- paper`.
+
+use std::sync::Arc;
+
+use blockms::bench::cases::{render_cases, run_cases};
+use blockms::bench::tables::{all_table_ids, run_table, SweepOpts};
+use blockms::blocks::{BlockPlan, BlockShape};
+use blockms::coordinator::{ClusterConfig, Coordinator, CoordinatorConfig, Engine};
+use blockms::image::SyntheticOrtho;
+use blockms::kmeans::math;
+use blockms::metrics::time_n;
+use blockms::runtime::{find_artifacts_dir, ArtifactSet, KernelEngine};
+use blockms::stripstore::{Backing, StripStore};
+use blockms::util::prng::Rng;
+use blockms::util::stats::Summary;
+
+struct Bench {
+    filter: Option<String>,
+}
+
+impl Bench {
+    fn new() -> Bench {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with("--"))
+            .map(|s| s.to_lowercase());
+        Bench { filter }
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.to_lowercase().contains(f),
+            None => true,
+        }
+    }
+
+    /// Run `f` `samples` times after warmup; print a summary line.
+    fn run(&self, name: &str, samples: usize, mut f: impl FnMut()) {
+        if !self.enabled(name) {
+            return;
+        }
+        for _ in 0..2 {
+            f(); // warmup
+        }
+        let times = time_n(samples, &mut f);
+        let s = Summary::of(&times);
+        println!(
+            "bench {name:<44} median {:>12} mean {:>12} ±{:>10} (n={})",
+            fmt_t(s.median),
+            fmt_t(s.mean),
+            fmt_t(s.stddev),
+            s.count
+        );
+    }
+
+    /// Throughput variant: prints M items/sec based on the median.
+    fn run_throughput(
+        &self,
+        name: &str,
+        samples: usize,
+        items: usize,
+        unit: &str,
+        mut f: impl FnMut(),
+    ) {
+        if !self.enabled(name) {
+            return;
+        }
+        for _ in 0..2 {
+            f();
+        }
+        let times = time_n(samples, &mut f);
+        let s = Summary::of(&times);
+        println!(
+            "bench {name:<44} median {:>12} | {:>9.2} M{unit}/s (n={})",
+            fmt_t(s.median),
+            items as f64 / s.median / 1e6,
+            s.count
+        );
+    }
+}
+
+fn fmt_t(secs: f64) -> String {
+    blockms::util::fmt::duration(secs)
+}
+
+fn main() {
+    let b = Bench::new();
+    println!("== blockms bench suite (1-core container; see DESIGN.md §5) ==\n");
+
+    micro_kernels(&b);
+    micro_substrates(&b);
+    micro_coordinator(&b);
+    paper_tables(&b);
+    paper_cases(&b);
+}
+
+// --------------------------------------------------------------------------
+// tier 1: micro benches
+// --------------------------------------------------------------------------
+
+fn micro_kernels(b: &Bench) {
+    let mut rng = Rng::new(42);
+    let n = 1 << 17; // 131072 pixels
+    let px: Vec<f32> = (0..n * 3).map(|_| rng.next_f32() * 255.0).collect();
+    let cen: Vec<f32> = (0..4 * 3).map(|_| rng.next_f32() * 255.0).collect();
+
+    b.run_throughput("micro/native_step_131k_px_k4", 15, n, "px", || {
+        std::hint::black_box(math::step(&px, &cen, 4, 3));
+    });
+
+    let mut labels = Vec::new();
+    b.run_throughput("micro/native_assign_131k_px_k4", 15, n, "px", || {
+        std::hint::black_box(math::assign_all(&px, &cen, 4, 3, &mut labels));
+    });
+
+    if let Some(dir) = find_artifacts_dir() {
+        let set = ArtifactSet::load(dir).expect("artifacts");
+        let mut eng = KernelEngine::load(&set, 4).expect("engine");
+        b.run_throughput("micro/pjrt_step_131k_px_k4", 10, n, "px", || {
+            std::hint::black_box(eng.step_block(&px, &cen).unwrap());
+        });
+        let mut l2 = Vec::new();
+        b.run_throughput("micro/pjrt_assign_131k_px_k4", 10, n, "px", || {
+            std::hint::black_box(eng.assign_block(&px, &cen, &mut l2).unwrap());
+        });
+    } else {
+        println!("bench micro/pjrt_* skipped (no artifacts; run `make artifacts`)");
+    }
+}
+
+fn micro_substrates(b: &Bench) {
+    let img = SyntheticOrtho::default().with_seed(1).generate(1024, 1024);
+
+    b.run("micro/synthetic_generate_512x512", 8, || {
+        std::hint::black_box(SyntheticOrtho::default().with_seed(2).generate(512, 512));
+    });
+
+    let plan = BlockPlan::new(1024, 1024, BlockShape::Square { side: 256 });
+    let mut buf = Vec::new();
+    b.run_throughput("micro/crop_16_blocks_1Mpx", 20, 1 << 20, "px", || {
+        for r in plan.iter() {
+            img.crop_into(r, &mut buf);
+            std::hint::black_box(buf.len());
+        }
+    });
+
+    let store = StripStore::new(&img, 64, Backing::Memory).unwrap();
+    let mut reader = store.reader().unwrap();
+    b.run_throughput("micro/stripstore_mem_read_1Mpx", 20, 1 << 20, "px", || {
+        for r in plan.iter() {
+            reader.read_block(r, &mut buf).unwrap();
+            std::hint::black_box(buf.len());
+        }
+    });
+
+    let dir = std::env::temp_dir().join("blockms_bench_strips");
+    let fstore = StripStore::new(&img, 64, Backing::File(dir)).unwrap();
+    let mut freader = fstore.reader().unwrap();
+    b.run_throughput("micro/stripstore_file_read_1Mpx", 10, 1 << 20, "px", || {
+        for r in plan.iter() {
+            freader.read_block(r, &mut buf).unwrap();
+            std::hint::black_box(buf.len());
+        }
+    });
+
+    use blockms::blocks::LabelAssembler;
+    let block_labels: Vec<Vec<u32>> = plan.iter().map(|r| vec![1u32; r.area()]).collect();
+    b.run_throughput("micro/assemble_1Mpx", 20, 1 << 20, "px", || {
+        let mut asm = LabelAssembler::new(1024, 1024);
+        for (r, l) in plan.iter().zip(&block_labels) {
+            asm.place(r, l).unwrap();
+        }
+        std::hint::black_box(asm.finish().unwrap().len());
+    });
+}
+
+fn micro_coordinator(b: &Bench) {
+    let img = Arc::new(SyntheticOrtho::default().with_seed(3).generate(512, 512));
+    let plan = Arc::new(BlockPlan::new(512, 512, BlockShape::Cols { band_cols: 103 }));
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 4,
+        ..Default::default()
+    });
+    let cfg = ClusterConfig {
+        k: 4,
+        fixed_iters: Some(3),
+        ..Default::default()
+    };
+    b.run("micro/coordinator_e2e_512px_3iters_4w", 8, || {
+        std::hint::black_box(coord.cluster(&img, &plan, &cfg).unwrap());
+    });
+
+    if find_artifacts_dir().is_some() {
+        let coord_pjrt = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            engine: Engine::Pjrt {
+                artifacts_dir: None,
+            },
+            ..Default::default()
+        });
+        b.run("micro/coordinator_e2e_pjrt_512px_3iters_2w", 3, || {
+            std::hint::black_box(coord_pjrt.cluster(&img, &plan, &cfg).unwrap());
+        });
+    }
+
+    b.run("micro/seq_kmeans_512px_3iters", 8, || {
+        let c = coord.serial(&img, &cfg).unwrap();
+        std::hint::black_box(c.inertia);
+    });
+}
+
+// --------------------------------------------------------------------------
+// tier 2: the paper's evaluation
+// --------------------------------------------------------------------------
+
+fn bench_scale() -> f64 {
+    std::env::var("BLOCKMS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.12)
+}
+
+fn paper_tables(b: &Bench) {
+    let opts = SweepOpts {
+        scale: bench_scale(),
+        ..Default::default()
+    };
+    for id in all_table_ids() {
+        let name = format!("paper/table{id:02}");
+        if !b.enabled(&name) {
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        match run_table(id, &opts) {
+            Ok(text) => {
+                println!("bench {name} ({:.2}s):", t0.elapsed().as_secs_f64());
+                println!("{text}");
+            }
+            Err(e) => println!("bench {name} FAILED: {e:#}"),
+        }
+    }
+}
+
+fn paper_cases(b: &Bench) {
+    let name = "paper/cases1-3";
+    if !b.enabled(name) {
+        return;
+    }
+    let opts = SweepOpts {
+        scale: bench_scale(),
+        ..Default::default()
+    };
+    match run_cases(&opts) {
+        Ok(results) => {
+            println!("bench {name}:");
+            print!("{}", render_cases(&results));
+        }
+        Err(e) => println!("bench {name} FAILED: {e:#}"),
+    }
+}

@@ -1,0 +1,157 @@
+//! §4 Cases 1–3: the block-size / file-access analysis.
+//!
+//! The paper demonstrates block-shape influence on `blockproc` I/O with
+//! three block sizes on the 4656×5793 image (Cluster 2):
+//!
+//! - Case 1 (typical): square `[1200 1200]` — 4 blocks wide, every strip
+//!   read ≈4×, elapsed 0.256/0.147/0.143 s at workers 2/4/8;
+//! - Case 2 (worst for I/O): row `[1200 4656]` — each strip read once;
+//! - Case 3 (best overall): column `[5793 1000]` — file read ≈5×.
+//!
+//! `run_cases` reproduces the analysis: closed-form + measured strip
+//! reads, amplification, and replayed elapsed time per worker count.
+
+use anyhow::Result;
+
+use super::runner::{ExperimentConfig, Runner};
+use super::tables::{hero_shape, SweepOpts};
+use super::workloads::{Workload, HERO_SIZE};
+use crate::blocks::{ApproachKind, BlockPlan};
+use crate::stripstore::read_amplification;
+use crate::util::fmt::{ratio, secs, Table};
+
+/// One case's numbers.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub case_no: usize,
+    pub label: &'static str,
+    pub approach: ApproachKind,
+    pub block_dims: (usize, usize),
+    pub blocks: usize,
+    pub strip_reads_per_pass: usize,
+    pub amplification: f64,
+    /// Elapsed (replayed) seconds at workers 2, 4, 8.
+    pub elapsed: [f64; 3],
+}
+
+/// The paper's case ordering and naming.
+const CASES: [(usize, &str, ApproachKind); 3] = [
+    (1, "Typical case — Square-Block", ApproachKind::Square),
+    (2, "Worst case — Row-Shaped Block", ApproachKind::Rows),
+    (3, "Best case — Column-Shaped Block", ApproachKind::Cols),
+];
+
+/// Run the three cases at the given sweep options.
+pub fn run_cases(opts: &SweepOpts) -> Result<Vec<CaseResult>> {
+    let workload = Workload::new(HERO_SIZE, opts.scale, opts.seed);
+    let strip_rows = ((opts.strip_rows as f64) * opts.scale).round().max(4.0) as usize;
+    let mut out = Vec::new();
+    let mut runner = Runner::new();
+    for (case_no, label, approach) in CASES {
+        let shape = hero_shape(approach, opts.scale);
+        let plan = BlockPlan::new(workload.height, workload.width, shape);
+        let (reads, _strips, amp) = read_amplification(&plan, strip_rows);
+        let mut elapsed = [0.0f64; 3];
+        for (i, workers) in [2usize, 4, 8].into_iter().enumerate() {
+            let mut cfg = ExperimentConfig::new(workload.clone(), shape, 2, workers);
+            cfg.engine = opts.engine;
+            cfg.iters = opts.iters;
+            cfg.strip_rows = strip_rows;
+            let row = runner.measure(&cfg)?;
+            elapsed[i] = row.parallel_secs;
+        }
+        out.push(CaseResult {
+            case_no,
+            label,
+            approach,
+            block_dims: shape.block_dims(workload.height, workload.width),
+            blocks: plan.len(),
+            strip_reads_per_pass: reads,
+            amplification: amp,
+            elapsed,
+        });
+    }
+    Ok(out)
+}
+
+/// Render the case analysis as a paper-style table.
+pub fn render_cases(results: &[CaseResult]) -> String {
+    let mut t = Table::new(format!(
+        "Influence of block size on blockproc performance (4656x5793, Cluster 2)"
+    ))
+    .header(&[
+        "Case",
+        "Block",
+        "Blocks",
+        "Strip reads/pass",
+        "Amplification",
+        "T(2w)",
+        "T(4w)",
+        "T(8w)",
+    ]);
+    for r in results {
+        t.row(vec![
+            format!("Case {}: {}", r.case_no, r.label),
+            format!("[{} {}]", r.block_dims.0, r.block_dims.1),
+            r.blocks.to_string(),
+            r.strip_reads_per_pass.to_string(),
+            ratio(r.amplification),
+            secs(r.elapsed[0]),
+            secs(r.elapsed[1]),
+            secs(r.elapsed[2]),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_reproduce_paper_amplifications() {
+        // At scale 1 geometry (we can compute plans without running):
+        let opts = SweepOpts {
+            scale: 1.0,
+            ..Default::default()
+        };
+        let strip_rows = opts.strip_rows; // 64 at scale 1
+        for (case_no, _, approach) in CASES {
+            let shape = hero_shape(approach, 1.0);
+            let plan = BlockPlan::new(5793, 4656, shape);
+            let (_, _, amp) = read_amplification(&plan, strip_rows);
+            match case_no {
+                // 4656/1200 = 3.88 -> 4 blocks wide; strip-misalignment at
+                // block row boundaries adds a few % on top of the paper's
+                // "reads every strip 4 times".
+                1 => assert!((amp - 4.0).abs() < 0.2, "square amp {amp}"),
+                2 => assert!(amp < 1.1, "row amp {amp}"),
+                3 => assert!((amp - 5.0).abs() < 0.01, "col amp {amp}"),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn run_cases_small_scale() {
+        let opts = SweepOpts {
+            scale: 0.05,
+            iters: 2,
+            ..Default::default()
+        };
+        let results = run_cases(&opts).unwrap();
+        assert_eq!(results.len(), 3);
+        for r in &results {
+            assert!(r.amplification >= 1.0);
+            assert!(r.elapsed.iter().all(|&t| t > 0.0));
+            // more workers never slower in replay
+            assert!(r.elapsed[1] <= r.elapsed[0] * 1.05);
+            assert!(r.elapsed[2] <= r.elapsed[1] * 1.10);
+        }
+        // rendering mentions all three cases
+        let text = render_cases(&results);
+        for c in ["Case 1", "Case 2", "Case 3"] {
+            assert!(text.contains(c), "{text}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper-table bench harness: workloads, sweeps, table printers.
+//!
+//! Regenerates every table and figure of the paper's evaluation — see
+//! DESIGN.md §3 for the experiment index and `blockms paper-tables` /
+//! `cargo bench` for the entry points.
+
+pub mod cases;
+pub mod runner;
+pub mod tables;
+pub mod workloads;
+
+pub use runner::{ExperimentConfig, ExperimentRow, Runner};
+pub use workloads::{paper_sizes, PaperSize, Workload};

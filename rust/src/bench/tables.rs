@@ -1,0 +1,360 @@
+//! Paper table reproduction: Tables 1–19 and the Figure 8–20 series.
+//!
+//! Each paper table is a sweep cell-set over (approach, K, workers,
+//! data sizes). `run_table(id, opts)` regenerates one table as formatted
+//! text (identical columns to the paper: Data Size / Serial / Parallel /
+//! Speedup / Efficiency) plus the figure series (speedup per size) that
+//! the corresponding graph plots.
+
+use anyhow::{bail, Result};
+
+use super::runner::{EngineChoice, ExperimentConfig, ExperimentRow, Runner};
+use super::workloads::{PaperSize, Workload, HERO_SIZE, PAPER_SIZES};
+use crate::blocks::shape::ApproachKind;
+use crate::blocks::BlockShape;
+use crate::util::fmt::{ratio, secs, Table};
+
+/// Sweep options shared by all tables.
+#[derive(Clone, Debug)]
+pub struct SweepOpts {
+    /// Per-side scale factor on the paper dimensions (1.0 = full size).
+    pub scale: f64,
+    pub seed: u64,
+    pub engine: EngineChoice,
+    /// Fixed Lloyd iterations per run.
+    pub iters: usize,
+    pub strip_rows: usize,
+}
+
+impl Default for SweepOpts {
+    fn default() -> Self {
+        SweepOpts {
+            scale: 0.25,
+            seed: 0xB_10C,
+            engine: EngineChoice::Native,
+            iters: 6,
+            strip_rows: 64,
+        }
+    }
+}
+
+/// Parameters of one paper table.
+#[derive(Clone, Copy, Debug)]
+pub enum TableSpec {
+    /// Tables 1–11: one (approach, k, workers) over all nine sizes.
+    Sweep {
+        approach: ApproachKind,
+        k: usize,
+        workers: usize,
+        figure: usize,
+    },
+    /// Tables 12–14 / 16–18: hero size, one approach, workers 2/4/8.
+    Hero { approach: ApproachKind, k: usize },
+    /// Tables 15 / 19: approach comparison at the paper block sizes.
+    Comparison { k: usize, figure: usize },
+}
+
+/// The paper's table index.
+pub fn spec(table: usize) -> Result<TableSpec> {
+    use ApproachKind::*;
+    Ok(match table {
+        1 => TableSpec::Sweep { approach: Rows, k: 2, workers: 2, figure: 8 },
+        2 => TableSpec::Sweep { approach: Rows, k: 2, workers: 4, figure: 9 },
+        3 => TableSpec::Sweep { approach: Cols, k: 2, workers: 2, figure: 10 },
+        4 => TableSpec::Sweep { approach: Cols, k: 2, workers: 4, figure: 11 },
+        5 => TableSpec::Sweep { approach: Square, k: 2, workers: 2, figure: 12 },
+        6 => TableSpec::Sweep { approach: Square, k: 2, workers: 4, figure: 13 },
+        7 => TableSpec::Sweep { approach: Rows, k: 4, workers: 2, figure: 14 },
+        8 => TableSpec::Sweep { approach: Rows, k: 4, workers: 4, figure: 15 },
+        9 => TableSpec::Sweep { approach: Cols, k: 4, workers: 4, figure: 16 },
+        10 => TableSpec::Sweep { approach: Square, k: 4, workers: 4, figure: 17 },
+        11 => TableSpec::Sweep { approach: Square, k: 4, workers: 8, figure: 18 },
+        12 => TableSpec::Hero { approach: Rows, k: 2 },
+        13 => TableSpec::Hero { approach: Cols, k: 2 },
+        14 => TableSpec::Hero { approach: Square, k: 2 },
+        15 => TableSpec::Comparison { k: 2, figure: 19 },
+        16 => TableSpec::Hero { approach: Rows, k: 4 },
+        17 => TableSpec::Hero { approach: Cols, k: 4 },
+        18 => TableSpec::Hero { approach: Square, k: 4 },
+        19 => TableSpec::Comparison { k: 4, figure: 20 },
+        other => bail!("no such paper table: {other} (1..=19)"),
+    })
+}
+
+pub fn all_table_ids() -> Vec<usize> {
+    (1..=19).collect()
+}
+
+/// The paper's per-approach block geometry for the sweep tables,
+/// parameterized to keep the three approaches' block counts comparable
+/// (see `BlockShape::paper_default`).
+fn sweep_shape(kind: ApproachKind, height: usize, width: usize) -> BlockShape {
+    BlockShape::paper_default(kind, height, width)
+}
+
+/// The paper's *exact* hero block sizes — `[1200 4656]`, `[5793 1000]`,
+/// `[1200 1200]` — scaled with the workload.
+pub fn hero_shape(kind: ApproachKind, scale: f64) -> BlockShape {
+    let s = |v: usize| ((v as f64 * scale).round() as usize).max(1);
+    match kind {
+        ApproachKind::Rows => BlockShape::Custom {
+            rows: s(1200),
+            cols: s(4656),
+        },
+        ApproachKind::Cols => BlockShape::Custom {
+            rows: s(5793),
+            cols: s(1000),
+        },
+        ApproachKind::Square => BlockShape::Custom {
+            rows: s(1200),
+            cols: s(1200),
+        },
+    }
+}
+
+fn cell(
+    runner: &mut Runner,
+    opts: &SweepOpts,
+    size: PaperSize,
+    shape: BlockShape,
+    k: usize,
+    workers: usize,
+) -> Result<ExperimentRow> {
+    let workload = Workload::new(size, opts.scale, opts.seed);
+    let mut cfg = ExperimentConfig::new(workload, shape, k, workers);
+    cfg.engine = opts.engine;
+    cfg.iters = opts.iters;
+    cfg.strip_rows = ((opts.strip_rows as f64) * opts.scale).round().max(4.0) as usize;
+    runner.measure(&cfg)
+}
+
+fn paper_columns(t: Table) -> Table {
+    t.header(&["Data Size", "Serial", "Parallel", "Speedup", "Efficiency"])
+}
+
+fn push_row(t: &mut Table, r: &ExperimentRow) {
+    t.row(vec![
+        r.data_size.clone(),
+        secs(r.serial_secs),
+        secs(r.parallel_secs),
+        ratio(r.speedup),
+        ratio(r.efficiency),
+    ]);
+}
+
+/// Render the figure series (what the bar chart plots): speedup per size.
+fn figure_series(figure: usize, rows: &[ExperimentRow]) -> String {
+    let mut s = format!("Fig {figure} series (Speedup):");
+    for r in rows {
+        s.push_str(&format!(" {}={}", r.data_size, ratio(r.speedup)));
+    }
+    s.push('\n');
+    s
+}
+
+/// Regenerate one paper table; returns the formatted text block.
+pub fn run_table(table: usize, opts: &SweepOpts) -> Result<String> {
+    let mut runner = Runner::new();
+    let text = match spec(table)? {
+        TableSpec::Sweep {
+            approach,
+            k,
+            workers,
+            figure,
+        } => {
+            let title = format!(
+                "Table {table}. Efficiency calculation for {}, Cluster {k}, {workers} Cores (scale {:.2})",
+                approach.label(),
+                opts.scale,
+            );
+            let mut t = paper_columns(Table::new(title));
+            let mut rows = Vec::new();
+            for &size in &PAPER_SIZES {
+                let (h, w) = size.scaled(opts.scale);
+                let shape = sweep_shape(approach, h, w);
+                let row = cell(&mut runner, opts, size, shape, k, workers)?;
+                push_row(&mut t, &row);
+                rows.push(row);
+            }
+            format!("{}\n{}", t.render(), figure_series(figure, &rows))
+        }
+        TableSpec::Hero { approach, k } => {
+            let title = format!(
+                "Table {table}. Comparison results of {} (Cluster {k}, 4656x5793, scale {:.2})",
+                approach.label(),
+                opts.scale,
+            );
+            let mut t = Table::new(title).header(&[
+                "Data Size",
+                "Serial",
+                "Cores",
+                approach.label(),
+                "Speed Up",
+                "Efficiency",
+            ]);
+            for workers in [2usize, 4, 8] {
+                let shape = hero_shape(approach, opts.scale);
+                let r = cell(&mut runner, opts, HERO_SIZE, shape, k, workers)?;
+                t.row(vec![
+                    r.data_size.clone(),
+                    secs(r.serial_secs),
+                    workers.to_string(),
+                    secs(r.parallel_secs),
+                    ratio(r.speedup),
+                    ratio(r.efficiency),
+                ]);
+            }
+            t.render()
+        }
+        TableSpec::Comparison { k, figure } => {
+            let title = format!(
+                "Table {table}. Comparison of Different Approaches of Block processing for cluster {k} (4656x5793, 4 cores, scale {:.2})",
+                opts.scale,
+            );
+            let mut t = Table::new(title).header(&[
+                "Metric",
+                "Non Block",
+                "Row-Shaped [1200 4656]",
+                "Column-Shaped [5793 1000]",
+                "Square Block [1200 1200]",
+            ]);
+            let workers = 4;
+            let mut rows = Vec::new();
+            for kind in ApproachKind::ALL {
+                let shape = hero_shape(kind, opts.scale);
+                rows.push(cell(&mut runner, opts, HERO_SIZE, shape, k, workers)?);
+            }
+            let serial = rows[0].serial_secs;
+            t.row(vec![
+                "Processing Time".into(),
+                secs(serial),
+                secs(rows[0].parallel_secs),
+                secs(rows[1].parallel_secs),
+                secs(rows[2].parallel_secs),
+            ]);
+            t.row(vec![
+                "Speed Up".into(),
+                ratio(1.0),
+                ratio(rows[0].speedup),
+                ratio(rows[1].speedup),
+                ratio(rows[2].speedup),
+            ]);
+            t.row(vec![
+                "Efficiency".into(),
+                String::from("-"),
+                ratio(rows[0].efficiency),
+                ratio(rows[1].efficiency),
+                ratio(rows[2].efficiency),
+            ]);
+            let mut s = t.render();
+            s.push_str(&format!(
+                "Fig {figure} series (Speedup): Row={} Column={} Square={}\n",
+                ratio(rows[0].speedup),
+                ratio(rows[1].speedup),
+                ratio(rows[2].speedup)
+            ));
+            s
+        }
+    };
+    Ok(text)
+}
+
+/// Every cell of every paper table as a flat row set, for CSV export
+/// (`blockms sweep`). Cells are `(table_id, row)`.
+pub fn sweep_all(opts: &SweepOpts) -> Result<Vec<(usize, ExperimentRow)>> {
+    let mut runner = Runner::new();
+    let mut out = Vec::new();
+    for table in all_table_ids() {
+        match spec(table)? {
+            TableSpec::Sweep {
+                approach,
+                k,
+                workers,
+                ..
+            } => {
+                for &size in &PAPER_SIZES {
+                    let (h, w) = size.scaled(opts.scale);
+                    let shape = sweep_shape(approach, h, w);
+                    out.push((table, cell(&mut runner, opts, size, shape, k, workers)?));
+                }
+            }
+            TableSpec::Hero { approach, k } => {
+                for workers in [2usize, 4, 8] {
+                    let shape = hero_shape(approach, opts.scale);
+                    out.push((table, cell(&mut runner, opts, HERO_SIZE, shape, k, workers)?));
+                }
+            }
+            TableSpec::Comparison { k, .. } => {
+                for kind in ApproachKind::ALL {
+                    let shape = hero_shape(kind, opts.scale);
+                    out.push((table, cell(&mut runner, opts, HERO_SIZE, shape, k, 4)?));
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_opts() -> SweepOpts {
+        SweepOpts {
+            scale: 0.04,
+            iters: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn every_table_id_has_a_spec() {
+        for id in all_table_ids() {
+            assert!(spec(id).is_ok(), "table {id}");
+        }
+        assert!(spec(0).is_err());
+        assert!(spec(20).is_err());
+    }
+
+    #[test]
+    fn hero_shapes_scale_with_workload() {
+        let s = hero_shape(ApproachKind::Cols, 0.25);
+        assert_eq!(
+            s,
+            BlockShape::Custom {
+                rows: 1448,
+                cols: 250
+            }
+        );
+    }
+
+    #[test]
+    fn sweep_table_renders_nine_rows() {
+        let text = run_table(1, &fast_opts()).unwrap();
+        assert!(text.contains("Table 1."), "{text}");
+        assert!(text.contains("Row-Shaped"));
+        for size in &PAPER_SIZES {
+            assert!(text.contains(&size.label()), "missing {}", size.label());
+        }
+        assert!(text.contains("Fig 8 series"));
+    }
+
+    #[test]
+    fn hero_table_has_three_worker_rows() {
+        let text = run_table(13, &fast_opts()).unwrap();
+        assert!(text.contains("Column-Shaped"));
+        // three core counts
+        for w in ["2", "4", "8"] {
+            assert!(text.lines().any(|l| l.contains(&format!(" {w} "))), "workers {w}");
+        }
+    }
+
+    #[test]
+    fn comparison_table_covers_all_approaches() {
+        let text = run_table(15, &fast_opts()).unwrap();
+        assert!(text.contains("Row-Shaped"));
+        assert!(text.contains("Column-Shaped"));
+        assert!(text.contains("Square Block"));
+        assert!(text.contains("Fig 19 series"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Workload generation: the paper's nine image sizes.
+
+use crate::image::{Raster, SyntheticOrtho};
+
+/// The nine data sizes of Tables 1–11, as the paper writes them
+/// (`width x height` per its "4656 pixels wide" prose for 4656x5793).
+pub const PAPER_SIZES: [PaperSize; 9] = [
+    PaperSize::new(1024, 768),
+    PaperSize::new(1226, 878),
+    PaperSize::new(3729, 2875),
+    PaperSize::new(1355, 1255),
+    PaperSize::new(5528, 5350),
+    PaperSize::new(2640, 2640),
+    PaperSize::new(4656, 5793),
+    PaperSize::new(5490, 5442),
+    PaperSize::new(9052, 4965),
+];
+
+/// The size the comparison tables (12–19, Cases 1–3) single out.
+pub const HERO_SIZE: PaperSize = PaperSize::new(4656, 5793);
+
+/// One paper data size (stored as the paper prints it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PaperSize {
+    pub width: usize,
+    pub height: usize,
+}
+
+impl PaperSize {
+    pub const fn new(width: usize, height: usize) -> PaperSize {
+        PaperSize { width, height }
+    }
+
+    /// The paper's label, e.g. `4656x5793`.
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.width, self.height)
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// Scale both sides by `scale` (≥ 1 px each).
+    pub fn scaled(&self, scale: f64) -> (usize, usize) {
+        assert!(scale > 0.0 && scale <= 1.0, "scale must be in (0,1]");
+        (
+            ((self.height as f64 * scale).round() as usize).max(8),
+            ((self.width as f64 * scale).round() as usize).max(8),
+        )
+    }
+}
+
+/// A concrete workload: a synthetic scene standing in for one paper image.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    /// The paper size this scene represents (label used in tables).
+    pub nominal: PaperSize,
+    /// Actual generated dims (scaled for bench-time budgets).
+    pub height: usize,
+    pub width: usize,
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl Workload {
+    pub fn new(nominal: PaperSize, scale: f64, seed: u64) -> Workload {
+        let (height, width) = nominal.scaled(scale);
+        Workload {
+            nominal,
+            height,
+            width,
+            scale,
+            seed,
+        }
+    }
+
+    /// Generate the scene (deterministic in `seed`).
+    pub fn generate(&self) -> Raster {
+        SyntheticOrtho::default()
+            .with_seed(self.seed ^ (self.nominal.pixels() as u64))
+            .generate(self.height, self.width)
+    }
+}
+
+/// All nine paper workloads at a common scale.
+pub fn paper_sizes(scale: f64, seed: u64) -> Vec<Workload> {
+    PAPER_SIZES
+        .iter()
+        .map(|&s| Workload::new(s, scale, seed))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_sizes_match_paper_labels() {
+        let labels: Vec<String> = PAPER_SIZES.iter().map(|s| s.label()).collect();
+        assert_eq!(labels[0], "1024x768");
+        assert_eq!(labels[6], "4656x5793");
+        assert_eq!(labels[8], "9052x4965");
+        assert_eq!(labels.len(), 9);
+    }
+
+    #[test]
+    fn hero_is_in_the_list() {
+        assert!(PAPER_SIZES.contains(&HERO_SIZE));
+    }
+
+    #[test]
+    fn scaling_shrinks_both_sides() {
+        let w = Workload::new(HERO_SIZE, 0.25, 1);
+        assert_eq!(w.height, (5793.0f64 * 0.25).round() as usize);
+        assert_eq!(w.width, 1164);
+        let img = w.generate();
+        assert_eq!(img.height(), w.height);
+        assert_eq!(img.width(), w.width);
+    }
+
+    #[test]
+    fn generation_deterministic_per_size_and_seed() {
+        let a = Workload::new(PAPER_SIZES[0], 0.1, 7).generate();
+        let b = Workload::new(PAPER_SIZES[0], 0.1, 7).generate();
+        assert_eq!(a, b);
+        let c = Workload::new(PAPER_SIZES[1], 0.1, 7).generate();
+        assert_ne!(a.data().len(), c.data().len());
+    }
+
+    #[test]
+    #[should_panic(expected = "scale must be")]
+    fn bad_scale_rejected() {
+        PaperSize::new(100, 100).scaled(0.0);
+    }
+}

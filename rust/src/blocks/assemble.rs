@@ -1,0 +1,148 @@
+//! Reassembly: scatter per-block results back into the output label map.
+//!
+//! `blockproc`'s final step — block results land back at their region's
+//! offsets. The assembler tracks coverage so a missing or duplicate block
+//! is a hard error rather than silent corruption.
+
+use super::region::BlockRegion;
+
+/// Accumulates per-block label buffers into a full `height×width` map.
+#[derive(Clone, Debug)]
+pub struct LabelAssembler {
+    height: usize,
+    width: usize,
+    labels: Vec<u32>,
+    /// Count of pixels written (each exactly once when complete).
+    written: usize,
+    /// Per-block-origin guard against double placement.
+    placed: std::collections::BTreeSet<(usize, usize)>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AssembleError {
+    #[error("block {0} exceeds image bounds {1}x{2}")]
+    OutOfBounds(BlockRegion, usize, usize),
+    #[error("block {0} placed twice")]
+    Duplicate(BlockRegion),
+    #[error("label buffer for {0} has {1} entries, block area is {2}")]
+    WrongSize(BlockRegion, usize, usize),
+    #[error("assembly incomplete: {written}/{total} pixels written")]
+    Incomplete { written: usize, total: usize },
+}
+
+impl LabelAssembler {
+    pub fn new(height: usize, width: usize) -> LabelAssembler {
+        LabelAssembler {
+            height,
+            width,
+            labels: vec![u32::MAX; height * width],
+            written: 0,
+            placed: Default::default(),
+        }
+    }
+
+    /// Place one block's labels (row-major within the region).
+    pub fn place(&mut self, region: &BlockRegion, labels: &[u32]) -> Result<(), AssembleError> {
+        if region.row_end() > self.height || region.col_end() > self.width {
+            return Err(AssembleError::OutOfBounds(*region, self.height, self.width));
+        }
+        if labels.len() != region.area() {
+            return Err(AssembleError::WrongSize(*region, labels.len(), region.area()));
+        }
+        if !self.placed.insert((region.row0, region.col0)) {
+            return Err(AssembleError::Duplicate(*region));
+        }
+        for (ri, r) in (region.row0..region.row_end()).enumerate() {
+            let src = &labels[ri * region.cols()..(ri + 1) * region.cols()];
+            let dst_start = r * self.width + region.col0;
+            self.labels[dst_start..dst_start + region.cols()].copy_from_slice(src);
+        }
+        self.written += region.area();
+        Ok(())
+    }
+
+    /// Fraction of the image covered so far.
+    pub fn coverage(&self) -> f64 {
+        self.written as f64 / (self.height * self.width) as f64
+    }
+
+    /// Finish: every pixel must have been written exactly once.
+    pub fn finish(self) -> Result<Vec<u32>, AssembleError> {
+        let total = self.height * self.width;
+        if self.written != total {
+            return Err(AssembleError::Incomplete {
+                written: self.written,
+                total,
+            });
+        }
+        Ok(self.labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::{BlockPlan, BlockShape};
+
+    #[test]
+    fn assemble_identity_round_trip() {
+        // labels[i] = linear pixel index; partition + reassemble = identity
+        let (h, w) = (7, 9);
+        let plan = BlockPlan::new(h, w, BlockShape::Square { side: 3 });
+        let mut asm = LabelAssembler::new(h, w);
+        for region in plan.iter() {
+            let mut buf = Vec::with_capacity(region.area());
+            for r in region.row0..region.row_end() {
+                for c in region.col0..region.col_end() {
+                    buf.push((r * w + c) as u32);
+                }
+            }
+            asm.place(region, &buf).unwrap();
+        }
+        let out = asm.finish().unwrap();
+        let want: Vec<u32> = (0..(h * w) as u32).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn duplicate_block_rejected() {
+        let mut asm = LabelAssembler::new(4, 4);
+        let r = BlockRegion::new(0, 0, 2, 2);
+        asm.place(&r, &[0; 4]).unwrap();
+        assert_eq!(asm.place(&r, &[0; 4]), Err(AssembleError::Duplicate(r)));
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        let mut asm = LabelAssembler::new(4, 4);
+        let r = BlockRegion::new(0, 0, 2, 2);
+        assert!(matches!(
+            asm.place(&r, &[0; 3]),
+            Err(AssembleError::WrongSize(..))
+        ));
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let mut asm = LabelAssembler::new(4, 4);
+        let r = BlockRegion::new(3, 3, 2, 2);
+        assert!(matches!(
+            asm.place(&r, &[0; 4]),
+            Err(AssembleError::OutOfBounds(..))
+        ));
+    }
+
+    #[test]
+    fn incomplete_finish_rejected() {
+        let mut asm = LabelAssembler::new(4, 4);
+        asm.place(&BlockRegion::new(0, 0, 2, 4), &[1; 8]).unwrap();
+        assert!((asm.coverage() - 0.5).abs() < 1e-12);
+        assert_eq!(
+            asm.finish(),
+            Err(AssembleError::Incomplete {
+                written: 8,
+                total: 16
+            })
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! Distinct-block partitioning — the paper's core abstraction.
+//!
+//! MATLAB's `blockproc` performs a *distinct block operation*: the image
+//! is tiled by non-overlapping blocks of a requested `[rows cols]` size
+//! (edge blocks are partial), each block is processed independently, and
+//! the results are reassembled. The paper's three approaches are three
+//! block geometries on the same image:
+//!
+//! - **Row-shaped** `[h W]` — full-width strips (paper: `[1200 4656]`);
+//! - **Column-shaped** `[H w]` — full-height columns (paper: `[5793 1000]`);
+//! - **Square** `[s s]` — tiles (paper: `[1200 1200]`).
+//!
+//! [`BlockShape`] names the approach, [`BlockPlan`] materializes it into
+//! an exact, gap-free, overlap-free cover of the image ([`BlockRegion`]s
+//! in deterministic row-major order), and [`assemble`] scatters per-block
+//! label results back into the output map.
+
+mod assemble;
+mod plan;
+mod region;
+pub(crate) mod shape;
+pub mod sliding;
+
+pub use assemble::{AssembleError, LabelAssembler};
+pub use plan::BlockPlan;
+pub use region::BlockRegion;
+pub use shape::{ApproachKind, BlockShape};
+pub use sliding::{padded_crop, sliding_apply, NeighborhoodOp, PadMethod};

@@ -1,0 +1,211 @@
+//! Materialized block plans: an exact tiling of the image by regions.
+
+use super::region::BlockRegion;
+use super::shape::BlockShape;
+
+/// A deterministic, gap-free, overlap-free tiling of a `height×width`
+/// image into distinct blocks, in row-major block order (the order
+/// `blockproc` visits blocks, and the order the scheduler enqueues them).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockPlan {
+    height: usize,
+    width: usize,
+    shape: BlockShape,
+    block_rows: usize,
+    block_cols: usize,
+    regions: Vec<BlockRegion>,
+}
+
+impl BlockPlan {
+    /// Build the plan for `shape` over a `height×width` image.
+    pub fn new(height: usize, width: usize, shape: BlockShape) -> BlockPlan {
+        assert!(height > 0 && width > 0, "degenerate image {height}x{width}");
+        let (br, bc) = shape.block_dims(height, width);
+        let grid_rows = height.div_ceil(br);
+        let grid_cols = width.div_ceil(bc);
+        let mut regions = Vec::with_capacity(grid_rows * grid_cols);
+        for gr in 0..grid_rows {
+            let row0 = gr * br;
+            let rows = br.min(height - row0);
+            for gc in 0..grid_cols {
+                let col0 = gc * bc;
+                let cols = bc.min(width - col0);
+                regions.push(BlockRegion::new(row0, col0, rows, cols));
+            }
+        }
+        BlockPlan {
+            height,
+            width,
+            shape,
+            block_rows: br,
+            block_cols: bc,
+            regions,
+        }
+    }
+
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn shape(&self) -> BlockShape {
+        self.shape
+    }
+
+    /// Resolved full-block dims `[rows, cols]`.
+    pub fn block_dims(&self) -> (usize, usize) {
+        (self.block_rows, self.block_cols)
+    }
+
+    /// Grid extent in blocks `(grid_rows, grid_cols)`.
+    pub fn grid_dims(&self) -> (usize, usize) {
+        (
+            self.height.div_ceil(self.block_rows),
+            self.width.div_ceil(self.block_cols),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty()
+    }
+
+    pub fn regions(&self) -> &[BlockRegion] {
+        &self.regions
+    }
+
+    pub fn region(&self, i: usize) -> &BlockRegion {
+        &self.regions[i]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &BlockRegion> {
+        self.regions.iter()
+    }
+
+    /// Largest block pixel count (what the chunker sizes buffers for).
+    pub fn max_block_area(&self) -> usize {
+        self.regions.iter().map(BlockRegion::area).max().unwrap_or(0)
+    }
+
+    /// Sum of block areas — must equal `height*width` (tested invariant).
+    pub fn total_area(&self) -> usize {
+        self.regions.iter().map(BlockRegion::area).sum()
+    }
+
+    /// Which block contains pixel `(row, col)`.
+    pub fn block_of(&self, row: usize, col: usize) -> usize {
+        assert!(row < self.height && col < self.width, "pixel outside image");
+        let (_, grid_cols) = self.grid_dims();
+        (row / self.block_rows) * grid_cols + col / self.block_cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_exact_cover(plan: &BlockPlan) {
+        // no overlap, total area matches, every pixel found by block_of
+        assert_eq!(plan.total_area(), plan.height() * plan.width());
+        for (i, a) in plan.regions().iter().enumerate() {
+            for b in plan.regions().iter().skip(i + 1) {
+                assert!(!a.intersects(b), "{a} overlaps {b}");
+            }
+        }
+        // spot-check block_of on a grid of pixels
+        for row in (0..plan.height()).step_by((plan.height() / 13).max(1)) {
+            for col in (0..plan.width()).step_by((plan.width() / 13).max(1)) {
+                let bi = plan.block_of(row, col);
+                assert!(plan.region(bi).contains(row, col));
+            }
+        }
+    }
+
+    #[test]
+    fn paper_case_square() {
+        // Case 1: [1200 1200] on 4656-wide, 5793-tall image (w x h in the
+        // paper's phrasing; ours is h=5793? The paper's image is
+        // "4656x5793" = width 4656, height 5793 in its file-layout prose).
+        let plan = BlockPlan::new(5793, 4656, BlockShape::Square { side: 1200 });
+        let (gr, gc) = plan.grid_dims();
+        assert_eq!(gc, 4); // 4656/1200 = 3.88 -> 4 blocks wide
+        assert_eq!(gr, 5); // 5793/1200 = 4.83 -> 5 blocks tall
+        assert_eq!(plan.len(), 20);
+        assert_exact_cover(&plan);
+    }
+
+    #[test]
+    fn paper_case_rows() {
+        // Case 2: [1200 4656] spans the width.
+        let plan = BlockPlan::new(
+            5793,
+            4656,
+            BlockShape::Custom {
+                rows: 1200,
+                cols: 4656,
+            },
+        );
+        let (gr, gc) = plan.grid_dims();
+        assert_eq!((gr, gc), (5, 1));
+        assert_exact_cover(&plan);
+    }
+
+    #[test]
+    fn paper_case_cols() {
+        // Case 3: [5793 1000] spans the height; 4.656 -> 5 blocks wide.
+        let plan = BlockPlan::new(
+            5793,
+            4656,
+            BlockShape::Custom {
+                rows: 5793,
+                cols: 1000,
+            },
+        );
+        let (gr, gc) = plan.grid_dims();
+        assert_eq!((gr, gc), (1, 5));
+        assert_exact_cover(&plan);
+        // last block is partial: 4656 - 4*1000 = 656 cols
+        assert_eq!(plan.region(4).cols(), 656);
+    }
+
+    #[test]
+    fn single_block_when_shape_covers_image() {
+        let plan = BlockPlan::new(100, 200, BlockShape::Square { side: 4000 });
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.region(0).rows(), 100);
+        assert_eq!(plan.region(0).cols(), 200);
+    }
+
+    #[test]
+    fn one_pixel_blocks() {
+        let plan = BlockPlan::new(3, 4, BlockShape::Square { side: 1 });
+        assert_eq!(plan.len(), 12);
+        assert_exact_cover(&plan);
+    }
+
+    #[test]
+    fn row_major_order() {
+        let plan = BlockPlan::new(4, 4, BlockShape::Square { side: 2 });
+        let r: Vec<(usize, usize)> = plan.iter().map(|b| (b.row0, b.col0)).collect();
+        assert_eq!(r, vec![(0, 0), (0, 2), (2, 0), (2, 2)]);
+    }
+
+    #[test]
+    fn max_block_area() {
+        let plan = BlockPlan::new(5, 5, BlockShape::Square { side: 3 });
+        assert_eq!(plan.max_block_area(), 9);
+        assert_eq!(plan.total_area(), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside image")]
+    fn block_of_out_of_bounds() {
+        BlockPlan::new(4, 4, BlockShape::Square { side: 2 }).block_of(4, 0);
+    }
+}

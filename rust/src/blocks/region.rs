@@ -1,0 +1,119 @@
+//! A rectangular region of an image (one distinct block).
+
+/// Half-open rectangle `[row0, row0+rows) × [col0, col0+cols)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BlockRegion {
+    pub row0: usize,
+    pub col0: usize,
+    rows: usize,
+    cols: usize,
+}
+
+impl BlockRegion {
+    pub fn new(row0: usize, col0: usize, rows: usize, cols: usize) -> BlockRegion {
+        assert!(rows > 0 && cols > 0, "degenerate block {rows}x{cols}");
+        BlockRegion {
+            row0,
+            col0,
+            rows,
+            cols,
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Pixel count.
+    #[inline]
+    pub fn area(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Exclusive end row.
+    #[inline]
+    pub fn row_end(&self) -> usize {
+        self.row0 + self.rows
+    }
+
+    /// Exclusive end column.
+    #[inline]
+    pub fn col_end(&self) -> usize {
+        self.col0 + self.cols
+    }
+
+    /// Does this region contain the pixel `(row, col)`?
+    #[inline]
+    pub fn contains(&self, row: usize, col: usize) -> bool {
+        row >= self.row0 && row < self.row_end() && col >= self.col0 && col < self.col_end()
+    }
+
+    /// Do two regions share any pixel?
+    pub fn intersects(&self, other: &BlockRegion) -> bool {
+        self.row0 < other.row_end()
+            && other.row0 < self.row_end()
+            && self.col0 < other.col_end()
+            && other.col0 < self.col_end()
+    }
+}
+
+impl std::fmt::Display for BlockRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[{}..{}, {}..{}]",
+            self.row0,
+            self.row_end(),
+            self.col0,
+            self.col_end()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let r = BlockRegion::new(2, 3, 4, 5);
+        assert_eq!(r.rows(), 4);
+        assert_eq!(r.cols(), 5);
+        assert_eq!(r.area(), 20);
+        assert_eq!(r.row_end(), 6);
+        assert_eq!(r.col_end(), 8);
+    }
+
+    #[test]
+    fn contains_boundaries() {
+        let r = BlockRegion::new(2, 3, 4, 5);
+        assert!(r.contains(2, 3));
+        assert!(r.contains(5, 7));
+        assert!(!r.contains(6, 3));
+        assert!(!r.contains(2, 8));
+        assert!(!r.contains(1, 3));
+    }
+
+    #[test]
+    fn intersection() {
+        let a = BlockRegion::new(0, 0, 4, 4);
+        let b = BlockRegion::new(3, 3, 4, 4);
+        let c = BlockRegion::new(4, 0, 2, 2);
+        assert!(a.intersects(&b));
+        assert!(b.intersects(&a));
+        assert!(!a.intersects(&c));
+        assert!(!c.intersects(&a));
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn zero_size_rejected() {
+        BlockRegion::new(0, 0, 0, 5);
+    }
+}

@@ -1,0 +1,190 @@
+//! Block geometry — the paper's three approaches plus an escape hatch.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// The block-partition approach. The paper's three shapes resolve to a
+/// concrete `[rows cols]` block size against a given image:
+///
+/// - [`BlockShape::Rows`] — row-shaped `[band_rows, image_width]`;
+/// - [`BlockShape::Cols`] — column-shaped `[image_height, band_cols]`;
+/// - [`BlockShape::Square`] — `[side, side]`;
+/// - [`BlockShape::Custom`] — any fixed `[rows, cols]` (used to replicate
+///   the paper's exact `[1200 4656]` etc. on arbitrary images).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BlockShape {
+    /// Full-width horizontal strips of `band_rows` rows.
+    Rows { band_rows: usize },
+    /// Full-height vertical strips of `band_cols` columns.
+    Cols { band_cols: usize },
+    /// Square tiles of `side × side`.
+    Square { side: usize },
+    /// Fixed `[rows, cols]` tiles.
+    Custom { rows: usize, cols: usize },
+}
+
+impl BlockShape {
+    /// Resolve to the concrete `[rows, cols]` block size for an image.
+    /// Block dims are clamped to the image dims (a `[1200 4656]` request
+    /// on an 800×600 image yields `[800 600]`-bounded blocks, like
+    /// `blockproc`).
+    pub fn block_dims(&self, height: usize, width: usize) -> (usize, usize) {
+        let (r, c) = match *self {
+            BlockShape::Rows { band_rows } => (band_rows, width),
+            BlockShape::Cols { band_cols } => (height, band_cols),
+            BlockShape::Square { side } => (side, side),
+            BlockShape::Custom { rows, cols } => (rows, cols),
+        };
+        (r.max(1).min(height), c.max(1).min(width))
+    }
+
+    /// The paper's label for this approach.
+    pub fn label(&self) -> &'static str {
+        match self {
+            BlockShape::Rows { .. } => "Row-Shaped",
+            BlockShape::Cols { .. } => "Column-Shaped",
+            BlockShape::Square { .. } => "Square Block",
+            BlockShape::Custom { .. } => "Custom",
+        }
+    }
+
+    /// The paper's canonical parameterization of each approach for a
+    /// given image: ~5 pixel-equal blocks per pass (the paper's Cases 1–3
+    /// use "approximately the same" pixels per block and ~4–5 blocks on
+    /// its 4656×5793 exemplar): row bands of ⌈h/5⌉, column bands of
+    /// ⌈w/5⌉, squares of side ⌈sqrt(h·w/5)⌉.
+    pub fn paper_default(kind: ApproachKind, height: usize, width: usize) -> BlockShape {
+        const TARGET_BLOCKS: f64 = 5.0;
+        match kind {
+            ApproachKind::Rows => BlockShape::Rows {
+                band_rows: (height as f64 / TARGET_BLOCKS).ceil().max(1.0) as usize,
+            },
+            ApproachKind::Cols => BlockShape::Cols {
+                band_cols: (width as f64 / TARGET_BLOCKS).ceil().max(1.0) as usize,
+            },
+            ApproachKind::Square => {
+                let side = (height as f64 * width as f64 / TARGET_BLOCKS).sqrt().ceil();
+                BlockShape::Square {
+                    side: side.max(1.0) as usize,
+                }
+            }
+        }
+    }
+}
+
+/// Just the approach *kind*, without a size (what sweeps iterate over).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ApproachKind {
+    Rows,
+    Cols,
+    Square,
+}
+
+impl ApproachKind {
+    pub const ALL: [ApproachKind; 3] = [ApproachKind::Rows, ApproachKind::Cols, ApproachKind::Square];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ApproachKind::Rows => "Row-Shaped",
+            ApproachKind::Cols => "Column-Shaped",
+            ApproachKind::Square => "Square Block",
+        }
+    }
+}
+
+impl FromStr for ApproachKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "row" | "rows" | "row-shaped" => Ok(ApproachKind::Rows),
+            "col" | "cols" | "column" | "column-shaped" => Ok(ApproachKind::Cols),
+            "square" | "sq" | "square-block" => Ok(ApproachKind::Square),
+            other => Err(format!(
+                "unknown approach {other:?} (want row|column|square)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for BlockShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            BlockShape::Rows { band_rows } => write!(f, "rows[{band_rows} W]"),
+            BlockShape::Cols { band_cols } => write!(f, "cols[H {band_cols}]"),
+            BlockShape::Square { side } => write!(f, "square[{side} {side}]"),
+            BlockShape::Custom { rows, cols } => write!(f, "custom[{rows} {cols}]"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_resolve_against_image() {
+        assert_eq!(
+            BlockShape::Rows { band_rows: 1200 }.block_dims(5793, 4656),
+            (1200, 4656)
+        );
+        assert_eq!(
+            BlockShape::Cols { band_cols: 1000 }.block_dims(5793, 4656),
+            (5793, 1000)
+        );
+        assert_eq!(
+            BlockShape::Square { side: 1200 }.block_dims(5793, 4656),
+            (1200, 1200)
+        );
+        assert_eq!(
+            BlockShape::Custom { rows: 10, cols: 20 }.block_dims(5793, 4656),
+            (10, 20)
+        );
+    }
+
+    #[test]
+    fn dims_clamped_to_image() {
+        assert_eq!(
+            BlockShape::Square { side: 1200 }.block_dims(800, 600),
+            (800, 600)
+        );
+        assert_eq!(BlockShape::Rows { band_rows: 0 }.block_dims(10, 10), (1, 10));
+    }
+
+    #[test]
+    fn paper_defaults_have_similar_block_counts_and_areas() {
+        // The paper's Cases 1-3 use roughly pixel-equal blocks; our
+        // defaults must keep both the block counts and the full-block
+        // pixel areas of the three approaches within 2x of each other.
+        let (h, w) = (5793, 4656);
+        let mut counts = Vec::new();
+        let mut areas = Vec::new();
+        for kind in ApproachKind::ALL {
+            let (br, bc) = BlockShape::paper_default(kind, h, w).block_dims(h, w);
+            counts.push((h.div_ceil(br)) * (w.div_ceil(bc)));
+            areas.push(br * bc);
+        }
+        for v in [&counts, &areas] {
+            let max = *v.iter().max().unwrap() as f64;
+            let min = *v.iter().min().unwrap() as f64;
+            assert!(max / min <= 2.0, "diverged: counts {counts:?} areas {areas:?}");
+        }
+    }
+
+    #[test]
+    fn approach_parses() {
+        assert_eq!("row".parse::<ApproachKind>().unwrap(), ApproachKind::Rows);
+        assert_eq!(
+            "Column-Shaped".parse::<ApproachKind>().unwrap(),
+            ApproachKind::Cols
+        );
+        assert_eq!("sq".parse::<ApproachKind>().unwrap(), ApproachKind::Square);
+        assert!("diagonal".parse::<ApproachKind>().is_err());
+    }
+
+    #[test]
+    fn labels_match_paper() {
+        assert_eq!(ApproachKind::Rows.label(), "Row-Shaped");
+        assert_eq!(ApproachKind::Cols.label(), "Column-Shaped");
+        assert_eq!(ApproachKind::Square.label(), "Square Block");
+    }
+}

@@ -1,0 +1,374 @@
+//! Sliding-neighborhood operations — the *other* block-processing mode.
+//!
+//! The paper (§3) names two block-processing operations: distinct blocks
+//! (what K-Means uses; [`super::BlockPlan`]) and **sliding neighborhood**
+//! — every output pixel is a function of its `win×win` neighborhood.
+//! MATLAB parallelizes these the same way: split the image into distinct
+//! blocks, *pad each block with a halo* of `win/2` border pixels so
+//! neighborhoods never cross a worker boundary, process blocks
+//! independently, and reassemble. This module provides that substrate:
+//!
+//! - [`PadMethod`] — MATLAB `blockproc`-style border semantics
+//!   (zeros / replicate / symmetric);
+//! - [`padded_crop`] — crop a region *with halo*, materializing border
+//!   padding where the halo leaves the image;
+//! - [`sliding_apply`] — parallel sliding-neighborhood map over a block
+//!   plan (scoped worker threads; the kernel sees a padded tile and
+//!   writes the interior), with the key invariant that the result is
+//!   **identical for every block plan and worker count** (tested).
+
+use std::sync::Mutex;
+
+use crate::image::Raster;
+
+use super::plan::BlockPlan;
+use super::region::BlockRegion;
+
+/// Border padding semantics (MATLAB `blockproc`/`nlfilter` options).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PadMethod {
+    /// Pad with zeros.
+    Zeros,
+    /// Repeat the border pixel (`replicate`).
+    Replicate,
+    /// Mirror across the border (`symmetric`): `abc|cba`.
+    Symmetric,
+}
+
+/// Resolve a (possibly out-of-range) signed coordinate to a source index
+/// under the pad method. Returns `None` for [`PadMethod::Zeros`] misses.
+fn resolve(coord: isize, len: usize, pad: PadMethod) -> Option<usize> {
+    if coord >= 0 && (coord as usize) < len {
+        return Some(coord as usize);
+    }
+    match pad {
+        PadMethod::Zeros => None,
+        PadMethod::Replicate => Some(coord.clamp(0, len as isize - 1) as usize),
+        PadMethod::Symmetric => {
+            // reflect repeatedly: for coord -1 -> 0, -2 -> 1, len -> len-1…
+            let period = 2 * len as isize;
+            let mut x = coord.rem_euclid(period);
+            if x >= len as isize {
+                x = period - 1 - x;
+            }
+            Some(x as usize)
+        }
+    }
+}
+
+/// Crop `region` expanded by `halo` pixels on every side, materializing
+/// padding outside the image. Output is `(rows+2h)×(cols+2h)×C`.
+pub fn padded_crop(img: &Raster, region: &BlockRegion, halo: usize, pad: PadMethod) -> Vec<f32> {
+    let c = img.channels();
+    let out_rows = region.rows() + 2 * halo;
+    let out_cols = region.cols() + 2 * halo;
+    let mut out = vec![0.0f32; out_rows * out_cols * c];
+    for orow in 0..out_rows {
+        let src_r = resolve(
+            region.row0 as isize + orow as isize - halo as isize,
+            img.height(),
+            pad,
+        );
+        for ocol in 0..out_cols {
+            let src_c = resolve(
+                region.col0 as isize + ocol as isize - halo as isize,
+                img.width(),
+                pad,
+            );
+            if let (Some(r), Some(col)) = (src_r, src_c) {
+                let dst = (orow * out_cols + ocol) * c;
+                out[dst..dst + c].copy_from_slice(img.get(r, col));
+            } // Zeros misses stay 0.0
+        }
+    }
+    out
+}
+
+/// A sliding-neighborhood kernel: given the `win×win×C` neighborhood
+/// (row-major, interleaved), produce the output pixel's `C'` samples into
+/// `out`. Must be `Sync` (called concurrently from workers).
+pub trait NeighborhoodOp: Sync {
+    /// Output channel count for a given input channel count.
+    fn out_channels(&self, in_channels: usize) -> usize;
+    /// Window edge length (odd).
+    fn window(&self) -> usize;
+    fn apply(&self, neighborhood: &[f32], in_channels: usize, out: &mut [f32]);
+}
+
+/// Mean (box) filter over the window, per band.
+pub struct MeanFilter {
+    pub window: usize,
+}
+
+impl NeighborhoodOp for MeanFilter {
+    fn out_channels(&self, in_channels: usize) -> usize {
+        in_channels
+    }
+    fn window(&self) -> usize {
+        self.window
+    }
+    fn apply(&self, nb: &[f32], c: usize, out: &mut [f32]) {
+        let n = (nb.len() / c) as f32;
+        out.fill(0.0);
+        for px in nb.chunks_exact(c) {
+            for (b, &v) in px.iter().enumerate() {
+                out[b] += v;
+            }
+        }
+        for v in out.iter_mut() {
+            *v /= n;
+        }
+    }
+}
+
+/// Median filter per band (the paper's cited pre-processing staple).
+pub struct MedianFilter {
+    pub window: usize,
+}
+
+impl NeighborhoodOp for MedianFilter {
+    fn out_channels(&self, in_channels: usize) -> usize {
+        in_channels
+    }
+    fn window(&self) -> usize {
+        self.window
+    }
+    fn apply(&self, nb: &[f32], c: usize, out: &mut [f32]) {
+        let n = nb.len() / c;
+        let mut band = Vec::with_capacity(n);
+        for b in 0..c {
+            band.clear();
+            band.extend(nb.iter().skip(b).step_by(c).copied());
+            band.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            out[b] = if n % 2 == 1 {
+                band[n / 2]
+            } else {
+                (band[n / 2 - 1] + band[n / 2]) / 2.0
+            };
+        }
+    }
+}
+
+/// Sobel gradient magnitude (on band 0; classic edge pre-pass).
+pub struct SobelMagnitude;
+
+impl NeighborhoodOp for SobelMagnitude {
+    fn out_channels(&self, _in: usize) -> usize {
+        1
+    }
+    fn window(&self) -> usize {
+        3
+    }
+    fn apply(&self, nb: &[f32], c: usize, out: &mut [f32]) {
+        let v = |r: usize, col: usize| nb[(r * 3 + col) * c];
+        let gx = (v(0, 2) + 2.0 * v(1, 2) + v(2, 2)) - (v(0, 0) + 2.0 * v(1, 0) + v(2, 0));
+        let gy = (v(2, 0) + 2.0 * v(2, 1) + v(2, 2)) - (v(0, 0) + 2.0 * v(0, 1) + v(0, 2));
+        out[0] = (gx * gx + gy * gy).sqrt();
+    }
+}
+
+/// Apply `op` over the whole image with distinct-block parallelism:
+/// blocks of `plan` are processed by `workers` scoped threads, each
+/// reading its block + halo via [`padded_crop`] and writing its interior
+/// into the output. Block-plan and worker-count invariant (tested).
+pub fn sliding_apply(
+    img: &Raster,
+    plan: &BlockPlan,
+    op: &dyn NeighborhoodOp,
+    pad: PadMethod,
+    workers: usize,
+) -> Raster {
+    assert!(workers > 0);
+    assert_eq!(plan.height(), img.height());
+    assert_eq!(plan.width(), img.width());
+    let win = op.window();
+    assert!(win % 2 == 1, "window must be odd, got {win}");
+    let halo = win / 2;
+    let c_in = img.channels();
+    let c_out = op.out_channels(c_in);
+    let mut out = Raster::zeros(img.height(), img.width(), c_out);
+
+    // Work queue: block indices; output rows are disjoint per block, but
+    // rust can't see that through a flat buffer — collect per-block
+    // results and scatter single-threaded (scatter is memcpy-cheap).
+    let next = Mutex::new(0usize);
+    let results: Mutex<Vec<(usize, Vec<f32>)>> = Mutex::new(Vec::with_capacity(plan.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(plan.len().max(1)) {
+            scope.spawn(|| {
+                let mut nb = vec![0.0f32; win * win * c_in];
+                let mut px_out = vec![0.0f32; c_out];
+                loop {
+                    let bi = {
+                        let mut g = next.lock().unwrap();
+                        if *g >= plan.len() {
+                            return;
+                        }
+                        let i = *g;
+                        *g += 1;
+                        i
+                    };
+                    let region = plan.region(bi);
+                    let tile = padded_crop(img, region, halo, pad);
+                    let tile_cols = region.cols() + 2 * halo;
+                    let mut block_out = vec![0.0f32; region.area() * c_out];
+                    for r in 0..region.rows() {
+                        for col in 0..region.cols() {
+                            // gather the win×win neighborhood from the tile
+                            for wr in 0..win {
+                                let src = ((r + wr) * tile_cols + col) * c_in;
+                                let dst = wr * win * c_in;
+                                nb[dst..dst + win * c_in]
+                                    .copy_from_slice(&tile[src..src + win * c_in]);
+                            }
+                            op.apply(&nb, c_in, &mut px_out);
+                            let dst = (r * region.cols() + col) * c_out;
+                            block_out[dst..dst + c_out].copy_from_slice(&px_out);
+                        }
+                    }
+                    results.lock().unwrap().push((bi, block_out));
+                }
+            });
+        }
+    });
+
+    // scatter
+    for (bi, block_out) in results.into_inner().unwrap() {
+        let region = plan.region(bi);
+        for r in 0..region.rows() {
+            let src = r * region.cols() * c_out;
+            let dst_row = region.row0 + r;
+            for col in 0..region.cols() {
+                let s = src + col * c_out;
+                out.set(dst_row, region.col0 + col, &block_out[s..s + c_out]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockShape;
+    use crate::image::SyntheticOrtho;
+
+    #[test]
+    fn resolve_replicate_and_symmetric() {
+        assert_eq!(resolve(-1, 5, PadMethod::Replicate), Some(0));
+        assert_eq!(resolve(7, 5, PadMethod::Replicate), Some(4));
+        assert_eq!(resolve(-1, 5, PadMethod::Symmetric), Some(0));
+        assert_eq!(resolve(-2, 5, PadMethod::Symmetric), Some(1));
+        assert_eq!(resolve(5, 5, PadMethod::Symmetric), Some(4));
+        assert_eq!(resolve(6, 5, PadMethod::Symmetric), Some(3));
+        assert_eq!(resolve(-1, 5, PadMethod::Zeros), None);
+        assert_eq!(resolve(2, 5, PadMethod::Zeros), Some(2));
+    }
+
+    #[test]
+    fn padded_crop_interior_matches_plain_crop() {
+        let img = SyntheticOrtho::default().with_seed(3).generate(12, 14);
+        let region = BlockRegion::new(4, 5, 3, 4);
+        let halo = 2;
+        let padded = padded_crop(&img, &region, halo, PadMethod::Replicate);
+        let cols = region.cols() + 2 * halo;
+        let c = img.channels();
+        // interior of the padded tile == direct crop
+        let plain = img.crop(&region);
+        for r in 0..region.rows() {
+            for col in 0..region.cols() {
+                let p = ((r + halo) * cols + (col + halo)) * c;
+                let q = (r * region.cols() + col) * c;
+                assert_eq!(&padded[p..p + c], &plain[q..q + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn zeros_padding_is_zero_outside() {
+        let img = SyntheticOrtho::default().with_seed(4).generate(6, 6);
+        let region = BlockRegion::new(0, 0, 2, 2);
+        let padded = padded_crop(&img, &region, 1, PadMethod::Zeros);
+        // top-left corner of the tile is outside the image
+        assert_eq!(&padded[..3], &[0.0, 0.0, 0.0]);
+    }
+
+    fn reference_mean(img: &Raster, win: usize, pad: PadMethod) -> Raster {
+        // single-block, single-worker = the trivially correct path
+        let plan = BlockPlan::new(
+            img.height(),
+            img.width(),
+            BlockShape::Custom {
+                rows: img.height(),
+                cols: img.width(),
+            },
+        );
+        sliding_apply(img, &plan, &MeanFilter { window: win }, pad, 1)
+    }
+
+    #[test]
+    fn sliding_is_plan_and_worker_invariant() {
+        let img = SyntheticOrtho::default().with_seed(5).generate(20, 26);
+        let want = reference_mean(&img, 3, PadMethod::Symmetric);
+        for shape in [
+            BlockShape::Square { side: 7 },
+            BlockShape::Rows { band_rows: 6 },
+            BlockShape::Cols { band_cols: 9 },
+        ] {
+            for workers in [1usize, 3] {
+                let plan = BlockPlan::new(20, 26, shape);
+                let got = sliding_apply(
+                    &img,
+                    &plan,
+                    &MeanFilter { window: 3 },
+                    PadMethod::Symmetric,
+                    workers,
+                );
+                assert_eq!(got, want, "{shape}/{workers} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn mean_filter_flattens_constant_image() {
+        let mut img = Raster::zeros(8, 8, 1);
+        img.data_mut().fill(42.0);
+        let plan = BlockPlan::new(8, 8, BlockShape::Square { side: 4 });
+        let out = sliding_apply(&img, &plan, &MeanFilter { window: 5 }, PadMethod::Replicate, 2);
+        assert!(out.data().iter().all(|&v| (v - 42.0).abs() < 1e-4));
+    }
+
+    #[test]
+    fn median_filter_kills_salt_noise() {
+        let mut img = Raster::zeros(9, 9, 1);
+        img.data_mut().fill(10.0);
+        img.set(4, 4, &[255.0]); // salt pixel
+        let plan = BlockPlan::new(9, 9, BlockShape::Rows { band_rows: 3 });
+        let out = sliding_apply(&img, &plan, &MedianFilter { window: 3 }, PadMethod::Replicate, 2);
+        assert_eq!(out.get(4, 4)[0], 10.0, "median must remove the outlier");
+    }
+
+    #[test]
+    fn sobel_detects_vertical_edge() {
+        let mut img = Raster::zeros(8, 8, 3);
+        for r in 0..8 {
+            for c in 4..8 {
+                img.set(r, c, &[100.0, 100.0, 100.0]);
+            }
+        }
+        let plan = BlockPlan::new(8, 8, BlockShape::Square { side: 4 });
+        let out = sliding_apply(&img, &plan, &SobelMagnitude, PadMethod::Replicate, 2);
+        assert_eq!(out.channels(), 1);
+        // strong response along the edge column, none far from it
+        assert!(out.get(4, 4)[0] > 100.0);
+        assert!(out.get(4, 6)[0] < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "window must be odd")]
+    fn even_window_rejected() {
+        let img = SyntheticOrtho::default().generate(8, 8);
+        let plan = BlockPlan::new(8, 8, BlockShape::Square { side: 4 });
+        sliding_apply(&img, &plan, &MeanFilter { window: 4 }, PadMethod::Zeros, 1);
+    }
+}

@@ -1,0 +1,142 @@
+//! Global-mode parallel K-Means: one clustering over the whole image.
+//!
+//! Each Lloyd iteration is a round: workers produce per-block partial
+//! accumulations at the current centroids; the leader merges them
+//! (associative f64 reduction), updates centroids, and tests convergence.
+//! Because the merged accumulation is *identical* to the sequential
+//! baseline's whole-image pass, global mode reproduces `SeqKMeans`
+//! exactly — same labels, same centroids, same iteration count — which
+//! the integration tests assert. Parallelism changes time, not results.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::messages::{Job, JobPayload, JobResult};
+use super::pool::WorkerPool;
+use super::{BlockCost, RoundKind, RoundRecord};
+use crate::blocks::{BlockPlan, LabelAssembler};
+use crate::kmeans::math::{self, StepAccum};
+use crate::kmeans::KMeansConfig;
+use crate::metrics::time_it;
+
+/// Outcome of the iterate phase.
+pub struct GlobalIterateResult {
+    pub centroids: Vec<f32>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Inertia measured at the centroids *entering* each step round
+    /// (monotone non-increasing — a tested Lloyd invariant).
+    pub inertia_trace: Vec<f64>,
+    pub rounds: Vec<RoundRecord>,
+}
+
+/// Run Lloyd iterations through the pool until convergence/`max_iters`
+/// (or exactly `fixed_iters` when given, with no convergence test).
+pub fn iterate(
+    pool: &WorkerPool,
+    plan: &BlockPlan,
+    channels: usize,
+    cfg: &KMeansConfig,
+    fixed_iters: Option<usize>,
+    mut centroids: Vec<f32>,
+) -> Result<GlobalIterateResult> {
+    let mut rounds = Vec::new();
+    let mut iterations = 0;
+    let mut converged = false;
+    let mut inertia_trace = Vec::new();
+    let max = fixed_iters.unwrap_or(cfg.max_iters);
+    let tol = if fixed_iters.is_some() { 0.0 } else { cfg.tol };
+    for iter in 0..max {
+        iterations += 1;
+        let cen = Arc::new(centroids.clone());
+        let jobs: Vec<Job> = (0..plan.len())
+            .map(|b| Job {
+                block: b,
+                round: iter as u64,
+                payload: JobPayload::Step {
+                    centroids: Arc::clone(&cen),
+                },
+            })
+            .collect();
+        let (outcomes, wall) = {
+            let (r, secs) = time_it(|| pool.run_round(jobs));
+            (r?, secs)
+        };
+        let mut merged = StepAccum::zeros(cfg.k, channels);
+        let mut costs = Vec::with_capacity(outcomes.len());
+        for o in &outcomes {
+            let JobResult::Step { accum } = &o.result else {
+                bail!("unexpected result kind in step round");
+            };
+            merged.merge(accum);
+            costs.push(BlockCost::from_outcome(o));
+        }
+        rounds.push(RoundRecord {
+            kind: RoundKind::Step,
+            wall_secs: wall,
+            costs,
+        });
+        inertia_trace.push(merged.inertia);
+        let moved = math::update_centroids(&merged, &mut centroids, tol);
+        if fixed_iters.is_none() && !moved {
+            converged = true;
+            break;
+        }
+    }
+    Ok(GlobalIterateResult {
+        centroids,
+        iterations,
+        converged,
+        inertia_trace,
+        rounds,
+    })
+}
+
+/// Final assignment round: label every block at `centroids`, assemble
+/// the full map. Returns `(labels, inertia, round_record)`.
+pub fn assign(
+    pool: &WorkerPool,
+    plan: &BlockPlan,
+    centroids: &[f32],
+) -> Result<(Vec<u32>, f64, RoundRecord)> {
+    let cen = Arc::new(centroids.to_vec());
+    let jobs: Vec<Job> = (0..plan.len())
+        .map(|b| Job {
+            block: b,
+            round: u64::MAX,
+            payload: JobPayload::Assign {
+                centroids: Arc::clone(&cen),
+            },
+        })
+        .collect();
+    let (outcomes, wall) = {
+        let (r, secs) = time_it(|| pool.run_round(jobs));
+        (r?, secs)
+    };
+    let mut assembler = LabelAssembler::new(plan.height(), plan.width());
+    let mut inertia = 0.0;
+    let mut costs = Vec::with_capacity(outcomes.len());
+    for o in &outcomes {
+        let JobResult::Assign {
+            labels,
+            inertia: block_inertia,
+        } = &o.result
+        else {
+            bail!("unexpected result kind in assign round");
+        };
+        assembler.place(plan.region(o.block), labels)?;
+        inertia += block_inertia;
+        costs.push(BlockCost::from_outcome(o));
+    }
+    let labels = assembler.finish()?;
+    Ok((
+        labels,
+        inertia,
+        RoundRecord {
+            kind: RoundKind::Assign,
+            wall_secs: wall,
+            costs,
+        },
+    ))
+}

@@ -1,0 +1,221 @@
+//! Local-mode block processing: independent K-Means per block.
+//!
+//! This is what the paper's `blockproc(@kmeans)` literally computes:
+//! every block is clustered on its own. Block-local label spaces are
+//! arbitrary, so the leader **harmonizes** them afterwards: it runs a
+//! count-weighted K-Means over the union of block centroids (seeded by
+//! the global init), then remaps every block's local labels through the
+//! nearest harmonized centre. The output label map is then globally
+//! consistent — visually comparable to the sequential result (Figs 5/7
+//! vs 4/6) — while each block's clustering stayed embarrassingly
+//! parallel (no per-iteration barrier at all).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::messages::{Job, JobPayload, JobResult};
+use super::pool::WorkerPool;
+use super::{BlockCost, RoundKind, RoundRecord};
+use crate::blocks::{BlockPlan, LabelAssembler};
+use crate::kmeans::math::sqdist;
+use crate::metrics::time_it;
+
+/// Result of the local-mode run.
+pub struct LocalRunResult {
+    pub labels: Vec<u32>,
+    /// Harmonized global centroids.
+    pub centroids: Vec<f32>,
+    /// Sum of per-block inertias (w.r.t. each block's own centroids).
+    pub inertia: f64,
+    pub rounds: Vec<RoundRecord>,
+}
+
+/// Run one Local round over all blocks and harmonize.
+pub fn run(
+    pool: &WorkerPool,
+    plan: &BlockPlan,
+    channels: usize,
+    k: usize,
+    init_centroids: &[f32],
+) -> Result<LocalRunResult> {
+    let init = Arc::new(init_centroids.to_vec());
+    let jobs: Vec<Job> = (0..plan.len())
+        .map(|b| Job {
+            block: b,
+            round: 0,
+            payload: JobPayload::Local {
+                init: Arc::clone(&init),
+            },
+        })
+        .collect();
+    let (outcomes, wall) = {
+        let (r, secs) = time_it(|| pool.run_round(jobs));
+        (r?, secs)
+    };
+
+    // Collect block centroids + weights.
+    let mut block_centroids: Vec<Vec<f32>> = Vec::with_capacity(outcomes.len());
+    let mut block_counts: Vec<Vec<u64>> = Vec::with_capacity(outcomes.len());
+    let mut inertia = 0.0;
+    let mut costs = Vec::with_capacity(outcomes.len());
+    for o in &outcomes {
+        let JobResult::Local {
+            centroids,
+            inertia: bi,
+            counts,
+            ..
+        } = &o.result
+        else {
+            bail!("unexpected result kind in local round");
+        };
+        block_centroids.push(centroids.clone());
+        block_counts.push(counts.clone());
+        inertia += bi;
+        costs.push(BlockCost::from_outcome(o));
+    }
+
+    // Harmonize: weighted K-Means over all block centroids, seeded at the
+    // global init (so K stays K and empty centres keep a defined spot).
+    let global = harmonize_centroids(
+        &block_centroids,
+        &block_counts,
+        init_centroids,
+        k,
+        channels,
+        10,
+    );
+
+    // Remap labels block by block and assemble.
+    let mut assembler = LabelAssembler::new(plan.height(), plan.width());
+    for o in &outcomes {
+        let JobResult::Local {
+            labels, centroids, ..
+        } = &o.result
+        else {
+            unreachable!("checked above");
+        };
+        let map = label_map(centroids, &global, k, channels);
+        let remapped: Vec<u32> = labels.iter().map(|&l| map[l as usize]).collect();
+        assembler.place(plan.region(o.block), &remapped)?;
+    }
+    let labels = assembler.finish()?;
+
+    Ok(LocalRunResult {
+        labels,
+        centroids: global,
+        inertia,
+        rounds: vec![RoundRecord {
+            kind: RoundKind::Local,
+            wall_secs: wall,
+            costs,
+        }],
+    })
+}
+
+/// Weighted Lloyd over the union of block centroids. Points are the
+/// `blocks×k` local centroids weighted by their member counts; seeds are
+/// the global init centroids; empty harmonized centres keep their seed.
+pub fn harmonize_centroids(
+    block_centroids: &[Vec<f32>],
+    block_counts: &[Vec<u64>],
+    init: &[f32],
+    k: usize,
+    channels: usize,
+    iters: usize,
+) -> Vec<f32> {
+    let mut centers = init.to_vec();
+    assert_eq!(centers.len(), k * channels);
+    for _ in 0..iters {
+        let mut sums = vec![0.0f64; k * channels];
+        let mut weights = vec![0.0f64; k];
+        for (bc, cnts) in block_centroids.iter().zip(block_counts) {
+            for (j, point) in bc.chunks_exact(channels).enumerate() {
+                let w = cnts[j] as f64;
+                if w == 0.0 {
+                    continue; // empty local cluster carries no information
+                }
+                let g = nearest_center(point, &centers, k, channels);
+                let base = g * channels;
+                for (c, &v) in point.iter().enumerate() {
+                    sums[base + c] += v as f64 * w;
+                }
+                weights[g] += w;
+            }
+        }
+        let mut moved = false;
+        for g in 0..k {
+            if weights[g] == 0.0 {
+                continue;
+            }
+            let base = g * channels;
+            for c in 0..channels {
+                let fresh = (sums[base + c] / weights[g]) as f32;
+                if (fresh - centers[base + c]).abs() > 1e-6 {
+                    moved = true;
+                }
+                centers[base + c] = fresh;
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+    centers
+}
+
+/// For each local label `j`, the harmonized centre its centroid maps to.
+pub fn label_map(local_centroids: &[f32], global: &[f32], k: usize, channels: usize) -> Vec<u32> {
+    local_centroids
+        .chunks_exact(channels)
+        .map(|c| nearest_center(c, global, k, channels) as u32)
+        .collect()
+}
+
+fn nearest_center(point: &[f32], centers: &[f32], k: usize, channels: usize) -> usize {
+    let mut best = 0;
+    let mut best_d = f32::INFINITY;
+    for g in 0..k {
+        let d = sqdist(point, &centers[g * channels..(g + 1) * channels]);
+        if d < best_d {
+            best_d = d;
+            best = g;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harmonize_converges_to_weighted_means() {
+        // two blocks, k=2, channels=1; block centroids cluster around 0 & 100
+        let bc = vec![vec![1.0f32, 99.0], vec![3.0, 101.0]];
+        let counts = vec![vec![10u64, 10], vec![30, 10]];
+        let global = harmonize_centroids(&bc, &counts, &[0.0, 100.0], 2, 1, 20);
+        // low centre: (1*10 + 3*30)/(40) = 2.5; high: (99*10+101*10)/20 = 100
+        assert!((global[0] - 2.5).abs() < 1e-4, "{global:?}");
+        assert!((global[1] - 100.0).abs() < 1e-4, "{global:?}");
+    }
+
+    #[test]
+    fn empty_local_clusters_are_ignored() {
+        let bc = vec![vec![5.0f32, 777.0]]; // second centroid has count 0
+        let counts = vec![vec![4u64, 0]];
+        let global = harmonize_centroids(&bc, &counts, &[0.0, 100.0], 2, 1, 10);
+        assert!((global[0] - 5.0).abs() < 1e-4);
+        assert_eq!(global[1], 100.0, "empty centre keeps its seed");
+    }
+
+    #[test]
+    fn label_map_routes_to_nearest() {
+        let local = vec![10.0f32, 90.0];
+        let global = vec![0.0f32, 100.0];
+        assert_eq!(label_map(&local, &global, 2, 1), vec![0, 1]);
+        // swapped local order must swap the map
+        let local = vec![90.0f32, 10.0];
+        assert_eq!(label_map(&local, &global, 2, 1), vec![1, 0]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Leader↔worker message types.
+
+use std::sync::Arc;
+
+use crate::kmeans::math::StepAccum;
+
+/// A unit of work: one block, one operation.
+#[derive(Clone, Debug)]
+pub struct Job {
+    /// Index into the block plan.
+    pub block: usize,
+    /// Monotone round number (sanity check against stale results).
+    pub round: u64,
+    pub payload: JobPayload,
+}
+
+/// What to do with the block. Centroids are shared via `Arc` — one
+/// allocation per round regardless of worker/block count.
+#[derive(Clone, Debug)]
+pub enum JobPayload {
+    /// One Lloyd accumulation pass at the given centroids.
+    Step { centroids: Arc<Vec<f32>> },
+    /// Final assignment at the given centroids.
+    Assign { centroids: Arc<Vec<f32>> },
+    /// Independent per-block K-Means from the given init.
+    Local { init: Arc<Vec<f32>> },
+    /// Readiness barrier: reply immediately (no block read, no compute).
+    /// Used by the leader to absorb worker startup (PJRT client build +
+    /// artifact compile — the parpool-startup analogue) before any timed
+    /// round begins.
+    Ping,
+}
+
+/// Per-block timing breakdown (feeds the simtime calibration).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BlockTiming {
+    /// Seconds spent reading/cropping the block.
+    pub io_secs: f64,
+    /// Seconds spent in the compute backend.
+    pub compute_secs: f64,
+    /// Pixels processed.
+    pub pixels: usize,
+}
+
+impl BlockTiming {
+    pub fn total(&self) -> f64 {
+        self.io_secs + self.compute_secs
+    }
+}
+
+/// Result of one job.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub block: usize,
+    pub round: u64,
+    pub worker: usize,
+    pub timing: BlockTiming,
+    pub result: JobResult,
+}
+
+#[derive(Clone, Debug)]
+pub enum JobResult {
+    Step {
+        accum: StepAccum,
+    },
+    Assign {
+        labels: Vec<u32>,
+        inertia: f64,
+    },
+    Local {
+        labels: Vec<u32>,
+        centroids: Vec<f32>,
+        inertia: f64,
+        /// Per-cluster pixel counts at the final assignment (used by the
+        /// leader for count-weighted harmonization).
+        counts: Vec<u64>,
+    },
+    /// Reply to [`JobPayload::Ping`].
+    Pong,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_is_cheap_to_clone() {
+        let cen = Arc::new(vec![0.0f32; 6]);
+        let job = Job {
+            block: 3,
+            round: 1,
+            payload: JobPayload::Step {
+                centroids: Arc::clone(&cen),
+            },
+        };
+        let j2 = job.clone();
+        match (&job.payload, &j2.payload) {
+            (JobPayload::Step { centroids: a }, JobPayload::Step { centroids: b }) => {
+                assert!(Arc::ptr_eq(a, b), "clone must share the centroid buffer");
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn timing_total() {
+        let t = BlockTiming {
+            io_secs: 0.25,
+            compute_secs: 0.5,
+            pixels: 100,
+        };
+        assert!((t.total() - 0.75).abs() < 1e-12);
+    }
+}

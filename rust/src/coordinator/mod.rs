@@ -1,0 +1,605 @@
+//! The coordinator: leader/worker parallel block processing for K-Means.
+//!
+//! [`Coordinator`] is the public entry point. Configured with a worker
+//! count, compute engine, I/O mode and clustering mode, it executes the
+//! paper's pipeline over a [`BlockPlan`]:
+//!
+//! ```text
+//!   image ──▶ block plan ──▶ job rounds ──▶ workers (N threads,
+//!     each: read block → AOT kernel / native math) ──▶ leader reduce
+//!     ──▶ centroid update ──▶ … ──▶ assign ──▶ reassembled label map
+//! ```
+//!
+//! Modes: [`ClusterMode::Global`] (exactly-sequential-equivalent K-Means
+//! with per-iteration reduction) and [`ClusterMode::Local`] (independent
+//! per-block clustering + centroid harmonization — `blockproc(@kmeans)`).
+
+mod global;
+mod local;
+mod messages;
+mod pool;
+mod queue;
+mod worker;
+
+pub use messages::{BlockTiming, Job, JobOutcome, JobPayload, JobResult};
+pub use pool::WorkerPool;
+pub use queue::{JobQueue, Schedule};
+pub use worker::{BlockSource, WorkerContext};
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::blocks::BlockPlan;
+use crate::image::Raster;
+use crate::kmeans::{InitMethod, KMeansConfig, SeqKMeans};
+use crate::runtime::BackendSpec;
+use crate::stripstore::{Backing, StripStore};
+
+/// Which compute engine workers run.
+#[derive(Clone, Debug, Default)]
+pub enum Engine {
+    /// Pure-rust math (no artifacts required).
+    #[default]
+    Native,
+    /// AOT JAX/Pallas kernels via PJRT. `None` = auto-locate `artifacts/`.
+    Pjrt { artifacts_dir: Option<PathBuf> },
+}
+
+/// How workers obtain block pixels.
+#[derive(Clone, Debug, Default)]
+pub enum IoMode {
+    /// Crop from the shared in-memory raster (no I/O modelling).
+    #[default]
+    Direct,
+    /// Through a strip store ( `blockproc` semantics, counted accesses).
+    Strips {
+        strip_rows: usize,
+        /// Back the strips with a real file (true) or memory (false).
+        file_backed: bool,
+    },
+}
+
+/// Global vs per-block clustering.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ClusterMode {
+    #[default]
+    Global,
+    Local,
+}
+
+impl std::str::FromStr for ClusterMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "global" => Ok(ClusterMode::Global),
+            "local" => Ok(ClusterMode::Local),
+            other => Err(format!("unknown mode {other:?} (want global|local)")),
+        }
+    }
+}
+
+/// Clustering parameters (thin wrapper over [`KMeansConfig`] plus the
+/// fixed-iteration option benches use for exact serial/parallel work
+/// mirroring).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub k: usize,
+    pub max_iters: usize,
+    pub tol: f32,
+    pub init: InitMethod,
+    pub seed: u64,
+    /// When set, run exactly this many Lloyd iterations (no convergence
+    /// test) — both serial and parallel sides then do identical work.
+    pub fixed_iters: Option<usize>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        let km = KMeansConfig::default();
+        ClusterConfig {
+            k: km.k,
+            max_iters: km.max_iters,
+            tol: km.tol,
+            init: km.init,
+            seed: km.seed,
+            fixed_iters: None,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn kmeans(&self) -> KMeansConfig {
+        KMeansConfig {
+            k: self.k,
+            max_iters: self.max_iters,
+            tol: self.tol,
+            init: self.init.clone(),
+            seed: self.seed,
+        }
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker thread count (paper: 2, 4, 8).
+    pub workers: usize,
+    pub engine: Engine,
+    pub mode: ClusterMode,
+    pub io: IoMode,
+    pub schedule: Schedule,
+    /// Fault injection for tests: block index whose processing fails.
+    pub fail_block: Option<usize>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 4,
+            engine: Engine::Native,
+            mode: ClusterMode::Global,
+            io: IoMode::Direct,
+            schedule: Schedule::Dynamic,
+            fail_block: None,
+        }
+    }
+}
+
+/// Per-block cost attribution for one round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockCost {
+    pub block: usize,
+    pub worker: usize,
+    pub io_secs: f64,
+    pub compute_secs: f64,
+    pub pixels: usize,
+}
+
+impl BlockCost {
+    fn from_outcome(o: &JobOutcome) -> BlockCost {
+        BlockCost {
+            block: o.block,
+            worker: o.worker,
+            io_secs: o.timing.io_secs,
+            compute_secs: o.timing.compute_secs,
+            pixels: o.timing.pixels,
+        }
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.io_secs + self.compute_secs
+    }
+}
+
+/// What kind of round a record describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundKind {
+    Step,
+    Assign,
+    Local,
+}
+
+/// Timing record for one round (one barrier-to-barrier phase).
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub kind: RoundKind,
+    pub wall_secs: f64,
+    pub costs: Vec<BlockCost>,
+}
+
+/// Result of a coordinated clustering run.
+#[derive(Clone, Debug)]
+pub struct ClusterOutput {
+    pub labels: Vec<u32>,
+    pub centroids: Vec<f32>,
+    pub inertia: f64,
+    /// Inertia entering each Lloyd iteration (global mode; monotone
+    /// non-increasing — a tested invariant). Empty in local mode.
+    pub inertia_trace: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Wall-clock seconds for the whole run (init → assembled labels).
+    pub total_secs: f64,
+    /// Worker startup seconds (thread spawn + backend build, absorbed by
+    /// the warmup barrier) — the parpool-startup analogue, excluded from
+    /// the paper-table replays.
+    pub spawn_secs: f64,
+    /// Per-round timing breakdown (feeds the simtime replay).
+    pub rounds: Vec<RoundRecord>,
+    /// Strip-store access counters, when [`IoMode::Strips`] was used.
+    pub io_stats: Option<crate::stripstore::AccessSnapshot>,
+    pub blocks: usize,
+    pub workers: usize,
+}
+
+/// The leader. See module docs.
+#[derive(Clone, Debug, Default)]
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Coordinator {
+        assert!(cfg.workers > 0, "need at least one worker");
+        Coordinator { cfg }
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    fn backend_spec(&self, img: &Raster, ccfg: &ClusterConfig) -> Result<BackendSpec> {
+        Ok(match &self.cfg.engine {
+            Engine::Native => BackendSpec::Native {
+                k: ccfg.k,
+                channels: img.channels(),
+                local_iters: 8,
+            },
+            Engine::Pjrt { artifacts_dir } => {
+                let dir = match artifacts_dir {
+                    Some(d) => d.clone(),
+                    None => crate::runtime::find_artifacts_dir().context(
+                        "artifacts directory not found (run `make artifacts` or set BLOCKMS_ARTIFACTS)",
+                    )?,
+                };
+                BackendSpec::Pjrt {
+                    artifacts_dir: dir,
+                    k: ccfg.k,
+                }
+            }
+        })
+    }
+
+    /// Cluster `img` using the parallel block pipeline over `plan`.
+    pub fn cluster(
+        &self,
+        img: &Arc<Raster>,
+        plan: &Arc<BlockPlan>,
+        ccfg: &ClusterConfig,
+    ) -> Result<ClusterOutput> {
+        anyhow::ensure!(
+            plan.height() == img.height() && plan.width() == img.width(),
+            "plan {}x{} does not match image {}x{}",
+            plan.height(),
+            plan.width(),
+            img.height(),
+            img.width()
+        );
+        let t0 = std::time::Instant::now();
+
+        // Shared init draw — identical to the sequential baseline's.
+        let init_centroids = ccfg
+            .init
+            .centroids(img.as_pixels(), ccfg.k, img.channels(), ccfg.seed);
+
+        // Materialize the block source.
+        let (source, store) = match &self.cfg.io {
+            IoMode::Direct => (BlockSource::Direct(Arc::clone(img)), None),
+            IoMode::Strips {
+                strip_rows,
+                file_backed,
+            } => {
+                let backing = if *file_backed {
+                    Backing::File(std::env::temp_dir().join("blockms_strips"))
+                } else {
+                    Backing::Memory
+                };
+                let store = Arc::new(StripStore::new(img, *strip_rows, backing)?);
+                (BlockSource::Strips(Arc::clone(&store)), Some(store))
+            }
+        };
+
+        let ctx = WorkerContext {
+            plan: Arc::clone(plan),
+            source,
+            backend: self.backend_spec(img, ccfg)?,
+            fail_block: self.cfg.fail_block,
+            local_mode: self.cfg.mode == ClusterMode::Local,
+        };
+        let pool = WorkerPool::spawn(self.cfg.workers, ctx, self.cfg.schedule);
+        let spawn_secs = pool.warmup()?;
+
+        let mut rounds = Vec::new();
+        let (labels, centroids, inertia, inertia_trace, iterations, converged) =
+            match self.cfg.mode {
+                ClusterMode::Global => {
+                    let it = global::iterate(
+                        &pool,
+                        plan,
+                        img.channels(),
+                        &ccfg.kmeans(),
+                        ccfg.fixed_iters,
+                        init_centroids,
+                    )?;
+                    rounds.extend(it.rounds);
+                    let (labels, inertia, assign_round) =
+                        global::assign(&pool, plan, &it.centroids)?;
+                    rounds.push(assign_round);
+                    (
+                        labels,
+                        it.centroids,
+                        inertia,
+                        it.inertia_trace,
+                        it.iterations,
+                        it.converged,
+                    )
+                }
+                ClusterMode::Local => {
+                    let r = local::run(&pool, plan, img.channels(), ccfg.k, &init_centroids)?;
+                    rounds.extend(r.rounds);
+                    (r.labels, r.centroids, r.inertia, Vec::new(), 1, true)
+                }
+            };
+        pool.shutdown();
+
+        Ok(ClusterOutput {
+            labels,
+            centroids,
+            inertia,
+            inertia_trace,
+            iterations,
+            converged,
+            total_secs: t0.elapsed().as_secs_f64(),
+            spawn_secs,
+            rounds,
+            io_stats: store.map(|s| s.stats().snapshot()),
+            blocks: plan.len(),
+            workers: self.cfg.workers,
+        })
+    }
+
+    /// The sequential baseline with the same init draw — the paper's
+    /// "Serial" column. Uses the same engine choice so serial-vs-parallel
+    /// compares coordination, not compute implementations: `Native` runs
+    /// [`SeqKMeans`] directly; `Pjrt` runs the whole image as one block
+    /// through a single-worker pool.
+    pub fn serial(&self, img: &Arc<Raster>, ccfg: &ClusterConfig) -> Result<ClusterOutput> {
+        match &self.cfg.engine {
+            Engine::Native => {
+                let t0 = std::time::Instant::now();
+                let r = match ccfg.fixed_iters {
+                    Some(n) => SeqKMeans::run_fixed_iters(img.as_pixels(), img.channels(), &ccfg.kmeans(), n),
+                    None => SeqKMeans::run(img.as_pixels(), img.channels(), &ccfg.kmeans()),
+                };
+                Ok(ClusterOutput {
+                    labels: r.labels,
+                    centroids: r.centroids,
+                    inertia: r.inertia,
+                    inertia_trace: Vec::new(),
+                    iterations: r.iterations,
+                    converged: r.converged,
+                    total_secs: t0.elapsed().as_secs_f64(),
+                    spawn_secs: 0.0,
+                    rounds: Vec::new(),
+                    io_stats: None,
+                    blocks: 1,
+                    workers: 1,
+                })
+            }
+            Engine::Pjrt { .. } => {
+                let whole = Arc::new(BlockPlan::new(
+                    img.height(),
+                    img.width(),
+                    crate::blocks::BlockShape::Custom {
+                        rows: img.height(),
+                        cols: img.width(),
+                    },
+                ));
+                let serial_coord = Coordinator::new(CoordinatorConfig {
+                    workers: 1,
+                    mode: ClusterMode::Global,
+                    io: IoMode::Direct,
+                    ..self.cfg.clone()
+                });
+                serial_coord.cluster(img, &whole, ccfg)
+            }
+        }
+    }
+}
+
+// Re-export the access snapshot so callers don't need the stripstore path.
+pub use crate::stripstore::AccessSnapshot;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockShape;
+    use crate::image::SyntheticOrtho;
+
+    fn setup(h: usize, w: usize, side: usize) -> (Arc<Raster>, Arc<BlockPlan>) {
+        let img = Arc::new(SyntheticOrtho::default().with_seed(21).generate(h, w));
+        let plan = Arc::new(BlockPlan::new(h, w, BlockShape::Square { side }));
+        (img, plan)
+    }
+
+    #[test]
+    fn global_mode_equals_sequential_exactly() {
+        let (img, plan) = setup(60, 50, 17);
+        for k in [2, 4] {
+            let ccfg = ClusterConfig {
+                k,
+                ..Default::default()
+            };
+            let coord = Coordinator::new(CoordinatorConfig {
+                workers: 3,
+                ..Default::default()
+            });
+            let par = coord.cluster(&img, &plan, &ccfg).unwrap();
+            let seq = coord.serial(&img, &ccfg).unwrap();
+            assert_eq!(par.labels, seq.labels, "k={k}: labels differ");
+            assert_eq!(par.centroids, seq.centroids, "k={k}: centroids differ");
+            assert_eq!(par.iterations, seq.iterations);
+            assert_eq!(par.converged, seq.converged);
+            assert!((par.inertia - seq.inertia).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let (img, plan) = setup(40, 45, 13);
+        let ccfg = ClusterConfig {
+            k: 4,
+            ..Default::default()
+        };
+        let mut outputs = Vec::new();
+        for workers in [1, 2, 5] {
+            let coord = Coordinator::new(CoordinatorConfig {
+                workers,
+                ..Default::default()
+            });
+            outputs.push(coord.cluster(&img, &plan, &ccfg).unwrap());
+        }
+        assert_eq!(outputs[0].labels, outputs[1].labels);
+        assert_eq!(outputs[1].labels, outputs[2].labels);
+        assert_eq!(outputs[0].centroids, outputs[2].centroids);
+    }
+
+    #[test]
+    fn block_shape_does_not_change_global_results() {
+        let (img, _) = setup(48, 36, 1);
+        let ccfg = ClusterConfig {
+            k: 2,
+            ..Default::default()
+        };
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let mut first: Option<ClusterOutput> = None;
+        for shape in [
+            BlockShape::Rows { band_rows: 10 },
+            BlockShape::Cols { band_cols: 7 },
+            BlockShape::Square { side: 16 },
+        ] {
+            let plan = Arc::new(BlockPlan::new(48, 36, shape));
+            let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+            if let Some(f) = &first {
+                assert_eq!(f.labels, out.labels, "{shape} diverged");
+                assert_eq!(f.centroids, out.centroids);
+            } else {
+                first = Some(out);
+            }
+        }
+    }
+
+    #[test]
+    fn strip_io_counts_accesses() {
+        let (img, plan) = setup(40, 30, 12);
+        let ccfg = ClusterConfig {
+            k: 2,
+            fixed_iters: Some(3),
+            ..Default::default()
+        };
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            io: IoMode::Strips {
+                strip_rows: 8,
+                file_backed: false,
+            },
+            ..Default::default()
+        });
+        let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+        let stats = out.io_stats.expect("strip mode must report stats");
+        // 3 step rounds + 1 assign round = 4 passes over all blocks
+        let (per_pass, _, _) = crate::stripstore::read_amplification(&plan, 8);
+        assert_eq!(stats.strip_reads as usize, per_pass * 4);
+        assert_eq!(stats.block_reads as usize, plan.len() * 4);
+    }
+
+    #[test]
+    fn local_mode_produces_coherent_labels() {
+        let (img, plan) = setup(64, 64, 32);
+        let ccfg = ClusterConfig {
+            k: 2,
+            ..Default::default()
+        };
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            mode: ClusterMode::Local,
+            ..Default::default()
+        });
+        let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+        assert_eq!(out.labels.len(), 64 * 64);
+        assert!(out.labels.iter().all(|&l| l < 2));
+        // Harmonized labels must agree with the global run on most pixels
+        // (blocks see slightly different data, so not exact).
+        let global = Coordinator::new(CoordinatorConfig::default())
+            .cluster(&img, &plan, &ccfg)
+            .unwrap();
+        let agree = out
+            .labels
+            .iter()
+            .zip(&global.labels)
+            .filter(|(a, b)| a == b)
+            .count();
+        let frac = agree as f64 / out.labels.len() as f64;
+        // label polarity could be globally flipped; accept either
+        let frac = frac.max(1.0 - frac);
+        assert!(frac > 0.85, "local/global agreement too low: {frac}");
+    }
+
+    #[test]
+    fn fixed_iters_runs_exact_count_and_matches_serial() {
+        let (img, plan) = setup(30, 30, 9);
+        let ccfg = ClusterConfig {
+            k: 2,
+            fixed_iters: Some(5),
+            ..Default::default()
+        };
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let par = coord.cluster(&img, &plan, &ccfg).unwrap();
+        assert_eq!(par.iterations, 5);
+        let seq = coord.serial(&img, &ccfg).unwrap();
+        assert_eq!(par.labels, seq.labels);
+        assert_eq!(par.centroids, seq.centroids);
+    }
+
+    #[test]
+    fn failure_injection_surfaces_error() {
+        let (img, plan) = setup(30, 30, 10);
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            fail_block: Some(1),
+            ..Default::default()
+        });
+        let err = coord
+            .cluster(&img, &plan, &ClusterConfig::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("injected failure"), "{err}");
+    }
+
+    #[test]
+    fn plan_image_mismatch_rejected() {
+        let (img, _) = setup(30, 30, 10);
+        let wrong_plan = Arc::new(BlockPlan::new(20, 20, BlockShape::Square { side: 5 }));
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        assert!(coord
+            .cluster(&img, &wrong_plan, &ClusterConfig::default())
+            .is_err());
+    }
+
+    #[test]
+    fn rounds_record_all_blocks() {
+        let (img, plan) = setup(36, 36, 12);
+        let ccfg = ClusterConfig {
+            k: 2,
+            fixed_iters: Some(2),
+            ..Default::default()
+        };
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+        // 2 step rounds + 1 assign
+        assert_eq!(out.rounds.len(), 3);
+        for r in &out.rounds {
+            assert_eq!(r.costs.len(), plan.len());
+            assert!(r.wall_secs >= 0.0);
+        }
+        assert_eq!(out.rounds[0].kind, RoundKind::Step);
+        assert_eq!(out.rounds.last().unwrap().kind, RoundKind::Assign);
+    }
+}

@@ -1,0 +1,250 @@
+//! The leader's handle on its SPMD worker pool.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::messages::{Job, JobOutcome};
+use super::queue::{JobQueue, Schedule};
+use super::worker::{worker_main, WorkerContext};
+
+/// A pool of worker threads processing block jobs round by round.
+/// Rounds are synchronous at the leader (K-Means iterations are globally
+/// sequential — centroids for round `r+1` need all of round `r`), matching
+/// the paper's per-iteration barrier.
+pub struct WorkerPool {
+    queue: Arc<JobQueue>,
+    results: Receiver<Result<JobOutcome>>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads, each building its own compute backend
+    /// from `ctx.backend` (PJRT clients are per-worker by necessity —
+    /// and by design: it is the parpool model).
+    pub fn spawn(workers: usize, ctx: WorkerContext, schedule: Schedule) -> WorkerPool {
+        assert!(workers > 0, "need at least one worker");
+        let queue = Arc::new(JobQueue::new(workers, schedule));
+        let (tx, rx) = channel();
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let queue = Arc::clone(&queue);
+            let ctx = ctx.clone();
+            let tx = tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("blockms-worker-{w}"))
+                    .spawn(move || worker_main(w, ctx, queue, tx))
+                    .expect("spawn worker thread"),
+            );
+        }
+        WorkerPool {
+            queue,
+            results: rx,
+            handles,
+            workers,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute one round of jobs, blocking until all results arrive.
+    /// Outcomes are returned sorted by block index (deterministic
+    /// downstream reduction regardless of completion order). The first
+    /// worker error aborts the round.
+    pub fn run_round(&self, jobs: Vec<Job>) -> Result<Vec<JobOutcome>> {
+        let expect = jobs.len();
+        if expect == 0 {
+            return Ok(Vec::new());
+        }
+        self.queue.push_round(jobs);
+        let mut out = Vec::with_capacity(expect);
+        for _ in 0..expect {
+            match self.results.recv() {
+                Ok(Ok(outcome)) => out.push(outcome),
+                Ok(Err(e)) => return Err(e),
+                Err(_) => {
+                    return Err(anyhow!(
+                        "worker pool hung up mid-round ({}/{} results)",
+                        out.len(),
+                        expect
+                    ))
+                }
+            }
+        }
+        out.sort_by_key(|o| o.block);
+        Ok(out)
+    }
+
+    /// Readiness barrier: one ping per worker, wait for all pongs.
+    /// Absorbs worker startup cost (thread spawn + backend build — PJRT
+    /// client construction and artifact compilation) so subsequent rounds
+    /// time only steady-state work. Returns the barrier's wall seconds.
+    pub fn warmup(&self) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        for w in 0..self.workers {
+            self.queue.push_to_worker(
+                w,
+                Job {
+                    block: usize::MAX,
+                    round: 0,
+                    payload: super::messages::JobPayload::Ping,
+                },
+            );
+        }
+        for _ in 0..self.workers {
+            match self.results.recv() {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => return Err(e),
+                Err(_) => return Err(anyhow!("worker pool hung up during warmup")),
+            }
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Close the queue and join all workers.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.queue.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::{BlockPlan, BlockShape};
+    use crate::coordinator::messages::{JobPayload, JobResult};
+    use crate::coordinator::worker::BlockSource;
+    use crate::image::SyntheticOrtho;
+    use crate::kmeans::math;
+    use crate::runtime::BackendSpec;
+
+    fn context(fail_block: Option<usize>) -> (WorkerContext, Arc<crate::image::Raster>) {
+        let img = Arc::new(SyntheticOrtho::default().with_seed(11).generate(48, 40));
+        let plan = Arc::new(BlockPlan::new(48, 40, BlockShape::Square { side: 16 }));
+        let ctx = WorkerContext {
+            plan,
+            source: BlockSource::Direct(Arc::clone(&img)),
+            backend: BackendSpec::Native {
+                k: 2,
+                channels: 3,
+                local_iters: 4,
+            },
+            fail_block,
+            local_mode: false,
+        };
+        (ctx, img)
+    }
+
+    fn step_jobs(n: usize, centroids: &Arc<Vec<f32>>) -> Vec<Job> {
+        (0..n)
+            .map(|b| Job {
+                block: b,
+                round: 1,
+                payload: JobPayload::Step {
+                    centroids: Arc::clone(centroids),
+                },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_results_cover_all_blocks_sorted() {
+        let (ctx, _img) = context(None);
+        let nblocks = ctx.plan.len();
+        let pool = WorkerPool::spawn(3, ctx, Schedule::Dynamic);
+        let cen = Arc::new(vec![10.0, 10.0, 10.0, 200.0, 200.0, 200.0]);
+        let outcomes = pool.run_round(step_jobs(nblocks, &cen)).unwrap();
+        assert_eq!(outcomes.len(), nblocks);
+        let blocks: Vec<usize> = outcomes.iter().map(|o| o.block).collect();
+        assert_eq!(blocks, (0..nblocks).collect::<Vec<_>>());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn parallel_reduction_equals_whole_image_step() {
+        let (ctx, img) = context(None);
+        let nblocks = ctx.plan.len();
+        let pool = WorkerPool::spawn(4, ctx, Schedule::Dynamic);
+        let cen_v = vec![10.0, 10.0, 10.0, 200.0, 200.0, 200.0];
+        let cen = Arc::new(cen_v.clone());
+        let outcomes = pool.run_round(step_jobs(nblocks, &cen)).unwrap();
+        let mut merged = math::StepAccum::zeros(2, 3);
+        for o in &outcomes {
+            match &o.result {
+                JobResult::Step { accum } => merged.merge(accum),
+                _ => unreachable!(),
+            }
+        }
+        let whole = math::step(img.as_pixels(), &cen_v, 2, 3);
+        assert_eq!(merged.counts, whole.counts);
+        for (a, b) in merged.sums.iter().zip(&whole.sums) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        assert!((merged.inertia - whole.inertia).abs() < 1e-3);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn injected_failure_propagates() {
+        let (ctx, _img) = context(Some(2));
+        let nblocks = ctx.plan.len();
+        let pool = WorkerPool::spawn(2, ctx, Schedule::Dynamic);
+        let cen = Arc::new(vec![0.0; 6]);
+        let err = pool.run_round(step_jobs(nblocks, &cen)).unwrap_err();
+        assert!(err.to_string().contains("injected failure"), "{err}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn multiple_rounds_reuse_workers() {
+        let (ctx, _img) = context(None);
+        let nblocks = ctx.plan.len();
+        let pool = WorkerPool::spawn(2, ctx, Schedule::Static);
+        let cen = Arc::new(vec![0.0, 0.0, 0.0, 255.0, 255.0, 255.0]);
+        for round in 0..3 {
+            let outcomes = pool.run_round(step_jobs(nblocks, &cen)).unwrap();
+            assert_eq!(outcomes.len(), nblocks, "round {round}");
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn static_schedule_uses_all_workers() {
+        let (ctx, _img) = context(None);
+        let nblocks = ctx.plan.len();
+        assert!(nblocks >= 4);
+        let pool = WorkerPool::spawn(2, ctx, Schedule::Static);
+        let cen = Arc::new(vec![0.0; 6]);
+        let outcomes = pool.run_round(step_jobs(nblocks, &cen)).unwrap();
+        let w0 = outcomes.iter().filter(|o| o.worker == 0).count();
+        let w1 = outcomes.iter().filter(|o| o.worker == 1).count();
+        assert_eq!(w0 + w1, nblocks);
+        assert!(w0 > 0 && w1 > 0, "static split degenerate: {w0}/{w1}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn empty_round_is_noop() {
+        let (ctx, _img) = context(None);
+        let pool = WorkerPool::spawn(1, ctx, Schedule::Dynamic);
+        assert!(pool.run_round(Vec::new()).unwrap().is_empty());
+        pool.shutdown();
+    }
+}

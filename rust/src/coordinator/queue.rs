@@ -1,0 +1,212 @@
+//! Job distribution: static (pre-assigned) or dynamic (shared) queues.
+//!
+//! MATLAB's `parfor`/`blockproc` schedules blocks onto parpool workers
+//! dynamically; a static round-robin split is the classic alternative the
+//! ablation bench compares (static splits suffer when block costs are
+//! skewed, e.g. partial edge blocks). Both are one structure: a set of
+//! per-worker deques plus an optional shared overflow — `pop(worker)`
+//! drains the worker's own deque first, then (dynamic mode) steals from
+//! the shared pool.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use super::messages::Job;
+
+/// Scheduling policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Blocks pre-assigned round-robin; no stealing.
+    Static,
+    /// Single shared queue; workers pull as they finish (default; what
+    /// `parfor` does).
+    Dynamic,
+}
+
+impl std::str::FromStr for Schedule {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Ok(Schedule::Static),
+            "dynamic" => Ok(Schedule::Dynamic),
+            other => Err(format!("unknown schedule {other:?} (want static|dynamic)")),
+        }
+    }
+}
+
+struct QueueState {
+    /// Per-worker private queues (static mode).
+    per_worker: Vec<VecDeque<Job>>,
+    /// Shared queue (dynamic mode).
+    shared: VecDeque<Job>,
+    /// No more jobs will ever arrive.
+    closed: bool,
+}
+
+/// Blocking multi-worker job queue.
+pub struct JobQueue {
+    schedule: Schedule,
+    state: Mutex<QueueState>,
+    cond: Condvar,
+}
+
+impl JobQueue {
+    pub fn new(workers: usize, schedule: Schedule) -> JobQueue {
+        assert!(workers > 0);
+        JobQueue {
+            schedule,
+            state: Mutex::new(QueueState {
+                per_worker: (0..workers).map(|_| VecDeque::new()).collect(),
+                shared: VecDeque::new(),
+                closed: false,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        self.schedule
+    }
+
+    /// Enqueue a round of jobs. Static: round-robin over workers (block
+    /// `i` → worker `i % W`, matching the deterministic split MATLAB's
+    /// `spmd` codistributor would make). Dynamic: one shared queue.
+    pub fn push_round(&self, jobs: Vec<Job>) {
+        let mut st = self.state.lock().unwrap();
+        assert!(!st.closed, "push after close");
+        match self.schedule {
+            Schedule::Static => {
+                let w = st.per_worker.len();
+                for (i, job) in jobs.into_iter().enumerate() {
+                    st.per_worker[i % w].push_back(job);
+                }
+            }
+            Schedule::Dynamic => st.shared.extend(jobs),
+        }
+        drop(st);
+        self.cond.notify_all();
+    }
+
+    /// Blocking pop for `worker`. Returns `None` once the queue is closed
+    /// and empty (for this worker).
+    pub fn pop(&self, worker: usize) -> Option<Job> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = st.per_worker[worker].pop_front() {
+                return Some(job);
+            }
+            if let Some(job) = st.shared.pop_front() {
+                return Some(job);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Enqueue a job for one specific worker (barrier pings), regardless
+    /// of schedule mode.
+    pub fn push_to_worker(&self, worker: usize, job: Job) {
+        let mut st = self.state.lock().unwrap();
+        assert!(!st.closed, "push after close");
+        st.per_worker[worker].push_back(job);
+        drop(st);
+        self.cond.notify_all();
+    }
+
+    /// Close the queue; workers drain what remains and exit.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+
+    /// Jobs currently waiting (for tests / introspection).
+    pub fn pending(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.shared.len() + st.per_worker.iter().map(VecDeque::len).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::JobPayload;
+    use std::sync::Arc;
+
+    fn job(block: usize) -> Job {
+        Job {
+            block,
+            round: 0,
+            payload: JobPayload::Step {
+                centroids: Arc::new(vec![0.0; 6]),
+            },
+        }
+    }
+
+    #[test]
+    fn static_round_robin_assignment() {
+        let q = JobQueue::new(2, Schedule::Static);
+        q.push_round((0..5).map(job).collect());
+        // worker 0 gets blocks 0,2,4; worker 1 gets 1,3
+        assert_eq!(q.pop(0).unwrap().block, 0);
+        assert_eq!(q.pop(0).unwrap().block, 2);
+        assert_eq!(q.pop(1).unwrap().block, 1);
+        assert_eq!(q.pop(0).unwrap().block, 4);
+        assert_eq!(q.pop(1).unwrap().block, 3);
+        q.close();
+        assert!(q.pop(0).is_none());
+        assert!(q.pop(1).is_none());
+    }
+
+    #[test]
+    fn dynamic_any_worker_drains() {
+        let q = JobQueue::new(3, Schedule::Dynamic);
+        q.push_round((0..4).map(job).collect());
+        let mut got: Vec<usize> = (0..4).map(|i| q.pop(i % 3).unwrap().block).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        let q = Arc::new(JobQueue::new(1, Schedule::Dynamic));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop(0).map(|j| j.block));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push_round(vec![job(7)]);
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn close_wakes_blocked_workers() {
+        let q = Arc::new(JobQueue::new(2, Schedule::Dynamic));
+        let handles: Vec<_> = (0..2)
+            .map(|w| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || q.pop(w).is_none())
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        for h in handles {
+            assert!(h.join().unwrap(), "worker should see closed queue");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "push after close")]
+    fn push_after_close_panics() {
+        let q = JobQueue::new(1, Schedule::Dynamic);
+        q.close();
+        q.push_round(vec![job(0)]);
+    }
+
+    #[test]
+    fn schedule_parses() {
+        assert_eq!("static".parse::<Schedule>().unwrap(), Schedule::Static);
+        assert_eq!("Dynamic".parse::<Schedule>().unwrap(), Schedule::Dynamic);
+        assert!("rr".parse::<Schedule>().is_err());
+    }
+}

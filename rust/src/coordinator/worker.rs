@@ -1,0 +1,179 @@
+//! Worker thread: pulls jobs, reads its block, runs the backend.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::messages::{BlockTiming, Job, JobOutcome, JobPayload, JobResult};
+use super::queue::JobQueue;
+use crate::blocks::BlockPlan;
+use crate::image::Raster;
+use crate::runtime::BackendSpec;
+use crate::stripstore::{StripReader, StripStore};
+
+/// Where workers get block pixels from.
+#[derive(Clone)]
+pub enum BlockSource {
+    /// Crop directly from the shared in-memory raster.
+    Direct(Arc<Raster>),
+    /// Read via a strip store (whole-strip reads, counted) — the
+    /// `blockproc` I/O model.
+    Strips(Arc<StripStore>),
+}
+
+/// Everything a worker thread needs, cheap to clone per worker.
+#[derive(Clone)]
+pub struct WorkerContext {
+    pub plan: Arc<BlockPlan>,
+    pub source: BlockSource,
+    pub backend: BackendSpec,
+    /// Fault injection: processing this block index fails (tests).
+    pub fail_block: Option<usize>,
+    /// Hint for backend warmup: will this run use per-block local mode?
+    pub local_mode: bool,
+}
+
+/// Per-worker block reader (owns file handles / scratch).
+enum Reader {
+    Direct(Arc<Raster>),
+    Strips(Box<StripReader>),
+}
+
+impl Reader {
+    fn read(&mut self, ctx: &WorkerContext, block: usize, buf: &mut Vec<f32>) -> Result<()> {
+        let region = ctx.plan.region(block);
+        match self {
+            Reader::Direct(raster) => {
+                raster.crop_into(region, buf);
+                Ok(())
+            }
+            Reader::Strips(reader) => reader.read_block(region, buf),
+        }
+    }
+}
+
+/// Worker main loop. Runs on its own thread until the queue closes.
+/// Every job produces exactly one message on `results` (Ok or Err), so
+/// the leader can count responses without tracking worker liveness.
+pub fn worker_main(
+    worker_id: usize,
+    ctx: WorkerContext,
+    queue: Arc<JobQueue>,
+    results: Sender<Result<JobOutcome>>,
+) {
+    // Build this worker's private engine (PJRT client or native math).
+    let mut backend = match ctx.backend.build() {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = results.send(Err(e.context(format!("worker {worker_id}: backend init"))));
+            return;
+        }
+    };
+    let mut reader = match &ctx.source {
+        BlockSource::Direct(r) => Reader::Direct(Arc::clone(r)),
+        BlockSource::Strips(s) => match s.reader() {
+            Ok(rd) => Reader::Strips(Box::new(rd)),
+            Err(e) => {
+                let _ = results.send(Err(e.context(format!("worker {worker_id}: open reader"))));
+                return;
+            }
+        },
+    };
+
+    let mut px_buf: Vec<f32> = Vec::new();
+    while let Some(job) = queue.pop(worker_id) {
+        let outcome = run_job(worker_id, &ctx, &mut reader, backend.as_mut(), &job, &mut px_buf);
+        // If the leader hung up, exit quietly.
+        if results.send(outcome).is_err() {
+            return;
+        }
+    }
+}
+
+fn run_job(
+    worker_id: usize,
+    ctx: &WorkerContext,
+    reader: &mut Reader,
+    backend: &mut dyn crate::runtime::ComputeBackend,
+    job: &Job,
+    px_buf: &mut Vec<f32>,
+) -> Result<JobOutcome> {
+    if let JobPayload::Ping = job.payload {
+        backend
+            .warm(ctx.local_mode)
+            .with_context(|| format!("worker {worker_id}: backend warmup"))?;
+        return Ok(JobOutcome {
+            block: job.block,
+            round: job.round,
+            worker: worker_id,
+            timing: BlockTiming::default(),
+            result: JobResult::Pong,
+        });
+    }
+    if ctx.fail_block == Some(job.block) {
+        return Err(anyhow!(
+            "injected failure on block {} (worker {worker_id})",
+            job.block
+        ));
+    }
+    let t_io = Instant::now();
+    reader
+        .read(ctx, job.block, px_buf)
+        .with_context(|| format!("worker {worker_id}: read block {}", job.block))?;
+    let io_secs = t_io.elapsed().as_secs_f64();
+    let pixels = ctx.plan.region(job.block).area();
+
+    let t_c = Instant::now();
+    let result = match &job.payload {
+        JobPayload::Step { centroids } => JobResult::Step {
+            accum: backend.step_block(px_buf, centroids)?,
+        },
+        JobPayload::Assign { centroids } => {
+            let mut labels = Vec::new();
+            let inertia = backend.assign_block(px_buf, centroids, &mut labels)?;
+            JobResult::Assign { labels, inertia }
+        }
+        JobPayload::Ping => unreachable!("handled above"),
+        JobPayload::Local { init } => {
+            let mut labels = Vec::new();
+            let (centroids, inertia) = backend.local_block(px_buf, init, &mut labels)?;
+            // per-cluster counts for harmonization weighting
+            let k = init.len() / ctx.plan_channels();
+            let mut counts = vec![0u64; k];
+            for &l in &labels {
+                counts[l as usize] += 1;
+            }
+            JobResult::Local {
+                labels,
+                centroids,
+                inertia,
+                counts,
+            }
+        }
+    };
+    let compute_secs = t_c.elapsed().as_secs_f64();
+
+    Ok(JobOutcome {
+        block: job.block,
+        round: job.round,
+        worker: worker_id,
+        timing: BlockTiming {
+            io_secs,
+            compute_secs,
+            pixels,
+        },
+        result,
+    })
+}
+
+impl WorkerContext {
+    /// Channel count of the underlying imagery.
+    pub fn plan_channels(&self) -> usize {
+        match &self.source {
+            BlockSource::Direct(r) => r.channels(),
+            BlockSource::Strips(s) => s.channels(),
+        }
+    }
+}

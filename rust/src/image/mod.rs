@@ -1,0 +1,17 @@
+//! Image substrate: rasters, synthetic orthoimagery, codecs, statistics.
+//!
+//! The paper clusters USGS EarthExplorer aerial orthoimages; those are
+//! proprietary-ish downloads we cannot ship, so [`SyntheticOrtho`]
+//! generates statistically similar multi-band scenes at the paper's exact
+//! pixel dimensions (DESIGN.md §5 documents the substitution). [`Raster`]
+//! is the in-memory representation every other module works on; [`ppm`]
+//! writes portable pixmaps so the Figures 3–7 analogues can be eyeballed.
+
+pub mod ops;
+mod ppm;
+mod raster;
+mod synthetic;
+
+pub use ppm::{read_ppm, write_labels_pgm, write_labels_ppm, write_ppm, PALETTE};
+pub use raster::{Raster, RasterStats};
+pub use synthetic::SyntheticOrtho;

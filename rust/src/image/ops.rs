@@ -1,0 +1,205 @@
+//! Raster preprocessing operations.
+//!
+//! The pipeline stages a real satellite-image workflow needs before
+//! clustering: grayscale conversion, band normalization, downsampling
+//! (the paper works across 30–80 cm GSD resolutions — downsampling
+//! emulates coarser GSD), histograms, and bit-depth rescaling (the
+//! paper mixes 8-bit and 16-bit imagery).
+
+use super::raster::Raster;
+
+/// Luma grayscale (Rec.601 weights for RGB; mean for other band counts).
+pub fn to_gray(img: &Raster) -> Raster {
+    let c = img.channels();
+    let mut out = Raster::zeros(img.height(), img.width(), 1);
+    let weights: &[f32] = if c == 3 {
+        &[0.299, 0.587, 0.114]
+    } else {
+        &[]
+    };
+    for (dst, px) in out
+        .data_mut()
+        .iter_mut()
+        .zip(img.data().chunks_exact(c))
+    {
+        *dst = if c == 3 {
+            px.iter().zip(weights).map(|(v, w)| v * w).sum()
+        } else {
+            px.iter().sum::<f32>() / c as f32
+        };
+    }
+    out
+}
+
+/// Per-band min-max normalization to `[0, hi]`.
+pub fn normalize(img: &Raster, hi: f32) -> Raster {
+    assert!(hi > 0.0);
+    let stats = img.stats();
+    let c = img.channels();
+    let mut out = img.clone();
+    let scale: Vec<f32> = (0..c)
+        .map(|b| {
+            let range = stats.max[b] - stats.min[b];
+            if range > 0.0 {
+                hi / range
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    for px in out.data_mut().chunks_exact_mut(c) {
+        for (b, v) in px.iter_mut().enumerate() {
+            *v = (*v - stats.min[b]) * scale[b];
+        }
+    }
+    out
+}
+
+/// Rescale a 16-bit DN range (`[0, 65535]`) to 8-bit (`[0, 255]`) — the
+/// paper's high-resolution set is 16-bit.
+pub fn rescale_16_to_8(img: &Raster) -> Raster {
+    let mut out = img.clone();
+    for v in out.data_mut() {
+        *v = (*v / 257.0).clamp(0.0, 255.0);
+    }
+    out
+}
+
+/// Box-filter downsample by integer `factor` (GSD coarsening).
+/// Edge cells average the available pixels.
+pub fn downsample(img: &Raster, factor: usize) -> Raster {
+    assert!(factor >= 1);
+    if factor == 1 {
+        return img.clone();
+    }
+    let c = img.channels();
+    let oh = img.height().div_ceil(factor);
+    let ow = img.width().div_ceil(factor);
+    let mut out = Raster::zeros(oh, ow, c);
+    for orow in 0..oh {
+        for ocol in 0..ow {
+            let r0 = orow * factor;
+            let c0 = ocol * factor;
+            let r1 = (r0 + factor).min(img.height());
+            let c1 = (c0 + factor).min(img.width());
+            let mut acc = vec![0.0f64; c];
+            for r in r0..r1 {
+                for col in c0..c1 {
+                    for (b, &v) in img.get(r, col).iter().enumerate() {
+                        acc[b] += v as f64;
+                    }
+                }
+            }
+            let n = ((r1 - r0) * (c1 - c0)) as f64;
+            let px: Vec<f32> = acc.iter().map(|a| (a / n) as f32).collect();
+            out.set(orow, ocol, &px);
+        }
+    }
+    out
+}
+
+/// Per-band histogram with `bins` buckets over `[lo, hi)`.
+/// Returns `channels × bins` counts.
+pub fn histogram(img: &Raster, bins: usize, lo: f32, hi: f32) -> Vec<Vec<u64>> {
+    assert!(bins > 0 && hi > lo);
+    let c = img.channels();
+    let mut out = vec![vec![0u64; bins]; c];
+    let scale = bins as f32 / (hi - lo);
+    for px in img.data().chunks_exact(c) {
+        for (b, &v) in px.iter().enumerate() {
+            let bin = (((v - lo) * scale) as isize).clamp(0, bins as isize - 1) as usize;
+            out[b][bin] += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::SyntheticOrtho;
+
+    fn img() -> Raster {
+        SyntheticOrtho::default().with_seed(31).generate(24, 32)
+    }
+
+    #[test]
+    fn gray_has_one_band_and_rec601_weights() {
+        let mut src = Raster::zeros(1, 1, 3);
+        src.set(0, 0, &[100.0, 200.0, 50.0]);
+        let g = to_gray(&src);
+        assert_eq!(g.channels(), 1);
+        let want = 100.0 * 0.299 + 200.0 * 0.587 + 50.0 * 0.114;
+        assert!((g.get(0, 0)[0] - want).abs() < 1e-4);
+    }
+
+    #[test]
+    fn normalize_hits_full_range() {
+        let n = normalize(&img(), 1.0);
+        let s = n.stats();
+        for b in 0..3 {
+            assert!(s.min[b].abs() < 1e-6);
+            assert!((s.max[b] - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn normalize_flat_band_is_zero() {
+        let flat = Raster::zeros(4, 4, 1);
+        let n = normalize(&flat, 255.0);
+        assert!(n.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn rescale_16bit_maxes_at_255() {
+        let mut src = Raster::zeros(1, 2, 1);
+        src.set(0, 0, &[65535.0]);
+        src.set(0, 1, &[32767.5]);
+        let out = rescale_16_to_8(&src);
+        assert!((out.get(0, 0)[0] - 255.0).abs() < 0.01);
+        assert!((out.get(0, 1)[0] - 127.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn downsample_halves_dims_and_preserves_mean() {
+        let src = img();
+        let d = downsample(&src, 2);
+        assert_eq!(d.height(), 12);
+        assert_eq!(d.width(), 16);
+        let m_src = src.stats().mean[0];
+        let m_d = d.stats().mean[0];
+        assert!((m_src - m_d).abs() < 1.0, "{m_src} vs {m_d}");
+    }
+
+    #[test]
+    fn downsample_uneven_edges() {
+        let src = SyntheticOrtho::default().with_seed(1).generate(5, 7);
+        let d = downsample(&src, 3);
+        assert_eq!((d.height(), d.width()), (2, 3));
+    }
+
+    #[test]
+    fn downsample_identity_at_factor_1() {
+        let src = img();
+        assert_eq!(downsample(&src, 1), src);
+    }
+
+    #[test]
+    fn histogram_counts_every_pixel() {
+        let h = histogram(&img(), 16, 0.0, 256.0);
+        assert_eq!(h.len(), 3);
+        for band in &h {
+            assert_eq!(band.iter().sum::<u64>() as usize, 24 * 32);
+        }
+    }
+
+    #[test]
+    fn histogram_clamps_out_of_range() {
+        let mut src = Raster::zeros(1, 2, 1);
+        src.set(0, 0, &[-5.0]);
+        src.set(0, 1, &[999.0]);
+        let h = histogram(&src, 4, 0.0, 100.0);
+        assert_eq!(h[0][0], 1);
+        assert_eq!(h[0][3], 1);
+    }
+}

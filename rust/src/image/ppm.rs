@@ -1,0 +1,225 @@
+//! PPM/PGM codecs — write the Figures 3–7 analogues to disk.
+//!
+//! Binary `P6` (RGB) and `P5` (gray) only; that is all the examples need
+//! to dump input scenes and clustered label maps for visual inspection.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::raster::Raster;
+
+/// A qualitative palette for label maps (distinct hues, ordered).
+pub const PALETTE: [[u8; 3]; 10] = [
+    [230, 25, 75],
+    [60, 180, 75],
+    [0, 130, 200],
+    [255, 225, 25],
+    [145, 30, 180],
+    [70, 240, 240],
+    [245, 130, 48],
+    [240, 50, 230],
+    [128, 128, 0],
+    [0, 0, 128],
+];
+
+/// Write an RGB (or gray, replicated) raster as binary PPM. Samples are
+/// clamped to `[0, 255]` and truncated to u8.
+pub fn write_ppm(img: &Raster, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "P6\n{} {}\n255", img.width(), img.height())?;
+    let c = img.channels();
+    let mut buf = Vec::with_capacity(img.width() * 3);
+    for r in 0..img.height() {
+        buf.clear();
+        for col in 0..img.width() {
+            let px = img.get(r, col);
+            for b in 0..3 {
+                let v = px[b.min(c - 1)].clamp(0.0, 255.0) as u8;
+                buf.push(v);
+            }
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Write a label map (`labels[row*width+col]`) as a palette-colored PPM.
+pub fn write_labels_ppm(labels: &[u32], height: usize, width: usize, path: &Path) -> Result<()> {
+    if labels.len() != height * width {
+        bail!(
+            "label buffer {} != {}x{}",
+            labels.len(),
+            height,
+            width
+        );
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "P6\n{width} {height}\n255")?;
+    let mut buf = Vec::with_capacity(width * 3);
+    for r in 0..height {
+        buf.clear();
+        for c in 0..width {
+            let l = labels[r * width + c] as usize % PALETTE.len();
+            buf.extend_from_slice(&PALETTE[l]);
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Write a label map as grayscale PGM (`label * 255 / (k-1)`).
+pub fn write_labels_pgm(
+    labels: &[u32],
+    height: usize,
+    width: usize,
+    k: usize,
+    path: &Path,
+) -> Result<()> {
+    if labels.len() != height * width {
+        bail!("label buffer {} != {}x{}", labels.len(), height, width);
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "P5\n{width} {height}\n255")?;
+    let scale = if k > 1 { 255 / (k - 1) as u32 } else { 255 };
+    let mut buf = Vec::with_capacity(width);
+    for r in 0..height {
+        buf.clear();
+        for c in 0..width {
+            buf.push((labels[r * width + c] * scale).min(255) as u8);
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Read a binary PPM (P6, maxval ≤ 255) into an RGB raster.
+pub fn read_ppm(path: &Path) -> Result<Raster> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+
+    let magic = read_token(&mut r)?;
+    if magic != "P6" {
+        bail!("unsupported magic {magic:?} (want P6)");
+    }
+    let width: usize = read_token(&mut r)?.parse().context("width")?;
+    let height: usize = read_token(&mut r)?.parse().context("height")?;
+    let maxval: usize = read_token(&mut r)?.parse().context("maxval")?;
+    if maxval == 0 || maxval > 255 {
+        bail!("unsupported maxval {maxval}");
+    }
+    let mut raw = vec![0u8; width * height * 3];
+    r.read_exact(&mut raw).context("pixel payload")?;
+    let data: Vec<f32> = raw.iter().map(|&b| b as f32).collect();
+    Ok(Raster::from_vec(height, width, 3, data))
+}
+
+/// Read one whitespace-delimited header token, skipping `#` comments.
+fn read_token<R: BufRead>(r: &mut R) -> Result<String> {
+    let mut tok = String::new();
+    let mut in_comment = false;
+    loop {
+        let mut byte = [0u8; 1];
+        if r.read(&mut byte)? == 0 {
+            bail!("unexpected EOF in header");
+        }
+        let c = byte[0] as char;
+        if in_comment {
+            if c == '\n' {
+                in_comment = false;
+            }
+            continue;
+        }
+        if c == '#' {
+            in_comment = true;
+            continue;
+        }
+        if c.is_whitespace() {
+            if tok.is_empty() {
+                continue;
+            }
+            return Ok(tok);
+        }
+        tok.push(c);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::SyntheticOrtho;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("blockms_ppm_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn ppm_round_trip() {
+        let img = SyntheticOrtho::default().with_seed(9).generate(20, 30);
+        let path = tmp("rt.ppm");
+        write_ppm(&img, &path).unwrap();
+        let back = read_ppm(&path).unwrap();
+        assert_eq!(back.height(), 20);
+        assert_eq!(back.width(), 30);
+        // u8 quantization: within 1 DN
+        for r in 0..20 {
+            for c in 0..30 {
+                for b in 0..3 {
+                    let a = img.get(r, c)[b];
+                    let z = back.get(r, c)[b];
+                    assert!((a - z).abs() <= 1.0, "({r},{c},{b}): {a} vs {z}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labels_ppm_writes() {
+        let labels: Vec<u32> = (0..12).map(|i| i % 4).collect();
+        let path = tmp("labels.ppm");
+        write_labels_ppm(&labels, 3, 4, &path).unwrap();
+        let img = read_ppm(&path).unwrap();
+        assert_eq!(img.get(0, 0), &[230.0, 25.0, 75.0]); // PALETTE[0]
+        assert_eq!(img.get(0, 1), &[60.0, 180.0, 75.0]); // PALETTE[1]
+    }
+
+    #[test]
+    fn labels_pgm_writes() {
+        let labels: Vec<u32> = vec![0, 1, 1, 0];
+        let path = tmp("labels.pgm");
+        write_labels_pgm(&labels, 2, 2, 2, &path).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        assert!(raw.starts_with(b"P5"));
+        assert_eq!(&raw[raw.len() - 4..], &[0u8, 255, 255, 0]);
+    }
+
+    #[test]
+    fn label_len_mismatch_errors() {
+        assert!(write_labels_ppm(&[0u32; 5], 2, 3, &tmp("bad.ppm")).is_err());
+    }
+
+    #[test]
+    fn read_rejects_bad_magic() {
+        let path = tmp("badmagic.ppm");
+        std::fs::write(&path, b"P3\n1 1\n255\n0 0 0\n").unwrap();
+        assert!(read_ppm(&path).is_err());
+    }
+
+    #[test]
+    fn header_comments_are_skipped() {
+        let path = tmp("comment.ppm");
+        std::fs::write(&path, b"P6 # comment\n# full line\n2 1\n255\nabcdef").unwrap();
+        let img = read_ppm(&path).unwrap();
+        assert_eq!(img.width(), 2);
+        assert_eq!(img.get(0, 0)[0], b'a' as f32);
+    }
+}

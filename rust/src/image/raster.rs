@@ -1,0 +1,241 @@
+//! In-memory raster: row-major, channel-interleaved `f32` samples.
+//!
+//! Layout matches what the AOT kernels consume — a block crop flattens
+//! directly into the `pixels[P, C]` chunk layout with zero reshuffling
+//! (`P = rows×cols` in row-major order, `C` interleaved) — so the hot
+//! path is a straight `memcpy` per block row.
+
+use crate::blocks::BlockRegion;
+
+/// A height×width×channels raster of `f32` samples (digital numbers;
+/// the paper's 8/16-bit imagery is promoted to f32 on load).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Raster {
+    height: usize,
+    width: usize,
+    channels: usize,
+    data: Vec<f32>,
+}
+
+/// Per-band summary statistics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RasterStats {
+    pub min: Vec<f32>,
+    pub max: Vec<f32>,
+    pub mean: Vec<f64>,
+}
+
+impl Raster {
+    /// Allocate a zero-filled raster.
+    pub fn zeros(height: usize, width: usize, channels: usize) -> Raster {
+        assert!(height > 0 && width > 0 && channels > 0, "degenerate raster");
+        Raster {
+            height,
+            width,
+            channels,
+            data: vec![0.0; height * width * channels],
+        }
+    }
+
+    /// Wrap an existing buffer (must be `height*width*channels` long).
+    pub fn from_vec(height: usize, width: usize, channels: usize, data: Vec<f32>) -> Raster {
+        assert_eq!(
+            data.len(),
+            height * width * channels,
+            "buffer length {} != {}x{}x{}",
+            data.len(),
+            height,
+            width,
+            channels
+        );
+        Raster {
+            height,
+            width,
+            channels,
+            data,
+        }
+    }
+
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// Total pixel count (not samples).
+    pub fn pixels(&self) -> usize {
+        self.height * self.width
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    fn idx(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.height && col < self.width);
+        (row * self.width + col) * self.channels
+    }
+
+    /// One pixel's samples.
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> &[f32] {
+        let i = self.idx(row, col);
+        &self.data[i..i + self.channels]
+    }
+
+    #[inline]
+    pub fn set(&mut self, row: usize, col: usize, px: &[f32]) {
+        assert_eq!(px.len(), self.channels);
+        let i = self.idx(row, col);
+        self.data[i..i + self.channels].copy_from_slice(px);
+    }
+
+    /// One full row of interleaved samples.
+    #[inline]
+    pub fn row(&self, row: usize) -> &[f32] {
+        let i = self.idx(row, 0);
+        &self.data[i..i + self.width * self.channels]
+    }
+
+    /// Copy a rectangular region into a flat `pixels[P, C]` buffer
+    /// (row-major within the region) — the exact layout the kernels and
+    /// the sequential baseline consume.
+    pub fn crop_into(&self, region: &BlockRegion, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(region.rows() * region.cols() * self.channels);
+        for r in region.row0..region.row0 + region.rows() {
+            let start = self.idx(r, region.col0);
+            out.extend_from_slice(&self.data[start..start + region.cols() * self.channels]);
+        }
+    }
+
+    /// Convenience: crop to a fresh vector.
+    pub fn crop(&self, region: &BlockRegion) -> Vec<f32> {
+        let mut v = Vec::new();
+        self.crop_into(region, &mut v);
+        v
+    }
+
+    /// Flatten the whole image as a `pixels[P, C]` slice view.
+    pub fn as_pixels(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Per-band statistics.
+    pub fn stats(&self) -> RasterStats {
+        let c = self.channels;
+        let mut min = vec![f32::INFINITY; c];
+        let mut max = vec![f32::NEG_INFINITY; c];
+        let mut sum = vec![0.0f64; c];
+        for px in self.data.chunks_exact(c) {
+            for (b, &v) in px.iter().enumerate() {
+                if v < min[b] {
+                    min[b] = v;
+                }
+                if v > max[b] {
+                    max[b] = v;
+                }
+                sum[b] += v as f64;
+            }
+        }
+        let n = self.pixels() as f64;
+        RasterStats {
+            min,
+            max,
+            mean: sum.iter().map(|s| s / n).collect(),
+        }
+    }
+
+    /// Byte size of the sample buffer (for the I/O cost model).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockRegion;
+
+    fn ramp(h: usize, w: usize, c: usize) -> Raster {
+        let mut r = Raster::zeros(h, w, c);
+        for row in 0..h {
+            for col in 0..w {
+                let px: Vec<f32> = (0..c).map(|b| (row * w + col) as f32 + b as f32 * 0.1).collect();
+                r.set(row, col, &px);
+            }
+        }
+        r
+    }
+
+    #[test]
+    fn get_set_round_trip() {
+        let mut r = Raster::zeros(4, 5, 3);
+        r.set(2, 3, &[1.0, 2.0, 3.0]);
+        assert_eq!(r.get(2, 3), &[1.0, 2.0, 3.0]);
+        assert_eq!(r.get(0, 0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn row_slice_is_contiguous() {
+        let r = ramp(3, 4, 2);
+        let row1 = r.row(1);
+        assert_eq!(row1.len(), 4 * 2);
+        assert_eq!(row1[0], r.get(1, 0)[0]);
+        assert_eq!(row1[7], r.get(1, 3)[1]);
+    }
+
+    #[test]
+    fn crop_matches_manual_copy() {
+        let r = ramp(6, 7, 3);
+        let region = BlockRegion::new(1, 2, 3, 4);
+        let c = r.crop(&region);
+        assert_eq!(c.len(), 3 * 4 * 3);
+        let mut want = Vec::new();
+        for row in 1..4 {
+            for col in 2..6 {
+                want.extend_from_slice(r.get(row, col));
+            }
+        }
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn crop_full_image_equals_data() {
+        let r = ramp(5, 5, 3);
+        let full = BlockRegion::new(0, 0, 5, 5);
+        assert_eq!(r.crop(&full), r.data().to_vec());
+    }
+
+    #[test]
+    fn stats_ramp() {
+        let r = ramp(2, 2, 1);
+        let s = r.stats();
+        assert_eq!(s.min[0], 0.0);
+        assert_eq!(s.max[0], 3.0);
+        assert!((s.mean[0] - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer length")]
+    fn from_vec_checks_len() {
+        Raster::from_vec(2, 2, 3, vec![0.0; 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn zero_dims_rejected() {
+        Raster::zeros(0, 4, 3);
+    }
+}

@@ -1,0 +1,300 @@
+//! Synthetic orthoimagery generator (the paper's dataset substitute).
+//!
+//! The paper uses 100+ USGS EarthExplorer aerial images (RGB, 8/16-bit,
+//! 30–80 cm GSD, 1024×768 … 9052×4965 px). We can't ship those, so this
+//! generator produces scenes with the properties that actually matter to
+//! K-Means timing and clustering behaviour:
+//!
+//! - **spatially coherent structure** — multi-octave value noise
+//!   ("terrain") so blocks are not i.i.d. and block-local clustering
+//!   differs from global clustering, as on real scenes;
+//! - **distinct land-cover classes** — `classes` spectral signatures
+//!   (think water / vegetation / bare soil / built-up) blended by a
+//!   second noise field, so K-Means at the paper's K ∈ {2,4} finds real
+//!   structure;
+//! - **sensor noise** — per-band Gaussian noise at `noise_dn` DNs;
+//! - **8-bit DN range** `[0, 255]`, matching the paper's medium-res set.
+//!
+//! Generation is deterministic in the seed and O(pixels).
+
+use super::raster::Raster;
+use crate::util::prng::Rng;
+
+/// Configuration for the synthetic scene generator.
+#[derive(Clone, Debug)]
+pub struct SyntheticOrtho {
+    /// Land-cover class count (spectral clusters genuinely present).
+    pub classes: usize,
+    /// Octaves of value noise for the class field.
+    pub octaves: usize,
+    /// Base lattice cell size in pixels at the coarsest octave.
+    pub base_cell: usize,
+    /// Std-dev of per-band sensor noise, in DNs.
+    pub noise_dn: f32,
+    /// Output band count (3 = RGB, the paper's imagery).
+    pub channels: usize,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for SyntheticOrtho {
+    fn default() -> Self {
+        Self {
+            classes: 5,
+            octaves: 4,
+            base_cell: 256,
+            noise_dn: 6.0,
+            channels: 3,
+            seed: 0xB10C_5EED,
+        }
+    }
+}
+
+impl SyntheticOrtho {
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_classes(mut self, classes: usize) -> Self {
+        assert!(classes >= 2, "need at least 2 land-cover classes");
+        self.classes = classes;
+        self
+    }
+
+    pub fn with_channels(mut self, channels: usize) -> Self {
+        assert!((1..=4).contains(&channels));
+        self.channels = channels;
+        self
+    }
+
+    /// Generate a `height×width` scene.
+    pub fn generate(&self, height: usize, width: usize) -> Raster {
+        self.generate_with_truth(height, width).0
+    }
+
+    /// Generate a scene plus its ground-truth land-cover map (the class
+    /// index each pixel was rendered from). The truth map is what the
+    /// clustering *should* recover (up to label permutation) — used by
+    /// [`crate::metrics::quality`] to score clusterings objectively.
+    pub fn generate_with_truth(&self, height: usize, width: usize) -> (Raster, Vec<u32>) {
+        assert!(height > 0 && width > 0);
+        let mut rng = Rng::new(self.seed);
+
+        // Spectral signature per class per band, spread over the DN range
+        // so classes are separable but overlapping (realistic confusion).
+        let mut signatures = vec![vec![0.0f32; self.channels]; self.classes];
+        for (ci, sig) in signatures.iter_mut().enumerate() {
+            let base = 30.0 + 195.0 * (ci as f32 + 0.5) / self.classes as f32;
+            for s in sig.iter_mut() {
+                *s = (base + (rng.next_f32() - 0.5) * 60.0).clamp(0.0, 255.0);
+            }
+        }
+
+        // Per-octave permutation-hash lattices (value noise). Noise is
+        // evaluated per pixel from hashed lattice corners with bilinear
+        // interpolation — O(1) per pixel per octave, no stored lattice.
+        let field_seed = rng.split();
+        let mut noise_rng = rng.split();
+
+        let mut img = Raster::zeros(height, width, self.channels);
+        let mut truth = Vec::with_capacity(height * width);
+        let inv_classes = self.classes as f32;
+        let mut class_row: Vec<f32> = vec![0.0; width];
+        for r in 0..height {
+            self.class_field_row(&field_seed, r, &mut class_row);
+            for c in 0..width {
+                // continuous class value in [0, classes)
+                let t = (class_row[c] * inv_classes).min(inv_classes - 1e-3);
+                let lo = t.floor() as usize;
+                let hi = (lo + 1).min(self.classes - 1);
+                let frac = t - lo as f32;
+                truth.push(if frac < 0.5 { lo as u32 } else { hi as u32 });
+                let mut px = [0.0f32; 4];
+                for b in 0..self.channels {
+                    let v = signatures[lo][b] * (1.0 - frac) + signatures[hi][b] * frac;
+                    let n = noise_rng.next_gauss() as f32 * self.noise_dn;
+                    px[b] = (v + n).clamp(0.0, 255.0);
+                }
+                img.set(r, c, &px[..self.channels]);
+            }
+        }
+        (img, truth)
+    }
+
+    /// Evaluate the multi-octave class field for one row into `out`
+    /// (values in [0,1)).
+    fn class_field_row(&self, seed: &Rng, row: usize, out: &mut [f32]) {
+        let base_seed = {
+            // Derive a stable u64 from the split-off generator's state by
+            // cloning (the clone is never advanced, so this is pure).
+            let mut s = seed.clone();
+            s.next_u64()
+        };
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let mut amp = 1.0f32;
+        let mut total_amp = 0.0f32;
+        let mut cell = self.base_cell.max(2);
+        for oct in 0..self.octaves {
+            let oseed = base_seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(oct as u64 + 1));
+            let y = row as f32 / cell as f32;
+            let y0 = y.floor() as i64;
+            let fy = y - y0 as f32;
+            let sy = smooth(fy);
+            for (c, v) in out.iter_mut().enumerate() {
+                let x = c as f32 / cell as f32;
+                let x0 = x.floor() as i64;
+                let fx = x - x0 as f32;
+                let sx = smooth(fx);
+                let v00 = lattice(oseed, x0, y0);
+                let v10 = lattice(oseed, x0 + 1, y0);
+                let v01 = lattice(oseed, x0, y0 + 1);
+                let v11 = lattice(oseed, x0 + 1, y0 + 1);
+                let a = v00 * (1.0 - sx) + v10 * sx;
+                let b = v01 * (1.0 - sx) + v11 * sx;
+                *v += (a * (1.0 - sy) + b * sy) * amp;
+            }
+            total_amp += amp;
+            amp *= 0.55;
+            cell = (cell / 2).max(2);
+        }
+        for v in out.iter_mut() {
+            *v = (*v / total_amp).clamp(0.0, 0.999_999);
+        }
+    }
+}
+
+/// Smoothstep for bilinear noise interpolation.
+#[inline]
+fn smooth(t: f32) -> f32 {
+    t * t * (3.0 - 2.0 * t)
+}
+
+/// Hash a lattice point to a uniform f32 in [0,1) (splitmix-style mix).
+#[inline]
+fn lattice(seed: u64, x: i64, y: i64) -> f32 {
+    let mut z = seed
+        .wrapping_add((x as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add((y as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z >> 11) as f32 * (1.0 / (1u64 << 53) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let g = SyntheticOrtho::default().with_seed(42);
+        let a = g.generate(64, 80);
+        let b = g.generate(64, 80);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = SyntheticOrtho::default().with_seed(1).generate(32, 32);
+        let b = SyntheticOrtho::default().with_seed(2).generate(32, 32);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn dn_range_is_8bit() {
+        let img = SyntheticOrtho::default().with_seed(3).generate(100, 120);
+        let s = img.stats();
+        for b in 0..img.channels() {
+            assert!(s.min[b] >= 0.0 && s.max[b] <= 255.0);
+        }
+        // scene should actually use a good part of the range
+        assert!(s.max[0] - s.min[0] > 60.0, "flat scene: {:?}", s);
+    }
+
+    #[test]
+    fn has_spatial_structure() {
+        // Neighbouring pixels must correlate far more than distant ones —
+        // i.i.d. noise would make block-shape analysis meaningless.
+        // Sensor noise off: this probes the class *field*'s coherence.
+        let img = SyntheticOrtho {
+            noise_dn: 0.0,
+            ..Default::default()
+        }
+        .with_seed(4)
+        .generate(128, 128);
+        let mut near = 0.0f64;
+        let mut far = 0.0f64;
+        let n = 127;
+        for r in 0..n {
+            let a = img.get(r, 10)[0] as f64;
+            near += (a - img.get(r + 1, 10)[0] as f64).abs();
+            far += (a - img.get(r, 110)[0] as f64).abs();
+        }
+        assert!(
+            near / n as f64 * 2.0 < far / n as f64,
+            "no spatial coherence: near={near} far={far}"
+        );
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // A 2-means on a 4-class scene must find a split with lower
+        // inertia than the global variance (i.e. real cluster structure).
+        let img = SyntheticOrtho::default().with_seed(5).generate(96, 96);
+        let px = img.as_pixels();
+        let c = img.channels();
+        let n = img.pixels();
+        // global variance around the mean
+        let stats = img.stats();
+        let mut var = 0.0f64;
+        for p in px.chunks_exact(c) {
+            for (b, &v) in p.iter().enumerate() {
+                let d = v as f64 - stats.mean[b];
+                var += d * d;
+            }
+        }
+        // crude 2-means: split on band-0 threshold at the mean
+        let thr = stats.mean[0] as f32;
+        let (mut lo, mut hi) = (vec![0.0f64; c], vec![0.0f64; c]);
+        let (mut nlo, mut nhi) = (0usize, 0usize);
+        for p in px.chunks_exact(c) {
+            if p[0] < thr {
+                for b in 0..c {
+                    lo[b] += p[b] as f64;
+                }
+                nlo += 1;
+            } else {
+                for b in 0..c {
+                    hi[b] += p[b] as f64;
+                }
+                nhi += 1;
+            }
+        }
+        assert!(nlo > n / 20 && nhi > n / 20, "degenerate split {nlo}/{nhi}");
+        for b in 0..c {
+            lo[b] /= nlo as f64;
+            hi[b] /= nhi as f64;
+        }
+        let mut within = 0.0f64;
+        for p in px.chunks_exact(c) {
+            let m = if p[0] < thr { &lo } else { &hi };
+            for (b, &v) in p.iter().enumerate() {
+                let d = v as f64 - m[b];
+                within += d * d;
+            }
+        }
+        assert!(
+            within < 0.8 * var,
+            "no class structure: within={within:.1} var={var:.1}"
+        );
+    }
+
+    #[test]
+    fn channel_count_respected() {
+        let img = SyntheticOrtho::default().with_channels(1).generate(16, 16);
+        assert_eq!(img.channels(), 1);
+        let img4 = SyntheticOrtho::default().with_channels(4).generate(16, 16);
+        assert_eq!(img4.channels(), 4);
+    }
+}

@@ -1,0 +1,179 @@
+//! Centroid initialization strategies.
+//!
+//! Both the sequential baseline and the parallel coordinator initialize
+//! from the *same* deterministic draw for a given seed, so serial vs
+//! parallel comparisons (every paper table) cluster identically and time
+//! the same work.
+
+use crate::util::prng::Rng;
+
+use super::math::sqdist;
+
+/// How initial centroids are chosen.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InitMethod {
+    /// `k` distinct pixels sampled uniformly (MATLAB `kmeans`'s 'sample').
+    RandomSample,
+    /// k-means++ (D² weighting) — better spreads, fewer iterations.
+    PlusPlus,
+    /// Explicit centroids (tests, resuming, paper-exact replication).
+    Fixed(Vec<f32>),
+}
+
+impl InitMethod {
+    /// Draw initial centroids from `pixels[P, C]`.
+    pub fn centroids(
+        &self,
+        pixels: &[f32],
+        k: usize,
+        channels: usize,
+        seed: u64,
+    ) -> Vec<f32> {
+        assert_eq!(pixels.len() % channels, 0);
+        let n = pixels.len() / channels;
+        assert!(n >= k, "cannot init {k} clusters from {n} pixels");
+        match self {
+            InitMethod::Fixed(c) => {
+                assert_eq!(
+                    c.len(),
+                    k * channels,
+                    "fixed centroids have wrong size: {} != {}*{}",
+                    c.len(),
+                    k,
+                    channels
+                );
+                c.clone()
+            }
+            InitMethod::RandomSample => {
+                let mut rng = Rng::new(seed);
+                let idx = rng.sample_indices(n, k);
+                let mut out = Vec::with_capacity(k * channels);
+                for i in idx {
+                    out.extend_from_slice(&pixels[i * channels..(i + 1) * channels]);
+                }
+                out
+            }
+            InitMethod::PlusPlus => plus_plus(pixels, k, channels, seed),
+        }
+    }
+}
+
+/// k-means++ seeding (Arthur & Vassilvitskii 2007).
+fn plus_plus(pixels: &[f32], k: usize, channels: usize, seed: u64) -> Vec<f32> {
+    let n = pixels.len() / channels;
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(k * channels);
+
+    // First centre uniformly.
+    let first = rng.range_usize(0, n);
+    out.extend_from_slice(&pixels[first * channels..(first + 1) * channels]);
+
+    // d2[i] = distance to nearest chosen centre.
+    let mut d2: Vec<f32> = pixels
+        .chunks_exact(channels)
+        .map(|px| sqdist(px, &out[..channels]))
+        .collect();
+
+    for _ in 1..k {
+        let total: f64 = d2.iter().map(|&d| d as f64).sum();
+        let chosen = if total <= 0.0 {
+            // all points coincide with chosen centres; fall back to uniform
+            rng.range_usize(0, n)
+        } else {
+            let mut target = rng.next_f64() * total;
+            let mut pick = n - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                target -= d as f64;
+                if target <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        let base = chosen * channels;
+        let centre: Vec<f32> = pixels[base..base + channels].to_vec();
+        out.extend_from_slice(&centre);
+        for (i, px) in pixels.chunks_exact(channels).enumerate() {
+            let d = sqdist(px, &centre);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pixels() -> Vec<f32> {
+        // two tight groups around (0,0,0) and (100,100,100)
+        let mut v = Vec::new();
+        for i in 0..50 {
+            let j = (i % 5) as f32 * 0.1;
+            v.extend_from_slice(&[j, j, j]);
+            v.extend_from_slice(&[100.0 + j, 100.0 + j, 100.0 + j]);
+        }
+        v
+    }
+
+    #[test]
+    fn random_sample_is_deterministic_and_from_data() {
+        let px = pixels();
+        let a = InitMethod::RandomSample.centroids(&px, 4, 3, 7);
+        let b = InitMethod::RandomSample.centroids(&px, 4, 3, 7);
+        assert_eq!(a, b);
+        for cen in a.chunks_exact(3) {
+            let found = px.chunks_exact(3).any(|p| p == cen);
+            assert!(found, "centroid {cen:?} not a data pixel");
+        }
+    }
+
+    #[test]
+    fn different_seed_different_draw() {
+        let px = pixels();
+        let a = InitMethod::RandomSample.centroids(&px, 4, 3, 1);
+        let b = InitMethod::RandomSample.centroids(&px, 4, 3, 2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn plus_plus_spreads_across_groups() {
+        let px = pixels();
+        // with 2 centres on two far groups, ++ must pick one from each
+        for seed in 0..20 {
+            let c = InitMethod::PlusPlus.centroids(&px, 2, 3, seed);
+            let lo = c.chunks_exact(3).filter(|p| p[0] < 50.0).count();
+            assert_eq!(lo, 1, "seed {seed}: both centres in one group: {c:?}");
+        }
+    }
+
+    #[test]
+    fn plus_plus_handles_identical_points() {
+        let px = vec![5.0f32; 30]; // 10 identical pixels
+        let c = InitMethod::PlusPlus.centroids(&px, 3, 3, 1);
+        assert_eq!(c.len(), 9);
+        assert!(c.iter().all(|&v| v == 5.0));
+    }
+
+    #[test]
+    fn fixed_passes_through() {
+        let fixed = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let c = InitMethod::Fixed(fixed.clone()).centroids(&pixels(), 2, 3, 0);
+        assert_eq!(c, fixed);
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong size")]
+    fn fixed_size_checked() {
+        InitMethod::Fixed(vec![1.0; 5]).centroids(&pixels(), 2, 3, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot init")]
+    fn too_few_pixels_rejected() {
+        InitMethod::RandomSample.centroids(&[1.0, 2.0, 3.0], 2, 3, 0);
+    }
+}

@@ -1,0 +1,212 @@
+//! The sequential K-Means baseline (the paper's "Serial" column).
+
+use super::init::InitMethod;
+use super::math;
+
+/// Shared K-Means configuration (used by baseline and coordinator).
+#[derive(Clone, Debug)]
+pub struct KMeansConfig {
+    /// Cluster count (paper: 2 and 4).
+    pub k: usize,
+    /// Maximum Lloyd iterations.
+    pub max_iters: usize,
+    /// Convergence tolerance on centroid movement (euclidean per centre).
+    pub tol: f32,
+    /// Initialization strategy.
+    pub init: InitMethod,
+    /// Seed for the initialization draw.
+    pub seed: u64,
+}
+
+impl Default for KMeansConfig {
+    fn default() -> Self {
+        Self {
+            k: 2,
+            max_iters: 20,
+            tol: 1e-3,
+            init: InitMethod::RandomSample,
+            seed: 0xC1_05_7E_12,
+        }
+    }
+}
+
+/// Result of a K-Means run.
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    /// Final centroids, `k × channels` flat.
+    pub centroids: Vec<f32>,
+    /// Per-pixel labels.
+    pub labels: Vec<u32>,
+    /// Final inertia (sum of squared distances to owning centres).
+    pub inertia: f64,
+    /// Lloyd iterations actually executed.
+    pub iterations: usize,
+    /// Whether the tolerance was reached before `max_iters`.
+    pub converged: bool,
+}
+
+/// Plain single-threaded Lloyd's algorithm over a flat pixel buffer.
+#[derive(Clone, Debug, Default)]
+pub struct SeqKMeans;
+
+impl SeqKMeans {
+    /// Run on `pixels[P, C]`.
+    pub fn run(pixels: &[f32], channels: usize, cfg: &KMeansConfig) -> KMeansResult {
+        assert!(cfg.k >= 1, "k must be >= 1");
+        assert_eq!(pixels.len() % channels, 0);
+        let mut centroids = cfg.init.centroids(pixels, cfg.k, channels, cfg.seed);
+        let mut iterations = 0;
+        let mut converged = false;
+        for _ in 0..cfg.max_iters {
+            iterations += 1;
+            let acc = math::step(pixels, &centroids, cfg.k, channels);
+            let moved = math::update_centroids(&acc, &mut centroids, cfg.tol);
+            if !moved {
+                converged = true;
+                break;
+            }
+        }
+        let mut labels = Vec::new();
+        let inertia = math::assign_all(pixels, &centroids, cfg.k, channels, &mut labels);
+        KMeansResult {
+            centroids,
+            labels,
+            inertia,
+            iterations,
+            converged,
+        }
+    }
+
+    /// Run a fixed number of iterations with NO convergence test — the
+    /// exact-work-mirror used for serial-vs-parallel comparisons (both
+    /// sides execute identical iteration counts; the paper times it this
+    /// way by fixing cluster counts and letting MATLAB's default iters
+    /// run).
+    pub fn run_fixed_iters(
+        pixels: &[f32],
+        channels: usize,
+        cfg: &KMeansConfig,
+        iters: usize,
+    ) -> KMeansResult {
+        let mut centroids = cfg.init.centroids(pixels, cfg.k, channels, cfg.seed);
+        for _ in 0..iters {
+            let acc = math::step(pixels, &centroids, cfg.k, channels);
+            math::update_centroids(&acc, &mut centroids, 0.0);
+        }
+        let mut labels = Vec::new();
+        let inertia = math::assign_all(pixels, &centroids, cfg.k, channels, &mut labels);
+        KMeansResult {
+            centroids,
+            labels,
+            inertia,
+            iterations: iters,
+            converged: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::SyntheticOrtho;
+    use crate::kmeans::math;
+
+    fn two_groups() -> Vec<f32> {
+        let mut v = Vec::new();
+        for i in 0..40 {
+            let j = (i % 4) as f32;
+            v.extend_from_slice(&[j, j, j]);
+            v.extend_from_slice(&[200.0 + j, 200.0 + j, 200.0 + j]);
+        }
+        v
+    }
+
+    #[test]
+    fn separates_two_groups() {
+        let px = two_groups();
+        let cfg = KMeansConfig {
+            k: 2,
+            init: InitMethod::PlusPlus,
+            ..Default::default()
+        };
+        let r = SeqKMeans::run(&px, 3, &cfg);
+        assert!(r.converged, "did not converge in {} iters", r.iterations);
+        // centroids near (1.5,) and (201.5,) in some order
+        let mut c0 = r.centroids[0];
+        let mut c1 = r.centroids[3];
+        if c0 > c1 {
+            std::mem::swap(&mut c0, &mut c1);
+        }
+        assert!((c0 - 1.5).abs() < 0.1, "c0={c0}");
+        assert!((c1 - 201.5).abs() < 0.1, "c1={c1}");
+        // labels split evenly
+        let ones = r.labels.iter().filter(|&&l| l == 1).count();
+        assert_eq!(ones, 40);
+    }
+
+    #[test]
+    fn inertia_never_increases_between_iterations() {
+        let img = SyntheticOrtho::default().with_seed(3).generate(40, 40);
+        let px = img.as_pixels();
+        let cfg = KMeansConfig {
+            k: 4,
+            ..Default::default()
+        };
+        let mut centroids = cfg.init.centroids(px, cfg.k, 3, cfg.seed);
+        let mut prev = f64::INFINITY;
+        for _ in 0..10 {
+            let acc = math::step(px, &centroids, cfg.k, 3);
+            assert!(
+                acc.inertia <= prev * (1.0 + 1e-7) + 1e-6,
+                "inertia rose: {} -> {}",
+                prev,
+                acc.inertia
+            );
+            prev = acc.inertia;
+            math::update_centroids(&acc, &mut centroids, 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let img = SyntheticOrtho::default().with_seed(4).generate(30, 30);
+        let cfg = KMeansConfig::default();
+        let a = SeqKMeans::run(img.as_pixels(), 3, &cfg);
+        let b = SeqKMeans::run(img.as_pixels(), 3, &cfg);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.inertia, b.inertia);
+    }
+
+    #[test]
+    fn fixed_iters_executes_exact_count() {
+        let px = two_groups();
+        let cfg = KMeansConfig::default();
+        let r = SeqKMeans::run_fixed_iters(&px, 3, &cfg, 5);
+        assert_eq!(r.iterations, 5);
+    }
+
+    #[test]
+    fn k1_assigns_everything_to_mean() {
+        let px = two_groups();
+        let cfg = KMeansConfig {
+            k: 1,
+            ..Default::default()
+        };
+        let r = SeqKMeans::run(&px, 3, &cfg);
+        assert!(r.labels.iter().all(|&l| l == 0));
+        assert!((r.centroids[0] - 101.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn labels_are_within_k() {
+        let img = SyntheticOrtho::default().with_seed(5).generate(20, 20);
+        let cfg = KMeansConfig {
+            k: 4,
+            ..Default::default()
+        };
+        let r = SeqKMeans::run(img.as_pixels(), 3, &cfg);
+        assert!(r.labels.iter().all(|&l| l < 4));
+        assert_eq!(r.labels.len(), 400);
+    }
+}

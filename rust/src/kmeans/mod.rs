@@ -1,0 +1,18 @@
+//! K-Means: shared math, initialization, and the sequential baseline.
+//!
+//! [`SeqKMeans`] is the paper's "Serial" column — plain Lloyd iterations
+//! over the whole image on one thread. It doubles as the correctness
+//! oracle: the coordinator's global mode must reproduce its per-iteration
+//! state *exactly* (same assignments, same centroids), because both are
+//! built from the same associative accumulation in [`math`].
+//!
+//! Tie-breaking contract (shared with the Pallas kernels via
+//! `python/compile/kernels/ref.py`): nearest centroid with the lowest
+//! index wins; empty clusters keep their previous centre.
+
+pub mod init;
+mod lloyd;
+pub mod math;
+
+pub use init::InitMethod;
+pub use lloyd::{KMeansConfig, KMeansResult, SeqKMeans};

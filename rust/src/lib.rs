@@ -1,0 +1,42 @@
+//! # blockms — parallel block processing for K-Means over satellite imagery
+//!
+//! A three-layer reproduction of *"Analysis of Different Approaches of
+//! Parallel Block Processing for K-Means Clustering Algorithm"*
+//! (Rashmi C, CS.DC 2017):
+//!
+//! - **L3 (this crate)** — the coordinator: shape-parameterized block
+//!   plans ([`blocks`]), a strip-granular image store reproducing MATLAB
+//!   `blockproc` I/O behaviour ([`stripstore`]), a leader/worker SPMD pool
+//!   ([`coordinator`]), a discrete-event worker simulator for speedup
+//!   studies ([`simtime`]), the sequential baseline ([`kmeans`]), and the
+//!   paper-table bench harness ([`bench`]).
+//! - **L2/L1 (python, build-time only)** — JAX graphs + Pallas kernels
+//!   AOT-lowered to `artifacts/*.hlo.txt`, loaded and executed through
+//!   PJRT by [`runtime`]. Python never runs on the request path.
+//!
+//! See `examples/quickstart.rs` for the 20-line tour, and DESIGN.md for
+//! the paper-to-module map.
+
+pub mod bench;
+pub mod blocks;
+pub mod coordinator;
+pub mod image;
+pub mod kmeans;
+pub mod metrics;
+pub mod runtime;
+pub mod simtime;
+pub mod stripstore;
+pub mod util;
+
+/// Convenient re-exports of the types most programs need.
+pub mod prelude {
+    pub use crate::blocks::{BlockPlan, BlockRegion, BlockShape};
+    pub use crate::coordinator::{
+        ClusterConfig, ClusterMode, ClusterOutput, Coordinator, CoordinatorConfig, Engine,
+    };
+    pub use crate::image::{Raster, SyntheticOrtho};
+    pub use crate::kmeans::{InitMethod, SeqKMeans};
+    pub use crate::metrics::{RunTimer, Speedup};
+    pub use crate::simtime::{SimParams, WorkerSim};
+    pub use crate::stripstore::StripStore;
+}

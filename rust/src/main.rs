@@ -1,0 +1,347 @@
+//! `blockms` — the launcher.
+//!
+//! Subcommands:
+//!
+//! - `cluster`       run parallel block K-Means on a synthetic scene (or a
+//!                   PPM file) and write the label map;
+//! - `paper-tables`  regenerate the paper's Tables 1–19 (+ figure series);
+//! - `cases`         regenerate the §4 Cases 1–3 block-size I/O analysis;
+//! - `info`          show artifact/manifest status and environment.
+//!
+//! Run `blockms --help` for options, or drive everything from a config
+//! file: `blockms cluster --config run.ini`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use blockms::bench::tables::{all_table_ids, run_table, SweepOpts};
+use blockms::bench::{cases, runner::EngineChoice};
+use blockms::blocks::{ApproachKind, BlockPlan, BlockShape};
+use blockms::coordinator::{
+    ClusterConfig, ClusterMode, Coordinator, CoordinatorConfig, Engine, IoMode, Schedule,
+};
+use blockms::image::{read_ppm, write_labels_ppm, write_ppm, SyntheticOrtho};
+use blockms::runtime::{find_artifacts_dir, ArtifactSet};
+use blockms::util::cli::{Args, Cli, CliError};
+use blockms::util::config::Config;
+use blockms::util::fmt::duration;
+
+fn cli() -> Cli {
+    Cli::new("blockms", "parallel block processing for K-Means clustering")
+        .opt("config", None, "INI config file (CLI overrides it)")
+        .opt("k", Some("2"), "cluster count")
+        .opt("workers", Some("4"), "worker count")
+        .opt("approach", Some("column"), "block approach: row|column|square")
+        .opt("block-rows", None, "explicit block rows (overrides approach)")
+        .opt("block-cols", None, "explicit block cols (overrides approach)")
+        .opt("width", Some("1280"), "synthetic image width")
+        .opt("height", Some("800"), "synthetic image height")
+        .opt("seed", Some("7"), "workload / init seed")
+        .opt("input", None, "input PPM instead of synthetic scene")
+        .opt("out", None, "write label map PPM here")
+        .opt("out-input", None, "also write the input scene PPM here")
+        .opt("engine", Some("native"), "compute engine: native|pjrt")
+        .opt("mode", Some("global"), "clustering mode: global|local")
+        .opt("schedule", Some("dynamic"), "job schedule: static|dynamic")
+        .opt("iters", None, "fixed Lloyd iterations (default: converge)")
+        .opt("max-iters", Some("20"), "max Lloyd iterations")
+        .opt("strip-rows", None, "enable strip I/O model with this strip height")
+        .opt("table", Some("all"), "paper-tables: table number or 'all'")
+        .opt("scale", Some("0.25"), "paper-tables/cases: per-side size scale")
+        .opt("bench-iters", Some("6"), "paper-tables/cases: Lloyd iterations")
+        .flag("serial", "cluster: also run the sequential baseline and compare")
+        .flag("verbose", "more logging")
+}
+
+fn main() {
+    let c = cli();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match c.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            print!("{}", c.help_text());
+            println!("\nSUBCOMMANDS:\n  cluster | paper-tables | cases | sweep | info");
+            return;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand().unwrap_or("cluster") {
+        "cluster" => cmd_cluster(&args),
+        "paper-tables" => cmd_tables(&args),
+        "cases" => cmd_cases(&args),
+        "sweep" => cmd_sweep(&args),
+        "info" => cmd_info(),
+        other => Err(anyhow::anyhow!("unknown subcommand {other:?} (see --help)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Merge `--config file` under the CLI args for a single typed lookup.
+struct Opts<'a> {
+    args: &'a Args,
+    config: Config,
+}
+
+impl<'a> Opts<'a> {
+    fn load(args: &'a Args) -> Result<Opts<'a>> {
+        let config = match args.get("config") {
+            Some(path) => Config::load(Path::new(path))
+                .with_context(|| format!("load config {path}"))?,
+            None => Config::default(),
+        };
+        Ok(Opts { args, config })
+    }
+
+    /// CLI beats config (`section.key` in the file, `--key` on the CLI).
+    fn get(&self, cli_key: &str, cfg_key: &str) -> Option<String> {
+        self.args
+            .get(cli_key)
+            .map(str::to_string)
+            .or_else(|| self.config.get(cfg_key).map(str::to_string))
+    }
+
+    fn parse<T: std::str::FromStr>(&self, cli_key: &str, cfg_key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(cli_key, cfg_key) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("invalid {cli_key}={raw:?}: {e}")),
+        }
+    }
+
+    fn require<T: std::str::FromStr>(&self, cli_key: &str, cfg_key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.parse(cli_key, cfg_key)?
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{cli_key}"))
+    }
+}
+
+fn engine_of(opts: &Opts) -> Result<Engine> {
+    Ok(match opts.require::<EngineChoice>("engine", "run.engine")? {
+        EngineChoice::Native => Engine::Native,
+        EngineChoice::Pjrt => Engine::Pjrt {
+            artifacts_dir: None,
+        },
+    })
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let opts = Opts::load(args)?;
+    let k: usize = opts.require("k", "cluster.k")?;
+    let workers: usize = opts.require("workers", "run.workers")?;
+    let seed: u64 = opts.require("seed", "workload.seed")?;
+
+    // --- image -----------------------------------------------------------
+    let img = match opts.get("input", "workload.input") {
+        Some(path) => {
+            let img = read_ppm(Path::new(&path))?;
+            println!("loaded {path}: {}x{} ({} bands)", img.width(), img.height(), img.channels());
+            img
+        }
+        None => {
+            let width: usize = opts.require("width", "workload.width")?;
+            let height: usize = opts.require("height", "workload.height")?;
+            println!("generating synthetic ortho scene {width}x{height} (seed {seed})");
+            SyntheticOrtho::default().with_seed(seed).generate(height, width)
+        }
+    };
+    if let Some(p) = opts.get("out-input", "output.input") {
+        write_ppm(&img, Path::new(&p))?;
+        println!("wrote input scene to {p}");
+    }
+    let img = Arc::new(img);
+
+    // --- plan --------------------------------------------------------------
+    let shape = match (
+        opts.parse::<usize>("block-rows", "blocks.rows")?,
+        opts.parse::<usize>("block-cols", "blocks.cols")?,
+    ) {
+        (Some(rows), Some(cols)) => BlockShape::Custom { rows, cols },
+        (None, None) => {
+            let kind: ApproachKind = opts.require("approach", "blocks.approach")?;
+            BlockShape::paper_default(kind, img.height(), img.width())
+        }
+        _ => bail!("--block-rows and --block-cols must be given together"),
+    };
+    let plan = Arc::new(BlockPlan::new(img.height(), img.width(), shape));
+    println!(
+        "plan: {} -> {} blocks of up to {:?}",
+        shape,
+        plan.len(),
+        plan.block_dims()
+    );
+
+    // --- run ---------------------------------------------------------------
+    let io = match opts.parse::<usize>("strip-rows", "io.strip_rows")? {
+        Some(strip_rows) => IoMode::Strips {
+            strip_rows,
+            file_backed: false,
+        },
+        None => IoMode::Direct,
+    };
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers,
+        engine: engine_of(&opts)?,
+        mode: opts.require::<ClusterMode>("mode", "run.mode")?,
+        io,
+        schedule: opts.require::<Schedule>("schedule", "run.schedule")?,
+        fail_block: None,
+    });
+    let ccfg = ClusterConfig {
+        k,
+        max_iters: opts.require("max-iters", "cluster.max_iters")?,
+        seed,
+        fixed_iters: opts.parse("iters", "cluster.iters")?,
+        ..Default::default()
+    };
+    let out = coord.cluster(&img, &plan, &ccfg)?;
+    println!(
+        "parallel: {} workers, {} blocks, {} iterations{} -> inertia {:.1}, {}",
+        out.workers,
+        out.blocks,
+        out.iterations,
+        if out.converged { " (converged)" } else { "" },
+        out.inertia,
+        duration(out.total_secs)
+    );
+    if let Some(io) = out.io_stats {
+        println!(
+            "io: {} block reads, {} strip reads, {} bytes",
+            io.block_reads, io.strip_reads, io.bytes_read
+        );
+    }
+
+    if args.flag("serial") {
+        let s = coord.serial(&img, &ccfg)?;
+        println!(
+            "serial:   1 worker, {} iterations -> inertia {:.1}, {}",
+            s.iterations,
+            s.inertia,
+            duration(s.total_secs)
+        );
+        // Native engine: bit-identical (tested invariant). PJRT engine:
+        // f32 partial sums accumulate per chunk, so different block
+        // partitions can differ by float-rounding — report the fraction.
+        let agree = s
+            .labels
+            .iter()
+            .zip(&out.labels)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / s.labels.len() as f64;
+        println!(
+            "label agreement with serial: {:.4}% | speedup (wall, 1-core box): {:.3}",
+            agree * 100.0,
+            s.total_secs / out.total_secs
+        );
+    }
+
+    if let Some(p) = opts.get("out", "output.labels") {
+        write_labels_ppm(&out.labels, img.height(), img.width(), Path::new(&p))?;
+        println!("wrote label map to {p}");
+    }
+    Ok(())
+}
+
+fn sweep_opts(args: &Args) -> Result<SweepOpts> {
+    let opts = Opts::load(args)?;
+    Ok(SweepOpts {
+        scale: opts.require("scale", "bench.scale")?,
+        seed: opts.require("seed", "workload.seed")?,
+        engine: opts.require("engine", "run.engine")?,
+        iters: opts.require("bench-iters", "bench.iters")?,
+        ..Default::default()
+    })
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let opts = sweep_opts(args)?;
+    let which = args.get("table").unwrap_or("all");
+    let ids: Vec<usize> = if which == "all" {
+        all_table_ids()
+    } else {
+        vec![which.parse().context("--table must be a number or 'all'")?]
+    };
+    for id in ids {
+        let text = run_table(id, &opts)?;
+        println!("{text}");
+    }
+    Ok(())
+}
+
+fn cmd_cases(args: &Args) -> Result<()> {
+    let opts = sweep_opts(args)?;
+    let results = cases::run_cases(&opts)?;
+    print!("{}", cases::render_cases(&results));
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use blockms::bench::tables::sweep_all;
+    use blockms::util::csv::Csv;
+    let opts = sweep_opts(args)?;
+    let out_path = args.get("out").unwrap_or("sweep.csv").to_string();
+    let rows = sweep_all(&opts)?;
+    let mut csv = Csv::new(&[
+        "table", "approach", "k", "workers", "data_size", "serial_s", "parallel_s", "speedup",
+        "efficiency", "blocks", "strip_reads_per_pass", "wall_s",
+    ]);
+    for (table, r) in &rows {
+        csv.row([
+            table.to_string(),
+            r.approach.to_string(),
+            r.k.to_string(),
+            r.workers.to_string(),
+            r.data_size.clone(),
+            format!("{:.6}", r.serial_secs),
+            format!("{:.6}", r.parallel_secs),
+            format!("{:.4}", r.speedup),
+            format!("{:.4}", r.efficiency),
+            r.blocks.to_string(),
+            r.strip_reads.to_string(),
+            format!("{:.4}", r.wall_secs),
+        ]);
+    }
+    csv.write_to(Path::new(&out_path))?;
+    println!("wrote {} cells to {out_path}", csv.len());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("blockms {}", env!("CARGO_PKG_VERSION"));
+    match find_artifacts_dir() {
+        Some(dir) => {
+            println!("artifacts: {}", dir.display());
+            match ArtifactSet::load(&dir) {
+                Ok(set) => {
+                    let m = &set.manifest;
+                    println!(
+                        "  manifest ok: chunk={} channels={} ks={:?} local_iters={}",
+                        m.chunk, m.channels, m.ks, m.local_iters
+                    );
+                    for a in m.artifacts() {
+                        println!("  {} ({} -> {} tensors)", a.name, a.inputs.len(), a.outputs.len());
+                    }
+                }
+                Err(e) => println!("  INVALID: {e:#}"),
+            }
+        }
+        None => println!("artifacts: NOT FOUND (run `make artifacts`)"),
+    }
+    println!("cores visible: {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0));
+    Ok(())
+}

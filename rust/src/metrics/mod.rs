@@ -1,0 +1,135 @@
+//! Timing, the paper's performance algebra (speedup, efficiency), and
+//! clustering-quality metrics ([`quality`]).
+
+pub mod quality;
+
+use std::time::Instant;
+
+/// Speedup = T_serial / T_parallel (paper §4.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Speedup(pub f64);
+
+impl Speedup {
+    pub fn compute(serial_s: f64, parallel_s: f64) -> Speedup {
+        assert!(serial_s >= 0.0 && parallel_s > 0.0, "bad times {serial_s}/{parallel_s}");
+        Speedup(serial_s / parallel_s)
+    }
+
+    /// Efficiency = speedup / workers (paper §4.1).
+    pub fn efficiency(&self, workers: usize) -> f64 {
+        assert!(workers > 0);
+        self.0 / workers as f64
+    }
+}
+
+/// Wall-clock stopwatch with named laps.
+#[derive(Debug)]
+pub struct RunTimer {
+    start: Instant,
+    laps: Vec<(String, f64)>,
+    last: Instant,
+}
+
+impl Default for RunTimer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunTimer {
+    pub fn new() -> RunTimer {
+        let now = Instant::now();
+        RunTimer {
+            start: now,
+            laps: Vec::new(),
+            last: now,
+        }
+    }
+
+    /// Record a lap since the previous lap (or start).
+    pub fn lap(&mut self, name: impl Into<String>) -> f64 {
+        let now = Instant::now();
+        let secs = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.laps.push((name.into(), secs));
+        secs
+    }
+
+    /// Total elapsed seconds since construction.
+    pub fn total(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn laps(&self) -> &[(String, f64)] {
+        &self.laps
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Repeat a closure `n` times, returning per-run seconds.
+pub fn time_n(n: usize, mut f: impl FnMut()) -> Vec<f64> {
+    assert!(n > 0);
+    (0..n)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_and_efficiency_match_paper_rows() {
+        // Table 1 row 1024x768: serial 0.050589, parallel 0.036366 @ 2 cores
+        let s = Speedup::compute(0.050589, 0.036366);
+        assert!((s.0 - 1.391107078).abs() < 1e-6);
+        assert!((s.efficiency(2) - 0.695553539).abs() < 1e-6);
+        // Table 2 row 4656x5793 @ 4 cores
+        let s = Speedup::compute(1.714137, 0.144857);
+        assert!((s.0 - 11.83330457).abs() < 1e-5);
+        assert!((s.efficiency(4) - 2.958326142).abs() < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad times")]
+    fn zero_parallel_time_rejected() {
+        Speedup::compute(1.0, 0.0);
+    }
+
+    #[test]
+    fn timer_laps_accumulate() {
+        let mut t = RunTimer::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let lap1 = t.lap("a");
+        let lap2 = t.lap("b");
+        assert!(lap1 >= 0.004, "lap1 {lap1}");
+        assert!(lap2 < lap1, "lap2 should be ~0");
+        assert_eq!(t.laps().len(), 2);
+        assert!(t.total() >= lap1);
+    }
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, secs) = time_it(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn time_n_runs_n_times() {
+        let mut count = 0;
+        let times = time_n(5, || count += 1);
+        assert_eq!(count, 5);
+        assert_eq!(times.len(), 5);
+    }
+}

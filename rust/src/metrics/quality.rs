@@ -1,0 +1,262 @@
+//! Clustering-quality metrics.
+//!
+//! The paper evaluates only runtime; these metrics let the reproduction
+//! also verify that parallel block processing does not degrade *quality*
+//! — in global mode it provably cannot (identical result), but in local
+//! mode (independent per-block clusterings) quality genuinely drops, and
+//! these scores quantify by how much (see `examples/scaling_study.rs`
+//! and the quality rows in EXPERIMENTS.md):
+//!
+//! - [`davies_bouldin`] — internal index (lower = better separated);
+//! - [`purity`] / [`adjusted_rand_sampled`] — external agreement with a
+//!   ground-truth map (the synthetic generator emits one);
+//! - [`label_agreement`] — permutation-aware fraction of pixels on which
+//!   two clusterings agree (greedy max matching).
+
+use std::collections::BTreeMap;
+
+/// Davies–Bouldin index of a clustering over `pixels[P, C]`.
+/// Lower is better; 0 for perfectly compact, far-apart clusters.
+pub fn davies_bouldin(
+    pixels: &[f32],
+    labels: &[u32],
+    centroids: &[f32],
+    k: usize,
+    channels: usize,
+) -> f64 {
+    assert_eq!(pixels.len(), labels.len() * channels);
+    assert_eq!(centroids.len(), k * channels);
+    // mean intra-cluster distance (to centroid)
+    let mut scatter = vec![0.0f64; k];
+    let mut counts = vec![0u64; k];
+    for (px, &l) in pixels.chunks_exact(channels).zip(labels) {
+        let li = l as usize;
+        assert!(li < k, "label {l} out of range");
+        let c = &centroids[li * channels..(li + 1) * channels];
+        let d2: f64 = px
+            .iter()
+            .zip(c)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        scatter[li] += d2.sqrt();
+        counts[li] += 1;
+    }
+    for i in 0..k {
+        if counts[i] > 0 {
+            scatter[i] /= counts[i] as f64;
+        }
+    }
+    // R_ij = (s_i + s_j) / d(c_i, c_j); DB = mean_i max_j R_ij
+    let centroid_dist = |i: usize, j: usize| -> f64 {
+        centroids[i * channels..(i + 1) * channels]
+            .iter()
+            .zip(&centroids[j * channels..(j + 1) * channels])
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    };
+    let mut db = 0.0;
+    let mut active = 0;
+    for i in 0..k {
+        if counts[i] == 0 {
+            continue;
+        }
+        active += 1;
+        let mut worst: f64 = 0.0;
+        for j in 0..k {
+            if j == i || counts[j] == 0 {
+                continue;
+            }
+            let d = centroid_dist(i, j);
+            if d > 0.0 {
+                worst = worst.max((scatter[i] + scatter[j]) / d);
+            }
+        }
+        db += worst;
+    }
+    if active == 0 {
+        0.0
+    } else {
+        db / active as f64
+    }
+}
+
+/// Purity: each cluster votes for its majority truth class; purity is the
+/// fraction of pixels in their cluster's majority class. In `[0, 1]`,
+/// higher is better; `1/k_truth` ≈ chance.
+pub fn purity(labels: &[u32], truth: &[u32]) -> f64 {
+    assert_eq!(labels.len(), truth.len());
+    assert!(!labels.is_empty());
+    let mut votes: BTreeMap<(u32, u32), u64> = BTreeMap::new();
+    for (&l, &t) in labels.iter().zip(truth) {
+        *votes.entry((l, t)).or_insert(0) += 1;
+    }
+    let mut best: BTreeMap<u32, u64> = BTreeMap::new();
+    for (&(l, _), &n) in &votes {
+        let e = best.entry(l).or_insert(0);
+        if n > *e {
+            *e = n;
+        }
+    }
+    best.values().sum::<u64>() as f64 / labels.len() as f64
+}
+
+/// Adjusted Rand Index on a deterministic pixel sample (full ARI is
+/// O(n²)-ish in pair counting; the sampled version subsamples `max_n`
+/// pixels with a fixed stride). In `[-1, 1]`; 0 ≈ chance, 1 = identical
+/// partitions.
+pub fn adjusted_rand_sampled(labels: &[u32], truth: &[u32], max_n: usize) -> f64 {
+    assert_eq!(labels.len(), truth.len());
+    assert!(max_n >= 2);
+    let stride = (labels.len() / max_n).max(1);
+    let sample: Vec<(u32, u32)> = labels
+        .iter()
+        .zip(truth)
+        .step_by(stride)
+        .map(|(&l, &t)| (l, t))
+        .collect();
+    // contingency table
+    let mut table: BTreeMap<(u32, u32), f64> = BTreeMap::new();
+    let mut rows: BTreeMap<u32, f64> = BTreeMap::new();
+    let mut cols: BTreeMap<u32, f64> = BTreeMap::new();
+    for &(l, t) in &sample {
+        *table.entry((l, t)).or_insert(0.0) += 1.0;
+        *rows.entry(l).or_insert(0.0) += 1.0;
+        *cols.entry(t).or_insert(0.0) += 1.0;
+    }
+    let comb2 = |x: f64| x * (x - 1.0) / 2.0;
+    let sum_ij: f64 = table.values().map(|&v| comb2(v)).sum();
+    let sum_a: f64 = rows.values().map(|&v| comb2(v)).sum();
+    let sum_b: f64 = cols.values().map(|&v| comb2(v)).sum();
+    let n = sample.len() as f64;
+    let expected = sum_a * sum_b / comb2(n);
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0; // degenerate: all in one cluster both sides
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Permutation-aware agreement between two label maps: greedily match
+/// clusters of `a` to clusters of `b` by overlap, then report the matched
+/// fraction. In `[0, 1]`.
+pub fn label_agreement(a: &[u32], b: &[u32], k: usize) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    // overlap matrix
+    let mut overlap = vec![0u64; k * k];
+    for (&x, &y) in a.iter().zip(b) {
+        overlap[(x as usize) * k + y as usize] += 1;
+    }
+    // greedy max matching
+    let mut used_a = vec![false; k];
+    let mut used_b = vec![false; k];
+    let mut matched = 0u64;
+    for _ in 0..k {
+        let mut best = 0u64;
+        let mut pick = None;
+        for i in 0..k {
+            if used_a[i] {
+                continue;
+            }
+            for j in 0..k {
+                if used_b[j] {
+                    continue;
+                }
+                if overlap[i * k + j] > best {
+                    best = overlap[i * k + j];
+                    pick = Some((i, j));
+                }
+            }
+        }
+        match pick {
+            Some((i, j)) => {
+                used_a[i] = true;
+                used_b[j] = true;
+                matched += best;
+            }
+            None => break,
+        }
+    }
+    matched as f64 / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn db_zero_for_perfect_clusters() {
+        // two point-clusters exactly at their centroids
+        let pixels = vec![0.0f32, 0.0, 0.0, 0.0, 0.0, 0.0, 9.0, 9.0, 9.0];
+        let labels = vec![0u32, 0, 1];
+        let centroids = vec![0.0f32, 0.0, 0.0, 9.0, 9.0, 9.0];
+        assert_eq!(davies_bouldin(&pixels, &labels, &centroids, 2, 3), 0.0);
+    }
+
+    #[test]
+    fn db_grows_with_scatter() {
+        let tight = vec![0.0f32, 0.1, 10.0, 10.1]; // 1-channel
+        let loose = vec![0.0f32, 3.0, 10.0, 13.0];
+        let labels = vec![0u32, 0, 1, 1];
+        let cen_tight = vec![0.05f32, 10.05];
+        let cen_loose = vec![1.5f32, 11.5];
+        let db_t = davies_bouldin(&tight, &labels, &cen_tight, 2, 1);
+        let db_l = davies_bouldin(&loose, &labels, &cen_loose, 2, 1);
+        assert!(db_t < db_l, "{db_t} !< {db_l}");
+    }
+
+    #[test]
+    fn purity_perfect_and_chance() {
+        let truth = vec![0u32, 0, 1, 1];
+        assert_eq!(purity(&[1, 1, 0, 0], &truth), 1.0); // permuted = fine
+        assert_eq!(purity(&[0, 0, 0, 0], &truth), 0.5); // one blob
+    }
+
+    #[test]
+    fn ari_identical_is_one_and_permutation_invariant() {
+        let truth: Vec<u32> = (0..1000).map(|i| (i / 250) as u32).collect();
+        assert!((adjusted_rand_sampled(&truth, &truth, 500) - 1.0).abs() < 1e-12);
+        let permuted: Vec<u32> = truth.iter().map(|&t| 3 - t).collect();
+        assert!((adjusted_rand_sampled(&permuted, &truth, 500) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_random_labels_near_zero() {
+        let mut rng = crate::util::prng::Rng::new(9);
+        let truth: Vec<u32> = (0..4000).map(|i| (i / 1000) as u32).collect();
+        let random: Vec<u32> = (0..4000).map(|_| rng.next_below(4) as u32).collect();
+        let ari = adjusted_rand_sampled(&random, &truth, 2000);
+        assert!(ari.abs() < 0.05, "ari {ari}");
+    }
+
+    #[test]
+    fn agreement_handles_permutations() {
+        let a = vec![0u32, 0, 1, 1, 2, 2];
+        let b = vec![2u32, 2, 0, 0, 1, 1]; // same partition, relabeled
+        assert_eq!(label_agreement(&a, &b, 3), 1.0);
+        let c = vec![0u32, 1, 0, 1, 0, 1]; // orthogonal partition
+        assert!(label_agreement(&a, &c, 3) < 0.7);
+    }
+
+    #[test]
+    fn truth_map_scores_well_under_kmeans() {
+        // end-to-end: cluster a synthetic scene, score against its truth
+        use crate::image::SyntheticOrtho;
+        use crate::kmeans::{KMeansConfig, SeqKMeans};
+        let gen = SyntheticOrtho::default().with_seed(5).with_classes(3);
+        let (img, truth) = gen.generate_with_truth(80, 80);
+        let r = SeqKMeans::run(
+            img.as_pixels(),
+            3,
+            &KMeansConfig {
+                k: 3,
+                ..Default::default()
+            },
+        );
+        let p = purity(&r.labels, &truth);
+        assert!(p > 0.7, "k-means should recover synthetic classes: purity {p}");
+        let ari = adjusted_rand_sampled(&r.labels, &truth, 2000);
+        assert!(ari > 0.4, "ari {ari}");
+    }
+}

@@ -1,0 +1,267 @@
+//! Engine-agnostic compute interface for the coordinator.
+//!
+//! Worker threads cannot share a PJRT client (`Rc`-based, `!Send`), so the
+//! coordinator ships each worker a cheap, `Send + Clone` [`BackendSpec`];
+//! the worker *instantiates* its own [`ComputeBackend`] on its own thread
+//! — the MATLAB-parpool model (independent per-worker sessions). Two
+//! implementations:
+//!
+//! - [`KernelEngine`] (PJRT) — the real AOT-kernel path;
+//! - [`NativeBackend`] — the pure-rust oracle math, used as the serial
+//!   baseline's compute and for artifact-free tests. Both are verified to
+//!   agree exactly on labels (see `engine.rs` tests).
+
+use anyhow::Result;
+
+use super::engine::KernelEngine;
+use super::manifest::ArtifactSet;
+use crate::kmeans::math::{self, StepAccum};
+
+/// What the coordinator needs from a compute engine, per block.
+pub trait ComputeBackend {
+    /// One Lloyd accumulation pass over a block.
+    fn step_block(&mut self, pixels: &[f32], centroids: &[f32]) -> Result<StepAccum>;
+
+    /// Final assignment over a block; returns inertia.
+    fn assign_block(
+        &mut self,
+        pixels: &[f32],
+        centroids: &[f32],
+        labels: &mut Vec<u32>,
+    ) -> Result<f64>;
+
+    /// Independent per-block K-Means (`iters` fixed Lloyd iterations from
+    /// `init_centroids`, then assignment). Returns `(centroids, inertia)`.
+    fn local_block(
+        &mut self,
+        pixels: &[f32],
+        init_centroids: &[f32],
+        labels: &mut Vec<u32>,
+    ) -> Result<(Vec<f32>, f64)>;
+
+    /// Engine label for logs/tables.
+    fn name(&self) -> &'static str;
+
+    /// One-time startup work (e.g. compiling executables), invoked under
+    /// the coordinator's warmup barrier so it lands in `spawn_secs`
+    /// rather than in a timed round. `local_mode` hints which kernels the
+    /// run will use.
+    fn warm(&mut self, _local_mode: bool) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Serializable recipe for constructing a backend on a worker thread.
+#[derive(Clone, Debug)]
+pub enum BackendSpec {
+    /// Pure-rust math (no artifacts needed).
+    Native { k: usize, channels: usize, local_iters: usize },
+    /// PJRT engine over the AOT artifacts.
+    Pjrt { artifacts_dir: std::path::PathBuf, k: usize },
+}
+
+impl BackendSpec {
+    /// Instantiate on the current thread.
+    pub fn build(&self) -> Result<Box<dyn ComputeBackend>> {
+        match self {
+            BackendSpec::Native {
+                k,
+                channels,
+                local_iters,
+            } => Ok(Box::new(NativeBackend::new(*k, *channels, *local_iters))),
+            BackendSpec::Pjrt { artifacts_dir, k } => {
+                let set = ArtifactSet::load(artifacts_dir)?;
+                Ok(Box::new(PjrtBackend {
+                    engine: KernelEngine::load(&set, *k)?,
+                }))
+            }
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            BackendSpec::Native { k, .. } => *k,
+            BackendSpec::Pjrt { k, .. } => *k,
+        }
+    }
+}
+
+/// Pure-rust implementation (mirrors `ref.py` exactly).
+#[derive(Clone, Debug)]
+pub struct NativeBackend {
+    k: usize,
+    channels: usize,
+    local_iters: usize,
+}
+
+impl NativeBackend {
+    pub fn new(k: usize, channels: usize, local_iters: usize) -> NativeBackend {
+        assert!(k >= 1 && channels >= 1 && local_iters >= 1);
+        NativeBackend {
+            k,
+            channels,
+            local_iters,
+        }
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn step_block(&mut self, pixels: &[f32], centroids: &[f32]) -> Result<StepAccum> {
+        Ok(math::step(pixels, centroids, self.k, self.channels))
+    }
+
+    fn assign_block(
+        &mut self,
+        pixels: &[f32],
+        centroids: &[f32],
+        labels: &mut Vec<u32>,
+    ) -> Result<f64> {
+        Ok(math::assign_all(
+            pixels,
+            centroids,
+            self.k,
+            self.channels,
+            labels,
+        ))
+    }
+
+    fn local_block(
+        &mut self,
+        pixels: &[f32],
+        init_centroids: &[f32],
+        labels: &mut Vec<u32>,
+    ) -> Result<(Vec<f32>, f64)> {
+        let mut centroids = init_centroids.to_vec();
+        for _ in 0..self.local_iters {
+            let acc = math::step(pixels, &centroids, self.k, self.channels);
+            math::update_centroids(&acc, &mut centroids, 0.0);
+        }
+        let inertia = math::assign_all(pixels, &centroids, self.k, self.channels, labels);
+        Ok((centroids, inertia))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+struct PjrtBackend {
+    engine: KernelEngine,
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn step_block(&mut self, pixels: &[f32], centroids: &[f32]) -> Result<StepAccum> {
+        self.engine.step_block(pixels, centroids)
+    }
+
+    fn assign_block(
+        &mut self,
+        pixels: &[f32],
+        centroids: &[f32],
+        labels: &mut Vec<u32>,
+    ) -> Result<f64> {
+        self.engine.assign_block(pixels, centroids, labels)
+    }
+
+    fn local_block(
+        &mut self,
+        pixels: &[f32],
+        init_centroids: &[f32],
+        labels: &mut Vec<u32>,
+    ) -> Result<(Vec<f32>, f64)> {
+        self.engine.local_block(pixels, init_centroids, labels)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn warm(&mut self, local_mode: bool) -> Result<()> {
+        use super::manifest::ArtifactKind::{Assign, Local, Step};
+        if local_mode {
+            self.engine.precompile(&[Local, Step, Assign])
+        } else {
+            self.engine.precompile(&[Step, Assign])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn pixels(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * 3).map(|_| rng.next_f32() * 255.0).collect()
+    }
+
+    #[test]
+    fn native_spec_builds_and_computes() {
+        let spec = BackendSpec::Native {
+            k: 2,
+            channels: 3,
+            local_iters: 4,
+        };
+        let mut be = spec.build().unwrap();
+        assert_eq!(be.name(), "native");
+        let px = pixels(100, 1);
+        let cen = pixels(2, 2);
+        let acc = be.step_block(&px, &cen).unwrap();
+        assert_eq!(acc.total_count(), 100);
+        let want = math::step(&px, &cen, 2, 3);
+        assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn native_local_runs_fixed_iters() {
+        let mut be = NativeBackend::new(2, 3, 8);
+        let px = pixels(500, 3);
+        let cen = pixels(2, 4);
+        let mut labels = Vec::new();
+        let (final_cen, inertia) = be.local_block(&px, &cen, &mut labels).unwrap();
+        assert_eq!(final_cen.len(), 6);
+        assert_eq!(labels.len(), 500);
+        assert!(inertia > 0.0);
+        // running it again from the same init is deterministic
+        let mut labels2 = Vec::new();
+        let (c2, i2) = be.local_block(&px, &cen, &mut labels2).unwrap();
+        assert_eq!(final_cen, c2);
+        assert_eq!(inertia, i2);
+        assert_eq!(labels, labels2);
+    }
+
+    #[test]
+    fn spec_is_send_clone() {
+        fn assert_send<T: Send + Clone>(_: &T) {}
+        let spec = BackendSpec::Native {
+            k: 2,
+            channels: 3,
+            local_iters: 1,
+        };
+        assert_send(&spec);
+        assert_eq!(spec.k(), 2);
+    }
+
+    /// PJRT and native backends must agree bit-for-bit on labels
+    /// (skipped when artifacts are absent).
+    #[test]
+    fn pjrt_and_native_agree() {
+        let Some(dir) = super::super::manifest::find_artifacts_dir() else {
+            return;
+        };
+        let pjrt_spec = BackendSpec::Pjrt {
+            artifacts_dir: dir,
+            k: 4,
+        };
+        let Ok(mut pjrt) = pjrt_spec.build() else { return };
+        let mut native = NativeBackend::new(4, 3, 8);
+        let px = pixels(3000, 9);
+        let cen = pixels(4, 10);
+        let (mut la, mut lb) = (Vec::new(), Vec::new());
+        let ia = pjrt.assign_block(&px, &cen, &mut la).unwrap();
+        let ib = native.assign_block(&px, &cen, &mut lb).unwrap();
+        assert_eq!(la, lb);
+        assert!((ia - ib).abs() < ib * 1e-3 + 1.0);
+    }
+}

@@ -1,0 +1,414 @@
+//! PJRT execution of the AOT kernels: the L3→L2/L1 bridge.
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactKind, ArtifactSet};
+use crate::kmeans::math::{self, StepAccum};
+
+/// A compiled set of kernels for one cluster count `k`: `assign`, `step`
+/// and `local`, plus the chunking logic that streams arbitrary-size
+/// blocks through the fixed-shape executables.
+///
+/// `!Send` by construction (the PJRT client is `Rc`-based); each worker
+/// thread builds its own engine — see [`super::BackendSpec`].
+pub struct KernelEngine {
+    client: xla::PjRtClient,
+    set: ArtifactSet,
+    chunk: usize,
+    channels: usize,
+    k: usize,
+    local_iters: usize,
+    /// Lazily compiled executables (indexed Assign/Step/Local): global
+    /// mode never touches `local`, local mode rarely touches `assign` —
+    /// compiling on first use cuts worker startup by ~1/3 per unused
+    /// kind (EXPERIMENTS.md §Perf).
+    exes: [Option<xla::PjRtLoadedExecutable>; 3],
+    /// Scratch: padded chunk pixels / mask (reused across calls).
+    px_scratch: Vec<f32>,
+    mask_scratch: Vec<f32>,
+    /// Cached all-ones mask device buffer — every non-tail chunk reuses
+    /// it instead of re-uploading 64 KiB per call (EXPERIMENTS.md §Perf).
+    ones_mask: Option<xla::PjRtBuffer>,
+}
+
+impl KernelEngine {
+    /// Compile the three artifacts for cluster count `k` on a fresh CPU
+    /// PJRT client.
+    pub fn load(set: &ArtifactSet, k: usize) -> Result<KernelEngine> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        // validate the k is served before any lazy compile can fail later
+        for kind in [ArtifactKind::Assign, ArtifactKind::Step, ArtifactKind::Local] {
+            set.manifest.artifact(kind, k)?;
+        }
+        let m = &set.manifest;
+        Ok(KernelEngine {
+            client,
+            set: set.clone(),
+            chunk: m.chunk,
+            channels: m.channels,
+            k,
+            local_iters: m.local_iters,
+            exes: [None, None, None],
+            px_scratch: vec![0.0; m.chunk * m.channels],
+            mask_scratch: vec![0.0; m.chunk],
+            ones_mask: None,
+        })
+    }
+
+    /// Get (compiling on first use) the executable for `kind`.
+    fn exe(&mut self, kind: ArtifactKind) -> Result<&xla::PjRtLoadedExecutable> {
+        let idx = match kind {
+            ArtifactKind::Assign => 0,
+            ArtifactKind::Step => 1,
+            ArtifactKind::Local => 2,
+        };
+        if self.exes[idx].is_none() {
+            let path = self.set.hlo_path(kind, self.k)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.exes[idx] = Some(
+                self.client
+                    .compile(&comp)
+                    .with_context(|| format!("compile {}", path.display()))?,
+            );
+        }
+        Ok(self.exes[idx].as_ref().unwrap())
+    }
+
+    /// Eagerly compile the kinds a mode will need (called under the
+    /// warmup barrier so the cost lands in `spawn_secs`, not in rounds).
+    pub fn precompile(&mut self, kinds: &[ArtifactKind]) -> Result<()> {
+        for &kind in kinds {
+            self.exe(kind)?;
+        }
+        Ok(())
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    pub fn local_iters(&self) -> usize {
+        self.local_iters
+    }
+
+    /// Stage one chunk (pixels + mask) into the scratch buffers.
+    /// `px` holds `valid` pixels (`valid <= chunk`); the tail is
+    /// zero-padded with mask 0.
+    fn stage_chunk(&mut self, px: &[f32], valid: usize) {
+        debug_assert_eq!(px.len(), valid * self.channels);
+        debug_assert!(valid <= self.chunk);
+        self.px_scratch[..px.len()].copy_from_slice(px);
+        self.px_scratch[px.len()..].fill(0.0);
+        self.mask_scratch[..valid].fill(1.0);
+        self.mask_scratch[valid..].fill(0.0);
+    }
+
+    /// Stage the scratch pixel chunk as a device buffer — a single
+    /// host→device transfer (the earlier Literal path did copy-to-literal
+    /// + reshape + transfer; EXPERIMENTS.md §Perf).
+    fn px_buffer(&self) -> Result<xla::PjRtBuffer> {
+        Ok(self
+            .client
+            .buffer_from_host_buffer(&self.px_scratch, &[self.chunk, self.channels], None)?)
+    }
+
+    fn mask_buffer(&self) -> Result<xla::PjRtBuffer> {
+        Ok(self
+            .client
+            .buffer_from_host_buffer(&self.mask_scratch, &[self.chunk], None)?)
+    }
+
+    /// Make sure the shared all-ones mask buffer exists (uploaded once;
+    /// every non-tail chunk reuses it).
+    fn ensure_ones_mask(&mut self) -> Result<()> {
+        if self.ones_mask.is_none() {
+            let ones = vec![1.0f32; self.chunk];
+            self.ones_mask =
+                Some(self.client.buffer_from_host_buffer(&ones, &[self.chunk], None)?);
+        }
+        Ok(())
+    }
+
+    fn centroid_buffer(&self, centroids: &[f32]) -> Result<xla::PjRtBuffer> {
+        anyhow::ensure!(
+            centroids.len() == self.k * self.channels,
+            "centroid buffer {} != {}x{}",
+            centroids.len(),
+            self.k,
+            self.channels
+        );
+        Ok(self
+            .client
+            .buffer_from_host_buffer(centroids, &[self.k, self.channels], None)?)
+    }
+
+    /// One Lloyd accumulation pass over a block's pixels (any length).
+    /// Equivalent to [`math::step`]; chunks are streamed through the
+    /// fixed-shape `step` executable and reduced in f64.
+    pub fn step_block(&mut self, pixels: &[f32], centroids: &[f32]) -> Result<StepAccum> {
+        anyhow::ensure!(pixels.len() % self.channels == 0, "ragged pixel buffer");
+        let mut acc = StepAccum::zeros(self.k, self.channels);
+        let cen = self.centroid_buffer(centroids)?;
+        let per_chunk = self.chunk * self.channels;
+        let n = pixels.len() / self.channels;
+        let mut off = 0;
+        while off < n {
+            let valid = (n - off).min(self.chunk);
+            let src = &pixels[off * self.channels..][..valid * self.channels];
+            let outs = if valid == self.chunk {
+                // full chunk: upload straight from the caller's slice and
+                // reuse the cached all-ones mask (no scratch memcpy, no
+                // mask re-upload)
+                self.ensure_ones_mask()?;
+                let px_buf_dev = self.client.buffer_from_host_buffer(
+                    src,
+                    &[self.chunk, self.channels],
+                    None,
+                )?;
+                self.exe(ArtifactKind::Step)?;
+                let mask_buf = self.ones_mask.as_ref().unwrap();
+                let exe = self.exes[1].as_ref().unwrap();
+                let result = exe
+                    .execute_b::<&xla::PjRtBuffer>(&[&px_buf_dev, mask_buf, &cen])
+                    .context("execute")?;
+                result[0][0]
+                    .to_literal_sync()
+                    .context("fetch result")?
+                    .to_tuple()
+                    .context("untuple result")?
+            } else {
+                self.stage_chunk(src, valid);
+                self.exe(ArtifactKind::Step)?;
+                let px_buf_dev = self.px_buffer()?;
+                let mask_buf = self.mask_buffer()?;
+                let exe = self.exes[1].as_ref().unwrap();
+                let result = exe
+                    .execute_b::<&xla::PjRtBuffer>(&[&px_buf_dev, &mask_buf, &cen])
+                    .context("execute")?;
+                result[0][0]
+                    .to_literal_sync()
+                    .context("fetch result")?
+                    .to_tuple()
+                    .context("untuple result")?
+            };
+            anyhow::ensure!(outs.len() == 3, "step returned {} outputs", outs.len());
+            let sums: Vec<f32> = outs[0].to_vec()?;
+            let counts: Vec<f32> = outs[1].to_vec()?;
+            let inertia: f32 = outs[2].get_first_element()?;
+            for (a, b) in acc.sums.iter_mut().zip(&sums) {
+                *a += *b as f64;
+            }
+            for (a, b) in acc.counts.iter_mut().zip(&counts) {
+                *a += b.round() as u64;
+            }
+            acc.inertia += inertia as f64;
+            off += valid;
+            let _ = per_chunk;
+        }
+        Ok(acc)
+    }
+
+    /// Assign every pixel of a block; appends labels, returns inertia.
+    pub fn assign_block(
+        &mut self,
+        pixels: &[f32],
+        centroids: &[f32],
+        labels: &mut Vec<u32>,
+    ) -> Result<f64> {
+        anyhow::ensure!(pixels.len() % self.channels == 0, "ragged pixel buffer");
+        let cen = self.centroid_buffer(centroids)?;
+        let n = pixels.len() / self.channels;
+        labels.clear();
+        labels.reserve(n);
+        let mut inertia = 0.0f64;
+        let mut off = 0;
+        while off < n {
+            let valid = (n - off).min(self.chunk);
+            let src = &pixels[off * self.channels..][..valid * self.channels];
+            let px_buf_dev = if valid == self.chunk {
+                // full chunk: upload straight from the caller's slice
+                self.client
+                    .buffer_from_host_buffer(src, &[self.chunk, self.channels], None)?
+            } else {
+                self.stage_chunk(src, valid);
+                self.px_buffer()?
+            };
+            self.exe(ArtifactKind::Assign)?;
+            let exe = self.exes[0].as_ref().unwrap();
+            let outs = {
+                let result = exe
+                    .execute_b::<&xla::PjRtBuffer>(&[&px_buf_dev, &cen])
+                    .context("execute")?;
+                result[0][0]
+                    .to_literal_sync()
+                    .context("fetch result")?
+                    .to_tuple()
+                    .context("untuple result")?
+            };
+            anyhow::ensure!(outs.len() == 2, "assign returned {} outputs", outs.len());
+            let chunk_labels: Vec<i32> = outs[0].to_vec()?;
+            let min_d2: Vec<f32> = outs[1].to_vec()?;
+            for &l in &chunk_labels[..valid] {
+                anyhow::ensure!((l as usize) < self.k, "label {l} out of range");
+                labels.push(l as u32);
+            }
+            inertia += min_d2[..valid].iter().map(|&d| d as f64).sum::<f64>();
+            off += valid;
+        }
+        Ok(inertia)
+    }
+
+    /// Full per-block local K-Means (`local_iters` Lloyd iterations +
+    /// final assignment). Blocks that fit in one chunk run entirely
+    /// inside the fused `local` executable; larger blocks compose
+    /// [`Self::step_block`] + [`math::update_centroids`] on the host —
+    /// mathematically identical (tested).
+    pub fn local_block(
+        &mut self,
+        pixels: &[f32],
+        init_centroids: &[f32],
+        labels: &mut Vec<u32>,
+    ) -> Result<(Vec<f32>, f64)> {
+        anyhow::ensure!(pixels.len() % self.channels == 0, "ragged pixel buffer");
+        let n = pixels.len() / self.channels;
+        if n <= self.chunk {
+            // fused path
+            self.stage_chunk(pixels, n);
+            let cen = self.centroid_buffer(init_centroids)?;
+            let px_buf_dev = self.px_buffer()?;
+            let mask_buf = self.mask_buffer()?;
+            self.exe(ArtifactKind::Local)?;
+            let exe = self.exes[2].as_ref().unwrap();
+            let outs = {
+                let result = exe
+                    .execute_b::<&xla::PjRtBuffer>(&[&px_buf_dev, &mask_buf, &cen])
+                    .context("execute")?;
+                result[0][0]
+                    .to_literal_sync()
+                    .context("fetch result")?
+                    .to_tuple()
+                    .context("untuple result")?
+            };
+            anyhow::ensure!(outs.len() == 3, "local returned {} outputs", outs.len());
+            let centroids: Vec<f32> = outs[0].to_vec()?;
+            let chunk_labels: Vec<i32> = outs[1].to_vec()?;
+            let inertia: f32 = outs[2].get_first_element()?;
+            labels.clear();
+            for &l in &chunk_labels[..n] {
+                anyhow::ensure!((l as usize) < self.k, "label {l} out of range");
+                labels.push(l as u32);
+            }
+            Ok((centroids, inertia as f64))
+        } else {
+            // composed path: host-side Lloyd loop over chunked steps
+            let mut centroids = init_centroids.to_vec();
+            for _ in 0..self.local_iters {
+                let acc = self.step_block(pixels, &centroids)?;
+                math::update_centroids(&acc, &mut centroids, 0.0);
+            }
+            let inertia = self.assign_block(pixels, &centroids, labels)?;
+            Ok((centroids, inertia))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Cross-layer integration: the AOT artifacts must reproduce the
+    //! pure-rust oracle exactly (labels) / to f32 rounding (sums).
+    //! Skipped silently when `artifacts/` is absent (pre-`make artifacts`).
+
+    use super::*;
+    use crate::runtime::manifest::find_artifacts_dir;
+    use crate::util::prng::Rng;
+
+    fn engine(k: usize) -> Option<KernelEngine> {
+        let dir = find_artifacts_dir()?;
+        let set = ArtifactSet::load(dir).ok()?;
+        Some(KernelEngine::load(&set, k).expect("engine must load"))
+    }
+
+    fn rand_pixels(n: usize, channels: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * channels).map(|_| rng.next_f32() * 255.0).collect()
+    }
+
+    #[test]
+    fn step_block_matches_oracle() {
+        let Some(mut eng) = engine(4) else { return };
+        let c = eng.channels();
+        // deliberately not a chunk multiple: exercises tail masking
+        let px = rand_pixels(eng.chunk() + 777, c, 1);
+        let cen = rand_pixels(4, c, 2);
+        let got = eng.step_block(&px, &cen).unwrap();
+        let want = math::step(&px, &cen, 4, c);
+        assert_eq!(got.counts, want.counts);
+        for (g, w) in got.sums.iter().zip(&want.sums) {
+            assert!((g - w).abs() < 0.5 + w.abs() * 1e-4, "{g} vs {w}");
+        }
+        assert!(
+            (got.inertia - want.inertia).abs() < want.inertia * 1e-3 + 1.0,
+            "{} vs {}",
+            got.inertia,
+            want.inertia
+        );
+    }
+
+    #[test]
+    fn assign_block_matches_oracle() {
+        let Some(mut eng) = engine(2) else { return };
+        let c = eng.channels();
+        let px = rand_pixels(5000, c, 3);
+        let cen = rand_pixels(2, c, 4);
+        let mut got_labels = Vec::new();
+        let got_inertia = eng.assign_block(&px, &cen, &mut got_labels).unwrap();
+        let mut want_labels = Vec::new();
+        let want_inertia = math::assign_all(&px, &cen, 2, c, &mut want_labels);
+        assert_eq!(got_labels, want_labels);
+        assert!((got_inertia - want_inertia).abs() < want_inertia * 1e-3 + 1.0);
+    }
+
+    #[test]
+    fn local_block_fused_and_composed_agree() {
+        let Some(mut eng) = engine(2) else { return };
+        let c = eng.channels();
+        // small block -> fused path
+        let px = rand_pixels(800, c, 5);
+        let cen = rand_pixels(2, c, 6);
+        let mut labels_fused = Vec::new();
+        let (cen_fused, inertia_fused) =
+            eng.local_block(&px, &cen, &mut labels_fused).unwrap();
+        // composed path (host loop over the same math)
+        let mut cen_host = cen.clone();
+        for _ in 0..eng.local_iters() {
+            let acc = math::step(&px, &cen_host, 2, c);
+            math::update_centroids(&acc, &mut cen_host, 0.0);
+        }
+        let mut labels_host = Vec::new();
+        let inertia_host = math::assign_all(&px, &cen_host, 2, c, &mut labels_host);
+        assert_eq!(labels_fused, labels_host);
+        for (a, b) in cen_fused.iter().zip(&cen_host) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+        assert!((inertia_fused - inertia_host).abs() < inertia_host * 1e-3 + 1.0);
+    }
+
+    #[test]
+    fn centroid_size_mismatch_is_error() {
+        let Some(mut eng) = engine(2) else { return };
+        let px = rand_pixels(10, eng.channels(), 7);
+        assert!(eng.step_block(&px, &[0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,354 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+use sha2::{Digest, Sha256};
+
+use crate::util::json::Json;
+
+/// One tensor's shape+dtype as declared by the manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// The three graph kinds the AOT path emits per K.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Assign,
+    Step,
+    Local,
+}
+
+impl ArtifactKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ArtifactKind::Assign => "assign",
+            ArtifactKind::Step => "step",
+            ArtifactKind::Local => "local",
+        }
+    }
+
+    fn parse(s: &str) -> Result<ArtifactKind> {
+        match s {
+            "assign" => Ok(ArtifactKind::Assign),
+            "step" => Ok(ArtifactKind::Step),
+            "local" => Ok(ArtifactKind::Local),
+            other => bail!("unknown artifact kind {other:?}"),
+        }
+    }
+}
+
+/// One artifact's metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub k: usize,
+    pub chunk: usize,
+    pub channels: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: String,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub chunk: usize,
+    pub channels: usize,
+    pub local_iters: usize,
+    pub ks: Vec<usize>,
+    by_key: BTreeMap<(String, usize), ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src).context("manifest.json")?;
+        let format = j
+            .get("format")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing format"))?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let chunk = req_usize(&j, "chunk")?;
+        let channels = req_usize(&j, "channels")?;
+        let local_iters = req_usize(&j, "local_iters")?;
+        let ks = j
+            .get("ks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing ks"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad k")))
+            .collect::<Result<Vec<_>>>()?;
+        let mut by_key = BTreeMap::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = req_str(a, "name")?.to_string();
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                file: req_str(a, "file")?.to_string(),
+                kind: ArtifactKind::parse(req_str(a, "kind")?)?,
+                k: req_usize(a, "k")?,
+                chunk: req_usize(a, "chunk")?,
+                channels: req_usize(a, "channels")?,
+                inputs: specs(a, "inputs")?,
+                outputs: specs(a, "outputs")?,
+                sha256: req_str(a, "sha256")?.to_string(),
+            };
+            let key = (meta.kind.as_str().to_string(), meta.k);
+            if by_key.insert(key, meta).is_some() {
+                bail!("duplicate artifact for kind/k in manifest: {name}");
+            }
+        }
+        let m = Manifest {
+            chunk,
+            channels,
+            local_iters,
+            ks,
+            by_key,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for &k in &self.ks {
+            for kind in ["assign", "step", "local"] {
+                let meta = self
+                    .by_key
+                    .get(&(kind.to_string(), k))
+                    .ok_or_else(|| anyhow!("manifest missing {kind}_k{k}"))?;
+                if meta.chunk != self.chunk || meta.channels != self.channels {
+                    bail!("artifact {} disagrees with manifest chunk/channels", meta.name);
+                }
+                // input 0 is always pixels[chunk, channels]
+                let px = &meta.inputs[0];
+                if px.shape != [self.chunk, self.channels] {
+                    bail!(
+                        "artifact {}: pixels shape {:?} != [{}, {}]",
+                        meta.name,
+                        px.shape,
+                        self.chunk,
+                        self.channels
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, kind: ArtifactKind, k: usize) -> Result<&ArtifactMeta> {
+        self.by_key
+            .get(&(kind.as_str().to_string(), k))
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for kind={} k={k} (have ks={:?}) — re-run `make artifacts`",
+                    kind.as_str(),
+                    self.ks
+                )
+            })
+    }
+
+    pub fn artifacts(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.by_key.values()
+    }
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest missing/invalid {key:?}"))
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("manifest missing/invalid {key:?}"))
+}
+
+fn specs(j: &Json, key: &str) -> Result<Vec<TensorSpec>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest missing {key:?}"))?
+        .iter()
+        .map(TensorSpec::from_json)
+        .collect()
+}
+
+/// A manifest bound to its on-disk directory, with integrity checking.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactSet {
+    /// Load `dir/manifest.json` and verify every artifact file's SHA-256
+    /// matches — a stale or hand-edited artifact directory fails fast
+    /// instead of producing silently wrong clusters.
+    pub fn load(dir: impl Into<PathBuf>) -> Result<ArtifactSet> {
+        let dir = dir.into();
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`?)", path.display()))?;
+        let manifest = Manifest::parse(&src)?;
+        for meta in manifest.artifacts() {
+            let fpath = dir.join(&meta.file);
+            let text = std::fs::read(&fpath)
+                .with_context(|| format!("read artifact {}", fpath.display()))?;
+            let digest = hex(&Sha256::digest(&text));
+            if digest != meta.sha256 {
+                bail!(
+                    "artifact {} is stale (sha256 {digest} != manifest {}) — re-run `make artifacts`",
+                    meta.file,
+                    meta.sha256
+                );
+            }
+        }
+        Ok(ArtifactSet { dir, manifest })
+    }
+
+    pub fn hlo_path(&self, kind: ArtifactKind, k: usize) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.manifest.artifact(kind, k)?.file))
+    }
+}
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// Locate the artifacts dir: `$BLOCKMS_ARTIFACTS`, else walk up from cwd
+/// looking for `artifacts/manifest.json`.
+pub fn find_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("BLOCKMS_ARTIFACTS") {
+        return Some(PathBuf::from(p));
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join(super::DEFAULT_ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "format": 1, "chunk": 64, "channels": 3, "local_iters": 8, "ks": [2],
+      "artifacts": [
+        {"name": "assign_k2", "file": "assign_k2.hlo.txt", "kind": "assign",
+         "k": 2, "chunk": 64, "channels": 3,
+         "inputs": [{"shape": [64,3], "dtype": "float32"},
+                     {"shape": [2,3], "dtype": "float32"}],
+         "outputs": [{"shape": [64], "dtype": "int32"},
+                      {"shape": [64], "dtype": "float32"}],
+         "sha256": "x"},
+        {"name": "step_k2", "file": "step_k2.hlo.txt", "kind": "step",
+         "k": 2, "chunk": 64, "channels": 3,
+         "inputs": [{"shape": [64,3], "dtype": "float32"},
+                     {"shape": [64], "dtype": "float32"},
+                     {"shape": [2,3], "dtype": "float32"}],
+         "outputs": [{"shape": [2,3], "dtype": "float32"},
+                      {"shape": [2], "dtype": "float32"},
+                      {"shape": [], "dtype": "float32"}],
+         "sha256": "x"},
+        {"name": "local_k2", "file": "local_k2.hlo.txt", "kind": "local",
+         "k": 2, "chunk": 64, "channels": 3,
+         "inputs": [{"shape": [64,3], "dtype": "float32"},
+                     {"shape": [64], "dtype": "float32"},
+                     {"shape": [2,3], "dtype": "float32"}],
+         "outputs": [{"shape": [2,3], "dtype": "float32"},
+                      {"shape": [64], "dtype": "int32"},
+                      {"shape": [], "dtype": "float32"}],
+         "sha256": "x"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.chunk, 64);
+        assert_eq!(m.ks, vec![2]);
+        let a = m.artifact(ArtifactKind::Step, 2).unwrap();
+        assert_eq!(a.file, "step_k2.hlo.txt");
+        assert_eq!(a.inputs[2].shape, vec![2, 3]);
+        assert_eq!(a.outputs[2].shape, Vec::<usize>::new());
+        assert_eq!(a.outputs[2].elements(), 1);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(MINI).unwrap();
+        let err = m.artifact(ArtifactKind::Step, 4).unwrap_err().to_string();
+        assert!(err.contains("k=4"), "{err}");
+    }
+
+    #[test]
+    fn incomplete_set_rejected() {
+        let broken = MINI.replace(r#""kind": "local""#, r#""kind": "step""#);
+        // now two step artifacts and no local -> duplicate or missing error
+        assert!(Manifest::parse(&broken).is_err());
+    }
+
+    #[test]
+    fn wrong_pixel_shape_rejected() {
+        let broken = MINI.replace(r#""shape": [64,3]"#, r#""shape": [32,3]"#);
+        let err = Manifest::parse(&broken).unwrap_err().to_string();
+        assert!(err.contains("pixels shape"), "{err}");
+    }
+
+    #[test]
+    fn bad_format_rejected() {
+        let broken = MINI.replace(r#""format": 1"#, r#""format": 9"#);
+        assert!(Manifest::parse(&broken).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Integration-lite: if the repo's artifacts exist, they must load.
+        if let Some(dir) = find_artifacts_dir() {
+            let set = ArtifactSet::load(&dir).expect("repo artifacts must validate");
+            assert!(set.manifest.ks.contains(&2));
+            assert_eq!(set.manifest.channels, 3);
+            let p = set.hlo_path(ArtifactKind::Assign, 2).unwrap();
+            assert!(p.exists());
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Runtime: load and execute the AOT artifacts via PJRT.
+//!
+//! `make artifacts` (python, build-time) leaves `artifacts/*.hlo.txt` and
+//! a `manifest.json`. At startup the rust side:
+//!
+//! 1. parses the manifest ([`Manifest`]) and validates artifact hashes,
+//! 2. builds a `PjRtClient::cpu()` and compiles the HLO **text** modules
+//!    ([`KernelEngine`]) — text, not serialized protos, because jax ≥ 0.5
+//!    emits 64-bit instruction ids that xla_extension 0.5.1 rejects,
+//! 3. streams arbitrary-size pixel buffers through the fixed-shape chunk
+//!    executables, zero-masking the tail chunk.
+//!
+//! The PJRT client is `Rc`-based (`!Send`), so every worker thread builds
+//! its **own** engine from a cheap [`BackendSpec`] — exactly the MATLAB
+//! parpool model the paper uses (each worker is an independent session).
+//! [`ComputeBackend`] abstracts over the PJRT engine and the pure-rust
+//! [`NativeBackend`] so the coordinator is engine-agnostic.
+
+mod backend;
+mod engine;
+mod manifest;
+
+pub use backend::{BackendSpec, ComputeBackend, NativeBackend};
+pub use engine::KernelEngine;
+pub use manifest::{find_artifacts_dir, ArtifactKind, ArtifactMeta, ArtifactSet, Manifest, TensorSpec};
+
+/// Default artifacts directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";

@@ -1,0 +1,329 @@
+//! Discrete-event simulation of the worker pool — the speedup substrate.
+//!
+//! The paper measures speedup on a 4-core Xeon with 2/4/8 MATLAB workers.
+//! This container has **one** CPU core, so multi-worker wall-clock cannot
+//! show parallel speedup; per DESIGN.md §5 we substitute a *calibrated
+//! replay*: per-block I/O and compute costs are **measured on the real
+//! pipeline** (strip reads, AOT kernel execution), then replayed through
+//! this deterministic list-scheduling simulator at any worker count.
+//!
+//! The model captures exactly the effects the paper's analysis attributes
+//! timing differences to:
+//!
+//! - **load balance** — blocks are scheduled onto the first free worker
+//!   (dynamic, like `parfor`) or round-robin (static); a plan whose block
+//!   count divides the worker count poorly leaves workers idle at the
+//!   tail (why 8 workers stop helping: the paper's plans have ~5 blocks);
+//! - **serialized I/O** — strip reads contend on one disk: row-shaped
+//!   plans read each strip once, square plans ~4×, column plans ~5×
+//!   (Cases 1–3), so I/O-heavy shapes lose parallel efficiency;
+//! - **serial fraction** — leader-side init / reduction / assembly time
+//!   that no worker count amortizes (Amdahl).
+//!
+//! The simulator never *invents* parallelism: with one worker its
+//! makespan equals the serial sum exactly (tested), and its makespan is
+//! always bounded below by both the critical path and the work/worker
+//! bound (property-tested).
+
+use crate::coordinator::{RoundRecord, Schedule};
+
+/// One block's replayable cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimBlock {
+    pub io_secs: f64,
+    pub compute_secs: f64,
+}
+
+impl SimBlock {
+    pub fn total(&self) -> f64 {
+        self.io_secs + self.compute_secs
+    }
+}
+
+/// Simulation parameters.
+#[derive(Clone, Debug)]
+pub struct SimParams {
+    pub workers: usize,
+    pub schedule: Schedule,
+    /// Whether block I/O serializes on a single disk (true reproduces
+    /// `blockproc`-on-one-spindle; false models a parallel filesystem).
+    pub disk_serialized: bool,
+    /// Leader seconds added per round (reduction + dispatch).
+    pub leader_secs_per_round: f64,
+    /// Leader seconds added once per run (init + assembly).
+    pub leader_secs_fixed: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            workers: 4,
+            schedule: Schedule::Dynamic,
+            disk_serialized: true,
+            leader_secs_per_round: 0.0,
+            leader_secs_fixed: 0.0,
+        }
+    }
+}
+
+/// Result of simulating one round.
+#[derive(Clone, Debug)]
+pub struct RoundSim {
+    /// Barrier-to-barrier time for the round.
+    pub makespan: f64,
+    /// Per-worker busy time (io + compute attributed to it).
+    pub busy: Vec<f64>,
+    /// Total time blocks spent waiting for the disk.
+    pub io_wait: f64,
+}
+
+impl RoundSim {
+    /// Worker utilization: busy time / (workers × makespan).
+    pub fn utilization(&self) -> f64 {
+        if self.makespan == 0.0 {
+            return 1.0;
+        }
+        self.busy.iter().sum::<f64>() / (self.busy.len() as f64 * self.makespan)
+    }
+}
+
+/// The worker-pool simulator.
+#[derive(Clone, Debug)]
+pub struct WorkerSim {
+    params: SimParams,
+}
+
+impl WorkerSim {
+    pub fn new(params: SimParams) -> WorkerSim {
+        assert!(params.workers > 0, "need at least one worker");
+        WorkerSim { params }
+    }
+
+    pub fn params(&self) -> &SimParams {
+        &self.params
+    }
+
+    /// Simulate one round (one barrier) over `blocks`, in queue order.
+    pub fn round(&self, blocks: &[SimBlock]) -> RoundSim {
+        let w = self.params.workers;
+        let mut worker_free = vec![0.0f64; w];
+        let mut busy = vec![0.0f64; w];
+        let mut disk_free = 0.0f64;
+        let mut io_wait = 0.0f64;
+
+        for (i, b) in blocks.iter().enumerate() {
+            // pick the worker
+            let wi = match self.params.schedule {
+                Schedule::Static => i % w,
+                Schedule::Dynamic => {
+                    // earliest-free worker; ties to lowest index
+                    let mut best = 0;
+                    for j in 1..w {
+                        if worker_free[j] < worker_free[best] {
+                            best = j;
+                        }
+                    }
+                    best
+                }
+            };
+            let start = worker_free[wi];
+            let (io_start, io_end) = if self.params.disk_serialized {
+                let s = start.max(disk_free);
+                io_wait += s - start;
+                disk_free = s + b.io_secs;
+                (s, s + b.io_secs)
+            } else {
+                (start, start + b.io_secs)
+            };
+            let _ = io_start;
+            let end = io_end + b.compute_secs;
+            worker_free[wi] = end;
+            busy[wi] += b.total();
+        }
+        RoundSim {
+            makespan: worker_free.iter().cloned().fold(0.0, f64::max),
+            busy,
+            io_wait,
+        }
+    }
+
+    /// Simulate a whole run: a sequence of rounds (each a barrier) plus
+    /// leader overheads. Returns total simulated seconds.
+    pub fn run(&self, rounds: &[Vec<SimBlock>]) -> f64 {
+        let mut total = self.params.leader_secs_fixed;
+        for blocks in rounds {
+            total += self.round(blocks).makespan + self.params.leader_secs_per_round;
+        }
+        total
+    }
+
+    /// Replay a measured coordinator run ([`RoundRecord`]s carry real
+    /// per-block costs) at this simulator's worker count.
+    pub fn replay(&self, rounds: &[RoundRecord]) -> f64 {
+        let sim_rounds: Vec<Vec<SimBlock>> = rounds
+            .iter()
+            .map(|r| {
+                r.costs
+                    .iter()
+                    .map(|c| SimBlock {
+                        io_secs: c.io_secs,
+                        compute_secs: c.compute_secs,
+                    })
+                    .collect()
+            })
+            .collect();
+        self.run(&sim_rounds)
+    }
+}
+
+/// Serial reference time for the same blocks: one worker, no overlap.
+pub fn serial_time(rounds: &[Vec<SimBlock>]) -> f64 {
+    rounds
+        .iter()
+        .flat_map(|r| r.iter())
+        .map(SimBlock::total)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blocks(costs: &[(f64, f64)]) -> Vec<SimBlock> {
+        costs
+            .iter()
+            .map(|&(io_secs, compute_secs)| SimBlock {
+                io_secs,
+                compute_secs,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn one_worker_equals_serial_sum() {
+        let bs = blocks(&[(0.1, 1.0), (0.2, 0.5), (0.05, 2.0)]);
+        let sim = WorkerSim::new(SimParams {
+            workers: 1,
+            ..Default::default()
+        });
+        let r = sim.round(&bs);
+        let serial: f64 = bs.iter().map(SimBlock::total).sum();
+        assert!((r.makespan - serial).abs() < 1e-12);
+        assert!((r.utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equal_blocks_scale_nearly_linearly() {
+        // 8 equal compute-dominated blocks on 2/4 workers
+        let bs = blocks(&[(0.001, 1.0); 8]);
+        let serial: f64 = bs.iter().map(SimBlock::total).sum();
+        for w in [2usize, 4] {
+            let sim = WorkerSim::new(SimParams {
+                workers: w,
+                ..Default::default()
+            });
+            let r = sim.round(&bs);
+            let speedup = serial / r.makespan;
+            assert!(
+                speedup > w as f64 * 0.95 && speedup <= w as f64 + 1e-9,
+                "w={w}: speedup {speedup}"
+            );
+        }
+    }
+
+    #[test]
+    fn tail_imbalance_caps_speedup() {
+        // 5 equal blocks on 4 workers: makespan = 2 block times -> speedup 2.5
+        let bs = blocks(&[(0.0, 1.0); 5]);
+        let sim = WorkerSim::new(SimParams {
+            workers: 4,
+            ..Default::default()
+        });
+        let r = sim.round(&bs);
+        assert!((r.makespan - 2.0).abs() < 1e-9, "makespan {}", r.makespan);
+    }
+
+    #[test]
+    fn serialized_io_limits_io_bound_speedup() {
+        // fully I/O-bound blocks cannot speed up at all on one disk
+        let bs = blocks(&[(1.0, 0.0); 4]);
+        let sim = WorkerSim::new(SimParams {
+            workers: 4,
+            ..Default::default()
+        });
+        let r = sim.round(&bs);
+        assert!((r.makespan - 4.0).abs() < 1e-9);
+        assert!(r.io_wait > 0.0);
+        // ...but a parallel filesystem lets them overlap
+        let sim_pfs = WorkerSim::new(SimParams {
+            workers: 4,
+            disk_serialized: false,
+            ..Default::default()
+        });
+        assert!((sim_pfs.round(&bs).makespan - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dynamic_beats_static_on_skew() {
+        // one huge block + small ones: static round-robin pins smalls
+        // behind the big one on the same worker
+        let bs = blocks(&[(0.0, 4.0), (0.0, 1.0), (0.0, 1.0), (0.0, 1.0), (0.0, 1.0)]);
+        let dynamic = WorkerSim::new(SimParams {
+            workers: 2,
+            ..Default::default()
+        })
+        .round(&bs)
+        .makespan;
+        let fixed = WorkerSim::new(SimParams {
+            workers: 2,
+            schedule: Schedule::Static,
+            ..Default::default()
+        })
+        .round(&bs)
+        .makespan;
+        assert!(dynamic <= fixed, "dynamic {dynamic} vs static {fixed}");
+        assert!((dynamic - 4.0).abs() < 1e-9); // critical path = big block
+        assert!((fixed - 6.0).abs() < 1e-9); // blocks 0,2,4 on worker 0
+    }
+
+    #[test]
+    fn leader_overheads_added() {
+        let bs = blocks(&[(0.0, 1.0)]);
+        let sim = WorkerSim::new(SimParams {
+            workers: 1,
+            leader_secs_per_round: 0.5,
+            leader_secs_fixed: 2.0,
+            ..Default::default()
+        });
+        let total = sim.run(&[bs.clone(), bs]);
+        assert!((total - (2.0 + 2.0 * 1.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn makespan_lower_bounds_hold() {
+        // property: makespan >= max block total AND >= work/workers
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let n = rng.range_usize(1, 20);
+            let bs: Vec<SimBlock> = (0..n)
+                .map(|_| SimBlock {
+                    io_secs: rng.next_f64() * 0.2,
+                    compute_secs: rng.next_f64(),
+                })
+                .collect();
+            let w = rng.range_usize(1, 9);
+            let sim = WorkerSim::new(SimParams {
+                workers: w,
+                disk_serialized: rng.next_f64() < 0.5,
+                ..Default::default()
+            });
+            let r = sim.round(&bs);
+            let work: f64 = bs.iter().map(SimBlock::total).sum();
+            let cp = bs.iter().map(SimBlock::total).fold(0.0, f64::max);
+            assert!(r.makespan >= cp - 1e-9, "below critical path");
+            assert!(r.makespan >= work / w as f64 - 1e-9, "below work bound");
+            assert!(r.makespan <= work + 1e-9, "above serial bound");
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Shared, thread-safe access counters for a strip store.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Counters shared by every [`super::StripReader`] of a store.
+/// All counters are monotonic; `snapshot()` gives a consistent-enough
+/// view for reporting (exact consistency is not needed — these feed
+/// tables, not control flow).
+#[derive(Debug, Default)]
+pub struct AccessStats {
+    strip_reads: AtomicU64,
+    block_reads: AtomicU64,
+    bytes_read: AtomicU64,
+}
+
+/// A point-in-time copy of the counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccessSnapshot {
+    pub strip_reads: u64,
+    pub block_reads: u64,
+    pub bytes_read: u64,
+}
+
+impl AccessStats {
+    pub fn new_shared() -> Arc<AccessStats> {
+        Arc::new(AccessStats::default())
+    }
+
+    pub fn record_strip_read(&self, bytes: usize) {
+        self.strip_reads.fetch_add(1, Ordering::Relaxed);
+        self.bytes_read.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_block_read(&self) {
+        self.block_reads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> AccessSnapshot {
+        AccessSnapshot {
+            strip_reads: self.strip_reads.load(Ordering::Relaxed),
+            block_reads: self.block_reads.load(Ordering::Relaxed),
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.strip_reads.store(0, Ordering::Relaxed);
+        self.block_reads.store(0, Ordering::Relaxed);
+        self.bytes_read.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let s = AccessStats::default();
+        s.record_strip_read(100);
+        s.record_strip_read(50);
+        s.record_block_read();
+        let snap = s.snapshot();
+        assert_eq!(snap.strip_reads, 2);
+        assert_eq!(snap.block_reads, 1);
+        assert_eq!(snap.bytes_read, 150);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let s = AccessStats::default();
+        s.record_strip_read(10);
+        s.reset();
+        assert_eq!(s.snapshot().strip_reads, 0);
+        assert_eq!(s.snapshot().bytes_read, 0);
+    }
+
+    #[test]
+    fn concurrent_counting_is_exact() {
+        let s = AccessStats::new_shared();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    s.record_strip_read(8);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.snapshot().strip_reads, 4000);
+        assert_eq!(s.snapshot().bytes_read, 32000);
+    }
+}

@@ -1,0 +1,192 @@
+//! The strip store: a raster persisted as full-width row strips.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::reader::StripReader;
+use super::stats::AccessStats;
+use crate::image::Raster;
+
+/// Where the strip data lives.
+#[derive(Clone, Debug)]
+pub enum Backing {
+    /// Strips held in memory (fast; still counts accesses).
+    Memory,
+    /// Strips written to a real file of little-endian f32 samples in the
+    /// given directory; readers `seek + read` per strip. This is the mode
+    /// the Cases 1–3 experiment uses, making read-amplification cost real.
+    File(PathBuf),
+}
+
+/// Immutable strip-organized image storage. Cheap to clone handles from
+/// via [`StripStore::reader`]; all readers share one [`AccessStats`].
+pub struct StripStore {
+    height: usize,
+    width: usize,
+    channels: usize,
+    strip_rows: usize,
+    backing: StoreData,
+    stats: Arc<AccessStats>,
+}
+
+pub(super) enum StoreData {
+    Memory(Arc<Vec<f32>>),
+    File { path: PathBuf },
+}
+
+impl StripStore {
+    /// Persist `img` as strips of `strip_rows` rows.
+    pub fn new(img: &Raster, strip_rows: usize, backing: Backing) -> Result<StripStore> {
+        assert!(strip_rows > 0, "strip_rows must be positive");
+        let stats = AccessStats::new_shared();
+        let data = match backing {
+            Backing::Memory => StoreData::Memory(Arc::new(img.data().to_vec())),
+            Backing::File(dir) => {
+                std::fs::create_dir_all(&dir)
+                    .with_context(|| format!("create {}", dir.display()))?;
+                let path = dir.join(format!(
+                    "strips_{}x{}x{}_{}.f32le",
+                    img.height(),
+                    img.width(),
+                    img.channels(),
+                    strip_rows
+                ));
+                let f = std::fs::File::create(&path)
+                    .with_context(|| format!("create {}", path.display()))?;
+                let mut w = std::io::BufWriter::new(f);
+                // Raster data is already row-major — strips are contiguous
+                // runs; write the whole buffer in strip-sized chunks so
+                // the on-disk layout *is* the strip layout.
+                for chunk in img
+                    .data()
+                    .chunks(strip_rows * img.width() * img.channels())
+                {
+                    let bytes: Vec<u8> = chunk.iter().flat_map(|v| v.to_le_bytes()).collect();
+                    w.write_all(&bytes)?;
+                }
+                w.flush()?;
+                StoreData::File { path }
+            }
+        };
+        Ok(StripStore {
+            height: img.height(),
+            width: img.width(),
+            channels: img.channels(),
+            strip_rows,
+            backing: data,
+            stats,
+        })
+    }
+
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    pub fn strip_rows(&self) -> usize {
+        self.strip_rows
+    }
+
+    /// Total strip count.
+    pub fn strips(&self) -> usize {
+        self.height.div_ceil(self.strip_rows)
+    }
+
+    /// Row extent of strip `s`: `(first_row, rows_in_strip)`.
+    pub fn strip_extent(&self, s: usize) -> (usize, usize) {
+        let first = s * self.strip_rows;
+        assert!(first < self.height, "strip {s} out of range");
+        (first, self.strip_rows.min(self.height - first))
+    }
+
+    /// Samples (f32 count) in strip `s`.
+    pub fn strip_len(&self, s: usize) -> usize {
+        let (_, rows) = self.strip_extent(s);
+        rows * self.width * self.channels
+    }
+
+    /// Byte offset of strip `s` in the file layout.
+    pub fn strip_offset_bytes(&self, s: usize) -> u64 {
+        (s * self.strip_rows * self.width * self.channels * 4) as u64
+    }
+
+    pub fn stats(&self) -> &Arc<AccessStats> {
+        &self.stats
+    }
+
+    /// Open an independent reader (per worker: own file handle, shared
+    /// counters).
+    pub fn reader(&self) -> Result<StripReader> {
+        StripReader::open(self)
+    }
+
+    pub(super) fn data(&self) -> &StoreData {
+        &self.backing
+    }
+
+    /// Path of the backing file (None for memory backing).
+    pub fn file_path(&self) -> Option<&std::path::Path> {
+        match &self.backing {
+            StoreData::File { path } => Some(path),
+            StoreData::Memory(_) => None,
+        }
+    }
+}
+
+impl Drop for StripStore {
+    fn drop(&mut self) {
+        if let StoreData::File { path } = &self.backing {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::SyntheticOrtho;
+
+    #[test]
+    fn strip_geometry() {
+        let img = SyntheticOrtho::default().with_seed(1).generate(10, 6);
+        let st = StripStore::new(&img, 4, Backing::Memory).unwrap();
+        assert_eq!(st.strips(), 3);
+        assert_eq!(st.strip_extent(0), (0, 4));
+        assert_eq!(st.strip_extent(2), (8, 2)); // partial tail strip
+        assert_eq!(st.strip_len(2), 2 * 6 * 3);
+        assert_eq!(st.strip_offset_bytes(1), (4 * 6 * 3 * 4) as u64);
+    }
+
+    #[test]
+    fn file_backing_creates_and_cleans_up() {
+        let img = SyntheticOrtho::default().with_seed(2).generate(8, 8);
+        let dir = std::env::temp_dir().join("blockms_store_test");
+        let path;
+        {
+            let st = StripStore::new(&img, 4, Backing::File(dir.clone())).unwrap();
+            path = st.file_path().unwrap().to_path_buf();
+            assert!(path.exists());
+            let len = std::fs::metadata(&path).unwrap().len();
+            assert_eq!(len, (8 * 8 * 3 * 4) as u64);
+        }
+        assert!(!path.exists(), "backing file not cleaned up");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn strip_extent_bounds() {
+        let img = SyntheticOrtho::default().generate(10, 6);
+        let st = StripStore::new(&img, 4, Backing::Memory).unwrap();
+        st.strip_extent(3);
+    }
+}

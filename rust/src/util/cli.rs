@@ -1,0 +1,251 @@
+//! Declarative command-line parsing (clap is not vendored).
+//!
+//! Supports the subset the `blockms` binary and examples need:
+//! `--flag`, `--opt value`, `--opt=value`, positional arguments,
+//! subcommands (first positional), `-h/--help` text generation, and typed
+//! accessors with defaults. Unknown options are hard errors — silent typos
+//! in a bench sweep would corrupt results.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` if the option takes a value (`--k 4`), `false` for a flag.
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A declarative CLI: options + positionals, then `parse`.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+/// Parse result: resolved option values + positional arguments.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1:?} ({2})")]
+    BadValue(String, String, String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Self {
+            bin,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    /// Add a value-taking option with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default,
+        });
+        self
+    }
+
+    /// Add a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.bin, self.about);
+        let _ = writeln!(s, "USAGE: {} [subcommand] [options]\n\nOPTIONS:", self.bin);
+        for o in &self.opts {
+            let mut left = format!("  --{}", o.name);
+            if o.takes_value {
+                left.push_str(" <value>");
+            }
+            let pad = if left.len() < 26 { 26 - left.len() } else { 1 };
+            let _ = write!(s, "{}{}{}", left, " ".repeat(pad), o.help);
+            if let Some(d) = o.default {
+                let _ = write!(s, " [default: {d}]");
+            }
+            s.push('\n');
+        }
+        let _ = writeln!(s, "  --help                  print this help");
+        s
+    }
+
+    fn spec(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Parse an argument vector (excluding argv[0]).
+    pub fn parse<I, S>(&self, argv: I) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+            if !o.takes_value {
+                args.flags.insert(o.name.to_string(), false);
+            }
+        }
+        let mut it = argv.into_iter().map(Into::into).peekable();
+        while let Some(a) = it.next() {
+            if a == "-h" || a == "--help" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self.spec(&name).ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    args.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError::BadValue(
+                            name.clone(),
+                            inline.unwrap(),
+                            "flag takes no value".into(),
+                        ));
+                    }
+                    args.flags.insert(name, true);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .values
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        raw.parse::<T>().map_err(|e| {
+            CliError::BadValue(name.to_string(), raw.clone(), e.to_string())
+        })
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("k", Some("2"), "clusters")
+            .opt("shape", None, "block shape")
+            .flag("verbose", "talk more")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.get("k"), Some("2"));
+        assert_eq!(a.get("shape"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = cli()
+            .parse(vec!["run", "--k", "8", "--shape=row", "--verbose", "x"])
+            .unwrap();
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.get_parse::<usize>("k").unwrap(), 8);
+        assert_eq!(a.get("shape"), Some("row"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run", "x"]);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert_eq!(
+            cli().parse(vec!["--nope"]),
+            Err(CliError::Unknown("nope".into()))
+        );
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert_eq!(
+            cli().parse(vec!["--shape"]),
+            Err(CliError::MissingValue("shape".into()))
+        );
+    }
+
+    #[test]
+    fn bad_typed_value_is_error() {
+        let a = cli().parse(vec!["--k", "abc"]).unwrap();
+        assert!(matches!(a.get_parse::<usize>("k"), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn help_is_requested() {
+        assert_eq!(cli().parse(vec!["--help"]), Err(CliError::HelpRequested));
+        assert!(cli().help_text().contains("--shape"));
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(matches!(
+            cli().parse(vec!["--verbose=yes"]),
+            Err(CliError::BadValue(..))
+        ));
+    }
+}

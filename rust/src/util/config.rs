@@ -1,0 +1,191 @@
+//! INI-style run-configuration files.
+//!
+//! The launcher accepts `--config run.ini` describing a whole experiment
+//! (workload, block shape, workers, clusters, engine). Format:
+//!
+//! ```ini
+//! ; comment
+//! [workload]
+//! width = 4656
+//! height = 5793
+//! seed = 7
+//!
+//! [cluster]
+//! k = 4
+//! max_iters = 20
+//! ```
+//!
+//! Keys are `section.key` flattened; values are strings with typed
+//! accessors. Later duplicate keys override earlier ones (so a CLI layer
+//! can merge on top).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ConfigError {
+    #[error("config line {0}: {1}")]
+    Parse(usize, String),
+    #[error("missing key {0:?}")]
+    Missing(String),
+    #[error("invalid value for {0:?}: {1:?} ({2})")]
+    BadValue(String, String, String),
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config, ConfigError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with(';') || line.starts_with('#') {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body
+                    .strip_suffix(']')
+                    .ok_or_else(|| ConfigError::Parse(lineno + 1, "unclosed section".into()))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(ConfigError::Parse(lineno + 1, "empty section name".into()));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::Parse(lineno + 1, "expected key = value".into()))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            if key.ends_with('.') || key.starts_with('.') || k.trim().is_empty() {
+                return Err(ConfigError::Parse(lineno + 1, "empty key".into()));
+            }
+            map.insert(key, v.trim().to_string());
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config, ConfigError> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::Parse(0, format!("read {}: {e}", path.display())))?;
+        Config::parse(&src)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(String::as_str)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str, ConfigError> {
+        self.get(key).ok_or_else(|| ConfigError::Missing(key.into()))
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, ConfigError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(raw) => raw.parse::<T>().map(Some).map_err(|e| {
+                ConfigError::BadValue(key.to_string(), raw.to_string(), e.to_string())
+            }),
+        }
+    }
+
+    /// Typed get with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, ConfigError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+
+    /// Merge `other` on top of `self` (other wins).
+    pub fn merged_with(mut self, other: &Config) -> Config {
+        for (k, v) in &other.map {
+            self.map.insert(k.clone(), v.clone());
+        }
+        self
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+; a comment
+top = 1
+[workload]
+width = 4656
+height = 5793
+# another comment
+seed = 7
+
+[cluster]
+k = 4
+tol = 1e-4
+name = row shaped
+";
+
+    #[test]
+    fn parses_sections_and_keys() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("top"), Some("1"));
+        assert_eq!(c.get("workload.width"), Some("4656"));
+        assert_eq!(c.get("cluster.k"), Some("4"));
+        assert_eq!(c.get("cluster.name"), Some("row shaped"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_parse::<usize>("workload.width").unwrap(), Some(4656));
+        assert_eq!(c.get_or::<f64>("cluster.tol", 0.0).unwrap(), 1e-4);
+        assert_eq!(c.get_or::<usize>("cluster.missing", 9).unwrap(), 9);
+        assert!(matches!(
+            c.get_parse::<usize>("cluster.name"),
+            Err(ConfigError::BadValue(..))
+        ));
+    }
+
+    #[test]
+    fn require_missing_errors() {
+        let c = Config::parse("a = 1").unwrap();
+        assert_eq!(c.require("b"), Err(ConfigError::Missing("b".into())));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[open").is_err());
+        assert!(Config::parse("noequals").is_err());
+        assert!(Config::parse("= bare").is_err());
+        assert!(Config::parse("[]").is_err());
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let base = Config::parse("a=1\nb=2").unwrap();
+        let over = Config::parse("b=3\nc=4").unwrap();
+        let m = base.merged_with(&over);
+        assert_eq!(m.get("a"), Some("1"));
+        assert_eq!(m.get("b"), Some("3"));
+        assert_eq!(m.get("c"), Some("4"));
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins() {
+        let c = Config::parse("a=1\na=2").unwrap();
+        assert_eq!(c.get("a"), Some("2"));
+    }
+}

@@ -1,0 +1,119 @@
+//! Minimal CSV writer (RFC-4180 quoting) for sweep exports.
+//!
+//! `blockms sweep --csv out.csv` dumps every paper-table cell as one row
+//! so downstream plotting (the paper's Figures 8–20) can be done in any
+//! tool without re-running the sweep.
+
+use std::io::Write;
+
+/// A CSV document under construction.
+#[derive(Clone, Debug, Default)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<I, S>(&mut self, cells: I)
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "csv row width {} != header {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with RFC-4180 quoting (quote fields containing `",\n`).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let write_row = |out: &mut String, row: &[String]| {
+            for (i, cell) in row.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                if cell.contains(['"', ',', '\n', '\r']) {
+                    out.push('"');
+                    out.push_str(&cell.replace('"', "\"\""));
+                    out.push('"');
+                } else {
+                    out.push_str(cell);
+                }
+            }
+            out.push('\n');
+        };
+        write_row(&mut out, &self.header);
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+
+    pub fn write_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.render().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(["1", "2"]);
+        c.row(["x", "y"]);
+        assert_eq!(c.render(), "a,b\n1,2\nx,y\n");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn quotes_special_cells() {
+        let mut c = Csv::new(&["a"]);
+        c.row(["has,comma"]);
+        c.row(["has\"quote"]);
+        c.row(["has\nnewline"]);
+        let r = c.render();
+        assert!(r.contains("\"has,comma\""));
+        assert!(r.contains("\"has\"\"quote\""));
+        assert!(r.contains("\"has\nnewline\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "csv row width")]
+    fn width_mismatch_panics() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(["only-one"]);
+    }
+
+    #[test]
+    fn writes_to_disk() {
+        let mut c = Csv::new(&["x"]);
+        c.row(["1"]);
+        let path = std::env::temp_dir().join("blockms_csv_test.csv");
+        c.write_to(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x\n1\n");
+    }
+}

@@ -1,0 +1,170 @@
+//! Fixed-width table rendering for paper-style console output.
+//!
+//! The bench harness prints tables shaped exactly like the paper's
+//! (Data Size / Serial / Parallel / Speedup / Efficiency). This module
+//! renders aligned ASCII tables and formats floats with stable width.
+
+/// A simple column-aligned table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self {
+            title: title.into(),
+            header: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&self.title);
+            out.push('\n');
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                let cell = cells.get(i).map(String::as_str).unwrap_or("");
+                line.push(' ');
+                line.push_str(cell);
+                line.push_str(&" ".repeat(widths[i] - cell.len() + 1));
+                if i + 1 < ncol {
+                    line.push('|');
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds with 6 decimal places (the paper's precision).
+pub fn secs(v: f64) -> String {
+    format!("{v:.6}")
+}
+
+/// Format a ratio (speedup/efficiency) with 4 decimal places.
+pub fn ratio(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+/// Format a pixel dimension as the paper writes it: `4656x5793`.
+pub fn dims(h: usize, w: usize) -> String {
+    format!("{h}x{w}")
+}
+
+/// Human-readable byte count.
+pub fn bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Human-readable duration from seconds.
+pub fn duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo").header(&["Data Size", "Serial", "Speedup"]);
+        t.row(vec!["1024x768".into(), secs(0.050589), ratio(1.3911)]);
+        t.row(vec!["9052x4965".into(), secs(2.442462), ratio(1.2246)]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines[0], "Demo");
+        assert!(lines[1].contains("Data Size"));
+        // all data lines equal length
+        assert_eq!(lines[3].len(), lines[4].len());
+        assert!(r.contains("0.050589"));
+        assert!(r.contains("1.3911"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("x").header(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(dims(4656, 5793), "4656x5793");
+        assert_eq!(secs(1.5), "1.500000");
+        assert_eq!(ratio(0.5), "0.5000");
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert!(bytes(77_300_000).contains("MiB"));
+        assert_eq!(duration(0.0025), "2.50 ms");
+        assert!(duration(2.5).contains("s"));
+        assert!(duration(2.5e-7).contains("ns"));
+    }
+}

@@ -1,0 +1,24 @@
+//! Foundation substrates built from scratch for the offline environment.
+//!
+//! The build environment vendors only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (rand, serde, clap, proptest,
+//! criterion) are unavailable. Everything the framework needs from them
+//! is implemented here, small and purpose-built:
+//!
+//! - [`prng`]    — SplitMix64 / Xoshiro256++ PRNG with normal variates
+//! - [`stats`]   — streaming + batch descriptive statistics
+//! - [`json`]    — a strict, minimal JSON parser (artifact manifest)
+//! - [`csv`]     — RFC-4180 CSV writer (sweep exports)
+//! - [`cli`]     — declarative command-line argument parser
+//! - [`config`]  — INI-style run-configuration files
+//! - [`qcheck`]  — miniature property-testing harness with shrinking
+//! - [`fmt`]     — fixed-width table rendering for paper-style output
+
+pub mod cli;
+pub mod config;
+pub mod csv;
+pub mod fmt;
+pub mod json;
+pub mod prng;
+pub mod qcheck;
+pub mod stats;

@@ -1,0 +1,276 @@
+//! Miniature property-testing harness (proptest is not vendored).
+//!
+//! The subset the test suite needs:
+//!
+//! - [`Gen`] — a value generator over the crate's deterministic [`Rng`];
+//! - [`forall`] — run a property over N generated cases; on failure,
+//!   greedily **shrink** the failing case toward a minimal counterexample
+//!   before reporting;
+//! - combinators: [`usize_in`], [`f32_in`], [`vec_of`], [`pair`],
+//!   [`choice_of`].
+//!
+//! A failing property panics with the (shrunk) case's debug rendering and
+//! the seed, so reproduction is one `Rng::new(seed)` away.
+
+use super::prng::Rng;
+
+/// A generator: produces a value and can enumerate shrink candidates.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values, most aggressive first. Default: none.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `cases` generated values; shrink and panic on failure.
+pub fn forall<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Rng::new(seed);
+    for case_no in 0..cases {
+        let v = gen.generate(&mut rng);
+        if prop(&v) {
+            continue;
+        }
+        // Shrink: repeatedly take the first failing shrink candidate.
+        let mut cur = v;
+        let mut budget = 1000;
+        'outer: while budget > 0 {
+            for cand in gen.shrink(&cur) {
+                budget -= 1;
+                if !prop(&cand) {
+                    cur = cand;
+                    continue 'outer;
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (seed={seed}, case {case_no}/{cases}):\n  shrunk counterexample: {cur:?}"
+        );
+    }
+}
+
+/// Uniform usize in `[lo, hi]` (inclusive); shrinks toward `lo`.
+pub struct UsizeIn {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+pub fn usize_in(lo: usize, hi: usize) -> UsizeIn {
+    assert!(lo <= hi);
+    UsizeIn { lo, hi }
+}
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.range_usize(self.lo, self.hi + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (*v - self.lo) / 2;
+            if mid != self.lo && mid != *v {
+                out.push(mid);
+            }
+            if *v - 1 != self.lo {
+                out.push(*v - 1);
+            }
+        }
+        out
+    }
+}
+
+/// Uniform f32 in `[lo, hi)`; shrinks toward 0 / lo.
+pub struct F32In {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+pub fn f32_in(lo: f32, hi: f32) -> F32In {
+    assert!(lo < hi);
+    F32In { lo, hi }
+}
+
+impl Gen for F32In {
+    type Value = f32;
+    fn generate(&self, rng: &mut Rng) -> f32 {
+        rng.range_f64(self.lo as f64, self.hi as f64) as f32
+    }
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let mut out = Vec::new();
+        let zero = if self.lo <= 0.0 && self.hi > 0.0 { 0.0 } else { self.lo };
+        if *v != zero {
+            out.push(zero);
+            out.push(zero + (*v - zero) / 2.0);
+        }
+        out
+    }
+}
+
+/// Vector of `inner` values with length in `[min_len, max_len]`; shrinks
+/// by halving length, dropping elements, and shrinking elements.
+pub struct VecOf<G> {
+    pub inner: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+pub fn vec_of<G: Gen>(inner: G, min_len: usize, max_len: usize) -> VecOf<G> {
+    assert!(min_len <= max_len);
+    VecOf {
+        inner,
+        min_len,
+        max_len,
+    }
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let len = rng.range_usize(self.min_len, self.max_len + 1);
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // halve
+            let half = v[..self.min_len.max(v.len() / 2)].to_vec();
+            if half.len() < v.len() {
+                out.push(half);
+            }
+            // drop one element (first and last)
+            let mut d = v.clone();
+            d.remove(0);
+            if d.len() >= self.min_len {
+                out.push(d);
+            }
+            let mut d = v.clone();
+            d.pop();
+            if d.len() >= self.min_len {
+                out.push(d);
+            }
+        }
+        // shrink a single element (first shrinkable)
+        for (i, x) in v.iter().enumerate() {
+            let cands = self.inner.shrink(x);
+            if let Some(c) = cands.into_iter().next() {
+                let mut w = v.clone();
+                w[i] = c;
+                out.push(w);
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// Pair of two generators; shrinks each side.
+pub struct Pair<A, B>(pub A, pub B);
+
+pub fn pair<A: Gen, B: Gen>(a: A, b: B) -> Pair<A, B> {
+    Pair(a, b)
+}
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        for a in self.0.shrink(&v.0) {
+            out.push((a, v.1.clone()));
+        }
+        for b in self.1.shrink(&v.1) {
+            out.push((v.0.clone(), b));
+        }
+        out
+    }
+}
+
+/// Uniform choice from a fixed list; shrinks toward the first entry.
+pub struct ChoiceOf<T> {
+    items: Vec<T>,
+}
+
+pub fn choice_of<T: Clone + std::fmt::Debug>(items: &[T]) -> ChoiceOf<T> {
+    assert!(!items.is_empty());
+    ChoiceOf {
+        items: items.to_vec(),
+    }
+}
+
+impl<T: Clone + std::fmt::Debug> Gen for ChoiceOf<T> {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        self.items[rng.range_usize(0, self.items.len())].clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(1, 200, &usize_in(0, 100), |&v| v <= 100);
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        // property: v < 50. minimal counterexample is 50.
+        let result = std::panic::catch_unwind(|| {
+            forall(2, 500, &usize_in(0, 1000), |&v| v < 50);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("counterexample: 50"), "got: {msg}");
+    }
+
+    #[test]
+    fn vec_shrinks_toward_short() {
+        // property: no vector contains an element > 90.
+        let result = std::panic::catch_unwind(|| {
+            forall(3, 500, &vec_of(usize_in(0, 100), 0, 20), |v| {
+                v.iter().all(|&x| x <= 90)
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // shrunk case should be a short vector (len 1 ideally)
+        assert!(msg.contains('['), "got: {msg}");
+    }
+
+    #[test]
+    fn pair_generates_both() {
+        forall(4, 100, &pair(usize_in(1, 5), f32_in(0.0, 1.0)), |(n, x)| {
+            (1..=5).contains(n) && (0.0..1.0).contains(x)
+        });
+    }
+
+    #[test]
+    fn choice_respects_items() {
+        forall(5, 100, &choice_of(&[2usize, 4, 8]), |&k| {
+            k == 2 || k == 4 || k == 8
+        });
+    }
+
+    #[test]
+    fn forall_deterministic_per_seed() {
+        let mut seen = Vec::new();
+        for _ in 0..2 {
+            let mut got = Vec::new();
+            let mut rng = Rng::new(99);
+            let g = usize_in(0, 1_000_000);
+            for _ in 0..10 {
+                got.push(g.generate(&mut rng));
+            }
+            seen.push(got);
+        }
+        assert_eq!(seen[0], seen[1]);
+    }
+}

@@ -1,0 +1,364 @@
+//! Full-pipeline integration tests: coordinator × engines × I/O modes ×
+//! clustering modes, plus failure handling and config-file driving.
+
+use std::sync::Arc;
+
+use blockms::blocks::{ApproachKind, BlockPlan, BlockShape};
+use blockms::coordinator::{
+    ClusterConfig, ClusterMode, Coordinator, CoordinatorConfig, Engine, IoMode, Schedule,
+};
+use blockms::image::{Raster, SyntheticOrtho};
+use blockms::kmeans::InitMethod;
+use blockms::runtime::find_artifacts_dir;
+use blockms::util::config::Config;
+
+fn scene(h: usize, w: usize, seed: u64) -> Arc<Raster> {
+    Arc::new(SyntheticOrtho::default().with_seed(seed).generate(h, w))
+}
+
+#[test]
+fn full_matrix_native_modes_shapes_workers() {
+    let img = scene(72, 60, 1);
+    for mode in [ClusterMode::Global, ClusterMode::Local] {
+        for kind in ApproachKind::ALL {
+            for workers in [1usize, 3] {
+                let shape = BlockShape::paper_default(kind, 72, 60);
+                let plan = Arc::new(BlockPlan::new(72, 60, shape));
+                let coord = Coordinator::new(CoordinatorConfig {
+                    workers,
+                    mode,
+                    ..Default::default()
+                });
+                let out = coord
+                    .cluster(&img, &plan, &ClusterConfig { k: 4, ..Default::default() })
+                    .unwrap();
+                assert_eq!(out.labels.len(), 72 * 60, "{mode:?}/{kind:?}/{workers}");
+                assert!(out.labels.iter().all(|&l| l < 4));
+                assert!(out.inertia > 0.0);
+                assert_eq!(out.centroids.len(), 4 * 3);
+            }
+        }
+    }
+}
+
+#[test]
+fn inertia_trace_is_monotone_nonincreasing() {
+    let img = scene(64, 64, 2);
+    let plan = Arc::new(BlockPlan::new(64, 64, BlockShape::Square { side: 20 }));
+    let coord = Coordinator::new(CoordinatorConfig::default());
+    let out = coord
+        .cluster(
+            &img,
+            &plan,
+            &ClusterConfig {
+                k: 4,
+                fixed_iters: Some(8),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(out.inertia_trace.len(), 8);
+    for pair in out.inertia_trace.windows(2) {
+        assert!(
+            pair[1] <= pair[0] * (1.0 + 1e-9) + 1e-6,
+            "inertia rose: {pair:?}"
+        );
+    }
+}
+
+#[test]
+fn schedules_agree_on_results() {
+    let img = scene(50, 70, 3);
+    let plan = Arc::new(BlockPlan::new(50, 70, BlockShape::Cols { band_cols: 13 }));
+    let cfg = ClusterConfig {
+        k: 2,
+        ..Default::default()
+    };
+    let mut outs = Vec::new();
+    for schedule in [Schedule::Static, Schedule::Dynamic] {
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 3,
+            schedule,
+            ..Default::default()
+        });
+        outs.push(coord.cluster(&img, &plan, &cfg).unwrap());
+    }
+    assert_eq!(outs[0].labels, outs[1].labels);
+    assert_eq!(outs[0].centroids, outs[1].centroids);
+}
+
+#[test]
+fn file_backed_strips_agree_with_direct() {
+    let img = scene(40, 56, 4);
+    let plan = Arc::new(BlockPlan::new(40, 56, BlockShape::Rows { band_rows: 11 }));
+    let cfg = ClusterConfig {
+        k: 2,
+        ..Default::default()
+    };
+    let direct = Coordinator::new(CoordinatorConfig::default())
+        .cluster(&img, &plan, &cfg)
+        .unwrap();
+    let strips = Coordinator::new(CoordinatorConfig {
+        io: IoMode::Strips {
+            strip_rows: 7,
+            file_backed: true,
+        },
+        ..Default::default()
+    })
+    .cluster(&img, &plan, &cfg)
+    .unwrap();
+    assert_eq!(direct.labels, strips.labels);
+    assert_eq!(direct.centroids, strips.centroids);
+    let io = strips.io_stats.unwrap();
+    assert!(io.bytes_read > 0);
+}
+
+#[test]
+fn init_methods_all_work_and_are_deterministic() {
+    let img = scene(40, 40, 5);
+    let plan = Arc::new(BlockPlan::new(40, 40, BlockShape::Square { side: 16 }));
+    let coord = Coordinator::new(CoordinatorConfig::default());
+    for init in [
+        InitMethod::RandomSample,
+        InitMethod::PlusPlus,
+        InitMethod::Fixed(vec![10.0, 10.0, 10.0, 200.0, 200.0, 200.0]),
+    ] {
+        let cfg = ClusterConfig {
+            k: 2,
+            init: init.clone(),
+            ..Default::default()
+        };
+        let a = coord.cluster(&img, &plan, &cfg).unwrap();
+        let b = coord.cluster(&img, &plan, &cfg).unwrap();
+        assert_eq!(a.labels, b.labels, "{init:?} not deterministic");
+    }
+}
+
+#[test]
+fn failure_in_later_round_still_propagates() {
+    let img = scene(40, 40, 6);
+    let plan = Arc::new(BlockPlan::new(40, 40, BlockShape::Square { side: 13 }));
+    // fail a block that exists (plan has 9 blocks; index 8 processed in
+    // every round including assign)
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        fail_block: Some(8),
+        ..Default::default()
+    });
+    let err = coord
+        .cluster(&img, &plan, &ClusterConfig::default())
+        .unwrap_err();
+    assert!(err.to_string().contains("injected failure"));
+}
+
+#[test]
+fn k_larger_than_block_pixels_is_handled() {
+    // a 1x1-block plan with k=4: blocks have fewer pixels than k — the
+    // global reduction still works (per-block partial sums are fine)
+    let img = scene(6, 6, 7);
+    let plan = Arc::new(BlockPlan::new(6, 6, BlockShape::Square { side: 1 }));
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        ..Default::default()
+    });
+    let out = coord
+        .cluster(
+            &img,
+            &plan,
+            &ClusterConfig {
+                k: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(out.labels.len(), 36);
+    let seq = coord
+        .serial(
+            &img,
+            &ClusterConfig {
+                k: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(out.labels, seq.labels);
+}
+
+#[test]
+fn config_file_drives_a_run() {
+    let src = "
+[workload]
+width = 64
+height = 48
+seed = 11
+
+[cluster]
+k = 4
+max_iters = 5
+
+[run]
+workers = 3
+";
+    let cfg = Config::parse(src).unwrap();
+    let img = scene(
+        cfg.get_parse::<usize>("workload.height").unwrap().unwrap(),
+        cfg.get_parse::<usize>("workload.width").unwrap().unwrap(),
+        cfg.get_parse::<u64>("workload.seed").unwrap().unwrap(),
+    );
+    let plan = Arc::new(BlockPlan::new(
+        img.height(),
+        img.width(),
+        BlockShape::paper_default(ApproachKind::Cols, img.height(), img.width()),
+    ));
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: cfg.get_or("run.workers", 1).unwrap(),
+        ..Default::default()
+    });
+    let out = coord
+        .cluster(
+            &img,
+            &plan,
+            &ClusterConfig {
+                k: cfg.get_or("cluster.k", 2).unwrap(),
+                max_iters: cfg.get_or("cluster.max_iters", 20).unwrap(),
+                seed: cfg.get_or("workload.seed", 0).unwrap(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(out.labels.len(), 48 * 64);
+    assert!(out.iterations <= 5);
+}
+
+// ---------------------------------------------------------------------------
+// PJRT engine integration (skipped when artifacts are absent)
+// ---------------------------------------------------------------------------
+
+fn pjrt_available() -> bool {
+    find_artifacts_dir().is_some()
+}
+
+#[test]
+fn pjrt_global_agrees_with_native_to_float_tolerance() {
+    if !pjrt_available() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let img = scene(96, 80, 8);
+    let plan = Arc::new(BlockPlan::new(96, 80, BlockShape::Cols { band_cols: 20 }));
+    let cfg = ClusterConfig {
+        k: 2,
+        fixed_iters: Some(4),
+        ..Default::default()
+    };
+    let native = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        ..Default::default()
+    })
+    .cluster(&img, &plan, &cfg)
+    .unwrap();
+    let pjrt = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        engine: Engine::Pjrt {
+            artifacts_dir: None,
+        },
+        ..Default::default()
+    })
+    .cluster(&img, &plan, &cfg)
+    .unwrap();
+    // identical blocks + fixed iters: labels should agree on ~all pixels
+    // (f32 vs f64 partial-sum rounding can flip boundary pixels)
+    let agree = native
+        .labels
+        .iter()
+        .zip(&pjrt.labels)
+        .filter(|(a, b)| a == b)
+        .count() as f64
+        / native.labels.len() as f64;
+    assert!(agree > 0.999, "native/pjrt agreement {agree}");
+    let rel = (native.inertia - pjrt.inertia).abs() / native.inertia;
+    assert!(rel < 1e-3, "inertia diverged: {rel}");
+}
+
+#[test]
+fn pjrt_local_mode_runs() {
+    if !pjrt_available() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let img = scene(64, 64, 9);
+    let plan = Arc::new(BlockPlan::new(64, 64, BlockShape::Square { side: 32 }));
+    let out = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        engine: Engine::Pjrt {
+            artifacts_dir: None,
+        },
+        mode: ClusterMode::Local,
+        ..Default::default()
+    })
+    .cluster(
+        &img,
+        &plan,
+        &ClusterConfig {
+            k: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(out.labels.len(), 64 * 64);
+    assert!(out.labels.iter().all(|&l| l < 2));
+}
+
+#[test]
+fn pjrt_missing_k_artifact_is_clean_error() {
+    if !pjrt_available() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let img = scene(32, 32, 10);
+    let plan = Arc::new(BlockPlan::new(32, 32, BlockShape::Square { side: 16 }));
+    // k=5 has no artifact (ks are 2/4/8)
+    let err = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        engine: Engine::Pjrt {
+            artifacts_dir: None,
+        },
+        ..Default::default()
+    })
+    .cluster(
+        &img,
+        &plan,
+        &ClusterConfig {
+            k: 5,
+            ..Default::default()
+        },
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("k=5"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn stale_artifact_detected() {
+    if !pjrt_available() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    // copy artifacts to a temp dir, tamper with one file, expect load error
+    let src = find_artifacts_dir().unwrap();
+    let dst = std::env::temp_dir().join("blockms_stale_artifacts");
+    let _ = std::fs::remove_dir_all(&dst);
+    std::fs::create_dir_all(&dst).unwrap();
+    for entry in std::fs::read_dir(&src).unwrap() {
+        let e = entry.unwrap();
+        std::fs::copy(e.path(), dst.join(e.file_name())).unwrap();
+    }
+    // tamper
+    let victim = dst.join("step_k2.hlo.txt");
+    let mut text = std::fs::read_to_string(&victim).unwrap();
+    text.push_str("\n// tampered\n");
+    std::fs::write(&victim, text).unwrap();
+    let err = blockms::runtime::ArtifactSet::load(&dst).unwrap_err();
+    assert!(format!("{err:#}").contains("stale"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dst);
+}

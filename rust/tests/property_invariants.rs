@@ -1,0 +1,282 @@
+//! Property tests over the framework's core invariants, using the
+//! in-tree `qcheck` mini-harness (proptest is not vendored offline).
+
+use std::sync::Arc;
+
+use blockms::blocks::{BlockPlan, BlockRegion, BlockShape, LabelAssembler};
+use blockms::coordinator::{
+    ClusterConfig, Coordinator, CoordinatorConfig, Schedule,
+};
+use blockms::image::SyntheticOrtho;
+use blockms::kmeans::math::{self, StepAccum};
+use blockms::metrics::Speedup;
+use blockms::simtime::{SimBlock, SimParams, WorkerSim};
+use blockms::stripstore::{read_amplification, Backing, StripStore};
+use blockms::util::json::Json;
+use blockms::util::prng::Rng;
+use blockms::util::qcheck::{forall, pair, usize_in, Gen};
+
+/// Generator for random (height, width, shape) plan inputs.
+struct PlanGen;
+
+impl Gen for PlanGen {
+    type Value = (usize, usize, BlockShape);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let h = rng.range_usize(1, 120);
+        let w = rng.range_usize(1, 120);
+        let shape = match rng.range_usize(0, 4) {
+            0 => BlockShape::Rows {
+                band_rows: rng.range_usize(1, 50),
+            },
+            1 => BlockShape::Cols {
+                band_cols: rng.range_usize(1, 50),
+            },
+            2 => BlockShape::Square {
+                side: rng.range_usize(1, 50),
+            },
+            _ => BlockShape::Custom {
+                rows: rng.range_usize(1, 50),
+                cols: rng.range_usize(1, 50),
+            },
+        };
+        (h, w, shape)
+    }
+}
+
+#[test]
+fn prop_plan_tiles_image_exactly() {
+    forall(101, 300, &PlanGen, |&(h, w, shape)| {
+        let plan = BlockPlan::new(h, w, shape);
+        // total area covers image
+        if plan.total_area() != h * w {
+            return false;
+        }
+        // pairwise disjoint
+        for (i, a) in plan.regions().iter().enumerate() {
+            for b in plan.regions().iter().skip(i + 1) {
+                if a.intersects(b) {
+                    return false;
+                }
+            }
+        }
+        // block_of is consistent
+        for row in (0..h).step_by((h / 7).max(1)) {
+            for col in (0..w).step_by((w / 7).max(1)) {
+                if !plan.region(plan.block_of(row, col)).contains(row, col) {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_partition_then_assemble_is_identity() {
+    forall(102, 200, &PlanGen, |&(h, w, shape)| {
+        let plan = BlockPlan::new(h, w, shape);
+        let mut asm = LabelAssembler::new(h, w);
+        for region in plan.iter() {
+            let mut labels = Vec::with_capacity(region.area());
+            for r in region.row0..region.row_end() {
+                for c in region.col0..region.col_end() {
+                    labels.push((r * w + c) as u32);
+                }
+            }
+            if asm.place(region, &labels).is_err() {
+                return false;
+            }
+        }
+        match asm.finish() {
+            Ok(out) => out == (0..(h * w) as u32).collect::<Vec<_>>(),
+            Err(_) => false,
+        }
+    });
+}
+
+#[test]
+fn prop_strip_reads_match_closed_form() {
+    // measured strip reads on a real store == analytic count, any shape
+    let gen = pair(PlanGen, usize_in(1, 40));
+    forall(103, 60, &gen, |((h, w, shape), strip_rows)| {
+        let img = SyntheticOrtho::default()
+            .with_seed((h * 131 + w) as u64)
+            .generate(*h, *w);
+        let plan = BlockPlan::new(*h, *w, *shape);
+        let store = StripStore::new(&img, *strip_rows, Backing::Memory).unwrap();
+        let mut rd = store.reader().unwrap();
+        let mut buf = Vec::new();
+        for region in plan.iter() {
+            rd.read_block(region, &mut buf).unwrap();
+            if buf != img.crop(region) {
+                return false; // content must match a direct crop too
+            }
+        }
+        let (expected, _, amp) = read_amplification(&plan, *strip_rows);
+        amp >= 1.0 && store.stats().snapshot().strip_reads as usize == expected
+    });
+}
+
+#[test]
+fn prop_step_accum_is_partition_invariant() {
+    // splitting a pixel buffer at arbitrary points and merging the
+    // per-part accumulators gives the whole-buffer accumulator exactly
+    forall(104, 100, &usize_in(2, 400), |&n| {
+        let mut rng = Rng::new(n as u64 * 7 + 1);
+        let px: Vec<f32> = (0..n * 3).map(|_| rng.next_f32() * 255.0).collect();
+        let k = 2 + (n % 3);
+        let cen: Vec<f32> = (0..k * 3).map(|_| rng.next_f32() * 255.0).collect();
+        let whole = math::step(&px, &cen, k, 3);
+
+        // random 3-way split (on pixel boundaries)
+        let a = rng.range_usize(0, n + 1);
+        let b = rng.range_usize(a, n + 1);
+        let mut merged = StepAccum::zeros(k, 3);
+        for part in [&px[..a * 3], &px[a * 3..b * 3], &px[b * 3..]] {
+            if !part.is_empty() {
+                merged.merge(&math::step(part, &cen, k, 3));
+            }
+        }
+        merged.counts == whole.counts
+            && merged
+                .sums
+                .iter()
+                .zip(&whole.sums)
+                .all(|(x, y)| (x - y).abs() < 1e-6)
+            && (merged.inertia - whole.inertia).abs() < 1e-3
+    });
+}
+
+#[test]
+fn prop_lloyd_inertia_monotone_under_random_data() {
+    forall(105, 40, &usize_in(8, 200), |&n| {
+        let mut rng = Rng::new(n as u64);
+        let px: Vec<f32> = (0..n * 3).map(|_| rng.next_f32() * 255.0).collect();
+        let k = 2 + (n % 4).min(2);
+        let mut cen: Vec<f32> = px[..k * 3].to_vec();
+        let mut prev = f64::INFINITY;
+        for _ in 0..6 {
+            let acc = math::step(&px, &cen, k, 3);
+            if acc.inertia > prev * (1.0 + 1e-7) + 1e-6 {
+                return false;
+            }
+            prev = acc.inertia;
+            math::update_centroids(&acc, &mut cen, 0.0);
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_simtime_bounds_and_monotonicity() {
+    forall(106, 150, &usize_in(1, 25), |&nblocks| {
+        let mut rng = Rng::new(nblocks as u64 * 13);
+        let blocks: Vec<SimBlock> = (0..nblocks)
+            .map(|_| SimBlock {
+                io_secs: rng.next_f64() * 0.1,
+                compute_secs: rng.next_f64(),
+            })
+            .collect();
+        let work: f64 = blocks.iter().map(SimBlock::total).sum();
+        let cp = blocks.iter().map(SimBlock::total).fold(0.0, f64::max);
+        let mut prev = f64::INFINITY;
+        for workers in [1usize, 2, 4, 8] {
+            let sim = WorkerSim::new(SimParams {
+                workers,
+                schedule: Schedule::Dynamic,
+                ..Default::default()
+            });
+            let r = sim.round(&blocks);
+            // bounds
+            if r.makespan > work + 1e-9 || r.makespan < cp - 1e-9 {
+                return false;
+            }
+            if r.makespan < work / workers as f64 - 1e-9 {
+                return false;
+            }
+            // monotone in workers (dynamic earliest-free, shared disk)
+            if r.makespan > prev + 1e-9 {
+                return false;
+            }
+            prev = r.makespan;
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_speedup_efficiency_algebra() {
+    forall(107, 200, &pair(usize_in(1, 1000), usize_in(1, 16)), |&(t, w)| {
+        let serial = t as f64 / 100.0 + 0.001;
+        let parallel = serial / (1.0 + (w as f64 - 1.0) * 0.7);
+        let s = Speedup::compute(serial, parallel);
+        let eff = s.efficiency(w);
+        (s.0 - serial / parallel).abs() < 1e-12 && (eff - s.0 / w as f64).abs() < 1e-12
+    });
+}
+
+#[test]
+fn prop_global_mode_equals_serial_any_plan() {
+    // the headline invariant, across random plans and worker counts
+    forall(108, 12, &PlanGen, |&(h, w, shape)| {
+        // keep sizes sane for a full clustering run
+        let (h, w) = (h.max(8), w.max(8));
+        let img = Arc::new(
+            SyntheticOrtho::default()
+                .with_seed((h + w * 7) as u64)
+                .generate(h, w),
+        );
+        let plan = Arc::new(BlockPlan::new(h, w, shape));
+        let ccfg = ClusterConfig {
+            k: 2,
+            max_iters: 6,
+            ..Default::default()
+        };
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 1 + (h % 4),
+            ..Default::default()
+        });
+        let par = coord.cluster(&img, &plan, &ccfg).unwrap();
+        let seq = coord.serial(&img, &ccfg).unwrap();
+        par.labels == seq.labels && par.centroids == seq.centroids
+    });
+}
+
+#[test]
+fn prop_json_display_parse_round_trip() {
+    struct JsonGen;
+    impl Gen for JsonGen {
+        type Value = Json;
+        fn generate(&self, rng: &mut Rng) -> Json {
+            fn val(rng: &mut Rng, depth: usize) -> Json {
+                match rng.range_usize(0, if depth > 2 { 4 } else { 6 }) {
+                    0 => Json::Null,
+                    1 => Json::Bool(rng.next_f64() < 0.5),
+                    2 => Json::Num((rng.next_f64() * 2000.0 - 1000.0).round() / 8.0),
+                    3 => Json::Str(format!("s{}", rng.next_below(1000))),
+                    4 => Json::Arr((0..rng.range_usize(0, 4)).map(|_| val(rng, depth + 1)).collect()),
+                    _ => Json::Obj(
+                        (0..rng.range_usize(0, 4))
+                            .map(|i| (format!("k{i}"), val(rng, depth + 1)))
+                            .collect(),
+                    ),
+                }
+            }
+            val(rng, 0)
+        }
+    }
+    forall(109, 300, &JsonGen, |j| {
+        Json::parse(&j.to_string()).as_ref() == Ok(j)
+    });
+}
+
+#[test]
+fn prop_block_region_contains_iff_in_bounds() {
+    forall(110, 300, &pair(usize_in(0, 30), usize_in(1, 30)), |&(o, s)| {
+        let r = BlockRegion::new(o, o + 1, s, s + 1);
+        r.contains(o, o + 1)
+            && r.contains(o + s - 1, o + s + 1)
+            && !r.contains(o + s, o + 1)
+            && !r.contains(o, o + s + 2)
+    });
+}
