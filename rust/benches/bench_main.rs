@@ -17,7 +17,8 @@
 
 use std::sync::Arc;
 
-use blockms::bench::cases::{render_cases, run_cases};
+use blockms::bench::cases::{render_cases, render_kernel_cases, run_cases, run_kernel_cases};
+use blockms::bench::kernels::{render_kernel_bench, write_kernel_bench, KernelBenchOpts};
 use blockms::bench::tables::{all_table_ids, run_table, SweepOpts};
 use blockms::blocks::{BlockPlan, BlockShape};
 use blockms::coordinator::{ClusterConfig, Coordinator, CoordinatorConfig, Engine};
@@ -103,10 +104,12 @@ fn main() {
     println!("== blockms bench suite (1-core container; see DESIGN.md §5) ==\n");
 
     micro_kernels(&b);
+    kernel_matrix(&b);
     micro_substrates(&b);
     micro_coordinator(&b);
     paper_tables(&b);
     paper_cases(&b);
+    paper_kernel_cases(&b);
 }
 
 // --------------------------------------------------------------------------
@@ -128,7 +131,22 @@ fn micro_kernels(b: &Bench) {
         std::hint::black_box(math::assign_all(&px, &cen, 4, 3, &mut labels));
     });
 
-    if let Some(dir) = find_artifacts_dir() {
+    // One-pass accum+labels vs the two passes above: the fused kernel
+    // should land near the step cost alone, not step + assign.
+    let mut fused_labels = Vec::new();
+    b.run_throughput("micro/native_fused_step_assign_131k_px_k4", 15, n, "px", || {
+        std::hint::black_box(blockms::kmeans::kernel::fused_step_assign(
+            &px,
+            &cen,
+            4,
+            3,
+            &mut fused_labels,
+        ));
+    });
+
+    if !cfg!(feature = "pjrt") {
+        println!("bench micro/pjrt_* skipped (built without the `pjrt` feature)");
+    } else if let Some(dir) = find_artifacts_dir() {
         let set = ArtifactSet::load(dir).expect("artifacts");
         let mut eng = KernelEngine::load(&set, 4).expect("engine");
         b.run_throughput("micro/pjrt_step_131k_px_k4", 10, n, "px", || {
@@ -140,6 +158,36 @@ fn micro_kernels(b: &Bench) {
         });
     } else {
         println!("bench micro/pjrt_* skipped (no artifacts; run `make artifacts`)");
+    }
+}
+
+/// Naive vs pruned vs fused step-round throughput at the acceptance
+/// configuration (1024×1024, k ∈ {2, 4}), written to
+/// `BENCH_kernels.json` so later PRs have a trajectory to regress
+/// against. `BLOCKMS_KERNEL_SIDE` overrides the image side.
+fn kernel_matrix(b: &Bench) {
+    let name = "kernels/naive_vs_pruned_vs_fused_1024";
+    if !b.enabled(name) {
+        return;
+    }
+    let side = std::env::var("BLOCKMS_KERNEL_SIDE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1024usize)
+        .clamp(64, 8192);
+    let opts = KernelBenchOpts {
+        height: side,
+        width: side,
+        ..Default::default()
+    };
+    let out = std::path::Path::new("BENCH_kernels.json");
+    match write_kernel_bench(out, &opts) {
+        Ok(rows) => {
+            println!("bench {name}:");
+            print!("{}", render_kernel_bench(&opts, &rows));
+            println!("wrote {}", out.display());
+        }
+        Err(e) => println!("bench {name} FAILED: {e:#}"),
     }
 }
 
@@ -205,7 +253,7 @@ fn micro_coordinator(b: &Bench) {
         std::hint::black_box(coord.cluster(&img, &plan, &cfg).unwrap());
     });
 
-    if find_artifacts_dir().is_some() {
+    if cfg!(feature = "pjrt") && find_artifacts_dir().is_some() {
         let coord_pjrt = Coordinator::new(CoordinatorConfig {
             workers: 2,
             engine: Engine::Pjrt {
@@ -271,5 +319,27 @@ fn paper_cases(b: &Bench) {
             print!("{}", render_cases(&results));
         }
         Err(e) => println!("bench {name} FAILED: {e:#}"),
+    }
+}
+
+/// Naive vs pruned vs fused through the real coordinator at the paper's
+/// three block shapes (Cases 1–3 geometry).
+fn paper_kernel_cases(b: &Bench) {
+    let name = "paper/kernel-cases";
+    if !b.enabled(name) {
+        return;
+    }
+    let opts = SweepOpts {
+        scale: bench_scale(),
+        ..Default::default()
+    };
+    for k in [2usize, 4] {
+        match run_kernel_cases(&opts, k, 4) {
+            Ok(results) => {
+                println!("bench {name} (k={k}):");
+                print!("{}", render_kernel_cases(&results, k));
+            }
+            Err(e) => println!("bench {name} (k={k}) FAILED: {e:#}"),
+        }
     }
 }

@@ -11,12 +11,18 @@
 //! `run_cases` reproduces the analysis: closed-form + measured strip
 //! reads, amplification, and replayed elapsed time per worker count.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
+use super::kernels::NaiveBaseline;
 use super::runner::{ExperimentConfig, Runner};
 use super::tables::{hero_shape, SweepOpts};
 use super::workloads::{Workload, HERO_SIZE};
 use crate::blocks::{ApproachKind, BlockPlan};
+use crate::coordinator::{ClusterConfig, Coordinator, CoordinatorConfig, Schedule};
+use crate::kmeans::kernel::KernelChoice;
+use crate::metrics::time_it;
 use crate::stripstore::read_amplification;
 use crate::util::fmt::{ratio, secs, Table};
 
@@ -74,6 +80,92 @@ pub fn run_cases(opts: &SweepOpts) -> Result<Vec<CaseResult>> {
     Ok(out)
 }
 
+/// One kernel-comparison cell: a paper block shape run end-to-end
+/// through the coordinator under one [`KernelChoice`].
+#[derive(Clone, Debug)]
+pub struct KernelCaseResult {
+    pub approach: ApproachKind,
+    pub kernel: KernelChoice,
+    pub block_dims: (usize, usize),
+    pub blocks: usize,
+    /// Wall seconds of the full coordinated run (fixed iterations).
+    pub wall_secs: f64,
+    /// Naive wall over this kernel's wall for the same shape.
+    pub speedup_vs_naive: f64,
+    /// Labels and centroids bit-identical to the naive run.
+    pub matches_naive: bool,
+}
+
+/// Naive-vs-pruned-vs-fused over the paper's three block shapes
+/// (Cases 1–3 geometry), real coordinator, fixed iterations, static
+/// schedule so per-block pruning state stays worker-local.
+pub fn run_kernel_cases(opts: &SweepOpts, k: usize, workers: usize) -> Result<Vec<KernelCaseResult>> {
+    let workload = Workload::new(HERO_SIZE, opts.scale, opts.seed);
+    let img = Arc::new(workload.generate());
+    let mut out = Vec::new();
+    for (_case_no, _label, approach) in CASES {
+        let shape = hero_shape(approach, opts.scale);
+        let plan = Arc::new(BlockPlan::new(workload.height, workload.width, shape));
+        let ccfg = ClusterConfig {
+            k,
+            fixed_iters: Some(opts.iters),
+            ..Default::default()
+        };
+        let mut baseline: Option<NaiveBaseline> = None;
+        for kernel in KernelChoice::ALL {
+            let coord = Coordinator::new(CoordinatorConfig {
+                workers,
+                schedule: Schedule::Static,
+                kernel,
+                ..Default::default()
+            });
+            // Warmup run to absorb allocator/cache effects, then timed.
+            let _ = coord.cluster(&img, &plan, &ccfg)?;
+            let (result, wall) = {
+                let (r, secs) = time_it(|| coord.cluster(&img, &plan, &ccfg));
+                (r?, secs)
+            };
+            let (speedup, matches_naive) = match &baseline {
+                None => (1.0, true),
+                Some(b) => b.score(wall, &result.labels, &result.centroids),
+            };
+            if kernel == KernelChoice::Naive {
+                baseline = Some(NaiveBaseline::new(wall, result.labels, result.centroids));
+            }
+            out.push(KernelCaseResult {
+                approach,
+                kernel,
+                block_dims: shape.block_dims(workload.height, workload.width),
+                blocks: plan.len(),
+                wall_secs: wall,
+                speedup_vs_naive: speedup,
+                matches_naive,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Render the kernel comparison as a table.
+pub fn render_kernel_cases(results: &[KernelCaseResult], k: usize) -> String {
+    let mut t = Table::new(format!(
+        "Kernel comparison over the paper block shapes (k={k})"
+    ))
+    .header(&["Approach", "Block", "Blocks", "Kernel", "Wall", "Speedup", "Identical"]);
+    for r in results {
+        t.row(vec![
+            r.approach.label().to_string(),
+            format!("[{} {}]", r.block_dims.0, r.block_dims.1),
+            r.blocks.to_string(),
+            r.kernel.to_string(),
+            secs(r.wall_secs),
+            format!("{:.2}x", r.speedup_vs_naive),
+            if r.matches_naive { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
 /// Render the case analysis as a paper-style table.
 pub fn render_cases(results: &[CaseResult]) -> String {
     let mut t = Table::new(format!(
@@ -129,6 +221,25 @@ mod tests {
                 3 => assert!((amp - 5.0).abs() < 0.01, "col amp {amp}"),
                 _ => unreachable!(),
             }
+        }
+    }
+
+    #[test]
+    fn kernel_cases_agree_bitwise_at_small_scale() {
+        let opts = SweepOpts {
+            scale: 0.02,
+            iters: 3,
+            ..Default::default()
+        };
+        let results = run_kernel_cases(&opts, 4, 2).unwrap();
+        assert_eq!(results.len(), 9); // 3 shapes x 3 kernels
+        for r in &results {
+            assert!(r.matches_naive, "{:?} {} diverged", r.approach, r.kernel);
+            assert!(r.wall_secs > 0.0);
+        }
+        let text = render_kernel_cases(&results, 4);
+        for name in ["naive", "pruned", "fused"] {
+            assert!(text.contains(name), "{text}");
         }
     }
 

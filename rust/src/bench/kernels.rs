@@ -1,0 +1,268 @@
+//! Kernel-layer benchmark: naive vs pruned vs fused step-round
+//! throughput, with the machine-readable `BENCH_kernels.json` trail that
+//! later PRs regress against (EXPERIMENTS.md §Kernel architecture).
+//!
+//! Each case runs a full fixed-iteration Lloyd drive (`iters` step
+//! rounds plus the final labeling pass) through [`SeqKMeans`] under one
+//! [`KernelChoice`], then reports nanoseconds per pixel per round from
+//! the best of `samples` timed repetitions. Every non-naive case is also
+//! checked for bit-identical labels and centroids against the naive run
+//! — a throughput row with `matches_naive: false` means the kernel layer
+//! is broken, not fast.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::image::SyntheticOrtho;
+use crate::kmeans::kernel::KernelChoice;
+use crate::kmeans::{KMeansConfig, SeqKMeans};
+use crate::util::fmt::Table;
+use crate::util::json::Json;
+
+/// Benchmark shape. The defaults are the acceptance configuration:
+/// 1024×1024 3-band synthetic ortho scene, `k ∈ {2, 4}`, 8 Lloyd rounds.
+#[derive(Clone, Debug)]
+pub struct KernelBenchOpts {
+    pub height: usize,
+    pub width: usize,
+    /// Cluster counts to sweep (paper: 2 and 4).
+    pub ks: Vec<usize>,
+    /// Fixed Lloyd iterations per run.
+    pub iters: usize,
+    /// Timed repetitions per case (best is reported; one extra warmup
+    /// repetition is always run first).
+    pub samples: usize,
+    pub seed: u64,
+}
+
+impl Default for KernelBenchOpts {
+    fn default() -> Self {
+        KernelBenchOpts {
+            height: 1024,
+            width: 1024,
+            ks: vec![2, 4],
+            iters: 8,
+            samples: 3,
+            seed: 0xBE_11C4,
+        }
+    }
+}
+
+/// Reference result of a sweep's naive run; scores later kernels for
+/// speedup and bit-identity. This is the single implementation of the
+/// comparison contract, shared by the kernel matrix here and the
+/// block-shape kernel cases in `bench::cases`.
+#[derive(Clone, Debug)]
+pub struct NaiveBaseline {
+    wall_secs: f64,
+    labels: Vec<u32>,
+    centroids: Vec<f32>,
+}
+
+impl NaiveBaseline {
+    pub fn new(wall_secs: f64, labels: Vec<u32>, centroids: Vec<f32>) -> NaiveBaseline {
+        NaiveBaseline {
+            wall_secs,
+            labels,
+            centroids,
+        }
+    }
+
+    /// `(speedup_vs_naive, matches_naive)` for another kernel's run of
+    /// the same work. Identity is bitwise on labels *and* centroids.
+    pub fn score(&self, wall_secs: f64, labels: &[u32], centroids: &[f32]) -> (f64, bool) {
+        (
+            self.wall_secs / wall_secs,
+            labels == &self.labels[..] && centroids == &self.centroids[..],
+        )
+    }
+}
+
+/// One benchmark cell.
+#[derive(Clone, Debug)]
+pub struct KernelBenchRow {
+    pub kernel: KernelChoice,
+    pub k: usize,
+    /// Best-sample wall time of the whole drive, seconds.
+    pub wall_secs: f64,
+    /// Nanoseconds per pixel per pass (`iters` step rounds + 1 labeling
+    /// pass).
+    pub ns_per_pixel_round: f64,
+    /// Naive ns/pixel/round divided by this row's (higher is better;
+    /// 1.0 for the naive row itself).
+    pub speedup_vs_naive: f64,
+    /// Labels and centroids bit-identical to the naive run.
+    pub matches_naive: bool,
+}
+
+/// Run the naive/pruned/fused matrix.
+pub fn run_kernel_bench(opts: &KernelBenchOpts) -> Vec<KernelBenchRow> {
+    let img = SyntheticOrtho::default()
+        .with_seed(opts.seed)
+        .generate(opts.height, opts.width);
+    let px = img.as_pixels();
+    let n_pixels = (px.len() / 3) as f64;
+    let passes = (opts.iters + 1) as f64;
+    let mut rows = Vec::new();
+    for &k in &opts.ks {
+        let cfg = KMeansConfig {
+            k,
+            ..Default::default()
+        };
+        let mut baseline: Option<NaiveBaseline> = None;
+        for kernel in KernelChoice::ALL {
+            let mut best = f64::INFINITY;
+            let mut result = None;
+            for sample in 0..opts.samples.max(1) + 1 {
+                let t0 = Instant::now();
+                let r = SeqKMeans::run_fixed_iters_with(px, 3, &cfg, opts.iters, kernel);
+                let dt = t0.elapsed().as_secs_f64();
+                if sample > 0 {
+                    best = best.min(dt); // sample 0 is warmup
+                }
+                result = Some(r);
+            }
+            let r = result.expect("at least one sample ran");
+            let (speedup_vs_naive, matches_naive) = match &baseline {
+                None => (1.0, true),
+                Some(b) => b.score(best, &r.labels, &r.centroids),
+            };
+            if kernel == KernelChoice::Naive {
+                baseline = Some(NaiveBaseline::new(best, r.labels, r.centroids));
+            }
+            rows.push(KernelBenchRow {
+                kernel,
+                k,
+                wall_secs: best,
+                ns_per_pixel_round: best * 1e9 / (n_pixels * passes),
+                speedup_vs_naive,
+                matches_naive,
+            });
+        }
+    }
+    rows
+}
+
+/// Serialize the matrix as the `BENCH_kernels.json` document.
+pub fn kernel_bench_json(opts: &KernelBenchOpts, rows: &[KernelBenchRow]) -> String {
+    let num = Json::Num;
+    let mut doc = BTreeMap::new();
+    doc.insert(
+        "image".to_string(),
+        Json::Arr(vec![num(opts.height as f64), num(opts.width as f64)]),
+    );
+    doc.insert("channels".to_string(), num(3.0));
+    doc.insert("iters".to_string(), num(opts.iters as f64));
+    doc.insert("samples".to_string(), num(opts.samples as f64));
+    doc.insert("seed".to_string(), num(opts.seed as f64));
+    let cases = rows
+        .iter()
+        .map(|r| {
+            let mut c = BTreeMap::new();
+            c.insert("kernel".to_string(), Json::Str(r.kernel.label().to_string()));
+            c.insert("k".to_string(), num(r.k as f64));
+            c.insert("wall_secs".to_string(), num(r.wall_secs));
+            c.insert("ns_per_pixel_round".to_string(), num(r.ns_per_pixel_round));
+            c.insert("speedup_vs_naive".to_string(), num(r.speedup_vs_naive));
+            c.insert("matches_naive".to_string(), Json::Bool(r.matches_naive));
+            Json::Obj(c)
+        })
+        .collect();
+    doc.insert("cases".to_string(), Json::Arr(cases));
+    Json::Obj(doc).to_string()
+}
+
+/// Run the matrix and write `BENCH_kernels.json` to `path`.
+pub fn write_kernel_bench(path: &Path, opts: &KernelBenchOpts) -> Result<Vec<KernelBenchRow>> {
+    let rows = run_kernel_bench(opts);
+    std::fs::write(path, kernel_bench_json(opts, &rows))
+        .with_context(|| format!("write kernel bench to {}", path.display()))?;
+    Ok(rows)
+}
+
+/// Human-readable rendering of the matrix.
+pub fn render_kernel_bench(opts: &KernelBenchOpts, rows: &[KernelBenchRow]) -> String {
+    let mut t = Table::new(format!(
+        "Kernel matrix: step-round throughput at {}x{}, {} iters",
+        opts.width, opts.height, opts.iters
+    ))
+    .header(&["Kernel", "K", "ns/px/round", "Speedup vs naive", "Identical"]);
+    for r in rows {
+        t.row(vec![
+            r.kernel.to_string(),
+            r.k.to_string(),
+            format!("{:.3}", r.ns_per_pixel_round),
+            format!("{:.2}x", r.speedup_vs_naive),
+            if r.matches_naive { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> KernelBenchOpts {
+        KernelBenchOpts {
+            height: 48,
+            width: 40,
+            ks: vec![2, 4],
+            iters: 3,
+            samples: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn matrix_covers_all_kernels_and_matches() {
+        let rows = run_kernel_bench(&tiny());
+        assert_eq!(rows.len(), 6); // 3 kernels x 2 ks
+        for r in &rows {
+            assert!(r.matches_naive, "{} k={} diverged from naive", r.kernel, r.k);
+            assert!(r.ns_per_pixel_round > 0.0);
+            assert!(r.speedup_vs_naive > 0.0);
+        }
+        assert_eq!(rows[0].kernel, KernelChoice::Naive);
+        assert!((rows[0].speedup_vs_naive - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_round_trips_and_has_schema() {
+        let opts = tiny();
+        let rows = run_kernel_bench(&opts);
+        let text = kernel_bench_json(&opts, &rows);
+        let doc = Json::parse(&text).expect("valid json");
+        assert_eq!(doc.get("iters").and_then(Json::as_usize), Some(3));
+        let cases = doc.get("cases").and_then(Json::as_arr).expect("cases");
+        assert_eq!(cases.len(), rows.len());
+        for c in cases {
+            assert!(c.get("kernel").and_then(Json::as_str).is_some());
+            assert!(c.get("ns_per_pixel_round").and_then(Json::as_f64).is_some());
+            assert_eq!(c.get("matches_naive").and_then(Json::as_bool), Some(true));
+        }
+    }
+
+    #[test]
+    fn write_creates_the_file() {
+        let path = std::env::temp_dir().join("blockms_test_BENCH_kernels.json");
+        let rows = write_kernel_bench(&path, &tiny()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        assert_eq!(rows.len(), 6);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn render_mentions_every_kernel() {
+        let opts = tiny();
+        let rows = run_kernel_bench(&opts);
+        let text = render_kernel_bench(&opts, &rows);
+        for name in ["naive", "pruned", "fused"] {
+            assert!(text.contains(name), "{text}");
+        }
+    }
+}

@@ -5,9 +5,11 @@
 //! `cargo bench` for the entry points.
 
 pub mod cases;
+pub mod kernels;
 pub mod runner;
 pub mod tables;
 pub mod workloads;
 
+pub use kernels::{KernelBenchOpts, KernelBenchRow};
 pub use runner::{ExperimentConfig, ExperimentRow, Runner};
 pub use workloads::{paper_sizes, PaperSize, Workload};

@@ -19,6 +19,7 @@ use crate::coordinator::{
     Schedule,
 };
 use crate::image::Raster;
+use crate::kmeans::kernel::KernelChoice;
 use crate::metrics::Speedup;
 use crate::simtime::{SimParams, WorkerSim};
 
@@ -37,6 +38,9 @@ pub struct ExperimentConfig {
     pub strip_rows: usize,
     pub schedule: Schedule,
     pub mode: ClusterMode,
+    /// Compute kernel for the measured run (naive/pruned/fused —
+    /// identical results, different per-block costs).
+    pub kernel: KernelChoice,
     /// Disk model for the replay.
     pub disk_serialized: bool,
 }
@@ -53,6 +57,7 @@ impl ExperimentConfig {
             strip_rows: 64,
             schedule: Schedule::Dynamic,
             mode: ClusterMode::Global,
+            kernel: KernelChoice::Naive,
             disk_serialized: true,
         }
     }
@@ -125,7 +130,18 @@ struct Calibration {
 /// (deliberately excludes `workers`/`disk_serialized`, which only affect
 /// the replay — a whole worker sweep shares one calibration, so speedup
 /// curves are free of run-to-run timing noise).
-type CalKey = (u64, usize, usize, String, usize, usize, usize, EngineChoice, ClusterMode);
+type CalKey = (
+    u64,
+    usize,
+    usize,
+    String,
+    usize,
+    usize,
+    usize,
+    EngineChoice,
+    ClusterMode,
+    KernelChoice,
+);
 
 fn cal_key(cfg: &ExperimentConfig) -> CalKey {
     (
@@ -138,6 +154,7 @@ fn cal_key(cfg: &ExperimentConfig) -> CalKey {
         cfg.strip_rows,
         cfg.engine,
         cfg.mode,
+        cfg.kernel,
     )
 }
 
@@ -184,6 +201,7 @@ impl Runner {
                 file_backed: false,
             },
             schedule: cfg.schedule,
+            kernel: cfg.kernel,
             fail_block: None,
         });
         let ccfg = ClusterConfig {

@@ -16,6 +16,7 @@ use super::messages::{Job, JobPayload, JobResult};
 use super::pool::WorkerPool;
 use super::{BlockCost, RoundKind, RoundRecord};
 use crate::blocks::{BlockPlan, LabelAssembler};
+use crate::kmeans::kernel::{drift_between, CentroidDrift};
 use crate::kmeans::math::{self, StepAccum};
 use crate::kmeans::KMeansConfig;
 use crate::metrics::time_it;
@@ -29,6 +30,10 @@ pub struct GlobalIterateResult {
     /// (monotone non-increasing — a tested Lloyd invariant).
     pub inertia_trace: Vec<f64>,
     pub rounds: Vec<RoundRecord>,
+    /// Movement of the final centroid update (`None` if no round ran).
+    /// The fused assign round uses it to advance per-block bounds from
+    /// the last step round's centroids to the final ones.
+    pub drift: Option<Arc<CentroidDrift>>,
 }
 
 /// Run Lloyd iterations through the pool until convergence/`max_iters`
@@ -47,6 +52,10 @@ pub fn iterate(
     let mut inertia_trace = Vec::new();
     let max = fixed_iters.unwrap_or(cfg.max_iters);
     let tol = if fixed_iters.is_some() { 0.0 } else { cfg.tol };
+    // Per-centroid movement of the update that produced the *current*
+    // centroids; shipped with each round so pruned workers can advance
+    // their block-local bounds. `None` on round 0 (no previous update).
+    let mut drift: Option<Arc<CentroidDrift>> = None;
     for iter in 0..max {
         iterations += 1;
         let cen = Arc::new(centroids.clone());
@@ -56,6 +65,7 @@ pub fn iterate(
                 round: iter as u64,
                 payload: JobPayload::Step {
                     centroids: Arc::clone(&cen),
+                    drift: drift.clone(),
                 },
             })
             .collect();
@@ -78,7 +88,9 @@ pub fn iterate(
             costs,
         });
         inertia_trace.push(merged.inertia);
+        let prev = centroids.clone();
         let moved = math::update_centroids(&merged, &mut centroids, tol);
+        drift = Some(Arc::new(drift_between(&prev, &centroids, cfg.k, channels)));
         if fixed_iters.is_none() && !moved {
             converged = true;
             break;
@@ -90,23 +102,31 @@ pub fn iterate(
         converged,
         inertia_trace,
         rounds,
+        drift,
     })
 }
 
 /// Final assignment round: label every block at `centroids`, assemble
-/// the full map. Returns `(labels, inertia, round_record)`.
+/// the full map. `round` must be the number of completed step rounds
+/// (so workers can tell their bounds continue exactly into this round)
+/// and `drift` the movement of the final centroid update; fused-kernel
+/// workers then label from their bounds instead of a full scan.
+/// Returns `(labels, inertia, round_record)`.
 pub fn assign(
     pool: &WorkerPool,
     plan: &BlockPlan,
     centroids: &[f32],
+    round: u64,
+    drift: Option<Arc<CentroidDrift>>,
 ) -> Result<(Vec<u32>, f64, RoundRecord)> {
     let cen = Arc::new(centroids.to_vec());
     let jobs: Vec<Job> = (0..plan.len())
         .map(|b| Job {
             block: b,
-            round: u64::MAX,
+            round,
             payload: JobPayload::Assign {
                 centroids: Arc::clone(&cen),
+                drift: drift.clone(),
             },
         })
         .collect();

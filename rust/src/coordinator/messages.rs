@@ -2,6 +2,7 @@
 
 use std::sync::Arc;
 
+use crate::kmeans::kernel::CentroidDrift;
 use crate::kmeans::math::StepAccum;
 
 /// A unit of work: one block, one operation.
@@ -18,10 +19,21 @@ pub struct Job {
 /// allocation per round regardless of worker/block count.
 #[derive(Clone, Debug)]
 pub enum JobPayload {
-    /// One Lloyd accumulation pass at the given centroids.
-    Step { centroids: Arc<Vec<f32>> },
-    /// Final assignment at the given centroids.
-    Assign { centroids: Arc<Vec<f32>> },
+    /// One Lloyd accumulation pass at the given centroids. `drift` is
+    /// the per-centroid movement of the update that *produced* these
+    /// centroids (`None` on the first round); workers running a pruned
+    /// kernel use it to advance their per-block Hamerly bounds.
+    Step {
+        centroids: Arc<Vec<f32>>,
+        drift: Option<Arc<CentroidDrift>>,
+    },
+    /// Final assignment at the given centroids. With the fused kernel
+    /// and a valid per-block pruning state, workers reuse the last
+    /// round's bounds instead of a from-scratch scan.
+    Assign {
+        centroids: Arc<Vec<f32>>,
+        drift: Option<Arc<CentroidDrift>>,
+    },
     /// Independent per-block K-Means from the given init.
     Local { init: Arc<Vec<f32>> },
     /// Readiness barrier: reply immediately (no block read, no compute).
@@ -91,11 +103,12 @@ mod tests {
             round: 1,
             payload: JobPayload::Step {
                 centroids: Arc::clone(&cen),
+                drift: None,
             },
         };
         let j2 = job.clone();
         match (&job.payload, &j2.payload) {
-            (JobPayload::Step { centroids: a }, JobPayload::Step { centroids: b }) => {
+            (JobPayload::Step { centroids: a, .. }, JobPayload::Step { centroids: b, .. }) => {
                 assert!(Arc::ptr_eq(a, b), "clone must share the centroid buffer");
             }
             _ => unreachable!(),

@@ -33,6 +33,7 @@ use anyhow::{Context, Result};
 
 use crate::blocks::BlockPlan;
 use crate::image::Raster;
+use crate::kmeans::kernel::KernelChoice;
 use crate::kmeans::{InitMethod, KMeansConfig, SeqKMeans};
 use crate::runtime::BackendSpec;
 use crate::stripstore::{Backing, StripStore};
@@ -130,6 +131,11 @@ pub struct CoordinatorConfig {
     pub mode: ClusterMode,
     pub io: IoMode,
     pub schedule: Schedule,
+    /// Compute kernel for step/assign rounds (naive, pruned, fused —
+    /// bit-identical results, different wall-clock; see
+    /// [`crate::kmeans::kernel`]). Pruned state lives per block on the
+    /// workers, so [`Schedule::Static`] keeps it warmest.
+    pub kernel: KernelChoice,
     /// Fault injection for tests: block index whose processing fails.
     pub fail_block: Option<usize>,
 }
@@ -142,6 +148,7 @@ impl Default for CoordinatorConfig {
             mode: ClusterMode::Global,
             io: IoMode::Direct,
             schedule: Schedule::Dynamic,
+            kernel: KernelChoice::Naive,
             fail_block: None,
         }
     }
@@ -297,6 +304,7 @@ impl Coordinator {
             backend: self.backend_spec(img, ccfg)?,
             fail_block: self.cfg.fail_block,
             local_mode: self.cfg.mode == ClusterMode::Local,
+            kernel: self.cfg.kernel,
         };
         let pool = WorkerPool::spawn(self.cfg.workers, ctx, self.cfg.schedule);
         let spawn_secs = pool.warmup()?;
@@ -314,8 +322,13 @@ impl Coordinator {
                         init_centroids,
                     )?;
                     rounds.extend(it.rounds);
-                    let (labels, inertia, assign_round) =
-                        global::assign(&pool, plan, &it.centroids)?;
+                    let (labels, inertia, assign_round) = global::assign(
+                        &pool,
+                        plan,
+                        &it.centroids,
+                        it.iterations as u64,
+                        it.drift.clone(),
+                    )?;
                     rounds.push(assign_round);
                     (
                         labels,
@@ -360,8 +373,19 @@ impl Coordinator {
             Engine::Native => {
                 let t0 = std::time::Instant::now();
                 let r = match ccfg.fixed_iters {
-                    Some(n) => SeqKMeans::run_fixed_iters(img.as_pixels(), img.channels(), &ccfg.kmeans(), n),
-                    None => SeqKMeans::run(img.as_pixels(), img.channels(), &ccfg.kmeans()),
+                    Some(n) => SeqKMeans::run_fixed_iters_with(
+                        img.as_pixels(),
+                        img.channels(),
+                        &ccfg.kmeans(),
+                        n,
+                        self.cfg.kernel,
+                    ),
+                    None => SeqKMeans::run_with(
+                        img.as_pixels(),
+                        img.channels(),
+                        &ccfg.kmeans(),
+                        self.cfg.kernel,
+                    ),
                 };
                 Ok(ClusterOutput {
                     labels: r.labels,
@@ -477,6 +501,43 @@ mod tests {
                 assert_eq!(f.centroids, out.centroids);
             } else {
                 first = Some(out);
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_and_fused_kernels_match_naive_globally() {
+        let (img, plan) = setup(52, 44, 15);
+        for schedule in [Schedule::Static, Schedule::Dynamic] {
+            for k in [2usize, 4] {
+                let ccfg = ClusterConfig {
+                    k,
+                    ..Default::default()
+                };
+                let naive = Coordinator::new(CoordinatorConfig {
+                    workers: 3,
+                    schedule,
+                    ..Default::default()
+                })
+                .cluster(&img, &plan, &ccfg)
+                .unwrap();
+                for kernel in [KernelChoice::Pruned, KernelChoice::Fused] {
+                    let coord = Coordinator::new(CoordinatorConfig {
+                        workers: 3,
+                        schedule,
+                        kernel,
+                        ..Default::default()
+                    });
+                    let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+                    assert_eq!(out.labels, naive.labels, "k={k} {kernel} {schedule:?}");
+                    assert_eq!(out.centroids, naive.centroids, "k={k} {kernel} {schedule:?}");
+                    assert_eq!(out.iterations, naive.iterations);
+                    assert_eq!(out.inertia_trace, naive.inertia_trace);
+                    // and the serial mirror under the same kernel agrees too
+                    let seq = coord.serial(&img, &ccfg).unwrap();
+                    assert_eq!(out.labels, seq.labels);
+                    assert_eq!(out.centroids, seq.centroids);
+                }
             }
         }
     }

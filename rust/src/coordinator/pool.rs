@@ -148,6 +148,7 @@ mod tests {
             },
             fail_block,
             local_mode: false,
+            kernel: crate::kmeans::kernel::KernelChoice::Naive,
         };
         (ctx, img)
     }
@@ -159,6 +160,7 @@ mod tests {
                 round: 1,
                 payload: JobPayload::Step {
                     centroids: Arc::clone(centroids),
+                    drift: None,
                 },
             })
             .collect()

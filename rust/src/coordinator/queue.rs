@@ -140,6 +140,7 @@ mod tests {
             round: 0,
             payload: JobPayload::Step {
                 centroids: Arc::new(vec![0.0; 6]),
+                drift: None,
             },
         }
     }

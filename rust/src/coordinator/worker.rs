@@ -1,5 +1,6 @@
 //! Worker thread: pulls jobs, reads its block, runs the backend.
 
+use std::collections::HashMap;
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Instant;
@@ -10,6 +11,7 @@ use super::messages::{BlockTiming, Job, JobOutcome, JobPayload, JobResult};
 use super::queue::JobQueue;
 use crate::blocks::BlockPlan;
 use crate::image::Raster;
+use crate::kmeans::kernel::{CentroidDrift, KernelChoice, PrunedState};
 use crate::runtime::BackendSpec;
 use crate::stripstore::{StripReader, StripStore};
 
@@ -33,6 +35,47 @@ pub struct WorkerContext {
     pub fail_block: Option<usize>,
     /// Hint for backend warmup: will this run use per-block local mode?
     pub local_mode: bool,
+    /// Which compute kernel step/assign jobs run (see
+    /// [`crate::kmeans::kernel`]). Pruned/fused kernels keep per-block
+    /// Hamerly bounds across rounds; results are bit-identical to naive.
+    pub kernel: KernelChoice,
+}
+
+/// Per-block pruning state a worker carries across rounds. `last_round`
+/// records the round whose centroids the bounds describe; a job whose
+/// drift does not continue exactly from that round re-seeds the bounds
+/// with a full scan (dynamic scheduling can migrate blocks between
+/// workers, which must never change results).
+#[derive(Default)]
+struct BlockPrune {
+    state: PrunedState,
+    last_round: Option<u64>,
+}
+
+/// Drop pruning state that cannot continue into `round` (its block
+/// migrated to another worker or skipped a round — it would re-seed
+/// anyway). Bounds the map at roughly this worker's share of the plan:
+/// under a static schedule every owned block sits at `round` or
+/// `round - 1` and is kept; under a dynamic schedule a migrated-away
+/// block's orphaned state (20 bytes/pixel) is reclaimed within a round
+/// instead of accumulating for the life of the pool.
+fn evict_stale(prune: &mut HashMap<usize, BlockPrune>, round: u64) {
+    prune.retain(|_, e| e.last_round.is_some_and(|r| r.saturating_add(1) >= round));
+}
+
+impl BlockPrune {
+    /// The shipped drift is usable iff it advances this state by exactly
+    /// one round.
+    fn usable_drift<'d>(
+        &self,
+        drift: &'d Option<Arc<CentroidDrift>>,
+        round: u64,
+    ) -> Option<&'d CentroidDrift> {
+        match (drift, self.last_round) {
+            (Some(d), Some(r)) if r.checked_add(1) == Some(round) => Some(d.as_ref()),
+            _ => None,
+        }
+    }
 }
 
 /// Per-worker block reader (owns file handles / scratch).
@@ -83,8 +126,17 @@ pub fn worker_main(
     };
 
     let mut px_buf: Vec<f32> = Vec::new();
+    let mut prune: HashMap<usize, BlockPrune> = HashMap::new();
     while let Some(job) = queue.pop(worker_id) {
-        let outcome = run_job(worker_id, &ctx, &mut reader, backend.as_mut(), &job, &mut px_buf);
+        let outcome = run_job(
+            worker_id,
+            &ctx,
+            &mut reader,
+            backend.as_mut(),
+            &job,
+            &mut px_buf,
+            &mut prune,
+        );
         // If the leader hung up, exit quietly.
         if results.send(outcome).is_err() {
             return;
@@ -99,6 +151,7 @@ fn run_job(
     backend: &mut dyn crate::runtime::ComputeBackend,
     job: &Job,
     px_buf: &mut Vec<f32>,
+    prune: &mut HashMap<usize, BlockPrune>,
 ) -> Result<JobOutcome> {
     if let JobPayload::Ping = job.payload {
         backend
@@ -127,12 +180,36 @@ fn run_job(
 
     let t_c = Instant::now();
     let result = match &job.payload {
-        JobPayload::Step { centroids } => JobResult::Step {
-            accum: backend.step_block(px_buf, centroids)?,
-        },
-        JobPayload::Assign { centroids } => {
+        JobPayload::Step { centroids, drift } => {
+            let accum = if ctx.kernel == KernelChoice::Naive {
+                backend.step_block(px_buf, centroids)?
+            } else {
+                evict_stale(prune, job.round);
+                let entry = prune.entry(job.block).or_default();
+                let usable = entry.usable_drift(drift, job.round);
+                if usable.is_none() {
+                    entry.state.clear(); // stale bounds: re-seed this round
+                }
+                let accum =
+                    backend.step_block_pruned(px_buf, centroids, &mut entry.state, usable)?;
+                entry.last_round = Some(job.round);
+                accum
+            };
+            JobResult::Step { accum }
+        }
+        JobPayload::Assign { centroids, drift } => {
             let mut labels = Vec::new();
-            let inertia = backend.assign_block(px_buf, centroids, &mut labels)?;
+            let inertia = if ctx.kernel == KernelChoice::Fused {
+                evict_stale(prune, job.round);
+                let entry = prune.entry(job.block).or_default();
+                let usable = entry.usable_drift(drift, job.round);
+                if usable.is_none() {
+                    entry.state.clear();
+                }
+                backend.assign_block_pruned(px_buf, centroids, &mut entry.state, usable, &mut labels)?
+            } else {
+                backend.assign_block(px_buf, centroids, &mut labels)?
+            };
             JobResult::Assign { labels, inertia }
         }
         JobPayload::Ping => unreachable!("handled above"),

@@ -1,0 +1,937 @@
+//! The dispatching compute-kernel layer for the K-Means hot path.
+//!
+//! Every distance evaluation in the repo funnels through here (see
+//! EXPERIMENTS.md §Kernel architecture). Three ideas, composable:
+//!
+//! 1. **Width specialization** — monomorphic kernels for `C ∈ {1, 3, 4}`
+//!    (the 3-band case is every paper image) plus a chunked generic
+//!    fallback. Centroids are copied once per call into fixed stack
+//!    arrays ([`MAX_STACK_K`] entries; larger `k` spills to the heap),
+//!    pixels are viewed as `&[f32; C]`, and the main loops run four
+//!    pixels per step — no slice bounds checks on the hot path, four
+//!    independent dependency chains for LLVM to keep in registers and
+//!    auto-vectorize.
+//! 2. **Hamerly-style pruning** — [`PrunedState`] carries per-pixel
+//!    upper/lower distance bounds across Lloyd rounds. After each
+//!    centroid update the leader measures how far every centre moved
+//!    ([`drift_between`]); a pixel whose (drift-adjusted) upper bound to
+//!    its own centre stays strictly below its lower bound to every other
+//!    centre provably keeps its label, so the K-way scan collapses to a
+//!    single distance evaluation. Labels, counts, sums, and inertia are
+//!    **bit-identical** to the naive scan (see the invariant note below).
+//! 3. **Fusion** — [`fused_step_assign`] produces the accumulator and
+//!    the label map in one pass, and [`assign_pruned`] turns the final
+//!    labeling round into a bounds-reuse pass over the last iteration's
+//!    distances instead of a from-scratch K-way scan per pixel.
+//!
+//! ## The pruning invariant
+//!
+//! For a pixel `x` assigned to centre `a`, the state keeps `u ≥ d(x, a)`
+//! and `l ≤ min_{j≠a} d(x, j)` (euclidean, f64). After centres move by
+//! `δ_j`, the triangle inequality gives `u' = u + δ_a` and
+//! `l' = l − max_j δ_j`. If `u' < l'` (with a guard band,
+//! [`provably_closer`]) the old label is still the unique argmin, so the
+//! kernel evaluates only `d(x, a)` — exactly the value the naive scan
+//! would have accumulated — and skips the other `k − 1` centres. On a
+//! failed test the pixel is rescanned in the same centroid order with
+//! the same strict-`<` tie-breaking as [`super::math::nearest`], so the
+//! result (label *and* f32 distance) is the one the naive kernel
+//! produces, bit for bit. The guard band absorbs the gap between real
+//! arithmetic (where the triangle inequality lives) and the f32 distance
+//! evaluation (where labels are decided); it dominates the worst-case
+//! f32 rounding of a squared distance up to [`PRUNE_MAX_CHANNELS`]
+//! channels (~9× margin at the bound), and wider pixels are routed to
+//! the naive scan so the invariant is enforced rather than assumed.
+
+use super::math::StepAccum;
+
+/// Centroid tables up to this `k` live in a fixed stack array inside the
+/// specialized kernels; larger tables spill to one heap allocation.
+pub const MAX_STACK_K: usize = 16;
+
+/// Relative guard band for the pruning test (see module docs).
+const REL_SLACK: f64 = 1e-5;
+
+/// Widest pixel the pruning paths accept. The guard band must dominate
+/// the f32 rounding of a `C`-term squared distance (relative error
+/// ≈ `(C + 2) · 2⁻²⁴`); at `C = 16` the band is still ~9× that
+/// worst case. Wider pixels take the naive scan — enforced, not
+/// assumed, so the bit-identity guarantee cannot silently erode.
+pub const PRUNE_MAX_CHANNELS: usize = 16;
+
+/// Which kernel path the K-Means driver uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Full K-way scan every round (the reference path).
+    #[default]
+    Naive,
+    /// Hamerly-pruned step rounds; final labeling is a full scan.
+    Pruned,
+    /// Pruned step rounds plus a bounds-reuse final labeling round.
+    Fused,
+}
+
+impl KernelChoice {
+    pub const ALL: [KernelChoice; 3] =
+        [KernelChoice::Naive, KernelChoice::Pruned, KernelChoice::Fused];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelChoice::Naive => "naive",
+            KernelChoice::Pruned => "pruned",
+            KernelChoice::Fused => "fused",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl std::str::FromStr for KernelChoice {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" => Ok(KernelChoice::Naive),
+            "pruned" => Ok(KernelChoice::Pruned),
+            "fused" => Ok(KernelChoice::Fused),
+            other => Err(format!("unknown kernel {other:?} (want naive|pruned|fused)")),
+        }
+    }
+}
+
+/// How far every centroid moved in one update, plus the maximum. The
+/// leader computes this once per round and ships it to the workers; the
+/// pruned kernels use it to advance per-pixel bounds. Distances are kept
+/// in f64 and inflated by one part in 10¹² so f64 rounding can never
+/// understate a movement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CentroidDrift {
+    /// Euclidean movement per centroid, `k` entries.
+    pub per_centroid: Vec<f64>,
+    /// `max(per_centroid)` (0.0 when `k == 0`).
+    pub max: f64,
+}
+
+/// Measure per-centroid movement between two centroid tables.
+pub fn drift_between(old: &[f32], new: &[f32], k: usize, channels: usize) -> CentroidDrift {
+    assert_eq!(old.len(), k * channels, "old centroid table length");
+    assert_eq!(new.len(), k * channels, "new centroid table length");
+    let mut per_centroid = Vec::with_capacity(k);
+    let mut max = 0.0f64;
+    for ki in 0..k {
+        let base = ki * channels;
+        let mut s = 0.0f64;
+        for c in 0..channels {
+            let d = new[base + c] as f64 - old[base + c] as f64;
+            s += d * d;
+        }
+        let d = s.sqrt() * (1.0 + 1e-12);
+        per_centroid.push(d);
+        if d > max {
+            max = d;
+        }
+    }
+    CentroidDrift { per_centroid, max }
+}
+
+/// Per-pixel pruning state carried across Lloyd rounds (one per block in
+/// the coordinator, one per image in the sequential driver).
+#[derive(Clone, Debug, Default)]
+pub struct PrunedState {
+    labels: Vec<u32>,
+    /// Upper bound on the distance to the assigned centre (f64 euclidean).
+    upper: Vec<f64>,
+    /// Lower bound on the distance to every *other* centre.
+    lower: Vec<f64>,
+    k: usize,
+    ready: bool,
+}
+
+impl PrunedState {
+    pub fn new() -> PrunedState {
+        PrunedState::default()
+    }
+
+    /// Whether the state holds bounds at all (cleared states never prune).
+    pub fn ready(&self) -> bool {
+        self.ready
+    }
+
+    /// Whether the bounds apply to this pixel count and cluster count.
+    pub fn is_valid_for(&self, n_pixels: usize, k: usize) -> bool {
+        self.ready && self.k == k && self.labels.len() == n_pixels
+    }
+
+    /// Drop the bounds; the next pruned step does a full initializing scan.
+    pub fn clear(&mut self) {
+        self.ready = false;
+    }
+
+    /// Labels at the centroids of the last completed pass.
+    pub fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    fn reset(&mut self, n_pixels: usize, k: usize) {
+        self.labels.clear();
+        self.labels.resize(n_pixels, 0);
+        self.upper.clear();
+        self.upper.resize(n_pixels, 0.0);
+        self.lower.clear();
+        self.lower.resize(n_pixels, 0.0);
+        self.k = k;
+        self.ready = true;
+    }
+}
+
+/// The pruning test: is the (bounded) own-centre distance `u` provably
+/// below the (bounded) other-centre distance `l`, with enough slack that
+/// f32 rounding of the underlying distances cannot flip the argmin?
+#[inline]
+fn provably_closer(u: f64, l: f64) -> bool {
+    u * (1.0 + REL_SLACK) + 1e-12 < l
+}
+
+// ---------------------------------------------------------------------------
+// Centroid tables: width-specialized and generic views.
+// ---------------------------------------------------------------------------
+
+/// What the algorithm cores need from a centroid table. Implemented by a
+/// width-specialized view (`C` const, pixels as `&[f32; C]`, bounds
+/// checks gone after monomorphization) and a generic slice view. All
+/// implementations scan centroids in index order with strict-`<`
+/// minima — the tie-breaking contract of [`super::math::nearest`].
+trait CenTable {
+    fn k(&self) -> usize;
+    fn channels(&self) -> usize;
+    /// Squared f32 distance to one centroid (same accumulation order as
+    /// [`super::math::sqdist`], so values match bit for bit).
+    fn dist2(&self, px: &[f32], ci: usize) -> f32;
+    /// Nearest centroid (lowest index wins ties) and its squared distance.
+    fn nearest(&self, px: &[f32]) -> (u32, f32);
+    /// Nearest centroid plus the runner-up squared distance
+    /// (`f32::INFINITY` when `k == 1`).
+    fn nearest2(&self, px: &[f32]) -> (u32, f32, f32);
+}
+
+/// Width-specialized table over `[f32; C]` centroid rows.
+struct SpecTable<'a, const C: usize> {
+    cen: &'a [[f32; C]],
+}
+
+impl<const C: usize> CenTable for SpecTable<'_, C> {
+    #[inline]
+    fn k(&self) -> usize {
+        self.cen.len()
+    }
+
+    #[inline]
+    fn channels(&self) -> usize {
+        C
+    }
+
+    #[inline]
+    fn dist2(&self, px: &[f32], ci: usize) -> f32 {
+        let px: &[f32; C] = px.try_into().expect("pixel width != C");
+        let c = &self.cen[ci];
+        let mut acc = 0.0f32;
+        for ch in 0..C {
+            let d = px[ch] - c[ch];
+            acc += d * d;
+        }
+        acc
+    }
+
+    #[inline]
+    fn nearest(&self, px: &[f32]) -> (u32, f32) {
+        let px: &[f32; C] = px.try_into().expect("pixel width != C");
+        let mut best = 0u32;
+        let mut best_d = f32::INFINITY;
+        for (i, c) in self.cen.iter().enumerate() {
+            let mut d = 0.0f32;
+            for ch in 0..C {
+                let t = px[ch] - c[ch];
+                d += t * t;
+            }
+            if d < best_d {
+                best_d = d;
+                best = i as u32;
+            }
+        }
+        (best, best_d)
+    }
+
+    #[inline]
+    fn nearest2(&self, px: &[f32]) -> (u32, f32, f32) {
+        let px: &[f32; C] = px.try_into().expect("pixel width != C");
+        let mut best = 0u32;
+        let mut best_d = f32::INFINITY;
+        let mut second_d = f32::INFINITY;
+        for (i, c) in self.cen.iter().enumerate() {
+            let mut d = 0.0f32;
+            for ch in 0..C {
+                let t = px[ch] - c[ch];
+                d += t * t;
+            }
+            if d < best_d {
+                second_d = best_d;
+                best_d = d;
+                best = i as u32;
+            } else if d < second_d {
+                second_d = d;
+            }
+        }
+        (best, best_d, second_d)
+    }
+}
+
+/// Owned, stack-first storage backing a [`SpecTable`].
+struct SpecBuf<const C: usize> {
+    stack: [[f32; C]; MAX_STACK_K],
+    heap: Vec<[f32; C]>,
+    k: usize,
+}
+
+impl<const C: usize> SpecBuf<C> {
+    #[inline]
+    fn new(centroids: &[f32], k: usize) -> SpecBuf<C> {
+        debug_assert_eq!(
+            centroids.len(),
+            k * C,
+            "centroid table length {} does not match k={k} x channels={C}",
+            centroids.len()
+        );
+        let mut buf = SpecBuf {
+            stack: [[0.0; C]; MAX_STACK_K],
+            heap: Vec::new(),
+            k,
+        };
+        if k <= MAX_STACK_K {
+            for (dst, src) in buf.stack.iter_mut().zip(centroids.chunks_exact(C)) {
+                dst.copy_from_slice(src);
+            }
+        } else {
+            buf.heap = centroids
+                .chunks_exact(C)
+                .map(|src| {
+                    let mut a = [0.0f32; C];
+                    a.copy_from_slice(src);
+                    a
+                })
+                .collect();
+        }
+        buf
+    }
+
+    #[inline]
+    fn table(&self) -> SpecTable<'_, C> {
+        SpecTable {
+            cen: if self.k <= MAX_STACK_K {
+                &self.stack[..self.k]
+            } else {
+                &self.heap
+            },
+        }
+    }
+}
+
+/// Generic fallback over a flat centroid slice (any channel count).
+struct DynTable<'a> {
+    cen: &'a [f32],
+    channels: usize,
+}
+
+impl CenTable for DynTable<'_> {
+    #[inline]
+    fn k(&self) -> usize {
+        self.cen.len() / self.channels
+    }
+
+    #[inline]
+    fn channels(&self) -> usize {
+        self.channels
+    }
+
+    #[inline]
+    fn dist2(&self, px: &[f32], ci: usize) -> f32 {
+        let base = ci * self.channels;
+        let c = &self.cen[base..base + self.channels];
+        let mut acc = 0.0f32;
+        for (a, b) in px.iter().zip(c) {
+            let d = a - b;
+            acc += d * d;
+        }
+        acc
+    }
+
+    #[inline]
+    fn nearest(&self, px: &[f32]) -> (u32, f32) {
+        let mut best = 0u32;
+        let mut best_d = f32::INFINITY;
+        for (i, c) in self.cen.chunks_exact(self.channels).enumerate() {
+            let mut d = 0.0f32;
+            for (a, b) in px.iter().zip(c) {
+                let t = a - b;
+                d += t * t;
+            }
+            if d < best_d {
+                best_d = d;
+                best = i as u32;
+            }
+        }
+        (best, best_d)
+    }
+
+    #[inline]
+    fn nearest2(&self, px: &[f32]) -> (u32, f32, f32) {
+        let mut best = 0u32;
+        let mut best_d = f32::INFINITY;
+        let mut second_d = f32::INFINITY;
+        for (i, c) in self.cen.chunks_exact(self.channels).enumerate() {
+            let mut d = 0.0f32;
+            for (a, b) in px.iter().zip(c) {
+                let t = a - b;
+                d += t * t;
+            }
+            if d < best_d {
+                second_d = best_d;
+                best_d = d;
+                best = i as u32;
+            } else if d < second_d {
+                second_d = d;
+            }
+        }
+        (best, best_d, second_d)
+    }
+}
+
+/// Dispatch a kernel body over the width-specialized tables (C = 1/3/4)
+/// or the generic fallback. The body is expanded once per arm, so every
+/// specialized instantiation is fully monomorphic.
+macro_rules! with_table {
+    ($cen:expr, $k:expr, $ch:expr, |$t:ident| $body:expr) => {{
+        match $ch {
+            1 => {
+                let buf = SpecBuf::<1>::new($cen, $k);
+                let $t = buf.table();
+                $body
+            }
+            3 => {
+                let buf = SpecBuf::<3>::new($cen, $k);
+                let $t = buf.table();
+                $body
+            }
+            4 => {
+                let buf = SpecBuf::<4>::new($cen, $k);
+                let $t = buf.table();
+                $body
+            }
+            ch => {
+                let $t = DynTable {
+                    cen: $cen,
+                    channels: ch,
+                };
+                $body
+            }
+        }
+    }};
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm cores (generic over the table; monomorphized per width).
+// ---------------------------------------------------------------------------
+
+/// Fold one labeled pixel into the accumulator — same value stream and
+/// order as the reference loop in `math`, so sums/counts/inertia match
+/// bit for bit.
+#[inline]
+fn accumulate_px(acc: &mut StepAccum, px: &[f32], label: u32, d2: f32) {
+    let base = label as usize * px.len();
+    for (c, &v) in px.iter().enumerate() {
+        acc.sums[base + c] += v as f64;
+    }
+    acc.counts[label as usize] += 1;
+    acc.inertia += d2 as f64;
+}
+
+fn step_core<T: CenTable>(pixels: &[f32], t: &T) -> StepAccum {
+    let ch = t.channels();
+    let mut acc = StepAccum::zeros(t.k(), ch);
+    // Four-pixel software pipeline: labels/distances for four independent
+    // pixels first (four dependency chains), accumulation after, in pixel
+    // order — identical accumulation sequence to the one-at-a-time loop.
+    let mut quads = pixels.chunks_exact(4 * ch);
+    for quad in quads.by_ref() {
+        let mut labs = [0u32; 4];
+        let mut ds = [0f32; 4];
+        for (j, px) in quad.chunks_exact(ch).enumerate() {
+            let (l, d) = t.nearest(px);
+            labs[j] = l;
+            ds[j] = d;
+        }
+        for (j, px) in quad.chunks_exact(ch).enumerate() {
+            accumulate_px(&mut acc, px, labs[j], ds[j]);
+        }
+    }
+    for px in quads.remainder().chunks_exact(ch) {
+        let (l, d) = t.nearest(px);
+        accumulate_px(&mut acc, px, l, d);
+    }
+    acc
+}
+
+fn assign_core<T: CenTable>(pixels: &[f32], t: &T, labels: &mut Vec<u32>) -> f64 {
+    let ch = t.channels();
+    let mut inertia = 0.0f64;
+    let mut quads = pixels.chunks_exact(4 * ch);
+    for quad in quads.by_ref() {
+        let mut labs = [0u32; 4];
+        let mut ds = [0f32; 4];
+        for (j, px) in quad.chunks_exact(ch).enumerate() {
+            let (l, d) = t.nearest(px);
+            labs[j] = l;
+            ds[j] = d;
+        }
+        for j in 0..4 {
+            labels.push(labs[j]);
+            inertia += ds[j] as f64;
+        }
+    }
+    for px in quads.remainder().chunks_exact(ch) {
+        let (l, d) = t.nearest(px);
+        labels.push(l);
+        inertia += d as f64;
+    }
+    inertia
+}
+
+fn fused_core<T: CenTable>(pixels: &[f32], t: &T, labels: &mut Vec<u32>) -> StepAccum {
+    let ch = t.channels();
+    let mut acc = StepAccum::zeros(t.k(), ch);
+    // Same 4-pixel pipeline as step_core/assign_core so the fused bench
+    // row measures fusion, not a missing optimization.
+    let mut quads = pixels.chunks_exact(4 * ch);
+    for quad in quads.by_ref() {
+        let mut labs = [0u32; 4];
+        let mut ds = [0f32; 4];
+        for (j, px) in quad.chunks_exact(ch).enumerate() {
+            let (l, d) = t.nearest(px);
+            labs[j] = l;
+            ds[j] = d;
+        }
+        for (j, px) in quad.chunks_exact(ch).enumerate() {
+            labels.push(labs[j]);
+            accumulate_px(&mut acc, px, labs[j], ds[j]);
+        }
+    }
+    for px in quads.remainder().chunks_exact(ch) {
+        let (l, d) = t.nearest(px);
+        labels.push(l);
+        accumulate_px(&mut acc, px, l, d);
+    }
+    acc
+}
+
+/// Full scan that also seeds the pruning bounds (round 0 of a pruned run,
+/// or any round where the state was invalidated).
+fn init_core<T: CenTable>(pixels: &[f32], t: &T, st: &mut PrunedState) -> StepAccum {
+    let ch = t.channels();
+    let k = t.k();
+    st.reset(pixels.len() / ch, k);
+    let mut acc = StepAccum::zeros(k, ch);
+    for (i, px) in pixels.chunks_exact(ch).enumerate() {
+        let (lab, best_d2, second_d2) = t.nearest2(px);
+        st.labels[i] = lab;
+        st.upper[i] = (best_d2 as f64).sqrt();
+        st.lower[i] = (second_d2 as f64).sqrt();
+        accumulate_px(&mut acc, px, lab, best_d2);
+    }
+    acc
+}
+
+fn step_pruned_core<T: CenTable>(
+    pixels: &[f32],
+    t: &T,
+    st: &mut PrunedState,
+    drift: &CentroidDrift,
+) -> StepAccum {
+    let ch = t.channels();
+    let k = t.k();
+    debug_assert!(st.is_valid_for(pixels.len() / ch, k));
+    debug_assert_eq!(drift.per_centroid.len(), k);
+    let mut acc = StepAccum::zeros(k, ch);
+    for (i, px) in pixels.chunks_exact(ch).enumerate() {
+        let a = st.labels[i] as usize;
+        let mut u = st.upper[i] + drift.per_centroid[a];
+        let l = st.lower[i] - drift.max;
+        // The own-centre distance is needed either way: it is this
+        // pixel's exact inertia contribution when the label survives.
+        let d2a = t.dist2(px, a);
+        let skip = provably_closer(u, l) || {
+            u = (d2a as f64).sqrt(); // tighten, retest
+            provably_closer(u, l)
+        };
+        if skip {
+            st.upper[i] = u;
+            st.lower[i] = l;
+            accumulate_px(&mut acc, px, a as u32, d2a);
+        } else {
+            let (lab, best_d2, second_d2) = t.nearest2(px);
+            st.labels[i] = lab;
+            st.upper[i] = (best_d2 as f64).sqrt();
+            st.lower[i] = (second_d2 as f64).sqrt();
+            accumulate_px(&mut acc, px, lab, best_d2);
+        }
+    }
+    acc
+}
+
+fn assign_pruned_core<T: CenTable>(
+    pixels: &[f32],
+    t: &T,
+    st: &mut PrunedState,
+    drift: &CentroidDrift,
+    labels: &mut Vec<u32>,
+) -> f64 {
+    let ch = t.channels();
+    debug_assert!(st.is_valid_for(pixels.len() / ch, t.k()));
+    let mut inertia = 0.0f64;
+    for (i, px) in pixels.chunks_exact(ch).enumerate() {
+        let a = st.labels[i] as usize;
+        let mut u = st.upper[i] + drift.per_centroid[a];
+        let l = st.lower[i] - drift.max;
+        let d2a = t.dist2(px, a);
+        let skip = provably_closer(u, l) || {
+            u = (d2a as f64).sqrt();
+            provably_closer(u, l)
+        };
+        if skip {
+            st.upper[i] = u;
+            st.lower[i] = l;
+            labels.push(a as u32);
+            inertia += d2a as f64;
+        } else {
+            let (lab, best_d2, second_d2) = t.nearest2(px);
+            st.labels[i] = lab;
+            st.upper[i] = (best_d2 as f64).sqrt();
+            st.lower[i] = (second_d2 as f64).sqrt();
+            labels.push(lab);
+            inertia += best_d2 as f64;
+        }
+    }
+    inertia
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points.
+// ---------------------------------------------------------------------------
+
+fn check_shapes(pixels: &[f32], centroids: &[f32], k: usize, channels: usize) {
+    assert!(channels >= 1, "channels must be >= 1");
+    assert_eq!(
+        pixels.len() % channels,
+        0,
+        "pixel buffer length {} is not a multiple of channels={channels}",
+        pixels.len()
+    );
+    assert_eq!(
+        centroids.len(),
+        k * channels,
+        "centroid table length {} does not match k={k} x channels={channels}",
+        centroids.len()
+    );
+}
+
+/// One Lloyd accumulation pass (width-dispatched naive kernel).
+pub fn step_kernel(pixels: &[f32], centroids: &[f32], k: usize, channels: usize) -> StepAccum {
+    check_shapes(pixels, centroids, k, channels);
+    with_table!(centroids, k, channels, |t| step_core(pixels, &t))
+}
+
+/// Assign every pixel (width-dispatched naive kernel); writes `labels`,
+/// returns summed inertia.
+pub fn assign_kernel(
+    pixels: &[f32],
+    centroids: &[f32],
+    k: usize,
+    channels: usize,
+    labels: &mut Vec<u32>,
+) -> f64 {
+    check_shapes(pixels, centroids, k, channels);
+    labels.clear();
+    labels.reserve(pixels.len() / channels);
+    with_table!(centroids, k, channels, |t| assign_core(pixels, &t, labels))
+}
+
+/// One pass producing both the accumulator and the label map — the fused
+/// step-and-assign kernel. Bit-identical to [`step_kernel`] +
+/// [`assign_kernel`] run separately at the same centroids. This is the
+/// standalone primitive for callers that need both outputs at one
+/// centroid table (the pruned driver gets the same fusion implicitly:
+/// its bound-seeding scan labels while it accumulates); the micro bench
+/// tier tracks its cost against the separate passes.
+pub fn fused_step_assign(
+    pixels: &[f32],
+    centroids: &[f32],
+    k: usize,
+    channels: usize,
+    labels: &mut Vec<u32>,
+) -> StepAccum {
+    check_shapes(pixels, centroids, k, channels);
+    labels.clear();
+    labels.reserve(pixels.len() / channels);
+    with_table!(centroids, k, channels, |t| fused_core(pixels, &t, labels))
+}
+
+/// One Lloyd accumulation pass with Hamerly pruning. When `drift` is
+/// present and `state` carries bounds from the previous round, pixels
+/// whose assignment provably cannot change are folded in with a single
+/// distance evaluation; otherwise the pass runs a full scan that seeds
+/// the bounds. The returned accumulator equals [`step_kernel`]'s exactly
+/// (`StepAccum: PartialEq` — property-tested).
+pub fn step_pruned(
+    pixels: &[f32],
+    centroids: &[f32],
+    k: usize,
+    channels: usize,
+    state: &mut PrunedState,
+    drift: Option<&CentroidDrift>,
+) -> StepAccum {
+    check_shapes(pixels, centroids, k, channels);
+    if channels > PRUNE_MAX_CHANNELS {
+        // Guard band no longer covers f32 distance rounding: never prune.
+        state.clear();
+        return step_kernel(pixels, centroids, k, channels);
+    }
+    let n = pixels.len() / channels;
+    with_table!(centroids, k, channels, |t| match drift {
+        Some(d) if state.is_valid_for(n, k) => step_pruned_core(pixels, &t, state, d),
+        _ => init_core(pixels, &t, state),
+    })
+}
+
+/// Final labeling that reuses the previous round's bounds instead of a
+/// from-scratch K-way scan per pixel. Labels and inertia are identical
+/// to [`assign_kernel`] at the same centroids; falls back to the full
+/// scan when the state or drift is missing.
+pub fn assign_pruned(
+    pixels: &[f32],
+    centroids: &[f32],
+    k: usize,
+    channels: usize,
+    state: &mut PrunedState,
+    drift: Option<&CentroidDrift>,
+    labels: &mut Vec<u32>,
+) -> f64 {
+    check_shapes(pixels, centroids, k, channels);
+    if channels > PRUNE_MAX_CHANNELS {
+        state.clear();
+        return assign_kernel(pixels, centroids, k, channels, labels);
+    }
+    let n = pixels.len() / channels;
+    labels.clear();
+    labels.reserve(n);
+    with_table!(centroids, k, channels, |t| match drift {
+        Some(d) if state.is_valid_for(n, k) => assign_pruned_core(pixels, &t, state, d, labels),
+        _ => assign_core(pixels, &t, labels),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::math::{self, StepAccum};
+    use crate::util::prng::Rng;
+
+    fn random_pixels(n: usize, channels: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * channels).map(|_| rng.next_f32() * 255.0).collect()
+    }
+
+    /// Inline copy of the generic reference loop (the semantics every
+    /// kernel must reproduce bit for bit).
+    fn reference_step(px: &[f32], cen: &[f32], k: usize, channels: usize) -> StepAccum {
+        let mut want = StepAccum::zeros(k, channels);
+        for p in px.chunks_exact(channels) {
+            let (l, d) = math::nearest(p, cen, k, channels);
+            let base = l as usize * channels;
+            for (c, &v) in p.iter().enumerate() {
+                want.sums[base + c] += v as f64;
+            }
+            want.counts[l as usize] += 1;
+            want.inertia += d as f64;
+        }
+        want
+    }
+
+    fn reference_assign(px: &[f32], cen: &[f32], k: usize, channels: usize) -> (Vec<u32>, f64) {
+        let mut labels = Vec::new();
+        let mut inertia = 0.0f64;
+        for p in px.chunks_exact(channels) {
+            let (l, d) = math::nearest(p, cen, k, channels);
+            labels.push(l);
+            inertia += d as f64;
+        }
+        (labels, inertia)
+    }
+
+    #[test]
+    fn specialized_widths_match_reference_bitwise() {
+        for channels in [1usize, 3, 4, 5] {
+            for k in [1usize, 2, 4, 8, MAX_STACK_K + 4] {
+                let px = random_pixels(1021, channels, 11 + channels as u64);
+                let cen = random_pixels(k, channels, 99 + k as u64);
+                let want = reference_step(&px, &cen, k, channels);
+                let got = step_kernel(&px, &cen, k, channels);
+                assert_eq!(got, want, "step C={channels} k={k}");
+
+                let (want_labels, want_inertia) = reference_assign(&px, &cen, k, channels);
+                let mut labels = Vec::new();
+                let inertia = assign_kernel(&px, &cen, k, channels, &mut labels);
+                assert_eq!(labels, want_labels, "assign C={channels} k={k}");
+                assert_eq!(inertia, want_inertia, "assign inertia C={channels} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_step_plus_assign() {
+        let px = random_pixels(513, 3, 5);
+        let cen = random_pixels(4, 3, 6);
+        let mut fused_labels = Vec::new();
+        let fused_acc = fused_step_assign(&px, &cen, 4, 3, &mut fused_labels);
+        assert_eq!(fused_acc, step_kernel(&px, &cen, 4, 3));
+        let mut labels = Vec::new();
+        let inertia = assign_kernel(&px, &cen, 4, 3, &mut labels);
+        assert_eq!(fused_labels, labels);
+        assert_eq!(fused_acc.inertia, inertia);
+    }
+
+    #[test]
+    fn pruned_rounds_are_bit_identical_to_naive() {
+        for channels in [1usize, 3, 4, 5] {
+            for k in [1usize, 2, 4, 8] {
+                let px = random_pixels(700, channels, 21 + channels as u64 * k as u64);
+                let mut cen: Vec<f32> = px[..k * channels].to_vec();
+                let mut state = PrunedState::new();
+                let mut drift: Option<CentroidDrift> = None;
+                for round in 0..6 {
+                    let want = step_kernel(&px, &cen, k, channels);
+                    let got = step_pruned(&px, &cen, k, channels, &mut state, drift.as_ref());
+                    assert_eq!(got, want, "C={channels} k={k} round={round}");
+                    let prev = cen.clone();
+                    math::update_centroids(&want, &mut cen, 0.0);
+                    drift = Some(drift_between(&prev, &cen, k, channels));
+                }
+                // Fused final labeling at the post-update centroids.
+                let mut labels = Vec::new();
+                let inertia =
+                    assign_pruned(&px, &cen, k, channels, &mut state, drift.as_ref(), &mut labels);
+                let mut want_labels = Vec::new();
+                let want_inertia = assign_kernel(&px, &cen, k, channels, &mut want_labels);
+                assert_eq!(labels, want_labels, "C={channels} k={k} final labels");
+                assert_eq!(inertia, want_inertia, "C={channels} k={k} final inertia");
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_handles_duplicate_centroids_like_naive() {
+        // Exact distance ties: duplicated centres and integer-grid pixels.
+        let mut rng = Rng::new(3);
+        let px: Vec<f32> = (0..600).map(|_| rng.range_usize(0, 4) as f32).collect();
+        let cen = vec![1.0, 1.0, 1.0, /* dup */ 1.0, 1.0, 1.0, /* */ 3.0, 3.0, 3.0, 0.0, 1.0, 2.0];
+        let mut state = PrunedState::new();
+        let mut drift = None;
+        let mut c = cen.clone();
+        for _ in 0..4 {
+            let want = step_kernel(&px, &c, 4, 3);
+            let got = step_pruned(&px, &c, 4, 3, &mut state, drift.as_ref());
+            assert_eq!(got, want);
+            let prev = c.clone();
+            math::update_centroids(&want, &mut c, 0.0);
+            drift = Some(drift_between(&prev, &c, 4, 3));
+        }
+    }
+
+    #[test]
+    fn invalid_state_falls_back_to_full_scan() {
+        let px = random_pixels(100, 3, 7);
+        let cen = random_pixels(2, 3, 8);
+        let mut state = PrunedState::new();
+        // No drift, empty state: init scan.
+        let acc = step_pruned(&px, &cen, 2, 3, &mut state, None);
+        assert_eq!(acc, step_kernel(&px, &cen, 2, 3));
+        assert!(state.ready());
+        // Cleared state with a drift present: falls back and re-seeds.
+        state.clear();
+        let drift = drift_between(&cen, &cen, 2, 3);
+        let acc2 = step_pruned(&px, &cen, 2, 3, &mut state, Some(&drift));
+        assert_eq!(acc2, acc);
+        // Assign with a cleared state: full scan.
+        state.clear();
+        let mut labels = Vec::new();
+        let inertia = assign_pruned(&px, &cen, 2, 3, &mut state, Some(&drift), &mut labels);
+        let mut want = Vec::new();
+        assert_eq!(inertia, assign_kernel(&px, &cen, 2, 3, &mut want));
+        assert_eq!(labels, want);
+    }
+
+    #[test]
+    fn wide_pixels_take_the_naive_path_and_never_prune() {
+        let channels = PRUNE_MAX_CHANNELS + 4;
+        let px = random_pixels(60, channels, 41);
+        let cen = random_pixels(2, channels, 42);
+        let mut state = PrunedState::new();
+        let acc = step_pruned(&px, &cen, 2, channels, &mut state, None);
+        assert_eq!(acc, step_kernel(&px, &cen, 2, channels));
+        assert!(!state.ready(), "wide pixels must not seed bounds");
+        let drift = drift_between(&cen, &cen, 2, channels);
+        let mut labels = Vec::new();
+        let inertia = assign_pruned(&px, &cen, 2, channels, &mut state, Some(&drift), &mut labels);
+        let mut want = Vec::new();
+        assert_eq!(inertia, assign_kernel(&px, &cen, 2, channels, &mut want));
+        assert_eq!(labels, want);
+    }
+
+    #[test]
+    fn drift_between_measures_movement() {
+        let old = vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let new = vec![3.0, 4.0, 0.0, 1.0, 1.0, 1.0];
+        let d = drift_between(&old, &new, 2, 3);
+        assert!((d.per_centroid[0] - 5.0).abs() < 1e-9);
+        assert!(d.per_centroid[1] < 1e-12);
+        assert!((d.max - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn provably_closer_requires_strict_margin() {
+        assert!(provably_closer(1.0, 1.1));
+        assert!(!provably_closer(1.0, 1.0)); // exact tie: never skip
+        assert!(!provably_closer(1.0, 1.0 + 1e-9)); // inside the guard band
+        assert!(provably_closer(0.0, 1e-3));
+        assert!(provably_closer(5.0, f64::INFINITY));
+    }
+
+    #[test]
+    fn kernel_choice_parses_and_prints() {
+        for kc in KernelChoice::ALL {
+            let s = kc.to_string();
+            assert_eq!(s.parse::<KernelChoice>().unwrap(), kc);
+        }
+        assert!("turbo".parse::<KernelChoice>().is_err());
+        assert_eq!(KernelChoice::default(), KernelChoice::Naive);
+    }
+
+    #[test]
+    #[should_panic(expected = "centroid table length")]
+    fn mismatched_k_fails_loudly() {
+        let px = random_pixels(10, 3, 1);
+        let cen = random_pixels(2, 3, 2);
+        // claims k=3 but supplies 2 centroids
+        let _ = step_kernel(&px, &cen, 3, 3);
+    }
+}

@@ -1,6 +1,7 @@
 //! The sequential K-Means baseline (the paper's "Serial" column).
 
 use super::init::InitMethod;
+use super::kernel::{self, CentroidDrift, KernelChoice, PrunedState};
 use super::math;
 
 /// Shared K-Means configuration (used by baseline and coordinator).
@@ -50,31 +51,23 @@ pub struct KMeansResult {
 pub struct SeqKMeans;
 
 impl SeqKMeans {
-    /// Run on `pixels[P, C]`.
+    /// Run on `pixels[P, C]` with the naive (reference) kernel.
     pub fn run(pixels: &[f32], channels: usize, cfg: &KMeansConfig) -> KMeansResult {
-        assert!(cfg.k >= 1, "k must be >= 1");
-        assert_eq!(pixels.len() % channels, 0);
-        let mut centroids = cfg.init.centroids(pixels, cfg.k, channels, cfg.seed);
-        let mut iterations = 0;
-        let mut converged = false;
-        for _ in 0..cfg.max_iters {
-            iterations += 1;
-            let acc = math::step(pixels, &centroids, cfg.k, channels);
-            let moved = math::update_centroids(&acc, &mut centroids, cfg.tol);
-            if !moved {
-                converged = true;
-                break;
-            }
-        }
-        let mut labels = Vec::new();
-        let inertia = math::assign_all(pixels, &centroids, cfg.k, channels, &mut labels);
-        KMeansResult {
-            centroids,
-            labels,
-            inertia,
-            iterations,
-            converged,
-        }
+        Self::run_with(pixels, channels, cfg, KernelChoice::Naive)
+    }
+
+    /// Run with an explicit kernel choice. Pruned and fused kernels
+    /// produce bit-identical labels, centroids, and iteration counts to
+    /// the naive path (property-tested in `tests/kernel_equivalence.rs`)
+    /// — only wall-clock changes, which keeps serial-vs-parallel
+    /// comparisons exact work mirrors at any [`KernelChoice`].
+    pub fn run_with(
+        pixels: &[f32],
+        channels: usize,
+        cfg: &KMeansConfig,
+        kernel: KernelChoice,
+    ) -> KMeansResult {
+        run_inner(pixels, channels, cfg, None, kernel)
     }
 
     /// Run a fixed number of iterations with NO convergence test — the
@@ -88,20 +81,78 @@ impl SeqKMeans {
         cfg: &KMeansConfig,
         iters: usize,
     ) -> KMeansResult {
-        let mut centroids = cfg.init.centroids(pixels, cfg.k, channels, cfg.seed);
-        for _ in 0..iters {
-            let acc = math::step(pixels, &centroids, cfg.k, channels);
-            math::update_centroids(&acc, &mut centroids, 0.0);
+        run_inner(pixels, channels, cfg, Some(iters), KernelChoice::Naive)
+    }
+
+    /// Fixed-iteration variant of [`SeqKMeans::run_with`].
+    pub fn run_fixed_iters_with(
+        pixels: &[f32],
+        channels: usize,
+        cfg: &KMeansConfig,
+        iters: usize,
+        kernel: KernelChoice,
+    ) -> KMeansResult {
+        run_inner(pixels, channels, cfg, Some(iters), kernel)
+    }
+}
+
+/// Shared Lloyd driver. `fixed = Some(n)` runs exactly `n` iterations
+/// with no convergence test; `None` runs to `cfg.max_iters`/`cfg.tol`.
+fn run_inner(
+    pixels: &[f32],
+    channels: usize,
+    cfg: &KMeansConfig,
+    fixed: Option<usize>,
+    kernel: KernelChoice,
+) -> KMeansResult {
+    assert!(cfg.k >= 1, "k must be >= 1");
+    assert_eq!(pixels.len() % channels, 0);
+    let mut centroids = cfg.init.centroids(pixels, cfg.k, channels, cfg.seed);
+    let (max_iters, tol) = match fixed {
+        Some(n) => (n, 0.0),
+        None => (cfg.max_iters, cfg.tol),
+    };
+    let mut iterations = 0;
+    let mut converged = false;
+    let mut state = PrunedState::new();
+    let mut drift: Option<CentroidDrift> = None;
+    for _ in 0..max_iters {
+        iterations += 1;
+        let acc = match kernel {
+            KernelChoice::Naive => math::step(pixels, &centroids, cfg.k, channels),
+            KernelChoice::Pruned | KernelChoice::Fused => {
+                kernel::step_pruned(pixels, &centroids, cfg.k, channels, &mut state, drift.as_ref())
+            }
+        };
+        let prev = (kernel != KernelChoice::Naive).then(|| centroids.clone());
+        let moved = math::update_centroids(&acc, &mut centroids, tol);
+        if let Some(prev) = prev {
+            drift = Some(kernel::drift_between(&prev, &centroids, cfg.k, channels));
         }
-        let mut labels = Vec::new();
-        let inertia = math::assign_all(pixels, &centroids, cfg.k, channels, &mut labels);
-        KMeansResult {
-            centroids,
-            labels,
-            inertia,
-            iterations: iters,
-            converged: false,
+        if fixed.is_none() && !moved {
+            converged = true;
+            break;
         }
+    }
+    let mut labels = Vec::new();
+    let inertia = match kernel {
+        KernelChoice::Fused => kernel::assign_pruned(
+            pixels,
+            &centroids,
+            cfg.k,
+            channels,
+            &mut state,
+            drift.as_ref(),
+            &mut labels,
+        ),
+        _ => math::assign_all(pixels, &centroids, cfg.k, channels, &mut labels),
+    };
+    KMeansResult {
+        centroids,
+        labels,
+        inertia,
+        iterations,
+        converged,
     }
 }
 
@@ -176,6 +227,28 @@ mod tests {
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.centroids, b.centroids);
         assert_eq!(a.inertia, b.inertia);
+    }
+
+    #[test]
+    fn pruned_and_fused_kernels_match_naive_exactly() {
+        use crate::kmeans::kernel::KernelChoice;
+        let img = SyntheticOrtho::default().with_seed(9).generate(40, 40);
+        let px = img.as_pixels();
+        for k in [1usize, 2, 4] {
+            let cfg = KMeansConfig {
+                k,
+                ..Default::default()
+            };
+            let naive = SeqKMeans::run_with(px, 3, &cfg, KernelChoice::Naive);
+            for kc in [KernelChoice::Pruned, KernelChoice::Fused] {
+                let other = SeqKMeans::run_with(px, 3, &cfg, kc);
+                assert_eq!(other.labels, naive.labels, "k={k} {kc}");
+                assert_eq!(other.centroids, naive.centroids, "k={k} {kc}");
+                assert_eq!(other.iterations, naive.iterations, "k={k} {kc}");
+                assert_eq!(other.converged, naive.converged, "k={k} {kc}");
+                assert_eq!(other.inertia, naive.inertia, "k={k} {kc}");
+            }
+        }
     }
 
     #[test]

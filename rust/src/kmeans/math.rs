@@ -4,6 +4,11 @@
 //! — same accumulation order guarantees, same tie-breaking — so the
 //! sequential baseline, the coordinator's reduction, and the AOT kernel
 //! all agree bit-for-bit on labels and to f32-rounding on sums.
+//!
+//! [`step`] and [`assign_all`] define the *semantics*; their execution is
+//! delegated to the width-dispatched kernels in [`super::kernel`], which
+//! are bit-identical to the reference loops here (tested below and in
+//! `tests/kernel_equivalence.rs`).
 
 /// Partial accumulation state for one step: per-cluster sums, counts,
 /// and the summed squared distance (inertia). Associative under
@@ -80,10 +85,12 @@ pub fn nearest(px: &[f32], centroids: &[f32], k: usize, channels: usize) -> (u32
 
 /// Assign every pixel; writes `labels` and returns summed inertia.
 ///
-/// Hot path (EXPERIMENTS.md §Perf): the 3-band case — every paper image
-/// — dispatches to an unrolled kernel that keeps centroids in fixed
-/// stack arrays, eliminating slice bounds checks and letting LLVM keep
-/// the distance math in registers (~4× over the generic path).
+/// Hot path (EXPERIMENTS.md §Perf): dispatches to the width-specialized
+/// kernels in [`super::kernel`] — centroids in fixed stack arrays, no
+/// slice bounds checks, four-pixel pipelining — bit-identical to the
+/// reference loop (`nearest` per pixel, tested below). The mismatched-`k`
+/// case fails loudly: the kernel layer asserts
+/// `centroids.len() == k * channels` before touching the table.
 pub fn assign_all(
     pixels: &[f32],
     centroids: &[f32],
@@ -91,107 +98,17 @@ pub fn assign_all(
     channels: usize,
     labels: &mut Vec<u32>,
 ) -> f64 {
-    assert_eq!(pixels.len() % channels, 0);
-    assert_eq!(centroids.len(), k * channels);
-    let n = pixels.len() / channels;
-    labels.clear();
-    labels.reserve(n);
-    if channels == 3 {
-        return assign_all_c3(pixels, centroids, k, labels);
-    }
-    let mut inertia = 0.0f64;
-    for px in pixels.chunks_exact(channels) {
-        let (l, d) = nearest(px, centroids, k, channels);
-        labels.push(l);
-        inertia += d as f64;
-    }
-    inertia
-}
-
-/// C=3 specialization of [`assign_all`] (identical semantics, tested).
-fn assign_all_c3(pixels: &[f32], centroids: &[f32], k: usize, labels: &mut Vec<u32>) -> f64 {
-    let cen: Vec<[f32; 3]> = centroids
-        .chunks_exact(3)
-        .map(|c| [c[0], c[1], c[2]])
-        .collect();
-    let mut inertia = 0.0f64;
-    for px in pixels.chunks_exact(3) {
-        let (x, y, z) = (px[0], px[1], px[2]);
-        let mut best = 0u32;
-        let mut best_d = f32::INFINITY;
-        for (i, c) in cen.iter().enumerate() {
-            let dx = x - c[0];
-            let dy = y - c[1];
-            let dz = z - c[2];
-            let d = dx * dx + dy * dy + dz * dz;
-            if d < best_d {
-                best_d = d;
-                best = i as u32;
-            }
-        }
-        labels.push(best);
-        inertia += best_d as f64;
-    }
-    let _ = k;
-    inertia
+    super::kernel::assign_kernel(pixels, centroids, k, channels, labels)
 }
 
 /// One Lloyd accumulation pass over a pixel buffer (assign + sum).
 /// Equivalent to `ref.step` with an all-ones mask.
 ///
-/// Like [`assign_all`], the 3-band case takes an unrolled kernel whose
-/// sums accumulate in f64 exactly like the generic path — bit-identical
-/// results (tested), ~4× faster.
+/// Like [`assign_all`], executed by the width-dispatched kernel layer;
+/// sums accumulate in f64 in pixel order exactly like the reference
+/// loop — bit-identical results (tested).
 pub fn step(pixels: &[f32], centroids: &[f32], k: usize, channels: usize) -> StepAccum {
-    assert_eq!(pixels.len() % channels, 0);
-    assert_eq!(centroids.len(), k * channels);
-    let mut acc = StepAccum::zeros(k, channels);
-    if channels == 3 {
-        step_c3(pixels, centroids, k, &mut acc);
-        return acc;
-    }
-    for px in pixels.chunks_exact(channels) {
-        let (l, d) = nearest(px, centroids, k, channels);
-        let base = l as usize * channels;
-        for (c, &v) in px.iter().enumerate() {
-            acc.sums[base + c] += v as f64;
-        }
-        acc.counts[l as usize] += 1;
-        acc.inertia += d as f64;
-    }
-    acc
-}
-
-/// C=3 specialization of [`step`]. Sums accumulate directly in f64 (3
-/// adds per pixel — cheap next to the K distance evaluations), so the
-/// result is bit-identical to the generic path.
-fn step_c3(pixels: &[f32], centroids: &[f32], k: usize, acc: &mut StepAccum) {
-    let cen: Vec<[f32; 3]> = centroids
-        .chunks_exact(3)
-        .map(|c| [c[0], c[1], c[2]])
-        .collect();
-    let _ = k;
-    for px in pixels.chunks_exact(3) {
-        let (x, y, z) = (px[0], px[1], px[2]);
-        let mut best = 0usize;
-        let mut best_d = f32::INFINITY;
-        for (i, c) in cen.iter().enumerate() {
-            let dx = x - c[0];
-            let dy = y - c[1];
-            let dz = z - c[2];
-            let d = dx * dx + dy * dy + dz * dz;
-            if d < best_d {
-                best_d = d;
-                best = i;
-            }
-        }
-        let base = best * 3;
-        acc.sums[base] += x as f64;
-        acc.sums[base + 1] += y as f64;
-        acc.sums[base + 2] += z as f64;
-        acc.counts[best] += 1;
-        acc.inertia += best_d as f64;
-    }
+    super::kernel::step_kernel(pixels, centroids, k, channels)
 }
 
 /// Centroid update with empty-cluster carry-over. Returns `true` if any
@@ -298,6 +215,23 @@ mod tests {
         let mut cen = cen_init.clone();
         let moved = update_centroids(&acc, &mut cen, 1e-3);
         assert!(!moved, "centroids already at the fixed point");
+    }
+
+    #[test]
+    #[should_panic(expected = "centroid table length")]
+    fn step_rejects_mismatched_k() {
+        // 2 centroids supplied, k=4 claimed: must fail loudly, not read a
+        // wrong-length centroid table.
+        let cen = vec![0.0f32; 6];
+        let _ = step(&px4(), &cen, 4, C);
+    }
+
+    #[test]
+    #[should_panic(expected = "centroid table length")]
+    fn assign_all_rejects_mismatched_k() {
+        let cen = vec![0.0f32; 6];
+        let mut labels = Vec::new();
+        let _ = assign_all(&px4(), &cen, 4, C, &mut labels);
     }
 
     #[test]

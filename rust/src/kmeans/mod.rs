@@ -11,8 +11,10 @@
 //! index wins; empty clusters keep their previous centre.
 
 pub mod init;
+pub mod kernel;
 mod lloyd;
 pub mod math;
 
 pub use init::InitMethod;
+pub use kernel::{CentroidDrift, KernelChoice, PrunedState};
 pub use lloyd::{KMeansConfig, KMeansResult, SeqKMeans};

@@ -35,7 +35,7 @@ pub mod prelude {
         ClusterConfig, ClusterMode, ClusterOutput, Coordinator, CoordinatorConfig, Engine,
     };
     pub use crate::image::{Raster, SyntheticOrtho};
-    pub use crate::kmeans::{InitMethod, SeqKMeans};
+    pub use crate::kmeans::{InitMethod, KernelChoice, SeqKMeans};
     pub use crate::metrics::{RunTimer, Speedup};
     pub use crate::simtime::{SimParams, WorkerSim};
     pub use crate::stripstore::StripStore;

@@ -23,6 +23,7 @@ use blockms::coordinator::{
     ClusterConfig, ClusterMode, Coordinator, CoordinatorConfig, Engine, IoMode, Schedule,
 };
 use blockms::image::{read_ppm, write_labels_ppm, write_ppm, SyntheticOrtho};
+use blockms::kmeans::kernel::KernelChoice;
 use blockms::runtime::{find_artifacts_dir, ArtifactSet};
 use blockms::util::cli::{Args, Cli, CliError};
 use blockms::util::config::Config;
@@ -40,9 +41,10 @@ fn cli() -> Cli {
         .opt("height", Some("800"), "synthetic image height")
         .opt("seed", Some("7"), "workload / init seed")
         .opt("input", None, "input PPM instead of synthetic scene")
-        .opt("out", None, "write label map PPM here")
+        .opt("out", None, "output path (cluster: label map PPM; kernels: JSON; sweep: CSV)")
         .opt("out-input", None, "also write the input scene PPM here")
         .opt("engine", Some("native"), "compute engine: native|pjrt")
+        .opt("kernel", Some("naive"), "compute kernel: naive|pruned|fused")
         .opt("mode", Some("global"), "clustering mode: global|local")
         .opt("schedule", Some("dynamic"), "job schedule: static|dynamic")
         .opt("iters", None, "fixed Lloyd iterations (default: converge)")
@@ -62,7 +64,7 @@ fn main() {
         Ok(a) => a,
         Err(CliError::HelpRequested) => {
             print!("{}", c.help_text());
-            println!("\nSUBCOMMANDS:\n  cluster | paper-tables | cases | sweep | info");
+            println!("\nSUBCOMMANDS:\n  cluster | paper-tables | cases | sweep | kernels | info");
             return;
         }
         Err(e) => {
@@ -75,6 +77,7 @@ fn main() {
         "paper-tables" => cmd_tables(&args),
         "cases" => cmd_cases(&args),
         "sweep" => cmd_sweep(&args),
+        "kernels" => cmd_kernels(&args),
         "info" => cmd_info(),
         other => Err(anyhow::anyhow!("unknown subcommand {other:?} (see --help)")),
     };
@@ -199,6 +202,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         mode: opts.require::<ClusterMode>("mode", "run.mode")?,
         io,
         schedule: opts.require::<Schedule>("schedule", "run.schedule")?,
+        kernel: opts.require::<KernelChoice>("kernel", "run.kernel")?,
         fail_block: None,
     });
     let ccfg = ClusterConfig {
@@ -318,6 +322,28 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     csv.write_to(Path::new(&out_path))?;
     println!("wrote {} cells to {out_path}", csv.len());
+    Ok(())
+}
+
+/// Kernel-layer benchmark: naive vs pruned vs fused step-round
+/// throughput, written to `BENCH_kernels.json` (see EXPERIMENTS.md
+/// §Kernel architecture for the schema).
+fn cmd_kernels(args: &Args) -> Result<()> {
+    use blockms::bench::kernels::{render_kernel_bench, write_kernel_bench, KernelBenchOpts};
+    let opts = Opts::load(args)?;
+    let scale: f64 = opts.require("scale", "bench.scale")?;
+    let side = ((1024.0 * scale).round() as usize).max(32);
+    let bopts = KernelBenchOpts {
+        height: side,
+        width: side,
+        iters: opts.require("bench-iters", "bench.iters")?,
+        seed: opts.require("seed", "workload.seed")?,
+        ..Default::default()
+    };
+    let out = args.get("out").unwrap_or("BENCH_kernels.json").to_string();
+    let rows = write_kernel_bench(Path::new(&out), &bopts)?;
+    print!("{}", render_kernel_bench(&bopts, &rows));
+    println!("wrote {out}");
     Ok(())
 }
 

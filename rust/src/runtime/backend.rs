@@ -13,8 +13,9 @@
 
 use anyhow::Result;
 
-use super::engine::KernelEngine;
+use super::KernelEngine;
 use super::manifest::ArtifactSet;
+use crate::kmeans::kernel::{self, CentroidDrift, PrunedState};
 use crate::kmeans::math::{self, StepAccum};
 
 /// What the coordinator needs from a compute engine, per block.
@@ -29,6 +30,39 @@ pub trait ComputeBackend {
         centroids: &[f32],
         labels: &mut Vec<u32>,
     ) -> Result<f64>;
+
+    /// One Lloyd accumulation pass with Hamerly pruning: `state` carries
+    /// per-pixel bounds across rounds, `drift` is the movement of the
+    /// update that produced `centroids`. Must return exactly what
+    /// [`ComputeBackend::step_block`] would. The default implementation
+    /// is the naive pass with the state invalidated — engines that
+    /// cannot prune (PJRT runs fixed-shape artifacts) stay correct and
+    /// simply never skip work.
+    fn step_block_pruned(
+        &mut self,
+        pixels: &[f32],
+        centroids: &[f32],
+        state: &mut PrunedState,
+        drift: Option<&CentroidDrift>,
+    ) -> Result<StepAccum> {
+        let _ = drift;
+        state.clear();
+        self.step_block(pixels, centroids)
+    }
+
+    /// Final assignment reusing the pruning bounds; must label exactly
+    /// like [`ComputeBackend::assign_block`]. Default: the full scan.
+    fn assign_block_pruned(
+        &mut self,
+        pixels: &[f32],
+        centroids: &[f32],
+        state: &mut PrunedState,
+        drift: Option<&CentroidDrift>,
+        labels: &mut Vec<u32>,
+    ) -> Result<f64> {
+        let _ = (state, drift);
+        self.assign_block(pixels, centroids, labels)
+    }
 
     /// Independent per-block K-Means (`iters` fixed Lloyd iterations from
     /// `init_centroids`, then assignment). Returns `(centroids, inertia)`.
@@ -140,6 +174,31 @@ impl ComputeBackend for NativeBackend {
         Ok((centroids, inertia))
     }
 
+    fn step_block_pruned(
+        &mut self,
+        pixels: &[f32],
+        centroids: &[f32],
+        state: &mut PrunedState,
+        drift: Option<&CentroidDrift>,
+    ) -> Result<StepAccum> {
+        Ok(kernel::step_pruned(
+            pixels, centroids, self.k, self.channels, state, drift,
+        ))
+    }
+
+    fn assign_block_pruned(
+        &mut self,
+        pixels: &[f32],
+        centroids: &[f32],
+        state: &mut PrunedState,
+        drift: Option<&CentroidDrift>,
+        labels: &mut Vec<u32>,
+    ) -> Result<f64> {
+        Ok(kernel::assign_pruned(
+            pixels, centroids, self.k, self.channels, state, drift, labels,
+        ))
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
@@ -229,6 +288,33 @@ mod tests {
         assert_eq!(final_cen, c2);
         assert_eq!(inertia, i2);
         assert_eq!(labels, labels2);
+    }
+
+    #[test]
+    fn native_pruned_rounds_equal_naive_rounds() {
+        use crate::kmeans::kernel::{drift_between, PrunedState};
+        let mut be = NativeBackend::new(4, 3, 1);
+        let px = pixels(800, 31);
+        let mut cen = pixels(4, 32);
+        let mut state = PrunedState::new();
+        let mut drift = None;
+        for _ in 0..5 {
+            let want = be.step_block(&px, &cen).unwrap();
+            let got = be
+                .step_block_pruned(&px, &cen, &mut state, drift.as_ref())
+                .unwrap();
+            assert_eq!(got, want);
+            let prev = cen.clone();
+            math::update_centroids(&want, &mut cen, 0.0);
+            drift = Some(drift_between(&prev, &cen, 4, 3));
+        }
+        let (mut la, mut lb) = (Vec::new(), Vec::new());
+        let ia = be
+            .assign_block_pruned(&px, &cen, &mut state, drift.as_ref(), &mut la)
+            .unwrap();
+        let ib = be.assign_block(&px, &cen, &mut lb).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(ia, ib);
     }
 
     #[test]

@@ -1,0 +1,80 @@
+//! Offline stand-in for the PJRT kernel engine (build without the
+//! `pjrt` cargo feature). Mirrors the public API of `engine.rs`;
+//! [`KernelEngine::load`] fails with a clear message and the type is
+//! uninhabited, so every other method is statically unreachable.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{ArtifactKind, ArtifactSet};
+use crate::kmeans::math::StepAccum;
+
+/// Uninhabited stub for the PJRT engine.
+pub struct KernelEngine {
+    never: std::convert::Infallible,
+}
+
+impl KernelEngine {
+    pub fn load(_set: &ArtifactSet, _k: usize) -> Result<KernelEngine> {
+        bail!("this build has no PJRT support (rebuild with `--features pjrt`)")
+    }
+
+    pub fn precompile(&mut self, _kinds: &[ArtifactKind]) -> Result<()> {
+        match self.never {}
+    }
+
+    pub fn k(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn chunk(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn channels(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn local_iters(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn step_block(&mut self, _pixels: &[f32], _centroids: &[f32]) -> Result<StepAccum> {
+        match self.never {}
+    }
+
+    pub fn assign_block(
+        &mut self,
+        _pixels: &[f32],
+        _centroids: &[f32],
+        _labels: &mut Vec<u32>,
+    ) -> Result<f64> {
+        match self.never {}
+    }
+
+    pub fn local_block(
+        &mut self,
+        _pixels: &[f32],
+        _init_centroids: &[f32],
+        _labels: &mut Vec<u32>,
+    ) -> Result<(Vec<f32>, f64)> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let Some(dir) = super::super::find_artifacts_dir() else {
+            // No artifacts anywhere: exercise the error path through a
+            // manifest that cannot exist.
+            return;
+        };
+        if let Ok(set) = ArtifactSet::load(&dir) {
+            let err = KernelEngine::load(&set, 2).unwrap_err();
+            assert!(err.to_string().contains("pjrt"), "{err}");
+        }
+    }
+}

@@ -15,8 +15,18 @@
 //! parpool model the paper uses (each worker is an independent session).
 //! [`ComputeBackend`] abstracts over the PJRT engine and the pure-rust
 //! [`NativeBackend`] so the coordinator is engine-agnostic.
+//!
+//! The PJRT path needs the external `xla` bindings, which cannot be
+//! fetched in offline builds, so it is gated behind the off-by-default
+//! `pjrt` cargo feature. Without it, [`KernelEngine`] is an uninhabited
+//! stub whose `load` fails with a clear message — everything native
+//! (the default engine everywhere) is unaffected.
 
 mod backend;
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 mod engine;
 mod manifest;
 

@@ -1,0 +1,205 @@
+//! Property tests for the kernel layer's headline guarantee: the pruned
+//! and fused kernels produce **bit-identical** labels, centroids, and
+//! counts to the naive kernel — across random images, `k ∈ {1, 2, 4, 8}`,
+//! channel widths covering every dispatch path, and the paper's three
+//! block shapes through the real coordinator.
+
+use std::sync::Arc;
+
+use blockms::blocks::{BlockPlan, BlockShape};
+use blockms::coordinator::{
+    ClusterConfig, Coordinator, CoordinatorConfig, Schedule,
+};
+use blockms::image::SyntheticOrtho;
+use blockms::kmeans::kernel::{self, KernelChoice, PrunedState};
+use blockms::kmeans::{math, KMeansConfig, SeqKMeans};
+use blockms::util::prng::Rng;
+use blockms::util::qcheck::{choice_of, forall, pair, usize_in, Gen};
+
+const KS: [usize; 4] = [1, 2, 4, 8];
+
+fn counts_of(labels: &[u32], k: usize) -> Vec<u64> {
+    let mut counts = vec![0u64; k];
+    for &l in labels {
+        counts[l as usize] += 1;
+    }
+    counts
+}
+
+/// Generator for a random flat pixel buffer: (n_pixels, channels, seed).
+struct PixelGen;
+
+impl Gen for PixelGen {
+    type Value = (usize, usize, u64);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = rng.range_usize(16, 900);
+        // hit the 1/3/4 specializations and the generic fallback
+        let channels = [1, 2, 3, 4, 5][rng.range_usize(0, 5)];
+        (n, channels, rng.next_u64())
+    }
+}
+
+fn pixels(n: usize, channels: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * channels).map(|_| rng.next_f32() * 255.0).collect()
+}
+
+#[test]
+fn prop_seq_kernels_bit_identical() {
+    let gen = pair(PixelGen, choice_of(&KS));
+    forall(201, 60, &gen, |((n, channels, seed), k)| {
+        let px = pixels(*n, *channels, *seed);
+        let cfg = KMeansConfig {
+            k: *k,
+            seed: seed ^ 0x5EED,
+            ..Default::default()
+        };
+        // convergence-driven drive
+        let naive = SeqKMeans::run_with(&px, *channels, &cfg, KernelChoice::Naive);
+        for kc in [KernelChoice::Pruned, KernelChoice::Fused] {
+            let other = SeqKMeans::run_with(&px, *channels, &cfg, kc);
+            if other.labels != naive.labels
+                || other.centroids != naive.centroids
+                || other.iterations != naive.iterations
+                || other.inertia != naive.inertia
+                || counts_of(&other.labels, *k) != counts_of(&naive.labels, *k)
+            {
+                return false;
+            }
+        }
+        // fixed-iteration drive (the bench mirror)
+        let naive = SeqKMeans::run_fixed_iters_with(&px, *channels, &cfg, 5, KernelChoice::Naive);
+        for kc in [KernelChoice::Pruned, KernelChoice::Fused] {
+            let other = SeqKMeans::run_fixed_iters_with(&px, *channels, &cfg, 5, kc);
+            if other.labels != naive.labels || other.centroids != naive.centroids {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_pruned_step_accum_bit_identical_across_rounds() {
+    let gen = pair(PixelGen, choice_of(&KS));
+    forall(202, 80, &gen, |((n, channels, seed), k)| {
+        let px = pixels(*n, *channels, *seed);
+        let mut cen = pixels(*k, *channels, seed.wrapping_mul(31) + 7);
+        let mut state = PrunedState::new();
+        let mut drift = None;
+        for _ in 0..6 {
+            let want = math::step(&px, &cen, *k, *channels);
+            let got = kernel::step_pruned(&px, &cen, *k, *channels, &mut state, drift.as_ref());
+            if got != want {
+                return false;
+            }
+            let prev = cen.clone();
+            math::update_centroids(&want, &mut cen, 0.0);
+            drift = Some(kernel::drift_between(&prev, &cen, *k, *channels));
+        }
+        // fused final labeling vs the naive full pass
+        let mut fused_labels = Vec::new();
+        let fused_inertia = kernel::assign_pruned(
+            &px,
+            &cen,
+            *k,
+            *channels,
+            &mut state,
+            drift.as_ref(),
+            &mut fused_labels,
+        );
+        let mut naive_labels = Vec::new();
+        let naive_inertia = math::assign_all(&px, &cen, *k, *channels, &mut naive_labels);
+        fused_labels == naive_labels && fused_inertia == naive_inertia
+    });
+}
+
+/// The paper's three block shapes, random sizes, random worker counts:
+/// the coordinator must produce bit-identical output under every kernel
+/// and both schedules (dynamic scheduling migrates blocks between
+/// workers, exercising the state-invalidation fallback).
+#[test]
+fn prop_coordinator_kernels_identical_across_paper_shapes() {
+    let gen = pair(usize_in(16, 64), usize_in(0, 999));
+    forall(203, 10, &gen, |&(side, salt)| {
+        let (h, w) = (side, side + salt % 9);
+        let img = Arc::new(
+            SyntheticOrtho::default()
+                .with_seed(salt as u64 + 1)
+                .generate(h, w),
+        );
+        let shapes = [
+            BlockShape::Rows {
+                band_rows: 1 + salt % 13,
+            },
+            BlockShape::Cols {
+                band_cols: 1 + salt % 11,
+            },
+            BlockShape::Square {
+                side: 2 + salt % 17,
+            },
+        ];
+        let ccfg = ClusterConfig {
+            k: KS[salt % KS.len()],
+            max_iters: 8,
+            ..Default::default()
+        };
+        for shape in shapes {
+            let plan = Arc::new(BlockPlan::new(h, w, shape));
+            let naive = Coordinator::new(CoordinatorConfig {
+                workers: 1 + salt % 4,
+                ..Default::default()
+            })
+            .cluster(&img, &plan, &ccfg)
+            .unwrap();
+            for kernel in [KernelChoice::Pruned, KernelChoice::Fused] {
+                for schedule in [Schedule::Static, Schedule::Dynamic] {
+                    let out = Coordinator::new(CoordinatorConfig {
+                        workers: 1 + salt % 4,
+                        schedule,
+                        kernel,
+                        ..Default::default()
+                    })
+                    .cluster(&img, &plan, &ccfg)
+                    .unwrap();
+                    if out.labels != naive.labels
+                        || out.centroids != naive.centroids
+                        || out.iterations != naive.iterations
+                        || out.inertia_trace != naive.inertia_trace
+                        || counts_of(&out.labels, ccfg.k) != counts_of(&naive.labels, ccfg.k)
+                    {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+/// Tie-heavy data (integer grid, duplicated centres via duplicated
+/// pixels) must not let the pruning path diverge from naive
+/// lowest-index tie-breaking.
+#[test]
+fn prop_kernels_identical_under_distance_ties() {
+    forall(204, 40, &usize_in(1, 500), |&salt| {
+        let mut rng = Rng::new(salt as u64);
+        let n = 120 + salt % 60;
+        // integer-valued pixels from a 3-level grid: exact ties abound
+        let px: Vec<f32> = (0..n * 3)
+            .map(|_| rng.range_usize(0, 3) as f32 * 8.0)
+            .collect();
+        let cfg = KMeansConfig {
+            k: 4,
+            seed: salt as u64,
+            ..Default::default()
+        };
+        let naive = SeqKMeans::run_with(&px, 3, &cfg, KernelChoice::Naive);
+        [KernelChoice::Pruned, KernelChoice::Fused]
+            .into_iter()
+            .all(|kc| {
+                let r = SeqKMeans::run_with(&px, 3, &cfg, kc);
+                r.labels == naive.labels && r.centroids == naive.centroids
+            })
+    });
+}
