@@ -7,9 +7,11 @@
 pub mod cases;
 pub mod kernels;
 pub mod runner;
+pub mod service;
 pub mod tables;
 pub mod workloads;
 
 pub use kernels::{KernelBenchOpts, KernelBenchRow};
 pub use runner::{ExperimentConfig, ExperimentRow, Runner};
+pub use service::{ServiceBenchOpts, ServiceBenchRow};
 pub use workloads::{paper_sizes, PaperSize, Workload};

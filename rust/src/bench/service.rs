@@ -1,0 +1,354 @@
+//! Service-layer benchmark: multi-job throughput through one shared
+//! pool, with the machine-readable `BENCH_service.json` trail
+//! (EXPERIMENTS.md §Service documents the schema).
+//!
+//! For every (pool size, batch size) cell the bench drives `batch`
+//! distinct synthetic images through one [`ClusterServer`] twice:
+//!
+//! 1. **batched** — all jobs submitted at once, blocks interleaving on
+//!    the shared workers;
+//! 2. **serialized** — the same jobs one at a time (submit, wait,
+//!    next), i.e. the solo-coordinator usage pattern on a warm pool.
+//!
+//! `speedup_vs_serialized > 1` is the service's reason to exist: with a
+//! per-iteration barrier, a lone job strands workers at every round
+//! edge; interleaved jobs fill those bubbles. Every cell also
+//! re-verifies the determinism contract (`matches_solo`): job 0's
+//! labels/centroids/inertia must be bit-identical to a solo
+//! [`Coordinator`] run of the same spec.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::blocks::{BlockPlan, BlockShape};
+use crate::coordinator::{
+    ClusterConfig, ClusterOutput, Coordinator, CoordinatorConfig, Schedule,
+};
+use crate::image::{Raster, SyntheticOrtho};
+use crate::kmeans::kernel::KernelChoice;
+use crate::service::{ClusterServer, JobSpec, ServerConfig};
+use crate::util::fmt::Table;
+use crate::util::json::Json;
+
+/// Benchmark shape. Defaults are the acceptance configuration: 256×256
+/// 3-band scenes, k=4, 6 fixed Lloyd rounds, pool sizes {1,2,4,8},
+/// batch sizes {1,4,16}.
+#[derive(Clone, Debug)]
+pub struct ServiceBenchOpts {
+    pub height: usize,
+    pub width: usize,
+    pub k: usize,
+    /// Fixed Lloyd iterations per job (fixed so every cell does
+    /// identical work).
+    pub iters: usize,
+    pub seed: u64,
+    pub pool_sizes: Vec<usize>,
+    pub batch_sizes: Vec<usize>,
+    pub kernel: KernelChoice,
+    pub schedule: Schedule,
+}
+
+impl Default for ServiceBenchOpts {
+    fn default() -> Self {
+        ServiceBenchOpts {
+            height: 256,
+            width: 256,
+            k: 4,
+            iters: 6,
+            seed: 0x5E_81C3,
+            pool_sizes: vec![1, 2, 4, 8],
+            batch_sizes: vec![1, 4, 16],
+            kernel: KernelChoice::Fused,
+            schedule: Schedule::Dynamic,
+        }
+    }
+}
+
+/// One (pool, batch) cell.
+#[derive(Clone, Debug)]
+pub struct ServiceBenchRow {
+    pub pool: usize,
+    pub batch: usize,
+    /// Wall seconds with all jobs submitted at once.
+    pub batch_wall_secs: f64,
+    /// Wall seconds with the same jobs one at a time on the same pool.
+    pub serialized_wall_secs: f64,
+    /// `batch / batch_wall_secs`.
+    pub jobs_per_sec: f64,
+    /// Batched wall normalized per pixel per pass
+    /// (`iters` step rounds + 1 assign round).
+    pub ns_per_pixel_pass: f64,
+    /// `serialized_wall_secs / batch_wall_secs` (higher is better;
+    /// the acceptance bar is strictly above 1.0 at pool 4, batch 16).
+    pub speedup_vs_serialized: f64,
+    /// Mean per-job latency (activation → done) in the batched run.
+    pub mean_latency_secs: f64,
+    /// Worst per-job latency in the batched run.
+    pub max_latency_secs: f64,
+    /// Job 0's batched output is bit-identical to a solo
+    /// `Coordinator::cluster` of the same spec.
+    pub matches_solo: bool,
+}
+
+fn job_spec(opts: &ServiceBenchOpts, images: &[Arc<Raster>], j: usize) -> JobSpec {
+    let img = Arc::clone(&images[j]);
+    let side = (opts.height.min(opts.width) / 4).max(8);
+    let plan = Arc::new(BlockPlan::new(
+        img.height(),
+        img.width(),
+        BlockShape::Square { side },
+    ));
+    JobSpec::new(
+        img,
+        plan,
+        ClusterConfig {
+            k: opts.k,
+            seed: opts.seed.wrapping_add(j as u64),
+            fixed_iters: Some(opts.iters),
+            ..Default::default()
+        },
+    )
+    .with_kernel(opts.kernel)
+}
+
+fn solo_reference(opts: &ServiceBenchOpts, images: &[Arc<Raster>]) -> Result<ClusterOutput> {
+    let spec = job_spec(opts, images, 0);
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        schedule: opts.schedule,
+        kernel: opts.kernel,
+        ..Default::default()
+    });
+    coord.cluster(&spec.image, &spec.plan, &spec.cluster)
+}
+
+/// Run the full (pool × batch) matrix.
+pub fn run_service_bench(opts: &ServiceBenchOpts) -> Result<Vec<ServiceBenchRow>> {
+    ensure!(
+        !opts.pool_sizes.is_empty() && !opts.batch_sizes.is_empty(),
+        "need at least one pool size and one batch size"
+    );
+    ensure!(
+        opts.pool_sizes.iter().all(|&p| p > 0) && opts.batch_sizes.iter().all(|&b| b > 0),
+        "pool and batch sizes must be positive"
+    );
+    let max_batch = opts.batch_sizes.iter().copied().max().unwrap_or(1);
+    // Distinct image per job slot — this is *cross-image* interleaving.
+    let images: Vec<Arc<Raster>> = (0..max_batch)
+        .map(|j| {
+            Arc::new(
+                SyntheticOrtho::default()
+                    .with_seed(opts.seed.wrapping_add(j as u64))
+                    .generate(opts.height, opts.width),
+            )
+        })
+        .collect();
+    let reference = solo_reference(opts, &images)?;
+    let pixels = (opts.height * opts.width) as f64;
+    let passes = (opts.iters + 1) as f64;
+
+    let mut rows = Vec::new();
+    for &pool in &opts.pool_sizes {
+        for &batch in &opts.batch_sizes {
+            let server = ClusterServer::start(ServerConfig {
+                workers: pool,
+                schedule: opts.schedule,
+                max_in_flight: batch,
+            });
+            // Batched: submit everything, then wait.
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..batch)
+                .map(|j| server.submit(job_spec(opts, &images, j)))
+                .collect::<Result<_>>()?;
+            let outputs: Vec<ClusterOutput> = handles
+                .iter()
+                .map(|h| h.wait_output())
+                .collect::<Result<_>>()?;
+            let batch_wall_secs = t0.elapsed().as_secs_f64();
+
+            // Serialized: same jobs, one at a time, same warm pool.
+            let t0 = Instant::now();
+            for j in 0..batch {
+                server.submit(job_spec(opts, &images, j))?.wait_output()?;
+            }
+            let serialized_wall_secs = t0.elapsed().as_secs_f64();
+            server.shutdown();
+
+            let matches_solo = outputs[0].labels == reference.labels
+                && outputs[0].centroids == reference.centroids
+                && outputs[0].inertia.to_bits() == reference.inertia.to_bits();
+            let latencies: Vec<f64> = outputs.iter().map(|o| o.total_secs).collect();
+            rows.push(ServiceBenchRow {
+                pool,
+                batch,
+                batch_wall_secs,
+                serialized_wall_secs,
+                jobs_per_sec: batch as f64 / batch_wall_secs,
+                ns_per_pixel_pass: batch_wall_secs * 1e9 / (batch as f64 * pixels * passes),
+                speedup_vs_serialized: serialized_wall_secs / batch_wall_secs,
+                mean_latency_secs: latencies.iter().sum::<f64>() / latencies.len() as f64,
+                max_latency_secs: latencies.iter().cloned().fold(0.0, f64::max),
+                matches_solo,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Serialize the matrix as the `BENCH_service.json` document.
+pub fn service_bench_json(opts: &ServiceBenchOpts, rows: &[ServiceBenchRow]) -> String {
+    let num = Json::Num;
+    let mut doc = BTreeMap::new();
+    doc.insert(
+        "image".to_string(),
+        Json::Arr(vec![num(opts.height as f64), num(opts.width as f64)]),
+    );
+    doc.insert("channels".to_string(), num(3.0));
+    doc.insert("k".to_string(), num(opts.k as f64));
+    doc.insert("iters".to_string(), num(opts.iters as f64));
+    doc.insert("seed".to_string(), num(opts.seed as f64));
+    doc.insert(
+        "kernel".to_string(),
+        Json::Str(opts.kernel.label().to_string()),
+    );
+    let cases = rows
+        .iter()
+        .map(|r| {
+            let mut c = BTreeMap::new();
+            c.insert("pool".to_string(), num(r.pool as f64));
+            c.insert("batch".to_string(), num(r.batch as f64));
+            c.insert("batch_wall_secs".to_string(), num(r.batch_wall_secs));
+            c.insert(
+                "serialized_wall_secs".to_string(),
+                num(r.serialized_wall_secs),
+            );
+            c.insert("jobs_per_sec".to_string(), num(r.jobs_per_sec));
+            c.insert("ns_per_pixel_pass".to_string(), num(r.ns_per_pixel_pass));
+            c.insert(
+                "speedup_vs_serialized".to_string(),
+                num(r.speedup_vs_serialized),
+            );
+            c.insert("mean_latency_secs".to_string(), num(r.mean_latency_secs));
+            c.insert("max_latency_secs".to_string(), num(r.max_latency_secs));
+            c.insert("matches_solo".to_string(), Json::Bool(r.matches_solo));
+            Json::Obj(c)
+        })
+        .collect();
+    doc.insert("cases".to_string(), Json::Arr(cases));
+    Json::Obj(doc).to_string()
+}
+
+/// Run the matrix and write `BENCH_service.json` to `path`.
+pub fn write_service_bench(path: &Path, opts: &ServiceBenchOpts) -> Result<Vec<ServiceBenchRow>> {
+    let rows = run_service_bench(opts)?;
+    std::fs::write(path, service_bench_json(opts, &rows))
+        .with_context(|| format!("write service bench to {}", path.display()))?;
+    Ok(rows)
+}
+
+/// Human-readable rendering of the matrix.
+pub fn render_service_bench(opts: &ServiceBenchOpts, rows: &[ServiceBenchRow]) -> String {
+    let mut t = Table::new(format!(
+        "Service throughput: {}x{} scenes, k={}, {} iters, {} kernel",
+        opts.width, opts.height, opts.k, opts.iters, opts.kernel
+    ))
+    .header(&[
+        "Pool",
+        "Batch",
+        "jobs/s",
+        "ns/px/pass",
+        "vs serialized",
+        "mean lat",
+        "max lat",
+        "Identical",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.pool.to_string(),
+            r.batch.to_string(),
+            format!("{:.2}", r.jobs_per_sec),
+            format!("{:.3}", r.ns_per_pixel_pass),
+            format!("{:.2}x", r.speedup_vs_serialized),
+            format!("{:.1} ms", r.mean_latency_secs * 1e3),
+            format!("{:.1} ms", r.max_latency_secs * 1e3),
+            if r.matches_solo { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ServiceBenchOpts {
+        ServiceBenchOpts {
+            height: 40,
+            width: 36,
+            k: 2,
+            iters: 2,
+            pool_sizes: vec![1, 2],
+            batch_sizes: vec![1, 3],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn matrix_covers_all_cells_and_matches_solo() {
+        let opts = tiny();
+        let rows = run_service_bench(&opts).unwrap();
+        assert_eq!(rows.len(), 4); // 2 pools x 2 batches
+        for r in &rows {
+            assert!(r.matches_solo, "pool {} batch {} diverged from solo", r.pool, r.batch);
+            assert!(r.jobs_per_sec > 0.0);
+            assert!(r.ns_per_pixel_pass > 0.0);
+            assert!(r.batch_wall_secs > 0.0 && r.serialized_wall_secs > 0.0);
+            assert!(r.max_latency_secs >= r.mean_latency_secs);
+        }
+    }
+
+    #[test]
+    fn json_round_trips_and_has_schema() {
+        let opts = tiny();
+        let rows = run_service_bench(&opts).unwrap();
+        let text = service_bench_json(&opts, &rows);
+        let doc = Json::parse(&text).expect("valid json");
+        assert_eq!(doc.get("k").and_then(Json::as_usize), Some(2));
+        assert_eq!(doc.get("iters").and_then(Json::as_usize), Some(2));
+        let cases = doc.get("cases").and_then(Json::as_arr).expect("cases");
+        assert_eq!(cases.len(), rows.len());
+        for c in cases {
+            assert!(c.get("pool").and_then(Json::as_usize).is_some());
+            assert!(c.get("jobs_per_sec").and_then(Json::as_f64).is_some());
+            assert!(c.get("speedup_vs_serialized").and_then(Json::as_f64).is_some());
+            assert_eq!(c.get("matches_solo").and_then(Json::as_bool), Some(true));
+        }
+    }
+
+    #[test]
+    fn write_creates_the_file() {
+        let path = std::env::temp_dir().join("blockms_test_BENCH_service.json");
+        let mut opts = tiny();
+        opts.pool_sizes = vec![1];
+        opts.batch_sizes = vec![2];
+        let rows = write_service_bench(&path, &opts).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        assert_eq!(rows.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn render_mentions_every_cell() {
+        let mut opts = tiny();
+        opts.pool_sizes = vec![2];
+        opts.batch_sizes = vec![3];
+        let rows = run_service_bench(&opts).unwrap();
+        let text = render_service_bench(&opts, &rows);
+        assert!(text.contains("jobs/s") && text.contains("yes"), "{text}");
+    }
+}

@@ -1,0 +1,191 @@
+//! The `blockms` binary's command-line surface, as a library.
+//!
+//! The option table, subcommand list, and the CLI-over-config option
+//! resolver live here (not in `main.rs`) so the round-trip tests in
+//! `tests/cli_parse.rs` can exercise exactly the spec the binary ships.
+//!
+//! Error discipline: anything that is a *usage* mistake — unknown
+//! option, unknown subcommand, a value that fails to parse — surfaces
+//! as a [`CliError`] and makes the binary exit with status **2**, with
+//! a message naming the offending flag. Runtime failures (I/O, missing
+//! artifacts) exit 1.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::cli::{Args, Cli, CliError};
+use crate::util::config::Config;
+
+/// Every subcommand the binary dispatches on.
+pub const SUBCOMMANDS: &[&str] = &[
+    "cluster",
+    "paper-tables",
+    "cases",
+    "sweep",
+    "kernels",
+    "batch",
+    "serve",
+    "info",
+];
+
+/// The full option table (all subcommands share one namespace, like the
+/// rest of the repo's benches).
+pub fn blockms_cli() -> Cli {
+    Cli::new("blockms", "parallel block processing for K-Means clustering")
+        .opt("config", None, "INI config file (CLI overrides it)")
+        .opt("k", Some("2"), "cluster count")
+        .opt("workers", Some("4"), "worker count")
+        .opt("approach", Some("column"), "block approach: row|column|square")
+        .opt("block-rows", None, "explicit block rows (overrides approach)")
+        .opt("block-cols", None, "explicit block cols (overrides approach)")
+        .opt("width", Some("1280"), "synthetic image width")
+        .opt("height", Some("800"), "synthetic image height")
+        .opt("seed", Some("7"), "workload / init seed")
+        .opt("input", None, "input PPM instead of synthetic scene")
+        .opt("out", None, "output path (cluster: label map PPM; kernels/batch: JSON; sweep: CSV)")
+        .opt("out-input", None, "also write the input scene PPM here")
+        .opt("engine", Some("native"), "compute engine: native|pjrt")
+        .opt("kernel", Some("naive"), "compute kernel: naive|pruned|fused")
+        .opt("mode", Some("global"), "clustering mode: global|local")
+        .opt("schedule", Some("dynamic"), "job schedule: static|dynamic")
+        .opt("iters", None, "fixed Lloyd iterations (default: converge)")
+        .opt("max-iters", Some("20"), "max Lloyd iterations")
+        .opt("strip-rows", None, "enable strip I/O model with this strip height")
+        .opt("table", Some("all"), "paper-tables: table number or 'all'")
+        .opt("scale", Some("0.25"), "paper-tables/cases/batch: per-side size scale")
+        .opt("bench-iters", Some("6"), "paper-tables/cases/batch: Lloyd iterations")
+        .opt("jobs", Some("8"), "serve: number of jobs to drive through the pool")
+        .opt("max-in-flight", Some("4"), "serve: admission cap (backpressure above it)")
+        .opt("pools", Some("1,2,4,8"), "batch: comma-separated pool sizes")
+        .opt("batches", Some("1,4,16"), "batch: comma-separated batch sizes")
+        .flag("serial", "cluster: also run the sequential baseline and compare")
+        .flag("verbose", "more logging")
+}
+
+/// Merge `--config file` under the CLI args for a single typed lookup.
+/// CLI beats config (`section.key` in the file, `--key` on the CLI).
+/// Lookup failures are [`CliError`]s so the binary can exit 2 naming
+/// the flag.
+pub struct Opts<'a> {
+    args: &'a Args,
+    config: Config,
+}
+
+impl<'a> Opts<'a> {
+    pub fn load(args: &'a Args) -> Result<Opts<'a>> {
+        let config = match args.get("config") {
+            Some(path) => {
+                Config::load(Path::new(path)).with_context(|| format!("load config {path}"))?
+            }
+            None => Config::default(),
+        };
+        Ok(Opts { args, config })
+    }
+
+    pub fn get(&self, cli_key: &str, cfg_key: &str) -> Option<String> {
+        self.args
+            .get(cli_key)
+            .map(str::to_string)
+            .or_else(|| self.config.get(cfg_key).map(str::to_string))
+    }
+
+    pub fn parse<T: std::str::FromStr>(&self, cli_key: &str, cfg_key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(cli_key, cfg_key) {
+            None => Ok(None),
+            Some(raw) => match raw.parse::<T>() {
+                Ok(v) => Ok(Some(v)),
+                Err(e) => Err(anyhow::Error::new(CliError::BadValue(
+                    cli_key.to_string(),
+                    raw,
+                    e.to_string(),
+                ))),
+            },
+        }
+    }
+
+    pub fn require<T: std::str::FromStr>(&self, cli_key: &str, cfg_key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.parse(cli_key, cfg_key)?.ok_or_else(|| {
+            anyhow::Error::new(CliError::MissingRequired(cli_key.to_string()))
+        })
+    }
+}
+
+/// Parse a comma-separated list of positive integers (`"1,2,4,8"`).
+/// The offending flag name lands in the error.
+pub fn parse_usize_list(raw: &str, flag: &str) -> Result<Vec<usize>> {
+    let bad = |why: &str| {
+        anyhow::Error::new(CliError::BadValue(
+            flag.to_string(),
+            raw.to_string(),
+            why.to_string(),
+        ))
+    };
+    let mut out = Vec::new();
+    for part in raw.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            return Err(bad("empty element"));
+        }
+        let v: usize = part.parse().map_err(|_| bad("not an integer"))?;
+        if v == 0 {
+            return Err(bad("elements must be positive"));
+        }
+        out.push(v);
+    }
+    if out.is_empty() {
+        return Err(bad("empty list"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_knows_every_subcommand_flag() {
+        let cli = blockms_cli();
+        let a = cli
+            .parse(vec![
+                "batch", "--pools", "1,2", "--batches", "4", "--scale", "0.1",
+            ])
+            .unwrap();
+        assert_eq!(a.subcommand(), Some("batch"));
+        assert_eq!(a.get("pools"), Some("1,2"));
+    }
+
+    #[test]
+    fn usize_list_parses_and_rejects() {
+        assert_eq!(parse_usize_list("1,2,4,8", "pools").unwrap(), vec![1, 2, 4, 8]);
+        assert_eq!(parse_usize_list(" 4 ", "pools").unwrap(), vec![4]);
+        for bad in ["", "1,,2", "a", "0", "1,0"] {
+            let err = parse_usize_list(bad, "pools").unwrap_err();
+            let cli = err.downcast_ref::<CliError>().expect("CliError");
+            assert!(matches!(cli, CliError::BadValue(flag, ..) if flag == "pools"), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn require_produces_cli_errors() {
+        let cli = blockms_cli();
+        let args = cli.parse(vec!["cluster", "--k", "nope"]).unwrap();
+        let opts = Opts::load(&args).unwrap();
+        let err = opts.require::<usize>("k", "cluster.k").unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<CliError>(),
+            Some(CliError::BadValue(flag, ..)) if flag == "k"
+        ));
+        let err = opts.require::<usize>("iters", "cluster.iters").unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<CliError>(),
+            Some(CliError::MissingRequired(flag)) if flag == "iters"
+        ));
+    }
+}

@@ -1,162 +1,350 @@
-//! Global-mode parallel K-Means: one clustering over the whole image.
+//! Global-mode parallel K-Means: one clustering over the whole image,
+//! expressed as an incremental per-job state machine.
 //!
 //! Each Lloyd iteration is a round: workers produce per-block partial
 //! accumulations at the current centroids; the leader merges them
-//! (associative f64 reduction), updates centroids, and tests convergence.
-//! Because the merged accumulation is *identical* to the sequential
-//! baseline's whole-image pass, global mode reproduces `SeqKMeans`
-//! exactly — same labels, same centroids, same iteration count — which
-//! the integration tests assert. Parallelism changes time, not results.
+//! (associative f64 reduction **in block order**), updates centroids,
+//! and tests convergence. Because the merged accumulation is
+//! *identical* to the sequential baseline's whole-image pass, global
+//! mode reproduces `SeqKMeans` exactly — same labels, same centroids,
+//! same iteration count — which the integration tests assert.
+//! Parallelism changes time, not results.
+//!
+//! [`GlobalState`] holds one job's reduction state between rounds, so a
+//! multi-job leader (the service) can interleave many jobs over one
+//! pool: outcomes are buffered per block as they stream in (any order,
+//! any worker) and reduced only when the round is complete, in ascending
+//! block order — the same order the solo barrier produced, which is what
+//! keeps service runs bit-identical to solo runs.
 
 use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
-use super::messages::{Job, JobPayload, JobResult};
-use super::pool::WorkerPool;
+use super::messages::{Job, JobId, JobOutcome, JobPayload, JobResult};
 use super::{BlockCost, RoundKind, RoundRecord};
 use crate::blocks::{BlockPlan, LabelAssembler};
 use crate::kmeans::kernel::{drift_between, CentroidDrift};
 use crate::kmeans::math::{self, StepAccum};
 use crate::kmeans::KMeansConfig;
-use crate::metrics::time_it;
 
-/// Outcome of the iterate phase.
-pub struct GlobalIterateResult {
+/// Which phase a global job is in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GlobalPhase {
+    /// Lloyd step rounds (centroid refinement).
+    Step,
+    /// The final labeling round.
+    Assign,
+    /// All rounds complete; output is ready.
+    Done,
+}
+
+/// Completed output of a global-mode run.
+#[derive(Clone, Debug)]
+pub struct GlobalOutput {
+    pub labels: Vec<u32>,
     pub centroids: Vec<f32>,
-    pub iterations: usize,
-    pub converged: bool,
+    pub inertia: f64,
     /// Inertia measured at the centroids *entering* each step round
     /// (monotone non-increasing — a tested Lloyd invariant).
     pub inertia_trace: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
     pub rounds: Vec<RoundRecord>,
-    /// Movement of the final centroid update (`None` if no round ran).
-    /// The fused assign round uses it to advance per-block bounds from
-    /// the last step round's centroids to the final ones.
-    pub drift: Option<Arc<CentroidDrift>>,
 }
 
-/// Run Lloyd iterations through the pool until convergence/`max_iters`
-/// (or exactly `fixed_iters` when given, with no convergence test).
-pub fn iterate(
-    pool: &WorkerPool,
-    plan: &BlockPlan,
+/// One job's between-round reduction state. Drive it with
+/// [`GlobalState::start_round`] → absorb every outcome →
+/// [`GlobalState::finish_round`], until [`GlobalState::done`].
+pub struct GlobalState {
+    plan: Arc<BlockPlan>,
     channels: usize,
-    cfg: &KMeansConfig,
-    fixed_iters: Option<usize>,
-    mut centroids: Vec<f32>,
-) -> Result<GlobalIterateResult> {
-    let mut rounds = Vec::new();
-    let mut iterations = 0;
-    let mut converged = false;
-    let mut inertia_trace = Vec::new();
-    let max = fixed_iters.unwrap_or(cfg.max_iters);
-    let tol = if fixed_iters.is_some() { 0.0 } else { cfg.tol };
-    // Per-centroid movement of the update that produced the *current*
-    // centroids; shipped with each round so pruned workers can advance
-    // their block-local bounds. `None` on round 0 (no previous update).
-    let mut drift: Option<Arc<CentroidDrift>> = None;
-    for iter in 0..max {
-        iterations += 1;
-        let cen = Arc::new(centroids.clone());
-        let jobs: Vec<Job> = (0..plan.len())
-            .map(|b| Job {
-                block: b,
-                round: iter as u64,
-                payload: JobPayload::Step {
-                    centroids: Arc::clone(&cen),
-                    drift: drift.clone(),
+    k: usize,
+    tol: f32,
+    /// Maximum step rounds (fixed-iteration runs disable the tol test).
+    max_rounds: usize,
+    fixed: bool,
+    phase: GlobalPhase,
+    centroids: Vec<f32>,
+    /// Movement of the update that produced the current centroids
+    /// (`None` before the first update); shipped with each round so
+    /// pruned workers can advance their per-(job, block) bounds.
+    drift: Option<Arc<CentroidDrift>>,
+    iterations: usize,
+    converged: bool,
+    inertia_trace: Vec<f64>,
+    rounds: Vec<RoundRecord>,
+    /// Outcome buffer for the in-flight round, indexed by block.
+    pending: Vec<Option<JobOutcome>>,
+    outstanding: usize,
+    round_started: Option<Instant>,
+    labels: Option<Vec<u32>>,
+    inertia: f64,
+}
+
+impl GlobalState {
+    /// Set up a run from the shared init draw (identical to the
+    /// sequential baseline's). `fixed_iters` runs exactly that many step
+    /// rounds with no convergence test.
+    pub fn new(
+        plan: Arc<BlockPlan>,
+        channels: usize,
+        cfg: &KMeansConfig,
+        fixed_iters: Option<usize>,
+        init_centroids: Vec<f32>,
+    ) -> GlobalState {
+        assert_eq!(init_centroids.len(), cfg.k * channels, "init centroid table size");
+        let max_rounds = fixed_iters.unwrap_or(cfg.max_iters);
+        let blocks = plan.len();
+        GlobalState {
+            plan,
+            channels,
+            k: cfg.k,
+            tol: if fixed_iters.is_some() { 0.0 } else { cfg.tol },
+            max_rounds,
+            fixed: fixed_iters.is_some(),
+            phase: if max_rounds == 0 {
+                GlobalPhase::Assign
+            } else {
+                GlobalPhase::Step
+            },
+            centroids: init_centroids,
+            drift: None,
+            iterations: 0,
+            converged: false,
+            inertia_trace: Vec::new(),
+            rounds: Vec::new(),
+            pending: (0..blocks).map(|_| None).collect(),
+            outstanding: 0,
+            round_started: None,
+            labels: None,
+            inertia: 0.0,
+        }
+    }
+
+    pub fn phase(&self) -> GlobalPhase {
+        self.phase
+    }
+
+    pub fn done(&self) -> bool {
+        self.phase == GlobalPhase::Done
+    }
+
+    /// Blocks still missing from the in-flight round.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    /// Build the current round's jobs, tagged with `job`. One job per
+    /// block; the round clock starts now.
+    pub fn start_round(&mut self, job: JobId) -> Vec<Job> {
+        assert_eq!(self.outstanding, 0, "round already in flight");
+        assert!(!self.done(), "run already complete");
+        self.round_started = Some(Instant::now());
+        self.outstanding = self.plan.len();
+        let cen = Arc::new(self.centroids.clone());
+        let round = self.iterations as u64;
+        (0..self.plan.len())
+            .map(|block| Job {
+                job,
+                block,
+                round,
+                payload: match self.phase {
+                    GlobalPhase::Step => JobPayload::Step {
+                        centroids: Arc::clone(&cen),
+                        drift: self.drift.clone(),
+                    },
+                    GlobalPhase::Assign => JobPayload::Assign {
+                        centroids: Arc::clone(&cen),
+                        drift: self.drift.clone(),
+                    },
+                    GlobalPhase::Done => unreachable!("checked above"),
                 },
             })
-            .collect();
-        let (outcomes, wall) = {
-            let (r, secs) = time_it(|| pool.run_round(jobs));
-            (r?, secs)
-        };
-        let mut merged = StepAccum::zeros(cfg.k, channels);
-        let mut costs = Vec::with_capacity(outcomes.len());
-        for o in &outcomes {
+            .collect()
+    }
+
+    /// Buffer one outcome of the in-flight round. Returns `true` when
+    /// the round is complete (every block arrived) and
+    /// [`GlobalState::finish_round`] should run.
+    pub fn absorb(&mut self, outcome: JobOutcome) -> Result<bool> {
+        ensure!(
+            outcome.block < self.pending.len(),
+            "block {} outside plan ({} blocks)",
+            outcome.block,
+            self.pending.len()
+        );
+        ensure!(
+            outcome.round == self.iterations as u64,
+            "stale outcome: round {} but job is at round {}",
+            outcome.round,
+            self.iterations
+        );
+        ensure!(
+            self.pending[outcome.block].is_none(),
+            "duplicate outcome for block {}",
+            outcome.block
+        );
+        ensure!(self.outstanding > 0, "no round in flight");
+        self.pending[outcome.block] = Some(outcome);
+        self.outstanding -= 1;
+        Ok(self.outstanding == 0)
+    }
+
+    /// Reduce the completed round in block order and advance the phase.
+    pub fn finish_round(&mut self) -> Result<()> {
+        assert_eq!(self.outstanding, 0, "round still in flight");
+        let wall_secs = self
+            .round_started
+            .take()
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        match self.phase {
+            GlobalPhase::Step => self.finish_step_round(wall_secs),
+            GlobalPhase::Assign => self.finish_assign_round(wall_secs),
+            GlobalPhase::Done => bail!("run already complete"),
+        }
+    }
+
+    fn finish_step_round(&mut self, wall_secs: f64) -> Result<()> {
+        let mut merged = StepAccum::zeros(self.k, self.channels);
+        let mut costs = Vec::with_capacity(self.pending.len());
+        for slot in &mut self.pending {
+            let o = slot.take().expect("round complete");
             let JobResult::Step { accum } = &o.result else {
                 bail!("unexpected result kind in step round");
             };
             merged.merge(accum);
-            costs.push(BlockCost::from_outcome(o));
+            costs.push(BlockCost::from_outcome(&o));
         }
-        rounds.push(RoundRecord {
+        self.rounds.push(RoundRecord {
             kind: RoundKind::Step,
-            wall_secs: wall,
+            wall_secs,
             costs,
         });
-        inertia_trace.push(merged.inertia);
-        let prev = centroids.clone();
-        let moved = math::update_centroids(&merged, &mut centroids, tol);
-        drift = Some(Arc::new(drift_between(&prev, &centroids, cfg.k, channels)));
-        if fixed_iters.is_none() && !moved {
-            converged = true;
-            break;
+        self.inertia_trace.push(merged.inertia);
+        let prev = self.centroids.clone();
+        let moved = math::update_centroids(&merged, &mut self.centroids, self.tol);
+        self.drift = Some(Arc::new(drift_between(
+            &prev,
+            &self.centroids,
+            self.k,
+            self.channels,
+        )));
+        self.iterations += 1;
+        if !self.fixed && !moved {
+            self.converged = true;
+            self.phase = GlobalPhase::Assign;
+        } else if self.iterations >= self.max_rounds {
+            self.phase = GlobalPhase::Assign;
         }
+        Ok(())
     }
-    Ok(GlobalIterateResult {
-        centroids,
-        iterations,
-        converged,
-        inertia_trace,
-        rounds,
-        drift,
-    })
+
+    fn finish_assign_round(&mut self, wall_secs: f64) -> Result<()> {
+        let mut assembler = LabelAssembler::new(self.plan.height(), self.plan.width());
+        let mut inertia = 0.0;
+        let mut costs = Vec::with_capacity(self.pending.len());
+        for slot in &mut self.pending {
+            let o = slot.take().expect("round complete");
+            let JobResult::Assign {
+                labels,
+                inertia: block_inertia,
+            } = &o.result
+            else {
+                bail!("unexpected result kind in assign round");
+            };
+            assembler.place(self.plan.region(o.block), labels)?;
+            inertia += block_inertia;
+            costs.push(BlockCost::from_outcome(&o));
+        }
+        self.rounds.push(RoundRecord {
+            kind: RoundKind::Assign,
+            wall_secs,
+            costs,
+        });
+        self.labels = Some(assembler.finish()?);
+        self.inertia = inertia;
+        self.phase = GlobalPhase::Done;
+        Ok(())
+    }
+
+    /// Take the finished output. Errors if the run is not done.
+    pub fn into_output(self) -> Result<GlobalOutput> {
+        ensure!(self.done(), "global run not complete");
+        Ok(GlobalOutput {
+            labels: self.labels.expect("done implies labels"),
+            centroids: self.centroids,
+            inertia: self.inertia,
+            inertia_trace: self.inertia_trace,
+            iterations: self.iterations,
+            converged: self.converged,
+            rounds: self.rounds,
+        })
+    }
 }
 
-/// Final assignment round: label every block at `centroids`, assemble
-/// the full map. `round` must be the number of completed step rounds
-/// (so workers can tell their bounds continue exactly into this round)
-/// and `drift` the movement of the final centroid update; fused-kernel
-/// workers then label from their bounds instead of a full scan.
-/// Returns `(labels, inertia, round_record)`.
-pub fn assign(
-    pool: &WorkerPool,
-    plan: &BlockPlan,
-    centroids: &[f32],
-    round: u64,
-    drift: Option<Arc<CentroidDrift>>,
-) -> Result<(Vec<u32>, f64, RoundRecord)> {
-    let cen = Arc::new(centroids.to_vec());
-    let jobs: Vec<Job> = (0..plan.len())
-        .map(|b| Job {
-            block: b,
-            round,
-            payload: JobPayload::Assign {
-                centroids: Arc::clone(&cen),
-                drift: drift.clone(),
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockShape;
+    use crate::coordinator::messages::SOLO_JOB;
+
+    fn state(blocks_side: usize, fixed: Option<usize>) -> GlobalState {
+        let plan = Arc::new(BlockPlan::new(12, 12, BlockShape::Square { side: blocks_side }));
+        GlobalState::new(
+            plan,
+            1,
+            &KMeansConfig {
+                k: 2,
+                max_iters: 5,
+                ..Default::default()
             },
-        })
-        .collect();
-    let (outcomes, wall) = {
-        let (r, secs) = time_it(|| pool.run_round(jobs));
-        (r?, secs)
-    };
-    let mut assembler = LabelAssembler::new(plan.height(), plan.width());
-    let mut inertia = 0.0;
-    let mut costs = Vec::with_capacity(outcomes.len());
-    for o in &outcomes {
-        let JobResult::Assign {
-            labels,
-            inertia: block_inertia,
-        } = &o.result
-        else {
-            bail!("unexpected result kind in assign round");
-        };
-        assembler.place(plan.region(o.block), labels)?;
-        inertia += block_inertia;
-        costs.push(BlockCost::from_outcome(o));
+            fixed,
+            vec![0.0, 10.0],
+        )
     }
-    let labels = assembler.finish()?;
-    Ok((
-        labels,
-        inertia,
-        RoundRecord {
-            kind: RoundKind::Assign,
-            wall_secs: wall,
-            costs,
-        },
-    ))
+
+    #[test]
+    fn zero_fixed_iters_goes_straight_to_assign() {
+        let st = state(6, Some(0));
+        assert_eq!(st.phase(), GlobalPhase::Assign);
+    }
+
+    #[test]
+    fn start_round_emits_one_job_per_block() {
+        let mut st = state(6, None);
+        let jobs = st.start_round(SOLO_JOB);
+        assert_eq!(jobs.len(), 4);
+        assert!(jobs
+            .iter()
+            .enumerate()
+            .all(|(i, j)| j.block == i && j.round == 0 && j.job == SOLO_JOB));
+        assert_eq!(st.outstanding(), 4);
+    }
+
+    #[test]
+    fn absorb_rejects_stale_and_duplicate_outcomes() {
+        let mut st = state(12, None); // one block
+        let jobs = st.start_round(SOLO_JOB);
+        assert_eq!(jobs.len(), 1);
+        let ok = JobOutcome {
+            job: SOLO_JOB,
+            block: 0,
+            round: 0,
+            worker: 0,
+            timing: Default::default(),
+            result: JobResult::Step {
+                accum: StepAccum::zeros(2, 1),
+            },
+        };
+        let stale = JobOutcome {
+            round: 9,
+            ..ok.clone()
+        };
+        assert!(st.absorb(stale).is_err());
+        assert!(st.absorb(ok.clone()).unwrap());
+        assert!(st.absorb(ok).is_err(), "duplicate must be rejected");
+    }
 }

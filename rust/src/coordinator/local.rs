@@ -9,20 +9,25 @@
 //! consistent — visually comparable to the sequential result (Figs 5/7
 //! vs 4/6) — while each block's clustering stayed embarrassingly
 //! parallel (no per-iteration barrier at all).
+//!
+//! [`LocalState`] is the single-round state machine: one Local job per
+//! block, outcomes buffered per block as they stream in (any order —
+//! multi-job leaders interleave), harmonization and assembly in block
+//! order at the end, so service runs reduce exactly like solo runs.
 
 use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
-use super::messages::{Job, JobPayload, JobResult};
-use super::pool::WorkerPool;
+use super::messages::{Job, JobId, JobOutcome, JobPayload, JobResult};
 use super::{BlockCost, RoundKind, RoundRecord};
 use crate::blocks::{BlockPlan, LabelAssembler};
 use crate::kmeans::math::sqdist;
-use crate::metrics::time_it;
 
-/// Result of the local-mode run.
-pub struct LocalRunResult {
+/// Completed output of a local-mode run.
+#[derive(Clone, Debug)]
+pub struct LocalOutput {
     pub labels: Vec<u32>,
     /// Harmonized global centroids.
     pub centroids: Vec<f32>,
@@ -31,86 +36,162 @@ pub struct LocalRunResult {
     pub rounds: Vec<RoundRecord>,
 }
 
-/// Run one Local round over all blocks and harmonize.
-pub fn run(
-    pool: &WorkerPool,
-    plan: &BlockPlan,
+/// One job's local-mode state: a single round of per-block clusterings
+/// followed by harmonization.
+pub struct LocalState {
+    plan: Arc<BlockPlan>,
     channels: usize,
     k: usize,
-    init_centroids: &[f32],
-) -> Result<LocalRunResult> {
-    let init = Arc::new(init_centroids.to_vec());
-    let jobs: Vec<Job> = (0..plan.len())
-        .map(|b| Job {
-            block: b,
-            round: 0,
-            payload: JobPayload::Local {
-                init: Arc::clone(&init),
-            },
-        })
-        .collect();
-    let (outcomes, wall) = {
-        let (r, secs) = time_it(|| pool.run_round(jobs));
-        (r?, secs)
-    };
+    init: Arc<Vec<f32>>,
+    pending: Vec<Option<JobOutcome>>,
+    outstanding: usize,
+    round_started: Option<Instant>,
+    output: Option<LocalOutput>,
+}
 
-    // Collect block centroids + weights.
-    let mut block_centroids: Vec<Vec<f32>> = Vec::with_capacity(outcomes.len());
-    let mut block_counts: Vec<Vec<u64>> = Vec::with_capacity(outcomes.len());
-    let mut inertia = 0.0;
-    let mut costs = Vec::with_capacity(outcomes.len());
-    for o in &outcomes {
-        let JobResult::Local {
-            centroids,
-            inertia: bi,
-            counts,
-            ..
-        } = &o.result
-        else {
-            bail!("unexpected result kind in local round");
-        };
-        block_centroids.push(centroids.clone());
-        block_counts.push(counts.clone());
-        inertia += bi;
-        costs.push(BlockCost::from_outcome(o));
+impl LocalState {
+    pub fn new(
+        plan: Arc<BlockPlan>,
+        channels: usize,
+        k: usize,
+        init_centroids: Vec<f32>,
+    ) -> LocalState {
+        assert_eq!(init_centroids.len(), k * channels, "init centroid table size");
+        let blocks = plan.len();
+        LocalState {
+            plan,
+            channels,
+            k,
+            init: Arc::new(init_centroids),
+            pending: (0..blocks).map(|_| None).collect(),
+            outstanding: 0,
+            round_started: None,
+            output: None,
+        }
     }
 
-    // Harmonize: weighted K-Means over all block centroids, seeded at the
-    // global init (so K stays K and empty centres keep a defined spot).
-    let global = harmonize_centroids(
-        &block_centroids,
-        &block_counts,
-        init_centroids,
-        k,
-        channels,
-        10,
-    );
-
-    // Remap labels block by block and assemble.
-    let mut assembler = LabelAssembler::new(plan.height(), plan.width());
-    for o in &outcomes {
-        let JobResult::Local {
-            labels, centroids, ..
-        } = &o.result
-        else {
-            unreachable!("checked above");
-        };
-        let map = label_map(centroids, &global, k, channels);
-        let remapped: Vec<u32> = labels.iter().map(|&l| map[l as usize]).collect();
-        assembler.place(plan.region(o.block), &remapped)?;
+    pub fn done(&self) -> bool {
+        self.output.is_some()
     }
-    let labels = assembler.finish()?;
 
-    Ok(LocalRunResult {
-        labels,
-        centroids: global,
-        inertia,
-        rounds: vec![RoundRecord {
-            kind: RoundKind::Local,
-            wall_secs: wall,
-            costs,
-        }],
-    })
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    /// Build the round's jobs (one Local job per block), tagged `job`.
+    pub fn start_round(&mut self, job: JobId) -> Vec<Job> {
+        assert_eq!(self.outstanding, 0, "round already in flight");
+        assert!(!self.done(), "run already complete");
+        self.round_started = Some(Instant::now());
+        self.outstanding = self.plan.len();
+        (0..self.plan.len())
+            .map(|block| Job {
+                job,
+                block,
+                round: 0,
+                payload: JobPayload::Local {
+                    init: Arc::clone(&self.init),
+                },
+            })
+            .collect()
+    }
+
+    /// Buffer one outcome. Returns `true` when every block has arrived.
+    pub fn absorb(&mut self, outcome: JobOutcome) -> Result<bool> {
+        ensure!(
+            outcome.block < self.pending.len(),
+            "block {} outside plan ({} blocks)",
+            outcome.block,
+            self.pending.len()
+        );
+        ensure!(
+            self.pending[outcome.block].is_none(),
+            "duplicate outcome for block {}",
+            outcome.block
+        );
+        ensure!(self.outstanding > 0, "no round in flight");
+        self.pending[outcome.block] = Some(outcome);
+        self.outstanding -= 1;
+        Ok(self.outstanding == 0)
+    }
+
+    /// Harmonize the completed round and assemble the label map.
+    pub fn finish_round(&mut self) -> Result<()> {
+        assert_eq!(self.outstanding, 0, "round still in flight");
+        ensure!(!self.done(), "run already complete");
+        let wall_secs = self
+            .round_started
+            .take()
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+
+        // Collect block centroids + weights in block order.
+        let mut block_centroids: Vec<Vec<f32>> = Vec::with_capacity(self.pending.len());
+        let mut block_counts: Vec<Vec<u64>> = Vec::with_capacity(self.pending.len());
+        let mut inertia = 0.0;
+        let mut costs = Vec::with_capacity(self.pending.len());
+        for slot in &self.pending {
+            let o = slot.as_ref().expect("round complete");
+            let JobResult::Local {
+                centroids,
+                inertia: bi,
+                counts,
+                ..
+            } = &o.result
+            else {
+                bail!("unexpected result kind in local round");
+            };
+            block_centroids.push(centroids.clone());
+            block_counts.push(counts.clone());
+            inertia += bi;
+            costs.push(BlockCost::from_outcome(o));
+        }
+
+        // Harmonize: weighted K-Means over all block centroids, seeded at
+        // the global init (so K stays K and empty centres keep a defined
+        // spot).
+        let global = harmonize_centroids(
+            &block_centroids,
+            &block_counts,
+            &self.init,
+            self.k,
+            self.channels,
+            10,
+        );
+
+        // Remap labels block by block and assemble.
+        let mut assembler = LabelAssembler::new(self.plan.height(), self.plan.width());
+        for slot in &mut self.pending {
+            let o = slot.take().expect("round complete");
+            let JobResult::Local {
+                labels, centroids, ..
+            } = &o.result
+            else {
+                unreachable!("checked above");
+            };
+            let map = label_map(centroids, &global, self.k, self.channels);
+            let remapped: Vec<u32> = labels.iter().map(|&l| map[l as usize]).collect();
+            assembler.place(self.plan.region(o.block), &remapped)?;
+        }
+        let labels = assembler.finish()?;
+
+        self.output = Some(LocalOutput {
+            labels,
+            centroids: global,
+            inertia,
+            rounds: vec![RoundRecord {
+                kind: RoundKind::Local,
+                wall_secs,
+                costs,
+            }],
+        });
+        Ok(())
+    }
+
+    /// Take the finished output. Errors if the run is not done.
+    pub fn into_output(self) -> Result<LocalOutput> {
+        self.output.ok_or_else(|| anyhow::anyhow!("local run not complete"))
+    }
 }
 
 /// Weighted Lloyd over the union of block centroids. Points are the

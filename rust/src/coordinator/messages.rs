@@ -1,16 +1,36 @@
 //! Leader↔worker message types.
+//!
+//! Since the service layer landed, every message is tagged with a
+//! [`JobId`]: one worker pool multiplexes blocks from many concurrent
+//! clustering jobs, and workers key their per-block state (pruned
+//! bounds, readers, backends) by job so interleaved jobs can never
+//! contaminate each other. Single-run [`crate::coordinator::Coordinator`]
+//! drives use the reserved [`SOLO_JOB`] id.
 
 use std::sync::Arc;
 
 use crate::kmeans::kernel::CentroidDrift;
 use crate::kmeans::math::StepAccum;
 
-/// A unit of work: one block, one operation.
+/// Identifies one clustering job multiplexed over a shared worker pool.
+/// Worker-side contexts are looked up per id in the pool's
+/// [`crate::coordinator::ContextRegistry`].
+pub type JobId = u64;
+
+/// The job id a single-run `Coordinator` registers its context under.
+/// The service allocates ids starting from 1, so the two can never
+/// collide even if a solo run borrowed a service pool.
+pub const SOLO_JOB: JobId = 0;
+
+/// A unit of work: one block of one job, one operation.
 #[derive(Clone, Debug)]
 pub struct Job {
-    /// Index into the block plan.
+    /// Which clustering job this block belongs to.
+    pub job: JobId,
+    /// Index into the owning job's block plan.
     pub block: usize,
-    /// Monotone round number (sanity check against stale results).
+    /// Monotone per-job round number (sanity check against stale
+    /// results; keys pruned-bounds continuity across rounds).
     pub round: u64,
     pub payload: JobPayload,
 }
@@ -22,25 +42,30 @@ pub enum JobPayload {
     /// One Lloyd accumulation pass at the given centroids. `drift` is
     /// the per-centroid movement of the update that *produced* these
     /// centroids (`None` on the first round); workers running a pruned
-    /// kernel use it to advance their per-block Hamerly bounds.
+    /// kernel use it to advance their per-(job, block) Hamerly bounds.
     Step {
         centroids: Arc<Vec<f32>>,
         drift: Option<Arc<CentroidDrift>>,
     },
     /// Final assignment at the given centroids. With the fused kernel
-    /// and a valid per-block pruning state, workers reuse the last
-    /// round's bounds instead of a from-scratch scan.
+    /// and a valid per-(job, block) pruning state, workers reuse the
+    /// last round's bounds instead of a from-scratch scan.
     Assign {
         centroids: Arc<Vec<f32>>,
         drift: Option<Arc<CentroidDrift>>,
     },
     /// Independent per-block K-Means from the given init.
     Local { init: Arc<Vec<f32>> },
-    /// Readiness barrier: reply immediately (no block read, no compute).
-    /// Used by the leader to absorb worker startup (PJRT client build +
-    /// artifact compile — the parpool-startup analogue) before any timed
-    /// round begins.
+    /// Readiness barrier: reply immediately (no block read, no compute
+    /// beyond backend warmup). Used by the leader to absorb worker
+    /// startup (PJRT client build + artifact compile — the
+    /// parpool-startup analogue) before any timed round begins.
     Ping,
+    /// The tagged job is finished (completed, failed, or cancelled):
+    /// drop any cached per-job worker state (reader, backend, pruned
+    /// bounds). Produces **no** reply message — the leader does not
+    /// count retirements.
+    Retire,
 }
 
 /// Per-block timing breakdown (feeds the simtime calibration).
@@ -63,6 +88,9 @@ impl BlockTiming {
 /// Result of one job.
 #[derive(Clone, Debug)]
 pub struct JobOutcome {
+    /// The clustering job this outcome belongs to (routing key when many
+    /// jobs share one pool).
+    pub job: JobId,
     pub block: usize,
     pub round: u64,
     pub worker: usize,
@@ -91,6 +119,25 @@ pub enum JobResult {
     Pong,
 }
 
+/// A worker-side failure, tagged with the job it belongs to so a shared
+/// pool can fail one job without tearing down the others.
+#[derive(Debug)]
+pub struct JobError {
+    pub job: JobId,
+    pub block: usize,
+    pub error: anyhow::Error,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "job {} block {}: {:#}",
+            self.job, self.block, self.error
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,6 +146,7 @@ mod tests {
     fn payload_is_cheap_to_clone() {
         let cen = Arc::new(vec![0.0f32; 6]);
         let job = Job {
+            job: SOLO_JOB,
             block: 3,
             round: 1,
             payload: JobPayload::Step {
@@ -123,5 +171,16 @@ mod tests {
             pixels: 100,
         };
         assert!((t.total() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn job_error_names_job_and_block() {
+        let e = JobError {
+            job: 7,
+            block: 3,
+            error: anyhow::anyhow!("boom"),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("job 7") && msg.contains("block 3") && msg.contains("boom"));
     }
 }

@@ -1,8 +1,8 @@
 //! The coordinator: leader/worker parallel block processing for K-Means.
 //!
-//! [`Coordinator`] is the public entry point. Configured with a worker
-//! count, compute engine, I/O mode and clustering mode, it executes the
-//! paper's pipeline over a [`BlockPlan`]:
+//! [`Coordinator`] is the single-run public entry point. Configured with
+//! a worker count, compute engine, I/O mode and clustering mode, it
+//! executes the paper's pipeline over a [`BlockPlan`]:
 //!
 //! ```text
 //!   image ──▶ block plan ──▶ job rounds ──▶ workers (N threads,
@@ -13,6 +13,14 @@
 //! Modes: [`ClusterMode::Global`] (exactly-sequential-equivalent K-Means
 //! with per-iteration reduction) and [`ClusterMode::Local`] (independent
 //! per-block clustering + centroid harmonization — `blockproc(@kmeans)`).
+//!
+//! Internally each run is a [`RunMachine`]: an incremental per-job
+//! reduction state machine ([`GlobalState`] / [`LocalState`]) driven
+//! round by round over a [`WorkerPool`]. A `Coordinator` spins up a
+//! private pool and drives one machine to completion; the persistent
+//! multi-job [`crate::service`] layer drives many machines over one
+//! shared pool, interleaving their blocks — both produce bit-identical
+//! results because reduction order is block order either way.
 
 mod global;
 mod local;
@@ -21,10 +29,14 @@ mod pool;
 mod queue;
 mod worker;
 
-pub use messages::{BlockTiming, Job, JobOutcome, JobPayload, JobResult};
+pub use global::{GlobalOutput, GlobalPhase, GlobalState};
+pub use local::{LocalOutput, LocalState};
+pub use messages::{
+    BlockTiming, Job, JobError, JobId, JobOutcome, JobPayload, JobResult, SOLO_JOB,
+};
 pub use pool::WorkerPool;
 pub use queue::{JobQueue, Schedule};
-pub use worker::{BlockSource, WorkerContext};
+pub use worker::{BlockSource, ContextRegistry, WorkerContext};
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -46,6 +58,33 @@ pub enum Engine {
     Native,
     /// AOT JAX/Pallas kernels via PJRT. `None` = auto-locate `artifacts/`.
     Pjrt { artifacts_dir: Option<PathBuf> },
+}
+
+impl Engine {
+    /// The per-worker backend recipe for this engine at a given
+    /// clustering width (shared by the solo [`Coordinator`] and the
+    /// service's per-job contexts).
+    pub fn backend_spec(&self, k: usize, channels: usize) -> Result<BackendSpec> {
+        Ok(match self {
+            Engine::Native => BackendSpec::Native {
+                k,
+                channels,
+                local_iters: 8,
+            },
+            Engine::Pjrt { artifacts_dir } => {
+                let dir = match artifacts_dir {
+                    Some(d) => d.clone(),
+                    None => crate::runtime::find_artifacts_dir().context(
+                        "artifacts directory not found (run `make artifacts` or set BLOCKMS_ARTIFACTS)",
+                    )?,
+                };
+                BackendSpec::Pjrt {
+                    artifacts_dir: dir,
+                    k,
+                }
+            }
+        })
+    }
 }
 
 /// How workers obtain block pixels.
@@ -133,8 +172,8 @@ pub struct CoordinatorConfig {
     pub schedule: Schedule,
     /// Compute kernel for step/assign rounds (naive, pruned, fused —
     /// bit-identical results, different wall-clock; see
-    /// [`crate::kmeans::kernel`]). Pruned state lives per block on the
-    /// workers, so [`Schedule::Static`] keeps it warmest.
+    /// [`crate::kmeans::kernel`]). Pruned state lives per (job, block)
+    /// on the workers, so [`Schedule::Static`] keeps it warmest.
     pub kernel: KernelChoice,
     /// Fault injection for tests: block index whose processing fails.
     pub fail_block: Option<usize>,
@@ -211,7 +250,8 @@ pub struct ClusterOutput {
     pub total_secs: f64,
     /// Worker startup seconds (thread spawn + backend build, absorbed by
     /// the warmup barrier) — the parpool-startup analogue, excluded from
-    /// the paper-table replays.
+    /// the paper-table replays. Zero for service jobs (the pool is
+    /// already warm).
     pub spawn_secs: f64,
     /// Per-round timing breakdown (feeds the simtime replay).
     pub rounds: Vec<RoundRecord>,
@@ -219,6 +259,141 @@ pub struct ClusterOutput {
     pub io_stats: Option<crate::stripstore::AccessSnapshot>,
     pub blocks: usize,
     pub workers: usize,
+}
+
+impl ClusterOutput {
+    /// Assemble from a finished [`RunMachine`] plus the run-level fields
+    /// the machine cannot know (single construction point for the solo
+    /// coordinator and the service, so the two cannot drift).
+    pub fn from_machine(
+        m: MachineOutput,
+        total_secs: f64,
+        spawn_secs: f64,
+        io_stats: Option<AccessSnapshot>,
+        blocks: usize,
+        workers: usize,
+    ) -> ClusterOutput {
+        ClusterOutput {
+            labels: m.labels,
+            centroids: m.centroids,
+            inertia: m.inertia,
+            inertia_trace: m.inertia_trace,
+            iterations: m.iterations,
+            converged: m.converged,
+            total_secs,
+            spawn_secs,
+            rounds: m.rounds,
+            io_stats,
+            blocks,
+            workers,
+        }
+    }
+}
+
+/// One clustering run's reduction state machine: global or local mode
+/// behind one interface. Drive it with [`RunMachine::start_round`] →
+/// absorb every outcome → [`RunMachine::finish_round`], until
+/// [`RunMachine::done`]; reduction happens in block order regardless of
+/// arrival order, which is what makes interleaved multi-job runs
+/// bit-identical to solo runs.
+pub enum RunMachine {
+    Global(GlobalState),
+    Local(LocalState),
+}
+
+/// Mode-independent view of a finished [`RunMachine`].
+#[derive(Clone, Debug)]
+pub struct MachineOutput {
+    pub labels: Vec<u32>,
+    pub centroids: Vec<f32>,
+    pub inertia: f64,
+    pub inertia_trace: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunMachine {
+    /// Build the machine for a job: same init draw as the sequential
+    /// baseline, mode picked from the config.
+    pub fn new(
+        mode: ClusterMode,
+        plan: Arc<BlockPlan>,
+        channels: usize,
+        ccfg: &ClusterConfig,
+        init_centroids: Vec<f32>,
+    ) -> RunMachine {
+        match mode {
+            ClusterMode::Global => RunMachine::Global(GlobalState::new(
+                plan,
+                channels,
+                &ccfg.kmeans(),
+                ccfg.fixed_iters,
+                init_centroids,
+            )),
+            ClusterMode::Local => {
+                RunMachine::Local(LocalState::new(plan, channels, ccfg.k, init_centroids))
+            }
+        }
+    }
+
+    pub fn start_round(&mut self, job: JobId) -> Vec<Job> {
+        match self {
+            RunMachine::Global(g) => g.start_round(job),
+            RunMachine::Local(l) => l.start_round(job),
+        }
+    }
+
+    /// Returns `true` when the in-flight round is complete.
+    pub fn absorb(&mut self, outcome: JobOutcome) -> Result<bool> {
+        match self {
+            RunMachine::Global(g) => g.absorb(outcome),
+            RunMachine::Local(l) => l.absorb(outcome),
+        }
+    }
+
+    pub fn finish_round(&mut self) -> Result<()> {
+        match self {
+            RunMachine::Global(g) => g.finish_round(),
+            RunMachine::Local(l) => l.finish_round(),
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        match self {
+            RunMachine::Global(g) => g.done(),
+            RunMachine::Local(l) => l.done(),
+        }
+    }
+
+    pub fn into_output(self) -> Result<MachineOutput> {
+        match self {
+            RunMachine::Global(g) => {
+                let o = g.into_output()?;
+                Ok(MachineOutput {
+                    labels: o.labels,
+                    centroids: o.centroids,
+                    inertia: o.inertia,
+                    inertia_trace: o.inertia_trace,
+                    iterations: o.iterations,
+                    converged: o.converged,
+                    rounds: o.rounds,
+                })
+            }
+            RunMachine::Local(l) => {
+                let o = l.into_output()?;
+                Ok(MachineOutput {
+                    labels: o.labels,
+                    centroids: o.centroids,
+                    inertia: o.inertia,
+                    inertia_trace: Vec::new(),
+                    iterations: 1,
+                    converged: true,
+                    rounds: o.rounds,
+                })
+            }
+        }
+    }
 }
 
 /// The leader. See module docs.
@@ -235,28 +410,6 @@ impl Coordinator {
 
     pub fn config(&self) -> &CoordinatorConfig {
         &self.cfg
-    }
-
-    fn backend_spec(&self, img: &Raster, ccfg: &ClusterConfig) -> Result<BackendSpec> {
-        Ok(match &self.cfg.engine {
-            Engine::Native => BackendSpec::Native {
-                k: ccfg.k,
-                channels: img.channels(),
-                local_iters: 8,
-            },
-            Engine::Pjrt { artifacts_dir } => {
-                let dir = match artifacts_dir {
-                    Some(d) => d.clone(),
-                    None => crate::runtime::find_artifacts_dir().context(
-                        "artifacts directory not found (run `make artifacts` or set BLOCKMS_ARTIFACTS)",
-                    )?,
-                };
-                BackendSpec::Pjrt {
-                    artifacts_dir: dir,
-                    k: ccfg.k,
-                }
-            }
-        })
     }
 
     /// Cluster `img` using the parallel block pipeline over `plan`.
@@ -298,69 +451,43 @@ impl Coordinator {
             }
         };
 
-        let ctx = WorkerContext {
+        let ctx = Arc::new(WorkerContext {
             plan: Arc::clone(plan),
             source,
-            backend: self.backend_spec(img, ccfg)?,
+            backend: self.cfg.engine.backend_spec(ccfg.k, img.channels())?,
             fail_block: self.cfg.fail_block,
             local_mode: self.cfg.mode == ClusterMode::Local,
             kernel: self.cfg.kernel,
-        };
-        let pool = WorkerPool::spawn(self.cfg.workers, ctx, self.cfg.schedule);
-        let spawn_secs = pool.warmup()?;
+        });
+        let pool = WorkerPool::spawn(self.cfg.workers, self.cfg.schedule);
+        pool.register_job(SOLO_JOB, ctx);
+        let spawn_secs = pool.warmup(SOLO_JOB)?;
 
-        let mut rounds = Vec::new();
-        let (labels, centroids, inertia, inertia_trace, iterations, converged) =
-            match self.cfg.mode {
-                ClusterMode::Global => {
-                    let it = global::iterate(
-                        &pool,
-                        plan,
-                        img.channels(),
-                        &ccfg.kmeans(),
-                        ccfg.fixed_iters,
-                        init_centroids,
-                    )?;
-                    rounds.extend(it.rounds);
-                    let (labels, inertia, assign_round) = global::assign(
-                        &pool,
-                        plan,
-                        &it.centroids,
-                        it.iterations as u64,
-                        it.drift.clone(),
-                    )?;
-                    rounds.push(assign_round);
-                    (
-                        labels,
-                        it.centroids,
-                        inertia,
-                        it.inertia_trace,
-                        it.iterations,
-                        it.converged,
-                    )
-                }
-                ClusterMode::Local => {
-                    let r = local::run(&pool, plan, img.channels(), ccfg.k, &init_centroids)?;
-                    rounds.extend(r.rounds);
-                    (r.labels, r.centroids, r.inertia, Vec::new(), 1, true)
-                }
-            };
+        let mut machine = RunMachine::new(
+            self.cfg.mode,
+            Arc::clone(plan),
+            img.channels(),
+            ccfg,
+            init_centroids,
+        );
+        while !machine.done() {
+            let jobs = machine.start_round(SOLO_JOB);
+            for outcome in pool.run_round(jobs)? {
+                machine.absorb(outcome)?;
+            }
+            machine.finish_round()?;
+        }
         pool.shutdown();
+        let m = machine.into_output()?;
 
-        Ok(ClusterOutput {
-            labels,
-            centroids,
-            inertia,
-            inertia_trace,
-            iterations,
-            converged,
-            total_secs: t0.elapsed().as_secs_f64(),
+        Ok(ClusterOutput::from_machine(
+            m,
+            t0.elapsed().as_secs_f64(),
             spawn_secs,
-            rounds,
-            io_stats: store.map(|s| s.stats().snapshot()),
-            blocks: plan.len(),
-            workers: self.cfg.workers,
-        })
+            store.map(|s| s.stats().snapshot()),
+            plan.len(),
+            self.cfg.workers,
+        ))
     }
 
     /// The sequential baseline with the same init draw — the paper's
@@ -628,7 +755,8 @@ mod tests {
         let err = coord
             .cluster(&img, &plan, &ClusterConfig::default())
             .unwrap_err();
-        assert!(err.to_string().contains("injected failure"), "{err}");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected failure"), "{msg}");
     }
 
     #[test]

@@ -1,51 +1,65 @@
 //! The leader's handle on its SPMD worker pool.
+//!
+//! A pool is spawned **once** and can serve many clustering jobs over
+//! its lifetime: jobs register a [`WorkerContext`] under their
+//! [`JobId`], submit tagged block jobs, receive tagged outcomes, and
+//! retire when done (dropping worker-side cached state). Single-run
+//! callers use the [`WorkerPool::run_round`] barrier, which keeps the
+//! paper's per-iteration synchronous semantics; the service layer uses
+//! the streaming [`WorkerPool::submit`]/[`WorkerPool::recv_result`]
+//! pair to interleave rounds of many jobs at once.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use super::messages::{Job, JobOutcome};
+use super::messages::{Job, JobError, JobId, JobOutcome, JobPayload};
 use super::queue::{JobQueue, Schedule};
-use super::worker::{worker_main, WorkerContext};
+use super::worker::{worker_main, ContextRegistry, WorkerContext};
 
-/// A pool of worker threads processing block jobs round by round.
-/// Rounds are synchronous at the leader (K-Means iterations are globally
-/// sequential — centroids for round `r+1` need all of round `r`), matching
-/// the paper's per-iteration barrier.
+/// A pool of worker threads processing tagged block jobs.
 pub struct WorkerPool {
     queue: Arc<JobQueue>,
-    results: Receiver<Result<JobOutcome>>,
+    registry: Arc<ContextRegistry>,
+    results: Receiver<Result<JobOutcome, JobError>>,
     handles: Vec<JoinHandle<()>>,
     workers: usize,
+    /// High water of simultaneously registered jobs (instrumentation
+    /// backing the admission-cap assertions).
+    open_high_water: AtomicUsize,
 }
 
 impl WorkerPool {
-    /// Spawn `workers` threads, each building its own compute backend
-    /// from `ctx.backend` (PJRT clients are per-worker by necessity —
-    /// and by design: it is the parpool model).
-    pub fn spawn(workers: usize, ctx: WorkerContext, schedule: Schedule) -> WorkerPool {
+    /// Spawn `workers` threads. Workers build per-job compute backends
+    /// lazily from the registered contexts (PJRT clients are per-worker
+    /// by necessity — and by design: it is the parpool model).
+    pub fn spawn(workers: usize, schedule: Schedule) -> WorkerPool {
         assert!(workers > 0, "need at least one worker");
         let queue = Arc::new(JobQueue::new(workers, schedule));
+        let registry = Arc::new(ContextRegistry::new());
         let (tx, rx) = channel();
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let queue = Arc::clone(&queue);
-            let ctx = ctx.clone();
+            let registry = Arc::clone(&registry);
             let tx = tx.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("blockms-worker-{w}"))
-                    .spawn(move || worker_main(w, ctx, queue, tx))
+                    .spawn(move || worker_main(w, registry, queue, tx))
                     .expect("spawn worker thread"),
             );
         }
         WorkerPool {
             queue,
+            registry,
             results: rx,
             handles,
             workers,
+            open_high_water: AtomicUsize::new(0),
         }
     }
 
@@ -53,10 +67,62 @@ impl WorkerPool {
         self.workers
     }
 
+    /// Register the per-job context workers will resolve `job`'s blocks
+    /// against. Must happen before any of the job's blocks are
+    /// submitted.
+    pub fn register_job(&self, job: JobId, ctx: Arc<WorkerContext>) {
+        let open = self.registry.register(job, ctx);
+        self.open_high_water.fetch_max(open, Ordering::Relaxed);
+    }
+
+    /// Drop the job's registered context and tell every worker to shed
+    /// its cached per-job state (backend, reader, pruned bounds). Call
+    /// only after all of the job's in-flight outcomes have been
+    /// received — a retire overtaking live blocks would fail them.
+    pub fn retire_job(&self, job: JobId) {
+        self.registry.remove(job);
+        for w in 0..self.workers {
+            self.queue.push_to_worker(
+                w,
+                Job {
+                    job,
+                    block: usize::MAX,
+                    round: 0,
+                    payload: JobPayload::Retire,
+                },
+            );
+        }
+    }
+
+    /// Remove the job's queued (not yet popped) blocks; returns how many
+    /// were removed so the leader can shrink its expected-outcome count.
+    pub fn purge_job(&self, job: JobId) -> usize {
+        self.queue.purge_job(job)
+    }
+
+    /// Enqueue tagged jobs without waiting for their outcomes (the
+    /// service's streaming mode).
+    pub fn submit(&self, jobs: Vec<Job>) {
+        if !jobs.is_empty() {
+            self.queue.push_round(jobs);
+        }
+    }
+
+    /// Receive the next outcome (any job). The outer `Err` means the
+    /// pool itself hung up (all workers gone); the inner [`JobError`]
+    /// is a per-job failure that leaves the pool serviceable.
+    pub fn recv_result(&self) -> Result<Result<JobOutcome, JobError>> {
+        self.results
+            .recv()
+            .map_err(|_| anyhow!("worker pool hung up"))
+    }
+
     /// Execute one round of jobs, blocking until all results arrive.
     /// Outcomes are returned sorted by block index (deterministic
     /// downstream reduction regardless of completion order). The first
-    /// worker error aborts the round.
+    /// worker error aborts the round. Assumes the caller is the only
+    /// one with jobs in flight — multi-job leaders use
+    /// [`WorkerPool::submit`] / [`WorkerPool::recv_result`] instead.
     pub fn run_round(&self, jobs: Vec<Job>) -> Result<Vec<JobOutcome>> {
         let expect = jobs.len();
         if expect == 0 {
@@ -67,7 +133,8 @@ impl WorkerPool {
         for _ in 0..expect {
             match self.results.recv() {
                 Ok(Ok(outcome)) => out.push(outcome),
-                Ok(Err(e)) => return Err(e),
+                // Worker errors carry their own worker/block attribution.
+                Ok(Err(e)) => return Err(e.error),
                 Err(_) => {
                     return Err(anyhow!(
                         "worker pool hung up mid-round ({}/{} results)",
@@ -81,30 +148,44 @@ impl WorkerPool {
         Ok(out)
     }
 
-    /// Readiness barrier: one ping per worker, wait for all pongs.
-    /// Absorbs worker startup cost (thread spawn + backend build — PJRT
-    /// client construction and artifact compilation) so subsequent rounds
-    /// time only steady-state work. Returns the barrier's wall seconds.
-    pub fn warmup(&self) -> Result<f64> {
+    /// Readiness barrier for one registered job: one ping per worker,
+    /// wait for all pongs. Absorbs worker startup cost (thread spawn +
+    /// backend build — PJRT client construction and artifact
+    /// compilation) so subsequent rounds time only steady-state work.
+    /// Returns the barrier's wall seconds.
+    pub fn warmup(&self, job: JobId) -> Result<f64> {
         let t0 = std::time::Instant::now();
         for w in 0..self.workers {
             self.queue.push_to_worker(
                 w,
                 Job {
+                    job,
                     block: usize::MAX,
                     round: 0,
-                    payload: super::messages::JobPayload::Ping,
+                    payload: JobPayload::Ping,
                 },
             );
         }
         for _ in 0..self.workers {
             match self.results.recv() {
                 Ok(Ok(_)) => {}
-                Ok(Err(e)) => return Err(e),
+                Ok(Err(e)) => return Err(e.error),
                 Err(_) => return Err(anyhow!("worker pool hung up during warmup")),
             }
         }
         Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// High water of simultaneously registered (open) jobs over the
+    /// pool's lifetime.
+    pub fn max_open_jobs(&self) -> usize {
+        self.open_high_water.load(Ordering::Relaxed)
+    }
+
+    /// High water of distinct jobs simultaneously queued in the shared
+    /// (dynamic) queue.
+    pub fn max_jobs_interleaved(&self) -> usize {
+        self.queue.max_jobs_interleaved()
     }
 
     /// Close the queue and join all workers.
@@ -129,16 +210,16 @@ impl Drop for WorkerPool {
 mod tests {
     use super::*;
     use crate::blocks::{BlockPlan, BlockShape};
-    use crate::coordinator::messages::{JobPayload, JobResult};
+    use crate::coordinator::messages::{JobResult, SOLO_JOB};
     use crate::coordinator::worker::BlockSource;
     use crate::image::SyntheticOrtho;
     use crate::kmeans::math;
     use crate::runtime::BackendSpec;
 
-    fn context(fail_block: Option<usize>) -> (WorkerContext, Arc<crate::image::Raster>) {
+    fn context(fail_block: Option<usize>) -> (Arc<WorkerContext>, Arc<crate::image::Raster>) {
         let img = Arc::new(SyntheticOrtho::default().with_seed(11).generate(48, 40));
         let plan = Arc::new(BlockPlan::new(48, 40, BlockShape::Square { side: 16 }));
-        let ctx = WorkerContext {
+        let ctx = Arc::new(WorkerContext {
             plan,
             source: BlockSource::Direct(Arc::clone(&img)),
             backend: BackendSpec::Native {
@@ -149,13 +230,14 @@ mod tests {
             fail_block,
             local_mode: false,
             kernel: crate::kmeans::kernel::KernelChoice::Naive,
-        };
+        });
         (ctx, img)
     }
 
-    fn step_jobs(n: usize, centroids: &Arc<Vec<f32>>) -> Vec<Job> {
+    fn step_jobs(id: JobId, n: usize, centroids: &Arc<Vec<f32>>) -> Vec<Job> {
         (0..n)
             .map(|b| Job {
+                job: id,
                 block: b,
                 round: 1,
                 payload: JobPayload::Step {
@@ -170,12 +252,14 @@ mod tests {
     fn round_results_cover_all_blocks_sorted() {
         let (ctx, _img) = context(None);
         let nblocks = ctx.plan.len();
-        let pool = WorkerPool::spawn(3, ctx, Schedule::Dynamic);
+        let pool = WorkerPool::spawn(3, Schedule::Dynamic);
+        pool.register_job(SOLO_JOB, ctx);
         let cen = Arc::new(vec![10.0, 10.0, 10.0, 200.0, 200.0, 200.0]);
-        let outcomes = pool.run_round(step_jobs(nblocks, &cen)).unwrap();
+        let outcomes = pool.run_round(step_jobs(SOLO_JOB, nblocks, &cen)).unwrap();
         assert_eq!(outcomes.len(), nblocks);
         let blocks: Vec<usize> = outcomes.iter().map(|o| o.block).collect();
         assert_eq!(blocks, (0..nblocks).collect::<Vec<_>>());
+        assert!(outcomes.iter().all(|o| o.job == SOLO_JOB));
         pool.shutdown();
     }
 
@@ -183,10 +267,11 @@ mod tests {
     fn parallel_reduction_equals_whole_image_step() {
         let (ctx, img) = context(None);
         let nblocks = ctx.plan.len();
-        let pool = WorkerPool::spawn(4, ctx, Schedule::Dynamic);
+        let pool = WorkerPool::spawn(4, Schedule::Dynamic);
+        pool.register_job(SOLO_JOB, ctx);
         let cen_v = vec![10.0, 10.0, 10.0, 200.0, 200.0, 200.0];
         let cen = Arc::new(cen_v.clone());
-        let outcomes = pool.run_round(step_jobs(nblocks, &cen)).unwrap();
+        let outcomes = pool.run_round(step_jobs(SOLO_JOB, nblocks, &cen)).unwrap();
         let mut merged = math::StepAccum::zeros(2, 3);
         for o in &outcomes {
             match &o.result {
@@ -207,10 +292,65 @@ mod tests {
     fn injected_failure_propagates() {
         let (ctx, _img) = context(Some(2));
         let nblocks = ctx.plan.len();
-        let pool = WorkerPool::spawn(2, ctx, Schedule::Dynamic);
+        let pool = WorkerPool::spawn(2, Schedule::Dynamic);
+        pool.register_job(SOLO_JOB, ctx);
         let cen = Arc::new(vec![0.0; 6]);
-        let err = pool.run_round(step_jobs(nblocks, &cen)).unwrap_err();
-        assert!(err.to_string().contains("injected failure"), "{err}");
+        let err = pool.run_round(step_jobs(SOLO_JOB, nblocks, &cen)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected failure"), "{msg}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn unregistered_job_fails_cleanly() {
+        let (ctx, _img) = context(None);
+        let pool = WorkerPool::spawn(1, Schedule::Dynamic);
+        pool.register_job(SOLO_JOB, ctx);
+        let cen = Arc::new(vec![0.0; 6]);
+        let err = pool.run_round(step_jobs(99, 1, &cen)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("no registered context"), "{msg}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn two_jobs_share_one_pool() {
+        let (ctx_a, img) = context(None);
+        // second job: same image, different k
+        let ctx_b = Arc::new(WorkerContext {
+            backend: BackendSpec::Native {
+                k: 3,
+                channels: 3,
+                local_iters: 4,
+            },
+            ..(*ctx_a).clone()
+        });
+        let nblocks = ctx_a.plan.len();
+        let pool = WorkerPool::spawn(2, Schedule::Dynamic);
+        pool.register_job(1, ctx_a);
+        pool.register_job(2, ctx_b);
+        assert_eq!(pool.max_open_jobs(), 2);
+        let cen2 = Arc::new(vec![10.0, 10.0, 10.0, 200.0, 200.0, 200.0]);
+        let cen3 = Arc::new(vec![10.0, 10.0, 10.0, 120.0, 120.0, 120.0, 220.0, 220.0, 220.0]);
+        let mut jobs = step_jobs(1, nblocks, &cen2);
+        jobs.extend(step_jobs(2, nblocks, &cen3));
+        pool.submit(jobs);
+        let mut merged_a = math::StepAccum::zeros(2, 3);
+        let mut merged_b = math::StepAccum::zeros(3, 3);
+        for _ in 0..2 * nblocks {
+            let o = pool.recv_result().unwrap().unwrap();
+            match (&o.result, o.job) {
+                (JobResult::Step { accum }, 1) => merged_a.merge(accum),
+                (JobResult::Step { accum }, 2) => merged_b.merge(accum),
+                other => unreachable!("{other:?}"),
+            }
+        }
+        let whole_a = math::step(img.as_pixels(), &cen2, 2, 3);
+        let whole_b = math::step(img.as_pixels(), &cen3, 3, 3);
+        assert_eq!(merged_a.counts, whole_a.counts);
+        assert_eq!(merged_b.counts, whole_b.counts);
+        pool.retire_job(1);
+        pool.retire_job(2);
         pool.shutdown();
     }
 
@@ -218,10 +358,11 @@ mod tests {
     fn multiple_rounds_reuse_workers() {
         let (ctx, _img) = context(None);
         let nblocks = ctx.plan.len();
-        let pool = WorkerPool::spawn(2, ctx, Schedule::Static);
+        let pool = WorkerPool::spawn(2, Schedule::Static);
+        pool.register_job(SOLO_JOB, ctx);
         let cen = Arc::new(vec![0.0, 0.0, 0.0, 255.0, 255.0, 255.0]);
         for round in 0..3 {
-            let outcomes = pool.run_round(step_jobs(nblocks, &cen)).unwrap();
+            let outcomes = pool.run_round(step_jobs(SOLO_JOB, nblocks, &cen)).unwrap();
             assert_eq!(outcomes.len(), nblocks, "round {round}");
         }
         pool.shutdown();
@@ -232,9 +373,10 @@ mod tests {
         let (ctx, _img) = context(None);
         let nblocks = ctx.plan.len();
         assert!(nblocks >= 4);
-        let pool = WorkerPool::spawn(2, ctx, Schedule::Static);
+        let pool = WorkerPool::spawn(2, Schedule::Static);
+        pool.register_job(SOLO_JOB, ctx);
         let cen = Arc::new(vec![0.0; 6]);
-        let outcomes = pool.run_round(step_jobs(nblocks, &cen)).unwrap();
+        let outcomes = pool.run_round(step_jobs(SOLO_JOB, nblocks, &cen)).unwrap();
         let w0 = outcomes.iter().filter(|o| o.worker == 0).count();
         let w1 = outcomes.iter().filter(|o| o.worker == 1).count();
         assert_eq!(w0 + w1, nblocks);
@@ -245,8 +387,19 @@ mod tests {
     #[test]
     fn empty_round_is_noop() {
         let (ctx, _img) = context(None);
-        let pool = WorkerPool::spawn(1, ctx, Schedule::Dynamic);
+        let pool = WorkerPool::spawn(1, Schedule::Dynamic);
+        pool.register_job(SOLO_JOB, ctx);
         assert!(pool.run_round(Vec::new()).unwrap().is_empty());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn warmup_pings_all_workers() {
+        let (ctx, _img) = context(None);
+        let pool = WorkerPool::spawn(3, Schedule::Dynamic);
+        pool.register_job(SOLO_JOB, ctx);
+        let secs = pool.warmup(SOLO_JOB).unwrap();
+        assert!(secs >= 0.0);
         pool.shutdown();
     }
 }

@@ -1,25 +1,32 @@
-//! Job distribution: static (pre-assigned) or dynamic (shared) queues.
+//! Job distribution: static (pre-assigned) or dynamic (shared) queues,
+//! with fair cross-job interleaving.
 //!
 //! MATLAB's `parfor`/`blockproc` schedules blocks onto parpool workers
 //! dynamically; a static round-robin split is the classic alternative the
 //! ablation bench compares (static splits suffer when block costs are
 //! skewed, e.g. partial edge blocks). Both are one structure: a set of
-//! per-worker deques plus an optional shared overflow — `pop(worker)`
-//! drains the worker's own deque first, then (dynamic mode) steals from
-//! the shared pool.
+//! per-worker deques plus shared per-job deques — `pop(worker)` drains
+//! the worker's own deque first, then (dynamic mode) takes from the
+//! shared pool.
+//!
+//! The shared pool is segregated **per job** and drained round-robin
+//! across job ids: when blocks from several images/jobs are in flight at
+//! once (the service's multi-job mode), workers alternate between jobs
+//! instead of head-of-line-blocking on whichever job enqueued first.
+//! Within one job, blocks keep their enqueue order.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 
-use super::messages::Job;
+use super::messages::{Job, JobId};
 
 /// Scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Schedule {
     /// Blocks pre-assigned round-robin; no stealing.
     Static,
-    /// Single shared queue; workers pull as they finish (default; what
-    /// `parfor` does).
+    /// Shared per-job queues; workers pull as they finish (default; what
+    /// `parfor` does), interleaving fairly across jobs.
     Dynamic,
 }
 
@@ -35,15 +42,46 @@ impl std::str::FromStr for Schedule {
 }
 
 struct QueueState {
-    /// Per-worker private queues (static mode).
+    /// Per-worker private queues (static mode, pings, retirements).
     per_worker: Vec<VecDeque<Job>>,
-    /// Shared queue (dynamic mode).
-    shared: VecDeque<Job>,
+    /// Shared work, one non-empty deque per job id (dynamic mode).
+    shared: BTreeMap<JobId, VecDeque<Job>>,
+    /// Round-robin rotation over the job ids present in `shared`.
+    rotation: VecDeque<JobId>,
+    /// High water of distinct jobs simultaneously queued in `shared`
+    /// (instrumentation for the admission-cap tests).
+    max_jobs_interleaved: usize,
     /// No more jobs will ever arrive.
     closed: bool,
 }
 
-/// Blocking multi-worker job queue.
+impl QueueState {
+    /// Append to a job's shared deque, keeping `rotation` in sync (an id
+    /// is in the rotation iff its deque is non-empty).
+    fn push_shared(&mut self, job: Job) {
+        let q = self.shared.entry(job.job).or_default();
+        if q.is_empty() {
+            self.rotation.push_back(job.job);
+        }
+        q.push_back(job);
+        self.max_jobs_interleaved = self.max_jobs_interleaved.max(self.shared.len());
+    }
+
+    /// Take the next shared job, rotating fairly across job ids.
+    fn pop_shared(&mut self) -> Option<Job> {
+        let id = self.rotation.pop_front()?;
+        let q = self.shared.get_mut(&id).expect("rotation/shared in sync");
+        let job = q.pop_front().expect("rotation ids have non-empty deques");
+        if q.is_empty() {
+            self.shared.remove(&id);
+        } else {
+            self.rotation.push_back(id);
+        }
+        Some(job)
+    }
+}
+
+/// Blocking multi-worker, multi-job job queue.
 pub struct JobQueue {
     schedule: Schedule,
     state: Mutex<QueueState>,
@@ -57,7 +95,9 @@ impl JobQueue {
             schedule,
             state: Mutex::new(QueueState {
                 per_worker: (0..workers).map(|_| VecDeque::new()).collect(),
-                shared: VecDeque::new(),
+                shared: BTreeMap::new(),
+                rotation: VecDeque::new(),
+                max_jobs_interleaved: 0,
                 closed: false,
             }),
             cond: Condvar::new(),
@@ -70,7 +110,8 @@ impl JobQueue {
 
     /// Enqueue a round of jobs. Static: round-robin over workers (block
     /// `i` → worker `i % W`, matching the deterministic split MATLAB's
-    /// `spmd` codistributor would make). Dynamic: one shared queue.
+    /// `spmd` codistributor would make). Dynamic: per-job shared deques,
+    /// drained round-robin across jobs.
     pub fn push_round(&self, jobs: Vec<Job>) {
         let mut st = self.state.lock().unwrap();
         assert!(!st.closed, "push after close");
@@ -81,7 +122,11 @@ impl JobQueue {
                     st.per_worker[i % w].push_back(job);
                 }
             }
-            Schedule::Dynamic => st.shared.extend(jobs),
+            Schedule::Dynamic => {
+                for job in jobs {
+                    st.push_shared(job);
+                }
+            }
         }
         drop(st);
         self.cond.notify_all();
@@ -95,7 +140,7 @@ impl JobQueue {
             if let Some(job) = st.per_worker[worker].pop_front() {
                 return Some(job);
             }
-            if let Some(job) = st.shared.pop_front() {
+            if let Some(job) = st.pop_shared() {
                 return Some(job);
             }
             if st.closed {
@@ -105,14 +150,33 @@ impl JobQueue {
         }
     }
 
-    /// Enqueue a job for one specific worker (barrier pings), regardless
-    /// of schedule mode.
+    /// Enqueue a job for one specific worker (barrier pings, job
+    /// retirements), regardless of schedule mode.
     pub fn push_to_worker(&self, worker: usize, job: Job) {
         let mut st = self.state.lock().unwrap();
         assert!(!st.closed, "push after close");
         st.per_worker[worker].push_back(job);
         drop(st);
         self.cond.notify_all();
+    }
+
+    /// Remove every queued (not yet popped) job belonging to `job`.
+    /// Returns how many were removed — the leader subtracts them from
+    /// its expected-outcome count when cancelling or failing a job.
+    /// In-flight blocks (already popped) still produce outcomes.
+    pub fn purge_job(&self, job: JobId) -> usize {
+        let mut st = self.state.lock().unwrap();
+        let mut removed = 0;
+        if let Some(q) = st.shared.remove(&job) {
+            removed += q.len();
+        }
+        st.rotation.retain(|&id| id != job);
+        for q in &mut st.per_worker {
+            let before = q.len();
+            q.retain(|j| j.job != job);
+            removed += before - q.len();
+        }
+        removed
     }
 
     /// Close the queue; workers drain what remains and exit.
@@ -124,7 +188,14 @@ impl JobQueue {
     /// Jobs currently waiting (for tests / introspection).
     pub fn pending(&self) -> usize {
         let st = self.state.lock().unwrap();
-        st.shared.len() + st.per_worker.iter().map(VecDeque::len).sum::<usize>()
+        st.shared.values().map(VecDeque::len).sum::<usize>()
+            + st.per_worker.iter().map(VecDeque::len).sum::<usize>()
+    }
+
+    /// High water of distinct jobs simultaneously queued in the shared
+    /// pool (pool instrumentation; see the admission tests).
+    pub fn max_jobs_interleaved(&self) -> usize {
+        self.state.lock().unwrap().max_jobs_interleaved
     }
 }
 
@@ -135,7 +206,12 @@ mod tests {
     use std::sync::Arc;
 
     fn job(block: usize) -> Job {
+        tagged(0, block)
+    }
+
+    fn tagged(id: JobId, block: usize) -> Job {
         Job {
+            job: id,
             block,
             round: 0,
             payload: JobPayload::Step {
@@ -168,6 +244,41 @@ mod tests {
         got.sort_unstable();
         assert_eq!(got, vec![0, 1, 2, 3]);
         assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn dynamic_interleaves_jobs_round_robin() {
+        let q = JobQueue::new(1, Schedule::Dynamic);
+        q.push_round((0..3).map(|b| tagged(1, b)).collect());
+        q.push_round((0..3).map(|b| tagged(2, b)).collect());
+        let order: Vec<(JobId, usize)> = (0..6).map(|_| q.pop(0).map(|j| (j.job, j.block)).unwrap()).collect();
+        // strict 1↔2 alternation, blocks in order within each job
+        assert_eq!(
+            order,
+            vec![(1, 0), (2, 0), (1, 1), (2, 1), (1, 2), (2, 2)]
+        );
+        assert_eq!(q.max_jobs_interleaved(), 2);
+    }
+
+    #[test]
+    fn purge_removes_only_the_tagged_job() {
+        let q = JobQueue::new(2, Schedule::Dynamic);
+        q.push_round((0..4).map(|b| tagged(1, b)).collect());
+        q.push_round((0..2).map(|b| tagged(2, b)).collect());
+        assert_eq!(q.purge_job(1), 4);
+        assert_eq!(q.pending(), 2);
+        let mut left: Vec<JobId> = (0..2).map(|_| q.pop(0).unwrap().job).collect();
+        left.sort_unstable();
+        assert_eq!(left, vec![2, 2]);
+    }
+
+    #[test]
+    fn purge_covers_static_per_worker_queues() {
+        let q = JobQueue::new(2, Schedule::Static);
+        q.push_round((0..4).map(|b| tagged(1, b)).collect());
+        q.push_round((0..4).map(|b| tagged(2, b)).collect());
+        assert_eq!(q.purge_job(2), 4);
+        assert_eq!(q.pending(), 4);
     }
 
     #[test]

@@ -1,13 +1,20 @@
-//! Worker thread: pulls jobs, reads its block, runs the backend.
+//! Worker thread: pulls tagged jobs, reads the block, runs the backend.
+//!
+//! Since the service layer landed, one worker serves **many concurrent
+//! clustering jobs**: per-job contexts are looked up in a shared
+//! [`ContextRegistry`], and all mutable worker state — compute backend,
+//! block reader, pruned bounds — is keyed by [`JobId`] (bounds by
+//! `(job, block)`) so interleaved jobs can never contaminate each other.
+//! A [`JobPayload::Retire`] message drops a finished job's cached state.
 
 use std::collections::HashMap;
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use super::messages::{BlockTiming, Job, JobOutcome, JobPayload, JobResult};
+use super::messages::{BlockTiming, Job, JobError, JobId, JobOutcome, JobPayload, JobResult};
 use super::queue::JobQueue;
 use crate::blocks::BlockPlan;
 use crate::image::Raster;
@@ -25,7 +32,9 @@ pub enum BlockSource {
     Strips(Arc<StripStore>),
 }
 
-/// Everything a worker thread needs, cheap to clone per worker.
+/// Everything a worker needs to process one job's blocks. One instance
+/// per clustering job, shared by all workers through the pool's
+/// [`ContextRegistry`].
 #[derive(Clone)]
 pub struct WorkerContext {
     pub plan: Arc<BlockPlan>,
@@ -33,7 +42,7 @@ pub struct WorkerContext {
     pub backend: BackendSpec,
     /// Fault injection: processing this block index fails (tests).
     pub fail_block: Option<usize>,
-    /// Hint for backend warmup: will this run use per-block local mode?
+    /// Hint for backend warmup: will this job use per-block local mode?
     pub local_mode: bool,
     /// Which compute kernel step/assign jobs run (see
     /// [`crate::kmeans::kernel`]). Pruned/fused kernels keep per-block
@@ -41,26 +50,64 @@ pub struct WorkerContext {
     pub kernel: KernelChoice,
 }
 
-/// Per-block pruning state a worker carries across rounds. `last_round`
-/// records the round whose centroids the bounds describe; a job whose
-/// drift does not continue exactly from that round re-seeds the bounds
-/// with a full scan (dynamic scheduling can migrate blocks between
-/// workers, which must never change results).
+impl WorkerContext {
+    /// Channel count of the underlying imagery.
+    pub fn plan_channels(&self) -> usize {
+        match &self.source {
+            BlockSource::Direct(r) => r.channels(),
+            BlockSource::Strips(s) => s.channels(),
+        }
+    }
+}
+
+/// Shared map of job id → per-job worker context. The leader registers a
+/// context before submitting any of the job's blocks and removes it when
+/// the job retires; workers resolve contexts lazily on first touch.
+#[derive(Default)]
+pub struct ContextRegistry {
+    inner: RwLock<HashMap<JobId, Arc<WorkerContext>>>,
+}
+
+impl ContextRegistry {
+    pub fn new() -> ContextRegistry {
+        ContextRegistry::default()
+    }
+
+    /// Register (or replace) the context for `job`. Returns the number
+    /// of jobs now registered.
+    pub fn register(&self, job: JobId, ctx: Arc<WorkerContext>) -> usize {
+        let mut map = self.inner.write().unwrap();
+        map.insert(job, ctx);
+        map.len()
+    }
+
+    pub fn remove(&self, job: JobId) {
+        self.inner.write().unwrap().remove(&job);
+    }
+
+    pub fn get(&self, job: JobId) -> Option<Arc<WorkerContext>> {
+        self.inner.read().unwrap().get(&job).cloned()
+    }
+
+    /// Number of currently registered jobs.
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Per-(job, block) pruning state a worker carries across rounds.
+/// `last_round` records the round whose centroids the bounds describe; a
+/// job whose drift does not continue exactly from that round re-seeds
+/// the bounds with a full scan (dynamic scheduling can migrate blocks
+/// between workers, which must never change results).
 #[derive(Default)]
 struct BlockPrune {
     state: PrunedState,
     last_round: Option<u64>,
-}
-
-/// Drop pruning state that cannot continue into `round` (its block
-/// migrated to another worker or skipped a round — it would re-seed
-/// anyway). Bounds the map at roughly this worker's share of the plan:
-/// under a static schedule every owned block sits at `round` or
-/// `round - 1` and is kept; under a dynamic schedule a migrated-away
-/// block's orphaned state (20 bytes/pixel) is reclaimed within a round
-/// instead of accumulating for the life of the pool.
-fn evict_stale(prune: &mut HashMap<usize, BlockPrune>, round: u64) {
-    prune.retain(|_, e| e.last_round.is_some_and(|r| r.saturating_add(1) >= round));
 }
 
 impl BlockPrune {
@@ -78,6 +125,20 @@ impl BlockPrune {
     }
 }
 
+/// Drop pruning state of `job` that cannot continue into `round` (its
+/// block migrated to another worker or skipped a round — it would
+/// re-seed anyway). Other jobs' entries are untouched: eviction is keyed
+/// by (job, block), so an interleaved neighbour's warm bounds survive.
+/// Under a static schedule every owned block sits at `round` or
+/// `round - 1` and is kept; under a dynamic schedule a migrated-away
+/// block's orphaned state (20 bytes/pixel) is reclaimed within a round
+/// instead of accumulating for the life of the pool.
+fn evict_stale(prune: &mut HashMap<(JobId, usize), BlockPrune>, job: JobId, round: u64) {
+    prune.retain(|(j, _), e| {
+        *j != job || e.last_round.is_some_and(|r| r.saturating_add(1) >= round)
+    });
+}
+
 /// Per-worker block reader (owns file handles / scratch).
 enum Reader {
     Direct(Arc<Raster>),
@@ -85,8 +146,8 @@ enum Reader {
 }
 
 impl Reader {
-    fn read(&mut self, ctx: &WorkerContext, block: usize, buf: &mut Vec<f32>) -> Result<()> {
-        let region = ctx.plan.region(block);
+    fn read(&mut self, plan: &BlockPlan, block: usize, buf: &mut Vec<f32>) -> Result<()> {
+        let region = plan.region(block);
         match self {
             Reader::Direct(raster) => {
                 raster.crop_into(region, buf);
@@ -97,46 +158,60 @@ impl Reader {
     }
 }
 
+/// One job's lazily-built worker-local machinery: the compute backend
+/// (PJRT client or native math) plus the block reader (own file handle).
+struct JobEngine {
+    ctx: Arc<WorkerContext>,
+    backend: Box<dyn crate::runtime::ComputeBackend>,
+    reader: Reader,
+}
+
+impl JobEngine {
+    fn build(worker_id: usize, ctx: Arc<WorkerContext>) -> Result<JobEngine> {
+        let backend = ctx
+            .backend
+            .build()
+            .with_context(|| format!("worker {worker_id}: backend init"))?;
+        let reader = match &ctx.source {
+            BlockSource::Direct(r) => Reader::Direct(Arc::clone(r)),
+            BlockSource::Strips(s) => Reader::Strips(Box::new(
+                s.reader()
+                    .with_context(|| format!("worker {worker_id}: open reader"))?,
+            )),
+        };
+        Ok(JobEngine {
+            ctx,
+            backend,
+            reader,
+        })
+    }
+}
+
 /// Worker main loop. Runs on its own thread until the queue closes.
-/// Every job produces exactly one message on `results` (Ok or Err), so
-/// the leader can count responses without tracking worker liveness.
+/// Every job message except [`JobPayload::Retire`] produces exactly one
+/// message on `results` (Ok or Err), so the leader can count responses
+/// without tracking worker liveness.
 pub fn worker_main(
     worker_id: usize,
-    ctx: WorkerContext,
+    registry: Arc<ContextRegistry>,
     queue: Arc<JobQueue>,
-    results: Sender<Result<JobOutcome>>,
+    results: Sender<Result<JobOutcome, JobError>>,
 ) {
-    // Build this worker's private engine (PJRT client or native math).
-    let mut backend = match ctx.backend.build() {
-        Ok(b) => b,
-        Err(e) => {
-            let _ = results.send(Err(e.context(format!("worker {worker_id}: backend init"))));
-            return;
-        }
-    };
-    let mut reader = match &ctx.source {
-        BlockSource::Direct(r) => Reader::Direct(Arc::clone(r)),
-        BlockSource::Strips(s) => match s.reader() {
-            Ok(rd) => Reader::Strips(Box::new(rd)),
-            Err(e) => {
-                let _ = results.send(Err(e.context(format!("worker {worker_id}: open reader"))));
-                return;
-            }
-        },
-    };
-
+    let mut engines: HashMap<JobId, JobEngine> = HashMap::new();
     let mut px_buf: Vec<f32> = Vec::new();
-    let mut prune: HashMap<usize, BlockPrune> = HashMap::new();
+    let mut prune: HashMap<(JobId, usize), BlockPrune> = HashMap::new();
     while let Some(job) = queue.pop(worker_id) {
-        let outcome = run_job(
-            worker_id,
-            &ctx,
-            &mut reader,
-            backend.as_mut(),
-            &job,
-            &mut px_buf,
-            &mut prune,
-        );
+        if matches!(job.payload, JobPayload::Retire) {
+            engines.remove(&job.job);
+            prune.retain(|(j, _), _| *j != job.job);
+            continue;
+        }
+        let outcome = dispatch_job(worker_id, &registry, &mut engines, &job, &mut px_buf, &mut prune);
+        let outcome = outcome.map_err(|error| JobError {
+            job: job.job,
+            block: job.block,
+            error,
+        });
         // If the leader hung up, exit quietly.
         if results.send(outcome).is_err() {
             return;
@@ -144,20 +219,41 @@ pub fn worker_main(
     }
 }
 
-fn run_job(
+/// Resolve the job's engine (building it on first touch) and run the
+/// payload.
+fn dispatch_job(
     worker_id: usize,
-    ctx: &WorkerContext,
-    reader: &mut Reader,
-    backend: &mut dyn crate::runtime::ComputeBackend,
+    registry: &ContextRegistry,
+    engines: &mut HashMap<JobId, JobEngine>,
     job: &Job,
     px_buf: &mut Vec<f32>,
-    prune: &mut HashMap<usize, BlockPrune>,
+    prune: &mut HashMap<(JobId, usize), BlockPrune>,
 ) -> Result<JobOutcome> {
+    if !engines.contains_key(&job.job) {
+        let ctx = registry.get(job.job).ok_or_else(|| {
+            anyhow!("worker {worker_id}: job {} has no registered context", job.job)
+        })?;
+        engines.insert(job.job, JobEngine::build(worker_id, ctx)?);
+    }
+    let engine = engines.get_mut(&job.job).expect("just inserted");
+    run_job(worker_id, engine, job, px_buf, prune)
+}
+
+fn run_job(
+    worker_id: usize,
+    engine: &mut JobEngine,
+    job: &Job,
+    px_buf: &mut Vec<f32>,
+    prune: &mut HashMap<(JobId, usize), BlockPrune>,
+) -> Result<JobOutcome> {
+    let ctx = &engine.ctx;
     if let JobPayload::Ping = job.payload {
-        backend
+        engine
+            .backend
             .warm(ctx.local_mode)
             .with_context(|| format!("worker {worker_id}: backend warmup"))?;
         return Ok(JobOutcome {
+            job: job.job,
             block: job.block,
             round: job.round,
             worker: worker_id,
@@ -172,20 +268,23 @@ fn run_job(
         ));
     }
     let t_io = Instant::now();
-    reader
-        .read(ctx, job.block, px_buf)
+    engine
+        .reader
+        .read(&ctx.plan, job.block, px_buf)
         .with_context(|| format!("worker {worker_id}: read block {}", job.block))?;
     let io_secs = t_io.elapsed().as_secs_f64();
     let pixels = ctx.plan.region(job.block).area();
 
+    let backend = engine.backend.as_mut();
+    let key = (job.job, job.block);
     let t_c = Instant::now();
     let result = match &job.payload {
         JobPayload::Step { centroids, drift } => {
             let accum = if ctx.kernel == KernelChoice::Naive {
                 backend.step_block(px_buf, centroids)?
             } else {
-                evict_stale(prune, job.round);
-                let entry = prune.entry(job.block).or_default();
+                evict_stale(prune, job.job, job.round);
+                let entry = prune.entry(key).or_default();
                 let usable = entry.usable_drift(drift, job.round);
                 if usable.is_none() {
                     entry.state.clear(); // stale bounds: re-seed this round
@@ -200,8 +299,8 @@ fn run_job(
         JobPayload::Assign { centroids, drift } => {
             let mut labels = Vec::new();
             let inertia = if ctx.kernel == KernelChoice::Fused {
-                evict_stale(prune, job.round);
-                let entry = prune.entry(job.block).or_default();
+                evict_stale(prune, job.job, job.round);
+                let entry = prune.entry(key).or_default();
                 let usable = entry.usable_drift(drift, job.round);
                 if usable.is_none() {
                     entry.state.clear();
@@ -212,7 +311,6 @@ fn run_job(
             };
             JobResult::Assign { labels, inertia }
         }
-        JobPayload::Ping => unreachable!("handled above"),
         JobPayload::Local { init } => {
             let mut labels = Vec::new();
             let (centroids, inertia) = backend.local_block(px_buf, init, &mut labels)?;
@@ -229,10 +327,12 @@ fn run_job(
                 counts,
             }
         }
+        JobPayload::Ping | JobPayload::Retire => unreachable!("handled above"),
     };
     let compute_secs = t_c.elapsed().as_secs_f64();
 
     Ok(JobOutcome {
+        job: job.job,
         block: job.block,
         round: job.round,
         worker: worker_id,
@@ -245,12 +345,56 @@ fn run_job(
     })
 }
 
-impl WorkerContext {
-    /// Channel count of the underlying imagery.
-    pub fn plan_channels(&self) -> usize {
-        match &self.source {
-            BlockSource::Direct(r) => r.channels(),
-            BlockSource::Strips(s) => s.channels(),
-        }
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_register_get_remove() {
+        let reg = ContextRegistry::new();
+        assert!(reg.is_empty());
+        let img = Arc::new(crate::image::SyntheticOrtho::default().generate(8, 8));
+        let ctx = Arc::new(WorkerContext {
+            plan: Arc::new(BlockPlan::new(8, 8, crate::blocks::BlockShape::Square { side: 4 })),
+            source: BlockSource::Direct(img),
+            backend: BackendSpec::Native {
+                k: 2,
+                channels: 3,
+                local_iters: 4,
+            },
+            fail_block: None,
+            local_mode: false,
+            kernel: KernelChoice::Naive,
+        });
+        assert_eq!(reg.register(3, Arc::clone(&ctx)), 1);
+        assert_eq!(reg.register(5, ctx), 2);
+        assert!(reg.get(3).is_some());
+        assert!(reg.get(4).is_none());
+        reg.remove(3);
+        assert!(reg.get(3).is_none());
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn eviction_is_scoped_to_one_job() {
+        let mut prune: HashMap<(JobId, usize), BlockPrune> = HashMap::new();
+        prune.insert(
+            (1, 0),
+            BlockPrune {
+                state: PrunedState::new(),
+                last_round: Some(0),
+            },
+        );
+        prune.insert(
+            (2, 0),
+            BlockPrune {
+                state: PrunedState::new(),
+                last_round: Some(0),
+            },
+        );
+        // job 1 jumps to round 5: its stale entry goes, job 2's survives
+        evict_stale(&mut prune, 1, 5);
+        assert!(!prune.contains_key(&(1, 0)));
+        assert!(prune.contains_key(&(2, 0)));
     }
 }

@@ -7,7 +7,9 @@
 //! - **L3 (this crate)** — the coordinator: shape-parameterized block
 //!   plans ([`blocks`]), a strip-granular image store reproducing MATLAB
 //!   `blockproc` I/O behaviour ([`stripstore`]), a leader/worker SPMD pool
-//!   ([`coordinator`]), a discrete-event worker simulator for speedup
+//!   ([`coordinator`]), a persistent multi-job serving layer that drives
+//!   many clustering jobs over one shared pool with admission control
+//!   ([`service`]), a discrete-event worker simulator for speedup
 //!   studies ([`simtime`]), the sequential baseline ([`kmeans`]), and the
 //!   paper-table bench harness ([`bench`]).
 //! - **L2/L1 (python, build-time only)** — JAX graphs + Pallas kernels
@@ -19,11 +21,13 @@
 
 pub mod bench;
 pub mod blocks;
+pub mod cli;
 pub mod coordinator;
 pub mod image;
 pub mod kmeans;
 pub mod metrics;
 pub mod runtime;
+pub mod service;
 pub mod simtime;
 pub mod stripstore;
 pub mod util;
@@ -37,6 +41,7 @@ pub mod prelude {
     pub use crate::image::{Raster, SyntheticOrtho};
     pub use crate::kmeans::{InitMethod, KernelChoice, SeqKMeans};
     pub use crate::metrics::{RunTimer, Speedup};
+    pub use crate::service::{ClusterServer, JobHandle, JobSpec, JobStatus, ServerConfig};
     pub use crate::simtime::{SimParams, WorkerSim};
     pub use crate::stripstore::StripStore;
 }

@@ -6,65 +6,45 @@
 //!                   PPM file) and write the label map;
 //! - `paper-tables`  regenerate the paper's Tables 1–19 (+ figure series);
 //! - `cases`         regenerate the §4 Cases 1–3 block-size I/O analysis;
+//! - `batch`         multi-job service throughput matrix -> BENCH_service.json;
+//! - `serve`         drive N jobs through one persistent shared pool;
 //! - `info`          show artifact/manifest status and environment.
 //!
 //! Run `blockms --help` for options, or drive everything from a config
 //! file: `blockms cluster --config run.ini`.
+//!
+//! Exit codes: 0 success, 1 runtime failure, 2 usage error (unknown
+//! flag/subcommand or bad value; the message names the flag).
 
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use blockms::bench::service::{render_service_bench, write_service_bench, ServiceBenchOpts};
 use blockms::bench::tables::{all_table_ids, run_table, SweepOpts};
 use blockms::bench::{cases, runner::EngineChoice};
 use blockms::blocks::{ApproachKind, BlockPlan, BlockShape};
+use blockms::cli::{blockms_cli, parse_usize_list, Opts, SUBCOMMANDS};
 use blockms::coordinator::{
     ClusterConfig, ClusterMode, Coordinator, CoordinatorConfig, Engine, IoMode, Schedule,
 };
-use blockms::image::{read_ppm, write_labels_ppm, write_ppm, SyntheticOrtho};
+use blockms::image::{read_ppm, write_labels_ppm, write_ppm, Raster, SyntheticOrtho};
 use blockms::kmeans::kernel::KernelChoice;
 use blockms::runtime::{find_artifacts_dir, ArtifactSet};
-use blockms::util::cli::{Args, Cli, CliError};
-use blockms::util::config::Config;
+use blockms::service::{ClusterServer, JobSpec, ServerConfig};
+use blockms::util::cli::{Args, CliError};
 use blockms::util::fmt::duration;
 
-fn cli() -> Cli {
-    Cli::new("blockms", "parallel block processing for K-Means clustering")
-        .opt("config", None, "INI config file (CLI overrides it)")
-        .opt("k", Some("2"), "cluster count")
-        .opt("workers", Some("4"), "worker count")
-        .opt("approach", Some("column"), "block approach: row|column|square")
-        .opt("block-rows", None, "explicit block rows (overrides approach)")
-        .opt("block-cols", None, "explicit block cols (overrides approach)")
-        .opt("width", Some("1280"), "synthetic image width")
-        .opt("height", Some("800"), "synthetic image height")
-        .opt("seed", Some("7"), "workload / init seed")
-        .opt("input", None, "input PPM instead of synthetic scene")
-        .opt("out", None, "output path (cluster: label map PPM; kernels: JSON; sweep: CSV)")
-        .opt("out-input", None, "also write the input scene PPM here")
-        .opt("engine", Some("native"), "compute engine: native|pjrt")
-        .opt("kernel", Some("naive"), "compute kernel: naive|pruned|fused")
-        .opt("mode", Some("global"), "clustering mode: global|local")
-        .opt("schedule", Some("dynamic"), "job schedule: static|dynamic")
-        .opt("iters", None, "fixed Lloyd iterations (default: converge)")
-        .opt("max-iters", Some("20"), "max Lloyd iterations")
-        .opt("strip-rows", None, "enable strip I/O model with this strip height")
-        .opt("table", Some("all"), "paper-tables: table number or 'all'")
-        .opt("scale", Some("0.25"), "paper-tables/cases: per-side size scale")
-        .opt("bench-iters", Some("6"), "paper-tables/cases: Lloyd iterations")
-        .flag("serial", "cluster: also run the sequential baseline and compare")
-        .flag("verbose", "more logging")
-}
-
 fn main() {
-    let c = cli();
+    let c = blockms_cli();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match c.parse(argv) {
         Ok(a) => a,
         Err(CliError::HelpRequested) => {
             print!("{}", c.help_text());
-            println!("\nSUBCOMMANDS:\n  cluster | paper-tables | cases | sweep | kernels | info");
+            println!("\nSUBCOMMANDS:\n  {}", SUBCOMMANDS.join(" | "));
             return;
         }
         Err(e) => {
@@ -78,58 +58,36 @@ fn main() {
         "cases" => cmd_cases(&args),
         "sweep" => cmd_sweep(&args),
         "kernels" => cmd_kernels(&args),
+        "batch" => cmd_batch(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(),
-        other => Err(anyhow::anyhow!("unknown subcommand {other:?} (see --help)")),
+        other => Err(anyhow::Error::new(CliError::UnknownSubcommand(
+            other.to_string(),
+        ))),
     };
     if let Err(e) = result {
+        // Usage mistakes exit 2 with the offending flag named; runtime
+        // failures exit 1.
+        if let Some(cli_err) = e.downcast_ref::<CliError>() {
+            eprintln!("error: {cli_err}");
+            std::process::exit(2);
+        }
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
 }
 
-/// Merge `--config file` under the CLI args for a single typed lookup.
-struct Opts<'a> {
-    args: &'a Args,
-    config: Config,
-}
-
-impl<'a> Opts<'a> {
-    fn load(args: &'a Args) -> Result<Opts<'a>> {
-        let config = match args.get("config") {
-            Some(path) => Config::load(Path::new(path))
-                .with_context(|| format!("load config {path}"))?,
-            None => Config::default(),
-        };
-        Ok(Opts { args, config })
-    }
-
-    /// CLI beats config (`section.key` in the file, `--key` on the CLI).
-    fn get(&self, cli_key: &str, cfg_key: &str) -> Option<String> {
-        self.args
-            .get(cli_key)
-            .map(str::to_string)
-            .or_else(|| self.config.get(cfg_key).map(str::to_string))
-    }
-
-    fn parse<T: std::str::FromStr>(&self, cli_key: &str, cfg_key: &str) -> Result<Option<T>>
-    where
-        T::Err: std::fmt::Display,
-    {
-        match self.get(cli_key, cfg_key) {
-            None => Ok(None),
-            Some(raw) => raw
-                .parse::<T>()
-                .map(Some)
-                .map_err(|e| anyhow::anyhow!("invalid {cli_key}={raw:?}: {e}")),
-        }
-    }
-
-    fn require<T: std::str::FromStr>(&self, cli_key: &str, cfg_key: &str) -> Result<T>
-    where
-        T::Err: std::fmt::Display,
-    {
-        self.parse(cli_key, cfg_key)?
-            .ok_or_else(|| anyhow::anyhow!("missing required option --{cli_key}"))
+/// A usage (exit-2) error for flags whose value parsed but is out of
+/// range — e.g. `--workers 0` would otherwise panic deep in the pool.
+fn positive(v: usize, flag: &str) -> Result<usize> {
+    if v == 0 {
+        Err(anyhow::Error::new(CliError::BadValue(
+            flag.to_string(),
+            "0".to_string(),
+            "must be at least 1".to_string(),
+        )))
+    } else {
+        Ok(v)
     }
 }
 
@@ -142,10 +100,38 @@ fn engine_of(opts: &Opts) -> Result<Engine> {
     })
 }
 
+/// Resolve the block shape from `--approach` / `--block-rows/cols`.
+fn shape_of(opts: &Opts, img: &Raster) -> Result<BlockShape> {
+    Ok(
+        match (
+            opts.parse::<usize>("block-rows", "blocks.rows")?,
+            opts.parse::<usize>("block-cols", "blocks.cols")?,
+        ) {
+            (Some(rows), Some(cols)) => BlockShape::Custom { rows, cols },
+            (None, None) => {
+                let kind: ApproachKind = opts.require("approach", "blocks.approach")?;
+                BlockShape::paper_default(kind, img.height(), img.width())
+            }
+            _ => bail!("--block-rows and --block-cols must be given together"),
+        },
+    )
+}
+
+/// Resolve the I/O mode from `--strip-rows`.
+fn io_of(opts: &Opts) -> Result<IoMode> {
+    Ok(match opts.parse::<usize>("strip-rows", "io.strip_rows")? {
+        Some(strip_rows) => IoMode::Strips {
+            strip_rows: positive(strip_rows, "strip-rows")?,
+            file_backed: false,
+        },
+        None => IoMode::Direct,
+    })
+}
+
 fn cmd_cluster(args: &Args) -> Result<()> {
     let opts = Opts::load(args)?;
-    let k: usize = opts.require("k", "cluster.k")?;
-    let workers: usize = opts.require("workers", "run.workers")?;
+    let k: usize = positive(opts.require("k", "cluster.k")?, "k")?;
+    let workers: usize = positive(opts.require("workers", "run.workers")?, "workers")?;
     let seed: u64 = opts.require("seed", "workload.seed")?;
 
     // --- image -----------------------------------------------------------
@@ -169,17 +155,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let img = Arc::new(img);
 
     // --- plan --------------------------------------------------------------
-    let shape = match (
-        opts.parse::<usize>("block-rows", "blocks.rows")?,
-        opts.parse::<usize>("block-cols", "blocks.cols")?,
-    ) {
-        (Some(rows), Some(cols)) => BlockShape::Custom { rows, cols },
-        (None, None) => {
-            let kind: ApproachKind = opts.require("approach", "blocks.approach")?;
-            BlockShape::paper_default(kind, img.height(), img.width())
-        }
-        _ => bail!("--block-rows and --block-cols must be given together"),
-    };
+    let shape = shape_of(&opts, &img)?;
     let plan = Arc::new(BlockPlan::new(img.height(), img.width(), shape));
     println!(
         "plan: {} -> {} blocks of up to {:?}",
@@ -189,18 +165,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     );
 
     // --- run ---------------------------------------------------------------
-    let io = match opts.parse::<usize>("strip-rows", "io.strip_rows")? {
-        Some(strip_rows) => IoMode::Strips {
-            strip_rows,
-            file_backed: false,
-        },
-        None => IoMode::Direct,
-    };
     let coord = Coordinator::new(CoordinatorConfig {
         workers,
         engine: engine_of(&opts)?,
         mode: opts.require::<ClusterMode>("mode", "run.mode")?,
-        io,
+        io: io_of(&opts)?,
         schedule: opts.require::<Schedule>("schedule", "run.schedule")?,
         kernel: opts.require::<KernelChoice>("kernel", "run.kernel")?,
         fail_block: None,
@@ -278,7 +247,13 @@ fn cmd_tables(args: &Args) -> Result<()> {
     let ids: Vec<usize> = if which == "all" {
         all_table_ids()
     } else {
-        vec![which.parse().context("--table must be a number or 'all'")?]
+        vec![which.parse().map_err(|e: std::num::ParseIntError| {
+            anyhow::Error::new(CliError::BadValue(
+                "table".to_string(),
+                which.to_string(),
+                e.to_string(),
+            ))
+        })?]
     };
     for id in ids {
         let text = run_table(id, &opts)?;
@@ -344,6 +319,131 @@ fn cmd_kernels(args: &Args) -> Result<()> {
     let rows = write_kernel_bench(Path::new(&out), &bopts)?;
     print!("{}", render_kernel_bench(&bopts, &rows));
     println!("wrote {out}");
+    Ok(())
+}
+
+/// Service-layer benchmark: multi-job throughput over one shared pool at
+/// pool sizes × batch sizes, written to `BENCH_service.json` (see
+/// EXPERIMENTS.md §Service for the schema).
+fn cmd_batch(args: &Args) -> Result<()> {
+    let opts = Opts::load(args)?;
+    let scale: f64 = opts.require("scale", "bench.scale")?;
+    let side = ((1024.0 * scale).round() as usize).max(32);
+    let bopts = ServiceBenchOpts {
+        height: side,
+        width: side,
+        k: positive(opts.require("k", "cluster.k")?, "k")?,
+        iters: opts.require("bench-iters", "bench.iters")?,
+        seed: opts.require("seed", "workload.seed")?,
+        pool_sizes: parse_usize_list(&opts.require::<String>("pools", "bench.pools")?, "pools")?,
+        batch_sizes: parse_usize_list(
+            &opts.require::<String>("batches", "bench.batches")?,
+            "batches",
+        )?,
+        kernel: opts.require("kernel", "run.kernel")?,
+        schedule: opts.require("schedule", "run.schedule")?,
+    };
+    let out = args.get("out").unwrap_or("BENCH_service.json").to_string();
+    let rows = write_service_bench(Path::new(&out), &bopts)?;
+    print!("{}", render_service_bench(&bopts, &rows));
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// Drive N jobs through one persistent shared pool, printing per-job
+/// latency and aggregate throughput.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = Opts::load(args)?;
+    let workers: usize = positive(opts.require("workers", "run.workers")?, "workers")?;
+    let jobs: usize = positive(opts.require("jobs", "serve.jobs")?, "jobs")?;
+    let max_in_flight: usize = positive(
+        opts.require("max-in-flight", "serve.max_in_flight")?,
+        "max-in-flight",
+    )?;
+    let k: usize = positive(opts.require("k", "cluster.k")?, "k")?;
+    let seed: u64 = opts.require("seed", "workload.seed")?;
+    let kernel = opts.require::<KernelChoice>("kernel", "run.kernel")?;
+    let mode = opts.require::<ClusterMode>("mode", "run.mode")?;
+    let schedule = opts.require::<Schedule>("schedule", "run.schedule")?;
+    let io = io_of(&opts)?;
+    let engine = engine_of(&opts)?;
+    let max_iters: usize = opts.require("max-iters", "cluster.max_iters")?;
+    let fixed_iters: Option<usize> = opts.parse("iters", "cluster.iters")?;
+
+    // One shared input image, or a distinct synthetic scene per job.
+    let base: Option<Arc<Raster>> = match opts.get("input", "workload.input") {
+        Some(path) => {
+            let img = read_ppm(Path::new(&path))?;
+            println!("loaded {path}: {}x{} ({} bands)", img.width(), img.height(), img.channels());
+            Some(Arc::new(img))
+        }
+        None => None,
+    };
+    let width: usize = opts.require("width", "workload.width")?;
+    let height: usize = opts.require("height", "workload.height")?;
+
+    let server = ClusterServer::start(ServerConfig {
+        workers,
+        schedule,
+        max_in_flight,
+    });
+    println!(
+        "serving {jobs} jobs over a {workers}-worker pool (admission cap {max_in_flight}, {schedule:?} schedule)"
+    );
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(jobs);
+    for j in 0..jobs {
+        let job_seed = seed.wrapping_add(j as u64);
+        let img = match &base {
+            Some(img) => Arc::clone(img),
+            None => Arc::new(
+                SyntheticOrtho::default()
+                    .with_seed(job_seed)
+                    .generate(height, width),
+            ),
+        };
+        let shape = shape_of(&opts, &img)?;
+        let plan = Arc::new(BlockPlan::new(img.height(), img.width(), shape));
+        let spec = JobSpec::new(
+            img,
+            plan,
+            ClusterConfig {
+                k,
+                max_iters,
+                seed: job_seed,
+                fixed_iters,
+                ..Default::default()
+            },
+        )
+        .with_mode(mode)
+        .with_io(io.clone())
+        .with_kernel(kernel)
+        .with_engine(engine.clone());
+        // Blocks while the admission gate is full — the backpressure path.
+        handles.push(server.submit(spec)?);
+    }
+    for (j, h) in handles.iter().enumerate() {
+        let out = h.wait_output().with_context(|| format!("job {j}"))?;
+        println!(
+            "job {j:>3}: {} blocks, {} iterations{} -> inertia {:.1}, latency {}",
+            out.blocks,
+            out.iterations,
+            if out.converged { " (converged)" } else { "" },
+            out.inertia,
+            duration(out.total_secs)
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    println!(
+        "aggregate: {} jobs in {} -> {:.2} jobs/s | max open jobs {} (cap {})",
+        jobs,
+        duration(wall),
+        jobs as f64 / wall,
+        stats.max_open_jobs,
+        max_in_flight
+    );
+    server.shutdown();
     Ok(())
 }
 

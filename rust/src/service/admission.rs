@@ -1,0 +1,168 @@
+//! Admission control: a bounded in-flight-jobs gate with backpressure.
+//!
+//! The service keeps at most `cap` clustering jobs open at once. A
+//! blocking [`Admission::acquire`] is the backpressure path (callers of
+//! `submit` wait their turn); [`Admission::try_acquire`] is the
+//! load-shedding path (callers of `try_submit` get an immediate
+//! "busy"). The gate records a high-water mark so tests can assert the
+//! cap was *never* exceeded, not merely that it holds at sample points.
+
+use std::sync::{Condvar, Mutex};
+
+/// Point-in-time view of the gate (all counters monotone except
+/// `in_flight`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdmissionSnapshot {
+    /// Maximum jobs admitted at once.
+    pub cap: usize,
+    /// Currently admitted (acquired, not yet released).
+    pub in_flight: usize,
+    /// Highest `in_flight` ever observed.
+    pub high_water: usize,
+    /// Total successful acquisitions.
+    pub admitted: u64,
+    /// Total `try_acquire` rejections.
+    pub rejected: u64,
+}
+
+struct GateState {
+    in_flight: usize,
+    high_water: usize,
+    admitted: u64,
+    rejected: u64,
+}
+
+/// The gate. Cheap to share behind an `Arc`.
+pub struct Admission {
+    cap: usize,
+    state: Mutex<GateState>,
+    cond: Condvar,
+}
+
+impl Admission {
+    pub fn new(cap: usize) -> Admission {
+        assert!(cap > 0, "admission cap must be at least 1");
+        Admission {
+            cap,
+            state: Mutex::new(GateState {
+                in_flight: 0,
+                high_water: 0,
+                admitted: 0,
+                rejected: 0,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Block until a slot frees up, then take it.
+    pub fn acquire(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.in_flight >= self.cap {
+            st = self.cond.wait(st).unwrap();
+        }
+        st.in_flight += 1;
+        st.admitted += 1;
+        st.high_water = st.high_water.max(st.in_flight);
+    }
+
+    /// Take a slot if one is free; `false` means the gate is full.
+    pub fn try_acquire(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.in_flight >= self.cap {
+            st.rejected += 1;
+            return false;
+        }
+        st.in_flight += 1;
+        st.admitted += 1;
+        st.high_water = st.high_water.max(st.in_flight);
+        true
+    }
+
+    /// Return a slot (job reached a terminal state) and wake one waiter.
+    pub fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        assert!(st.in_flight > 0, "release without acquire");
+        st.in_flight -= 1;
+        drop(st);
+        self.cond.notify_one();
+    }
+
+    pub fn snapshot(&self) -> AdmissionSnapshot {
+        let st = self.state.lock().unwrap();
+        AdmissionSnapshot {
+            cap: self.cap,
+            in_flight: st.in_flight,
+            high_water: st.high_water,
+            admitted: st.admitted,
+            rejected: st.rejected,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn try_acquire_respects_cap() {
+        let gate = Admission::new(2);
+        assert!(gate.try_acquire());
+        assert!(gate.try_acquire());
+        assert!(!gate.try_acquire());
+        let snap = gate.snapshot();
+        assert_eq!(snap.in_flight, 2);
+        assert_eq!(snap.rejected, 1);
+        gate.release();
+        assert!(gate.try_acquire());
+        assert_eq!(gate.snapshot().high_water, 2);
+    }
+
+    #[test]
+    fn acquire_blocks_until_release() {
+        let gate = Arc::new(Admission::new(1));
+        gate.acquire();
+        let g2 = Arc::clone(&gate);
+        let h = std::thread::spawn(move || {
+            g2.acquire(); // blocks until main releases
+            g2.snapshot().in_flight
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(gate.snapshot().in_flight, 1, "waiter must not be admitted");
+        gate.release();
+        assert_eq!(h.join().unwrap(), 1);
+        assert_eq!(gate.snapshot().high_water, 1, "cap 1 never exceeded");
+    }
+
+    #[test]
+    fn high_water_tracks_concurrency_exactly() {
+        let gate = Arc::new(Admission::new(3));
+        let mut handles = Vec::new();
+        for _ in 0..10 {
+            let g = Arc::clone(&gate);
+            handles.push(std::thread::spawn(move || {
+                g.acquire();
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                g.release();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = gate.snapshot();
+        assert_eq!(snap.admitted, 10);
+        assert_eq!(snap.in_flight, 0);
+        assert!(snap.high_water <= 3, "cap exceeded: {}", snap.high_water);
+        assert!(snap.high_water >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "release without acquire")]
+    fn release_without_acquire_panics() {
+        Admission::new(1).release();
+    }
+}

@@ -1,0 +1,276 @@
+//! Job descriptions and client-side handles.
+//!
+//! A [`JobSpec`] is everything one clustering request needs — image,
+//! block plan, clustering parameters, and per-job execution knobs
+//! (mode, I/O model, compute kernel, engine). Two jobs sharing a pool
+//! can differ in *all* of these: the pool's workers key their state by
+//! job id, so a k=8 fused strip-I/O job interleaves safely with a k=2
+//! naive direct-I/O one.
+//!
+//! Submitting a spec yields a [`JobHandle`]: a cheap, cloneable,
+//! thread-safe view of the job's lifecycle
+//! (`Queued → Running → Done | Failed | Cancelled`) with blocking
+//! [`JobHandle::wait`] and cooperative [`JobHandle::cancel`].
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::blocks::BlockPlan;
+use crate::coordinator::{
+    ClusterConfig, ClusterMode, ClusterOutput, Engine, IoMode, JobId,
+};
+use crate::image::Raster;
+use crate::kmeans::kernel::KernelChoice;
+
+/// One clustering request, self-contained: the service needs nothing
+/// else to run it. Defaults mirror [`crate::coordinator::CoordinatorConfig`].
+#[derive(Clone)]
+pub struct JobSpec {
+    pub image: Arc<Raster>,
+    pub plan: Arc<BlockPlan>,
+    pub cluster: ClusterConfig,
+    pub mode: ClusterMode,
+    pub io: IoMode,
+    pub kernel: KernelChoice,
+    pub engine: Engine,
+    /// Fault injection for tests: this block index fails.
+    pub fail_block: Option<usize>,
+}
+
+impl JobSpec {
+    /// A global-mode, direct-I/O, naive-kernel, native-engine job.
+    pub fn new(image: Arc<Raster>, plan: Arc<BlockPlan>, cluster: ClusterConfig) -> JobSpec {
+        JobSpec {
+            image,
+            plan,
+            cluster,
+            mode: ClusterMode::Global,
+            io: IoMode::Direct,
+            kernel: KernelChoice::Naive,
+            engine: Engine::Native,
+            fail_block: None,
+        }
+    }
+
+    pub fn with_mode(mut self, mode: ClusterMode) -> JobSpec {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_io(mut self, io: IoMode) -> JobSpec {
+        self.io = io;
+        self
+    }
+
+    pub fn with_kernel(mut self, kernel: KernelChoice) -> JobSpec {
+        self.kernel = kernel;
+        self
+    }
+
+    pub fn with_engine(mut self, engine: Engine) -> JobSpec {
+        self.engine = engine;
+        self
+    }
+
+    /// Reject malformed specs at submission time, before they occupy an
+    /// admission slot's worth of pool work.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.cluster.k >= 1, "k must be at least 1");
+        ensure!(
+            self.plan.height() == self.image.height() && self.plan.width() == self.image.width(),
+            "plan {}x{} does not match image {}x{}",
+            self.plan.height(),
+            self.plan.width(),
+            self.image.height(),
+            self.image.width()
+        );
+        ensure!(!self.plan.is_empty(), "block plan has no blocks");
+        ensure!(
+            self.image.pixels() >= self.cluster.k,
+            "cannot init {} clusters from {} pixels",
+            self.cluster.k,
+            self.image.pixels()
+        );
+        if let IoMode::Strips { strip_rows, .. } = self.io {
+            ensure!(strip_rows > 0, "strip_rows must be positive");
+        }
+        Ok(())
+    }
+}
+
+/// Where a job is in its lifecycle.
+#[derive(Clone, Debug)]
+pub enum JobStatus {
+    /// Accepted (admission slot held), not yet picked up by the serving
+    /// loop.
+    Queued,
+    /// Rounds in flight on the shared pool.
+    Running,
+    /// Finished; the output is bit-identical to a solo
+    /// [`crate::coordinator::Coordinator::cluster`] run of the same spec.
+    Done(Box<ClusterOutput>),
+    /// A worker error failed this job (other jobs unaffected).
+    Failed(String),
+    /// Cancelled before completion; partial work was discarded.
+    Cancelled,
+}
+
+impl JobStatus {
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            JobStatus::Done(_) | JobStatus::Failed(_) | JobStatus::Cancelled
+        )
+    }
+
+    /// Short lifecycle label (stable across payload contents).
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done(_) => "done",
+            JobStatus::Failed(_) => "failed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// State shared between a [`JobHandle`] and the serving loop.
+pub(crate) struct HandleShared {
+    status: Mutex<JobStatus>,
+    cond: Condvar,
+    cancel: AtomicBool,
+}
+
+impl Default for HandleShared {
+    fn default() -> HandleShared {
+        HandleShared::new()
+    }
+}
+
+impl HandleShared {
+    pub(crate) fn new() -> HandleShared {
+        HandleShared {
+            status: Mutex::new(JobStatus::Queued),
+            cond: Condvar::new(),
+            cancel: AtomicBool::new(false),
+        }
+    }
+
+    /// Serving-loop side: publish a status change.
+    pub(crate) fn set_status(&self, status: JobStatus) {
+        let mut st = self.status.lock().unwrap();
+        *st = status;
+        drop(st);
+        self.cond.notify_all();
+    }
+
+    /// Serving-loop side: has the client asked to cancel?
+    pub(crate) fn cancel_requested(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+}
+
+/// Client-side view of one submitted job.
+#[derive(Clone)]
+pub struct JobHandle {
+    id: JobId,
+    pub(crate) shared: Arc<HandleShared>,
+}
+
+impl JobHandle {
+    pub(crate) fn new(id: JobId, shared: Arc<HandleShared>) -> JobHandle {
+        JobHandle { id, shared }
+    }
+
+    /// The service-assigned job id (also tags the pool's messages).
+    pub fn id(&self) -> JobId {
+        self.id
+    }
+
+    /// Current status (non-blocking snapshot).
+    pub fn status(&self) -> JobStatus {
+        self.shared.status.lock().unwrap().clone()
+    }
+
+    /// Request cooperative cancellation. The serving loop stops issuing
+    /// rounds for this job at the next outcome it routes; blocks already
+    /// on workers finish and are discarded. Other jobs are untouched.
+    /// Idempotent; a no-op once the job is terminal.
+    pub fn cancel(&self) {
+        self.shared.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Block until the job reaches a terminal state; returns it.
+    pub fn wait(&self) -> JobStatus {
+        let mut st = self.shared.status.lock().unwrap();
+        while !st.is_terminal() {
+            st = self.shared.cond.wait(st).unwrap();
+        }
+        st.clone()
+    }
+
+    /// Block until terminal; `Ok` only for a completed job.
+    pub fn wait_output(&self) -> Result<ClusterOutput> {
+        match self.wait() {
+            JobStatus::Done(out) => Ok(*out),
+            JobStatus::Failed(msg) => bail!("job {} failed: {msg}", self.id),
+            JobStatus::Cancelled => bail!("job {} was cancelled", self.id),
+            JobStatus::Queued | JobStatus::Running => unreachable!("wait returns terminal states"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockShape;
+    use crate::image::SyntheticOrtho;
+
+    fn spec(h: usize, w: usize) -> JobSpec {
+        let img = Arc::new(SyntheticOrtho::default().with_seed(3).generate(h, w));
+        let plan = Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 8 }));
+        JobSpec::new(img, plan, ClusterConfig::default())
+    }
+
+    #[test]
+    fn valid_spec_passes() {
+        assert!(spec(16, 16).validate().is_ok());
+    }
+
+    #[test]
+    fn mismatched_plan_rejected() {
+        let mut s = spec(16, 16);
+        s.plan = Arc::new(BlockPlan::new(8, 8, BlockShape::Square { side: 4 }));
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn zero_strip_rows_rejected() {
+        let s = spec(16, 16).with_io(IoMode::Strips {
+            strip_rows: 0,
+            file_backed: false,
+        });
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn handle_status_transitions_and_wait() {
+        let shared = Arc::new(HandleShared::new());
+        let h = JobHandle::new(7, Arc::clone(&shared));
+        assert_eq!(h.status().label(), "queued");
+        assert!(!shared.cancel_requested());
+        h.cancel();
+        assert!(shared.cancel_requested());
+        let waiter = {
+            let h = h.clone();
+            std::thread::spawn(move || h.wait().label())
+        };
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        shared.set_status(JobStatus::Cancelled);
+        assert_eq!(waiter.join().unwrap(), "cancelled");
+        assert!(h.wait_output().is_err());
+    }
+}

@@ -1,0 +1,32 @@
+//! The persistent multi-job clustering service.
+//!
+//! The paper runs one K-Means over one image with a pool that is built
+//! and torn down around the run. Production traffic is many concurrent
+//! clustering requests, so this layer decouples the pool from the run:
+//!
+//! - [`ClusterServer`] — spawns one [`crate::coordinator::WorkerPool`]
+//!   and serves any number of jobs over it, interleaving blocks from
+//!   different images on the same workers;
+//! - [`JobSpec`] / [`JobHandle`] / [`JobStatus`] — per-job description
+//!   (each job has its own k, channels, block plan, I/O mode, and
+//!   compute kernel) and lifecycle
+//!   (`Queued → Running → Done | Failed | Cancelled`);
+//! - [`Admission`] — the bounded in-flight gate: `submit` blocks when
+//!   full (backpressure), `try_submit` sheds.
+//!
+//! **Determinism contract:** a job run through the shared pool produces
+//! labels, centroids, counts, and inertia bit-identical to a solo
+//! [`crate::coordinator::Coordinator::cluster`] with the same spec and
+//! seed, no matter what else is in flight — enforced by
+//! `tests/service_concurrency.rs` across k, channel counts, block
+//! shapes, and kernels. See EXPERIMENTS.md §Service for the
+//! architecture sketch and the `BENCH_service.json` throughput
+//! methodology (`blockms batch` / `blockms serve`).
+
+mod admission;
+mod job;
+mod server;
+
+pub use admission::{Admission, AdmissionSnapshot};
+pub use job::{JobHandle, JobSpec, JobStatus};
+pub use server::{ClusterServer, ServerConfig, ServerStats};

@@ -1,0 +1,619 @@
+//! The persistent clustering server: one warm pool, many jobs.
+//!
+//! [`ClusterServer::start`] spawns a worker pool **once** plus a serving
+//! thread that owns it. Each submitted [`JobSpec`] becomes an active job
+//! with its own [`RunMachine`] (per-job reduction state); the serving
+//! loop streams tagged outcomes off the pool and routes them by job id:
+//!
+//! ```text
+//!   submit ──▶ admission gate ──▶ serving loop
+//!                                   │ activate: register ctx, round 0
+//!                                   ├─ outcome(job A, block i) ─▶ A.absorb
+//!                                   ├─ outcome(job B, block j) ─▶ B.absorb
+//!                                   │    round complete? reduce, next round
+//!                                   └─ done/failed/cancelled: retire job,
+//!                                      release admission slot
+//! ```
+//!
+//! Because every job's round is submitted as a whole and the dynamic
+//! queue drains per-job deques round-robin, blocks from different
+//! images interleave on the workers — a straggling job cannot
+//! head-of-line-block the rest — while each job's reduction stays in
+//! block order and therefore bit-identical to a solo
+//! [`crate::coordinator::Coordinator`] run with the same seed.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::admission::{Admission, AdmissionSnapshot};
+use super::job::{HandleShared, JobHandle, JobSpec, JobStatus};
+use crate::coordinator::{
+    BlockSource, ClusterMode, ClusterOutput, IoMode, JobError, JobId, JobOutcome, RunMachine,
+    Schedule, WorkerContext, WorkerPool,
+};
+use crate::stripstore::{Backing, StripStore};
+
+/// Server construction parameters.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Worker thread count for the shared pool.
+    pub workers: usize,
+    /// Block scheduling policy ([`Schedule::Dynamic`] interleaves jobs
+    /// round-robin; [`Schedule::Static`] pins block `i` to worker
+    /// `i % W` per round).
+    pub schedule: Schedule,
+    /// Admission cap: at most this many jobs open at once; further
+    /// `submit` calls block (backpressure) and `try_submit` calls shed.
+    pub max_in_flight: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 4,
+            schedule: Schedule::Dynamic,
+            max_in_flight: 4,
+        }
+    }
+}
+
+/// Aggregate serving counters (monotone; see [`ClusterServer::stats`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    /// High water of simultaneously open (registered) jobs on the pool —
+    /// the instrumentation the admission tests assert against.
+    pub max_open_jobs: usize,
+    pub admission: AdmissionSnapshot,
+}
+
+#[derive(Default)]
+struct StatsShared {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    cancelled: AtomicU64,
+    max_open_jobs: AtomicUsize,
+}
+
+struct NewJob {
+    id: JobId,
+    spec: JobSpec,
+    handle: Arc<HandleShared>,
+}
+
+/// Process-global sequence for file-backed strip-store directories: job
+/// ids restart at 1 per server, so two servers in one process (or the
+/// same TMPDIR shared across processes, hence the pid) must still get
+/// distinct backing paths.
+static STORE_DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn job_store_dir(id: JobId) -> PathBuf {
+    let seq = STORE_DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "blockms_service_p{}_{seq}_job{id}",
+        std::process::id()
+    ))
+}
+
+/// The persistent multi-job clustering service. See module docs.
+pub struct ClusterServer {
+    cfg: ServerConfig,
+    tx: Option<Sender<NewJob>>,
+    admission: Arc<Admission>,
+    stats: Arc<StatsShared>,
+    next_id: AtomicU64,
+    serving: Option<JoinHandle<()>>,
+}
+
+impl ClusterServer {
+    /// Spawn the shared pool and serving thread.
+    pub fn start(cfg: ServerConfig) -> ClusterServer {
+        let admission = Arc::new(Admission::new(cfg.max_in_flight));
+        let stats = Arc::new(StatsShared::default());
+        let (tx, rx) = channel();
+        let serving = {
+            let stats = Arc::clone(&stats);
+            let admission = Arc::clone(&admission);
+            let pool = WorkerPool::spawn(cfg.workers, cfg.schedule);
+            std::thread::Builder::new()
+                .name("blockms-serve".to_string())
+                .spawn(move || ServingLoop::new(pool, admission, stats).run(rx))
+                .expect("spawn serving thread")
+        };
+        ClusterServer {
+            cfg,
+            tx: Some(tx),
+            admission,
+            stats,
+            // Solo Coordinator runs own SOLO_JOB = 0; service ids start at 1.
+            next_id: AtomicU64::new(1),
+            serving: Some(serving),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.cfg.workers
+    }
+
+    /// Submit a job, blocking while the admission gate is full
+    /// (backpressure). Returns the handle once the job is accepted.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
+        spec.validate().context("invalid job spec")?;
+        self.admission.acquire();
+        self.dispatch(spec)
+    }
+
+    /// Submit without blocking: `Ok(None)` means the gate is full and
+    /// the job was shed (nothing was queued).
+    pub fn try_submit(&self, spec: JobSpec) -> Result<Option<JobHandle>> {
+        spec.validate().context("invalid job spec")?;
+        if !self.admission.try_acquire() {
+            return Ok(None);
+        }
+        self.dispatch(spec).map(Some)
+    }
+
+    fn dispatch(&self, spec: JobSpec) -> Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let shared = Arc::new(HandleShared::new());
+        let new = NewJob {
+            id,
+            spec,
+            handle: Arc::clone(&shared),
+        };
+        // `tx` is only dropped by shutdown/Drop, which need exclusive
+        // access — so it is always present here; a failed send means the
+        // serving thread itself died.
+        let tx = self.tx.as_ref().expect("sender present while server is alive");
+        if tx.send(new).is_err() {
+            self.admission.release();
+            anyhow::bail!("serving loop is gone");
+        }
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(JobHandle::new(id, shared))
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            submitted: self.stats.submitted.load(Ordering::Relaxed),
+            completed: self.stats.completed.load(Ordering::Relaxed),
+            failed: self.stats.failed.load(Ordering::Relaxed),
+            cancelled: self.stats.cancelled.load(Ordering::Relaxed),
+            max_open_jobs: self.stats.max_open_jobs.load(Ordering::Relaxed),
+            admission: self.admission.snapshot(),
+        }
+    }
+
+    /// Stop accepting jobs, finish everything in flight, join the pool.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.tx.take(); // serving loop drains and exits
+        if let Some(h) = self.serving.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ClusterServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// One admitted job's serving-side state.
+struct ActiveJob {
+    machine: RunMachine,
+    /// Outcomes (or tagged errors) still expected from the pool for the
+    /// in-flight round. Purging queued blocks shrinks it.
+    expected: usize,
+    /// Keeps strip-store counters alive for the final snapshot.
+    store: Option<Arc<StripStore>>,
+    /// Backing-file directory to sweep once the store is fully dropped.
+    store_dir: Option<PathBuf>,
+    handle: Arc<HandleShared>,
+    started: Instant,
+    blocks: usize,
+    cancelling: bool,
+    failed: Option<String>,
+}
+
+struct ServingLoop {
+    pool: WorkerPool,
+    active: HashMap<JobId, ActiveJob>,
+    admission: Arc<Admission>,
+    stats: Arc<StatsShared>,
+    /// Strip-store directories of finished jobs, removed once the last
+    /// worker drops its store handle (swept opportunistically and again
+    /// after the pool joins).
+    cleanup_dirs: Vec<PathBuf>,
+}
+
+impl ServingLoop {
+    fn new(pool: WorkerPool, admission: Arc<Admission>, stats: Arc<StatsShared>) -> ServingLoop {
+        ServingLoop {
+            pool,
+            active: HashMap::new(),
+            admission,
+            stats,
+            cleanup_dirs: Vec::new(),
+        }
+    }
+
+    /// Best-effort removal of finished jobs' backing directories.
+    /// `remove_dir` fails while a worker still holds the store (file
+    /// present) and succeeds once the strip file's `Drop` ran; anything
+    /// left is retried, with a final sweep after the pool joins.
+    fn sweep_store_dirs(&mut self) {
+        self.cleanup_dirs
+            .retain(|d| std::fs::remove_dir(d).is_err() && d.exists());
+    }
+
+    fn run(mut self, rx: Receiver<NewJob>) {
+        let mut accepting = true;
+        loop {
+            // Admit everything already queued (non-blocking).
+            while accepting {
+                match rx.try_recv() {
+                    Ok(new) => self.activate(new),
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        accepting = false;
+                    }
+                }
+            }
+            self.check_cancels();
+            if self.active.is_empty() {
+                if !accepting {
+                    break; // shut down: nothing in flight, no new work
+                }
+                // Idle: block until a job arrives or the server closes.
+                match rx.recv() {
+                    Ok(new) => self.activate(new),
+                    Err(_) => accepting = false,
+                }
+                continue;
+            }
+            match self.pool.recv_result() {
+                Ok(Ok(outcome)) => self.on_outcome(outcome),
+                Ok(Err(jerr)) => self.on_error(jerr),
+                Err(_) => {
+                    // Pool gone (all workers dead): fail whatever is left.
+                    let ids: Vec<JobId> = self.active.keys().copied().collect();
+                    for id in ids {
+                        if let Some(aj) = self.active.get_mut(&id) {
+                            aj.failed = Some("worker pool hung up".to_string());
+                        }
+                        self.finalize(id);
+                    }
+                    break;
+                }
+            }
+        }
+        // Join the workers, then sweep the remaining store directories —
+        // every strip file's `Drop` has run once the pool is down.
+        let ServingLoop {
+            pool,
+            mut cleanup_dirs,
+            ..
+        } = self;
+        pool.shutdown();
+        cleanup_dirs.retain(|d| std::fs::remove_dir(d).is_err() && d.exists());
+    }
+
+    /// Register the job on the pool and launch its first round.
+    fn activate(&mut self, new: NewJob) {
+        // Counters and the admission slot settle BEFORE the terminal
+        // status publishes: a client woken by wait() may read stats()
+        // immediately and must see consistent numbers.
+        if new.handle.cancel_requested() {
+            // Cancelled before activation: never touched the pool.
+            self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
+            self.admission.release();
+            new.handle.set_status(JobStatus::Cancelled);
+            return;
+        }
+        match self.try_activate(&new) {
+            Ok(()) => {}
+            Err(e) => {
+                self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                self.admission.release();
+                new.handle.set_status(JobStatus::Failed(format!("{e:#}")));
+            }
+        }
+    }
+
+    fn try_activate(&mut self, new: &NewJob) -> Result<()> {
+        let spec = &new.spec;
+        let img = &spec.image;
+        // Per-job strip store: a globally unique directory (pid + a
+        // process-wide sequence + job id) so two same-shaped concurrent
+        // jobs — even on different servers — never collide on a backing
+        // file.
+        let mut store_dir = None;
+        let (source, store) = match &spec.io {
+            IoMode::Direct => (BlockSource::Direct(Arc::clone(img)), None),
+            IoMode::Strips {
+                strip_rows,
+                file_backed,
+            } => {
+                let backing = if *file_backed {
+                    let dir = job_store_dir(new.id);
+                    store_dir = Some(dir.clone());
+                    Backing::File(dir)
+                } else {
+                    Backing::Memory
+                };
+                let store = Arc::new(StripStore::new(img, *strip_rows, backing)?);
+                (BlockSource::Strips(Arc::clone(&store)), Some(store))
+            }
+        };
+        let ctx = Arc::new(WorkerContext {
+            plan: Arc::clone(&spec.plan),
+            source,
+            backend: spec
+                .engine
+                .backend_spec(spec.cluster.k, img.channels())?,
+            fail_block: spec.fail_block,
+            local_mode: spec.mode == ClusterMode::Local,
+            kernel: spec.kernel,
+        });
+        // Same init draw as the solo Coordinator and the sequential
+        // baseline — the root of per-job determinism.
+        let init_centroids =
+            spec.cluster
+                .init
+                .centroids(img.as_pixels(), spec.cluster.k, img.channels(), spec.cluster.seed);
+        let mut machine = RunMachine::new(
+            spec.mode,
+            Arc::clone(&spec.plan),
+            img.channels(),
+            &spec.cluster,
+            init_centroids,
+        );
+        self.pool.register_job(new.id, ctx);
+        self.mirror_pool_stats();
+        let jobs = machine.start_round(new.id);
+        let expected = jobs.len();
+        self.pool.submit(jobs);
+        new.handle.set_status(JobStatus::Running);
+        self.active.insert(
+            new.id,
+            ActiveJob {
+                machine,
+                expected,
+                store,
+                store_dir,
+                handle: Arc::clone(&new.handle),
+                started: Instant::now(),
+                blocks: spec.plan.len(),
+                cancelling: false,
+                failed: None,
+            },
+        );
+        Ok(())
+    }
+
+    /// Notice cancellation requests and stop feeding those jobs.
+    fn check_cancels(&mut self) {
+        let flagged: Vec<JobId> = self
+            .active
+            .iter()
+            .filter(|(_, aj)| {
+                !aj.cancelling && aj.failed.is_none() && aj.handle.cancel_requested()
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in flagged {
+            self.cancel_job(id);
+        }
+    }
+
+    /// Stop feeding a cancelled job: shed its queued blocks, finalize
+    /// once the in-flight ones drain.
+    fn cancel_job(&mut self, id: JobId) {
+        let purged = self.pool.purge_job(id);
+        let Some(aj) = self.active.get_mut(&id) else {
+            return;
+        };
+        aj.cancelling = true;
+        aj.expected = aj.expected.saturating_sub(purged);
+        if aj.expected == 0 {
+            self.finalize(id);
+        }
+    }
+
+    fn on_outcome(&mut self, outcome: JobOutcome) {
+        let id = outcome.job;
+        let Some(aj) = self.active.get_mut(&id) else {
+            return; // late straggler of an already-finalized job
+        };
+        aj.expected = aj.expected.saturating_sub(1);
+        if aj.cancelling || aj.failed.is_some() {
+            if aj.expected == 0 {
+                self.finalize(id);
+            }
+            return;
+        }
+        // Cancellation may land between outcomes of one round.
+        if aj.handle.cancel_requested() {
+            self.cancel_job(id);
+            return;
+        }
+        match aj.machine.absorb(outcome) {
+            Ok(round_done) => {
+                if round_done {
+                    self.advance(id);
+                }
+            }
+            Err(e) => self.fail_job(id, format!("{e:#}")),
+        }
+    }
+
+    fn on_error(&mut self, jerr: JobError) {
+        let id = jerr.job;
+        let msg = jerr.to_string();
+        let Some(aj) = self.active.get_mut(&id) else {
+            return;
+        };
+        aj.expected = aj.expected.saturating_sub(1);
+        if aj.failed.is_none() && !aj.cancelling {
+            self.fail_job(id, msg);
+        } else if aj.expected == 0 {
+            self.finalize(id);
+        }
+    }
+
+    /// Mark a job failed, shed its queued blocks, finalize when drained.
+    fn fail_job(&mut self, id: JobId, msg: String) {
+        let purged = self.pool.purge_job(id);
+        let Some(aj) = self.active.get_mut(&id) else {
+            return;
+        };
+        aj.failed = Some(msg);
+        aj.expected = aj.expected.saturating_sub(purged);
+        if aj.expected == 0 {
+            self.finalize(id);
+        }
+    }
+
+    /// A round completed cleanly: reduce it and either finish the job or
+    /// launch its next round.
+    fn advance(&mut self, id: JobId) {
+        let finished = {
+            let aj = self.active.get_mut(&id).expect("advance on active job");
+            if let Err(e) = aj.machine.finish_round() {
+                let msg = format!("{e:#}");
+                self.fail_job(id, msg);
+                return;
+            }
+            aj.machine.done()
+        };
+        if finished {
+            self.finalize(id);
+        } else {
+            let aj = self.active.get_mut(&id).expect("still active");
+            let jobs = aj.machine.start_round(id);
+            aj.expected = jobs.len();
+            self.pool.submit(jobs);
+        }
+    }
+
+    /// Terminal transition: retire from the pool, publish the status,
+    /// release the admission slot.
+    fn finalize(&mut self, id: JobId) {
+        let aj = self.active.remove(&id).expect("finalize on active job");
+        self.pool.retire_job(id);
+        self.mirror_pool_stats();
+        if let Some(dir) = aj.store_dir {
+            self.cleanup_dirs.push(dir);
+        }
+        let status = if let Some(msg) = aj.failed {
+            self.stats.failed.fetch_add(1, Ordering::Relaxed);
+            JobStatus::Failed(msg)
+        } else if aj.cancelling {
+            self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
+            JobStatus::Cancelled
+        } else {
+            match aj.machine.into_output() {
+                Ok(m) => {
+                    self.stats.completed.fetch_add(1, Ordering::Relaxed);
+                    JobStatus::Done(Box::new(ClusterOutput::from_machine(
+                        m,
+                        aj.started.elapsed().as_secs_f64(),
+                        0.0, // pool was already warm: no spawn cost
+                        aj.store.map(|s| s.stats().snapshot()),
+                        aj.blocks,
+                        self.pool.workers(),
+                    )))
+                }
+                Err(e) => {
+                    self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    JobStatus::Failed(format!("{e:#}"))
+                }
+            }
+        };
+        // Release the slot before publishing: a client woken by wait()
+        // may read stats() immediately and must see the slot returned.
+        self.admission.release();
+        aj.handle.set_status(status);
+        self.sweep_store_dirs();
+    }
+
+    fn mirror_pool_stats(&self) {
+        self.stats
+            .max_open_jobs
+            .fetch_max(self.pool.max_open_jobs(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::{BlockPlan, BlockShape};
+    use crate::coordinator::ClusterConfig;
+    use crate::image::SyntheticOrtho;
+
+    fn spec(seed: u64) -> JobSpec {
+        let img = Arc::new(SyntheticOrtho::default().with_seed(seed).generate(32, 28));
+        let plan = Arc::new(BlockPlan::new(32, 28, BlockShape::Square { side: 10 }));
+        JobSpec::new(
+            img,
+            plan,
+            ClusterConfig {
+                k: 2,
+                seed,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn single_job_completes() {
+        let server = ClusterServer::start(ServerConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let out = server.submit(spec(5)).unwrap().wait_output().unwrap();
+        assert_eq!(out.labels.len(), 32 * 28);
+        assert!(out.iterations >= 1);
+        let stats = server.stats();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.admission.in_flight, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn invalid_spec_rejected_without_admission_leak() {
+        let server = ClusterServer::start(ServerConfig::default());
+        let mut bad = spec(1);
+        bad.plan = Arc::new(BlockPlan::new(4, 4, BlockShape::Square { side: 2 }));
+        assert!(server.submit(bad).is_err());
+        assert_eq!(server.stats().admission.in_flight, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn server_shuts_down_cleanly_and_restarts() {
+        let server = ClusterServer::start(ServerConfig::default());
+        let h = server.submit(spec(2)).unwrap();
+        h.wait();
+        server.shutdown(); // joins the pool and serving loop
+        let server2 = ClusterServer::start(ServerConfig::default());
+        assert!(server2.submit(spec(3)).unwrap().wait_output().is_ok());
+        server2.shutdown();
+    }
+}

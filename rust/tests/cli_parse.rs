@@ -1,0 +1,231 @@
+//! CLI contract tests: parse round-trips for every subcommand, and the
+//! binary's exit-code discipline — usage mistakes (unknown flag,
+//! unknown subcommand, bad value) exit **2** with a message naming the
+//! offender; clean runs exit 0.
+
+use std::process::{Command, Output};
+
+use blockms::cli::{blockms_cli, SUBCOMMANDS};
+use blockms::util::cli::CliError;
+
+// ---------------------------------------------------------------------
+// Library-level round-trips (the exact spec the binary ships)
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_subcommand_parses_bare() {
+    let cli = blockms_cli();
+    for sub in SUBCOMMANDS {
+        let args = cli.parse(vec![sub.to_string()]).unwrap();
+        assert_eq!(args.subcommand(), Some(*sub), "{sub}");
+    }
+}
+
+#[test]
+fn cluster_flags_round_trip() {
+    let cli = blockms_cli();
+    let args = cli
+        .parse(vec![
+            "cluster", "--k", "8", "--workers", "3", "--kernel", "fused", "--mode", "local",
+            "--schedule", "static", "--approach", "row", "--width", "640", "--height=480",
+            "--strip-rows", "16", "--serial",
+        ])
+        .unwrap();
+    assert_eq!(args.subcommand(), Some("cluster"));
+    assert_eq!(args.get_parse::<usize>("k").unwrap(), 8);
+    assert_eq!(args.get_parse::<usize>("workers").unwrap(), 3);
+    assert_eq!(args.get("kernel"), Some("fused"));
+    assert_eq!(args.get("mode"), Some("local"));
+    assert_eq!(args.get("schedule"), Some("static"));
+    assert_eq!(args.get("approach"), Some("row"));
+    assert_eq!(args.get_parse::<usize>("width").unwrap(), 640);
+    assert_eq!(args.get_parse::<usize>("height").unwrap(), 480);
+    assert_eq!(args.get_parse::<usize>("strip-rows").unwrap(), 16);
+    assert!(args.flag("serial"));
+    assert!(!args.flag("verbose"));
+}
+
+#[test]
+fn service_flags_round_trip() {
+    let cli = blockms_cli();
+    let args = cli
+        .parse(vec![
+            "serve", "--jobs", "12", "--max-in-flight", "5", "--workers", "8",
+        ])
+        .unwrap();
+    assert_eq!(args.subcommand(), Some("serve"));
+    assert_eq!(args.get_parse::<usize>("jobs").unwrap(), 12);
+    assert_eq!(args.get_parse::<usize>("max-in-flight").unwrap(), 5);
+
+    let args = cli
+        .parse(vec!["batch", "--pools", "1,2,4", "--batches", "1,16", "--out", "b.json"])
+        .unwrap();
+    assert_eq!(args.subcommand(), Some("batch"));
+    assert_eq!(args.get("pools"), Some("1,2,4"));
+    assert_eq!(args.get("batches"), Some("1,16"));
+    assert_eq!(args.get("out"), Some("b.json"));
+}
+
+#[test]
+fn bench_flags_round_trip() {
+    let cli = blockms_cli();
+    for (sub, extra) in [
+        ("paper-tables", vec!["--table", "12"]),
+        ("cases", vec![]),
+        ("sweep", vec!["--out", "s.csv"]),
+        ("kernels", vec![]),
+        ("info", vec![]),
+    ] {
+        let mut argv = vec![sub, "--scale", "0.1", "--bench-iters", "3", "--seed", "9"];
+        argv.extend(extra);
+        let args = cli.parse(argv).unwrap();
+        assert_eq!(args.subcommand(), Some(sub));
+        assert_eq!(args.get_parse::<f64>("scale").unwrap(), 0.1);
+        assert_eq!(args.get_parse::<usize>("bench-iters").unwrap(), 3);
+        assert_eq!(args.get_parse::<u64>("seed").unwrap(), 9);
+    }
+}
+
+#[test]
+fn unknown_flag_and_missing_value_are_typed_errors() {
+    let cli = blockms_cli();
+    assert_eq!(
+        cli.parse(vec!["cluster", "--nope"]),
+        Err(CliError::Unknown("nope".into()))
+    );
+    assert_eq!(
+        cli.parse(vec!["cluster", "--k"]),
+        Err(CliError::MissingValue("k".into()))
+    );
+    assert_eq!(
+        cli.parse(vec!["--help"]),
+        Err(CliError::HelpRequested)
+    );
+}
+
+// ---------------------------------------------------------------------
+// Binary-level exit codes (spawning the real executable)
+// ---------------------------------------------------------------------
+
+fn run(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_blockms"))
+        .args(args)
+        .current_dir(std::env::temp_dir())
+        .output()
+        .expect("spawn blockms")
+}
+
+fn assert_usage_error(args: &[&str], names: &str) {
+    let out = run(args);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(
+        out.status.code(),
+        Some(2),
+        "{args:?} should exit 2; stderr: {stderr}"
+    );
+    assert!(
+        stderr.contains(names),
+        "{args:?} stderr must name {names:?}: {stderr}"
+    );
+}
+
+#[test]
+fn unknown_flag_exits_2_for_every_subcommand() {
+    for sub in SUBCOMMANDS {
+        assert_usage_error(&[sub, "--definitely-not-a-flag"], "definitely-not-a-flag");
+    }
+}
+
+#[test]
+fn unknown_subcommand_exits_2() {
+    assert_usage_error(&["frobnicate"], "frobnicate");
+}
+
+#[test]
+fn bad_values_exit_2_naming_the_flag() {
+    assert_usage_error(&["cluster", "--k", "abc"], "--k");
+    // small dims: these reach flag validation after the scene is built
+    assert_usage_error(
+        &["cluster", "--width", "32", "--height", "32", "--kernel", "turbo"],
+        "--kernel",
+    );
+    assert_usage_error(
+        &["cluster", "--width", "32", "--height", "32", "--schedule", "rr"],
+        "--schedule",
+    );
+    assert_usage_error(&["serve", "--jobs", "many"], "--jobs");
+    assert_usage_error(&["batch", "--pools", "1,x"], "--pools");
+    assert_usage_error(&["batch", "--batches", "0"], "--batches");
+    assert_usage_error(&["kernels", "--scale", "big"], "--scale");
+    assert_usage_error(&["paper-tables", "--table", "twelve"], "--table");
+    assert_usage_error(&["sweep", "--bench-iters", "3.5"], "--bench-iters");
+    assert_usage_error(&["cases", "--seed", "-1"], "--seed");
+    // parsed-but-out-of-range values are usage errors too, not panics
+    assert_usage_error(&["serve", "--workers", "0"], "--workers");
+    assert_usage_error(&["serve", "--max-in-flight", "0"], "--max-in-flight");
+    assert_usage_error(&["cluster", "--k", "0"], "--k");
+    assert_usage_error(
+        &["cluster", "--width", "32", "--height", "32", "--strip-rows", "0"],
+        "--strip-rows",
+    );
+}
+
+#[test]
+fn missing_value_exits_2() {
+    assert_usage_error(&["cluster", "--k"], "--k");
+}
+
+#[test]
+fn help_exits_0_and_lists_every_subcommand() {
+    let out = run(&["--help"]);
+    assert_eq!(out.status.code(), Some(0));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for sub in SUBCOMMANDS {
+        assert!(stdout.contains(sub), "help must list {sub}: {stdout}");
+    }
+}
+
+#[test]
+fn info_runs_clean() {
+    let out = run(&["info"]);
+    assert_eq!(out.status.code(), Some(0));
+}
+
+#[test]
+fn cluster_happy_path_exits_0() {
+    let out = run(&[
+        "cluster", "--width", "48", "--height", "40", "--k", "2", "--iters", "2", "--workers",
+        "2", "--serial",
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("label agreement with serial: 100.0000%"), "{stdout}");
+}
+
+#[test]
+fn serve_happy_path_exits_0() {
+    let out = run(&[
+        "serve", "--jobs", "3", "--workers", "2", "--max-in-flight", "2", "--width", "40",
+        "--height", "32", "--k", "2", "--iters", "2",
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("aggregate: 3 jobs"), "{stdout}");
+}
+
+#[test]
+fn batch_happy_path_writes_json() {
+    let out_path = std::env::temp_dir().join("blockms_cli_test_BENCH_service.json");
+    let _ = std::fs::remove_file(&out_path);
+    let out = run(&[
+        "batch", "--pools", "1,2", "--batches", "2", "--scale", "0.04", "--bench-iters", "2",
+        "--k", "2", "--out", out_path.to_str().unwrap(),
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+    let text = std::fs::read_to_string(&out_path).expect("BENCH_service.json written");
+    assert!(text.contains("speedup_vs_serialized"), "{text}");
+    let _ = std::fs::remove_file(&out_path);
+}

@@ -1,0 +1,171 @@
+//! Known-answer and property tests for `metrics::quality`.
+//!
+//! The in-module unit tests check qualitative behaviour (ordering,
+//! degenerate cases); these tests pin the metrics to **hand-computed
+//! values** on tiny fixtures, and use the `util::qcheck` harness to
+//! check permutation invariances on generated clusterings.
+
+use blockms::metrics::quality::{adjusted_rand_sampled, davies_bouldin, label_agreement, purity};
+use blockms::util::prng::Rng;
+use blockms::util::qcheck::{forall, pair, usize_in, vec_of};
+
+// ---------------------------------------------------------------------
+// Known answers (worked by hand)
+// ---------------------------------------------------------------------
+
+/// 1-channel, two clusters: pixels {0,2} around centroid 1 and {8,10}
+/// around centroid 9. Scatter_i = mean |x−c| = 1 for both; centroid
+/// distance = 8; R_01 = (1+1)/8 = 0.25; DB = mean(max_j R) = 0.25.
+#[test]
+fn davies_bouldin_hand_computed_1d() {
+    let pixels = vec![0.0f32, 2.0, 8.0, 10.0];
+    let labels = vec![0u32, 0, 1, 1];
+    let centroids = vec![1.0f32, 9.0];
+    let db = davies_bouldin(&pixels, &labels, &centroids, 2, 1);
+    assert!((db - 0.25).abs() < 1e-12, "db = {db}");
+}
+
+/// 2-channel version: cluster 0 at (0,0),(0,2) → centroid (0,1), cluster
+/// 1 at (4,0),(4,2) → centroid (4,1). Scatter = 1 each, distance 4,
+/// DB = 2/4 = 0.5.
+#[test]
+fn davies_bouldin_hand_computed_2d() {
+    let pixels = vec![0.0f32, 0.0, 0.0, 2.0, 4.0, 0.0, 4.0, 2.0];
+    let labels = vec![0u32, 0, 1, 1];
+    let centroids = vec![0.0f32, 1.0, 4.0, 1.0];
+    let db = davies_bouldin(&pixels, &labels, &centroids, 2, 2);
+    assert!((db - 0.5).abs() < 1e-12, "db = {db}");
+}
+
+/// Three clusters on a line: centroids 0, 4, 20, all scatters 1.
+/// R matrix: R(0,1)=2/4=0.5, R(0,2)=2/20=0.1, R(1,2)=2/16=0.125.
+/// Per-cluster maxima: 0.5, 0.5, 0.125 → DB = 1.125/3 = 0.375.
+#[test]
+fn davies_bouldin_hand_computed_three_clusters() {
+    let pixels = vec![-1.0f32, 1.0, 3.0, 5.0, 19.0, 21.0];
+    let labels = vec![0u32, 0, 1, 1, 2, 2];
+    let centroids = vec![0.0f32, 4.0, 20.0];
+    let db = davies_bouldin(&pixels, &labels, &centroids, 3, 1);
+    assert!((db - 0.375).abs() < 1e-12, "db = {db}");
+}
+
+/// labels [0,0,1,1,1] vs truth [0,1,1,1,2]: cluster 0 sees truth {0,1}
+/// (majority 1 pixel), cluster 1 sees truth {1,1,2} (majority 2 pixels)
+/// → purity = (1+2)/5 = 0.6.
+#[test]
+fn purity_hand_computed() {
+    let labels = vec![0u32, 0, 1, 1, 1];
+    let truth = vec![0u32, 1, 1, 1, 2];
+    assert_eq!(purity(&labels, &truth), 0.6);
+}
+
+/// a=[0,0,1,2], b=[1,1,0,0], k=3. Overlaps: (0→1)=2, (1→0)=1, (2→0)=1.
+/// Greedy matching: (0,1) worth 2, then (1,0) worth 1; cluster 2 has no
+/// unused b-cluster with overlap. Agreement = 3/4.
+#[test]
+fn label_agreement_hand_computed() {
+    let a = vec![0u32, 0, 1, 2];
+    let b = vec![1u32, 1, 0, 0];
+    assert_eq!(label_agreement(&a, &b, 3), 0.75);
+}
+
+/// ARI on two 2-cluster partitions of 6 points that disagree on one
+/// point: a=[0,0,0,1,1,1], b=[0,0,1,1,1,1].
+/// Contingency: n00=2, n01=1, n11=3. Σcomb2(nij)=1+0+3=4;
+/// Σcomb2(rows)=3+3=6; Σcomb2(cols)=1+6=7; comb2(6)=15.
+/// expected=6*7/15=2.8; max=6.5; ARI=(4−2.8)/(6.5−2.8)=12/37.
+#[test]
+fn adjusted_rand_hand_computed() {
+    let a = vec![0u32, 0, 0, 1, 1, 1];
+    let b = vec![0u32, 0, 1, 1, 1, 1];
+    let ari = adjusted_rand_sampled(&a, &b, 6);
+    assert!((ari - 12.0 / 37.0).abs() < 1e-12, "ari = {ari}");
+}
+
+// ---------------------------------------------------------------------
+// Permutation-invariance properties (qcheck)
+// ---------------------------------------------------------------------
+
+/// Deterministically derange a permutation of 0..k from a seed.
+fn permutation(k: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let mut p: Vec<u32> = (0..k as u32).collect();
+    // Fisher–Yates with the crate PRNG
+    for i in (1..k).rev() {
+        let j = rng.range_usize(0, i + 1);
+        p.swap(i, j);
+    }
+    p
+}
+
+/// Purity counts in u64 — relabeling clusters must leave it *exactly*
+/// unchanged.
+#[test]
+fn purity_is_invariant_under_label_permutation() {
+    let gen = pair(vec_of(usize_in(0, 3), 8, 64), usize_in(0, u64::MAX as usize / 2));
+    forall(11, 200, &gen, |(raw, pseed)| {
+        let labels: Vec<u32> = raw.iter().map(|&v| v as u32).collect();
+        // truth: a fixed striping of the same length
+        let truth: Vec<u32> = (0..labels.len()).map(|i| (i % 3) as u32).collect();
+        let p = permutation(4, *pseed as u64);
+        let permuted: Vec<u32> = labels.iter().map(|&l| p[l as usize]).collect();
+        purity(&labels, &truth) == purity(&permuted, &truth)
+    });
+}
+
+/// Relabeling one side of `label_agreement` by a permutation of the
+/// *partition itself* must score 1.0 (the greedy matcher recovers the
+/// bijection exactly).
+#[test]
+fn label_agreement_recovers_any_permutation() {
+    let gen = pair(vec_of(usize_in(0, 4), 5, 80), usize_in(0, 1 << 30));
+    forall(12, 300, &gen, |(raw, pseed)| {
+        let a: Vec<u32> = raw.iter().map(|&v| v as u32).collect();
+        let p = permutation(5, *pseed as u64);
+        let b: Vec<u32> = a.iter().map(|&l| p[l as usize]).collect();
+        label_agreement(&a, &b, 5) == 1.0
+    });
+}
+
+/// ARI is invariant (up to f64 summation noise) under relabeling either
+/// side, and equals 1 for identical partitions.
+#[test]
+fn adjusted_rand_is_permutation_invariant() {
+    let gen = pair(vec_of(usize_in(0, 3), 10, 120), usize_in(0, 1 << 30));
+    forall(13, 200, &gen, |(raw, pseed)| {
+        let a: Vec<u32> = raw.iter().map(|&v| v as u32).collect();
+        let truth: Vec<u32> = (0..a.len()).map(|i| ((i * 7) % 4) as u32).collect();
+        let p = permutation(4, *pseed as u64);
+        let permuted: Vec<u32> = a.iter().map(|&l| p[l as usize]).collect();
+        let base = adjusted_rand_sampled(&a, &truth, a.len());
+        let perm = adjusted_rand_sampled(&permuted, &truth, a.len());
+        (base - perm).abs() < 1e-9
+            && (adjusted_rand_sampled(&a, &a, a.len()) - 1.0).abs() < 1e-12
+    });
+}
+
+/// Davies–Bouldin is invariant (up to f64 reassociation) under a
+/// consistent permutation of labels *and* centroid rows.
+#[test]
+fn davies_bouldin_is_invariant_under_consistent_relabeling() {
+    let k = 3usize;
+    let gen = pair(vec_of(usize_in(0, k - 1), 6, 48), usize_in(0, 1 << 30));
+    forall(14, 200, &gen, |(raw, pseed)| {
+        let labels: Vec<u32> = raw.iter().map(|&v| v as u32).collect();
+        // deterministic 1-channel pixels spread by index
+        let pixels: Vec<f32> = (0..labels.len())
+            .map(|i| (i as f32 * 1.37) % 29.0)
+            .collect();
+        let centroids = vec![3.0f32, 11.0, 23.0];
+        let p = permutation(k, *pseed as u64);
+        let plabels: Vec<u32> = labels.iter().map(|&l| p[l as usize]).collect();
+        // permute centroid rows to match: new row p[j] holds old row j
+        let mut pcen = vec![0.0f32; k];
+        for j in 0..k {
+            pcen[p[j] as usize] = centroids[j];
+        }
+        let base = davies_bouldin(&pixels, &labels, &centroids, k, 1);
+        let perm = davies_bouldin(&pixels, &plabels, &pcen, k, 1);
+        (base - perm).abs() < 1e-9
+    });
+}

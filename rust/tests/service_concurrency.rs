@@ -1,0 +1,435 @@
+//! Concurrency suite for the multi-job clustering service.
+//!
+//! The contract under test: N jobs interleaved over ONE shared worker
+//! pool each produce output **bit-identical** to a solo
+//! `Coordinator::cluster` of the same spec — across k, channel counts,
+//! block shapes, and kernels — while cancellation, failure, and the
+//! admission cap stay per-job properties that never leak across jobs.
+
+use std::sync::Arc;
+
+use blockms::blocks::{BlockPlan, BlockShape};
+use blockms::coordinator::{
+    ClusterConfig, ClusterMode, ClusterOutput, Coordinator, CoordinatorConfig, Engine, IoMode,
+    Schedule,
+};
+use blockms::image::{Raster, SyntheticOrtho};
+use blockms::kmeans::kernel::KernelChoice;
+use blockms::service::{ClusterServer, JobSpec, JobStatus, ServerConfig};
+
+fn image(channels: usize, h: usize, w: usize, seed: u64) -> Arc<Raster> {
+    Arc::new(
+        SyntheticOrtho::default()
+            .with_channels(channels)
+            .with_seed(seed)
+            .generate(h, w),
+    )
+}
+
+/// The paper's three block approaches, scaled to the test image.
+fn paper_shapes() -> [BlockShape; 3] {
+    [
+        BlockShape::Rows { band_rows: 10 },
+        BlockShape::Cols { band_cols: 7 },
+        BlockShape::Square { side: 13 },
+    ]
+}
+
+fn solo(spec: &JobSpec, workers: usize) -> ClusterOutput {
+    Coordinator::new(CoordinatorConfig {
+        workers,
+        engine: Engine::Native,
+        mode: spec.mode,
+        io: IoMode::Direct, // I/O path must not change values
+        schedule: Schedule::Dynamic,
+        kernel: spec.kernel,
+        fail_block: None,
+    })
+    .cluster(&spec.image, &spec.plan, &spec.cluster)
+    .expect("solo run")
+}
+
+fn cluster_counts(labels: &[u32], k: usize) -> Vec<u64> {
+    let mut counts = vec![0u64; k];
+    for &l in labels {
+        counts[l as usize] += 1;
+    }
+    counts
+}
+
+/// Labels, centroids, per-cluster counts, and inertia all bit-identical.
+fn assert_identical(tag: &str, got: &ClusterOutput, want: &ClusterOutput, k: usize) {
+    assert_eq!(got.labels, want.labels, "{tag}: labels differ");
+    assert_eq!(got.centroids, want.centroids, "{tag}: centroids differ");
+    assert_eq!(
+        cluster_counts(&got.labels, k),
+        cluster_counts(&want.labels, k),
+        "{tag}: counts differ"
+    );
+    assert_eq!(
+        got.inertia.to_bits(),
+        want.inertia.to_bits(),
+        "{tag}: inertia differs ({} vs {})",
+        got.inertia,
+        want.inertia
+    );
+    assert_eq!(got.iterations, want.iterations, "{tag}: iterations differ");
+    assert_eq!(got.converged, want.converged, "{tag}: convergence differs");
+}
+
+/// The acceptance matrix: k∈{2,4,8} × C∈{1,3,4} × all three paper block
+/// shapes, with kernels naive|pruned|fused cycling through the cells.
+/// All 27 jobs run concurrently through one 4-worker pool and each must
+/// equal its solo run exactly.
+#[test]
+fn mixed_jobs_bit_identical_to_solo() {
+    let (h, w) = (40, 35);
+    let mut specs = Vec::new();
+    let mut idx = 0u64;
+    for &k in &[2usize, 4, 8] {
+        for &channels in &[1usize, 3, 4] {
+            for shape in paper_shapes() {
+                let kernel = KernelChoice::ALL[(idx as usize) % 3];
+                let img = image(channels, h, w, 100 + idx);
+                let plan = Arc::new(BlockPlan::new(h, w, shape));
+                specs.push(
+                    JobSpec::new(
+                        img,
+                        plan,
+                        ClusterConfig {
+                            k,
+                            seed: 900 + idx,
+                            ..Default::default()
+                        },
+                    )
+                    .with_kernel(kernel),
+                );
+                idx += 1;
+            }
+        }
+    }
+    assert_eq!(specs.len(), 27);
+
+    let server = ClusterServer::start(ServerConfig {
+        workers: 4,
+        schedule: Schedule::Dynamic,
+        max_in_flight: 8,
+    });
+    // Submission from one thread: the admission gate (cap 8) provides
+    // the backpressure while earlier jobs are still in flight.
+    let handles: Vec<_> = specs
+        .iter()
+        .map(|s| server.submit(s.clone()).expect("submit"))
+        .collect();
+    for (i, (spec, handle)) in specs.iter().zip(&handles).enumerate() {
+        let got = handle.wait_output().expect("service job");
+        let want = solo(spec, 3);
+        let tag = format!(
+            "job {i} (k={}, kernel={}, blocks={})",
+            spec.cluster.k,
+            spec.kernel,
+            spec.plan.len()
+        );
+        assert_identical(&tag, &got, &want, spec.cluster.k);
+        // service jobs never pay pool spawn cost
+        assert_eq!(got.spawn_secs, 0.0);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.completed, 27);
+    assert_eq!(stats.failed, 0);
+    assert!(
+        stats.max_open_jobs <= 8,
+        "admission cap exceeded: {} jobs open",
+        stats.max_open_jobs
+    );
+    server.shutdown();
+}
+
+/// Static scheduling and local mode also hold the solo-equivalence
+/// contract through the shared pool.
+#[test]
+fn static_schedule_and_local_mode_match_solo() {
+    let (h, w) = (48, 44);
+    let server = ClusterServer::start(ServerConfig {
+        workers: 3,
+        schedule: Schedule::Static,
+        max_in_flight: 4,
+    });
+    let mut pairs = Vec::new();
+    for (i, mode) in [ClusterMode::Global, ClusterMode::Local, ClusterMode::Global]
+        .into_iter()
+        .enumerate()
+    {
+        let img = image(3, h, w, 40 + i as u64);
+        let plan = Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 16 }));
+        let spec = JobSpec::new(
+            img,
+            plan,
+            ClusterConfig {
+                k: 3,
+                seed: 70 + i as u64,
+                ..Default::default()
+            },
+        )
+        .with_mode(mode)
+        .with_kernel(KernelChoice::Pruned);
+        let handle = server.submit(spec.clone()).unwrap();
+        pairs.push((spec, handle));
+    }
+    for (i, (spec, handle)) in pairs.iter().enumerate() {
+        let got = handle.wait_output().unwrap();
+        let want = solo(spec, 2);
+        assert_identical(&format!("static job {i} ({:?})", spec.mode), &got, &want, 3);
+    }
+    server.shutdown();
+}
+
+/// Strip-store I/O jobs: per-job file-backed stores, counted accesses,
+/// and values identical to direct reads.
+#[test]
+fn strip_io_jobs_are_isolated_and_exact() {
+    let (h, w) = (40, 30);
+    let server = ClusterServer::start(ServerConfig {
+        workers: 2,
+        schedule: Schedule::Dynamic,
+        max_in_flight: 4,
+    });
+    // Two same-shaped jobs at once: with per-job backing files a name
+    // collision would corrupt one of them.
+    let mut pairs = Vec::new();
+    for i in 0..2u64 {
+        let img = image(3, h, w, 60 + i);
+        let plan = Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 12 }));
+        let spec = JobSpec::new(
+            img,
+            plan,
+            ClusterConfig {
+                k: 2,
+                seed: 80 + i,
+                fixed_iters: Some(3),
+                ..Default::default()
+            },
+        )
+        .with_io(IoMode::Strips {
+            strip_rows: 8,
+            file_backed: true,
+        });
+        let handle = server.submit(spec.clone()).unwrap();
+        pairs.push((spec, handle));
+    }
+    for (spec, handle) in &pairs {
+        let got = handle.wait_output().unwrap();
+        let want = solo(spec, 2); // solo reads direct: values must agree
+        assert_identical("strip job", &got, &want, 2);
+        let io = got.io_stats.expect("strip jobs report io stats");
+        // 3 step rounds + 1 assign = 4 passes over all blocks
+        let (per_pass, _, _) = blockms::stripstore::read_amplification(&spec.plan, 8);
+        assert_eq!(io.strip_reads as usize, per_pass * 4);
+        assert_eq!(io.block_reads as usize, spec.plan.len() * 4);
+    }
+    server.shutdown();
+}
+
+/// Cancelling one job mid-run leaves every other job's result untouched
+/// (still bit-identical to solo).
+#[test]
+fn cancellation_mid_round_leaves_others_untouched() {
+    let (h, w) = (96, 90);
+    let server = ClusterServer::start(ServerConfig {
+        workers: 3,
+        schedule: Schedule::Dynamic,
+        max_in_flight: 4,
+    });
+    let mut specs = Vec::new();
+    for i in 0..3u64 {
+        let img = image(3, h, w, 20 + i);
+        let plan = Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 24 }));
+        specs.push(JobSpec::new(
+            img,
+            plan,
+            ClusterConfig {
+                k: 6,
+                seed: 30 + i,
+                fixed_iters: Some(40), // long enough to cancel mid-run
+                ..Default::default()
+            },
+        ));
+    }
+    let handles: Vec<_> = specs
+        .iter()
+        .map(|s| server.submit(s.clone()).unwrap())
+        .collect();
+    std::thread::sleep(std::time::Duration::from_millis(3));
+    handles[1].cancel();
+    let st1 = handles[1].wait();
+    // The victim is cancelled (or, on a very fast machine, already done);
+    // never failed.
+    assert!(
+        matches!(st1, JobStatus::Cancelled | JobStatus::Done(_)),
+        "unexpected status: {}",
+        st1.label()
+    );
+    for i in [0usize, 2] {
+        let got = handles[i].wait_output().expect("survivor job");
+        let want = solo(&specs[i], 2);
+        assert_identical(&format!("survivor {i}"), &got, &want, 6);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.cancelled + stats.completed, 3);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.admission.in_flight, 0, "slots must be released");
+    server.shutdown();
+}
+
+/// A worker-side failure in one job neither poisons the pool nor the
+/// neighbours.
+#[test]
+fn failed_job_does_not_poison_the_pool() {
+    let (h, w) = (36, 33);
+    let server = ClusterServer::start(ServerConfig {
+        workers: 2,
+        schedule: Schedule::Dynamic,
+        max_in_flight: 3,
+    });
+    let mut failing = JobSpec::new(
+        image(3, h, w, 1),
+        Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 11 })),
+        ClusterConfig {
+            k: 2,
+            seed: 2,
+            ..Default::default()
+        },
+    );
+    failing.fail_block = Some(1);
+    let healthy: Vec<JobSpec> = (0..2u64)
+        .map(|i| {
+            JobSpec::new(
+                image(3, h, w, 10 + i),
+                Arc::new(BlockPlan::new(h, w, BlockShape::Rows { band_rows: 9 })),
+                ClusterConfig {
+                    k: 4,
+                    seed: 50 + i,
+                    ..Default::default()
+                },
+            )
+            .with_kernel(KernelChoice::Fused)
+        })
+        .collect();
+    let h_fail = server.submit(failing).unwrap();
+    let h_ok: Vec<_> = healthy
+        .iter()
+        .map(|s| server.submit(s.clone()).unwrap())
+        .collect();
+    match h_fail.wait() {
+        JobStatus::Failed(msg) => {
+            assert!(msg.contains("injected failure"), "{msg}");
+        }
+        other => panic!("expected failure, got {}", other.label()),
+    }
+    for (spec, handle) in healthy.iter().zip(&h_ok) {
+        let got = handle.wait_output().expect("healthy job");
+        assert_identical("healthy neighbour", &got, &solo(spec, 2), 4);
+    }
+    // The pool survives: a fresh job after the failure still works.
+    let again = healthy[0].clone();
+    let got = server.submit(again).unwrap().wait_output().unwrap();
+    assert_identical("post-failure job", &got, &solo(&healthy[0], 2), 4);
+    let stats = server.stats();
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.completed, 3);
+    server.shutdown();
+}
+
+/// The admission cap is never exceeded, measured by pool instrumentation
+/// (high water of simultaneously registered jobs), under 12 competing
+/// submitter threads.
+#[test]
+fn admission_cap_never_exceeded() {
+    let cap = 3;
+    let server = Arc::new(ClusterServer::start(ServerConfig {
+        workers: 2,
+        schedule: Schedule::Dynamic,
+        max_in_flight: cap,
+    }));
+    let mut threads = Vec::new();
+    for t in 0..12u64 {
+        let server = Arc::clone(&server);
+        threads.push(std::thread::spawn(move || {
+            let (h, w) = (32, 30);
+            let spec = JobSpec::new(
+                image(3, h, w, 200 + t),
+                Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 10 })),
+                ClusterConfig {
+                    k: 3,
+                    seed: 300 + t,
+                    fixed_iters: Some(4),
+                    ..Default::default()
+                },
+            );
+            // blocks at the gate when the cap is reached
+            server.submit(spec).unwrap().wait_output().unwrap().labels.len()
+        }));
+    }
+    for t in threads {
+        assert_eq!(t.join().unwrap(), 32 * 30);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.completed, 12);
+    assert!(
+        stats.admission.high_water <= cap,
+        "admission high water {} exceeds cap {cap}",
+        stats.admission.high_water
+    );
+    assert!(
+        stats.max_open_jobs <= cap,
+        "pool saw {} jobs open at once (cap {cap})",
+        stats.max_open_jobs
+    );
+    assert_eq!(stats.admission.in_flight, 0);
+    Arc::try_unwrap(server).ok().expect("sole owner").shutdown();
+}
+
+/// `try_submit` sheds instead of blocking when the gate is full.
+#[test]
+fn try_submit_sheds_at_capacity() {
+    let (h, w) = (128, 120);
+    let server = ClusterServer::start(ServerConfig {
+        workers: 1,
+        schedule: Schedule::Dynamic,
+        max_in_flight: 2,
+    });
+    let heavy: Vec<_> = (0..2u64)
+        .map(|i| {
+            let spec = JobSpec::new(
+                image(3, h, w, 400 + i),
+                Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 32 })),
+                ClusterConfig {
+                    k: 8,
+                    seed: 500 + i,
+                    fixed_iters: Some(60),
+                    ..Default::default()
+                },
+            );
+            server.submit(spec).unwrap()
+        })
+        .collect();
+    let small = JobSpec::new(
+        image(3, 16, 16, 9),
+        Arc::new(BlockPlan::new(16, 16, BlockShape::Square { side: 8 })),
+        ClusterConfig {
+            k: 2,
+            seed: 9,
+            ..Default::default()
+        },
+    );
+    assert!(
+        server.try_submit(small).unwrap().is_none(),
+        "gate should be full"
+    );
+    assert!(server.stats().admission.rejected >= 1);
+    for h in heavy {
+        h.cancel();
+        h.wait();
+    }
+    server.shutdown();
+}

@@ -1,0 +1,130 @@
+//! Strip-store I/O contract tests.
+//!
+//! Two properties, on BOTH backings (memory and real file):
+//!
+//! 1. **Counted = closed form.** The `AccessStats` strip-read counter
+//!    after one full pass over a plan equals the closed-form
+//!    `read_amplification` prediction, for the paper's three block
+//!    shapes (row / column / square, §4 Cases 1–3 scaled down 1:10).
+//! 2. **Concurrent readers see consistent bytes.** Several
+//!    `StripReader`s racing over the same store each reconstruct every
+//!    block bit-identical to a direct crop of the source raster.
+
+use std::sync::Arc;
+
+use blockms::blocks::{BlockPlan, BlockShape};
+use blockms::image::{Raster, SyntheticOrtho};
+use blockms::stripstore::{read_amplification, Backing, StripStore};
+
+/// The paper's 4656×5793 hero image scaled ~1:10 (width 466, height 579).
+const H: usize = 579;
+const W: usize = 466;
+const STRIP_ROWS: usize = 8;
+
+fn hero_image() -> Raster {
+    SyntheticOrtho::default().with_seed(41).generate(H, W)
+}
+
+/// Row / square / column shapes at 1:10 of the paper's Cases 1–3.
+fn paper_shapes() -> [(&'static str, BlockShape); 3] {
+    [
+        ("row", BlockShape::Custom { rows: 120, cols: W }),
+        ("square", BlockShape::Square { side: 120 }),
+        ("column", BlockShape::Custom { rows: H, cols: 100 }),
+    ]
+}
+
+fn backings(tag: &str) -> [Backing; 2] {
+    [
+        Backing::Memory,
+        Backing::File(std::env::temp_dir().join(format!("blockms_striptest_{tag}"))),
+    ]
+}
+
+#[test]
+fn counted_reads_equal_closed_form_on_both_backings() {
+    let img = hero_image();
+    for (name, shape) in paper_shapes() {
+        let plan = BlockPlan::new(H, W, shape);
+        let (expected_reads, total_strips, amp) = read_amplification(&plan, STRIP_ROWS);
+        assert!(total_strips > 0 && amp >= 1.0);
+        for backing in backings(name) {
+            let file_backed = matches!(backing, Backing::File(_));
+            let store = StripStore::new(&img, STRIP_ROWS, backing).unwrap();
+            let mut reader = store.reader().unwrap();
+            let mut buf = Vec::new();
+            for region in plan.iter() {
+                reader.read_block(region, &mut buf).unwrap();
+            }
+            let snap = store.stats().snapshot();
+            assert_eq!(
+                snap.strip_reads as usize, expected_reads,
+                "{name} (file_backed={file_backed}): counted != closed form"
+            );
+            assert_eq!(snap.block_reads as usize, plan.len());
+            assert!(snap.bytes_read > 0);
+        }
+    }
+}
+
+/// The column case is the paper's worst case: ⌈466/100⌉ = 5 column
+/// blocks, each spanning every strip → the whole file is read exactly
+/// 5×. The row case is the best case: amplification 1 (strip-aligned
+/// bands).
+#[test]
+fn paper_case_amplifications_at_one_tenth_scale() {
+    let col_plan = BlockPlan::new(H, W, BlockShape::Custom { rows: H, cols: 100 });
+    let (_, _, col_amp) = read_amplification(&col_plan, STRIP_ROWS);
+    assert_eq!(col_amp, 5.0, "column blocks must read the file 5x");
+
+    let row_plan = BlockPlan::new(H, W, BlockShape::Custom { rows: 120, cols: W });
+    let (_, _, row_amp) = read_amplification(&row_plan, STRIP_ROWS);
+    assert!(row_amp < 1.01, "row blocks must approach amplification 1, got {row_amp}");
+
+    let sq_plan = BlockPlan::new(H, W, BlockShape::Square { side: 120 });
+    let (_, _, sq_amp) = read_amplification(&sq_plan, STRIP_ROWS);
+    // 466/120 → 4 blocks per strip row: every strip read ~4x
+    assert!((sq_amp - 4.0).abs() < 0.05, "square amplification {sq_amp}");
+}
+
+#[test]
+fn concurrent_readers_see_consistent_bytes_on_both_backings() {
+    // Smaller image: this test reads every block from 4 threads.
+    let img = SyntheticOrtho::default().with_seed(17).generate(96, 77);
+    let plan = BlockPlan::new(96, 77, BlockShape::Square { side: 13 });
+    for backing in backings("concurrent") {
+        let file_backed = matches!(backing, Backing::File(_));
+        let store = Arc::new(StripStore::new(&img, 5, backing).unwrap());
+        let img = Arc::new(img.clone());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let store = Arc::clone(&store);
+            let img = Arc::clone(&img);
+            let plan = BlockPlan::new(96, 77, BlockShape::Square { side: 13 });
+            handles.push(std::thread::spawn(move || {
+                let mut reader = store.reader().unwrap();
+                let mut buf = Vec::new();
+                for region in plan.iter() {
+                    reader.read_block(region, &mut buf).unwrap();
+                    assert_eq!(
+                        buf,
+                        img.crop(region),
+                        "thread {t}: inconsistent bytes at {region}"
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 4 threads × full pass, counters exact
+        let snap = store.stats().snapshot();
+        assert_eq!(
+            snap.block_reads as usize,
+            plan.len() * 4,
+            "file_backed={file_backed}"
+        );
+        let (per_pass, _, _) = read_amplification(&plan, 5);
+        assert_eq!(snap.strip_reads as usize, per_pass * 4);
+    }
+}
