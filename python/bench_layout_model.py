@@ -1,0 +1,309 @@
+#!/usr/bin/env python3
+"""Numpy mirror of `blockms layout` for containers without cargo.
+
+Generates BENCH_layout.json with the exact schema of the rust bench
+(EXPERIMENTS.md §Layout). Two kinds of numbers:
+
+- I/O counters (`bytes_read`, `strip_reads`, cache hits/misses) are the
+  *closed-form* values of the access model — identical to what the rust
+  run counts: interleaved layouts read every block's strip span once
+  per pass, the SoA tile arena reads it once per job.
+- Timings are *measured* on a numpy mirror of the three kernels run
+  with the same protocol (fixed Lloyd iterations + final labeling,
+  per-block over the real block plans, best of `samples` after one
+  warmup). They model relative layout/kernel behaviour, not rust
+  absolute speed — hence `"source": "python-model"`. Regenerate with
+  `blockms layout --scale 1` where cargo exists.
+
+Labels are checked bit-identical across kernels (same argmin ties,
+same update stream); a divergence aborts rather than emitting
+`matches_naive: false`.
+"""
+
+import json
+import math
+import sys
+import time
+
+import numpy as np
+
+H = W = 1024
+C = 3
+KS = [2, 4, 8]
+ITERS = 4
+SAMPLES = 2
+SEED = 0x50A71E
+WORKERS = 4
+STRIP_ROWS = 64
+CACHE_STRIPS = 0
+REL_SLACK = 1e-5  # guard band, mirrors kernel.rs
+
+LAYOUT_CELLS = [
+    ("interleaved", "naive"),
+    ("interleaved", "pruned"),
+    ("interleaved", "lanes"),
+    ("soa", "naive"),
+    ("soa", "pruned"),
+    ("soa", "lanes"),
+]
+
+
+def paper_shapes():
+    """BlockShape::paper_default for the three approaches (TARGET=5)."""
+    rows = math.ceil(H / 5.0)
+    cols = math.ceil(W / 5.0)
+    side = math.ceil(math.sqrt(H * W / 5.0))
+    return [
+        ("row", rows, W),
+        ("column", H, cols),
+        ("square", side, side),
+    ]
+
+
+def block_plan(br, bc):
+    regions = []
+    for r0 in range(0, H, br):
+        for c0 in range(0, W, bc):
+            regions.append((r0, c0, min(br, H - r0), min(bc, W - c0)))
+    return regions
+
+
+def strip_span(r0, rows):
+    return r0 // STRIP_ROWS, (r0 + rows - 1) // STRIP_ROWS
+
+
+def strip_bytes(s):
+    first = s * STRIP_ROWS
+    rows = min(STRIP_ROWS, H - first)
+    return rows * W * C * 4
+
+
+def io_closed_form(plan, layout, passes):
+    """(bytes_read, strip_reads) for a full drive — the numbers the rust
+    AccessStats must report (static schedule, no cache, no prefetch)."""
+    per_pass_reads = 0
+    per_pass_bytes = 0
+    for r0, _c0, rows, _cols in plan:
+        lo, hi = strip_span(r0, rows)
+        per_pass_reads += hi - lo + 1
+        per_pass_bytes += sum(strip_bytes(s) for s in range(lo, hi + 1))
+    fills = 1 if layout == "soa" else passes
+    return per_pass_bytes * fills, per_pass_reads * fills
+
+
+def synthetic_scene(rng):
+    """A stand-in scene with cluster structure (the rust SyntheticOrtho
+    generator is not ported; timings only need realistic data)."""
+    base = rng.integers(0, 4, size=(H, W))
+    centers = rng.uniform(20.0, 235.0, size=(4, C)).astype(np.float32)
+    img = centers[base] + rng.normal(0.0, 6.0, size=(H, W, C))
+    return np.clip(img, 0.0, 255.0).astype(np.float32)
+
+
+def accum(px64, labels, k):
+    sums = np.zeros((k, C), dtype=np.float64)
+    for c in range(C):
+        sums[:, c] = np.bincount(labels, weights=px64[:, c], minlength=k)
+    counts = np.bincount(labels, minlength=k)
+    return sums, counts
+
+
+def update_centroids(cen, sums, counts):
+    new = cen.copy()
+    nz = counts > 0
+    new[nz] = (sums[nz] / counts[nz, None]).astype(np.float32)
+    return new
+
+
+def dist2_all(px, cen):
+    # (P, k) squared distances; argmin ties break to the lowest index,
+    # like math::nearest.
+    return ((px[:, None, :] - cen[None, :, :]) ** 2).sum(axis=2)
+
+
+def dist2_planes(planes, cen):
+    # SoA shape: accumulate per channel across all pixels of a plane.
+    d = np.zeros((cen.shape[0], planes.shape[1]), dtype=np.float32)
+    for c in range(C):
+        t = planes[c][None, :] - cen[:, c][:, None]
+        d += t * t
+    return d.T
+
+
+class BlockState:
+    """Per-block Hamerly bounds (pruned/lanes kernels)."""
+
+    def __init__(self):
+        self.labels = None
+        self.upper = None
+        self.lower = None
+
+
+def step_block(kernel, data, cen, k, state, drift):
+    """One accumulation pass over a block; returns (labels, d2min)."""
+    if kernel == "naive":
+        d = dist2_all(data, cen)
+        labels = d.argmin(axis=1)
+        return labels, d[np.arange(len(labels)), labels]
+    # pruned / lanes: full scan when no usable bounds
+    soa = kernel == "lanes"
+    if state.labels is None or drift is None:
+        d = dist2_planes(data, cen) if soa else dist2_all(data, cen)
+        labels = d.argmin(axis=1)
+        part = np.partition(d, 1, axis=1)
+        state.labels = labels
+        state.upper = np.sqrt(part[:, 0].astype(np.float64))
+        state.lower = np.sqrt(part[:, 1].astype(np.float64)) if k > 1 else np.full(len(labels), np.inf)
+        return labels, d[np.arange(len(labels)), labels]
+    per, dmax = drift
+    u = state.upper + per[state.labels]
+    low = state.lower - dmax
+    if soa:
+        own = np.zeros(data.shape[1], dtype=np.float32)
+        for c in range(C):
+            t = data[c] - cen[state.labels, c]
+            own += t * t
+    else:
+        t = data - cen[state.labels]
+        own = (t * t).sum(axis=1)
+    u = np.minimum(u, np.sqrt(own.astype(np.float64)))
+    skip = u * (1.0 + REL_SLACK) + 1e-12 < low
+    labels = state.labels.copy()
+    d2 = own.copy()
+    if not skip.all():
+        idx = ~skip
+        sub = data[:, idx] if soa else data[idx]
+        d = dist2_planes(sub, cen) if soa else dist2_all(sub, cen)
+        sub_labels = d.argmin(axis=1)
+        part = np.partition(d, 1, axis=1) if k > 1 else None
+        labels[idx] = sub_labels
+        d2[idx] = d[np.arange(len(sub_labels)), sub_labels]
+        state.labels = labels
+        state.upper = state.upper.copy()
+        state.lower = state.lower.copy()
+        state.upper[idx] = np.sqrt(part[:, 0].astype(np.float64)) if k > 1 else np.sqrt(d2[idx].astype(np.float64))
+        if k > 1:
+            state.lower[idx] = np.sqrt(part[:, 1].astype(np.float64))
+    state.upper[skip] = u[skip]
+    state.lower[skip] = low[skip]
+    return labels, d2
+
+
+def run_cell(img, plan, layout, kernel, k, init_cen):
+    """One full drive: ITERS step rounds + 1 labeling pass. Returns
+    (labels, wall_secs). Fill cost is paid per round for interleaved,
+    once for soa — mirroring the tile arena."""
+    t0 = time.perf_counter()
+    soa_kernel = kernel == "lanes"
+    tiles = None
+    if layout == "soa":
+        tiles = []
+        for r0, c0, rows, cols in plan:  # fill once per job
+            block = img[r0 : r0 + rows, c0 : c0 + cols].reshape(-1, C)
+            tiles.append(np.ascontiguousarray(block.T) if soa_kernel else block.copy())
+    cen = init_cen.copy()
+    states = [BlockState() for _ in plan]
+    drift = None
+    labels_out = None
+    for rnd in range(ITERS + 1):
+        sums = np.zeros((k, C), dtype=np.float64)
+        counts = np.zeros(k, dtype=np.int64)
+        round_labels = []
+        for bi, (r0, c0, rows, cols) in enumerate(plan):
+            if tiles is not None:
+                # Lanes consumes the tile directly; interleaved kernels
+                # pay the per-round rematerialization copy (no I/O).
+                data = tiles[bi] if soa_kernel else tiles[bi].copy()
+            else:  # re-extract every round (seed behaviour)
+                block = img[r0 : r0 + rows, c0 : c0 + cols].reshape(-1, C)
+                data = np.ascontiguousarray(block.T) if soa_kernel else block.copy()
+            st = states[bi] if kernel in ("pruned", "lanes") else BlockState()
+            labels, _d2 = step_block(kernel, data, cen, k, st, drift)
+            px = (data.T if soa_kernel else data).astype(np.float64)
+            s, c = accum(px, labels, k)
+            sums += s
+            counts += c
+            round_labels.append(labels)
+        if rnd < ITERS:
+            new = update_centroids(cen, sums, counts)
+            per = np.sqrt(((new.astype(np.float64) - cen.astype(np.float64)) ** 2).sum(axis=1)) * (1 + 1e-12)
+            drift = (per, per.max() if k else 0.0)
+            cen = new
+        else:
+            labels_out = np.concatenate(round_labels)
+    return labels_out, time.perf_counter() - t0
+
+
+def main():
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_layout.json"
+    rng = np.random.default_rng(SEED)
+    img = synthetic_scene(rng)
+    flat = img.reshape(-1, C)
+    passes = ITERS + 1
+    cases = []
+    for shape_name, br, bc in paper_shapes():
+        plan = block_plan(br, bc)
+        for k in KS:
+            init_cen = flat[rng.choice(len(flat), size=k, replace=False)].copy()
+            baseline = None
+            for layout, kernel in LAYOUT_CELLS:
+                best = math.inf
+                labels = None
+                for sample in range(SAMPLES + 1):
+                    labels, wall = run_cell(img, plan, layout, kernel, k, init_cen)
+                    if sample > 0:
+                        best = min(best, wall)
+                if baseline is None:
+                    baseline = (best, labels)
+                    speedup, matches = 1.0, True
+                else:
+                    speedup = baseline[0] / best
+                    matches = bool(np.array_equal(labels, baseline[1]))
+                if not matches:
+                    raise SystemExit(
+                        f"model kernels diverged: {shape_name} {layout} {kernel} k={k}"
+                    )
+                bytes_read, strip_reads = io_closed_form(plan, layout, passes)
+                cases.append(
+                    {
+                        "layout": layout,
+                        "kernel": kernel,
+                        "shape": shape_name,
+                        "k": k,
+                        "blocks": len(plan),
+                        "wall_secs": round(best, 6),
+                        "ns_per_pixel_round": round(best * 1e9 / (H * W * passes), 4),
+                        "bytes_read": bytes_read,
+                        "strip_reads": strip_reads,
+                        "strip_cache_hits": 0,
+                        "strip_cache_misses": 0,
+                        "speedup_vs_naive": round(speedup, 4),
+                        "matches_naive": matches,
+                    }
+                )
+                print(
+                    f"{shape_name:>6} k={k} {layout:>11}/{kernel:<6}"
+                    f" {cases[-1]['ns_per_pixel_round']:>9.3f} ns/px/round"
+                    f"  {bytes_read / (1 << 20):>7.1f} MiB  x{speedup:.2f}",
+                    flush=True,
+                )
+    doc = {
+        "image": [H, W],
+        "channels": C,
+        "iters": ITERS,
+        "samples": SAMPLES,
+        "seed": SEED,
+        "workers": WORKERS,
+        "strip_rows": STRIP_ROWS,
+        "cache_strips": CACHE_STRIPS,
+        "source": "python-model",
+        "cases": cases,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path} ({len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

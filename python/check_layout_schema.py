@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Schema check for BENCH_layout.json (CI smoke + committed file).
+
+Usage: check_layout_schema.py <path> [--full]
+
+Validates the document structure the rust `blockms layout` bench and
+the python model both emit (EXPERIMENTS.md §Layout). With --full, also
+requires the acceptance matrix: 1024x1024, k in {2,4,8}, the complete
+layout x kernel x shape cross, and the SoA one-pass I/O invariant.
+"""
+
+import json
+import sys
+
+LAYOUTS = {"interleaved", "soa"}
+KERNELS = {"naive", "pruned", "lanes"}
+SHAPES = {"row", "column", "square"}
+
+META_NUM = ["iters", "samples", "seed", "workers", "strip_rows", "cache_strips", "channels"]
+CASE_NUM = [
+    "k",
+    "blocks",
+    "wall_secs",
+    "ns_per_pixel_round",
+    "bytes_read",
+    "strip_reads",
+    "strip_cache_hits",
+    "strip_cache_misses",
+    "speedup_vs_naive",
+]
+
+
+def fail(msg):
+    print(f"BENCH_layout.json schema check FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    full = "--full" in sys.argv
+    path = args[0] if args else "BENCH_layout.json"
+    with open(path) as f:
+        doc = json.load(f)
+
+    for key in META_NUM:
+        if not isinstance(doc.get(key), (int, float)):
+            fail(f"meta field {key!r} missing or non-numeric")
+    img = doc.get("image")
+    if not (isinstance(img, list) and len(img) == 2):
+        fail("image must be [height, width]")
+    if doc.get("source") not in ("rust", "python-model"):
+        fail(f"unknown source {doc.get('source')!r}")
+
+    cases = doc.get("cases")
+    if not isinstance(cases, list) or not cases:
+        fail("cases missing or empty")
+    seen = set()
+    for i, c in enumerate(cases):
+        if c.get("layout") not in LAYOUTS:
+            fail(f"case {i}: bad layout {c.get('layout')!r}")
+        if c.get("kernel") not in KERNELS:
+            fail(f"case {i}: bad kernel {c.get('kernel')!r}")
+        if c.get("shape") not in SHAPES:
+            fail(f"case {i}: bad shape {c.get('shape')!r}")
+        for key in CASE_NUM:
+            if not isinstance(c.get(key), (int, float)):
+                fail(f"case {i}: field {key!r} missing or non-numeric")
+        if c.get("matches_naive") is not True:
+            fail(f"case {i}: matches_naive is not true — broken kernel, not a result")
+        seen.add((c["layout"], c["kernel"], c["shape"], c["k"]))
+
+    if full:
+        if img != [1024, 1024]:
+            fail(f"--full requires a 1024x1024 image, got {img}")
+        want = {
+            (lay, ker, sh, k)
+            for lay in LAYOUTS
+            for ker in KERNELS
+            for sh in SHAPES
+            for k in (2, 4, 8)
+        }
+        missing = want - seen
+        if missing:
+            fail(f"--full matrix incomplete: {len(missing)} cells missing, e.g. {sorted(missing)[:3]}")
+        # SoA arena invariant: one pass of bytes vs (iters + 1) passes.
+        passes = doc["iters"] + 1
+        by_cell = {(c["layout"], c["kernel"], c["shape"], c["k"]): c for c in cases}
+        for sh in SHAPES:
+            for k in (2, 4, 8):
+                inter = by_cell[("interleaved", "naive", sh, k)]["bytes_read"]
+                soa = by_cell[("soa", "naive", sh, k)]["bytes_read"]
+                if inter != soa * passes:
+                    fail(f"{sh} k={k}: interleaved bytes {inter} != soa bytes {soa} x {passes}")
+
+    print(f"{path}: schema OK ({len(cases)} cases, source={doc['source']})")
+
+
+if __name__ == "__main__":
+    main()

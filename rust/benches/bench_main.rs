@@ -105,6 +105,7 @@ fn main() {
 
     micro_kernels(&b);
     kernel_matrix(&b);
+    layout_matrix(&b);
     micro_substrates(&b);
     micro_coordinator(&b);
     paper_tables(&b);
@@ -185,6 +186,36 @@ fn kernel_matrix(b: &Bench) {
         Ok(rows) => {
             println!("bench {name}:");
             print!("{}", render_kernel_bench(&opts, &rows));
+            println!("wrote {}", out.display());
+        }
+        Err(e) => println!("bench {name} FAILED: {e:#}"),
+    }
+}
+
+/// `BENCH_layout.json`: the interleaved-vs-SoA × kernel × block-shape
+/// acceptance matrix at 1024² (EXPERIMENTS.md §Layout).
+/// `BLOCKMS_LAYOUT_SIDE` overrides the image side.
+fn layout_matrix(b: &Bench) {
+    use blockms::bench::layout::{render_layout_bench, write_layout_bench, LayoutBenchOpts};
+    let name = "layout/interleaved_vs_soa_1024";
+    if !b.enabled(name) {
+        return;
+    }
+    let side = std::env::var("BLOCKMS_LAYOUT_SIDE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1024usize)
+        .clamp(64, 8192);
+    let opts = LayoutBenchOpts {
+        height: side,
+        width: side,
+        ..Default::default()
+    };
+    let out = std::path::Path::new("BENCH_layout.json");
+    match write_layout_bench(out, &opts) {
+        Ok(rows) => {
+            println!("bench {name}:");
+            print!("{}", render_layout_bench(&opts, &rows));
             println!("wrote {}", out.display());
         }
         Err(e) => println!("bench {name} FAILED: {e:#}"),

@@ -96,9 +96,10 @@ pub struct KernelCaseResult {
     pub matches_naive: bool,
 }
 
-/// Naive-vs-pruned-vs-fused over the paper's three block shapes
-/// (Cases 1–3 geometry), real coordinator, fixed iterations, static
-/// schedule so per-block pruning state stays worker-local.
+/// Every [`KernelChoice`] (naive, pruned, fused, lanes) over the
+/// paper's three block shapes (Cases 1–3 geometry), real coordinator,
+/// fixed iterations, static schedule so per-block pruning state and
+/// SoA tiles stay worker-local.
 pub fn run_kernel_cases(opts: &SweepOpts, k: usize, workers: usize) -> Result<Vec<KernelCaseResult>> {
     let workload = Workload::new(HERO_SIZE, opts.scale, opts.seed);
     let img = Arc::new(workload.generate());
@@ -232,13 +233,13 @@ mod tests {
             ..Default::default()
         };
         let results = run_kernel_cases(&opts, 4, 2).unwrap();
-        assert_eq!(results.len(), 9); // 3 shapes x 3 kernels
+        assert_eq!(results.len(), 3 * KernelChoice::ALL.len()); // 3 shapes x kernels
         for r in &results {
             assert!(r.matches_naive, "{:?} {} diverged", r.approach, r.kernel);
             assert!(r.wall_secs > 0.0);
         }
         let text = render_kernel_cases(&results, 4);
-        for name in ["naive", "pruned", "fused"] {
+        for name in ["naive", "pruned", "fused", "lanes"] {
             assert!(text.contains(name), "{text}");
         }
     }

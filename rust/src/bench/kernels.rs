@@ -220,7 +220,7 @@ mod tests {
     #[test]
     fn matrix_covers_all_kernels_and_matches() {
         let rows = run_kernel_bench(&tiny());
-        assert_eq!(rows.len(), 6); // 3 kernels x 2 ks
+        assert_eq!(rows.len(), KernelChoice::ALL.len() * 2); // kernels x 2 ks
         for r in &rows {
             assert!(r.matches_naive, "{} k={} diverged from naive", r.kernel, r.k);
             assert!(r.ns_per_pixel_round > 0.0);
@@ -252,7 +252,7 @@ mod tests {
         let rows = write_kernel_bench(&path, &tiny()).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(Json::parse(&text).is_ok());
-        assert_eq!(rows.len(), 6);
+        assert_eq!(rows.len(), KernelChoice::ALL.len() * 2);
         let _ = std::fs::remove_file(&path);
     }
 
@@ -261,7 +261,7 @@ mod tests {
         let opts = tiny();
         let rows = run_kernel_bench(&opts);
         let text = render_kernel_bench(&opts, &rows);
-        for name in ["naive", "pruned", "fused"] {
+        for name in ["naive", "pruned", "fused", "lanes"] {
             assert!(text.contains(name), "{text}");
         }
     }

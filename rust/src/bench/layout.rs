@@ -1,0 +1,388 @@
+//! Layout-layer benchmark: interleaved-vs-SoA × kernel × block shape,
+//! through the real coordinator over a strip store, with the
+//! machine-readable `BENCH_layout.json` trail (EXPERIMENTS.md §Layout).
+//!
+//! Two axes the tile-arena PR added, crossed with the paper's three
+//! block shapes:
+//!
+//! - **layout** — `interleaved` re-reads each block's strip span every
+//!   round (seed behaviour); `soa` fills a planar tile once per job and
+//!   reuses it, so `bytes_read` collapses to one pass;
+//! - **kernel** — `naive` / `pruned` / `lanes` (lanes = the
+//!   lane-vectorized planar kernels, SoA's native compute shape).
+//!
+//! Every non-baseline cell is checked bit-identical against the
+//! interleaved-naive run of the same shape and k: a fast row with
+//! `matches_naive: false` is a broken kernel, not a result.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::kernels::NaiveBaseline;
+use crate::blocks::{ApproachKind, BlockPlan, BlockShape};
+use crate::coordinator::{
+    ClusterConfig, Coordinator, CoordinatorConfig, IoMode, Schedule,
+};
+use crate::image::SyntheticOrtho;
+use crate::kmeans::kernel::KernelChoice;
+use crate::kmeans::tile::TileLayout;
+use crate::util::fmt::Table;
+use crate::util::json::Json;
+
+/// The (layout, kernel) cells of the matrix.
+pub const LAYOUT_CELLS: [(TileLayout, KernelChoice); 6] = [
+    (TileLayout::Interleaved, KernelChoice::Naive),
+    (TileLayout::Interleaved, KernelChoice::Pruned),
+    (TileLayout::Interleaved, KernelChoice::Lanes),
+    (TileLayout::Soa, KernelChoice::Naive),
+    (TileLayout::Soa, KernelChoice::Pruned),
+    (TileLayout::Soa, KernelChoice::Lanes),
+];
+
+/// Benchmark shape. Defaults are the acceptance configuration:
+/// 1024×1024 3-band scene, k ∈ {2, 4, 8}, the paper's three shapes.
+#[derive(Clone, Debug)]
+pub struct LayoutBenchOpts {
+    pub height: usize,
+    pub width: usize,
+    pub ks: Vec<usize>,
+    /// Fixed Lloyd iterations per run (plus one labeling pass).
+    pub iters: usize,
+    /// Timed repetitions per cell (best reported; one warmup first).
+    pub samples: usize,
+    pub seed: u64,
+    pub workers: usize,
+    /// Strip height of the store every cell reads through.
+    pub strip_rows: usize,
+    /// Shared strip-cache capacity in strips (0 = uncached).
+    pub cache_strips: usize,
+}
+
+impl Default for LayoutBenchOpts {
+    fn default() -> Self {
+        LayoutBenchOpts {
+            height: 1024,
+            width: 1024,
+            ks: vec![2, 4, 8],
+            iters: 4,
+            samples: 2,
+            seed: 0x50A_71E,
+            workers: 4,
+            strip_rows: 64,
+            cache_strips: 0,
+        }
+    }
+}
+
+impl LayoutBenchOpts {
+    /// CI smoke configuration: small image, one k, one sample — fast
+    /// enough for a workflow step, same schema as the full matrix.
+    pub fn quick() -> LayoutBenchOpts {
+        LayoutBenchOpts {
+            height: 128,
+            width: 128,
+            ks: vec![2],
+            iters: 3,
+            samples: 1,
+            strip_rows: 16,
+            ..Default::default()
+        }
+    }
+}
+
+/// One benchmark cell.
+#[derive(Clone, Debug)]
+pub struct LayoutBenchRow {
+    pub layout: TileLayout,
+    pub kernel: KernelChoice,
+    pub approach: ApproachKind,
+    pub k: usize,
+    pub blocks: usize,
+    /// Best-sample wall seconds of the whole coordinated run.
+    pub wall_secs: f64,
+    /// Nanoseconds per pixel per pass (`iters` steps + 1 labeling).
+    pub ns_per_pixel_round: f64,
+    /// Strip-store bytes transferred in one run (the layout axis's
+    /// headline number: SoA cells read one pass, interleaved cells
+    /// read `iters + 1`).
+    pub bytes_read: u64,
+    pub strip_reads: u64,
+    pub strip_cache_hits: u64,
+    pub strip_cache_misses: u64,
+    /// Interleaved-naive wall over this cell's wall (same shape, k).
+    pub speedup_vs_naive: f64,
+    /// Labels and centroids bit-identical to interleaved-naive.
+    pub matches_naive: bool,
+}
+
+/// Run the full matrix.
+pub fn run_layout_bench(opts: &LayoutBenchOpts) -> Result<Vec<LayoutBenchRow>> {
+    let img = Arc::new(
+        SyntheticOrtho::default()
+            .with_seed(opts.seed)
+            .generate(opts.height, opts.width),
+    );
+    let n_pixels = (opts.height * opts.width) as f64;
+    let passes = (opts.iters + 1) as f64;
+    let mut rows = Vec::new();
+    for approach in ApproachKind::ALL {
+        let shape = BlockShape::paper_default(approach, opts.height, opts.width);
+        let plan = Arc::new(BlockPlan::new(opts.height, opts.width, shape));
+        for &k in &opts.ks {
+            let ccfg = ClusterConfig {
+                k,
+                fixed_iters: Some(opts.iters),
+                seed: opts.seed ^ 0xC0FFEE,
+                ..Default::default()
+            };
+            let mut baseline: Option<NaiveBaseline> = None;
+            for (layout, kernel) in LAYOUT_CELLS {
+                let coord = Coordinator::new(CoordinatorConfig {
+                    workers: opts.workers,
+                    // Static: per-worker tiles and pruned bounds stay
+                    // warm, and I/O counters are closed-form.
+                    schedule: Schedule::Static,
+                    kernel,
+                    layout: Some(layout),
+                    strip_cache: opts.cache_strips,
+                    io: IoMode::Strips {
+                        strip_rows: opts.strip_rows,
+                        file_backed: false,
+                    },
+                    ..Default::default()
+                });
+                let mut best = f64::INFINITY;
+                let mut result = None;
+                for sample in 0..opts.samples.max(1) + 1 {
+                    let t0 = Instant::now();
+                    let out = coord.cluster(&img, &plan, &ccfg)?;
+                    let dt = t0.elapsed().as_secs_f64();
+                    if sample > 0 {
+                        best = best.min(dt); // sample 0 is warmup
+                    }
+                    result = Some(out);
+                }
+                let out = result.expect("at least one sample ran");
+                let io = out.io_stats.expect("strip mode reports stats");
+                let (speedup_vs_naive, matches_naive) = match &baseline {
+                    None => (1.0, true),
+                    Some(b) => b.score(best, &out.labels, &out.centroids),
+                };
+                if (layout, kernel) == (TileLayout::Interleaved, KernelChoice::Naive) {
+                    baseline = Some(NaiveBaseline::new(best, out.labels, out.centroids));
+                }
+                rows.push(LayoutBenchRow {
+                    layout,
+                    kernel,
+                    approach,
+                    k,
+                    blocks: plan.len(),
+                    wall_secs: best,
+                    ns_per_pixel_round: best * 1e9 / (n_pixels * passes),
+                    bytes_read: io.bytes_read,
+                    strip_reads: io.strip_reads,
+                    strip_cache_hits: io.strip_cache_hits,
+                    strip_cache_misses: io.strip_cache_misses,
+                    speedup_vs_naive,
+                    matches_naive,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Serialize the matrix as the `BENCH_layout.json` document.
+pub fn layout_bench_json(opts: &LayoutBenchOpts, rows: &[LayoutBenchRow]) -> String {
+    let num = Json::Num;
+    let mut doc = BTreeMap::new();
+    doc.insert(
+        "image".to_string(),
+        Json::Arr(vec![num(opts.height as f64), num(opts.width as f64)]),
+    );
+    doc.insert("channels".to_string(), num(3.0));
+    doc.insert("iters".to_string(), num(opts.iters as f64));
+    doc.insert("samples".to_string(), num(opts.samples as f64));
+    doc.insert("seed".to_string(), num(opts.seed as f64));
+    doc.insert("workers".to_string(), num(opts.workers as f64));
+    doc.insert("strip_rows".to_string(), num(opts.strip_rows as f64));
+    doc.insert("cache_strips".to_string(), num(opts.cache_strips as f64));
+    doc.insert("source".to_string(), Json::Str("rust".to_string()));
+    let cases = rows
+        .iter()
+        .map(|r| {
+            let mut c = BTreeMap::new();
+            c.insert("layout".to_string(), Json::Str(r.layout.label().to_string()));
+            c.insert("kernel".to_string(), Json::Str(r.kernel.label().to_string()));
+            c.insert(
+                "shape".to_string(),
+                Json::Str(shape_key(r.approach).to_string()),
+            );
+            c.insert("k".to_string(), num(r.k as f64));
+            c.insert("blocks".to_string(), num(r.blocks as f64));
+            c.insert("wall_secs".to_string(), num(r.wall_secs));
+            c.insert("ns_per_pixel_round".to_string(), num(r.ns_per_pixel_round));
+            c.insert("bytes_read".to_string(), num(r.bytes_read as f64));
+            c.insert("strip_reads".to_string(), num(r.strip_reads as f64));
+            c.insert(
+                "strip_cache_hits".to_string(),
+                num(r.strip_cache_hits as f64),
+            );
+            c.insert(
+                "strip_cache_misses".to_string(),
+                num(r.strip_cache_misses as f64),
+            );
+            c.insert("speedup_vs_naive".to_string(), num(r.speedup_vs_naive));
+            c.insert("matches_naive".to_string(), Json::Bool(r.matches_naive));
+            Json::Obj(c)
+        })
+        .collect();
+    doc.insert("cases".to_string(), Json::Arr(cases));
+    Json::Obj(doc).to_string()
+}
+
+/// The JSON `shape` key for an approach (row | column | square).
+pub fn shape_key(approach: ApproachKind) -> &'static str {
+    match approach {
+        ApproachKind::Rows => "row",
+        ApproachKind::Cols => "column",
+        ApproachKind::Square => "square",
+    }
+}
+
+/// Run the matrix and write `BENCH_layout.json` to `path`.
+pub fn write_layout_bench(path: &Path, opts: &LayoutBenchOpts) -> Result<Vec<LayoutBenchRow>> {
+    let rows = run_layout_bench(opts)?;
+    std::fs::write(path, layout_bench_json(opts, &rows))
+        .with_context(|| format!("write layout bench to {}", path.display()))?;
+    Ok(rows)
+}
+
+/// Human-readable rendering of the matrix.
+pub fn render_layout_bench(opts: &LayoutBenchOpts, rows: &[LayoutBenchRow]) -> String {
+    let mut t = Table::new(format!(
+        "Layout matrix: {}x{}, {} iters, {} workers, strips of {} rows",
+        opts.width, opts.height, opts.iters, opts.workers, opts.strip_rows
+    ))
+    .header(&[
+        "Shape", "K", "Layout", "Kernel", "ns/px/round", "MiB read", "Speedup", "Identical",
+    ]);
+    for r in rows {
+        t.row(vec![
+            shape_key(r.approach).to_string(),
+            r.k.to_string(),
+            r.layout.to_string(),
+            r.kernel.to_string(),
+            format!("{:.3}", r.ns_per_pixel_round),
+            format!("{:.1}", r.bytes_read as f64 / (1 << 20) as f64),
+            format!("{:.2}x", r.speedup_vs_naive),
+            if r.matches_naive { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> LayoutBenchOpts {
+        LayoutBenchOpts {
+            height: 40,
+            width: 36,
+            ks: vec![2],
+            iters: 2,
+            samples: 1,
+            workers: 2,
+            strip_rows: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn matrix_covers_cells_and_matches() {
+        let rows = run_layout_bench(&tiny()).unwrap();
+        assert_eq!(rows.len(), 3 * 6); // 3 shapes x 6 (layout, kernel) cells
+        for r in &rows {
+            assert!(
+                r.matches_naive,
+                "{} {} {} k={} diverged",
+                shape_key(r.approach),
+                r.layout,
+                r.kernel,
+                r.k
+            );
+            assert!(r.ns_per_pixel_round > 0.0);
+            assert!(r.bytes_read > 0);
+        }
+    }
+
+    #[test]
+    fn soa_cells_read_one_pass_interleaved_read_all() {
+        let opts = tiny();
+        let rows = run_layout_bench(&opts).unwrap();
+        for w in rows.chunks(6) {
+            // within one (shape, k) group: cells 0..3 interleaved, 3..6 soa
+            let interleaved = &w[0];
+            let soa = &w[3];
+            assert_eq!(
+                interleaved.bytes_read,
+                soa.bytes_read * (opts.iters as u64 + 1),
+                "soa must read once per job, interleaved once per pass"
+            );
+        }
+    }
+
+    #[test]
+    fn json_has_schema() {
+        let opts = tiny();
+        let rows = run_layout_bench(&opts).unwrap();
+        let text = layout_bench_json(&opts, &rows);
+        let doc = Json::parse(&text).expect("valid json");
+        assert_eq!(doc.get("iters").and_then(Json::as_usize), Some(2));
+        assert!(doc.get("source").and_then(Json::as_str).is_some());
+        let cases = doc.get("cases").and_then(Json::as_arr).expect("cases");
+        assert_eq!(cases.len(), rows.len());
+        for c in cases {
+            for key in ["layout", "kernel", "shape"] {
+                assert!(c.get(key).and_then(Json::as_str).is_some(), "{key}");
+            }
+            for key in [
+                "k",
+                "ns_per_pixel_round",
+                "bytes_read",
+                "strip_reads",
+                "strip_cache_hits",
+                "strip_cache_misses",
+                "speedup_vs_naive",
+            ] {
+                assert!(c.get(key).and_then(Json::as_f64).is_some(), "{key}");
+            }
+            assert_eq!(c.get("matches_naive").and_then(Json::as_bool), Some(true));
+        }
+    }
+
+    #[test]
+    fn write_creates_the_file() {
+        let path = std::env::temp_dir().join("blockms_test_BENCH_layout.json");
+        let rows = write_layout_bench(&path, &tiny()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        assert_eq!(rows.len(), 18);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn render_mentions_layouts_and_kernels() {
+        let opts = tiny();
+        let rows = run_layout_bench(&opts).unwrap();
+        let text = render_layout_bench(&opts, &rows);
+        for name in ["interleaved", "soa", "naive", "pruned", "lanes"] {
+            assert!(text.contains(name), "{name} missing:\n{text}");
+        }
+    }
+}

@@ -6,12 +6,14 @@
 
 pub mod cases;
 pub mod kernels;
+pub mod layout;
 pub mod runner;
 pub mod service;
 pub mod tables;
 pub mod workloads;
 
 pub use kernels::{KernelBenchOpts, KernelBenchRow};
+pub use layout::{LayoutBenchOpts, LayoutBenchRow};
 pub use runner::{ExperimentConfig, ExperimentRow, Runner};
 pub use service::{ServiceBenchOpts, ServiceBenchRow};
 pub use workloads::{paper_sizes, PaperSize, Workload};

@@ -202,7 +202,7 @@ impl Runner {
             },
             schedule: cfg.schedule,
             kernel: cfg.kernel,
-            fail_block: None,
+            ..Default::default()
         });
         let ccfg = ClusterConfig {
             k: cfg.k,

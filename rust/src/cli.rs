@@ -24,6 +24,7 @@ pub const SUBCOMMANDS: &[&str] = &[
     "cases",
     "sweep",
     "kernels",
+    "layout",
     "batch",
     "serve",
     "info",
@@ -46,7 +47,10 @@ pub fn blockms_cli() -> Cli {
         .opt("out", None, "output path (cluster: label map PPM; kernels/batch: JSON; sweep: CSV)")
         .opt("out-input", None, "also write the input scene PPM here")
         .opt("engine", Some("native"), "compute engine: native|pjrt")
-        .opt("kernel", Some("naive"), "compute kernel: naive|pruned|fused")
+        .opt("kernel", Some("naive"), "compute kernel: naive|pruned|fused|lanes")
+        .opt("layout", None, "block layout: interleaved|soa (default: kernel's native)")
+        .opt("arena-mb", Some("256"), "per-worker SoA tile arena budget, MiB (0 disables)")
+        .opt("strip-cache", None, "shared strip cache capacity, decoded strips (0 = off)")
         .opt("mode", Some("global"), "clustering mode: global|local")
         .opt("schedule", Some("dynamic"), "job schedule: static|dynamic")
         .opt("iters", None, "fixed Lloyd iterations (default: converge)")
@@ -60,6 +64,8 @@ pub fn blockms_cli() -> Cli {
         .opt("pools", Some("1,2,4,8"), "batch: comma-separated pool sizes")
         .opt("batches", Some("1,4,16"), "batch: comma-separated batch sizes")
         .flag("serial", "cluster: also run the sequential baseline and compare")
+        .flag("prefetch", "overlap next-block reads with compute (double buffering)")
+        .flag("quick", "layout: CI-sized matrix (pins image side, ks, iters)")
         .flag("verbose", "more logging")
 }
 

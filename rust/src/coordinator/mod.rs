@@ -46,6 +46,7 @@ use anyhow::{Context, Result};
 use crate::blocks::BlockPlan;
 use crate::image::Raster;
 use crate::kmeans::kernel::KernelChoice;
+use crate::kmeans::tile::TileLayout;
 use crate::kmeans::{InitMethod, KMeansConfig, SeqKMeans};
 use crate::runtime::BackendSpec;
 use crate::stripstore::{Backing, StripStore};
@@ -170,11 +171,28 @@ pub struct CoordinatorConfig {
     pub mode: ClusterMode,
     pub io: IoMode,
     pub schedule: Schedule,
-    /// Compute kernel for step/assign rounds (naive, pruned, fused —
-    /// bit-identical results, different wall-clock; see
+    /// Compute kernel for step/assign rounds (naive, pruned, fused,
+    /// lanes — bit-identical results, different wall-clock; see
     /// [`crate::kmeans::kernel`]). Pruned state lives per (job, block)
     /// on the workers, so [`Schedule::Static`] keeps it warmest.
     pub kernel: KernelChoice,
+    /// Block layout across rounds: `None` resolves to the kernel's
+    /// native shape (SoA for lanes, interleaved otherwise). With
+    /// [`TileLayout::Soa`], workers fill a planar tile per (job, block)
+    /// **once per job** and reuse it every round (the seed re-read the
+    /// strip span per block per round).
+    pub layout: Option<TileLayout>,
+    /// Per-worker tile-arena byte budget in MiB (SoA layout). Blocks
+    /// whose tiles don't fit spill back to per-round re-reads.
+    pub arena_mb: usize,
+    /// Overlap the next queued block's read with the current block's
+    /// compute via a per-worker sidecar reader (double buffering).
+    /// Note: mispredicted read-aheads show up in the I/O counters, so
+    /// closed-form `AccessStats` assertions only hold with this off.
+    pub prefetch: bool,
+    /// Shared decoded-strip LRU capacity, in strips (0 = no cache).
+    /// Only meaningful with [`IoMode::Strips`].
+    pub strip_cache: usize,
     /// Fault injection for tests: block index whose processing fails.
     pub fail_block: Option<usize>,
 }
@@ -188,8 +206,20 @@ impl Default for CoordinatorConfig {
             io: IoMode::Direct,
             schedule: Schedule::Dynamic,
             kernel: KernelChoice::Naive,
+            layout: None,
+            arena_mb: 256,
+            prefetch: false,
+            strip_cache: 0,
             fail_block: None,
         }
+    }
+}
+
+impl CoordinatorConfig {
+    /// The concrete layout this configuration runs: the explicit choice,
+    /// or the kernel's native shape.
+    pub fn resolved_layout(&self) -> TileLayout {
+        self.layout.unwrap_or_else(|| self.kernel.default_layout())
     }
 }
 
@@ -446,7 +476,9 @@ impl Coordinator {
                 } else {
                     Backing::Memory
                 };
-                let store = Arc::new(StripStore::new(img, *strip_rows, backing)?);
+                let mut store = StripStore::new(img, *strip_rows, backing)?;
+                store.enable_cache(self.cfg.strip_cache);
+                let store = Arc::new(store);
                 (BlockSource::Strips(Arc::clone(&store)), Some(store))
             }
         };
@@ -458,6 +490,9 @@ impl Coordinator {
             fail_block: self.cfg.fail_block,
             local_mode: self.cfg.mode == ClusterMode::Local,
             kernel: self.cfg.kernel,
+            layout: self.cfg.resolved_layout(),
+            arena_bytes: self.cfg.arena_mb << 20,
+            prefetch: self.cfg.prefetch,
         });
         let pool = WorkerPool::spawn(self.cfg.workers, self.cfg.schedule);
         pool.register_job(SOLO_JOB, ctx);
@@ -550,8 +585,10 @@ impl Coordinator {
     }
 }
 
-// Re-export the access snapshot so callers don't need the stripstore path.
+// Re-export the access snapshot and tile layout so callers don't need
+// the stripstore / kmeans paths.
 pub use crate::stripstore::AccessSnapshot;
+pub use crate::kmeans::tile::TileLayout as BlockLayout;
 
 #[cfg(test)]
 mod tests {
@@ -648,7 +685,7 @@ mod tests {
                 })
                 .cluster(&img, &plan, &ccfg)
                 .unwrap();
-                for kernel in [KernelChoice::Pruned, KernelChoice::Fused] {
+                for kernel in [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes] {
                     let coord = Coordinator::new(CoordinatorConfig {
                         workers: 3,
                         schedule,
@@ -691,6 +728,168 @@ mod tests {
         let (per_pass, _, _) = crate::stripstore::read_amplification(&plan, 8);
         assert_eq!(stats.strip_reads as usize, per_pass * 4);
         assert_eq!(stats.block_reads as usize, plan.len() * 4);
+    }
+
+    #[test]
+    fn soa_arena_reads_each_block_once_per_job() {
+        // The acceptance invariant of the tile arena: with the SoA
+        // layout and a budget that fits every tile, the strip store is
+        // touched once per block per JOB, not once per block per round.
+        let (img, plan) = setup(40, 30, 12);
+        let ccfg = ClusterConfig {
+            k: 2,
+            fixed_iters: Some(3),
+            ..Default::default()
+        };
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            kernel: KernelChoice::Lanes, // resolves to TileLayout::Soa
+            // Static: block ownership is stable across rounds, so each
+            // per-worker arena fills its blocks exactly once. (Dynamic
+            // migration would refill on the new worker — correct, just
+            // not closed-form.)
+            schedule: Schedule::Static,
+            io: IoMode::Strips {
+                strip_rows: 8,
+                file_backed: false,
+            },
+            ..Default::default()
+        });
+        let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+        let stats = out.io_stats.expect("strip mode must report stats");
+        // 3 step rounds + 1 assign round, but every block is filled once.
+        let (per_pass, _, _) = crate::stripstore::read_amplification(&plan, 8);
+        assert_eq!(stats.strip_reads as usize, per_pass);
+        assert_eq!(stats.block_reads as usize, plan.len());
+        // …and the result is still bit-identical to the naive seed path.
+        let naive = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            schedule: Schedule::Static,
+            ..Default::default()
+        })
+        .cluster(&img, &plan, &ccfg)
+        .unwrap();
+        assert_eq!(out.labels, naive.labels);
+        assert_eq!(out.centroids, naive.centroids);
+    }
+
+    #[test]
+    fn zero_arena_budget_spills_to_per_round_reads() {
+        let (img, plan) = setup(40, 30, 12);
+        let ccfg = ClusterConfig {
+            k: 2,
+            fixed_iters: Some(3),
+            ..Default::default()
+        };
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            kernel: KernelChoice::Lanes,
+            schedule: Schedule::Static,
+            arena_mb: 0, // nothing fits: every fill spills
+            io: IoMode::Strips {
+                strip_rows: 8,
+                file_backed: false,
+            },
+            ..Default::default()
+        });
+        let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+        let stats = out.io_stats.expect("strip mode must report stats");
+        let (per_pass, _, _) = crate::stripstore::read_amplification(&plan, 8);
+        assert_eq!(stats.strip_reads as usize, per_pass * 4); // seed behaviour
+        assert_eq!(stats.block_reads as usize, plan.len() * 4);
+    }
+
+    #[test]
+    fn soa_layout_is_bit_identical_for_interleaved_kernels() {
+        // Forcing the arena under naive/pruned kernels changes only the
+        // I/O shape (fill once, rematerialize per round) — never values.
+        let (img, plan) = setup(52, 44, 15);
+        let ccfg = ClusterConfig {
+            k: 4,
+            ..Default::default()
+        };
+        let naive = Coordinator::new(CoordinatorConfig::default())
+            .cluster(&img, &plan, &ccfg)
+            .unwrap();
+        for kernel in [KernelChoice::Naive, KernelChoice::Pruned] {
+            let out = Coordinator::new(CoordinatorConfig {
+                workers: 3,
+                kernel,
+                layout: Some(TileLayout::Soa),
+                ..Default::default()
+            })
+            .cluster(&img, &plan, &ccfg)
+            .unwrap();
+            assert_eq!(out.labels, naive.labels, "{kernel}");
+            assert_eq!(out.centroids, naive.centroids, "{kernel}");
+        }
+    }
+
+    #[test]
+    fn prefetch_changes_timing_not_values() {
+        let (img, plan) = setup(48, 40, 11);
+        let ccfg = ClusterConfig {
+            k: 4,
+            ..Default::default()
+        };
+        for schedule in [Schedule::Static, Schedule::Dynamic] {
+            let plain = Coordinator::new(CoordinatorConfig {
+                workers: 2,
+                schedule,
+                io: IoMode::Strips {
+                    strip_rows: 8,
+                    file_backed: false,
+                },
+                ..Default::default()
+            })
+            .cluster(&img, &plan, &ccfg)
+            .unwrap();
+            for kernel in [KernelChoice::Naive, KernelChoice::Lanes] {
+                let out = Coordinator::new(CoordinatorConfig {
+                    workers: 2,
+                    schedule,
+                    kernel,
+                    prefetch: true,
+                    io: IoMode::Strips {
+                        strip_rows: 8,
+                        file_backed: false,
+                    },
+                    ..Default::default()
+                })
+                .cluster(&img, &plan, &ccfg)
+                .unwrap();
+                assert_eq!(out.labels, plain.labels, "{kernel} {schedule:?}");
+                assert_eq!(out.centroids, plain.centroids, "{kernel} {schedule:?}");
+                assert_eq!(out.iterations, plain.iterations);
+            }
+        }
+    }
+
+    #[test]
+    fn strip_cache_collapses_column_amplification() {
+        let (img, _) = setup(40, 30, 12);
+        let plan = Arc::new(BlockPlan::new(40, 30, BlockShape::Cols { band_cols: 7 }));
+        let ccfg = ClusterConfig {
+            k: 2,
+            fixed_iters: Some(2),
+            ..Default::default()
+        };
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 1, // deterministic access sequence
+            strip_cache: 5, // all strips of a 40-row image at strip_rows 8
+            io: IoMode::Strips {
+                strip_rows: 8,
+                file_backed: false,
+            },
+            ..Default::default()
+        });
+        let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+        let stats = out.io_stats.expect("strip mode must report stats");
+        // 5 column blocks × 5 strips × 3 passes = 75 accesses; only the
+        // first touch of each strip transfers.
+        assert_eq!(stats.strip_reads, 5);
+        assert_eq!(stats.strip_cache_misses, 5);
+        assert_eq!(stats.strip_cache_hits, 75 - 5);
     }
 
     #[test]

@@ -230,6 +230,9 @@ mod tests {
             fail_block,
             local_mode: false,
             kernel: crate::kmeans::kernel::KernelChoice::Naive,
+            layout: crate::kmeans::tile::TileLayout::Interleaved,
+            arena_bytes: 0,
+            prefetch: false,
         });
         (ctx, img)
     }

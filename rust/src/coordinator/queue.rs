@@ -18,7 +18,7 @@
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 
-use super::messages::{Job, JobId};
+use super::messages::{Job, JobId, JobPayload};
 
 /// Scheduling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -147,6 +147,28 @@ impl JobQueue {
                 return None;
             }
             st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// The block-processing job `worker` would receive next, without
+    /// taking it — `(job id, block index)`, or `None` when the queue is
+    /// empty or the next message is a ping/retire. This is a **hint**
+    /// for the worker's read-ahead path: under dynamic scheduling
+    /// another worker may take the peeked block first, in which case
+    /// the prefetched buffer is simply discarded.
+    pub fn peek_next(&self, worker: usize) -> Option<(JobId, usize)> {
+        let st = self.state.lock().unwrap();
+        let job = st.per_worker[worker].front().or_else(|| {
+            st.rotation
+                .front()
+                .and_then(|id| st.shared.get(id))
+                .and_then(VecDeque::front)
+        })?;
+        match job.payload {
+            JobPayload::Step { .. } | JobPayload::Assign { .. } | JobPayload::Local { .. } => {
+                Some((job.job, job.block))
+            }
+            JobPayload::Ping | JobPayload::Retire => None,
         }
     }
 
@@ -279,6 +301,35 @@ mod tests {
         q.push_round((0..4).map(|b| tagged(2, b)).collect());
         assert_eq!(q.purge_job(2), 4);
         assert_eq!(q.pending(), 4);
+    }
+
+    #[test]
+    fn peek_reports_without_taking() {
+        let q = JobQueue::new(2, Schedule::Dynamic);
+        assert_eq!(q.peek_next(0), None);
+        q.push_round(vec![tagged(3, 7), tagged(3, 8)]);
+        assert_eq!(q.peek_next(0), Some((3, 7)));
+        assert_eq!(q.peek_next(1), Some((3, 7))); // still there
+        assert_eq!(q.pop(0).unwrap().block, 7);
+        assert_eq!(q.peek_next(0), Some((3, 8)));
+        // static per-worker queues are peeked first
+        let qs = JobQueue::new(2, Schedule::Static);
+        qs.push_round((0..2).map(job).collect());
+        assert_eq!(qs.peek_next(0), Some((0, 0)));
+        assert_eq!(qs.peek_next(1), Some((0, 1)));
+        // pings are not block work
+        qs.push_to_worker(
+            0,
+            Job {
+                job: 9,
+                block: usize::MAX,
+                round: 0,
+                payload: JobPayload::Ping,
+            },
+        );
+        qs.pop(0).unwrap();
+        qs.pop(1).unwrap();
+        assert_eq!(qs.peek_next(0), None);
     }
 
     #[test]

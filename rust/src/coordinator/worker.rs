@@ -3,13 +3,30 @@
 //! Since the service layer landed, one worker serves **many concurrent
 //! clustering jobs**: per-job contexts are looked up in a shared
 //! [`ContextRegistry`], and all mutable worker state — compute backend,
-//! block reader, pruned bounds — is keyed by [`JobId`] (bounds by
-//! `(job, block)`) so interleaved jobs can never contaminate each other.
-//! A [`JobPayload::Retire`] message drops a finished job's cached state.
+//! block reader, pruned bounds, SoA tiles — is keyed by [`JobId`]
+//! (bounds and tiles by `(job, block)`) so interleaved jobs can never
+//! contaminate each other. A [`JobPayload::Retire`] message drops a
+//! finished job's cached state.
+//!
+//! Two layers sit between the block source and the compute backend:
+//!
+//! - the **tile arena** ([`TileArena`]) — with [`TileLayout::Soa`], a
+//!   block's pixels are read once per job, deinterleaved into a planar
+//!   [`SoaTile`], and reused across every Lloyd round (the seed re-read
+//!   the whole strip span per block per round);
+//! - the **prefetcher** — with `prefetch` enabled, each (worker, job)
+//!   pair gets a sidecar thread with its own reader (dropped on
+//!   `Retire`) that fills the *next* queued block's pixels while the
+//!   current block computes (double buffering); same-job successors
+//!   are issued after the current block's read, cross-job successors
+//!   before dispatch on their own job's sidecar. The peek is a hint: a
+//!   mispredicted fill is banked or dropped, never used for the wrong
+//!   block and never waited on.
 
 use std::collections::HashMap;
-use std::sync::mpsc::Sender;
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
@@ -19,6 +36,7 @@ use super::queue::JobQueue;
 use crate::blocks::BlockPlan;
 use crate::image::Raster;
 use crate::kmeans::kernel::{CentroidDrift, KernelChoice, PrunedState};
+use crate::kmeans::tile::{SoaTile, TileArena, TileLayout};
 use crate::runtime::BackendSpec;
 use crate::stripstore::{StripReader, StripStore};
 
@@ -48,6 +66,17 @@ pub struct WorkerContext {
     /// [`crate::kmeans::kernel`]). Pruned/fused kernels keep per-block
     /// Hamerly bounds across rounds; results are bit-identical to naive.
     pub kernel: KernelChoice,
+    /// How block pixels are held across rounds: re-read interleaved
+    /// every round, or cached once per job as planar [`SoaTile`]s in
+    /// the worker's [`TileArena`]. Either layout is bit-identical under
+    /// any kernel; `Soa` is the lanes kernel's native shape.
+    pub layout: TileLayout,
+    /// Per-worker tile-arena byte budget this job asks for (tiles that
+    /// don't fit spill back to per-round re-reads).
+    pub arena_bytes: usize,
+    /// Overlap the next queued block's read with the current block's
+    /// compute (per-worker sidecar reader thread).
+    pub prefetch: bool,
 }
 
 impl WorkerContext {
@@ -158,12 +187,135 @@ impl Reader {
     }
 }
 
+fn build_reader(worker_id: usize, source: &BlockSource) -> Result<Reader> {
+    Ok(match source {
+        BlockSource::Direct(r) => Reader::Direct(Arc::clone(r)),
+        BlockSource::Strips(s) => Reader::Strips(Box::new(
+            s.reader()
+                .with_context(|| format!("worker {worker_id}: open reader"))?,
+        )),
+    })
+}
+
+/// One worker's read-ahead slot for one job: a sidecar thread with its
+/// own reader (own file handle, shared access counters) that fills the
+/// next block's interleaved pixels while the worker computes. At most
+/// one request is outstanding; a response for a block the worker no
+/// longer wants is dropped (the peek that issued it was a hint).
+struct Prefetcher {
+    req: Option<Sender<usize>>,
+    resp: Receiver<(usize, Result<Vec<f32>>)>,
+    pending: Option<usize>,
+    ready: Option<(usize, Vec<f32>)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    fn spawn(worker_id: usize, ctx: &WorkerContext) -> Result<Prefetcher> {
+        let mut reader = build_reader(worker_id, &ctx.source)?;
+        let plan = Arc::clone(&ctx.plan);
+        let (req_tx, req_rx) = channel::<usize>();
+        let (resp_tx, resp_rx) = channel();
+        let handle = std::thread::Builder::new()
+            .name(format!("blockms-prefetch-{worker_id}"))
+            .spawn(move || {
+                while let Ok(block) = req_rx.recv() {
+                    let mut buf = Vec::new();
+                    let result = reader.read(&plan, block, &mut buf).map(|()| buf);
+                    if resp_tx.send((block, result)).is_err() {
+                        return; // worker gone
+                    }
+                }
+            })
+            .context("spawn prefetch thread")?;
+        Ok(Prefetcher {
+            req: Some(req_tx),
+            resp: resp_rx,
+            pending: None,
+            ready: None,
+            handle: Some(handle),
+        })
+    }
+
+    /// Ask for `block` unless a fill is already in flight or banked.
+    fn issue(&mut self, block: usize) {
+        if self.pending.is_some() {
+            return;
+        }
+        if matches!(&self.ready, Some((b, _)) if *b == block) {
+            return;
+        }
+        if let Some(req) = &self.req {
+            if req.send(block).is_ok() {
+                self.pending = Some(block);
+            }
+        }
+    }
+
+    /// Take the prefetched pixels for `block`; `None` means the caller
+    /// must read synchronously. Blocks **only** when the in-flight fill
+    /// is for exactly this block — a mispredicted fill is drained
+    /// without waiting (banked if already complete, left running
+    /// otherwise), so a bad peek never serializes two reads on the
+    /// worker's critical path.
+    fn take(&mut self, block: usize) -> Option<Result<Vec<f32>>> {
+        // Bank whatever has completed, without waiting.
+        if self.pending.is_some() {
+            match self.resp.try_recv() {
+                Ok((b, result)) => {
+                    self.pending = None;
+                    // Errors for a block we may not even want are
+                    // dropped; the sync read will surface them if real.
+                    if let Ok(buf) = result {
+                        self.ready = Some((b, buf));
+                    }
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => {}
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => self.pending = None,
+            }
+        }
+        if let Some((b, _)) = &self.ready {
+            if *b == block {
+                return self.ready.take().map(|(_, buf)| Ok(buf));
+            }
+            // Mispredicted for now, but block contents are immutable
+            // within a job: the banked fill stays valid and is kept
+            // until taken or replaced by a newer completion.
+        }
+        // Wait only for a fill of exactly this block.
+        if self.pending == Some(block) {
+            match self.resp.recv() {
+                Ok((b, result)) => {
+                    self.pending = None;
+                    debug_assert_eq!(b, block, "one outstanding request");
+                    if b == block {
+                        return Some(result);
+                    }
+                }
+                Err(_) => self.pending = None, // thread died; fall back
+            }
+        }
+        None
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        self.req.take(); // closes the request channel; thread exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// One job's lazily-built worker-local machinery: the compute backend
-/// (PJRT client or native math) plus the block reader (own file handle).
+/// (PJRT client or native math), the block reader (own file handle),
+/// and the optional read-ahead sidecar.
 struct JobEngine {
     ctx: Arc<WorkerContext>,
     backend: Box<dyn crate::runtime::ComputeBackend>,
     reader: Reader,
+    prefetch: Option<Prefetcher>,
 }
 
 impl JobEngine {
@@ -172,18 +324,30 @@ impl JobEngine {
             .backend
             .build()
             .with_context(|| format!("worker {worker_id}: backend init"))?;
-        let reader = match &ctx.source {
-            BlockSource::Direct(r) => Reader::Direct(Arc::clone(r)),
-            BlockSource::Strips(s) => Reader::Strips(Box::new(
-                s.reader()
-                    .with_context(|| format!("worker {worker_id}: open reader"))?,
-            )),
+        let reader = build_reader(worker_id, &ctx.source)?;
+        let prefetch = if ctx.prefetch {
+            Some(Prefetcher::spawn(worker_id, &ctx)?)
+        } else {
+            None
         };
         Ok(JobEngine {
             ctx,
             backend,
             reader,
+            prefetch,
         })
+    }
+
+    /// Read `block`'s interleaved pixels, preferring a completed
+    /// prefetch over a synchronous read.
+    fn read_pixels(&mut self, block: usize, buf: &mut Vec<f32>) -> Result<()> {
+        if let Some(pf) = self.prefetch.as_mut() {
+            if let Some(result) = pf.take(block) {
+                *buf = result?;
+                return Ok(());
+            }
+        }
+        self.reader.read(&self.ctx.plan, block, buf)
     }
 }
 
@@ -200,13 +364,24 @@ pub fn worker_main(
     let mut engines: HashMap<JobId, JobEngine> = HashMap::new();
     let mut px_buf: Vec<f32> = Vec::new();
     let mut prune: HashMap<(JobId, usize), BlockPrune> = HashMap::new();
+    let mut arena = TileArena::new(0); // budget set from the filling job's context
     while let Some(job) = queue.pop(worker_id) {
         if matches!(job.payload, JobPayload::Retire) {
             engines.remove(&job.job);
             prune.retain(|(j, _), _| *j != job.job);
+            arena.purge_job(job.job);
             continue;
         }
-        let outcome = dispatch_job(worker_id, &registry, &mut engines, &job, &mut px_buf, &mut prune);
+        let outcome = dispatch_job(
+            worker_id,
+            &registry,
+            &mut engines,
+            &job,
+            &mut px_buf,
+            &mut prune,
+            &mut arena,
+            &queue,
+        );
         let outcome = outcome.map_err(|error| JobError {
             job: job.job,
             block: job.block,
@@ -221,6 +396,7 @@ pub fn worker_main(
 
 /// Resolve the job's engine (building it on first touch) and run the
 /// payload.
+#[allow(clippy::too_many_arguments)]
 fn dispatch_job(
     worker_id: usize,
     registry: &ContextRegistry,
@@ -228,6 +404,8 @@ fn dispatch_job(
     job: &Job,
     px_buf: &mut Vec<f32>,
     prune: &mut HashMap<(JobId, usize), BlockPrune>,
+    arena: &mut TileArena,
+    queue: &JobQueue,
 ) -> Result<JobOutcome> {
     if !engines.contains_key(&job.job) {
         let ctx = registry.get(job.job).ok_or_else(|| {
@@ -235,8 +413,27 @@ fn dispatch_job(
         })?;
         engines.insert(job.job, JobEngine::build(worker_id, ctx)?);
     }
+    // Cross-job read-ahead: under the service's round-robin interleave
+    // the next queued block usually belongs to a *different* job, so the
+    // current job's sidecar (consulted inside run_job) would never fire.
+    // Issue the fill on the next job's own engine — but only if this
+    // worker already built one; prefetch is a hint, not worth a backend
+    // construction.
+    if let Some((next_job, next_block)) = queue.peek_next(worker_id) {
+        if next_job != job.job {
+            if let Some(next_engine) = engines.get_mut(&next_job) {
+                let resident = next_engine.ctx.layout == TileLayout::Soa
+                    && arena.contains((next_job, next_block));
+                if !resident {
+                    if let Some(pf) = next_engine.prefetch.as_mut() {
+                        pf.issue(next_block);
+                    }
+                }
+            }
+        }
+    }
     let engine = engines.get_mut(&job.job).expect("just inserted");
-    run_job(worker_id, engine, job, px_buf, prune)
+    run_job(worker_id, engine, job, px_buf, prune, arena, queue)
 }
 
 fn run_job(
@@ -245,8 +442,10 @@ fn run_job(
     job: &Job,
     px_buf: &mut Vec<f32>,
     prune: &mut HashMap<(JobId, usize), BlockPrune>,
+    arena: &mut TileArena,
+    queue: &JobQueue,
 ) -> Result<JobOutcome> {
-    let ctx = &engine.ctx;
+    let ctx = Arc::clone(&engine.ctx);
     if let JobPayload::Ping = job.payload {
         engine
             .backend
@@ -267,16 +466,64 @@ fn run_job(
             job.block
         ));
     }
+
+    // --- acquire block pixels ---------------------------------------------
+    // Step/Assign rounds under the SoA layout hit the tile arena: the
+    // block is read and deinterleaved once per job, then every later
+    // round reuses the tile (or its interleaved rematerialization for
+    // non-lane kernels) with zero block-source I/O. Everything else
+    // takes the per-round interleaved read, exactly the seed path.
+    let is_block_pass = matches!(
+        job.payload,
+        JobPayload::Step { .. } | JobPayload::Assign { .. }
+    );
+    let use_arena = is_block_pass && ctx.layout == TileLayout::Soa;
+    let key = (job.job, job.block);
     let t_io = Instant::now();
-    engine
-        .reader
-        .read(&ctx.plan, job.block, px_buf)
-        .with_context(|| format!("worker {worker_id}: read block {}", job.block))?;
+    let tile: Option<Arc<SoaTile>> = if use_arena {
+        let tile = match arena.get(key) {
+            Some(tile) => tile,
+            None => {
+                // High-water budget + per-job admission cap: this job's
+                // fill can never evict a bigger-budget neighbour's tiles.
+                arena.raise_budget(ctx.arena_bytes);
+                engine
+                    .read_pixels(job.block, px_buf)
+                    .with_context(|| format!("worker {worker_id}: read block {}", job.block))?;
+                arena.insert_within(
+                    key,
+                    SoaTile::from_interleaved(px_buf, ctx.plan_channels()),
+                    ctx.arena_bytes,
+                )
+            }
+        };
+        if ctx.kernel != KernelChoice::Lanes {
+            // Interleaved compute path over an arena-resident block:
+            // rematerialize (bit-identical round trip), still no I/O.
+            tile.to_interleaved(px_buf);
+        }
+        Some(tile)
+    } else {
+        engine
+            .read_pixels(job.block, px_buf)
+            .with_context(|| format!("worker {worker_id}: read block {}", job.block))?;
+        (is_block_pass && ctx.kernel == KernelChoice::Lanes)
+            .then(|| Arc::new(SoaTile::from_interleaved(px_buf, ctx.plan_channels())))
+    };
+    // Double buffering: with the block in hand and compute about to
+    // start, ask the sidecar to fill the next queued block of this job.
+    if let Some(pf) = engine.prefetch.as_mut() {
+        if let Some((next_job, next_block)) = queue.peek_next(worker_id) {
+            let arena_resident = use_arena && arena.contains((next_job, next_block));
+            if next_job == job.job && next_block != job.block && !arena_resident {
+                pf.issue(next_block);
+            }
+        }
+    }
     let io_secs = t_io.elapsed().as_secs_f64();
     let pixels = ctx.plan.region(job.block).area();
 
     let backend = engine.backend.as_mut();
-    let key = (job.job, job.block);
     let t_c = Instant::now();
     let result = match &job.payload {
         JobPayload::Step { centroids, drift } => {
@@ -289,8 +536,16 @@ fn run_job(
                 if usable.is_none() {
                     entry.state.clear(); // stale bounds: re-seed this round
                 }
-                let accum =
-                    backend.step_block_pruned(px_buf, centroids, &mut entry.state, usable)?;
+                let accum = if ctx.kernel == KernelChoice::Lanes {
+                    backend.step_block_lanes(
+                        tile.as_deref().expect("tile built for lanes"),
+                        centroids,
+                        &mut entry.state,
+                        usable,
+                    )?
+                } else {
+                    backend.step_block_pruned(px_buf, centroids, &mut entry.state, usable)?
+                };
                 entry.last_round = Some(job.round);
                 accum
             };
@@ -298,16 +553,33 @@ fn run_job(
         }
         JobPayload::Assign { centroids, drift } => {
             let mut labels = Vec::new();
-            let inertia = if ctx.kernel == KernelChoice::Fused {
-                evict_stale(prune, job.job, job.round);
-                let entry = prune.entry(key).or_default();
-                let usable = entry.usable_drift(drift, job.round);
-                if usable.is_none() {
-                    entry.state.clear();
+            let inertia = match ctx.kernel {
+                KernelChoice::Fused | KernelChoice::Lanes => {
+                    evict_stale(prune, job.job, job.round);
+                    let entry = prune.entry(key).or_default();
+                    let usable = entry.usable_drift(drift, job.round);
+                    if usable.is_none() {
+                        entry.state.clear();
+                    }
+                    if ctx.kernel == KernelChoice::Lanes {
+                        backend.assign_block_lanes(
+                            tile.as_deref().expect("tile built for lanes"),
+                            centroids,
+                            &mut entry.state,
+                            usable,
+                            &mut labels,
+                        )?
+                    } else {
+                        backend.assign_block_pruned(
+                            px_buf,
+                            centroids,
+                            &mut entry.state,
+                            usable,
+                            &mut labels,
+                        )?
+                    }
                 }
-                backend.assign_block_pruned(px_buf, centroids, &mut entry.state, usable, &mut labels)?
-            } else {
-                backend.assign_block(px_buf, centroids, &mut labels)?
+                _ => backend.assign_block(px_buf, centroids, &mut labels)?,
             };
             JobResult::Assign { labels, inertia }
         }
@@ -365,6 +637,9 @@ mod tests {
             fail_block: None,
             local_mode: false,
             kernel: KernelChoice::Naive,
+            layout: TileLayout::Interleaved,
+            arena_bytes: 0,
+            prefetch: false,
         });
         assert_eq!(reg.register(3, Arc::clone(&ctx)), 1);
         assert_eq!(reg.register(5, ctx), 2);
@@ -373,6 +648,39 @@ mod tests {
         reg.remove(3);
         assert!(reg.get(3).is_none());
         assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn prefetcher_fills_and_discards_stale() {
+        let img = Arc::new(crate::image::SyntheticOrtho::default().with_seed(9).generate(24, 20));
+        let plan = Arc::new(BlockPlan::new(24, 20, crate::blocks::BlockShape::Square { side: 8 }));
+        let ctx = WorkerContext {
+            plan: Arc::clone(&plan),
+            source: BlockSource::Direct(Arc::clone(&img)),
+            backend: BackendSpec::Native {
+                k: 2,
+                channels: 3,
+                local_iters: 1,
+            },
+            fail_block: None,
+            local_mode: false,
+            kernel: KernelChoice::Naive,
+            layout: TileLayout::Interleaved,
+            arena_bytes: 0,
+            prefetch: true,
+        };
+        let mut pf = Prefetcher::spawn(0, &ctx).unwrap();
+        // predicted correctly: the buffer is exactly the block crop
+        pf.issue(1);
+        let got = pf.take(1).expect("in-flight fill").unwrap();
+        assert_eq!(got, img.crop(plan.region(1)));
+        // mispredicted: asking for block 0 banks block 2's buffer …
+        pf.issue(2);
+        assert!(pf.take(0).is_none(), "mispredict must fall back to sync");
+        // … which is still served when block 2 does come up
+        let got2 = pf.take(2).expect("banked fill").unwrap();
+        assert_eq!(got2, img.crop(plan.region(2)));
+        assert!(pf.take(2).is_none(), "buffer is consumed once");
     }
 
     #[test]

@@ -23,6 +23,13 @@
 //!    the label map in one pass, and [`assign_pruned`] turns the final
 //!    labeling round into a bounds-reuse pass over the last iteration's
 //!    distances instead of a from-scratch K-way scan per pixel.
+//! 4. **Lane vectorization** — [`step_lanes`]/[`assign_lanes`] run over
+//!    planar [`SoaTile`]s, computing each centroid-channel term for
+//!    [`LANES`] *pixels* at once (`[f32; LANES]` array SIMD, stable
+//!    rustc, no intrinsics) instead of reducing across the C channels
+//!    of one pixel; they compose with the same Hamerly bounds and the
+//!    fused final pass. See the lane-kernel section below for why this
+//!    stays bit-identical.
 //!
 //! ## The pruning invariant
 //!
@@ -44,6 +51,7 @@
 //! the naive scan so the invariant is enforced rather than assumed.
 
 use super::math::StepAccum;
+use super::tile::{SoaTile, LANES};
 
 /// Centroid tables up to this `k` live in a fixed stack array inside the
 /// specialized kernels; larger tables spill to one heap allocation.
@@ -69,17 +77,36 @@ pub enum KernelChoice {
     Pruned,
     /// Pruned step rounds plus a bounds-reuse final labeling round.
     Fused,
+    /// Lane-vectorized planar kernels over [`SoaTile`]s: full scans run
+    /// [`LANES`] pixels wide within each channel plane, composed with
+    /// the same Hamerly pruning and bounds-reuse final pass as `Fused`.
+    Lanes,
 }
 
 impl KernelChoice {
-    pub const ALL: [KernelChoice; 3] =
-        [KernelChoice::Naive, KernelChoice::Pruned, KernelChoice::Fused];
+    pub const ALL: [KernelChoice; 4] = [
+        KernelChoice::Naive,
+        KernelChoice::Pruned,
+        KernelChoice::Fused,
+        KernelChoice::Lanes,
+    ];
 
     pub fn label(&self) -> &'static str {
         match self {
             KernelChoice::Naive => "naive",
             KernelChoice::Pruned => "pruned",
             KernelChoice::Fused => "fused",
+            KernelChoice::Lanes => "lanes",
+        }
+    }
+
+    /// The block layout this kernel wants when the caller leaves the
+    /// layout unset: lane kernels consume planar tiles, everything else
+    /// consumes interleaved buffers.
+    pub fn default_layout(&self) -> super::tile::TileLayout {
+        match self {
+            KernelChoice::Lanes => super::tile::TileLayout::Soa,
+            _ => super::tile::TileLayout::Interleaved,
         }
     }
 }
@@ -97,7 +124,10 @@ impl std::str::FromStr for KernelChoice {
             "naive" => Ok(KernelChoice::Naive),
             "pruned" => Ok(KernelChoice::Pruned),
             "fused" => Ok(KernelChoice::Fused),
-            other => Err(format!("unknown kernel {other:?} (want naive|pruned|fused)")),
+            "lanes" => Ok(KernelChoice::Lanes),
+            other => Err(format!(
+                "unknown kernel {other:?} (want naive|pruned|fused|lanes)"
+            )),
         }
     }
 }
@@ -626,6 +656,307 @@ fn assign_pruned_core<T: CenTable>(
 }
 
 // ---------------------------------------------------------------------------
+// Lane kernels over planar SoA tiles.
+//
+// The width-specialized kernels above vectorize *across channels* of one
+// pixel — at C = 3 that is a 3-wide reduction, which LLVM mostly leaves
+// scalar. The lane kernels flip the loop nest: with the block stored as
+// channel planes (`SoaTile`), one centroid channel is broadcast against
+// LANES consecutive *pixels* at a time — `[f32; LANES]` array arithmetic
+// with unit-stride loads, exactly the shape the auto-vectorizer turns
+// into packed subs/FMAs on stable rustc.
+//
+// Bit-identity argument (extends the module-level one): for each pixel
+// lane `l`, `d[l]` accumulates `(plane[c][i] - cen[c])²` over channels in
+// ascending `c` order — the identical f32 operation sequence the scalar
+// `dist2` performs for that pixel, merely executed alongside 7
+// neighbours; lanes never mix. The argmin scans centroids in index order
+// with the same strict-`<` tie-breaking, the accumulator folds pixels in
+// the same pixel order with the same f64 adds, and the padded tail lanes
+// (zeros) are computed but never emitted. Pruning composes unchanged:
+// the bounds math is per-pixel and uses these same distances, so the
+// guard-band argument of `provably_closer` carries over verbatim, and
+// channels above PRUNE_MAX_CHANNELS likewise never prune (they still
+// lane-vectorize — full scans are exact at any width).
+// ---------------------------------------------------------------------------
+
+/// Scalar squared distance of tile pixel `i` to centroid `ci`, with the
+/// exact accumulation order of [`CenTable::dist2`].
+#[inline]
+fn soa_dist2(tile: &SoaTile, i: usize, cen: &[f32], ci: usize) -> f32 {
+    let ch = tile.channels();
+    let base = ci * ch;
+    let mut acc = 0.0f32;
+    for c in 0..ch {
+        let t = tile.plane(c)[i] - cen[base + c];
+        acc += t * t;
+    }
+    acc
+}
+
+/// Scalar nearest-plus-runner-up for tile pixel `i` — the SoA mirror of
+/// [`CenTable::nearest2`] (same scan order, same strict-`<` ties).
+#[inline]
+fn soa_nearest2(tile: &SoaTile, i: usize, cen: &[f32], k: usize) -> (u32, f32, f32) {
+    let mut best = 0u32;
+    let mut best_d = f32::INFINITY;
+    let mut second_d = f32::INFINITY;
+    for ci in 0..k {
+        let d = soa_dist2(tile, i, cen, ci);
+        if d < best_d {
+            second_d = best_d;
+            best_d = d;
+            best = ci as u32;
+        } else if d < second_d {
+            second_d = d;
+        }
+    }
+    (best, best_d, second_d)
+}
+
+/// Fold tile pixel `i` into the accumulator — the SoA mirror of
+/// [`accumulate_px`] (channel-ascending f64 adds, identical sequence).
+#[inline]
+fn accumulate_soa(acc: &mut StepAccum, tile: &SoaTile, i: usize, label: u32, d2: f32) {
+    let ch = tile.channels();
+    let base = label as usize * ch;
+    for c in 0..ch {
+        acc.sums[base + c] += tile.plane(c)[i] as f64;
+    }
+    acc.counts[label as usize] += 1;
+    acc.inertia += d2 as f64;
+}
+
+/// Nearest + runner-up for the LANES pixels starting at `start`, all
+/// centroids. The hot loop of every lane kernel: per centroid, each
+/// channel plane contributes to all LANES distance accumulators with
+/// unit stride. Tail lanes past the pixel count compute on the zero
+/// padding; callers mask them at emission.
+#[inline]
+fn lane_nearest2(
+    tile: &SoaTile,
+    start: usize,
+    cen: &[f32],
+    k: usize,
+) -> ([u32; LANES], [f32; LANES], [f32; LANES]) {
+    let ch = tile.channels();
+    let mut best = [0u32; LANES];
+    let mut best_d = [f32::INFINITY; LANES];
+    let mut second_d = [f32::INFINITY; LANES];
+    for ci in 0..k {
+        let mut d = [0.0f32; LANES];
+        for c in 0..ch {
+            let cv = cen[ci * ch + c];
+            let p = &tile.plane(c)[start..start + LANES];
+            for l in 0..LANES {
+                let t = p[l] - cv;
+                d[l] += t * t;
+            }
+        }
+        for l in 0..LANES {
+            if d[l] < best_d[l] {
+                second_d[l] = best_d[l];
+                best_d[l] = d[l];
+                best[l] = ci as u32;
+            } else if d[l] < second_d[l] {
+                second_d[l] = d[l];
+            }
+        }
+    }
+    (best, best_d, second_d)
+}
+
+/// Lane-vectorized full accumulation scan. With `st`, also seeds the
+/// Hamerly bounds (round 0 of a lanes run); without, a plain exact pass
+/// (the wide-channel never-prune path).
+fn lanes_scan_step(
+    tile: &SoaTile,
+    cen: &[f32],
+    k: usize,
+    mut st: Option<&mut PrunedState>,
+) -> StepAccum {
+    let n = tile.pixels();
+    if let Some(st) = st.as_deref_mut() {
+        st.reset(n, k);
+    }
+    let mut acc = StepAccum::zeros(k, tile.channels());
+    let mut start = 0;
+    while start < n {
+        let (labs, best_d, second_d) = lane_nearest2(tile, start, cen, k);
+        let lim = LANES.min(n - start); // mask the padded tail lanes
+        for l in 0..lim {
+            let i = start + l;
+            if let Some(st) = st.as_deref_mut() {
+                st.labels[i] = labs[l];
+                st.upper[i] = (best_d[l] as f64).sqrt();
+                st.lower[i] = (second_d[l] as f64).sqrt();
+            }
+            accumulate_soa(&mut acc, tile, i, labs[l], best_d[l]);
+        }
+        start += LANES;
+    }
+    acc
+}
+
+/// Lane-vectorized full labeling scan (the final round when no bounds
+/// are available).
+fn lanes_scan_assign(tile: &SoaTile, cen: &[f32], k: usize, labels: &mut Vec<u32>) -> f64 {
+    let n = tile.pixels();
+    let mut inertia = 0.0f64;
+    let mut start = 0;
+    while start < n {
+        let (labs, best_d, _) = lane_nearest2(tile, start, cen, k);
+        let lim = LANES.min(n - start);
+        for l in 0..lim {
+            labels.push(labs[l]);
+            inertia += best_d[l] as f64;
+        }
+        start += LANES;
+    }
+    inertia
+}
+
+/// Hamerly-pruned accumulation round over a tile — [`step_pruned_core`]
+/// with every distance routed through the SoA helpers (bit-identical by
+/// construction).
+fn lanes_step_pruned_core(
+    tile: &SoaTile,
+    cen: &[f32],
+    k: usize,
+    st: &mut PrunedState,
+    drift: &CentroidDrift,
+) -> StepAccum {
+    let n = tile.pixels();
+    debug_assert!(st.is_valid_for(n, k));
+    debug_assert_eq!(drift.per_centroid.len(), k);
+    let mut acc = StepAccum::zeros(k, tile.channels());
+    for i in 0..n {
+        let a = st.labels[i] as usize;
+        let mut u = st.upper[i] + drift.per_centroid[a];
+        let l = st.lower[i] - drift.max;
+        let d2a = soa_dist2(tile, i, cen, a);
+        let skip = provably_closer(u, l) || {
+            u = (d2a as f64).sqrt();
+            provably_closer(u, l)
+        };
+        if skip {
+            st.upper[i] = u;
+            st.lower[i] = l;
+            accumulate_soa(&mut acc, tile, i, a as u32, d2a);
+        } else {
+            let (lab, best_d2, second_d2) = soa_nearest2(tile, i, cen, k);
+            st.labels[i] = lab;
+            st.upper[i] = (best_d2 as f64).sqrt();
+            st.lower[i] = (second_d2 as f64).sqrt();
+            accumulate_soa(&mut acc, tile, i, lab, best_d2);
+        }
+    }
+    acc
+}
+
+/// Bounds-reuse final labeling over a tile ([`assign_pruned_core`] on
+/// SoA).
+fn lanes_assign_pruned_core(
+    tile: &SoaTile,
+    cen: &[f32],
+    k: usize,
+    st: &mut PrunedState,
+    drift: &CentroidDrift,
+    labels: &mut Vec<u32>,
+) -> f64 {
+    let n = tile.pixels();
+    debug_assert!(st.is_valid_for(n, k));
+    let mut inertia = 0.0f64;
+    for i in 0..n {
+        let a = st.labels[i] as usize;
+        let mut u = st.upper[i] + drift.per_centroid[a];
+        let l = st.lower[i] - drift.max;
+        let d2a = soa_dist2(tile, i, cen, a);
+        let skip = provably_closer(u, l) || {
+            u = (d2a as f64).sqrt();
+            provably_closer(u, l)
+        };
+        if skip {
+            st.upper[i] = u;
+            st.lower[i] = l;
+            labels.push(a as u32);
+            inertia += d2a as f64;
+        } else {
+            let (lab, best_d2, second_d2) = soa_nearest2(tile, i, cen, k);
+            st.labels[i] = lab;
+            st.upper[i] = (best_d2 as f64).sqrt();
+            st.lower[i] = (second_d2 as f64).sqrt();
+            labels.push(lab);
+            inertia += best_d2 as f64;
+        }
+    }
+    inertia
+}
+
+fn check_tile_shapes(tile: &SoaTile, centroids: &[f32], k: usize) {
+    assert!(tile.channels() >= 1, "channels must be >= 1");
+    assert_eq!(
+        centroids.len(),
+        k * tile.channels(),
+        "centroid table length {} does not match k={k} x channels={}",
+        centroids.len(),
+        tile.channels()
+    );
+}
+
+/// One Lloyd accumulation pass of the lanes kernel: lane-vectorized
+/// full scans, Hamerly-pruned when `state` carries usable bounds.
+/// Returns exactly what [`step_kernel`] would for the interleaved view
+/// of the same tile (property-tested).
+pub fn step_lanes(
+    tile: &SoaTile,
+    centroids: &[f32],
+    k: usize,
+    state: &mut PrunedState,
+    drift: Option<&CentroidDrift>,
+) -> StepAccum {
+    check_tile_shapes(tile, centroids, k);
+    if tile.channels() > PRUNE_MAX_CHANNELS {
+        // Outside the guard band: never prune, but still lane-vectorize
+        // the (exact-at-any-width) full scan.
+        state.clear();
+        return lanes_scan_step(tile, centroids, k, None);
+    }
+    match drift {
+        Some(d) if state.is_valid_for(tile.pixels(), k) => {
+            lanes_step_pruned_core(tile, centroids, k, state, d)
+        }
+        _ => lanes_scan_step(tile, centroids, k, Some(state)),
+    }
+}
+
+/// Final labeling of the lanes kernel: bounds-reuse when possible, a
+/// lane-vectorized full scan otherwise. Labels and inertia identical to
+/// [`assign_kernel`] at the same centroids.
+pub fn assign_lanes(
+    tile: &SoaTile,
+    centroids: &[f32],
+    k: usize,
+    state: &mut PrunedState,
+    drift: Option<&CentroidDrift>,
+    labels: &mut Vec<u32>,
+) -> f64 {
+    check_tile_shapes(tile, centroids, k);
+    labels.clear();
+    labels.reserve(tile.pixels());
+    if tile.channels() > PRUNE_MAX_CHANNELS {
+        state.clear();
+        return lanes_scan_assign(tile, centroids, k, labels);
+    }
+    match drift {
+        Some(d) if state.is_valid_for(tile.pixels(), k) => {
+            lanes_assign_pruned_core(tile, centroids, k, state, d, labels)
+        }
+        _ => lanes_scan_assign(tile, centroids, k, labels),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Public entry points.
 // ---------------------------------------------------------------------------
 
@@ -914,6 +1245,86 @@ mod tests {
         assert!(!provably_closer(1.0, 1.0 + 1e-9)); // inside the guard band
         assert!(provably_closer(0.0, 1e-3));
         assert!(provably_closer(5.0, f64::INFINITY));
+    }
+
+    #[test]
+    fn lanes_rounds_are_bit_identical_to_naive() {
+        use crate::kmeans::tile::SoaTile;
+        for channels in [1usize, 3, 4, 5] {
+            for k in [1usize, 2, 4, 8] {
+                // 700 is not a LANES multiple: exercises tail masking
+                let px = random_pixels(700, channels, 77 + channels as u64 * k as u64);
+                let tile = SoaTile::from_interleaved(&px, channels);
+                let mut cen: Vec<f32> = px[..k * channels].to_vec();
+                let mut state = PrunedState::new();
+                let mut drift: Option<CentroidDrift> = None;
+                for round in 0..6 {
+                    let want = step_kernel(&px, &cen, k, channels);
+                    let got = step_lanes(&tile, &cen, k, &mut state, drift.as_ref());
+                    assert_eq!(got, want, "C={channels} k={k} round={round}");
+                    let prev = cen.clone();
+                    math::update_centroids(&want, &mut cen, 0.0);
+                    drift = Some(drift_between(&prev, &cen, k, channels));
+                }
+                let mut labels = Vec::new();
+                let inertia =
+                    assign_lanes(&tile, &cen, k, &mut state, drift.as_ref(), &mut labels);
+                let mut want_labels = Vec::new();
+                let want_inertia = assign_kernel(&px, &cen, k, channels, &mut want_labels);
+                assert_eq!(labels, want_labels, "C={channels} k={k} final labels");
+                assert_eq!(inertia, want_inertia, "C={channels} k={k} final inertia");
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_handles_distance_ties_like_naive() {
+        use crate::kmeans::tile::SoaTile;
+        let mut rng = Rng::new(13);
+        let px: Vec<f32> = (0..601 * 3).map(|_| rng.range_usize(0, 4) as f32).collect();
+        let cen = vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 3.0, 3.0, 3.0, 0.0, 1.0, 2.0];
+        let tile = SoaTile::from_interleaved(&px, 3);
+        let mut state = PrunedState::new();
+        let mut drift = None;
+        let mut c = cen.clone();
+        for _ in 0..4 {
+            let want = step_kernel(&px, &c, 4, 3);
+            let got = step_lanes(&tile, &c, 4, &mut state, drift.as_ref());
+            assert_eq!(got, want);
+            let prev = c.clone();
+            math::update_centroids(&want, &mut c, 0.0);
+            drift = Some(drift_between(&prev, &c, 4, 3));
+        }
+    }
+
+    #[test]
+    fn lanes_wide_pixels_never_prune_but_stay_exact() {
+        use crate::kmeans::tile::SoaTile;
+        let channels = PRUNE_MAX_CHANNELS + 4;
+        let px = random_pixels(60, channels, 43);
+        let tile = SoaTile::from_interleaved(&px, channels);
+        let cen = random_pixels(2, channels, 44);
+        let mut state = PrunedState::new();
+        let acc = step_lanes(&tile, &cen, 2, &mut state, None);
+        assert_eq!(acc, step_kernel(&px, &cen, 2, channels));
+        assert!(!state.ready(), "wide pixels must not seed bounds");
+        let drift = drift_between(&cen, &cen, 2, channels);
+        let mut labels = Vec::new();
+        let inertia = assign_lanes(&tile, &cen, 2, &mut state, Some(&drift), &mut labels);
+        let mut want = Vec::new();
+        assert_eq!(inertia, assign_kernel(&px, &cen, 2, channels, &mut want));
+        assert_eq!(labels, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "centroid table length")]
+    fn lanes_mismatched_k_fails_loudly() {
+        use crate::kmeans::tile::SoaTile;
+        let px = random_pixels(10, 3, 1);
+        let tile = SoaTile::from_interleaved(&px, 3);
+        let cen = random_pixels(2, 3, 2);
+        let mut state = PrunedState::new();
+        let _ = step_lanes(&tile, &cen, 3, &mut state, None);
     }
 
     #[test]

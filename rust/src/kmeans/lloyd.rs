@@ -3,6 +3,7 @@
 use super::init::InitMethod;
 use super::kernel::{self, CentroidDrift, KernelChoice, PrunedState};
 use super::math;
+use super::tile::SoaTile;
 
 /// Shared K-Means configuration (used by baseline and coordinator).
 #[derive(Clone, Debug)]
@@ -116,6 +117,10 @@ fn run_inner(
     let mut converged = false;
     let mut state = PrunedState::new();
     let mut drift: Option<CentroidDrift> = None;
+    // The lanes kernel runs on the planar layout: deinterleave once,
+    // reuse the tile for every round (the whole-image mirror of the
+    // coordinator's per-block tile arena).
+    let tile = (kernel == KernelChoice::Lanes).then(|| SoaTile::from_interleaved(pixels, channels));
     for _ in 0..max_iters {
         iterations += 1;
         let acc = match kernel {
@@ -123,6 +128,13 @@ fn run_inner(
             KernelChoice::Pruned | KernelChoice::Fused => {
                 kernel::step_pruned(pixels, &centroids, cfg.k, channels, &mut state, drift.as_ref())
             }
+            KernelChoice::Lanes => kernel::step_lanes(
+                tile.as_ref().expect("tile built for lanes"),
+                &centroids,
+                cfg.k,
+                &mut state,
+                drift.as_ref(),
+            ),
         };
         let prev = (kernel != KernelChoice::Naive).then(|| centroids.clone());
         let moved = math::update_centroids(&acc, &mut centroids, tol);
@@ -141,6 +153,14 @@ fn run_inner(
             &centroids,
             cfg.k,
             channels,
+            &mut state,
+            drift.as_ref(),
+            &mut labels,
+        ),
+        KernelChoice::Lanes => kernel::assign_lanes(
+            tile.as_ref().expect("tile built for lanes"),
+            &centroids,
+            cfg.k,
             &mut state,
             drift.as_ref(),
             &mut labels,
@@ -240,7 +260,7 @@ mod tests {
                 ..Default::default()
             };
             let naive = SeqKMeans::run_with(px, 3, &cfg, KernelChoice::Naive);
-            for kc in [KernelChoice::Pruned, KernelChoice::Fused] {
+            for kc in [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes] {
                 let other = SeqKMeans::run_with(px, 3, &cfg, kc);
                 assert_eq!(other.labels, naive.labels, "k={k} {kc}");
                 assert_eq!(other.centroids, naive.centroids, "k={k} {kc}");

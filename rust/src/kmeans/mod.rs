@@ -14,7 +14,9 @@ pub mod init;
 pub mod kernel;
 mod lloyd;
 pub mod math;
+pub mod tile;
 
 pub use init::InitMethod;
 pub use kernel::{CentroidDrift, KernelChoice, PrunedState};
 pub use lloyd::{KMeansConfig, KMeansResult, SeqKMeans};
+pub use tile::{ArenaStats, SoaTile, TileArena, TileLayout, LANES};

@@ -39,7 +39,7 @@ pub mod prelude {
         ClusterConfig, ClusterMode, ClusterOutput, Coordinator, CoordinatorConfig, Engine,
     };
     pub use crate::image::{Raster, SyntheticOrtho};
-    pub use crate::kmeans::{InitMethod, KernelChoice, SeqKMeans};
+    pub use crate::kmeans::{InitMethod, KernelChoice, SeqKMeans, SoaTile, TileArena, TileLayout};
     pub use crate::metrics::{RunTimer, Speedup};
     pub use crate::service::{ClusterServer, JobHandle, JobSpec, JobStatus, ServerConfig};
     pub use crate::simtime::{SimParams, WorkerSim};

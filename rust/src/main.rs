@@ -6,6 +6,8 @@
 //!                   PPM file) and write the label map;
 //! - `paper-tables`  regenerate the paper's Tables 1–19 (+ figure series);
 //! - `cases`         regenerate the §4 Cases 1–3 block-size I/O analysis;
+//! - `layout`        interleaved-vs-SoA × kernel × block-shape matrix ->
+//!                   BENCH_layout.json (`--quick` for the CI smoke size);
 //! - `batch`         multi-job service throughput matrix -> BENCH_service.json;
 //! - `serve`         drive N jobs through one persistent shared pool;
 //! - `info`          show artifact/manifest status and environment.
@@ -32,6 +34,7 @@ use blockms::coordinator::{
 };
 use blockms::image::{read_ppm, write_labels_ppm, write_ppm, Raster, SyntheticOrtho};
 use blockms::kmeans::kernel::KernelChoice;
+use blockms::kmeans::tile::TileLayout;
 use blockms::runtime::{find_artifacts_dir, ArtifactSet};
 use blockms::service::{ClusterServer, JobSpec, ServerConfig};
 use blockms::util::cli::{Args, CliError};
@@ -58,6 +61,7 @@ fn main() {
         "cases" => cmd_cases(&args),
         "sweep" => cmd_sweep(&args),
         "kernels" => cmd_kernels(&args),
+        "layout" => cmd_layout(&args),
         "batch" => cmd_batch(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(),
@@ -172,6 +176,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         io: io_of(&opts)?,
         schedule: opts.require::<Schedule>("schedule", "run.schedule")?,
         kernel: opts.require::<KernelChoice>("kernel", "run.kernel")?,
+        layout: opts.parse::<TileLayout>("layout", "run.layout")?,
+        arena_mb: opts.require("arena-mb", "run.arena_mb")?,
+        prefetch: args.flag("prefetch"),
+        strip_cache: opts.parse::<usize>("strip-cache", "io.strip_cache")?.unwrap_or(0),
         fail_block: None,
     });
     let ccfg = ClusterConfig {
@@ -193,8 +201,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     );
     if let Some(io) = out.io_stats {
         println!(
-            "io: {} block reads, {} strip reads, {} bytes",
-            io.block_reads, io.strip_reads, io.bytes_read
+            "io: {} block reads, {} strip reads, {} bytes | strip cache: {} hits / {} misses",
+            io.block_reads,
+            io.strip_reads,
+            io.bytes_read,
+            io.strip_cache_hits,
+            io.strip_cache_misses
         );
     }
 
@@ -322,6 +334,40 @@ fn cmd_kernels(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Layout-layer benchmark: interleaved-vs-SoA × {naive, pruned, lanes}
+/// × the paper's three block shapes through a strip store, written to
+/// `BENCH_layout.json` (see EXPERIMENTS.md §Layout for the schema).
+/// `--quick` runs the CI smoke size.
+fn cmd_layout(args: &Args) -> Result<()> {
+    use blockms::bench::layout::{render_layout_bench, write_layout_bench, LayoutBenchOpts};
+    let opts = Opts::load(args)?;
+    // --quick pins the matrix size (image side, ks, iters, samples);
+    // workers, strip-cache, and seed are honored in both modes.
+    let base = if args.flag("quick") {
+        LayoutBenchOpts::quick()
+    } else {
+        let scale: f64 = opts.require("scale", "bench.scale")?;
+        let side = ((1024.0 * scale).round() as usize).max(32);
+        LayoutBenchOpts {
+            height: side,
+            width: side,
+            iters: opts.require("bench-iters", "bench.iters")?,
+            ..Default::default()
+        }
+    };
+    let bopts = LayoutBenchOpts {
+        seed: opts.require("seed", "workload.seed")?,
+        workers: positive(opts.require("workers", "run.workers")?, "workers")?,
+        cache_strips: opts.parse::<usize>("strip-cache", "io.strip_cache")?.unwrap_or(0),
+        ..base
+    };
+    let out = args.get("out").unwrap_or("BENCH_layout.json").to_string();
+    let rows = write_layout_bench(Path::new(&out), &bopts)?;
+    print!("{}", render_layout_bench(&bopts, &rows));
+    println!("wrote {out}");
+    Ok(())
+}
+
 /// Service-layer benchmark: multi-job throughput over one shared pool at
 /// pool sizes × batch sizes, written to `BENCH_service.json` (see
 /// EXPERIMENTS.md §Service for the schema).
@@ -367,6 +413,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let schedule = opts.require::<Schedule>("schedule", "run.schedule")?;
     let io = io_of(&opts)?;
     let engine = engine_of(&opts)?;
+    let layout = opts.parse::<TileLayout>("layout", "run.layout")?;
+    let arena_mb: usize = opts.require("arena-mb", "run.arena_mb")?;
+    let prefetch = args.flag("prefetch");
+    let strip_cache: usize = opts.parse::<usize>("strip-cache", "io.strip_cache")?.unwrap_or(0);
     let max_iters: usize = opts.require("max-iters", "cluster.max_iters")?;
     let fixed_iters: Option<usize> = opts.parse("iters", "cluster.iters")?;
 
@@ -418,7 +468,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .with_mode(mode)
         .with_io(io.clone())
         .with_kernel(kernel)
-        .with_engine(engine.clone());
+        .with_engine(engine.clone())
+        .with_arena_mb(arena_mb)
+        .with_prefetch(prefetch)
+        .with_strip_cache(strip_cache);
+        let spec = match layout {
+            Some(l) => spec.with_layout(l),
+            None => spec,
+        };
         // Blocks while the admission gate is full — the backpressure path.
         handles.push(server.submit(spec)?);
     }

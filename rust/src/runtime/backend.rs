@@ -17,6 +17,7 @@ use super::KernelEngine;
 use super::manifest::ArtifactSet;
 use crate::kmeans::kernel::{self, CentroidDrift, PrunedState};
 use crate::kmeans::math::{self, StepAccum};
+use crate::kmeans::tile::SoaTile;
 
 /// What the coordinator needs from a compute engine, per block.
 pub trait ComputeBackend {
@@ -62,6 +63,44 @@ pub trait ComputeBackend {
     ) -> Result<f64> {
         let _ = (state, drift);
         self.assign_block(pixels, centroids, labels)
+    }
+
+    /// One Lloyd accumulation pass of the lane kernel over a planar
+    /// tile. Must return exactly what [`ComputeBackend::step_block`]
+    /// would for the tile's interleaved view. The default rematerializes
+    /// the interleaved buffer and runs the naive pass (never prunes) —
+    /// engines without a planar path (PJRT artifacts are fixed-layout)
+    /// stay correct and simply don't get the layout win.
+    fn step_block_lanes(
+        &mut self,
+        tile: &SoaTile,
+        centroids: &[f32],
+        state: &mut PrunedState,
+        drift: Option<&CentroidDrift>,
+    ) -> Result<StepAccum> {
+        let _ = drift;
+        state.clear();
+        let mut buf = Vec::new();
+        tile.to_interleaved(&mut buf);
+        self.step_block(&buf, centroids)
+    }
+
+    /// Final assignment of the lane kernel over a planar tile; must
+    /// label exactly like [`ComputeBackend::assign_block`]. Default:
+    /// rematerialize and full-scan.
+    fn assign_block_lanes(
+        &mut self,
+        tile: &SoaTile,
+        centroids: &[f32],
+        state: &mut PrunedState,
+        drift: Option<&CentroidDrift>,
+        labels: &mut Vec<u32>,
+    ) -> Result<f64> {
+        let _ = drift;
+        state.clear();
+        let mut buf = Vec::new();
+        tile.to_interleaved(&mut buf);
+        self.assign_block(&buf, centroids, labels)
     }
 
     /// Independent per-block K-Means (`iters` fixed Lloyd iterations from
@@ -199,6 +238,29 @@ impl ComputeBackend for NativeBackend {
         ))
     }
 
+    fn step_block_lanes(
+        &mut self,
+        tile: &SoaTile,
+        centroids: &[f32],
+        state: &mut PrunedState,
+        drift: Option<&CentroidDrift>,
+    ) -> Result<StepAccum> {
+        Ok(kernel::step_lanes(tile, centroids, self.k, state, drift))
+    }
+
+    fn assign_block_lanes(
+        &mut self,
+        tile: &SoaTile,
+        centroids: &[f32],
+        state: &mut PrunedState,
+        drift: Option<&CentroidDrift>,
+        labels: &mut Vec<u32>,
+    ) -> Result<f64> {
+        Ok(kernel::assign_lanes(
+            tile, centroids, self.k, state, drift, labels,
+        ))
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
@@ -315,6 +377,81 @@ mod tests {
         let ib = be.assign_block(&px, &cen, &mut lb).unwrap();
         assert_eq!(la, lb);
         assert_eq!(ia, ib);
+    }
+
+    #[test]
+    fn native_lanes_rounds_equal_naive_rounds() {
+        use crate::kmeans::kernel::{drift_between, PrunedState};
+        let mut be = NativeBackend::new(4, 3, 1);
+        let px = pixels(800, 51);
+        let tile = SoaTile::from_interleaved(&px, 3);
+        let mut cen = pixels(4, 52);
+        let mut state = PrunedState::new();
+        let mut drift = None;
+        for _ in 0..5 {
+            let want = be.step_block(&px, &cen).unwrap();
+            let got = be
+                .step_block_lanes(&tile, &cen, &mut state, drift.as_ref())
+                .unwrap();
+            assert_eq!(got, want);
+            let prev = cen.clone();
+            math::update_centroids(&want, &mut cen, 0.0);
+            drift = Some(drift_between(&prev, &cen, 4, 3));
+        }
+        let (mut la, mut lb) = (Vec::new(), Vec::new());
+        let ia = be
+            .assign_block_lanes(&tile, &cen, &mut state, drift.as_ref(), &mut la)
+            .unwrap();
+        let ib = be.assign_block(&px, &cen, &mut lb).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(ia, ib);
+    }
+
+    #[test]
+    fn default_lanes_fallback_rematerializes_exactly() {
+        // A backend that only implements the required methods must still
+        // satisfy the lanes contract through the default rematerialize
+        // path (this is what the PJRT engine gets).
+        struct Minimal(NativeBackend);
+        impl ComputeBackend for Minimal {
+            fn step_block(&mut self, p: &[f32], c: &[f32]) -> Result<StepAccum> {
+                self.0.step_block(p, c)
+            }
+            fn assign_block(
+                &mut self,
+                p: &[f32],
+                c: &[f32],
+                l: &mut Vec<u32>,
+            ) -> Result<f64> {
+                self.0.assign_block(p, c, l)
+            }
+            fn local_block(
+                &mut self,
+                p: &[f32],
+                i: &[f32],
+                l: &mut Vec<u32>,
+            ) -> Result<(Vec<f32>, f64)> {
+                self.0.local_block(p, i, l)
+            }
+            fn name(&self) -> &'static str {
+                "minimal"
+            }
+        }
+        let mut be = Minimal(NativeBackend::new(2, 3, 1));
+        let px = pixels(321, 61);
+        let tile = SoaTile::from_interleaved(&px, 3);
+        let cen = pixels(2, 62);
+        let mut state = crate::kmeans::kernel::PrunedState::new();
+        let acc = be.step_block_lanes(&tile, &cen, &mut state, None).unwrap();
+        assert_eq!(acc, math::step(&px, &cen, 2, 3));
+        assert!(!state.ready(), "fallback must invalidate bounds");
+        let mut labels = Vec::new();
+        let inertia = be
+            .assign_block_lanes(&tile, &cen, &mut state, None, &mut labels)
+            .unwrap();
+        let mut want = Vec::new();
+        assert_eq!(inertia, math::assign_all(&px, &cen, 2, 3, &mut want));
+        assert_eq!(labels, want);
     }
 
     #[test]

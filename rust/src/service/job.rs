@@ -23,6 +23,7 @@ use crate::coordinator::{
 };
 use crate::image::Raster;
 use crate::kmeans::kernel::KernelChoice;
+use crate::kmeans::tile::TileLayout;
 
 /// One clustering request, self-contained: the service needs nothing
 /// else to run it. Defaults mirror [`crate::coordinator::CoordinatorConfig`].
@@ -35,6 +36,15 @@ pub struct JobSpec {
     pub io: IoMode,
     pub kernel: KernelChoice,
     pub engine: Engine,
+    /// Block layout across rounds (`None` = the kernel's native shape;
+    /// see [`crate::coordinator::CoordinatorConfig::layout`]).
+    pub layout: Option<TileLayout>,
+    /// Per-worker tile-arena budget in MiB (SoA layout).
+    pub arena_mb: usize,
+    /// Overlap next-block reads with compute on the workers.
+    pub prefetch: bool,
+    /// Shared decoded-strip LRU capacity in strips (0 = off).
+    pub strip_cache: usize,
     /// Fault injection for tests: this block index fails.
     pub fail_block: Option<usize>,
 }
@@ -50,6 +60,10 @@ impl JobSpec {
             io: IoMode::Direct,
             kernel: KernelChoice::Naive,
             engine: Engine::Native,
+            layout: None,
+            arena_mb: 256,
+            prefetch: false,
+            strip_cache: 0,
             fail_block: None,
         }
     }
@@ -72,6 +86,32 @@ impl JobSpec {
     pub fn with_engine(mut self, engine: Engine) -> JobSpec {
         self.engine = engine;
         self
+    }
+
+    pub fn with_layout(mut self, layout: TileLayout) -> JobSpec {
+        self.layout = Some(layout);
+        self
+    }
+
+    pub fn with_arena_mb(mut self, arena_mb: usize) -> JobSpec {
+        self.arena_mb = arena_mb;
+        self
+    }
+
+    pub fn with_prefetch(mut self, prefetch: bool) -> JobSpec {
+        self.prefetch = prefetch;
+        self
+    }
+
+    pub fn with_strip_cache(mut self, strips: usize) -> JobSpec {
+        self.strip_cache = strips;
+        self
+    }
+
+    /// The concrete layout this job runs (explicit, or the kernel's
+    /// native shape).
+    pub fn resolved_layout(&self) -> TileLayout {
+        self.layout.unwrap_or_else(|| self.kernel.default_layout())
     }
 
     /// Reject malformed specs at submission time, before they occupy an

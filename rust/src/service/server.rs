@@ -357,7 +357,9 @@ impl ServingLoop {
                 } else {
                     Backing::Memory
                 };
-                let store = Arc::new(StripStore::new(img, *strip_rows, backing)?);
+                let mut store = StripStore::new(img, *strip_rows, backing)?;
+                store.enable_cache(spec.strip_cache);
+                let store = Arc::new(store);
                 (BlockSource::Strips(Arc::clone(&store)), Some(store))
             }
         };
@@ -370,6 +372,9 @@ impl ServingLoop {
             fail_block: spec.fail_block,
             local_mode: spec.mode == ClusterMode::Local,
             kernel: spec.kernel,
+            layout: spec.resolved_layout(),
+            arena_bytes: spec.arena_mb << 20,
+            prefetch: spec.prefetch,
         });
         // Same init draw as the solo Coordinator and the sequential
         // baseline — the root of per-job determinism.

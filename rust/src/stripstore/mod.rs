@@ -19,12 +19,17 @@
 //! file of little-endian f32 samples), hands out concurrent
 //! [`StripReader`]s (one per worker, own file handle), counts every strip
 //! access in [`AccessStats`], and offers the closed-form
-//! [`read_amplification`] the paper quotes.
+//! [`read_amplification`] the paper quotes. An optional shared
+//! [`StripCache`] (LRU over decoded strips) turns the column case's
+//! re-decodes into counted cache hits; memory-backed strips are always
+//! served zero-copy from the shared buffer.
 
+mod cache;
 mod reader;
 mod stats;
 mod store;
 
+pub use cache::StripCache;
 pub use reader::StripReader;
 pub use stats::{AccessSnapshot, AccessStats};
 pub use store::{Backing, StripStore};

@@ -6,6 +6,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use super::cache::StripCache;
 use super::stats::AccessStats;
 use super::store::{StoreData, StripStore};
 use crate::blocks::BlockRegion;
@@ -13,7 +14,8 @@ use crate::blocks::BlockRegion;
 /// Reads blocks from a [`StripStore`] with `blockproc` semantics: every
 /// strip the block's row span overlaps is read *in full*, then the block
 /// rectangle is extracted. One reader per worker thread (own file
-/// handle); counters are shared.
+/// handle); counters — and the decoded-strip cache, when the store has
+/// one — are shared.
 pub struct StripReader {
     height: usize,
     width: usize,
@@ -21,15 +23,32 @@ pub struct StripReader {
     strip_rows: usize,
     source: Source,
     stats: Arc<AccessStats>,
-    /// Reusable whole-strip buffer (avoids per-read allocation).
+    cache: Option<Arc<StripCache>>,
+    /// Reusable whole-strip buffer (file reads without a cache).
     strip_buf: Vec<f32>,
     /// Raw byte buffer for file reads.
     byte_buf: Vec<u8>,
+    /// Where the most recent [`StripReader::load_strip`] left its data.
+    current: StripData,
 }
 
 enum Source {
     Memory(Arc<Vec<f32>>),
     File(File),
+}
+
+/// Location of the currently loaded strip's samples. Memory-backed
+/// strips are served as zero-copy ranges of the shared buffer (the seed
+/// copied every strip into `strip_buf`); cached strips are shared
+/// `Arc`s; only uncached file reads land in the private buffer.
+enum StripData {
+    None,
+    /// `source` is `Memory`: samples are `data[start..start + len]`.
+    Memory { start: usize, len: usize },
+    /// Decoded into `strip_buf`.
+    Buffered,
+    /// Shared from the strip cache.
+    Cached(Arc<Vec<f32>>),
 }
 
 impl StripReader {
@@ -47,39 +66,108 @@ impl StripReader {
             strip_rows: store.strip_rows(),
             source,
             stats: Arc::clone(store.stats()),
+            cache: store.cache().cloned(),
             strip_buf: Vec::new(),
             byte_buf: Vec::new(),
+            current: StripData::None,
         })
     }
 
-    /// Read one whole strip into the internal buffer; returns the strip's
-    /// first row and row count. Counts one strip read.
-    fn read_strip(&mut self, s: usize) -> Result<(usize, usize)> {
+    /// Decode a file strip of `samples` f32s at `offset` into `out`
+    /// (reusing `byte_buf` for the raw transfer).
+    fn decode_file_strip(
+        f: &mut File,
+        byte_buf: &mut Vec<u8>,
+        out: &mut Vec<f32>,
+        offset: u64,
+        samples: usize,
+    ) -> Result<()> {
+        f.seek(SeekFrom::Start(offset)).context("seek strip")?;
+        byte_buf.resize(samples * 4, 0);
+        f.read_exact(byte_buf).context("read strip")?;
+        out.clear();
+        out.extend(
+            byte_buf
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])),
+        );
+        Ok(())
+    }
+
+    /// Make strip `s` the current strip; returns its first row and row
+    /// count. Counts one strip read — unless the shared cache serves it,
+    /// which counts a cache hit instead.
+    fn load_strip(&mut self, s: usize) -> Result<(usize, usize)> {
         let first = s * self.strip_rows;
         assert!(first < self.height, "strip {s} out of range");
         let rows = self.strip_rows.min(self.height - first);
         let samples = rows * self.width * self.channels;
         match &mut self.source {
-            Source::Memory(data) => {
+            Source::Memory(_) => {
+                // Always zero-copy; the cache (if any) only does the
+                // hit/miss accounting, modelling resident decoded strips
+                // with the same counters as the file backing.
+                if let Some(cache) = &self.cache {
+                    if cache.get(s).is_some() {
+                        self.stats.record_cache_hit();
+                    } else {
+                        cache.put(s, Arc::new(Vec::new())); // presence marker
+                        self.stats.record_cache_miss();
+                        self.stats.record_strip_read(samples * 4);
+                    }
+                } else {
+                    self.stats.record_strip_read(samples * 4);
+                }
                 let start = first * self.width * self.channels;
-                self.strip_buf.clear();
-                self.strip_buf.extend_from_slice(&data[start..start + samples]);
+                self.current = StripData::Memory {
+                    start,
+                    len: samples,
+                };
             }
             Source::File(f) => {
                 let offset = (first * self.width * self.channels * 4) as u64;
-                f.seek(SeekFrom::Start(offset)).context("seek strip")?;
-                self.byte_buf.resize(samples * 4, 0);
-                f.read_exact(&mut self.byte_buf).context("read strip")?;
-                self.strip_buf.clear();
-                self.strip_buf.extend(
-                    self.byte_buf
-                        .chunks_exact(4)
-                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])),
-                );
+                if let Some(cache) = &self.cache {
+                    if let Some(data) = cache.get(s) {
+                        self.stats.record_cache_hit();
+                        self.current = StripData::Cached(data);
+                        return Ok((first, rows));
+                    }
+                    let mut decoded = Vec::new();
+                    Self::decode_file_strip(f, &mut self.byte_buf, &mut decoded, offset, samples)?;
+                    let data = Arc::new(decoded);
+                    cache.put(s, Arc::clone(&data));
+                    self.stats.record_cache_miss();
+                    self.stats.record_strip_read(samples * 4);
+                    self.current = StripData::Cached(data);
+                } else {
+                    // Reusable private buffer: the uncached hot path
+                    // never allocates per strip.
+                    Self::decode_file_strip(
+                        f,
+                        &mut self.byte_buf,
+                        &mut self.strip_buf,
+                        offset,
+                        samples,
+                    )?;
+                    self.stats.record_strip_read(samples * 4);
+                    self.current = StripData::Buffered;
+                }
             }
         }
-        self.stats.record_strip_read(samples * 4);
         Ok((first, rows))
+    }
+
+    /// The currently loaded strip's samples.
+    fn strip_slice(&self) -> &[f32] {
+        match &self.current {
+            StripData::None => unreachable!("no strip loaded"),
+            StripData::Memory { start, len } => match &self.source {
+                Source::Memory(data) => &data[*start..*start + *len],
+                Source::File(_) => unreachable!("memory range on file source"),
+            },
+            StripData::Buffered => &self.strip_buf,
+            StripData::Cached(data) => data,
+        }
     }
 
     /// Read one block (`blockproc` semantics) into `out` as a flat
@@ -96,16 +184,15 @@ impl StripReader {
         let first_strip = region.row0 / self.strip_rows;
         let last_strip = (region.row_end() - 1) / self.strip_rows;
         for s in first_strip..=last_strip {
-            let (strip_row0, strip_nrows) = self.read_strip(s)?;
+            let (strip_row0, strip_nrows) = self.load_strip(s)?;
+            let strip = self.strip_slice();
             // rows of the block inside this strip
             let r_lo = region.row0.max(strip_row0);
             let r_hi = region.row_end().min(strip_row0 + strip_nrows);
             for r in r_lo..r_hi {
                 let row_in_strip = r - strip_row0;
                 let start = (row_in_strip * self.width + region.col0) * self.channels;
-                out.extend_from_slice(
-                    &self.strip_buf[start..start + region.cols() * self.channels],
-                );
+                out.extend_from_slice(&strip[start..start + region.cols() * self.channels]);
             }
         }
         self.stats.record_block_read();
@@ -186,6 +273,55 @@ mod tests {
             37 * 23 * 3 * 4
         );
         assert_eq!(buf.len(), 3);
+    }
+
+    #[test]
+    fn memory_blocks_are_served_zero_copy() {
+        // The memory path must not copy strips into the private buffer:
+        // after a full pass the reusable buffer is still untouched.
+        let img = image();
+        let store = StripStore::new(&img, 5, Backing::Memory).unwrap();
+        let mut rd = store.reader().unwrap();
+        let mut buf = Vec::new();
+        let plan = BlockPlan::new(37, 23, BlockShape::Square { side: 7 });
+        for region in plan.iter() {
+            rd.read_block(region, &mut buf).unwrap();
+        }
+        assert!(rd.strip_buf.is_empty(), "memory path copied a strip");
+        assert_eq!(rd.byte_buf.len(), 0);
+    }
+
+    #[test]
+    fn cache_turns_repeat_strip_reads_into_hits() {
+        let img = image();
+        for file_backed in [false, true] {
+            let backing = if file_backed {
+                Backing::File(std::env::temp_dir().join("blockms_reader_cache_test"))
+            } else {
+                Backing::Memory
+            };
+            let mut store = StripStore::new(&img, 5, backing).unwrap();
+            store.enable_cache(store.strips());
+            let mut rd = store.reader().unwrap();
+            let mut buf = Vec::new();
+            // Column plan: every block spans every strip.
+            let plan = BlockPlan::new(37, 23, BlockShape::Cols { band_cols: 6 });
+            for region in plan.iter() {
+                rd.read_block(region, &mut buf).unwrap();
+                assert_eq!(buf, img.crop(region), "file_backed={file_backed}: {region}");
+            }
+            let snap = store.stats().snapshot();
+            let strips = store.strips() as u64;
+            let blocks = plan.len() as u64;
+            assert_eq!(snap.strip_cache_misses, strips, "file_backed={file_backed}");
+            assert_eq!(
+                snap.strip_cache_hits,
+                strips * (blocks - 1),
+                "file_backed={file_backed}"
+            );
+            // Only misses transfer: the file is decoded exactly once.
+            assert_eq!(snap.strip_reads, strips, "file_backed={file_backed}");
+        }
     }
 
     #[test]

@@ -12,6 +12,8 @@ pub struct AccessStats {
     strip_reads: AtomicU64,
     block_reads: AtomicU64,
     bytes_read: AtomicU64,
+    strip_cache_hits: AtomicU64,
+    strip_cache_misses: AtomicU64,
 }
 
 /// A point-in-time copy of the counters.
@@ -20,6 +22,11 @@ pub struct AccessSnapshot {
     pub strip_reads: u64,
     pub block_reads: u64,
     pub bytes_read: u64,
+    /// Strip accesses served from the shared [`super::StripCache`]
+    /// without a decode/transfer. Zero when the store has no cache.
+    pub strip_cache_hits: u64,
+    /// Strip accesses that went to the backing despite the cache.
+    pub strip_cache_misses: u64,
 }
 
 impl AccessStats {
@@ -36,11 +43,21 @@ impl AccessStats {
         self.block_reads.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_cache_hit(&self) {
+        self.strip_cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_cache_miss(&self) {
+        self.strip_cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> AccessSnapshot {
         AccessSnapshot {
             strip_reads: self.strip_reads.load(Ordering::Relaxed),
             block_reads: self.block_reads.load(Ordering::Relaxed),
             bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            strip_cache_hits: self.strip_cache_hits.load(Ordering::Relaxed),
+            strip_cache_misses: self.strip_cache_misses.load(Ordering::Relaxed),
         }
     }
 
@@ -48,6 +65,8 @@ impl AccessStats {
         self.strip_reads.store(0, Ordering::Relaxed);
         self.block_reads.store(0, Ordering::Relaxed);
         self.bytes_read.store(0, Ordering::Relaxed);
+        self.strip_cache_hits.store(0, Ordering::Relaxed);
+        self.strip_cache_misses.store(0, Ordering::Relaxed);
     }
 }
 
@@ -71,9 +90,15 @@ mod tests {
     fn reset_zeroes() {
         let s = AccessStats::default();
         s.record_strip_read(10);
+        s.record_cache_hit();
+        s.record_cache_miss();
+        assert_eq!(s.snapshot().strip_cache_hits, 1);
+        assert_eq!(s.snapshot().strip_cache_misses, 1);
         s.reset();
         assert_eq!(s.snapshot().strip_reads, 0);
         assert_eq!(s.snapshot().bytes_read, 0);
+        assert_eq!(s.snapshot().strip_cache_hits, 0);
+        assert_eq!(s.snapshot().strip_cache_misses, 0);
     }
 
     #[test]

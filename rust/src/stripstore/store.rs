@@ -6,6 +6,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use super::cache::StripCache;
 use super::reader::StripReader;
 use super::stats::AccessStats;
 use crate::image::Raster;
@@ -30,6 +31,9 @@ pub struct StripStore {
     strip_rows: usize,
     backing: StoreData,
     stats: Arc<AccessStats>,
+    /// Shared decoded-strip LRU (None = every read hits the backing,
+    /// the seed behaviour; see [`StripCache`]).
+    cache: Option<Arc<StripCache>>,
 }
 
 pub(super) enum StoreData {
@@ -78,7 +82,20 @@ impl StripStore {
             strip_rows,
             backing: data,
             stats,
+            cache: None,
         })
+    }
+
+    /// Attach a shared decoded-strip LRU of `cap_strips` capacity
+    /// (0 = no cache). Call before handing out readers: a reader opened
+    /// earlier keeps reading uncached.
+    pub fn enable_cache(&mut self, cap_strips: usize) {
+        self.cache = (cap_strips > 0).then(|| Arc::new(StripCache::new(cap_strips)));
+    }
+
+    /// The shared strip cache, if one was enabled.
+    pub fn cache(&self) -> Option<&Arc<StripCache>> {
+        self.cache.as_ref()
     }
 
     pub fn height(&self) -> usize {

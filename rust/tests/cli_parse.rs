@@ -46,6 +46,27 @@ fn cluster_flags_round_trip() {
 }
 
 #[test]
+fn layout_flags_round_trip() {
+    let cli = blockms_cli();
+    let args = cli
+        .parse(vec![
+            "cluster", "--kernel", "lanes", "--layout", "soa", "--arena-mb", "64",
+            "--strip-cache", "12", "--prefetch",
+        ])
+        .unwrap();
+    assert_eq!(args.get("kernel"), Some("lanes"));
+    assert_eq!(args.get("layout"), Some("soa"));
+    assert_eq!(args.get_parse::<usize>("arena-mb").unwrap(), 64);
+    assert_eq!(args.get_parse::<usize>("strip-cache").unwrap(), 12);
+    assert!(args.flag("prefetch"));
+
+    let args = cli.parse(vec!["layout", "--quick", "--out", "l.json"]).unwrap();
+    assert_eq!(args.subcommand(), Some("layout"));
+    assert!(args.flag("quick"));
+    assert_eq!(args.get("out"), Some("l.json"));
+}
+
+#[test]
 fn service_flags_round_trip() {
     let cli = blockms_cli();
     let args = cli
@@ -74,6 +95,7 @@ fn bench_flags_round_trip() {
         ("cases", vec![]),
         ("sweep", vec!["--out", "s.csv"]),
         ("kernels", vec![]),
+        ("layout", vec![]),
         ("info", vec![]),
     ] {
         let mut argv = vec![sub, "--scale", "0.1", "--bench-iters", "3", "--seed", "9"];

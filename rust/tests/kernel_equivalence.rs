@@ -1,8 +1,9 @@
-//! Property tests for the kernel layer's headline guarantee: the pruned
-//! and fused kernels produce **bit-identical** labels, centroids, and
-//! counts to the naive kernel — across random images, `k ∈ {1, 2, 4, 8}`,
-//! channel widths covering every dispatch path, and the paper's three
-//! block shapes through the real coordinator.
+//! Property tests for the kernel layer's headline guarantee: the pruned,
+//! fused, and lane-vectorized (SoA) kernels produce **bit-identical**
+//! labels, centroids, and counts to the naive kernel — across random
+//! images, `k ∈ {1, 2, 4, 8}`, channel widths covering every dispatch
+//! path (and every lane-tail residue), and the paper's three block
+//! shapes through the real coordinator under both schedules.
 
 use std::sync::Arc;
 
@@ -56,7 +57,7 @@ fn prop_seq_kernels_bit_identical() {
         };
         // convergence-driven drive
         let naive = SeqKMeans::run_with(&px, *channels, &cfg, KernelChoice::Naive);
-        for kc in [KernelChoice::Pruned, KernelChoice::Fused] {
+        for kc in [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes] {
             let other = SeqKMeans::run_with(&px, *channels, &cfg, kc);
             if other.labels != naive.labels
                 || other.centroids != naive.centroids
@@ -69,7 +70,7 @@ fn prop_seq_kernels_bit_identical() {
         }
         // fixed-iteration drive (the bench mirror)
         let naive = SeqKMeans::run_fixed_iters_with(&px, *channels, &cfg, 5, KernelChoice::Naive);
-        for kc in [KernelChoice::Pruned, KernelChoice::Fused] {
+        for kc in [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes] {
             let other = SeqKMeans::run_fixed_iters_with(&px, *channels, &cfg, 5, kc);
             if other.labels != naive.labels || other.centroids != naive.centroids {
                 return false;
@@ -114,6 +115,38 @@ fn prop_pruned_step_accum_bit_identical_across_rounds() {
     });
 }
 
+/// The lanes kernel's SoA rounds mirror the interleaved pruned rounds
+/// bit for bit: identical accumulators every round, identical final
+/// labels/inertia, at every lane-tail residue qcheck finds.
+#[test]
+fn prop_lanes_step_accum_bit_identical_across_rounds() {
+    use blockms::kmeans::tile::SoaTile;
+    let gen = pair(PixelGen, choice_of(&KS));
+    forall(205, 80, &gen, |((n, channels, seed), k)| {
+        let px = pixels(*n, *channels, *seed);
+        let tile = SoaTile::from_interleaved(&px, *channels);
+        let mut cen = pixels(*k, *channels, seed.wrapping_mul(37) + 11);
+        let mut state = PrunedState::new();
+        let mut drift = None;
+        for _ in 0..6 {
+            let want = math::step(&px, &cen, *k, *channels);
+            let got = kernel::step_lanes(&tile, &cen, *k, &mut state, drift.as_ref());
+            if got != want {
+                return false;
+            }
+            let prev = cen.clone();
+            math::update_centroids(&want, &mut cen, 0.0);
+            drift = Some(kernel::drift_between(&prev, &cen, *k, *channels));
+        }
+        let mut lanes_labels = Vec::new();
+        let lanes_inertia =
+            kernel::assign_lanes(&tile, &cen, *k, &mut state, drift.as_ref(), &mut lanes_labels);
+        let mut naive_labels = Vec::new();
+        let naive_inertia = math::assign_all(&px, &cen, *k, *channels, &mut naive_labels);
+        lanes_labels == naive_labels && lanes_inertia == naive_inertia
+    });
+}
+
 /// The paper's three block shapes, random sizes, random worker counts:
 /// the coordinator must produce bit-identical output under every kernel
 /// and both schedules (dynamic scheduling migrates blocks between
@@ -152,7 +185,7 @@ fn prop_coordinator_kernels_identical_across_paper_shapes() {
             })
             .cluster(&img, &plan, &ccfg)
             .unwrap();
-            for kernel in [KernelChoice::Pruned, KernelChoice::Fused] {
+            for kernel in [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes] {
                 for schedule in [Schedule::Static, Schedule::Dynamic] {
                     let out = Coordinator::new(CoordinatorConfig {
                         workers: 1 + salt % 4,
@@ -195,7 +228,7 @@ fn prop_kernels_identical_under_distance_ties() {
             ..Default::default()
         };
         let naive = SeqKMeans::run_with(&px, 3, &cfg, KernelChoice::Naive);
-        [KernelChoice::Pruned, KernelChoice::Fused]
+        [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes]
             .into_iter()
             .all(|kc| {
                 let r = SeqKMeans::run_with(&px, 3, &cfg, kc);

@@ -43,7 +43,7 @@ fn solo(spec: &JobSpec, workers: usize) -> ClusterOutput {
         io: IoMode::Direct, // I/O path must not change values
         schedule: Schedule::Dynamic,
         kernel: spec.kernel,
-        fail_block: None,
+        ..Default::default()
     })
     .cluster(&spec.image, &spec.plan, &spec.cluster)
     .expect("solo run")
@@ -78,7 +78,7 @@ fn assert_identical(tag: &str, got: &ClusterOutput, want: &ClusterOutput, k: usi
 }
 
 /// The acceptance matrix: k∈{2,4,8} × C∈{1,3,4} × all three paper block
-/// shapes, with kernels naive|pruned|fused cycling through the cells.
+/// shapes, with kernels naive|pruned|fused|lanes cycling through the cells.
 /// All 27 jobs run concurrently through one 4-worker pool and each must
 /// equal its solo run exactly.
 #[test]
@@ -89,7 +89,7 @@ fn mixed_jobs_bit_identical_to_solo() {
     for &k in &[2usize, 4, 8] {
         for &channels in &[1usize, 3, 4] {
             for shape in paper_shapes() {
-                let kernel = KernelChoice::ALL[(idx as usize) % 3];
+                let kernel = KernelChoice::ALL[(idx as usize) % KernelChoice::ALL.len()];
                 let img = image(channels, h, w, 100 + idx);
                 let plan = Arc::new(BlockPlan::new(h, w, shape));
                 specs.push(
@@ -227,6 +227,46 @@ fn strip_io_jobs_are_isolated_and_exact() {
         assert_eq!(io.strip_reads as usize, per_pass * 4);
         assert_eq!(io.block_reads as usize, spec.plan.len() * 4);
     }
+    server.shutdown();
+}
+
+/// A lanes-kernel strip-I/O job through the service: the per-worker SoA
+/// tile arena drops strip reads to once per block per job (static
+/// schedule keeps block ownership stable), and the output stays
+/// bit-identical to the solo run of the same spec.
+#[test]
+fn lanes_service_job_fills_tiles_once_and_matches_solo() {
+    let (h, w) = (48, 40);
+    let server = ClusterServer::start(ServerConfig {
+        workers: 2,
+        schedule: Schedule::Static,
+        max_in_flight: 2,
+    });
+    let img = image(3, h, w, 91);
+    let plan = Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 14 }));
+    let spec = JobSpec::new(
+        img,
+        plan,
+        ClusterConfig {
+            k: 4,
+            seed: 92,
+            fixed_iters: Some(3),
+            ..Default::default()
+        },
+    )
+    .with_kernel(KernelChoice::Lanes)
+    .with_io(IoMode::Strips {
+        strip_rows: 8,
+        file_backed: false,
+    });
+    let got = server.submit(spec.clone()).unwrap().wait_output().unwrap();
+    let want = solo(&spec, 2);
+    assert_identical("lanes strip job", &got, &want, 4);
+    let io = got.io_stats.expect("strip jobs report io stats");
+    // 4 passes run, but every block's tile is filled exactly once.
+    let (per_pass, _, _) = blockms::stripstore::read_amplification(&spec.plan, 8);
+    assert_eq!(io.strip_reads as usize, per_pass);
+    assert_eq!(io.block_reads as usize, spec.plan.len());
     server.shutdown();
 }
 

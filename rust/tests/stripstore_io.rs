@@ -1,6 +1,6 @@
 //! Strip-store I/O contract tests.
 //!
-//! Two properties, on BOTH backings (memory and real file):
+//! Three properties, on BOTH backings (memory and real file):
 //!
 //! 1. **Counted = closed form.** The `AccessStats` strip-read counter
 //!    after one full pass over a plan equals the closed-form
@@ -9,6 +9,10 @@
 //! 2. **Concurrent readers see consistent bytes.** Several
 //!    `StripReader`s racing over the same store each reconstruct every
 //!    block bit-identical to a direct crop of the source raster.
+//! 3. **Cache hits/misses = closed form.** With the shared strip cache
+//!    enabled, the hit/miss counters after a single-reader pass equal
+//!    an exact LRU simulation of the plan's strip access sequence —
+//!    row plans get no reuse, column plans hit on every revisit.
 
 use std::sync::Arc;
 
@@ -85,6 +89,102 @@ fn paper_case_amplifications_at_one_tenth_scale() {
     let (_, _, sq_amp) = read_amplification(&sq_plan, STRIP_ROWS);
     // 466/120 → 4 blocks per strip row: every strip read ~4x
     assert!((sq_amp - 4.0).abs() < 0.05, "square amplification {sq_amp}");
+}
+
+/// Exact LRU simulation of a single reader visiting `plan`'s blocks in
+/// order (strips ascending within each block): the closed form the
+/// counted hit/miss numbers must equal.
+fn simulate_lru(plan: &BlockPlan, strip_rows: usize, cap: usize) -> (u64, u64) {
+    let (mut hits, mut misses) = (0u64, 0u64);
+    let mut tick = 0u64;
+    let mut resident: Vec<(usize, u64)> = Vec::new(); // (strip, last_used)
+    for b in plan.iter() {
+        let first = b.row0 / strip_rows;
+        let last = (b.row_end() - 1) / strip_rows;
+        for s in first..=last {
+            tick += 1;
+            if let Some(e) = resident.iter_mut().find(|(st, _)| *st == s) {
+                e.1 = tick;
+                hits += 1;
+            } else {
+                misses += 1;
+                resident.push((s, tick));
+                if resident.len() > cap {
+                    let lru = resident
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, (_, used))| *used)
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    resident.remove(lru);
+                }
+            }
+        }
+    }
+    (hits, misses)
+}
+
+#[test]
+fn cache_hit_miss_counts_equal_closed_form_on_both_backings() {
+    let img = hero_image();
+    let total_strips = H.div_ceil(STRIP_ROWS);
+    // Full capacity and a deliberately thrashing capacity.
+    for cap in [total_strips, 3] {
+        for (name, shape) in paper_shapes() {
+            let plan = BlockPlan::new(H, W, shape);
+            let (want_hits, want_misses) = simulate_lru(&plan, STRIP_ROWS, cap);
+            for backing in backings(&format!("cache_{name}_{cap}")) {
+                let file_backed = matches!(backing, Backing::File(_));
+                let mut store = StripStore::new(&img, STRIP_ROWS, backing).unwrap();
+                store.enable_cache(cap);
+                let mut reader = store.reader().unwrap();
+                let mut buf = Vec::new();
+                for region in plan.iter() {
+                    reader.read_block(region, &mut buf).unwrap();
+                    assert_eq!(buf, img.crop(region), "{name}: cached bytes differ");
+                }
+                let snap = store.stats().snapshot();
+                assert_eq!(
+                    (snap.strip_cache_hits, snap.strip_cache_misses),
+                    (want_hits, want_misses),
+                    "{name} cap={cap} (file_backed={file_backed})"
+                );
+                // Only misses transfer from the backing.
+                assert_eq!(snap.strip_reads, want_misses, "{name} cap={cap}");
+            }
+        }
+    }
+}
+
+/// The paper-shape headline numbers at full cache capacity: the column
+/// plan's 5× re-read collapses to hits, the (strip-aligned) row plan
+/// has nothing to reuse, and the square plan hits on 3 of its 4 visits
+/// to each strip.
+#[test]
+fn column_plans_reuse_square_partially_rows_never() {
+    let total_strips = H.div_ceil(STRIP_ROWS) as u64;
+
+    let col_plan = BlockPlan::new(H, W, BlockShape::Custom { rows: H, cols: 100 });
+    let (hits, misses) = simulate_lru(&col_plan, STRIP_ROWS, total_strips as usize);
+    assert_eq!(misses, total_strips);
+    assert_eq!(hits, 4 * total_strips, "5 column blocks -> 4 revisits");
+
+    let row_plan = BlockPlan::new(H, W, BlockShape::Custom { rows: 120, cols: W });
+    let (hits, _) = simulate_lru(&row_plan, STRIP_ROWS, total_strips as usize);
+    assert_eq!(hits, 0, "strip-aligned rows have no reuse");
+
+    let sq_plan = BlockPlan::new(H, W, BlockShape::Square { side: 120 });
+    let (hits, misses) = simulate_lru(&sq_plan, STRIP_ROWS, total_strips as usize);
+    assert_eq!(misses, total_strips);
+    let (reads, _, _) = read_amplification(&sq_plan, STRIP_ROWS);
+    assert_eq!(hits, reads as u64 - total_strips);
+
+    // With a single-strip cache, the column plan's stride-through access
+    // pattern defeats LRU entirely: every access misses.
+    let (hits, misses) = simulate_lru(&col_plan, STRIP_ROWS, 1);
+    assert_eq!(hits, 0);
+    let (reads, _, _) = read_amplification(&col_plan, STRIP_ROWS);
+    assert_eq!(misses, reads as u64);
 }
 
 #[test]
