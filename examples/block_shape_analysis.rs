@@ -17,6 +17,7 @@ use blockms::bench::tables::{hero_shape, SweepOpts};
 use blockms::bench::workloads::{Workload, HERO_SIZE};
 use blockms::blocks::{ApproachKind, BlockPlan};
 use blockms::coordinator::{ClusterConfig, Coordinator, CoordinatorConfig, IoMode};
+use blockms::plan::ExecPlan;
 use blockms::stripstore::read_amplification;
 use blockms::util::fmt::{ratio, Table};
 
@@ -84,20 +85,15 @@ fn main() -> anyhow::Result<()> {
     // ---- bonus: wall-clock of a real strip-backed run ------------------
     let workload = Workload::new(HERO_SIZE, scale, 1);
     let img = Arc::new(workload.generate());
-    let plan = Arc::new(BlockPlan::new(
-        img.height(),
-        img.width(),
-        hero_shape(ApproachKind::Cols, scale),
-    ));
     let coord = Coordinator::new(CoordinatorConfig {
-        workers: 2,
+        exec: ExecPlan::pinned(hero_shape(ApproachKind::Cols, scale)).with_workers(2),
         io: IoMode::Strips {
             strip_rows: 32,
             file_backed: true, // a real file on disk, seek+read per strip
         },
         ..Default::default()
     });
-    let out = coord.cluster(&img, &plan, &ClusterConfig::default())?;
+    let out = coord.cluster(&img, &ClusterConfig::default())?;
     let io = out.io_stats.unwrap();
     println!(
         "\nfile-backed run: {} blocks, {} strip reads, {:.1} MiB transferred, {:.1} ms",

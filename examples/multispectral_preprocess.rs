@@ -26,6 +26,7 @@ use blockms::blocks::{sliding_apply, BlockPlan, BlockShape};
 use blockms::coordinator::{ClusterConfig, ClusterMode, Coordinator, CoordinatorConfig};
 use blockms::image::{ops, SyntheticOrtho};
 use blockms::metrics::quality;
+use blockms::plan::ExecPlan;
 use blockms::util::fmt::{duration, ratio, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -64,11 +65,7 @@ fn main() -> anyhow::Result<()> {
     let prepped = Arc::new(ops::normalize(&denoised, 255.0));
 
     // 4 + 5. cluster in both modes and score
-    let plan = Arc::new(BlockPlan::new(
-        h,
-        w,
-        BlockShape::paper_default(blockms::blocks::ApproachKind::Cols, h, w),
-    ));
+    let shape = BlockShape::paper_default(blockms::blocks::ApproachKind::Cols, h, w);
     let mut table = Table::new("Multispectral clustering quality (k = truth classes)").header(&[
         "Mode",
         "Purity",
@@ -79,7 +76,7 @@ fn main() -> anyhow::Result<()> {
     let mut raw_scores = Vec::new();
     for (label, mode) in [("global", ClusterMode::Global), ("local", ClusterMode::Local)] {
         let coord = Coordinator::new(CoordinatorConfig {
-            workers: 4,
+            exec: ExecPlan::pinned(shape).with_workers(4),
             mode,
             ..Default::default()
         });
@@ -87,7 +84,7 @@ fn main() -> anyhow::Result<()> {
             k: classes,
             ..Default::default()
         };
-        let out = coord.cluster(&prepped, &plan, &cfg)?;
+        let out = coord.cluster(&prepped, &cfg)?;
         let p = quality::purity(&out.labels, &truth);
         let ari = quality::adjusted_rand_sampled(&out.labels, &truth, 20_000);
         let db = quality::davies_bouldin(
@@ -111,12 +108,11 @@ fn main() -> anyhow::Result<()> {
     // denoising should help: compare against clustering the raw scene
     let raw = Arc::new(ops::normalize(&noisy, 255.0));
     let coord = Coordinator::new(CoordinatorConfig {
-        workers: 4,
+        exec: ExecPlan::pinned(shape).with_workers(4),
         ..Default::default()
     });
     let out_raw = coord.cluster(
         &raw,
-        &plan,
         &ClusterConfig {
             k: classes,
             ..Default::default()

@@ -15,25 +15,24 @@ fn main() -> anyhow::Result<()> {
     //    paper's orthoimagery; deterministic in the seed).
     let img = Arc::new(SyntheticOrtho::default().with_seed(7).generate(800, 1280));
 
-    // 2. A column-shaped block plan — the paper's best case.
-    let plan = Arc::new(BlockPlan::new(
-        img.height(),
-        img.width(),
-        BlockShape::Cols { band_cols: 256 },
-    ));
-    println!("plan: {} blocks of {:?}", plan.len(), plan.block_dims());
-
-    // 3. Cluster with 4 workers (global mode: exactly the sequential
-    //    result, computed in parallel).
+    // 2. One resolved execution plan: a column-shaped tiling (the
+    //    paper's best case) on 4 workers. Everything the run needs,
+    //    in one place — `blockms cluster --auto` would let the cost
+    //    model pick these knobs instead.
     let coord = Coordinator::new(CoordinatorConfig {
-        workers: 4,
+        exec: ExecPlan::pinned(BlockShape::Cols { band_cols: 256 }).with_workers(4),
         ..Default::default()
     });
+    let plan = coord.block_plan(&img);
+    println!("plan: {} blocks of {:?}", plan.len(), plan.block_dims());
+
+    // 3. Cluster (global mode: exactly the sequential result, computed
+    //    in parallel).
     let cfg = ClusterConfig {
         k: 4,
         ..Default::default()
     };
-    let out = coord.cluster(&img, &plan, &cfg)?;
+    let out = coord.cluster(&img, &cfg)?;
     println!(
         "clustered {} px into k={} in {} iterations: inertia {:.0}, {:.1} ms",
         img.pixels(),

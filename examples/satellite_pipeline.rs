@@ -24,9 +24,10 @@ use std::sync::Arc;
 use blockms::bench::runner::{EngineChoice, ExperimentConfig, Runner};
 use blockms::bench::tables::hero_shape;
 use blockms::bench::workloads::{Workload, HERO_SIZE};
-use blockms::blocks::{ApproachKind, BlockPlan};
+use blockms::blocks::ApproachKind;
 use blockms::coordinator::{ClusterConfig, Coordinator, CoordinatorConfig, Engine};
 use blockms::image::{write_labels_ppm, write_ppm};
+use blockms::plan::ExecPlan;
 use blockms::runtime::find_artifacts_dir;
 use blockms::util::fmt::{duration, ratio, secs, Table};
 
@@ -70,7 +71,7 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
         let coord = Coordinator::new(CoordinatorConfig {
-            workers: 4,
+            exec: ExecPlan::pinned(hero_shape(ApproachKind::Cols, scale)).with_workers(4),
             engine: engine.clone(),
             ..Default::default()
         });
@@ -81,12 +82,7 @@ fn main() -> anyhow::Result<()> {
             img.width(),
             &out_dir.join(format!("seq_k{k}.ppm")),
         )?;
-        let plan = Arc::new(BlockPlan::new(
-            img.height(),
-            img.width(),
-            hero_shape(ApproachKind::Cols, scale),
-        ));
-        let par = coord.cluster(&img, &plan, &cfg)?;
+        let par = coord.cluster(&img, &cfg)?;
         write_labels_ppm(
             &par.labels,
             img.height(),

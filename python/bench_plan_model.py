@@ -1,0 +1,177 @@
+#!/usr/bin/env python3
+"""Generate BENCH_plan.json from the committed BENCH_layout.json.
+
+An exact mirror of the rust cost model (`rust/src/plan/cost.rs`), used
+where no cargo toolchain exists. The measured grid is the layout
+matrix's own cells (kernel x layout per shape x k at the same 1024^2 /
+strips-of-64 / 4-worker configuration, cache 0, prefetch off), so the
+planner's regret is computed against real measurements:
+
+- compute floors  = row-shaped cells (amplification 1.0);
+- decode ns/byte  = least-squares fit over naive column/square cells;
+- error_bound     = max(0.10, worst self-prediction over the matrix);
+- picked          = argmin predicted over the measured grid, ties to
+                    the earlier candidate in the rust enumeration
+                    order (kernels naive,pruned,lanes x layouts
+                    interleaved,soa) — fused is excluded because the
+                    layout matrix carries no measured fused cell;
+- regret          = measured(pick)/measured(best) - 1.
+
+Usage:
+  python3 python/bench_plan_model.py [--layout BENCH_layout.json]
+                                     [--out BENCH_plan.json]
+  python3 python/bench_plan_model.py --print-priors   # rust constants
+"""
+
+import argparse
+import json
+
+KERNELS = ["naive", "pruned", "lanes"]  # measured grid (no fused cell)
+LAYOUTS = ["interleaved", "soa"]
+SHAPES = ["row", "column", "square"]
+
+
+def load_cells(doc):
+    return {
+        (c["kernel"], c["layout"], c["shape"], c["k"]): c for c in doc["cases"]
+    }
+
+
+def calibrate(doc, cells):
+    """Mirror of CostModel::calibrate_from_json."""
+    h, w = doc["image"]
+    n_px = float(h * w)
+    passes = doc["iters"] + 1.0
+
+    floors = {}  # (kernel, layout) -> sorted [(k, ns)]
+    row_bytes = {}  # layout -> bytes of one row pass
+    for (kern, lay, shape, k), c in cells.items():
+        if shape == "row":
+            floors.setdefault((kern, lay), []).append((k, c["ns_per_pixel_round"]))
+            row_bytes[lay] = c["bytes_read"]
+    for series in floors.values():
+        series.sort()
+
+    num = den = 0.0
+    for (kern, lay, shape, k), c in cells.items():
+        if kern != "naive" or shape == "row":
+            continue
+        row = cells[("naive", lay, "row", k)]
+        excess_ns = (c["ns_per_pixel_round"] - row["ns_per_pixel_round"]) * n_px * passes
+        excess_bytes = c["bytes_read"] - row["bytes_read"]
+        num += excess_ns * excess_bytes
+        den += excess_bytes * excess_bytes
+    decode = max(0.0, num / den) if den > 0 else 0.0
+
+    def floor_of(kern, lay, k):
+        series = floors[(kern, lay)]
+        ks = [p[0] for p in series]
+        if k <= ks[0]:
+            return series[0][1]
+        if k >= ks[-1]:
+            return series[-1][1]
+        for (k0, v0), (k1, v1) in zip(series, series[1:]):
+            if k <= k1:
+                t = (k - k0) / (k1 - k0)
+                return v0 + t * (v1 - v0)
+        return series[-1][1]
+
+    def predict(kern, lay, shape, k):
+        # bytes depend on (layout, shape) only; excess vs the row pass
+        b = cells[("naive", lay, shape, k)]["bytes_read"]
+        br = cells[("naive", lay, "row", k)]["bytes_read"]
+        return floor_of(kern, lay, k) + max(0, b - br) * decode / (n_px * passes)
+
+    worst = 0.10
+    for (kern, lay, shape, k), c in cells.items():
+        m = c["ns_per_pixel_round"]
+        if m > 0:
+            worst = max(worst, abs(predict(kern, lay, shape, k) - m) / m)
+
+    return floor_of, predict, decode, worst
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--layout", default="BENCH_layout.json")
+    ap.add_argument("--out", default="BENCH_plan.json")
+    ap.add_argument("--print-priors", action="store_true")
+    args = ap.parse_args()
+
+    with open(args.layout) as f:
+        doc = json.load(f)
+    cells = load_cells(doc)
+    floor_of, predict, decode, bound = calibrate(doc, cells)
+
+    if args.print_priors:
+        print("// CostModel::baked() constants (from", args.layout, ")")
+        for kern in KERNELS:
+            for lay in LAYOUTS:
+                ns = [round(floor_of(kern, lay, k), 3) for k in (2, 4, 8)]
+                print(f"({kern}, {lay}): {ns}")
+        print(f"decode_ns_per_byte: {decode:.5f}")
+        print(f"worst self-prediction error: {bound:.4f}")
+        return
+
+    cases = []
+    for shape in SHAPES:
+        for k in (2, 4, 8):
+            grid = [(kern, lay) for kern in KERNELS for lay in LAYOUTS]
+            # deterministic argmin: strictly-less keeps the earlier candidate
+            picked, picked_pred = None, float("inf")
+            for kern, lay in grid:
+                p = predict(kern, lay, shape, k)
+                if p < picked_pred:
+                    picked, picked_pred = (kern, lay), p
+            measured = {
+                g: cells[(g[0], g[1], shape, k)]["ns_per_pixel_round"] for g in grid
+            }
+            best = min(grid, key=lambda g: (measured[g], grid.index(g)))
+            m_pick, m_best = measured[picked], measured[best]
+            regret = m_pick / m_best - 1.0
+            # one EWMA feedback step, as CostModel::refine does
+            refined = 0.5 * floor_of(picked[0], picked[1], k) + 0.5 * m_pick
+            cases.append(
+                {
+                    "shape": shape,
+                    "k": k,
+                    "picked_kernel": picked[0],
+                    "picked_layout": picked[1],
+                    "predicted_ns_px_pass": round(picked_pred, 4),
+                    "measured_ns_px_pass": round(m_pick, 4),
+                    "best_kernel": best[0],
+                    "best_layout": best[1],
+                    "best_ns_px_pass": round(m_best, 4),
+                    "regret": round(regret, 6),
+                    "prediction_error": round(abs(picked_pred - m_pick) / m_pick, 6),
+                    "refined_ns_px_pass": round(refined, 4),
+                    "within_bound": regret <= bound,
+                }
+            )
+
+    max_regret = max(c["regret"] for c in cases)
+    out = {
+        "image": doc["image"],
+        "channels": doc["channels"],
+        "iters": doc["iters"],
+        "samples": doc["samples"],
+        "seed": doc["seed"],
+        "workers": doc["workers"],
+        "strip_rows": doc["strip_rows"],
+        "error_bound": round(bound, 6),
+        "decode_ns_per_byte": round(decode, 6),
+        "max_regret": max_regret,
+        "source": "python-model",
+        "cases": cases,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(
+        f"wrote {args.out}: {len(cases)} cases, max regret {max_regret:.2%} "
+        f"(bound {bound:.0%})"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Schema check for BENCH_plan.json (CI smoke + committed file).
+
+Usage: check_plan_schema.py <path> [--full]
+
+Validates the document the rust `blockms plan --out` bench and the
+python model (`python/bench_plan_model.py`) both emit (EXPERIMENTS.md
+section Planner). With --full (the committed / acceptance file), every
+case's planner regret must sit inside the cost model's stated error
+bound — that is the acceptance bar, not a style check — and the matrix
+must be complete: 1024x1024, the paper's three shapes x k in {2,4,8}.
+Without --full (CI quick smoke: single-sample millisecond timings),
+only the schema and internal consistency are enforced; a timing-ratio
+gate on a noisy shared runner would be flaky by construction.
+"""
+
+import json
+import sys
+
+KERNELS = {"naive", "pruned", "fused", "lanes"}
+LAYOUTS = {"interleaved", "soa"}
+SHAPES = {"row", "column", "square"}
+
+META_NUM = [
+    "iters",
+    "samples",
+    "seed",
+    "workers",
+    "strip_rows",
+    "channels",
+    "error_bound",
+    "decode_ns_per_byte",
+    "max_regret",
+]
+CASE_NUM = [
+    "k",
+    "predicted_ns_px_pass",
+    "measured_ns_px_pass",
+    "best_ns_px_pass",
+    "regret",
+    "prediction_error",
+    "refined_ns_px_pass",
+]
+
+
+def fail(msg):
+    print(f"BENCH_plan.json schema check FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    full = "--full" in sys.argv
+    path = args[0] if args else "BENCH_plan.json"
+    with open(path) as f:
+        doc = json.load(f)
+
+    for key in META_NUM:
+        if not isinstance(doc.get(key), (int, float)):
+            fail(f"meta field {key!r} missing or non-numeric")
+    img = doc.get("image")
+    if not (isinstance(img, list) and len(img) == 2):
+        fail("image must be [height, width]")
+    if doc.get("source") not in ("rust", "python-model"):
+        fail(f"unknown source {doc.get('source')!r}")
+    bound = doc["error_bound"]
+    if not 0.0 < bound <= 1.0:
+        fail(f"error_bound {bound} outside (0, 1]")
+
+    cases = doc.get("cases")
+    if not isinstance(cases, list) or not cases:
+        fail("cases missing or empty")
+    seen = set()
+    worst = 0.0
+    for i, c in enumerate(cases):
+        if c.get("shape") not in SHAPES:
+            fail(f"case {i}: bad shape {c.get('shape')!r}")
+        for key in ("picked_kernel", "best_kernel"):
+            if c.get(key) not in KERNELS:
+                fail(f"case {i}: bad {key} {c.get(key)!r}")
+        for key in ("picked_layout", "best_layout"):
+            if c.get(key) not in LAYOUTS:
+                fail(f"case {i}: bad {key} {c.get(key)!r}")
+        for key in CASE_NUM:
+            if not isinstance(c.get(key), (int, float)):
+                fail(f"case {i}: field {key!r} missing or non-numeric")
+        if c["regret"] < 0:
+            fail(f"case {i}: negative regret {c['regret']} (best-of-grid is a minimum)")
+        if not isinstance(c.get("within_bound"), bool):
+            fail(f"case {i}: within_bound missing or non-boolean")
+        if c["within_bound"] != (c["regret"] <= bound):
+            fail(f"case {i}: within_bound inconsistent with regret vs bound")
+        # The acceptance bar (enforced on the full/committed matrix):
+        # auto-selection never costs more than the model's own stated
+        # uncertainty. Quick CI runs time single samples at millisecond
+        # scale, where a ratio gate would be noise-flaky.
+        if full and c["regret"] > bound:
+            fail(
+                f"case {i} ({c['shape']} k={c['k']}): regret {c['regret']:.4f} "
+                f"exceeds the model's stated error bound {bound:.4f}"
+            )
+        worst = max(worst, c["regret"])
+        seen.add((c["shape"], c["k"]))
+    if abs(worst - doc["max_regret"]) > 1e-9:
+        fail(f"max_regret {doc['max_regret']} != worst case regret {worst}")
+
+    if full:
+        if img != [1024, 1024]:
+            fail(f"--full requires a 1024x1024 image, got {img}")
+        want = {(sh, k) for sh in SHAPES for k in (2, 4, 8)}
+        missing = want - seen
+        if missing:
+            fail(f"--full matrix incomplete: missing {sorted(missing)}")
+
+    gate = "<=" if full else "vs"
+    print(
+        f"{path}: schema OK ({len(cases)} cases, source={doc['source']}, "
+        f"max regret {worst:.2%} {gate} bound {bound:.0%})"
+    )
+
+
+if __name__ == "__main__":
+    main()

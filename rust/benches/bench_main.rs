@@ -25,6 +25,7 @@ use blockms::coordinator::{ClusterConfig, Coordinator, CoordinatorConfig, Engine
 use blockms::image::SyntheticOrtho;
 use blockms::kmeans::math;
 use blockms::metrics::time_n;
+use blockms::plan::ExecPlan;
 use blockms::runtime::{find_artifacts_dir, ArtifactSet, KernelEngine};
 use blockms::stripstore::{Backing, StripStore};
 use blockms::util::prng::Rng;
@@ -106,6 +107,7 @@ fn main() {
     micro_kernels(&b);
     kernel_matrix(&b);
     layout_matrix(&b);
+    plan_matrix(&b);
     micro_substrates(&b);
     micro_coordinator(&b);
     paper_tables(&b);
@@ -222,6 +224,37 @@ fn layout_matrix(b: &Bench) {
     }
 }
 
+/// `BENCH_plan.json`: planner-predicted vs measured cost and
+/// pick-vs-best-of-grid regret over the paper's shapes × k ∈ {2, 4, 8}
+/// at 1024² (EXPERIMENTS.md §Planner). `BLOCKMS_PLAN_SIDE` overrides
+/// the image side.
+fn plan_matrix(b: &Bench) {
+    use blockms::bench::plan::{render_plan_bench, write_plan_bench, PlanBenchOpts};
+    let name = "plan/regret_vs_best_of_grid_1024";
+    if !b.enabled(name) {
+        return;
+    }
+    let side = std::env::var("BLOCKMS_PLAN_SIDE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1024usize)
+        .clamp(64, 8192);
+    let opts = PlanBenchOpts {
+        height: side,
+        width: side,
+        ..Default::default()
+    };
+    let out = std::path::Path::new("BENCH_plan.json");
+    match write_plan_bench(out, &opts) {
+        Ok((model, rows)) => {
+            println!("bench {name}:");
+            print!("{}", render_plan_bench(&opts, &model, &rows));
+            println!("wrote {}", out.display());
+        }
+        Err(e) => println!("bench {name} FAILED: {e:#}"),
+    }
+}
+
 fn micro_substrates(b: &Bench) {
     let img = SyntheticOrtho::default().with_seed(1).generate(1024, 1024);
 
@@ -270,9 +303,9 @@ fn micro_substrates(b: &Bench) {
 
 fn micro_coordinator(b: &Bench) {
     let img = Arc::new(SyntheticOrtho::default().with_seed(3).generate(512, 512));
-    let plan = Arc::new(BlockPlan::new(512, 512, BlockShape::Cols { band_cols: 103 }));
+    let shape = BlockShape::Cols { band_cols: 103 };
     let coord = Coordinator::new(CoordinatorConfig {
-        workers: 4,
+        exec: ExecPlan::pinned(shape).with_workers(4),
         ..Default::default()
     });
     let cfg = ClusterConfig {
@@ -281,19 +314,19 @@ fn micro_coordinator(b: &Bench) {
         ..Default::default()
     };
     b.run("micro/coordinator_e2e_512px_3iters_4w", 8, || {
-        std::hint::black_box(coord.cluster(&img, &plan, &cfg).unwrap());
+        std::hint::black_box(coord.cluster(&img, &cfg).unwrap());
     });
 
     if cfg!(feature = "pjrt") && find_artifacts_dir().is_some() {
         let coord_pjrt = Coordinator::new(CoordinatorConfig {
-            workers: 2,
+            exec: ExecPlan::pinned(shape).with_workers(2),
             engine: Engine::Pjrt {
                 artifacts_dir: None,
             },
             ..Default::default()
         });
         b.run("micro/coordinator_e2e_pjrt_512px_3iters_2w", 3, || {
-            std::hint::black_box(coord_pjrt.cluster(&img, &plan, &cfg).unwrap());
+            std::hint::black_box(coord_pjrt.cluster(&img, &cfg).unwrap());
         });
     }
 

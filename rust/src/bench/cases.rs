@@ -23,6 +23,7 @@ use crate::blocks::{ApproachKind, BlockPlan};
 use crate::coordinator::{ClusterConfig, Coordinator, CoordinatorConfig, Schedule};
 use crate::kmeans::kernel::KernelChoice;
 use crate::metrics::time_it;
+use crate::plan::ExecPlan;
 use crate::stripstore::read_amplification;
 use crate::util::fmt::{ratio, secs, Table};
 
@@ -106,7 +107,7 @@ pub fn run_kernel_cases(opts: &SweepOpts, k: usize, workers: usize) -> Result<Ve
     let mut out = Vec::new();
     for (_case_no, _label, approach) in CASES {
         let shape = hero_shape(approach, opts.scale);
-        let plan = Arc::new(BlockPlan::new(workload.height, workload.width, shape));
+        let plan = BlockPlan::new(workload.height, workload.width, shape);
         let ccfg = ClusterConfig {
             k,
             fixed_iters: Some(opts.iters),
@@ -115,15 +116,16 @@ pub fn run_kernel_cases(opts: &SweepOpts, k: usize, workers: usize) -> Result<Ve
         let mut baseline: Option<NaiveBaseline> = None;
         for kernel in KernelChoice::ALL {
             let coord = Coordinator::new(CoordinatorConfig {
-                workers,
+                exec: ExecPlan::pinned(shape)
+                    .with_workers(workers)
+                    .with_kernel(kernel),
                 schedule: Schedule::Static,
-                kernel,
                 ..Default::default()
             });
             // Warmup run to absorb allocator/cache effects, then timed.
-            let _ = coord.cluster(&img, &plan, &ccfg)?;
+            let _ = coord.cluster(&img, &ccfg)?;
             let (result, wall) = {
-                let (r, secs) = time_it(|| coord.cluster(&img, &plan, &ccfg));
+                let (r, secs) = time_it(|| coord.cluster(&img, &ccfg));
                 (r?, secs)
             };
             let (speedup, matches_naive) = match &baseline {

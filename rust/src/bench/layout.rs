@@ -30,6 +30,7 @@ use crate::coordinator::{
 use crate::image::SyntheticOrtho;
 use crate::kmeans::kernel::KernelChoice;
 use crate::kmeans::tile::TileLayout;
+use crate::plan::ExecPlan;
 use crate::util::fmt::Table;
 use crate::util::json::Json;
 
@@ -131,7 +132,7 @@ pub fn run_layout_bench(opts: &LayoutBenchOpts) -> Result<Vec<LayoutBenchRow>> {
     let mut rows = Vec::new();
     for approach in ApproachKind::ALL {
         let shape = BlockShape::paper_default(approach, opts.height, opts.width);
-        let plan = Arc::new(BlockPlan::new(opts.height, opts.width, shape));
+        let plan = BlockPlan::new(opts.height, opts.width, shape);
         for &k in &opts.ks {
             let ccfg = ClusterConfig {
                 k,
@@ -142,13 +143,14 @@ pub fn run_layout_bench(opts: &LayoutBenchOpts) -> Result<Vec<LayoutBenchRow>> {
             let mut baseline: Option<NaiveBaseline> = None;
             for (layout, kernel) in LAYOUT_CELLS {
                 let coord = Coordinator::new(CoordinatorConfig {
-                    workers: opts.workers,
+                    exec: ExecPlan::pinned(shape)
+                        .with_workers(opts.workers)
+                        .with_kernel(kernel)
+                        .with_layout(layout)
+                        .with_strip_cache(opts.cache_strips),
                     // Static: per-worker tiles and pruned bounds stay
                     // warm, and I/O counters are closed-form.
                     schedule: Schedule::Static,
-                    kernel,
-                    layout: Some(layout),
-                    strip_cache: opts.cache_strips,
                     io: IoMode::Strips {
                         strip_rows: opts.strip_rows,
                         file_backed: false,
@@ -159,7 +161,7 @@ pub fn run_layout_bench(opts: &LayoutBenchOpts) -> Result<Vec<LayoutBenchRow>> {
                 let mut result = None;
                 for sample in 0..opts.samples.max(1) + 1 {
                     let t0 = Instant::now();
-                    let out = coord.cluster(&img, &plan, &ccfg)?;
+                    let out = coord.cluster(&img, &ccfg)?;
                     let dt = t0.elapsed().as_secs_f64();
                     if sample > 0 {
                         best = best.min(dt); // sample 0 is warmup

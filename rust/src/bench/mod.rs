@@ -7,6 +7,7 @@
 pub mod cases;
 pub mod kernels;
 pub mod layout;
+pub mod plan;
 pub mod runner;
 pub mod service;
 pub mod tables;
@@ -14,6 +15,7 @@ pub mod workloads;
 
 pub use kernels::{KernelBenchOpts, KernelBenchRow};
 pub use layout::{LayoutBenchOpts, LayoutBenchRow};
+pub use plan::{PlanBenchOpts, PlanBenchRow};
 pub use runner::{ExperimentConfig, ExperimentRow, Runner};
 pub use service::{ServiceBenchOpts, ServiceBenchRow};
 pub use workloads::{paper_sizes, PaperSize, Workload};

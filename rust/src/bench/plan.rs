@@ -1,0 +1,391 @@
+//! Planner benchmark: predicted vs measured cost, and planner regret.
+//!
+//! For every paper shape × k, the planner's candidate grid (kernel ×
+//! layout, with cache/prefetch pinned off so the I/O counters stay
+//! closed-form) is run **for real** through the coordinator over a
+//! strip store. Two honesty numbers per cell land in
+//! `BENCH_plan.json`:
+//!
+//! - **prediction error** — |predicted − measured| / measured for the
+//!   planner's pick; must stay inside the model's stated
+//!   [`CostModel::error_bound`];
+//! - **regret** — measured(pick) / measured(best-of-grid) − 1: how much
+//!   wall time auto-selection leaves on the table vs exhaustively
+//!   trying everything. The acceptance bar is regret ≤ the stated
+//!   error bound (in practice it is far smaller: ranking is much
+//!   easier than absolute prediction).
+//!
+//! The measured pick also flows back through [`CostModel::refine`], so
+//! the JSON records the feedback path working (`refined_ns` moves
+//! toward the measurement).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::layout::shape_key;
+use crate::blocks::{ApproachKind, BlockShape};
+use crate::coordinator::{
+    ClusterConfig, Coordinator, CoordinatorConfig, IoMode, Schedule,
+};
+use crate::image::SyntheticOrtho;
+use crate::kmeans::kernel::KernelChoice;
+use crate::kmeans::tile::TileLayout;
+use crate::plan::{CostModel, ExecPlan, Planner, PlanRequest};
+use crate::util::fmt::Table;
+use crate::util::json::Json;
+
+/// Benchmark shape. Defaults are the acceptance configuration: the
+/// paper's three shapes at 1024², k ∈ {2, 4, 8}.
+#[derive(Clone, Debug)]
+pub struct PlanBenchOpts {
+    pub height: usize,
+    pub width: usize,
+    pub ks: Vec<usize>,
+    /// Fixed Lloyd iterations per run (plus one labeling pass).
+    pub iters: usize,
+    /// Timed repetitions per cell (best reported; one warmup first).
+    pub samples: usize,
+    pub seed: u64,
+    pub workers: usize,
+    pub strip_rows: usize,
+}
+
+impl Default for PlanBenchOpts {
+    fn default() -> Self {
+        PlanBenchOpts {
+            height: 1024,
+            width: 1024,
+            ks: vec![2, 4, 8],
+            iters: 4,
+            samples: 2,
+            seed: 0x9_1A_4E,
+            workers: 4,
+            strip_rows: 64,
+        }
+    }
+}
+
+impl PlanBenchOpts {
+    /// CI smoke configuration — same schema, workflow-step sized.
+    /// Three samples per cell: quick timings are milliseconds, and the
+    /// schema checker's regret gate only applies to full-size runs, but
+    /// wildly noisy numbers would still make the smoke output useless.
+    pub fn quick() -> PlanBenchOpts {
+        PlanBenchOpts {
+            height: 128,
+            width: 128,
+            ks: vec![2],
+            iters: 3,
+            samples: 3,
+            strip_rows: 16,
+            ..Default::default()
+        }
+    }
+}
+
+/// One (shape, k) cell of the regret matrix.
+#[derive(Clone, Debug)]
+pub struct PlanBenchRow {
+    pub approach: ApproachKind,
+    pub k: usize,
+    /// The planner's pick over the measured grid.
+    pub picked: ExecPlan,
+    /// Model prediction for the pick (ns/px/pass).
+    pub predicted_ns: f64,
+    /// Measured wall for the pick (ns/px/pass, best sample).
+    pub measured_ns: f64,
+    /// Best measured cell of the whole grid.
+    pub best_kernel: KernelChoice,
+    pub best_layout: TileLayout,
+    pub best_ns: f64,
+    /// measured(pick) / measured(best) − 1 (0 = the planner found the
+    /// true optimum).
+    pub regret: f64,
+    /// |predicted − measured| / measured for the pick.
+    pub prediction_error: f64,
+    /// The pick's prediction after one [`CostModel::refine`] feedback
+    /// step with the measurement.
+    pub refined_ns: f64,
+}
+
+/// Run the full matrix. See module docs.
+pub fn run_plan_bench(opts: &PlanBenchOpts) -> Result<(CostModel, Vec<PlanBenchRow>)> {
+    let img = Arc::new(
+        SyntheticOrtho::default()
+            .with_seed(opts.seed)
+            .generate(opts.height, opts.width),
+    );
+    let planner = Planner::default();
+    let n_px = (opts.height * opts.width) as f64;
+    let passes = (opts.iters + 1) as f64;
+    let mut model = planner.model().clone();
+    let mut rows = Vec::new();
+    for approach in ApproachKind::ALL {
+        let shape = BlockShape::paper_default(approach, opts.height, opts.width);
+        for &k in &opts.ks {
+            // The candidate grid: kernel × layout free, everything else
+            // pinned (cache/prefetch off keeps the measurement
+            // closed-form and the grid 8 cells).
+            let mut req = PlanRequest::new(opts.height, opts.width, 3, k)
+                .with_rounds(opts.iters)
+                .with_strip_rows(Some(opts.strip_rows));
+            req.shape = Some(shape);
+            req.workers = Some(opts.workers);
+            req.strip_cache = Some(0);
+            req.prefetch = Some(false);
+            let (picked, explain) = planner.resolve(&req);
+
+            let ccfg = ClusterConfig {
+                k,
+                fixed_iters: Some(opts.iters),
+                seed: opts.seed ^ 0xC0FFEE,
+                ..Default::default()
+            };
+            let mut measured: Vec<(ExecPlan, f64)> = Vec::new();
+            for cand in &explain.candidates {
+                let coord = Coordinator::new(CoordinatorConfig {
+                    exec: cand.plan,
+                    schedule: Schedule::Static,
+                    io: IoMode::Strips {
+                        strip_rows: opts.strip_rows,
+                        file_backed: false,
+                    },
+                    ..Default::default()
+                });
+                let mut best = f64::INFINITY;
+                for sample in 0..opts.samples.max(1) + 1 {
+                    let t0 = Instant::now();
+                    let _ = coord.cluster(&img, &ccfg)?;
+                    let dt = t0.elapsed().as_secs_f64();
+                    if sample > 0 {
+                        best = best.min(dt); // sample 0 is warmup
+                    }
+                }
+                measured.push((cand.plan, best * 1e9 / (n_px * passes)));
+            }
+            let (_, measured_ns) = *measured
+                .iter()
+                .find(|(p, _)| *p == picked)
+                .expect("the pick is one of the candidates");
+            let &(best_plan, best_ns) = measured
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite walls"))
+                .expect("non-empty grid");
+            let predicted_ns = explain.chosen().cost.ns_per_pixel_pass;
+
+            // Feedback: fold the measurement into the returned model
+            // (cumulative across cells), but record `refined_ns` as ONE
+            // step from the pristine priors — the per-cell quantity the
+            // python mirror emits, independent of cell order.
+            model.refine(picked.kernel, picked.layout, k, measured_ns);
+            let mut fresh = planner.model().clone();
+            fresh.refine(picked.kernel, picked.layout, k, measured_ns);
+            let refined_ns = fresh.compute_ns_px_pass(picked.kernel, picked.layout, k);
+
+            rows.push(PlanBenchRow {
+                approach,
+                k,
+                picked,
+                predicted_ns,
+                measured_ns,
+                best_kernel: best_plan.kernel,
+                best_layout: best_plan.layout,
+                best_ns,
+                regret: measured_ns / best_ns - 1.0,
+                prediction_error: (predicted_ns - measured_ns).abs() / measured_ns,
+                refined_ns,
+            });
+        }
+    }
+    Ok((model, rows))
+}
+
+/// Serialize the matrix as the `BENCH_plan.json` document.
+pub fn plan_bench_json(
+    opts: &PlanBenchOpts,
+    model: &CostModel,
+    rows: &[PlanBenchRow],
+) -> String {
+    let num = Json::Num;
+    let mut doc = BTreeMap::new();
+    doc.insert(
+        "image".to_string(),
+        Json::Arr(vec![num(opts.height as f64), num(opts.width as f64)]),
+    );
+    doc.insert("channels".to_string(), num(3.0));
+    doc.insert("iters".to_string(), num(opts.iters as f64));
+    doc.insert("samples".to_string(), num(opts.samples as f64));
+    doc.insert("seed".to_string(), num(opts.seed as f64));
+    doc.insert("workers".to_string(), num(opts.workers as f64));
+    doc.insert("strip_rows".to_string(), num(opts.strip_rows as f64));
+    doc.insert("error_bound".to_string(), num(model.error_bound));
+    doc.insert(
+        "decode_ns_per_byte".to_string(),
+        num(model.decode_ns_per_byte),
+    );
+    doc.insert("source".to_string(), Json::Str("rust".to_string()));
+    let max_regret = rows.iter().map(|r| r.regret).fold(0.0, f64::max);
+    doc.insert("max_regret".to_string(), num(max_regret));
+    let cases = rows
+        .iter()
+        .map(|r| {
+            let mut c = BTreeMap::new();
+            c.insert(
+                "shape".to_string(),
+                Json::Str(shape_key(r.approach).to_string()),
+            );
+            c.insert("k".to_string(), num(r.k as f64));
+            c.insert(
+                "picked_kernel".to_string(),
+                Json::Str(r.picked.kernel.label().to_string()),
+            );
+            c.insert(
+                "picked_layout".to_string(),
+                Json::Str(r.picked.layout.label().to_string()),
+            );
+            c.insert("predicted_ns_px_pass".to_string(), num(r.predicted_ns));
+            c.insert("measured_ns_px_pass".to_string(), num(r.measured_ns));
+            c.insert(
+                "best_kernel".to_string(),
+                Json::Str(r.best_kernel.label().to_string()),
+            );
+            c.insert(
+                "best_layout".to_string(),
+                Json::Str(r.best_layout.label().to_string()),
+            );
+            c.insert("best_ns_px_pass".to_string(), num(r.best_ns));
+            c.insert("regret".to_string(), num(r.regret));
+            c.insert("prediction_error".to_string(), num(r.prediction_error));
+            c.insert("refined_ns_px_pass".to_string(), num(r.refined_ns));
+            c.insert(
+                "within_bound".to_string(),
+                Json::Bool(r.regret <= model.error_bound),
+            );
+            Json::Obj(c)
+        })
+        .collect();
+    doc.insert("cases".to_string(), Json::Arr(cases));
+    Json::Obj(doc).to_string()
+}
+
+/// Run the matrix and write `BENCH_plan.json` to `path`.
+pub fn write_plan_bench(
+    path: &Path,
+    opts: &PlanBenchOpts,
+) -> Result<(CostModel, Vec<PlanBenchRow>)> {
+    let (model, rows) = run_plan_bench(opts)?;
+    std::fs::write(path, plan_bench_json(opts, &model, &rows))
+        .with_context(|| format!("write plan bench to {}", path.display()))?;
+    Ok((model, rows))
+}
+
+/// Human-readable rendering of the matrix.
+pub fn render_plan_bench(
+    opts: &PlanBenchOpts,
+    model: &CostModel,
+    rows: &[PlanBenchRow],
+) -> String {
+    let mut t = Table::new(format!(
+        "Planner regret: {}x{}, {} iters, {} workers, strips of {} rows (model ±{:.0}%)",
+        opts.width,
+        opts.height,
+        opts.iters,
+        opts.workers,
+        opts.strip_rows,
+        100.0 * model.error_bound
+    ))
+    .header(&[
+        "Shape", "K", "Pick", "Pred ns", "Meas ns", "Best", "Best ns", "Regret", "Pred err",
+    ]);
+    for r in rows {
+        t.row(vec![
+            shape_key(r.approach).to_string(),
+            r.k.to_string(),
+            format!("{}/{}", r.picked.kernel, r.picked.layout),
+            format!("{:.2}", r.predicted_ns),
+            format!("{:.2}", r.measured_ns),
+            format!("{}/{}", r.best_kernel, r.best_layout),
+            format!("{:.2}", r.best_ns),
+            format!("{:+.1}%", 100.0 * r.regret),
+            format!("{:.1}%", 100.0 * r.prediction_error),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> PlanBenchOpts {
+        PlanBenchOpts {
+            height: 40,
+            width: 36,
+            ks: vec![2],
+            iters: 2,
+            samples: 1,
+            workers: 2,
+            strip_rows: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn matrix_covers_shapes_and_reports_consistent_regret() {
+        let (model, rows) = run_plan_bench(&tiny()).unwrap();
+        assert_eq!(rows.len(), 3); // 3 shapes x 1 k
+        for r in &rows {
+            assert!(r.measured_ns > 0.0 && r.best_ns > 0.0);
+            assert!(r.regret >= 0.0, "regret is vs the grid minimum");
+            assert!(
+                r.measured_ns >= r.best_ns,
+                "pick cannot beat the grid best it belongs to"
+            );
+            assert!(r.refined_ns > 0.0);
+        }
+        assert!(model.error_bound > 0.0);
+    }
+
+    #[test]
+    fn json_has_schema() {
+        let opts = tiny();
+        let (model, rows) = run_plan_bench(&opts).unwrap();
+        let text = plan_bench_json(&opts, &model, &rows);
+        let doc = Json::parse(&text).expect("valid json");
+        assert!(doc.get("error_bound").and_then(Json::as_f64).is_some());
+        assert!(doc.get("max_regret").and_then(Json::as_f64).is_some());
+        let cases = doc.get("cases").and_then(Json::as_arr).expect("cases");
+        assert_eq!(cases.len(), rows.len());
+        for c in cases {
+            for key in ["shape", "picked_kernel", "picked_layout", "best_kernel", "best_layout"] {
+                assert!(c.get(key).and_then(Json::as_str).is_some(), "{key}");
+            }
+            for key in [
+                "k",
+                "predicted_ns_px_pass",
+                "measured_ns_px_pass",
+                "best_ns_px_pass",
+                "regret",
+                "prediction_error",
+                "refined_ns_px_pass",
+            ] {
+                assert!(c.get(key).and_then(Json::as_f64).is_some(), "{key}");
+            }
+            assert!(c.get("within_bound").and_then(Json::as_bool).is_some());
+        }
+    }
+
+    #[test]
+    fn write_creates_the_file() {
+        let path = std::env::temp_dir().join("blockms_test_BENCH_plan.json");
+        let (_, rows) = write_plan_bench(&path, &tiny()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        assert_eq!(rows.len(), 3);
+        let _ = std::fs::remove_file(&path);
+    }
+}

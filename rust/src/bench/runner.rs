@@ -13,7 +13,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::workloads::Workload;
-use crate::blocks::{BlockPlan, BlockShape};
+use crate::blocks::BlockShape;
 use crate::coordinator::{
     ClusterConfig, ClusterMode, Coordinator, CoordinatorConfig, Engine, IoMode, RoundRecord,
     Schedule,
@@ -21,6 +21,7 @@ use crate::coordinator::{
 use crate::image::Raster;
 use crate::kmeans::kernel::KernelChoice;
 use crate::metrics::Speedup;
+use crate::plan::ExecPlan;
 use crate::simtime::{SimParams, WorkerSim};
 
 /// Full description of one experiment cell (one table row at one worker
@@ -191,9 +192,12 @@ impl Runner {
             return Ok(c.clone());
         }
         let img = self.image(&cfg.workload);
-        let plan = Arc::new(BlockPlan::new(img.height(), img.width(), cfg.shape));
         let coord = Coordinator::new(CoordinatorConfig {
-            workers: 1,
+            // Calibration measures per-block costs undisturbed: one
+            // worker, the cell's pinned shape and kernel.
+            exec: ExecPlan::pinned(cfg.shape)
+                .with_workers(1)
+                .with_kernel(cfg.kernel),
             engine: cfg.engine.to_engine(),
             mode: cfg.mode,
             io: IoMode::Strips {
@@ -201,7 +205,6 @@ impl Runner {
                 file_backed: false,
             },
             schedule: cfg.schedule,
-            kernel: cfg.kernel,
             ..Default::default()
         });
         let ccfg = ClusterConfig {
@@ -209,7 +212,7 @@ impl Runner {
             fixed_iters: Some(cfg.iters),
             ..Default::default()
         };
-        let out = coord.cluster(&img, &plan, &ccfg)?;
+        let out = coord.cluster(&img, &ccfg)?;
         // Exclude worker startup (spawn_secs): the paper times processing
         // with the parpool already up.
         let (leader_fixed, leader_per_round) =

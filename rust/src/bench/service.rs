@@ -24,12 +24,13 @@ use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::blocks::{BlockPlan, BlockShape};
+use crate::blocks::BlockShape;
 use crate::coordinator::{
     ClusterConfig, ClusterOutput, Coordinator, CoordinatorConfig, Schedule,
 };
 use crate::image::{Raster, SyntheticOrtho};
 use crate::kmeans::kernel::KernelChoice;
+use crate::plan::ExecPlan;
 use crate::service::{ClusterServer, JobSpec, ServerConfig};
 use crate::util::fmt::Table;
 use crate::util::json::Json;
@@ -94,17 +95,17 @@ pub struct ServiceBenchRow {
     pub matches_solo: bool,
 }
 
-fn job_spec(opts: &ServiceBenchOpts, images: &[Arc<Raster>], j: usize) -> JobSpec {
-    let img = Arc::clone(&images[j]);
+/// One resolved plan shared by every job of the bench (and the solo
+/// reference run, which must be bit-identical).
+fn bench_exec(opts: &ServiceBenchOpts) -> ExecPlan {
     let side = (opts.height.min(opts.width) / 4).max(8);
-    let plan = Arc::new(BlockPlan::new(
-        img.height(),
-        img.width(),
-        BlockShape::Square { side },
-    ));
+    ExecPlan::pinned(BlockShape::Square { side }).with_kernel(opts.kernel)
+}
+
+fn job_spec(opts: &ServiceBenchOpts, images: &[Arc<Raster>], j: usize) -> JobSpec {
     JobSpec::new(
-        img,
-        plan,
+        Arc::clone(&images[j]),
+        bench_exec(opts),
         ClusterConfig {
             k: opts.k,
             seed: opts.seed.wrapping_add(j as u64),
@@ -112,18 +113,16 @@ fn job_spec(opts: &ServiceBenchOpts, images: &[Arc<Raster>], j: usize) -> JobSpe
             ..Default::default()
         },
     )
-    .with_kernel(opts.kernel)
 }
 
 fn solo_reference(opts: &ServiceBenchOpts, images: &[Arc<Raster>]) -> Result<ClusterOutput> {
     let spec = job_spec(opts, images, 0);
     let coord = Coordinator::new(CoordinatorConfig {
-        workers: 1,
+        exec: spec.exec.with_workers(1),
         schedule: opts.schedule,
-        kernel: opts.kernel,
         ..Default::default()
     });
-    coord.cluster(&spec.image, &spec.plan, &spec.cluster)
+    coord.cluster(&spec.image, &spec.cluster)
 }
 
 /// Run the full (pool × batch) matrix.

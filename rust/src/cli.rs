@@ -20,6 +20,7 @@ use crate::util::config::Config;
 /// Every subcommand the binary dispatches on.
 pub const SUBCOMMANDS: &[&str] = &[
     "cluster",
+    "plan",
     "paper-tables",
     "cases",
     "sweep",
@@ -44,7 +45,7 @@ pub fn blockms_cli() -> Cli {
         .opt("height", Some("800"), "synthetic image height")
         .opt("seed", Some("7"), "workload / init seed")
         .opt("input", None, "input PPM instead of synthetic scene")
-        .opt("out", None, "output path (cluster: label map PPM; kernels/batch: JSON; sweep: CSV)")
+        .opt("out", None, "output path (cluster: label map PPM; kernels/batch/plan: JSON; sweep: CSV)")
         .opt("out-input", None, "also write the input scene PPM here")
         .opt("engine", Some("native"), "compute engine: native|pjrt")
         .opt("kernel", Some("naive"), "compute kernel: naive|pruned|fused|lanes")
@@ -65,8 +66,17 @@ pub fn blockms_cli() -> Cli {
         .opt("batches", Some("1,4,16"), "batch: comma-separated batch sizes")
         .flag("serial", "cluster: also run the sequential baseline and compare")
         .flag("prefetch", "overlap next-block reads with compute (double buffering)")
-        .flag("quick", "layout: CI-sized matrix (pins image side, ks, iters)")
-        .flag("verbose", "more logging")
+        .flag("quick", "layout/plan: CI-sized matrix (pins image size, ks, iters)")
+        .flag(
+            "auto",
+            "cluster/serve/plan: planner picks every knob not explicitly pinned \
+             (typed flags constrain the search; results stay bit-identical)",
+        )
+        .flag(
+            "dry-run",
+            "cluster: resolve and print the execution plan, read no pixels, exit 0",
+        )
+        .flag("verbose", "more logging (plan: full candidate table)")
 }
 
 /// Merge `--config file` under the CLI args for a single typed lookup.
@@ -120,6 +130,32 @@ impl<'a> Opts<'a> {
         self.parse(cli_key, cfg_key)?.ok_or_else(|| {
             anyhow::Error::new(CliError::MissingRequired(cli_key.to_string()))
         })
+    }
+
+    /// A knob's *pin*: `Some` only when the user typed the flag or the
+    /// config file sets the key — a spec default is not a pin. A typed
+    /// flag beats the config; a config key beats nothing (the spec
+    /// default never shadows it here, unlike [`Opts::get`]). Under
+    /// `--auto` the planner chooses every `None`; without `--auto`,
+    /// callers fall back to [`Opts::require`]'s defaulted value.
+    pub fn pinned<T: std::str::FromStr>(&self, cli_key: &str, cfg_key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        if self.args.provided(cli_key) {
+            return self.parse(cli_key, cfg_key);
+        }
+        match self.config.get(cfg_key) {
+            None => Ok(None),
+            Some(raw) => match raw.parse::<T>() {
+                Ok(v) => Ok(Some(v)),
+                Err(e) => Err(anyhow::Error::new(CliError::BadValue(
+                    cli_key.to_string(),
+                    raw.to_string(),
+                    e.to_string(),
+                ))),
+            },
+        }
     }
 }
 
@@ -176,6 +212,45 @@ mod tests {
             let cli = err.downcast_ref::<CliError>().expect("CliError");
             assert!(matches!(cli, CliError::BadValue(flag, ..) if flag == "pools"), "{bad:?}");
         }
+    }
+
+    #[test]
+    fn pinned_distinguishes_typed_from_default() {
+        let cli = blockms_cli();
+        let args = cli.parse(vec!["cluster", "--kernel", "lanes"]).unwrap();
+        let opts = Opts::load(&args).unwrap();
+        assert_eq!(
+            opts.pinned::<String>("kernel", "run.kernel").unwrap().as_deref(),
+            Some("lanes")
+        );
+        // the spec default --k 2 is a value but not a pin
+        assert_eq!(opts.pinned::<usize>("k", "cluster.k").unwrap(), None);
+        assert_eq!(opts.require::<usize>("k", "cluster.k").unwrap(), 2);
+    }
+
+    #[test]
+    fn pinned_config_key_wins_over_spec_default() {
+        // A config-file key is a pin with the CONFIG's value — the CLI
+        // spec default must not shadow it (a typed flag still would).
+        let cli = blockms_cli();
+        let args = cli.parse(vec!["cluster"]).unwrap();
+        let config = Config::parse("[run]\nkernel = lanes\nworkers = 7").unwrap();
+        let opts = Opts { args: &args, config };
+        assert_eq!(
+            opts.pinned::<String>("kernel", "run.kernel").unwrap().as_deref(),
+            Some("lanes")
+        );
+        assert_eq!(opts.pinned::<usize>("workers", "run.workers").unwrap(), Some(7));
+        let typed = cli.parse(vec!["cluster", "--kernel", "pruned"]).unwrap();
+        let opts = Opts {
+            args: &typed,
+            config: Config::parse("[run]\nkernel = lanes").unwrap(),
+        };
+        assert_eq!(
+            opts.pinned::<String>("kernel", "run.kernel").unwrap().as_deref(),
+            Some("pruned"),
+            "typed flag beats config"
+        );
     }
 
     #[test]

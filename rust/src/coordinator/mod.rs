@@ -45,9 +45,8 @@ use anyhow::{Context, Result};
 
 use crate::blocks::BlockPlan;
 use crate::image::Raster;
-use crate::kmeans::kernel::KernelChoice;
-use crate::kmeans::tile::TileLayout;
 use crate::kmeans::{InitMethod, KMeansConfig, SeqKMeans};
+use crate::plan::ExecPlan;
 use crate::runtime::BackendSpec;
 use crate::stripstore::{Backing, StripStore};
 
@@ -162,65 +161,28 @@ impl ClusterConfig {
     }
 }
 
-/// Coordinator configuration.
-#[derive(Clone, Debug)]
+/// Coordinator configuration: the resolved [`ExecPlan`] (block shape,
+/// worker count, kernel, layout, arena, prefetch, strip cache) plus the
+/// run-environment choices the planner does not select among (engine,
+/// clustering mode, I/O model, schedule).
+///
+/// There is deliberately no kernel/layout/cache field here any more —
+/// entry points resolve everything into `exec` up front (usually via
+/// [`crate::plan::Planner::resolve`]) and the coordinator consumes only
+/// that. Prefetch caveat: mispredicted read-aheads show up in the I/O
+/// counters, so closed-form `AccessStats` assertions only hold with
+/// `exec.prefetch` off. Pruned kernels keep per-(job, block) state on
+/// the workers, so [`Schedule::Static`] keeps it warmest.
+#[derive(Clone, Debug, Default)]
 pub struct CoordinatorConfig {
-    /// Worker thread count (paper: 2, 4, 8).
-    pub workers: usize,
+    /// The resolved execution plan this run follows.
+    pub exec: ExecPlan,
     pub engine: Engine,
     pub mode: ClusterMode,
     pub io: IoMode,
     pub schedule: Schedule,
-    /// Compute kernel for step/assign rounds (naive, pruned, fused,
-    /// lanes — bit-identical results, different wall-clock; see
-    /// [`crate::kmeans::kernel`]). Pruned state lives per (job, block)
-    /// on the workers, so [`Schedule::Static`] keeps it warmest.
-    pub kernel: KernelChoice,
-    /// Block layout across rounds: `None` resolves to the kernel's
-    /// native shape (SoA for lanes, interleaved otherwise). With
-    /// [`TileLayout::Soa`], workers fill a planar tile per (job, block)
-    /// **once per job** and reuse it every round (the seed re-read the
-    /// strip span per block per round).
-    pub layout: Option<TileLayout>,
-    /// Per-worker tile-arena byte budget in MiB (SoA layout). Blocks
-    /// whose tiles don't fit spill back to per-round re-reads.
-    pub arena_mb: usize,
-    /// Overlap the next queued block's read with the current block's
-    /// compute via a per-worker sidecar reader (double buffering).
-    /// Note: mispredicted read-aheads show up in the I/O counters, so
-    /// closed-form `AccessStats` assertions only hold with this off.
-    pub prefetch: bool,
-    /// Shared decoded-strip LRU capacity, in strips (0 = no cache).
-    /// Only meaningful with [`IoMode::Strips`].
-    pub strip_cache: usize,
     /// Fault injection for tests: block index whose processing fails.
     pub fail_block: Option<usize>,
-}
-
-impl Default for CoordinatorConfig {
-    fn default() -> Self {
-        CoordinatorConfig {
-            workers: 4,
-            engine: Engine::Native,
-            mode: ClusterMode::Global,
-            io: IoMode::Direct,
-            schedule: Schedule::Dynamic,
-            kernel: KernelChoice::Naive,
-            layout: None,
-            arena_mb: 256,
-            prefetch: false,
-            strip_cache: 0,
-            fail_block: None,
-        }
-    }
-}
-
-impl CoordinatorConfig {
-    /// The concrete layout this configuration runs: the explicit choice,
-    /// or the kernel's native shape.
-    pub fn resolved_layout(&self) -> TileLayout {
-        self.layout.unwrap_or_else(|| self.kernel.default_layout())
-    }
 }
 
 /// Per-block cost attribution for one round.
@@ -434,7 +396,7 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Coordinator {
-        assert!(cfg.workers > 0, "need at least one worker");
+        assert!(cfg.exec.workers > 0, "need at least one worker");
         Coordinator { cfg }
     }
 
@@ -442,21 +404,19 @@ impl Coordinator {
         &self.cfg
     }
 
-    /// Cluster `img` using the parallel block pipeline over `plan`.
-    pub fn cluster(
-        &self,
-        img: &Arc<Raster>,
-        plan: &Arc<BlockPlan>,
-        ccfg: &ClusterConfig,
-    ) -> Result<ClusterOutput> {
-        anyhow::ensure!(
-            plan.height() == img.height() && plan.width() == img.width(),
-            "plan {}x{} does not match image {}x{}",
-            plan.height(),
-            plan.width(),
-            img.height(),
-            img.width()
-        );
+    /// The block tiling this coordinator's plan yields for an image —
+    /// derived from [`ExecPlan::shape`], so the solo path, the service,
+    /// and any test asserting on block counts all see the same plan.
+    pub fn block_plan(&self, img: &Raster) -> BlockPlan {
+        self.cfg.exec.block_plan(img.height(), img.width())
+    }
+
+    /// Cluster `img` using the parallel block pipeline under this
+    /// coordinator's resolved [`ExecPlan`] (the block tiling is derived
+    /// from the plan's shape — there is no separate plan argument to
+    /// drift out of sync).
+    pub fn cluster(&self, img: &Arc<Raster>, ccfg: &ClusterConfig) -> Result<ClusterOutput> {
+        let plan = Arc::new(self.block_plan(img));
         let t0 = std::time::Instant::now();
 
         // Shared init draw — identical to the sequential baseline's.
@@ -477,30 +437,27 @@ impl Coordinator {
                     Backing::Memory
                 };
                 let mut store = StripStore::new(img, *strip_rows, backing)?;
-                store.enable_cache(self.cfg.strip_cache);
+                store.enable_cache(self.cfg.exec.strip_cache);
                 let store = Arc::new(store);
                 (BlockSource::Strips(Arc::clone(&store)), Some(store))
             }
         };
 
         let ctx = Arc::new(WorkerContext {
-            plan: Arc::clone(plan),
+            plan: Arc::clone(&plan),
             source,
             backend: self.cfg.engine.backend_spec(ccfg.k, img.channels())?,
             fail_block: self.cfg.fail_block,
             local_mode: self.cfg.mode == ClusterMode::Local,
-            kernel: self.cfg.kernel,
-            layout: self.cfg.resolved_layout(),
-            arena_bytes: self.cfg.arena_mb << 20,
-            prefetch: self.cfg.prefetch,
+            exec: self.cfg.exec,
         });
-        let pool = WorkerPool::spawn(self.cfg.workers, self.cfg.schedule);
+        let pool = WorkerPool::spawn(self.cfg.exec.workers, self.cfg.schedule);
         pool.register_job(SOLO_JOB, ctx);
         let spawn_secs = pool.warmup(SOLO_JOB)?;
 
         let mut machine = RunMachine::new(
             self.cfg.mode,
-            Arc::clone(plan),
+            Arc::clone(&plan),
             img.channels(),
             ccfg,
             init_centroids,
@@ -521,7 +478,7 @@ impl Coordinator {
             spawn_secs,
             store.map(|s| s.stats().snapshot()),
             plan.len(),
-            self.cfg.workers,
+            self.cfg.exec.workers,
         ))
     }
 
@@ -540,13 +497,13 @@ impl Coordinator {
                         img.channels(),
                         &ccfg.kmeans(),
                         n,
-                        self.cfg.kernel,
+                        self.cfg.exec.kernel,
                     ),
                     None => SeqKMeans::run_with(
                         img.as_pixels(),
                         img.channels(),
                         &ccfg.kmeans(),
-                        self.cfg.kernel,
+                        self.cfg.exec.kernel,
                     ),
                 };
                 Ok(ClusterOutput {
@@ -565,56 +522,70 @@ impl Coordinator {
                 })
             }
             Engine::Pjrt { .. } => {
-                let whole = Arc::new(BlockPlan::new(
-                    img.height(),
-                    img.width(),
-                    crate::blocks::BlockShape::Custom {
-                        rows: img.height(),
-                        cols: img.width(),
-                    },
-                ));
+                // One whole-image block on one worker: the same engine,
+                // no coordination.
+                let whole = crate::blocks::BlockShape::Custom {
+                    rows: img.height(),
+                    cols: img.width(),
+                };
                 let serial_coord = Coordinator::new(CoordinatorConfig {
-                    workers: 1,
+                    exec: self.cfg.exec.with_shape(whole).with_workers(1),
                     mode: ClusterMode::Global,
                     io: IoMode::Direct,
                     ..self.cfg.clone()
                 });
-                serial_coord.cluster(img, &whole, ccfg)
+                serial_coord.cluster(img, ccfg)
             }
         }
     }
 }
 
-// Re-export the access snapshot and tile layout so callers don't need
-// the stripstore / kmeans paths.
-pub use crate::stripstore::AccessSnapshot;
+// Re-export the access snapshot, tile layout, and execution plan so
+// callers don't need the stripstore / kmeans / plan paths.
 pub use crate::kmeans::tile::TileLayout as BlockLayout;
+pub use crate::plan::ExecPlan as Plan;
+pub use crate::stripstore::AccessSnapshot;
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::blocks::BlockShape;
     use crate::image::SyntheticOrtho;
+    use crate::kmeans::kernel::KernelChoice;
+    use crate::kmeans::tile::TileLayout;
 
-    fn setup(h: usize, w: usize, side: usize) -> (Arc<Raster>, Arc<BlockPlan>) {
-        let img = Arc::new(SyntheticOrtho::default().with_seed(21).generate(h, w));
-        let plan = Arc::new(BlockPlan::new(h, w, BlockShape::Square { side }));
-        (img, plan)
+    fn image(h: usize, w: usize) -> Arc<Raster> {
+        Arc::new(SyntheticOrtho::default().with_seed(21).generate(h, w))
+    }
+
+    fn square(side: usize) -> BlockShape {
+        BlockShape::Square { side }
+    }
+
+    fn cfg(shape: BlockShape, workers: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            exec: ExecPlan::pinned(shape).with_workers(workers),
+            ..Default::default()
+        }
+    }
+
+    fn strips(rows: usize) -> IoMode {
+        IoMode::Strips {
+            strip_rows: rows,
+            file_backed: false,
+        }
     }
 
     #[test]
     fn global_mode_equals_sequential_exactly() {
-        let (img, plan) = setup(60, 50, 17);
+        let img = image(60, 50);
         for k in [2, 4] {
             let ccfg = ClusterConfig {
                 k,
                 ..Default::default()
             };
-            let coord = Coordinator::new(CoordinatorConfig {
-                workers: 3,
-                ..Default::default()
-            });
-            let par = coord.cluster(&img, &plan, &ccfg).unwrap();
+            let coord = Coordinator::new(cfg(square(17), 3));
+            let par = coord.cluster(&img, &ccfg).unwrap();
             let seq = coord.serial(&img, &ccfg).unwrap();
             assert_eq!(par.labels, seq.labels, "k={k}: labels differ");
             assert_eq!(par.centroids, seq.centroids, "k={k}: centroids differ");
@@ -626,18 +597,15 @@ mod tests {
 
     #[test]
     fn worker_count_does_not_change_results() {
-        let (img, plan) = setup(40, 45, 13);
+        let img = image(40, 45);
         let ccfg = ClusterConfig {
             k: 4,
             ..Default::default()
         };
         let mut outputs = Vec::new();
         for workers in [1, 2, 5] {
-            let coord = Coordinator::new(CoordinatorConfig {
-                workers,
-                ..Default::default()
-            });
-            outputs.push(coord.cluster(&img, &plan, &ccfg).unwrap());
+            let coord = Coordinator::new(cfg(square(13), workers));
+            outputs.push(coord.cluster(&img, &ccfg).unwrap());
         }
         assert_eq!(outputs[0].labels, outputs[1].labels);
         assert_eq!(outputs[1].labels, outputs[2].labels);
@@ -646,20 +614,20 @@ mod tests {
 
     #[test]
     fn block_shape_does_not_change_global_results() {
-        let (img, _) = setup(48, 36, 1);
+        let img = image(48, 36);
         let ccfg = ClusterConfig {
             k: 2,
             ..Default::default()
         };
-        let coord = Coordinator::new(CoordinatorConfig::default());
         let mut first: Option<ClusterOutput> = None;
         for shape in [
             BlockShape::Rows { band_rows: 10 },
             BlockShape::Cols { band_cols: 7 },
             BlockShape::Square { side: 16 },
         ] {
-            let plan = Arc::new(BlockPlan::new(48, 36, shape));
-            let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+            let out = Coordinator::new(cfg(shape, 4))
+                .cluster(&img, &ccfg)
+                .unwrap();
             if let Some(f) = &first {
                 assert_eq!(f.labels, out.labels, "{shape} diverged");
                 assert_eq!(f.centroids, out.centroids);
@@ -671,7 +639,7 @@ mod tests {
 
     #[test]
     fn pruned_and_fused_kernels_match_naive_globally() {
-        let (img, plan) = setup(52, 44, 15);
+        let img = image(52, 44);
         for schedule in [Schedule::Static, Schedule::Dynamic] {
             for k in [2usize, 4] {
                 let ccfg = ClusterConfig {
@@ -679,20 +647,18 @@ mod tests {
                     ..Default::default()
                 };
                 let naive = Coordinator::new(CoordinatorConfig {
-                    workers: 3,
                     schedule,
-                    ..Default::default()
+                    ..cfg(square(15), 3)
                 })
-                .cluster(&img, &plan, &ccfg)
+                .cluster(&img, &ccfg)
                 .unwrap();
                 for kernel in [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes] {
                     let coord = Coordinator::new(CoordinatorConfig {
-                        workers: 3,
+                        exec: ExecPlan::pinned(square(15)).with_workers(3).with_kernel(kernel),
                         schedule,
-                        kernel,
                         ..Default::default()
                     });
-                    let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+                    let out = coord.cluster(&img, &ccfg).unwrap();
                     assert_eq!(out.labels, naive.labels, "k={k} {kernel} {schedule:?}");
                     assert_eq!(out.centroids, naive.centroids, "k={k} {kernel} {schedule:?}");
                     assert_eq!(out.iterations, naive.iterations);
@@ -708,21 +674,18 @@ mod tests {
 
     #[test]
     fn strip_io_counts_accesses() {
-        let (img, plan) = setup(40, 30, 12);
+        let img = image(40, 30);
         let ccfg = ClusterConfig {
             k: 2,
             fixed_iters: Some(3),
             ..Default::default()
         };
         let coord = Coordinator::new(CoordinatorConfig {
-            workers: 2,
-            io: IoMode::Strips {
-                strip_rows: 8,
-                file_backed: false,
-            },
-            ..Default::default()
+            io: strips(8),
+            ..cfg(square(12), 2)
         });
-        let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+        let plan = coord.block_plan(&img);
+        let out = coord.cluster(&img, &ccfg).unwrap();
         let stats = out.io_stats.expect("strip mode must report stats");
         // 3 step rounds + 1 assign round = 4 passes over all blocks
         let (per_pass, _, _) = crate::stripstore::read_amplification(&plan, 8);
@@ -735,27 +698,27 @@ mod tests {
         // The acceptance invariant of the tile arena: with the SoA
         // layout and a budget that fits every tile, the strip store is
         // touched once per block per JOB, not once per block per round.
-        let (img, plan) = setup(40, 30, 12);
+        let img = image(40, 30);
         let ccfg = ClusterConfig {
             k: 2,
             fixed_iters: Some(3),
             ..Default::default()
         };
         let coord = Coordinator::new(CoordinatorConfig {
-            workers: 2,
-            kernel: KernelChoice::Lanes, // resolves to TileLayout::Soa
+            // Lanes resolves to TileLayout::Soa.
+            exec: ExecPlan::pinned(square(12))
+                .with_workers(2)
+                .with_kernel(KernelChoice::Lanes),
             // Static: block ownership is stable across rounds, so each
             // per-worker arena fills its blocks exactly once. (Dynamic
             // migration would refill on the new worker — correct, just
             // not closed-form.)
             schedule: Schedule::Static,
-            io: IoMode::Strips {
-                strip_rows: 8,
-                file_backed: false,
-            },
+            io: strips(8),
             ..Default::default()
         });
-        let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+        let plan = coord.block_plan(&img);
+        let out = coord.cluster(&img, &ccfg).unwrap();
         let stats = out.io_stats.expect("strip mode must report stats");
         // 3 step rounds + 1 assign round, but every block is filled once.
         let (per_pass, _, _) = crate::stripstore::read_amplification(&plan, 8);
@@ -763,11 +726,10 @@ mod tests {
         assert_eq!(stats.block_reads as usize, plan.len());
         // …and the result is still bit-identical to the naive seed path.
         let naive = Coordinator::new(CoordinatorConfig {
-            workers: 2,
             schedule: Schedule::Static,
-            ..Default::default()
+            ..cfg(square(12), 2)
         })
-        .cluster(&img, &plan, &ccfg)
+        .cluster(&img, &ccfg)
         .unwrap();
         assert_eq!(out.labels, naive.labels);
         assert_eq!(out.centroids, naive.centroids);
@@ -775,24 +737,23 @@ mod tests {
 
     #[test]
     fn zero_arena_budget_spills_to_per_round_reads() {
-        let (img, plan) = setup(40, 30, 12);
+        let img = image(40, 30);
         let ccfg = ClusterConfig {
             k: 2,
             fixed_iters: Some(3),
             ..Default::default()
         };
         let coord = Coordinator::new(CoordinatorConfig {
-            workers: 2,
-            kernel: KernelChoice::Lanes,
+            exec: ExecPlan::pinned(square(12))
+                .with_workers(2)
+                .with_kernel(KernelChoice::Lanes)
+                .with_arena_mb(0), // nothing fits: every fill spills
             schedule: Schedule::Static,
-            arena_mb: 0, // nothing fits: every fill spills
-            io: IoMode::Strips {
-                strip_rows: 8,
-                file_backed: false,
-            },
+            io: strips(8),
             ..Default::default()
         });
-        let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+        let plan = coord.block_plan(&img);
+        let out = coord.cluster(&img, &ccfg).unwrap();
         let stats = out.io_stats.expect("strip mode must report stats");
         let (per_pass, _, _) = crate::stripstore::read_amplification(&plan, 8);
         assert_eq!(stats.strip_reads as usize, per_pass * 4); // seed behaviour
@@ -803,22 +764,23 @@ mod tests {
     fn soa_layout_is_bit_identical_for_interleaved_kernels() {
         // Forcing the arena under naive/pruned kernels changes only the
         // I/O shape (fill once, rematerialize per round) — never values.
-        let (img, plan) = setup(52, 44, 15);
+        let img = image(52, 44);
         let ccfg = ClusterConfig {
             k: 4,
             ..Default::default()
         };
-        let naive = Coordinator::new(CoordinatorConfig::default())
-            .cluster(&img, &plan, &ccfg)
+        let naive = Coordinator::new(cfg(square(15), 4))
+            .cluster(&img, &ccfg)
             .unwrap();
         for kernel in [KernelChoice::Naive, KernelChoice::Pruned] {
             let out = Coordinator::new(CoordinatorConfig {
-                workers: 3,
-                kernel,
-                layout: Some(TileLayout::Soa),
+                exec: ExecPlan::pinned(square(15))
+                    .with_workers(3)
+                    .with_kernel(kernel)
+                    .with_layout(TileLayout::Soa),
                 ..Default::default()
             })
-            .cluster(&img, &plan, &ccfg)
+            .cluster(&img, &ccfg)
             .unwrap();
             assert_eq!(out.labels, naive.labels, "{kernel}");
             assert_eq!(out.centroids, naive.centroids, "{kernel}");
@@ -827,36 +789,30 @@ mod tests {
 
     #[test]
     fn prefetch_changes_timing_not_values() {
-        let (img, plan) = setup(48, 40, 11);
+        let img = image(48, 40);
         let ccfg = ClusterConfig {
             k: 4,
             ..Default::default()
         };
         for schedule in [Schedule::Static, Schedule::Dynamic] {
             let plain = Coordinator::new(CoordinatorConfig {
-                workers: 2,
                 schedule,
-                io: IoMode::Strips {
-                    strip_rows: 8,
-                    file_backed: false,
-                },
-                ..Default::default()
+                io: strips(8),
+                ..cfg(square(11), 2)
             })
-            .cluster(&img, &plan, &ccfg)
+            .cluster(&img, &ccfg)
             .unwrap();
             for kernel in [KernelChoice::Naive, KernelChoice::Lanes] {
                 let out = Coordinator::new(CoordinatorConfig {
-                    workers: 2,
+                    exec: ExecPlan::pinned(square(11))
+                        .with_workers(2)
+                        .with_kernel(kernel)
+                        .with_prefetch(true),
                     schedule,
-                    kernel,
-                    prefetch: true,
-                    io: IoMode::Strips {
-                        strip_rows: 8,
-                        file_backed: false,
-                    },
+                    io: strips(8),
                     ..Default::default()
                 })
-                .cluster(&img, &plan, &ccfg)
+                .cluster(&img, &ccfg)
                 .unwrap();
                 assert_eq!(out.labels, plain.labels, "{kernel} {schedule:?}");
                 assert_eq!(out.centroids, plain.centroids, "{kernel} {schedule:?}");
@@ -867,23 +823,20 @@ mod tests {
 
     #[test]
     fn strip_cache_collapses_column_amplification() {
-        let (img, _) = setup(40, 30, 12);
-        let plan = Arc::new(BlockPlan::new(40, 30, BlockShape::Cols { band_cols: 7 }));
+        let img = image(40, 30);
         let ccfg = ClusterConfig {
             k: 2,
             fixed_iters: Some(2),
             ..Default::default()
         };
         let coord = Coordinator::new(CoordinatorConfig {
-            workers: 1, // deterministic access sequence
-            strip_cache: 5, // all strips of a 40-row image at strip_rows 8
-            io: IoMode::Strips {
-                strip_rows: 8,
-                file_backed: false,
-            },
+            exec: ExecPlan::pinned(BlockShape::Cols { band_cols: 7 })
+                .with_workers(1) // deterministic access sequence
+                .with_strip_cache(5), // all strips of a 40-row image at strip_rows 8
+            io: strips(8),
             ..Default::default()
         });
-        let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+        let out = coord.cluster(&img, &ccfg).unwrap();
         let stats = out.io_stats.expect("strip mode must report stats");
         // 5 column blocks × 5 strips × 3 passes = 75 accesses; only the
         // first touch of each strip transfers.
@@ -894,23 +847,22 @@ mod tests {
 
     #[test]
     fn local_mode_produces_coherent_labels() {
-        let (img, plan) = setup(64, 64, 32);
+        let img = image(64, 64);
         let ccfg = ClusterConfig {
             k: 2,
             ..Default::default()
         };
         let coord = Coordinator::new(CoordinatorConfig {
-            workers: 2,
             mode: ClusterMode::Local,
-            ..Default::default()
+            ..cfg(square(32), 2)
         });
-        let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+        let out = coord.cluster(&img, &ccfg).unwrap();
         assert_eq!(out.labels.len(), 64 * 64);
         assert!(out.labels.iter().all(|&l| l < 2));
         // Harmonized labels must agree with the global run on most pixels
         // (blocks see slightly different data, so not exact).
-        let global = Coordinator::new(CoordinatorConfig::default())
-            .cluster(&img, &plan, &ccfg)
+        let global = Coordinator::new(cfg(square(32), 4))
+            .cluster(&img, &ccfg)
             .unwrap();
         let agree = out
             .labels
@@ -926,17 +878,14 @@ mod tests {
 
     #[test]
     fn fixed_iters_runs_exact_count_and_matches_serial() {
-        let (img, plan) = setup(30, 30, 9);
+        let img = image(30, 30);
         let ccfg = ClusterConfig {
             k: 2,
             fixed_iters: Some(5),
             ..Default::default()
         };
-        let coord = Coordinator::new(CoordinatorConfig {
-            workers: 2,
-            ..Default::default()
-        });
-        let par = coord.cluster(&img, &plan, &ccfg).unwrap();
+        let coord = Coordinator::new(cfg(square(9), 2));
+        let par = coord.cluster(&img, &ccfg).unwrap();
         assert_eq!(par.iterations, 5);
         let seq = coord.serial(&img, &ccfg).unwrap();
         assert_eq!(par.labels, seq.labels);
@@ -945,46 +894,43 @@ mod tests {
 
     #[test]
     fn failure_injection_surfaces_error() {
-        let (img, plan) = setup(30, 30, 10);
+        let img = image(30, 30);
         let coord = Coordinator::new(CoordinatorConfig {
-            workers: 2,
             fail_block: Some(1),
-            ..Default::default()
+            ..cfg(square(10), 2)
         });
-        let err = coord
-            .cluster(&img, &plan, &ClusterConfig::default())
-            .unwrap_err();
+        let err = coord.cluster(&img, &ClusterConfig::default()).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("injected failure"), "{msg}");
     }
 
     #[test]
-    fn plan_image_mismatch_rejected() {
-        let (img, _) = setup(30, 30, 10);
-        let wrong_plan = Arc::new(BlockPlan::new(20, 20, BlockShape::Square { side: 5 }));
-        let coord = Coordinator::new(CoordinatorConfig::default());
-        assert!(coord
-            .cluster(&img, &wrong_plan, &ClusterConfig::default())
-            .is_err());
+    fn block_plan_derives_from_the_exec_plan() {
+        // The plan drift hazard is gone by construction: the tiling is
+        // derived from the ExecPlan's shape against the actual image.
+        let img = image(30, 30);
+        let coord = Coordinator::new(cfg(square(10), 2));
+        let plan = coord.block_plan(&img);
+        assert_eq!(plan.len(), 9);
+        assert_eq!(plan.block_dims(), (10, 10));
+        let out = coord.cluster(&img, &ClusterConfig::default()).unwrap();
+        assert_eq!(out.blocks, plan.len());
     }
 
     #[test]
     fn rounds_record_all_blocks() {
-        let (img, plan) = setup(36, 36, 12);
+        let img = image(36, 36);
         let ccfg = ClusterConfig {
             k: 2,
             fixed_iters: Some(2),
             ..Default::default()
         };
-        let coord = Coordinator::new(CoordinatorConfig {
-            workers: 2,
-            ..Default::default()
-        });
-        let out = coord.cluster(&img, &plan, &ccfg).unwrap();
+        let coord = Coordinator::new(cfg(square(12), 2));
+        let out = coord.cluster(&img, &ccfg).unwrap();
         // 2 step rounds + 1 assign
         assert_eq!(out.rounds.len(), 3);
         for r in &out.rounds {
-            assert_eq!(r.costs.len(), plan.len());
+            assert_eq!(r.costs.len(), coord.block_plan(&img).len());
             assert!(r.wall_secs >= 0.0);
         }
         assert_eq!(out.rounds[0].kind, RoundKind::Step);

@@ -229,10 +229,7 @@ mod tests {
             },
             fail_block,
             local_mode: false,
-            kernel: crate::kmeans::kernel::KernelChoice::Naive,
-            layout: crate::kmeans::tile::TileLayout::Interleaved,
-            arena_bytes: 0,
-            prefetch: false,
+            exec: crate::plan::ExecPlan::default().with_arena_mb(0),
         });
         (ctx, img)
     }

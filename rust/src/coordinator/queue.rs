@@ -21,12 +21,13 @@ use std::sync::{Condvar, Mutex};
 use super::messages::{Job, JobId, JobPayload};
 
 /// Scheduling policy.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Schedule {
     /// Blocks pre-assigned round-robin; no stealing.
     Static,
     /// Shared per-job queues; workers pull as they finish (default; what
     /// `parfor` does), interleaving fairly across jobs.
+    #[default]
     Dynamic,
 }
 

@@ -37,6 +37,7 @@ use crate::blocks::BlockPlan;
 use crate::image::Raster;
 use crate::kmeans::kernel::{CentroidDrift, KernelChoice, PrunedState};
 use crate::kmeans::tile::{SoaTile, TileArena, TileLayout};
+use crate::plan::ExecPlan;
 use crate::runtime::BackendSpec;
 use crate::stripstore::{StripReader, StripStore};
 
@@ -62,21 +63,12 @@ pub struct WorkerContext {
     pub fail_block: Option<usize>,
     /// Hint for backend warmup: will this job use per-block local mode?
     pub local_mode: bool,
-    /// Which compute kernel step/assign jobs run (see
-    /// [`crate::kmeans::kernel`]). Pruned/fused kernels keep per-block
-    /// Hamerly bounds across rounds; results are bit-identical to naive.
-    pub kernel: KernelChoice,
-    /// How block pixels are held across rounds: re-read interleaved
-    /// every round, or cached once per job as planar [`SoaTile`]s in
-    /// the worker's [`TileArena`]. Either layout is bit-identical under
-    /// any kernel; `Soa` is the lanes kernel's native shape.
-    pub layout: TileLayout,
-    /// Per-worker tile-arena byte budget this job asks for (tiles that
-    /// don't fit spill back to per-round re-reads).
-    pub arena_bytes: usize,
-    /// Overlap the next queued block's read with the current block's
-    /// compute (per-worker sidecar reader thread).
-    pub prefetch: bool,
+    /// The job's resolved execution plan — workers consume the kernel,
+    /// layout, arena budget, and prefetch knobs from here (the shape
+    /// already materialized into `plan`, the worker count into the
+    /// pool). Kernel/layout choices are bit-identical; see
+    /// [`crate::kmeans::kernel`] and [`crate::kmeans::tile`].
+    pub exec: ExecPlan,
 }
 
 impl WorkerContext {
@@ -325,7 +317,7 @@ impl JobEngine {
             .build()
             .with_context(|| format!("worker {worker_id}: backend init"))?;
         let reader = build_reader(worker_id, &ctx.source)?;
-        let prefetch = if ctx.prefetch {
+        let prefetch = if ctx.exec.prefetch {
             Some(Prefetcher::spawn(worker_id, &ctx)?)
         } else {
             None
@@ -422,7 +414,7 @@ fn dispatch_job(
     if let Some((next_job, next_block)) = queue.peek_next(worker_id) {
         if next_job != job.job {
             if let Some(next_engine) = engines.get_mut(&next_job) {
-                let resident = next_engine.ctx.layout == TileLayout::Soa
+                let resident = next_engine.ctx.exec.layout == TileLayout::Soa
                     && arena.contains((next_job, next_block));
                 if !resident {
                     if let Some(pf) = next_engine.prefetch.as_mut() {
@@ -477,7 +469,7 @@ fn run_job(
         job.payload,
         JobPayload::Step { .. } | JobPayload::Assign { .. }
     );
-    let use_arena = is_block_pass && ctx.layout == TileLayout::Soa;
+    let use_arena = is_block_pass && ctx.exec.layout == TileLayout::Soa;
     let key = (job.job, job.block);
     let t_io = Instant::now();
     let tile: Option<Arc<SoaTile>> = if use_arena {
@@ -486,18 +478,18 @@ fn run_job(
             None => {
                 // High-water budget + per-job admission cap: this job's
                 // fill can never evict a bigger-budget neighbour's tiles.
-                arena.raise_budget(ctx.arena_bytes);
+                arena.raise_budget(ctx.exec.arena_bytes());
                 engine
                     .read_pixels(job.block, px_buf)
                     .with_context(|| format!("worker {worker_id}: read block {}", job.block))?;
                 arena.insert_within(
                     key,
                     SoaTile::from_interleaved(px_buf, ctx.plan_channels()),
-                    ctx.arena_bytes,
+                    ctx.exec.arena_bytes(),
                 )
             }
         };
-        if ctx.kernel != KernelChoice::Lanes {
+        if ctx.exec.kernel != KernelChoice::Lanes {
             // Interleaved compute path over an arena-resident block:
             // rematerialize (bit-identical round trip), still no I/O.
             tile.to_interleaved(px_buf);
@@ -507,7 +499,7 @@ fn run_job(
         engine
             .read_pixels(job.block, px_buf)
             .with_context(|| format!("worker {worker_id}: read block {}", job.block))?;
-        (is_block_pass && ctx.kernel == KernelChoice::Lanes)
+        (is_block_pass && ctx.exec.kernel == KernelChoice::Lanes)
             .then(|| Arc::new(SoaTile::from_interleaved(px_buf, ctx.plan_channels())))
     };
     // Double buffering: with the block in hand and compute about to
@@ -527,7 +519,7 @@ fn run_job(
     let t_c = Instant::now();
     let result = match &job.payload {
         JobPayload::Step { centroids, drift } => {
-            let accum = if ctx.kernel == KernelChoice::Naive {
+            let accum = if ctx.exec.kernel == KernelChoice::Naive {
                 backend.step_block(px_buf, centroids)?
             } else {
                 evict_stale(prune, job.job, job.round);
@@ -536,7 +528,7 @@ fn run_job(
                 if usable.is_none() {
                     entry.state.clear(); // stale bounds: re-seed this round
                 }
-                let accum = if ctx.kernel == KernelChoice::Lanes {
+                let accum = if ctx.exec.kernel == KernelChoice::Lanes {
                     backend.step_block_lanes(
                         tile.as_deref().expect("tile built for lanes"),
                         centroids,
@@ -553,7 +545,7 @@ fn run_job(
         }
         JobPayload::Assign { centroids, drift } => {
             let mut labels = Vec::new();
-            let inertia = match ctx.kernel {
+            let inertia = match ctx.exec.kernel {
                 KernelChoice::Fused | KernelChoice::Lanes => {
                     evict_stale(prune, job.job, job.round);
                     let entry = prune.entry(key).or_default();
@@ -561,7 +553,7 @@ fn run_job(
                     if usable.is_none() {
                         entry.state.clear();
                     }
-                    if ctx.kernel == KernelChoice::Lanes {
+                    if ctx.exec.kernel == KernelChoice::Lanes {
                         backend.assign_block_lanes(
                             tile.as_deref().expect("tile built for lanes"),
                             centroids,
@@ -636,10 +628,7 @@ mod tests {
             },
             fail_block: None,
             local_mode: false,
-            kernel: KernelChoice::Naive,
-            layout: TileLayout::Interleaved,
-            arena_bytes: 0,
-            prefetch: false,
+            exec: ExecPlan::default().with_arena_mb(0),
         });
         assert_eq!(reg.register(3, Arc::clone(&ctx)), 1);
         assert_eq!(reg.register(5, ctx), 2);
@@ -664,10 +653,7 @@ mod tests {
             },
             fail_block: None,
             local_mode: false,
-            kernel: KernelChoice::Naive,
-            layout: TileLayout::Interleaved,
-            arena_bytes: 0,
-            prefetch: true,
+            exec: ExecPlan::default().with_arena_mb(0).with_prefetch(true),
         };
         let mut pf = Prefetcher::spawn(0, &ctx).unwrap();
         // predicted correctly: the buffer is exactly the block crop

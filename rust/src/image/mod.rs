@@ -12,6 +12,6 @@ mod ppm;
 mod raster;
 mod synthetic;
 
-pub use ppm::{read_ppm, write_labels_pgm, write_labels_ppm, write_ppm, PALETTE};
+pub use ppm::{ppm_dims, read_ppm, write_labels_pgm, write_labels_ppm, write_ppm, PALETTE};
 pub use raster::{Raster, RasterStats};
 pub use synthetic::SyntheticOrtho;

@@ -100,21 +100,38 @@ pub fn write_labels_pgm(
     Ok(())
 }
 
+/// Read only a PPM's header: `(height, width, channels)`. The pixel
+/// payload is never touched — this is what `blockms cluster --dry-run`
+/// and `blockms plan` use to plan against a real file without paying
+/// for its pixels.
+pub fn ppm_dims(path: &Path) -> Result<(usize, usize, usize)> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let (height, width) = read_header(&mut r)?;
+    Ok((height, width, 3))
+}
+
+/// Parse the P6 header up to (and including) maxval; leaves the reader
+/// at the first payload byte.
+fn read_header<R: BufRead>(r: &mut R) -> Result<(usize, usize)> {
+    let magic = read_token(r)?;
+    if magic != "P6" {
+        bail!("unsupported magic {magic:?} (want P6)");
+    }
+    let width: usize = read_token(r)?.parse().context("width")?;
+    let height: usize = read_token(r)?.parse().context("height")?;
+    let maxval: usize = read_token(r)?.parse().context("maxval")?;
+    if maxval == 0 || maxval > 255 {
+        bail!("unsupported maxval {maxval}");
+    }
+    Ok((height, width))
+}
+
 /// Read a binary PPM (P6, maxval ≤ 255) into an RGB raster.
 pub fn read_ppm(path: &Path) -> Result<Raster> {
     let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut r = BufReader::new(f);
-
-    let magic = read_token(&mut r)?;
-    if magic != "P6" {
-        bail!("unsupported magic {magic:?} (want P6)");
-    }
-    let width: usize = read_token(&mut r)?.parse().context("width")?;
-    let height: usize = read_token(&mut r)?.parse().context("height")?;
-    let maxval: usize = read_token(&mut r)?.parse().context("maxval")?;
-    if maxval == 0 || maxval > 255 {
-        bail!("unsupported maxval {maxval}");
-    }
+    let (height, width) = read_header(&mut r)?;
     let mut raw = vec![0u8; width * height * 3];
     r.read_exact(&mut raw).context("pixel payload")?;
     let data: Vec<f32> = raw.iter().map(|&b| b as f32).collect();
@@ -160,6 +177,19 @@ mod tests {
         let dir = std::env::temp_dir().join("blockms_ppm_tests");
         std::fs::create_dir_all(&dir).unwrap();
         dir.join(name)
+    }
+
+    #[test]
+    fn dims_reads_header_only() {
+        let img = SyntheticOrtho::default().with_seed(9).generate(20, 30);
+        let path = tmp("dims.ppm");
+        write_ppm(&img, &path).unwrap();
+        assert_eq!(ppm_dims(&path).unwrap(), (20, 30, 3));
+        // even with the payload truncated away, the header still reads
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..15.min(bytes.len())]).unwrap();
+        assert!(read_ppm(&path).is_err(), "payload is gone");
+        assert_eq!(ppm_dims(&path).unwrap(), (20, 30, 3));
     }
 
     #[test]

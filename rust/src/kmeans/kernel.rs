@@ -68,7 +68,7 @@ const REL_SLACK: f64 = 1e-5;
 pub const PRUNE_MAX_CHANNELS: usize = 16;
 
 /// Which kernel path the K-Means driver uses.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum KernelChoice {
     /// Full K-way scan every round (the reference path).
     #[default]

@@ -41,7 +41,7 @@ pub const LANES: usize = 8;
 const LINE_F32: usize = 16;
 
 /// How block pixels are held across Lloyd rounds on the workers.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum TileLayout {
     /// Interleaved `pixels[P, C]`, re-read from the block source every
     /// round (the seed behaviour; what MATLAB `blockproc` does).

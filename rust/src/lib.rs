@@ -6,12 +6,14 @@
 //!
 //! - **L3 (this crate)** — the coordinator: shape-parameterized block
 //!   plans ([`blocks`]), a strip-granular image store reproducing MATLAB
-//!   `blockproc` I/O behaviour ([`stripstore`]), a leader/worker SPMD pool
-//!   ([`coordinator`]), a persistent multi-job serving layer that drives
-//!   many clustering jobs over one shared pool with admission control
-//!   ([`service`]), a discrete-event worker simulator for speedup
-//!   studies ([`simtime`]), the sequential baseline ([`kmeans`]), and the
-//!   paper-table bench harness ([`bench`]).
+//!   `blockproc` I/O behaviour ([`stripstore`]), an execution planner
+//!   that resolves every run into one cost-model-chosen [`plan::ExecPlan`]
+//!   ([`plan`]), a leader/worker SPMD pool ([`coordinator`]), a
+//!   persistent multi-job serving layer that drives many clustering jobs
+//!   over one shared pool with admission control ([`service`]), a
+//!   discrete-event worker simulator for speedup studies ([`simtime`]),
+//!   the sequential baseline ([`kmeans`]), and the paper-table bench
+//!   harness ([`bench`]).
 //! - **L2/L1 (python, build-time only)** — JAX graphs + Pallas kernels
 //!   AOT-lowered to `artifacts/*.hlo.txt`, loaded and executed through
 //!   PJRT by [`runtime`]. Python never runs on the request path.
@@ -26,6 +28,7 @@ pub mod coordinator;
 pub mod image;
 pub mod kmeans;
 pub mod metrics;
+pub mod plan;
 pub mod runtime;
 pub mod service;
 pub mod simtime;
@@ -41,6 +44,7 @@ pub mod prelude {
     pub use crate::image::{Raster, SyntheticOrtho};
     pub use crate::kmeans::{InitMethod, KernelChoice, SeqKMeans, SoaTile, TileArena, TileLayout};
     pub use crate::metrics::{RunTimer, Speedup};
+    pub use crate::plan::{CostModel, ExecPlan, Explain, Planner, PlanRequest};
     pub use crate::service::{ClusterServer, JobHandle, JobSpec, JobStatus, ServerConfig};
     pub use crate::simtime::{SimParams, WorkerSim};
     pub use crate::stripstore::StripStore;

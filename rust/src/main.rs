@@ -3,7 +3,12 @@
 //! Subcommands:
 //!
 //! - `cluster`       run parallel block K-Means on a synthetic scene (or a
-//!                   PPM file) and write the label map;
+//!                   PPM file) and write the label map; `--auto` lets the
+//!                   planner pick unpinned knobs, `--dry-run` prints the
+//!                   resolved plan and exits without reading pixels;
+//! - `plan`          rank candidate execution plans (shape × kernel ×
+//!                   layout × cache × prefetch) by predicted cost —
+//!                   the explain table; never touches pixels;
 //! - `paper-tables`  regenerate the paper's Tables 1–19 (+ figure series);
 //! - `cases`         regenerate the §4 Cases 1–3 block-size I/O analysis;
 //! - `layout`        interleaved-vs-SoA × kernel × block-shape matrix ->
@@ -27,14 +32,14 @@ use anyhow::{bail, Context, Result};
 use blockms::bench::service::{render_service_bench, write_service_bench, ServiceBenchOpts};
 use blockms::bench::tables::{all_table_ids, run_table, SweepOpts};
 use blockms::bench::{cases, runner::EngineChoice};
-use blockms::blocks::{ApproachKind, BlockPlan, BlockShape};
+use blockms::blocks::{ApproachKind, BlockShape};
 use blockms::cli::{blockms_cli, parse_usize_list, Opts, SUBCOMMANDS};
 use blockms::coordinator::{
     ClusterConfig, ClusterMode, Coordinator, CoordinatorConfig, Engine, IoMode, Schedule,
 };
-use blockms::image::{read_ppm, write_labels_ppm, write_ppm, Raster, SyntheticOrtho};
-use blockms::kmeans::kernel::KernelChoice;
+use blockms::image::{ppm_dims, read_ppm, write_labels_ppm, write_ppm, Raster, SyntheticOrtho};
 use blockms::kmeans::tile::TileLayout;
+use blockms::plan::{ExecPlan, Explain, Planner, PlanRequest};
 use blockms::runtime::{find_artifacts_dir, ArtifactSet};
 use blockms::service::{ClusterServer, JobSpec, ServerConfig};
 use blockms::util::cli::{Args, CliError};
@@ -57,6 +62,7 @@ fn main() {
     };
     let result = match args.subcommand().unwrap_or("cluster") {
         "cluster" => cmd_cluster(&args),
+        "plan" => cmd_plan(&args),
         "paper-tables" => cmd_tables(&args),
         "cases" => cmd_cases(&args),
         "sweep" => cmd_sweep(&args),
@@ -104,23 +110,6 @@ fn engine_of(opts: &Opts) -> Result<Engine> {
     })
 }
 
-/// Resolve the block shape from `--approach` / `--block-rows/cols`.
-fn shape_of(opts: &Opts, img: &Raster) -> Result<BlockShape> {
-    Ok(
-        match (
-            opts.parse::<usize>("block-rows", "blocks.rows")?,
-            opts.parse::<usize>("block-cols", "blocks.cols")?,
-        ) {
-            (Some(rows), Some(cols)) => BlockShape::Custom { rows, cols },
-            (None, None) => {
-                let kind: ApproachKind = opts.require("approach", "blocks.approach")?;
-                BlockShape::paper_default(kind, img.height(), img.width())
-            }
-            _ => bail!("--block-rows and --block-cols must be given together"),
-        },
-    )
-}
-
 /// Resolve the I/O mode from `--strip-rows`.
 fn io_of(opts: &Opts) -> Result<IoMode> {
     Ok(match opts.parse::<usize>("strip-rows", "io.strip_rows")? {
@@ -132,22 +121,149 @@ fn io_of(opts: &Opts) -> Result<IoMode> {
     })
 }
 
+/// Workload geometry without touching pixels: the PPM header for
+/// `--input`, the size flags for a synthetic scene.
+fn workload_dims(opts: &Opts, input: Option<&str>) -> Result<(usize, usize, usize)> {
+    match input {
+        Some(path) => ppm_dims(Path::new(path)),
+        None => {
+            let width: usize = positive(opts.require("width", "workload.width")?, "width")?;
+            let height: usize = positive(opts.require("height", "workload.height")?, "height")?;
+            Ok((height, width, 3))
+        }
+    }
+}
+
+/// Build the [`PlanRequest`] for a run. Pin discipline:
+///
+/// - without `auto`, every knob pins to its (possibly defaulted) flag
+///   value — exactly the pre-planner behaviour;
+/// - with `auto`, only knobs the user actually typed (or the config
+///   file sets) are pins; the planner chooses the rest.
+fn plan_request(
+    opts: &Opts,
+    args: &Args,
+    auto: bool,
+    height: usize,
+    width: usize,
+    channels: usize,
+) -> Result<PlanRequest> {
+    let k: usize = positive(opts.require("k", "cluster.k")?, "k")?;
+    let max_iters: usize = opts.require("max-iters", "cluster.max_iters")?;
+    let fixed_iters: Option<usize> = opts.parse("iters", "cluster.iters")?;
+    let strip_rows = match opts.parse::<usize>("strip-rows", "io.strip_rows")? {
+        Some(v) => Some(positive(v, "strip-rows")?),
+        None => None,
+    };
+    let mut req = PlanRequest::new(height, width, channels, k)
+        .with_rounds(fixed_iters.unwrap_or(max_iters))
+        .with_strip_rows(strip_rows);
+
+    // Block shape: explicit --block-rows/cols always pin; a typed
+    // --approach pins its paper-default sizing.
+    req.shape = match (
+        opts.parse::<usize>("block-rows", "blocks.rows")?,
+        opts.parse::<usize>("block-cols", "blocks.cols")?,
+    ) {
+        (Some(rows), Some(cols)) => Some(BlockShape::Custom { rows, cols }),
+        (None, None) => {
+            let kind: Option<ApproachKind> = if auto {
+                opts.pinned("approach", "blocks.approach")?
+            } else {
+                Some(opts.require("approach", "blocks.approach")?)
+            };
+            kind.map(|kind| BlockShape::paper_default(kind, height, width))
+        }
+        _ => bail!("--block-rows and --block-cols must be given together"),
+    };
+    req.workers = match if auto {
+        opts.pinned("workers", "run.workers")?
+    } else {
+        Some(opts.require("workers", "run.workers")?)
+    } {
+        Some(w) => Some(positive(w, "workers")?),
+        None => None,
+    };
+    req.kernel = if auto {
+        opts.pinned("kernel", "run.kernel")?
+    } else {
+        Some(opts.require("kernel", "run.kernel")?)
+    };
+    // Layout: an explicit flag pins; otherwise the pinned kernel's
+    // native shape (reproducing the pre-planner default) — or free
+    // under --auto.
+    req.layout = match opts.pinned::<TileLayout>("layout", "run.layout")? {
+        Some(l) => Some(l),
+        None if auto => None,
+        None => req.kernel.map(|k| k.default_layout()),
+    };
+    req.arena_mb = if auto {
+        opts.pinned("arena-mb", "run.arena_mb")?
+    } else {
+        Some(opts.require("arena-mb", "run.arena_mb")?)
+    };
+    req.strip_cache = if auto {
+        opts.pinned("strip-cache", "io.strip_cache")?
+    } else {
+        Some(opts.parse("strip-cache", "io.strip_cache")?.unwrap_or(0))
+    };
+    // A flag cannot be typed as false: --prefetch pins true, absence
+    // leaves it free under --auto and pins false otherwise.
+    req.prefetch = if args.flag("prefetch") {
+        Some(true)
+    } else if auto {
+        None
+    } else {
+        Some(false)
+    };
+    Ok(req)
+}
+
+/// Shared resolve step: request → (plan, explain), printed consistently.
+fn resolve_exec(
+    opts: &Opts,
+    args: &Args,
+    auto: bool,
+    height: usize,
+    width: usize,
+    channels: usize,
+) -> Result<(ExecPlan, Explain)> {
+    let req = plan_request(opts, args, auto, height, width, channels)?;
+    let (exec, explain) = Planner::default().resolve(&req);
+    Ok((exec, explain))
+}
+
 fn cmd_cluster(args: &Args) -> Result<()> {
     let opts = Opts::load(args)?;
-    let k: usize = positive(opts.require("k", "cluster.k")?, "k")?;
-    let workers: usize = positive(opts.require("workers", "run.workers")?, "workers")?;
     let seed: u64 = opts.require("seed", "workload.seed")?;
+    let auto = args.flag("auto");
+    let input = opts.get("input", "workload.input");
+
+    // --- resolve the execution plan (no pixels touched yet) --------------
+    let (height, width, channels) = workload_dims(&opts, input.as_deref())?;
+    let (exec, explain) = resolve_exec(&opts, args, auto, height, width, channels)?;
+    println!(
+        "plan: {} -> {} blocks (grid {}x{})",
+        exec.summary(),
+        explain.chosen().blocks,
+        explain.chosen().grid.0,
+        explain.chosen().grid.1
+    );
+    if auto {
+        println!("planner: {}", explain.rationale());
+    }
+    if args.flag("dry-run") {
+        return Ok(());
+    }
 
     // --- image -----------------------------------------------------------
-    let img = match opts.get("input", "workload.input") {
+    let img = match &input {
         Some(path) => {
-            let img = read_ppm(Path::new(&path))?;
+            let img = read_ppm(Path::new(path))?;
             println!("loaded {path}: {}x{} ({} bands)", img.width(), img.height(), img.channels());
             img
         }
         None => {
-            let width: usize = opts.require("width", "workload.width")?;
-            let height: usize = opts.require("height", "workload.height")?;
             println!("generating synthetic ortho scene {width}x{height} (seed {seed})");
             SyntheticOrtho::default().with_seed(seed).generate(height, width)
         }
@@ -158,38 +274,23 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     let img = Arc::new(img);
 
-    // --- plan --------------------------------------------------------------
-    let shape = shape_of(&opts, &img)?;
-    let plan = Arc::new(BlockPlan::new(img.height(), img.width(), shape));
-    println!(
-        "plan: {} -> {} blocks of up to {:?}",
-        shape,
-        plan.len(),
-        plan.block_dims()
-    );
-
     // --- run ---------------------------------------------------------------
     let coord = Coordinator::new(CoordinatorConfig {
-        workers,
+        exec,
         engine: engine_of(&opts)?,
         mode: opts.require::<ClusterMode>("mode", "run.mode")?,
         io: io_of(&opts)?,
         schedule: opts.require::<Schedule>("schedule", "run.schedule")?,
-        kernel: opts.require::<KernelChoice>("kernel", "run.kernel")?,
-        layout: opts.parse::<TileLayout>("layout", "run.layout")?,
-        arena_mb: opts.require("arena-mb", "run.arena_mb")?,
-        prefetch: args.flag("prefetch"),
-        strip_cache: opts.parse::<usize>("strip-cache", "io.strip_cache")?.unwrap_or(0),
         fail_block: None,
     });
     let ccfg = ClusterConfig {
-        k,
+        k: positive(opts.require("k", "cluster.k")?, "k")?,
         max_iters: opts.require("max-iters", "cluster.max_iters")?,
         seed,
         fixed_iters: opts.parse("iters", "cluster.iters")?,
         ..Default::default()
     };
-    let out = coord.cluster(&img, &plan, &ccfg)?;
+    let out = coord.cluster(&img, &ccfg)?;
     println!(
         "parallel: {} workers, {} blocks, {} iterations{} -> inertia {:.1}, {}",
         out.workers,
@@ -199,6 +300,21 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         out.inertia,
         duration(out.total_secs)
     );
+    // Which plan ran — with predicted vs measured cost when the planner
+    // chose it, so bench tables and the io line stay consistent.
+    let passes = out.rounds.len().max(1);
+    let actual_ns =
+        (out.total_secs - out.spawn_secs).max(0.0) * 1e9 / (img.pixels() * passes) as f64;
+    if auto {
+        println!(
+            "ran: {} | predicted {:.2} ns/px/pass, actual {:.2} ns/px/pass",
+            exec.summary(),
+            explain.chosen().cost.ns_per_pixel_pass,
+            actual_ns
+        );
+    } else {
+        println!("ran: {} | actual {:.2} ns/px/pass", exec.summary(), actual_ns);
+    }
     if let Some(io) = out.io_stats {
         println!(
             "io: {} block reads, {} strip reads, {} bytes | strip cache: {} hits / {} misses",
@@ -238,6 +354,70 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if let Some(p) = opts.get("out", "output.labels") {
         write_labels_ppm(&out.labels, img.height(), img.width(), Path::new(&p))?;
         println!("wrote label map to {p}");
+    }
+    Ok(())
+}
+
+/// Rank candidate execution plans by predicted cost and print the
+/// explain table — never reads or generates pixels. `plan` is always an
+/// auto resolve (ranking one pinned candidate would be vacuous); typed
+/// flags still pin their axes. `--quick` pins the CI smoke geometry.
+fn cmd_plan(args: &Args) -> Result<()> {
+    let opts = Opts::load(args)?;
+    let input = opts.get("input", "workload.input");
+    let (height, width, channels) = if args.flag("quick") {
+        (128, 128, 3)
+    } else {
+        workload_dims(&opts, input.as_deref())?
+    };
+    let mut req = plan_request(&opts, args, true, height, width, channels)?;
+    // --quick exercises the I/O axes, and a --out bench always measures
+    // through a strip store — in both cases default the strip height
+    // BEFORE resolving, so the ranked table and the measured grid
+    // describe the same I/O model.
+    if req.strip_rows.is_none() && (args.flag("quick") || args.get("out").is_some()) {
+        req = req.with_strip_rows(Some(if args.flag("quick") { 16 } else { 64 }));
+    }
+    let (exec, explain) = Planner::default().resolve(&req);
+    let top = if args.flag("verbose") {
+        explain.candidates.len()
+    } else {
+        12
+    };
+    print!("{}", explain.render(top));
+    println!("planner: {}", explain.rationale());
+    println!("plan: {}", exec.summary());
+
+    // With --out, also run the *measured* plan bench — predicted vs
+    // real wall over the candidate grid — and write the
+    // `BENCH_plan.json` document. --quick pins the CI geometry;
+    // otherwise the bench measures the geometry/workers/strips that
+    // were just ranked (a typed --k narrows the sweep to that k;
+    // --bench-iters sets the measured Lloyd rounds, like every other
+    // bench).
+    if let Some(out) = args.get("out") {
+        use blockms::bench::plan::{render_plan_bench, write_plan_bench, PlanBenchOpts};
+        let bopts = if args.flag("quick") {
+            PlanBenchOpts::quick()
+        } else {
+            let defaults = PlanBenchOpts::default();
+            PlanBenchOpts {
+                height,
+                width,
+                ks: match opts.pinned::<usize>("k", "cluster.k")? {
+                    Some(k) => vec![positive(k, "k")?],
+                    None => defaults.ks.clone(),
+                },
+                iters: opts.require("bench-iters", "bench.iters")?,
+                seed: opts.require("seed", "workload.seed")?,
+                workers: req.workers.unwrap_or(defaults.workers),
+                strip_rows: req.strip_rows.unwrap_or(defaults.strip_rows),
+                ..defaults
+            }
+        };
+        let (model, rows) = write_plan_bench(Path::new(out), &bopts)?;
+        print!("{}", render_plan_bench(&bopts, &model, &rows));
+        println!("wrote {out}");
     }
     Ok(())
 }
@@ -408,29 +588,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )?;
     let k: usize = positive(opts.require("k", "cluster.k")?, "k")?;
     let seed: u64 = opts.require("seed", "workload.seed")?;
-    let kernel = opts.require::<KernelChoice>("kernel", "run.kernel")?;
+    let auto = args.flag("auto");
     let mode = opts.require::<ClusterMode>("mode", "run.mode")?;
     let schedule = opts.require::<Schedule>("schedule", "run.schedule")?;
     let io = io_of(&opts)?;
     let engine = engine_of(&opts)?;
-    let layout = opts.parse::<TileLayout>("layout", "run.layout")?;
-    let arena_mb: usize = opts.require("arena-mb", "run.arena_mb")?;
-    let prefetch = args.flag("prefetch");
-    let strip_cache: usize = opts.parse::<usize>("strip-cache", "io.strip_cache")?.unwrap_or(0);
     let max_iters: usize = opts.require("max-iters", "cluster.max_iters")?;
     let fixed_iters: Option<usize> = opts.parse("iters", "cluster.iters")?;
 
     // One shared input image, or a distinct synthetic scene per job.
-    let base: Option<Arc<Raster>> = match opts.get("input", "workload.input") {
+    let input = opts.get("input", "workload.input");
+    let base: Option<Arc<Raster>> = match &input {
         Some(path) => {
-            let img = read_ppm(Path::new(&path))?;
+            let img = read_ppm(Path::new(path))?;
             println!("loaded {path}: {}x{} ({} bands)", img.width(), img.height(), img.channels());
             Some(Arc::new(img))
         }
         None => None,
     };
-    let width: usize = opts.require("width", "workload.width")?;
-    let height: usize = opts.require("height", "workload.height")?;
+    // Every job shares one geometry, so the admission path resolves ONE
+    // ExecPlan up front and embeds it in every spec — the same resolve
+    // the solo coordinator would do (tested identical in
+    // tests/plan_resolution.rs).
+    let (height, width, channels) = match &base {
+        Some(img) => (img.height(), img.width(), img.channels()),
+        None => workload_dims(&opts, None)?,
+    };
+    let mut req = plan_request(&opts, args, auto, height, width, channels)?;
+    // The shared pool's width is explicit here; the plan must agree.
+    req.workers = Some(workers);
+    let (exec, explain) = Planner::default().resolve(&req);
+    println!("plan: {}", exec.summary());
+    if auto {
+        println!("planner: {}", explain.rationale());
+    }
 
     let server = ClusterServer::start(ServerConfig {
         workers,
@@ -452,11 +643,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     .generate(height, width),
             ),
         };
-        let shape = shape_of(&opts, &img)?;
-        let plan = Arc::new(BlockPlan::new(img.height(), img.width(), shape));
         let spec = JobSpec::new(
             img,
-            plan,
+            exec,
             ClusterConfig {
                 k,
                 max_iters,
@@ -467,15 +656,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         )
         .with_mode(mode)
         .with_io(io.clone())
-        .with_kernel(kernel)
-        .with_engine(engine.clone())
-        .with_arena_mb(arena_mb)
-        .with_prefetch(prefetch)
-        .with_strip_cache(strip_cache);
-        let spec = match layout {
-            Some(l) => spec.with_layout(l),
-            None => spec,
-        };
+        .with_engine(engine.clone());
         // Blocks while the admission gate is full — the backpressure path.
         handles.push(server.submit(spec)?);
     }

@@ -1,0 +1,595 @@
+//! The planner's analytic cost model.
+//!
+//! Predicts wall-clock for a candidate [`crate::plan::ExecPlan`] from
+//! workload geometry and two families of priors:
+//!
+//! - **compute floors** — ns per pixel per pass for every
+//!   (kernel, layout) pair at the calibration cluster counts
+//!   (k ∈ {2, 4, 8}), taken from the committed `BENCH_layout.json`
+//!   row-shaped cells (amplification 1.0: the closest the matrix gets
+//!   to pure compute). Piecewise-linear in `k` between calibration
+//!   points, clamped at the ends.
+//! - **decode cost** — wall nanoseconds per *excess* byte read beyond
+//!   one clean pass of the image per fill pass, least-squares fit over
+//!   the naive column/square cells of the same matrix (pruned/lanes
+//!   cells are excluded from the fit: their shape sensitivity is
+//!   pruning efficacy, not I/O).
+//!
+//! The model is deliberately coarse — it ranks execution strategies, it
+//! does not simulate them ([`crate::simtime`] does that). Its honesty
+//! contract is [`CostModel::error_bound`]: the largest relative
+//! prediction error observed against the calibration matrix itself
+//! (dominated by shape-dependent pruning efficacy, which no static
+//! model can see). `BENCH_plan.json` records that planner *regret* —
+//! the paper-relevant number — stays far inside that bound.
+//!
+//! Priors are refinable at runtime: [`CostModel::calibrate_from_json`]
+//! re-derives them from any `BENCH_layout.json`-shaped document, and
+//! [`CostModel::refine`] blends in per-run observations (`BlockCost`
+//! compute totals or `simtime` replays reduced to observed ns/px/pass).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::blocks::BlockPlan;
+use crate::kmeans::kernel::KernelChoice;
+use crate::kmeans::tile::TileLayout;
+use crate::util::json::Json;
+
+/// Worker count the priors were measured at. Predictions for other
+/// worker counts scale from this reference.
+pub const REF_WORKERS: usize = 4;
+
+/// Calibration cluster counts of the committed layout matrix.
+pub const CALIB_KS: [usize; 3] = [2, 4, 8];
+
+/// Fused has no committed calibration row (the layout matrix sweeps
+/// naive/pruned/lanes); its prior is the pruned floor scaled by this —
+/// fused shares pruned's step rounds and saves most of one full-scan
+/// labeling pass out of `iters + 1`.
+const FUSED_OVER_PRUNED: f64 = 0.96;
+
+/// Workload geometry the model predicts against — everything about the
+/// run that is *not* an execution-strategy choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Workload {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub k: usize,
+    /// Expected Lloyd iterations (`fixed_iters`, or `max_iters` as the
+    /// pessimistic bound); total passes over the image are `rounds + 1`.
+    pub rounds: usize,
+    /// Strip height of the I/O model; `None` = direct in-memory crops
+    /// (no strip store, no decode cost, nothing for a cache to do).
+    pub strip_rows: Option<usize>,
+}
+
+impl Workload {
+    pub fn pixels(&self) -> usize {
+        self.height * self.width
+    }
+
+    pub fn passes(&self) -> usize {
+        self.rounds + 1
+    }
+
+    /// One clean pass worth of image bytes (f32 samples).
+    pub fn image_bytes(&self) -> u64 {
+        (self.pixels() * self.channels * 4) as u64
+    }
+
+    /// Strips the store would hold for this workload.
+    pub fn unique_strips(&self) -> usize {
+        match self.strip_rows {
+            Some(rows) => self.height.div_ceil(rows.max(1)),
+            None => 0,
+        }
+    }
+}
+
+/// Predicted cost breakdown for one candidate plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanCost {
+    /// Predicted wall seconds for the whole run (compute + excess I/O,
+    /// overlapped when the candidate prefetches).
+    pub wall_secs: f64,
+    /// Predicted wall ns per pixel per pass (the bench-comparable unit).
+    pub ns_per_pixel_pass: f64,
+    /// Compute share of the wall (seconds).
+    pub compute_secs: f64,
+    /// Excess-decode share of the wall (seconds).
+    pub io_secs: f64,
+    /// Total strip bytes the candidate transfers (0 for direct I/O).
+    pub decode_bytes: u64,
+    /// Strip reads that actually decode (cache misses), whole run.
+    pub strip_transfers: u64,
+}
+
+/// The analytic model. See module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostModel {
+    /// ns/px/pass compute floors at the calibration ks, per (kernel,
+    /// layout). Fused shares the pruned series (see [`prior_key`]), so
+    /// the map always holds exactly the measured kernel × layout pairs.
+    priors: BTreeMap<(KernelChoice, TileLayout), Vec<(usize, f64)>>,
+    /// Wall ns per byte read beyond one clean image pass per fill pass.
+    pub decode_ns_per_byte: f64,
+    /// Largest relative prediction error vs the calibration matrix —
+    /// the model's stated honesty bound (see module docs).
+    pub error_bound: f64,
+}
+
+/// Fused reuses the pruned floor (no committed fused row) — scaled at
+/// lookup time, so refinement of pruned flows through.
+fn prior_key(kernel: KernelChoice, layout: TileLayout) -> (KernelChoice, TileLayout) {
+    let k = match kernel {
+        KernelChoice::Fused => KernelChoice::Pruned,
+        other => other,
+    };
+    (k, layout)
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel::baked()
+    }
+}
+
+impl CostModel {
+    /// The committed priors: row-shaped floors and the decode fit from
+    /// the repo's `BENCH_layout.json` (1024², 3 bands, strips of 64
+    /// rows, 4 workers, memory backing). Regenerate with
+    /// `python3 python/bench_plan_model.py --print-priors`.
+    pub fn baked() -> CostModel {
+        let mut priors = BTreeMap::new();
+        let table: [(KernelChoice, TileLayout, [f64; 3]); 6] = [
+            (KernelChoice::Naive, TileLayout::Interleaved, [60.983, 100.972, 177.864]),
+            (KernelChoice::Naive, TileLayout::Soa, [61.987, 100.356, 179.150]),
+            (KernelChoice::Pruned, TileLayout::Interleaved, [46.226, 94.565, 153.081]),
+            (KernelChoice::Pruned, TileLayout::Soa, [46.771, 94.458, 157.109]),
+            (KernelChoice::Lanes, TileLayout::Interleaved, [28.415, 54.463, 74.355]),
+            (KernelChoice::Lanes, TileLayout::Soa, [27.301, 54.629, 74.319]),
+        ];
+        for (kernel, layout, ns) in table {
+            priors.insert(
+                prior_key(kernel, layout),
+                CALIB_KS.iter().copied().zip(ns).collect(),
+            );
+        }
+        CostModel {
+            priors,
+            decode_ns_per_byte: 0.07848,
+            error_bound: 0.5611,
+        }
+    }
+
+    /// Re-derive every prior from a `BENCH_layout.json`-shaped document
+    /// (rust bench or python model output): row cells become compute
+    /// floors, naive column/square cells fit the decode coefficient.
+    pub fn calibrate_from_json(text: &str) -> Result<CostModel> {
+        let doc = Json::parse(text).context("parse layout bench json")?;
+        let cases = doc
+            .get("cases")
+            .and_then(Json::as_arr)
+            .context("layout bench json has no cases")?;
+        let img = doc.get("image").and_then(Json::as_arr).context("image")?;
+        let n_px = img
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0))
+            .product::<f64>();
+        let passes = doc.get("iters").and_then(Json::as_f64).context("iters")? + 1.0;
+
+        let field = |c: &Json, k: &str| -> Result<f64> {
+            c.get(k).and_then(Json::as_f64).with_context(|| format!("case field {k}"))
+        };
+        // Parse one case's identity up front — a typo'd kernel/layout
+        // label in a calibration document is a clean error here, not a
+        // missing-prior panic at prediction time.
+        let cell_key = |c: &Json| -> Result<(KernelChoice, TileLayout, String, usize)> {
+            let s = |name: &str| -> Result<&str> {
+                c.get(name)
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("case field {name}"))
+            };
+            Ok((
+                s("kernel")?.parse().map_err(anyhow::Error::msg)?,
+                s("layout")?.parse().map_err(anyhow::Error::msg)?,
+                s("shape")?.to_string(),
+                field(c, "k")? as usize,
+            ))
+        };
+
+        let mut priors: BTreeMap<(KernelChoice, TileLayout), Vec<(usize, f64)>> = BTreeMap::new();
+        // ((kernel, layout), k) -> row-cell (ns, bytes); then fit decode
+        // from naive non-row cells against their row baseline.
+        let mut row_cells: BTreeMap<((KernelChoice, TileLayout), usize), (f64, f64)> =
+            BTreeMap::new();
+        for c in cases {
+            let (kernel, layout, shape, k) = cell_key(c)?;
+            if shape == "row" {
+                let ns = field(c, "ns_per_pixel_round")?;
+                row_cells.insert(((kernel, layout), k), (ns, field(c, "bytes_read")?));
+                priors.entry((kernel, layout)).or_default().push((k, ns));
+            }
+        }
+        for kernel in [KernelChoice::Naive, KernelChoice::Pruned, KernelChoice::Lanes] {
+            for layout in [TileLayout::Interleaved, TileLayout::Soa] {
+                anyhow::ensure!(
+                    priors.contains_key(&prior_key(kernel, layout)),
+                    "calibration document has no row cells for {kernel}/{layout}"
+                );
+            }
+        }
+        for series in priors.values_mut() {
+            series.sort_unstable_by_key(|&(k, _)| k);
+            series.dedup_by_key(|&mut (k, _)| k);
+        }
+
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for c in cases {
+            let (kernel, layout, shape, k) = cell_key(c)?;
+            if kernel != KernelChoice::Naive || shape == "row" {
+                continue;
+            }
+            let Some(&(row_ns, row_bytes)) = row_cells.get(&((kernel, layout), k)) else {
+                continue;
+            };
+            let excess_ns = (field(c, "ns_per_pixel_round")? - row_ns) * n_px * passes;
+            let excess_bytes = field(c, "bytes_read")? - row_bytes;
+            num += excess_ns * excess_bytes;
+            den += excess_bytes * excess_bytes;
+        }
+        let decode_ns_per_byte = if den > 0.0 { (num / den).max(0.0) } else { 0.0 };
+
+        let mut model = CostModel {
+            priors,
+            decode_ns_per_byte,
+            error_bound: 0.0,
+        };
+        // Stated bound = worst self-prediction over the matrix, floored
+        // at 10% so a tiny matrix cannot claim implausible precision.
+        let mut worst = 0.10f64;
+        for c in cases {
+            let (kernel, layout, _, k) = cell_key(c)?;
+            let measured = field(c, "ns_per_pixel_round")?;
+            let floor = model.compute_ns_px_pass(kernel, layout, k);
+            let Some(&(_, row_bytes)) = row_cells.get(&((kernel, layout), k)) else {
+                continue;
+            };
+            let excess = (field(c, "bytes_read")? - row_bytes).max(0.0);
+            let predicted = floor + excess * model.decode_ns_per_byte / (n_px * passes);
+            if measured > 0.0 {
+                worst = worst.max((predicted - measured).abs() / measured);
+            }
+        }
+        model.error_bound = worst;
+        Ok(model)
+    }
+
+    /// Compute floor (ns/px/pass) for a kernel/layout at cluster count
+    /// `k`: piecewise-linear between calibration points, clamped at the
+    /// ends, scaled for fused (see [`prior_key`]).
+    pub fn compute_ns_px_pass(&self, kernel: KernelChoice, layout: TileLayout, k: usize) -> f64 {
+        let series = self
+            .priors
+            .get(&prior_key(kernel, layout))
+            .expect("every kernel/layout pair has a prior series");
+        let base = interp(series, k);
+        match kernel {
+            KernelChoice::Fused => base * FUSED_OVER_PRUNED,
+            _ => base,
+        }
+    }
+
+    /// Blend an observed ns/px/pass into the prior nearest to `k`
+    /// (equal-weight EWMA). This is the `BlockCost` / `simtime`
+    /// feedback path: callers reduce a real run or a replay to one
+    /// observed number and feed it back.
+    pub fn refine(&mut self, kernel: KernelChoice, layout: TileLayout, k: usize, observed: f64) {
+        if !(observed.is_finite() && observed > 0.0) {
+            return;
+        }
+        let series = self
+            .priors
+            .get_mut(&prior_key(kernel, layout))
+            .expect("every kernel/layout pair has a prior series");
+        let nearest = series
+            .iter_mut()
+            .min_by_key(|(ck, _)| ck.abs_diff(k))
+            .expect("prior series is non-empty");
+        let observed = match kernel {
+            // Store fused observations back in pruned-floor units.
+            KernelChoice::Fused => observed / FUSED_OVER_PRUNED,
+            _ => observed,
+        };
+        nearest.1 = 0.5 * nearest.1 + 0.5 * observed;
+    }
+
+    /// Total strip transfers (decoding reads) and bytes for a plan's
+    /// geometry, closed form — mirrors what `AccessStats` will count.
+    ///
+    /// - SoA tiles fill once per job; interleaved re-reads every pass.
+    /// - A cache holding every strip collapses all re-reads to one
+    ///   decode per strip for the whole run. Partial caches get no
+    ///   credit (pessimistic: hit rate depends on access order).
+    fn transfers(
+        &self,
+        w: &Workload,
+        plan: &BlockPlan,
+        layout: TileLayout,
+        strip_cache: usize,
+    ) -> (u64, u64) {
+        let Some(strip_rows) = w.strip_rows else {
+            return (0, 0);
+        };
+        let strip_rows = strip_rows.max(1);
+        let (per_pass, strips, _) = crate::stripstore::read_amplification(plan, strip_rows);
+        let fill_passes = match layout {
+            TileLayout::Soa => 1,
+            TileLayout::Interleaved => w.passes(),
+        };
+        let transfers = if strip_cache >= strips && strips > 0 {
+            strips as u64
+        } else {
+            (per_pass * fill_passes) as u64
+        };
+        let strip_bytes = (strip_rows * w.width * w.channels * 4) as u64;
+        (transfers, transfers * strip_bytes)
+    }
+
+    /// Predict the cost of running `w` under the given strategy.
+    pub fn predict(
+        &self,
+        w: &Workload,
+        plan: &BlockPlan,
+        kernel: KernelChoice,
+        layout: TileLayout,
+        workers: usize,
+        strip_cache: usize,
+        prefetch: bool,
+    ) -> PlanCost {
+        let n_px = w.pixels() as f64;
+        let passes = w.passes() as f64;
+        let blocks = plan.len();
+        let workers = workers.max(1);
+
+        // Worker scaling relative to the reference the priors were
+        // measured at: ideal 1/W with W clamped to the block count (a
+        // 5-block plan cannot use a 16th worker), corrected by
+        // per-round barrier imbalance ceil(B/W)·W/B on both sides.
+        // Combined, the ratio reduces to exactly
+        // ceil(B/min(W,B)) / ceil(B/min(REF,B)).
+        let eff = |wk: usize| wk.min(blocks).max(1);
+        let imbalance = |wk: usize| {
+            let wk = eff(wk);
+            (blocks.div_ceil(wk) * wk) as f64 / blocks as f64
+        };
+        let scale = (eff(REF_WORKERS) as f64 / eff(workers) as f64) * imbalance(workers)
+            / imbalance(REF_WORKERS);
+
+        let floor = self.compute_ns_px_pass(kernel, layout, w.k);
+        let compute_secs = n_px * passes * floor * scale / 1e9;
+
+        let (strip_transfers, decode_bytes) = self.transfers(w, plan, layout, strip_cache);
+        // Excess beyond one clean image pass per fill pass — that much
+        // is already inside the row-calibrated floor.
+        let fill_passes = match layout {
+            TileLayout::Soa => 1u64,
+            TileLayout::Interleaved => w.passes() as u64,
+        };
+        let baseline_bytes = w.image_bytes() * fill_passes;
+        let excess_bytes = decode_bytes.saturating_sub(baseline_bytes) as f64;
+        let io_secs = excess_bytes * self.decode_ns_per_byte * scale / 1e9;
+
+        // Prefetch overlaps the excess decode with compute instead of
+        // serializing behind it.
+        let wall_secs = if prefetch {
+            compute_secs.max(io_secs)
+        } else {
+            compute_secs + io_secs
+        };
+        PlanCost {
+            wall_secs,
+            ns_per_pixel_pass: wall_secs * 1e9 / (n_px * passes),
+            compute_secs,
+            io_secs,
+            decode_bytes,
+            strip_transfers,
+        }
+    }
+}
+
+/// Piecewise-linear interpolation over a sorted `(k, ns)` series,
+/// clamped outside the calibrated range.
+fn interp(series: &[(usize, f64)], k: usize) -> f64 {
+    debug_assert!(!series.is_empty());
+    if k <= series[0].0 {
+        return series[0].1;
+    }
+    if let Some(&(last_k, last_ns)) = series.last() {
+        if k >= last_k {
+            return last_ns;
+        }
+    }
+    for pair in series.windows(2) {
+        let (k0, v0) = pair[0];
+        let (k1, v1) = pair[1];
+        if k <= k1 {
+            let t = (k - k0) as f64 / (k1 - k0) as f64;
+            return v0 + t * (v1 - v0);
+        }
+    }
+    series.last().unwrap().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::{BlockPlan, BlockShape};
+
+    fn workload(strip_rows: Option<usize>) -> Workload {
+        Workload {
+            height: 1024,
+            width: 1024,
+            channels: 3,
+            k: 4,
+            rounds: 4,
+            strip_rows,
+        }
+    }
+
+    #[test]
+    fn baked_priors_cover_every_kernel_layout() {
+        let m = CostModel::baked();
+        for kernel in KernelChoice::ALL {
+            for layout in [TileLayout::Interleaved, TileLayout::Soa] {
+                for k in [1, 2, 3, 4, 6, 8, 16] {
+                    let ns = m.compute_ns_px_pass(kernel, layout, k);
+                    assert!(ns > 0.0 && ns.is_finite(), "{kernel} {layout} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interpolation_is_monotone_between_calibration_points() {
+        let m = CostModel::baked();
+        let at = |k| m.compute_ns_px_pass(KernelChoice::Naive, TileLayout::Interleaved, k);
+        assert_eq!(at(1), at(2), "clamped below");
+        assert_eq!(at(8), at(12), "clamped above");
+        assert!(at(2) < at(3) && at(3) < at(4), "linear inside");
+        assert!((at(3) - (60.983 + 100.972) / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fused_floor_tracks_pruned() {
+        let m = CostModel::baked();
+        for k in [2, 4, 8] {
+            let pruned = m.compute_ns_px_pass(KernelChoice::Pruned, TileLayout::Interleaved, k);
+            let fused = m.compute_ns_px_pass(KernelChoice::Fused, TileLayout::Interleaved, k);
+            assert!((fused - pruned * 0.96).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn lanes_beat_naive_under_the_model() {
+        let m = CostModel::baked();
+        let w = workload(Some(64));
+        let plan = BlockPlan::new(1024, 1024, BlockShape::Rows { band_rows: 205 });
+        let naive = m.predict(&w, &plan, KernelChoice::Naive, TileLayout::Interleaved, 4, 0, false);
+        let lanes = m.predict(&w, &plan, KernelChoice::Lanes, TileLayout::Soa, 4, 0, false);
+        assert!(lanes.wall_secs < naive.wall_secs);
+    }
+
+    #[test]
+    fn column_shape_pays_decode_and_cache_recovers_it() {
+        let m = CostModel::baked();
+        let w = workload(Some(64));
+        let cols = BlockPlan::new(1024, 1024, BlockShape::Cols { band_cols: 205 });
+        let rows = BlockPlan::new(1024, 1024, BlockShape::Rows { band_rows: 205 });
+        let pick = |plan, cache| {
+            m.predict(&w, plan, KernelChoice::Naive, TileLayout::Interleaved, 4, cache, false)
+        };
+        let col_uncached = pick(&cols, 0);
+        let row_uncached = pick(&rows, 0);
+        assert!(col_uncached.io_secs > 0.0, "column re-reads must cost");
+        assert!(col_uncached.wall_secs > row_uncached.wall_secs);
+        // a cache holding all 16 strips collapses the re-reads
+        let col_cached = pick(&cols, 16);
+        assert!(col_cached.wall_secs < col_uncached.wall_secs);
+        assert_eq!(col_cached.strip_transfers, 16);
+    }
+
+    #[test]
+    fn direct_io_has_no_decode_term() {
+        let m = CostModel::baked();
+        let w = workload(None);
+        let plan = BlockPlan::new(1024, 1024, BlockShape::Cols { band_cols: 205 });
+        let c = m.predict(&w, &plan, KernelChoice::Naive, TileLayout::Interleaved, 4, 0, false);
+        assert_eq!(c.io_secs, 0.0);
+        assert_eq!(c.decode_bytes, 0);
+    }
+
+    #[test]
+    fn prefetch_overlaps_never_worsens() {
+        let m = CostModel::baked();
+        let w = workload(Some(64));
+        for shape in [
+            BlockShape::Cols { band_cols: 205 },
+            BlockShape::Square { side: 459 },
+        ] {
+            let plan = BlockPlan::new(1024, 1024, shape);
+            let plain =
+                m.predict(&w, &plan, KernelChoice::Naive, TileLayout::Interleaved, 4, 0, false);
+            let pf = m.predict(&w, &plan, KernelChoice::Naive, TileLayout::Interleaved, 4, 0, true);
+            assert!(pf.wall_secs <= plain.wall_secs);
+        }
+    }
+
+    #[test]
+    fn more_workers_predict_less_wall() {
+        let m = CostModel::baked();
+        let w = workload(Some(64));
+        let plan = BlockPlan::new(1024, 1024, BlockShape::Square { side: 459 });
+        let at = |wk| {
+            m.predict(&w, &plan, KernelChoice::Naive, TileLayout::Interleaved, wk, 0, false)
+                .wall_secs
+        };
+        assert!(at(8) < at(4));
+        assert!(at(4) < at(1));
+    }
+
+    #[test]
+    fn worker_scaling_saturates_at_the_block_count() {
+        let m = CostModel::baked();
+        let w = workload(Some(64));
+        // 5 row blocks: a 16th worker has nothing to do.
+        let plan = BlockPlan::new(1024, 1024, BlockShape::Rows { band_rows: 205 });
+        let at = |wk| {
+            m.predict(&w, &plan, KernelChoice::Naive, TileLayout::Interleaved, wk, 0, false)
+                .wall_secs
+        };
+        assert_eq!(at(16), at(5), "scaling must clamp to the block count");
+        // 4 workers run 5 blocks in 2 waves; 5 workers in 1: exact ceil ratio.
+        assert!((at(4) / at(5) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn refine_moves_the_floor_halfway() {
+        let mut m = CostModel::baked();
+        let before = m.compute_ns_px_pass(KernelChoice::Naive, TileLayout::Soa, 4);
+        m.refine(KernelChoice::Naive, TileLayout::Soa, 4, before * 2.0);
+        let after = m.compute_ns_px_pass(KernelChoice::Naive, TileLayout::Soa, 4);
+        assert!((after - before * 1.5).abs() < 1e-9);
+        // garbage observations are ignored
+        m.refine(KernelChoice::Naive, TileLayout::Soa, 4, f64::NAN);
+        m.refine(KernelChoice::Naive, TileLayout::Soa, 4, -1.0);
+        assert_eq!(m.compute_ns_px_pass(KernelChoice::Naive, TileLayout::Soa, 4), after);
+    }
+
+    #[test]
+    fn calibrates_from_committed_layout_bench() {
+        // The committed file lives at the repo root, two levels up from
+        // the crate manifest.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_layout.json");
+        let text = std::fs::read_to_string(path).expect("committed BENCH_layout.json");
+        let m = CostModel::calibrate_from_json(&text).unwrap();
+        let baked = CostModel::baked();
+        for kernel in [KernelChoice::Naive, KernelChoice::Pruned, KernelChoice::Lanes] {
+            for layout in [TileLayout::Interleaved, TileLayout::Soa] {
+                for k in CALIB_KS {
+                    let a = m.compute_ns_px_pass(kernel, layout, k);
+                    let b = baked.compute_ns_px_pass(kernel, layout, k);
+                    assert!(
+                        (a - b).abs() / b < 0.005,
+                        "{kernel} {layout} k={k}: calibrated {a} vs baked {b}"
+                    );
+                }
+            }
+        }
+        assert!((m.decode_ns_per_byte - baked.decode_ns_per_byte).abs() < 0.005);
+        assert!(m.error_bound <= baked.error_bound);
+    }
+}

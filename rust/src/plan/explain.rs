@@ -1,0 +1,174 @@
+//! The explain report: every candidate the planner considered, ranked.
+//!
+//! `blockms plan` prints this table; `blockms cluster --auto --dry-run`
+//! prints the chosen row plus the rationale. The report is data first —
+//! [`Explain::ranked`] is what `bench/plan.rs` records into
+//! `BENCH_plan.json` — and rendering second.
+
+use super::cost::PlanCost;
+use super::{ExecPlan, PlanRequest};
+use crate::util::fmt::Table;
+
+/// One candidate execution strategy with its predicted cost.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub plan: ExecPlan,
+    /// Blocks the shape yields on the requested image.
+    pub blocks: usize,
+    /// Block-grid extent `(grid_rows, grid_cols)`.
+    pub grid: (usize, usize),
+    pub cost: PlanCost,
+}
+
+/// The full report of one [`super::Planner::resolve`] call.
+#[derive(Clone, Debug)]
+pub struct Explain {
+    pub request: PlanRequest,
+    /// Candidates in enumeration order (deterministic).
+    pub candidates: Vec<Candidate>,
+    /// Index of the chosen candidate in `candidates`.
+    pub chosen: usize,
+    /// The cost model's stated relative prediction-error bound.
+    pub error_bound: f64,
+}
+
+impl Explain {
+    pub(super) fn new(
+        request: PlanRequest,
+        candidates: Vec<Candidate>,
+        chosen: usize,
+        error_bound: f64,
+    ) -> Explain {
+        assert!(chosen < candidates.len(), "chosen candidate out of range");
+        Explain {
+            request,
+            candidates,
+            chosen,
+            error_bound,
+        }
+    }
+
+    pub fn chosen(&self) -> &Candidate {
+        &self.candidates[self.chosen]
+    }
+
+    /// Candidates sorted by predicted wall time (stable: prediction
+    /// ties keep enumeration order). The chosen candidate is always
+    /// `ranked()[0]` — the no-regret invariant the property suite
+    /// checks.
+    pub fn ranked(&self) -> Vec<&Candidate> {
+        let mut v: Vec<&Candidate> = self.candidates.iter().collect();
+        v.sort_by(|a, b| {
+            a.cost
+                .wall_secs
+                .partial_cmp(&b.cost.wall_secs)
+                .expect("predicted costs are finite")
+        });
+        v
+    }
+
+    /// Predicted slowdown of a candidate vs the chosen plan (1.0 for
+    /// the pick itself).
+    pub fn predicted_slowdown(&self, c: &Candidate) -> f64 {
+        c.cost.wall_secs / self.chosen().cost.wall_secs
+    }
+
+    /// One line of planner rationale for the chosen plan.
+    pub fn rationale(&self) -> String {
+        let c = self.chosen();
+        let io = if c.cost.io_secs > 0.0 {
+            format!(
+                ", {:.1} MiB strip decode",
+                c.cost.decode_bytes as f64 / (1 << 20) as f64
+            )
+        } else {
+            String::new()
+        };
+        format!(
+            "picked {} over {} candidates: predicted {:.2} ns/px/pass \
+             ({:.0}% compute{io}); model error bound ±{:.0}%",
+            c.plan.summary(),
+            self.candidates.len(),
+            c.cost.ns_per_pixel_pass,
+            100.0 * c.cost.compute_secs / c.cost.wall_secs.max(f64::MIN_POSITIVE),
+            100.0 * self.error_bound,
+        )
+    }
+
+    /// The explain table `blockms plan` prints: every candidate ranked
+    /// by predicted cost, the chosen row marked.
+    pub fn render(&self, top: usize) -> String {
+        let ranked = self.ranked();
+        let shown = ranked.len().min(top.max(1));
+        let mut t = Table::new(format!(
+            "Plan candidates for {}x{} c={} k={} rounds={} ({} shown of {}, model ±{:.0}%)",
+            self.request.width,
+            self.request.height,
+            self.request.channels,
+            self.request.k,
+            self.request.rounds,
+            shown,
+            ranked.len(),
+            100.0 * self.error_bound,
+        ))
+        .header(&[
+            "", "Shape", "Grid", "Kernel", "Layout", "Cache", "Pf", "ns/px/pass", "Pred wall",
+            "vs pick",
+        ]);
+        for c in ranked.iter().take(shown) {
+            let pick = std::ptr::eq(*c, self.chosen());
+            t.row(vec![
+                if pick { "*" } else { "" }.to_string(),
+                c.plan.shape.to_string(),
+                format!("{}x{}", c.grid.0, c.grid.1),
+                c.plan.kernel.to_string(),
+                c.plan.layout.to_string(),
+                c.plan.strip_cache.to_string(),
+                if c.plan.prefetch { "y" } else { "-" }.to_string(),
+                format!("{:.2}", c.cost.ns_per_pixel_pass),
+                crate::util::fmt::duration(c.cost.wall_secs),
+                format!("{:.2}x", self.predicted_slowdown(c)),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{PlanRequest, Planner};
+
+    fn explain() -> super::Explain {
+        let req = PlanRequest::new(512, 512, 3, 4)
+            .with_rounds(3)
+            .with_strip_rows(Some(32));
+        Planner::default().resolve(&req).1
+    }
+
+    #[test]
+    fn ranked_puts_the_pick_first() {
+        let e = explain();
+        let ranked = e.ranked();
+        assert_eq!(ranked.len(), e.candidates.len());
+        assert!(std::ptr::eq(ranked[0], e.chosen()));
+        for w in ranked.windows(2) {
+            assert!(w[0].cost.wall_secs <= w[1].cost.wall_secs);
+        }
+    }
+
+    #[test]
+    fn render_marks_the_pick_and_truncates() {
+        let e = explain();
+        let text = e.render(5);
+        assert!(text.contains('*'), "{text}");
+        assert!(text.contains("5 shown of"), "{text}");
+        assert!(text.contains("ns/px/pass"), "{text}");
+    }
+
+    #[test]
+    fn rationale_names_candidate_count() {
+        let e = explain();
+        let r = e.rationale();
+        assert!(r.contains(&format!("over {} candidates", e.candidates.len())), "{r}");
+    }
+}

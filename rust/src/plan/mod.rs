@@ -1,0 +1,508 @@
+//! The execution-planning subsystem: one resolved plan per run.
+//!
+//! The paper's central observation is that the *best* execution
+//! strategy — block shape, kernel, tile layout, cache sizing — depends
+//! on workload geometry and the balance of I/O vs compute. Before this
+//! subsystem every knob was threaded by hand through
+//! `CoordinatorConfig`, `JobSpec`, and the CLI; now every entry point
+//! resolves its inputs into one [`ExecPlan`] up front and consumes only
+//! that:
+//!
+//! ```text
+//!   pins (CLI flags / config / caller)          workload geometry
+//!                  │                                   │
+//!                  ▼                                   ▼
+//!            [`PlanRequest`] ──▶ [`Planner`] + [`CostModel`]
+//!                                     │
+//!                      ┌──────────────┴──────────────┐
+//!                      ▼                             ▼
+//!                 [`ExecPlan`]                  [`Explain`]
+//!            (the one resolved run          (every candidate with
+//!             description everything         its predicted cost —
+//!             downstream consumes)           `blockms plan` prints it)
+//! ```
+//!
+//! A fully-pinned request resolves to exactly its pins (the planner
+//! never overrides an explicit choice); unpinned knobs are chosen by
+//! minimizing the [`CostModel`]'s predicted wall time over the
+//! candidate grid. Resolution is **deterministic**: candidates are
+//! enumerated in a fixed order and ties break toward the earlier
+//! candidate, so the same request and priors always yield the same
+//! plan. The planner only *selects among* bit-identical kernels and
+//! layouts, so auto-planning can never change results — only speed.
+
+mod cost;
+mod explain;
+
+pub use cost::{CostModel, PlanCost, Workload, CALIB_KS, REF_WORKERS};
+pub use explain::{Candidate, Explain};
+
+use crate::blocks::{ApproachKind, BlockPlan, BlockShape};
+use crate::kmeans::kernel::KernelChoice;
+use crate::kmeans::tile::TileLayout;
+
+/// Worker count the planner assumes when nothing pins it.
+pub const DEFAULT_WORKERS: usize = 4;
+
+/// Tile-arena budget (MiB) when nothing pins it and the planner has no
+/// reason to size it to the workload.
+pub const DEFAULT_ARENA_MB: usize = 256;
+
+/// The single resolved description of one run: everything the
+/// coordinator, the service, the workers, and the benches need to
+/// execute — no `Option`s, no "resolve later".
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecPlan {
+    /// Concrete block geometry (already sized, not an approach kind).
+    pub shape: BlockShape,
+    /// Worker thread count (paper: 2, 4, 8).
+    pub workers: usize,
+    /// Compute kernel for step/assign rounds — bit-identical results
+    /// across all choices (see [`crate::kmeans::kernel`]).
+    pub kernel: KernelChoice,
+    /// How block pixels are held across rounds (see
+    /// [`crate::kmeans::tile`]). Always concrete: construction resolves
+    /// "kernel native" immediately.
+    pub layout: TileLayout,
+    /// Per-worker tile-arena byte budget in MiB (SoA layout).
+    pub arena_mb: usize,
+    /// Overlap next-block reads with compute (double buffering).
+    pub prefetch: bool,
+    /// Shared decoded-strip LRU capacity in strips (0 = no cache);
+    /// meaningful only under strip I/O.
+    pub strip_cache: usize,
+}
+
+impl Default for ExecPlan {
+    /// A neutral pinned plan for direct construction in tests and
+    /// examples: square 256-tiles, naive kernel, its native interleaved
+    /// layout. Real entry points resolve through [`Planner::resolve`].
+    fn default() -> Self {
+        ExecPlan::pinned(BlockShape::Square { side: 256 })
+    }
+}
+
+impl ExecPlan {
+    /// A fully-pinned plan with the repo's historical defaults for
+    /// everything but the shape. Chain the `with_*` builders to pin the
+    /// rest.
+    pub fn pinned(shape: BlockShape) -> ExecPlan {
+        ExecPlan {
+            shape,
+            workers: DEFAULT_WORKERS,
+            kernel: KernelChoice::Naive,
+            layout: KernelChoice::Naive.default_layout(),
+            arena_mb: DEFAULT_ARENA_MB,
+            prefetch: false,
+            strip_cache: 0,
+        }
+    }
+
+    pub fn with_shape(mut self, shape: BlockShape) -> ExecPlan {
+        self.shape = shape;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> ExecPlan {
+        assert!(workers > 0, "need at least one worker");
+        self.workers = workers;
+        self
+    }
+
+    /// Pin the kernel; the layout follows to the kernel's native shape
+    /// (call [`ExecPlan::with_layout`] *after* this to override).
+    pub fn with_kernel(mut self, kernel: KernelChoice) -> ExecPlan {
+        self.kernel = kernel;
+        self.layout = kernel.default_layout();
+        self
+    }
+
+    pub fn with_layout(mut self, layout: TileLayout) -> ExecPlan {
+        self.layout = layout;
+        self
+    }
+
+    pub fn with_arena_mb(mut self, arena_mb: usize) -> ExecPlan {
+        self.arena_mb = arena_mb;
+        self
+    }
+
+    pub fn with_prefetch(mut self, prefetch: bool) -> ExecPlan {
+        self.prefetch = prefetch;
+        self
+    }
+
+    pub fn with_strip_cache(mut self, strips: usize) -> ExecPlan {
+        self.strip_cache = strips;
+        self
+    }
+
+    /// Per-worker arena budget in bytes.
+    pub fn arena_bytes(&self) -> usize {
+        self.arena_mb << 20
+    }
+
+    /// Materialize the block tiling for an image (deterministic — the
+    /// solo coordinator and the service derive identical plans from
+    /// identical specs by construction).
+    pub fn block_plan(&self, height: usize, width: usize) -> BlockPlan {
+        BlockPlan::new(height, width, self.shape)
+    }
+
+    /// Resolved block-grid extent for an image.
+    pub fn grid(&self, height: usize, width: usize) -> (usize, usize) {
+        self.block_plan(height, width).grid_dims()
+    }
+
+    /// One-line human rendering ("what ran"), used by the `blockms
+    /// cluster` summary and the explain table.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{} · {} · {} · {}w",
+            self.shape, self.kernel, self.layout, self.workers
+        );
+        if self.strip_cache > 0 {
+            s.push_str(&format!(" · cache {}", self.strip_cache));
+        }
+        if self.prefetch {
+            s.push_str(" · prefetch");
+        }
+        s
+    }
+}
+
+/// A planning request: workload geometry plus a pin for every knob the
+/// planner may otherwise choose. `None` = the planner decides.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PlanRequest {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub k: usize,
+    /// Expected Lloyd iterations (fixed_iters, or max_iters as bound).
+    pub rounds: usize,
+    /// Strip height of the I/O model (`None` = direct crops).
+    pub strip_rows: Option<usize>,
+    pub shape: Option<BlockShape>,
+    pub workers: Option<usize>,
+    pub kernel: Option<KernelChoice>,
+    pub layout: Option<TileLayout>,
+    pub arena_mb: Option<usize>,
+    pub prefetch: Option<bool>,
+    pub strip_cache: Option<usize>,
+}
+
+impl PlanRequest {
+    pub fn new(height: usize, width: usize, channels: usize, k: usize) -> PlanRequest {
+        PlanRequest {
+            height,
+            width,
+            channels,
+            k,
+            rounds: crate::kmeans::KMeansConfig::default().max_iters,
+            ..Default::default()
+        }
+    }
+
+    /// The workload geometry slice the cost model consumes.
+    pub fn workload(&self) -> Workload {
+        Workload {
+            height: self.height,
+            width: self.width,
+            channels: self.channels,
+            k: self.k,
+            rounds: self.rounds,
+            strip_rows: self.strip_rows,
+        }
+    }
+
+    /// Pin every knob from an existing plan — the resulting request
+    /// round-trips through [`Planner::resolve`] unchanged (a tested
+    /// property).
+    pub fn pin_all(mut self, plan: &ExecPlan) -> PlanRequest {
+        self.shape = Some(plan.shape);
+        self.workers = Some(plan.workers);
+        self.kernel = Some(plan.kernel);
+        self.layout = Some(plan.layout);
+        self.arena_mb = Some(plan.arena_mb);
+        self.prefetch = Some(plan.prefetch);
+        self.strip_cache = Some(plan.strip_cache);
+        self
+    }
+
+    pub fn with_rounds(mut self, rounds: usize) -> PlanRequest {
+        self.rounds = rounds.max(1);
+        self
+    }
+
+    pub fn with_strip_rows(mut self, strip_rows: Option<usize>) -> PlanRequest {
+        self.strip_rows = strip_rows;
+        self
+    }
+
+    /// True when every knob is pinned (the planner has nothing to do).
+    pub fn fully_pinned(&self) -> bool {
+        self.shape.is_some()
+            && self.workers.is_some()
+            && self.kernel.is_some()
+            && self.layout.is_some()
+            && self.arena_mb.is_some()
+            && self.prefetch.is_some()
+            && self.strip_cache.is_some()
+    }
+}
+
+/// The planner: candidate enumeration + cost-model argmin. See module
+/// docs for the determinism and never-override-a-pin contracts.
+#[derive(Clone, Debug, Default)]
+pub struct Planner {
+    model: CostModel,
+}
+
+impl Planner {
+    pub fn new(model: CostModel) -> Planner {
+        Planner { model }
+    }
+
+    pub fn model(&self) -> &CostModel {
+        &self.model
+    }
+
+    pub fn model_mut(&mut self) -> &mut CostModel {
+        &mut self.model
+    }
+
+    /// Every candidate the request admits, in the fixed enumeration
+    /// order (shapes, then kernels, then layouts, then cache, then
+    /// prefetch), each with its predicted cost. Pins collapse an axis
+    /// to the pinned value.
+    pub fn candidates(&self, req: &PlanRequest) -> Vec<Candidate> {
+        assert!(
+            req.height > 0 && req.width > 0 && req.channels > 0 && req.k > 0,
+            "degenerate plan request {}x{} c={} k={}",
+            req.height,
+            req.width,
+            req.channels,
+            req.k
+        );
+        let w = req.workload();
+        let shapes: Vec<BlockShape> = match req.shape {
+            Some(s) => vec![s],
+            None => ApproachKind::ALL
+                .iter()
+                .map(|&a| BlockShape::paper_default(a, req.height, req.width))
+                .collect(),
+        };
+        let kernels: Vec<KernelChoice> = match req.kernel {
+            Some(k) => vec![k],
+            None => KernelChoice::ALL.to_vec(),
+        };
+        let layouts: Vec<TileLayout> = match req.layout {
+            Some(l) => vec![l],
+            None => vec![TileLayout::Interleaved, TileLayout::Soa],
+        };
+        let caches: Vec<usize> = match req.strip_cache {
+            Some(c) => vec![c],
+            // A cache only matters when strips can be re-decoded.
+            None if req.strip_rows.is_some() => vec![0, w.unique_strips()],
+            None => vec![0],
+        };
+        let prefetches: Vec<bool> = match req.prefetch {
+            Some(p) => vec![p],
+            None if req.strip_rows.is_some() => vec![false, true],
+            None => vec![false],
+        };
+        let workers = req.workers.unwrap_or(DEFAULT_WORKERS);
+        let arena_mb = req.arena_mb.unwrap_or_else(|| self.auto_arena_mb(&w, workers));
+
+        let mut out = Vec::new();
+        for &shape in &shapes {
+            let plan = BlockPlan::new(req.height, req.width, shape);
+            for &kernel in &kernels {
+                for &layout in &layouts {
+                    for &strip_cache in &caches {
+                        for &prefetch in &prefetches {
+                            let cost = self.model.predict(
+                                &w,
+                                &plan,
+                                kernel,
+                                layout,
+                                workers,
+                                strip_cache,
+                                prefetch,
+                            );
+                            out.push(Candidate {
+                                plan: ExecPlan {
+                                    shape,
+                                    workers,
+                                    kernel,
+                                    layout,
+                                    arena_mb,
+                                    prefetch,
+                                    strip_cache,
+                                },
+                                blocks: plan.len(),
+                                grid: plan.grid_dims(),
+                                cost,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Resolve a request into the one plan to run, plus the explain
+    /// report over everything that was considered.
+    pub fn resolve(&self, req: &PlanRequest) -> (ExecPlan, Explain) {
+        let candidates = self.candidates(req);
+        // Deterministic argmin: strictly-less keeps the earliest of a
+        // tie, and enumeration order is fixed.
+        let mut best = 0usize;
+        for (i, c) in candidates.iter().enumerate() {
+            if c.cost.wall_secs < candidates[best].cost.wall_secs {
+                best = i;
+            }
+        }
+        let plan = candidates[best].plan;
+        let explain = Explain::new(req.clone(), candidates, best, self.model.error_bound);
+        (plan, explain)
+    }
+
+    /// Arena sizing when unpinned: big enough that every SoA tile of
+    /// the job fits its worker's share with deinterleave padding slack,
+    /// floored at the historical default.
+    fn auto_arena_mb(&self, w: &Workload, workers: usize) -> usize {
+        let per_worker = (w.image_bytes() as usize * 5 / 4) / workers.max(1);
+        DEFAULT_ARENA_MB.max(per_worker.div_ceil(1 << 20))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> PlanRequest {
+        PlanRequest::new(1024, 1024, 3, 4)
+            .with_rounds(4)
+            .with_strip_rows(Some(64))
+    }
+
+    #[test]
+    fn fully_pinned_request_round_trips() {
+        let pinned = ExecPlan::pinned(BlockShape::Cols { band_cols: 205 })
+            .with_workers(2)
+            .with_kernel(KernelChoice::Pruned)
+            .with_layout(TileLayout::Soa)
+            .with_arena_mb(64)
+            .with_prefetch(true)
+            .with_strip_cache(7);
+        let r = req().pin_all(&pinned);
+        assert!(r.fully_pinned());
+        let (resolved, explain) = Planner::default().resolve(&r);
+        assert_eq!(resolved, pinned);
+        assert_eq!(explain.candidates.len(), 1);
+    }
+
+    #[test]
+    fn auto_explores_the_full_grid() {
+        let (plan, explain) = Planner::default().resolve(&req());
+        // 3 shapes x 4 kernels x 2 layouts x 2 caches x 2 prefetch
+        assert_eq!(explain.candidates.len(), 96);
+        // the model's lanes floors dominate: auto must not pick naive
+        assert_eq!(plan.kernel, KernelChoice::Lanes);
+        // picked plan is the explain's chosen row
+        assert_eq!(explain.chosen().plan, plan);
+    }
+
+    #[test]
+    fn pick_is_no_regret_under_its_own_model() {
+        let planner = Planner::default();
+        for k in [1, 2, 3, 5, 8, 13] {
+            let mut r = req();
+            r.k = k;
+            let (plan, explain) = planner.resolve(&r);
+            let chosen = explain.chosen();
+            assert_eq!(chosen.plan, plan);
+            for c in &explain.candidates {
+                assert!(
+                    chosen.cost.wall_secs <= c.cost.wall_secs,
+                    "k={k}: picked {:?} but {:?} predicts cheaper",
+                    chosen.plan,
+                    c.plan
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resolution_is_deterministic() {
+        let planner = Planner::default();
+        let (a, ea) = planner.resolve(&req());
+        let (b, eb) = planner.resolve(&req());
+        assert_eq!(a, b);
+        assert_eq!(
+            ea.candidates.iter().map(|c| c.plan).collect::<Vec<_>>(),
+            eb.candidates.iter().map(|c| c.plan).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn pins_constrain_the_search() {
+        let planner = Planner::default();
+        let mut r = req();
+        r.kernel = Some(KernelChoice::Naive);
+        r.prefetch = Some(false);
+        let (plan, explain) = planner.resolve(&r);
+        assert_eq!(plan.kernel, KernelChoice::Naive);
+        assert!(!plan.prefetch);
+        assert!(explain.candidates.iter().all(|c| c.plan.kernel == KernelChoice::Naive));
+        // 3 shapes x 1 kernel x 2 layouts x 2 caches x 1 prefetch
+        assert_eq!(explain.candidates.len(), 12);
+    }
+
+    #[test]
+    fn direct_io_skips_cache_and_prefetch_axes() {
+        let planner = Planner::default();
+        let r = PlanRequest::new(512, 512, 3, 2).with_rounds(3);
+        let (plan, explain) = planner.resolve(&r);
+        assert_eq!(plan.strip_cache, 0);
+        assert!(!plan.prefetch);
+        // 3 shapes x 4 kernels x 2 layouts
+        assert_eq!(explain.candidates.len(), 24);
+    }
+
+    #[test]
+    fn auto_arena_scales_with_image() {
+        let planner = Planner::default();
+        let small = PlanRequest::new(256, 256, 3, 2);
+        let (p_small, _) = planner.resolve(&small);
+        assert_eq!(p_small.arena_mb, DEFAULT_ARENA_MB);
+        let huge = PlanRequest::new(16384, 16384, 3, 2);
+        let (p_huge, _) = planner.resolve(&huge);
+        // 16384^2 x 3 x 4 bytes x 1.25 / 4 workers = 960 MiB
+        assert!(p_huge.arena_mb > DEFAULT_ARENA_MB, "{}", p_huge.arena_mb);
+    }
+
+    #[test]
+    fn with_kernel_follows_native_layout_then_override() {
+        let p = ExecPlan::default().with_kernel(KernelChoice::Lanes);
+        assert_eq!(p.layout, TileLayout::Soa);
+        let p = p.with_layout(TileLayout::Interleaved);
+        assert_eq!(p.layout, TileLayout::Interleaved);
+        assert_eq!(p.kernel, KernelChoice::Lanes);
+    }
+
+    #[test]
+    fn summary_names_the_strategy() {
+        let s = ExecPlan::pinned(BlockShape::Square { side: 459 })
+            .with_kernel(KernelChoice::Lanes)
+            .with_strip_cache(16)
+            .with_prefetch(true)
+            .summary();
+        for part in ["square[459 459]", "lanes", "soa", "4w", "cache 16", "prefetch"] {
+            assert!(s.contains(part), "{part} missing from {s:?}");
+        }
+    }
+}

@@ -1,11 +1,15 @@
 //! Job descriptions and client-side handles.
 //!
 //! A [`JobSpec`] is everything one clustering request needs — image,
-//! block plan, clustering parameters, and per-job execution knobs
-//! (mode, I/O model, compute kernel, engine). Two jobs sharing a pool
-//! can differ in *all* of these: the pool's workers key their state by
-//! job id, so a k=8 fused strip-I/O job interleaves safely with a k=2
-//! naive direct-I/O one.
+//! clustering parameters, a resolved [`ExecPlan`], and the
+//! run-environment choices (mode, I/O model, engine). The spec embeds
+//! the *same* `ExecPlan` type every other entry point consumes — it
+//! does not re-declare kernel/layout/cache knobs, so the solo and
+//! service paths cannot drift (a regression test in
+//! `tests/plan_resolution.rs` holds them identical). Two jobs sharing a
+//! pool can differ in all of these: the pool's workers key their state
+//! by job id, so a k=8 fused strip-I/O job interleaves safely with a
+//! k=2 naive direct-I/O one.
 //!
 //! Submitting a spec yields a [`JobHandle`]: a cheap, cloneable,
 //! thread-safe view of the job's lifecycle
@@ -24,46 +28,36 @@ use crate::coordinator::{
 use crate::image::Raster;
 use crate::kmeans::kernel::KernelChoice;
 use crate::kmeans::tile::TileLayout;
+use crate::plan::ExecPlan;
 
 /// One clustering request, self-contained: the service needs nothing
 /// else to run it. Defaults mirror [`crate::coordinator::CoordinatorConfig`].
 #[derive(Clone)]
 pub struct JobSpec {
     pub image: Arc<Raster>,
-    pub plan: Arc<BlockPlan>,
     pub cluster: ClusterConfig,
+    /// The job's resolved execution plan. The block tiling is derived
+    /// from `exec.shape` at activation ([`JobSpec::block_plan`]);
+    /// `exec.workers` sizes nothing here — the shared pool's width is
+    /// the server's ([`crate::service::ServerConfig::workers`]).
+    pub exec: ExecPlan,
     pub mode: ClusterMode,
     pub io: IoMode,
-    pub kernel: KernelChoice,
     pub engine: Engine,
-    /// Block layout across rounds (`None` = the kernel's native shape;
-    /// see [`crate::coordinator::CoordinatorConfig::layout`]).
-    pub layout: Option<TileLayout>,
-    /// Per-worker tile-arena budget in MiB (SoA layout).
-    pub arena_mb: usize,
-    /// Overlap next-block reads with compute on the workers.
-    pub prefetch: bool,
-    /// Shared decoded-strip LRU capacity in strips (0 = off).
-    pub strip_cache: usize,
     /// Fault injection for tests: this block index fails.
     pub fail_block: Option<usize>,
 }
 
 impl JobSpec {
-    /// A global-mode, direct-I/O, naive-kernel, native-engine job.
-    pub fn new(image: Arc<Raster>, plan: Arc<BlockPlan>, cluster: ClusterConfig) -> JobSpec {
+    /// A global-mode, direct-I/O, native-engine job running `exec`.
+    pub fn new(image: Arc<Raster>, exec: ExecPlan, cluster: ClusterConfig) -> JobSpec {
         JobSpec {
             image,
-            plan,
             cluster,
+            exec,
             mode: ClusterMode::Global,
             io: IoMode::Direct,
-            kernel: KernelChoice::Naive,
             engine: Engine::Native,
-            layout: None,
-            arena_mb: 256,
-            prefetch: false,
-            strip_cache: 0,
             fail_block: None,
         }
     }
@@ -78,55 +72,59 @@ impl JobSpec {
         self
     }
 
-    pub fn with_kernel(mut self, kernel: KernelChoice) -> JobSpec {
-        self.kernel = kernel;
-        self
-    }
-
     pub fn with_engine(mut self, engine: Engine) -> JobSpec {
         self.engine = engine;
         self
     }
 
+    /// Replace the whole execution plan.
+    pub fn with_exec(mut self, exec: ExecPlan) -> JobSpec {
+        self.exec = exec;
+        self
+    }
+
+    /// Pin one kernel. The layout follows to the kernel's native shape
+    /// (see [`ExecPlan::with_kernel`]), so call [`JobSpec::with_layout`]
+    /// *after* this to keep an explicit layout choice.
+    pub fn with_kernel(mut self, kernel: KernelChoice) -> JobSpec {
+        self.exec = self.exec.with_kernel(kernel);
+        self
+    }
+
+    /// Pin the tile layout. Order matters: [`JobSpec::with_kernel`]
+    /// resets the layout to the kernel's native shape, so pin the
+    /// kernel first and the layout second.
     pub fn with_layout(mut self, layout: TileLayout) -> JobSpec {
-        self.layout = Some(layout);
+        self.exec = self.exec.with_layout(layout);
         self
     }
 
     pub fn with_arena_mb(mut self, arena_mb: usize) -> JobSpec {
-        self.arena_mb = arena_mb;
+        self.exec = self.exec.with_arena_mb(arena_mb);
         self
     }
 
     pub fn with_prefetch(mut self, prefetch: bool) -> JobSpec {
-        self.prefetch = prefetch;
+        self.exec = self.exec.with_prefetch(prefetch);
         self
     }
 
     pub fn with_strip_cache(mut self, strips: usize) -> JobSpec {
-        self.strip_cache = strips;
+        self.exec = self.exec.with_strip_cache(strips);
         self
     }
 
-    /// The concrete layout this job runs (explicit, or the kernel's
-    /// native shape).
-    pub fn resolved_layout(&self) -> TileLayout {
-        self.layout.unwrap_or_else(|| self.kernel.default_layout())
+    /// The block tiling this job runs — derived from the embedded plan
+    /// against the actual image, exactly as the solo coordinator does,
+    /// so identical specs tile identically on both paths.
+    pub fn block_plan(&self) -> BlockPlan {
+        self.exec.block_plan(self.image.height(), self.image.width())
     }
 
     /// Reject malformed specs at submission time, before they occupy an
     /// admission slot's worth of pool work.
     pub fn validate(&self) -> Result<()> {
         ensure!(self.cluster.k >= 1, "k must be at least 1");
-        ensure!(
-            self.plan.height() == self.image.height() && self.plan.width() == self.image.width(),
-            "plan {}x{} does not match image {}x{}",
-            self.plan.height(),
-            self.plan.width(),
-            self.image.height(),
-            self.image.width()
-        );
-        ensure!(!self.plan.is_empty(), "block plan has no blocks");
         ensure!(
             self.image.pixels() >= self.cluster.k,
             "cannot init {} clusters from {} pixels",
@@ -271,8 +269,11 @@ mod tests {
 
     fn spec(h: usize, w: usize) -> JobSpec {
         let img = Arc::new(SyntheticOrtho::default().with_seed(3).generate(h, w));
-        let plan = Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 8 }));
-        JobSpec::new(img, plan, ClusterConfig::default())
+        JobSpec::new(
+            img,
+            ExecPlan::pinned(BlockShape::Square { side: 8 }),
+            ClusterConfig::default(),
+        )
     }
 
     #[test]
@@ -281,10 +282,13 @@ mod tests {
     }
 
     #[test]
-    fn mismatched_plan_rejected() {
-        let mut s = spec(16, 16);
-        s.plan = Arc::new(BlockPlan::new(8, 8, BlockShape::Square { side: 4 }));
-        assert!(s.validate().is_err());
+    fn block_plan_follows_the_image() {
+        // The old plan/image mismatch hazard is unrepresentable: the
+        // tiling is derived from the exec plan against the image.
+        let s = spec(16, 16);
+        let plan = s.block_plan();
+        assert_eq!((plan.height(), plan.width()), (16, 16));
+        assert_eq!(plan.len(), 4);
     }
 
     #[test]

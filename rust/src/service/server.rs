@@ -339,6 +339,10 @@ impl ServingLoop {
     fn try_activate(&mut self, new: &NewJob) -> Result<()> {
         let spec = &new.spec;
         let img = &spec.image;
+        // The tiling derives from the spec's ExecPlan exactly as the
+        // solo coordinator derives it — same shape, same image, same
+        // plan, hence bit-identical reduction order.
+        let plan = Arc::new(spec.block_plan());
         // Per-job strip store: a globally unique directory (pid + a
         // process-wide sequence + job id) so two same-shaped concurrent
         // jobs — even on different servers — never collide on a backing
@@ -358,23 +362,20 @@ impl ServingLoop {
                     Backing::Memory
                 };
                 let mut store = StripStore::new(img, *strip_rows, backing)?;
-                store.enable_cache(spec.strip_cache);
+                store.enable_cache(spec.exec.strip_cache);
                 let store = Arc::new(store);
                 (BlockSource::Strips(Arc::clone(&store)), Some(store))
             }
         };
         let ctx = Arc::new(WorkerContext {
-            plan: Arc::clone(&spec.plan),
+            plan: Arc::clone(&plan),
             source,
             backend: spec
                 .engine
                 .backend_spec(spec.cluster.k, img.channels())?,
             fail_block: spec.fail_block,
             local_mode: spec.mode == ClusterMode::Local,
-            kernel: spec.kernel,
-            layout: spec.resolved_layout(),
-            arena_bytes: spec.arena_mb << 20,
-            prefetch: spec.prefetch,
+            exec: spec.exec,
         });
         // Same init draw as the solo Coordinator and the sequential
         // baseline — the root of per-job determinism.
@@ -384,7 +385,7 @@ impl ServingLoop {
                 .centroids(img.as_pixels(), spec.cluster.k, img.channels(), spec.cluster.seed);
         let mut machine = RunMachine::new(
             spec.mode,
-            Arc::clone(&spec.plan),
+            Arc::clone(&plan),
             img.channels(),
             &spec.cluster,
             init_centroids,
@@ -404,7 +405,7 @@ impl ServingLoop {
                 store_dir,
                 handle: Arc::clone(&new.handle),
                 started: Instant::now(),
-                blocks: spec.plan.len(),
+                blocks: plan.len(),
                 cancelling: false,
                 failed: None,
             },
@@ -568,16 +569,15 @@ impl ServingLoop {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::blocks::{BlockPlan, BlockShape};
+    use crate::blocks::BlockShape;
     use crate::coordinator::ClusterConfig;
     use crate::image::SyntheticOrtho;
 
     fn spec(seed: u64) -> JobSpec {
         let img = Arc::new(SyntheticOrtho::default().with_seed(seed).generate(32, 28));
-        let plan = Arc::new(BlockPlan::new(32, 28, BlockShape::Square { side: 10 }));
         JobSpec::new(
             img,
-            plan,
+            crate::plan::ExecPlan::pinned(BlockShape::Square { side: 10 }),
             ClusterConfig {
                 k: 2,
                 seed,
@@ -605,7 +605,7 @@ mod tests {
     fn invalid_spec_rejected_without_admission_leak() {
         let server = ClusterServer::start(ServerConfig::default());
         let mut bad = spec(1);
-        bad.plan = Arc::new(BlockPlan::new(4, 4, BlockShape::Square { side: 2 }));
+        bad.cluster.k = 32 * 28 + 1; // more clusters than pixels
         assert!(server.submit(bad).is_err());
         assert_eq!(server.stats().admission.in_flight, 0);
         server.shutdown();

@@ -6,7 +6,7 @@
 //! accessors with defaults. Unknown options are hard errors — silent typos
 //! in a bench sweep would corrupt results.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt::Write as _;
 
 /// Specification of one option.
@@ -32,6 +32,10 @@ pub struct Cli {
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: BTreeMap<String, bool>,
+    /// Options/flags the user actually typed (vs spec defaults) — what
+    /// distinguishes a *pinned* knob from a planner-free one under
+    /// `--auto`.
+    explicit: BTreeSet<String>,
     pub positional: Vec<String>,
 }
 
@@ -139,6 +143,7 @@ impl Cli {
                             .next()
                             .ok_or_else(|| CliError::MissingValue(name.clone()))?,
                     };
+                    args.explicit.insert(name.clone());
                     args.values.insert(name, v);
                 } else {
                     if inline.is_some() {
@@ -148,6 +153,7 @@ impl Cli {
                             "flag takes no value".into(),
                         ));
                     }
+                    args.explicit.insert(name.clone());
                     args.flags.insert(name, true);
                 }
             } else {
@@ -165,6 +171,13 @@ impl Args {
 
     pub fn flag(&self, name: &str) -> bool {
         self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Did the user type this option/flag (vs it resolving from the
+    /// spec default)? The `--auto` planner treats typed options as
+    /// pinned and spec defaults as free.
+    pub fn provided(&self, name: &str) -> bool {
+        self.explicit.contains(name)
     }
 
     pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
@@ -203,6 +216,17 @@ mod tests {
         assert_eq!(a.get("k"), Some("2"));
         assert_eq!(a.get("shape"), None);
         assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn explicit_options_are_distinguishable_from_defaults() {
+        let a = cli().parse(vec!["--k", "2", "--verbose"]).unwrap();
+        assert!(a.provided("k"), "typed --k 2 must count as pinned");
+        assert!(a.provided("verbose"));
+        assert!(!a.provided("shape"));
+        let d = cli().parse(Vec::<String>::new()).unwrap();
+        assert_eq!(d.get("k"), Some("2"));
+        assert!(!d.provided("k"), "spec default must not count as pinned");
     }
 
     #[test]

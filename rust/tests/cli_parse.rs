@@ -109,6 +109,26 @@ fn bench_flags_round_trip() {
 }
 
 #[test]
+fn plan_flags_round_trip() {
+    let cli = blockms_cli();
+    let args = cli
+        .parse(vec!["plan", "--k", "4", "--strip-rows", "64", "--quick", "--verbose"])
+        .unwrap();
+    assert_eq!(args.subcommand(), Some("plan"));
+    assert_eq!(args.get_parse::<usize>("k").unwrap(), 4);
+    assert!(args.flag("quick"));
+    assert!(args.flag("verbose"));
+
+    let args = cli
+        .parse(vec!["cluster", "--auto", "--dry-run", "--kernel", "lanes"])
+        .unwrap();
+    assert!(args.flag("auto"));
+    assert!(args.flag("dry-run"));
+    assert!(args.provided("kernel"), "typed --kernel is a pin");
+    assert!(!args.provided("approach"), "defaulted --approach is not");
+}
+
+#[test]
 fn unknown_flag_and_missing_value_are_typed_errors() {
     let cli = blockms_cli();
     assert_eq!(
@@ -222,6 +242,46 @@ fn cluster_happy_path_exits_0() {
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
     let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("label agreement with serial: 100.0000%"), "{stdout}");
+}
+
+#[test]
+fn dry_run_resolves_plan_without_pixels_and_exits_0() {
+    let out = run(&[
+        "cluster", "--width", "4096", "--height", "4096", "--k", "4", "--auto", "--dry-run",
+        "--strip-rows", "64",
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("plan:"), "{stdout}");
+    assert!(stdout.contains("planner:"), "{stdout}");
+    // a 4096x4096 scene was never generated
+    assert!(!stdout.contains("generating synthetic"), "{stdout}");
+}
+
+#[test]
+fn plan_subcommand_ranks_candidates_and_exits_0() {
+    let out = run(&["plan", "--quick", "--k", "2"]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("ns/px/pass"), "{stdout}");
+    assert!(stdout.contains("planner:"), "{stdout}");
+}
+
+#[test]
+fn auto_cluster_reports_predicted_vs_actual() {
+    let out = run(&[
+        "cluster", "--width", "48", "--height", "40", "--k", "2", "--iters", "2", "--auto",
+        "--serial",
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("predicted"), "{stdout}");
+    assert!(stdout.contains("actual"), "{stdout}");
+    // auto-planning must not change values
     assert!(stdout.contains("label agreement with serial: 100.0000%"), "{stdout}");
 }
 

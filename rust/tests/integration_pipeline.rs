@@ -3,12 +3,13 @@
 
 use std::sync::Arc;
 
-use blockms::blocks::{ApproachKind, BlockPlan, BlockShape};
+use blockms::blocks::{ApproachKind, BlockShape};
 use blockms::coordinator::{
     ClusterConfig, ClusterMode, Coordinator, CoordinatorConfig, Engine, IoMode, Schedule,
 };
 use blockms::image::{Raster, SyntheticOrtho};
 use blockms::kmeans::InitMethod;
+use blockms::plan::ExecPlan;
 use blockms::runtime::find_artifacts_dir;
 use blockms::util::config::Config;
 
@@ -23,14 +24,13 @@ fn full_matrix_native_modes_shapes_workers() {
         for kind in ApproachKind::ALL {
             for workers in [1usize, 3] {
                 let shape = BlockShape::paper_default(kind, 72, 60);
-                let plan = Arc::new(BlockPlan::new(72, 60, shape));
                 let coord = Coordinator::new(CoordinatorConfig {
-                    workers,
+                    exec: ExecPlan::pinned(shape).with_workers(workers),
                     mode,
                     ..Default::default()
                 });
                 let out = coord
-                    .cluster(&img, &plan, &ClusterConfig { k: 4, ..Default::default() })
+                    .cluster(&img, &ClusterConfig { k: 4, ..Default::default() })
                     .unwrap();
                 assert_eq!(out.labels.len(), 72 * 60, "{mode:?}/{kind:?}/{workers}");
                 assert!(out.labels.iter().all(|&l| l < 4));
@@ -44,12 +44,13 @@ fn full_matrix_native_modes_shapes_workers() {
 #[test]
 fn inertia_trace_is_monotone_nonincreasing() {
     let img = scene(64, 64, 2);
-    let plan = Arc::new(BlockPlan::new(64, 64, BlockShape::Square { side: 20 }));
-    let coord = Coordinator::new(CoordinatorConfig::default());
+    let coord = Coordinator::new(CoordinatorConfig {
+        exec: ExecPlan::pinned(BlockShape::Square { side: 20 }),
+        ..Default::default()
+    });
     let out = coord
         .cluster(
             &img,
-            &plan,
             &ClusterConfig {
                 k: 4,
                 fixed_iters: Some(8),
@@ -69,7 +70,6 @@ fn inertia_trace_is_monotone_nonincreasing() {
 #[test]
 fn schedules_agree_on_results() {
     let img = scene(50, 70, 3);
-    let plan = Arc::new(BlockPlan::new(50, 70, BlockShape::Cols { band_cols: 13 }));
     let cfg = ClusterConfig {
         k: 2,
         ..Default::default()
@@ -77,11 +77,11 @@ fn schedules_agree_on_results() {
     let mut outs = Vec::new();
     for schedule in [Schedule::Static, Schedule::Dynamic] {
         let coord = Coordinator::new(CoordinatorConfig {
-            workers: 3,
+            exec: ExecPlan::pinned(BlockShape::Cols { band_cols: 13 }).with_workers(3),
             schedule,
             ..Default::default()
         });
-        outs.push(coord.cluster(&img, &plan, &cfg).unwrap());
+        outs.push(coord.cluster(&img, &cfg).unwrap());
     }
     assert_eq!(outs[0].labels, outs[1].labels);
     assert_eq!(outs[0].centroids, outs[1].centroids);
@@ -90,22 +90,26 @@ fn schedules_agree_on_results() {
 #[test]
 fn file_backed_strips_agree_with_direct() {
     let img = scene(40, 56, 4);
-    let plan = Arc::new(BlockPlan::new(40, 56, BlockShape::Rows { band_rows: 11 }));
+    let exec = ExecPlan::pinned(BlockShape::Rows { band_rows: 11 });
     let cfg = ClusterConfig {
         k: 2,
         ..Default::default()
     };
-    let direct = Coordinator::new(CoordinatorConfig::default())
-        .cluster(&img, &plan, &cfg)
-        .unwrap();
+    let direct = Coordinator::new(CoordinatorConfig {
+        exec,
+        ..Default::default()
+    })
+    .cluster(&img, &cfg)
+    .unwrap();
     let strips = Coordinator::new(CoordinatorConfig {
+        exec,
         io: IoMode::Strips {
             strip_rows: 7,
             file_backed: true,
         },
         ..Default::default()
     })
-    .cluster(&img, &plan, &cfg)
+    .cluster(&img, &cfg)
     .unwrap();
     assert_eq!(direct.labels, strips.labels);
     assert_eq!(direct.centroids, strips.centroids);
@@ -116,8 +120,10 @@ fn file_backed_strips_agree_with_direct() {
 #[test]
 fn init_methods_all_work_and_are_deterministic() {
     let img = scene(40, 40, 5);
-    let plan = Arc::new(BlockPlan::new(40, 40, BlockShape::Square { side: 16 }));
-    let coord = Coordinator::new(CoordinatorConfig::default());
+    let coord = Coordinator::new(CoordinatorConfig {
+        exec: ExecPlan::pinned(BlockShape::Square { side: 16 }),
+        ..Default::default()
+    });
     for init in [
         InitMethod::RandomSample,
         InitMethod::PlusPlus,
@@ -128,8 +134,8 @@ fn init_methods_all_work_and_are_deterministic() {
             init: init.clone(),
             ..Default::default()
         };
-        let a = coord.cluster(&img, &plan, &cfg).unwrap();
-        let b = coord.cluster(&img, &plan, &cfg).unwrap();
+        let a = coord.cluster(&img, &cfg).unwrap();
+        let b = coord.cluster(&img, &cfg).unwrap();
         assert_eq!(a.labels, b.labels, "{init:?} not deterministic");
     }
 }
@@ -137,17 +143,14 @@ fn init_methods_all_work_and_are_deterministic() {
 #[test]
 fn failure_in_later_round_still_propagates() {
     let img = scene(40, 40, 6);
-    let plan = Arc::new(BlockPlan::new(40, 40, BlockShape::Square { side: 13 }));
     // fail a block that exists (plan has 9 blocks; index 8 processed in
     // every round including assign)
     let coord = Coordinator::new(CoordinatorConfig {
-        workers: 2,
+        exec: ExecPlan::pinned(BlockShape::Square { side: 13 }).with_workers(2),
         fail_block: Some(8),
         ..Default::default()
     });
-    let err = coord
-        .cluster(&img, &plan, &ClusterConfig::default())
-        .unwrap_err();
+    let err = coord.cluster(&img, &ClusterConfig::default()).unwrap_err();
     assert!(err.to_string().contains("injected failure"));
 }
 
@@ -156,15 +159,13 @@ fn k_larger_than_block_pixels_is_handled() {
     // a 1x1-block plan with k=4: blocks have fewer pixels than k — the
     // global reduction still works (per-block partial sums are fine)
     let img = scene(6, 6, 7);
-    let plan = Arc::new(BlockPlan::new(6, 6, BlockShape::Square { side: 1 }));
     let coord = Coordinator::new(CoordinatorConfig {
-        workers: 2,
+        exec: ExecPlan::pinned(BlockShape::Square { side: 1 }).with_workers(2),
         ..Default::default()
     });
     let out = coord
         .cluster(
             &img,
-            &plan,
             &ClusterConfig {
                 k: 4,
                 ..Default::default()
@@ -205,19 +206,14 @@ workers = 3
         cfg.get_parse::<usize>("workload.width").unwrap().unwrap(),
         cfg.get_parse::<u64>("workload.seed").unwrap().unwrap(),
     );
-    let plan = Arc::new(BlockPlan::new(
-        img.height(),
-        img.width(),
-        BlockShape::paper_default(ApproachKind::Cols, img.height(), img.width()),
-    ));
+    let shape = BlockShape::paper_default(ApproachKind::Cols, img.height(), img.width());
     let coord = Coordinator::new(CoordinatorConfig {
-        workers: cfg.get_or("run.workers", 1).unwrap(),
+        exec: ExecPlan::pinned(shape).with_workers(cfg.get_or("run.workers", 1).unwrap()),
         ..Default::default()
     });
     let out = coord
         .cluster(
             &img,
-            &plan,
             &ClusterConfig {
                 k: cfg.get_or("cluster.k", 2).unwrap(),
                 max_iters: cfg.get_or("cluster.max_iters", 20).unwrap(),
@@ -245,26 +241,26 @@ fn pjrt_global_agrees_with_native_to_float_tolerance() {
         return;
     }
     let img = scene(96, 80, 8);
-    let plan = Arc::new(BlockPlan::new(96, 80, BlockShape::Cols { band_cols: 20 }));
+    let exec = ExecPlan::pinned(BlockShape::Cols { band_cols: 20 }).with_workers(2);
     let cfg = ClusterConfig {
         k: 2,
         fixed_iters: Some(4),
         ..Default::default()
     };
     let native = Coordinator::new(CoordinatorConfig {
-        workers: 2,
+        exec,
         ..Default::default()
     })
-    .cluster(&img, &plan, &cfg)
+    .cluster(&img, &cfg)
     .unwrap();
     let pjrt = Coordinator::new(CoordinatorConfig {
-        workers: 2,
+        exec,
         engine: Engine::Pjrt {
             artifacts_dir: None,
         },
         ..Default::default()
     })
-    .cluster(&img, &plan, &cfg)
+    .cluster(&img, &cfg)
     .unwrap();
     // identical blocks + fixed iters: labels should agree on ~all pixels
     // (f32 vs f64 partial-sum rounding can flip boundary pixels)
@@ -287,9 +283,8 @@ fn pjrt_local_mode_runs() {
         return;
     }
     let img = scene(64, 64, 9);
-    let plan = Arc::new(BlockPlan::new(64, 64, BlockShape::Square { side: 32 }));
     let out = Coordinator::new(CoordinatorConfig {
-        workers: 2,
+        exec: ExecPlan::pinned(BlockShape::Square { side: 32 }).with_workers(2),
         engine: Engine::Pjrt {
             artifacts_dir: None,
         },
@@ -298,7 +293,6 @@ fn pjrt_local_mode_runs() {
     })
     .cluster(
         &img,
-        &plan,
         &ClusterConfig {
             k: 2,
             ..Default::default()
@@ -316,10 +310,9 @@ fn pjrt_missing_k_artifact_is_clean_error() {
         return;
     }
     let img = scene(32, 32, 10);
-    let plan = Arc::new(BlockPlan::new(32, 32, BlockShape::Square { side: 16 }));
     // k=5 has no artifact (ks are 2/4/8)
     let err = Coordinator::new(CoordinatorConfig {
-        workers: 1,
+        exec: ExecPlan::pinned(BlockShape::Square { side: 16 }).with_workers(1),
         engine: Engine::Pjrt {
             artifacts_dir: None,
         },
@@ -327,7 +320,6 @@ fn pjrt_missing_k_artifact_is_clean_error() {
     })
     .cluster(
         &img,
-        &plan,
         &ClusterConfig {
             k: 5,
             ..Default::default()

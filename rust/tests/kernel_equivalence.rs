@@ -7,13 +7,14 @@
 
 use std::sync::Arc;
 
-use blockms::blocks::{BlockPlan, BlockShape};
+use blockms::blocks::BlockShape;
 use blockms::coordinator::{
     ClusterConfig, Coordinator, CoordinatorConfig, Schedule,
 };
 use blockms::image::SyntheticOrtho;
 use blockms::kmeans::kernel::{self, KernelChoice, PrunedState};
 use blockms::kmeans::{math, KMeansConfig, SeqKMeans};
+use blockms::plan::ExecPlan;
 use blockms::util::prng::Rng;
 use blockms::util::qcheck::{choice_of, forall, pair, usize_in, Gen};
 
@@ -178,22 +179,22 @@ fn prop_coordinator_kernels_identical_across_paper_shapes() {
             ..Default::default()
         };
         for shape in shapes {
-            let plan = Arc::new(BlockPlan::new(h, w, shape));
             let naive = Coordinator::new(CoordinatorConfig {
-                workers: 1 + salt % 4,
+                exec: ExecPlan::pinned(shape).with_workers(1 + salt % 4),
                 ..Default::default()
             })
-            .cluster(&img, &plan, &ccfg)
+            .cluster(&img, &ccfg)
             .unwrap();
             for kernel in [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes] {
                 for schedule in [Schedule::Static, Schedule::Dynamic] {
                     let out = Coordinator::new(CoordinatorConfig {
-                        workers: 1 + salt % 4,
+                        exec: ExecPlan::pinned(shape)
+                            .with_workers(1 + salt % 4)
+                            .with_kernel(kernel),
                         schedule,
-                        kernel,
                         ..Default::default()
                     })
-                    .cluster(&img, &plan, &ccfg)
+                    .cluster(&img, &ccfg)
                     .unwrap();
                     if out.labels != naive.labels
                         || out.centroids != naive.centroids

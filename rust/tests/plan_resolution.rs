@@ -1,0 +1,262 @@
+//! Property suite for the ExecPlan planner, plus the solo/service
+//! config-drift regression test.
+//!
+//! The contracts under test:
+//!
+//! 1. **Pins are law** — a fully-pinned request resolves to exactly its
+//!    pins, for every combination qcheck can draw (the planner never
+//!    overrides an explicit choice).
+//! 2. **No regret under its own model** — the pick's predicted cost is
+//!    ≤ every candidate it rejected, verified against an *independent*
+//!    exhaustive enumeration over shapes × kernels × layouts (× cache ×
+//!    prefetch) that re-asks the cost model directly.
+//! 3. **Determinism** — the same request and priors always produce the
+//!    same plan and the same candidate ordering.
+//! 4. **Solo/service identity** — identical inputs resolve to identical
+//!    `ExecPlan`s on both paths, and running that plan solo vs through
+//!    the service yields bit-identical output (the drift hazard the
+//!    refactor was built to kill).
+
+use std::sync::Arc;
+
+use blockms::blocks::{ApproachKind, BlockPlan, BlockShape};
+use blockms::coordinator::{ClusterConfig, Coordinator, CoordinatorConfig};
+use blockms::image::SyntheticOrtho;
+use blockms::kmeans::kernel::KernelChoice;
+use blockms::kmeans::tile::TileLayout;
+use blockms::plan::{ExecPlan, Planner, PlanRequest};
+use blockms::service::{ClusterServer, JobSpec, ServerConfig};
+use blockms::util::prng::Rng;
+use blockms::util::qcheck::{forall, pair, usize_in, Gen};
+
+/// Generator for a random workload geometry the planner accepts.
+struct GeomGen;
+
+impl Gen for GeomGen {
+    type Value = (usize, usize, usize, usize, usize);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (
+            rng.range_usize(32, 2048),      // height
+            rng.range_usize(32, 2048),      // width
+            [1, 3, 4][rng.range_usize(0, 3)], // channels
+            rng.range_usize(1, 12),         // k
+            rng.range_usize(1, 12),         // rounds
+        )
+    }
+}
+
+/// Generator for a full set of pins.
+struct PinGen;
+
+impl Gen for PinGen {
+    type Value = ExecPlan;
+    fn generate(&self, rng: &mut Rng) -> ExecPlan {
+        let shape = match rng.range_usize(0, 4) {
+            0 => BlockShape::Rows {
+                band_rows: rng.range_usize(1, 500),
+            },
+            1 => BlockShape::Cols {
+                band_cols: rng.range_usize(1, 500),
+            },
+            2 => BlockShape::Square {
+                side: rng.range_usize(1, 500),
+            },
+            _ => BlockShape::Custom {
+                rows: rng.range_usize(1, 400),
+                cols: rng.range_usize(1, 400),
+            },
+        };
+        let kernel = KernelChoice::ALL[rng.range_usize(0, KernelChoice::ALL.len())];
+        let layout = [TileLayout::Interleaved, TileLayout::Soa][rng.range_usize(0, 2)];
+        ExecPlan::pinned(shape)
+            .with_workers(rng.range_usize(1, 16))
+            .with_kernel(kernel)
+            .with_layout(layout)
+            .with_arena_mb(rng.range_usize(0, 512))
+            .with_prefetch(rng.range_usize(0, 2) == 1)
+            .with_strip_cache(rng.range_usize(0, 64))
+    }
+}
+
+fn request(geom: &(usize, usize, usize, usize, usize), strip_rows: Option<usize>) -> PlanRequest {
+    let &(h, w, c, k, rounds) = geom;
+    PlanRequest::new(h, w, c, k)
+        .with_rounds(rounds)
+        .with_strip_rows(strip_rows)
+}
+
+#[test]
+fn prop_fully_pinned_plan_round_trips_unchanged() {
+    let gen = pair(GeomGen, PinGen);
+    forall(301, 120, &gen, |(geom, pins)| {
+        let strip_rows = if pins.strip_cache > 0 { Some(32) } else { None };
+        let req = request(geom, strip_rows).pin_all(pins);
+        assert!(req.fully_pinned());
+        let (resolved, explain) = Planner::default().resolve(&req);
+        resolved == *pins && explain.candidates.len() == 1
+    });
+}
+
+#[test]
+fn prop_pick_is_no_regret_vs_exhaustive_enumeration() {
+    let gen = pair(GeomGen, usize_in(0, 2));
+    forall(302, 60, &gen, |(geom, strips)| {
+        let strip_rows = match strips {
+            0 => None,
+            1 => Some(32),
+            _ => Some(64),
+        };
+        let req = request(geom, strip_rows);
+        let planner = Planner::default();
+        let (picked, explain) = planner.resolve(&req);
+        let w = req.workload();
+        // Independent exhaustive enumeration: every shape × kernel ×
+        // layout × cache × prefetch the request admits, costed straight
+        // off the model (not through Explain).
+        let shapes: Vec<BlockShape> = ApproachKind::ALL
+            .iter()
+            .map(|&a| BlockShape::paper_default(a, req.height, req.width))
+            .collect();
+        let caches: Vec<usize> = match strip_rows {
+            Some(_) => vec![0, w.unique_strips()],
+            None => vec![0],
+        };
+        let prefetches: Vec<bool> = match strip_rows {
+            Some(_) => vec![false, true],
+            None => vec![false],
+        };
+        let picked_plan = BlockPlan::new(req.height, req.width, picked.shape);
+        let picked_cost = planner.model().predict(
+            &w,
+            &picked_plan,
+            picked.kernel,
+            picked.layout,
+            picked.workers,
+            picked.strip_cache,
+            picked.prefetch,
+        );
+        for shape in shapes {
+            let plan = BlockPlan::new(req.height, req.width, shape);
+            for kernel in KernelChoice::ALL {
+                for layout in [TileLayout::Interleaved, TileLayout::Soa] {
+                    for &cache in &caches {
+                        for &prefetch in &prefetches {
+                            let cost = planner.model().predict(
+                                &w,
+                                &plan,
+                                kernel,
+                                layout,
+                                picked.workers,
+                                cache,
+                                prefetch,
+                            );
+                            if cost.wall_secs < picked_cost.wall_secs {
+                                return false; // the planner left time on the table
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // And the explain report agrees with itself.
+        explain.ranked()[0].plan == picked
+    });
+}
+
+#[test]
+fn prop_resolution_is_deterministic() {
+    forall(303, 60, &GeomGen, |geom| {
+        let req = request(geom, Some(64));
+        let (a, ea) = Planner::default().resolve(&req);
+        let (b, eb) = Planner::default().resolve(&req);
+        a == b
+            && ea.chosen == eb.chosen
+            && ea
+                .candidates
+                .iter()
+                .zip(&eb.candidates)
+                .all(|(x, y)| x.plan == y.plan && x.cost == y.cost)
+    });
+}
+
+/// The config-drift regression test: the solo coordinator and the
+/// service resolve identical plans from identical inputs — because both
+/// consume the SAME resolved `ExecPlan` — and produce bit-identical
+/// output under it.
+#[test]
+fn solo_and_service_resolve_identical_plans_and_outputs() {
+    let (h, w, k) = (48, 44, 3);
+    let img = Arc::new(SyntheticOrtho::default().with_seed(77).generate(h, w));
+
+    // Identical inputs → identical resolution on both paths (resolution
+    // is a pure function of the request; nothing path-specific leaks in).
+    let req = PlanRequest::new(h, w, img.channels(), k).with_rounds(6);
+    let (exec_solo, _) = Planner::default().resolve(&req);
+    let (exec_service, _) = Planner::default().resolve(&req);
+    assert_eq!(
+        exec_solo, exec_service,
+        "solo and service must resolve identical plans from identical inputs"
+    );
+
+    let ccfg = ClusterConfig {
+        k,
+        seed: 78,
+        ..Default::default()
+    };
+    let solo = Coordinator::new(CoordinatorConfig {
+        exec: exec_solo,
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap();
+
+    let server = ClusterServer::start(ServerConfig {
+        workers: exec_service.workers,
+        ..Default::default()
+    });
+    let spec = JobSpec::new(Arc::clone(&img), exec_service, ccfg);
+    // The spec's derived tiling is the solo coordinator's tiling.
+    assert_eq!(spec.block_plan().len(), solo.blocks);
+    let served = server.submit(spec).unwrap().wait_output().unwrap();
+    server.shutdown();
+
+    assert_eq!(solo.labels, served.labels, "labels drifted between paths");
+    assert_eq!(solo.centroids, served.centroids);
+    assert_eq!(solo.inertia.to_bits(), served.inertia.to_bits());
+    assert_eq!(solo.iterations, served.iterations);
+}
+
+/// Auto-planning changes speed knobs only, never values: a planner-
+/// resolved plan and the naive pinned baseline produce bit-identical
+/// labels and centroids.
+#[test]
+fn auto_plan_is_bit_identical_to_pinned_baseline() {
+    let (h, w, k) = (52, 40, 4);
+    let img = Arc::new(SyntheticOrtho::default().with_seed(5).generate(h, w));
+    let ccfg = ClusterConfig {
+        k,
+        seed: 6,
+        ..Default::default()
+    };
+    let shape = BlockShape::paper_default(ApproachKind::Cols, h, w);
+    let baseline = Coordinator::new(CoordinatorConfig {
+        exec: ExecPlan::pinned(shape).with_workers(2),
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap();
+
+    let mut req = PlanRequest::new(h, w, img.channels(), k).with_rounds(8);
+    req.shape = Some(shape); // same tiling; kernel/layout left to the planner
+    req.workers = Some(2);
+    let (exec, _) = Planner::default().resolve(&req);
+    let auto = Coordinator::new(CoordinatorConfig {
+        exec,
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap();
+    assert_eq!(auto.labels, baseline.labels);
+    assert_eq!(auto.centroids, baseline.centroids);
+    assert_eq!(auto.iterations, baseline.iterations);
+}

@@ -226,17 +226,16 @@ fn prop_global_mode_equals_serial_any_plan() {
                 .with_seed((h + w * 7) as u64)
                 .generate(h, w),
         );
-        let plan = Arc::new(BlockPlan::new(h, w, shape));
         let ccfg = ClusterConfig {
             k: 2,
             max_iters: 6,
             ..Default::default()
         };
         let coord = Coordinator::new(CoordinatorConfig {
-            workers: 1 + (h % 4),
+            exec: blockms::plan::ExecPlan::pinned(shape).with_workers(1 + (h % 4)),
             ..Default::default()
         });
-        let par = coord.cluster(&img, &plan, &ccfg).unwrap();
+        let par = coord.cluster(&img, &ccfg).unwrap();
         let seq = coord.serial(&img, &ccfg).unwrap();
         par.labels == seq.labels && par.centroids == seq.centroids
     });

@@ -8,13 +8,14 @@
 
 use std::sync::Arc;
 
-use blockms::blocks::{BlockPlan, BlockShape};
+use blockms::blocks::BlockShape;
 use blockms::coordinator::{
     ClusterConfig, ClusterMode, ClusterOutput, Coordinator, CoordinatorConfig, Engine, IoMode,
     Schedule,
 };
 use blockms::image::{Raster, SyntheticOrtho};
 use blockms::kmeans::kernel::KernelChoice;
+use blockms::plan::ExecPlan;
 use blockms::service::{ClusterServer, JobSpec, JobStatus, ServerConfig};
 
 fn image(channels: usize, h: usize, w: usize, seed: u64) -> Arc<Raster> {
@@ -36,16 +37,17 @@ fn paper_shapes() -> [BlockShape; 3] {
 }
 
 fn solo(spec: &JobSpec, workers: usize) -> ClusterOutput {
+    // The SAME embedded ExecPlan drives the solo run — the service and
+    // solo paths cannot disagree on kernel/layout/shape by construction.
     Coordinator::new(CoordinatorConfig {
-        workers,
+        exec: spec.exec.with_workers(workers),
         engine: Engine::Native,
         mode: spec.mode,
         io: IoMode::Direct, // I/O path must not change values
         schedule: Schedule::Dynamic,
-        kernel: spec.kernel,
         ..Default::default()
     })
-    .cluster(&spec.image, &spec.plan, &spec.cluster)
+    .cluster(&spec.image, &spec.cluster)
     .expect("solo run")
 }
 
@@ -91,18 +93,16 @@ fn mixed_jobs_bit_identical_to_solo() {
             for shape in paper_shapes() {
                 let kernel = KernelChoice::ALL[(idx as usize) % KernelChoice::ALL.len()];
                 let img = image(channels, h, w, 100 + idx);
-                let plan = Arc::new(BlockPlan::new(h, w, shape));
                 specs.push(
                     JobSpec::new(
                         img,
-                        plan,
+                        ExecPlan::pinned(shape).with_kernel(kernel),
                         ClusterConfig {
                             k,
                             seed: 900 + idx,
                             ..Default::default()
                         },
-                    )
-                    .with_kernel(kernel),
+                    ),
                 );
                 idx += 1;
             }
@@ -127,8 +127,8 @@ fn mixed_jobs_bit_identical_to_solo() {
         let tag = format!(
             "job {i} (k={}, kernel={}, blocks={})",
             spec.cluster.k,
-            spec.kernel,
-            spec.plan.len()
+            spec.exec.kernel,
+            spec.block_plan().len()
         );
         assert_identical(&tag, &got, &want, spec.cluster.k);
         // service jobs never pay pool spawn cost
@@ -161,18 +161,16 @@ fn static_schedule_and_local_mode_match_solo() {
         .enumerate()
     {
         let img = image(3, h, w, 40 + i as u64);
-        let plan = Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 16 }));
         let spec = JobSpec::new(
             img,
-            plan,
+            ExecPlan::pinned(BlockShape::Square { side: 16 }).with_kernel(KernelChoice::Pruned),
             ClusterConfig {
                 k: 3,
                 seed: 70 + i as u64,
                 ..Default::default()
             },
         )
-        .with_mode(mode)
-        .with_kernel(KernelChoice::Pruned);
+        .with_mode(mode);
         let handle = server.submit(spec.clone()).unwrap();
         pairs.push((spec, handle));
     }
@@ -199,10 +197,9 @@ fn strip_io_jobs_are_isolated_and_exact() {
     let mut pairs = Vec::new();
     for i in 0..2u64 {
         let img = image(3, h, w, 60 + i);
-        let plan = Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 12 }));
         let spec = JobSpec::new(
             img,
-            plan,
+            ExecPlan::pinned(BlockShape::Square { side: 12 }),
             ClusterConfig {
                 k: 2,
                 seed: 80 + i,
@@ -223,9 +220,10 @@ fn strip_io_jobs_are_isolated_and_exact() {
         assert_identical("strip job", &got, &want, 2);
         let io = got.io_stats.expect("strip jobs report io stats");
         // 3 step rounds + 1 assign = 4 passes over all blocks
-        let (per_pass, _, _) = blockms::stripstore::read_amplification(&spec.plan, 8);
+        let plan = spec.block_plan();
+        let (per_pass, _, _) = blockms::stripstore::read_amplification(&plan, 8);
         assert_eq!(io.strip_reads as usize, per_pass * 4);
-        assert_eq!(io.block_reads as usize, spec.plan.len() * 4);
+        assert_eq!(io.block_reads as usize, plan.len() * 4);
     }
     server.shutdown();
 }
@@ -243,10 +241,9 @@ fn lanes_service_job_fills_tiles_once_and_matches_solo() {
         max_in_flight: 2,
     });
     let img = image(3, h, w, 91);
-    let plan = Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 14 }));
     let spec = JobSpec::new(
         img,
-        plan,
+        ExecPlan::pinned(BlockShape::Square { side: 14 }).with_kernel(KernelChoice::Lanes),
         ClusterConfig {
             k: 4,
             seed: 92,
@@ -254,7 +251,6 @@ fn lanes_service_job_fills_tiles_once_and_matches_solo() {
             ..Default::default()
         },
     )
-    .with_kernel(KernelChoice::Lanes)
     .with_io(IoMode::Strips {
         strip_rows: 8,
         file_backed: false,
@@ -264,9 +260,10 @@ fn lanes_service_job_fills_tiles_once_and_matches_solo() {
     assert_identical("lanes strip job", &got, &want, 4);
     let io = got.io_stats.expect("strip jobs report io stats");
     // 4 passes run, but every block's tile is filled exactly once.
-    let (per_pass, _, _) = blockms::stripstore::read_amplification(&spec.plan, 8);
+    let plan = spec.block_plan();
+    let (per_pass, _, _) = blockms::stripstore::read_amplification(&plan, 8);
     assert_eq!(io.strip_reads as usize, per_pass);
-    assert_eq!(io.block_reads as usize, spec.plan.len());
+    assert_eq!(io.block_reads as usize, plan.len());
     server.shutdown();
 }
 
@@ -283,10 +280,9 @@ fn cancellation_mid_round_leaves_others_untouched() {
     let mut specs = Vec::new();
     for i in 0..3u64 {
         let img = image(3, h, w, 20 + i);
-        let plan = Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 24 }));
         specs.push(JobSpec::new(
             img,
-            plan,
+            ExecPlan::pinned(BlockShape::Square { side: 24 }),
             ClusterConfig {
                 k: 6,
                 seed: 30 + i,
@@ -333,7 +329,7 @@ fn failed_job_does_not_poison_the_pool() {
     });
     let mut failing = JobSpec::new(
         image(3, h, w, 1),
-        Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 11 })),
+        ExecPlan::pinned(BlockShape::Square { side: 11 }),
         ClusterConfig {
             k: 2,
             seed: 2,
@@ -345,14 +341,13 @@ fn failed_job_does_not_poison_the_pool() {
         .map(|i| {
             JobSpec::new(
                 image(3, h, w, 10 + i),
-                Arc::new(BlockPlan::new(h, w, BlockShape::Rows { band_rows: 9 })),
+                ExecPlan::pinned(BlockShape::Rows { band_rows: 9 }).with_kernel(KernelChoice::Fused),
                 ClusterConfig {
                     k: 4,
                     seed: 50 + i,
                     ..Default::default()
                 },
             )
-            .with_kernel(KernelChoice::Fused)
         })
         .collect();
     let h_fail = server.submit(failing).unwrap();
@@ -398,7 +393,7 @@ fn admission_cap_never_exceeded() {
             let (h, w) = (32, 30);
             let spec = JobSpec::new(
                 image(3, h, w, 200 + t),
-                Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 10 })),
+                ExecPlan::pinned(BlockShape::Square { side: 10 }),
                 ClusterConfig {
                     k: 3,
                     seed: 300 + t,
@@ -442,7 +437,7 @@ fn try_submit_sheds_at_capacity() {
         .map(|i| {
             let spec = JobSpec::new(
                 image(3, h, w, 400 + i),
-                Arc::new(BlockPlan::new(h, w, BlockShape::Square { side: 32 })),
+                ExecPlan::pinned(BlockShape::Square { side: 32 }),
                 ClusterConfig {
                     k: 8,
                     seed: 500 + i,
@@ -455,7 +450,7 @@ fn try_submit_sheds_at_capacity() {
         .collect();
     let small = JobSpec::new(
         image(3, 16, 16, 9),
-        Arc::new(BlockPlan::new(16, 16, BlockShape::Square { side: 8 })),
+        ExecPlan::pinned(BlockShape::Square { side: 8 }),
         ClusterConfig {
             k: 2,
             seed: 9,
