@@ -1,0 +1,278 @@
+#!/usr/bin/env python3
+"""Generate BENCH_stream.json for the out-of-core pipeline (no cargo).
+
+Where no rust toolchain exists, this model produces the committed
+streamed-vs-in-memory document the same way bench_plan_model.py mirrors
+the planner bench:
+
+- **Timing** comes from the committed BENCH_layout.json row-shaped
+  compute floors (the planner's own calibration source) for the kernel
+  the budget-constrained planner picks (fused/interleaved: SoA arenas
+  and lane scratch tiles are infeasible under the 8 MiB budget), plus
+  the exact ingest-decode term (`decode_ns_per_byte` x one image pass).
+
+- **Resident accounting** is closed-form and exact: it mirrors the
+  runtime's ResidentGauge bookkeeping (rust/src/stripstore/store.rs,
+  reader.rs) — file ingest holds 2 strips (decoded f32 + encode bytes);
+  each worker's reader holds one decoded strip, the 64 KiB raw-decode
+  chunk, and its block crop buffer; the streaming row shape makes the
+  block one strip tall. Nothing scales with image height, which is the
+  whole point.
+
+- **matches_in_memory** is underwritten by an executable check, not an
+  assumption: the streamed pipeline differs from the in-memory one
+  ONLY in (a) how pixels reach the strip store (an identity copy,
+  pinned byte-for-byte by rust unit tests) and (b) how the init draw
+  is made. (b) is the subtle part, so this script ports the repo's
+  SplitMix64/Xoshiro256++ PRNG and verifies that the streaming sampler
+  (sparse Fisher-Yates + strip-order capture) reproduces the dense
+  `sample_indices` draw exactly, then runs a full numpy Lloyd loop on
+  both paths of a small scene and requires bitwise-equal labels,
+  centroids, and inertia.
+
+Usage:
+  python3 python/bench_stream_model.py [--layout BENCH_layout.json]
+                                       [--out BENCH_stream.json]
+"""
+
+import argparse
+import json
+
+MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & MASK
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return z ^ (z >> 31)
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """Port of rust/src/util/prng.rs (Xoshiro256++)."""
+
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def next_below(self, bound):
+        x = self.next_u64()
+        m = x * bound
+        low = m & MASK
+        if low < bound:
+            t = (-bound) % bound
+            while low < t:
+                x = self.next_u64()
+                m = x * bound
+                low = m & MASK
+        return m >> 64
+
+    def range_usize(self, lo, hi):
+        return lo + self.next_below(hi - lo)
+
+    def sample_indices(self, n, k):
+        idx = list(range(n))
+        for i in range(k):
+            j = self.range_usize(i, n)
+            idx[i], idx[j] = idx[j], idx[i]
+        return idx[:k]
+
+    def sample_indices_sparse(self, n, k):
+        displaced = {}
+        out = []
+        for i in range(k):
+            j = self.range_usize(i, n)
+            vi = displaced.get(i, i)
+            vj = displaced.get(j, j)
+            displaced[i] = vj
+            displaced[j] = vi
+            out.append(vj)
+        return out
+
+
+def verify_init_equivalence():
+    """Dense draw == sparse draw == strip-order capture, many configs."""
+    for seed in range(40):
+        for n, k in [(1, 1), (10, 3), (5000, 8), (4096 * 64, 4)]:
+            dense = Rng(seed).sample_indices(n, k)
+            sparse = Rng(seed).sample_indices_sparse(n, k)
+            assert dense == sparse, (seed, n, k)
+            # strip-order capture: feeding pixels 0..n in strips fills
+            # slot i with pixel dense[i], regardless of strip size
+            targets = {px: slot for slot, px in enumerate(sparse)}
+            captured = [None] * k
+            pos = 0
+            strip = 97  # deliberately unaligned
+            while pos < n:
+                for off in range(min(strip, n - pos)):
+                    slot = targets.get(pos + off)
+                    if slot is not None:
+                        captured[slot] = pos + off
+                pos += min(strip, n - pos)
+            assert captured == dense, (seed, n, k)
+
+
+def verify_pipeline_identity():
+    """Full numpy Lloyd loop: streamed init vs in-memory init, bitwise."""
+    import numpy as np
+
+    rng = np.random.default_rng(7)
+    h, w, c, k, iters = 40, 30, 3, 4, 5
+    px = (rng.random((h * w, c)) * 255).astype(np.float32)
+
+    def lloyd(centroids):
+        cen = centroids.copy()
+        for _ in range(iters + 1):
+            d = ((px[:, None, :] - cen[None, :, :]) ** 2).sum(axis=2)
+            labels = d.argmin(axis=1)
+            for j in range(k):
+                sel = px[labels == j]
+                if len(sel):
+                    cen[j] = sel.mean(axis=0, dtype=np.float64).astype(np.float32)
+        inertia = float(d.min(axis=1).sum(dtype=np.float64))
+        return labels, cen, inertia
+
+    seed = 123
+    dense_idx = Rng(seed).sample_indices(h * w, k)
+    sparse_idx = Rng(seed).sample_indices_sparse(h * w, k)
+    la, ca, ia = lloyd(px[dense_idx])
+    lb, cb, ib = lloyd(px[sparse_idx])
+    assert (la == lb).all() and (ca == cb).all() and ia == ib
+
+
+def layout_floors(doc):
+    """Row-shaped ns/px/pass floors: (kernel, layout) -> {k: ns}."""
+    floors = {}
+    for case in doc["cases"]:
+        if case["shape"] == "row":
+            floors.setdefault((case["kernel"], case["layout"]), {})[case["k"]] = case[
+                "ns_per_pixel_round"
+            ]
+    return floors
+
+
+def interp(series, k):
+    pts = sorted(series.items())
+    if k <= pts[0][0]:
+        return pts[0][1]
+    if k >= pts[-1][0]:
+        return pts[-1][1]
+    for (k0, v0), (k1, v1) in zip(pts, pts[1:]):
+        if k <= k1:
+            t = (k - k0) / (k1 - k0)
+            return v0 + t * (v1 - v0)
+    return pts[-1][1]
+
+
+DECODE_NS_PER_BYTE = 0.07848  # baked fit, rust/src/plan/cost.rs
+FUSED_OVER_PRUNED = 0.96
+DECODE_CHUNK = 1 << 16  # StripReader::DECODE_CHUNK_BYTES
+
+
+def streamed_peak(width, strip_rows, workers):
+    """Gauge mirror for the budget-degraded plan (file backing, rows of
+    one strip, interleaved layout, no cache, no prefetch)."""
+    strip_bytes = strip_rows * width * 3 * 4
+    ingest = 2 * strip_bytes
+    block_bytes = strip_bytes  # rows[strip_rows] block = one strip
+    chunk = min(strip_bytes, DECODE_CHUNK)
+    runtime = workers * (strip_bytes + chunk + block_bytes)
+    return max(ingest, runtime)
+
+
+def in_memory_peak(height, width, strip_rows, workers):
+    image = height * width * 3 * 4
+    strip_bytes = strip_rows * width * 3 * 4
+    # memory-backed readers serve strips zero-copy; only block crops
+    return image + max(strip_bytes, workers * strip_bytes)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--layout", default="BENCH_layout.json")
+    ap.add_argument("--out", default="BENCH_stream.json")
+    args = ap.parse_args()
+
+    verify_init_equivalence()
+    verify_pipeline_identity()
+    print("init equivalence + numpy pipeline identity: OK")
+
+    with open(args.layout) as f:
+        layout = json.load(f)
+    floors = layout_floors(layout)
+
+    k, iters, workers, strip_rows, mem_mb = 4, 6, 4, 64, 8
+    # The budget-constrained planner's pick (see plan/mod.rs tests):
+    # fused kernel, interleaved layout (fused floor = pruned x 0.96).
+    floor = interp(floors[("pruned", "interleaved")], k) * FUSED_OVER_PRUNED
+
+    cases = []
+    for height, width in [(1024, 1024), (4096, 1024)]:
+        n_px = height * width
+        passes = iters + 1
+        image_bytes = n_px * 3 * 4
+        ingest_ns = image_bytes * DECODE_NS_PER_BYTE / (n_px * passes)
+        mem_ns = floor
+        stream_ns = floor + ingest_ns
+        for mode, ns, peak, budget, file_backed in [
+            ("in-memory", mem_ns, in_memory_peak(height, width, strip_rows, workers), 0, False),
+            ("streamed", stream_ns, streamed_peak(width, strip_rows, workers), mem_mb, True),
+        ]:
+            if budget:
+                assert peak <= budget << 20, (mode, height, width, peak)
+            cases.append(
+                {
+                    "mode": mode,
+                    "height": height,
+                    "width": width,
+                    "k": k,
+                    "wall_secs": ns * n_px * passes / 1e9,
+                    "ns_per_pixel_pass": round(ns, 3),
+                    "peak_resident_bytes": peak,
+                    "mem_mb": budget,
+                    "file_backed": file_backed,
+                    "matches_in_memory": True,
+                }
+            )
+
+    doc = {
+        "source": "python-model",
+        "channels": 3,
+        "k": k,
+        "iters": iters,
+        "samples": 2,
+        "seed": 0x57_8EA4,
+        "workers": workers,
+        "strip_rows": strip_rows,
+        "mem_mb": mem_mb,
+        "cases": cases,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Schema check for BENCH_stream.json (CI smoke + committed file).
+
+Usage: check_stream_schema.py <path> [--full]
+
+Validates the document the rust `blockms stream` bench and the python
+model both emit (EXPERIMENTS.md §Streaming), and gates the two
+out-of-core acceptance invariants:
+
+- every streamed case is bitwise identical to its in-memory twin
+  (`matches_in_memory`), and
+- every budgeted case's audited peak resident bytes sit at or under
+  its `mem_mb` budget.
+
+With --full, also requires the acceptance geometries (1024x1024 and
+the tall 4096x1024 case) and the height-independence property: the
+tall streamed case — 4x the pixels — must not have a larger resident
+footprint than the square one.
+"""
+
+import json
+import sys
+
+MODES = {"in-memory", "streamed"}
+META_NUM = ["k", "iters", "samples", "seed", "workers", "strip_rows", "mem_mb", "channels"]
+CASE_NUM = [
+    "height",
+    "width",
+    "k",
+    "wall_secs",
+    "ns_per_pixel_pass",
+    "peak_resident_bytes",
+    "mem_mb",
+]
+
+
+def fail(msg):
+    print(f"BENCH_stream.json schema check FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    full = "--full" in sys.argv
+    path = args[0] if args else "BENCH_stream.json"
+    with open(path) as f:
+        doc = json.load(f)
+
+    for key in META_NUM:
+        if not isinstance(doc.get(key), (int, float)):
+            fail(f"meta field {key!r} missing or non-numeric")
+    if doc.get("source") not in ("rust", "python-model"):
+        fail(f"unknown source {doc.get('source')!r}")
+    if doc["mem_mb"] <= 0:
+        fail("the streamed matrix must run under a positive mem_mb budget")
+
+    cases = doc.get("cases")
+    if not isinstance(cases, list) or not cases:
+        fail("cases missing or empty")
+    seen = set()
+    for i, c in enumerate(cases):
+        if c.get("mode") not in MODES:
+            fail(f"case {i}: bad mode {c.get('mode')!r}")
+        for key in CASE_NUM:
+            if not isinstance(c.get(key), (int, float)):
+                fail(f"case {i}: field {key!r} missing or non-numeric")
+        if not isinstance(c.get("file_backed"), bool):
+            fail(f"case {i}: field 'file_backed' missing or non-bool")
+        if c.get("matches_in_memory") is not True:
+            fail(f"case {i}: matches_in_memory is not true — a broken pipeline, not a result")
+        if c["mem_mb"] > 0 and c["peak_resident_bytes"] > c["mem_mb"] * (1 << 20):
+            fail(
+                f"case {i} ({c['width']}x{c['height']} {c['mode']}): peak resident "
+                f"{c['peak_resident_bytes']} bytes exceeds the {c['mem_mb']} MiB budget"
+            )
+        seen.add((c["mode"], c["height"], c["width"]))
+
+    streamed = {(c["height"], c["width"]): c for c in cases if c["mode"] == "streamed"}
+    for hw in streamed:
+        if ("in-memory",) + hw not in seen:
+            fail(f"streamed case {hw} has no in-memory twin")
+        if streamed[hw]["mem_mb"] <= 0:
+            fail(f"streamed case {hw} ran without a budget")
+
+    if full:
+        for hw in [(1024, 1024), (4096, 1024)]:
+            if hw not in streamed:
+                fail(f"--full requires the {hw[1]}x{hw[0]} streamed case")
+        square = streamed[(1024, 1024)]["peak_resident_bytes"]
+        tall = streamed[(4096, 1024)]["peak_resident_bytes"]
+        if tall > square:
+            fail(
+                f"height-independence violated: tall streamed peak {tall} > "
+                f"square streamed peak {square}"
+            )
+        image_bytes = 4096 * 1024 * 3 * 4
+        if tall * 4 > image_bytes:
+            fail(f"tall streamed peak {tall} is not out-of-core vs {image_bytes} image bytes")
+
+    print(f"{path}: schema OK ({len(cases)} cases, source={doc['source']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ pub mod layout;
 pub mod plan;
 pub mod runner;
 pub mod service;
+pub mod stream;
 pub mod tables;
 pub mod workloads;
 
@@ -18,4 +19,5 @@ pub use layout::{LayoutBenchOpts, LayoutBenchRow};
 pub use plan::{PlanBenchOpts, PlanBenchRow};
 pub use runner::{ExperimentConfig, ExperimentRow, Runner};
 pub use service::{ServiceBenchOpts, ServiceBenchRow};
+pub use stream::{StreamBenchOpts, StreamBenchRow};
 pub use workloads::{paper_sizes, PaperSize, Workload};

@@ -51,6 +51,9 @@ pub struct ServiceBenchOpts {
     pub batch_sizes: Vec<usize>,
     pub kernel: KernelChoice,
     pub schedule: Schedule,
+    /// Cluster this PPM (every job slot shares it) instead of distinct
+    /// synthetic scenes — `blockms batch --input scene.ppm`.
+    pub input: Option<std::path::PathBuf>,
 }
 
 impl Default for ServiceBenchOpts {
@@ -65,6 +68,7 @@ impl Default for ServiceBenchOpts {
             batch_sizes: vec![1, 4, 16],
             kernel: KernelChoice::Fused,
             schedule: Schedule::Dynamic,
+            input: None,
         }
     }
 }
@@ -122,7 +126,7 @@ fn solo_reference(opts: &ServiceBenchOpts, images: &[Arc<Raster>]) -> Result<Clu
         schedule: opts.schedule,
         ..Default::default()
     });
-    coord.cluster(&spec.image, &spec.cluster)
+    coord.cluster(spec.raster().expect("bench jobs carry rasters"), &spec.cluster)
 }
 
 /// Run the full (pool × batch) matrix.
@@ -137,15 +141,25 @@ pub fn run_service_bench(opts: &ServiceBenchOpts) -> Result<Vec<ServiceBenchRow>
     );
     let max_batch = opts.batch_sizes.iter().copied().max().unwrap_or(1);
     // Distinct image per job slot — this is *cross-image* interleaving.
-    let images: Vec<Arc<Raster>> = (0..max_batch)
-        .map(|j| {
-            Arc::new(
-                SyntheticOrtho::default()
-                    .with_seed(opts.seed.wrapping_add(j as u64))
-                    .generate(opts.height, opts.width),
-            )
-        })
-        .collect();
+    // With --input, every slot clusters the same on-disk scene instead.
+    let images: Vec<Arc<Raster>> = match &opts.input {
+        Some(path) => {
+            let img = Arc::new(
+                crate::image::read_ppm(path)
+                    .with_context(|| format!("load {}", path.display()))?,
+            );
+            (0..max_batch).map(|_| Arc::clone(&img)).collect()
+        }
+        None => (0..max_batch)
+            .map(|j| {
+                Arc::new(
+                    SyntheticOrtho::default()
+                        .with_seed(opts.seed.wrapping_add(j as u64))
+                        .generate(opts.height, opts.width),
+                )
+            })
+            .collect(),
+    };
     let reference = solo_reference(opts, &images)?;
     let pixels = (opts.height * opts.width) as f64;
     let passes = (opts.iters + 1) as f64;

@@ -1,0 +1,340 @@
+//! Streaming-layer benchmark: the out-of-core pipeline vs the
+//! in-memory pipeline, with the machine-readable `BENCH_stream.json`
+//! trail (EXPERIMENTS.md §Streaming documents the schema).
+//!
+//! For every case geometry the bench runs the same clustering twice:
+//!
+//! 1. **in-memory** — the seed path: the scene is materialized as a
+//!    raster, copied into a memory-backed strip store, clustered;
+//! 2. **streamed** — [`Coordinator::cluster_source`] under a hard
+//!    `mem_mb` budget: strips decode on demand into a planner-chosen
+//!    (usually file-backed) store, the init rides the ingest pass, and
+//!    labels leave through the spillable sink.
+//!
+//! Every streamed row re-verifies the two acceptance invariants:
+//! `matches_in_memory` (labels/centroids/inertia bitwise equal to the
+//! in-memory run) and `peak_resident_bytes ≤ mem_mb` (the audited
+//! gauge, not the model). The tall 4096×1024 case is the
+//! height-independence witness: 4× the pixels of 1024², same streamed
+//! footprint.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::{
+    ClusterConfig, Coordinator, CoordinatorConfig, IoMode, Schedule, StreamRun,
+};
+use crate::image::{SyntheticOrtho, SyntheticSource};
+use crate::plan::{Planner, PlanRequest};
+use crate::util::fmt::Table;
+use crate::util::json::Json;
+
+/// Benchmark shape. Defaults are the acceptance configuration: 1024²
+/// plus the 4096×1024 tall case, k=4, 6 fixed Lloyd rounds, an 8 MiB
+/// budget (the 1024² image alone is 12 MiB — the budget forces real
+/// streaming).
+#[derive(Clone, Debug)]
+pub struct StreamBenchOpts {
+    /// Case geometries `(height, width)`.
+    pub cases: Vec<(usize, usize)>,
+    pub k: usize,
+    pub iters: usize,
+    /// Timed repetitions per mode (best reported; one warmup first).
+    pub samples: usize,
+    pub seed: u64,
+    pub workers: usize,
+    pub strip_rows: usize,
+    /// Resident budget for the streamed runs, MiB.
+    pub mem_mb: usize,
+}
+
+impl Default for StreamBenchOpts {
+    fn default() -> Self {
+        StreamBenchOpts {
+            cases: vec![(1024, 1024), (4096, 1024)],
+            k: 4,
+            iters: 6,
+            samples: 2,
+            seed: 0x57_8EA4,
+            workers: 4,
+            strip_rows: 64,
+            mem_mb: 8,
+        }
+    }
+}
+
+impl StreamBenchOpts {
+    /// CI smoke size: small geometries whose images still exceed the
+    /// budget (384×256×3×4 = 1.125 MiB > 1 MiB), so the smoke run
+    /// exercises the same degrade-to-file machinery as the full bench.
+    pub fn quick() -> StreamBenchOpts {
+        StreamBenchOpts {
+            cases: vec![(384, 256), (1024, 96)],
+            k: 2,
+            iters: 3,
+            samples: 1,
+            strip_rows: 16,
+            mem_mb: 1,
+            ..Default::default()
+        }
+    }
+}
+
+/// One benchmark cell (one mode of one geometry).
+#[derive(Clone, Debug)]
+pub struct StreamBenchRow {
+    /// `"in-memory"` or `"streamed"`.
+    pub mode: &'static str,
+    pub height: usize,
+    pub width: usize,
+    pub k: usize,
+    /// Best-sample wall seconds for the whole drive — the streamed
+    /// wall *includes* source decode/ingest (that is the pipeline).
+    pub wall_secs: f64,
+    pub ns_per_pixel_pass: f64,
+    /// Audited high-water mark of tracked resident pixel bytes.
+    pub peak_resident_bytes: u64,
+    /// Budget the row ran under (0 = unbounded, the in-memory rows).
+    pub mem_mb: usize,
+    /// Streamed rows: the planner degraded to file backing.
+    pub file_backed: bool,
+    /// Labels, centroids, and inertia bitwise equal to the in-memory
+    /// run (true by definition on in-memory rows).
+    pub matches_in_memory: bool,
+}
+
+/// Run the streamed-vs-in-memory matrix.
+pub fn run_stream_bench(opts: &StreamBenchOpts) -> Result<Vec<StreamBenchRow>> {
+    ensure!(!opts.cases.is_empty(), "need at least one case geometry");
+    let mut rows = Vec::new();
+    for &(height, width) in &opts.cases {
+        let gen = SyntheticOrtho::default().with_seed(opts.seed ^ ((height as u64) << 1));
+        let ccfg = ClusterConfig {
+            k: opts.k,
+            fixed_iters: Some(opts.iters),
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let pixels = (height * width) as f64;
+        let passes = (opts.iters + 1) as f64;
+
+        // Streamed plan: budget + strips, workers pinned, rest free.
+        let mut req = PlanRequest::new(height, width, 3, opts.k)
+            .with_rounds(opts.iters)
+            .with_strip_rows(Some(opts.strip_rows))
+            .with_mem_mb(Some(opts.mem_mb));
+        req.workers = Some(opts.workers);
+        let (exec, explain) = Planner::default().resolve(&req);
+        ensure!(
+            !explain.budget_exceeded(),
+            "{height}x{width}: no feasible plan under {} MiB",
+            opts.mem_mb
+        );
+
+        // In-memory reference: identical strategy, no budget, memory
+        // backing, dense labels — the seed pipeline.
+        let mem_exec = exec.with_mem_mb(0).with_file_backing(false);
+        let img = Arc::new(gen.generate(height, width));
+        let coord_mem = Coordinator::new(CoordinatorConfig {
+            exec: mem_exec,
+            io: IoMode::Strips {
+                strip_rows: opts.strip_rows,
+                file_backed: false,
+            },
+            schedule: Schedule::Static,
+            ..Default::default()
+        });
+        let mut mem_best = f64::INFINITY;
+        let mut mem_out = None;
+        for sample in 0..opts.samples.max(1) + 1 {
+            let t0 = Instant::now();
+            let out = coord_mem.cluster(&img, &ccfg)?;
+            let dt = t0.elapsed().as_secs_f64();
+            if sample > 0 {
+                mem_best = mem_best.min(dt);
+            }
+            mem_out = Some(out);
+        }
+        let mem_out = mem_out.expect("at least one sample ran");
+        rows.push(StreamBenchRow {
+            mode: "in-memory",
+            height,
+            width,
+            k: opts.k,
+            wall_secs: mem_best,
+            ns_per_pixel_pass: mem_best * 1e9 / (pixels * passes),
+            peak_resident_bytes: mem_out
+                .io_stats
+                .map(|s| s.peak_resident_bytes)
+                .unwrap_or(0),
+            mem_mb: 0,
+            file_backed: false,
+            matches_in_memory: true,
+        });
+
+        // Streamed: same clustering, pixels never fully resident.
+        let coord_stream = Coordinator::new(CoordinatorConfig {
+            exec,
+            io: IoMode::Strips {
+                strip_rows: opts.strip_rows,
+                file_backed: exec.file_backed,
+            },
+            schedule: Schedule::Static,
+            ..Default::default()
+        });
+        let mut stream_best = f64::INFINITY;
+        let mut stream_run: Option<StreamRun> = None;
+        for sample in 0..opts.samples.max(1) + 1 {
+            let mut src = SyntheticSource::new(&gen, height, width);
+            let t0 = Instant::now();
+            let run = coord_stream.cluster_source(&mut src, &ccfg)?;
+            let dt = t0.elapsed().as_secs_f64();
+            if sample > 0 {
+                stream_best = stream_best.min(dt);
+            }
+            stream_run = Some(run);
+        }
+        let run = stream_run.expect("at least one sample ran");
+        let peak = run.peak_resident_bytes;
+        let matches = {
+            let streamed_labels = run.labels.into_dense()?;
+            streamed_labels == mem_out.labels
+                && run.centroids == mem_out.centroids
+                && run.inertia.to_bits() == mem_out.inertia.to_bits()
+                && run.iterations == mem_out.iterations
+        };
+        rows.push(StreamBenchRow {
+            mode: "streamed",
+            height,
+            width,
+            k: opts.k,
+            wall_secs: stream_best,
+            ns_per_pixel_pass: stream_best * 1e9 / (pixels * passes),
+            peak_resident_bytes: peak,
+            mem_mb: opts.mem_mb,
+            file_backed: exec.file_backed,
+            matches_in_memory: matches,
+        });
+    }
+    Ok(rows)
+}
+
+/// Serialize the matrix as the `BENCH_stream.json` document.
+pub fn stream_bench_json(opts: &StreamBenchOpts, rows: &[StreamBenchRow]) -> String {
+    let num = Json::Num;
+    let mut doc = BTreeMap::new();
+    doc.insert("source".to_string(), Json::Str("rust".to_string()));
+    doc.insert("channels".to_string(), num(3.0));
+    doc.insert("k".to_string(), num(opts.k as f64));
+    doc.insert("iters".to_string(), num(opts.iters as f64));
+    doc.insert("samples".to_string(), num(opts.samples as f64));
+    doc.insert("seed".to_string(), num(opts.seed as f64));
+    doc.insert("workers".to_string(), num(opts.workers as f64));
+    doc.insert("strip_rows".to_string(), num(opts.strip_rows as f64));
+    doc.insert("mem_mb".to_string(), num(opts.mem_mb as f64));
+    let cases = rows
+        .iter()
+        .map(|r| {
+            let mut c = BTreeMap::new();
+            c.insert("mode".to_string(), Json::Str(r.mode.to_string()));
+            c.insert("height".to_string(), num(r.height as f64));
+            c.insert("width".to_string(), num(r.width as f64));
+            c.insert("k".to_string(), num(r.k as f64));
+            c.insert("wall_secs".to_string(), num(r.wall_secs));
+            c.insert("ns_per_pixel_pass".to_string(), num(r.ns_per_pixel_pass));
+            c.insert(
+                "peak_resident_bytes".to_string(),
+                num(r.peak_resident_bytes as f64),
+            );
+            c.insert("mem_mb".to_string(), num(r.mem_mb as f64));
+            c.insert("file_backed".to_string(), Json::Bool(r.file_backed));
+            c.insert(
+                "matches_in_memory".to_string(),
+                Json::Bool(r.matches_in_memory),
+            );
+            Json::Obj(c)
+        })
+        .collect();
+    doc.insert("cases".to_string(), Json::Arr(cases));
+    Json::Obj(doc).to_string()
+}
+
+/// Run the matrix and write `BENCH_stream.json` to `path`.
+pub fn write_stream_bench(path: &Path, opts: &StreamBenchOpts) -> Result<Vec<StreamBenchRow>> {
+    let rows = run_stream_bench(opts)?;
+    std::fs::write(path, stream_bench_json(opts, &rows))
+        .with_context(|| format!("write stream bench to {}", path.display()))?;
+    Ok(rows)
+}
+
+/// Human-readable rendering of the matrix.
+pub fn render_stream_bench(opts: &StreamBenchOpts, rows: &[StreamBenchRow]) -> String {
+    let mut t = Table::new(format!(
+        "Out-of-core pipeline: streamed (budget {} MiB) vs in-memory, k={}, {} iters",
+        opts.mem_mb, opts.k, opts.iters
+    ))
+    .header(&[
+        "Image", "Mode", "ns/px/pass", "Peak resident", "Budget", "Store", "Identical",
+    ]);
+    for r in rows {
+        t.row(vec![
+            format!("{}x{}", r.width, r.height),
+            r.mode.to_string(),
+            format!("{:.2}", r.ns_per_pixel_pass),
+            format!("{:.2} MiB", r.peak_resident_bytes as f64 / (1 << 20) as f64),
+            if r.mem_mb > 0 {
+                format!("{} MiB", r.mem_mb)
+            } else {
+                "-".to_string()
+            },
+            if r.file_backed { "file" } else { "mem" }.to_string(),
+            if r.matches_in_memory { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_matrix_streams_under_budget_and_matches() {
+        let opts = StreamBenchOpts {
+            cases: vec![(96, 40), (220, 24)],
+            iters: 2,
+            samples: 1,
+            workers: 2,
+            strip_rows: 8,
+            // Tiny test geometries fit a 1 MiB budget even
+            // memory-backed — the invariants (bit-identity, peak under
+            // budget) hold either way; the CI quick profile and the
+            // committed bench exercise the over-budget degrade.
+            mem_mb: 1,
+            ..StreamBenchOpts::quick()
+        };
+        let rows = run_stream_bench(&opts).unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.matches_in_memory, "{} {}x{} diverged", r.mode, r.width, r.height);
+            if r.mode == "streamed" && r.mem_mb > 0 {
+                assert!(
+                    r.peak_resident_bytes <= (r.mem_mb as u64) << 20,
+                    "{}x{}: {} over budget",
+                    r.width,
+                    r.height,
+                    r.peak_resident_bytes
+                );
+            }
+        }
+        let json = stream_bench_json(&opts, &rows);
+        let doc = Json::parse(&json).unwrap();
+        assert_eq!(doc.get("cases").and_then(Json::as_arr).unwrap().len(), 4);
+        let text = render_stream_bench(&opts, &rows);
+        assert!(text.contains("streamed") && text.contains("yes"), "{text}");
+    }
+}

@@ -6,68 +6,97 @@
 
 use super::region::BlockRegion;
 
-/// Accumulates per-block label buffers into a full `height×width` map.
-#[derive(Clone, Debug)]
-pub struct LabelAssembler {
-    height: usize,
-    width: usize,
-    labels: Vec<u32>,
-    /// Count of pixels written (each exactly once when complete).
-    written: usize,
-    /// Per-block-origin guard against double placement.
-    placed: std::collections::BTreeSet<(usize, usize)>,
-}
-
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum AssembleError {
     #[error("block {0} exceeds image bounds {1}x{2}")]
     OutOfBounds(BlockRegion, usize, usize),
     #[error("block {0} placed twice")]
     Duplicate(BlockRegion),
+    #[error("block {0} overlaps previously placed block {1}")]
+    Overlap(BlockRegion, BlockRegion),
     #[error("label buffer for {0} has {1} entries, block area is {2}")]
     WrongSize(BlockRegion, usize, usize),
     #[error("assembly incomplete: {written}/{total} pixels written")]
     Incomplete { written: usize, total: usize },
 }
 
-impl LabelAssembler {
-    pub fn new(height: usize, width: usize) -> LabelAssembler {
-        LabelAssembler {
+/// The bookkeeping every assembler shares: bounds/size validation,
+/// duplicate *and* overlap rejection, and exactly-once coverage. The
+/// in-memory [`LabelAssembler`] and the spill-backed
+/// [`super::sink::SpillAssembler`] both claim regions through one
+/// `Coverage`, so their error behaviour cannot drift.
+///
+/// Placed regions are indexed by starting row so a claim only compares
+/// against regions whose row span can reach it — on the streaming
+/// path's strip-tall row plans (thousands of blocks on a tall image)
+/// that is O(1) amortized per claim instead of a full O(B) scan.
+#[derive(Clone, Debug)]
+pub(crate) struct Coverage {
+    height: usize,
+    width: usize,
+    written: usize,
+    /// Placed regions, keyed by `row0`.
+    placed: std::collections::BTreeMap<usize, Vec<BlockRegion>>,
+    /// Tallest region seen (bounds the backward row-range scan).
+    max_rows: usize,
+}
+
+impl Coverage {
+    pub(crate) fn new(height: usize, width: usize) -> Coverage {
+        Coverage {
             height,
             width,
-            labels: vec![u32::MAX; height * width],
             written: 0,
-            placed: Default::default(),
+            placed: std::collections::BTreeMap::new(),
+            max_rows: 0,
         }
     }
 
-    /// Place one block's labels (row-major within the region).
-    pub fn place(&mut self, region: &BlockRegion, labels: &[u32]) -> Result<(), AssembleError> {
+    /// Validate and record one region; errors leave the coverage
+    /// untouched.
+    pub(crate) fn claim(
+        &mut self,
+        region: &BlockRegion,
+        labels_len: usize,
+    ) -> Result<(), AssembleError> {
         if region.row_end() > self.height || region.col_end() > self.width {
             return Err(AssembleError::OutOfBounds(*region, self.height, self.width));
         }
-        if labels.len() != region.area() {
-            return Err(AssembleError::WrongSize(*region, labels.len(), region.area()));
+        if labels_len != region.area() {
+            return Err(AssembleError::WrongSize(*region, labels_len, region.area()));
         }
-        if !self.placed.insert((region.row0, region.col0)) {
-            return Err(AssembleError::Duplicate(*region));
+        // A placed region can only intersect if its row0 lies within
+        // max_rows - 1 rows above region.row0, or anywhere inside the
+        // region's own row span.
+        let lo = region.row0.saturating_sub(self.max_rows.saturating_sub(1));
+        for (_, bucket) in self.placed.range(lo..region.row_end()) {
+            for prev in bucket {
+                if prev == region {
+                    return Err(AssembleError::Duplicate(*region));
+                }
+                if prev.intersects(region) {
+                    return Err(AssembleError::Overlap(*region, *prev));
+                }
+            }
         }
-        for (ri, r) in (region.row0..region.row_end()).enumerate() {
-            let src = &labels[ri * region.cols()..(ri + 1) * region.cols()];
-            let dst_start = r * self.width + region.col0;
-            self.labels[dst_start..dst_start + region.cols()].copy_from_slice(src);
-        }
+        self.placed.entry(region.row0).or_default().push(*region);
+        self.max_rows = self.max_rows.max(region.rows());
         self.written += region.area();
         Ok(())
     }
 
+    pub(crate) fn written(&self) -> usize {
+        self.written
+    }
+
     /// Fraction of the image covered so far.
-    pub fn coverage(&self) -> f64 {
+    pub(crate) fn fraction(&self) -> f64 {
         self.written as f64 / (self.height * self.width) as f64
     }
 
-    /// Finish: every pixel must have been written exactly once.
-    pub fn finish(self) -> Result<Vec<u32>, AssembleError> {
+    /// Exactly-once completeness check (overlap rejection at claim time
+    /// makes `written == total` equivalent to full coverage).
+    pub(crate) fn finish_check(&self) -> Result<(), AssembleError> {
         let total = self.height * self.width;
         if self.written != total {
             return Err(AssembleError::Incomplete {
@@ -75,6 +104,49 @@ impl LabelAssembler {
                 total,
             });
         }
+        Ok(())
+    }
+}
+
+/// Accumulates per-block label buffers into a full `height×width` map.
+#[derive(Clone, Debug)]
+pub struct LabelAssembler {
+    width: usize,
+    labels: Vec<u32>,
+    coverage: Coverage,
+}
+
+impl LabelAssembler {
+    pub fn new(height: usize, width: usize) -> LabelAssembler {
+        LabelAssembler {
+            width,
+            labels: vec![u32::MAX; height * width],
+            coverage: Coverage::new(height, width),
+        }
+    }
+
+    /// Place one block's labels (row-major within the region). A region
+    /// that duplicates or merely *overlaps* an earlier placement is a
+    /// hard error — silent overwrites were possible before overlap
+    /// tracking and would have corrupted coverage accounting.
+    pub fn place(&mut self, region: &BlockRegion, labels: &[u32]) -> Result<(), AssembleError> {
+        self.coverage.claim(region, labels.len())?;
+        for (ri, r) in (region.row0..region.row_end()).enumerate() {
+            let src = &labels[ri * region.cols()..(ri + 1) * region.cols()];
+            let dst_start = r * self.width + region.col0;
+            self.labels[dst_start..dst_start + region.cols()].copy_from_slice(src);
+        }
+        Ok(())
+    }
+
+    /// Fraction of the image covered so far.
+    pub fn coverage(&self) -> f64 {
+        self.coverage.fraction()
+    }
+
+    /// Finish: every pixel must have been written exactly once.
+    pub fn finish(self) -> Result<Vec<u32>, AssembleError> {
+        self.coverage.finish_check()?;
         Ok(self.labels)
     }
 }
@@ -110,6 +182,26 @@ mod tests {
         let r = BlockRegion::new(0, 0, 2, 2);
         asm.place(&r, &[0; 4]).unwrap();
         assert_eq!(asm.place(&r, &[0; 4]), Err(AssembleError::Duplicate(r)));
+    }
+
+    #[test]
+    fn overlapping_block_rejected() {
+        // A different-origin region that intersects an earlier one used
+        // to silently overwrite; now it is a hard error and the failed
+        // placement leaves coverage untouched.
+        let mut asm = LabelAssembler::new(4, 4);
+        let a = BlockRegion::new(0, 0, 2, 2);
+        asm.place(&a, &[7; 4]).unwrap();
+        let b = BlockRegion::new(1, 1, 2, 2);
+        assert_eq!(asm.place(&b, &[9; 4]), Err(AssembleError::Overlap(b, a)));
+        assert!((asm.coverage() - 0.25).abs() < 1e-12, "failed place must not count");
+        // non-overlapping neighbours still fine
+        asm.place(&BlockRegion::new(0, 2, 2, 2), &[1; 4]).unwrap();
+        asm.place(&BlockRegion::new(2, 0, 2, 4), &[2; 8]).unwrap();
+        let out = asm.finish().unwrap();
+        assert_eq!(out[0], 7);
+        assert_eq!(out[3], 1);
+        assert_eq!(out[15], 2);
     }
 
     #[test]

@@ -19,10 +19,12 @@ mod assemble;
 mod plan;
 mod region;
 pub(crate) mod shape;
+pub mod sink;
 pub mod sliding;
 
 pub use assemble::{AssembleError, LabelAssembler};
 pub use plan::BlockPlan;
 pub use region::BlockRegion;
 pub use shape::{ApproachKind, BlockShape};
+pub use sink::{LabelMap, LabelSink, LabelSpool, SpillAssembler};
 pub use sliding::{padded_crop, sliding_apply, NeighborhoodOp, PadMethod};

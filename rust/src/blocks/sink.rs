@@ -1,0 +1,501 @@
+//! Spillable label output: dense in memory below budget, strip-spooled
+//! to disk above it.
+//!
+//! The seed pipeline's final artifact was always a dense `Vec<u32>` of
+//! `height × width` labels — 4 bytes per pixel that, for the tall
+//! orthoimagery the paper targets, can rival the image itself. A
+//! [`LabelSink`] keeps the familiar dense assembler when the map fits
+//! the budget and otherwise spools block placements into a temporary
+//! file of little-endian u32s ([`SpillAssembler`]), with the same
+//! bounds/duplicate/overlap/coverage discipline (one shared
+//! coverage tracker with [`LabelAssembler`]). The finished [`LabelMap`] serves
+//! both shapes: whole-map access for the in-memory case, bounded
+//! strip-at-a-time iteration plus streaming PGM/PPM export for the
+//! spooled case — labels go from disk back to disk without a full map
+//! ever being resident.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{ensure, Context, Result};
+
+use super::assemble::{Coverage, LabelAssembler};
+use super::region::BlockRegion;
+use crate::image::PALETTE;
+
+/// Process-wide sequence so concurrent spools (pid collisions across
+/// processes included) never share a file.
+static SPOOL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn spool_path(height: usize, width: usize) -> PathBuf {
+    let seq = SPOOL_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "blockms_labels_p{}_{seq}_{height}x{width}.u32le",
+        std::process::id()
+    ))
+}
+
+/// Where assembled labels accumulate: dense memory below the budget, a
+/// spool file above it.
+#[derive(Debug)]
+pub enum LabelSink {
+    Memory(LabelAssembler),
+    Spill(SpillAssembler),
+}
+
+impl LabelSink {
+    /// Dense when `height × width × 4` fits `budget_bytes` (or no
+    /// budget is given — the seed behaviour); spooled otherwise.
+    pub fn new(height: usize, width: usize, budget_bytes: Option<u64>) -> Result<LabelSink> {
+        let dense_bytes = (height * width * 4) as u64;
+        match budget_bytes {
+            Some(budget) if dense_bytes > budget => {
+                Ok(LabelSink::Spill(SpillAssembler::create(height, width)?))
+            }
+            _ => Ok(LabelSink::Memory(LabelAssembler::new(height, width))),
+        }
+    }
+
+    /// Is this sink spooling to disk?
+    pub fn spills(&self) -> bool {
+        matches!(self, LabelSink::Spill(_))
+    }
+
+    /// Place one block's labels (row-major within the region); same
+    /// contract as [`LabelAssembler::place`] on both variants.
+    pub fn place(&mut self, region: &BlockRegion, labels: &[u32]) -> Result<()> {
+        match self {
+            LabelSink::Memory(asm) => asm.place(region, labels).map_err(anyhow::Error::new),
+            LabelSink::Spill(sp) => sp.place(region, labels),
+        }
+    }
+
+    /// Finish: every pixel written exactly once.
+    pub fn finish(self) -> Result<LabelMap> {
+        match self {
+            LabelSink::Memory(asm) => Ok(LabelMap::Dense(asm.finish()?)),
+            LabelSink::Spill(sp) => Ok(LabelMap::Spooled(sp.finish()?)),
+        }
+    }
+}
+
+/// File-backed assembler: a preallocated `height × width` u32-LE map,
+/// written by `seek + write` per block row. Resident memory is one
+/// block row's worth of bytes, independent of image height.
+#[derive(Debug)]
+pub struct SpillAssembler {
+    height: usize,
+    width: usize,
+    path: PathBuf,
+    /// `Some` while assembling; taken by `finish` (drop with `Some`
+    /// means an abandoned assembly, whose file is removed).
+    file: Option<File>,
+    coverage: Coverage,
+    row_bytes: Vec<u8>,
+}
+
+impl SpillAssembler {
+    fn create(height: usize, width: usize) -> Result<SpillAssembler> {
+        let path = spool_path(height, width);
+        let file = File::options()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .with_context(|| format!("create label spool {}", path.display()))?;
+        file.set_len((height * width * 4) as u64)
+            .context("size label spool")?;
+        Ok(SpillAssembler {
+            height,
+            width,
+            path,
+            file: Some(file),
+            coverage: Coverage::new(height, width),
+            row_bytes: Vec::new(),
+        })
+    }
+
+    pub fn place(&mut self, region: &BlockRegion, labels: &[u32]) -> Result<()> {
+        self.coverage.claim(region, labels.len())?;
+        let file = self.file.as_mut().expect("spool open while assembling");
+        for (ri, r) in (region.row0..region.row_end()).enumerate() {
+            let src = &labels[ri * region.cols()..(ri + 1) * region.cols()];
+            self.row_bytes.clear();
+            self.row_bytes
+                .extend(src.iter().flat_map(|l| l.to_le_bytes()));
+            let offset = ((r * self.width + region.col0) * 4) as u64;
+            file.seek(SeekFrom::Start(offset))
+                .context("seek label spool")?;
+            file.write_all(&self.row_bytes)
+                .context("write label spool")?;
+        }
+        Ok(())
+    }
+
+    /// Pixels written so far.
+    pub fn written(&self) -> usize {
+        self.coverage.written()
+    }
+
+    fn finish(mut self) -> Result<LabelSpool> {
+        self.coverage.finish_check()?;
+        let mut file = self.file.take().expect("spool open while assembling");
+        file.flush().context("flush label spool")?;
+        Ok(LabelSpool {
+            height: self.height,
+            width: self.width,
+            path: self.path.clone(),
+            file: Mutex::new(file),
+        })
+    }
+}
+
+impl Drop for SpillAssembler {
+    fn drop(&mut self) {
+        // Only an *abandoned* assembly cleans up; a finished one handed
+        // its file (and cleanup duty) to the LabelSpool.
+        if self.file.is_some() {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// A finished, disk-resident label map. Reads are strip-granular
+/// ([`LabelSpool::read_rows`]); [`LabelMap::into_dense`] exists for
+/// tests and small maps. The backing file is deleted on drop.
+#[derive(Debug)]
+pub struct LabelSpool {
+    height: usize,
+    width: usize,
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+impl LabelSpool {
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read `rows` label rows starting at `row0` into `out`.
+    pub fn read_rows(&self, row0: usize, rows: usize, out: &mut Vec<u32>) -> Result<()> {
+        ensure!(
+            row0 + rows <= self.height,
+            "rows {row0}..{} outside {} label rows",
+            row0 + rows,
+            self.height
+        );
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start((row0 * self.width * 4) as u64))
+            .context("seek label spool")?;
+        let mut bytes = vec![0u8; rows * self.width * 4];
+        f.read_exact(&mut bytes).context("read label spool")?;
+        out.clear();
+        out.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]])),
+        );
+        Ok(())
+    }
+}
+
+impl Drop for LabelSpool {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// The finished label map, dense or spooled — one type downstream code
+/// can hold without caring where the labels live.
+#[derive(Debug)]
+pub enum LabelMap {
+    Dense(Vec<u32>),
+    Spooled(LabelSpool),
+}
+
+impl LabelMap {
+    /// Total label count (`height × width` when complete).
+    pub fn len(&self) -> usize {
+        match self {
+            LabelMap::Dense(v) => v.len(),
+            LabelMap::Spooled(s) => s.height * s.width,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Did this map spill to disk?
+    pub fn is_spooled(&self) -> bool {
+        matches!(self, LabelMap::Spooled(_))
+    }
+
+    /// Borrow the dense labels, when resident.
+    pub fn as_dense(&self) -> Option<&[u32]> {
+        match self {
+            LabelMap::Dense(v) => Some(v),
+            LabelMap::Spooled(_) => None,
+        }
+    }
+
+    /// Visit the map in bounded chunks of `chunk_rows` rows:
+    /// `f(first_row, row-major labels)`. Resident memory for a spooled
+    /// map is one chunk.
+    pub fn for_each_rows(
+        &self,
+        chunk_rows: usize,
+        mut f: impl FnMut(usize, &[u32]) -> Result<()>,
+    ) -> Result<()> {
+        assert!(chunk_rows > 0, "chunk_rows must be positive");
+        match self {
+            LabelMap::Dense(_) => {
+                // Dense maps don't know their geometry; serve one chunk.
+                let v = self.as_dense().expect("dense");
+                f(0, v)
+            }
+            LabelMap::Spooled(s) => {
+                let mut buf = Vec::new();
+                let mut row = 0;
+                while row < s.height {
+                    let rows = chunk_rows.min(s.height - row);
+                    s.read_rows(row, rows, &mut buf)?;
+                    f(row, &buf)?;
+                    row += rows;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Materialize as a dense vector (spooled maps read back fully —
+    /// back-compat and tests; the streaming CLI path uses
+    /// [`LabelMap::write_labels_ppm`] instead).
+    pub fn into_dense(self) -> Result<Vec<u32>> {
+        match self {
+            LabelMap::Dense(v) => Ok(v),
+            LabelMap::Spooled(s) => {
+                let mut all = Vec::with_capacity(s.height * s.width);
+                let mut buf = Vec::new();
+                let mut row = 0;
+                while row < s.height {
+                    let rows = 64usize.min(s.height - row);
+                    s.read_rows(row, rows, &mut buf)?;
+                    all.extend_from_slice(&buf);
+                    row += rows;
+                }
+                Ok(all)
+            }
+        }
+    }
+
+    /// Write the map as a palette-colored binary PPM, strip by strip —
+    /// a spooled map streams disk → disk under a bounded buffer.
+    pub fn write_labels_ppm(&self, height: usize, width: usize, path: &Path) -> Result<()> {
+        ensure!(
+            self.len() == height * width,
+            "label map {} != {height}x{width}",
+            self.len()
+        );
+        let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "P6\n{width} {height}\n255")?;
+        let mut row_buf = Vec::with_capacity(width * 3);
+        self.for_each_rows(64, |_, labels| {
+            for row in labels.chunks(width) {
+                row_buf.clear();
+                for &l in row {
+                    row_buf.extend_from_slice(&PALETTE[l as usize % PALETTE.len()]);
+                }
+                w.write_all(&row_buf)?;
+            }
+            Ok(())
+        })?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Write the map as a grayscale PGM (`label * 255 / (k-1)`), strip
+    /// by strip.
+    pub fn write_labels_pgm(
+        &self,
+        height: usize,
+        width: usize,
+        k: usize,
+        path: &Path,
+    ) -> Result<()> {
+        ensure!(
+            self.len() == height * width,
+            "label map {} != {height}x{width}",
+            self.len()
+        );
+        let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "P5\n{width} {height}\n255")?;
+        let scale = if k > 1 { 255 / (k - 1) as u32 } else { 255 };
+        let mut row_buf = Vec::with_capacity(width);
+        self.for_each_rows(64, |_, labels| {
+            for row in labels.chunks(width) {
+                row_buf.clear();
+                row_buf.extend(row.iter().map(|&l| (l * scale).min(255) as u8));
+                w.write_all(&row_buf)?;
+            }
+            Ok(())
+        })?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::{AssembleError, BlockPlan, BlockShape};
+
+    fn fill(sink: &mut LabelSink, h: usize, w: usize, side: usize) {
+        let plan = BlockPlan::new(h, w, BlockShape::Square { side });
+        for region in plan.iter() {
+            let mut buf = Vec::with_capacity(region.area());
+            for r in region.row0..region.row_end() {
+                for c in region.col0..region.col_end() {
+                    buf.push((r * w + c) as u32);
+                }
+            }
+            sink.place(region, &buf).unwrap();
+        }
+    }
+
+    #[test]
+    fn memory_sink_round_trips() {
+        let mut sink = LabelSink::new(7, 9, None).unwrap();
+        assert!(!sink.spills());
+        fill(&mut sink, 7, 9, 3);
+        let map = sink.finish().unwrap();
+        assert!(!map.is_spooled());
+        let want: Vec<u32> = (0..63).collect();
+        assert_eq!(map.into_dense().unwrap(), want);
+    }
+
+    #[test]
+    fn spill_sink_round_trips_identically() {
+        // Budget of 0 forces the spool; contents must equal the dense
+        // assembly exactly.
+        let mut sink = LabelSink::new(7, 9, Some(0)).unwrap();
+        assert!(sink.spills());
+        fill(&mut sink, 7, 9, 3);
+        let map = sink.finish().unwrap();
+        assert!(map.is_spooled());
+        let want: Vec<u32> = (0..63).collect();
+        assert_eq!(map.into_dense().unwrap(), want);
+    }
+
+    #[test]
+    fn budget_threshold_selects_the_variant() {
+        // 4x4 labels = 64 bytes
+        assert!(!LabelSink::new(4, 4, Some(64)).unwrap().spills());
+        assert!(LabelSink::new(4, 4, Some(63)).unwrap().spills());
+        assert!(!LabelSink::new(4, 4, None).unwrap().spills());
+    }
+
+    #[test]
+    fn spill_rejects_overlap_duplicate_oob_and_incomplete() {
+        let mut sink = LabelSink::new(4, 4, Some(0)).unwrap();
+        let a = BlockRegion::new(0, 0, 2, 2);
+        sink.place(&a, &[1; 4]).unwrap();
+        // duplicate
+        let err = sink.place(&a, &[1; 4]).unwrap_err();
+        assert!(err.downcast_ref::<AssembleError>() == Some(&AssembleError::Duplicate(a)));
+        // overlap
+        let b = BlockRegion::new(1, 1, 2, 2);
+        let err = sink.place(&b, &[2; 4]).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<AssembleError>(),
+            Some(AssembleError::Overlap(..))
+        ));
+        // out of bounds
+        let err = sink.place(&BlockRegion::new(3, 3, 2, 2), &[0; 4]).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<AssembleError>(),
+            Some(AssembleError::OutOfBounds(..))
+        ));
+        // wrong size
+        let err = sink.place(&BlockRegion::new(0, 2, 2, 2), &[0; 3]).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<AssembleError>(),
+            Some(AssembleError::WrongSize(..))
+        ));
+        // incomplete finish
+        let err = sink.finish().unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<AssembleError>(),
+            Some(AssembleError::Incomplete { written: 4, total: 16 })
+        ));
+    }
+
+    #[test]
+    fn spool_reads_are_strip_granular_and_file_is_cleaned_up() {
+        let mut sink = LabelSink::new(6, 4, Some(0)).unwrap();
+        fill(&mut sink, 6, 4, 2);
+        let map = sink.finish().unwrap();
+        let LabelMap::Spooled(ref spool) = map else {
+            panic!("expected spool");
+        };
+        let path = spool.path().to_path_buf();
+        assert!(path.exists());
+        let mut rows = Vec::new();
+        spool.read_rows(2, 2, &mut rows).unwrap();
+        assert_eq!(rows, (8..16).collect::<Vec<u32>>());
+        assert!(spool.read_rows(5, 2, &mut rows).is_err(), "past the end");
+        let mut chunks = Vec::new();
+        map.for_each_rows(4, |row0, labels| {
+            chunks.push((row0, labels.len()));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(chunks, vec![(0, 16), (4, 8)]);
+        drop(map);
+        assert!(!path.exists(), "spool file must be removed on drop");
+    }
+
+    #[test]
+    fn streamed_ppm_export_matches_dense_writer() {
+        let h = 5;
+        let w = 6;
+        let labels: Vec<u32> = (0..h * w).map(|i| (i % 4) as u32).collect();
+        let dir = std::env::temp_dir().join("blockms_sink_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // dense writer (the seed path)
+        let dense_path = dir.join("dense.ppm");
+        crate::image::write_labels_ppm(&labels, h, w, &dense_path).unwrap();
+
+        // spooled map, streamed export
+        let mut sink = LabelSink::new(h, w, Some(0)).unwrap();
+        sink.place(&BlockRegion::new(0, 0, h, w), &labels).unwrap();
+        let map = sink.finish().unwrap();
+        let spool_path = dir.join("spooled.ppm");
+        map.write_labels_ppm(h, w, &spool_path).unwrap();
+        assert_eq!(
+            std::fs::read(&dense_path).unwrap(),
+            std::fs::read(&spool_path).unwrap()
+        );
+
+        // and the PGM twin
+        let pgm_a = dir.join("dense.pgm");
+        crate::image::write_labels_pgm(&labels, h, w, 4, &pgm_a).unwrap();
+        let pgm_b = dir.join("spooled.pgm");
+        map.write_labels_pgm(h, w, 4, &pgm_b).unwrap();
+        assert_eq!(std::fs::read(&pgm_a).unwrap(), std::fs::read(&pgm_b).unwrap());
+    }
+}

@@ -26,6 +26,7 @@ pub const SUBCOMMANDS: &[&str] = &[
     "sweep",
     "kernels",
     "layout",
+    "stream",
     "batch",
     "serve",
     "info",
@@ -45,13 +46,19 @@ pub fn blockms_cli() -> Cli {
         .opt("height", Some("800"), "synthetic image height")
         .opt("seed", Some("7"), "workload / init seed")
         .opt("input", None, "input PPM instead of synthetic scene")
-        .opt("out", None, "output path (cluster: label map PPM; kernels/batch/plan: JSON; sweep: CSV)")
+        .opt("out", None, "output path (cluster: label map PPM; kernels/batch/plan/stream: JSON; sweep: CSV)")
         .opt("out-input", None, "also write the input scene PPM here")
         .opt("engine", Some("native"), "compute engine: native|pjrt")
         .opt("kernel", Some("naive"), "compute kernel: naive|pruned|fused|lanes")
         .opt("layout", None, "block layout: interleaved|soa (default: kernel's native)")
         .opt("arena-mb", Some("256"), "per-worker SoA tile arena budget, MiB (0 disables)")
         .opt("strip-cache", None, "shared strip cache capacity, decoded strips (0 = off)")
+        .opt(
+            "mem-mb",
+            None,
+            "hard resident pixel-byte budget, MiB: stream pixels from disk to labels \
+             under it (cluster/serve/plan; implies strip I/O; planner rejects over-budget plans)",
+        )
         .opt("mode", Some("global"), "clustering mode: global|local")
         .opt("schedule", Some("dynamic"), "job schedule: static|dynamic")
         .opt("iters", None, "fixed Lloyd iterations (default: converge)")
@@ -66,7 +73,11 @@ pub fn blockms_cli() -> Cli {
         .opt("batches", Some("1,4,16"), "batch: comma-separated batch sizes")
         .flag("serial", "cluster: also run the sequential baseline and compare")
         .flag("prefetch", "overlap next-block reads with compute (double buffering)")
-        .flag("quick", "layout/plan: CI-sized matrix (pins image size, ks, iters)")
+        .flag(
+            "file-backed",
+            "pin the strip store to a real file (otherwise the planner decides under --mem-mb)",
+        )
+        .flag("quick", "layout/plan/stream: CI-sized matrix (pins image size, ks, iters)")
         .flag(
             "auto",
             "cluster/serve/plan: planner picks every knob not explicitly pinned \

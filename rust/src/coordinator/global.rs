@@ -24,7 +24,7 @@ use anyhow::{bail, ensure, Result};
 
 use super::messages::{Job, JobId, JobOutcome, JobPayload, JobResult};
 use super::{BlockCost, RoundKind, RoundRecord};
-use crate::blocks::{BlockPlan, LabelAssembler};
+use crate::blocks::{BlockPlan, LabelMap, LabelSink};
 use crate::kmeans::kernel::{drift_between, CentroidDrift};
 use crate::kmeans::math::{self, StepAccum};
 use crate::kmeans::KMeansConfig;
@@ -40,10 +40,12 @@ pub enum GlobalPhase {
     Done,
 }
 
-/// Completed output of a global-mode run.
-#[derive(Clone, Debug)]
+/// Completed output of a global-mode run. Labels arrive as a
+/// [`LabelMap`]: dense in memory on the default path, spooled to disk
+/// when the run was built with a label budget (see [`LabelSink`]).
+#[derive(Debug)]
 pub struct GlobalOutput {
-    pub labels: Vec<u32>,
+    pub labels: LabelMap,
     pub centroids: Vec<f32>,
     pub inertia: f64,
     /// Inertia measured at the centroids *entering* each step round
@@ -79,20 +81,24 @@ pub struct GlobalState {
     pending: Vec<Option<JobOutcome>>,
     outstanding: usize,
     round_started: Option<Instant>,
-    labels: Option<Vec<u32>>,
+    labels: Option<LabelMap>,
     inertia: f64,
+    /// Label-sink byte budget; `None` keeps the dense in-memory map.
+    label_budget: Option<u64>,
 }
 
 impl GlobalState {
     /// Set up a run from the shared init draw (identical to the
     /// sequential baseline's). `fixed_iters` runs exactly that many step
-    /// rounds with no convergence test.
+    /// rounds with no convergence test. `label_budget` sizes the final
+    /// [`LabelSink`] (`None` = dense, the seed behaviour).
     pub fn new(
         plan: Arc<BlockPlan>,
         channels: usize,
         cfg: &KMeansConfig,
         fixed_iters: Option<usize>,
         init_centroids: Vec<f32>,
+        label_budget: Option<u64>,
     ) -> GlobalState {
         assert_eq!(init_centroids.len(), cfg.k * channels, "init centroid table size");
         let max_rounds = fixed_iters.unwrap_or(cfg.max_iters);
@@ -120,6 +126,7 @@ impl GlobalState {
             round_started: None,
             labels: None,
             inertia: 0.0,
+            label_budget,
         }
     }
 
@@ -243,7 +250,8 @@ impl GlobalState {
     }
 
     fn finish_assign_round(&mut self, wall_secs: f64) -> Result<()> {
-        let mut assembler = LabelAssembler::new(self.plan.height(), self.plan.width());
+        let mut sink =
+            LabelSink::new(self.plan.height(), self.plan.width(), self.label_budget)?;
         let mut inertia = 0.0;
         let mut costs = Vec::with_capacity(self.pending.len());
         for slot in &mut self.pending {
@@ -255,7 +263,7 @@ impl GlobalState {
             else {
                 bail!("unexpected result kind in assign round");
             };
-            assembler.place(self.plan.region(o.block), labels)?;
+            sink.place(self.plan.region(o.block), labels)?;
             inertia += block_inertia;
             costs.push(BlockCost::from_outcome(&o));
         }
@@ -264,7 +272,7 @@ impl GlobalState {
             wall_secs,
             costs,
         });
-        self.labels = Some(assembler.finish()?);
+        self.labels = Some(sink.finish()?);
         self.inertia = inertia;
         self.phase = GlobalPhase::Done;
         Ok(())
@@ -303,6 +311,7 @@ mod tests {
             },
             fixed,
             vec![0.0, 10.0],
+            None,
         )
     }
 

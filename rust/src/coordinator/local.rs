@@ -22,13 +22,13 @@ use anyhow::{bail, ensure, Result};
 
 use super::messages::{Job, JobId, JobOutcome, JobPayload, JobResult};
 use super::{BlockCost, RoundKind, RoundRecord};
-use crate::blocks::{BlockPlan, LabelAssembler};
+use crate::blocks::{BlockPlan, LabelMap, LabelSink};
 use crate::kmeans::math::sqdist;
 
 /// Completed output of a local-mode run.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct LocalOutput {
-    pub labels: Vec<u32>,
+    pub labels: LabelMap,
     /// Harmonized global centroids.
     pub centroids: Vec<f32>,
     /// Sum of per-block inertias (w.r.t. each block's own centroids).
@@ -47,6 +47,8 @@ pub struct LocalState {
     outstanding: usize,
     round_started: Option<Instant>,
     output: Option<LocalOutput>,
+    /// Label-sink byte budget; `None` keeps the dense in-memory map.
+    label_budget: Option<u64>,
 }
 
 impl LocalState {
@@ -55,6 +57,7 @@ impl LocalState {
         channels: usize,
         k: usize,
         init_centroids: Vec<f32>,
+        label_budget: Option<u64>,
     ) -> LocalState {
         assert_eq!(init_centroids.len(), k * channels, "init centroid table size");
         let blocks = plan.len();
@@ -67,6 +70,7 @@ impl LocalState {
             outstanding: 0,
             round_started: None,
             output: None,
+            label_budget,
         }
     }
 
@@ -160,7 +164,8 @@ impl LocalState {
         );
 
         // Remap labels block by block and assemble.
-        let mut assembler = LabelAssembler::new(self.plan.height(), self.plan.width());
+        let mut sink =
+            LabelSink::new(self.plan.height(), self.plan.width(), self.label_budget)?;
         for slot in &mut self.pending {
             let o = slot.take().expect("round complete");
             let JobResult::Local {
@@ -171,9 +176,9 @@ impl LocalState {
             };
             let map = label_map(centroids, &global, self.k, self.channels);
             let remapped: Vec<u32> = labels.iter().map(|&l| map[l as usize]).collect();
-            assembler.place(self.plan.region(o.block), &remapped)?;
+            sink.place(self.plan.region(o.block), &remapped)?;
         }
-        let labels = assembler.finish()?;
+        let labels = sink.finish()?;
 
         self.output = Some(LocalOutput {
             labels,

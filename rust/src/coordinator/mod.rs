@@ -43,9 +43,9 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::blocks::BlockPlan;
-use crate::image::Raster;
-use crate::kmeans::{InitMethod, KMeansConfig, SeqKMeans};
+use crate::blocks::{BlockPlan, LabelMap};
+use crate::image::{Raster, RasterSource};
+use crate::kmeans::{InitMethod, KMeansConfig, SeqKMeans, StreamInit};
 use crate::plan::ExecPlan;
 use crate::runtime::BackendSpec;
 use crate::stripstore::{Backing, StripStore};
@@ -256,7 +256,10 @@ pub struct ClusterOutput {
 impl ClusterOutput {
     /// Assemble from a finished [`RunMachine`] plus the run-level fields
     /// the machine cannot know (single construction point for the solo
-    /// coordinator and the service, so the two cannot drift).
+    /// coordinator and the service, so the two cannot drift). The label
+    /// map is materialized dense here — spooled maps (budgeted runs)
+    /// read back; callers that must stay bounded use
+    /// [`Coordinator::cluster_source`]'s [`StreamRun`] instead.
     pub fn from_machine(
         m: MachineOutput,
         total_secs: f64,
@@ -264,9 +267,9 @@ impl ClusterOutput {
         io_stats: Option<AccessSnapshot>,
         blocks: usize,
         workers: usize,
-    ) -> ClusterOutput {
-        ClusterOutput {
-            labels: m.labels,
+    ) -> Result<ClusterOutput> {
+        Ok(ClusterOutput {
+            labels: m.labels.into_dense()?,
             centroids: m.centroids,
             inertia: m.inertia,
             inertia_trace: m.inertia_trace,
@@ -278,8 +281,34 @@ impl ClusterOutput {
             io_stats,
             blocks,
             workers,
-        }
+        })
     }
+}
+
+/// Result of an out-of-core [`Coordinator::cluster_source`] run: the
+/// same clustering facts as [`ClusterOutput`], but labels stay behind
+/// the [`LabelMap`] (possibly a disk spool) and the audited resident
+/// high-water mark is reported.
+#[derive(Debug)]
+pub struct StreamRun {
+    pub labels: LabelMap,
+    pub centroids: Vec<f32>,
+    pub inertia: f64,
+    pub inertia_trace: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+    pub total_secs: f64,
+    pub spawn_secs: f64,
+    pub rounds: Vec<RoundRecord>,
+    /// Strip-store access counters (streaming always runs strip I/O).
+    pub io_stats: AccessSnapshot,
+    /// High-water mark of tracked resident pixel bytes — the audited
+    /// side of the `mem_mb` contract (also in `io_stats`).
+    pub peak_resident_bytes: u64,
+    pub blocks: usize,
+    pub workers: usize,
+    pub height: usize,
+    pub width: usize,
 }
 
 /// One clustering run's reduction state machine: global or local mode
@@ -293,10 +322,12 @@ pub enum RunMachine {
     Local(LocalState),
 }
 
-/// Mode-independent view of a finished [`RunMachine`].
-#[derive(Clone, Debug)]
+/// Mode-independent view of a finished [`RunMachine`]. Labels are a
+/// [`LabelMap`]: dense unless the machine was built with a label
+/// budget, in which case they live in a disk spool.
+#[derive(Debug)]
 pub struct MachineOutput {
-    pub labels: Vec<u32>,
+    pub labels: LabelMap,
     pub centroids: Vec<f32>,
     pub inertia: f64,
     pub inertia_trace: Vec<f64>,
@@ -307,13 +338,15 @@ pub struct MachineOutput {
 
 impl RunMachine {
     /// Build the machine for a job: same init draw as the sequential
-    /// baseline, mode picked from the config.
+    /// baseline, mode picked from the config. `label_budget` sizes the
+    /// final label sink (`None` = dense in memory, the seed behaviour).
     pub fn new(
         mode: ClusterMode,
         plan: Arc<BlockPlan>,
         channels: usize,
         ccfg: &ClusterConfig,
         init_centroids: Vec<f32>,
+        label_budget: Option<u64>,
     ) -> RunMachine {
         match mode {
             ClusterMode::Global => RunMachine::Global(GlobalState::new(
@@ -322,10 +355,15 @@ impl RunMachine {
                 &ccfg.kmeans(),
                 ccfg.fixed_iters,
                 init_centroids,
+                label_budget,
             )),
-            ClusterMode::Local => {
-                RunMachine::Local(LocalState::new(plan, channels, ccfg.k, init_centroids))
-            }
+            ClusterMode::Local => RunMachine::Local(LocalState::new(
+                plan,
+                channels,
+                ccfg.k,
+                init_centroids,
+                label_budget,
+            )),
         }
     }
 
@@ -388,6 +426,17 @@ impl RunMachine {
     }
 }
 
+/// Process-wide sequence for solo runs' file-backed strip-store
+/// directories: two concurrent runs with identical geometry must never
+/// share a backing file (the service's job stores already do this via
+/// `job_store_dir`; the pid keeps cross-process TMPDIR sharing safe).
+static SOLO_STORE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+fn solo_store_dir() -> PathBuf {
+    let seq = SOLO_STORE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    std::env::temp_dir().join(format!("blockms_solo_p{}_{seq}", std::process::id()))
+}
+
 /// The leader. See module docs.
 #[derive(Clone, Debug, Default)]
 pub struct Coordinator {
@@ -424,7 +473,10 @@ impl Coordinator {
             .init
             .centroids(img.as_pixels(), ccfg.k, img.channels(), ccfg.seed);
 
-        // Materialize the block source.
+        // Materialize the block source. File backing gets a run-unique
+        // directory so concurrent same-geometry runs never share (or
+        // truncate) each other's backing file.
+        let mut store_dir = None;
         let (source, store) = match &self.cfg.io {
             IoMode::Direct => (BlockSource::Direct(Arc::clone(img)), None),
             IoMode::Strips {
@@ -432,7 +484,9 @@ impl Coordinator {
                 file_backed,
             } => {
                 let backing = if *file_backed {
-                    Backing::File(std::env::temp_dir().join("blockms_strips"))
+                    let dir = solo_store_dir();
+                    store_dir = Some(dir.clone());
+                    Backing::File(dir)
                 } else {
                     Backing::Memory
                 };
@@ -461,6 +515,7 @@ impl Coordinator {
             img.channels(),
             ccfg,
             init_centroids,
+            None,
         );
         while !machine.done() {
             let jobs = machine.start_round(SOLO_JOB);
@@ -472,14 +527,132 @@ impl Coordinator {
         pool.shutdown();
         let m = machine.into_output()?;
 
-        Ok(ClusterOutput::from_machine(
+        let io_stats = store.as_ref().map(|s| s.stats().snapshot());
+        // Workers are joined: dropping the last store handle removes the
+        // backing file, then its run-unique directory can go too.
+        drop(store);
+        if let Some(dir) = store_dir {
+            let _ = std::fs::remove_dir(&dir);
+        }
+        ClusterOutput::from_machine(
             m,
             t0.elapsed().as_secs_f64(),
             spawn_secs,
-            store.map(|s| s.stats().snapshot()),
+            io_stats,
             plan.len(),
             self.cfg.exec.workers,
-        ))
+        )
+    }
+
+    /// Out-of-core clustering: stream pixels from any [`RasterSource`]
+    /// into a strip store (one strip resident at a time under file
+    /// backing), draw initial centroids in the same single pass
+    /// ([`StreamInit`] — bit-identical to the in-memory draw), run the
+    /// identical round machinery over strip I/O, and deliver labels
+    /// through a budgeted [`crate::blocks::LabelSink`].
+    ///
+    /// Requires [`IoMode::Strips`] (there is no raster to crop from).
+    /// The strip store is file-backed when either the I/O mode or the
+    /// plan ([`ExecPlan::file_backed`]) says so. With a `mem_mb` budget
+    /// on the plan, labels spool to disk and the returned
+    /// [`StreamRun::peak_resident_bytes`] reports the audited
+    /// high-water mark of resident pixel bytes.
+    ///
+    /// Bit-identity contract (tested in `tests/integration_pipeline.rs`):
+    /// the same source description run through [`Coordinator::cluster`]
+    /// on a materialized raster produces identical labels, centroids,
+    /// counts, and inertia — same strips, same block order, same f32 op
+    /// order.
+    pub fn cluster_source(
+        &self,
+        source: &mut dyn RasterSource,
+        ccfg: &ClusterConfig,
+    ) -> Result<StreamRun> {
+        let IoMode::Strips {
+            strip_rows,
+            file_backed,
+        } = self.cfg.io
+        else {
+            anyhow::bail!("streaming ingestion requires IoMode::Strips (Direct has no source)");
+        };
+        let (height, width, channels) = (source.height(), source.width(), source.channels());
+        let plan = Arc::new(self.cfg.exec.block_plan(height, width));
+        let t0 = std::time::Instant::now();
+
+        // Single ingestion pass: strips flow source → store while the
+        // init sampler observes them. Same draw as the in-memory path.
+        let mut sampler =
+            StreamInit::new(&ccfg.init, ccfg.k, channels, Some(height * width), ccfg.seed)?;
+        let mut store_dir = None;
+        let backing = if file_backed || self.cfg.exec.file_backed {
+            let dir = solo_store_dir();
+            store_dir = Some(dir.clone());
+            Backing::File(dir)
+        } else {
+            Backing::Memory
+        };
+        let mut store =
+            StripStore::ingest(source, strip_rows, backing, |_, strip| sampler.feed(strip))?;
+        store.enable_cache(self.cfg.exec.strip_cache);
+        let store = Arc::new(store);
+        let init_centroids = sampler.finish()?;
+
+        let ctx = Arc::new(WorkerContext {
+            plan: Arc::clone(&plan),
+            source: BlockSource::Strips(Arc::clone(&store)),
+            backend: self.cfg.engine.backend_spec(ccfg.k, channels)?,
+            fail_block: self.cfg.fail_block,
+            local_mode: self.cfg.mode == ClusterMode::Local,
+            exec: self.cfg.exec,
+        });
+        let pool = WorkerPool::spawn(self.cfg.exec.workers, self.cfg.schedule);
+        pool.register_job(SOLO_JOB, ctx);
+        let spawn_secs = pool.warmup(SOLO_JOB)?;
+
+        // Under a budget the label map spools — the same rule the
+        // planner's resident model applies, so prediction and runtime
+        // agree about where labels live.
+        let label_budget = self.cfg.exec.mem_budget_bytes().map(|_| 0);
+        let mut machine = RunMachine::new(
+            self.cfg.mode,
+            Arc::clone(&plan),
+            channels,
+            ccfg,
+            init_centroids,
+            label_budget,
+        );
+        while !machine.done() {
+            let jobs = machine.start_round(SOLO_JOB);
+            for outcome in pool.run_round(jobs)? {
+                machine.absorb(outcome)?;
+            }
+            machine.finish_round()?;
+        }
+        pool.shutdown();
+        let m = machine.into_output()?;
+        let io_stats = store.stats().snapshot();
+        drop(store); // last handle: backing file's Drop runs
+        if let Some(dir) = store_dir {
+            let _ = std::fs::remove_dir(&dir);
+        }
+
+        Ok(StreamRun {
+            labels: m.labels,
+            centroids: m.centroids,
+            inertia: m.inertia,
+            inertia_trace: m.inertia_trace,
+            iterations: m.iterations,
+            converged: m.converged,
+            total_secs: t0.elapsed().as_secs_f64(),
+            spawn_secs,
+            rounds: m.rounds,
+            peak_resident_bytes: io_stats.peak_resident_bytes,
+            io_stats,
+            blocks: plan.len(),
+            workers: self.cfg.exec.workers,
+            height,
+            width,
+        })
     }
 
     /// The sequential baseline with the same init draw — the paper's

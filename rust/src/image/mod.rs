@@ -10,8 +10,10 @@
 pub mod ops;
 mod ppm;
 mod raster;
+mod source;
 mod synthetic;
 
-pub use ppm::{ppm_dims, read_ppm, write_labels_pgm, write_labels_ppm, write_ppm, PALETTE};
+pub use ppm::{ppm_dims, read_ppm, write_labels_pgm, write_labels_ppm, write_ppm, PpmHeader, PALETTE};
 pub use raster::{Raster, RasterStats};
-pub use synthetic::SyntheticOrtho;
+pub use source::{collect_source, PpmSource, RasterCursor, RasterSource, SyntheticSource};
+pub use synthetic::{SyntheticOrtho, SyntheticStream};

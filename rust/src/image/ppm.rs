@@ -100,6 +100,30 @@ pub fn write_labels_pgm(
     Ok(())
 }
 
+/// A parsed binary-pixmap header. One parser serves every consumer —
+/// [`read_ppm`], [`ppm_dims`], and the streaming
+/// [`crate::image::PpmSource`] — so magic/whitespace/comment/maxval
+/// handling cannot drift between the whole-file and strip decoders.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PpmHeader {
+    pub height: usize,
+    pub width: usize,
+    /// Always ≤ 255: one byte per sample (16-bit pixmaps are rejected).
+    pub maxval: usize,
+}
+
+impl PpmHeader {
+    /// Channel count of the P6 payload (always RGB).
+    pub fn channels(&self) -> usize {
+        3
+    }
+
+    /// Payload bytes one image row occupies.
+    pub fn row_bytes(&self) -> usize {
+        self.width * 3
+    }
+}
+
 /// Read only a PPM's header: `(height, width, channels)`. The pixel
 /// payload is never touched — this is what `blockms cluster --dry-run`
 /// and `blockms plan` use to plan against a real file without paying
@@ -107,13 +131,14 @@ pub fn write_labels_pgm(
 pub fn ppm_dims(path: &Path) -> Result<(usize, usize, usize)> {
     let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut r = BufReader::new(f);
-    let (height, width) = read_header(&mut r)?;
-    Ok((height, width, 3))
+    let h = read_header(&mut r)?;
+    Ok((h.height, h.width, h.channels()))
 }
 
 /// Parse the P6 header up to (and including) maxval; leaves the reader
-/// at the first payload byte.
-fn read_header<R: BufRead>(r: &mut R) -> Result<(usize, usize)> {
+/// at the first payload byte. `#` comments may appear anywhere in the
+/// header; a maxval of 0 or above 255 (e.g. 16-bit 65535) is rejected.
+pub(super) fn read_header<R: BufRead>(r: &mut R) -> Result<PpmHeader> {
     let magic = read_token(r)?;
     if magic != "P6" {
         bail!("unsupported magic {magic:?} (want P6)");
@@ -124,18 +149,25 @@ fn read_header<R: BufRead>(r: &mut R) -> Result<(usize, usize)> {
     if maxval == 0 || maxval > 255 {
         bail!("unsupported maxval {maxval}");
     }
-    Ok((height, width))
+    if width == 0 || height == 0 {
+        bail!("degenerate image {width}x{height}");
+    }
+    Ok(PpmHeader {
+        height,
+        width,
+        maxval,
+    })
 }
 
 /// Read a binary PPM (P6, maxval ≤ 255) into an RGB raster.
 pub fn read_ppm(path: &Path) -> Result<Raster> {
     let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut r = BufReader::new(f);
-    let (height, width) = read_header(&mut r)?;
-    let mut raw = vec![0u8; width * height * 3];
+    let h = read_header(&mut r)?;
+    let mut raw = vec![0u8; h.width * h.height * 3];
     r.read_exact(&mut raw).context("pixel payload")?;
     let data: Vec<f32> = raw.iter().map(|&b| b as f32).collect();
-    Ok(Raster::from_vec(height, width, 3, data))
+    Ok(Raster::from_vec(h.height, h.width, 3, data))
 }
 
 /// Read one whitespace-delimited header token, skipping `#` comments.
@@ -251,5 +283,49 @@ mod tests {
         let img = read_ppm(&path).unwrap();
         assert_eq!(img.width(), 2);
         assert_eq!(img.get(0, 0)[0], b'a' as f32);
+        // the shared parser serves ppm_dims the same view
+        assert_eq!(ppm_dims(&path).unwrap(), (1, 2, 3));
+    }
+
+    #[test]
+    fn truncated_header_is_clean_error_everywhere() {
+        // Cut inside the height token: every consumer of the shared
+        // parser must fail, not hang or panic.
+        let path = tmp("trunc.ppm");
+        std::fs::write(&path, b"P6\n10 1").unwrap();
+        assert!(read_ppm(&path).is_err());
+        assert!(ppm_dims(&path).is_err());
+    }
+
+    #[test]
+    fn maxval_zero_and_16bit_rejected() {
+        for (name, maxval) in [("max0.ppm", "0"), ("max16.ppm", "65536"), ("max65535.ppm", "65535")]
+        {
+            let path = tmp(name);
+            std::fs::write(&path, format!("P6\n1 1\n{maxval}\nabc")).unwrap();
+            let err = ppm_dims(&path).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("maxval"),
+                "{name}: wrong error {err:#}"
+            );
+            assert!(read_ppm(&path).is_err(), "{name}");
+        }
+        // maxval 255 and 1 are fine
+        let path = tmp("max255.ppm");
+        std::fs::write(&path, b"P6\n1 1\n255\nabc").unwrap();
+        assert_eq!(ppm_dims(&path).unwrap(), (1, 1, 3));
+        let path = tmp("max1.ppm");
+        std::fs::write(&path, b"P6\n1 1\n1\n\0\0\0").unwrap();
+        assert_eq!(ppm_dims(&path).unwrap(), (1, 1, 3));
+    }
+
+    #[test]
+    fn non_numeric_and_zero_dims_rejected() {
+        let path = tmp("badw.ppm");
+        std::fs::write(&path, b"P6\nten 10\n255\n").unwrap();
+        assert!(ppm_dims(&path).is_err());
+        let path = tmp("zerow.ppm");
+        std::fs::write(&path, b"P6\n0 10\n255\n").unwrap();
+        assert!(ppm_dims(&path).is_err());
     }
 }

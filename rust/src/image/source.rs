@@ -1,0 +1,287 @@
+//! Streaming raster sources: header + sequential strip decode.
+//!
+//! The paper's premise is imagery that does *not* comfortably fit the
+//! machine ("size more than 1000x1000 in a legacy system"), yet the
+//! seed pipeline materialized every image as a full in-memory
+//! [`Raster`] before the strip store copied it again — peak memory ≥2×
+//! the image and unbounded in image height. A [`RasterSource`] is the
+//! fix: it exposes the geometry up front (the header) and then decodes
+//! the image **once, top to bottom, one strip at a time**, never
+//! holding more than one strip. [`crate::stripstore::StripStore::ingest`]
+//! builds a store from any source; with file backing the peak resident
+//! pixel footprint of ingestion is a single strip regardless of image
+//! height.
+//!
+//! Three implementations cover every entry point:
+//!
+//! - [`PpmSource`] — streaming binary-P6 decoder over the shared header
+//!   parser (the one behind [`super::ppm_dims`] and [`super::read_ppm`]);
+//!   holds one strip of bytes at a time;
+//! - [`RasterCursor`] — adapts an already-resident [`Raster`]
+//!   (back-compat: the in-memory paths ingest through the same code);
+//! - [`SyntheticSource`] — generates strips on demand from a
+//!   [`SyntheticOrtho`] row stream, bit-identical to
+//!   [`SyntheticOrtho::generate`].
+
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::ppm::{read_header, PpmHeader};
+use super::raster::Raster;
+use super::synthetic::{SyntheticOrtho, SyntheticStream};
+
+/// A raster that can be decoded sequentially, strip by strip. The
+/// contract is strictly forward: callers pull strips in order from row
+/// 0 and a source is exhausted after `height` rows. Implementations
+/// must be deterministic — two ingestions of the same source description
+/// yield identical samples (the root of streamed-vs-in-memory
+/// bit-identity).
+pub trait RasterSource: Send {
+    fn height(&self) -> usize;
+    fn width(&self) -> usize;
+    fn channels(&self) -> usize;
+
+    /// Decode the next ≤ `max_rows` rows as interleaved f32 samples
+    /// appended to `out` (cleared first). Returns the row count
+    /// produced; 0 means the source is exhausted.
+    fn next_strip(&mut self, max_rows: usize, out: &mut Vec<f32>) -> Result<usize>;
+
+    /// Total pixel count (not samples).
+    fn pixels(&self) -> usize {
+        self.height() * self.width()
+    }
+}
+
+/// Streaming binary-PPM decoder: the header is parsed at open (shared
+/// parser — see [`super::ppm_dims`]); pixel rows are decoded on demand,
+/// u8 → f32 exactly as [`super::read_ppm`] promotes them.
+pub struct PpmSource {
+    header: PpmHeader,
+    reader: BufReader<File>,
+    next_row: usize,
+    byte_buf: Vec<u8>,
+}
+
+impl PpmSource {
+    pub fn open(path: &Path) -> Result<PpmSource> {
+        let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut reader = BufReader::new(f);
+        let header = read_header(&mut reader)
+            .with_context(|| format!("parse header of {}", path.display()))?;
+        Ok(PpmSource {
+            header,
+            reader,
+            next_row: 0,
+            byte_buf: Vec::new(),
+        })
+    }
+
+    pub fn header(&self) -> &PpmHeader {
+        &self.header
+    }
+}
+
+impl RasterSource for PpmSource {
+    fn height(&self) -> usize {
+        self.header.height
+    }
+
+    fn width(&self) -> usize {
+        self.header.width
+    }
+
+    fn channels(&self) -> usize {
+        self.header.channels()
+    }
+
+    fn next_strip(&mut self, max_rows: usize, out: &mut Vec<f32>) -> Result<usize> {
+        out.clear();
+        let rows = max_rows.min(self.header.height - self.next_row);
+        if rows == 0 {
+            return Ok(0);
+        }
+        let bytes = rows * self.header.row_bytes();
+        self.byte_buf.resize(bytes, 0);
+        self.reader
+            .read_exact(&mut self.byte_buf)
+            .with_context(|| format!("pixel payload rows {}..{}", self.next_row, self.next_row + rows))?;
+        out.extend(self.byte_buf.iter().map(|&b| b as f32));
+        self.next_row += rows;
+        Ok(rows)
+    }
+}
+
+/// Sequential cursor over an in-memory raster — the back-compat
+/// adapter, so [`crate::stripstore::StripStore::new`] and the streaming
+/// ingest share one write path (identical strip layout by construction).
+pub struct RasterCursor {
+    img: Arc<Raster>,
+    next_row: usize,
+}
+
+impl RasterCursor {
+    pub fn new(img: Arc<Raster>) -> RasterCursor {
+        RasterCursor { img, next_row: 0 }
+    }
+}
+
+impl RasterSource for RasterCursor {
+    fn height(&self) -> usize {
+        self.img.height()
+    }
+
+    fn width(&self) -> usize {
+        self.img.width()
+    }
+
+    fn channels(&self) -> usize {
+        self.img.channels()
+    }
+
+    fn next_strip(&mut self, max_rows: usize, out: &mut Vec<f32>) -> Result<usize> {
+        out.clear();
+        let rows = max_rows.min(self.img.height() - self.next_row);
+        if rows == 0 {
+            return Ok(0);
+        }
+        let samples_per_row = self.img.width() * self.img.channels();
+        let start = self.next_row * samples_per_row;
+        out.extend_from_slice(&self.img.data()[start..start + rows * samples_per_row]);
+        self.next_row += rows;
+        Ok(rows)
+    }
+}
+
+/// Strip-on-demand synthetic orthoimagery: wraps a [`SyntheticStream`],
+/// so a 4096-row scene can be ingested under a strip-sized budget while
+/// producing exactly the pixels [`SyntheticOrtho::generate`] would.
+pub struct SyntheticSource {
+    stream: SyntheticStream,
+}
+
+impl SyntheticSource {
+    pub fn new(gen: &SyntheticOrtho, height: usize, width: usize) -> SyntheticSource {
+        SyntheticSource {
+            stream: gen.stream(height, width),
+        }
+    }
+}
+
+impl RasterSource for SyntheticSource {
+    fn height(&self) -> usize {
+        self.stream.height()
+    }
+
+    fn width(&self) -> usize {
+        self.stream.width()
+    }
+
+    fn channels(&self) -> usize {
+        self.stream.channels()
+    }
+
+    fn next_strip(&mut self, max_rows: usize, out: &mut Vec<f32>) -> Result<usize> {
+        out.clear();
+        ensure!(max_rows > 0, "next_strip needs a positive row budget");
+        Ok(self.stream.next_rows(max_rows, out, None))
+    }
+}
+
+/// Drain a source fully into a [`Raster`] (tests and small inputs —
+/// this is the one helper that deliberately holds the whole image).
+pub fn collect_source(src: &mut dyn RasterSource) -> Result<Raster> {
+    let (h, w, c) = (src.height(), src.width(), src.channels());
+    let mut data = Vec::with_capacity(h * w * c);
+    let mut strip = Vec::new();
+    loop {
+        let rows = src.next_strip(h.max(1), &mut strip)?;
+        if rows == 0 {
+            break;
+        }
+        data.extend_from_slice(&strip);
+    }
+    ensure!(
+        data.len() == h * w * c,
+        "source produced {} samples, want {}x{}x{}",
+        data.len(),
+        h,
+        w,
+        c
+    );
+    Ok(Raster::from_vec(h, w, c, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::{write_ppm, SyntheticOrtho};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("blockms_source_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn ppm_source_streams_what_read_ppm_loads() {
+        let img = SyntheticOrtho::default().with_seed(31).generate(23, 17);
+        let path = tmp("stream.ppm");
+        write_ppm(&img, &path).unwrap();
+        let whole = crate::image::read_ppm(&path).unwrap();
+        for strip in [1usize, 5, 23, 64] {
+            let mut src = PpmSource::open(&path).unwrap();
+            assert_eq!((src.height(), src.width(), src.channels()), (23, 17, 3));
+            let mut got = Vec::new();
+            let mut buf = Vec::new();
+            while src.next_strip(strip, &mut buf).unwrap() > 0 {
+                got.extend_from_slice(&buf);
+            }
+            assert_eq!(got, whole.data(), "strip={strip}");
+            assert_eq!(src.next_strip(strip, &mut buf).unwrap(), 0, "exhausted");
+        }
+    }
+
+    #[test]
+    fn ppm_source_truncated_payload_errors() {
+        let img = SyntheticOrtho::default().with_seed(32).generate(8, 8);
+        let path = tmp("short.ppm");
+        write_ppm(&img, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        let mut src = PpmSource::open(&path).unwrap();
+        let mut buf = Vec::new();
+        let mut err = None;
+        for _ in 0..8 {
+            if let Err(e) = src.next_strip(2, &mut buf) {
+                err = Some(e);
+                break;
+            }
+        }
+        assert!(err.is_some(), "truncated payload must surface");
+    }
+
+    #[test]
+    fn raster_cursor_round_trips() {
+        let img = Arc::new(SyntheticOrtho::default().with_seed(33).generate(11, 6));
+        let mut src = RasterCursor::new(Arc::clone(&img));
+        let back = collect_source(&mut src).unwrap();
+        assert_eq!(&back, img.as_ref());
+    }
+
+    #[test]
+    fn synthetic_source_matches_generate() {
+        let gen = SyntheticOrtho::default().with_seed(34);
+        let img = gen.generate(19, 13);
+        let mut src = SyntheticSource::new(&gen, 19, 13);
+        let mut got = Vec::new();
+        let mut buf = Vec::new();
+        while src.next_strip(4, &mut buf).unwrap() > 0 {
+            got.extend_from_slice(&buf);
+        }
+        assert_eq!(got, img.data());
+    }
+}

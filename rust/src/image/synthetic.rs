@@ -73,11 +73,12 @@ impl SyntheticOrtho {
         self.generate_with_truth(height, width).0
     }
 
-    /// Generate a scene plus its ground-truth land-cover map (the class
-    /// index each pixel was rendered from). The truth map is what the
-    /// clustering *should* recover (up to label permutation) — used by
-    /// [`crate::metrics::quality`] to score clusterings objectively.
-    pub fn generate_with_truth(&self, height: usize, width: usize) -> (Raster, Vec<u32>) {
+    /// Open a row-streaming generator over the same deterministic draw
+    /// as [`SyntheticOrtho::generate`] — the out-of-core ingestion path
+    /// pulls strips from it without the whole scene ever being resident.
+    /// [`SyntheticOrtho::generate_with_truth`] is built on this stream,
+    /// so the two are bit-identical by construction.
+    pub fn stream(&self, height: usize, width: usize) -> SyntheticStream {
         assert!(height > 0 && width > 0);
         let mut rng = Rng::new(self.seed);
 
@@ -95,31 +96,30 @@ impl SyntheticOrtho {
         // evaluated per pixel from hashed lattice corners with bilinear
         // interpolation — O(1) per pixel per octave, no stored lattice.
         let field_seed = rng.split();
-        let mut noise_rng = rng.split();
+        let noise_rng = rng.split();
 
-        let mut img = Raster::zeros(height, width, self.channels);
-        let mut truth = Vec::with_capacity(height * width);
-        let inv_classes = self.classes as f32;
-        let mut class_row: Vec<f32> = vec![0.0; width];
-        for r in 0..height {
-            self.class_field_row(&field_seed, r, &mut class_row);
-            for c in 0..width {
-                // continuous class value in [0, classes)
-                let t = (class_row[c] * inv_classes).min(inv_classes - 1e-3);
-                let lo = t.floor() as usize;
-                let hi = (lo + 1).min(self.classes - 1);
-                let frac = t - lo as f32;
-                truth.push(if frac < 0.5 { lo as u32 } else { hi as u32 });
-                let mut px = [0.0f32; 4];
-                for b in 0..self.channels {
-                    let v = signatures[lo][b] * (1.0 - frac) + signatures[hi][b] * frac;
-                    let n = noise_rng.next_gauss() as f32 * self.noise_dn;
-                    px[b] = (v + n).clamp(0.0, 255.0);
-                }
-                img.set(r, c, &px[..self.channels]);
-            }
+        SyntheticStream {
+            cfg: self.clone(),
+            height,
+            width,
+            signatures,
+            field_seed,
+            noise_rng,
+            class_row: vec![0.0; width],
+            next_row: 0,
         }
-        (img, truth)
+    }
+
+    /// Generate a scene plus its ground-truth land-cover map (the class
+    /// index each pixel was rendered from). The truth map is what the
+    /// clustering *should* recover (up to label permutation) — used by
+    /// [`crate::metrics::quality`] to score clusterings objectively.
+    pub fn generate_with_truth(&self, height: usize, width: usize) -> (Raster, Vec<u32>) {
+        let mut stream = self.stream(height, width);
+        let mut data = Vec::with_capacity(height * width * self.channels);
+        let mut truth = Vec::with_capacity(height * width);
+        while stream.next_rows(height, &mut data, Some(&mut truth)) > 0 {}
+        (Raster::from_vec(height, width, self.channels, data), truth)
     }
 
     /// Evaluate the multi-octave class field for one row into `out`
@@ -161,6 +161,76 @@ impl SyntheticOrtho {
         for v in out.iter_mut() {
             *v = (*v / total_amp).clamp(0.0, 0.999_999);
         }
+    }
+}
+
+/// A row cursor over one synthetic scene. Holds O(width) state — the
+/// class-field row buffer plus the two PRNG streams — and emits rows in
+/// order, exactly the sequence [`SyntheticOrtho::generate`] would have
+/// produced (the generator is built on this stream, so identity is by
+/// construction, and a test pins it).
+pub struct SyntheticStream {
+    cfg: SyntheticOrtho,
+    height: usize,
+    width: usize,
+    signatures: Vec<Vec<f32>>,
+    field_seed: Rng,
+    noise_rng: Rng,
+    class_row: Vec<f32>,
+    next_row: usize,
+}
+
+impl SyntheticStream {
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn channels(&self) -> usize {
+        self.cfg.channels
+    }
+
+    /// Rows not yet emitted.
+    pub fn rows_remaining(&self) -> usize {
+        self.height - self.next_row
+    }
+
+    /// Emit up to `max_rows` rows: interleaved samples appended to
+    /// `out_px`, ground-truth classes to `out_truth` when asked for.
+    /// Returns the number of rows emitted (0 once the scene is done).
+    pub fn next_rows(
+        &mut self,
+        max_rows: usize,
+        out_px: &mut Vec<f32>,
+        mut out_truth: Option<&mut Vec<u32>>,
+    ) -> usize {
+        let rows = max_rows.min(self.rows_remaining());
+        let inv_classes = self.cfg.classes as f32;
+        for r in self.next_row..self.next_row + rows {
+            self.cfg
+                .class_field_row(&self.field_seed, r, &mut self.class_row);
+            for c in 0..self.width {
+                // continuous class value in [0, classes)
+                let t = (self.class_row[c] * inv_classes).min(inv_classes - 1e-3);
+                let lo = t.floor() as usize;
+                let hi = (lo + 1).min(self.cfg.classes - 1);
+                let frac = t - lo as f32;
+                if let Some(truth) = out_truth.as_deref_mut() {
+                    truth.push(if frac < 0.5 { lo as u32 } else { hi as u32 });
+                }
+                for b in 0..self.cfg.channels {
+                    let v =
+                        self.signatures[lo][b] * (1.0 - frac) + self.signatures[hi][b] * frac;
+                    let n = self.noise_rng.next_gauss() as f32 * self.cfg.noise_dn;
+                    out_px.push((v + n).clamp(0.0, 255.0));
+                }
+            }
+        }
+        self.next_row += rows;
+        rows
     }
 }
 
@@ -288,6 +358,41 @@ mod tests {
             within < 0.8 * var,
             "no class structure: within={within:.1} var={var:.1}"
         );
+    }
+
+    #[test]
+    fn stream_in_any_strip_size_equals_generate() {
+        let g = SyntheticOrtho::default().with_seed(77);
+        let whole = g.generate(33, 21);
+        for strip in [1usize, 4, 7, 33, 50] {
+            let mut s = g.stream(33, 21);
+            let mut px = Vec::new();
+            let mut truth = Vec::new();
+            let mut rows = 0;
+            loop {
+                let n = s.next_rows(strip, &mut px, Some(&mut truth));
+                if n == 0 {
+                    break;
+                }
+                rows += n;
+            }
+            assert_eq!(rows, 33, "strip={strip}");
+            assert_eq!(px, whole.data(), "strip={strip}: pixels diverged");
+            assert_eq!(truth.len(), 33 * 21);
+            assert_eq!(s.rows_remaining(), 0);
+        }
+    }
+
+    #[test]
+    fn stream_without_truth_is_still_identical() {
+        // Truth extraction consumes no randomness: skipping it must not
+        // perturb the pixel stream.
+        let g = SyntheticOrtho::default().with_seed(78);
+        let whole = g.generate(16, 9);
+        let mut s = g.stream(16, 9);
+        let mut px = Vec::new();
+        while s.next_rows(5, &mut px, None) > 0 {}
+        assert_eq!(px, whole.data());
     }
 
     #[test]

@@ -5,6 +5,10 @@
 //! parallel comparisons (every paper table) cluster identically and time
 //! the same work.
 
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Result};
+
 use crate::util::prng::Rng;
 
 use super::math::sqdist;
@@ -104,6 +108,173 @@ fn plus_plus(pixels: &[f32], k: usize, channels: usize, seed: u64) -> Vec<f32> {
     out
 }
 
+/// Single-pass streaming centroid initialization: the out-of-core
+/// ingest feeds every decoded strip exactly once (in order) and the
+/// sampler keeps only `k × channels` floats of state — `kmeans::init`
+/// no longer needs the whole image resident.
+///
+/// Two sampling strategies:
+///
+/// - **Indexed** — when the pixel count is known up front (a header
+///   always gives it), the [`InitMethod::RandomSample`] draw is made
+///   *before* the pass ([`Rng::sample_indices_sparse`], same generator
+///   calls as the dense draw) and the chosen pixels are captured as
+///   they stream by. Bit-identical to the in-memory init — the root of
+///   streamed-vs-in-memory run identity, pinned by tests.
+/// - **Reservoir** — Algorithm R over the stream for sources whose
+///   length is unknown. Deterministic in the seed, but a *different*
+///   draw than `RandomSample`; only used when no header exists.
+///
+/// [`InitMethod::PlusPlus`] needs distances to every pixel per chosen
+/// centre (k passes over the image) and is rejected for streaming;
+/// [`InitMethod::Fixed`] passes through.
+pub struct StreamInit {
+    k: usize,
+    channels: usize,
+    /// Pixels consumed so far.
+    seen: usize,
+    kind: StreamKind,
+}
+
+enum StreamKind {
+    Fixed(Vec<f32>),
+    Indexed {
+        /// pixel index → sample slot (distinct indices, one slot each).
+        targets: HashMap<usize, usize>,
+        slots: Vec<f32>,
+        filled: usize,
+        n: usize,
+    },
+    Reservoir {
+        rng: Rng,
+        slots: Vec<f32>,
+    },
+}
+
+impl StreamInit {
+    /// Build the sampler for `init`. `pixels` is the total pixel count
+    /// when known (selects the bit-identical indexed strategy);
+    /// `None` falls back to reservoir sampling.
+    pub fn new(
+        init: &InitMethod,
+        k: usize,
+        channels: usize,
+        pixels: Option<usize>,
+        seed: u64,
+    ) -> Result<StreamInit> {
+        ensure!(k >= 1 && channels >= 1, "degenerate init request");
+        let kind = match init {
+            InitMethod::Fixed(c) => {
+                ensure!(
+                    c.len() == k * channels,
+                    "fixed centroids have wrong size: {} != {}*{}",
+                    c.len(),
+                    k,
+                    channels
+                );
+                StreamKind::Fixed(c.clone())
+            }
+            InitMethod::RandomSample => match pixels {
+                Some(n) => {
+                    ensure!(n >= k, "cannot init {k} clusters from {n} pixels");
+                    let idx = Rng::new(seed).sample_indices_sparse(n, k);
+                    let targets = idx.into_iter().zip(0..k).collect();
+                    StreamKind::Indexed {
+                        targets,
+                        slots: vec![0.0; k * channels],
+                        filled: 0,
+                        n,
+                    }
+                }
+                None => StreamKind::Reservoir {
+                    rng: Rng::new(seed),
+                    slots: vec![0.0; k * channels],
+                },
+            },
+            InitMethod::PlusPlus => bail!(
+                "k-means++ needs the full image (k distance passes); \
+                 use RandomSample for streaming ingestion"
+            ),
+        };
+        Ok(StreamInit {
+            k,
+            channels,
+            seen: 0,
+            kind,
+        })
+    }
+
+    /// Observe the next strip of interleaved samples (in stream order).
+    pub fn feed(&mut self, strip: &[f32]) {
+        assert_eq!(
+            strip.len() % self.channels,
+            0,
+            "strip length {} not a multiple of channels={}",
+            strip.len(),
+            self.channels
+        );
+        let c = self.channels;
+        match &mut self.kind {
+            StreamKind::Fixed(_) => {}
+            StreamKind::Indexed {
+                targets,
+                slots,
+                filled,
+                ..
+            } => {
+                for (off, px) in strip.chunks_exact(c).enumerate() {
+                    if let Some(&slot) = targets.get(&(self.seen + off)) {
+                        slots[slot * c..(slot + 1) * c].copy_from_slice(px);
+                        *filled += 1;
+                    }
+                }
+            }
+            StreamKind::Reservoir { rng, slots } => {
+                for (off, px) in strip.chunks_exact(c).enumerate() {
+                    let m = self.seen + off;
+                    if m < self.k {
+                        slots[m * c..(m + 1) * c].copy_from_slice(px);
+                    } else {
+                        // Algorithm R: keep each prefix uniformly sampled.
+                        let j = rng.range_usize(0, m + 1);
+                        if j < self.k {
+                            slots[j * c..(j + 1) * c].copy_from_slice(px);
+                        }
+                    }
+                }
+            }
+        }
+        self.seen += strip.len() / c;
+    }
+
+    /// The initial centroid table, `k × channels`.
+    pub fn finish(self) -> Result<Vec<f32>> {
+        match self.kind {
+            StreamKind::Fixed(c) => Ok(c),
+            StreamKind::Indexed {
+                slots, filled, n, ..
+            } => {
+                ensure!(
+                    self.seen == n && filled == self.k,
+                    "stream ended at pixel {} of {n} with {filled}/{} samples captured",
+                    self.seen,
+                    self.k
+                );
+                Ok(slots)
+            }
+            StreamKind::Reservoir { slots, .. } => {
+                ensure!(
+                    self.seen >= self.k,
+                    "cannot init {} clusters from {} streamed pixels",
+                    self.k,
+                    self.seen
+                );
+                Ok(slots)
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,5 +346,67 @@ mod tests {
     #[should_panic(expected = "cannot init")]
     fn too_few_pixels_rejected() {
         InitMethod::RandomSample.centroids(&[1.0, 2.0, 3.0], 2, 3, 0);
+    }
+
+    fn stream_in_chunks(init: &InitMethod, px: &[f32], k: usize, c: usize, seed: u64, chunk_px: usize) -> Vec<f32> {
+        let n = px.len() / c;
+        let mut s = StreamInit::new(init, k, c, Some(n), seed).unwrap();
+        for chunk in px.chunks(chunk_px * c) {
+            s.feed(chunk);
+        }
+        s.finish().unwrap()
+    }
+
+    #[test]
+    fn indexed_stream_init_is_bit_identical_to_random_sample() {
+        let px = pixels();
+        for seed in [0u64, 1, 7, 0xB10C] {
+            let dense = InitMethod::RandomSample.centroids(&px, 4, 3, seed);
+            for chunk in [1usize, 3, 10, 100] {
+                let streamed =
+                    stream_in_chunks(&InitMethod::RandomSample, &px, 4, 3, seed, chunk);
+                assert_eq!(streamed, dense, "seed={seed} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_streams_through_and_plusplus_is_rejected() {
+        let fixed = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let got = stream_in_chunks(&InitMethod::Fixed(fixed.clone()), &pixels(), 2, 3, 0, 5);
+        assert_eq!(got, fixed);
+        let err = StreamInit::new(&InitMethod::PlusPlus, 2, 3, Some(100), 0).unwrap_err();
+        assert!(format!("{err:#}").contains("k-means++"), "{err:#}");
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_and_draws_data_pixels() {
+        let px = pixels();
+        let run = |chunk: usize| {
+            let mut s = StreamInit::new(&InitMethod::RandomSample, 3, 3, None, 9).unwrap();
+            for c in px.chunks(chunk * 3) {
+                s.feed(c);
+            }
+            s.finish().unwrap()
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a, b, "reservoir must be deterministic in the seed");
+        for cen in a.chunks_exact(3) {
+            assert!(
+                px.chunks_exact(3).any(|p| p == cen),
+                "reservoir centroid {cen:?} not a data pixel"
+            );
+        }
+    }
+
+    #[test]
+    fn short_stream_is_a_clean_error() {
+        let mut s = StreamInit::new(&InitMethod::RandomSample, 2, 3, Some(100), 0).unwrap();
+        s.feed(&[1.0; 30]); // only 10 of the promised 100 pixels
+        assert!(s.finish().is_err());
+        let mut s = StreamInit::new(&InitMethod::RandomSample, 4, 3, None, 0).unwrap();
+        s.feed(&[1.0; 9]); // 3 pixels < k
+        assert!(s.finish().is_err());
     }
 }

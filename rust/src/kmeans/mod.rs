@@ -16,7 +16,7 @@ mod lloyd;
 pub mod math;
 pub mod tile;
 
-pub use init::InitMethod;
+pub use init::{InitMethod, StreamInit};
 pub use kernel::{CentroidDrift, KernelChoice, PrunedState};
 pub use lloyd::{KMeansConfig, KMeansResult, SeqKMeans};
 pub use tile::{ArenaStats, SoaTile, TileArena, TileLayout, LANES};

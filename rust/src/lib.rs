@@ -37,15 +37,20 @@ pub mod util;
 
 /// Convenient re-exports of the types most programs need.
 pub mod prelude {
-    pub use crate::blocks::{BlockPlan, BlockRegion, BlockShape};
+    pub use crate::blocks::{BlockPlan, BlockRegion, BlockShape, LabelMap, LabelSink};
     pub use crate::coordinator::{
         ClusterConfig, ClusterMode, ClusterOutput, Coordinator, CoordinatorConfig, Engine,
+        StreamRun,
     };
-    pub use crate::image::{Raster, SyntheticOrtho};
-    pub use crate::kmeans::{InitMethod, KernelChoice, SeqKMeans, SoaTile, TileArena, TileLayout};
+    pub use crate::image::{PpmSource, Raster, RasterSource, SyntheticOrtho, SyntheticSource};
+    pub use crate::kmeans::{
+        InitMethod, KernelChoice, SeqKMeans, SoaTile, StreamInit, TileArena, TileLayout,
+    };
     pub use crate::metrics::{RunTimer, Speedup};
     pub use crate::plan::{CostModel, ExecPlan, Explain, Planner, PlanRequest};
-    pub use crate::service::{ClusterServer, JobHandle, JobSpec, JobStatus, ServerConfig};
+    pub use crate::service::{
+        ClusterServer, JobHandle, JobInput, JobSpec, JobStatus, ServerConfig,
+    };
     pub use crate::simtime::{SimParams, WorkerSim};
     pub use crate::stripstore::StripStore;
 }

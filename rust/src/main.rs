@@ -13,9 +13,18 @@
 //! - `cases`         regenerate the §4 Cases 1–3 block-size I/O analysis;
 //! - `layout`        interleaved-vs-SoA × kernel × block-shape matrix ->
 //!                   BENCH_layout.json (`--quick` for the CI smoke size);
-//! - `batch`         multi-job service throughput matrix -> BENCH_service.json;
-//! - `serve`         drive N jobs through one persistent shared pool;
+//! - `stream`        streamed-vs-in-memory out-of-core pipeline ->
+//!                   BENCH_stream.json (`--quick` for the CI smoke size);
+//! - `batch`         multi-job service throughput matrix -> BENCH_service.json
+//!                   (`--input` benches a real PPM);
+//! - `serve`         drive N jobs through one persistent shared pool
+//!                   (`--mem-mb` admits jobs by path and streams them);
 //! - `info`          show artifact/manifest status and environment.
+//!
+//! `cluster --mem-mb N` runs the whole pipeline out-of-core: pixels
+//! stream from the source (PPM file or synthetic generator) into a
+//! strip store under a hard resident budget, and the label map spools
+//! to disk; `--dry-run` reports the predicted peak resident bytes.
 //!
 //! Run `blockms --help` for options, or drive everything from a config
 //! file: `blockms cluster --config run.ini`.
@@ -37,7 +46,10 @@ use blockms::cli::{blockms_cli, parse_usize_list, Opts, SUBCOMMANDS};
 use blockms::coordinator::{
     ClusterConfig, ClusterMode, Coordinator, CoordinatorConfig, Engine, IoMode, Schedule,
 };
-use blockms::image::{ppm_dims, read_ppm, write_labels_ppm, write_ppm, Raster, SyntheticOrtho};
+use blockms::image::{
+    ppm_dims, read_ppm, write_labels_ppm, write_ppm, PpmSource, Raster, RasterSource,
+    SyntheticOrtho, SyntheticSource,
+};
 use blockms::kmeans::tile::TileLayout;
 use blockms::plan::{ExecPlan, Explain, Planner, PlanRequest};
 use blockms::runtime::{find_artifacts_dir, ArtifactSet};
@@ -68,6 +80,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "kernels" => cmd_kernels(&args),
         "layout" => cmd_layout(&args),
+        "stream" => cmd_stream(&args),
         "batch" => cmd_batch(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(),
@@ -86,6 +99,10 @@ fn main() {
         std::process::exit(1);
     }
 }
+
+/// Strip height the streaming pipeline defaults to when `--mem-mb` is
+/// given without an explicit `--strip-rows`.
+const DEFAULT_STREAM_STRIP_ROWS: usize = 64;
 
 /// A usage (exit-2) error for flags whose value parsed but is out of
 /// range — e.g. `--workers 0` would otherwise panic deep in the pool.
@@ -110,12 +127,12 @@ fn engine_of(opts: &Opts) -> Result<Engine> {
     })
 }
 
-/// Resolve the I/O mode from `--strip-rows`.
-fn io_of(opts: &Opts) -> Result<IoMode> {
+/// Resolve the I/O mode from `--strip-rows` / `--file-backed`.
+fn io_of(opts: &Opts, args: &Args) -> Result<IoMode> {
     Ok(match opts.parse::<usize>("strip-rows", "io.strip_rows")? {
         Some(strip_rows) => IoMode::Strips {
             strip_rows: positive(strip_rows, "strip-rows")?,
-            file_backed: false,
+            file_backed: args.flag("file-backed"),
         },
         None => IoMode::Direct,
     })
@@ -151,13 +168,30 @@ fn plan_request(
     let k: usize = positive(opts.require("k", "cluster.k")?, "k")?;
     let max_iters: usize = opts.require("max-iters", "cluster.max_iters")?;
     let fixed_iters: Option<usize> = opts.parse("iters", "cluster.iters")?;
+    let mem_mb = match opts.parse::<usize>("mem-mb", "run.mem_mb")? {
+        Some(m) => Some(positive(m, "mem-mb")?),
+        None => None,
+    };
     let strip_rows = match opts.parse::<usize>("strip-rows", "io.strip_rows")? {
         Some(v) => Some(positive(v, "strip-rows")?),
+        // A budget implies strip I/O: streaming needs strips to stream.
+        None if mem_mb.is_some() => Some(DEFAULT_STREAM_STRIP_ROWS),
         None => None,
     };
     let mut req = PlanRequest::new(height, width, channels, k)
         .with_rounds(fixed_iters.unwrap_or(max_iters))
-        .with_strip_rows(strip_rows);
+        .with_strip_rows(strip_rows)
+        .with_mem_mb(mem_mb);
+    // Backing: an explicit --file-backed pins; under a budget the
+    // planner chooses (degrading to file when memory cannot fit);
+    // otherwise memory — the pre-streaming behaviour.
+    req.file_backed = if args.flag("file-backed") {
+        Some(true)
+    } else if mem_mb.is_some() {
+        None
+    } else {
+        Some(false)
+    };
 
     // Block shape: explicit --block-rows/cols always pin; a typed
     // --approach pins its paper-default sizing.
@@ -252,8 +286,27 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if auto {
         println!("planner: {}", explain.rationale());
     }
+    if exec.mem_mb > 0 {
+        let predicted = explain.chosen().resident_bytes as f64 / (1 << 20) as f64;
+        println!(
+            "memory: predicted peak resident {predicted:.1} MiB (budget {} MiB)",
+            exec.mem_mb
+        );
+        if explain.budget_exceeded() {
+            bail!(
+                "no feasible plan under --mem-mb {}: the smallest candidate still needs \
+                 {predicted:.1} MiB — raise the budget, lower --workers, or shrink the blocks",
+                exec.mem_mb
+            );
+        }
+    }
     if args.flag("dry-run") {
         return Ok(());
+    }
+    if exec.mem_mb > 0 {
+        // Out-of-core: pixels stream from the source into a strip store
+        // (never fully resident), labels stream out through the sink.
+        return stream_cluster(&opts, args, exec, input.as_deref(), seed, height, width);
     }
 
     // --- image -----------------------------------------------------------
@@ -279,7 +332,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         exec,
         engine: engine_of(&opts)?,
         mode: opts.require::<ClusterMode>("mode", "run.mode")?,
-        io: io_of(&opts)?,
+        io: io_of(&opts, args)?,
         schedule: opts.require::<Schedule>("schedule", "run.schedule")?,
         fail_block: None,
     });
@@ -354,6 +407,102 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if let Some(p) = opts.get("out", "output.labels") {
         write_labels_ppm(&out.labels, img.height(), img.width(), Path::new(&p))?;
         println!("wrote label map to {p}");
+    }
+    Ok(())
+}
+
+/// The `--mem-mb` arm of `blockms cluster`: drive
+/// [`Coordinator::cluster_source`] over a streaming source (PPM file or
+/// synthetic generator), then report the audited peak resident bytes
+/// against the budget. Labels are written strip-by-strip, so even a
+/// spooled map goes disk → disk bounded.
+fn stream_cluster(
+    opts: &Opts,
+    args: &Args,
+    exec: ExecPlan,
+    input: Option<&str>,
+    seed: u64,
+    height: usize,
+    width: usize,
+) -> Result<()> {
+    if args.flag("serial") {
+        bail!("--serial needs the whole image resident; drop --mem-mb to compare (bit-identity \
+               of the streamed path is asserted by tests/integration_pipeline.rs)");
+    }
+    if opts.get("out-input", "output.input").is_some() {
+        bail!("--out-input would materialize the scene; drop --mem-mb to dump it");
+    }
+    let strip_rows = match opts.parse::<usize>("strip-rows", "io.strip_rows")? {
+        Some(v) => positive(v, "strip-rows")?,
+        None => DEFAULT_STREAM_STRIP_ROWS,
+    };
+    let coord = Coordinator::new(CoordinatorConfig {
+        exec,
+        engine: engine_of(opts)?,
+        mode: opts.require::<ClusterMode>("mode", "run.mode")?,
+        io: IoMode::Strips {
+            strip_rows,
+            file_backed: exec.file_backed,
+        },
+        schedule: opts.require::<Schedule>("schedule", "run.schedule")?,
+        fail_block: None,
+    });
+    let ccfg = ClusterConfig {
+        k: positive(opts.require("k", "cluster.k")?, "k")?,
+        max_iters: opts.require("max-iters", "cluster.max_iters")?,
+        seed,
+        fixed_iters: opts.parse("iters", "cluster.iters")?,
+        ..Default::default()
+    };
+    let mut source: Box<dyn RasterSource> = match input {
+        Some(path) => {
+            println!("streaming {path} ({width}x{height}, strips of {strip_rows} rows)");
+            Box::new(PpmSource::open(Path::new(path))?)
+        }
+        None => {
+            println!(
+                "streaming synthetic ortho scene {width}x{height} (seed {seed}, strips of \
+                 {strip_rows} rows)"
+            );
+            Box::new(SyntheticSource::new(
+                &SyntheticOrtho::default().with_seed(seed),
+                height,
+                width,
+            ))
+        }
+    };
+    let run = coord.cluster_source(source.as_mut(), &ccfg)?;
+    println!(
+        "parallel: {} workers, {} blocks, {} iterations{} -> inertia {:.1}, {}",
+        run.workers,
+        run.blocks,
+        run.iterations,
+        if run.converged { " (converged)" } else { "" },
+        run.inertia,
+        duration(run.total_secs)
+    );
+    let peak = run.peak_resident_bytes as f64 / (1 << 20) as f64;
+    let budget = exec.mem_mb as f64;
+    println!(
+        "memory: peak resident {peak:.1} MiB of {budget:.0} MiB budget ({}) | labels {}",
+        if run.peak_resident_bytes <= (exec.mem_mb as u64) << 20 {
+            "within budget"
+        } else {
+            "OVER BUDGET"
+        },
+        if run.labels.is_spooled() { "spooled to disk" } else { "dense" },
+    );
+    println!(
+        "io: {} block reads, {} strip reads, {} bytes | strip cache: {} hits / {} misses",
+        run.io_stats.block_reads,
+        run.io_stats.strip_reads,
+        run.io_stats.bytes_read,
+        run.io_stats.strip_cache_hits,
+        run.io_stats.strip_cache_misses
+    );
+    if let Some(p) = opts.get("out", "output.labels") {
+        run.labels.write_labels_ppm(run.height, run.width, Path::new(&p))?;
+        println!("wrote label map to {p} (streamed)");
     }
     Ok(())
 }
@@ -548,6 +697,30 @@ fn cmd_layout(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Streaming-layer benchmark: streamed vs in-memory pipeline at the
+/// acceptance geometries (1024² and a 4096×1024 tall case), written to
+/// `BENCH_stream.json` (see EXPERIMENTS.md §Streaming for the schema).
+/// `--quick` runs the CI smoke size.
+fn cmd_stream(args: &Args) -> Result<()> {
+    use blockms::bench::stream::{render_stream_bench, write_stream_bench, StreamBenchOpts};
+    let opts = Opts::load(args)?;
+    let base = if args.flag("quick") {
+        StreamBenchOpts::quick()
+    } else {
+        StreamBenchOpts::default()
+    };
+    let bopts = StreamBenchOpts {
+        seed: opts.require("seed", "workload.seed")?,
+        workers: positive(opts.require("workers", "run.workers")?, "workers")?,
+        ..base
+    };
+    let out = args.get("out").unwrap_or("BENCH_stream.json").to_string();
+    let rows = write_stream_bench(Path::new(&out), &bopts)?;
+    print!("{}", render_stream_bench(&bopts, &rows));
+    println!("wrote {out}");
+    Ok(())
+}
+
 /// Service-layer benchmark: multi-job throughput over one shared pool at
 /// pool sizes × batch sizes, written to `BENCH_service.json` (see
 /// EXPERIMENTS.md §Service for the schema).
@@ -555,9 +728,20 @@ fn cmd_batch(args: &Args) -> Result<()> {
     let opts = Opts::load(args)?;
     let scale: f64 = opts.require("scale", "bench.scale")?;
     let side = ((1024.0 * scale).round() as usize).max(32);
+    // `--input scene.ppm` benches service throughput over a real file
+    // (geometry from the header) instead of synthetic scenes.
+    let input = opts.get("input", "workload.input");
+    let (bench_h, bench_w) = match &input {
+        Some(p) => {
+            let (h, w, _) = ppm_dims(Path::new(p))?;
+            (h, w)
+        }
+        None => (side, side),
+    };
     let bopts = ServiceBenchOpts {
-        height: side,
-        width: side,
+        height: bench_h,
+        width: bench_w,
+        input: input.map(std::path::PathBuf::from),
         k: positive(opts.require("k", "cluster.k")?, "k")?,
         iters: opts.require("bench-iters", "bench.iters")?,
         seed: opts.require("seed", "workload.seed")?,
@@ -591,18 +775,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let auto = args.flag("auto");
     let mode = opts.require::<ClusterMode>("mode", "run.mode")?;
     let schedule = opts.require::<Schedule>("schedule", "run.schedule")?;
-    let io = io_of(&opts)?;
+    let io = io_of(&opts, args)?;
     let engine = engine_of(&opts)?;
     let max_iters: usize = opts.require("max-iters", "cluster.max_iters")?;
     let fixed_iters: Option<usize> = opts.parse("iters", "cluster.iters")?;
 
     // One shared input image, or a distinct synthetic scene per job.
+    // Under --mem-mb nothing is materialized here: jobs are admitted by
+    // path (or generator description) and stream at activation.
     let input = opts.get("input", "workload.input");
+    let streaming = opts.parse::<usize>("mem-mb", "run.mem_mb")?.is_some();
     let base: Option<Arc<Raster>> = match &input {
-        Some(path) => {
+        Some(path) if !streaming => {
             let img = read_ppm(Path::new(path))?;
             println!("loaded {path}: {}x{} ({} bands)", img.width(), img.height(), img.channels());
             Some(Arc::new(img))
+        }
+        Some(path) => {
+            let (h, w, c) = ppm_dims(Path::new(path))?;
+            println!("admitting {path} by header: {w}x{h} ({c} bands), pixels stream per job");
+            None
         }
         None => None,
     };
@@ -612,7 +804,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // tests/plan_resolution.rs).
     let (height, width, channels) = match &base {
         Some(img) => (img.height(), img.width(), img.channels()),
-        None => workload_dims(&opts, None)?,
+        None => workload_dims(&opts, input.as_deref())?,
     };
     let mut req = plan_request(&opts, args, auto, height, width, channels)?;
     // The shared pool's width is explicit here; the plan must agree.
@@ -622,6 +814,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if auto {
         println!("planner: {}", explain.rationale());
     }
+    if exec.mem_mb > 0 && explain.budget_exceeded() {
+        bail!(
+            "no feasible plan under --mem-mb {} for this geometry (smallest candidate needs \
+             {:.1} MiB)",
+            exec.mem_mb,
+            explain.chosen().resident_bytes as f64 / (1 << 20) as f64
+        );
+    }
+    let stream_strip_rows = match opts.parse::<usize>("strip-rows", "io.strip_rows")? {
+        Some(v) => positive(v, "strip-rows")?,
+        None => DEFAULT_STREAM_STRIP_ROWS,
+    };
 
     let server = ClusterServer::start(ServerConfig {
         workers,
@@ -635,28 +839,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut handles = Vec::with_capacity(jobs);
     for j in 0..jobs {
         let job_seed = seed.wrapping_add(j as u64);
-        let img = match &base {
-            Some(img) => Arc::clone(img),
-            None => Arc::new(
-                SyntheticOrtho::default()
-                    .with_seed(job_seed)
-                    .generate(height, width),
-            ),
+        let ccfg = ClusterConfig {
+            k,
+            max_iters,
+            seed: job_seed,
+            fixed_iters,
+            ..Default::default()
         };
-        let spec = JobSpec::new(
-            img,
-            exec,
-            ClusterConfig {
-                k,
-                max_iters,
-                seed: job_seed,
-                fixed_iters,
-                ..Default::default()
-            },
-        )
-        .with_mode(mode)
-        .with_io(io.clone())
-        .with_engine(engine.clone());
+        let spec = if exec.mem_mb > 0 {
+            // Streamed admission: path or generator description only;
+            // each job's pixels decode at activation, strip by strip.
+            let stream_io = IoMode::Strips {
+                strip_rows: stream_strip_rows,
+                file_backed: exec.file_backed,
+            };
+            match &input {
+                Some(path) => JobSpec::from_ppm(Path::new(path), exec, ccfg)?,
+                None => JobSpec::from_synthetic(
+                    SyntheticOrtho::default().with_seed(job_seed),
+                    height,
+                    width,
+                    exec,
+                    ccfg,
+                ),
+            }
+            .with_mode(mode)
+            .with_io(stream_io)
+            .with_engine(engine.clone())
+        } else {
+            let img = match &base {
+                Some(img) => Arc::clone(img),
+                None => Arc::new(
+                    SyntheticOrtho::default()
+                        .with_seed(job_seed)
+                        .generate(height, width),
+                ),
+            };
+            JobSpec::new(img, exec, ccfg)
+                .with_mode(mode)
+                .with_io(io.clone())
+                .with_engine(engine.clone())
+        };
         // Blocks while the admission gate is full — the backpressure path.
         handles.push(server.submit(spec)?);
     }

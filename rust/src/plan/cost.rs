@@ -339,6 +339,80 @@ impl CostModel {
         (transfers, transfers * strip_bytes)
     }
 
+    /// Predicted peak resident **pixel bytes** for one candidate
+    /// strategy — the feasibility side of the `--mem-mb` budget. The
+    /// terms mirror what the runtime actually keeps live (and what the
+    /// [`crate::util::mem::ResidentGauge`] audits):
+    ///
+    /// - the store: the whole image when memory-backed (or under direct
+    ///   I/O), ~2 transient strips when file-backed (streaming ingest);
+    /// - per worker: one decoded strip plus the block crop buffer, and
+    ///   a second set for the prefetch sidecar's private reader when the
+    ///   candidate double-buffers;
+    /// - the decoded-strip cache (file backing only — memory-backed
+    ///   caches are presence markers over the shared buffer);
+    /// - the SoA tile arena, capped at its own budget and at the padded
+    ///   job footprint; a transient padded tile per worker for lane
+    ///   kernels running over interleaved reads;
+    /// - the label map: dense `h·w·4` when unbounded; under any budget
+    ///   the sink spools to disk (the same rule the runtime applies, so
+    ///   model and gauge cannot disagree about where labels live), and
+    ///   only its one-row buffer is resident.
+    #[allow(clippy::too_many_arguments)]
+    pub fn resident_bytes(
+        &self,
+        w: &Workload,
+        plan: &BlockPlan,
+        kernel: KernelChoice,
+        layout: TileLayout,
+        workers: usize,
+        strip_cache: usize,
+        prefetch: bool,
+        arena_mb: usize,
+        file_backed: bool,
+        mem_budget: Option<u64>,
+    ) -> u64 {
+        let workers = workers.max(1) as u64;
+        let image = w.image_bytes();
+        let (brows, bcols) = plan.block_dims();
+        let block_bytes = (brows * bcols * w.channels * 4) as u64;
+        let mut total = match w.strip_rows {
+            // Direct I/O: the raster itself is resident.
+            None => image + workers * block_bytes,
+            Some(strip_rows) => {
+                let strip_bytes = (strip_rows.max(1) * w.width * w.channels * 4) as u64;
+                let store = if file_backed { 2 * strip_bytes } else { image };
+                // Reader footprint: decoded strip + bounded raw-decode
+                // chunk + block crop.
+                let chunk = strip_bytes
+                    .min(crate::stripstore::StripReader::DECODE_CHUNK_BYTES as u64);
+                let mut per_worker = strip_bytes + chunk + block_bytes;
+                if prefetch {
+                    per_worker *= 2; // sidecar reader + banked fill
+                }
+                let cache = if file_backed {
+                    (strip_cache.min(w.unique_strips()) as u64) * strip_bytes
+                } else {
+                    0
+                };
+                store + workers * per_worker + cache
+            }
+        };
+        if layout == TileLayout::Soa {
+            let arena = (workers * ((arena_mb as u64) << 20)).min(image * 5 / 4);
+            total += arena;
+        } else if kernel == KernelChoice::Lanes {
+            // Transient padded tile per worker when lanes read
+            // interleaved blocks.
+            total += workers * (block_bytes * 5 / 4);
+        }
+        total += match mem_budget {
+            Some(_) => (w.width * 4) as u64,
+            None => (w.pixels() * 4) as u64,
+        };
+        total
+    }
+
     /// Predict the cost of running `w` under the given strategy.
     pub fn predict(
         &self,
@@ -554,6 +628,102 @@ mod tests {
         assert_eq!(at(16), at(5), "scaling must clamp to the block count");
         // 4 workers run 5 blocks in 2 waves; 5 workers in 1: exact ceil ratio.
         assert!((at(4) / at(5) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resident_model_tracks_backing_and_height() {
+        let m = CostModel::baked();
+        let w = workload(Some(64));
+        let plan = BlockPlan::new(1024, 1024, BlockShape::Rows { band_rows: 64 });
+        let res = |file_backed| {
+            m.resident_bytes(
+                &w,
+                &plan,
+                KernelChoice::Naive,
+                TileLayout::Interleaved,
+                4,
+                0,
+                false,
+                0,
+                file_backed,
+                None,
+            )
+        };
+        let image = w.image_bytes();
+        assert!(res(false) > image, "memory backing holds the image");
+        let strip_bytes = (64 * 1024 * 3 * 4) as u64;
+        assert_eq!(
+            res(false) - res(true),
+            image - 2 * strip_bytes,
+            "backings differ by exactly the store term"
+        );
+        // File-backed footprint is height-independent: quadruple the
+        // height, same strips/blocks per worker.
+        let tall = Workload {
+            height: 4096,
+            ..w
+        };
+        let tall_plan = BlockPlan::new(4096, 1024, BlockShape::Rows { band_rows: 64 });
+        let tall_res = m.resident_bytes(
+            &tall,
+            &tall_plan,
+            KernelChoice::Naive,
+            TileLayout::Interleaved,
+            4,
+            0,
+            false,
+            0,
+            true,
+            None,
+        );
+        // labels stay dense without a budget and scale with the image;
+        // compare the pixel-side terms by subtracting them.
+        let labels = (w.pixels() * 4) as u64;
+        let tall_labels = (tall.pixels() * 4) as u64;
+        assert_eq!(res(true) - labels, tall_res - tall_labels);
+        // under a budget the dense label map spills out of residency
+        let budget = Some(8u64 << 20);
+        let with_budget = m.resident_bytes(
+            &tall,
+            &tall_plan,
+            KernelChoice::Naive,
+            TileLayout::Interleaved,
+            4,
+            0,
+            false,
+            0,
+            true,
+            budget,
+        );
+        assert!(with_budget <= 8 << 20, "{with_budget}");
+        // prefetch doubles the per-worker read path
+        let pf = m.resident_bytes(
+            &w,
+            &plan,
+            KernelChoice::Naive,
+            TileLayout::Interleaved,
+            4,
+            0,
+            true,
+            0,
+            true,
+            None,
+        );
+        assert!(pf > res(true));
+        // a file-backed cache is real bytes; memory-backed is free
+        let cached = m.resident_bytes(
+            &w,
+            &plan,
+            KernelChoice::Naive,
+            TileLayout::Interleaved,
+            4,
+            16,
+            false,
+            0,
+            true,
+            None,
+        );
+        assert_eq!(cached - res(true), 16 * (64 * 1024 * 3 * 4) as u64);
     }
 
     #[test]

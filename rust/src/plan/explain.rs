@@ -18,6 +18,11 @@ pub struct Candidate {
     /// Block-grid extent `(grid_rows, grid_cols)`.
     pub grid: (usize, usize),
     pub cost: PlanCost,
+    /// Predicted peak resident pixel bytes
+    /// ([`super::CostModel::resident_bytes`]).
+    pub resident_bytes: u64,
+    /// Fits the request's `mem_mb` budget (always true when unbounded).
+    pub feasible: bool,
 }
 
 /// The full report of one [`super::Planner::resolve`] call.
@@ -52,6 +57,13 @@ impl Explain {
         &self.candidates[self.chosen]
     }
 
+    /// True when the request's `mem_mb` budget admits no candidate at
+    /// all — the chosen plan is then merely the smallest-footprint
+    /// fallback and entry points should refuse to run it.
+    pub fn budget_exceeded(&self) -> bool {
+        !self.chosen().feasible
+    }
+
     /// Candidates sorted by predicted wall time (stable: prediction
     /// ties keep enumeration order). The chosen candidate is always
     /// `ranked()[0]` — the no-regret invariant the property suite
@@ -84,9 +96,18 @@ impl Explain {
         } else {
             String::new()
         };
+        let mem = if self.request.mem_mb.is_some() {
+            let infeasible = self.candidates.iter().filter(|c| !c.feasible).count();
+            format!(
+                "; predicted peak resident {:.1} MiB ({infeasible} candidates over budget)",
+                c.resident_bytes as f64 / (1 << 20) as f64
+            )
+        } else {
+            String::new()
+        };
         format!(
             "picked {} over {} candidates: predicted {:.2} ns/px/pass \
-             ({:.0}% compute{io}); model error bound ±{:.0}%",
+             ({:.0}% compute{io}); model error bound ±{:.0}%{mem}",
             c.plan.summary(),
             self.candidates.len(),
             c.cost.ns_per_pixel_pass,
@@ -112,19 +133,25 @@ impl Explain {
             100.0 * self.error_bound,
         ))
         .header(&[
-            "", "Shape", "Grid", "Kernel", "Layout", "Cache", "Pf", "ns/px/pass", "Pred wall",
-            "vs pick",
+            "", "Shape", "Grid", "Kernel", "Layout", "Cache", "Pf", "Store", "Res MiB",
+            "ns/px/pass", "Pred wall", "vs pick",
         ]);
         for c in ranked.iter().take(shown) {
             let pick = std::ptr::eq(*c, self.chosen());
             t.row(vec![
-                if pick { "*" } else { "" }.to_string(),
+                match (pick, c.feasible) {
+                    (true, _) => "*".to_string(),
+                    (false, false) => "!".to_string(),
+                    (false, true) => String::new(),
+                },
                 c.plan.shape.to_string(),
                 format!("{}x{}", c.grid.0, c.grid.1),
                 c.plan.kernel.to_string(),
                 c.plan.layout.to_string(),
                 c.plan.strip_cache.to_string(),
                 if c.plan.prefetch { "y" } else { "-" }.to_string(),
+                if c.plan.file_backed { "file" } else { "mem" }.to_string(),
+                format!("{:.1}", c.resident_bytes as f64 / (1 << 20) as f64),
                 format!("{:.2}", c.cost.ns_per_pixel_pass),
                 crate::util::fmt::duration(c.cost.wall_secs),
                 format!("{:.2}x", self.predicted_slowdown(c)),

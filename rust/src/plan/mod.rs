@@ -71,6 +71,15 @@ pub struct ExecPlan {
     /// Shared decoded-strip LRU capacity in strips (0 = no cache);
     /// meaningful only under strip I/O.
     pub strip_cache: usize,
+    /// Hard resident pixel-byte budget in MiB (0 = unbounded). Carried
+    /// on the plan so downstream layers (label sink sizing, the `ran:`
+    /// line, benches) see the same number the planner enforced.
+    pub mem_mb: usize,
+    /// Back the strip store with a real file instead of memory. The
+    /// planner's degrade-under-budget axis: file backing trades strip
+    /// re-decodes for an image-height-independent resident footprint.
+    /// Meaningful only under strip I/O.
+    pub file_backed: bool,
 }
 
 impl Default for ExecPlan {
@@ -95,6 +104,8 @@ impl ExecPlan {
             arena_mb: DEFAULT_ARENA_MB,
             prefetch: false,
             strip_cache: 0,
+            mem_mb: 0,
+            file_backed: false,
         }
     }
 
@@ -137,9 +148,26 @@ impl ExecPlan {
         self
     }
 
+    /// Pin a resident pixel-byte budget (MiB; 0 = unbounded).
+    pub fn with_mem_mb(mut self, mem_mb: usize) -> ExecPlan {
+        self.mem_mb = mem_mb;
+        self
+    }
+
+    /// Pin the strip-store backing (file vs memory).
+    pub fn with_file_backing(mut self, file_backed: bool) -> ExecPlan {
+        self.file_backed = file_backed;
+        self
+    }
+
     /// Per-worker arena budget in bytes.
     pub fn arena_bytes(&self) -> usize {
         self.arena_mb << 20
+    }
+
+    /// The resident budget in bytes, `None` when unbounded.
+    pub fn mem_budget_bytes(&self) -> Option<u64> {
+        (self.mem_mb > 0).then(|| (self.mem_mb as u64) << 20)
     }
 
     /// Materialize the block tiling for an image (deterministic — the
@@ -167,6 +195,12 @@ impl ExecPlan {
         if self.prefetch {
             s.push_str(" · prefetch");
         }
+        if self.file_backed {
+            s.push_str(" · file");
+        }
+        if self.mem_mb > 0 {
+            s.push_str(&format!(" · mem {}MiB", self.mem_mb));
+        }
         s
     }
 }
@@ -190,6 +224,15 @@ pub struct PlanRequest {
     pub arena_mb: Option<usize>,
     pub prefetch: Option<bool>,
     pub strip_cache: Option<usize>,
+    /// Hard resident pixel-byte budget in MiB. Unlike the knobs above
+    /// this is a *constraint*, not an axis: candidates whose predicted
+    /// resident footprint exceeds it are infeasible, and the planner
+    /// degrades (file backing, smaller arena) instead of picking them.
+    pub mem_mb: Option<usize>,
+    /// Strip-store backing pin; `None` under a budget lets the planner
+    /// choose (memory when it fits, file when it must), and defaults to
+    /// memory otherwise (the pre-streaming behaviour).
+    pub file_backed: Option<bool>,
 }
 
 impl PlanRequest {
@@ -227,6 +270,8 @@ impl PlanRequest {
         self.arena_mb = Some(plan.arena_mb);
         self.prefetch = Some(plan.prefetch);
         self.strip_cache = Some(plan.strip_cache);
+        self.mem_mb = (plan.mem_mb > 0).then_some(plan.mem_mb);
+        self.file_backed = Some(plan.file_backed);
         self
     }
 
@@ -240,6 +285,13 @@ impl PlanRequest {
         self
     }
 
+    /// Constrain every candidate to `mem_mb` MiB of resident pixel
+    /// bytes (`None` = unbounded).
+    pub fn with_mem_mb(mut self, mem_mb: Option<usize>) -> PlanRequest {
+        self.mem_mb = mem_mb.filter(|&m| m > 0);
+        self
+    }
+
     /// True when every knob is pinned (the planner has nothing to do).
     pub fn fully_pinned(&self) -> bool {
         self.shape.is_some()
@@ -249,6 +301,7 @@ impl PlanRequest {
             && self.arena_mb.is_some()
             && self.prefetch.is_some()
             && self.strip_cache.is_some()
+            && self.file_backed.is_some()
     }
 }
 
@@ -288,10 +341,27 @@ impl Planner {
         let w = req.workload();
         let shapes: Vec<BlockShape> = match req.shape {
             Some(s) => vec![s],
-            None => ApproachKind::ALL
-                .iter()
-                .map(|&a| BlockShape::paper_default(a, req.height, req.width))
-                .collect(),
+            None => {
+                let mut v: Vec<BlockShape> = ApproachKind::ALL
+                    .iter()
+                    .map(|&a| BlockShape::paper_default(a, req.height, req.width))
+                    .collect();
+                // The paper's ~5-block shapes keep ~1/5 of the image in
+                // each worker's crop buffer — often the whole budget by
+                // itself. Under a constraint, also offer the natural
+                // streaming tile: row bands one strip tall, whose
+                // resident footprint is strip-sized and independent of
+                // image height.
+                if let (Some(rows), Some(_)) = (req.strip_rows, req.mem_mb) {
+                    let streaming = BlockShape::Rows {
+                        band_rows: rows.max(1),
+                    };
+                    if !v.contains(&streaming) {
+                        v.push(streaming);
+                    }
+                }
+                v
+            }
         };
         let kernels: Vec<KernelChoice> = match req.kernel {
             Some(k) => vec![k],
@@ -312,8 +382,20 @@ impl Planner {
             None if req.strip_rows.is_some() => vec![false, true],
             None => vec![false],
         };
+        // The backing axis only opens up when a budget makes it matter:
+        // memory backing is never slower, so without a constraint the
+        // extra candidates would all lose. Memory enumerates first, so
+        // cost ties degrade toward the pre-streaming behaviour.
+        let backings: Vec<bool> = match req.file_backed {
+            Some(b) => vec![b],
+            None if req.strip_rows.is_some() && req.mem_mb.is_some() => vec![false, true],
+            None => vec![false],
+        };
         let workers = req.workers.unwrap_or(DEFAULT_WORKERS);
-        let arena_mb = req.arena_mb.unwrap_or_else(|| self.auto_arena_mb(&w, workers));
+        let arena_mb = req
+            .arena_mb
+            .unwrap_or_else(|| self.auto_arena_mb(&w, workers, req.mem_mb));
+        let mem_budget = req.mem_mb.map(|m| (m as u64) << 20);
 
         let mut out = Vec::new();
         for &shape in &shapes {
@@ -322,29 +404,48 @@ impl Planner {
                 for &layout in &layouts {
                     for &strip_cache in &caches {
                         for &prefetch in &prefetches {
-                            let cost = self.model.predict(
-                                &w,
-                                &plan,
-                                kernel,
-                                layout,
-                                workers,
-                                strip_cache,
-                                prefetch,
-                            );
-                            out.push(Candidate {
-                                plan: ExecPlan {
-                                    shape,
-                                    workers,
+                            for &file_backed in &backings {
+                                let cost = self.model.predict(
+                                    &w,
+                                    &plan,
                                     kernel,
                                     layout,
-                                    arena_mb,
-                                    prefetch,
+                                    workers,
                                     strip_cache,
-                                },
-                                blocks: plan.len(),
-                                grid: plan.grid_dims(),
-                                cost,
-                            });
+                                    prefetch,
+                                );
+                                let resident_bytes = self.model.resident_bytes(
+                                    &w,
+                                    &plan,
+                                    kernel,
+                                    layout,
+                                    workers,
+                                    strip_cache,
+                                    prefetch,
+                                    arena_mb,
+                                    file_backed,
+                                    mem_budget,
+                                );
+                                let feasible = mem_budget.map_or(true, |b| resident_bytes <= b);
+                                out.push(Candidate {
+                                    plan: ExecPlan {
+                                        shape,
+                                        workers,
+                                        kernel,
+                                        layout,
+                                        arena_mb,
+                                        prefetch,
+                                        strip_cache,
+                                        mem_mb: req.mem_mb.unwrap_or(0),
+                                        file_backed,
+                                    },
+                                    blocks: plan.len(),
+                                    grid: plan.grid_dims(),
+                                    cost,
+                                    resident_bytes,
+                                    feasible,
+                                });
+                            }
                         }
                     }
                 }
@@ -355,16 +456,37 @@ impl Planner {
 
     /// Resolve a request into the one plan to run, plus the explain
     /// report over everything that was considered.
+    ///
+    /// Under a `mem_mb` constraint the argmin runs over *feasible*
+    /// candidates only — the planner degrades to file backing and a
+    /// smaller arena instead of picking an OOM plan. When nothing fits
+    /// (budget below even the streamed floor), the smallest-footprint
+    /// candidate is returned and [`Explain::budget_exceeded`] is set so
+    /// entry points can fail with the shortfall instead of thrashing.
     pub fn resolve(&self, req: &PlanRequest) -> (ExecPlan, Explain) {
         let candidates = self.candidates(req);
         // Deterministic argmin: strictly-less keeps the earliest of a
         // tie, and enumeration order is fixed.
-        let mut best = 0usize;
+        let mut best: Option<usize> = None;
         for (i, c) in candidates.iter().enumerate() {
-            if c.cost.wall_secs < candidates[best].cost.wall_secs {
-                best = i;
+            if !c.feasible {
+                continue;
+            }
+            match best {
+                None => best = Some(i),
+                Some(b) if c.cost.wall_secs < candidates[b].cost.wall_secs => best = Some(i),
+                Some(_) => {}
             }
         }
+        let best = best.unwrap_or_else(|| {
+            let mut b = 0usize;
+            for (i, c) in candidates.iter().enumerate() {
+                if c.resident_bytes < candidates[b].resident_bytes {
+                    b = i;
+                }
+            }
+            b
+        });
         let plan = candidates[best].plan;
         let explain = Explain::new(req.clone(), candidates, best, self.model.error_bound);
         (plan, explain)
@@ -372,10 +494,16 @@ impl Planner {
 
     /// Arena sizing when unpinned: big enough that every SoA tile of
     /// the job fits its worker's share with deinterleave padding slack,
-    /// floored at the historical default.
-    fn auto_arena_mb(&self, w: &Workload, workers: usize) -> usize {
+    /// floored at the historical default — but under a `mem_mb` budget
+    /// the arena gets at most half the budget split across workers
+    /// (tiles degrade to spilled re-reads, never to an OOM).
+    fn auto_arena_mb(&self, w: &Workload, workers: usize, mem_mb: Option<usize>) -> usize {
         let per_worker = (w.image_bytes() as usize * 5 / 4) / workers.max(1);
-        DEFAULT_ARENA_MB.max(per_worker.div_ceil(1 << 20))
+        let auto = DEFAULT_ARENA_MB.max(per_worker.div_ceil(1 << 20));
+        match mem_mb {
+            Some(m) => auto.min((m / 2) / workers.max(1)),
+            None => auto,
+        }
     }
 }
 
@@ -483,6 +611,63 @@ mod tests {
         let (p_huge, _) = planner.resolve(&huge);
         // 16384^2 x 3 x 4 bytes x 1.25 / 4 workers = 960 MiB
         assert!(p_huge.arena_mb > DEFAULT_ARENA_MB, "{}", p_huge.arena_mb);
+    }
+
+    #[test]
+    fn budget_degrades_to_file_backing_instead_of_oom() {
+        // 1024x1024x3 f32 = 12 MiB of pixels; an 8 MiB budget cannot
+        // hold the image, so a memory-backed store is infeasible and
+        // the planner must degrade: file backing, strip-sized row
+        // blocks, interleaved reads, arena capped under the budget.
+        let r = req().with_mem_mb(Some(8));
+        let (plan, explain) = Planner::default().resolve(&r);
+        assert!(!explain.budget_exceeded(), "{}", plan.summary());
+        assert!(plan.file_backed, "must degrade to file backing");
+        assert_eq!(plan.mem_mb, 8);
+        assert!(explain.chosen().feasible);
+        assert!(explain.chosen().resident_bytes <= 8 << 20);
+        assert_eq!(plan.layout, TileLayout::Interleaved, "arena would blow the budget");
+        assert!(plan.arena_mb <= 1, "arena {} not capped", plan.arena_mb);
+        // Unconstrained resolve keeps the pre-streaming behaviour.
+        let (free, e) = Planner::default().resolve(&req());
+        assert!(!free.file_backed);
+        assert_eq!(free.mem_mb, 0);
+        assert!(e.candidates.iter().all(|c| c.feasible));
+    }
+
+    #[test]
+    fn feasible_candidates_beat_cheaper_infeasible_ones() {
+        let r = req().with_mem_mb(Some(8));
+        let (_, explain) = Planner::default().resolve(&r);
+        let chosen = explain.chosen();
+        for c in &explain.candidates {
+            if c.feasible {
+                assert!(
+                    chosen.cost.wall_secs <= c.cost.wall_secs,
+                    "picked {:?} but feasible {:?} predicts cheaper",
+                    chosen.plan,
+                    c.plan
+                );
+            }
+        }
+        // at least one cheaper-but-infeasible candidate exists (the
+        // memory-backed lanes plans the unconstrained resolve prefers)
+        assert!(
+            explain.candidates.iter().any(|c| !c.feasible),
+            "budget did not constrain anything"
+        );
+    }
+
+    #[test]
+    fn impossible_budget_is_reported_not_thrashed() {
+        let r = req().with_mem_mb(Some(1));
+        let (plan, explain) = Planner::default().resolve(&r);
+        assert!(explain.budget_exceeded());
+        // the fallback is still the smallest-footprint candidate
+        for c in &explain.candidates {
+            assert!(explain.chosen().resident_bytes <= c.resident_bytes);
+        }
+        assert_eq!(plan, explain.chosen().plan);
     }
 
     #[test]

@@ -16,25 +16,72 @@
 //! (`Queued → Running → Done | Failed | Cancelled`) with blocking
 //! [`JobHandle::wait`] and cooperative [`JobHandle::cancel`].
 
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::blocks::BlockPlan;
 use crate::coordinator::{
     ClusterConfig, ClusterMode, ClusterOutput, Engine, IoMode, JobId,
 };
-use crate::image::Raster;
+use crate::image::{
+    ppm_dims, PpmSource, Raster, RasterCursor, RasterSource, SyntheticOrtho, SyntheticSource,
+};
 use crate::kmeans::kernel::KernelChoice;
 use crate::kmeans::tile::TileLayout;
+use crate::kmeans::InitMethod;
 use crate::plan::ExecPlan;
+
+/// Where a job's pixels come from. Admission never requires the pixels
+/// — a path or a generator description is enough; streaming inputs are
+/// decoded strip-by-strip at activation (the out-of-core path).
+#[derive(Clone)]
+pub enum JobInput {
+    /// A pre-loaded raster (the seed behaviour; direct or strip I/O).
+    Raster(Arc<Raster>),
+    /// A binary PPM on disk. Only the header is read at submission;
+    /// activation streams the payload into the job's strip store.
+    PpmFile(PathBuf),
+    /// A synthetic scene generated strip-by-strip at activation.
+    Synthetic {
+        gen: SyntheticOrtho,
+        height: usize,
+        width: usize,
+    },
+}
+
+impl JobInput {
+    /// Does running this input require streaming ingestion (no resident
+    /// raster to crop from)?
+    pub fn is_streaming(&self) -> bool {
+        !matches!(self, JobInput::Raster(_))
+    }
+
+    /// Open a sequential decoder over this input. For `Raster` the
+    /// cursor serves the resident buffer (back-compat through the same
+    /// ingest path).
+    pub fn open_source(&self) -> Result<Box<dyn RasterSource>> {
+        Ok(match self {
+            JobInput::Raster(img) => Box::new(RasterCursor::new(Arc::clone(img))),
+            JobInput::PpmFile(path) => Box::new(PpmSource::open(path)?),
+            JobInput::Synthetic { gen, height, width } => {
+                Box::new(SyntheticSource::new(gen, *height, *width))
+            }
+        })
+    }
+}
 
 /// One clustering request, self-contained: the service needs nothing
 /// else to run it. Defaults mirror [`crate::coordinator::CoordinatorConfig`].
 #[derive(Clone)]
 pub struct JobSpec {
-    pub image: Arc<Raster>,
+    pub input: JobInput,
+    /// Geometry `(height, width, channels)`, known at submission for
+    /// every input kind (header read for files) so admission and
+    /// validation never touch pixels.
+    dims: (usize, usize, usize),
     pub cluster: ClusterConfig,
     /// The job's resolved execution plan. The block tiling is derived
     /// from `exec.shape` at activation ([`JobSpec::block_plan`]);
@@ -51,8 +98,10 @@ pub struct JobSpec {
 impl JobSpec {
     /// A global-mode, direct-I/O, native-engine job running `exec`.
     pub fn new(image: Arc<Raster>, exec: ExecPlan, cluster: ClusterConfig) -> JobSpec {
+        let dims = (image.height(), image.width(), image.channels());
         JobSpec {
-            image,
+            input: JobInput::Raster(image),
+            dims,
             cluster,
             exec,
             mode: ClusterMode::Global,
@@ -60,6 +109,69 @@ impl JobSpec {
             engine: Engine::Native,
             fail_block: None,
         }
+    }
+
+    /// A job over a PPM file, admitted by path: only the header is read
+    /// here. Defaults to strip I/O (streaming needs it), file-backed
+    /// when the plan says so.
+    pub fn from_ppm(path: &Path, exec: ExecPlan, cluster: ClusterConfig) -> Result<JobSpec> {
+        let dims = ppm_dims(path).with_context(|| format!("admit {}", path.display()))?;
+        Ok(JobSpec {
+            input: JobInput::PpmFile(path.to_path_buf()),
+            dims,
+            cluster,
+            exec,
+            mode: ClusterMode::Global,
+            io: IoMode::Strips {
+                strip_rows: 64,
+                file_backed: exec.file_backed,
+            },
+            engine: Engine::Native,
+            fail_block: None,
+        })
+    }
+
+    /// A job over a synthetic scene generated at activation.
+    pub fn from_synthetic(
+        gen: SyntheticOrtho,
+        height: usize,
+        width: usize,
+        exec: ExecPlan,
+        cluster: ClusterConfig,
+    ) -> JobSpec {
+        let dims = (height, width, gen.channels);
+        JobSpec {
+            input: JobInput::Synthetic { gen, height, width },
+            dims,
+            cluster,
+            exec,
+            mode: ClusterMode::Global,
+            io: IoMode::Strips {
+                strip_rows: 64,
+                file_backed: exec.file_backed,
+            },
+            engine: Engine::Native,
+            fail_block: None,
+        }
+    }
+
+    /// The resident raster, when this job was submitted with one
+    /// (streaming jobs have none until activation decodes them).
+    pub fn raster(&self) -> Option<&Arc<Raster>> {
+        match &self.input {
+            JobInput::Raster(img) => Some(img),
+            _ => None,
+        }
+    }
+
+    /// Geometry `(height, width, channels)` without touching pixels.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        self.dims
+    }
+
+    /// Total pixel count.
+    pub fn pixels(&self) -> usize {
+        self.dims.0 * self.dims.1
     }
 
     pub fn with_mode(mut self, mode: ClusterMode) -> JobSpec {
@@ -115,10 +227,11 @@ impl JobSpec {
     }
 
     /// The block tiling this job runs — derived from the embedded plan
-    /// against the actual image, exactly as the solo coordinator does,
-    /// so identical specs tile identically on both paths.
+    /// against the actual image geometry, exactly as the solo
+    /// coordinator does, so identical specs tile identically on both
+    /// paths.
     pub fn block_plan(&self) -> BlockPlan {
-        self.exec.block_plan(self.image.height(), self.image.width())
+        self.exec.block_plan(self.dims.0, self.dims.1)
     }
 
     /// Reject malformed specs at submission time, before they occupy an
@@ -126,13 +239,23 @@ impl JobSpec {
     pub fn validate(&self) -> Result<()> {
         ensure!(self.cluster.k >= 1, "k must be at least 1");
         ensure!(
-            self.image.pixels() >= self.cluster.k,
+            self.pixels() >= self.cluster.k,
             "cannot init {} clusters from {} pixels",
             self.cluster.k,
-            self.image.pixels()
+            self.pixels()
         );
         if let IoMode::Strips { strip_rows, .. } = self.io {
             ensure!(strip_rows > 0, "strip_rows must be positive");
+        }
+        if self.input.is_streaming() {
+            ensure!(
+                matches!(self.io, IoMode::Strips { .. }),
+                "streaming inputs (path/synthetic) require strip I/O"
+            );
+            ensure!(
+                !matches!(self.cluster.init, InitMethod::PlusPlus),
+                "k-means++ init needs the full image; streaming jobs use RandomSample"
+            );
         }
         Ok(())
     }
@@ -298,6 +421,50 @@ mod tests {
             file_backed: false,
         });
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn ppm_job_is_admitted_by_header_alone() {
+        let img = SyntheticOrtho::default().with_seed(4).generate(24, 18);
+        let dir = std::env::temp_dir().join("blockms_job_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("admit.ppm");
+        crate::image::write_ppm(&img, &path).unwrap();
+        let s = JobSpec::from_ppm(
+            &path,
+            ExecPlan::pinned(BlockShape::Square { side: 8 }),
+            ClusterConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(s.dims(), (24, 18, 3));
+        assert!(s.input.is_streaming());
+        assert!(s.validate().is_ok());
+        assert_eq!(s.block_plan().len(), 9);
+        assert!(s.raster().is_none(), "no pixels resident at admission");
+        // a missing file is a submission-time error, not a worker crash
+        assert!(JobSpec::from_ppm(
+            &dir.join("missing.ppm"),
+            ExecPlan::default(),
+            ClusterConfig::default()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn streaming_spec_rejects_direct_io_and_plusplus() {
+        let gen = SyntheticOrtho::default().with_seed(5);
+        let s = JobSpec::from_synthetic(
+            gen.clone(),
+            16,
+            16,
+            ExecPlan::pinned(BlockShape::Square { side: 8 }),
+            ClusterConfig::default(),
+        );
+        assert!(s.validate().is_ok());
+        assert!(s.clone().with_io(IoMode::Direct).validate().is_err());
+        let mut pp = s;
+        pp.cluster.init = crate::kmeans::InitMethod::PlusPlus;
+        assert!(pp.validate().is_err());
     }
 
     #[test]

@@ -28,5 +28,5 @@ mod job;
 mod server;
 
 pub use admission::{Admission, AdmissionSnapshot};
-pub use job::{JobHandle, JobSpec, JobStatus};
+pub use job::{JobHandle, JobInput, JobSpec, JobStatus};
 pub use server::{ClusterServer, ServerConfig, ServerStats};

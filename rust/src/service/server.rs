@@ -33,11 +33,12 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::admission::{Admission, AdmissionSnapshot};
-use super::job::{HandleShared, JobHandle, JobSpec, JobStatus};
+use super::job::{HandleShared, JobHandle, JobInput, JobSpec, JobStatus};
 use crate::coordinator::{
     BlockSource, ClusterMode, ClusterOutput, IoMode, JobError, JobId, JobOutcome, RunMachine,
     Schedule, WorkerContext, WorkerPool,
 };
+use crate::kmeans::StreamInit;
 use crate::stripstore::{Backing, StripStore};
 
 /// Server construction parameters.
@@ -338,7 +339,7 @@ impl ServingLoop {
 
     fn try_activate(&mut self, new: &NewJob) -> Result<()> {
         let spec = &new.spec;
-        let img = &spec.image;
+        let (_, _, channels) = spec.dims();
         // The tiling derives from the spec's ExecPlan exactly as the
         // solo coordinator derives it — same shape, same image, same
         // plan, hence bit-identical reduction order.
@@ -348,12 +349,19 @@ impl ServingLoop {
         // jobs — even on different servers — never collide on a backing
         // file.
         let mut store_dir = None;
-        let (source, store) = match &spec.io {
-            IoMode::Direct => (BlockSource::Direct(Arc::clone(img)), None),
-            IoMode::Strips {
-                strip_rows,
-                file_backed,
-            } => {
+        let (source, store, init_centroids) = match (&spec.input, &spec.io) {
+            (JobInput::Raster(img), IoMode::Direct) => {
+                // Same init draw as the solo Coordinator and the
+                // sequential baseline — the root of per-job determinism.
+                let init = spec.cluster.init.centroids(
+                    img.as_pixels(),
+                    spec.cluster.k,
+                    channels,
+                    spec.cluster.seed,
+                );
+                (BlockSource::Direct(Arc::clone(img)), None, init)
+            }
+            (JobInput::Raster(img), IoMode::Strips { strip_rows, file_backed }) => {
                 let backing = if *file_backed {
                     let dir = job_store_dir(new.id);
                     store_dir = Some(dir.clone());
@@ -364,31 +372,68 @@ impl ServingLoop {
                 let mut store = StripStore::new(img, *strip_rows, backing)?;
                 store.enable_cache(spec.exec.strip_cache);
                 let store = Arc::new(store);
-                (BlockSource::Strips(Arc::clone(&store)), Some(store))
+                let init = spec.cluster.init.centroids(
+                    img.as_pixels(),
+                    spec.cluster.k,
+                    channels,
+                    spec.cluster.seed,
+                );
+                (BlockSource::Strips(Arc::clone(&store)), Some(store), init)
+            }
+            (input, IoMode::Strips { strip_rows, file_backed }) => {
+                // Streaming admission (path / synthetic): the pixels are
+                // decoded here, strip by strip, straight into the job's
+                // store; the init sampler rides the same single pass and
+                // draws bit-identically to the in-memory init.
+                let backing = if *file_backed || spec.exec.file_backed {
+                    let dir = job_store_dir(new.id);
+                    store_dir = Some(dir.clone());
+                    Backing::File(dir)
+                } else {
+                    Backing::Memory
+                };
+                let mut sampler = StreamInit::new(
+                    &spec.cluster.init,
+                    spec.cluster.k,
+                    channels,
+                    Some(spec.pixels()),
+                    spec.cluster.seed,
+                )?;
+                let mut src = input.open_source()?;
+                let mut store =
+                    StripStore::ingest(src.as_mut(), *strip_rows, backing, |_, strip| {
+                        sampler.feed(strip)
+                    })?;
+                store.enable_cache(spec.exec.strip_cache);
+                let store = Arc::new(store);
+                let init = sampler.finish()?;
+                (BlockSource::Strips(Arc::clone(&store)), Some(store), init)
+            }
+            (_, IoMode::Direct) => {
+                anyhow::bail!("streaming inputs require strip I/O (validate() enforces this)")
             }
         };
         let ctx = Arc::new(WorkerContext {
             plan: Arc::clone(&plan),
             source,
-            backend: spec
-                .engine
-                .backend_spec(spec.cluster.k, img.channels())?,
+            backend: spec.engine.backend_spec(spec.cluster.k, channels)?,
             fail_block: spec.fail_block,
             local_mode: spec.mode == ClusterMode::Local,
             exec: spec.exec,
         });
-        // Same init draw as the solo Coordinator and the sequential
-        // baseline — the root of per-job determinism.
-        let init_centroids =
-            spec.cluster
-                .init
-                .centroids(img.as_pixels(), spec.cluster.k, img.channels(), spec.cluster.seed);
+        // Budgeted jobs spool their label map during the run — the same
+        // rule the planner's resident model assumed at admission. The
+        // terminal `JobStatus::Done(ClusterOutput)` still densifies at
+        // delivery (the client asked for the labels); the budget governs
+        // the run, not the handoff.
+        let label_budget = spec.exec.mem_budget_bytes().map(|_| 0);
         let mut machine = RunMachine::new(
             spec.mode,
             Arc::clone(&plan),
-            img.channels(),
+            channels,
             &spec.cluster,
             init_centroids,
+            label_budget,
         );
         self.pool.register_job(new.id, ctx);
         self.mirror_pool_stats();
@@ -534,17 +579,21 @@ impl ServingLoop {
             self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
             JobStatus::Cancelled
         } else {
-            match aj.machine.into_output() {
-                Ok(m) => {
+            let elapsed = aj.started.elapsed().as_secs_f64();
+            let snapshot = aj.store.map(|s| s.stats().snapshot());
+            match aj.machine.into_output().and_then(|m| {
+                ClusterOutput::from_machine(
+                    m,
+                    elapsed,
+                    0.0, // pool was already warm: no spawn cost
+                    snapshot,
+                    aj.blocks,
+                    self.pool.workers(),
+                )
+            }) {
+                Ok(out) => {
                     self.stats.completed.fetch_add(1, Ordering::Relaxed);
-                    JobStatus::Done(Box::new(ClusterOutput::from_machine(
-                        m,
-                        aj.started.elapsed().as_secs_f64(),
-                        0.0, // pool was already warm: no spawn cost
-                        aj.store.map(|s| s.stats().snapshot()),
-                        aj.blocks,
-                        self.pool.workers(),
-                    )))
+                    JobStatus::Done(Box::new(out))
                 }
                 Err(e) => {
                     self.stats.failed.fetch_add(1, Ordering::Relaxed);
@@ -608,6 +657,76 @@ mod tests {
         bad.cluster.k = 32 * 28 + 1; // more clusters than pixels
         assert!(server.submit(bad).is_err());
         assert_eq!(server.stats().admission.in_flight, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn streamed_synthetic_job_is_bit_identical_to_raster_job() {
+        let gen = SyntheticOrtho::default().with_seed(41);
+        let exec = crate::plan::ExecPlan::pinned(BlockShape::Square { side: 10 });
+        let ccfg = ClusterConfig {
+            k: 2,
+            seed: 41,
+            ..Default::default()
+        };
+        let server = ClusterServer::start(ServerConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        // Raster job over strips (the seed path)…
+        let img = Arc::new(gen.generate(32, 28));
+        let raster_spec = JobSpec::new(Arc::clone(&img), exec, ccfg.clone()).with_io(
+            IoMode::Strips {
+                strip_rows: 8,
+                file_backed: false,
+            },
+        );
+        // …and the same scene admitted as a generator description,
+        // decoded strip-by-strip at activation.
+        let mut stream_spec = JobSpec::from_synthetic(gen, 32, 28, exec, ccfg);
+        stream_spec.io = IoMode::Strips {
+            strip_rows: 8,
+            file_backed: true,
+        };
+        let a = server.submit(raster_spec).unwrap().wait_output().unwrap();
+        let b = server.submit(stream_spec).unwrap().wait_output().unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.iterations, b.iterations);
+        assert!((a.inertia - b.inertia).abs() == 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn streamed_ppm_job_matches_its_raster_twin() {
+        let gen = SyntheticOrtho::default().with_seed(42);
+        let img = gen.generate(30, 22);
+        let dir = std::env::temp_dir().join("blockms_server_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("job.ppm");
+        crate::image::write_ppm(&img, &path).unwrap();
+        // PPM quantizes to u8 — the raster twin is the re-read file,
+        // not the original f32 scene.
+        let twin = Arc::new(crate::image::read_ppm(&path).unwrap());
+        let exec = crate::plan::ExecPlan::pinned(BlockShape::Square { side: 9 });
+        let ccfg = ClusterConfig {
+            k: 2,
+            seed: 7,
+            ..Default::default()
+        };
+        let server = ClusterServer::start(ServerConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let raster_spec = JobSpec::new(twin, exec, ccfg.clone()).with_io(IoMode::Strips {
+            strip_rows: 64,
+            file_backed: false,
+        });
+        let ppm_spec = JobSpec::from_ppm(&path, exec, ccfg).unwrap();
+        let a = server.submit(raster_spec).unwrap().wait_output().unwrap();
+        let b = server.submit(ppm_spec).unwrap().wait_output().unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.centroids, b.centroids);
         server.shutdown();
     }
 

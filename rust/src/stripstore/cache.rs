@@ -70,12 +70,18 @@ impl StripCache {
     }
 
     /// Insert strip `s`, evicting the least-recently-used strips down
-    /// to capacity.
-    pub fn put(&self, s: usize, data: Arc<Vec<f32>>) {
+    /// to capacity. Returns the total f32 count of evicted payloads
+    /// (plus any payload `s` replaced) so the caller can release the
+    /// bytes from its resident accounting.
+    pub fn put(&self, s: usize, data: Arc<Vec<f32>>) -> usize {
         let mut st = self.state.lock().unwrap();
         st.tick += 1;
         let tick = st.tick;
-        st.entries.insert(s, (tick, data));
+        let mut evicted = st
+            .entries
+            .insert(s, (tick, data))
+            .map(|(_, old)| old.len())
+            .unwrap_or(0);
         while st.entries.len() > self.cap {
             let victim = st
                 .entries
@@ -83,8 +89,11 @@ impl StripCache {
                 .min_by_key(|(_, (used, _))| *used)
                 .map(|(&k, _)| k)
                 .expect("non-empty over-capacity cache");
-            st.entries.remove(&victim);
+            if let Some((_, old)) = st.entries.remove(&victim) {
+                evicted += old.len();
+            }
         }
+        evicted
     }
 }
 
@@ -108,14 +117,16 @@ mod tests {
     #[test]
     fn lru_eviction_order() {
         let c = StripCache::new(2);
-        c.put(0, strip(0.0));
-        c.put(1, strip(1.0));
+        assert_eq!(c.put(0, strip(0.0)), 0);
+        assert_eq!(c.put(1, strip(1.0)), 0);
         assert!(c.get(0).is_some()); // 0 now more recent than 1
-        c.put(2, strip(2.0)); // evicts 1
+        assert_eq!(c.put(2, strip(2.0)), 4, "evicting 1 reports its size");
         assert!(c.get(0).is_some());
         assert!(c.get(1).is_none());
         assert!(c.get(2).is_some());
         assert_eq!(c.len(), 2);
+        // replacing an existing entry reports the replaced payload
+        assert_eq!(c.put(2, strip(9.0)), 4);
     }
 
     #[test]

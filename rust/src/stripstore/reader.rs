@@ -30,6 +30,13 @@ pub struct StripReader {
     byte_buf: Vec<u8>,
     /// Where the most recent [`StripReader::load_strip`] left its data.
     current: StripData,
+    /// Bytes of this reader's reusable buffers (strip + raw + the
+    /// caller's block buffer) currently recorded on the shared resident
+    /// gauge; released on drop.
+    tracked_bytes: usize,
+    /// f32 capacity of the caller's block buffer as last seen by
+    /// [`StripReader::read_block`] (the per-worker `px_buf`).
+    out_cap: usize,
 }
 
 enum Source {
@@ -70,11 +77,32 @@ impl StripReader {
             strip_buf: Vec::new(),
             byte_buf: Vec::new(),
             current: StripData::None,
+            tracked_bytes: 0,
+            out_cap: 0,
         })
     }
 
+    /// Re-sync the gauge with this reader's reusable buffer footprint.
+    /// Buffers are reused across reads, so the tracked number changes
+    /// only when a capacity grows (or on drop, when it all releases).
+    fn retrack(&mut self) {
+        let now = self.strip_buf.capacity() * 4 + self.byte_buf.capacity() + self.out_cap * 4;
+        if now != self.tracked_bytes {
+            self.stats
+                .resident()
+                .resize(self.tracked_bytes as u64, now as u64);
+            self.tracked_bytes = now;
+        }
+    }
+
+    /// Raw-transfer chunk for file decodes. Bounding the byte buffer at
+    /// 64 KiB keeps a reader's resident footprint at ~one decoded strip
+    /// instead of two. `CostModel::resident_bytes` references this
+    /// constant so the feasibility model cannot drift from the runtime.
+    pub(crate) const DECODE_CHUNK_BYTES: usize = 1 << 16;
+
     /// Decode a file strip of `samples` f32s at `offset` into `out`
-    /// (reusing `byte_buf` for the raw transfer).
+    /// (reusing `byte_buf` for the bounded raw transfer).
     fn decode_file_strip(
         f: &mut File,
         byte_buf: &mut Vec<u8>,
@@ -83,14 +111,20 @@ impl StripReader {
         samples: usize,
     ) -> Result<()> {
         f.seek(SeekFrom::Start(offset)).context("seek strip")?;
-        byte_buf.resize(samples * 4, 0);
-        f.read_exact(byte_buf).context("read strip")?;
         out.clear();
-        out.extend(
-            byte_buf
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])),
-        );
+        out.reserve(samples);
+        let mut remaining = samples * 4;
+        while remaining > 0 {
+            let take = remaining.min(Self::DECODE_CHUNK_BYTES);
+            byte_buf.resize(take, 0);
+            f.read_exact(byte_buf).context("read strip")?;
+            out.extend(
+                byte_buf
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])),
+            );
+            remaining -= take;
+        }
         Ok(())
     }
 
@@ -102,6 +136,9 @@ impl StripReader {
         assert!(first < self.height, "strip {s} out of range");
         let rows = self.strip_rows.min(self.height - first);
         let samples = rows * self.width * self.channels;
+        // Net change in cache-resident f32s this load caused (inserted
+        // payload minus evicted payloads); settled on the gauge below.
+        let mut cache_delta: i64 = 0;
         match &mut self.source {
             Source::Memory(_) => {
                 // Always zero-copy; the cache (if any) only does the
@@ -130,15 +167,21 @@ impl StripReader {
                     if let Some(data) = cache.get(s) {
                         self.stats.record_cache_hit();
                         self.current = StripData::Cached(data);
-                        return Ok((first, rows));
+                    } else {
+                        let mut decoded = Vec::new();
+                        Self::decode_file_strip(
+                            f,
+                            &mut self.byte_buf,
+                            &mut decoded,
+                            offset,
+                            samples,
+                        )?;
+                        let data = Arc::new(decoded);
+                        cache_delta = data.len() as i64 - cache.put(s, Arc::clone(&data)) as i64;
+                        self.stats.record_cache_miss();
+                        self.stats.record_strip_read(samples * 4);
+                        self.current = StripData::Cached(data);
                     }
-                    let mut decoded = Vec::new();
-                    Self::decode_file_strip(f, &mut self.byte_buf, &mut decoded, offset, samples)?;
-                    let data = Arc::new(decoded);
-                    cache.put(s, Arc::clone(&data));
-                    self.stats.record_cache_miss();
-                    self.stats.record_strip_read(samples * 4);
-                    self.current = StripData::Cached(data);
                 } else {
                     // Reusable private buffer: the uncached hot path
                     // never allocates per strip.
@@ -154,6 +197,12 @@ impl StripReader {
                 }
             }
         }
+        match cache_delta.cmp(&0) {
+            std::cmp::Ordering::Greater => self.stats.resident().add(cache_delta as u64 * 4),
+            std::cmp::Ordering::Less => self.stats.resident().sub((-cache_delta) as u64 * 4),
+            std::cmp::Ordering::Equal => {}
+        }
+        self.retrack();
         Ok((first, rows))
     }
 
@@ -195,8 +244,18 @@ impl StripReader {
                 out.extend_from_slice(&strip[start..start + region.cols() * self.channels]);
             }
         }
+        self.out_cap = out.capacity();
+        self.retrack();
         self.stats.record_block_read();
         Ok(())
+    }
+}
+
+impl Drop for StripReader {
+    fn drop(&mut self) {
+        // Release this reader's reusable-buffer footprint (cache
+        // residency stays: entries outlive any one reader).
+        self.stats.resident().sub(self.tracked_bytes as u64);
     }
 }
 

@@ -3,10 +3,19 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::util::mem::ResidentGauge;
+
 /// Counters shared by every [`super::StripReader`] of a store.
 /// All counters are monotonic; `snapshot()` gives a consistent-enough
 /// view for reporting (exact consistency is not needed — these feed
 /// tables, not control flow).
+///
+/// Besides the monotone I/O counters, the stats carry the store's
+/// [`ResidentGauge`]: every pixel-holding buffer of the pipeline
+/// (ingestion strip, memory-backed store, reader strip/block buffers,
+/// decoded-strip cache entries) records against it, and the high-water
+/// mark lands in [`AccessSnapshot::peak_resident_bytes`] — the audited
+/// side of the `--mem-mb` budget.
 #[derive(Debug, Default)]
 pub struct AccessStats {
     strip_reads: AtomicU64,
@@ -14,6 +23,7 @@ pub struct AccessStats {
     bytes_read: AtomicU64,
     strip_cache_hits: AtomicU64,
     strip_cache_misses: AtomicU64,
+    resident: ResidentGauge,
 }
 
 /// A point-in-time copy of the counters.
@@ -27,6 +37,9 @@ pub struct AccessSnapshot {
     pub strip_cache_hits: u64,
     /// Strip accesses that went to the backing despite the cache.
     pub strip_cache_misses: u64,
+    /// High-water mark of tracked pixel-holding bytes (store + buffers
+    /// + cache). The accounting side of the `--mem-mb` contract.
+    pub peak_resident_bytes: u64,
 }
 
 impl AccessStats {
@@ -51,6 +64,11 @@ impl AccessStats {
         self.strip_cache_misses.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// The shared resident-byte gauge (see [`ResidentGauge`]).
+    pub fn resident(&self) -> &ResidentGauge {
+        &self.resident
+    }
+
     pub fn snapshot(&self) -> AccessSnapshot {
         AccessSnapshot {
             strip_reads: self.strip_reads.load(Ordering::Relaxed),
@@ -58,6 +76,7 @@ impl AccessStats {
             bytes_read: self.bytes_read.load(Ordering::Relaxed),
             strip_cache_hits: self.strip_cache_hits.load(Ordering::Relaxed),
             strip_cache_misses: self.strip_cache_misses.load(Ordering::Relaxed),
+            peak_resident_bytes: self.resident.peak(),
         }
     }
 
@@ -67,6 +86,7 @@ impl AccessStats {
         self.bytes_read.store(0, Ordering::Relaxed);
         self.strip_cache_hits.store(0, Ordering::Relaxed);
         self.strip_cache_misses.store(0, Ordering::Relaxed);
+        self.resident.reset();
     }
 }
 

@@ -4,12 +4,12 @@ use std::io::Write;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use super::cache::StripCache;
 use super::reader::StripReader;
 use super::stats::AccessStats;
-use crate::image::Raster;
+use crate::image::{Raster, RasterSource};
 
 /// Where the strip data lives.
 #[derive(Clone, Debug)]
@@ -41,44 +41,152 @@ pub(super) enum StoreData {
     File { path: PathBuf },
 }
 
+/// Borrowing row cursor so [`StripStore::new`] can reuse the streaming
+/// ingest path without requiring an `Arc` (one write path means the
+/// in-memory and out-of-core builds cannot diverge in strip layout).
+struct BorrowedRaster<'a> {
+    img: &'a Raster,
+    next_row: usize,
+}
+
+impl RasterSource for BorrowedRaster<'_> {
+    fn height(&self) -> usize {
+        self.img.height()
+    }
+
+    fn width(&self) -> usize {
+        self.img.width()
+    }
+
+    fn channels(&self) -> usize {
+        self.img.channels()
+    }
+
+    fn next_strip(&mut self, max_rows: usize, out: &mut Vec<f32>) -> Result<usize> {
+        out.clear();
+        let rows = max_rows.min(self.img.height() - self.next_row);
+        if rows == 0 {
+            return Ok(0);
+        }
+        let per_row = self.img.width() * self.img.channels();
+        let start = self.next_row * per_row;
+        out.extend_from_slice(&self.img.data()[start..start + rows * per_row]);
+        self.next_row += rows;
+        Ok(rows)
+    }
+}
+
 impl StripStore {
-    /// Persist `img` as strips of `strip_rows` rows.
+    /// Persist `img` as strips of `strip_rows` rows. Equivalent to
+    /// [`StripStore::ingest`] over an in-memory cursor — same write
+    /// path, same on-disk layout.
     pub fn new(img: &Raster, strip_rows: usize, backing: Backing) -> Result<StripStore> {
+        StripStore::ingest(
+            &mut BorrowedRaster { img, next_row: 0 },
+            strip_rows,
+            backing,
+            |_, _| {},
+        )
+    }
+
+    /// Build a store by pulling strips sequentially from any
+    /// [`RasterSource`]. With [`Backing::File`] the source's pixels are
+    /// written through a bounded buffer — peak resident pixel bytes of
+    /// ingestion are ~2 strips (decoded f32 + encode bytes) regardless
+    /// of image height; [`Backing::Memory`] necessarily holds the whole
+    /// image (the back-compat mode a `--mem-mb` planner avoids for
+    /// over-budget images). Every buffer is recorded against the
+    /// store's [`crate::util::mem::ResidentGauge`].
+    ///
+    /// `tap(first_row, samples)` observes each decoded strip exactly
+    /// once, in order — the single-pass hook the streaming centroid
+    /// init rides on.
+    pub fn ingest<S>(
+        source: &mut S,
+        strip_rows: usize,
+        backing: Backing,
+        mut tap: impl FnMut(usize, &[f32]),
+    ) -> Result<StripStore>
+    where
+        S: RasterSource + ?Sized,
+    {
         assert!(strip_rows > 0, "strip_rows must be positive");
+        let (height, width, channels) = (source.height(), source.width(), source.channels());
+        assert!(height > 0 && width > 0 && channels > 0, "degenerate source");
         let stats = AccessStats::new_shared();
+        let gauge = stats.resident();
+        let mut strip: Vec<f32> = Vec::new();
+        let mut first_row = 0usize;
         let data = match backing {
-            Backing::Memory => StoreData::Memory(Arc::new(img.data().to_vec())),
+            Backing::Memory => {
+                let mut all: Vec<f32> = Vec::with_capacity(height * width * channels);
+                loop {
+                    let rows = source.next_strip(strip_rows, &mut strip)?;
+                    if rows == 0 {
+                        break;
+                    }
+                    ensure!(
+                        strip.len() == rows * width * channels,
+                        "strip at row {first_row}: {} samples, want {}",
+                        strip.len(),
+                        rows * width * channels
+                    );
+                    let sb = (strip.len() * 4) as u64;
+                    gauge.add(sb); // transient decode buffer
+                    tap(first_row, &strip);
+                    all.extend_from_slice(&strip);
+                    gauge.add(sb); // now resident in the store
+                    gauge.sub(sb); // transient buffer recycled
+                    first_row += rows;
+                }
+                ensure!(
+                    first_row == height,
+                    "source ended at row {first_row} of {height}"
+                );
+                StoreData::Memory(Arc::new(all))
+            }
             Backing::File(dir) => {
                 std::fs::create_dir_all(&dir)
                     .with_context(|| format!("create {}", dir.display()))?;
                 let path = dir.join(format!(
-                    "strips_{}x{}x{}_{}.f32le",
-                    img.height(),
-                    img.width(),
-                    img.channels(),
-                    strip_rows
+                    "strips_{height}x{width}x{channels}_{strip_rows}.f32le"
                 ));
                 let f = std::fs::File::create(&path)
                     .with_context(|| format!("create {}", path.display()))?;
                 let mut w = std::io::BufWriter::new(f);
-                // Raster data is already row-major — strips are contiguous
-                // runs; write the whole buffer in strip-sized chunks so
-                // the on-disk layout *is* the strip layout.
-                for chunk in img
-                    .data()
-                    .chunks(strip_rows * img.width() * img.channels())
-                {
-                    let bytes: Vec<u8> = chunk.iter().flat_map(|v| v.to_le_bytes()).collect();
+                let mut bytes: Vec<u8> = Vec::new();
+                loop {
+                    let rows = source.next_strip(strip_rows, &mut strip)?;
+                    if rows == 0 {
+                        break;
+                    }
+                    ensure!(
+                        strip.len() == rows * width * channels,
+                        "strip at row {first_row}: {} samples, want {}",
+                        strip.len(),
+                        rows * width * channels
+                    );
+                    let sb = (strip.len() * 4) as u64;
+                    gauge.add(2 * sb); // decoded f32 strip + encode bytes
+                    tap(first_row, &strip);
+                    bytes.clear();
+                    bytes.extend(strip.iter().flat_map(|v| v.to_le_bytes()));
                     w.write_all(&bytes)?;
+                    gauge.sub(2 * sb); // both buffers recycled
+                    first_row += rows;
                 }
+                ensure!(
+                    first_row == height,
+                    "source ended at row {first_row} of {height}"
+                );
                 w.flush()?;
                 StoreData::File { path }
             }
         };
         Ok(StripStore {
-            height: img.height(),
-            width: img.width(),
-            channels: img.channels(),
+            height,
+            width,
+            channels,
             strip_rows,
             backing: data,
             stats,
@@ -205,5 +313,62 @@ mod tests {
         let img = SyntheticOrtho::default().generate(10, 6);
         let st = StripStore::new(&img, 4, Backing::Memory).unwrap();
         st.strip_extent(3);
+    }
+
+    #[test]
+    fn ingest_writes_the_same_file_as_new() {
+        // One write path is the claim; this pins it byte-for-byte.
+        let gen = SyntheticOrtho::default().with_seed(6);
+        let img = gen.generate(13, 9);
+        let dir_a = std::env::temp_dir().join("blockms_ingest_a");
+        let dir_b = std::env::temp_dir().join("blockms_ingest_b");
+        let a = StripStore::new(&img, 4, Backing::File(dir_a)).unwrap();
+        let mut src = crate::image::SyntheticSource::new(&gen, 13, 9);
+        let b = StripStore::ingest(&mut src, 4, Backing::File(dir_b), |_, _| {}).unwrap();
+        let bytes_a = std::fs::read(a.file_path().unwrap()).unwrap();
+        let bytes_b = std::fs::read(b.file_path().unwrap()).unwrap();
+        assert_eq!(bytes_a, bytes_b);
+        assert_eq!((b.height(), b.width(), b.channels()), (13, 9, 3));
+    }
+
+    #[test]
+    fn ingest_tap_sees_every_strip_once_in_order() {
+        let gen = SyntheticOrtho::default().with_seed(7);
+        let mut src = crate::image::SyntheticSource::new(&gen, 10, 6);
+        let mut rows_seen = Vec::new();
+        let mut samples = 0usize;
+        let st = StripStore::ingest(&mut src, 4, Backing::Memory, |first_row, strip| {
+            rows_seen.push(first_row);
+            samples += strip.len();
+        })
+        .unwrap();
+        assert_eq!(rows_seen, vec![0, 4, 8]);
+        assert_eq!(samples, 10 * 6 * 3);
+        assert_eq!(st.strips(), 3);
+    }
+
+    #[test]
+    fn file_ingest_peak_resident_is_strip_bounded() {
+        // The out-of-core promise: a tall image ingests file-backed in
+        // ~2 strips of resident pixel bytes, independent of height.
+        let gen = SyntheticOrtho::default().with_seed(8);
+        let (h, w, strip_rows) = (512usize, 8usize, 8usize);
+        let dir = std::env::temp_dir().join("blockms_ingest_peak");
+        let mut src = crate::image::SyntheticSource::new(&gen, h, w);
+        let st = StripStore::ingest(&mut src, strip_rows, Backing::File(dir), |_, _| {}).unwrap();
+        let peak = st.stats().snapshot().peak_resident_bytes;
+        let strip_bytes = (strip_rows * w * 3 * 4) as u64;
+        let image_bytes = (h * w * 3 * 4) as u64;
+        assert!(peak <= 2 * strip_bytes, "peak {peak} > 2 strips {strip_bytes}");
+        assert!(peak < image_bytes / 8, "peak {peak} not height-independent");
+    }
+
+    #[test]
+    fn memory_ingest_accounts_the_whole_image() {
+        let gen = SyntheticOrtho::default().with_seed(9);
+        let mut src = crate::image::SyntheticSource::new(&gen, 16, 8);
+        let st = StripStore::ingest(&mut src, 4, Backing::Memory, |_, _| {}).unwrap();
+        let peak = st.stats().snapshot().peak_resident_bytes;
+        assert!(peak >= (16 * 8 * 3 * 4) as u64, "memory store must show up: {peak}");
     }
 }

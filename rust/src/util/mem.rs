@@ -1,0 +1,133 @@
+//! Resident-byte accounting for the out-of-core pipeline.
+//!
+//! The `--mem-mb` contract is *asserted, not assumed*: every component
+//! that holds pixel-derived bytes (ingestion strip buffers, reader
+//! strip/block buffers, the decoded-strip cache, memory-backed stores,
+//! spill row buffers) records its allocations against one shared
+//! [`ResidentGauge`], and the high-water mark is surfaced through
+//! [`crate::stripstore::AccessSnapshot::peak_resident_bytes`] so tests
+//! can check `peak ≤ budget` instead of trusting the cost model.
+//!
+//! The gauge is advisory accounting, not an allocator: exceeding it
+//! never aborts a run — the planner's feasibility check is what keeps
+//! runs under budget, and the gauge is how that promise is audited.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared current/peak byte counters. All operations are relaxed — the
+/// peak is a reporting number, and the transient interleavings a relaxed
+/// `fetch_max` can miss are bounded by per-thread buffer sizes.
+#[derive(Debug, Default)]
+pub struct ResidentGauge {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl ResidentGauge {
+    pub fn new_shared() -> Arc<ResidentGauge> {
+        Arc::new(ResidentGauge::default())
+    }
+
+    /// Record `bytes` becoming resident.
+    pub fn add(&self, bytes: u64) {
+        let now = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Record `bytes` released (saturating: a mismatched release clamps
+    /// at zero rather than wrapping).
+    pub fn sub(&self, bytes: u64) {
+        let mut cur = self.current.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(bytes);
+            match self.current.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Adjust a tracked buffer from `old` to `new` bytes.
+    pub fn resize(&self, old: u64, new: u64) {
+        if new > old {
+            self.add(new - old);
+        } else {
+            self.sub(old - new);
+        }
+    }
+
+    pub fn current(&self) -> u64 {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.current.store(0, Ordering::Relaxed);
+        self.peak.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let g = ResidentGauge::default();
+        g.add(100);
+        g.add(50);
+        g.sub(120);
+        g.add(10);
+        assert_eq!(g.current(), 40);
+        assert_eq!(g.peak(), 150);
+    }
+
+    #[test]
+    fn sub_saturates_at_zero() {
+        let g = ResidentGauge::default();
+        g.add(10);
+        g.sub(25);
+        assert_eq!(g.current(), 0);
+        assert_eq!(g.peak(), 10);
+    }
+
+    #[test]
+    fn resize_moves_both_ways() {
+        let g = ResidentGauge::default();
+        g.resize(0, 64);
+        assert_eq!(g.current(), 64);
+        g.resize(64, 16);
+        assert_eq!(g.current(), 16);
+        assert_eq!(g.peak(), 64);
+    }
+
+    #[test]
+    fn concurrent_adds_are_exact() {
+        let g = ResidentGauge::new_shared();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let g = std::sync::Arc::clone(&g);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    g.add(3);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.current(), 12_000);
+        assert!(g.peak() >= 3 && g.peak() <= 12_000);
+        g.reset();
+        assert_eq!(g.peak(), 0);
+    }
+}

@@ -13,12 +13,14 @@
 //! - [`config`]  — INI-style run-configuration files
 //! - [`qcheck`]  — miniature property-testing harness with shrinking
 //! - [`fmt`]     — fixed-width table rendering for paper-style output
+//! - [`mem`]     — resident-byte gauge auditing the `--mem-mb` budget
 
 pub mod cli;
 pub mod config;
 pub mod csv;
 pub mod fmt;
 pub mod json;
+pub mod mem;
 pub mod prng;
 pub mod qcheck;
 pub mod stats;

@@ -149,6 +149,28 @@ impl Rng {
         idx.truncate(n);
         idx
     }
+
+    /// [`Rng::sample_indices`] in `O(n)` memory instead of `O(len)`:
+    /// the identity permutation is virtual and only displaced entries
+    /// are stored. Draw-for-draw identical to the dense version (same
+    /// generator calls, same output) — the streaming centroid init uses
+    /// this so a billion-pixel image never allocates a billion-entry
+    /// index table. A tested equivalence.
+    pub fn sample_indices_sparse(&mut self, len: usize, n: usize) -> Vec<usize> {
+        assert!(n <= len, "cannot sample {n} distinct from {len}");
+        let mut displaced: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let j = self.range_usize(i, len);
+            let vi = displaced.get(&i).copied().unwrap_or(i);
+            let vj = displaced.get(&j).copied().unwrap_or(j);
+            // swap positions i and j of the virtual permutation
+            displaced.insert(i, vj);
+            displaced.insert(j, vi);
+            out.push(vj);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -248,5 +270,16 @@ mod tests {
     #[should_panic(expected = "empty range")]
     fn range_usize_rejects_empty() {
         Rng::new(1).range_usize(5, 5);
+    }
+
+    #[test]
+    fn sparse_sampler_is_bit_identical_to_dense() {
+        for seed in 0..25u64 {
+            for (len, n) in [(1usize, 1usize), (10, 3), (50, 10), (1000, 7), (64, 64)] {
+                let dense = Rng::new(seed).sample_indices(len, n);
+                let sparse = Rng::new(seed).sample_indices_sparse(len, n);
+                assert_eq!(dense, sparse, "seed={seed} len={len} n={n}");
+            }
+        }
     }
 }

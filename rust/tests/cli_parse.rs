@@ -298,6 +298,88 @@ fn serve_happy_path_exits_0() {
 }
 
 #[test]
+fn mem_flags_round_trip() {
+    let cli = blockms_cli();
+    let args = cli
+        .parse(vec!["cluster", "--mem-mb", "64", "--file-backed", "--auto"])
+        .unwrap();
+    assert_eq!(args.get_parse::<usize>("mem-mb").unwrap(), 64);
+    assert!(args.flag("file-backed"));
+    assert!(args.provided("mem-mb"));
+    let args = cli
+        .parse(vec!["stream", "--quick", "--out", "BS.json", "--workers", "2"])
+        .unwrap();
+    assert_eq!(args.subcommand(), Some("stream"));
+    assert!(args.flag("quick"));
+}
+
+#[test]
+fn mem_mb_zero_is_a_usage_error() {
+    assert_usage_error(
+        &["cluster", "--mem-mb", "0", "--width", "64", "--height", "64"],
+        "mem-mb",
+    );
+}
+
+#[test]
+fn mem_budget_cluster_streams_within_budget() {
+    // 384x256x3xf32 = 1.125 MiB of pixels against a 1 MiB budget: the
+    // planner must degrade (file backing / strip-row blocks) and the
+    // run must report its audited residency.
+    let out = run(&[
+        "cluster", "--auto", "--mem-mb", "1", "--strip-rows", "16", "--width", "256",
+        "--height", "384", "--k", "2", "--iters", "2",
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("predicted peak resident"), "{stdout}");
+    assert!(stdout.contains("streaming synthetic"), "{stdout}");
+    assert!(stdout.contains("within budget"), "{stdout}");
+    assert!(!stdout.contains("OVER BUDGET"), "{stdout}");
+}
+
+#[test]
+fn mem_budget_dry_run_predicts_without_pixels() {
+    let out = run(&[
+        "cluster", "--auto", "--mem-mb", "1", "--strip-rows", "16", "--width", "256",
+        "--height", "384", "--k", "2", "--dry-run",
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("predicted peak resident"), "{stdout}");
+    assert!(!stdout.contains("streaming"), "dry-run touched pixels: {stdout}");
+}
+
+#[test]
+fn impossible_budget_fails_with_the_shortfall() {
+    // One 64-row strip of a 16384-wide image is 12 MiB by itself: no
+    // candidate fits 1 MiB, and the error must say so (exit 1, not a
+    // thrashing OOM run).
+    let out = run(&[
+        "cluster", "--auto", "--mem-mb", "1", "--width", "16384", "--height", "4096", "--k",
+        "2", "--dry-run",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("no feasible plan"), "{stderr}");
+}
+
+#[test]
+fn stream_quick_writes_json() {
+    let out_path = std::env::temp_dir().join("blockms_cli_test_BENCH_stream.json");
+    let _ = std::fs::remove_file(&out_path);
+    let out = run(&["stream", "--quick", "--out", out_path.to_str().unwrap()]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+    let text = std::fs::read_to_string(&out_path).expect("BENCH_stream.json written");
+    assert!(text.contains("matches_in_memory"), "{text}");
+    assert!(text.contains("peak_resident_bytes"), "{text}");
+    let _ = std::fs::remove_file(&out_path);
+}
+
+#[test]
 fn batch_happy_path_writes_json() {
     let out_path = std::env::temp_dir().join("blockms_cli_test_BENCH_service.json");
     let _ = std::fs::remove_file(&out_path);

@@ -227,6 +227,192 @@ workers = 3
 }
 
 // ---------------------------------------------------------------------------
+// Out-of-core streaming: bit-identity and the resident-byte budget
+// ---------------------------------------------------------------------------
+
+fn label_counts(labels: &[u32], k: usize) -> Vec<u64> {
+    let mut counts = vec![0u64; k];
+    for &l in labels {
+        counts[l as usize] += 1;
+    }
+    counts
+}
+
+/// The tentpole invariant: a `RasterSource`-fed run equals the
+/// `Arc<Raster>` run EXACTLY — labels, centroids, counts, inertia —
+/// across the paper block shapes × kernels × both store backings.
+#[test]
+fn streamed_runs_are_bit_identical_to_in_memory_runs() {
+    use blockms::image::SyntheticSource;
+    use blockms::kmeans::KernelChoice;
+
+    let (h, w, k) = (60usize, 48usize, 3usize);
+    let gen = SyntheticOrtho::default().with_seed(12);
+    let img = scene_from(&gen, h, w);
+    let ccfg = ClusterConfig {
+        k,
+        seed: 5,
+        ..Default::default()
+    };
+    for kind in ApproachKind::ALL {
+        let shape = BlockShape::paper_default(kind, h, w);
+        for kernel in [KernelChoice::Naive, KernelChoice::Pruned, KernelChoice::Lanes] {
+            for file_backed in [false, true] {
+                let exec = ExecPlan::pinned(shape).with_workers(3).with_kernel(kernel);
+                let io = IoMode::Strips {
+                    strip_rows: 8,
+                    file_backed,
+                };
+                let tag = format!("{kind:?}/{kernel}/file={file_backed}");
+                let mem = Coordinator::new(CoordinatorConfig {
+                    exec,
+                    io: io.clone(),
+                    ..Default::default()
+                })
+                .cluster(&img, &ccfg)
+                .unwrap();
+                let coord = Coordinator::new(CoordinatorConfig {
+                    exec,
+                    io,
+                    ..Default::default()
+                });
+                let mut src = SyntheticSource::new(&gen, h, w);
+                let run = coord.cluster_source(&mut src, &ccfg).unwrap();
+                assert_eq!(run.centroids, mem.centroids, "{tag}: centroids");
+                assert_eq!(run.iterations, mem.iterations, "{tag}: iterations");
+                assert_eq!(run.converged, mem.converged, "{tag}: convergence");
+                assert_eq!(
+                    run.inertia.to_bits(),
+                    mem.inertia.to_bits(),
+                    "{tag}: inertia"
+                );
+                assert_eq!(run.inertia_trace, mem.inertia_trace, "{tag}: trace");
+                let streamed_labels = run.labels.into_dense().unwrap();
+                assert_eq!(streamed_labels, mem.labels, "{tag}: labels");
+                assert_eq!(
+                    label_counts(&streamed_labels, k),
+                    label_counts(&mem.labels, k),
+                    "{tag}: counts"
+                );
+            }
+        }
+    }
+}
+
+fn scene_from(gen: &SyntheticOrtho, h: usize, w: usize) -> Arc<Raster> {
+    Arc::new(gen.generate(h, w))
+}
+
+#[test]
+fn streamed_ppm_matches_in_memory_read_of_the_same_file() {
+    let img = scene(40, 36, 13);
+    let dir = std::env::temp_dir().join("blockms_integration_stream");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("scene.ppm");
+    blockms::image::write_ppm(&img, &path).unwrap();
+    let twin = Arc::new(blockms::image::read_ppm(&path).unwrap());
+
+    let exec = ExecPlan::pinned(BlockShape::Square { side: 11 }).with_workers(2);
+    let io = IoMode::Strips {
+        strip_rows: 7,
+        file_backed: true,
+    };
+    let ccfg = ClusterConfig {
+        k: 2,
+        seed: 9,
+        ..Default::default()
+    };
+    let mem = Coordinator::new(CoordinatorConfig {
+        exec,
+        io: io.clone(),
+        ..Default::default()
+    })
+    .cluster(&twin, &ccfg)
+    .unwrap();
+    let mut src = blockms::image::PpmSource::open(&path).unwrap();
+    let run = Coordinator::new(CoordinatorConfig {
+        exec,
+        io,
+        ..Default::default()
+    })
+    .cluster_source(&mut src, &ccfg)
+    .unwrap();
+    assert_eq!(run.labels.into_dense().unwrap(), mem.labels);
+    assert_eq!(run.centroids, mem.centroids);
+}
+
+/// The accounting invariant: a tall image streams under the configured
+/// budget, the peak is audited (not modeled), and it does not grow with
+/// image height.
+#[test]
+fn tall_streamed_image_peak_resident_is_budget_bounded() {
+    use blockms::image::SyntheticSource;
+
+    let run_at = |height: usize| {
+        let gen = SyntheticOrtho::default().with_seed(33);
+        let exec = ExecPlan::pinned(BlockShape::Rows { band_rows: 16 })
+            .with_workers(2)
+            .with_mem_mb(1)
+            .with_file_backing(true);
+        let coord = Coordinator::new(CoordinatorConfig {
+            exec,
+            io: IoMode::Strips {
+                strip_rows: 16,
+                file_backed: true,
+            },
+            ..Default::default()
+        });
+        let ccfg = ClusterConfig {
+            k: 2,
+            fixed_iters: Some(3),
+            seed: 1,
+            ..Default::default()
+        };
+        let mut src = SyntheticSource::new(&gen, height, 32);
+        coord.cluster_source(&mut src, &ccfg).unwrap()
+    };
+
+    let short = run_at(1024);
+    let tall = run_at(4096); // 4x the pixels
+    let budget = 1u64 << 20;
+    for (name, run, height) in [("short", &short, 1024u64), ("tall", &tall, 4096u64)] {
+        let image_bytes = height * 32 * 3 * 4;
+        assert!(
+            run.peak_resident_bytes <= budget,
+            "{name}: peak {} over the 1 MiB budget",
+            run.peak_resident_bytes
+        );
+        assert!(
+            run.peak_resident_bytes < image_bytes / 2,
+            "{name}: peak {} is not out-of-core vs {image_bytes} image bytes",
+            run.peak_resident_bytes
+        );
+        assert!(run.labels.is_spooled(), "{name}: budgeted labels must spool");
+        assert_eq!(run.labels.len(), (height * 32) as usize);
+    }
+    assert!(
+        tall.peak_resident_bytes <= short.peak_resident_bytes,
+        "peak grew with height: {} -> {}",
+        short.peak_resident_bytes,
+        tall.peak_resident_bytes
+    );
+}
+
+#[test]
+fn streamed_direct_io_is_rejected() {
+    use blockms::image::SyntheticSource;
+    let coord = Coordinator::new(CoordinatorConfig {
+        exec: ExecPlan::pinned(BlockShape::Square { side: 8 }),
+        ..Default::default()
+    });
+    let mut src = SyntheticSource::new(&SyntheticOrtho::default(), 16, 16);
+    let err = coord
+        .cluster_source(&mut src, &ClusterConfig::default())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("Strips"), "{err:#}");
+}
+
+// ---------------------------------------------------------------------------
 // PJRT engine integration (skipped when artifacts are absent)
 // ---------------------------------------------------------------------------
 

@@ -47,7 +47,7 @@ fn solo(spec: &JobSpec, workers: usize) -> ClusterOutput {
         schedule: Schedule::Dynamic,
         ..Default::default()
     })
-    .cluster(&spec.image, &spec.cluster)
+    .cluster(spec.raster().expect("test jobs carry rasters"), &spec.cluster)
     .expect("solo run")
 }
 
