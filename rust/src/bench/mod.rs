@@ -8,6 +8,7 @@ pub mod cases;
 pub mod kernels;
 pub mod layout;
 pub mod plan;
+pub mod resilience;
 pub mod runner;
 pub mod service;
 pub mod stream;
@@ -17,6 +18,7 @@ pub mod workloads;
 pub use kernels::{KernelBenchOpts, KernelBenchRow};
 pub use layout::{LayoutBenchOpts, LayoutBenchRow};
 pub use plan::{PlanBenchOpts, PlanBenchRow};
+pub use resilience::{ResilienceBenchOpts, ResilienceBenchRow};
 pub use runner::{ExperimentConfig, ExperimentRow, Runner};
 pub use service::{ServiceBenchOpts, ServiceBenchRow};
 pub use stream::{StreamBenchOpts, StreamBenchRow};

@@ -1,0 +1,434 @@
+//! Resilience-layer benchmark: what fault tolerance costs when nothing
+//! fails, and what recovery costs when something does — with the
+//! machine-readable `BENCH_resilience.json` trail (EXPERIMENTS.md
+//! §Resilience documents the schema).
+//!
+//! For every case geometry the bench runs the same clustering four ways:
+//!
+//! 1. **baseline** — fault-free, zero retries, no checkpoints: the seed
+//!    behaviour, and the reference every other scenario must match
+//!    bitwise;
+//! 2. **retry** — a deterministic single-block fault
+//!    ([`FaultPlan::new`]) under a retry budget: the failed block is
+//!    re-queued and recomputed from the round's shipped centroids, so
+//!    the run completes bit-identically;
+//! 3. **checkpoint** — fault-free with round-boundary checkpoints
+//!    written at a fixed cadence: measures the pure checkpoint-write
+//!    overhead;
+//! 4. **resume** — the run is killed mid-flight (an unhealing fault
+//!    with zero retries) after checkpoints exist, then resumed from the
+//!    last checkpoint: `recovery_secs` is the resumed leg's wall, and
+//!    the stitched result must still match the baseline bitwise.
+//!
+//! Every non-baseline row re-verifies `matches_baseline`
+//! (labels/centroids/inertia/iterations bitwise equal) — the bench is a
+//! measurement and an acceptance test in one.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::{
+    ClusterConfig, ClusterOutput, Coordinator, CoordinatorConfig, Schedule,
+};
+use crate::image::SyntheticOrtho;
+use crate::plan::{ExecPlan, Planner, PlanRequest};
+use crate::resilience::{FaultKind, FaultPlan};
+use crate::util::fmt::Table;
+use crate::util::json::Json;
+
+/// Benchmark shape. Defaults measure a paper-sized 1024² and a 512²
+/// control, k=4, 6 fixed Lloyd rounds, a 1-retry budget, and a
+/// 2-round checkpoint cadence (3 checkpoint writes over 6 rounds).
+#[derive(Clone, Debug)]
+pub struct ResilienceBenchOpts {
+    /// Case geometries `(height, width)`.
+    pub cases: Vec<(usize, usize)>,
+    pub k: usize,
+    /// Fixed Lloyd rounds — must exceed `2 * checkpoint_every` so the
+    /// kill in the resume scenario lands after a checkpoint exists.
+    pub iters: usize,
+    /// Timed repetitions per scenario (best reported; one warmup first).
+    pub samples: usize,
+    pub seed: u64,
+    pub workers: usize,
+    /// Retry budget for the retry scenario (the injected fault fails
+    /// one visit, so any budget ≥ 1 completes).
+    pub retries: usize,
+    /// Checkpoint cadence in rounds for the checkpoint/resume scenarios.
+    pub checkpoint_every: usize,
+}
+
+impl Default for ResilienceBenchOpts {
+    fn default() -> Self {
+        ResilienceBenchOpts {
+            cases: vec![(1024, 1024), (512, 512)],
+            k: 4,
+            iters: 6,
+            samples: 2,
+            seed: 0x4E_51_7E,
+            workers: 4,
+            retries: 1,
+            checkpoint_every: 2,
+        }
+    }
+}
+
+impl ResilienceBenchOpts {
+    /// CI smoke size: small geometries, short runs, one sample — the
+    /// same four scenarios and the same bitwise acceptance checks.
+    pub fn quick() -> ResilienceBenchOpts {
+        ResilienceBenchOpts {
+            cases: vec![(128, 96), (96, 160)],
+            k: 2,
+            iters: 4,
+            samples: 1,
+            checkpoint_every: 1,
+            ..Default::default()
+        }
+    }
+}
+
+/// One benchmark cell (one scenario of one geometry).
+#[derive(Clone, Debug)]
+pub struct ResilienceBenchRow {
+    /// `"baseline"`, `"retry"`, `"checkpoint"`, or `"resume"`.
+    pub scenario: &'static str,
+    pub height: usize,
+    pub width: usize,
+    /// Best-sample wall seconds to a finished result. The resume row
+    /// counts the killed leg *plus* the resumed leg — the honest cost
+    /// of a mid-run death.
+    pub wall_secs: f64,
+    pub ns_per_pixel_round: f64,
+    /// Wall overhead vs the baseline row, percent (0 for baseline).
+    pub overhead_pct: f64,
+    /// Resume only: wall seconds of the resumed leg (checkpoint load →
+    /// finished labels). 0 elsewhere.
+    pub recovery_secs: f64,
+    /// Fault-plan firings observed (0 in fault-free scenarios).
+    pub faults_injected: usize,
+    /// Block re-queues consumed from the retry budget.
+    pub retries_used: usize,
+    /// Labels, centroids, inertia, and iteration count bitwise equal to
+    /// the baseline run (true by definition on the baseline row).
+    pub matches_baseline: bool,
+}
+
+fn identical(a: &ClusterOutput, b: &ClusterOutput) -> bool {
+    a.labels == b.labels
+        && a.centroids == b.centroids
+        && a.inertia.to_bits() == b.inertia.to_bits()
+        && a.iterations == b.iterations
+}
+
+/// A coordinator for one scenario leg. Every leg shares the plan,
+/// schedule, and engine; only the resilience config differs.
+fn coord(
+    exec: ExecPlan,
+    fault: Option<FaultPlan>,
+    checkpoint: Option<PathBuf>,
+    resume: Option<PathBuf>,
+) -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        exec,
+        schedule: Schedule::Static,
+        fault,
+        checkpoint,
+        resume,
+        ..Default::default()
+    })
+}
+
+/// Run the four-scenario matrix.
+pub fn run_resilience_bench(opts: &ResilienceBenchOpts) -> Result<Vec<ResilienceBenchRow>> {
+    ensure!(!opts.cases.is_empty(), "need at least one case geometry");
+    ensure!(opts.retries >= 1, "the retry scenario needs a budget of at least 1");
+    ensure!(
+        opts.checkpoint_every >= 1 && opts.iters > 2 * opts.checkpoint_every,
+        "need iters > 2*checkpoint_every so the resume kill lands after a checkpoint"
+    );
+    let samples = opts.samples.max(1);
+    let mut rows = Vec::new();
+    for &(height, width) in &opts.cases {
+        let gen = SyntheticOrtho::default().with_seed(opts.seed ^ ((height as u64) << 1));
+        let img = Arc::new(gen.generate(height, width));
+        let ccfg = ClusterConfig {
+            k: opts.k,
+            fixed_iters: Some(opts.iters),
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let pixels = (height * width) as f64;
+        let passes = (opts.iters + 1) as f64;
+        let per_round = |wall: f64| wall * 1e9 / (pixels * passes);
+
+        let mut req = PlanRequest::new(height, width, 3, opts.k).with_rounds(opts.iters);
+        req.workers = Some(opts.workers);
+        let (exec, explain) = Planner::default().resolve(&req);
+        let blocks = explain.chosen().blocks;
+        // Fault a middle block: not the one carrying the init, not the
+        // boundary remainder block.
+        let victim = blocks / 2;
+
+        // --- baseline ----------------------------------------------------
+        let mut base_best = f64::INFINITY;
+        let mut base_out = None;
+        for sample in 0..samples + 1 {
+            let c = coord(exec, None, None, None);
+            let t0 = Instant::now();
+            let out = c.cluster(&img, &ccfg)?;
+            let dt = t0.elapsed().as_secs_f64();
+            if sample > 0 {
+                base_best = base_best.min(dt);
+            }
+            base_out = Some(out);
+        }
+        let base_out = base_out.expect("at least one baseline sample ran");
+        rows.push(ResilienceBenchRow {
+            scenario: "baseline",
+            height,
+            width,
+            wall_secs: base_best,
+            ns_per_pixel_round: per_round(base_best),
+            overhead_pct: 0.0,
+            recovery_secs: 0.0,
+            faults_injected: 0,
+            retries_used: 0,
+            matches_baseline: true,
+        });
+        let overhead = |wall: f64| (wall / base_best - 1.0) * 100.0;
+
+        // --- retry: one injected failure, re-queued, bit-identical -------
+        let mut retry_best = f64::INFINITY;
+        let mut retry_out = None;
+        let mut faults = 0;
+        for sample in 0..samples + 1 {
+            let fault = FaultPlan::new(victim, FaultKind::Error, 1);
+            let c = coord(exec.with_retries(opts.retries), Some(fault.clone()), None, None);
+            let t0 = Instant::now();
+            let out = c.cluster(&img, &ccfg)?;
+            let dt = t0.elapsed().as_secs_f64();
+            if sample > 0 {
+                retry_best = retry_best.min(dt);
+            }
+            // trips counts every visit; the window is exactly one wide.
+            faults = fault.trips().min(1);
+            retry_out = Some(out);
+        }
+        let retry_out = retry_out.expect("at least one retry sample ran");
+        rows.push(ResilienceBenchRow {
+            scenario: "retry",
+            height,
+            width,
+            wall_secs: retry_best,
+            ns_per_pixel_round: per_round(retry_best),
+            overhead_pct: overhead(retry_best),
+            recovery_secs: 0.0,
+            faults_injected: faults,
+            retries_used: faults,
+            matches_baseline: identical(&retry_out, &base_out),
+        });
+
+        // --- checkpoint: fault-free, cadence writes ----------------------
+        let ckpt = std::env::temp_dir().join(format!(
+            "blockms_resbench_p{}_{}x{}.ckpt",
+            std::process::id(),
+            width,
+            height
+        ));
+        let mut ck_best = f64::INFINITY;
+        let mut ck_out = None;
+        for sample in 0..samples + 1 {
+            let c = coord(
+                exec.with_checkpoint_every(opts.checkpoint_every),
+                None,
+                Some(ckpt.clone()),
+                None,
+            );
+            let t0 = Instant::now();
+            let out = c.cluster(&img, &ccfg)?;
+            let dt = t0.elapsed().as_secs_f64();
+            if sample > 0 {
+                ck_best = ck_best.min(dt);
+            }
+            ck_out = Some(out);
+        }
+        let ck_out = ck_out.expect("at least one checkpoint sample ran");
+        rows.push(ResilienceBenchRow {
+            scenario: "checkpoint",
+            height,
+            width,
+            wall_secs: ck_best,
+            ns_per_pixel_round: per_round(ck_best),
+            overhead_pct: overhead(ck_best),
+            recovery_secs: 0.0,
+            faults_injected: 0,
+            retries_used: 0,
+            matches_baseline: identical(&ck_out, &base_out),
+        });
+
+        // --- resume: kill after a checkpoint exists, restart from it -----
+        // One shot (the kill/resume pair is stateful through the
+        // checkpoint file); `.after(n)` lets n visits to the victim
+        // succeed first — one visit per round, so the run dies in round
+        // n+1, after n/cadence checkpoints landed.
+        let kill_after = (opts.iters - 1) / opts.checkpoint_every * opts.checkpoint_every;
+        let kill = FaultPlan::always(victim, FaultKind::Error).after(kill_after);
+        let c = coord(
+            exec.with_checkpoint_every(opts.checkpoint_every),
+            Some(kill.clone()),
+            Some(ckpt.clone()),
+            None,
+        );
+        let t0 = Instant::now();
+        let died = c.cluster(&img, &ccfg);
+        let killed_secs = t0.elapsed().as_secs_f64();
+        if died.is_ok() {
+            bail!("{height}x{width}: the kill fault did not kill the run");
+        }
+        let c = coord(exec, None, None, Some(ckpt.clone()));
+        let t0 = Instant::now();
+        let resumed = c.cluster(&img, &ccfg)?;
+        let recovery_secs = t0.elapsed().as_secs_f64();
+        let _ = std::fs::remove_file(&ckpt);
+        let wall = killed_secs + recovery_secs;
+        rows.push(ResilienceBenchRow {
+            scenario: "resume",
+            height,
+            width,
+            wall_secs: wall,
+            ns_per_pixel_round: per_round(wall),
+            overhead_pct: overhead(wall),
+            recovery_secs,
+            faults_injected: 1,
+            retries_used: 0,
+            matches_baseline: identical(&resumed, &base_out),
+        });
+    }
+    Ok(rows)
+}
+
+/// Serialize the matrix as the `BENCH_resilience.json` document.
+pub fn resilience_bench_json(opts: &ResilienceBenchOpts, rows: &[ResilienceBenchRow]) -> String {
+    let num = Json::Num;
+    let mut doc = BTreeMap::new();
+    doc.insert("source".to_string(), Json::Str("rust".to_string()));
+    doc.insert("channels".to_string(), num(3.0));
+    doc.insert("k".to_string(), num(opts.k as f64));
+    doc.insert("iters".to_string(), num(opts.iters as f64));
+    doc.insert("samples".to_string(), num(opts.samples as f64));
+    doc.insert("seed".to_string(), num(opts.seed as f64));
+    doc.insert("workers".to_string(), num(opts.workers as f64));
+    doc.insert("retries".to_string(), num(opts.retries as f64));
+    doc.insert(
+        "checkpoint_every".to_string(),
+        num(opts.checkpoint_every as f64),
+    );
+    let cases = rows
+        .iter()
+        .map(|r| {
+            let mut c = BTreeMap::new();
+            c.insert("scenario".to_string(), Json::Str(r.scenario.to_string()));
+            c.insert("height".to_string(), num(r.height as f64));
+            c.insert("width".to_string(), num(r.width as f64));
+            c.insert("wall_secs".to_string(), num(r.wall_secs));
+            c.insert(
+                "ns_per_pixel_round".to_string(),
+                num(r.ns_per_pixel_round),
+            );
+            c.insert("overhead_pct".to_string(), num(r.overhead_pct));
+            c.insert("recovery_secs".to_string(), num(r.recovery_secs));
+            c.insert("faults_injected".to_string(), num(r.faults_injected as f64));
+            c.insert("retries_used".to_string(), num(r.retries_used as f64));
+            c.insert(
+                "matches_baseline".to_string(),
+                Json::Bool(r.matches_baseline),
+            );
+            Json::Obj(c)
+        })
+        .collect();
+    doc.insert("cases".to_string(), Json::Arr(cases));
+    Json::Obj(doc).to_string()
+}
+
+/// Run the matrix and write `BENCH_resilience.json` to `path`.
+pub fn write_resilience_bench(
+    path: &Path,
+    opts: &ResilienceBenchOpts,
+) -> Result<Vec<ResilienceBenchRow>> {
+    let rows = run_resilience_bench(opts)?;
+    std::fs::write(path, resilience_bench_json(opts, &rows))
+        .with_context(|| format!("write resilience bench to {}", path.display()))?;
+    Ok(rows)
+}
+
+/// Human-readable rendering of the matrix.
+pub fn render_resilience_bench(
+    opts: &ResilienceBenchOpts,
+    rows: &[ResilienceBenchRow],
+) -> String {
+    let mut t = Table::new(format!(
+        "Fault tolerance: overhead and recovery, k={}, {} rounds, {} retries, ckpt/{}r",
+        opts.k, opts.iters, opts.retries, opts.checkpoint_every
+    ))
+    .header(&[
+        "Image", "Scenario", "ns/px/round", "Overhead", "Recovery", "Faults", "Identical",
+    ]);
+    for r in rows {
+        t.row(vec![
+            format!("{}x{}", r.width, r.height),
+            r.scenario.to_string(),
+            format!("{:.2}", r.ns_per_pixel_round),
+            if r.scenario == "baseline" {
+                "-".to_string()
+            } else {
+                format!("{:+.1}%", r.overhead_pct)
+            },
+            if r.recovery_secs > 0.0 {
+                format!("{:.3}s", r.recovery_secs)
+            } else {
+                "-".to_string()
+            },
+            r.faults_injected.to_string(),
+            if r.matches_baseline { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_matrix_recovers_and_matches_bitwise() {
+        let opts = ResilienceBenchOpts {
+            cases: vec![(64, 48)],
+            iters: 3,
+            workers: 2,
+            ..ResilienceBenchOpts::quick()
+        };
+        let rows = run_resilience_bench(&opts).unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(
+                r.matches_baseline,
+                "{} {}x{} diverged from the baseline",
+                r.scenario, r.width, r.height
+            );
+        }
+        let retry = rows.iter().find(|r| r.scenario == "retry").unwrap();
+        assert_eq!(retry.faults_injected, 1, "the retry fault must actually fire");
+        let resume = rows.iter().find(|r| r.scenario == "resume").unwrap();
+        assert!(resume.recovery_secs > 0.0, "resume must time its recovery leg");
+        let json = resilience_bench_json(&opts, &rows);
+        let doc = Json::parse(&json).unwrap();
+        assert_eq!(doc.get("cases").and_then(Json::as_arr).unwrap().len(), 4);
+        let text = render_resilience_bench(&opts, &rows);
+        assert!(text.contains("resume") && text.contains("yes"), "{text}");
+    }
+}

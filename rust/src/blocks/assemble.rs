@@ -144,6 +144,11 @@ impl LabelAssembler {
         self.coverage.fraction()
     }
 
+    /// Pixels placed so far (the label-sink cursor checkpoints record).
+    pub fn written(&self) -> usize {
+        self.coverage.written()
+    }
+
     /// Finish: every pixel must have been written exactly once.
     pub fn finish(self) -> Result<Vec<u32>, AssembleError> {
         self.coverage.finish_check()?;

@@ -64,6 +64,20 @@ impl LabelSink {
         matches!(self, LabelSink::Spill(_))
     }
 
+    /// Pixels placed so far — the spooled-label **cursor** the
+    /// checkpoint format records. Assembly is exactly-once (overlaps
+    /// and duplicates are rejected at claim time), so this count fully
+    /// describes assembly progress at a round boundary: the assign
+    /// round places every block exactly once, and a checkpoint is only
+    /// taken between rounds, where the cursor is 0 (global mode spools
+    /// labels only in the final assign round).
+    pub fn cursor(&self) -> u64 {
+        match self {
+            LabelSink::Memory(asm) => asm.written() as u64,
+            LabelSink::Spill(sp) => sp.written() as u64,
+        }
+    }
+
     /// Place one block's labels (row-major within the region); same
     /// contract as [`LabelAssembler::place`] on both variants.
     pub fn place(&mut self, region: &BlockRegion, labels: &[u32]) -> Result<()> {
@@ -398,6 +412,21 @@ mod tests {
         assert!(map.is_spooled());
         let want: Vec<u32> = (0..63).collect();
         assert_eq!(map.into_dense().unwrap(), want);
+    }
+
+    #[test]
+    fn cursor_tracks_pixels_placed_on_both_variants() {
+        for budget in [None, Some(0)] {
+            let mut sink = LabelSink::new(4, 4, budget).unwrap();
+            assert_eq!(sink.cursor(), 0);
+            sink.place(&BlockRegion::new(0, 0, 2, 2), &[1; 4]).unwrap();
+            assert_eq!(sink.cursor(), 4, "budget={budget:?}");
+            sink.place(&BlockRegion::new(0, 2, 2, 2), &[2; 4]).unwrap();
+            assert_eq!(sink.cursor(), 8);
+            // a rejected placement must not advance the cursor
+            assert!(sink.place(&BlockRegion::new(0, 0, 2, 2), &[3; 4]).is_err());
+            assert_eq!(sink.cursor(), 8, "failed place must not count");
+        }
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub const SUBCOMMANDS: &[&str] = &[
     "stream",
     "batch",
     "serve",
+    "resilience",
     "info",
 ];
 
@@ -71,6 +72,35 @@ pub fn blockms_cli() -> Cli {
         .opt("max-in-flight", Some("4"), "serve: admission cap (backpressure above it)")
         .opt("pools", Some("1,2,4,8"), "batch: comma-separated pool sizes")
         .opt("batches", Some("1,4,16"), "batch: comma-separated batch sizes")
+        .opt(
+            "retries",
+            Some("0"),
+            "per-block retry budget per round (0 = fail fast; retried blocks \
+             recompute bit-identically from the round's centroids)",
+        )
+        .opt(
+            "checkpoint-every",
+            Some("0"),
+            "cluster: write a round-boundary checkpoint every N rounds (0 = never; \
+             needs --checkpoint)",
+        )
+        .opt(
+            "checkpoint",
+            None,
+            "cluster: checkpoint file path (written atomically at the --checkpoint-every cadence)",
+        )
+        .opt(
+            "resume",
+            None,
+            "cluster: resume from this checkpoint; the resumed run is bit-identical \
+             to an uninterrupted one (config fingerprint must match)",
+        )
+        .opt(
+            "fault",
+            None,
+            "inject a deterministic fault for drills: BLOCK[:KIND[:VISITS[:AFTER]]] \
+             with KIND error|panic|reader-io (e.g. 2:panic:1)",
+        )
         .flag("serial", "cluster: also run the sequential baseline and compare")
         .flag("prefetch", "overlap next-block reads with compute (double buffering)")
         .flag(

@@ -28,6 +28,7 @@ use crate::blocks::{BlockPlan, LabelMap, LabelSink};
 use crate::kmeans::kernel::{drift_between, CentroidDrift};
 use crate::kmeans::math::{self, StepAccum};
 use crate::kmeans::KMeansConfig;
+use crate::resilience::{Checkpoint, CheckpointPhase};
 
 /// Which phase a global job is in.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -278,6 +279,78 @@ impl GlobalState {
         Ok(())
     }
 
+    /// Snapshot the round-boundary state as a checkpoint payload.
+    /// Call only between rounds (nothing outstanding, not yet done):
+    /// the per-block completion bitmap is all-ones at a boundary, and
+    /// the label cursor is zero because labels only materialize in the
+    /// final assign round.
+    pub fn snapshot(&self, fingerprint: u64) -> Checkpoint {
+        assert_eq!(self.outstanding, 0, "snapshot mid-round");
+        assert!(!self.done(), "nothing to resume after Done");
+        Checkpoint {
+            fingerprint,
+            iterations: self.iterations as u64,
+            phase: match self.phase {
+                GlobalPhase::Step => CheckpointPhase::Step,
+                GlobalPhase::Assign => CheckpointPhase::Assign,
+                GlobalPhase::Done => unreachable!("guarded above"),
+            },
+            converged: self.converged,
+            centroids: self.centroids.clone(),
+            inertia_trace: self.inertia_trace.clone(),
+            blocks_done: vec![true; self.plan.len()],
+            label_cursor: 0,
+        }
+    }
+
+    /// Rewind a freshly initialized run to a checkpointed boundary.
+    /// The init draw is discarded and the checkpointed centroids,
+    /// round index, convergence state, and inertia trace take over;
+    /// `drift` restarts at `None`, which only makes the first resumed
+    /// round prune nothing — Hamerly bounds are an optimization with
+    /// exact semantics, so every downstream value is bit-identical to
+    /// the uninterrupted run's.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        ensure!(
+            self.outstanding == 0 && self.iterations == 0 && self.rounds.is_empty(),
+            "restore requires a freshly initialized run"
+        );
+        ensure!(
+            ck.centroids.len() == self.k * self.channels,
+            "checkpoint has {} centroid values, this run needs {} (k={} × channels={})",
+            ck.centroids.len(),
+            self.k * self.channels,
+            self.k,
+            self.channels
+        );
+        ensure!(
+            ck.blocks_done.len() == self.plan.len(),
+            "checkpoint covers {} blocks, this plan has {}",
+            ck.blocks_done.len(),
+            self.plan.len()
+        );
+        ensure!(
+            ck.blocks_done.iter().all(|&b| b) && ck.label_cursor == 0,
+            "mid-round checkpoints are not resumable by this build"
+        );
+        ensure!(
+            ck.iterations as usize <= self.max_rounds,
+            "checkpoint at round {} exceeds this run's cap of {}",
+            ck.iterations,
+            self.max_rounds
+        );
+        self.centroids = ck.centroids.clone();
+        self.iterations = ck.iterations as usize;
+        self.converged = ck.converged;
+        self.inertia_trace = ck.inertia_trace.clone();
+        self.drift = None;
+        self.phase = match ck.phase {
+            CheckpointPhase::Step => GlobalPhase::Step,
+            CheckpointPhase::Assign => GlobalPhase::Assign,
+        };
+        Ok(())
+    }
+
     /// Take the finished output. Errors if the run is not done.
     pub fn into_output(self) -> Result<GlobalOutput> {
         ensure!(self.done(), "global run not complete");
@@ -331,6 +404,43 @@ mod tests {
             .enumerate()
             .all(|(i, j)| j.block == i && j.round == 0 && j.job == SOLO_JOB));
         assert_eq!(st.outstanding(), 4);
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_the_boundary_state() {
+        let mut st = state(6, Some(3));
+        // Drive one full step round by hand.
+        let jobs = st.start_round(SOLO_JOB);
+        for j in jobs {
+            let mut accum = StepAccum::zeros(2, 1);
+            accum.counts = vec![3, 1];
+            accum.sums = vec![3.0 * (j.block as f64 + 1.0), 10.0];
+            accum.inertia = 1.5;
+            st.absorb(JobOutcome {
+                job: SOLO_JOB,
+                block: j.block,
+                round: 0,
+                worker: 0,
+                timing: Default::default(),
+                result: JobResult::Step { accum },
+            })
+            .unwrap();
+        }
+        st.finish_round().unwrap();
+        let ck = st.snapshot(42);
+        assert_eq!(ck.iterations, 1);
+        assert_eq!(ck.blocks_done, vec![true; 4]);
+        assert_eq!(ck.label_cursor, 0);
+        // Restore into a fresh machine: centroids/trace/round carried
+        // over exactly, different init draw discarded.
+        let mut fresh = state(6, Some(3));
+        fresh.restore(&ck).unwrap();
+        let ck2 = fresh.snapshot(42);
+        assert_eq!(ck2, ck);
+        // Restore rejects a mismatched geometry cleanly.
+        let mut wrong = state(12, Some(3)); // one block, not four
+        let err = wrong.restore(&ck).unwrap_err().to_string();
+        assert!(err.contains("blocks"), "{err}");
     }
 
     #[test]

@@ -14,6 +14,13 @@
 //! block, outcomes buffered per block as they stream in (any order —
 //! multi-job leaders interleave), harmonization and assembly in block
 //! order at the end, so service runs reduce exactly like solo runs.
+//!
+//! Fault tolerance: local mode participates fully in block **retry** —
+//! each Local job is a pure function of the shipped init centroids, so
+//! a re-queued block recomputes bit-identically on any worker. It does
+//! **not** participate in checkpoint/resume: the whole run is one round,
+//! so there is no boundary to snapshot ([`super::RunMachine::snapshot`]
+//! returns `None` here and resume requests are rejected).
 
 use std::sync::Arc;
 use std::time::Instant;

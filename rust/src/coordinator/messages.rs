@@ -120,7 +120,11 @@ pub enum JobResult {
 }
 
 /// A worker-side failure, tagged with the job it belongs to so a shared
-/// pool can fail one job without tearing down the others.
+/// pool can fail one job without tearing down the others. The failing
+/// worker evicts its own per-(job, block) state (pruned bounds, arena
+/// tile) *before* sending this, so a leader that re-queues the block
+/// under a retry budget gets a from-scratch — and therefore
+/// bit-identical — recomputation from the round's shipped centroids.
 #[derive(Debug)]
 pub struct JobError {
     pub job: JobId,

@@ -47,6 +47,7 @@ use crate::blocks::{BlockPlan, LabelMap};
 use crate::image::{Raster, RasterSource};
 use crate::kmeans::{InitMethod, KMeansConfig, SeqKMeans, StreamInit};
 use crate::plan::ExecPlan;
+use crate::resilience::{fnv1a, Checkpoint, FaultPlan};
 use crate::runtime::BackendSpec;
 use crate::stripstore::{Backing, StripStore};
 
@@ -175,14 +176,27 @@ impl ClusterConfig {
 /// the workers, so [`Schedule::Static`] keeps it warmest.
 #[derive(Clone, Debug, Default)]
 pub struct CoordinatorConfig {
-    /// The resolved execution plan this run follows.
+    /// The resolved execution plan this run follows (including the
+    /// fault-tolerance knobs: [`ExecPlan::retries`] bounds per-block
+    /// re-queues, [`ExecPlan::checkpoint_every`] sets the round cadence
+    /// of checkpoint writes).
     pub exec: ExecPlan,
     pub engine: Engine,
     pub mode: ClusterMode,
     pub io: IoMode,
     pub schedule: Schedule,
-    /// Fault injection for tests: block index whose processing fails.
-    pub fail_block: Option<usize>,
+    /// Deterministic fault injection (tests, the resilience bench, CI
+    /// fault drills): which block fails, how, and on which visits.
+    pub fault: Option<FaultPlan>,
+    /// Where to write round-boundary checkpoints. Only consulted when
+    /// `exec.checkpoint_every > 0`; global mode only (local mode is a
+    /// single round — there is no boundary to checkpoint).
+    pub checkpoint: Option<PathBuf>,
+    /// Resume from this checkpoint instead of round 0. The file's
+    /// fingerprint must match the current run's configuration; the
+    /// resumed run is bit-identical to an uninterrupted one (see
+    /// [`crate::resilience`]).
+    pub resume: Option<PathBuf>,
 }
 
 /// Per-block cost attribution for one round.
@@ -396,6 +410,25 @@ impl RunMachine {
         }
     }
 
+    /// Snapshot the round-boundary state, or `None` when this machine
+    /// cannot be checkpointed (local mode is one round end to end).
+    pub fn snapshot(&self, fingerprint: u64) -> Option<Checkpoint> {
+        match self {
+            RunMachine::Global(g) => Some(g.snapshot(fingerprint)),
+            RunMachine::Local(_) => None,
+        }
+    }
+
+    /// Rewind a freshly built machine to a checkpointed boundary.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        match self {
+            RunMachine::Global(g) => g.restore(ck),
+            RunMachine::Local(_) => {
+                anyhow::bail!("checkpoint/resume requires global mode (local runs are one round)")
+            }
+        }
+    }
+
     pub fn into_output(self) -> Result<MachineOutput> {
         match self {
             RunMachine::Global(g) => {
@@ -424,6 +457,33 @@ impl RunMachine {
             }
         }
     }
+}
+
+/// Stable identity of a run's value-determining configuration: geometry
+/// plus the clustering parameters and mode. Speed-only knobs (workers,
+/// kernel, block shape, schedule, I/O model) are deliberately excluded —
+/// per-round values depend only on the shipped centroids, so a
+/// checkpoint taken under one performance configuration resumes
+/// bit-identically under another. Shared by the solo coordinator and
+/// the service so the two stamp (and verify) identical fingerprints.
+pub fn run_fingerprint(
+    height: usize,
+    width: usize,
+    channels: usize,
+    ccfg: &ClusterConfig,
+    mode: ClusterMode,
+) -> u64 {
+    let canon = format!(
+        "blockms-run-v1|h={height}|w={width}|c={channels}|k={k}|seed={seed}\
+         |tol={tol:08x}|max={max}|fixed={fixed:?}|init={init:?}|mode={mode:?}",
+        k = ccfg.k,
+        seed = ccfg.seed,
+        tol = ccfg.tol.to_bits(),
+        max = ccfg.max_iters,
+        fixed = ccfg.fixed_iters,
+        init = ccfg.init,
+    );
+    fnv1a(canon.as_bytes())
 }
 
 /// Process-wide sequence for solo runs' file-backed strip-store
@@ -458,6 +518,46 @@ impl Coordinator {
     /// and any test asserting on block counts all see the same plan.
     pub fn block_plan(&self, img: &Raster) -> BlockPlan {
         self.cfg.exec.block_plan(img.height(), img.width())
+    }
+
+    /// Drive one machine to completion over a warm pool: optional
+    /// checkpoint resume up front, per-round retry budget from the plan,
+    /// and round-boundary checkpoint writes at the configured cadence.
+    /// Shared by the in-memory and streaming entry points so their
+    /// fault-tolerance behaviour cannot drift.
+    fn drive(&self, machine: &mut RunMachine, pool: &WorkerPool, fingerprint: u64) -> Result<()> {
+        if let Some(path) = &self.cfg.resume {
+            let ck = Checkpoint::load(path)?;
+            anyhow::ensure!(
+                ck.fingerprint == fingerprint,
+                "checkpoint {} was taken by a different run configuration \
+                 (fingerprint {:#018x}, this run {:#018x})",
+                path.display(),
+                ck.fingerprint,
+                fingerprint
+            );
+            machine.restore(&ck)?;
+        }
+        let retries = self.cfg.exec.retries;
+        let every = self.cfg.exec.checkpoint_every;
+        let mut rounds_done = 0usize;
+        while !machine.done() {
+            let jobs = machine.start_round(SOLO_JOB);
+            for outcome in pool.run_round_resilient(jobs, retries)? {
+                machine.absorb(outcome)?;
+            }
+            machine.finish_round()?;
+            rounds_done += 1;
+            if every > 0 && rounds_done % every == 0 && !machine.done() {
+                if let Some(path) = &self.cfg.checkpoint {
+                    if let Some(ck) = machine.snapshot(fingerprint) {
+                        ck.save(path)
+                            .with_context(|| format!("writing checkpoint {}", path.display()))?;
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Cluster `img` using the parallel block pipeline under this
@@ -501,7 +601,7 @@ impl Coordinator {
             plan: Arc::clone(&plan),
             source,
             backend: self.cfg.engine.backend_spec(ccfg.k, img.channels())?,
-            fail_block: self.cfg.fail_block,
+            fault: self.cfg.fault.clone(),
             local_mode: self.cfg.mode == ClusterMode::Local,
             exec: self.cfg.exec,
         });
@@ -517,13 +617,9 @@ impl Coordinator {
             init_centroids,
             None,
         );
-        while !machine.done() {
-            let jobs = machine.start_round(SOLO_JOB);
-            for outcome in pool.run_round(jobs)? {
-                machine.absorb(outcome)?;
-            }
-            machine.finish_round()?;
-        }
+        let fingerprint =
+            run_fingerprint(img.height(), img.width(), img.channels(), ccfg, self.cfg.mode);
+        self.drive(&mut machine, &pool, fingerprint)?;
         pool.shutdown();
         let m = machine.into_output()?;
 
@@ -601,7 +697,7 @@ impl Coordinator {
             plan: Arc::clone(&plan),
             source: BlockSource::Strips(Arc::clone(&store)),
             backend: self.cfg.engine.backend_spec(ccfg.k, channels)?,
-            fail_block: self.cfg.fail_block,
+            fault: self.cfg.fault.clone(),
             local_mode: self.cfg.mode == ClusterMode::Local,
             exec: self.cfg.exec,
         });
@@ -621,13 +717,8 @@ impl Coordinator {
             init_centroids,
             label_budget,
         );
-        while !machine.done() {
-            let jobs = machine.start_round(SOLO_JOB);
-            for outcome in pool.run_round(jobs)? {
-                machine.absorb(outcome)?;
-            }
-            machine.finish_round()?;
-        }
+        let fingerprint = run_fingerprint(height, width, channels, ccfg, self.cfg.mode);
+        self.drive(&mut machine, &pool, fingerprint)?;
         pool.shutdown();
         let m = machine.into_output()?;
         let io_stats = store.stats().snapshot();
@@ -1069,12 +1160,113 @@ mod tests {
     fn failure_injection_surfaces_error() {
         let img = image(30, 30);
         let coord = Coordinator::new(CoordinatorConfig {
-            fail_block: Some(1),
+            fault: Some(FaultPlan::always(1, crate::resilience::FaultKind::Error)),
             ..cfg(square(10), 2)
         });
         let err = coord.cluster(&img, &ClusterConfig::default()).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("injected failure"), "{msg}");
+    }
+
+    #[test]
+    fn transient_fault_recovers_bit_identically_under_retry() {
+        let img = image(48, 40);
+        let ccfg = ClusterConfig {
+            k: 3,
+            ..Default::default()
+        };
+        let clean = Coordinator::new(cfg(square(13), 3))
+            .cluster(&img, &ccfg)
+            .unwrap();
+        // One block fails on its first two visits (both in round one —
+        // retries re-queue immediately), then heals; a per-round budget
+        // of 2 absorbs both.
+        let fault = FaultPlan::new(2, crate::resilience::FaultKind::Error, 2);
+        let out = Coordinator::new(CoordinatorConfig {
+            exec: ExecPlan::pinned(square(13)).with_workers(3).with_retries(2),
+            fault: Some(fault.clone()),
+            ..Default::default()
+        })
+        .cluster(&img, &ccfg)
+        .unwrap();
+        assert!(fault.trips() >= 2, "fault never fired");
+        assert_eq!(out.labels, clean.labels);
+        assert_eq!(out.centroids, clean.centroids);
+        assert_eq!(out.inertia_trace, clean.inertia_trace);
+    }
+
+    #[test]
+    fn checkpoint_then_resume_is_bit_identical() {
+        let img = image(48, 40);
+        let ccfg = ClusterConfig {
+            k: 3,
+            fixed_iters: Some(6),
+            ..Default::default()
+        };
+        let reference = Coordinator::new(cfg(square(13), 3))
+            .cluster(&img, &ccfg)
+            .unwrap();
+
+        let dir = std::env::temp_dir().join(format!(
+            "blockms_ckpt_test_p{}_{}",
+            std::process::id(),
+            SOLO_STORE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = dir.join("run.ckpt");
+
+        // First run checkpoints every 2 rounds, then is killed by an
+        // always-on fault armed after round 4 — the kill/resume drill.
+        let err = Coordinator::new(CoordinatorConfig {
+            exec: ExecPlan::pinned(square(13))
+                .with_workers(3)
+                .with_checkpoint_every(2),
+            checkpoint: Some(ckpt.clone()),
+            // Block 1 is visited once per round, so skip=4 heals the
+            // first four rounds and kills the run on round five.
+            fault: Some(FaultPlan::always(1, crate::resilience::FaultKind::Error).after(4)),
+            ..Default::default()
+        })
+        .cluster(&img, &ccfg)
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("injected failure"));
+        assert!(ckpt.exists(), "no checkpoint written before the crash");
+
+        // Resume from the survivor and finish; outputs must be bitwise
+        // equal to the uninterrupted reference run.
+        let out = Coordinator::new(CoordinatorConfig {
+            exec: ExecPlan::pinned(square(13)).with_workers(3),
+            resume: Some(ckpt.clone()),
+            ..Default::default()
+        })
+        .cluster(&img, &ccfg)
+        .unwrap();
+        assert_eq!(out.labels, reference.labels);
+        assert_eq!(out.centroids, reference.centroids);
+        assert_eq!(out.iterations, reference.iterations);
+        assert_eq!(out.inertia_trace, reference.inertia_trace);
+
+        // A mismatched configuration must refuse the checkpoint.
+        let err = Coordinator::new(CoordinatorConfig {
+            exec: ExecPlan::pinned(square(13)).with_workers(3),
+            resume: Some(ckpt.clone()),
+            ..Default::default()
+        })
+        .cluster(
+            &img,
+            &ClusterConfig {
+                k: 4,
+                ..ccfg.clone()
+            },
+        )
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("different run configuration"),
+            "{err:#}"
+        );
+
+        let _ = std::fs::remove_file(&ckpt);
+        let _ = std::fs::remove_dir(&dir);
     }
 
     #[test]

@@ -9,16 +9,17 @@
 //! the streaming [`WorkerPool::submit`]/[`WorkerPool::recv_result`]
 //! pair to interleave rounds of many jobs at once.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
 use super::messages::{Job, JobError, JobId, JobOutcome, JobPayload};
 use super::queue::{JobQueue, Schedule};
-use super::worker::{worker_main, ContextRegistry, WorkerContext};
+use super::worker::{panic_message, worker_main, ContextRegistry, WorkerContext};
 
 /// A pool of worker threads processing tagged block jobs.
 pub struct WorkerPool {
@@ -30,26 +31,56 @@ pub struct WorkerPool {
     /// High water of simultaneously registered jobs (instrumentation
     /// backing the admission-cap assertions).
     open_high_water: AtomicUsize,
+    /// The last panic that escaped a worker loop (the supervisor
+    /// records it before respawning). When the pool hangs up, this is
+    /// the root cause the leader forwards instead of a bare
+    /// "worker pool hung up".
+    last_panic: Arc<Mutex<Option<String>>>,
 }
 
 impl WorkerPool {
     /// Spawn `workers` threads. Workers build per-job compute backends
     /// lazily from the registered contexts (PJRT clients are per-worker
     /// by necessity — and by design: it is the parpool model).
+    ///
+    /// Each thread runs a **supervisor loop**: `worker_main` already
+    /// converts per-block panics into [`JobError`]s, but if a panic
+    /// ever escapes the loop itself (a bug outside block dispatch),
+    /// the supervisor records the message and re-enters `worker_main`
+    /// with fresh worker-local state — the pool's capacity never
+    /// decays to zero behind the leader's back.
     pub fn spawn(workers: usize, schedule: Schedule) -> WorkerPool {
         assert!(workers > 0, "need at least one worker");
         let queue = Arc::new(JobQueue::new(workers, schedule));
         let registry = Arc::new(ContextRegistry::new());
+        let last_panic: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
         let (tx, rx) = channel();
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let queue = Arc::clone(&queue);
             let registry = Arc::clone(&registry);
+            let last_panic = Arc::clone(&last_panic);
             let tx = tx.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("blockms-worker-{w}"))
-                    .spawn(move || worker_main(w, registry, queue, tx))
+                    .spawn(move || loop {
+                        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || worker_main(w, Arc::clone(&registry), Arc::clone(&queue), tx.clone()),
+                        ));
+                        match caught {
+                            // Clean exit: queue closed or leader gone.
+                            Ok(()) => break,
+                            Err(payload) => {
+                                let msg = panic_message(payload.as_ref());
+                                *last_panic.lock().unwrap() =
+                                    Some(format!("worker {w} panicked: {msg}"));
+                                // Respawn: re-enter the loop with fresh
+                                // worker-local state (engines, bounds,
+                                // tiles all rebuild lazily).
+                            }
+                        }
+                    })
                     .expect("spawn worker thread"),
             );
         }
@@ -60,6 +91,7 @@ impl WorkerPool {
             handles,
             workers,
             open_high_water: AtomicUsize::new(0),
+            last_panic,
         }
     }
 
@@ -108,13 +140,29 @@ impl WorkerPool {
         }
     }
 
+    /// The root cause of a pool hangup, if one was recorded: the last
+    /// panic message that escaped a worker loop.
+    pub fn hangup_cause(&self) -> Option<String> {
+        self.last_panic.lock().unwrap().clone()
+    }
+
+    /// Build the pool-hangup error, attaching the recorded root cause
+    /// (the actual worker panic) when there is one — a bare
+    /// "worker pool hung up" is undiagnosable in a server log.
+    fn hangup_error(&self, when: &str) -> anyhow::Error {
+        match self.hangup_cause() {
+            Some(cause) => anyhow!("worker pool hung up {when}: {cause}"),
+            None => anyhow!("worker pool hung up {when}"),
+        }
+    }
+
     /// Receive the next outcome (any job). The outer `Err` means the
     /// pool itself hung up (all workers gone); the inner [`JobError`]
     /// is a per-job failure that leaves the pool serviceable.
     pub fn recv_result(&self) -> Result<Result<JobOutcome, JobError>> {
         self.results
             .recv()
-            .map_err(|_| anyhow!("worker pool hung up"))
+            .map_err(|_| self.hangup_error("between results"))
     }
 
     /// Execute one round of jobs, blocking until all results arrive.
@@ -124,23 +172,58 @@ impl WorkerPool {
     /// one with jobs in flight — multi-job leaders use
     /// [`WorkerPool::submit`] / [`WorkerPool::recv_result`] instead.
     pub fn run_round(&self, jobs: Vec<Job>) -> Result<Vec<JobOutcome>> {
+        self.run_round_resilient(jobs, 0)
+    }
+
+    /// [`WorkerPool::run_round`] with a per-block retry budget. A
+    /// failed block (worker error or caught panic) is re-enqueued up
+    /// to `retries` times — via [`JobQueue::push_retry`], so placement
+    /// follows the schedule — before the round aborts with the final
+    /// error. The retried attempt recomputes from the same shipped
+    /// centroids and the failing worker has already evicted its state
+    /// for that `(job, block)`, so a recovered round is bit-identical
+    /// to one that never failed (see [`crate::resilience`]).
+    pub fn run_round_resilient(&self, jobs: Vec<Job>, retries: usize) -> Result<Vec<JobOutcome>> {
         let expect = jobs.len();
         if expect == 0 {
             return Ok(Vec::new());
         }
+        // Keep a clone of each block's job for re-enqueue (cheap: the
+        // payload's centroids/drift are behind `Arc`s).
+        let spare: HashMap<usize, Job> = if retries > 0 {
+            jobs.iter().map(|j| (j.block, j.clone())).collect()
+        } else {
+            HashMap::new()
+        };
+        let mut attempts: HashMap<usize, usize> = HashMap::new();
         self.queue.push_round(jobs);
         let mut out = Vec::with_capacity(expect);
-        for _ in 0..expect {
+        while out.len() < expect {
             match self.results.recv() {
                 Ok(Ok(outcome)) => out.push(outcome),
                 // Worker errors carry their own worker/block attribution.
-                Ok(Err(e)) => return Err(e.error),
+                Ok(Err(e)) => {
+                    let used = attempts.entry(e.block).or_insert(0);
+                    if *used < retries {
+                        *used += 1;
+                        let job = spare
+                            .get(&e.block)
+                            .cloned()
+                            .expect("spares kept whenever retries > 0");
+                        self.queue.push_retry(job);
+                    } else if retries == 0 {
+                        return Err(e.error);
+                    } else {
+                        return Err(e.error.context(format!(
+                            "block {} failed {} attempts (retry budget {retries})",
+                            e.block,
+                            *used + 1
+                        )));
+                    }
+                }
                 Err(_) => {
-                    return Err(anyhow!(
-                        "worker pool hung up mid-round ({}/{} results)",
-                        out.len(),
-                        expect
-                    ))
+                    return Err(self
+                        .hangup_error(&format!("mid-round ({}/{expect} results)", out.len())))
                 }
             }
         }
@@ -214,9 +297,10 @@ mod tests {
     use crate::coordinator::worker::BlockSource;
     use crate::image::SyntheticOrtho;
     use crate::kmeans::math;
+    use crate::resilience::{FaultKind, FaultPlan};
     use crate::runtime::BackendSpec;
 
-    fn context(fail_block: Option<usize>) -> (Arc<WorkerContext>, Arc<crate::image::Raster>) {
+    fn context(fault: Option<FaultPlan>) -> (Arc<WorkerContext>, Arc<crate::image::Raster>) {
         let img = Arc::new(SyntheticOrtho::default().with_seed(11).generate(48, 40));
         let plan = Arc::new(BlockPlan::new(48, 40, BlockShape::Square { side: 16 }));
         let ctx = Arc::new(WorkerContext {
@@ -227,7 +311,7 @@ mod tests {
                 channels: 3,
                 local_iters: 4,
             },
-            fail_block,
+            fault,
             local_mode: false,
             exec: crate::plan::ExecPlan::default().with_arena_mb(0),
         });
@@ -290,7 +374,7 @@ mod tests {
 
     #[test]
     fn injected_failure_propagates() {
-        let (ctx, _img) = context(Some(2));
+        let (ctx, _img) = context(Some(FaultPlan::always(2, FaultKind::Error)));
         let nblocks = ctx.plan.len();
         let pool = WorkerPool::spawn(2, Schedule::Dynamic);
         pool.register_job(SOLO_JOB, ctx);
@@ -298,6 +382,112 @@ mod tests {
         let err = pool.run_round(step_jobs(SOLO_JOB, nblocks, &cen)).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("injected failure"), "{msg}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn single_failure_recovers_under_retry_budget() {
+        // Block 2 errors exactly once; with one retry the round must
+        // complete with every block present, and the merged reduction
+        // must equal a clean round's (the retry recomputes from the
+        // same centroids — bit-identical).
+        let fault = FaultPlan::new(2, FaultKind::Error, 1);
+        let (ctx, _img) = context(Some(fault.clone()));
+        let nblocks = ctx.plan.len();
+        let pool = WorkerPool::spawn(2, Schedule::Dynamic);
+        pool.register_job(SOLO_JOB, ctx);
+        let cen = Arc::new(vec![10.0, 10.0, 10.0, 200.0, 200.0, 200.0]);
+        let outcomes = pool
+            .run_round_resilient(step_jobs(SOLO_JOB, nblocks, &cen), 1)
+            .unwrap();
+        assert_eq!(outcomes.len(), nblocks);
+        assert!(fault.trips() >= 2, "block 2 must have been revisited");
+        let blocks: Vec<usize> = outcomes.iter().map(|o| o.block).collect();
+        assert_eq!(blocks, (0..nblocks).collect::<Vec<_>>());
+
+        let (clean_ctx, _img) = context(None);
+        let clean_pool = WorkerPool::spawn(2, Schedule::Dynamic);
+        clean_pool.register_job(SOLO_JOB, clean_ctx);
+        let clean = clean_pool.run_round(step_jobs(SOLO_JOB, nblocks, &cen)).unwrap();
+        for (a, b) in outcomes.iter().zip(&clean) {
+            match (&a.result, &b.result) {
+                (JobResult::Step { accum: x }, JobResult::Step { accum: y }) => {
+                    assert_eq!(x.counts, y.counts);
+                    assert_eq!(x.sums, y.sums, "retried block diverged");
+                    assert_eq!(x.inertia.to_bits(), y.inertia.to_bits());
+                }
+                other => unreachable!("{other:?}"),
+            }
+        }
+        pool.shutdown();
+        clean_pool.shutdown();
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_with_attempt_context() {
+        let (ctx, _img) = context(Some(FaultPlan::always(1, FaultKind::Error)));
+        let nblocks = ctx.plan.len();
+        let pool = WorkerPool::spawn(2, Schedule::Dynamic);
+        pool.register_job(SOLO_JOB, ctx);
+        let cen = Arc::new(vec![0.0; 6]);
+        let err = pool
+            .run_round_resilient(step_jobs(SOLO_JOB, nblocks, &cen), 2)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected failure"), "{msg}");
+        assert!(msg.contains("3 attempts") && msg.contains("retry budget 2"), "{msg}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn injected_panic_is_caught_reported_and_retried() {
+        // The panic is converted to a JobError carrying the panic
+        // message; with a retry budget the round still completes, and
+        // the pool stays serviceable for later rounds (capacity must
+        // not decay).
+        let fault = FaultPlan::new(0, FaultKind::Panic, 1);
+        let (ctx, _img) = context(Some(fault));
+        let nblocks = ctx.plan.len();
+        let pool = WorkerPool::spawn(2, Schedule::Static);
+        pool.register_job(SOLO_JOB, ctx);
+        let cen = Arc::new(vec![10.0, 10.0, 10.0, 200.0, 200.0, 200.0]);
+        let outcomes = pool
+            .run_round_resilient(step_jobs(SOLO_JOB, nblocks, &cen), 1)
+            .unwrap();
+        assert_eq!(outcomes.len(), nblocks);
+        // Pool still fully functional after the panic.
+        for _ in 0..2 {
+            let again = pool.run_round(step_jobs(SOLO_JOB, nblocks, &cen)).unwrap();
+            assert_eq!(again.len(), nblocks);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn injected_panic_without_retries_surfaces_the_message() {
+        let (ctx, _img) = context(Some(FaultPlan::always(1, FaultKind::Panic)));
+        let nblocks = ctx.plan.len();
+        let pool = WorkerPool::spawn(2, Schedule::Dynamic);
+        pool.register_job(SOLO_JOB, ctx);
+        let cen = Arc::new(vec![0.0; 6]);
+        let err = pool.run_round(step_jobs(SOLO_JOB, nblocks, &cen)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("panicked") && msg.contains("injected panic"), "{msg}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn reader_io_fault_recovers_like_any_error() {
+        let fault = FaultPlan::new(3, FaultKind::ReaderIo, 1);
+        let (ctx, _img) = context(Some(fault));
+        let nblocks = ctx.plan.len();
+        let pool = WorkerPool::spawn(3, Schedule::Dynamic);
+        pool.register_job(SOLO_JOB, ctx);
+        let cen = Arc::new(vec![10.0, 10.0, 10.0, 200.0, 200.0, 200.0]);
+        let outcomes = pool
+            .run_round_resilient(step_jobs(SOLO_JOB, nblocks, &cen), 1)
+            .unwrap();
+        assert_eq!(outcomes.len(), nblocks);
         pool.shutdown();
     }
 

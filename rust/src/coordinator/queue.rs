@@ -173,6 +173,27 @@ impl JobQueue {
         }
     }
 
+    /// Re-enqueue one block mid-round (the retry path). Routed the
+    /// same way `push_round` originally placed it so retried work
+    /// obeys the schedule's placement contract: static → the block's
+    /// round-robin owner `block % workers` (behind any control
+    /// messages already queued for it, since workers drain their own
+    /// deque first), dynamic → the job's shared deque.
+    pub fn push_retry(&self, job: Job) {
+        let mut st = self.state.lock().unwrap();
+        assert!(!st.closed, "push after close");
+        match self.schedule {
+            Schedule::Static => {
+                let w = st.per_worker.len();
+                let owner = job.block % w;
+                st.per_worker[owner].push_back(job);
+            }
+            Schedule::Dynamic => st.push_shared(job),
+        }
+        drop(st);
+        self.cond.notify_all();
+    }
+
     /// Enqueue a job for one specific worker (barrier pings, job
     /// retirements), regardless of schedule mode.
     pub fn push_to_worker(&self, worker: usize, job: Job) {
@@ -257,6 +278,21 @@ mod tests {
         q.close();
         assert!(q.pop(0).is_none());
         assert!(q.pop(1).is_none());
+    }
+
+    #[test]
+    fn push_retry_respects_schedule_placement() {
+        // Static: the retried block goes back to its round-robin owner.
+        let q = JobQueue::new(2, Schedule::Static);
+        q.push_round((0..2).map(job).collect());
+        assert_eq!(q.pop(1).unwrap().block, 1);
+        q.push_retry(job(1));
+        assert_eq!(q.pop(1).unwrap().block, 1, "block 1 belongs to worker 1");
+        // Dynamic: back into the job's shared deque, any worker takes it.
+        let q = JobQueue::new(2, Schedule::Dynamic);
+        q.push_retry(tagged(7, 3));
+        let j = q.pop(0).unwrap();
+        assert_eq!((j.job, j.block), (7, 3));
     }
 
     #[test]

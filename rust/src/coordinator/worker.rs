@@ -38,6 +38,7 @@ use crate::image::Raster;
 use crate::kmeans::kernel::{CentroidDrift, KernelChoice, PrunedState};
 use crate::kmeans::tile::{SoaTile, TileArena, TileLayout};
 use crate::plan::ExecPlan;
+use crate::resilience::{FaultKind, FaultPlan};
 use crate::runtime::BackendSpec;
 use crate::stripstore::{StripReader, StripStore};
 
@@ -59,8 +60,9 @@ pub struct WorkerContext {
     pub plan: Arc<BlockPlan>,
     pub source: BlockSource,
     pub backend: BackendSpec,
-    /// Fault injection: processing this block index fails (tests).
-    pub fail_block: Option<usize>,
+    /// Deterministic fault injection: which block fails, how, and on
+    /// which visits (tests, the resilience bench, CI fault drills).
+    pub fault: Option<FaultPlan>,
     /// Hint for backend warmup: will this job use per-block local mode?
     pub local_mode: bool,
     /// The job's resolved execution plan — workers consume the kernel,
@@ -343,10 +345,33 @@ impl JobEngine {
     }
 }
 
+/// Render a panic payload as the human-readable message it carried.
+pub(super) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Worker main loop. Runs on its own thread until the queue closes.
 /// Every job message except [`JobPayload::Retire`] produces exactly one
 /// message on `results` (Ok or Err), so the leader can count responses
 /// without tracking worker liveness.
+///
+/// Fault containment: each dispatch runs under [`std::panic::catch_unwind`],
+/// so a panicking block (a bug in a kernel, a poisoned tile, an injected
+/// [`FaultKind::Panic`]) is reported as a [`JobError`] carrying the panic
+/// message instead of silently killing the thread and hanging the round.
+/// On *any* per-block failure the worker evicts its own state for that
+/// `(job, block)` — the Hamerly bounds and arena tile may have been
+/// half-mutated when the failure struck, and a retry must re-seed from
+/// scratch exactly like a first visit (that re-seed is bit-identical;
+/// see [`crate::resilience`]). A panic additionally drops the whole
+/// job's engine on this worker: its backend/reader state is not
+/// trustworthy mid-unwind, and rebuilding it is side-effect free.
 pub fn worker_main(
     worker_id: usize,
     registry: Arc<ContextRegistry>,
@@ -364,21 +389,51 @@ pub fn worker_main(
             arena.purge_job(job.job);
             continue;
         }
-        let outcome = dispatch_job(
-            worker_id,
-            &registry,
-            &mut engines,
-            &job,
-            &mut px_buf,
-            &mut prune,
-            &mut arena,
-            &queue,
-        );
-        let outcome = outcome.map_err(|error| JobError {
-            job: job.job,
-            block: job.block,
-            error,
-        });
+        // AssertUnwindSafe is sound here: everything the closure mutates
+        // is either discarded on panic (the job's engine, its pruning
+        // entries, its arena tiles — evicted below) or overwritten from
+        // scratch on the next use (`px_buf`).
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            dispatch_job(
+                worker_id,
+                &registry,
+                &mut engines,
+                &job,
+                &mut px_buf,
+                &mut prune,
+                &mut arena,
+                &queue,
+            )
+        }));
+        let outcome = match caught {
+            Ok(Ok(outcome)) => Ok(outcome),
+            Ok(Err(error)) => {
+                // Recoverable failure: evict this worker's possibly
+                // half-mutated state for the failed block so a retry
+                // recomputes from the shipped centroids alone.
+                prune.remove(&(job.job, job.block));
+                arena.remove((job.job, job.block));
+                Err(JobError {
+                    job: job.job,
+                    block: job.block,
+                    error,
+                })
+            }
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                engines.remove(&job.job);
+                prune.retain(|(j, _), _| *j != job.job);
+                arena.purge_job(job.job);
+                Err(JobError {
+                    job: job.job,
+                    block: job.block,
+                    error: anyhow!(
+                        "worker {worker_id} panicked on block {}: {msg}",
+                        job.block
+                    ),
+                })
+            }
+        };
         // If the leader hung up, exit quietly.
         if results.send(outcome).is_err() {
             return;
@@ -452,11 +507,27 @@ fn run_job(
             result: JobResult::Pong,
         });
     }
-    if ctx.fail_block == Some(job.block) {
-        return Err(anyhow!(
-            "injected failure on block {} (worker {worker_id})",
-            job.block
-        ));
+    if let Some(fault) = &ctx.fault {
+        if fault.fires(job.block) {
+            match fault.kind() {
+                FaultKind::Error => {
+                    return Err(anyhow!(
+                        "injected failure on block {} (worker {worker_id})",
+                        job.block
+                    ));
+                }
+                FaultKind::Panic => {
+                    panic!("injected panic on block {} (worker {worker_id})", job.block);
+                }
+                FaultKind::ReaderIo => {
+                    return Err(anyhow::Error::new(std::io::Error::new(
+                        std::io::ErrorKind::Other,
+                        format!("injected I/O error reading block {}", job.block),
+                    ))
+                    .context(format!("worker {worker_id}: read block {}", job.block)));
+                }
+            }
+        }
     }
 
     // --- acquire block pixels ---------------------------------------------
@@ -626,7 +697,7 @@ mod tests {
                 channels: 3,
                 local_iters: 4,
             },
-            fail_block: None,
+            fault: None,
             local_mode: false,
             exec: ExecPlan::default().with_arena_mb(0),
         });
@@ -651,7 +722,7 @@ mod tests {
                 channels: 3,
                 local_iters: 1,
             },
-            fail_block: None,
+            fault: None,
             local_mode: false,
             exec: ExecPlan::default().with_arena_mb(0).with_prefetch(true),
         };

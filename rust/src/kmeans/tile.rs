@@ -356,6 +356,20 @@ impl TileArena {
             .map(|(k, _)| *k)
     }
 
+    /// Drop one tile if resident (the worker-side failure-eviction
+    /// path: a retried block must re-read and re-deinterleave rather
+    /// than trust a tile that may have been mid-insert when its block
+    /// failed). Returns whether a tile was actually dropped.
+    pub fn remove(&mut self, key: (u64, usize)) -> bool {
+        match self.tiles.remove(&key) {
+            Some((_, t)) => {
+                self.bytes -= t.bytes();
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Drop every tile of `job` (the worker-side `Retire` path).
     pub fn purge_job(&mut self, job: u64) {
         let mut freed = 0usize;

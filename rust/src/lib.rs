@@ -29,6 +29,7 @@ pub mod image;
 pub mod kmeans;
 pub mod metrics;
 pub mod plan;
+pub mod resilience;
 pub mod runtime;
 pub mod service;
 pub mod simtime;
@@ -48,6 +49,7 @@ pub mod prelude {
     };
     pub use crate::metrics::{RunTimer, Speedup};
     pub use crate::plan::{CostModel, ExecPlan, Explain, Planner, PlanRequest};
+    pub use crate::resilience::{Checkpoint, FaultKind, FaultPlan};
     pub use crate::service::{
         ClusterServer, JobHandle, JobInput, JobSpec, JobStatus, ServerConfig,
     };

@@ -19,7 +19,18 @@
 //!                   (`--input` benches a real PPM);
 //! - `serve`         drive N jobs through one persistent shared pool
 //!                   (`--mem-mb` admits jobs by path and streams them);
+//! - `resilience`    fault-tolerance overhead bench: baseline vs retry vs
+//!                   checkpoint vs kill/resume -> BENCH_resilience.json
+//!                   (`--quick` for the CI smoke size);
 //! - `info`          show artifact/manifest status and environment.
+//!
+//! Fault tolerance rides on `cluster`: `--retries N` re-queues a failed
+//! block up to N times per round (bit-identical — a re-queued block is a
+//! pure function of the round's centroids), `--checkpoint F
+//! --checkpoint-every R` writes an atomic round-boundary checkpoint every
+//! R rounds, and `--resume F` continues a killed run bit-identically.
+//! `--fault BLOCK[:KIND[:VISITS[:AFTER]]]` injects a deterministic fault
+//! for drills.
 //!
 //! `cluster --mem-mb N` runs the whole pipeline out-of-core: pixels
 //! stream from the source (PPM file or synthetic generator) into a
@@ -32,7 +43,7 @@
 //! Exit codes: 0 success, 1 runtime failure, 2 usage error (unknown
 //! flag/subcommand or bad value; the message names the flag).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -52,6 +63,7 @@ use blockms::image::{
 };
 use blockms::kmeans::tile::TileLayout;
 use blockms::plan::{ExecPlan, Explain, Planner, PlanRequest};
+use blockms::resilience::{FaultKind, FaultPlan};
 use blockms::runtime::{find_artifacts_dir, ArtifactSet};
 use blockms::service::{ClusterServer, JobSpec, ServerConfig};
 use blockms::util::cli::{Args, CliError};
@@ -83,6 +95,7 @@ fn main() {
         "stream" => cmd_stream(&args),
         "batch" => cmd_batch(&args),
         "serve" => cmd_serve(&args),
+        "resilience" => cmd_resilience(&args),
         "info" => cmd_info(),
         other => Err(anyhow::Error::new(CliError::UnknownSubcommand(
             other.to_string(),
@@ -250,7 +263,60 @@ fn plan_request(
     } else {
         Some(false)
     };
+    // Fault-tolerance knobs are carried-through, never search axes
+    // (retries change availability, not values) — so they ride on every
+    // candidate regardless of --auto. Defaults are 0 = off.
+    req = req
+        .with_retries(opts.parse("retries", "run.retries")?)
+        .with_checkpoint_every(opts.parse("checkpoint-every", "run.checkpoint_every")?);
     Ok(req)
+}
+
+/// Parse `--fault BLOCK[:KIND[:VISITS[:AFTER]]]` into a [`FaultPlan`]:
+/// block index, fault kind (`error` default), how many visits fail
+/// (`1` default, `always` never heals), and how many visits succeed
+/// first (`0` default — with one visit per round, `AFTER` is the round
+/// the run dies in). Examples: `2`, `2:panic`, `0:error:always`,
+/// `1:reader-io:1:4`. A malformed spec is a usage error (exit 2).
+fn fault_of(opts: &Opts) -> Result<Option<FaultPlan>> {
+    let raw = match opts.get("fault", "run.fault") {
+        Some(raw) => raw,
+        None => return Ok(None),
+    };
+    let bad = |why: String| {
+        anyhow::Error::new(CliError::BadValue("fault".to_string(), raw.clone(), why))
+    };
+    let parts: Vec<&str> = raw.split(':').collect();
+    if parts.len() > 4 {
+        return Err(bad("too many fields (want BLOCK[:KIND[:VISITS[:AFTER]]])".to_string()));
+    }
+    let block: usize = parts[0]
+        .parse()
+        .map_err(|_| bad("block must be a non-negative integer".to_string()))?;
+    let kind: FaultKind = match parts.get(1) {
+        Some(s) => s.parse().map_err(bad)?,
+        None => FaultKind::Error,
+    };
+    let visits: usize = match parts.get(2) {
+        Some(&"always") => usize::MAX,
+        Some(s) => {
+            let v = s
+                .parse()
+                .map_err(|_| bad("visits must be an integer or 'always'".to_string()))?;
+            if v == 0 {
+                return Err(bad("visits must be at least 1".to_string()));
+            }
+            v
+        }
+        None => 1,
+    };
+    let skip: usize = match parts.get(3) {
+        Some(s) => s
+            .parse()
+            .map_err(|_| bad("after must be a non-negative integer".to_string()))?,
+        None => 0,
+    };
+    Ok(Some(FaultPlan::new(block, kind, visits).after(skip)))
 }
 
 /// Shared resolve step: request → (plan, explain), printed consistently.
@@ -300,6 +366,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             );
         }
     }
+    if exec.checkpoint_every > 0 && opts.get("checkpoint", "run.checkpoint").is_none() {
+        // A cadence with nowhere to write is a usage mistake, not a
+        // silently-ignored knob.
+        return Err(anyhow::Error::new(CliError::MissingRequired(
+            "checkpoint".to_string(),
+        )));
+    }
     if args.flag("dry-run") {
         return Ok(());
     }
@@ -334,7 +407,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         mode: opts.require::<ClusterMode>("mode", "run.mode")?,
         io: io_of(&opts, args)?,
         schedule: opts.require::<Schedule>("schedule", "run.schedule")?,
-        fail_block: None,
+        fault: fault_of(&opts)?,
+        checkpoint: opts.get("checkpoint", "run.checkpoint").map(PathBuf::from),
+        resume: opts.get("resume", "run.resume").map(PathBuf::from),
     });
     let ccfg = ClusterConfig {
         k: positive(opts.require("k", "cluster.k")?, "k")?,
@@ -445,7 +520,9 @@ fn stream_cluster(
             file_backed: exec.file_backed,
         },
         schedule: opts.require::<Schedule>("schedule", "run.schedule")?,
-        fail_block: None,
+        fault: fault_of(opts)?,
+        checkpoint: opts.get("checkpoint", "run.checkpoint").map(PathBuf::from),
+        resume: opts.get("resume", "run.resume").map(PathBuf::from),
     });
     let ccfg = ClusterConfig {
         k: positive(opts.require("k", "cluster.k")?, "k")?,
@@ -905,6 +982,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_in_flight
     );
     server.shutdown();
+    Ok(())
+}
+
+/// Resilience-layer benchmark: fault-free baseline vs retry vs
+/// checkpoint vs kill/resume overhead and recovery latency, written to
+/// `BENCH_resilience.json` (see EXPERIMENTS.md §Resilience for the
+/// schema). `--quick` runs the CI smoke size.
+fn cmd_resilience(args: &Args) -> Result<()> {
+    use blockms::bench::resilience::{
+        render_resilience_bench, write_resilience_bench, ResilienceBenchOpts,
+    };
+    let opts = Opts::load(args)?;
+    let base = if args.flag("quick") {
+        ResilienceBenchOpts::quick()
+    } else {
+        ResilienceBenchOpts::default()
+    };
+    let bopts = ResilienceBenchOpts {
+        seed: opts.require("seed", "workload.seed")?,
+        workers: positive(opts.require("workers", "run.workers")?, "workers")?,
+        // The CLI default --retries 0 would make the retry scenario
+        // vacuous; only a typed flag (or config key) overrides the
+        // bench's own budget.
+        retries: match opts.pinned::<usize>("retries", "run.retries")? {
+            Some(r) => positive(r, "retries")?,
+            None => base.retries,
+        },
+        ..base
+    };
+    let out = args.get("out").unwrap_or("BENCH_resilience.json").to_string();
+    let rows = write_resilience_bench(Path::new(&out), &bopts)?;
+    print!("{}", render_resilience_bench(&bopts, &rows));
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -80,6 +80,15 @@ pub struct ExecPlan {
     /// re-decodes for an image-height-independent resident footprint.
     /// Meaningful only under strip I/O.
     pub file_backed: bool,
+    /// Per-block retry budget per round (0 = fail fast, the seed
+    /// behaviour). Like `mem_mb`, a carried-through knob rather than a
+    /// planner axis: retries never change values (a re-queued block is
+    /// a pure function of the shipped centroids), only availability.
+    pub retries: usize,
+    /// Write a round-boundary checkpoint every N rounds (0 = never).
+    /// The destination path rides on the coordinator/service config;
+    /// this is the cadence the plan commits to.
+    pub checkpoint_every: usize,
 }
 
 impl Default for ExecPlan {
@@ -106,6 +115,8 @@ impl ExecPlan {
             strip_cache: 0,
             mem_mb: 0,
             file_backed: false,
+            retries: 0,
+            checkpoint_every: 0,
         }
     }
 
@@ -160,6 +171,18 @@ impl ExecPlan {
         self
     }
 
+    /// Pin the per-block retry budget per round (0 = fail fast).
+    pub fn with_retries(mut self, retries: usize) -> ExecPlan {
+        self.retries = retries;
+        self
+    }
+
+    /// Pin the checkpoint cadence in rounds (0 = never checkpoint).
+    pub fn with_checkpoint_every(mut self, rounds: usize) -> ExecPlan {
+        self.checkpoint_every = rounds;
+        self
+    }
+
     /// Per-worker arena budget in bytes.
     pub fn arena_bytes(&self) -> usize {
         self.arena_mb << 20
@@ -201,6 +224,12 @@ impl ExecPlan {
         if self.mem_mb > 0 {
             s.push_str(&format!(" · mem {}MiB", self.mem_mb));
         }
+        if self.retries > 0 {
+            s.push_str(&format!(" · retries {}", self.retries));
+        }
+        if self.checkpoint_every > 0 {
+            s.push_str(&format!(" · ckpt/{}r", self.checkpoint_every));
+        }
         s
     }
 }
@@ -233,6 +262,12 @@ pub struct PlanRequest {
     /// choose (memory when it fits, file when it must), and defaults to
     /// memory otherwise (the pre-streaming behaviour).
     pub file_backed: Option<bool>,
+    /// Per-block retry budget to carry onto the plan (`None` = 0).
+    /// Like `mem_mb` this is not a search axis — every candidate gets
+    /// the same value.
+    pub retries: Option<usize>,
+    /// Checkpoint cadence in rounds to carry onto the plan (`None` = 0).
+    pub checkpoint_every: Option<usize>,
 }
 
 impl PlanRequest {
@@ -272,6 +307,8 @@ impl PlanRequest {
         self.strip_cache = Some(plan.strip_cache);
         self.mem_mb = (plan.mem_mb > 0).then_some(plan.mem_mb);
         self.file_backed = Some(plan.file_backed);
+        self.retries = (plan.retries > 0).then_some(plan.retries);
+        self.checkpoint_every = (plan.checkpoint_every > 0).then_some(plan.checkpoint_every);
         self
     }
 
@@ -289,6 +326,18 @@ impl PlanRequest {
     /// bytes (`None` = unbounded).
     pub fn with_mem_mb(mut self, mem_mb: Option<usize>) -> PlanRequest {
         self.mem_mb = mem_mb.filter(|&m| m > 0);
+        self
+    }
+
+    /// Carry a per-block retry budget onto every candidate plan.
+    pub fn with_retries(mut self, retries: Option<usize>) -> PlanRequest {
+        self.retries = retries.filter(|&r| r > 0);
+        self
+    }
+
+    /// Carry a checkpoint cadence (rounds) onto every candidate plan.
+    pub fn with_checkpoint_every(mut self, rounds: Option<usize>) -> PlanRequest {
+        self.checkpoint_every = rounds.filter(|&r| r > 0);
         self
     }
 
@@ -438,6 +487,8 @@ impl Planner {
                                         strip_cache,
                                         mem_mb: req.mem_mb.unwrap_or(0),
                                         file_backed,
+                                        retries: req.retries.unwrap_or(0),
+                                        checkpoint_every: req.checkpoint_every.unwrap_or(0),
                                     },
                                     blocks: plan.len(),
                                     grid: plan.grid_dims(),
@@ -668,6 +719,25 @@ mod tests {
             assert!(explain.chosen().resident_bytes <= c.resident_bytes);
         }
         assert_eq!(plan, explain.chosen().plan);
+    }
+
+    #[test]
+    fn resilience_knobs_ride_through_without_widening_the_search() {
+        let planner = Planner::default();
+        let r = req().with_retries(Some(2)).with_checkpoint_every(Some(5));
+        let (plan, explain) = planner.resolve(&r);
+        assert_eq!(plan.retries, 2);
+        assert_eq!(plan.checkpoint_every, 5);
+        // carried-through, not an axis: same grid as the plain request
+        assert_eq!(explain.candidates.len(), Planner::default().resolve(&req()).1.candidates.len());
+        assert!(explain
+            .candidates
+            .iter()
+            .all(|c| c.plan.retries == 2 && c.plan.checkpoint_every == 5));
+        // and pin_all round-trips them
+        let rt = req().pin_all(&plan);
+        let (again, _) = planner.resolve(&rt);
+        assert_eq!(again, plan);
     }
 
     #[test]

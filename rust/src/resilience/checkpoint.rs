@@ -1,0 +1,333 @@
+//! Versioned, checksummed, atomically-renamed run checkpoints.
+//!
+//! A checkpoint captures the round-boundary state of a global-mode
+//! run: the current centroids, how many Lloyd rounds have been
+//! absorbed, which phase comes next (another step round or the final
+//! assign pass), the convergence trace, the per-block completion
+//! bitmap, and the spooled-label cursor. Everything downstream of the
+//! centroids (labels, counts, inertia) is recomputed on resume, which
+//! is why resumed runs are bit-identical: per-block work is a pure
+//! function of the shipped centroids.
+//!
+//! ## File format (version 1, all little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic "BMSCKPT\0"
+//! 8       4     version (u32) = 1
+//! 12      8     fingerprint (u64) — FNV-1a of the run configuration
+//! 20      8     iterations (u64) — step rounds absorbed so far
+//! 28      1     phase (u8): 0 = next round is a step, 1 = final assign
+//! 29      1     converged (u8 bool)
+//! 30      8     centroid f32 count (u64), then that many f32s
+//! ..      8     inertia-trace f64 count (u64), then that many f64s
+//! ..      8     block count (u64), then ceil(n/8) bitmap bytes
+//! ..      8     spooled-label cursor (u64, pixels already assembled)
+//! ..      8     checksum (u64) — FNV-1a of every preceding byte
+//! ```
+//!
+//! Writes go to a `.tmp` sibling and are published with `fs::rename`,
+//! so a crash mid-write can never corrupt the previous checkpoint.
+//! Loads reject bad magic, unknown versions, truncation, checksum
+//! mismatches, and (at resume time, via the caller's fingerprint
+//! comparison) checkpoints from a different run configuration — each
+//! with a clean, specific error.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Leading magic bytes of every checkpoint file.
+pub const CKPT_MAGIC: [u8; 8] = *b"BMSCKPT\0";
+/// Current format version.
+pub const CKPT_VERSION: u32 = 1;
+
+/// Which kind of round the resumed machine runs next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CheckpointPhase {
+    /// More Lloyd step rounds to go.
+    Step,
+    /// Centroids are final; only the label-assign pass remains.
+    Assign,
+}
+
+/// A round-boundary snapshot of a global-mode run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// FNV-1a digest of the run configuration (geometry, k, seed,
+    /// tolerance, round caps, plan shape, kernel, mode). Resume
+    /// refuses a checkpoint whose fingerprint disagrees with the
+    /// current run's — silently mixing configurations could not stay
+    /// bit-identical.
+    pub fingerprint: u64,
+    /// Step rounds absorbed (the machine's `iterations`).
+    pub iterations: u64,
+    /// What the next round is.
+    pub phase: CheckpointPhase,
+    /// Whether the centroid update declared convergence.
+    pub converged: bool,
+    /// Current centroids, row-major `k * channels`, exact f32 bits.
+    pub centroids: Vec<f32>,
+    /// Per-round inertia trace so far, exact f64 bits.
+    pub inertia_trace: Vec<f64>,
+    /// Per-block completion bitmap for the in-progress round. At a
+    /// round boundary every block is complete; kept in the format so
+    /// a future mid-round checkpoint is a version bump, not a rewrite.
+    pub blocks_done: Vec<bool>,
+    /// Pixels already assembled into the (possibly spooled) label
+    /// sink. Zero at every pre-assign boundary.
+    pub label_cursor: u64,
+}
+
+/// FNV-1a 64-bit digest (the checksum and fingerprint hash).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!(
+                "truncated checkpoint: wanted {} bytes at offset {}, file has {}",
+                n,
+                self.pos,
+                self.bytes.len()
+            );
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+impl Checkpoint {
+    /// Serialize to the version-1 byte layout (checksum included).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(64 + self.centroids.len() * 4);
+        buf.extend_from_slice(&CKPT_MAGIC);
+        buf.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        push_u64(&mut buf, self.fingerprint);
+        push_u64(&mut buf, self.iterations);
+        buf.push(match self.phase {
+            CheckpointPhase::Step => 0,
+            CheckpointPhase::Assign => 1,
+        });
+        buf.push(self.converged as u8);
+        push_u64(&mut buf, self.centroids.len() as u64);
+        for &c in &self.centroids {
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+        push_u64(&mut buf, self.inertia_trace.len() as u64);
+        for &v in &self.inertia_trace {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        push_u64(&mut buf, self.blocks_done.len() as u64);
+        let mut bitmap = vec![0u8; self.blocks_done.len().div_ceil(8)];
+        for (i, &done) in self.blocks_done.iter().enumerate() {
+            if done {
+                bitmap[i / 8] |= 1 << (i % 8);
+            }
+        }
+        buf.extend_from_slice(&bitmap);
+        push_u64(&mut buf, self.label_cursor);
+        let sum = fnv1a(&buf);
+        push_u64(&mut buf, sum);
+        buf
+    }
+
+    /// Parse and verify a checkpoint from bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut c = Cursor { bytes, pos: 0 };
+        let magic = c.take(8).context("not a blockms checkpoint (too short)")?;
+        if magic != CKPT_MAGIC {
+            bail!("not a blockms checkpoint (bad magic)");
+        }
+        let version = c.u32()?;
+        if version != CKPT_VERSION {
+            bail!("unsupported checkpoint version {version} (this build reads version {CKPT_VERSION})");
+        }
+        // Checksum covers everything up to the final 8 bytes; verify
+        // before trusting any length field.
+        if bytes.len() < 8 {
+            bail!("truncated checkpoint: no checksum");
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        if fnv1a(body) != stored {
+            bail!("corrupted checkpoint: checksum mismatch");
+        }
+        let fingerprint = c.u64()?;
+        let iterations = c.u64()?;
+        let phase = match c.u8()? {
+            0 => CheckpointPhase::Step,
+            1 => CheckpointPhase::Assign,
+            other => bail!("corrupted checkpoint: unknown phase tag {other}"),
+        };
+        let converged = c.u8()? != 0;
+        let n_centroids = c.u64()? as usize;
+        let mut centroids = Vec::with_capacity(n_centroids);
+        for _ in 0..n_centroids {
+            centroids.push(f32::from_le_bytes(c.take(4)?.try_into().unwrap()));
+        }
+        let n_trace = c.u64()? as usize;
+        let mut inertia_trace = Vec::with_capacity(n_trace);
+        for _ in 0..n_trace {
+            inertia_trace.push(f64::from_le_bytes(c.take(8)?.try_into().unwrap()));
+        }
+        let n_blocks = c.u64()? as usize;
+        let bitmap = c.take(n_blocks.div_ceil(8))?;
+        let blocks_done = (0..n_blocks)
+            .map(|i| bitmap[i / 8] >> (i % 8) & 1 == 1)
+            .collect();
+        let label_cursor = c.u64()?;
+        Ok(Checkpoint {
+            fingerprint,
+            iterations,
+            phase,
+            converged,
+            centroids,
+            inertia_trace,
+            blocks_done,
+            label_cursor,
+        })
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename over
+    /// `path`. A crash mid-write leaves the previous checkpoint (or
+    /// nothing) — never a half-written file under the published name.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, self.to_bytes())
+            .with_context(|| format!("write checkpoint to {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publish checkpoint at {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load and verify a checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read checkpoint {}", path.display()))?;
+        Checkpoint::from_bytes(&bytes)
+            .with_context(|| format!("load checkpoint {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            fingerprint: 0xdead_beef_cafe_f00d,
+            iterations: 7,
+            phase: CheckpointPhase::Step,
+            converged: false,
+            centroids: vec![0.25, -1.5, 3.75e-3, f32::MIN_POSITIVE, 255.0, 0.0],
+            inertia_trace: vec![1234.5678, 987.654_321, 42.0],
+            blocks_done: vec![true, true, false, true, false, false, true, true, true],
+            label_cursor: 65_536,
+        }
+    }
+
+    #[test]
+    fn byte_round_trip_is_exact() {
+        let ck = sample();
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back, ck);
+        for (a, b) in ck.centroids.iter().zip(&back.centroids) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in ck.inertia_trace.iter().zip(&back.inertia_trace) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn file_round_trip_and_atomic_overwrite() {
+        let dir = std::env::temp_dir().join(format!("blockms_ckpt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let mut later = ck.clone();
+        later.iterations = 9;
+        later.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().iterations, 9);
+        assert!(
+            !path.with_extension("ckpt.tmp").exists()
+                && !dir.join("run.ckpt.tmp").exists(),
+            "temp file must not outlive the rename"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_truncation_and_corruption() {
+        let good = sample().to_bytes();
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        let err = Checkpoint::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+
+        let mut bad = good.clone();
+        bad[8] = 99; // version field
+        let err = format!("{:#}", Checkpoint::from_bytes(&bad).unwrap_err());
+        assert!(err.contains("version"), "{err}");
+
+        let err = format!(
+            "{:#}",
+            Checkpoint::from_bytes(&good[..good.len() - 11]).unwrap_err()
+        );
+        assert!(
+            err.contains("truncated") || err.contains("checksum"),
+            "{err}"
+        );
+
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40; // flip one payload bit
+        let err = format!("{:#}", Checkpoint::from_bytes(&bad).unwrap_err());
+        assert!(err.contains("checksum"), "{err}");
+
+        let err = format!("{:#}", Checkpoint::from_bytes(b"short").unwrap_err());
+        assert!(err.contains("not a blockms checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -1,0 +1,162 @@
+//! Deterministic fault injection for the worker pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// What happens when the fault fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The block computation returns an `Err` (a recoverable job
+    /// failure, like a bad decode or a poisoned tile).
+    Error,
+    /// The worker thread panics mid-block. The pool's supervisor
+    /// converts the panic into a `JobError` and restarts the worker
+    /// loop, so capacity does not decay.
+    Panic,
+    /// The block read fails with an I/O error before any compute runs
+    /// (a flaky disk / NFS hiccup on the strip store).
+    ReaderIo,
+}
+
+impl FaultKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Error => "error",
+            FaultKind::Panic => "panic",
+            FaultKind::ReaderIo => "reader-io",
+        }
+    }
+}
+
+impl std::str::FromStr for FaultKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Ok(FaultKind::Error),
+            "panic" => Ok(FaultKind::Panic),
+            "reader-io" | "readerio" | "io" => Ok(FaultKind::ReaderIo),
+            other => Err(format!(
+                "unknown fault kind {other:?} (want error|panic|reader-io)"
+            )),
+        }
+    }
+}
+
+/// A deterministic fault schedule for one block.
+///
+/// The plan counts *visits* to its block (across all workers and
+/// retries — clones share the counter) and fires on the visit window
+/// `skip .. skip + visits`:
+///
+/// - `FaultPlan::new(b, kind, 1)` — the classic retry scenario: the
+///   first visit to block `b` fails, every re-queue succeeds.
+/// - `.always()` — every visit fails; with zero retries the run must
+///   fail loudly (the old `fail_block` hook's behaviour).
+/// - `.after(r)` — succeed for the first `r` visits, then fail; with
+///   one visit per round this kills a run *after* round `r`, which is
+///   how the kill/resume tests die mid-run with checkpoints on disk.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    block: usize,
+    kind: FaultKind,
+    /// Successful visits before the fault window opens.
+    skip: usize,
+    /// Width of the fault window (`usize::MAX` = never heals).
+    visits: usize,
+    /// Visits observed so far, shared across clones: the contexts a
+    /// plan is threaded through (coordinator config, worker contexts,
+    /// job specs) must agree on the count.
+    counter: Arc<AtomicUsize>,
+}
+
+impl FaultPlan {
+    /// Fail the first `visits` visits to `block` with `kind`, succeed
+    /// afterwards.
+    pub fn new(block: usize, kind: FaultKind, visits: usize) -> FaultPlan {
+        FaultPlan {
+            block,
+            kind,
+            skip: 0,
+            visits,
+            counter: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Fail *every* visit to `block` (never heals).
+    pub fn always(block: usize, kind: FaultKind) -> FaultPlan {
+        FaultPlan::new(block, kind, usize::MAX)
+    }
+
+    /// Let the first `skip` visits succeed before the window opens.
+    pub fn after(mut self, skip: usize) -> FaultPlan {
+        self.skip = skip;
+        self
+    }
+
+    /// The targeted block index.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// What the fault does when it fires.
+    pub fn kind(&self) -> FaultKind {
+        self.kind
+    }
+
+    /// Record a visit to `block`; true iff the fault fires this visit.
+    ///
+    /// Visits to other blocks are not counted and never fire.
+    pub fn fires(&self, block: usize) -> bool {
+        if block != self.block {
+            return false;
+        }
+        let n = self.counter.fetch_add(1, Ordering::SeqCst);
+        n >= self.skip && n - self.skip < self.visits
+    }
+
+    /// Visits recorded so far (tests assert the fault actually fired).
+    pub fn trips(&self) -> usize {
+        self.counter.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_only_inside_the_visit_window() {
+        let f = FaultPlan::new(3, FaultKind::Error, 2).after(1);
+        assert!(!f.fires(0), "other blocks never fire");
+        assert!(!f.fires(3), "visit 0 is skipped");
+        assert!(f.fires(3), "visit 1 opens the window");
+        assert!(f.fires(3), "visit 2 still inside");
+        assert!(!f.fires(3), "window closed, block healed");
+        assert_eq!(f.trips(), 4);
+    }
+
+    #[test]
+    fn clones_share_the_visit_counter() {
+        let f = FaultPlan::new(0, FaultKind::Panic, 1);
+        let g = f.clone();
+        assert!(g.fires(0), "first visit (via the clone) fires");
+        assert!(!f.fires(0), "the original sees the clone's visit");
+        assert_eq!(f.trips(), 2);
+    }
+
+    #[test]
+    fn always_never_heals() {
+        let f = FaultPlan::always(1, FaultKind::ReaderIo);
+        for _ in 0..100 {
+            assert!(f.fires(1));
+        }
+    }
+
+    #[test]
+    fn kind_round_trips_from_str() {
+        for kind in [FaultKind::Error, FaultKind::Panic, FaultKind::ReaderIo] {
+            assert_eq!(kind.label().parse::<FaultKind>().unwrap(), kind);
+        }
+        assert!("bogus".parse::<FaultKind>().is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! Fault-tolerant execution: deterministic fault injection, versioned
+//! checkpoints, and the retry/resume policy knobs.
+//!
+//! The paper's target workload is >1000×1000 orthoimagery clustered
+//! block-by-block on legacy hardware — the regime where a multi-hour
+//! streamed run dying on one bad block, one crashed worker, or one
+//! power cut is unacceptable. This module provides the two primitives
+//! the coordinator, pool, and service layers build recovery on:
+//!
+//! - [`FaultPlan`] — a deterministic injector that makes a chosen block
+//!   fail in a chosen way ([`FaultKind::Error`], [`FaultKind::Panic`],
+//!   [`FaultKind::ReaderIo`]) on a chosen window of visits. It
+//!   generalizes the old `fail_block` test hook: instead of "block N
+//!   always errors", a plan says "block N's visits `skip..skip+visits`
+//!   fail, the rest succeed", which is exactly what retry tests need
+//!   (fail once, succeed on the re-queue) and what kill/resume tests
+//!   need (succeed for R rounds, then die every time).
+//!
+//! - [`Checkpoint`] — a versioned, checksummed, atomically-renamed
+//!   snapshot of the global round state (centroids, round index,
+//!   per-block completion bitmap, spooled-label cursor, convergence
+//!   trace). A run resumed from a checkpoint produces labels,
+//!   centroids, counts, and inertia **bit-identical** to an
+//!   uninterrupted run, because per-block assign/step is a pure
+//!   function of the shipped centroids and Hamerly pruning is exact:
+//!   resuming with no drift history only disables pruning for one
+//!   round, it never changes a value.
+//!
+//! Retry bit-identity rests on the same argument: a re-queued block
+//! recomputes from the same shipped centroids, and the failing
+//! worker's possibly half-mutated Hamerly bounds and arena tile for
+//! that `(job, block)` are evicted before the retry, so the re-run
+//! re-seeds from scratch exactly like a first visit after migration.
+
+mod checkpoint;
+mod fault;
+
+pub use checkpoint::{fnv1a, Checkpoint, CheckpointPhase, CKPT_MAGIC, CKPT_VERSION};
+pub use fault::{FaultKind, FaultPlan};

@@ -33,6 +33,7 @@ use crate::kmeans::kernel::KernelChoice;
 use crate::kmeans::tile::TileLayout;
 use crate::kmeans::InitMethod;
 use crate::plan::ExecPlan;
+use crate::resilience::FaultPlan;
 
 /// Where a job's pixels come from. Admission never requires the pixels
 /// — a path or a generator description is enough; streaming inputs are
@@ -91,8 +92,14 @@ pub struct JobSpec {
     pub mode: ClusterMode,
     pub io: IoMode,
     pub engine: Engine,
-    /// Fault injection for tests: this block index fails.
-    pub fail_block: Option<usize>,
+    /// Deterministic fault injection (tests, fault drills): which block
+    /// fails, how, and on which visits. Retry budget rides on
+    /// [`ExecPlan::retries`].
+    pub fault: Option<FaultPlan>,
+    /// Resume this job from a checkpoint file written by an earlier run
+    /// of the same configuration (global mode). Loaded at activation;
+    /// a fingerprint or format mismatch fails the job at that point.
+    pub resume: Option<PathBuf>,
 }
 
 impl JobSpec {
@@ -107,7 +114,8 @@ impl JobSpec {
             mode: ClusterMode::Global,
             io: IoMode::Direct,
             engine: Engine::Native,
-            fail_block: None,
+            fault: None,
+            resume: None,
         }
     }
 
@@ -127,7 +135,8 @@ impl JobSpec {
                 file_backed: exec.file_backed,
             },
             engine: Engine::Native,
-            fail_block: None,
+            fault: None,
+            resume: None,
         })
     }
 
@@ -151,7 +160,8 @@ impl JobSpec {
                 file_backed: exec.file_backed,
             },
             engine: Engine::Native,
-            fail_block: None,
+            fault: None,
+            resume: None,
         }
     }
 
@@ -223,6 +233,19 @@ impl JobSpec {
 
     pub fn with_strip_cache(mut self, strips: usize) -> JobSpec {
         self.exec = self.exec.with_strip_cache(strips);
+        self
+    }
+
+    /// Inject a deterministic fault into this job's blocks.
+    pub fn with_fault(mut self, fault: FaultPlan) -> JobSpec {
+        self.fault = Some(fault);
+        self
+    }
+
+    /// Resume from a checkpoint written by an earlier run of the same
+    /// configuration.
+    pub fn with_resume(mut self, path: PathBuf) -> JobSpec {
+        self.resume = Some(path);
         self
     }
 

@@ -35,10 +35,11 @@ use anyhow::{Context, Result};
 use super::admission::{Admission, AdmissionSnapshot};
 use super::job::{HandleShared, JobHandle, JobInput, JobSpec, JobStatus};
 use crate::coordinator::{
-    BlockSource, ClusterMode, ClusterOutput, IoMode, JobError, JobId, JobOutcome, RunMachine,
-    Schedule, WorkerContext, WorkerPool,
+    run_fingerprint, BlockSource, ClusterMode, ClusterOutput, IoMode, Job, JobError, JobId,
+    JobOutcome, RunMachine, Schedule, WorkerContext, WorkerPool,
 };
 use crate::kmeans::StreamInit;
+use crate::resilience::Checkpoint;
 use crate::stripstore::{Backing, StripStore};
 
 /// Server construction parameters.
@@ -230,6 +231,14 @@ struct ActiveJob {
     blocks: usize,
     cancelling: bool,
     failed: Option<String>,
+    /// Per-block retry budget per round ([`crate::plan::ExecPlan::retries`]).
+    retries: usize,
+    /// Spare clones of the in-flight round's jobs, by block — the
+    /// re-queue source when a block fails under a retry budget. Empty
+    /// when `retries == 0` (no spare bookkeeping on the fast path).
+    round_jobs: HashMap<usize, Job>,
+    /// Retry attempts consumed per block this round.
+    attempts: HashMap<usize, usize>,
 }
 
 struct ServingLoop {
@@ -277,14 +286,29 @@ impl ServingLoop {
                 }
             }
             self.check_cancels();
+            self.sweep_store_dirs();
             if self.active.is_empty() {
                 if !accepting {
                     break; // shut down: nothing in flight, no new work
                 }
-                // Idle: block until a job arrives or the server closes.
-                match rx.recv() {
-                    Ok(new) => self.activate(new),
-                    Err(_) => accepting = false,
+                if self.cleanup_dirs.is_empty() {
+                    // Idle: block until a job arrives or the server closes.
+                    match rx.recv() {
+                        Ok(new) => self.activate(new),
+                        Err(_) => accepting = false,
+                    }
+                } else {
+                    // Idle but retired jobs' store directories are still
+                    // pending removal (workers drop their store handles
+                    // moments after processing Retire). Poll briefly so
+                    // a long-lived server releases the disk now instead
+                    // of holding it until shutdown.
+                    use std::sync::mpsc::RecvTimeoutError;
+                    match rx.recv_timeout(std::time::Duration::from_millis(20)) {
+                        Ok(new) => self.activate(new),
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => accepting = false,
+                    }
                 }
                 continue;
             }
@@ -292,11 +316,17 @@ impl ServingLoop {
                 Ok(Ok(outcome)) => self.on_outcome(outcome),
                 Ok(Err(jerr)) => self.on_error(jerr),
                 Err(_) => {
-                    // Pool gone (all workers dead): fail whatever is left.
+                    // Pool gone (all workers dead): fail whatever is
+                    // left, forwarding the recorded root cause (the last
+                    // escaped worker panic) instead of a generic notice.
+                    let msg = match self.pool.hangup_cause() {
+                        Some(cause) => format!("worker pool hung up: {cause}"),
+                        None => "worker pool hung up".to_string(),
+                    };
                     let ids: Vec<JobId> = self.active.keys().copied().collect();
                     for id in ids {
                         if let Some(aj) = self.active.get_mut(&id) {
-                            aj.failed = Some("worker pool hung up".to_string());
+                            aj.failed = Some(msg.clone());
                         }
                         self.finalize(id);
                     }
@@ -417,7 +447,7 @@ impl ServingLoop {
             plan: Arc::clone(&plan),
             source,
             backend: spec.engine.backend_spec(spec.cluster.k, channels)?,
-            fail_block: spec.fail_block,
+            fault: spec.fault.clone(),
             local_mode: spec.mode == ClusterMode::Local,
             exec: spec.exec,
         });
@@ -435,10 +465,34 @@ impl ServingLoop {
             init_centroids,
             label_budget,
         );
+        // Service-side resume: rewind the freshly built machine to the
+        // checkpointed round boundary before the first round launches.
+        // The resumed job is bit-identical to an uninterrupted one (the
+        // same contract the solo coordinator's `--resume` keeps).
+        if let Some(path) = &spec.resume {
+            let ck = Checkpoint::load(path)?;
+            let (h, w, _) = spec.dims();
+            let fp = run_fingerprint(h, w, channels, &spec.cluster, spec.mode);
+            anyhow::ensure!(
+                ck.fingerprint == fp,
+                "checkpoint {} was taken by a different run configuration \
+                 (fingerprint {:#018x}, this job {:#018x})",
+                path.display(),
+                ck.fingerprint,
+                fp
+            );
+            machine.restore(&ck)?;
+        }
         self.pool.register_job(new.id, ctx);
         self.mirror_pool_stats();
         let jobs = machine.start_round(new.id);
         let expected = jobs.len();
+        let retries = spec.exec.retries;
+        let round_jobs = if retries > 0 {
+            jobs.iter().map(|j| (j.block, j.clone())).collect()
+        } else {
+            HashMap::new()
+        };
         self.pool.submit(jobs);
         new.handle.set_status(JobStatus::Running);
         self.active.insert(
@@ -453,6 +507,9 @@ impl ServingLoop {
                 blocks: plan.len(),
                 cancelling: false,
                 failed: None,
+                retries,
+                round_jobs,
+                attempts: HashMap::new(),
             },
         );
         Ok(())
@@ -516,12 +573,39 @@ impl ServingLoop {
 
     fn on_error(&mut self, jerr: JobError) {
         let id = jerr.job;
-        let msg = jerr.to_string();
         let Some(aj) = self.active.get_mut(&id) else {
             return;
         };
+        // Retry path: re-queue the round's spare clone of the failed
+        // block. `expected` is untouched — the fresh attempt owes one
+        // more message. The failing worker already evicted its stale
+        // state for this (job, block), so the recomputation is a pure
+        // function of the round's centroids: bit-identical, and the
+        // job's neighbours on the shared pool never notice.
+        if aj.failed.is_none() && !aj.cancelling && aj.retries > 0 {
+            let used = aj.attempts.entry(jerr.block).or_insert(0);
+            if *used < aj.retries {
+                *used += 1;
+                let job = aj
+                    .round_jobs
+                    .get(&jerr.block)
+                    .cloned()
+                    .expect("round spares kept while retries are enabled");
+                self.pool.submit(vec![job]);
+                return;
+            }
+        }
         aj.expected = aj.expected.saturating_sub(1);
         if aj.failed.is_none() && !aj.cancelling {
+            let msg = match aj.attempts.get(&jerr.block) {
+                Some(&used) if used > 0 => format!(
+                    "{jerr} (block {} failed {} attempts, retry budget {})",
+                    jerr.block,
+                    used + 1,
+                    aj.retries
+                ),
+                _ => jerr.to_string(),
+            };
             self.fail_job(id, msg);
         } else if aj.expected == 0 {
             self.finalize(id);
@@ -559,6 +643,10 @@ impl ServingLoop {
             let aj = self.active.get_mut(&id).expect("still active");
             let jobs = aj.machine.start_round(id);
             aj.expected = jobs.len();
+            if aj.retries > 0 {
+                aj.round_jobs = jobs.iter().map(|j| (j.block, j.clone())).collect();
+                aj.attempts.clear();
+            }
             self.pool.submit(jobs);
         }
     }
@@ -727,6 +815,145 @@ mod tests {
         let b = server.submit(ppm_spec).unwrap().wait_output().unwrap();
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.centroids, b.centroids);
+        server.shutdown();
+    }
+
+    #[test]
+    fn faulted_job_retries_in_isolation_and_matches_clean_twin() {
+        use crate::resilience::{FaultKind, FaultPlan};
+        let server = ClusterServer::start(ServerConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        // A clean twin of the same spec establishes the expected bits.
+        let clean = server.submit(spec(9)).unwrap();
+        // The faulted job: block 1 fails its first visit, then heals;
+        // one retry absorbs it. A clean neighbour runs concurrently.
+        let fault = FaultPlan::new(1, FaultKind::Error, 1);
+        let mut faulted = spec(9);
+        faulted.exec = faulted.exec.with_retries(1);
+        let faulted = faulted.with_fault(fault.clone());
+        let neighbour = server.submit(spec(11)).unwrap();
+        let faulted = server.submit(faulted).unwrap();
+        let clean_out = clean.wait_output().unwrap();
+        let faulted_out = faulted.wait_output().unwrap();
+        let neighbour_out = neighbour.wait_output().unwrap();
+        assert!(fault.trips() >= 1, "fault never fired");
+        assert_eq!(faulted_out.labels, clean_out.labels);
+        assert_eq!(faulted_out.centroids, clean_out.centroids);
+        assert_eq!(faulted_out.inertia_trace, clean_out.inertia_trace);
+        // the neighbour matches ITS clean twin (ran before the server
+        // saw any fault) — isolation both ways
+        let solo_neighbour = server.submit(spec(11)).unwrap().wait_output().unwrap();
+        assert_eq!(neighbour_out.labels, solo_neighbour.labels);
+        let stats = server.stats();
+        assert_eq!(stats.failed, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn zero_retry_job_fails_loudly_with_attempt_context() {
+        use crate::resilience::{FaultKind, FaultPlan};
+        let server = ClusterServer::start(ServerConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let bad = spec(13).with_fault(FaultPlan::always(2, FaultKind::Error));
+        let status = server.submit(bad).unwrap().wait();
+        let JobStatus::Failed(msg) = status else {
+            panic!("expected failure, got {}", status.label());
+        };
+        assert!(msg.contains("injected failure"), "{msg}");
+        // exhausted budgets name the attempt count
+        let mut worn = spec(13).with_fault(FaultPlan::always(2, FaultKind::Error));
+        worn.exec = worn.exec.with_retries(2);
+        let status = server.submit(worn).unwrap().wait();
+        let JobStatus::Failed(msg) = status else {
+            panic!("expected failure");
+        };
+        assert!(
+            msg.contains("3 attempts") && msg.contains("retry budget 2"),
+            "{msg}"
+        );
+        // the server is still serviceable afterwards
+        assert!(server.submit(spec(5)).unwrap().wait_output().is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn injected_panic_is_survived_and_reported_with_its_message() {
+        use crate::resilience::{FaultKind, FaultPlan};
+        let server = ClusterServer::start(ServerConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        // Without retries the panic's own message must reach the client.
+        let bad = spec(17).with_fault(FaultPlan::always(0, FaultKind::Panic));
+        let JobStatus::Failed(msg) = server.submit(bad).unwrap().wait() else {
+            panic!("expected failure");
+        };
+        assert!(msg.contains("panicked"), "{msg}");
+        assert!(msg.contains("injected panic"), "{msg}");
+        // With a retry budget the same panic is absorbed bit-identically.
+        let clean = server.submit(spec(17)).unwrap().wait_output().unwrap();
+        let mut healed = spec(17).with_fault(FaultPlan::new(0, FaultKind::Panic, 1));
+        healed.exec = healed.exec.with_retries(1);
+        let out = server.submit(healed).unwrap().wait_output().unwrap();
+        assert_eq!(out.labels, clean.labels);
+        assert_eq!(out.centroids, clean.centroids);
+        server.shutdown();
+    }
+
+    #[test]
+    fn retired_job_store_dir_is_swept_while_the_server_lives() {
+        use crate::resilience::{FaultKind, FaultPlan};
+        let gen = SyntheticOrtho::default().with_seed(23);
+        let exec = crate::plan::ExecPlan::pinned(BlockShape::Square { side: 10 });
+        let ccfg = ClusterConfig {
+            k: 2,
+            seed: 23,
+            ..Default::default()
+        };
+        let server = ClusterServer::start(ServerConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        // A failed file-backed streaming job: its per-job store dir must
+        // disappear during serve, not at shutdown (the disk-leak fix).
+        let service_dirs = || -> std::collections::HashSet<PathBuf> {
+            let prefix = format!("blockms_service_p{}_", std::process::id());
+            std::fs::read_dir(std::env::temp_dir())
+                .unwrap()
+                .filter_map(|e| e.ok())
+                .filter(|e| e.file_name().to_string_lossy().starts_with(&prefix))
+                .map(|e| e.path())
+                .collect()
+        };
+        let before = service_dirs();
+        let mut failing = JobSpec::from_synthetic(gen, 32, 28, exec, ccfg)
+            .with_fault(FaultPlan::always(0, FaultKind::Error));
+        failing.io = IoMode::Strips {
+            strip_rows: 8,
+            file_backed: true,
+        };
+        assert!(server.submit(failing).unwrap().wait_output().is_err());
+        // Only dirs born in this test's window count — concurrent tests'
+        // stores come and go independently.
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let fresh: Vec<PathBuf> = service_dirs()
+                .into_iter()
+                .filter(|d| !before.contains(d))
+                .collect();
+            if fresh.is_empty() {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "store dirs leaked while the server was alive: {fresh:?}"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
         server.shutdown();
     }
 

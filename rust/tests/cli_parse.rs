@@ -393,3 +393,63 @@ fn batch_happy_path_writes_json() {
     assert!(text.contains("speedup_vs_serialized"), "{text}");
     let _ = std::fs::remove_file(&out_path);
 }
+
+#[test]
+fn resilience_flags_round_trip() {
+    let cli = blockms_cli();
+    let args = cli
+        .parse(vec![
+            "cluster", "--retries", "2", "--checkpoint", "run.ckpt", "--checkpoint-every", "3",
+            "--fault", "1:panic:1",
+        ])
+        .unwrap();
+    assert_eq!(args.get_parse::<usize>("retries").unwrap(), 2);
+    assert_eq!(args.get("checkpoint"), Some("run.ckpt"));
+    assert_eq!(args.get_parse::<usize>("checkpoint-every").unwrap(), 3);
+    assert_eq!(args.get("fault"), Some("1:panic:1"));
+    assert!(args.provided("retries"), "typed --retries is a pin");
+    let args = cli.parse(vec!["cluster", "--resume", "run.ckpt"]).unwrap();
+    assert_eq!(args.get("resume"), Some("run.ckpt"));
+    let args = cli.parse(vec!["resilience", "--quick", "--out", "BR.json"]).unwrap();
+    assert_eq!(args.subcommand(), Some("resilience"));
+    assert!(args.flag("quick"));
+}
+
+#[test]
+fn checkpoint_cadence_without_a_path_is_a_usage_error() {
+    assert_usage_error(
+        &[
+            "cluster", "--width", "32", "--height", "32", "--checkpoint-every", "2", "--dry-run",
+        ],
+        "checkpoint",
+    );
+}
+
+#[test]
+fn malformed_fault_specs_are_usage_errors() {
+    for bad in ["x", "1:bogus", "1:error:0", "1:error:1:z", "1:error:1:2:3"] {
+        assert_usage_error(
+            &["cluster", "--width", "32", "--height", "32", "--fault", bad],
+            "--fault",
+        );
+    }
+}
+
+#[test]
+fn injected_fault_recovers_under_a_retry_budget_at_the_binary_level() {
+    let out = run(&[
+        "cluster", "--width", "64", "--height", "64", "--k", "2", "--iters", "2",
+        "--fault", "0:error:1", "--retries", "1",
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+
+    // Zero retries: the same fault is a loud runtime failure (exit 1).
+    let out = run(&[
+        "cluster", "--width", "64", "--height", "64", "--k", "2", "--iters", "2",
+        "--fault", "0:error:1",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("injected failure"), "{stderr}");
+}

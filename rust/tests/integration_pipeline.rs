@@ -10,6 +10,7 @@ use blockms::coordinator::{
 use blockms::image::{Raster, SyntheticOrtho};
 use blockms::kmeans::InitMethod;
 use blockms::plan::ExecPlan;
+use blockms::resilience::{FaultKind, FaultPlan};
 use blockms::runtime::find_artifacts_dir;
 use blockms::util::config::Config;
 
@@ -147,7 +148,7 @@ fn failure_in_later_round_still_propagates() {
     // every round including assign)
     let coord = Coordinator::new(CoordinatorConfig {
         exec: ExecPlan::pinned(BlockShape::Square { side: 13 }).with_workers(2),
-        fail_block: Some(8),
+        fault: Some(FaultPlan::always(8, FaultKind::Error)),
         ..Default::default()
     });
     let err = coord.cluster(&img, &ClusterConfig::default()).unwrap_err();

@@ -1,0 +1,343 @@
+//! Fault-tolerance integration tests: kill/resume bit-identity across
+//! kernels × block shapes × I/O backings, single-block retry isolation,
+//! injected-panic recovery, and checkpoint-file rejection.
+//!
+//! The acceptance bar everywhere is *bitwise* equality with an
+//! uninterrupted fault-free run: retries and resume may cost time but
+//! must never change a label, a centroid byte, or the inertia bits.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use blockms::blocks::BlockShape;
+use blockms::coordinator::{
+    ClusterConfig, ClusterOutput, Coordinator, CoordinatorConfig, IoMode, Schedule,
+};
+use blockms::image::{Raster, SyntheticOrtho};
+use blockms::kmeans::kernel::KernelChoice;
+use blockms::plan::ExecPlan;
+use blockms::resilience::{FaultKind, FaultPlan};
+use blockms::service::{ClusterServer, JobSpec, ServerConfig};
+
+fn scene(h: usize, w: usize, seed: u64) -> Arc<Raster> {
+    Arc::new(SyntheticOrtho::default().with_seed(seed).generate(h, w))
+}
+
+/// Per-test unique checkpoint path (tests in this binary run in
+/// parallel; the pid guards against stale files from other runs).
+fn ckpt_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("blockms_test_p{}_{tag}.ckpt", std::process::id()))
+}
+
+fn assert_bitwise_eq(got: &ClusterOutput, want: &ClusterOutput, ctx: &str) {
+    assert_eq!(got.labels, want.labels, "{ctx}: labels diverged");
+    assert_eq!(got.centroids, want.centroids, "{ctx}: centroids diverged");
+    assert_eq!(
+        got.inertia.to_bits(),
+        want.inertia.to_bits(),
+        "{ctx}: inertia diverged"
+    );
+    assert_eq!(got.iterations, want.iterations, "{ctx}: iteration count diverged");
+}
+
+/// The tentpole acceptance matrix: checkpoint mid-run at several rounds,
+/// across kernels (naive/pruned/lanes — pruned carries cross-round
+/// worker state that a resume must rebuild), block shapes, and
+/// memory/file strip backings; every resumed run must equal the
+/// uninterrupted reference bitwise.
+#[test]
+fn kill_resume_matrix_is_bit_identical() {
+    let img = scene(48, 40, 11);
+    let ccfg = ClusterConfig {
+        k: 3,
+        fixed_iters: Some(6),
+        seed: 5,
+        ..Default::default()
+    };
+    let cells: &[(KernelChoice, BlockShape, IoMode)] = &[
+        (KernelChoice::Naive, BlockShape::Square { side: 13 }, IoMode::Direct),
+        (
+            KernelChoice::Pruned,
+            BlockShape::Cols { band_cols: 13 },
+            IoMode::Strips {
+                strip_rows: 9,
+                file_backed: false,
+            },
+        ),
+        (
+            KernelChoice::Lanes,
+            BlockShape::Rows { band_rows: 11 },
+            IoMode::Strips {
+                strip_rows: 7,
+                file_backed: true,
+            },
+        ),
+    ];
+    for (i, (kernel, shape, io)) in cells.iter().enumerate() {
+        let exec = ExecPlan::pinned(*shape).with_workers(3).with_kernel(*kernel);
+        let reference = Coordinator::new(CoordinatorConfig {
+            exec,
+            io: io.clone(),
+            ..Default::default()
+        })
+        .cluster(&img, &ccfg)
+        .unwrap();
+        // Kill early (one checkpoint behind) and late (several rounds
+        // of progress on disk) — `.after(r)` lets r visits to the block
+        // succeed, so the run dies in round r+1.
+        for kill_after in [2usize, 5] {
+            let ctx = format!("{kernel:?}/{shape:?}/kill after round {kill_after}");
+            let path = ckpt_path(&format!("matrix_{i}_{kill_after}"));
+            let _ = std::fs::remove_file(&path);
+            let died = Coordinator::new(CoordinatorConfig {
+                exec: exec.with_checkpoint_every(2),
+                io: io.clone(),
+                fault: Some(FaultPlan::always(1, FaultKind::Error).after(kill_after)),
+                checkpoint: Some(path.clone()),
+                ..Default::default()
+            })
+            .cluster(&img, &ccfg);
+            assert!(died.is_err(), "{ctx}: the unhealing fault must kill the run");
+            let resumed = Coordinator::new(CoordinatorConfig {
+                exec,
+                io: io.clone(),
+                resume: Some(path.clone()),
+                ..Default::default()
+            })
+            .cluster(&img, &ccfg)
+            .unwrap_or_else(|e| panic!("{ctx}: resume failed: {e:#}"));
+            assert_bitwise_eq(&resumed, &reference, &ctx);
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+/// A transient single-block failure under a retry budget: only the
+/// failed block is recomputed, and the result is bitwise equal to a
+/// fault-free twin. Covers both the compute-error and the reader-I/O
+/// fault kinds.
+#[test]
+fn single_block_retry_is_isolated_and_bit_identical() {
+    let img = scene(44, 52, 7);
+    let ccfg = ClusterConfig {
+        k: 4,
+        fixed_iters: Some(4),
+        seed: 3,
+        ..Default::default()
+    };
+    let exec = ExecPlan::pinned(BlockShape::Square { side: 14 }).with_workers(3);
+    let clean = Coordinator::new(CoordinatorConfig {
+        exec,
+        io: IoMode::Strips {
+            strip_rows: 8,
+            file_backed: false,
+        },
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap();
+    for kind in [FaultKind::Error, FaultKind::ReaderIo] {
+        let fault = FaultPlan::new(2, kind, 1);
+        let out = Coordinator::new(CoordinatorConfig {
+            exec: exec.with_retries(1),
+            io: IoMode::Strips {
+                strip_rows: 8,
+                file_backed: false,
+            },
+            fault: Some(fault.clone()),
+            ..Default::default()
+        })
+        .cluster(&img, &ccfg)
+        .unwrap_or_else(|e| panic!("{kind:?}: retry budget 1 must absorb one failure: {e:#}"));
+        assert!(fault.trips() >= 1, "{kind:?}: the fault never fired");
+        assert_bitwise_eq(&out, &clean, &format!("{kind:?} retried"));
+    }
+}
+
+/// A worker panic mid-block is caught, reported as a job failure, and —
+/// under a retry budget — absorbed without value drift. The pool's
+/// supervisor respawns the worker loop, so later rounds still have full
+/// capacity.
+#[test]
+fn injected_panic_recovers_bit_identically() {
+    let img = scene(40, 40, 19);
+    let ccfg = ClusterConfig {
+        k: 3,
+        fixed_iters: Some(3),
+        seed: 9,
+        ..Default::default()
+    };
+    let exec = ExecPlan::pinned(BlockShape::Rows { band_rows: 10 }).with_workers(2);
+    let clean = Coordinator::new(CoordinatorConfig {
+        exec,
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap();
+
+    // Without retries, the panic surfaces with its actual message.
+    let err = Coordinator::new(CoordinatorConfig {
+        exec,
+        fault: Some(FaultPlan::new(1, FaultKind::Panic, 1)),
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("panicked") && msg.contains("injected panic"),
+        "panic message must survive the supervisor: {msg}"
+    );
+
+    // With a budget, the same panic is absorbed bit-identically.
+    let out = Coordinator::new(CoordinatorConfig {
+        exec: exec.with_retries(1),
+        fault: Some(FaultPlan::new(1, FaultKind::Panic, 1)),
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap();
+    assert_bitwise_eq(&out, &clean, "panic retried");
+}
+
+/// Zero retries = the seed behaviour: an injected failure fails the run
+/// loudly, naming the block. An exhausted budget names the attempt
+/// count and the budget.
+#[test]
+fn zero_retry_and_exhausted_budget_fail_loudly() {
+    let img = scene(36, 36, 23);
+    let ccfg = ClusterConfig {
+        k: 2,
+        fixed_iters: Some(2),
+        seed: 1,
+        ..Default::default()
+    };
+    let exec = ExecPlan::pinned(BlockShape::Square { side: 12 }).with_workers(2);
+    let err = Coordinator::new(CoordinatorConfig {
+        exec,
+        fault: Some(FaultPlan::always(1, FaultKind::Error)),
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("block 1") && msg.contains("injected failure"),
+        "fail-fast error must name the block and cause: {msg}"
+    );
+
+    let err = Coordinator::new(CoordinatorConfig {
+        exec: exec.with_retries(2),
+        fault: Some(FaultPlan::always(1, FaultKind::Error)),
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("retry budget 2"),
+        "exhaustion must name the budget: {msg}"
+    );
+}
+
+/// Checkpoint files are rejected when damaged or when they belong to a
+/// different run configuration — never silently resumed into garbage.
+#[test]
+fn damaged_or_mismatched_checkpoints_are_rejected() {
+    let img = scene(40, 32, 31);
+    let ccfg = ClusterConfig {
+        k: 3,
+        fixed_iters: Some(4),
+        seed: 2,
+        ..Default::default()
+    };
+    let exec = ExecPlan::pinned(BlockShape::Cols { band_cols: 11 }).with_workers(2);
+    let path = ckpt_path("reject");
+    let _ = std::fs::remove_file(&path);
+    // Produce a genuine checkpoint by killing a run after round 2.
+    let died = Coordinator::new(CoordinatorConfig {
+        exec: exec.with_checkpoint_every(1),
+        fault: Some(FaultPlan::always(0, FaultKind::Error).after(2)),
+        checkpoint: Some(path.clone()),
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg);
+    assert!(died.is_err());
+    let good = std::fs::read(&path).unwrap();
+
+    let resume_with = |bytes: &[u8], ccfg: &ClusterConfig| {
+        std::fs::write(&path, bytes).unwrap();
+        Coordinator::new(CoordinatorConfig {
+            exec,
+            resume: Some(path.clone()),
+            ..Default::default()
+        })
+        .cluster(&img, ccfg)
+    };
+
+    // Truncated mid-header.
+    let msg = format!("{:#}", resume_with(&good[..10], &ccfg).unwrap_err());
+    assert!(msg.contains("truncated"), "{msg}");
+
+    // Body corruption lands on the checksum.
+    let mut flipped = good.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x40;
+    let msg = format!("{:#}", resume_with(&flipped, &ccfg).unwrap_err());
+    assert!(msg.contains("checksum mismatch"), "{msg}");
+
+    // Not a checkpoint at all.
+    let msg = format!("{:#}", resume_with(b"XXXXXXXX not a checkpoint", &ccfg).unwrap_err());
+    assert!(msg.contains("bad magic"), "{msg}");
+
+    // A pristine file from a *different* run configuration (k=4) is
+    // caught by the fingerprint before any state is restored.
+    let other = ClusterConfig { k: 4, ..ccfg.clone() };
+    let msg = format!("{:#}", resume_with(&good, &other).unwrap_err());
+    assert!(msg.contains("different run configuration"), "{msg}");
+
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The service path accepts the same checkpoints: a killed solo run's
+/// file resumes as a server job, bit-identical to the uninterrupted
+/// reference.
+#[test]
+fn service_job_resumes_a_killed_run_bit_identically() {
+    let img = scene(44, 36, 41);
+    let ccfg = ClusterConfig {
+        k: 3,
+        fixed_iters: Some(5),
+        seed: 6,
+        ..Default::default()
+    };
+    let exec = ExecPlan::pinned(BlockShape::Square { side: 12 }).with_workers(2);
+    let reference = Coordinator::new(CoordinatorConfig {
+        exec,
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap();
+
+    let path = ckpt_path("service_resume");
+    let _ = std::fs::remove_file(&path);
+    let died = Coordinator::new(CoordinatorConfig {
+        exec: exec.with_checkpoint_every(2),
+        fault: Some(FaultPlan::always(1, FaultKind::Error).after(4)),
+        checkpoint: Some(path.clone()),
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg);
+    assert!(died.is_err());
+
+    let server = ClusterServer::start(ServerConfig {
+        workers: 2,
+        schedule: Schedule::Static,
+        max_in_flight: 2,
+    });
+    let spec = JobSpec::new(Arc::clone(&img), exec, ccfg.clone()).with_resume(path.clone());
+    let out = server.submit(spec).unwrap().wait_output().unwrap();
+    assert_bitwise_eq(&out, &reference, "service resume");
+    server.shutdown();
+    let _ = std::fs::remove_file(&path);
+}

@@ -16,6 +16,7 @@ use blockms::coordinator::{
 use blockms::image::{Raster, SyntheticOrtho};
 use blockms::kmeans::kernel::KernelChoice;
 use blockms::plan::ExecPlan;
+use blockms::resilience::{FaultKind, FaultPlan};
 use blockms::service::{ClusterServer, JobSpec, JobStatus, ServerConfig};
 
 fn image(channels: usize, h: usize, w: usize, seed: u64) -> Arc<Raster> {
@@ -336,7 +337,7 @@ fn failed_job_does_not_poison_the_pool() {
             ..Default::default()
         },
     );
-    failing.fail_block = Some(1);
+    failing.fault = Some(FaultPlan::always(1, FaultKind::Error));
     let healthy: Vec<JobSpec> = (0..2u64)
         .map(|i| {
             JobSpec::new(
