@@ -1,0 +1,271 @@
+#!/usr/bin/env python3
+"""Numpy model of `blockms sweep` — generates the committed BENCH_sweep.json.
+
+No cargo toolchain runs where this file is maintained, so the committed
+sweep artifact comes from this model, exactly as BENCH_stream.json comes
+from bench_stream_model.py. CI regenerates the rust-sourced file with
+`blockms sweep --quick` and gates BOTH through check_sweep_schema.py;
+the checker validates invariants (bit-identity, byte amortization,
+grid bookkeeping), never cross-compares the two files' timings.
+
+What is exact vs modeled:
+
+- **bytes** are exact closed forms. The amortized sweep shares one
+  strip store across all N variants with a full cache, so each strip
+  decodes once: amortized_bytes = h*w*3*4 and serialized_bytes = N x
+  that, giving bytes_read_ratio = 1/N — the same arithmetic the rust
+  bench measures (rust/src/bench/sweep.rs, rust/tests/stripstore_io.rs).
+- **clustering** is a real Lloyd run (RandomSample init via the ported
+  Xoshiro256++ from bench_stream_model, f32 centroids, f64 inertia) on
+  a deterministic 5-class value-noise scene that mirrors
+  rust/src/image/synthetic.rs *distributionally*, not bit-exactly: the
+  f32 lattice/gaussian streams were judged too fragile to port bit-for-
+  bit, and nothing consumes cross-file equality. Per-variant inertia /
+  db_index are therefore model-scene values with the same structure.
+- **matches_solo** is underwritten the honest way available here: every
+  variant runs twice from scratch and the runs must agree bitwise —
+  the model's analogue of the sweep-vs-solo matrix that
+  rust/tests/sweep_equivalence.rs pins on the real implementation.
+- **walls** come from the committed BENCH_layout.json row floors
+  (naive/interleaved, the sweep bench's pinned kernel) plus the baked
+  decode term, single-stream like bench_stream_model.py.
+"""
+
+import argparse
+import json
+
+import numpy as np
+
+from bench_stream_model import DECODE_NS_PER_BYTE, Rng, interp, layout_floors
+
+SCENE_SEED = 0xB10C_5EED  # SyntheticOrtho default
+CLASSES = 5
+OCTAVES = 4
+NOISE_DN = 6.0
+
+
+def smooth(t):
+    return t * t * (3.0 - 2.0 * t)
+
+
+def synth_scene(height, width, seed=SCENE_SEED):
+    """Deterministic 5-class blended scene, SyntheticOrtho-shaped.
+
+    Multi-octave value noise picks a fractional class per pixel; pixels
+    blend the two nearest class signatures and add gaussian sensor
+    noise, clamped to the 8-bit DN range — same structure as
+    rust/src/image/synthetic.rs, different (numpy) random streams.
+    """
+    rng = np.random.default_rng(seed)
+    base = 30.0 + 195.0 * (np.arange(CLASSES) + 0.5) / CLASSES
+    sigs = np.clip(
+        base[:, None] + (rng.random((CLASSES, 3)) - 0.5) * 60.0, 0.0, 255.0
+    ).astype(np.float32)
+
+    field = np.zeros((height, width), np.float64)
+    total, amp, cell = 0.0, 1.0, max(height, width)
+    for _ in range(OCTAVES):
+        gh, gw = height // cell + 2, width // cell + 2
+        lattice = rng.random((gh, gw))
+        ys, xs = np.arange(height) / cell, np.arange(width) / cell
+        y0, x0 = ys.astype(int), xs.astype(int)
+        fy, fx = smooth(ys - y0)[:, None], smooth(xs - x0)[None, :]
+        a = lattice[np.ix_(y0, x0)]
+        b = lattice[np.ix_(y0, x0 + 1)]
+        c = lattice[np.ix_(y0 + 1, x0)]
+        d = lattice[np.ix_(y0 + 1, x0 + 1)]
+        field += amp * ((a * (1 - fx) + b * fx) * (1 - fy) + (c * (1 - fx) + d * fx) * fy)
+        total += amp
+        amp *= 0.55
+        cell = max(cell // 2, 2)
+
+    t = np.clip(field / total, 0.0, 1.0 - 1e-6) * CLASSES
+    lo = np.minimum(t.astype(int), CLASSES - 1)
+    hi = np.minimum(lo + 1, CLASSES - 1)
+    frac = (t - lo)[..., None].astype(np.float32)
+    px = sigs[lo] * (1.0 - frac) + sigs[hi] * frac
+    px += rng.normal(0.0, NOISE_DN, px.shape)
+    return np.clip(px, 0.0, 255.0).astype(np.float32).reshape(-1, 3)
+
+
+def lloyd(px, k, seed, iters):
+    """Fixed-iteration Lloyd mirroring the coordinator's pass structure:
+    `iters` Step rounds (assign + update), then one final Assign round
+    that freezes labels and computes the f64 inertia."""
+    n = len(px)
+    centroids = px[Rng(seed).sample_indices(n, k)].copy()
+    px64 = px.astype(np.float64)
+    labels = None
+    for _ in range(iters):
+        d = ((px[:, None, :] - centroids[None, :, :]) ** 2).sum(axis=2)
+        labels = d.argmin(axis=1)
+        for c in range(k):
+            mask = labels == c
+            if mask.any():
+                centroids[c] = px64[mask].mean(axis=0).astype(np.float32)
+    d = ((px64[:, None, :] - centroids[None, :, :].astype(np.float64)) ** 2).sum(axis=2)
+    labels = d.argmin(axis=1)
+    inertia = float(d[np.arange(n), labels].sum())
+    return labels.astype(np.uint32), centroids, inertia
+
+
+def davies_bouldin(px, labels, centroids, k):
+    """f64 port of rust/src/metrics/quality.rs::davies_bouldin."""
+    px64 = px.astype(np.float64)
+    c64 = centroids.astype(np.float64)
+    active, scatter = [], {}
+    for c in range(k):
+        mask = labels == c
+        if not mask.any():
+            continue
+        active.append(c)
+        scatter[c] = float(np.sqrt(((px64[mask] - c64[c]) ** 2).sum(axis=1)).mean())
+    if len(active) <= 1:
+        return 0.0
+    total = 0.0
+    for i in active:
+        worst = 0.0
+        for j in active:
+            if i == j:
+                continue
+            dist = float(np.sqrt(((c64[i] - c64[j]) ** 2).sum()))
+            if dist > 0.0:
+                worst = max(worst, (scatter[i] + scatter[j]) / dist)
+        total += worst
+    return total / len(active)
+
+
+def knee_index(values):
+    """Port of rust/src/sweep/report.rs::knee_index."""
+    if len(values) < 3:
+        return 0
+    n = len(values)
+    span = values[-1] - values[0]
+    if span == 0.0:
+        return 0
+    best, best_d = 0, float("-inf")
+    for i, v in enumerate(values):
+        x = i / (n - 1)
+        y = (v - values[0]) / span
+        d = abs(x - y)
+        if d > best_d:
+            best, best_d = i, d
+    return best
+
+
+def rank_by_db(cases):
+    """Port of SweepReport::ranked_by_db: degenerate (db == 0) last,
+    then db ascending, then smaller k, then submission order."""
+    return sorted(
+        range(len(cases)),
+        key=lambda i: (
+            cases[i]["db_index"] == 0.0,
+            cases[i]["db_index"],
+            cases[i]["k"],
+            i,
+        ),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--layout", default="BENCH_layout.json")
+    ap.add_argument("--out", default="BENCH_sweep.json")
+    args = ap.parse_args()
+
+    with open(args.layout) as f:
+        floors = layout_floors(json.load(f))
+
+    # The acceptance config `blockms sweep` defaults to.
+    height = width = 256
+    ks = list(range(2, 9))
+    base_seed = 0x51_EEE7
+    seeds, inits, iters, workers, strip_rows = 1, ["random"], 6, 4, 32
+    variants = len(ks) * seeds * len(inits)
+
+    px = synth_scene(height, width)
+    n_px = height * width
+    passes = iters + 1
+    image_bytes = n_px * 3 * 4
+    decode_secs = image_bytes * DECODE_NS_PER_BYTE / 1e9
+
+    cases = []
+    compute_secs = 0.0
+    for k in ks:
+        for s in range(seeds):
+            seed = base_seed + s
+            labels, centroids, inertia = lloyd(px, k, seed, iters)
+            # matches_solo, model style: a second independent run must
+            # reproduce every bit, or the variant is not deterministic.
+            labels2, centroids2, inertia2 = lloyd(px, k, seed, iters)
+            matches = (
+                np.array_equal(labels, labels2)
+                and centroids.tobytes() == centroids2.tobytes()
+                and inertia == inertia2
+            )
+            assert matches, f"k={k} seed={seed}: rerun diverged"
+            db = davies_bouldin(px, labels, centroids, k)
+            compute_secs += interp(floors[("naive", "interleaved")], k) * n_px * passes / 1e9
+            cases.append(
+                {
+                    "label": f"k{k}-s{seed}-random",
+                    "k": k,
+                    "seed": seed,
+                    "init": "random",
+                    "iterations": iters,
+                    "inertia": inertia,
+                    "db_index": db,
+                    "matches_solo": matches,
+                }
+            )
+
+    amortized_bytes = image_bytes
+    serialized_bytes = variants * image_bytes
+    amortized_wall = compute_secs + decode_secs
+    serialized_wall = compute_secs + variants * decode_secs
+
+    ranked = rank_by_db(cases)
+    best = cases[ranked[0]]
+    best_k = None if best["db_index"] == 0.0 else best["k"]
+    elbow_ks = sorted({c["k"] for c in cases})
+    elbow = [
+        float(np.mean([c["inertia"] for c in cases if c["k"] == k])) for k in elbow_ks
+    ]
+    knee_k = elbow_ks[knee_index(elbow)] if elbow_ks else None
+
+    doc = {
+        "source": "python-model",
+        "image": [height, width],
+        "channels": 3,
+        "iters": iters,
+        "base_seed": base_seed,
+        "seeds": seeds,
+        "workers": workers,
+        "strip_rows": strip_rows,
+        "ks": ks,
+        "inits": inits,
+        "variants": variants,
+        "amortized_wall_secs": amortized_wall,
+        "serialized_wall_secs": serialized_wall,
+        "amortized_jobs_per_sec": variants / amortized_wall,
+        "serialized_jobs_per_sec": variants / serialized_wall,
+        "amortized_bytes_read": amortized_bytes,
+        "serialized_bytes_read": serialized_bytes,
+        "bytes_read_ratio": amortized_bytes / serialized_bytes,
+        "predicted_bytes_ratio": 1.0 / variants,
+        "matches_solo": all(c["matches_solo"] for c in cases),
+        "best_k": best_k,
+        "knee_k": knee_k,
+        "cases": cases,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(
+        f"wrote {args.out}: {variants} variants, best_k={best_k}, knee_k={knee_k}, "
+        f"ratio={doc['bytes_read_ratio']:.4f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Schema check for BENCH_sweep.json (CI smoke + committed file).
+
+Usage: check_sweep_schema.py <path> [--full]
+
+Validates the document the rust `blockms sweep` bench and the python
+model both emit (EXPERIMENTS.md §Sweep), and gates the sweep
+acceptance invariants:
+
+- every variant is bit-identical to its solo run (`matches_solo`,
+  per case and in aggregate) — amortization must never change values;
+- the amortized sweep reads ~1/N of the serialized bytes: with row
+  blocks aligned to strips and a full strip cache the closed form is
+  exact (one decode per strip per sweep), so the measured ratio must
+  sit at 1/variants, and `serialized >= amortized` always;
+- the grid bookkeeping is consistent: variants = |ks| x seeds x
+  |inits|, every case's (k, init) comes from the declared axes, and
+  the model-selection picks (best_k, knee_k) are members of ks.
+
+With --full, also requires the acceptance grid (k in 2..=8 over the
+256x256 scene) the committed file is pinned to.
+"""
+
+import json
+import sys
+
+META_NUM = ["channels", "iters", "base_seed", "seeds", "workers", "strip_rows", "variants"]
+META_POS = [
+    "amortized_wall_secs",
+    "serialized_wall_secs",
+    "amortized_jobs_per_sec",
+    "serialized_jobs_per_sec",
+    "amortized_bytes_read",
+    "serialized_bytes_read",
+    "bytes_read_ratio",
+    "predicted_bytes_ratio",
+]
+CASE_NUM = ["k", "seed", "iterations", "inertia", "db_index"]
+
+
+def fail(msg):
+    print(f"BENCH_sweep.json schema check FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    full = "--full" in sys.argv
+    path = args[0] if args else "BENCH_sweep.json"
+    with open(path) as f:
+        doc = json.load(f)
+
+    if doc.get("source") not in ("rust", "python-model"):
+        fail(f"unknown source {doc.get('source')!r}")
+    image = doc.get("image")
+    if not (isinstance(image, list) and len(image) == 2 and all(isinstance(v, (int, float)) for v in image)):
+        fail(f"image must be [height, width], got {image!r}")
+    for key in META_NUM:
+        if not isinstance(doc.get(key), (int, float)):
+            fail(f"meta field {key!r} missing or non-numeric")
+    for key in META_POS:
+        v = doc.get(key)
+        if not isinstance(v, (int, float)) or v <= 0:
+            fail(f"field {key!r} missing or non-positive ({v!r})")
+
+    ks = doc.get("ks")
+    if not isinstance(ks, list) or not ks or not all(isinstance(k, (int, float)) and k >= 1 for k in ks):
+        fail(f"ks must be a non-empty list of k >= 1, got {ks!r}")
+    inits = doc.get("inits")
+    if not isinstance(inits, list) or not inits or not all(isinstance(i, str) for i in inits):
+        fail(f"inits must be a non-empty list of names, got {inits!r}")
+
+    # Grid bookkeeping: variants = |ks| x seeds x |inits|.
+    variants = doc["variants"]
+    if variants != len(ks) * doc["seeds"] * len(inits):
+        fail(
+            f"variants {variants} != |ks|({len(ks)}) x seeds({doc['seeds']}) x |inits|({len(inits)})"
+        )
+
+    # Bit-identity: amortization must never change values.
+    if doc.get("matches_solo") is not True:
+        fail("matches_solo is not true — the sweep changed results, not just I/O")
+
+    # Amortization: the tentpole numbers. N variants over one image must
+    # not read N x the bytes; the bench geometry makes 1/N exact.
+    amortized = doc["amortized_bytes_read"]
+    serialized = doc["serialized_bytes_read"]
+    if serialized < amortized:
+        fail(f"serialized bytes {serialized} < amortized {amortized} — backwards")
+    ratio = doc["bytes_read_ratio"]
+    if abs(ratio - amortized / serialized) > 1e-9:
+        fail(f"bytes_read_ratio {ratio} inconsistent with {amortized}/{serialized}")
+    if ratio > 1.0 / variants + 1e-9:
+        fail(
+            f"bytes_read_ratio {ratio:.4f} above the closed-form 1/{variants} — "
+            "the shared store is not amortizing"
+        )
+    if doc["predicted_bytes_ratio"] > 1.0 / variants + 1e-9:
+        fail(f"predicted_bytes_ratio {doc['predicted_bytes_ratio']:.4f} above 1/{variants}")
+
+    cases = doc.get("cases")
+    if not isinstance(cases, list) or len(cases) != variants:
+        fail(f"cases missing or count != variants ({variants})")
+    for i, c in enumerate(cases):
+        for key in CASE_NUM:
+            if not isinstance(c.get(key), (int, float)):
+                fail(f"case {i}: field {key!r} missing or non-numeric")
+        if not isinstance(c.get("label"), str) or not c["label"]:
+            fail(f"case {i}: label missing")
+        if c["k"] not in ks:
+            fail(f"case {i}: k={c['k']} not in the declared ks axis")
+        if c.get("init") not in inits:
+            fail(f"case {i}: init {c.get('init')!r} not in the declared inits axis")
+        if c.get("matches_solo") is not True:
+            fail(f"case {i} ({c['label']}): matches_solo is not true")
+        if c["db_index"] < 0:
+            fail(f"case {i}: negative db_index {c['db_index']}")
+        if c["inertia"] < 0:
+            fail(f"case {i}: negative inertia {c['inertia']}")
+
+    # Model selection picks must come from the grid (null = no winner).
+    for key in ("best_k", "knee_k"):
+        v = doc.get(key)
+        if v is not None and v not in ks:
+            fail(f"{key} {v!r} is not in the ks axis")
+
+    if full:
+        if sorted(ks) != list(range(2, 9)):
+            fail(f"--full requires the acceptance grid k in 2..=8, got {ks}")
+        if image != [256, 256]:
+            fail(f"--full requires the 256x256 acceptance scene, got {image}")
+        if doc["best_k"] is None:
+            fail("--full: every acceptance variant degenerate — no DB winner")
+
+    print(
+        f"{path}: schema OK ({variants} variants, ratio {ratio:.4f} ~ 1/{variants}, "
+        f"source={doc['source']})"
+    )
+
+
+if __name__ == "__main__":
+    main()

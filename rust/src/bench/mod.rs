@@ -12,6 +12,7 @@ pub mod resilience;
 pub mod runner;
 pub mod service;
 pub mod stream;
+pub mod sweep;
 pub mod tables;
 pub mod workloads;
 
@@ -22,4 +23,5 @@ pub use resilience::{ResilienceBenchOpts, ResilienceBenchRow};
 pub use runner::{ExperimentConfig, ExperimentRow, Runner};
 pub use service::{ServiceBenchOpts, ServiceBenchRow};
 pub use stream::{StreamBenchOpts, StreamBenchRow};
+pub use sweep::{SweepBenchOpts, SweepBenchResult, SweepBenchRow};
 pub use workloads::{paper_sizes, PaperSize, Workload};

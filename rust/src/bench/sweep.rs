@@ -1,0 +1,506 @@
+//! Sweep-amortization benchmark: one image, a `(k, seed, init)` grid,
+//! run both as a share group and serialized — the machine-readable
+//! `BENCH_sweep.json` trail (EXPERIMENTS.md §Sweep documents the
+//! schema).
+//!
+//! The bench runs the same variant grid twice through a
+//! [`ClusterServer`]:
+//!
+//! 1. **amortized** — every variant in one share group, all in flight:
+//!    one strip store, one decoded pass (`bytes_read` ≈ the image,
+//!    once);
+//! 2. **serialized** — the same specs unshared, one at a time: each
+//!    variant ingests and decodes privately (`bytes_read` ≈ N× the
+//!    image).
+//!
+//! `bytes_read_ratio` ≈ 1/N is the tentpole number ("N variants ≠ N×
+//! bytes read"); `matches_solo` re-verifies the bit-identity contract
+//! per variant (amortized vs serialized vs a solo single-worker
+//! [`Coordinator`]). The grid's quality report (Davies-Bouldin best-k
+//! and the inertia knee) rides along so the JSON doubles as an elbow
+//! study.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::blocks::BlockShape;
+use crate::coordinator::{ClusterConfig, ClusterOutput, Coordinator, CoordinatorConfig, IoMode};
+use crate::image::{Raster, SyntheticOrtho};
+use crate::kmeans::InitMethod;
+use crate::plan::{CostModel, ExecPlan, Workload as CostWorkload};
+use crate::service::{ClusterServer, JobSpec, ServerConfig};
+use crate::sweep::{init_name, submit_sweep, SweepGrid, SweepReport};
+use crate::util::fmt::Table;
+use crate::util::json::Json;
+
+/// Benchmark shape. Defaults are the acceptance configuration: a
+/// 256×256 3-band scene, k ∈ 2..=8, one seed, random init, 6 fixed
+/// Lloyd rounds, 4 workers, row blocks aligned to 32-row strips with a
+/// full strip cache (the config whose amortized `bytes_read` has an
+/// exact closed form: one decode per strip per sweep).
+#[derive(Clone, Debug)]
+pub struct SweepBenchOpts {
+    pub height: usize,
+    pub width: usize,
+    pub ks: Vec<usize>,
+    pub base_seed: u64,
+    pub n_seeds: usize,
+    pub inits: Vec<InitMethod>,
+    /// Fixed Lloyd iterations per variant (fixed so amortized and
+    /// serialized do identical work).
+    pub iters: usize,
+    pub workers: usize,
+    pub strip_rows: usize,
+    /// Sweep this PPM instead of the synthetic scene.
+    pub input: Option<std::path::PathBuf>,
+}
+
+impl Default for SweepBenchOpts {
+    fn default() -> Self {
+        SweepBenchOpts {
+            height: 256,
+            width: 256,
+            ks: (2..=8).collect(),
+            base_seed: 0x51_EEE7,
+            n_seeds: 1,
+            inits: vec![InitMethod::RandomSample],
+            iters: 6,
+            workers: 4,
+            strip_rows: 32,
+            input: None,
+        }
+    }
+}
+
+impl SweepBenchOpts {
+    /// CI-sized variant: small scene, 3 ks, 3 rounds.
+    pub fn quick() -> Self {
+        SweepBenchOpts {
+            height: 96,
+            width: 80,
+            ks: vec![2, 3, 4],
+            iters: 3,
+            workers: 2,
+            strip_rows: 16,
+            ..Default::default()
+        }
+    }
+
+    pub fn grid(&self) -> Result<SweepGrid> {
+        ensure!(self.n_seeds >= 1, "sweep bench needs at least one seed");
+        SweepGrid::new(
+            self.ks.clone(),
+            (0..self.n_seeds as u64).map(|i| self.base_seed + i).collect(),
+            self.inits.clone(),
+        )
+    }
+}
+
+/// One variant's row in the bench document.
+#[derive(Clone, Debug)]
+pub struct SweepBenchRow {
+    pub label: String,
+    pub k: usize,
+    pub seed: u64,
+    pub init: String,
+    pub iterations: usize,
+    pub inertia: f64,
+    pub db_index: f64,
+    /// Amortized output is bit-identical to the serialized run of the
+    /// same spec (labels, centroids, inertia bits).
+    pub matches_solo: bool,
+}
+
+/// The whole bench outcome: per-variant rows plus the amortization
+/// headline numbers.
+#[derive(Clone, Debug)]
+pub struct SweepBenchResult {
+    pub rows: Vec<SweepBenchRow>,
+    pub amortized_wall_secs: f64,
+    pub serialized_wall_secs: f64,
+    /// Group strip-store bytes decoded for the whole shared sweep.
+    pub amortized_bytes_read: u64,
+    /// Sum of every unshared variant's private decode bytes.
+    pub serialized_bytes_read: u64,
+    /// The cost model's predicted amortized/serialized byte ratio for
+    /// this grid (committed alongside the measured one so drift shows).
+    pub predicted_bytes_ratio: f64,
+    /// Davies-Bouldin winner over the amortized outputs.
+    pub best_k: Option<usize>,
+    /// Inertia-elbow knee over the amortized outputs.
+    pub knee_k: Option<usize>,
+}
+
+impl SweepBenchResult {
+    pub fn variants(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn amortized_jobs_per_sec(&self) -> f64 {
+        self.variants() as f64 / self.amortized_wall_secs.max(1e-12)
+    }
+
+    pub fn serialized_jobs_per_sec(&self) -> f64 {
+        self.variants() as f64 / self.serialized_wall_secs.max(1e-12)
+    }
+
+    /// Measured `amortized / serialized` decode bytes (≈ 1/N).
+    pub fn bytes_read_ratio(&self) -> f64 {
+        if self.serialized_bytes_read == 0 {
+            return 1.0;
+        }
+        self.amortized_bytes_read as f64 / self.serialized_bytes_read as f64
+    }
+
+    pub fn all_match_solo(&self) -> bool {
+        self.rows.iter().all(|r| r.matches_solo)
+    }
+}
+
+/// The bench's pinned plan: row blocks aligned to the strip height
+/// (every strip belongs to exactly one block) and a cache sized to the
+/// whole store, so each strip decodes exactly once per store lifetime
+/// and the amortized byte count is closed-form.
+fn bench_exec(opts: &SweepBenchOpts) -> ExecPlan {
+    let strips = opts.height.div_ceil(opts.strip_rows.max(1));
+    ExecPlan::pinned(BlockShape::Rows {
+        band_rows: opts.strip_rows,
+    })
+    .with_workers(opts.workers)
+    .with_strip_cache(strips)
+}
+
+fn load_image(opts: &SweepBenchOpts) -> Result<Arc<Raster>> {
+    Ok(match &opts.input {
+        Some(path) => Arc::new(
+            crate::image::read_ppm(path).with_context(|| format!("load {}", path.display()))?,
+        ),
+        None => Arc::new(
+            SyntheticOrtho::default()
+                .with_seed(opts.base_seed)
+                .generate(opts.height, opts.width),
+        ),
+    })
+}
+
+/// Run the grid both ways and assemble the result.
+pub fn run_sweep_bench(opts: &SweepBenchOpts) -> Result<SweepBenchResult> {
+    let grid = opts.grid()?;
+    let variants = grid.expand();
+    let img = load_image(opts)?;
+    let exec = bench_exec(opts);
+    let base = ClusterConfig {
+        fixed_iters: Some(opts.iters),
+        ..Default::default()
+    };
+
+    // Amortized: one share group, everything in flight at once.
+    let server = ClusterServer::start(ServerConfig {
+        workers: opts.workers,
+        max_in_flight: grid.len(),
+        ..Default::default()
+    });
+    let t0 = Instant::now();
+    let handles = submit_sweep(&server, &img, exec, &base, &grid, opts.strip_rows, Some(1))?;
+    let amortized: Vec<ClusterOutput> = handles
+        .iter()
+        .map(|h| h.wait_output())
+        .collect::<Result<_>>()?;
+    let amortized_wall_secs = t0.elapsed().as_secs_f64();
+    let amortized_bytes_read = amortized
+        .iter()
+        .filter_map(|o| o.io_stats)
+        .map(|s| s.bytes_read)
+        .max()
+        .unwrap_or(0);
+
+    // Serialized: same specs, unshared, strictly one at a time on the
+    // warm pool (submit, wait, next — the no-sweep usage pattern).
+    let t0 = Instant::now();
+    let mut serialized = Vec::with_capacity(grid.len());
+    for v in &variants {
+        let mut cfg = base.clone();
+        cfg.k = v.k;
+        cfg.seed = v.seed;
+        cfg.init = v.init.clone();
+        let spec = JobSpec::new(Arc::clone(&img), exec, cfg).with_io(IoMode::Strips {
+            strip_rows: opts.strip_rows,
+            file_backed: exec.file_backed,
+        });
+        serialized.push(server.submit(spec)?.wait_output()?);
+    }
+    let serialized_wall_secs = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    let serialized_bytes_read = serialized
+        .iter()
+        .filter_map(|o| o.io_stats)
+        .map(|s| s.bytes_read)
+        .sum();
+
+    // Solo single-worker reference for variant 0 — the same anchor the
+    // service bench uses, closing the loop back to `Coordinator`.
+    let mut solo_cfg = base.clone();
+    solo_cfg.k = variants[0].k;
+    solo_cfg.seed = variants[0].seed;
+    solo_cfg.init = variants[0].init.clone();
+    let coord = Coordinator::new(CoordinatorConfig {
+        exec: exec.with_workers(1),
+        ..Default::default()
+    });
+    let reference = coord.cluster(&img, &solo_cfg)?;
+
+    let identical = |a: &ClusterOutput, b: &ClusterOutput| {
+        a.labels == b.labels
+            && a.centroids == b.centroids
+            && a.inertia.to_bits() == b.inertia.to_bits()
+    };
+    let report = SweepReport::build(&variants, &amortized, img.as_pixels(), img.channels())?;
+    let rows = variants
+        .iter()
+        .zip(&amortized)
+        .zip(&serialized)
+        .enumerate()
+        .map(|(i, ((v, a), s))| SweepBenchRow {
+            label: v.label(),
+            k: v.k,
+            seed: v.seed,
+            init: init_name(&v.init).to_string(),
+            iterations: a.iterations,
+            inertia: a.inertia,
+            db_index: report.rows[i].db_index,
+            matches_solo: identical(a, s) && (i != 0 || identical(a, &reference)),
+        })
+        .collect();
+
+    let ks: Vec<usize> = variants.iter().map(|v| v.k).collect();
+    let w = CostWorkload {
+        height: img.height(),
+        width: img.width(),
+        channels: img.channels(),
+        k: ks[0],
+        rounds: opts.iters,
+        strip_rows: Some(opts.strip_rows),
+    };
+    let predicted = CostModel::baked().predict_sweep(
+        &w,
+        &ks,
+        &exec.block_plan(img.height(), img.width()),
+        exec.kernel,
+        exec.layout,
+        exec.workers,
+        exec.strip_cache,
+        exec.prefetch,
+    );
+
+    Ok(SweepBenchResult {
+        rows,
+        amortized_wall_secs,
+        serialized_wall_secs,
+        amortized_bytes_read,
+        serialized_bytes_read,
+        predicted_bytes_ratio: predicted.bytes_ratio(),
+        best_k: report.best().map(|r| r.variant.k),
+        knee_k: report.knee_k(),
+    })
+}
+
+/// Serialize the result as the `BENCH_sweep.json` document.
+pub fn sweep_bench_json(opts: &SweepBenchOpts, res: &SweepBenchResult) -> String {
+    let num = Json::Num;
+    let mut doc = BTreeMap::new();
+    doc.insert("source".to_string(), Json::Str("rust".to_string()));
+    doc.insert(
+        "image".to_string(),
+        Json::Arr(vec![num(opts.height as f64), num(opts.width as f64)]),
+    );
+    doc.insert("channels".to_string(), num(3.0));
+    doc.insert("iters".to_string(), num(opts.iters as f64));
+    doc.insert("base_seed".to_string(), num(opts.base_seed as f64));
+    doc.insert("seeds".to_string(), num(opts.n_seeds as f64));
+    doc.insert("workers".to_string(), num(opts.workers as f64));
+    doc.insert("strip_rows".to_string(), num(opts.strip_rows as f64));
+    doc.insert(
+        "ks".to_string(),
+        Json::Arr(opts.ks.iter().map(|&k| num(k as f64)).collect()),
+    );
+    doc.insert(
+        "inits".to_string(),
+        Json::Arr(
+            opts.inits
+                .iter()
+                .map(|i| Json::Str(init_name(i).to_string()))
+                .collect(),
+        ),
+    );
+    doc.insert("variants".to_string(), num(res.variants() as f64));
+    doc.insert(
+        "amortized_wall_secs".to_string(),
+        num(res.amortized_wall_secs),
+    );
+    doc.insert(
+        "serialized_wall_secs".to_string(),
+        num(res.serialized_wall_secs),
+    );
+    doc.insert(
+        "amortized_jobs_per_sec".to_string(),
+        num(res.amortized_jobs_per_sec()),
+    );
+    doc.insert(
+        "serialized_jobs_per_sec".to_string(),
+        num(res.serialized_jobs_per_sec()),
+    );
+    doc.insert(
+        "amortized_bytes_read".to_string(),
+        num(res.amortized_bytes_read as f64),
+    );
+    doc.insert(
+        "serialized_bytes_read".to_string(),
+        num(res.serialized_bytes_read as f64),
+    );
+    doc.insert("bytes_read_ratio".to_string(), num(res.bytes_read_ratio()));
+    doc.insert(
+        "predicted_bytes_ratio".to_string(),
+        num(res.predicted_bytes_ratio),
+    );
+    doc.insert(
+        "matches_solo".to_string(),
+        Json::Bool(res.all_match_solo()),
+    );
+    doc.insert(
+        "best_k".to_string(),
+        res.best_k.map_or(Json::Null, |k| num(k as f64)),
+    );
+    doc.insert(
+        "knee_k".to_string(),
+        res.knee_k.map_or(Json::Null, |k| num(k as f64)),
+    );
+    let cases = res
+        .rows
+        .iter()
+        .map(|r| {
+            let mut c = BTreeMap::new();
+            c.insert("label".to_string(), Json::Str(r.label.clone()));
+            c.insert("k".to_string(), num(r.k as f64));
+            c.insert("seed".to_string(), num(r.seed as f64));
+            c.insert("init".to_string(), Json::Str(r.init.clone()));
+            c.insert("iterations".to_string(), num(r.iterations as f64));
+            c.insert("inertia".to_string(), num(r.inertia));
+            c.insert("db_index".to_string(), num(r.db_index));
+            c.insert("matches_solo".to_string(), Json::Bool(r.matches_solo));
+            Json::Obj(c)
+        })
+        .collect();
+    doc.insert("cases".to_string(), Json::Arr(cases));
+    Json::Obj(doc).to_string()
+}
+
+/// Run the grid and write `BENCH_sweep.json` to `path`.
+pub fn write_sweep_bench(path: &Path, opts: &SweepBenchOpts) -> Result<SweepBenchResult> {
+    let res = run_sweep_bench(opts)?;
+    std::fs::write(path, sweep_bench_json(opts, &res))
+        .with_context(|| format!("write sweep bench to {}", path.display()))?;
+    Ok(res)
+}
+
+/// Human-readable rendering: the variant table plus the amortization
+/// headline.
+pub fn render_sweep_bench(opts: &SweepBenchOpts, res: &SweepBenchResult) -> String {
+    let mut t = Table::new(format!(
+        "Sweep: {}x{} scene, {} variants, {} iters, {} workers",
+        opts.width,
+        opts.height,
+        res.variants(),
+        opts.iters,
+        opts.workers
+    ))
+    .header(&["Variant", "Iters", "Inertia", "DB index", "Identical"]);
+    for r in &res.rows {
+        t.row(vec![
+            r.label.clone(),
+            r.iterations.to_string(),
+            format!("{:.4e}", r.inertia),
+            format!("{:.4}", r.db_index),
+            if r.matches_solo { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "\namortized {:.2} jobs/s vs serialized {:.2} jobs/s; bytes ratio {:.3} (model {:.3})\n",
+        res.amortized_jobs_per_sec(),
+        res.serialized_jobs_per_sec(),
+        res.bytes_read_ratio(),
+        res.predicted_bytes_ratio,
+    ));
+    if let (Some(best), Some(knee)) = (res.best_k, res.knee_k) {
+        out.push_str(&format!("model selection: DB best k={best}, inertia knee k={knee}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SweepBenchOpts {
+        SweepBenchOpts {
+            height: 32,
+            width: 24,
+            ks: vec![2, 3],
+            iters: 2,
+            workers: 2,
+            strip_rows: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn bench_amortizes_bytes_and_stays_identical() {
+        let opts = tiny();
+        let res = run_sweep_bench(&opts).unwrap();
+        assert_eq!(res.variants(), 2);
+        assert!(res.all_match_solo(), "{:?}", res.rows);
+        // Row blocks aligned to strips + full cache: the shared sweep
+        // decodes the image exactly once; serialized decodes it per
+        // variant.
+        let image_bytes = (32 * 24 * 3 * 4) as u64;
+        assert_eq!(res.amortized_bytes_read, image_bytes);
+        assert_eq!(res.serialized_bytes_read, 2 * image_bytes);
+        assert!((res.bytes_read_ratio() - 0.5).abs() < 1e-12);
+        assert!(res.predicted_bytes_ratio <= 0.5 + 1e-12);
+    }
+
+    #[test]
+    fn json_has_the_gated_schema() {
+        let opts = tiny();
+        let res = run_sweep_bench(&opts).unwrap();
+        let text = sweep_bench_json(&opts, &res);
+        let doc = Json::parse(&text).expect("valid json");
+        assert_eq!(doc.get("variants").and_then(Json::as_usize), Some(2));
+        assert_eq!(doc.get("matches_solo").and_then(Json::as_bool), Some(true));
+        assert!(doc.get("bytes_read_ratio").and_then(Json::as_f64).is_some());
+        assert!(doc.get("amortized_jobs_per_sec").and_then(Json::as_f64).is_some());
+        let cases = doc.get("cases").and_then(Json::as_arr).expect("cases");
+        assert_eq!(cases.len(), 2);
+        for c in cases {
+            assert!(c.get("label").and_then(Json::as_str).is_some());
+            assert!(c.get("inertia").and_then(Json::as_f64).is_some());
+            assert_eq!(c.get("matches_solo").and_then(Json::as_bool), Some(true));
+        }
+    }
+
+    #[test]
+    fn write_creates_the_file_and_render_mentions_variants() {
+        let path = std::env::temp_dir().join("blockms_test_BENCH_sweep.json");
+        let opts = tiny();
+        let res = write_sweep_bench(&path, &opts).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(&path);
+        let rendered = render_sweep_bench(&opts, &res);
+        assert!(rendered.contains("k2-") && rendered.contains("bytes ratio"), "{rendered}");
+    }
+}

@@ -47,7 +47,7 @@ pub fn blockms_cli() -> Cli {
         .opt("height", Some("800"), "synthetic image height")
         .opt("seed", Some("7"), "workload / init seed")
         .opt("input", None, "input PPM instead of synthetic scene")
-        .opt("out", None, "output path (cluster: label map PPM; kernels/batch/plan/stream: JSON; sweep: CSV)")
+        .opt("out", None, "output path (cluster: label map PPM; kernels/batch/plan/stream/sweep: JSON)")
         .opt("out-input", None, "also write the input scene PPM here")
         .opt("engine", Some("native"), "compute engine: native|pjrt")
         .opt("kernel", Some("naive"), "compute kernel: naive|pruned|fused|lanes")
@@ -72,6 +72,9 @@ pub fn blockms_cli() -> Cli {
         .opt("max-in-flight", Some("4"), "serve: admission cap (backpressure above it)")
         .opt("pools", Some("1,2,4,8"), "batch: comma-separated pool sizes")
         .opt("batches", Some("1,4,16"), "batch: comma-separated batch sizes")
+        .opt("ks", Some("2..8"), "sweep: cluster-count grid, inclusive range (2..8) or list (2,4,8)")
+        .opt("seeds", Some("1"), "sweep: seed replicates per (k, init) — seed, seed+1, …")
+        .opt("inits", Some("random"), "sweep: comma list of init methods: random|plusplus")
         .opt(
             "retries",
             Some("0"),
@@ -107,7 +110,7 @@ pub fn blockms_cli() -> Cli {
             "file-backed",
             "pin the strip store to a real file (otherwise the planner decides under --mem-mb)",
         )
-        .flag("quick", "layout/plan/stream: CI-sized matrix (pins image size, ks, iters)")
+        .flag("quick", "layout/plan/stream/sweep: CI-sized matrix (pins image size, ks, iters)")
         .flag(
             "auto",
             "cluster/serve/plan: planner picks every knob not explicitly pinned \

@@ -65,7 +65,13 @@ pub enum JobPayload {
     /// drop any cached per-job worker state (reader, backend, pruned
     /// bounds). Produces **no** reply message — the leader does not
     /// count retirements.
-    Retire,
+    ///
+    /// `purge_content` names the *content id* whose decoded arena
+    /// tiles should be evicted alongside, if any. Unshared jobs purge
+    /// their own id; sweep variants sharing one image purge `None`
+    /// until the last member of the share group retires (the leader
+    /// knows the refcount, workers do not).
+    Retire { purge_content: Option<u64> },
 }
 
 /// Per-block timing breakdown (feeds the simtime calibration).

@@ -604,6 +604,7 @@ impl Coordinator {
             fault: self.cfg.fault.clone(),
             local_mode: self.cfg.mode == ClusterMode::Local,
             exec: self.cfg.exec,
+            content: SOLO_JOB,
         });
         let pool = WorkerPool::spawn(self.cfg.exec.workers, self.cfg.schedule);
         pool.register_job(SOLO_JOB, ctx);
@@ -700,6 +701,7 @@ impl Coordinator {
             fault: self.cfg.fault.clone(),
             local_mode: self.cfg.mode == ClusterMode::Local,
             exec: self.cfg.exec,
+            content: SOLO_JOB,
         });
         let pool = WorkerPool::spawn(self.cfg.exec.workers, self.cfg.schedule);
         pool.register_job(SOLO_JOB, ctx);

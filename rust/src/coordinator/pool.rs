@@ -111,8 +111,22 @@ impl WorkerPool {
     /// its cached per-job state (backend, reader, pruned bounds). Call
     /// only after all of the job's in-flight outcomes have been
     /// received — a retire overtaking live blocks would fail them.
+    ///
+    /// Unshared jobs own their decoded arena tiles (content id == job
+    /// id), so the plain retire purges them too. Share-group members
+    /// must use [`WorkerPool::retire_job_with`] so only the group's
+    /// last survivor evicts the shared content.
     pub fn retire_job(&self, job: JobId) {
+        self.retire_job_with(job, Some(job));
+    }
+
+    /// [`WorkerPool::retire_job`] with explicit control over which
+    /// arena *content* (if any) workers purge alongside the job's
+    /// private state. `None` keeps shared tiles resident for the
+    /// job's still-running share-group siblings.
+    pub fn retire_job_with(&self, job: JobId, purge_content: Option<u64>) {
         self.registry.remove(job);
+        self.queue.drop_job_group(job);
         for w in 0..self.workers {
             self.queue.push_to_worker(
                 w,
@@ -120,10 +134,17 @@ impl WorkerPool {
                     job,
                     block: usize::MAX,
                     round: 0,
-                    payload: JobPayload::Retire,
+                    payload: JobPayload::Retire { purge_content },
                 },
             );
         }
+    }
+
+    /// Tag `job` as a member of rotation share group `group` (see
+    /// [`JobQueue::set_job_group`]). Call alongside
+    /// [`WorkerPool::register_job`], before the job's first submit.
+    pub fn set_job_group(&self, job: JobId, group: u64) {
+        self.queue.set_job_group(job, group);
     }
 
     /// Remove the job's queued (not yet popped) blocks; returns how many
@@ -314,6 +335,7 @@ mod tests {
             fault,
             local_mode: false,
             exec: crate::plan::ExecPlan::default().with_arena_mb(0),
+            content: SOLO_JOB,
         });
         (ctx, img)
     }

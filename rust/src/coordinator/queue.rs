@@ -49,6 +49,12 @@ struct QueueState {
     shared: BTreeMap<JobId, VecDeque<Job>>,
     /// Round-robin rotation over the job ids present in `shared`.
     rotation: VecDeque<JobId>,
+    /// Share-group tag per job id (sweep variants over one image). Ids
+    /// in the same group are kept **adjacent** in the rotation so
+    /// workers visit a block for every sibling back-to-back while its
+    /// decoded tile is still hot in the arena. Ungrouped ids keep the
+    /// plain round-robin order.
+    groups: BTreeMap<JobId, u64>,
     /// High water of distinct jobs simultaneously queued in `shared`
     /// (instrumentation for the admission-cap tests).
     max_jobs_interleaved: usize,
@@ -62,7 +68,20 @@ impl QueueState {
     fn push_shared(&mut self, job: Job) {
         let q = self.shared.entry(job.job).or_default();
         if q.is_empty() {
-            self.rotation.push_back(job.job);
+            let id = job.job;
+            // Group affinity: slot the id directly after the last
+            // rotation entry of its share group, so same-image
+            // variants are popped consecutively. No group (or no
+            // sibling queued) → plain fair push_back.
+            let slot = self.groups.get(&id).and_then(|g| {
+                self.rotation
+                    .iter()
+                    .rposition(|other| self.groups.get(other) == Some(g))
+            });
+            match slot {
+                Some(pos) => self.rotation.insert(pos + 1, id),
+                None => self.rotation.push_back(id),
+            }
         }
         q.push_back(job);
         self.max_jobs_interleaved = self.max_jobs_interleaved.max(self.shared.len());
@@ -98,6 +117,7 @@ impl JobQueue {
                 per_worker: (0..workers).map(|_| VecDeque::new()).collect(),
                 shared: BTreeMap::new(),
                 rotation: VecDeque::new(),
+                groups: BTreeMap::new(),
                 max_jobs_interleaved: 0,
                 closed: false,
             }),
@@ -169,7 +189,7 @@ impl JobQueue {
             JobPayload::Step { .. } | JobPayload::Assign { .. } | JobPayload::Local { .. } => {
                 Some((job.job, job.block))
             }
-            JobPayload::Ping | JobPayload::Retire => None,
+            JobPayload::Ping | JobPayload::Retire { .. } => None,
         }
     }
 
@@ -204,6 +224,18 @@ impl JobQueue {
         self.cond.notify_all();
     }
 
+    /// Tag `job` as a member of share group `group` for rotation
+    /// affinity. Call before the job's first `push_round` — the tag
+    /// only influences where the id *enters* the rotation.
+    pub fn set_job_group(&self, job: JobId, group: u64) {
+        self.state.lock().unwrap().groups.insert(job, group);
+    }
+
+    /// Drop `job`'s share-group tag (job retired or purged).
+    pub fn drop_job_group(&self, job: JobId) {
+        self.state.lock().unwrap().groups.remove(&job);
+    }
+
     /// Remove every queued (not yet popped) job belonging to `job`.
     /// Returns how many were removed — the leader subtracts them from
     /// its expected-outcome count when cancelling or failing a job.
@@ -215,6 +247,7 @@ impl JobQueue {
             removed += q.len();
         }
         st.rotation.retain(|&id| id != job);
+        st.groups.remove(&job);
         for q in &mut st.per_worker {
             let before = q.len();
             q.retain(|j| j.job != job);
@@ -317,6 +350,34 @@ mod tests {
             vec![(1, 0), (2, 0), (1, 1), (2, 1), (1, 2), (2, 2)]
         );
         assert_eq!(q.max_jobs_interleaved(), 2);
+    }
+
+    #[test]
+    fn grouped_jobs_stay_adjacent_in_rotation() {
+        // Jobs 1 and 3 share an image (group 7); job 2 is unrelated.
+        // The rotation must visit the siblings back-to-back —
+        // (1,b),(3,b) pairs — instead of interleaving job 2 between
+        // them, so the shared tile for block b stays hot.
+        let q = JobQueue::new(1, Schedule::Dynamic);
+        q.set_job_group(1, 7);
+        q.set_job_group(3, 7);
+        q.push_round((0..2).map(|b| tagged(1, b)).collect());
+        q.push_round((0..2).map(|b| tagged(2, b)).collect());
+        q.push_round((0..2).map(|b| tagged(3, b)).collect());
+        let order: Vec<(JobId, usize)> =
+            (0..6).map(|_| q.pop(0).map(|j| (j.job, j.block)).unwrap()).collect();
+        assert_eq!(
+            order,
+            vec![(1, 0), (3, 0), (2, 0), (1, 1), (3, 1), (2, 1)]
+        );
+        // purge drops the group tag; a re-queued sibling falls back to
+        // plain rotation order.
+        q.purge_job(1);
+        q.drop_job_group(3);
+        q.push_round(vec![tagged(2, 9)]);
+        q.push_round(vec![tagged(3, 9)]);
+        let order: Vec<JobId> = (0..2).map(|_| q.pop(0).unwrap().job).collect();
+        assert_eq!(order, vec![2, 3]);
     }
 
     #[test]

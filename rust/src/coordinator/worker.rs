@@ -3,10 +3,15 @@
 //! Since the service layer landed, one worker serves **many concurrent
 //! clustering jobs**: per-job contexts are looked up in a shared
 //! [`ContextRegistry`], and all mutable worker state — compute backend,
-//! block reader, pruned bounds, SoA tiles — is keyed by [`JobId`]
-//! (bounds and tiles by `(job, block)`) so interleaved jobs can never
-//! contaminate each other. A [`JobPayload::Retire`] message drops a
-//! finished job's cached state.
+//! block reader, pruned bounds — is keyed by [`JobId`] (bounds by
+//! `(job, block)`) so interleaved jobs can never contaminate each
+//! other. Decoded SoA tiles are keyed by `(content, block)` instead:
+//! sweep variants over one image carry the same
+//! [`WorkerContext::content`] id and share tiles (one decode for N
+//! variants), while unrelated jobs keep distinct content ids and stay
+//! isolated. A [`JobPayload::Retire`] message drops a finished job's
+//! cached state; its `purge_content` says whether the shared tiles go
+//! too (only when the last share-group member leaves).
 //!
 //! Two layers sit between the block source and the compute backend:
 //!
@@ -71,6 +76,15 @@ pub struct WorkerContext {
     /// pool). Kernel/layout choices are bit-identical; see
     /// [`crate::kmeans::kernel`] and [`crate::kmeans::tile`].
     pub exec: ExecPlan,
+    /// *Content id* for the tile arena: jobs reading the same pixels
+    /// (sweep variants over one image) share it, so a block decoded +
+    /// deinterleaved by one variant is a hit for every sibling —
+    /// `(content, block)` keys the arena where the seed keyed
+    /// `(job, block)`. Unshared jobs use their own job id (the solo
+    /// coordinator uses [`super::messages::SOLO_JOB`]), which restores
+    /// the seed's exact keying. Tiles are immutable once inserted, so
+    /// sharing is value-safe; pruning state stays keyed by job.
+    pub content: u64,
 }
 
 impl WorkerContext {
@@ -383,10 +397,15 @@ pub fn worker_main(
     let mut prune: HashMap<(JobId, usize), BlockPrune> = HashMap::new();
     let mut arena = TileArena::new(0); // budget set from the filling job's context
     while let Some(job) = queue.pop(worker_id) {
-        if matches!(job.payload, JobPayload::Retire) {
+        if let JobPayload::Retire { purge_content } = job.payload {
             engines.remove(&job.job);
             prune.retain(|(j, _), _| *j != job.job);
-            arena.purge_job(job.job);
+            // Arena tiles are keyed by *content*, which share-group
+            // siblings may still be using — the leader tells us when
+            // the last member leaves (None = keep shared tiles hot).
+            if let Some(content) = purge_content {
+                arena.purge_job(content);
+            }
             continue;
         }
         // AssertUnwindSafe is sound here: everything the closure mutates
@@ -410,9 +429,13 @@ pub fn worker_main(
             Ok(Err(error)) => {
                 // Recoverable failure: evict this worker's possibly
                 // half-mutated state for the failed block so a retry
-                // recomputes from the shipped centroids alone.
+                // recomputes from the shipped centroids alone. The
+                // arena tile lives under the job's *content* id —
+                // evicting a shared tile is conservative (siblings
+                // re-fill bit-identically from the same bytes).
                 prune.remove(&(job.job, job.block));
-                arena.remove((job.job, job.block));
+                let content = engines.get(&job.job).map_or(job.job, |e| e.ctx.content);
+                arena.remove((content, job.block));
                 Err(JobError {
                     job: job.job,
                     block: job.block,
@@ -421,9 +444,11 @@ pub fn worker_main(
             }
             Err(payload) => {
                 let msg = panic_message(payload.as_ref());
-                engines.remove(&job.job);
+                let content = engines
+                    .remove(&job.job)
+                    .map_or(job.job, |e| e.ctx.content);
                 prune.retain(|(j, _), _| *j != job.job);
-                arena.purge_job(job.job);
+                arena.purge_job(content);
                 Err(JobError {
                     job: job.job,
                     block: job.block,
@@ -470,7 +495,7 @@ fn dispatch_job(
         if next_job != job.job {
             if let Some(next_engine) = engines.get_mut(&next_job) {
                 let resident = next_engine.ctx.exec.layout == TileLayout::Soa
-                    && arena.contains((next_job, next_block));
+                    && arena.contains((next_engine.ctx.content, next_block));
                 if !resident {
                     if let Some(pf) = next_engine.prefetch.as_mut() {
                         pf.issue(next_block);
@@ -541,10 +566,14 @@ fn run_job(
         JobPayload::Step { .. } | JobPayload::Assign { .. }
     );
     let use_arena = is_block_pass && ctx.exec.layout == TileLayout::Soa;
+    // Pruning state is private per job (bounds track each variant's own
+    // centroids); decoded tiles are shared per *content* — a sweep
+    // sibling's fill is this job's hit.
     let key = (job.job, job.block);
+    let tile_key = (ctx.content, job.block);
     let t_io = Instant::now();
     let tile: Option<Arc<SoaTile>> = if use_arena {
-        let tile = match arena.get(key) {
+        let tile = match arena.get(tile_key) {
             Some(tile) => tile,
             None => {
                 // High-water budget + per-job admission cap: this job's
@@ -554,7 +583,7 @@ fn run_job(
                     .read_pixels(job.block, px_buf)
                     .with_context(|| format!("worker {worker_id}: read block {}", job.block))?;
                 arena.insert_within(
-                    key,
+                    tile_key,
                     SoaTile::from_interleaved(px_buf, ctx.plan_channels()),
                     ctx.exec.arena_bytes(),
                 )
@@ -577,7 +606,9 @@ fn run_job(
     // start, ask the sidecar to fill the next queued block of this job.
     if let Some(pf) = engine.prefetch.as_mut() {
         if let Some((next_job, next_block)) = queue.peek_next(worker_id) {
-            let arena_resident = use_arena && arena.contains((next_job, next_block));
+            // Same job ⇒ same content id, so this covers a sibling's
+            // earlier fill of the next block too.
+            let arena_resident = use_arena && arena.contains((ctx.content, next_block));
             if next_job == job.job && next_block != job.block && !arena_resident {
                 pf.issue(next_block);
             }
@@ -662,7 +693,7 @@ fn run_job(
                 counts,
             }
         }
-        JobPayload::Ping | JobPayload::Retire => unreachable!("handled above"),
+        JobPayload::Ping | JobPayload::Retire { .. } => unreachable!("handled above"),
     };
     let compute_secs = t_c.elapsed().as_secs_f64();
 
@@ -700,6 +731,7 @@ mod tests {
             fault: None,
             local_mode: false,
             exec: ExecPlan::default().with_arena_mb(0),
+            content: crate::coordinator::messages::SOLO_JOB,
         });
         assert_eq!(reg.register(3, Arc::clone(&ctx)), 1);
         assert_eq!(reg.register(5, ctx), 2);
@@ -725,6 +757,7 @@ mod tests {
             fault: None,
             local_mode: false,
             exec: ExecPlan::default().with_arena_mb(0).with_prefetch(true),
+            content: crate::coordinator::messages::SOLO_JOB,
         };
         let mut pf = Prefetcher::spawn(0, &ctx).unwrap();
         // predicted correctly: the buffer is exactly the block crop

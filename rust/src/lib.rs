@@ -10,7 +10,9 @@
 //!   that resolves every run into one cost-model-chosen [`plan::ExecPlan`]
 //!   ([`plan`]), a leader/worker SPMD pool ([`coordinator`]), a
 //!   persistent multi-job serving layer that drives many clustering jobs
-//!   over one shared pool with admission control ([`service`]), a
+//!   over one shared pool with admission control ([`service`]), an
+//!   amortized multi-variant sweep layer that runs a `(k, seed, init)`
+//!   grid over one image with a single decode pass ([`sweep`]), a
 //!   discrete-event worker simulator for speedup studies ([`simtime`]),
 //!   the sequential baseline ([`kmeans`]), and the paper-table bench
 //!   harness ([`bench`]).
@@ -34,6 +36,7 @@ pub mod runtime;
 pub mod service;
 pub mod simtime;
 pub mod stripstore;
+pub mod sweep;
 pub mod util;
 
 /// Convenient re-exports of the types most programs need.
@@ -55,4 +58,5 @@ pub mod prelude {
     };
     pub use crate::simtime::{SimParams, WorkerSim};
     pub use crate::stripstore::StripStore;
+    pub use crate::sweep::{SweepGrid, SweepReport, SweepVariant};
 }

@@ -9,8 +9,15 @@
 //! - `plan`          rank candidate execution plans (shape × kernel ×
 //!                   layout × cache × prefetch) by predicted cost —
 //!                   the explain table; never touches pixels;
-//! - `paper-tables`  regenerate the paper's Tables 1–19 (+ figure series);
+//! - `paper-tables`  regenerate the paper's Tables 1–19 (+ figure series;
+//!                   `--out` also exports every cell as one flat CSV);
 //! - `cases`         regenerate the §4 Cases 1–3 block-size I/O analysis;
+//! - `sweep`         amortized multi-variant sweep: a (k, seed, init) grid
+//!                   over one image as a single share group — one decoded
+//!                   pass serves every variant, bit-identical to solo runs —
+//!                   ranked into an elbow report -> BENCH_sweep.json
+//!                   (`--ks 2..8 | 2,4,8`, `--seeds N`, `--inits
+//!                   random,plusplus`; `--quick` for the CI smoke size);
 //! - `layout`        interleaved-vs-SoA × kernel × block-shape matrix ->
 //!                   BENCH_layout.json (`--quick` for the CI smoke size);
 //! - `stream`        streamed-vs-in-memory out-of-core pipeline ->
@@ -677,6 +684,35 @@ fn cmd_tables(args: &Args) -> Result<()> {
         let text = run_table(id, &opts)?;
         println!("{text}");
     }
+    // --out additionally exports every table cell as one flat CSV (the
+    // spreadsheet-side view of the same sweep_all pass).
+    if let Some(out) = args.get("out") {
+        use blockms::bench::tables::sweep_all;
+        use blockms::util::csv::Csv;
+        let rows = sweep_all(&opts)?;
+        let mut csv = Csv::new(&[
+            "table", "approach", "k", "workers", "data_size", "serial_s", "parallel_s", "speedup",
+            "efficiency", "blocks", "strip_reads_per_pass", "wall_s",
+        ]);
+        for (table, r) in &rows {
+            csv.row([
+                table.to_string(),
+                r.approach.to_string(),
+                r.k.to_string(),
+                r.workers.to_string(),
+                r.data_size.clone(),
+                format!("{:.6}", r.serial_secs),
+                format!("{:.6}", r.parallel_secs),
+                format!("{:.4}", r.speedup),
+                format!("{:.4}", r.efficiency),
+                r.blocks.to_string(),
+                r.strip_reads.to_string(),
+                format!("{:.4}", r.wall_secs),
+            ]);
+        }
+        csv.write_to(Path::new(out))?;
+        println!("wrote {} cells to {out}", csv.len());
+    }
     Ok(())
 }
 
@@ -687,34 +723,61 @@ fn cmd_cases(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Amortized multi-variant sweep: run a `(k, seed, init)` grid over
+/// one image as a single share group (one read, many models), rank the
+/// variants with the quality metrics, and write `BENCH_sweep.json`
+/// (see EXPERIMENTS.md §Sweep for the schema). Grid syntax errors and
+/// empty grids (`--ks 8..2`, `--seeds 0`) are usage mistakes: exit 2.
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use blockms::bench::tables::sweep_all;
-    use blockms::util::csv::Csv;
-    let opts = sweep_opts(args)?;
-    let out_path = args.get("out").unwrap_or("sweep.csv").to_string();
-    let rows = sweep_all(&opts)?;
-    let mut csv = Csv::new(&[
-        "table", "approach", "k", "workers", "data_size", "serial_s", "parallel_s", "speedup",
-        "efficiency", "blocks", "strip_reads_per_pass", "wall_s",
-    ]);
-    for (table, r) in &rows {
-        csv.row([
-            table.to_string(),
-            r.approach.to_string(),
-            r.k.to_string(),
-            r.workers.to_string(),
-            r.data_size.clone(),
-            format!("{:.6}", r.serial_secs),
-            format!("{:.6}", r.parallel_secs),
-            format!("{:.4}", r.speedup),
-            format!("{:.4}", r.efficiency),
-            r.blocks.to_string(),
-            r.strip_reads.to_string(),
-            format!("{:.4}", r.wall_secs),
-        ]);
+    use blockms::bench::sweep::{render_sweep_bench, write_sweep_bench, SweepBenchOpts};
+    use blockms::sweep::{parse_inits, parse_ks};
+    let opts = Opts::load(args)?;
+    let bad = |flag: &str, raw: &str, e: &anyhow::Error| {
+        anyhow::Error::new(CliError::BadValue(
+            flag.to_string(),
+            raw.to_string(),
+            e.to_string(),
+        ))
+    };
+
+    // --quick pins the CI geometry (image size, ks, iters); everything
+    // the user types explicitly still wins in either mode.
+    let mut bopts = if args.flag("quick") {
+        SweepBenchOpts::quick()
+    } else {
+        SweepBenchOpts::default()
+    };
+    if !args.flag("quick") || args.provided("ks") {
+        let raw = opts.require::<String>("ks", "sweep.ks")?;
+        bopts.ks = parse_ks(&raw).map_err(|e| bad("ks", &raw, &e))?;
     }
-    csv.write_to(Path::new(&out_path))?;
-    println!("wrote {} cells to {out_path}", csv.len());
+    let raw_inits = opts.require::<String>("inits", "sweep.inits")?;
+    bopts.inits = parse_inits(&raw_inits).map_err(|e| bad("inits", &raw_inits, &e))?;
+    bopts.n_seeds = positive(opts.require("seeds", "sweep.seeds")?, "seeds")?;
+    if let Some(seed) = opts.pinned::<u64>("seed", "workload.seed")? {
+        bopts.base_seed = seed;
+    }
+    if let Some(h) = opts.pinned::<usize>("height", "workload.height")? {
+        bopts.height = positive(h, "height")?;
+    }
+    if let Some(w) = opts.pinned::<usize>("width", "workload.width")? {
+        bopts.width = positive(w, "width")?;
+    }
+    if let Some(iters) = opts.pinned::<usize>("bench-iters", "bench.iters")? {
+        bopts.iters = positive(iters, "bench-iters")?;
+    }
+    if let Some(workers) = opts.pinned::<usize>("workers", "run.workers")? {
+        bopts.workers = positive(workers, "workers")?;
+    }
+    if let Some(rows) = opts.pinned::<usize>("strip-rows", "io.strip_rows")? {
+        bopts.strip_rows = positive(rows, "strip-rows")?;
+    }
+    bopts.input = args.get("input").map(PathBuf::from);
+
+    let out = args.get("out").unwrap_or("BENCH_sweep.json").to_string();
+    let res = write_sweep_bench(Path::new(&out), &bopts)?;
+    print!("{}", render_sweep_bench(&bopts, &res));
+    println!("wrote {out}");
     Ok(())
 }
 

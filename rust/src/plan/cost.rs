@@ -107,6 +107,38 @@ pub struct PlanCost {
     pub strip_transfers: u64,
 }
 
+/// Predicted cost of a multi-variant sweep over one image, both ways
+/// of running it (see [`CostModel::predict_sweep`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SweepCost {
+    /// One share group: tiles keyed by content, the image's strips
+    /// decode once for the whole sweep.
+    pub amortized: PlanCost,
+    /// Each variant isolated: N variants pay N full I/O passes.
+    pub serialized: PlanCost,
+}
+
+impl SweepCost {
+    /// Predicted `amortized / serialized` decode-byte ratio — the
+    /// headline "N variants ≠ N× bytes read" number (≈ 1/N when I/O
+    /// dominates; 1.0 when the workload has no strip I/O at all).
+    pub fn bytes_ratio(&self) -> f64 {
+        if self.serialized.decode_bytes == 0 {
+            return 1.0;
+        }
+        self.amortized.decode_bytes as f64 / self.serialized.decode_bytes as f64
+    }
+
+    /// Predicted wall-clock speedup of the shared sweep over running
+    /// the variants one by one.
+    pub fn wall_speedup(&self) -> f64 {
+        if self.amortized.wall_secs <= 0.0 {
+            return 1.0;
+        }
+        self.serialized.wall_secs / self.amortized.wall_secs
+    }
+}
+
 /// The analytic model. See module docs.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CostModel {
@@ -473,6 +505,80 @@ impl CostModel {
             strip_transfers,
         }
     }
+
+    /// Sweep-aware cost: `ks` variants over **one** image (same
+    /// geometry, varying cluster count), predicted both ways.
+    ///
+    /// - *Serialized* is the naive plan: every term of [`predict`]
+    ///   summed over the variants — N variants read the image N times.
+    /// - *Amortized* is the share-group plan the [`crate::sweep`]
+    ///   runner executes: compute still sums (every variant does its
+    ///   own Lloyd arithmetic — bit-identity forbids sharing that), but
+    ///   the I/O terms are **one** variant's, because content-keyed
+    ///   tiles and the shared strip store decode each strip once for
+    ///   the whole group. The transfer count is k-independent, so one
+    ///   variant's I/O stands for the group's exactly.
+    ///
+    /// [`predict`]: CostModel::predict
+    #[allow(clippy::too_many_arguments)]
+    pub fn predict_sweep(
+        &self,
+        w: &Workload,
+        ks: &[usize],
+        plan: &BlockPlan,
+        kernel: KernelChoice,
+        layout: TileLayout,
+        workers: usize,
+        strip_cache: usize,
+        prefetch: bool,
+    ) -> SweepCost {
+        let zero = PlanCost {
+            wall_secs: 0.0,
+            ns_per_pixel_pass: 0.0,
+            compute_secs: 0.0,
+            io_secs: 0.0,
+            decode_bytes: 0,
+            strip_transfers: 0,
+        };
+        let per: Vec<PlanCost> = ks
+            .iter()
+            .map(|&k| {
+                let wk = Workload { k, ..*w };
+                self.predict(&wk, plan, kernel, layout, workers, strip_cache, prefetch)
+            })
+            .collect();
+        let Some(first) = per.first().copied() else {
+            return SweepCost { amortized: zero, serialized: zero };
+        };
+
+        let n_px = w.pixels() as f64;
+        let total_passes = (w.passes() * ks.len()) as f64;
+        let serialized = PlanCost {
+            wall_secs: per.iter().map(|c| c.wall_secs).sum(),
+            ns_per_pixel_pass: per.iter().map(|c| c.wall_secs).sum::<f64>() * 1e9
+                / (n_px * total_passes),
+            compute_secs: per.iter().map(|c| c.compute_secs).sum(),
+            io_secs: per.iter().map(|c| c.io_secs).sum(),
+            decode_bytes: per.iter().map(|c| c.decode_bytes).sum(),
+            strip_transfers: per.iter().map(|c| c.strip_transfers).sum(),
+        };
+
+        let compute_secs: f64 = per.iter().map(|c| c.compute_secs).sum();
+        let wall_secs = if prefetch {
+            compute_secs.max(first.io_secs)
+        } else {
+            compute_secs + first.io_secs
+        };
+        let amortized = PlanCost {
+            wall_secs,
+            ns_per_pixel_pass: wall_secs * 1e9 / (n_px * total_passes),
+            compute_secs,
+            io_secs: first.io_secs,
+            decode_bytes: first.decode_bytes,
+            strip_transfers: first.strip_transfers,
+        };
+        SweepCost { amortized, serialized }
+    }
 }
 
 /// Piecewise-linear interpolation over a sorted `(k, ns)` series,
@@ -737,6 +843,56 @@ mod tests {
         m.refine(KernelChoice::Naive, TileLayout::Soa, 4, f64::NAN);
         m.refine(KernelChoice::Naive, TileLayout::Soa, 4, -1.0);
         assert_eq!(m.compute_ns_px_pass(KernelChoice::Naive, TileLayout::Soa, 4), after);
+    }
+
+    #[test]
+    fn sweep_amortizes_io_but_never_compute() {
+        let m = CostModel::baked();
+        let w = workload(Some(64));
+        let ks = [2, 4, 8];
+        let plan = BlockPlan::new(1024, 1024, BlockShape::Cols { band_cols: 205 });
+        let s = m.predict_sweep(
+            &w, &ks, &plan, KernelChoice::Naive, TileLayout::Interleaved, 4, 0, false,
+        );
+        // Transfers are k-independent, so serialized I/O is exactly N×.
+        assert_eq!(s.serialized.decode_bytes, 3 * s.amortized.decode_bytes);
+        assert_eq!(s.serialized.strip_transfers, 3 * s.amortized.strip_transfers);
+        assert!((s.bytes_ratio() - 1.0 / 3.0).abs() < 1e-12);
+        // Bit-identity forbids sharing arithmetic: compute sums both ways.
+        assert!((s.amortized.compute_secs - s.serialized.compute_secs).abs() < 1e-12);
+        // Column shapes re-read under this config, so sharing must win wall.
+        assert!(s.amortized.io_secs > 0.0);
+        assert!(s.amortized.wall_secs < s.serialized.wall_secs);
+        assert!(s.wall_speedup() > 1.0);
+    }
+
+    #[test]
+    fn single_variant_sweep_degenerates_to_predict() {
+        let m = CostModel::baked();
+        let w = workload(Some(64));
+        let plan = BlockPlan::new(1024, 1024, BlockShape::Cols { band_cols: 205 });
+        let one = m.predict(&w, &plan, KernelChoice::Pruned, TileLayout::Soa, 4, 0, false);
+        let s = m.predict_sweep(
+            &w, &[w.k], &plan, KernelChoice::Pruned, TileLayout::Soa, 4, 0, false,
+        );
+        assert_eq!(s.amortized, one);
+        assert_eq!(s.serialized, one);
+        assert_eq!(s.bytes_ratio(), 1.0);
+        assert_eq!(s.wall_speedup(), 1.0);
+    }
+
+    #[test]
+    fn direct_io_sweep_has_nothing_to_amortize() {
+        let m = CostModel::baked();
+        let w = workload(None);
+        let plan = BlockPlan::new(1024, 1024, BlockShape::Square { side: 459 });
+        let s = m.predict_sweep(
+            &w, &[2, 4], &plan, KernelChoice::Naive, TileLayout::Interleaved, 4, 0, false,
+        );
+        assert_eq!(s.amortized.decode_bytes, 0);
+        assert_eq!(s.bytes_ratio(), 1.0, "no strip I/O: ratio pins to 1");
+        // Wall still sums — a sweep is never cheaper than its compute.
+        assert!((s.amortized.wall_secs - s.serialized.wall_secs).abs() < 1e-12);
     }
 
     #[test]

@@ -34,7 +34,7 @@
 mod cost;
 mod explain;
 
-pub use cost::{CostModel, PlanCost, Workload, CALIB_KS, REF_WORKERS};
+pub use cost::{CostModel, PlanCost, SweepCost, Workload, CALIB_KS, REF_WORKERS};
 pub use explain::{Candidate, Explain};
 
 use crate::blocks::{ApproachKind, BlockPlan, BlockShape};

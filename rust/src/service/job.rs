@@ -100,6 +100,15 @@ pub struct JobSpec {
     /// of the same configuration (global mode). Loaded at activation;
     /// a fingerprint or format mismatch fails the job at that point.
     pub resume: Option<PathBuf>,
+    /// Share-group tag for amortized sweeps. Jobs submitted with the
+    /// same group id over the **same image** share one strip store and
+    /// one set of decoded arena tiles (content-keyed), and are
+    /// co-scheduled so shared strips stay hot — N variants cost ~1
+    /// read. `None` (the default) keeps the seed's fully isolated
+    /// per-job I/O. Activation validates that group members agree on
+    /// geometry and strip layout; results stay bit-identical to solo
+    /// runs either way.
+    pub share: Option<u64>,
 }
 
 impl JobSpec {
@@ -116,6 +125,7 @@ impl JobSpec {
             engine: Engine::Native,
             fault: None,
             resume: None,
+            share: None,
         }
     }
 
@@ -137,6 +147,7 @@ impl JobSpec {
             engine: Engine::Native,
             fault: None,
             resume: None,
+            share: None,
         })
     }
 
@@ -162,6 +173,7 @@ impl JobSpec {
             engine: Engine::Native,
             fault: None,
             resume: None,
+            share: None,
         }
     }
 
@@ -249,6 +261,13 @@ impl JobSpec {
         self
     }
 
+    /// Join share group `group`: same-image jobs under one group id
+    /// share a strip store and decoded tiles (see [`JobSpec::share`]).
+    pub fn with_share_group(mut self, group: u64) -> JobSpec {
+        self.share = Some(group);
+        self
+    }
+
     /// The block tiling this job runs — derived from the embedded plan
     /// against the actual image geometry, exactly as the solo
     /// coordinator does, so identical specs tile identically on both
@@ -278,6 +297,16 @@ impl JobSpec {
             ensure!(
                 !matches!(self.cluster.init, InitMethod::PlusPlus),
                 "k-means++ init needs the full image; streaming jobs use RandomSample"
+            );
+        }
+        if self.share.is_some() {
+            ensure!(
+                matches!(self.input, JobInput::Raster(_)),
+                "share groups need a resident raster (streaming jobs own their ingestion)"
+            );
+            ensure!(
+                matches!(self.io, IoMode::Strips { .. }),
+                "share groups amortize strip I/O; use IoMode::Strips"
             );
         }
         Ok(())
@@ -488,6 +517,31 @@ mod tests {
         let mut pp = s;
         pp.cluster.init = crate::kmeans::InitMethod::PlusPlus;
         assert!(pp.validate().is_err());
+    }
+
+    #[test]
+    fn share_group_requires_raster_strips() {
+        // direct I/O: nothing to share
+        assert!(spec(16, 16).with_share_group(1).validate().is_err());
+        // raster + strips: fine
+        let ok = spec(16, 16)
+            .with_io(IoMode::Strips {
+                strip_rows: 8,
+                file_backed: false,
+            })
+            .with_share_group(1);
+        assert!(ok.validate().is_ok());
+        // streaming inputs own their ingestion pass
+        let gen = SyntheticOrtho::default().with_seed(5);
+        let s = JobSpec::from_synthetic(
+            gen,
+            16,
+            16,
+            ExecPlan::pinned(BlockShape::Square { side: 8 }),
+            ClusterConfig::default(),
+        )
+        .with_share_group(1);
+        assert!(s.validate().is_err());
     }
 
     #[test]

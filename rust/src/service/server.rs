@@ -38,6 +38,7 @@ use crate::coordinator::{
     run_fingerprint, BlockSource, ClusterMode, ClusterOutput, IoMode, Job, JobError, JobId,
     JobOutcome, RunMachine, Schedule, WorkerContext, WorkerPool,
 };
+use crate::image::Raster;
 use crate::kmeans::StreamInit;
 use crate::resilience::Checkpoint;
 use crate::stripstore::{Backing, StripStore};
@@ -231,6 +232,8 @@ struct ActiveJob {
     blocks: usize,
     cancelling: bool,
     failed: Option<String>,
+    /// Share-group id this job belongs to, if any (amortized sweeps).
+    share: Option<u64>,
     /// Per-block retry budget per round ([`crate::plan::ExecPlan::retries`]).
     retries: usize,
     /// Spare clones of the in-flight round's jobs, by block — the
@@ -241,9 +244,33 @@ struct ActiveJob {
     attempts: HashMap<usize, usize>,
 }
 
+/// One live share group: same-image sweep variants reusing a single
+/// strip store and one arena content id. Created by the first member
+/// to activate, refcounted by activations/finalizations, torn down —
+/// shared tiles purged, backing dir swept — when the last member
+/// leaves.
+struct ShareGroup {
+    /// The raster the group was created over. Later members must carry
+    /// the **same** `Arc` (pointer identity) — sharing decoded tiles
+    /// across different pixels would corrupt results, so a mismatch is
+    /// an activation error, not a silent un-share.
+    image: Arc<Raster>,
+    /// Arena content id every member's tiles live under (the creating
+    /// member's job id).
+    content: JobId,
+    /// Members activated and not yet finalized.
+    refs: usize,
+    store: Arc<StripStore>,
+    /// Backing-file directory, swept when the group dies.
+    store_dir: Option<PathBuf>,
+    strip_rows: usize,
+}
+
 struct ServingLoop {
     pool: WorkerPool,
     active: HashMap<JobId, ActiveJob>,
+    /// Live share groups by group id (amortized sweeps).
+    groups: HashMap<u64, ShareGroup>,
     admission: Arc<Admission>,
     stats: Arc<StatsShared>,
     /// Strip-store directories of finished jobs, removed once the last
@@ -257,6 +284,7 @@ impl ServingLoop {
         ServingLoop {
             pool,
             active: HashMap::new(),
+            groups: HashMap::new(),
             admission,
             stats,
             cleanup_dirs: Vec::new(),
@@ -379,6 +407,10 @@ impl ServingLoop {
         // jobs — even on different servers — never collide on a backing
         // file.
         let mut store_dir = None;
+        // Arena content id: share-group joiners adopt the creator's so
+        // decoded tiles are shared; everyone else keys by their own id
+        // (the seed behaviour).
+        let mut content = new.id;
         let (source, store, init_centroids) = match (&spec.input, &spec.io) {
             (JobInput::Raster(img), IoMode::Direct) => {
                 // Same init draw as the solo Coordinator and the
@@ -392,22 +424,48 @@ impl ServingLoop {
                 (BlockSource::Direct(Arc::clone(img)), None, init)
             }
             (JobInput::Raster(img), IoMode::Strips { strip_rows, file_backed }) => {
-                let backing = if *file_backed {
-                    let dir = job_store_dir(new.id);
-                    store_dir = Some(dir.clone());
-                    Backing::File(dir)
-                } else {
-                    Backing::Memory
-                };
-                let mut store = StripStore::new(img, *strip_rows, backing)?;
-                store.enable_cache(spec.exec.strip_cache);
-                let store = Arc::new(store);
+                // Same init draw whether or not the job shares a store:
+                // sharing changes *where bytes come from*, never the
+                // model — bit-identity to the solo run starts here.
                 let init = spec.cluster.init.centroids(
                     img.as_pixels(),
                     spec.cluster.k,
                     channels,
                     spec.cluster.seed,
                 );
+                let store = match spec.share.and_then(|g| self.groups.get(&g)) {
+                    Some(sg) => {
+                        // Join the live group: one store, one content id
+                        // for N variants. Geometry must match exactly —
+                        // shared tiles over different pixels would
+                        // corrupt results, so mismatches fail loudly.
+                        anyhow::ensure!(
+                            Arc::ptr_eq(&sg.image, img),
+                            "share-group member was submitted with a different image \
+                             than the group's creator (same Arc<Raster> required)"
+                        );
+                        anyhow::ensure!(
+                            sg.strip_rows == *strip_rows,
+                            "share-group strip_rows mismatch: group uses {}, job wants {}",
+                            sg.strip_rows,
+                            strip_rows
+                        );
+                        content = sg.content;
+                        Arc::clone(&sg.store)
+                    }
+                    None => {
+                        let backing = if *file_backed {
+                            let dir = job_store_dir(new.id);
+                            store_dir = Some(dir.clone());
+                            Backing::File(dir)
+                        } else {
+                            Backing::Memory
+                        };
+                        let mut store = StripStore::new(img, *strip_rows, backing)?;
+                        store.enable_cache(spec.exec.strip_cache);
+                        Arc::new(store)
+                    }
+                };
                 (BlockSource::Strips(Arc::clone(&store)), Some(store), init)
             }
             (input, IoMode::Strips { strip_rows, file_backed }) => {
@@ -450,6 +508,7 @@ impl ServingLoop {
             fault: spec.fault.clone(),
             local_mode: spec.mode == ClusterMode::Local,
             exec: spec.exec,
+            content,
         });
         // Budgeted jobs spool their label map during the run — the same
         // rule the planner's resident model assumed at admission. The
@@ -483,6 +542,39 @@ impl ServingLoop {
             );
             machine.restore(&ck)?;
         }
+        // Share-group bookkeeping only after every fallible activation
+        // step: a failed join/create must not leak a refcount. The
+        // group also inherits the creator's backing dir — it outlives
+        // any single member.
+        if let Some(g) = spec.share {
+            match self.groups.get_mut(&g) {
+                Some(sg) => sg.refs += 1,
+                None => {
+                    let strip_rows = match &spec.io {
+                        IoMode::Strips { strip_rows, .. } => *strip_rows,
+                        IoMode::Direct => unreachable!("validate(): share implies strips"),
+                    };
+                    self.groups.insert(
+                        g,
+                        ShareGroup {
+                            image: Arc::clone(
+                                spec.raster().expect("validate(): share implies raster"),
+                            ),
+                            content,
+                            refs: 1,
+                            store: Arc::clone(
+                                store.as_ref().expect("share implies a strip store"),
+                            ),
+                            store_dir: store_dir.take(),
+                            strip_rows,
+                        },
+                    );
+                }
+            }
+            // Rotation affinity: co-schedule the group's members so a
+            // freshly decoded tile is immediately reused by siblings.
+            self.pool.set_job_group(new.id, g);
+        }
         self.pool.register_job(new.id, ctx);
         self.mirror_pool_stats();
         let jobs = machine.start_round(new.id);
@@ -507,6 +599,7 @@ impl ServingLoop {
                 blocks: plan.len(),
                 cancelling: false,
                 failed: None,
+                share: spec.share,
                 retries,
                 round_jobs,
                 attempts: HashMap::new(),
@@ -655,7 +748,28 @@ impl ServingLoop {
     /// release the admission slot.
     fn finalize(&mut self, id: JobId) {
         let aj = self.active.remove(&id).expect("finalize on active job");
-        self.pool.retire_job(id);
+        match aj.share {
+            None => self.pool.retire_job(id),
+            Some(g) => {
+                // Refcounted teardown: only the group's last survivor
+                // purges the shared tiles and sweeps the backing dir —
+                // earlier leavers keep them hot for their siblings.
+                let sg = self
+                    .groups
+                    .get_mut(&g)
+                    .expect("share group alive while members are");
+                sg.refs -= 1;
+                if sg.refs == 0 {
+                    let sg = self.groups.remove(&g).expect("just seen");
+                    self.pool.retire_job_with(id, Some(sg.content));
+                    if let Some(dir) = sg.store_dir {
+                        self.cleanup_dirs.push(dir);
+                    }
+                } else {
+                    self.pool.retire_job_with(id, None);
+                }
+            }
+        }
         self.mirror_pool_stats();
         if let Some(dir) = aj.store_dir {
             self.cleanup_dirs.push(dir);
@@ -954,6 +1068,50 @@ mod tests {
             );
             std::thread::sleep(std::time::Duration::from_millis(25));
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn share_group_jobs_match_their_solo_twins() {
+        // Three k-variants over one image in a share group (one store,
+        // shared tiles, co-scheduled) must be bit-identical to solo
+        // submissions of the same specs.
+        let img = Arc::new(SyntheticOrtho::default().with_seed(31).generate(32, 28));
+        let exec = crate::plan::ExecPlan::pinned(BlockShape::Square { side: 10 });
+        let server = ClusterServer::start(ServerConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let mk = |k: usize, share: Option<u64>| {
+            let s = JobSpec::new(
+                Arc::clone(&img),
+                exec,
+                ClusterConfig {
+                    k,
+                    seed: 31,
+                    ..Default::default()
+                },
+            )
+            .with_io(IoMode::Strips {
+                strip_rows: 8,
+                file_backed: false,
+            });
+            match share {
+                Some(g) => s.with_share_group(g),
+                None => s,
+            }
+        };
+        let shared: Vec<_> = (2..5)
+            .map(|k| server.submit(mk(k, Some(1))).unwrap())
+            .collect();
+        let shared_out: Vec<_> = shared.iter().map(|h| h.wait_output().unwrap()).collect();
+        for (i, k) in (2..5).enumerate() {
+            let solo = server.submit(mk(k, None)).unwrap().wait_output().unwrap();
+            assert_eq!(shared_out[i].labels, solo.labels, "labels diverged at k={k}");
+            assert_eq!(shared_out[i].centroids, solo.centroids, "k={k}");
+            assert_eq!(shared_out[i].inertia.to_bits(), solo.inertia.to_bits(), "k={k}");
+        }
+        assert_eq!(server.stats().failed, 0);
         server.shutdown();
     }
 

@@ -1,0 +1,193 @@
+//! Variant grid expansion and the sweep CLI's grid syntax.
+//!
+//! `--ks` accepts an inclusive range (`2..8`) or an explicit list
+//! (`2,4,8`); `--seeds N` expands to `base, base+1, …, base+N-1`;
+//! `--inits` is a comma list of `random` / `plusplus` (alias `++`).
+//! Expansion order is k-major, then seed, then init — deterministic,
+//! so reports and tests can index variants positionally.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::kmeans::InitMethod;
+
+/// One point of the sweep grid.
+#[derive(Clone, Debug)]
+pub struct SweepVariant {
+    pub k: usize,
+    pub seed: u64,
+    pub init: InitMethod,
+}
+
+impl SweepVariant {
+    /// Stable human-readable tag, e.g. `k4-s31-random`.
+    pub fn label(&self) -> String {
+        format!("k{}-s{}-{}", self.k, self.seed, init_name(&self.init))
+    }
+}
+
+/// Short stable name for an init method (report rows, JSON keys).
+pub fn init_name(init: &InitMethod) -> &'static str {
+    match init {
+        InitMethod::RandomSample => "random",
+        InitMethod::PlusPlus => "plusplus",
+        InitMethod::Fixed(_) => "fixed",
+    }
+}
+
+/// Parse the `--ks` grid axis: `2..8` (inclusive) or `2,4,8` or `4`.
+pub fn parse_ks(raw: &str) -> Result<Vec<usize>> {
+    let raw = raw.trim();
+    if let Some((lo, hi)) = raw.split_once("..") {
+        let lo: usize = lo
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad k range start {lo:?} in {raw:?}"))?;
+        let hi: usize = hi
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad k range end {hi:?} in {raw:?}"))?;
+        ensure!(lo >= 1, "k must be at least 1 (got {lo})");
+        ensure!(lo <= hi, "empty k range {raw:?} (start > end)");
+        return Ok((lo..=hi).collect());
+    }
+    let mut ks = Vec::new();
+    for part in raw.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let k: usize = part
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad k value {part:?} in {raw:?}"))?;
+        ensure!(k >= 1, "k must be at least 1 (got {k})");
+        ks.push(k);
+    }
+    ensure!(!ks.is_empty(), "empty k list {raw:?}");
+    Ok(ks)
+}
+
+/// Parse the `--inits` axis: comma list of `random` / `plusplus`
+/// (alias `++`).
+pub fn parse_inits(raw: &str) -> Result<Vec<InitMethod>> {
+    let mut inits = Vec::new();
+    for part in raw.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.to_ascii_lowercase().as_str() {
+            "random" | "randomsample" => inits.push(InitMethod::RandomSample),
+            "plusplus" | "++" | "kmeans++" => inits.push(InitMethod::PlusPlus),
+            other => bail!("unknown init {other:?} (want random|plusplus)"),
+        }
+    }
+    ensure!(!inits.is_empty(), "empty init list {raw:?}");
+    Ok(inits)
+}
+
+/// The full `(k, seed, init)` grid of one sweep.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    pub ks: Vec<usize>,
+    pub seeds: Vec<u64>,
+    pub inits: Vec<InitMethod>,
+}
+
+impl SweepGrid {
+    /// A validated grid; every axis must be non-empty.
+    pub fn new(ks: Vec<usize>, seeds: Vec<u64>, inits: Vec<InitMethod>) -> Result<SweepGrid> {
+        ensure!(!ks.is_empty(), "sweep grid has no k values");
+        ensure!(!seeds.is_empty(), "sweep grid has no seeds");
+        ensure!(!inits.is_empty(), "sweep grid has no init methods");
+        Ok(SweepGrid { ks, seeds, inits })
+    }
+
+    /// Build from the CLI's raw flags: `--ks` syntax, `--seeds N`
+    /// replicas starting at `base_seed`, `--inits` names.
+    pub fn from_args(ks: &str, base_seed: u64, n_seeds: usize, inits: &str) -> Result<SweepGrid> {
+        ensure!(n_seeds >= 1, "--seeds must be at least 1 (empty grid)");
+        SweepGrid::new(
+            parse_ks(ks)?,
+            (0..n_seeds as u64).map(|i| base_seed + i).collect(),
+            parse_inits(inits)?,
+        )
+    }
+
+    /// Number of variants the grid expands to.
+    pub fn len(&self) -> usize {
+        self.ks.len() * self.seeds.len() * self.inits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand to the full variant list, k-major then seed then init.
+    pub fn expand(&self) -> Vec<SweepVariant> {
+        let mut out = Vec::with_capacity(self.len());
+        for &k in &self.ks {
+            for &seed in &self.seeds {
+                for init in &self.inits {
+                    out.push(SweepVariant {
+                        k,
+                        seed,
+                        init: init.clone(),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_and_list_syntax() {
+        assert_eq!(parse_ks("2..5").unwrap(), vec![2, 3, 4, 5]);
+        assert_eq!(parse_ks("2,4,8").unwrap(), vec![2, 4, 8]);
+        assert_eq!(parse_ks("4").unwrap(), vec![4]);
+        assert_eq!(parse_ks(" 3 .. 3 ").unwrap(), vec![3]);
+        assert!(parse_ks("8..2").is_err(), "inverted range is empty");
+        assert!(parse_ks("0..3").is_err(), "k=0 is invalid");
+        assert!(parse_ks("a,b").is_err());
+        assert!(parse_ks("").is_err());
+    }
+
+    #[test]
+    fn init_names_round_trip() {
+        let inits = parse_inits("random,plusplus").unwrap();
+        assert_eq!(inits.len(), 2);
+        assert_eq!(init_name(&inits[0]), "random");
+        assert_eq!(init_name(&inits[1]), "plusplus");
+        assert!(matches!(
+            parse_inits("++").unwrap()[0],
+            InitMethod::PlusPlus
+        ));
+        assert!(parse_inits("kohonen").is_err());
+        assert!(parse_inits("").is_err());
+    }
+
+    #[test]
+    fn expansion_is_k_major_and_sized() {
+        let grid = SweepGrid::from_args("2..4", 7, 2, "random").unwrap();
+        assert_eq!(grid.len(), 6);
+        let v = grid.expand();
+        assert_eq!(v.len(), 6);
+        assert_eq!(
+            v.iter().map(|v| (v.k, v.seed)).collect::<Vec<_>>(),
+            vec![(2, 7), (2, 8), (3, 7), (3, 8), (4, 7), (4, 8)]
+        );
+        assert_eq!(v[0].label(), "k2-s7-random");
+    }
+
+    #[test]
+    fn empty_axes_rejected() {
+        assert!(SweepGrid::from_args("2..4", 7, 0, "random").is_err());
+        assert!(SweepGrid::new(vec![], vec![1], vec![InitMethod::RandomSample]).is_err());
+        assert!(SweepGrid::new(vec![2], vec![], vec![InitMethod::RandomSample]).is_err());
+        assert!(SweepGrid::new(vec![2], vec![1], vec![]).is_err());
+    }
+}

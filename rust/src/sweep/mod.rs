@@ -1,0 +1,30 @@
+//! Amortized multi-variant sweeps: one read, many models.
+//!
+//! The paper clusters one image at one `k`; the practical workload is
+//! the *model-selection sweep* — a grid of `(k, seed, init)` variants
+//! over the same image (cf. the multi-k batched K-Means++ workloads in
+//! PAPERS.md). Run naively, N variants cost N full reads. This module
+//! runs them as one **share group** on the [`ClusterServer`]: a single
+//! strip store, decoded SoA tiles keyed by *content* instead of job
+//! (one decode serves every variant), and rotation co-scheduling so a
+//! freshly filled tile is consumed by all siblings while hot. Variant
+//! results stay bit-identical to solo runs — sharing changes where
+//! bytes come from, never the arithmetic (`tests/sweep_equivalence.rs`
+//! holds the full kernel × shape × backing matrix to that contract).
+//!
+//! The pieces:
+//! - [`SweepGrid`] — grid expansion + the CLI's `--ks 2..8` /
+//!   `--seeds N` / `--inits random,plusplus` parsers;
+//! - [`run_sweep`] / [`submit_sweep`] — drive a grid through one
+//!   server under one share group and collect outputs;
+//! - [`SweepReport`] — per-variant quality rows (Davies-Bouldin,
+//!   inertia), DB ranking, and the inertia-elbow knee
+//!   ([`knee_index`]) for the "which k?" answer.
+
+mod grid;
+mod report;
+mod runner;
+
+pub use grid::{init_name, parse_inits, parse_ks, SweepGrid, SweepVariant};
+pub use report::{knee_index, SweepReport, VariantResult};
+pub use runner::{collect_outputs, run_sweep, submit_sweep, SweepOutcome};

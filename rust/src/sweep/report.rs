@@ -1,0 +1,232 @@
+//! Model selection over a finished sweep: per-variant quality rows,
+//! Davies-Bouldin ranking, and inertia-elbow knee detection.
+//!
+//! Two complementary answers to "which k?":
+//! - **DB ranking** — lower [`crate::metrics::quality::davies_bouldin`]
+//!   is better (tight clusters, far apart). Degenerate results (≤ 1
+//!   non-empty cluster, where the index collapses to 0.0) are ranked
+//!   *last*, not first — an all-one-cluster fit must never win.
+//! - **Inertia elbow** — inertia decreases monotonically in k, so its
+//!   minimum is useless; the *knee* (max perpendicular distance to the
+//!   first→last chord of the normalized curve) marks where extra
+//!   clusters stop paying. Hand-computed cases live in
+//!   `tests/quality_metrics.rs`.
+
+use anyhow::{ensure, Result};
+
+use super::grid::SweepVariant;
+use crate::coordinator::ClusterOutput;
+use crate::metrics::quality::davies_bouldin;
+
+/// One variant's quality row.
+#[derive(Clone, Debug)]
+pub struct VariantResult {
+    pub variant: SweepVariant,
+    pub iterations: usize,
+    pub inertia: f64,
+    /// Davies-Bouldin index at the final assignment (0.0 = degenerate:
+    /// at most one non-empty cluster).
+    pub db_index: f64,
+    pub wall_secs: f64,
+}
+
+impl VariantResult {
+    /// Degenerate fit: the DB index had ≤ 1 non-empty cluster to work
+    /// with and carries no ranking signal.
+    pub fn is_degenerate(&self) -> bool {
+        self.db_index == 0.0
+    }
+}
+
+/// The sweep's model-selection report.
+#[derive(Clone, Debug, Default)]
+pub struct SweepReport {
+    pub rows: Vec<VariantResult>,
+}
+
+impl SweepReport {
+    /// Score each variant's output against the image it clustered.
+    /// `variants` and `outputs` are positionally matched (the runner
+    /// preserves grid expansion order).
+    pub fn build(
+        variants: &[SweepVariant],
+        outputs: &[ClusterOutput],
+        pixels: &[f32],
+        channels: usize,
+    ) -> Result<SweepReport> {
+        ensure!(
+            variants.len() == outputs.len(),
+            "variant/output count mismatch: {} vs {}",
+            variants.len(),
+            outputs.len()
+        );
+        let rows = variants
+            .iter()
+            .zip(outputs)
+            .map(|(v, out)| VariantResult {
+                variant: v.clone(),
+                iterations: out.iterations,
+                inertia: out.inertia,
+                db_index: davies_bouldin(pixels, &out.labels, &out.centroids, v.k, channels),
+                wall_secs: out.total_secs,
+            })
+            .collect();
+        Ok(SweepReport { rows })
+    }
+
+    /// Row indices ranked best-first by Davies-Bouldin (ascending),
+    /// degenerate fits last. Ties break toward the smaller k (the
+    /// simpler model), then submission order — fully deterministic.
+    pub fn ranked_by_db(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.rows.len()).collect();
+        idx.sort_by(|&a, &b| {
+            let (ra, rb) = (&self.rows[a], &self.rows[b]);
+            ra.is_degenerate()
+                .cmp(&rb.is_degenerate())
+                .then(ra.db_index.total_cmp(&rb.db_index))
+                .then(ra.variant.k.cmp(&rb.variant.k))
+                .then(a.cmp(&b))
+        });
+        idx
+    }
+
+    /// The best non-degenerate row, if any.
+    pub fn best(&self) -> Option<&VariantResult> {
+        self.ranked_by_db()
+            .first()
+            .map(|&i| &self.rows[i])
+            .filter(|r| !r.is_degenerate())
+    }
+
+    /// The elbow curve: distinct k ascending, with mean inertia over
+    /// every (seed, init) replicate at that k.
+    pub fn elbow(&self) -> (Vec<usize>, Vec<f64>) {
+        let mut ks: Vec<usize> = self.rows.iter().map(|r| r.variant.k).collect();
+        ks.sort_unstable();
+        ks.dedup();
+        let means = ks
+            .iter()
+            .map(|&k| {
+                let vals: Vec<f64> = self
+                    .rows
+                    .iter()
+                    .filter(|r| r.variant.k == k)
+                    .map(|r| r.inertia)
+                    .collect();
+                vals.iter().sum::<f64>() / vals.len() as f64
+            })
+            .collect();
+        (ks, means)
+    }
+
+    /// The k at the inertia curve's knee (see [`knee_index`]); `None`
+    /// when the grid has no rows.
+    pub fn knee_k(&self) -> Option<usize> {
+        let (ks, inertia) = self.elbow();
+        if ks.is_empty() {
+            return None;
+        }
+        Some(ks[knee_index(&inertia)])
+    }
+}
+
+/// Knee of a monotone-ish curve by max distance to the first→last
+/// chord: both axes are normalized to [0, 1] (so the answer is
+/// invariant to units), and the index with the greatest perpendicular
+/// distance to the chord wins; ties go to the earliest index. Curves
+/// with fewer than 3 points have no interior — index 0 is returned.
+pub fn knee_index(values: &[f64]) -> usize {
+    if values.len() < 3 {
+        return 0;
+    }
+    let n = values.len();
+    let (y0, y1) = (values[0], values[n - 1]);
+    let span = y1 - y0;
+    // Flat curve: every point sits on the chord; keep the first.
+    if span == 0.0 {
+        return 0;
+    }
+    let mut best = (0usize, f64::NEG_INFINITY);
+    for (i, &v) in values.iter().enumerate() {
+        let x = i as f64 / (n - 1) as f64;
+        let y = (v - y0) / span;
+        // Distance to the chord y = x (normalized endpoints are (0,0)
+        // and (1,1)); the 1/√2 factor is rank-invariant and dropped.
+        // For decreasing curves `span < 0` flips y's sign consistently,
+        // so the same |x - y| measures the sag either way.
+        let d = (x - y).abs();
+        if d > best.1 {
+            best = (i, d);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::InitMethod;
+
+    fn row(k: usize, db: f64, inertia: f64) -> VariantResult {
+        VariantResult {
+            variant: SweepVariant {
+                k,
+                seed: 1,
+                init: InitMethod::RandomSample,
+            },
+            iterations: 3,
+            inertia,
+            db_index: db,
+            wall_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn db_ranking_prefers_low_and_demotes_degenerate() {
+        let report = SweepReport {
+            rows: vec![row(2, 0.9, 10.0), row(3, 0.4, 6.0), row(4, 0.0, 5.0)],
+        };
+        assert_eq!(report.ranked_by_db(), vec![1, 0, 2]);
+        assert_eq!(report.best().unwrap().variant.k, 3);
+    }
+
+    #[test]
+    fn db_ties_break_to_smaller_k() {
+        let report = SweepReport {
+            rows: vec![row(5, 0.5, 4.0), row(2, 0.5, 9.0)],
+        };
+        assert_eq!(report.ranked_by_db(), vec![1, 0]);
+    }
+
+    #[test]
+    fn all_degenerate_has_no_best() {
+        let report = SweepReport {
+            rows: vec![row(2, 0.0, 1.0), row(3, 0.0, 1.0)],
+        };
+        assert!(report.best().is_none());
+    }
+
+    #[test]
+    fn elbow_averages_replicates_per_k() {
+        let mut rows = vec![row(2, 0.5, 10.0), row(2, 0.5, 12.0), row(3, 0.5, 4.0)];
+        rows[1].variant.seed = 2;
+        let report = SweepReport { rows };
+        let (ks, means) = report.elbow();
+        assert_eq!(ks, vec![2, 3]);
+        assert_eq!(means, vec![11.0, 4.0]);
+    }
+
+    #[test]
+    fn knee_finds_the_bend() {
+        // Sharp elbow at index 1: 100 → 10 → 8 → 6
+        assert_eq!(knee_index(&[100.0, 10.0, 8.0, 6.0]), 1);
+        // Later elbow: 100 → 60 → 20 → 18 → 16 bends at index 2
+        assert_eq!(knee_index(&[100.0, 60.0, 20.0, 18.0, 16.0]), 2);
+        // Straight line has no interior winner: first index
+        assert_eq!(knee_index(&[4.0, 3.0, 2.0, 1.0]), 0);
+        // Flat and tiny curves degrade to 0
+        assert_eq!(knee_index(&[5.0, 5.0, 5.0]), 0);
+        assert_eq!(knee_index(&[1.0, 2.0]), 0);
+        assert_eq!(knee_index(&[]), 0);
+    }
+}

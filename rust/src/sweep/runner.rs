@@ -1,0 +1,133 @@
+//! Drive a sweep grid through the [`ClusterServer`] as one share
+//! group: one strip store, shared decoded tiles, co-scheduled rounds.
+//!
+//! Every variant is an ordinary [`JobSpec`] — same init draw, same
+//! block order, same reduction — so its output is bit-identical to a
+//! solo run of the same spec; the share group only changes how many
+//! times the image's bytes are decoded (≈ once, instead of once per
+//! variant).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::grid::{SweepGrid, SweepVariant};
+use crate::coordinator::{ClusterConfig, ClusterOutput, IoMode};
+use crate::image::Raster;
+use crate::plan::ExecPlan;
+use crate::service::{ClusterServer, JobHandle, JobSpec, ServerConfig};
+use crate::stripstore::AccessSnapshot;
+
+/// A finished sweep: outputs positionally matched to the expanded
+/// grid, plus the group-wide I/O counters.
+pub struct SweepOutcome {
+    pub variants: Vec<SweepVariant>,
+    pub outputs: Vec<ClusterOutput>,
+    /// Strip-store counters for the whole sweep. Shared-group members
+    /// snapshot one store with monotone counters, so the max over
+    /// per-variant snapshots is the last finalizer's view — the sweep
+    /// total.
+    pub io: Option<AccessSnapshot>,
+    pub wall_secs: f64,
+}
+
+/// Submit every grid variant to `server` over `image`. With
+/// `share = Some(group)` the variants join one share group (amortized
+/// I/O); with `None` each runs fully isolated (the serialized
+/// baseline the bench compares against). Returns handles in grid
+/// expansion order.
+pub fn submit_sweep(
+    server: &ClusterServer,
+    image: &Arc<Raster>,
+    exec: ExecPlan,
+    base: &ClusterConfig,
+    grid: &SweepGrid,
+    strip_rows: usize,
+    share: Option<u64>,
+) -> Result<Vec<JobHandle>> {
+    let mut handles = Vec::with_capacity(grid.len());
+    for v in grid.expand() {
+        let mut cfg = base.clone();
+        cfg.k = v.k;
+        cfg.seed = v.seed;
+        cfg.init = v.init;
+        let mut spec = JobSpec::new(Arc::clone(image), exec, cfg).with_io(IoMode::Strips {
+            strip_rows,
+            file_backed: exec.file_backed,
+        });
+        if let Some(g) = share {
+            spec = spec.with_share_group(g);
+        }
+        handles.push(
+            server
+                .submit(spec)
+                .with_context(|| format!("submit sweep variant k={}", v.k))?,
+        );
+    }
+    Ok(handles)
+}
+
+/// Wait on every handle, failing fast with the variant's position.
+pub fn collect_outputs(handles: &[JobHandle]) -> Result<Vec<ClusterOutput>> {
+    handles
+        .iter()
+        .enumerate()
+        .map(|(i, h)| h.wait_output().with_context(|| format!("sweep variant #{i}")))
+        .collect()
+}
+
+/// Run the whole grid on a private server sized so every variant is in
+/// flight at once (full co-scheduling). One share group, one store,
+/// one set of decoded tiles.
+pub fn run_sweep(
+    image: &Arc<Raster>,
+    exec: ExecPlan,
+    base: &ClusterConfig,
+    grid: &SweepGrid,
+    strip_rows: usize,
+    workers: usize,
+) -> Result<SweepOutcome> {
+    let t0 = std::time::Instant::now();
+    let server = ClusterServer::start(ServerConfig {
+        workers,
+        max_in_flight: grid.len(),
+        ..Default::default()
+    });
+    let handles = submit_sweep(&server, image, exec, base, grid, strip_rows, Some(1))?;
+    let outputs = collect_outputs(&handles)?;
+    server.shutdown();
+    let io = outputs
+        .iter()
+        .filter_map(|o| o.io_stats)
+        .max_by_key(|s| s.bytes_read);
+    Ok(SweepOutcome {
+        variants: grid.expand(),
+        outputs,
+        io,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockShape;
+    use crate::image::SyntheticOrtho;
+
+    #[test]
+    fn sweep_runs_the_whole_grid_once_each() {
+        let img = Arc::new(SyntheticOrtho::default().with_seed(19).generate(24, 20));
+        let exec = ExecPlan::pinned(BlockShape::Square { side: 8 });
+        let grid = SweepGrid::from_args("2..3", 19, 2, "random").unwrap();
+        let base = ClusterConfig::default();
+        let out = run_sweep(&img, exec, &base, &grid, 8, 2).unwrap();
+        assert_eq!(out.outputs.len(), 4);
+        assert_eq!(out.variants.len(), 4);
+        for (v, o) in out.variants.iter().zip(&out.outputs) {
+            assert_eq!(o.labels.len(), 24 * 20, "{}", v.label());
+            assert_eq!(o.centroids.len(), v.k * 3, "{}", v.label());
+        }
+        let io = out.io.expect("strip I/O counters present");
+        assert!(io.strip_reads > 0);
+    }
+}

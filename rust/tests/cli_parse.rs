@@ -93,7 +93,7 @@ fn bench_flags_round_trip() {
     for (sub, extra) in [
         ("paper-tables", vec!["--table", "12"]),
         ("cases", vec![]),
-        ("sweep", vec!["--out", "s.csv"]),
+        ("sweep", vec!["--ks", "2..8", "--seeds", "2", "--out", "s.json"]),
         ("kernels", vec![]),
         ("layout", vec![]),
         ("info", vec![]),
@@ -106,6 +106,30 @@ fn bench_flags_round_trip() {
         assert_eq!(args.get_parse::<usize>("bench-iters").unwrap(), 3);
         assert_eq!(args.get_parse::<u64>("seed").unwrap(), 9);
     }
+}
+
+#[test]
+fn sweep_flags_round_trip() {
+    let cli = blockms_cli();
+    let args = cli
+        .parse(vec![
+            "sweep", "--ks", "2,4,8", "--seeds", "3", "--inits", "random,plusplus",
+            "--strip-rows", "16", "--workers", "2", "--out", "BS.json",
+        ])
+        .unwrap();
+    assert_eq!(args.subcommand(), Some("sweep"));
+    assert_eq!(args.get("ks"), Some("2,4,8"));
+    assert_eq!(args.get_parse::<usize>("seeds").unwrap(), 3);
+    assert_eq!(args.get("inits"), Some("random,plusplus"));
+    assert_eq!(args.get("out"), Some("BS.json"));
+    assert!(args.provided("ks"), "typed --ks is a pin");
+
+    // Range syntax and the grid defaults survive a bare parse.
+    let args = cli.parse(vec!["sweep", "--ks", "2..8", "--quick"]).unwrap();
+    assert_eq!(args.get("ks"), Some("2..8"));
+    assert!(args.flag("quick"));
+    assert_eq!(args.get("seeds"), Some("1"), "default: one seed replicate");
+    assert_eq!(args.get("inits"), Some("random"), "default init axis");
 }
 
 #[test]
@@ -202,6 +226,12 @@ fn bad_values_exit_2_naming_the_flag() {
     assert_usage_error(&["paper-tables", "--table", "twelve"], "--table");
     assert_usage_error(&["sweep", "--bench-iters", "3.5"], "--bench-iters");
     assert_usage_error(&["cases", "--seed", "-1"], "--seed");
+    // Sweep grid syntax: malformed or empty grids are usage errors.
+    assert_usage_error(&["sweep", "--ks", "banana"], "--ks");
+    assert_usage_error(&["sweep", "--ks", "8..2"], "--ks"); // inverted = empty grid
+    assert_usage_error(&["sweep", "--ks", "0..3"], "--ks"); // k=0 invalid
+    assert_usage_error(&["sweep", "--seeds", "0"], "--seeds"); // empty seed axis
+    assert_usage_error(&["sweep", "--inits", "kohonen"], "--inits");
     // parsed-but-out-of-range values are usage errors too, not panics
     assert_usage_error(&["serve", "--workers", "0"], "--workers");
     assert_usage_error(&["serve", "--max-in-flight", "0"], "--max-in-flight");
@@ -376,6 +406,38 @@ fn stream_quick_writes_json() {
     let text = std::fs::read_to_string(&out_path).expect("BENCH_stream.json written");
     assert!(text.contains("matches_in_memory"), "{text}");
     assert!(text.contains("peak_resident_bytes"), "{text}");
+    let _ = std::fs::remove_file(&out_path);
+}
+
+#[test]
+fn sweep_quick_writes_json_and_stays_identical() {
+    let out_path = std::env::temp_dir().join("blockms_cli_test_BENCH_sweep.json");
+    let _ = std::fs::remove_file(&out_path);
+    let out = run(&["sweep", "--quick", "--out", out_path.to_str().unwrap()]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("amortized"), "{stdout}");
+    let text = std::fs::read_to_string(&out_path).expect("BENCH_sweep.json written");
+    assert!(text.contains("\"matches_solo\":true"), "{text}");
+    assert!(text.contains("bytes_read_ratio"), "{text}");
+    assert!(text.contains("amortized_jobs_per_sec"), "{text}");
+    let _ = std::fs::remove_file(&out_path);
+}
+
+#[test]
+fn sweep_grid_overrides_the_quick_axes() {
+    let out_path = std::env::temp_dir().join("blockms_cli_test_BENCH_sweep_grid.json");
+    let _ = std::fs::remove_file(&out_path);
+    let out = run(&[
+        "sweep", "--quick", "--ks", "2,3", "--seeds", "2",
+        "--out", out_path.to_str().unwrap(),
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+    let text = std::fs::read_to_string(&out_path).expect("sweep JSON written");
+    // 2 ks × 2 seeds × 1 init = 4 variants
+    assert!(text.contains("\"variants\":4"), "{text}");
     let _ = std::fs::remove_file(&out_path);
 }
 

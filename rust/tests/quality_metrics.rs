@@ -5,7 +5,9 @@
 //! values** on tiny fixtures, and use the `util::qcheck` harness to
 //! check permutation invariances on generated clusterings.
 
+use blockms::kmeans::InitMethod;
 use blockms::metrics::quality::{adjusted_rand_sampled, davies_bouldin, label_agreement, purity};
+use blockms::sweep::{knee_index, SweepReport, SweepVariant, VariantResult};
 use blockms::util::prng::Rng;
 use blockms::util::qcheck::{forall, pair, usize_in, vec_of};
 
@@ -141,6 +143,141 @@ fn adjusted_rand_is_permutation_invariant() {
         let perm = adjusted_rand_sampled(&permuted, &truth, a.len());
         (base - perm).abs() < 1e-9
             && (adjusted_rand_sampled(&a, &a, a.len()) - 1.0).abs() < 1e-12
+    });
+}
+
+// ---------------------------------------------------------------------
+// Sweep model selection: elbow / ranking on a known-k fixture
+// ---------------------------------------------------------------------
+
+/// The known-k fixture: 8 one-channel pixels in **three** well-separated
+/// groups — A = {0, 2}, B = {10, 12}, C = {28, 30, 32, 34}.
+fn known_k3_pixels() -> Vec<f32> {
+    vec![0.0, 2.0, 10.0, 12.0, 28.0, 30.0, 32.0, 34.0]
+}
+
+/// Build one sweep row from a hand-specified assignment of the fixture:
+/// DB comes from the real `davies_bouldin`, inertia is worked by hand
+/// in the caller.
+fn fixture_row(k: usize, labels: &[u32], centroids: &[f32], inertia: f64) -> VariantResult {
+    let pixels = known_k3_pixels();
+    VariantResult {
+        variant: SweepVariant {
+            k,
+            seed: 1,
+            init: InitMethod::RandomSample,
+        },
+        iterations: 3,
+        inertia,
+        db_index: davies_bouldin(&pixels, labels, centroids, k, 1),
+        wall_secs: 0.0,
+    }
+}
+
+/// The three candidate partitions, each at its k-optimal assignment.
+///
+/// k=2 (merge A∪B): centroids {6, 31}; scatters (6+4+4+6)/4 = 5 and
+///   (3+1+1+3)/4 = 2; distance 25 → DB = 7/25 = **0.28**.
+///   Inertia = 36+16+16+36 + 9+1+1+9 = **124**.
+/// k=3 (the truth): centroids {1, 11, 31}; scatters {1, 1, 2};
+///   R01 = 2/10, R02 = 3/30, R12 = 3/20 → maxima {0.2, 0.2, 0.15}
+///   → DB = 0.55/3 = **0.18333…** (the minimum).
+///   Inertia = 1·4 + (9+1+1+9) = **24**.
+/// k=4 (split C): centroids {1, 11, 29, 33}; scatters all 1;
+///   R23 = 2/4 = 0.5 dominates both halves → maxima
+///   {0.2, 0.2, 0.5, 0.5} → DB = 1.4/4 = **0.35**.
+///   Inertia = 1·8 = **8**.
+fn known_k3_report() -> SweepReport {
+    SweepReport {
+        rows: vec![
+            fixture_row(2, &[0, 0, 0, 0, 1, 1, 1, 1], &[6.0, 31.0], 124.0),
+            fixture_row(3, &[0, 0, 1, 1, 2, 2, 2, 2], &[1.0, 11.0, 31.0], 24.0),
+            fixture_row(4, &[0, 0, 1, 1, 2, 2, 3, 3], &[1.0, 11.0, 29.0, 33.0], 8.0),
+        ],
+    }
+}
+
+/// The DB indices behind the report are exactly the hand-worked values.
+#[test]
+fn known_k_fixture_db_indices_are_hand_computed() {
+    let report = known_k3_report();
+    assert!((report.rows[0].db_index - 0.28).abs() < 1e-12);
+    assert!((report.rows[1].db_index - 0.55 / 3.0).abs() < 1e-12);
+    assert!((report.rows[2].db_index - 0.35).abs() < 1e-12);
+}
+
+/// DB ranking puts the true k first: undersplit (k=2) inflates scatter,
+/// oversplit (k=4) pulls centroids together — both lose to k=3.
+#[test]
+fn report_ranks_true_k_first_by_db_minimum() {
+    let report = known_k3_report();
+    let ranked = report.ranked_by_db();
+    assert_eq!(report.rows[ranked[0]].variant.k, 3, "true k must win");
+    assert_eq!(report.best().unwrap().variant.k, 3);
+    // and the full order is k3 < k2 < k4
+    let order: Vec<usize> = ranked.iter().map(|&i| report.rows[i].variant.k).collect();
+    assert_eq!(order, vec![3, 2, 4]);
+}
+
+/// Knee detection agrees: inertia 124 → 24 → 8 over ks {2, 3, 4}
+/// normalizes to y = {0, 0.862…, 1} at x = {0, ½, 1}; the sag |x − y|
+/// peaks at the middle point, so the knee is k = 3.
+#[test]
+fn report_knee_detects_true_k_on_the_inertia_elbow() {
+    let report = known_k3_report();
+    let (ks, inertia) = report.elbow();
+    assert_eq!(ks, vec![2, 3, 4]);
+    assert_eq!(inertia, vec![124.0, 24.0, 8.0]);
+    assert_eq!(knee_index(&inertia), 1);
+    assert_eq!(report.knee_k(), Some(3));
+}
+
+/// A bitwise DB tie (the same assignment scored twice under different
+/// nominal k) breaks toward the smaller k — the simpler model.
+#[test]
+fn db_tie_breaks_to_the_simpler_model() {
+    let base = fixture_row(3, &[0, 0, 1, 1, 2, 2, 2, 2], &[1.0, 11.0, 31.0], 24.0);
+    let mut alias = base.clone();
+    alias.variant.k = 5; // same score, larger claimed k
+    let report = SweepReport {
+        rows: vec![alias, base],
+    };
+    assert_eq!(report.rows[0].db_index.to_bits(), report.rows[1].db_index.to_bits());
+    assert_eq!(report.best().unwrap().variant.k, 3);
+}
+
+/// A degenerate fit (every pixel in one cluster → DB collapses to 0.0)
+/// must rank *last*, never winning on its artificially perfect score.
+#[test]
+fn degenerate_collapse_ranks_last_not_first() {
+    let degenerate = fixture_row(2, &[0; 8], &[18.5, 0.0], 1030.0);
+    assert_eq!(degenerate.db_index, 0.0, "one non-empty cluster → 0.0");
+    assert!(degenerate.is_degenerate());
+    let honest = fixture_row(3, &[0, 0, 1, 1, 2, 2, 2, 2], &[1.0, 11.0, 31.0], 24.0);
+    let report = SweepReport {
+        rows: vec![degenerate, honest],
+    };
+    let ranked = report.ranked_by_db();
+    assert_eq!(ranked, vec![1, 0]);
+    assert_eq!(report.best().unwrap().variant.k, 3);
+}
+
+/// Property: on a piecewise-linear curve with exactly one bend (steep
+/// drop, then shallow), `knee_index` recovers the bend — the distance
+/// to the chord is linear on each segment, so its maximum sits at the
+/// only interior breakpoint.
+#[test]
+fn knee_index_recovers_a_single_bend_exactly() {
+    let gen = pair(usize_in(4, 10), usize_in(0, 1 << 20));
+    forall(15, 300, &gen, |&(n, bseed)| {
+        let bend = 1 + bseed % (n - 2); // interior index in 1..n-2
+        let mut v = 1000.0f64;
+        let mut values = vec![v];
+        for i in 1..n {
+            v -= if i <= bend { 100.0 } else { 1.0 };
+            values.push(v);
+        }
+        knee_index(&values) == bend
     });
 }
 

@@ -95,28 +95,44 @@ fn paper_case_amplifications_at_one_tenth_scale() {
 /// order (strips ascending within each block): the closed form the
 /// counted hit/miss numbers must equal.
 fn simulate_lru(plan: &BlockPlan, strip_rows: usize, cap: usize) -> (u64, u64) {
+    simulate_lru_passes(plan, strip_rows, cap, 1)
+}
+
+/// The same LRU simulation over `passes` consecutive full passes of the
+/// plan through one cache — the access sequence of an N-variant
+/// same-image sweep (N jobs × (iters+1) block passes, one shared
+/// store). At full capacity the counts are interleaving-invariant, so
+/// this matches any co-schedule order the server picks.
+fn simulate_lru_passes(
+    plan: &BlockPlan,
+    strip_rows: usize,
+    cap: usize,
+    passes: usize,
+) -> (u64, u64) {
     let (mut hits, mut misses) = (0u64, 0u64);
     let mut tick = 0u64;
     let mut resident: Vec<(usize, u64)> = Vec::new(); // (strip, last_used)
-    for b in plan.iter() {
-        let first = b.row0 / strip_rows;
-        let last = (b.row_end() - 1) / strip_rows;
-        for s in first..=last {
-            tick += 1;
-            if let Some(e) = resident.iter_mut().find(|(st, _)| *st == s) {
-                e.1 = tick;
-                hits += 1;
-            } else {
-                misses += 1;
-                resident.push((s, tick));
-                if resident.len() > cap {
-                    let lru = resident
-                        .iter()
-                        .enumerate()
-                        .min_by_key(|(_, (_, used))| *used)
-                        .map(|(i, _)| i)
-                        .unwrap();
-                    resident.remove(lru);
+    for _ in 0..passes {
+        for b in plan.iter() {
+            let first = b.row0 / strip_rows;
+            let last = (b.row_end() - 1) / strip_rows;
+            for s in first..=last {
+                tick += 1;
+                if let Some(e) = resident.iter_mut().find(|(st, _)| *st == s) {
+                    e.1 = tick;
+                    hits += 1;
+                } else {
+                    misses += 1;
+                    resident.push((s, tick));
+                    if resident.len() > cap {
+                        let lru = resident
+                            .iter()
+                            .enumerate()
+                            .min_by_key(|(_, (_, used))| *used)
+                            .map(|(i, _)| i)
+                            .unwrap();
+                        resident.remove(lru);
+                    }
                 }
             }
         }
@@ -227,4 +243,214 @@ fn concurrent_readers_see_consistent_bytes_on_both_backings() {
         let (per_pass, _, _) = read_amplification(&plan, 5);
         assert_eq!(snap.strip_reads as usize, per_pass * 4);
     }
+}
+
+// ---------------------------------------------------------------------
+// Sweep share groups: one decode per strip for same-image variants
+// ---------------------------------------------------------------------
+
+use blockms::coordinator::ClusterConfig;
+use blockms::plan::ExecPlan;
+use blockms::service::{ClusterServer, ServerConfig};
+use blockms::stripstore::AccessSnapshot;
+use blockms::sweep::{collect_outputs, submit_sweep, SweepGrid};
+
+/// Sweep-test geometry: small image, strip-aligned full cache.
+const SH: usize = 64;
+const SW: usize = 48;
+const SROWS: usize = 8;
+
+fn sweep_image(seed: u64) -> Arc<Raster> {
+    Arc::new(SyntheticOrtho::default().with_seed(seed).generate(SH, SW))
+}
+
+/// Group-total counters: every member snapshots the one shared store's
+/// monotone counters, so the per-field max over member snapshots is the
+/// last finalizer's view — the sweep total.
+fn group_totals(snaps: &[AccessSnapshot]) -> (u64, u64, u64, u64) {
+    (
+        snaps.iter().map(|s| s.strip_reads).max().unwrap(),
+        snaps.iter().map(|s| s.bytes_read).max().unwrap(),
+        snaps.iter().map(|s| s.strip_cache_hits).max().unwrap(),
+        snaps.iter().map(|s| s.strip_cache_misses).max().unwrap(),
+    )
+}
+
+/// An N-variant same-image share group decodes each strip **once**:
+/// misses = total strips, bytes_read = one image's bytes, and every
+/// other access — including every later variant's whole pass structure
+/// — is a cache hit, exactly matching the LRU simulation of
+/// N × (iters+1) plan passes. A single worker keeps the check-then-act
+/// cache counters exact (no racing double-miss).
+#[test]
+fn shared_sweep_decodes_each_strip_once_on_both_backings() {
+    let img = sweep_image(23);
+    let image_bytes = (SH * SW * img.channels() * 4) as u64;
+    let iters = 2usize;
+    let grid = SweepGrid::from_args("2..4", 5, 1, "random").unwrap(); // 3 variants
+    let total_strips = SH.div_ceil(SROWS);
+
+    let shape = BlockShape::Square { side: 16 };
+    let plan = BlockPlan::new(SH, SW, shape);
+    let (per_pass, strips, _) = read_amplification(&plan, SROWS);
+    assert_eq!(strips, total_strips);
+    // Each job makes `iters` Step passes plus the final Assign pass.
+    let passes = grid.len() * (iters + 1);
+    let (want_hits, want_misses) = simulate_lru_passes(&plan, SROWS, total_strips, passes);
+    assert_eq!(want_misses, total_strips as u64, "full cache: first pass misses only");
+    assert_eq!(want_hits, (per_pass * passes) as u64 - total_strips as u64);
+
+    for file_backed in [false, true] {
+        let exec = ExecPlan::pinned(shape)
+            .with_workers(1)
+            .with_strip_cache(total_strips)
+            .with_file_backing(file_backed);
+        let base = ClusterConfig {
+            fixed_iters: Some(iters),
+            ..ClusterConfig::default()
+        };
+        let server = ClusterServer::start(ServerConfig {
+            workers: 1,
+            max_in_flight: grid.len(),
+            ..ServerConfig::default()
+        });
+        let handles = submit_sweep(&server, &img, exec, &base, &grid, SROWS, Some(1)).unwrap();
+        let outs = collect_outputs(&handles).unwrap();
+        server.shutdown();
+
+        let snaps: Vec<AccessSnapshot> = outs.iter().filter_map(|o| o.io_stats).collect();
+        assert_eq!(snaps.len(), grid.len(), "every variant reports I/O");
+        let (strip_reads, bytes, hits, misses) = group_totals(&snaps);
+        assert_eq!(
+            misses, total_strips as u64,
+            "file_backed={file_backed}: each strip decodes exactly once for the whole sweep"
+        );
+        assert_eq!(strip_reads, total_strips as u64, "file_backed={file_backed}");
+        assert_eq!(
+            bytes, image_bytes,
+            "file_backed={file_backed}: one image's bytes for {} variants",
+            grid.len()
+        );
+        assert_eq!(hits, want_hits, "file_backed={file_backed}: hits match LRU simulation");
+    }
+}
+
+/// The serialized contrast: the same grid submitted *without* a share
+/// group gives every variant its own store — each decodes the full
+/// image, so the sweep reads N× the bytes the shared group reads.
+#[test]
+fn unshared_sweep_multiplies_bytes_by_variant_count() {
+    let img = sweep_image(23);
+    let image_bytes = (SH * SW * img.channels() * 4) as u64;
+    let grid = SweepGrid::from_args("2..4", 5, 1, "random").unwrap();
+    let total_strips = SH.div_ceil(SROWS);
+    let exec = ExecPlan::pinned(BlockShape::Square { side: 16 })
+        .with_workers(1)
+        .with_strip_cache(total_strips);
+    let base = ClusterConfig {
+        fixed_iters: Some(2),
+        ..ClusterConfig::default()
+    };
+    let server = ClusterServer::start(ServerConfig {
+        workers: 1,
+        max_in_flight: grid.len(),
+        ..ServerConfig::default()
+    });
+    let handles = submit_sweep(&server, &img, exec, &base, &grid, SROWS, None).unwrap();
+    let outs = collect_outputs(&handles).unwrap();
+    server.shutdown();
+
+    let mut sum_bytes = 0u64;
+    for out in &outs {
+        let snap = out.io_stats.expect("private store counters");
+        assert_eq!(snap.bytes_read, image_bytes, "each isolated job decodes the whole image");
+        assert_eq!(snap.strip_cache_misses, total_strips as u64);
+        sum_bytes += snap.bytes_read;
+    }
+    assert_eq!(sum_bytes, grid.len() as u64 * image_bytes, "serialized sweep = N× the shared bytes");
+}
+
+/// Two share groups over two *different* images on one server stay
+/// fully isolated: each group's store decodes exactly its own image's
+/// bytes — tiles and strips never cross-share between images.
+#[test]
+fn mixed_image_sweeps_do_not_cross_share() {
+    let img_a = sweep_image(23);
+    let (bh, bw) = (40, 32); // different geometry so the byte totals can't alias
+    let img_b = Arc::new(SyntheticOrtho::default().with_seed(29).generate(bh, bw));
+    let bytes_a = (SH * SW * img_a.channels() * 4) as u64;
+    let bytes_b = (bh * bw * img_b.channels() * 4) as u64;
+    assert_ne!(bytes_a, bytes_b);
+
+    let grid = SweepGrid::from_args("2..3", 7, 1, "random").unwrap(); // 2 variants per image
+    let base = ClusterConfig {
+        fixed_iters: Some(2),
+        ..ClusterConfig::default()
+    };
+    let server = ClusterServer::start(ServerConfig {
+        workers: 1,
+        max_in_flight: 2 * grid.len(),
+        ..ServerConfig::default()
+    });
+    let exec_a = ExecPlan::pinned(BlockShape::Square { side: 16 })
+        .with_workers(1)
+        .with_strip_cache(SH.div_ceil(SROWS));
+    let exec_b = ExecPlan::pinned(BlockShape::Square { side: 16 })
+        .with_workers(1)
+        .with_strip_cache(bh.div_ceil(SROWS));
+    let handles_a = submit_sweep(&server, &img_a, exec_a, &base, &grid, SROWS, Some(1)).unwrap();
+    let handles_b = submit_sweep(&server, &img_b, exec_b, &base, &grid, SROWS, Some(2)).unwrap();
+    let outs_a = collect_outputs(&handles_a).unwrap();
+    let outs_b = collect_outputs(&handles_b).unwrap();
+    server.shutdown();
+
+    let snaps_a: Vec<AccessSnapshot> = outs_a.iter().filter_map(|o| o.io_stats).collect();
+    let snaps_b: Vec<AccessSnapshot> = outs_b.iter().filter_map(|o| o.io_stats).collect();
+    let (_, group_a_bytes, _, a_misses) = group_totals(&snaps_a);
+    let (_, group_b_bytes, _, b_misses) = group_totals(&snaps_b);
+    assert_eq!(group_a_bytes, bytes_a, "group A decodes exactly image A");
+    assert_eq!(group_b_bytes, bytes_b, "group B decodes exactly image B");
+    assert_eq!(a_misses, SH.div_ceil(SROWS) as u64);
+    assert_eq!(b_misses, bh.div_ceil(SROWS) as u64);
+}
+
+/// Joining a live share group with a *different* image is an activation
+/// error, not a silent un-share: shared tiles over different pixels
+/// would corrupt results, so the server must refuse the member.
+#[test]
+fn share_group_rejects_a_different_image() {
+    // Same dimensions on purpose: the rejection must come from image
+    // identity (Arc::ptr_eq), not from any shape mismatch.
+    let img_a = sweep_image(23);
+    let img_b = sweep_image(31);
+    // Enough fixed rounds that variant A is still live (group alive)
+    // when B is admitted — admission is two queued messages behind A's
+    // multi-millisecond run.
+    let grid_a = SweepGrid::from_args("8", 5, 1, "random").unwrap();
+    let grid_b = SweepGrid::from_args("2", 5, 1, "random").unwrap();
+    let base = ClusterConfig {
+        fixed_iters: Some(30),
+        ..ClusterConfig::default()
+    };
+    let exec = ExecPlan::pinned(BlockShape::Square { side: 16 })
+        .with_workers(1)
+        .with_strip_cache(SH.div_ceil(SROWS));
+    let server = ClusterServer::start(ServerConfig {
+        workers: 1,
+        max_in_flight: 2,
+        ..ServerConfig::default()
+    });
+    let handles_a = submit_sweep(&server, &img_a, exec, &base, &grid_a, SROWS, Some(9)).unwrap();
+    let handles_b = submit_sweep(&server, &img_b, exec, &base, &grid_b, SROWS, Some(9)).unwrap();
+    let err = handles_b[0]
+        .wait_output()
+        .expect_err("different image must not join the group");
+    assert!(
+        format!("{err:#}").contains("share-group"),
+        "error must name the share-group violation: {err:#}"
+    );
+    // The original member is unharmed.
+    let out = handles_a[0].wait_output().unwrap();
+    assert_eq!(out.labels.len(), SH * SW);
+    server.shutdown();
 }

@@ -1,0 +1,177 @@
+//! Sweep-vs-solo bit-identity matrix.
+//!
+//! The amortized sweep's whole contract: every variant of a share-group
+//! sweep must be **bit-identical** — labels, centroids, per-cluster
+//! counts, inertia — to the same `(k, seed, init)` job run alone.
+//! Sharing changes where bytes come from (one store, one decode, shared
+//! tiles), never the arithmetic. The matrix crosses the paper's kernel
+//! variants with the three block shapes and both store backings; a
+//! qcheck property fuzzes random `(k, seed)` grids on top.
+
+use std::sync::Arc;
+
+use blockms::blocks::BlockShape;
+use blockms::coordinator::{
+    ClusterConfig, ClusterOutput, Coordinator, CoordinatorConfig, IoMode,
+};
+use blockms::image::{Raster, SyntheticOrtho};
+use blockms::kmeans::kernel::KernelChoice;
+use blockms::kmeans::InitMethod;
+use blockms::plan::ExecPlan;
+use blockms::service::{ClusterServer, ServerConfig};
+use blockms::sweep::{collect_outputs, submit_sweep, SweepGrid};
+use blockms::util::qcheck::{forall, pair, usize_in};
+
+const H: usize = 48;
+const W: usize = 40;
+const STRIP_ROWS: usize = 8;
+
+fn image() -> Arc<Raster> {
+    Arc::new(SyntheticOrtho::default().with_seed(33).generate(H, W))
+}
+
+/// Per-cluster pixel counts — `labels` equality implies these match,
+/// but the sweep contract names counts explicitly, so check them
+/// explicitly.
+fn counts(labels: &[u32], k: usize) -> Vec<u64> {
+    let mut c = vec![0u64; k];
+    for &l in labels {
+        c[l as usize] += 1;
+    }
+    c
+}
+
+/// The independent solo twin: a fresh single-job [`Coordinator`] with
+/// the identical plan, I/O mode and clustering config — no server, no
+/// share group, nothing in common but the arithmetic.
+fn solo(
+    img: &Arc<Raster>,
+    exec: ExecPlan,
+    cfg: &ClusterConfig,
+    strip_rows: usize,
+    file_backed: bool,
+) -> ClusterOutput {
+    let coord = Coordinator::new(CoordinatorConfig {
+        exec,
+        io: IoMode::Strips {
+            strip_rows,
+            file_backed,
+        },
+        ..CoordinatorConfig::default()
+    });
+    coord.cluster(img, cfg).unwrap()
+}
+
+/// Bitwise identity on every observable the sweep reports.
+fn assert_identical(sweep: &ClusterOutput, twin: &ClusterOutput, k: usize, ctx: &str) {
+    assert_eq!(sweep.labels, twin.labels, "{ctx}: labels diverged");
+    let sweep_bits: Vec<u32> = sweep.centroids.iter().map(|c| c.to_bits()).collect();
+    let twin_bits: Vec<u32> = twin.centroids.iter().map(|c| c.to_bits()).collect();
+    assert_eq!(sweep_bits, twin_bits, "{ctx}: centroid bits diverged");
+    assert_eq!(
+        counts(&sweep.labels, k),
+        counts(&twin.labels, k),
+        "{ctx}: cluster counts diverged"
+    );
+    assert_eq!(
+        sweep.inertia.to_bits(),
+        twin.inertia.to_bits(),
+        "{ctx}: inertia bits diverged"
+    );
+    assert_eq!(sweep.iterations, twin.iterations, "{ctx}: iteration count");
+}
+
+/// The full matrix: naive / pruned / lanes kernels × row / column /
+/// square blocks × memory / file backings, each cell sweeping a
+/// 2-k × 2-init grid and checking every variant against its solo twin.
+#[test]
+fn sweep_variants_bit_identical_to_solo_across_the_matrix() {
+    let img = image();
+    let grid = SweepGrid::from_args("2..3", 9, 1, "random,plusplus").unwrap();
+    assert_eq!(grid.len(), 4);
+    let base = ClusterConfig {
+        fixed_iters: Some(3),
+        ..ClusterConfig::default()
+    };
+    for kernel in [KernelChoice::Naive, KernelChoice::Pruned, KernelChoice::Lanes] {
+        for (sname, shape) in [
+            ("row", BlockShape::Rows { band_rows: 16 }),
+            ("column", BlockShape::Cols { band_cols: 14 }),
+            ("square", BlockShape::Square { side: 16 }),
+        ] {
+            for file_backed in [false, true] {
+                let cell = format!("{kernel:?}/{sname}/file={file_backed}");
+                let exec = ExecPlan::pinned(shape)
+                    .with_kernel(kernel)
+                    .with_workers(2)
+                    .with_strip_cache(H.div_ceil(STRIP_ROWS))
+                    .with_file_backing(file_backed);
+                let server = ClusterServer::start(ServerConfig {
+                    workers: 2,
+                    max_in_flight: grid.len(),
+                    ..ServerConfig::default()
+                });
+                let handles =
+                    submit_sweep(&server, &img, exec, &base, &grid, STRIP_ROWS, Some(1))
+                        .unwrap();
+                let outs = collect_outputs(&handles).unwrap();
+                server.shutdown();
+                for (v, out) in grid.expand().iter().zip(&outs) {
+                    let mut cfg = base.clone();
+                    cfg.k = v.k;
+                    cfg.seed = v.seed;
+                    cfg.init = v.init.clone();
+                    let twin = solo(&img, exec, &cfg, STRIP_ROWS, file_backed);
+                    assert_identical(out, &twin, v.k, &format!("{cell}/{}", v.label()));
+                }
+            }
+        }
+    }
+}
+
+/// qcheck: random `(k, seed)` grids — two ks × two seeds per case —
+/// stay bit-identical to their solo twins under the default pinned
+/// plan. Catches anything the hand-picked matrix geometry misses.
+#[test]
+fn random_k_seed_grids_stay_bit_identical_to_solo() {
+    let img = Arc::new(SyntheticOrtho::default().with_seed(51).generate(32, 28));
+    let base = ClusterConfig {
+        fixed_iters: Some(2),
+        ..ClusterConfig::default()
+    };
+    let gen = pair(usize_in(2, 5), usize_in(0, 1 << 16));
+    forall(16, 8, &gen, |&(k, seed)| {
+        let grid = SweepGrid::new(
+            vec![k, k + 1],
+            vec![seed as u64, seed as u64 + 1],
+            vec![InitMethod::RandomSample],
+        )
+        .unwrap();
+        let exec = ExecPlan::pinned(BlockShape::Square { side: 12 })
+            .with_workers(2)
+            .with_strip_cache(32usize.div_ceil(STRIP_ROWS));
+        let server = ClusterServer::start(ServerConfig {
+            workers: 2,
+            max_in_flight: grid.len(),
+            ..ServerConfig::default()
+        });
+        let handles = submit_sweep(&server, &img, exec, &base, &grid, STRIP_ROWS, Some(1))
+            .expect("submit random grid");
+        let outs = collect_outputs(&handles).expect("collect random grid");
+        server.shutdown();
+        grid.expand().iter().zip(&outs).all(|(v, out)| {
+            let mut cfg = base.clone();
+            cfg.k = v.k;
+            cfg.seed = v.seed;
+            cfg.init = v.init.clone();
+            let twin = solo(&img, exec, &cfg, STRIP_ROWS, false);
+            out.labels == twin.labels
+                && out
+                    .centroids
+                    .iter()
+                    .map(|c| c.to_bits())
+                    .eq(twin.centroids.iter().map(|c| c.to_bits()))
+                && out.inertia.to_bits() == twin.inertia.to_bits()
+        })
+    });
+}
