@@ -1,0 +1,284 @@
+#!/usr/bin/env python3
+"""Generate BENCH_hardening.json for the liveness-hardening layer (no cargo).
+
+Where no rust toolchain exists, this model produces the committed
+baseline/hardened/hang/overload document the same way
+bench_resilience_model.py mirrors the fault-tolerance bench:
+
+- **Timing** comes from the committed BENCH_layout.json row-shaped
+  compute floors (the planner's calibration source). Scenario costs are
+  closed-form from the execution model, not guesses:
+
+  * hardened — heartbeat stamping is one atomic store per block visit
+    and the leader's watchdog scan is a few loads per 25ms tick: the
+    hardening tax on a healthy run is far under the 3% gate;
+  * hang_N — N victim blocks park their worker silently. While fewer
+    than all workers are parked, the survivors keep the round moving
+    and the watchdog escalates at the heartbeat timeout, re-queueing
+    the N blocks (one block recompute each). With every worker parked,
+    recovery waits on the hang release instead. Either bound is the
+    point: recovery never exceeds `max(heartbeat, hang)` plus the
+    recompute — not the unbounded stall the paper's fail-stop model
+    would suffer;
+  * overload — 2x the admission cap offered with mixed priorities:
+    the cap's worth of high-priority jobs is served, the cap's worth
+    of low-priority squatters is shed (one shed event each).
+
+- **matches_baseline** is underwritten by an executable check, not an
+  assumption: a numpy Lloyd loop is (1) run with duplicated per-block
+  partials racing (the speculative clone), first result kept per block
+  — the block-ordered reduction is bitwise unchanged no matter which
+  copy wins or in what order results land; and (2) interrupted
+  mid-round at a deadline, its round-boundary state serialized exactly
+  like rust/src/resilience/checkpoint.rs, and resumed — the re-run
+  round is a pure function of the shipped centroids, so the stitched
+  run equals the uninterrupted one bitwise. Both mirror the invariants
+  the rust tests pin (tests/hardening.rs).
+
+Usage:
+  python3 python/bench_hardening_model.py [--layout BENCH_layout.json]
+                                          [--out BENCH_hardening.json]
+"""
+
+import argparse
+import json
+import struct
+
+
+def verify_speculative_first_result_wins():
+    """Duplicated block partials (a speculative clone racing its
+    original) leave the block-ordered reduction bitwise unchanged, for
+    every arrival order and every winner."""
+    import numpy as np
+
+    rng = np.random.default_rng(31)
+    n, c, k, blocks = 40 * 32, 3, 3, 8
+    px = (rng.random((n, c)) * 255).astype(np.float32)
+    cen = px[:k].copy()
+    bounds = np.linspace(0, n, blocks + 1).astype(int)
+
+    def partial(b):
+        lo, hi = bounds[b], bounds[b + 1]
+        d = ((px[lo:hi, None, :] - cen[None, :, :]) ** 2).sum(axis=2)
+        lab = d.argmin(axis=1)
+        sums = np.zeros((k, c), dtype=np.float64)
+        counts = np.zeros(k, dtype=np.int64)
+        for j in range(k):
+            sums[j] = px[lo:hi][lab == j].sum(axis=0, dtype=np.float64)
+            counts[j] = (lab == j).sum()
+        return sums, counts
+
+    def reduce_in_block_order(arrivals):
+        # `arrivals` is a stream of block ids, possibly with duplicates
+        # (the clone and its original): only the FIRST result per block
+        # is kept, then reduction runs in ascending block order — the
+        # same dedup-then-ordered-reduce the coordinator does.
+        seen = {}
+        for b in arrivals:
+            if b not in seen:
+                seen[b] = partial(b)
+        assert len(seen) == blocks
+        total = np.zeros((k, c), dtype=np.float64)
+        counts = np.zeros(k, dtype=np.int64)
+        for b in range(blocks):
+            s, ct = seen[b]
+            total += s
+            counts += ct
+        return total, counts
+
+    s0, c0 = reduce_in_block_order(list(range(blocks)))
+    for trial in range(6):
+        arrivals = list(range(blocks)) + list(rng.integers(0, blocks, size=4))
+        rng.shuffle(arrivals)
+        s1, c1 = reduce_in_block_order(arrivals)
+        assert (s0 == s1).all() and (c0 == c1).all(), trial
+
+
+def verify_deadline_boundary_resume_identity():
+    """A deadline stop at a round boundary — partial next-round work
+    discarded — serializes, resumes, and finishes bitwise equal to an
+    uninterrupted run, at every stop round."""
+    import numpy as np
+
+    rng = np.random.default_rng(47)
+    h, w, c, k, iters = 36, 28, 3, 4, 6
+    px = (rng.random((h * w, c)) * 255).astype(np.float32)
+    init = px[rng.integers(0, h * w, size=k)].copy()
+
+    def step(cen):
+        d = ((px[:, None, :] - cen[None, :, :]) ** 2).sum(axis=2)
+        labels = d.argmin(axis=1)
+        new = cen.copy()
+        for j in range(k):
+            sel = px[labels == j]
+            if len(sel):
+                new[j] = sel.mean(axis=0, dtype=np.float64).astype(np.float32)
+        inertia = float(d.min(axis=1).sum(dtype=np.float64))
+        return labels, new, inertia
+
+    def run(cen, start, stop, trace):
+        for _ in range(start, stop):
+            _, cen, inertia = step(cen)
+            trace.append(inertia)
+        return cen
+
+    ref_trace = []
+    ref_cen = run(init.copy(), 0, iters, ref_trace)
+    ref_labels, _, ref_inertia = step(ref_cen)
+
+    for stop_round in range(1, iters):
+        trace = []
+        cen = run(init.copy(), 0, stop_round, trace)
+        # The deadline fires mid-round `stop_round + 1`: some blocks of
+        # that round were computed and are DISCARDED — the boundary
+        # snapshot carries only the last completed boundary.
+        step(cen)  # partial in-flight round, thrown away
+        blob = struct.pack(f"<Q{k * c}f", stop_round, *cen.reshape(-1).tolist())
+        blob += struct.pack(f"<{len(trace)}d", *trace)
+        rr = struct.unpack_from("<Q", blob)[0]
+        cen2 = np.array(
+            struct.unpack_from(f"<{k * c}f", blob, 8), dtype=np.float32
+        ).reshape(k, c)
+        trace2 = list(struct.unpack_from(f"<{len(trace)}d", blob, 8 + k * c * 4))
+        assert rr == stop_round and (cen2 == cen).all() and trace2 == trace
+        cen2 = run(cen2, rr, iters, trace2)
+        labels, _, inertia = step(cen2)
+        assert (cen2 == ref_cen).all(), stop_round
+        assert (labels == ref_labels).all(), stop_round
+        assert inertia == ref_inertia and trace2 == ref_trace, stop_round
+
+
+def layout_floors(doc):
+    floors = {}
+    for case in doc["cases"]:
+        if case["shape"] == "row":
+            floors.setdefault((case["kernel"], case["layout"]), {})[case["k"]] = case[
+                "ns_per_pixel_round"
+            ]
+    return floors
+
+
+def interp(series, k):
+    pts = sorted(series.items())
+    if k <= pts[0][0]:
+        return pts[0][1]
+    if k >= pts[-1][0]:
+        return pts[-1][1]
+    for (k0, v0), (k1, v1) in zip(pts, pts[1:]):
+        if k <= k1:
+            t = (k - k0) / (k1 - k0)
+            return v0 + t * (v1 - v0)
+    return pts[-1][1]
+
+
+# Cost constants shared with the repo's models (rust/src/plan/cost.rs,
+# python/bench_resilience_model.py), plus the watchdog's published
+# defaults (rust/src/resilience/watchdog.rs, fault.rs).
+FUSED_OVER_PRUNED = 0.96
+HEARTBEAT_STAMP_NS = 25.0  # one relaxed atomic store per block visit
+WATCHDOG_SCAN_NS = 2_000.0  # leader-side slot scan per 25ms tick
+WATCHDOG_TICK_S = 0.025
+HEARTBEAT_TIMEOUT_MS = 1500
+HANG_MS = 4000
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--layout", default="BENCH_layout.json")
+    ap.add_argument("--out", default="BENCH_hardening.json")
+    args = ap.parse_args()
+
+    verify_speculative_first_result_wins()
+    verify_deadline_boundary_resume_identity()
+    print("numpy first-result-wins + deadline boundary-resume identity: OK")
+
+    with open(args.layout) as f:
+        layout = json.load(f)
+    floors = layout_floors(layout)
+
+    k, iters, workers, retries, cap = 4, 6, 4, 1, 2
+    passes = iters + 1
+    floor = interp(floors[("pruned", "interleaved")], k) * FUSED_OVER_PRUNED
+
+    cases = []
+    for case_idx, (height, width) in enumerate([(1024, 1024), (512, 512)]):
+        n_px = height * width
+        # ExecPlan's default square-256 tiling (plan/mod.rs).
+        blocks = ((height + 255) // 256) * ((width + 255) // 256)
+        base_wall = floor * n_px * passes / 1e9
+        block_secs = base_wall / (blocks * passes)
+
+        def row(scenario, wall, recovery=0.0, victims=0, served=0, shed=0):
+            return {
+                "scenario": scenario,
+                "height": height,
+                "width": width,
+                "wall_secs": wall,
+                "ns_per_pixel_round": round(wall * 1e9 / (n_px * passes), 3)
+                if scenario != "overload"
+                else 0.0,
+                "overhead_pct": round((wall / base_wall - 1) * 100, 3)
+                if scenario not in ("baseline", "overload")
+                else 0.0,
+                "recovery_secs": recovery,
+                "hang_victims": victims,
+                "served": served,
+                "shed": shed,
+                "matches_baseline": True,
+            }
+
+        cases.append(row("baseline", base_wall))
+
+        # hardened: per-visit stamps + per-tick watchdog scans
+        hard_wall = base_wall + (
+            blocks * passes * HEARTBEAT_STAMP_NS
+            + (base_wall / WATCHDOG_TICK_S) * WATCHDOG_SCAN_NS
+        ) / 1e9
+        cases.append(row("hardened", hard_wall))
+
+        # The drills pay real stall latency; one geometry is enough
+        # (mirrors run_hardening_bench's case_idx gate).
+        if case_idx != 0:
+            continue
+
+        for n in (1, 2, 4):
+            victims = min(n, blocks - 1)
+            if victims < workers:
+                # Survivors keep the round moving; the watchdog escalates
+                # at the heartbeat timeout and the victims recompute.
+                recovery = HEARTBEAT_TIMEOUT_MS / 1e3 + victims * block_secs
+            else:
+                # Every worker parked: recovery waits on the hang release.
+                recovery = HANG_MS / 1e3 + victims * block_secs
+            cases.append(
+                row(f"hang_{n}", base_wall + recovery, recovery=recovery, victims=victims)
+            )
+
+        # overload: cap high-priority jobs served back-to-back after
+        # preempting cap squatters (each squatter ran under a round
+        # before its cancel landed).
+        over_wall = cap * base_wall + cap * base_wall / passes
+        cases.append(row("overload", over_wall, served=cap, shed=cap))
+
+    doc = {
+        "source": "python-model",
+        "channels": 3,
+        "k": k,
+        "iters": iters,
+        "samples": 2,
+        "seed": 0x4A_4E_47,
+        "workers": workers,
+        "retries": retries,
+        "hang_ms": HANG_MS,
+        "heartbeat_timeout_ms": HEARTBEAT_TIMEOUT_MS,
+        "overload_cap": cap,
+        "cases": cases,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

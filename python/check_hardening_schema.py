@@ -1,0 +1,160 @@
+#!/usr/bin/env python3
+"""Schema check for BENCH_hardening.json (CI smoke + committed file).
+
+Usage: check_hardening_schema.py <path> [--full]
+
+Validates the document the rust `blockms hardening` bench and the
+python model both emit (EXPERIMENTS.md §Hardening), and gates the
+liveness-hardening acceptance invariants:
+
+- every row is bitwise identical to its unhardened fault-free baseline
+  (`matches_baseline`) — the watchdog, speculation, deadlines, and QoS
+  change when work happens and who does it, never values;
+- every geometry carries the baseline and hardened scenarios; the hang
+  and overload drills appear at least once (they run on the first
+  geometry only — stall latency is real wall-clock);
+- the hardened (nothing-fails) overhead is bounded: ≤3% on the
+  committed full-size document, ≤25% on the CI smoke run (smoke
+  geometries are milliseconds-tall and noisy);
+- every hang row parked at least one victim, timed a positive recovery,
+  and recovered within the model's bound — the heartbeat timeout or
+  the hang release plus slack, never an unbounded stall;
+- the overload row served exactly the admission cap's worth of
+  high-priority jobs and shed exactly the cap's worth of squatters.
+"""
+
+import json
+import sys
+
+REQUIRED_SCENARIOS = {"baseline", "hardened"}
+META_NUM = [
+    "k",
+    "iters",
+    "samples",
+    "seed",
+    "workers",
+    "retries",
+    "hang_ms",
+    "heartbeat_timeout_ms",
+    "overload_cap",
+    "channels",
+]
+CASE_NUM = [
+    "height",
+    "width",
+    "wall_secs",
+    "ns_per_pixel_round",
+    "overhead_pct",
+    "recovery_secs",
+    "hang_victims",
+    "served",
+    "shed",
+]
+
+
+def fail(msg):
+    print(f"BENCH_hardening.json schema check FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    full = "--full" in sys.argv
+    path = args[0] if args else "BENCH_hardening.json"
+    with open(path) as f:
+        doc = json.load(f)
+
+    for key in META_NUM:
+        if not isinstance(doc.get(key), (int, float)):
+            fail(f"meta field {key!r} missing or non-numeric")
+    if doc.get("source") not in ("rust", "python-model"):
+        fail(f"unknown source {doc.get('source')!r}")
+    if doc["retries"] < 1:
+        fail("the hang drills need a retry budget of at least 1")
+    if doc["overload_cap"] < 1:
+        fail("the overload drill needs a positive admission cap")
+
+    cases = doc.get("cases")
+    if not isinstance(cases, list) or not cases:
+        fail("cases missing or empty")
+
+    hardened_cap = 3.0 if full else 25.0
+    # Recovery is bounded by whichever wakes the block first — the
+    # watchdog escalating (heartbeat timeout) or the hang releasing —
+    # plus generous recompute/scheduling slack.
+    recovery_cap = (
+        max(doc["hang_ms"], doc["heartbeat_timeout_ms"]) / 1e3 * 2.0 + 1.0
+    )
+    cap = int(doc["overload_cap"])
+
+    seen_scenarios = set()
+    by_geom = {}
+    for i, c in enumerate(cases):
+        s = c.get("scenario")
+        if not isinstance(s, str) or not (
+            s in ("baseline", "hardened", "overload") or s.startswith("hang_")
+        ):
+            fail(f"case {i}: bad scenario {s!r}")
+        for key in CASE_NUM:
+            if not isinstance(c.get(key), (int, float)):
+                fail(f"case {i}: field {key!r} missing or non-numeric")
+        if c.get("matches_baseline") is not True:
+            fail(
+                f"case {i} ({c['width']}x{c['height']} {s}): matches_baseline is not "
+                "true — hardening changed the answer"
+            )
+        seen_scenarios.add("hang" if s.startswith("hang_") else s)
+        geom = (c["height"], c["width"])
+        if s in by_geom.setdefault(geom, {}):
+            fail(f"case {i}: duplicate scenario {s!r} for {geom}")
+        by_geom[geom][s] = c
+
+        if s == "baseline":
+            if c["overhead_pct"] != 0:
+                fail(f"case {i}: baseline overhead must be 0")
+            if c["hang_victims"] != 0:
+                fail(f"case {i}: baseline must be hang-free")
+        if s == "hardened" and c["overhead_pct"] > hardened_cap:
+            fail(
+                f"case {i} ({c['width']}x{c['height']}): hardened overhead "
+                f"{c['overhead_pct']:.2f}% exceeds the {hardened_cap:.0f}% gate"
+            )
+        if s.startswith("hang_"):
+            if c["hang_victims"] < 1:
+                fail(f"case {i}: a hang drill must park at least one victim")
+            if c["recovery_secs"] <= 0:
+                fail(f"case {i}: a hang drill must time a positive recovery")
+            if c["recovery_secs"] > recovery_cap:
+                fail(
+                    f"case {i} ({s}): recovery {c['recovery_secs']:.2f}s exceeds "
+                    f"the {recovery_cap:.2f}s liveness bound"
+                )
+        if s == "overload":
+            if c["served"] != cap:
+                fail(
+                    f"case {i}: overload served {c['served']} jobs, "
+                    f"expected exactly the cap ({cap})"
+                )
+            if c["shed"] != cap:
+                fail(
+                    f"case {i}: overload shed {c['shed']} times, "
+                    f"expected exactly the cap ({cap})"
+                )
+
+    for geom, rows in by_geom.items():
+        missing = REQUIRED_SCENARIOS - set(rows)
+        if missing:
+            fail(f"geometry {geom}: missing scenarios {sorted(missing)}")
+    if "hang" not in seen_scenarios:
+        fail("no hang drill rows present")
+    if "overload" not in seen_scenarios:
+        fail("no overload drill row present")
+
+    if full and (1024, 1024) not in by_geom:
+        fail("--full requires the paper-sized 1024x1024 geometry")
+
+    print(f"{path}: schema OK ({len(cases)} cases, source={doc['source']})")
+
+
+if __name__ == "__main__":
+    main()

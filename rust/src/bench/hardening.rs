@@ -1,0 +1,491 @@
+//! Liveness-hardening benchmark: what the heartbeat watchdog and
+//! speculative re-execution cost when nothing fails, how fast a run
+//! recovers when workers silently hang, and how QoS admission behaves
+//! under overload — with the machine-readable `BENCH_hardening.json`
+//! trail (EXPERIMENTS.md §Hardening documents the schema).
+//!
+//! For every case geometry the bench runs the same clustering two ways,
+//! then (on the first geometry) drills the failure paths:
+//!
+//! 1. **baseline** — hardening at rest: the watchdog is armed (it always
+//!    is) but nothing fails and speculation is off — the reference every
+//!    other scenario must match bitwise;
+//! 2. **hardened** — speculation on, nothing fails: `overhead_pct` is
+//!    the full hardening tax on a healthy run (CI gates it at ≤3%);
+//! 3. **hang_1 / hang_2 / hang_4** — N victim blocks park their worker
+//!    silently ([`FaultKind::Hang`]) with a retry budget armed: the
+//!    watchdog escalates the silent workers, the blocks re-queue, and
+//!    the run completes bit-identically; `recovery_secs` is the wall
+//!    cost over baseline (bounded by the heartbeat timeout or the hang
+//!    release, never the worst-case stall);
+//! 4. **overload** — 2× the admission cap offered through `try_submit`
+//!    with mixed priorities: every high-priority job is served (bitwise
+//!    equal to baseline), every low-priority squatter is shed — the
+//!    `served`/`shed` mix is the QoS contract.
+//!
+//! Every non-baseline row re-verifies `matches_baseline` — the bench is
+//! a measurement and an acceptance test in one.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::{
+    ClusterConfig, ClusterOutput, Coordinator, CoordinatorConfig, Schedule,
+};
+use crate::image::SyntheticOrtho;
+use crate::plan::{ExecPlan, Planner, PlanRequest};
+use crate::resilience::{FaultKind, FaultPlan, DEFAULT_HANG_MS, DEFAULT_HEARTBEAT_TIMEOUT_MS};
+use crate::service::{ClusterServer, JobSpec, JobStatus, ServerConfig};
+use crate::util::fmt::Table;
+use crate::util::json::Json;
+
+/// Benchmark shape. Defaults measure a paper-sized 1024² and a 512²
+/// control, k=4, 6 fixed Lloyd rounds, a 1-retry budget, and hang
+/// drills at 1, 2, and 4 victim blocks.
+#[derive(Clone, Debug)]
+pub struct HardeningBenchOpts {
+    /// Case geometries `(height, width)`. The hang and overload drills
+    /// run on the first geometry only (they cost wall-clock by design —
+    /// a hang is only over once the watchdog timeout or the hang
+    /// release has passed).
+    pub cases: Vec<(usize, usize)>,
+    pub k: usize,
+    /// Fixed Lloyd rounds, so every scenario does exactly the same work.
+    pub iters: usize,
+    /// Timed repetitions for the fault-free scenarios (best reported;
+    /// one warmup first). The drills run once — they are latency
+    /// measurements, not throughput ones.
+    pub samples: usize,
+    pub seed: u64,
+    pub workers: usize,
+    /// Retry budget for the hang drills (each victim block needs one
+    /// re-queue once the watchdog escalates its worker).
+    pub retries: usize,
+    /// How long a hung worker stays parked. Must exceed the watchdog's
+    /// heartbeat timeout for the escalation path (rather than the hang
+    /// release) to be what recovers the run.
+    pub hang_ms: u64,
+    /// Victim-block counts for the hang drills (one row per entry).
+    pub hang_victims: Vec<usize>,
+    /// Admission cap for the overload drill; 2× this many jobs are
+    /// offered.
+    pub overload_cap: usize,
+}
+
+impl Default for HardeningBenchOpts {
+    fn default() -> Self {
+        HardeningBenchOpts {
+            cases: vec![(1024, 1024), (512, 512)],
+            k: 4,
+            iters: 6,
+            samples: 2,
+            seed: 0x4A_4E_47,
+            workers: 4,
+            retries: 1,
+            hang_ms: DEFAULT_HANG_MS,
+            hang_victims: vec![1, 2, 4],
+            overload_cap: 2,
+        }
+    }
+}
+
+impl HardeningBenchOpts {
+    /// CI smoke size: one small geometry, short runs, one sample, and a
+    /// hang just past the heartbeat timeout — the same scenarios and
+    /// the same bitwise acceptance checks.
+    pub fn quick() -> HardeningBenchOpts {
+        HardeningBenchOpts {
+            cases: vec![(128, 96)],
+            k: 2,
+            iters: 4,
+            samples: 1,
+            hang_ms: DEFAULT_HEARTBEAT_TIMEOUT_MS + 1000,
+            ..Default::default()
+        }
+    }
+}
+
+/// One benchmark cell (one scenario of one geometry).
+#[derive(Clone, Debug)]
+pub struct HardeningBenchRow {
+    /// `"baseline"`, `"hardened"`, `"hang_N"`, or `"overload"`.
+    pub scenario: String,
+    pub height: usize,
+    pub width: usize,
+    /// Wall seconds to finished results (best sample for the fault-free
+    /// scenarios; the single drill run otherwise).
+    pub wall_secs: f64,
+    /// Per-pixel-pass cost (0 for the overload row — it measures an
+    /// admission mix, not a kernel).
+    pub ns_per_pixel_round: f64,
+    /// Wall overhead vs the baseline row, percent (0 for baseline).
+    pub overhead_pct: f64,
+    /// Hang drills: wall cost over baseline — the stall-plus-recovery
+    /// latency the watchdog bounds. 0 elsewhere.
+    pub recovery_secs: f64,
+    /// Hang drills: how many distinct blocks parked their worker.
+    pub hang_victims: usize,
+    /// Overload drill: jobs that finished with full results.
+    pub served: usize,
+    /// Overload drill: admission-gate shed events (each one preempted a
+    /// lower-priority open job to make room).
+    pub shed: usize,
+    /// Labels, centroids, inertia, and iteration count bitwise equal to
+    /// the baseline run (true by definition on the baseline row).
+    pub matches_baseline: bool,
+}
+
+fn identical(a: &ClusterOutput, b: &ClusterOutput) -> bool {
+    a.labels == b.labels
+        && a.centroids == b.centroids
+        && a.inertia.to_bits() == b.inertia.to_bits()
+        && a.iterations == b.iterations
+}
+
+/// A coordinator for one scenario leg. Every leg shares the plan,
+/// schedule, and engine; only the hardening config differs.
+fn coord(exec: ExecPlan, fault: Option<FaultPlan>) -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        exec,
+        schedule: Schedule::Static,
+        fault,
+        ..Default::default()
+    })
+}
+
+/// Run the hardening matrix.
+pub fn run_hardening_bench(opts: &HardeningBenchOpts) -> Result<Vec<HardeningBenchRow>> {
+    ensure!(!opts.cases.is_empty(), "need at least one case geometry");
+    ensure!(opts.retries >= 1, "the hang drills need a retry budget of at least 1");
+    ensure!(!opts.hang_victims.is_empty(), "need at least one hang victim count");
+    ensure!(opts.overload_cap >= 1, "the overload drill needs an admission cap of at least 1");
+    let samples = opts.samples.max(1);
+    let mut rows = Vec::new();
+    for (case_idx, &(height, width)) in opts.cases.iter().enumerate() {
+        let gen = SyntheticOrtho::default().with_seed(opts.seed ^ ((height as u64) << 1));
+        let img = Arc::new(gen.generate(height, width));
+        let ccfg = ClusterConfig {
+            k: opts.k,
+            fixed_iters: Some(opts.iters),
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let pixels = (height * width) as f64;
+        let passes = (opts.iters + 1) as f64;
+        let per_round = |wall: f64| wall * 1e9 / (pixels * passes);
+
+        let mut req = PlanRequest::new(height, width, 3, opts.k).with_rounds(opts.iters);
+        req.workers = Some(opts.workers);
+        let (exec, explain) = Planner::default().resolve(&req);
+        let blocks = explain.chosen().blocks;
+
+        // --- baseline: watchdog armed, nothing fails, no speculation -----
+        let mut base_best = f64::INFINITY;
+        let mut base_out = None;
+        for sample in 0..samples + 1 {
+            let c = coord(exec, None);
+            let t0 = Instant::now();
+            let out = c.cluster(&img, &ccfg)?;
+            let dt = t0.elapsed().as_secs_f64();
+            if sample > 0 {
+                base_best = base_best.min(dt);
+            }
+            base_out = Some(out);
+        }
+        let base_out = base_out.expect("at least one baseline sample ran");
+        rows.push(HardeningBenchRow {
+            scenario: "baseline".to_string(),
+            height,
+            width,
+            wall_secs: base_best,
+            ns_per_pixel_round: per_round(base_best),
+            overhead_pct: 0.0,
+            recovery_secs: 0.0,
+            hang_victims: 0,
+            served: 0,
+            shed: 0,
+            matches_baseline: true,
+        });
+        let overhead = |wall: f64| (wall / base_best - 1.0) * 100.0;
+
+        // --- hardened: speculation on, nothing fails ---------------------
+        // Measures the full hardening tax on a healthy run: heartbeat
+        // stamping, watchdog scans, and straggler sizing — with no
+        // stragglers, no clone should ever launch.
+        let mut hard_best = f64::INFINITY;
+        let mut hard_out = None;
+        for sample in 0..samples + 1 {
+            let c = coord(exec.with_speculate(true), None);
+            let t0 = Instant::now();
+            let out = c.cluster(&img, &ccfg)?;
+            let dt = t0.elapsed().as_secs_f64();
+            if sample > 0 {
+                hard_best = hard_best.min(dt);
+            }
+            hard_out = Some(out);
+        }
+        let hard_out = hard_out.expect("at least one hardened sample ran");
+        rows.push(HardeningBenchRow {
+            scenario: "hardened".to_string(),
+            height,
+            width,
+            wall_secs: hard_best,
+            ns_per_pixel_round: per_round(hard_best),
+            overhead_pct: overhead(hard_best),
+            recovery_secs: 0.0,
+            hang_victims: 0,
+            served: 0,
+            shed: 0,
+            matches_baseline: identical(&hard_out, &base_out),
+        });
+
+        // The drills pay real stall latency; one geometry is enough.
+        if case_idx != 0 {
+            continue;
+        }
+
+        // --- hang drills: N silent workers, watchdog recovery ------------
+        for &n in &opts.hang_victims {
+            // Victims skip block 0 (it carries the init broadcast) and
+            // clamp to the grid — the row records the real count.
+            let victims: Vec<usize> = (1..blocks).take(n).collect();
+            ensure!(
+                !victims.is_empty(),
+                "{height}x{width} resolves to {blocks} blocks — too few to stage a hang"
+            );
+            let fault = FaultPlan::on_blocks(
+                victims.clone(),
+                FaultKind::Hang { ms: opts.hang_ms },
+                1,
+            );
+            let c = coord(exec.with_retries(opts.retries).with_speculate(true), Some(fault));
+            let t0 = Instant::now();
+            let out = c.cluster(&img, &ccfg)?;
+            let wall = t0.elapsed().as_secs_f64();
+            rows.push(HardeningBenchRow {
+                scenario: format!("hang_{n}"),
+                height,
+                width,
+                wall_secs: wall,
+                ns_per_pixel_round: per_round(wall),
+                overhead_pct: overhead(wall),
+                recovery_secs: (wall - base_best).max(0.0),
+                hang_victims: victims.len(),
+                served: 0,
+                shed: 0,
+                matches_baseline: identical(&out, &base_out),
+            });
+        }
+
+        // --- overload drill: 2× the cap, QoS sheds the squatters ---------
+        let cap = opts.overload_cap;
+        let server = ClusterServer::start(ServerConfig {
+            workers: opts.workers,
+            schedule: Schedule::Static,
+            max_in_flight: cap,
+        });
+        // Low-priority squatters that cannot finish on their own fill
+        // the gate; each high-priority offer must preempt one.
+        let squat = ClusterConfig {
+            k: opts.k,
+            fixed_iters: Some(1_000_000),
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let mut lows = Vec::with_capacity(cap);
+        for _ in 0..cap {
+            let h = server
+                .try_submit(JobSpec::new(Arc::clone(&img), exec, squat.clone()))?
+                .expect("an empty admission gate admits");
+            lows.push(h);
+        }
+        let mut highs = Vec::with_capacity(cap);
+        for _ in 0..cap {
+            if let Some(h) = server
+                .try_submit(JobSpec::new(Arc::clone(&img), exec, ccfg.clone()).with_priority(1))?
+            {
+                highs.push(h);
+            }
+        }
+        let mut served = 0;
+        let mut matches = true;
+        for h in &highs {
+            match h.wait() {
+                JobStatus::Done(out) => {
+                    served += 1;
+                    matches &= identical(&out, &base_out);
+                }
+                _ => matches = false,
+            }
+        }
+        for h in &lows {
+            // Every squatter must end shed, not served.
+            matches &= matches!(h.wait(), JobStatus::Cancelled);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let shed = server.stats().shed as usize;
+        let report = server.drain(Duration::from_millis(5_000));
+        // Nothing was open by now; a non-empty report means a leak.
+        matches &= report.dispositions.is_empty();
+        rows.push(HardeningBenchRow {
+            scenario: "overload".to_string(),
+            height,
+            width,
+            wall_secs: wall,
+            ns_per_pixel_round: 0.0,
+            overhead_pct: 0.0,
+            recovery_secs: 0.0,
+            hang_victims: 0,
+            served,
+            shed,
+            matches_baseline: matches,
+        });
+    }
+    Ok(rows)
+}
+
+/// Serialize the matrix as the `BENCH_hardening.json` document.
+pub fn hardening_bench_json(opts: &HardeningBenchOpts, rows: &[HardeningBenchRow]) -> String {
+    let num = Json::Num;
+    let mut doc = BTreeMap::new();
+    doc.insert("source".to_string(), Json::Str("rust".to_string()));
+    doc.insert("channels".to_string(), num(3.0));
+    doc.insert("k".to_string(), num(opts.k as f64));
+    doc.insert("iters".to_string(), num(opts.iters as f64));
+    doc.insert("samples".to_string(), num(opts.samples as f64));
+    doc.insert("seed".to_string(), num(opts.seed as f64));
+    doc.insert("workers".to_string(), num(opts.workers as f64));
+    doc.insert("retries".to_string(), num(opts.retries as f64));
+    doc.insert("hang_ms".to_string(), num(opts.hang_ms as f64));
+    doc.insert(
+        "heartbeat_timeout_ms".to_string(),
+        num(DEFAULT_HEARTBEAT_TIMEOUT_MS as f64),
+    );
+    doc.insert("overload_cap".to_string(), num(opts.overload_cap as f64));
+    let cases = rows
+        .iter()
+        .map(|r| {
+            let mut c = BTreeMap::new();
+            c.insert("scenario".to_string(), Json::Str(r.scenario.clone()));
+            c.insert("height".to_string(), num(r.height as f64));
+            c.insert("width".to_string(), num(r.width as f64));
+            c.insert("wall_secs".to_string(), num(r.wall_secs));
+            c.insert("ns_per_pixel_round".to_string(), num(r.ns_per_pixel_round));
+            c.insert("overhead_pct".to_string(), num(r.overhead_pct));
+            c.insert("recovery_secs".to_string(), num(r.recovery_secs));
+            c.insert("hang_victims".to_string(), num(r.hang_victims as f64));
+            c.insert("served".to_string(), num(r.served as f64));
+            c.insert("shed".to_string(), num(r.shed as f64));
+            c.insert(
+                "matches_baseline".to_string(),
+                Json::Bool(r.matches_baseline),
+            );
+            Json::Obj(c)
+        })
+        .collect();
+    doc.insert("cases".to_string(), Json::Arr(cases));
+    Json::Obj(doc).to_string()
+}
+
+/// Run the matrix and write `BENCH_hardening.json` to `path`.
+pub fn write_hardening_bench(
+    path: &Path,
+    opts: &HardeningBenchOpts,
+) -> Result<Vec<HardeningBenchRow>> {
+    let rows = run_hardening_bench(opts)?;
+    std::fs::write(path, hardening_bench_json(opts, &rows))
+        .with_context(|| format!("write hardening bench to {}", path.display()))?;
+    Ok(rows)
+}
+
+/// Human-readable rendering of the matrix.
+pub fn render_hardening_bench(opts: &HardeningBenchOpts, rows: &[HardeningBenchRow]) -> String {
+    let mut t = Table::new(format!(
+        "Liveness hardening: overhead, recovery, QoS — k={}, {} rounds, hang {}ms, cap {}",
+        opts.k, opts.iters, opts.hang_ms, opts.overload_cap
+    ))
+    .header(&[
+        "Image", "Scenario", "ns/px/round", "Overhead", "Recovery", "Victims", "Served/Shed",
+        "Identical",
+    ]);
+    for r in rows {
+        t.row(vec![
+            format!("{}x{}", r.width, r.height),
+            r.scenario.clone(),
+            if r.ns_per_pixel_round > 0.0 {
+                format!("{:.2}", r.ns_per_pixel_round)
+            } else {
+                "-".to_string()
+            },
+            if r.scenario == "baseline" || r.scenario == "overload" {
+                "-".to_string()
+            } else {
+                format!("{:+.1}%", r.overhead_pct)
+            },
+            if r.recovery_secs > 0.0 {
+                format!("{:.3}s", r.recovery_secs)
+            } else {
+                "-".to_string()
+            },
+            if r.hang_victims > 0 {
+                r.hang_victims.to_string()
+            } else {
+                "-".to_string()
+            },
+            if r.scenario == "overload" {
+                format!("{}/{}", r.served, r.shed)
+            } else {
+                "-".to_string()
+            },
+            if r.matches_baseline { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_matrix_recovers_sheds_and_matches_bitwise() {
+        // A sub-heartbeat hang keeps this fast: the parked worker wakes
+        // and computes before the watchdog fires, which still exercises
+        // the drill plumbing and the bitwise acceptance checks.
+        let opts = HardeningBenchOpts {
+            cases: vec![(64, 48)],
+            iters: 3,
+            workers: 2,
+            hang_ms: 60,
+            hang_victims: vec![1],
+            overload_cap: 1,
+            ..HardeningBenchOpts::quick()
+        };
+        let rows = run_hardening_bench(&opts).unwrap();
+        // baseline + hardened + hang_1 + overload
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(
+                r.matches_baseline,
+                "{} {}x{} diverged from the baseline",
+                r.scenario, r.width, r.height
+            );
+        }
+        let hang = rows.iter().find(|r| r.scenario == "hang_1").unwrap();
+        assert_eq!(hang.hang_victims, 1);
+        assert!(hang.recovery_secs > 0.0, "a hang must cost measurable recovery time");
+        let over = rows.iter().find(|r| r.scenario == "overload").unwrap();
+        assert_eq!(over.served, 1, "the high-priority job must be served");
+        assert_eq!(over.shed, 1, "the squatter must be shed exactly once");
+        let json = hardening_bench_json(&opts, &rows);
+        let doc = Json::parse(&json).unwrap();
+        assert_eq!(doc.get("cases").and_then(Json::as_arr).unwrap().len(), 4);
+        let text = render_hardening_bench(&opts, &rows);
+        assert!(text.contains("overload") && text.contains("yes"), "{text}");
+    }
+}

@@ -5,6 +5,7 @@
 //! `cargo bench` for the entry points.
 
 pub mod cases;
+pub mod hardening;
 pub mod kernels;
 pub mod layout;
 pub mod plan;
@@ -16,6 +17,7 @@ pub mod sweep;
 pub mod tables;
 pub mod workloads;
 
+pub use hardening::{HardeningBenchOpts, HardeningBenchRow};
 pub use kernels::{KernelBenchOpts, KernelBenchRow};
 pub use layout::{LayoutBenchOpts, LayoutBenchRow};
 pub use plan::{PlanBenchOpts, PlanBenchRow};

@@ -30,6 +30,7 @@ pub const SUBCOMMANDS: &[&str] = &[
     "batch",
     "serve",
     "resilience",
+    "hardening",
     "info",
 ];
 
@@ -102,9 +103,35 @@ pub fn blockms_cli() -> Cli {
             "fault",
             None,
             "inject a deterministic fault for drills: BLOCK[:KIND[:VISITS[:AFTER]]] \
-             with KIND error|panic|reader-io (e.g. 2:panic:1)",
+             with KIND error|panic|reader-io|hang[MS] (e.g. 2:panic:1, 1:hang60000; \
+             hang parks the worker silently — pair with --retries so the watchdog \
+             can re-queue the block)",
+        )
+        .opt(
+            "deadline-ms",
+            Some("0"),
+            "cluster/serve: per-job wall-clock deadline, ms (0 = none); a deadlined \
+             run checkpoints its last round boundary when --checkpoint is set and \
+             exits resumable",
+        )
+        .opt(
+            "priority",
+            Some("0"),
+            "serve: QoS priority (higher drains first; under overload the admission \
+             gate sheds lowest-priority jobs to make room)",
+        )
+        .opt(
+            "drain-timeout",
+            Some("5000"),
+            "serve: graceful-drain budget at end of run, ms — in-flight jobs get this \
+             long to finish before being checkpointed or cancelled",
         )
         .flag("serial", "cluster: also run the sequential baseline and compare")
+        .flag(
+            "speculate",
+            "cluster: near end of round, re-run straggler blocks on idle workers \
+             (first result wins; bit-identical either way)",
+        )
         .flag("prefetch", "overlap next-block reads with compute (double buffering)")
         .flag(
             "file-backed",

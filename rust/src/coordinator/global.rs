@@ -200,6 +200,26 @@ impl GlobalState {
         Ok(self.outstanding == 0)
     }
 
+    /// Whether the in-flight round still needs this outcome. `false`
+    /// for a duplicate of an already-absorbed block or a stale round —
+    /// exactly the copies speculative re-execution produces, which the
+    /// caller discards instead of feeding to [`GlobalState::absorb`].
+    pub fn wants(&self, outcome: &JobOutcome) -> bool {
+        outcome.block < self.pending.len()
+            && outcome.round == self.iterations as u64
+            && self.outstanding > 0
+            && self.pending[outcome.block].is_none()
+    }
+
+    /// Whether `block` is still missing from the in-flight round (a
+    /// failure for an already-absorbed block is a losing twin's, not a
+    /// round-stopper).
+    pub fn block_pending(&self, block: usize) -> bool {
+        self.outstanding > 0
+            && block < self.pending.len()
+            && self.pending[block].is_none()
+    }
+
     /// Reduce the completed round in block order and advance the phase.
     pub fn finish_round(&mut self) -> Result<()> {
         assert_eq!(self.outstanding, 0, "round still in flight");
@@ -301,6 +321,34 @@ impl GlobalState {
             blocks_done: vec![true; self.plan.len()],
             label_cursor: 0,
         }
+    }
+
+    /// Like [`GlobalState::snapshot`], but callable **mid-round**: any
+    /// partial progress of the in-flight round is discarded and the
+    /// checkpoint captures the last completed boundary (the centroids
+    /// shipped with this round's jobs), so a resumed run re-executes
+    /// the interrupted round from scratch — bit-identically, because
+    /// each round is a pure function of those centroids. `None` once
+    /// the run is done (nothing left to resume). This is the drain
+    /// path's snapshot: a deadline can land with blocks still out.
+    pub fn boundary_snapshot(&self, fingerprint: u64) -> Option<Checkpoint> {
+        if self.done() {
+            return None;
+        }
+        Some(Checkpoint {
+            fingerprint,
+            iterations: self.iterations as u64,
+            phase: match self.phase {
+                GlobalPhase::Step => CheckpointPhase::Step,
+                GlobalPhase::Assign => CheckpointPhase::Assign,
+                GlobalPhase::Done => unreachable!("guarded above"),
+            },
+            converged: self.converged,
+            centroids: self.centroids.clone(),
+            inertia_trace: self.inertia_trace.clone(),
+            blocks_done: vec![true; self.plan.len()],
+            label_cursor: 0,
+        })
     }
 
     /// Rewind a freshly initialized run to a checkpointed boundary.

@@ -126,6 +126,21 @@ impl LocalState {
         Ok(self.outstanding == 0)
     }
 
+    /// Whether the (single) in-flight round still needs this outcome —
+    /// see [`crate::coordinator::GlobalState::wants`].
+    pub fn wants(&self, outcome: &JobOutcome) -> bool {
+        outcome.block < self.pending.len()
+            && self.outstanding > 0
+            && self.pending[outcome.block].is_none()
+    }
+
+    /// Whether `block` is still missing from the in-flight round.
+    pub fn block_pending(&self, block: usize) -> bool {
+        self.outstanding > 0
+            && block < self.pending.len()
+            && self.pending[block].is_none()
+    }
+
     /// Harmonize the completed round and assemble the label map.
     pub fn finish_round(&mut self) -> Result<()> {
         assert_eq!(self.outstanding, 0, "round still in flight");

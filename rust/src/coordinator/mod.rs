@@ -396,6 +396,26 @@ impl RunMachine {
         }
     }
 
+    /// Whether the in-flight round still needs this outcome. Duplicate
+    /// `(job, block, round)` copies — the losing twins of watchdog
+    /// escalation and straggler speculation — answer `false` and must
+    /// be discarded instead of absorbed.
+    pub fn wants(&self, outcome: &JobOutcome) -> bool {
+        match self {
+            RunMachine::Global(g) => g.wants(outcome),
+            RunMachine::Local(l) => l.wants(outcome),
+        }
+    }
+
+    /// Whether `block` is still missing from the in-flight round (an
+    /// error for a block a twin already delivered is not a failure).
+    pub fn block_pending(&self, block: usize) -> bool {
+        match self {
+            RunMachine::Global(g) => g.block_pending(block),
+            RunMachine::Local(l) => l.block_pending(block),
+        }
+    }
+
     pub fn finish_round(&mut self) -> Result<()> {
         match self {
             RunMachine::Global(g) => g.finish_round(),
@@ -415,6 +435,16 @@ impl RunMachine {
     pub fn snapshot(&self, fingerprint: u64) -> Option<Checkpoint> {
         match self {
             RunMachine::Global(g) => Some(g.snapshot(fingerprint)),
+            RunMachine::Local(_) => None,
+        }
+    }
+
+    /// Mid-round-safe snapshot of the last completed boundary (see
+    /// [`GlobalState::boundary_snapshot`]); `None` for local mode or a
+    /// finished run.
+    pub fn boundary_snapshot(&self, fingerprint: u64) -> Option<Checkpoint> {
+        match self {
+            RunMachine::Global(g) => g.boundary_snapshot(fingerprint),
             RunMachine::Local(_) => None,
         }
     }
@@ -540,14 +570,40 @@ impl Coordinator {
         }
         let retries = self.cfg.exec.retries;
         let every = self.cfg.exec.checkpoint_every;
+        pool.set_speculate(self.cfg.exec.speculate);
+        // A deadline is enforced at round boundaries only: a round in
+        // flight always completes (values are never truncated), then
+        // the run stops with a best-effort checkpoint so it is
+        // *resumable*, not lost.
+        let deadline_ms = self.cfg.exec.deadline_ms;
+        let deadline = (deadline_ms > 0)
+            .then(|| std::time::Instant::now() + std::time::Duration::from_millis(deadline_ms as u64));
         let mut rounds_done = 0usize;
         while !machine.done() {
             let jobs = machine.start_round(SOLO_JOB);
             for outcome in pool.run_round_resilient(jobs, retries)? {
-                machine.absorb(outcome)?;
+                if machine.wants(&outcome) {
+                    machine.absorb(outcome)?;
+                }
             }
             machine.finish_round()?;
             rounds_done += 1;
+            if let Some(d) = deadline {
+                if std::time::Instant::now() >= d && !machine.done() {
+                    let saved = match (&self.cfg.checkpoint, machine.snapshot(fingerprint)) {
+                        (Some(path), Some(ck)) => {
+                            ck.save(path).with_context(|| {
+                                format!("writing deadline checkpoint {}", path.display())
+                            })?;
+                            format!("checkpoint written to {} (resume with --resume)", path.display())
+                        }
+                        _ => "no checkpoint path configured; progress discarded".to_string(),
+                    };
+                    anyhow::bail!(
+                        "deadline of {deadline_ms}ms hit after {rounds_done} rounds; {saved}"
+                    );
+                }
+            }
             if every > 0 && rounds_done % every == 0 && !machine.done() {
                 if let Some(path) = &self.cfg.checkpoint {
                     if let Some(ck) = machine.snapshot(fingerprint) {
@@ -620,7 +676,15 @@ impl Coordinator {
         );
         let fingerprint =
             run_fingerprint(img.height(), img.width(), img.channels(), ccfg, self.cfg.mode);
-        self.drive(&mut machine, &pool, fingerprint)?;
+        let drove = self.drive(&mut machine, &pool, fingerprint);
+        // Wake any still-parked hang victim before joining: the run is
+        // over (finished, stalled out, or deadlined) and a parked
+        // worker would otherwise block the join for the rest of its
+        // park, turning a bounded recovery into an unbounded teardown.
+        if let Some(f) = &self.cfg.fault {
+            f.release();
+        }
+        drove?;
         pool.shutdown();
         let m = machine.into_output()?;
 
@@ -720,7 +784,13 @@ impl Coordinator {
             label_budget,
         );
         let fingerprint = run_fingerprint(height, width, channels, ccfg, self.cfg.mode);
-        self.drive(&mut machine, &pool, fingerprint)?;
+        let drove = self.drive(&mut machine, &pool, fingerprint);
+        // Same latch rule as `cluster`: a parked hang victim must not
+        // outlive the run into the join below.
+        if let Some(f) = &self.cfg.fault {
+            f.release();
+        }
+        drove?;
         pool.shutdown();
         let m = machine.into_output()?;
         let io_stats = store.stats().snapshot();

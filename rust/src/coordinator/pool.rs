@@ -9,17 +9,39 @@
 //! the streaming [`WorkerPool::submit`]/[`WorkerPool::recv_result`]
 //! pair to interleave rounds of many jobs at once.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use super::messages::{Job, JobError, JobId, JobOutcome, JobPayload};
 use super::queue::{JobQueue, Schedule};
 use super::worker::{panic_message, worker_main, ContextRegistry, WorkerContext};
+use crate::resilience::{Stall, Watchdog, DEFAULT_HEARTBEAT_TIMEOUT_MS};
+
+/// How often a waiting leader wakes to scan the heartbeat table.
+const WATCHDOG_TICK: Duration = Duration::from_millis(25);
+
+/// Warmup pongs may legitimately take a long time (PJRT client build +
+/// artifact compile), so the readiness barrier gets its own generous
+/// bound instead of the block-level heartbeat timeout.
+const WARMUP_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Straggler speculation fires only once this fraction of the round has
+/// completed (the median block time is meaningful by then).
+const SPECULATE_ROUND_FRACTION: f64 = 0.75;
+
+/// A block is a straggler when the round has been running longer than
+/// this multiple of the median completed-block arrival time.
+const SPECULATE_MULTIPLIER: f64 = 4.0;
+
+/// Floor on the straggler threshold: never speculate inside the noise
+/// band of scheduler jitter.
+const SPECULATE_MIN_SECS: f64 = 0.025;
 
 /// A pool of worker threads processing tagged block jobs.
 pub struct WorkerPool {
@@ -36,6 +58,15 @@ pub struct WorkerPool {
     /// the root cause the leader forwards instead of a bare
     /// "worker pool hung up".
     last_panic: Arc<Mutex<Option<String>>>,
+    /// Heartbeat table: workers stamp per block visit, the leader's
+    /// bounded barriers scan it for silent workers.
+    watchdog: Arc<Watchdog>,
+    /// Straggler speculation for [`WorkerPool::run_round_resilient`]
+    /// (off by default; see [`crate::plan::ExecPlan::speculate`]).
+    speculate: AtomicBool,
+    /// Stalls scanned but not yet surfaced to a caller (one is
+    /// delivered per `recv_result*` call; the rest wait here).
+    pending_stalls: Mutex<VecDeque<Stall>>,
 }
 
 impl WorkerPool {
@@ -54,20 +85,28 @@ impl WorkerPool {
         let queue = Arc::new(JobQueue::new(workers, schedule));
         let registry = Arc::new(ContextRegistry::new());
         let last_panic: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let watchdog = Arc::new(Watchdog::new(workers, DEFAULT_HEARTBEAT_TIMEOUT_MS));
         let (tx, rx) = channel();
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let queue = Arc::clone(&queue);
             let registry = Arc::clone(&registry);
             let last_panic = Arc::clone(&last_panic);
+            let watchdog = Arc::clone(&watchdog);
             let tx = tx.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("blockms-worker-{w}"))
                     .spawn(move || loop {
-                        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                            || worker_main(w, Arc::clone(&registry), Arc::clone(&queue), tx.clone()),
-                        ));
+                        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            worker_main(
+                                w,
+                                Arc::clone(&registry),
+                                Arc::clone(&queue),
+                                tx.clone(),
+                                Arc::clone(&watchdog),
+                            )
+                        }));
                         match caught {
                             // Clean exit: queue closed or leader gone.
                             Ok(()) => break,
@@ -75,6 +114,11 @@ impl WorkerPool {
                                 let msg = panic_message(payload.as_ref());
                                 *last_panic.lock().unwrap() =
                                     Some(format!("worker {w} panicked: {msg}"));
+                                // A panic mid-block leaves the heartbeat
+                                // slot busy; clear it so the watchdog
+                                // does not escalate the respawned (idle)
+                                // worker.
+                                watchdog.end(w);
                                 // Respawn: re-enter the loop with fresh
                                 // worker-local state (engines, bounds,
                                 // tiles all rebuild lazily).
@@ -92,7 +136,28 @@ impl WorkerPool {
             workers,
             open_high_water: AtomicUsize::new(0),
             last_panic,
+            watchdog,
+            speculate: AtomicBool::new(false),
+            pending_stalls: Mutex::new(VecDeque::new()),
         }
+    }
+
+    /// The pool's heartbeat table (tests and benches retune its
+    /// staleness timeout through this).
+    pub fn watchdog(&self) -> &Watchdog {
+        &self.watchdog
+    }
+
+    /// Shorthand for retuning the heartbeat staleness timeout
+    /// (milliseconds; 0 disables the watchdog).
+    pub fn set_heartbeat_timeout_ms(&self, ms: u64) {
+        self.watchdog.set_timeout_ms(ms);
+    }
+
+    /// Enable/disable straggler speculation in
+    /// [`WorkerPool::run_round_resilient`].
+    pub fn set_speculate(&self, on: bool) {
+        self.speculate.store(on, Ordering::Relaxed);
     }
 
     pub fn workers(&self) -> usize {
@@ -147,6 +212,13 @@ impl WorkerPool {
         self.queue.set_job_group(job, group);
     }
 
+    /// Tag `job` with a QoS priority (see [`JobQueue::set_job_priority`]):
+    /// the dynamic rotation drains higher-priority jobs first. Call
+    /// alongside [`WorkerPool::register_job`], before the first submit.
+    pub fn set_job_priority(&self, job: JobId, priority: usize) {
+        self.queue.set_job_priority(job, priority);
+    }
+
     /// Remove the job's queued (not yet popped) blocks; returns how many
     /// were removed so the leader can shrink its expected-outcome count.
     pub fn purge_job(&self, job: JobId) -> usize {
@@ -180,10 +252,53 @@ impl WorkerPool {
     /// Receive the next outcome (any job). The outer `Err` means the
     /// pool itself hung up (all workers gone); the inner [`JobError`]
     /// is a per-job failure that leaves the pool serviceable.
+    ///
+    /// The wait is watchdog-bounded, not unconditional: if a busy
+    /// worker goes silent past the heartbeat timeout, the stall is
+    /// surfaced as a synthesized [`JobError`] naming the worker and
+    /// block, so the service's existing retry path re-queues a spare
+    /// copy instead of the leader blocking forever.
     pub fn recv_result(&self) -> Result<Result<JobOutcome, JobError>> {
-        self.results
-            .recv()
-            .map_err(|_| self.hangup_error("between results"))
+        match self.recv_result_deadline(None)? {
+            Some(r) => Ok(r),
+            None => unreachable!("deadline-less recv cannot time out"),
+        }
+    }
+
+    /// [`WorkerPool::recv_result`] with an optional deadline: returns
+    /// `Ok(None)` once `until` passes with nothing received (the drain
+    /// path's bounded wait). `None` waits indefinitely (still
+    /// watchdog-scanned).
+    pub fn recv_result_deadline(
+        &self,
+        until: Option<Instant>,
+    ) -> Result<Option<Result<JobOutcome, JobError>>> {
+        loop {
+            if let Some(stall) = self.pending_stalls.lock().unwrap().pop_front() {
+                return Ok(Some(Err(stall_error(&stall))));
+            }
+            let mut tick = WATCHDOG_TICK;
+            if let Some(u) = until {
+                let left = u.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    return Ok(None);
+                }
+                tick = tick.min(left);
+            }
+            match self.results.recv_timeout(tick) {
+                Ok(r) => return Ok(Some(r)),
+                Err(RecvTimeoutError::Timeout) => {
+                    let mut stalls = self.watchdog.scan().into_iter();
+                    if let Some(first) = stalls.next() {
+                        self.pending_stalls.lock().unwrap().extend(stalls);
+                        return Ok(Some(Err(stall_error(&first))));
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(self.hangup_error("between results"))
+                }
+            }
+        }
     }
 
     /// Execute one round of jobs, blocking until all results arrive.
@@ -204,34 +319,70 @@ impl WorkerPool {
     /// centroids and the failing worker has already evicted its state
     /// for that `(job, block)`, so a recovered round is bit-identical
     /// to one that never failed (see [`crate::resilience`]).
+    ///
+    /// The barrier is **watchdog-bounded**: the leader waits in
+    /// `recv_timeout` ticks and scans the heartbeat table between
+    /// them. A busy worker silent past the timeout is escalated to the
+    /// same re-queue path (a hung block is indistinguishable from a
+    /// panicked one); with the retry budget exhausted the round aborts
+    /// loudly instead of hanging forever. When speculation is enabled
+    /// ([`WorkerPool::set_speculate`]) and the round is mostly done,
+    /// straggling blocks are cloned onto idle workers and the first
+    /// completed result wins. Both paths are bit-identical by
+    /// construction: per-block work is a pure function of the round's
+    /// shipped centroids, duplicates are discarded by
+    /// `(job, block, round)` before the block-ordered reduction.
     pub fn run_round_resilient(&self, jobs: Vec<Job>, retries: usize) -> Result<Vec<JobOutcome>> {
         let expect = jobs.len();
         if expect == 0 {
             return Ok(Vec::new());
         }
         // Keep a clone of each block's job for re-enqueue (cheap: the
-        // payload's centroids/drift are behind `Arc`s).
-        let spare: HashMap<usize, Job> = if retries > 0 {
-            jobs.iter().map(|j| (j.block, j.clone())).collect()
-        } else {
-            HashMap::new()
-        };
+        // payload's centroids/drift are behind `Arc`s) and remember
+        // the `(job, round)` tag a genuine outcome must carry — a late
+        // twin from a previous round must never leak into this one.
+        let spare: HashMap<usize, Job> = jobs.iter().map(|j| (j.block, j.clone())).collect();
         let mut attempts: HashMap<usize, usize> = HashMap::new();
+        // Result copies in flight per block (original + escalations +
+        // speculative clones). An error only counts against the retry
+        // budget once every copy has failed.
+        let mut copies: HashMap<usize, usize> = HashMap::new();
+        let mut done: HashSet<usize> = HashSet::new();
+        let mut speculated: HashSet<usize> = HashSet::new();
+        let mut arrivals: Vec<f64> = Vec::with_capacity(expect);
+        let t_round = Instant::now();
         self.queue.push_round(jobs);
         let mut out = Vec::with_capacity(expect);
         while out.len() < expect {
-            match self.results.recv() {
-                Ok(Ok(outcome)) => out.push(outcome),
+            match self.results.recv_timeout(WATCHDOG_TICK) {
+                Ok(Ok(outcome)) => {
+                    let genuine = spare
+                        .get(&outcome.block)
+                        .is_some_and(|j| j.job == outcome.job && j.round == outcome.round);
+                    if !genuine || !done.insert(outcome.block) {
+                        // Losing twin (block already reduced) or a
+                        // stale outcome from an earlier round's hung
+                        // worker: discard before reduction.
+                        continue;
+                    }
+                    arrivals.push(t_round.elapsed().as_secs_f64());
+                    out.push(outcome);
+                }
                 // Worker errors carry their own worker/block attribution.
                 Ok(Err(e)) => {
+                    if done.contains(&e.block) || !spare.contains_key(&e.block) {
+                        continue; // a twin already won, or a stale error
+                    }
+                    let live = copies.entry(e.block).or_insert(1);
+                    *live = live.saturating_sub(1);
+                    if *live > 0 {
+                        continue; // another copy of the block is still in flight
+                    }
                     let used = attempts.entry(e.block).or_insert(0);
                     if *used < retries {
                         *used += 1;
-                        let job = spare
-                            .get(&e.block)
-                            .cloned()
-                            .expect("spares kept whenever retries > 0");
-                        self.queue.push_retry(job);
+                        *live = 1;
+                        self.queue.push_retry(spare[&e.block].clone());
                     } else if retries == 0 {
                         return Err(e.error);
                     } else {
@@ -242,7 +393,36 @@ impl WorkerPool {
                         )));
                     }
                 }
-                Err(_) => {
+                Err(RecvTimeoutError::Timeout) => {
+                    for stall in self.watchdog.scan() {
+                        if done.contains(&stall.block) || !spare.contains_key(&stall.block) {
+                            continue;
+                        }
+                        let used = attempts.entry(stall.block).or_insert(0);
+                        if *used >= retries {
+                            return Err(stall_error(&stall).error.context(format!(
+                                "retry budget {retries} exhausted; raise --retries or \
+                                 the heartbeat timeout"
+                            )));
+                        }
+                        // Escalate: clone the hung block onto another
+                        // worker. The parked original may still finish
+                        // later — its duplicate result is discarded.
+                        *used += 1;
+                        *copies.entry(stall.block).or_insert(1) += 1;
+                        self.queue.push_retry(spare[&stall.block].clone());
+                    }
+                    self.maybe_speculate(
+                        expect,
+                        &t_round,
+                        &arrivals,
+                        &spare,
+                        &done,
+                        &mut speculated,
+                        &mut copies,
+                    );
+                }
+                Err(RecvTimeoutError::Disconnected) => {
                     return Err(self
                         .hangup_error(&format!("mid-round ({}/{expect} results)", out.len())))
                 }
@@ -250,6 +430,46 @@ impl WorkerPool {
         }
         out.sort_by_key(|o| o.block);
         Ok(out)
+    }
+
+    /// Straggler speculation: once the round is mostly complete and
+    /// has been running for a robust multiple of the median completed
+    /// block time, clone every unfinished block onto the (now mostly
+    /// idle) workers. At most one clone per block per round; the
+    /// clones do not consume the retry budget — they recompute the
+    /// same pure function, so the first result wins either way.
+    #[allow(clippy::too_many_arguments)]
+    fn maybe_speculate(
+        &self,
+        expect: usize,
+        t_round: &Instant,
+        arrivals: &[f64],
+        spare: &HashMap<usize, Job>,
+        done: &HashSet<usize>,
+        speculated: &mut HashSet<usize>,
+        copies: &mut HashMap<usize, usize>,
+    ) {
+        if !self.speculate.load(Ordering::Relaxed) || arrivals.is_empty() {
+            return;
+        }
+        let frac = done.len() as f64 / expect as f64;
+        if frac < SPECULATE_ROUND_FRACTION {
+            return;
+        }
+        let mut sorted = arrivals.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        let threshold = (SPECULATE_MULTIPLIER * median).max(SPECULATE_MIN_SECS);
+        if t_round.elapsed().as_secs_f64() <= threshold {
+            return;
+        }
+        for (&block, job) in spare {
+            if done.contains(&block) || !speculated.insert(block) {
+                continue;
+            }
+            *copies.entry(block).or_insert(1) += 1;
+            self.queue.push_retry(job.clone());
+        }
     }
 
     /// Readiness barrier for one registered job: one ping per worker,
@@ -271,10 +491,18 @@ impl WorkerPool {
             );
         }
         for _ in 0..self.workers {
-            match self.results.recv() {
+            match self.results.recv_timeout(WARMUP_TIMEOUT) {
                 Ok(Ok(_)) => {}
                 Ok(Err(e)) => return Err(e.error),
-                Err(_) => return Err(anyhow!("worker pool hung up during warmup")),
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(anyhow!(
+                        "warmup stalled: no pong for {}s (worker startup hung)",
+                        WARMUP_TIMEOUT.as_secs()
+                    ))
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(self.hangup_error("during warmup"))
+                }
             }
         }
         Ok(t0.elapsed().as_secs_f64())
@@ -307,6 +535,21 @@ impl Drop for WorkerPool {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// The loud, context-rich error a silent worker escalates to.
+fn stall_error(s: &Stall) -> JobError {
+    JobError {
+        job: s.job,
+        block: s.block,
+        error: anyhow!(
+            "round {} stalled: block {} on worker {}, no heartbeat for {}ms",
+            s.round,
+            s.block,
+            s.worker,
+            s.silent.as_millis()
+        ),
     }
 }
 
@@ -612,6 +855,96 @@ mod tests {
         pool.register_job(SOLO_JOB, ctx);
         let secs = pool.warmup(SOLO_JOB).unwrap();
         assert!(secs >= 0.0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn hung_block_is_escalated_and_stays_bit_identical() {
+        // Block 2's first visit parks for a nominal 60s — without the
+        // watchdog the round barrier would wait that long. With a
+        // 50ms heartbeat timeout the leader escalates the silent
+        // worker, a clone recomputes the block elsewhere, and the
+        // round completes promptly with values identical to a clean
+        // run (the parked original's late duplicate is discarded).
+        let fault = FaultPlan::new(2, FaultKind::Hang { ms: 60_000 }, 1);
+        let (ctx, _img) = context(Some(fault.clone()));
+        let nblocks = ctx.plan.len();
+        let pool = WorkerPool::spawn(2, Schedule::Dynamic);
+        pool.set_heartbeat_timeout_ms(50);
+        pool.register_job(SOLO_JOB, ctx);
+        let cen = Arc::new(vec![10.0, 10.0, 10.0, 200.0, 200.0, 200.0]);
+        let t0 = Instant::now();
+        let outcomes = pool
+            .run_round_resilient(step_jobs(SOLO_JOB, nblocks, &cen), 1)
+            .unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "watchdog must bound the round, not the 60s park"
+        );
+        assert_eq!(outcomes.len(), nblocks);
+        assert!(fault.trips() >= 2, "block 2 must have been re-visited");
+
+        let (clean_ctx, _img) = context(None);
+        let clean_pool = WorkerPool::spawn(2, Schedule::Dynamic);
+        clean_pool.register_job(SOLO_JOB, clean_ctx);
+        let clean = clean_pool.run_round(step_jobs(SOLO_JOB, nblocks, &cen)).unwrap();
+        for (a, b) in outcomes.iter().zip(&clean) {
+            match (&a.result, &b.result) {
+                (JobResult::Step { accum: x }, JobResult::Step { accum: y }) => {
+                    assert_eq!(x.counts, y.counts);
+                    assert_eq!(x.sums, y.sums, "escalated block diverged");
+                    assert_eq!(x.inertia.to_bits(), y.inertia.to_bits());
+                }
+                other => unreachable!("{other:?}"),
+            }
+        }
+        fault.release(); // wake the parked worker so shutdown can join
+        pool.shutdown();
+        clean_pool.shutdown();
+    }
+
+    #[test]
+    fn stall_with_exhausted_budget_errors_loudly() {
+        let fault = FaultPlan::new(1, FaultKind::Hang { ms: 60_000 }, 1);
+        let (ctx, _img) = context(Some(fault.clone()));
+        let nblocks = ctx.plan.len();
+        let pool = WorkerPool::spawn(2, Schedule::Dynamic);
+        pool.set_heartbeat_timeout_ms(50);
+        pool.register_job(SOLO_JOB, ctx);
+        let cen = Arc::new(vec![0.0; 6]);
+        let err = pool
+            .run_round_resilient(step_jobs(SOLO_JOB, nblocks, &cen), 0)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("stalled: block 1 on worker"), "{msg}");
+        assert!(msg.contains("no heartbeat for"), "{msg}");
+        assert!(msg.contains("retry budget 0 exhausted"), "{msg}");
+        fault.release();
+        pool.shutdown();
+    }
+
+    #[test]
+    fn speculation_rescues_a_straggler_without_the_watchdog() {
+        // Watchdog off (timeout 0), speculation on: the straggling
+        // block is cloned once ≥75% of the round has completed and the
+        // round has overrun the median block time, without consuming
+        // any retry budget (retries = 0 here).
+        let fault = FaultPlan::new(2, FaultKind::Hang { ms: 60_000 }, 1);
+        let (ctx, _img) = context(Some(fault.clone()));
+        let nblocks = ctx.plan.len();
+        let pool = WorkerPool::spawn(2, Schedule::Dynamic);
+        pool.set_heartbeat_timeout_ms(0);
+        pool.set_speculate(true);
+        pool.register_job(SOLO_JOB, ctx);
+        let cen = Arc::new(vec![10.0, 10.0, 10.0, 200.0, 200.0, 200.0]);
+        let t0 = Instant::now();
+        let outcomes = pool
+            .run_round_resilient(step_jobs(SOLO_JOB, nblocks, &cen), 0)
+            .unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(30), "speculation must fire");
+        assert_eq!(outcomes.len(), nblocks);
+        assert!(fault.trips() >= 2, "the straggler must have been cloned");
+        fault.release();
         pool.shutdown();
     }
 }

@@ -55,6 +55,11 @@ struct QueueState {
     /// decoded tile is still hot in the arena. Ungrouped ids keep the
     /// plain round-robin order.
     groups: BTreeMap<JobId, u64>,
+    /// QoS priority per job id (0 = default). The rotation drains the
+    /// highest-priority queued job first; equal priorities keep the
+    /// fair round-robin interleave (an untagged service is exactly the
+    /// pre-QoS queue).
+    priorities: BTreeMap<JobId, usize>,
     /// High water of distinct jobs simultaneously queued in `shared`
     /// (instrumentation for the admission-cap tests).
     max_jobs_interleaved: usize,
@@ -87,9 +92,33 @@ impl QueueState {
         self.max_jobs_interleaved = self.max_jobs_interleaved.max(self.shared.len());
     }
 
-    /// Take the next shared job, rotating fairly across job ids.
+    /// The rotation position to drain next: the first id carrying the
+    /// maximum priority. With no priorities tagged this is always the
+    /// front — the plain fair rotation.
+    fn next_rotation_idx(&self) -> Option<usize> {
+        if self.rotation.is_empty() {
+            return None;
+        }
+        if self.priorities.is_empty() {
+            return Some(0);
+        }
+        let mut best = 0usize;
+        let mut best_p = self.priorities.get(&self.rotation[0]).copied().unwrap_or(0);
+        for (i, id) in self.rotation.iter().enumerate().skip(1) {
+            let p = self.priorities.get(id).copied().unwrap_or(0);
+            if p > best_p {
+                best = i;
+                best_p = p;
+            }
+        }
+        Some(best)
+    }
+
+    /// Take the next shared job: highest priority first, fair rotation
+    /// among equals.
     fn pop_shared(&mut self) -> Option<Job> {
-        let id = self.rotation.pop_front()?;
+        let idx = self.next_rotation_idx()?;
+        let id = self.rotation.remove(idx).expect("index from next_rotation_idx");
         let q = self.shared.get_mut(&id).expect("rotation/shared in sync");
         let job = q.pop_front().expect("rotation ids have non-empty deques");
         if q.is_empty() {
@@ -180,8 +209,8 @@ impl JobQueue {
     pub fn peek_next(&self, worker: usize) -> Option<(JobId, usize)> {
         let st = self.state.lock().unwrap();
         let job = st.per_worker[worker].front().or_else(|| {
-            st.rotation
-                .front()
+            st.next_rotation_idx()
+                .and_then(|i| st.rotation.get(i))
                 .and_then(|id| st.shared.get(id))
                 .and_then(VecDeque::front)
         })?;
@@ -231,9 +260,21 @@ impl JobQueue {
         self.state.lock().unwrap().groups.insert(job, group);
     }
 
-    /// Drop `job`'s share-group tag (job retired or purged).
+    /// Drop `job`'s share-group tag and QoS priority (job retired or
+    /// purged).
     pub fn drop_job_group(&self, job: JobId) {
-        self.state.lock().unwrap().groups.remove(&job);
+        let mut st = self.state.lock().unwrap();
+        st.groups.remove(&job);
+        st.priorities.remove(&job);
+    }
+
+    /// Tag `job` with a QoS priority (higher drains first; untagged =
+    /// 0). Call alongside `set_job_group`, before the job's first
+    /// `push_round`.
+    pub fn set_job_priority(&self, job: JobId, priority: usize) {
+        if priority > 0 {
+            self.state.lock().unwrap().priorities.insert(job, priority);
+        }
     }
 
     /// Remove every queued (not yet popped) job belonging to `job`.
@@ -248,6 +289,7 @@ impl JobQueue {
         }
         st.rotation.retain(|&id| id != job);
         st.groups.remove(&job);
+        st.priorities.remove(&job);
         for q in &mut st.per_worker {
             let before = q.len();
             q.retain(|j| j.job != job);
@@ -350,6 +392,51 @@ mod tests {
             vec![(1, 0), (2, 0), (1, 1), (2, 1), (1, 2), (2, 2)]
         );
         assert_eq!(q.max_jobs_interleaved(), 2);
+    }
+
+    #[test]
+    fn priority_job_drains_before_the_rotation() {
+        // Job 2 is tagged priority 5; jobs 1 and 3 ride at the default.
+        // Every pop must hand out job 2 while it has work queued, then
+        // the remainder falls back to the fair 1↔3 alternation.
+        let q = JobQueue::new(1, Schedule::Dynamic);
+        q.set_job_priority(2, 5);
+        q.push_round((0..2).map(|b| tagged(1, b)).collect());
+        q.push_round((0..2).map(|b| tagged(2, b)).collect());
+        q.push_round((0..2).map(|b| tagged(3, b)).collect());
+        assert_eq!(q.peek_next(0), Some((2, 0)));
+        let order: Vec<(JobId, usize)> =
+            (0..6).map(|_| q.pop(0).map(|j| (j.job, j.block)).unwrap()).collect();
+        assert_eq!(
+            order,
+            vec![(2, 0), (2, 1), (1, 0), (3, 0), (1, 1), (3, 1)]
+        );
+    }
+
+    #[test]
+    fn equal_priorities_keep_the_fair_interleave() {
+        // Tagging every job with the same non-zero priority must not
+        // perturb the round-robin order.
+        let q = JobQueue::new(1, Schedule::Dynamic);
+        q.set_job_priority(1, 3);
+        q.set_job_priority(2, 3);
+        q.push_round((0..2).map(|b| tagged(1, b)).collect());
+        q.push_round((0..2).map(|b| tagged(2, b)).collect());
+        let order: Vec<JobId> = (0..4).map(|_| q.pop(0).unwrap().job).collect();
+        assert_eq!(order, vec![1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn purge_clears_the_priority_tag() {
+        let q = JobQueue::new(1, Schedule::Dynamic);
+        q.set_job_priority(2, 9);
+        q.push_round((0..1).map(|b| tagged(2, b)).collect());
+        q.purge_job(2);
+        // Re-submitted work under the same id starts back at default
+        // priority, so job 1 (pushed first) pops first.
+        q.push_round((0..1).map(|b| tagged(1, b)).collect());
+        q.push_round((0..1).map(|b| tagged(2, b)).collect());
+        assert_eq!(q.pop(0).unwrap().job, 1);
     }
 
     #[test]

@@ -43,7 +43,7 @@ use crate::image::Raster;
 use crate::kmeans::kernel::{CentroidDrift, KernelChoice, PrunedState};
 use crate::kmeans::tile::{SoaTile, TileArena, TileLayout};
 use crate::plan::ExecPlan;
-use crate::resilience::{FaultKind, FaultPlan};
+use crate::resilience::{FaultKind, FaultPlan, Watchdog};
 use crate::runtime::BackendSpec;
 use crate::stripstore::{StripReader, StripStore};
 
@@ -391,6 +391,7 @@ pub fn worker_main(
     registry: Arc<ContextRegistry>,
     queue: Arc<JobQueue>,
     results: Sender<Result<JobOutcome, JobError>>,
+    watchdog: Arc<Watchdog>,
 ) {
     let mut engines: HashMap<JobId, JobEngine> = HashMap::new();
     let mut px_buf: Vec<f32> = Vec::new();
@@ -407,6 +408,16 @@ pub fn worker_main(
                 arena.purge_job(content);
             }
             continue;
+        }
+        // Heartbeat: stamp real block work only. Pings are excluded —
+        // backend warmup (PJRT client build) legitimately takes far
+        // longer than any block, and warmup has its own bounded wait.
+        let stamped = matches!(
+            job.payload,
+            JobPayload::Step { .. } | JobPayload::Assign { .. } | JobPayload::Local { .. }
+        );
+        if stamped {
+            watchdog.begin(worker_id, job.job, job.block, job.round);
         }
         // AssertUnwindSafe is sound here: everything the closure mutates
         // is either discarded on panic (the job's engine, its pruning
@@ -459,6 +470,9 @@ pub fn worker_main(
                 })
             }
         };
+        if stamped {
+            watchdog.end(worker_id);
+        }
         // If the leader hung up, exit quietly.
         if results.send(outcome).is_err() {
             return;
@@ -550,6 +564,13 @@ fn run_job(
                         format!("injected I/O error reading block {}", job.block),
                     ))
                     .context(format!("worker {worker_id}: read block {}", job.block)));
+                }
+                FaultKind::Hang { ms } => {
+                    // Silent stall: park (bounded, release-latch aware)
+                    // and then compute *normally*. No error, no panic —
+                    // only the heartbeat watchdog can see this, and the
+                    // late result must still be valid in case it wins.
+                    fault.park(ms);
                 }
             }
         }

@@ -52,9 +52,11 @@ pub mod prelude {
     };
     pub use crate::metrics::{RunTimer, Speedup};
     pub use crate::plan::{CostModel, ExecPlan, Explain, Planner, PlanRequest};
-    pub use crate::resilience::{Checkpoint, FaultKind, FaultPlan};
+    pub use crate::resilience::{
+        Checkpoint, FaultKind, FaultPlan, Stall, Watchdog, DEFAULT_HEARTBEAT_TIMEOUT_MS,
+    };
     pub use crate::service::{
-        ClusterServer, JobHandle, JobInput, JobSpec, JobStatus, ServerConfig,
+        ClusterServer, DrainReport, JobHandle, JobInput, JobSpec, JobStatus, ServerConfig,
     };
     pub use crate::simtime::{SimParams, WorkerSim};
     pub use crate::stripstore::StripStore;

@@ -29,6 +29,10 @@
 //! - `resilience`    fault-tolerance overhead bench: baseline vs retry vs
 //!                   checkpoint vs kill/resume -> BENCH_resilience.json
 //!                   (`--quick` for the CI smoke size);
+//! - `hardening`     liveness-hardening bench: watchdog/speculation
+//!                   overhead, recovery under hung workers, QoS shed mix
+//!                   under overload -> BENCH_hardening.json (`--quick`
+//!                   for the CI smoke size);
 //! - `info`          show artifact/manifest status and environment.
 //!
 //! Fault tolerance rides on `cluster`: `--retries N` re-queues a failed
@@ -37,7 +41,17 @@
 //! --checkpoint-every R` writes an atomic round-boundary checkpoint every
 //! R rounds, and `--resume F` continues a killed run bit-identically.
 //! `--fault BLOCK[:KIND[:VISITS[:AFTER]]]` injects a deterministic fault
-//! for drills.
+//! for drills (`hang[MS]` parks the worker silently — pair with
+//! `--retries` so the heartbeat watchdog can re-queue the block).
+//!
+//! Liveness hardening rides on `cluster` and `serve`: `--speculate`
+//! re-runs straggler blocks on idle workers near the end of a round
+//! (first result wins; bit-identical either way), `--deadline-ms N`
+//! bounds a job's wall clock — a deadlined global run checkpoints its
+//! last round boundary and exits resumable — and `serve` adds
+//! `--priority` (overload sheds lowest-priority jobs first) and
+//! `--drain-timeout` (graceful drain: finish or checkpoint every open
+//! job, then report per-job dispositions).
 //!
 //! `cluster --mem-mb N` runs the whole pipeline out-of-core: pixels
 //! stream from the source (PPM file or synthetic generator) into a
@@ -54,7 +68,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use blockms::bench::service::{render_service_bench, write_service_bench, ServiceBenchOpts};
 use blockms::bench::tables::{all_table_ids, run_table, SweepOpts};
@@ -72,7 +86,7 @@ use blockms::kmeans::tile::TileLayout;
 use blockms::plan::{ExecPlan, Explain, Planner, PlanRequest};
 use blockms::resilience::{FaultKind, FaultPlan};
 use blockms::runtime::{find_artifacts_dir, ArtifactSet};
-use blockms::service::{ClusterServer, JobSpec, ServerConfig};
+use blockms::service::{ClusterServer, JobSpec, JobStatus, ServerConfig};
 use blockms::util::cli::{Args, CliError};
 use blockms::util::fmt::duration;
 
@@ -103,6 +117,7 @@ fn main() {
         "batch" => cmd_batch(&args),
         "serve" => cmd_serve(&args),
         "resilience" => cmd_resilience(&args),
+        "hardening" => cmd_hardening(&args),
         "info" => cmd_info(),
         other => Err(anyhow::Error::new(CliError::UnknownSubcommand(
             other.to_string(),
@@ -275,8 +290,29 @@ fn plan_request(
     // candidate regardless of --auto. Defaults are 0 = off.
     req = req
         .with_retries(opts.parse("retries", "run.retries")?)
-        .with_checkpoint_every(opts.parse("checkpoint-every", "run.checkpoint_every")?);
+        .with_checkpoint_every(opts.parse("checkpoint-every", "run.checkpoint_every")?)
+        .with_deadline_ms(opts.parse("deadline-ms", "run.deadline_ms")?)
+        .with_priority(opts.parse("priority", "run.priority")?)
+        .with_speculate(args.flag("speculate"));
     Ok(req)
+}
+
+/// A hang fault parks the worker silently: without a retry budget the
+/// watchdog has nowhere to re-queue the block and the run can only
+/// stall out to a loud error. That pairing is a usage mistake, caught
+/// before any pixels move (exit 2).
+fn check_hang_retries(fault: &Option<FaultPlan>, retries: usize) -> Result<()> {
+    if let Some(f) = fault {
+        if matches!(f.kind(), FaultKind::Hang { .. }) && retries == 0 {
+            return Err(anyhow::Error::new(CliError::BadValue(
+                "fault".to_string(),
+                "hang".to_string(),
+                "a hang fault needs --retries N so the watchdog can re-queue the block"
+                    .to_string(),
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// Parse `--fault BLOCK[:KIND[:VISITS[:AFTER]]]` into a [`FaultPlan`]:
@@ -408,13 +444,15 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let img = Arc::new(img);
 
     // --- run ---------------------------------------------------------------
+    let fault = fault_of(&opts)?;
+    check_hang_retries(&fault, exec.retries)?;
     let coord = Coordinator::new(CoordinatorConfig {
         exec,
         engine: engine_of(&opts)?,
         mode: opts.require::<ClusterMode>("mode", "run.mode")?,
         io: io_of(&opts, args)?,
         schedule: opts.require::<Schedule>("schedule", "run.schedule")?,
-        fault: fault_of(&opts)?,
+        fault,
         checkpoint: opts.get("checkpoint", "run.checkpoint").map(PathBuf::from),
         resume: opts.get("resume", "run.resume").map(PathBuf::from),
     });
@@ -518,6 +556,8 @@ fn stream_cluster(
         Some(v) => positive(v, "strip-rows")?,
         None => DEFAULT_STREAM_STRIP_ROWS,
     };
+    let fault = fault_of(opts)?;
+    check_hang_retries(&fault, exec.retries)?;
     let coord = Coordinator::new(CoordinatorConfig {
         exec,
         engine: engine_of(opts)?,
@@ -527,7 +567,7 @@ fn stream_cluster(
             file_backed: exec.file_backed,
         },
         schedule: opts.require::<Schedule>("schedule", "run.schedule")?,
-        fault: fault_of(opts)?,
+        fault,
         checkpoint: opts.get("checkpoint", "run.checkpoint").map(PathBuf::from),
         resume: opts.get("resume", "run.resume").map(PathBuf::from),
     });
@@ -966,6 +1006,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(v) => positive(v, "strip-rows")?,
         None => DEFAULT_STREAM_STRIP_ROWS,
     };
+    let fault = fault_of(&opts)?;
+    check_hang_retries(&fault, exec.retries)?;
+    let drain_timeout: u64 = opts.require("drain-timeout", "serve.drain_timeout")?;
+    // `--checkpoint P` under serve is the deadline escape hatch: a job
+    // that hits `--deadline-ms` snapshots its last round boundary to
+    // P.jobN and stays resumable via `cluster --resume`.
+    let deadline_ckpt = opts.get("checkpoint", "run.checkpoint");
 
     let server = ClusterServer::start(ServerConfig {
         workers,
@@ -986,7 +1033,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             fixed_iters,
             ..Default::default()
         };
-        let spec = if exec.mem_mb > 0 {
+        let mut spec = if exec.mem_mb > 0 {
             // Streamed admission: path or generator description only;
             // each job's pixels decode at activation, strip by strip.
             let stream_io = IoMode::Strips {
@@ -1020,31 +1067,59 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .with_io(io.clone())
                 .with_engine(engine.clone())
         };
+        if let Some(f) = &fault {
+            spec = spec.with_fault(f.clone());
+        }
+        if let Some(base) = &deadline_ckpt {
+            spec = spec.with_deadline_checkpoint(PathBuf::from(format!("{base}.job{j}")));
+        }
         // Blocks while the admission gate is full — the backpressure path.
         handles.push(server.submit(spec)?);
     }
     for (j, h) in handles.iter().enumerate() {
-        let out = h.wait_output().with_context(|| format!("job {j}"))?;
-        println!(
-            "job {j:>3}: {} blocks, {} iterations{} -> inertia {:.1}, latency {}",
-            out.blocks,
-            out.iterations,
-            if out.converged { " (converged)" } else { "" },
-            out.inertia,
-            duration(out.total_secs)
-        );
+        match h.wait() {
+            JobStatus::Done(out) => println!(
+                "job {j:>3}: {} blocks, {} iterations{} -> inertia {:.1}, latency {}",
+                out.blocks,
+                out.iterations,
+                if out.converged { " (converged)" } else { "" },
+                out.inertia,
+                duration(out.total_secs)
+            ),
+            JobStatus::Deadline { checkpoint: Some(p) } => println!(
+                "job {j:>3}: deadline hit -> checkpointed to {} (resumable)",
+                p.display()
+            ),
+            JobStatus::Deadline { checkpoint: None } => {
+                println!("job {j:>3}: deadline hit; progress discarded (no --checkpoint)")
+            }
+            JobStatus::Cancelled => println!("job {j:>3}: cancelled (shed by admission)"),
+            JobStatus::Failed(msg) => bail!("job {j} failed: {msg}"),
+            s @ (JobStatus::Queued | JobStatus::Running) => {
+                bail!("job {j}: wait() returned non-terminal status {}", s.label())
+            }
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.stats();
     println!(
-        "aggregate: {} jobs in {} -> {:.2} jobs/s | max open jobs {} (cap {})",
+        "aggregate: {} jobs in {} -> {:.2} jobs/s | max open jobs {} (cap {}) | shed {} | deadlined {}",
         jobs,
         duration(wall),
         jobs as f64 / wall,
         stats.max_open_jobs,
-        max_in_flight
+        max_in_flight,
+        stats.shed,
+        stats.deadlined
     );
-    server.shutdown();
+    // Graceful drain instead of a bare shutdown: every still-open job
+    // finishes, checkpoints, or is cancelled inside the budget, and each
+    // disposition is reported (here all jobs were already waited on, so
+    // the report is normally empty — the drill is `tests/hardening.rs`).
+    let report = server.drain(std::time::Duration::from_millis(drain_timeout));
+    for (id, what) in &report.dispositions {
+        println!("drain: job #{id}: {what}");
+    }
     Ok(())
 }
 
@@ -1077,6 +1152,33 @@ fn cmd_resilience(args: &Args) -> Result<()> {
     let out = args.get("out").unwrap_or("BENCH_resilience.json").to_string();
     let rows = write_resilience_bench(Path::new(&out), &bopts)?;
     print!("{}", render_resilience_bench(&bopts, &rows));
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// Liveness-hardening benchmark: watchdog + speculation overhead when
+/// nothing fails, recovery latency with 1/2/4 hung workers, and the QoS
+/// shed/served mix under 2× overload, written to `BENCH_hardening.json`
+/// (see EXPERIMENTS.md §Hardening for the schema). `--quick` runs the
+/// CI smoke size.
+fn cmd_hardening(args: &Args) -> Result<()> {
+    use blockms::bench::hardening::{
+        render_hardening_bench, write_hardening_bench, HardeningBenchOpts,
+    };
+    let opts = Opts::load(args)?;
+    let base = if args.flag("quick") {
+        HardeningBenchOpts::quick()
+    } else {
+        HardeningBenchOpts::default()
+    };
+    let bopts = HardeningBenchOpts {
+        seed: opts.require("seed", "workload.seed")?,
+        workers: positive(opts.require("workers", "run.workers")?, "workers")?,
+        ..base
+    };
+    let out = args.get("out").unwrap_or("BENCH_hardening.json").to_string();
+    let rows = write_hardening_bench(Path::new(&out), &bopts)?;
+    print!("{}", render_hardening_bench(&bopts, &rows));
     println!("wrote {out}");
     Ok(())
 }

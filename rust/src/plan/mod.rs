@@ -89,6 +89,22 @@ pub struct ExecPlan {
     /// The destination path rides on the coordinator/service config;
     /// this is the cadence the plan commits to.
     pub checkpoint_every: usize,
+    /// Soft wall-clock deadline in milliseconds (0 = none). Enforced at
+    /// round boundaries: the run stops with a best-effort checkpoint so
+    /// it is resumable, never silently truncated. A carried-through
+    /// knob, not a planner axis — it changes when a run *stops*, never
+    /// what it computes.
+    pub deadline_ms: usize,
+    /// QoS priority for service admission (higher wins; 0 = default).
+    /// The priority-weighted queue drains higher-priority jobs first
+    /// and the admission gate sheds lowest-priority work under
+    /// overload. Carried-through only.
+    pub priority: usize,
+    /// Speculatively re-execute straggling blocks (first completed
+    /// result wins — bit-identical by construction, see
+    /// [`crate::resilience`]). Carried-through only: speculation costs
+    /// duplicate compute, never values.
+    pub speculate: bool,
 }
 
 impl Default for ExecPlan {
@@ -117,6 +133,9 @@ impl ExecPlan {
             file_backed: false,
             retries: 0,
             checkpoint_every: 0,
+            deadline_ms: 0,
+            priority: 0,
+            speculate: false,
         }
     }
 
@@ -183,6 +202,24 @@ impl ExecPlan {
         self
     }
 
+    /// Pin a soft wall-clock deadline in milliseconds (0 = none).
+    pub fn with_deadline_ms(mut self, ms: usize) -> ExecPlan {
+        self.deadline_ms = ms;
+        self
+    }
+
+    /// Pin the QoS admission priority (higher wins; 0 = default).
+    pub fn with_priority(mut self, priority: usize) -> ExecPlan {
+        self.priority = priority;
+        self
+    }
+
+    /// Enable speculative re-execution of straggling blocks.
+    pub fn with_speculate(mut self, speculate: bool) -> ExecPlan {
+        self.speculate = speculate;
+        self
+    }
+
     /// Per-worker arena budget in bytes.
     pub fn arena_bytes(&self) -> usize {
         self.arena_mb << 20
@@ -230,6 +267,15 @@ impl ExecPlan {
         if self.checkpoint_every > 0 {
             s.push_str(&format!(" · ckpt/{}r", self.checkpoint_every));
         }
+        if self.deadline_ms > 0 {
+            s.push_str(&format!(" · ddl {}ms", self.deadline_ms));
+        }
+        if self.priority > 0 {
+            s.push_str(&format!(" · prio {}", self.priority));
+        }
+        if self.speculate {
+            s.push_str(" · spec");
+        }
         s
     }
 }
@@ -268,6 +314,13 @@ pub struct PlanRequest {
     pub retries: Option<usize>,
     /// Checkpoint cadence in rounds to carry onto the plan (`None` = 0).
     pub checkpoint_every: Option<usize>,
+    /// Soft deadline (ms) to carry onto the plan (`None` = none).
+    /// Carried-through like `retries` — never a search axis.
+    pub deadline_ms: Option<usize>,
+    /// QoS priority to carry onto the plan (`None` = 0).
+    pub priority: Option<usize>,
+    /// Straggler speculation flag to carry onto the plan (`None` = off).
+    pub speculate: Option<bool>,
 }
 
 impl PlanRequest {
@@ -309,6 +362,9 @@ impl PlanRequest {
         self.file_backed = Some(plan.file_backed);
         self.retries = (plan.retries > 0).then_some(plan.retries);
         self.checkpoint_every = (plan.checkpoint_every > 0).then_some(plan.checkpoint_every);
+        self.deadline_ms = (plan.deadline_ms > 0).then_some(plan.deadline_ms);
+        self.priority = (plan.priority > 0).then_some(plan.priority);
+        self.speculate = plan.speculate.then_some(true);
         self
     }
 
@@ -338,6 +394,24 @@ impl PlanRequest {
     /// Carry a checkpoint cadence (rounds) onto every candidate plan.
     pub fn with_checkpoint_every(mut self, rounds: Option<usize>) -> PlanRequest {
         self.checkpoint_every = rounds.filter(|&r| r > 0);
+        self
+    }
+
+    /// Carry a soft deadline (ms) onto every candidate plan.
+    pub fn with_deadline_ms(mut self, ms: Option<usize>) -> PlanRequest {
+        self.deadline_ms = ms.filter(|&m| m > 0);
+        self
+    }
+
+    /// Carry a QoS priority onto every candidate plan.
+    pub fn with_priority(mut self, priority: Option<usize>) -> PlanRequest {
+        self.priority = priority.filter(|&p| p > 0);
+        self
+    }
+
+    /// Carry the straggler-speculation flag onto every candidate plan.
+    pub fn with_speculate(mut self, speculate: bool) -> PlanRequest {
+        self.speculate = speculate.then_some(true);
         self
     }
 
@@ -489,6 +563,9 @@ impl Planner {
                                         file_backed,
                                         retries: req.retries.unwrap_or(0),
                                         checkpoint_every: req.checkpoint_every.unwrap_or(0),
+                                        deadline_ms: req.deadline_ms.unwrap_or(0),
+                                        priority: req.priority.unwrap_or(0),
+                                        speculate: req.speculate.unwrap_or(false),
                                     },
                                     blocks: plan.len(),
                                     grid: plan.grid_dims(),
@@ -724,20 +801,41 @@ mod tests {
     #[test]
     fn resilience_knobs_ride_through_without_widening_the_search() {
         let planner = Planner::default();
-        let r = req().with_retries(Some(2)).with_checkpoint_every(Some(5));
+        let r = req()
+            .with_retries(Some(2))
+            .with_checkpoint_every(Some(5))
+            .with_deadline_ms(Some(30_000))
+            .with_priority(Some(7))
+            .with_speculate(true);
         let (plan, explain) = planner.resolve(&r);
         assert_eq!(plan.retries, 2);
         assert_eq!(plan.checkpoint_every, 5);
+        assert_eq!(plan.deadline_ms, 30_000);
+        assert_eq!(plan.priority, 7);
+        assert!(plan.speculate);
         // carried-through, not an axis: same grid as the plain request
         assert_eq!(explain.candidates.len(), Planner::default().resolve(&req()).1.candidates.len());
-        assert!(explain
-            .candidates
-            .iter()
-            .all(|c| c.plan.retries == 2 && c.plan.checkpoint_every == 5));
+        assert!(explain.candidates.iter().all(|c| c.plan.retries == 2
+            && c.plan.checkpoint_every == 5
+            && c.plan.deadline_ms == 30_000
+            && c.plan.priority == 7
+            && c.plan.speculate));
         // and pin_all round-trips them
         let rt = req().pin_all(&plan);
         let (again, _) = planner.resolve(&rt);
         assert_eq!(again, plan);
+    }
+
+    #[test]
+    fn hardening_knobs_show_in_the_summary() {
+        let s = ExecPlan::default()
+            .with_deadline_ms(1500)
+            .with_priority(3)
+            .with_speculate(true)
+            .summary();
+        for part in ["ddl 1500ms", "prio 3", "spec"] {
+            assert!(s.contains(part), "{part} missing from {s:?}");
+        }
     }
 
     #[test]

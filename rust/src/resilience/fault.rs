@@ -1,7 +1,13 @@
 //! Deterministic fault injection for the worker pool.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Park duration a bare `hang` spec defaults to: long enough to trip
+/// the default heartbeat timeout, short enough that a sleeping worker
+/// never stalls pool shutdown for more than a few seconds.
+pub const DEFAULT_HANG_MS: u64 = 4000;
 
 /// What happens when the fault fires.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -16,6 +22,12 @@ pub enum FaultKind {
     /// The block read fails with an I/O error before any compute runs
     /// (a flaky disk / NFS hiccup on the strip store).
     ReaderIo,
+    /// The worker parks on the block for `ms` milliseconds (or until
+    /// the plan's release latch opens) and then computes normally — a
+    /// silent stall that produces no error and no panic, which only
+    /// the heartbeat watchdog can see. The duration is finite by
+    /// design: a sleeping worker must still join at shutdown.
+    Hang { ms: u64 },
 }
 
 impl FaultKind {
@@ -24,6 +36,7 @@ impl FaultKind {
             FaultKind::Error => "error",
             FaultKind::Panic => "panic",
             FaultKind::ReaderIo => "reader-io",
+            FaultKind::Hang { .. } => "hang",
         }
     }
 }
@@ -31,12 +44,24 @@ impl FaultKind {
 impl std::str::FromStr for FaultKind {
     type Err = String;
     fn from_str(s: &str) -> Result<Self, String> {
-        match s.to_ascii_lowercase().as_str() {
+        let lower = s.to_ascii_lowercase();
+        if let Some(rest) = lower.strip_prefix("hang") {
+            if rest.is_empty() {
+                return Ok(FaultKind::Hang { ms: DEFAULT_HANG_MS });
+            }
+            return match rest.parse::<u64>() {
+                Ok(ms) if ms > 0 => Ok(FaultKind::Hang { ms }),
+                _ => Err(format!(
+                    "bad hang duration {rest:?} (want hang or hangMS, e.g. hang500)"
+                )),
+            };
+        }
+        match lower.as_str() {
             "error" => Ok(FaultKind::Error),
             "panic" => Ok(FaultKind::Panic),
             "reader-io" | "readerio" | "io" => Ok(FaultKind::ReaderIo),
             other => Err(format!(
-                "unknown fault kind {other:?} (want error|panic|reader-io)"
+                "unknown fault kind {other:?} (want error|panic|reader-io|hang[MS])"
             )),
         }
     }
@@ -57,7 +82,9 @@ impl std::str::FromStr for FaultKind {
 ///   how the kill/resume tests die mid-run with checkpoints on disk.
 #[derive(Clone, Debug)]
 pub struct FaultPlan {
-    block: usize,
+    /// Targeted blocks, ascending (usually one; the hardening bench
+    /// parks several victims at once). Shared so clones stay cheap.
+    blocks: Arc<Vec<usize>>,
     kind: FaultKind,
     /// Successful visits before the fault window opens.
     skip: usize,
@@ -67,18 +94,33 @@ pub struct FaultPlan {
     /// plan is threaded through (coordinator config, worker contexts,
     /// job specs) must agree on the count.
     counter: Arc<AtomicUsize>,
+    /// Release latch for [`FaultKind::Hang`]: opening it wakes every
+    /// parked worker early (tests and drains use it; shared across
+    /// clones like the counter).
+    release: Arc<AtomicBool>,
 }
 
 impl FaultPlan {
     /// Fail the first `visits` visits to `block` with `kind`, succeed
     /// afterwards.
     pub fn new(block: usize, kind: FaultKind, visits: usize) -> FaultPlan {
+        FaultPlan::on_blocks(vec![block], kind, visits)
+    }
+
+    /// Fault a set of victim blocks: the window counts visits to *any*
+    /// member, so `visits == blocks.len()` fails each victim's first
+    /// visit (the multi-straggler scenario).
+    pub fn on_blocks(mut blocks: Vec<usize>, kind: FaultKind, visits: usize) -> FaultPlan {
+        assert!(!blocks.is_empty(), "a fault plan needs at least one block");
+        blocks.sort_unstable();
+        blocks.dedup();
         FaultPlan {
-            block,
+            blocks: Arc::new(blocks),
             kind,
             skip: 0,
             visits,
             counter: Arc::new(AtomicUsize::new(0)),
+            release: Arc::new(AtomicBool::new(false)),
         }
     }
 
@@ -93,9 +135,14 @@ impl FaultPlan {
         self
     }
 
-    /// The targeted block index.
+    /// The (first) targeted block index.
     pub fn block(&self) -> usize {
-        self.block
+        self.blocks[0]
+    }
+
+    /// Every targeted block, ascending.
+    pub fn victim_blocks(&self) -> &[usize] {
+        &self.blocks
     }
 
     /// What the fault does when it fires.
@@ -107,7 +154,7 @@ impl FaultPlan {
     ///
     /// Visits to other blocks are not counted and never fire.
     pub fn fires(&self, block: usize) -> bool {
-        if block != self.block {
+        if self.blocks.binary_search(&block).is_err() {
             return false;
         }
         let n = self.counter.fetch_add(1, Ordering::SeqCst);
@@ -117,6 +164,29 @@ impl FaultPlan {
     /// Visits recorded so far (tests assert the fault actually fired).
     pub fn trips(&self) -> usize {
         self.counter.load(Ordering::SeqCst)
+    }
+
+    /// Open the hang release latch: every currently-parked worker
+    /// wakes within one poll tick, and future hang firings return
+    /// immediately. Irreversible (like a tripped breaker).
+    pub fn release(&self) {
+        self.release.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether the hang release latch is open.
+    pub fn released(&self) -> bool {
+        self.release.load(Ordering::SeqCst)
+    }
+
+    /// Park the calling worker for `ms` milliseconds or until the
+    /// release latch opens, polling every few milliseconds so shutdown
+    /// and tests can cut the park short.
+    pub fn park(&self, ms: u64) {
+        let until = Instant::now() + Duration::from_millis(ms);
+        while Instant::now() < until && !self.released() {
+            let left = until.saturating_duration_since(Instant::now());
+            std::thread::sleep(left.min(Duration::from_millis(5)));
+        }
     }
 }
 
@@ -158,5 +228,50 @@ mod tests {
             assert_eq!(kind.label().parse::<FaultKind>().unwrap(), kind);
         }
         assert!("bogus".parse::<FaultKind>().is_err());
+    }
+
+    #[test]
+    fn hang_parses_with_and_without_a_duration() {
+        assert_eq!(
+            "hang".parse::<FaultKind>().unwrap(),
+            FaultKind::Hang { ms: DEFAULT_HANG_MS }
+        );
+        assert_eq!(
+            "hang250".parse::<FaultKind>().unwrap(),
+            FaultKind::Hang { ms: 250 }
+        );
+        assert!("hangx".parse::<FaultKind>().is_err());
+        assert!("hang0".parse::<FaultKind>().is_err());
+        assert_eq!(FaultKind::Hang { ms: 7 }.label(), "hang");
+    }
+
+    #[test]
+    fn multi_block_plan_fires_each_victims_first_visit() {
+        let f = FaultPlan::on_blocks(vec![5, 1, 3], FaultKind::Error, 3);
+        assert_eq!(f.victim_blocks(), &[1, 3, 5]);
+        assert_eq!(f.block(), 1);
+        assert!(!f.fires(0), "non-victims never fire");
+        assert!(f.fires(3));
+        assert!(f.fires(1));
+        assert!(f.fires(5), "each victim's first visit is in the window");
+        assert!(!f.fires(3), "window exhausted after blocks.len() firings");
+    }
+
+    #[test]
+    fn park_honors_the_release_latch() {
+        let f = FaultPlan::new(0, FaultKind::Hang { ms: 60_000 }, 1);
+        let g = f.clone();
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || g.park(60_000));
+        std::thread::sleep(Duration::from_millis(20));
+        f.release();
+        h.join().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "release must cut the park short"
+        );
+        let t0 = Instant::now();
+        f.park(60_000); // latch already open: returns immediately
+        assert!(t0.elapsed() < Duration::from_secs(1));
     }
 }

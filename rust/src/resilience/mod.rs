@@ -31,9 +31,19 @@
 //! worker's possibly half-mutated Hamerly bounds and arena tile for
 //! that `(job, block)` are evicted before the retry, so the re-run
 //! re-seeds from scratch exactly like a first visit after migration.
+//!
+//! - [`Watchdog`] — per-worker heartbeat epochs for faults that
+//!   *don't* announce themselves: a hung or straggling block
+//!   ([`FaultKind::Hang`]) produces no error and no panic, so the
+//!   leader's bounded round barrier scans the heartbeat table and
+//!   escalates a silent worker to the same re-queue path. First
+//!   completed result wins; the duplicate is discarded before
+//!   reduction, so speculation is bit-identical too.
 
 mod checkpoint;
 mod fault;
+mod watchdog;
 
 pub use checkpoint::{fnv1a, Checkpoint, CheckpointPhase, CKPT_MAGIC, CKPT_VERSION};
-pub use fault::{FaultKind, FaultPlan};
+pub use fault::{FaultKind, FaultPlan, DEFAULT_HANG_MS};
+pub use watchdog::{Stall, Watchdog, DEFAULT_HEARTBEAT_TIMEOUT_MS};

@@ -1,0 +1,231 @@
+//! Per-worker heartbeat watchdog: liveness detection for hung blocks.
+//!
+//! PR 6's retry machinery only protects against faults that *announce*
+//! themselves — an `Err` or a panic reaches the leader as a `JobError`
+//! and the block is re-queued. A worker that silently stops making
+//! progress (a hung syscall, a livelocked reader, an injected
+//! [`crate::resilience::FaultKind::Hang`]) produces nothing at all, and
+//! an unbounded `recv()` round barrier waits forever.
+//!
+//! The watchdog closes that gap with shared epoch counters:
+//!
+//! - **workers stamp**: every worker owns a [`WorkerSlot`] of atomics
+//!   and calls [`Watchdog::begin`] when it picks a block up and
+//!   [`Watchdog::end`] when the result is sent — two `SeqCst` stores
+//!   per block, no locks on the hot path;
+//! - **the leader scans**: [`Watchdog::scan`] compares each busy
+//!   worker's epoch against the last observed value; a worker whose
+//!   epoch has not advanced for longer than the staleness timeout is
+//!   reported as a [`Stall`] naming the worker, job, block, round, and
+//!   silence duration. Each stuck epoch is escalated exactly once, so
+//!   a caller polling every few milliseconds re-queues one spare copy,
+//!   not hundreds.
+//!
+//! Escalation reuses the retry path: the leader clones the parked
+//! block's job onto another worker and takes the first completed
+//! result. That is bit-identical by construction — per-block work is a
+//! pure function of the round's shipped centroids and the reduction
+//! stays block-ordered — so a hung block is indistinguishable from a
+//! panicked one: recovery costs time, never values.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Sentinel for "this worker is not on a block right now".
+const IDLE: u64 = u64::MAX;
+
+/// Default staleness threshold before a silent busy worker is treated
+/// as hung. Generous against real block times (milliseconds at the
+/// paper geometries) while keeping hang recovery snappy.
+pub const DEFAULT_HEARTBEAT_TIMEOUT_MS: u64 = 1500;
+
+/// One worker's heartbeat state: an epoch counter bumped on every
+/// pickup/completion, plus the identity of the block in hand.
+#[derive(Debug)]
+struct WorkerSlot {
+    /// Monotone epoch: odd while busy, even while idle — every
+    /// transition bumps it, so a stuck value means a stuck worker.
+    seq: AtomicU64,
+    /// Block in hand, or [`IDLE`].
+    block: AtomicU64,
+    /// Job the block belongs to (valid while busy).
+    job: AtomicU64,
+    /// Round of the block in hand (valid while busy).
+    round: AtomicU64,
+}
+
+/// Leader-side per-worker scan memory.
+#[derive(Clone, Copy, Debug)]
+struct ScanState {
+    last_seq: u64,
+    since: Instant,
+    /// The busy epoch already escalated (escalate once per stall).
+    escalated_seq: u64,
+}
+
+/// A busy worker whose heartbeat went stale: the block it is parked on
+/// should be speculatively re-queued elsewhere.
+#[derive(Clone, Copy, Debug)]
+pub struct Stall {
+    pub worker: usize,
+    pub job: u64,
+    pub block: usize,
+    pub round: u64,
+    /// How long the worker has been silent.
+    pub silent: Duration,
+}
+
+/// The shared heartbeat table: workers stamp, the leader scans.
+#[derive(Debug)]
+pub struct Watchdog {
+    slots: Vec<WorkerSlot>,
+    /// Staleness threshold in milliseconds; 0 disables the watchdog.
+    timeout_ms: AtomicU64,
+    scan: Mutex<Vec<ScanState>>,
+}
+
+impl Watchdog {
+    /// A watchdog for `workers` workers with the given staleness
+    /// timeout (`0` = disabled: [`Watchdog::scan`] never reports).
+    pub fn new(workers: usize, timeout_ms: u64) -> Watchdog {
+        let now = Instant::now();
+        Watchdog {
+            slots: (0..workers)
+                .map(|_| WorkerSlot {
+                    seq: AtomicU64::new(0),
+                    block: AtomicU64::new(IDLE),
+                    job: AtomicU64::new(0),
+                    round: AtomicU64::new(0),
+                })
+                .collect(),
+            timeout_ms: AtomicU64::new(timeout_ms),
+            scan: Mutex::new(
+                (0..workers)
+                    .map(|_| ScanState {
+                        last_seq: 0,
+                        since: now,
+                        escalated_seq: u64::MAX,
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Current staleness threshold.
+    pub fn timeout(&self) -> Duration {
+        Duration::from_millis(self.timeout_ms.load(Ordering::Relaxed))
+    }
+
+    /// Retune the staleness threshold (0 disables). Takes effect on the
+    /// next scan; safe while workers are running.
+    pub fn set_timeout_ms(&self, ms: u64) {
+        self.timeout_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// Worker-side: `worker` picked up `block` of `job` at `round`.
+    pub fn begin(&self, worker: usize, job: u64, block: usize, round: u64) {
+        let s = &self.slots[worker];
+        s.job.store(job, Ordering::Relaxed);
+        s.round.store(round, Ordering::Relaxed);
+        s.block.store(block as u64, Ordering::Relaxed);
+        s.seq.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Worker-side: `worker` finished (or abandoned) its block.
+    pub fn end(&self, worker: usize) {
+        let s = &self.slots[worker];
+        s.block.store(IDLE, Ordering::Relaxed);
+        s.seq.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Leader-side: report every busy worker whose epoch has been
+    /// stuck for longer than the timeout. Each stuck epoch is reported
+    /// exactly once — the stall re-arms only after the worker makes
+    /// progress (its epoch advances).
+    pub fn scan(&self) -> Vec<Stall> {
+        let timeout_ms = self.timeout_ms.load(Ordering::Relaxed);
+        let mut states = self.scan.lock().expect("watchdog scan lock");
+        let now = Instant::now();
+        let mut stalls = Vec::new();
+        for (w, slot) in self.slots.iter().enumerate() {
+            let seq = slot.seq.load(Ordering::SeqCst);
+            let st = &mut states[w];
+            if seq != st.last_seq {
+                st.last_seq = seq;
+                st.since = now;
+                continue;
+            }
+            let block = slot.block.load(Ordering::Relaxed);
+            if block == IDLE || timeout_ms == 0 {
+                continue;
+            }
+            let silent = now.duration_since(st.since);
+            if silent >= Duration::from_millis(timeout_ms) && st.escalated_seq != seq {
+                st.escalated_seq = seq;
+                stalls.push(Stall {
+                    worker: w,
+                    job: slot.job.load(Ordering::Relaxed),
+                    block: block as usize,
+                    round: slot.round.load(Ordering::Relaxed),
+                    silent,
+                });
+            }
+        }
+        stalls
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_workers_never_stall() {
+        let wd = Watchdog::new(2, 1);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(wd.scan().is_empty(), "idle workers must not be reported");
+    }
+
+    #[test]
+    fn silent_busy_worker_is_reported_once_per_epoch() {
+        let wd = Watchdog::new(2, 5);
+        wd.begin(1, 7, 3, 2);
+        wd.scan(); // observe the fresh epoch
+        std::thread::sleep(Duration::from_millis(10));
+        let stalls = wd.scan();
+        assert_eq!(stalls.len(), 1);
+        let s = stalls[0];
+        assert_eq!((s.worker, s.job, s.block, s.round), (1, 7, 3, 2));
+        assert!(s.silent >= Duration::from_millis(5));
+        assert!(wd.scan().is_empty(), "the same stuck epoch escalates once");
+        // Progress re-arms the stall detector.
+        wd.end(1);
+        wd.begin(1, 7, 4, 2);
+        wd.scan();
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(wd.scan().len(), 1, "a new stuck epoch escalates again");
+    }
+
+    #[test]
+    fn completing_clears_the_stall() {
+        let wd = Watchdog::new(1, 5);
+        wd.begin(0, 0, 0, 0);
+        wd.scan();
+        wd.end(0);
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(wd.scan().is_empty(), "finished worker is idle, not hung");
+    }
+
+    #[test]
+    fn zero_timeout_disables_the_watchdog() {
+        let wd = Watchdog::new(1, 0);
+        wd.begin(0, 0, 0, 0);
+        wd.scan();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(wd.scan().is_empty());
+        wd.set_timeout_ms(1);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(wd.scan().len(), 1, "re-enabling arms the existing stall");
+    }
+}

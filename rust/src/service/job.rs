@@ -109,6 +109,12 @@ pub struct JobSpec {
     /// geometry and strip layout; results stay bit-identical to solo
     /// runs either way.
     pub share: Option<u64>,
+    /// Where to save the last round boundary if this job's deadline
+    /// ([`ExecPlan::deadline_ms`]) or the server's drain deadline lands
+    /// before it finishes. `None` lets the server pick a temp path at
+    /// drain time; a deadlined job always reports its checkpoint (if
+    /// any) in [`JobStatus::Deadline`]. Global mode only.
+    pub deadline_checkpoint: Option<PathBuf>,
 }
 
 impl JobSpec {
@@ -126,6 +132,7 @@ impl JobSpec {
             fault: None,
             resume: None,
             share: None,
+            deadline_checkpoint: None,
         }
     }
 
@@ -148,6 +155,7 @@ impl JobSpec {
             fault: None,
             resume: None,
             share: None,
+            deadline_checkpoint: None,
         })
     }
 
@@ -174,6 +182,7 @@ impl JobSpec {
             fault: None,
             resume: None,
             share: None,
+            deadline_checkpoint: None,
         }
     }
 
@@ -268,6 +277,30 @@ impl JobSpec {
         self
     }
 
+    /// Give the job a wall-clock deadline: the serving loop cancels it
+    /// at the first round boundary past `ms` milliseconds after
+    /// activation, saving a resumable checkpoint if a path is
+    /// configured. `0` disables (the default).
+    pub fn with_deadline_ms(mut self, ms: usize) -> JobSpec {
+        self.exec = self.exec.with_deadline_ms(ms);
+        self
+    }
+
+    /// QoS priority (0 = default). Higher-priority jobs drain first on
+    /// the shared pool, and under overload the admission gate sheds
+    /// lower-priority work to make room.
+    pub fn with_priority(mut self, priority: usize) -> JobSpec {
+        self.exec = self.exec.with_priority(priority);
+        self
+    }
+
+    /// Where the deadline/drain path saves this job's checkpoint (see
+    /// [`JobSpec::deadline_checkpoint`]).
+    pub fn with_deadline_checkpoint(mut self, path: PathBuf) -> JobSpec {
+        self.deadline_checkpoint = Some(path);
+        self
+    }
+
     /// The block tiling this job runs — derived from the embedded plan
     /// against the actual image geometry, exactly as the solo
     /// coordinator does, so identical specs tile identically on both
@@ -309,6 +342,12 @@ impl JobSpec {
                 "share groups amortize strip I/O; use IoMode::Strips"
             );
         }
+        if self.deadline_checkpoint.is_some() {
+            ensure!(
+                self.mode == ClusterMode::Global,
+                "deadline checkpoints need global mode (local runs are one round)"
+            );
+        }
         Ok(())
     }
 }
@@ -328,13 +367,22 @@ pub enum JobStatus {
     Failed(String),
     /// Cancelled before completion; partial work was discarded.
     Cancelled,
+    /// The job's deadline (or the server's drain deadline) landed
+    /// before it finished. When `checkpoint` is set, the last completed
+    /// round boundary was saved there in the standard checkpoint format
+    /// — resubmitting the same spec with
+    /// [`JobSpec::with_resume`] continues bit-identically.
+    Deadline { checkpoint: Option<PathBuf> },
 }
 
 impl JobStatus {
     pub fn is_terminal(&self) -> bool {
         matches!(
             self,
-            JobStatus::Done(_) | JobStatus::Failed(_) | JobStatus::Cancelled
+            JobStatus::Done(_)
+                | JobStatus::Failed(_)
+                | JobStatus::Cancelled
+                | JobStatus::Deadline { .. }
         )
     }
 
@@ -346,6 +394,7 @@ impl JobStatus {
             JobStatus::Done(_) => "done",
             JobStatus::Failed(_) => "failed",
             JobStatus::Cancelled => "cancelled",
+            JobStatus::Deadline { .. } => "deadline",
         }
     }
 }
@@ -383,6 +432,12 @@ impl HandleShared {
     /// Serving-loop side: has the client asked to cancel?
     pub(crate) fn cancel_requested(&self) -> bool {
         self.cancel.load(Ordering::Relaxed)
+    }
+
+    /// QoS preemption: request cancellation without a [`JobHandle`]
+    /// (the admission gate sheds the lowest-priority active job).
+    pub(crate) fn request_cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
     }
 }
 
@@ -431,6 +486,14 @@ impl JobHandle {
             JobStatus::Done(out) => Ok(*out),
             JobStatus::Failed(msg) => bail!("job {} failed: {msg}", self.id),
             JobStatus::Cancelled => bail!("job {} was cancelled", self.id),
+            JobStatus::Deadline { checkpoint: Some(p) } => bail!(
+                "job {} hit its deadline; checkpoint written to {} (resume with the same spec)",
+                self.id,
+                p.display()
+            ),
+            JobStatus::Deadline { checkpoint: None } => {
+                bail!("job {} hit its deadline; progress discarded", self.id)
+            }
             JobStatus::Queued | JobStatus::Running => unreachable!("wait returns terminal states"),
         }
     }

@@ -10,9 +10,13 @@
 //! - [`JobSpec`] / [`JobHandle`] / [`JobStatus`] — per-job description
 //!   (each job has its own k, channels, block plan, I/O mode, and
 //!   compute kernel) and lifecycle
-//!   (`Queued → Running → Done | Failed | Cancelled`);
+//!   (`Queued → Running → Done | Failed | Cancelled | Deadline`);
 //! - [`Admission`] — the bounded in-flight gate: `submit` blocks when
-//!   full (backpressure), `try_submit` sheds.
+//!   full (backpressure), `try_submit` sheds — lowest-priority work
+//!   first when the incoming job outranks an open one (QoS);
+//! - [`DrainReport`] — [`ClusterServer::drain`]'s per-job disposition
+//!   audit: every open job finishes, checkpoints, or is cancelled by a
+//!   deadline, never silently lost.
 //!
 //! **Determinism contract:** a job run through the shared pool produces
 //! labels, centroids, counts, and inertia bit-identical to a solo
@@ -29,4 +33,4 @@ mod server;
 
 pub use admission::{Admission, AdmissionSnapshot};
 pub use job::{JobHandle, JobInput, JobSpec, JobStatus};
-pub use server::{ClusterServer, ServerConfig, ServerStats};
+pub use server::{ClusterServer, DrainReport, ServerConfig, ServerStats};

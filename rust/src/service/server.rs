@@ -26,9 +26,9 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -40,7 +40,7 @@ use crate::coordinator::{
 };
 use crate::image::Raster;
 use crate::kmeans::StreamInit;
-use crate::resilience::Checkpoint;
+use crate::resilience::{Checkpoint, FaultPlan};
 use crate::stripstore::{Backing, StripStore};
 
 /// Server construction parameters.
@@ -74,6 +74,12 @@ pub struct ServerStats {
     pub completed: u64,
     pub failed: u64,
     pub cancelled: u64,
+    /// Jobs shed by QoS admission under overload: incoming work turned
+    /// away at a full gate plus lower-priority victims preempted to
+    /// make room.
+    pub shed: u64,
+    /// Jobs terminated by a per-job or drain deadline.
+    pub deadlined: u64,
     /// High water of simultaneously open (registered) jobs on the pool —
     /// the instrumentation the admission tests assert against.
     pub max_open_jobs: usize,
@@ -86,6 +92,8 @@ struct StatsShared {
     completed: AtomicU64,
     failed: AtomicU64,
     cancelled: AtomicU64,
+    shed: AtomicU64,
+    deadlined: AtomicU64,
     max_open_jobs: AtomicUsize,
 }
 
@@ -94,6 +102,31 @@ struct NewJob {
     spec: JobSpec,
     handle: Arc<HandleShared>,
 }
+
+/// Serving-thread inbox traffic: admitted jobs, plus the one-shot
+/// drain order.
+enum ServeMsg {
+    Job(NewJob),
+    Drain {
+        deadline: Instant,
+        report: Sender<DrainReport>,
+    },
+}
+
+/// What happened to each job that was still open when
+/// [`ClusterServer::drain`] was called — the operator's audit trail
+/// that no admitted work was silently lost.
+#[derive(Debug, Default)]
+pub struct DrainReport {
+    /// `(job id, disposition)` in finalization order: "done",
+    /// "failed: …", "cancelled", or "checkpointed to <path>".
+    pub dispositions: Vec<(JobId, String)>,
+}
+
+/// Open (admitted, not yet terminal) jobs by id: the QoS admission
+/// gate consults this to pick a preemption victim, the serving loop
+/// prunes it at finalization.
+type OpenJobs = Arc<Mutex<HashMap<JobId, (usize, Arc<HandleShared>)>>>;
 
 /// Process-global sequence for file-backed strip-store directories: job
 /// ids restart at 1 per server, so two servers in one process (or the
@@ -112,9 +145,10 @@ fn job_store_dir(id: JobId) -> PathBuf {
 /// The persistent multi-job clustering service. See module docs.
 pub struct ClusterServer {
     cfg: ServerConfig,
-    tx: Option<Sender<NewJob>>,
+    tx: Option<Sender<ServeMsg>>,
     admission: Arc<Admission>,
     stats: Arc<StatsShared>,
+    open: OpenJobs,
     next_id: AtomicU64,
     serving: Option<JoinHandle<()>>,
 }
@@ -124,14 +158,16 @@ impl ClusterServer {
     pub fn start(cfg: ServerConfig) -> ClusterServer {
         let admission = Arc::new(Admission::new(cfg.max_in_flight));
         let stats = Arc::new(StatsShared::default());
+        let open: OpenJobs = Arc::default();
         let (tx, rx) = channel();
         let serving = {
             let stats = Arc::clone(&stats);
             let admission = Arc::clone(&admission);
+            let open = Arc::clone(&open);
             let pool = WorkerPool::spawn(cfg.workers, cfg.schedule);
             std::thread::Builder::new()
                 .name("blockms-serve".to_string())
-                .spawn(move || ServingLoop::new(pool, admission, stats).run(rx))
+                .spawn(move || ServingLoop::new(pool, admission, stats, open).run(rx))
                 .expect("spawn serving thread")
         };
         ClusterServer {
@@ -139,6 +175,7 @@ impl ClusterServer {
             tx: Some(tx),
             admission,
             stats,
+            open,
             // Solo Coordinator runs own SOLO_JOB = 0; service ids start at 1.
             next_id: AtomicU64::new(1),
             serving: Some(serving),
@@ -158,18 +195,47 @@ impl ClusterServer {
     }
 
     /// Submit without blocking: `Ok(None)` means the gate is full and
-    /// the job was shed (nothing was queued).
+    /// the job was shed (nothing was queued). QoS admission: when the
+    /// gate is full but an open job ranks **strictly below** the
+    /// incoming one ([`crate::plan::ExecPlan::priority`]), the
+    /// lowest-priority open job is cancelled to make room and the
+    /// incoming job is admitted instead — overload sheds cheap work
+    /// first, never the other way around.
     pub fn try_submit(&self, spec: JobSpec) -> Result<Option<JobHandle>> {
         spec.validate().context("invalid job spec")?;
-        if !self.admission.try_acquire() {
-            return Ok(None);
+        if self.admission.try_acquire() {
+            return self.dispatch(spec).map(Some);
         }
-        self.dispatch(spec).map(Some)
+        // Among the lowest-priority open jobs, prefer shedding the
+        // newest (largest id): the oldest has the most sunk work.
+        let victim = {
+            let open = self.open.lock().unwrap();
+            open.iter()
+                .min_by_key(|&(&id, &(prio, _))| (prio, std::cmp::Reverse(id)))
+                .filter(|(_, (prio, _))| *prio < spec.exec.priority)
+                .map(|(_, (_, h))| Arc::clone(h))
+        };
+        self.stats.shed.fetch_add(1, Ordering::Relaxed);
+        match victim {
+            Some(h) => {
+                h.request_cancel();
+                // The victim's slot frees once the serving loop drains
+                // its in-flight blocks; this bounded wait is the price
+                // of preemptive admission.
+                self.admission.acquire();
+                self.dispatch(spec).map(Some)
+            }
+            None => Ok(None),
+        }
     }
 
     fn dispatch(&self, spec: JobSpec) -> Result<JobHandle> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let shared = Arc::new(HandleShared::new());
+        self.open
+            .lock()
+            .unwrap()
+            .insert(id, (spec.exec.priority, Arc::clone(&shared)));
         let new = NewJob {
             id,
             spec,
@@ -179,7 +245,8 @@ impl ClusterServer {
         // access — so it is always present here; a failed send means the
         // serving thread itself died.
         let tx = self.tx.as_ref().expect("sender present while server is alive");
-        if tx.send(new).is_err() {
+        if tx.send(ServeMsg::Job(new)).is_err() {
+            self.open.lock().unwrap().remove(&id);
             self.admission.release();
             anyhow::bail!("serving loop is gone");
         }
@@ -193,9 +260,33 @@ impl ClusterServer {
             completed: self.stats.completed.load(Ordering::Relaxed),
             failed: self.stats.failed.load(Ordering::Relaxed),
             cancelled: self.stats.cancelled.load(Ordering::Relaxed),
+            shed: self.stats.shed.load(Ordering::Relaxed),
+            deadlined: self.stats.deadlined.load(Ordering::Relaxed),
             max_open_jobs: self.stats.max_open_jobs.load(Ordering::Relaxed),
             admission: self.admission.snapshot(),
         }
+    }
+
+    /// Graceful drain: stop admitting, give in-flight jobs `timeout`
+    /// to finish, then checkpoint what can be checkpointed (global
+    /// mode) and cancel the rest. Temp state is swept, the pool is
+    /// joined, and every job open at the drain call gets a line in the
+    /// returned report — nothing admitted is silently lost.
+    pub fn drain(mut self, timeout: Duration) -> DrainReport {
+        let (rtx, rrx) = channel();
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(ServeMsg::Drain {
+                deadline: Instant::now() + timeout,
+                report: rtx,
+            });
+            // tx drops here: the loop sees the inbox close and exits
+            // once the drain completes.
+        }
+        let report = rrx.recv().unwrap_or_default();
+        if let Some(h) = self.serving.take() {
+            let _ = h.join();
+        }
+        report
     }
 
     /// Stop accepting jobs, finish everything in flight, join the pool.
@@ -242,6 +333,21 @@ struct ActiveJob {
     round_jobs: HashMap<usize, Job>,
     /// Retry attempts consumed per block this round.
     attempts: HashMap<usize, usize>,
+    /// Wall-clock deadline ([`crate::plan::ExecPlan::deadline_ms`]),
+    /// enforced at round boundaries.
+    deadline: Option<Instant>,
+    /// Spec-configured checkpoint path for the deadline/drain path.
+    deadline_ckpt: Option<PathBuf>,
+    /// Run fingerprint stamped into deadline/drain checkpoints so a
+    /// resume with a different configuration is rejected.
+    fingerprint: u64,
+    /// Set when a deadline (per-job or drain) terminated this job:
+    /// the checkpoint path, if one was written.
+    deadlined: Option<Option<PathBuf>>,
+    /// The job's injected fault plan, kept so finalize can open the
+    /// hang latch — a worker still parked on this job's behalf must
+    /// not outlive the job into the pool's eventual join.
+    fault: Option<FaultPlan>,
 }
 
 /// One live share group: same-image sweep variants reusing a single
@@ -273,6 +379,14 @@ struct ServingLoop {
     groups: HashMap<u64, ShareGroup>,
     admission: Arc<Admission>,
     stats: Arc<StatsShared>,
+    /// Mirror of the open-job set the QoS gate consults; pruned at
+    /// finalization.
+    open: OpenJobs,
+    /// Drain order in effect: the hard deadline and the channel the
+    /// disposition report goes back on.
+    draining: Option<(Instant, Sender<DrainReport>)>,
+    /// Per-job dispositions accumulated while draining.
+    dispositions: Vec<(JobId, String)>,
     /// Strip-store directories of finished jobs, removed once the last
     /// worker drops its store handle (swept opportunistically and again
     /// after the pool joins).
@@ -280,13 +394,21 @@ struct ServingLoop {
 }
 
 impl ServingLoop {
-    fn new(pool: WorkerPool, admission: Arc<Admission>, stats: Arc<StatsShared>) -> ServingLoop {
+    fn new(
+        pool: WorkerPool,
+        admission: Arc<Admission>,
+        stats: Arc<StatsShared>,
+        open: OpenJobs,
+    ) -> ServingLoop {
         ServingLoop {
             pool,
             active: HashMap::new(),
             groups: HashMap::new(),
             admission,
             stats,
+            open,
+            draining: None,
+            dispositions: Vec::new(),
             cleanup_dirs: Vec::new(),
         }
     }
@@ -300,13 +422,13 @@ impl ServingLoop {
             .retain(|d| std::fs::remove_dir(d).is_err() && d.exists());
     }
 
-    fn run(mut self, rx: Receiver<NewJob>) {
+    fn run(mut self, rx: Receiver<ServeMsg>) {
         let mut accepting = true;
         loop {
             // Admit everything already queued (non-blocking).
             while accepting {
                 match rx.try_recv() {
-                    Ok(new) => self.activate(new),
+                    Ok(msg) => self.on_msg(msg),
                     Err(std::sync::mpsc::TryRecvError::Empty) => break,
                     Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                         accepting = false;
@@ -319,30 +441,36 @@ impl ServingLoop {
                 if !accepting {
                     break; // shut down: nothing in flight, no new work
                 }
-                if self.cleanup_dirs.is_empty() {
+                if self.cleanup_dirs.is_empty() && self.draining.is_none() {
                     // Idle: block until a job arrives or the server closes.
                     match rx.recv() {
-                        Ok(new) => self.activate(new),
+                        Ok(msg) => self.on_msg(msg),
                         Err(_) => accepting = false,
                     }
                 } else {
-                    // Idle but retired jobs' store directories are still
-                    // pending removal (workers drop their store handles
-                    // moments after processing Retire). Poll briefly so
-                    // a long-lived server releases the disk now instead
-                    // of holding it until shutdown.
+                    // Idle but either retired jobs' store directories
+                    // are still pending removal (workers drop their
+                    // store handles moments after processing Retire) or
+                    // a drain is waiting for the inbox to close. Poll
+                    // briefly instead of parking.
                     use std::sync::mpsc::RecvTimeoutError;
                     match rx.recv_timeout(std::time::Duration::from_millis(20)) {
-                        Ok(new) => self.activate(new),
+                        Ok(msg) => self.on_msg(msg),
                         Err(RecvTimeoutError::Timeout) => {}
                         Err(RecvTimeoutError::Disconnected) => accepting = false,
                     }
                 }
                 continue;
             }
-            match self.pool.recv_result() {
-                Ok(Ok(outcome)) => self.on_outcome(outcome),
-                Ok(Err(jerr)) => self.on_error(jerr),
+            // While draining, the receive is bounded by the drain
+            // deadline; `Ok(None)` means time is up with work still
+            // out. Watchdog stalls surface here as job errors and ride
+            // the ordinary retry path.
+            let until = self.draining.as_ref().map(|&(d, _)| d);
+            match self.pool.recv_result_deadline(until) {
+                Ok(Some(Ok(outcome))) => self.on_outcome(outcome),
+                Ok(Some(Err(jerr))) => self.on_error(jerr),
+                Ok(None) => self.drain_expired(),
                 Err(_) => {
                     // Pool gone (all workers dead): fail whatever is
                     // left, forwarding the recorded root cause (the last
@@ -362,6 +490,13 @@ impl ServingLoop {
                 }
             }
         }
+        // Deliver the drain report (if a drain was in progress) before
+        // tearing the pool down — the drain caller is blocked on it.
+        if let Some((_, report)) = self.draining.take() {
+            let _ = report.send(DrainReport {
+                dispositions: std::mem::take(&mut self.dispositions),
+            });
+        }
         // Join the workers, then sweep the remaining store directories —
         // every strip file's `Drop` has run once the pool is down.
         let ServingLoop {
@@ -373,6 +508,49 @@ impl ServingLoop {
         cleanup_dirs.retain(|d| std::fs::remove_dir(d).is_err() && d.exists());
     }
 
+    fn on_msg(&mut self, msg: ServeMsg) {
+        match msg {
+            ServeMsg::Job(new) => self.activate(new),
+            ServeMsg::Drain { deadline, report } => {
+                self.draining = Some((deadline, report));
+            }
+        }
+    }
+
+    /// The drain deadline landed with jobs still open: checkpoint what
+    /// can be checkpointed (global mode — the last round boundary, in
+    /// the standard resumable format), cancel the rest, finalize
+    /// everything. Late results from still-running blocks are dropped
+    /// by the finalized-job guard.
+    fn drain_expired(&mut self) {
+        let ids: Vec<JobId> = self.active.keys().copied().collect();
+        for id in ids {
+            let purged = self.pool.purge_job(id);
+            let aj = self.active.get_mut(&id).expect("listed as active");
+            aj.expected = aj.expected.saturating_sub(purged);
+            if aj.failed.is_none() && !aj.cancelling && aj.deadlined.is_none() {
+                let saved = Self::save_boundary(aj, id);
+                aj.deadlined = Some(saved);
+            }
+            self.finalize(id);
+        }
+    }
+
+    /// Best-effort checkpoint of `aj`'s last completed round boundary.
+    /// Returns the path on success — the spec-configured one, else a
+    /// drain temp path. `None` when the machine cannot snapshot (local
+    /// mode) or the write failed.
+    fn save_boundary(aj: &ActiveJob, id: JobId) -> Option<PathBuf> {
+        let ck = aj.machine.boundary_snapshot(aj.fingerprint)?;
+        let path = aj.deadline_ckpt.clone().unwrap_or_else(|| {
+            std::env::temp_dir().join(format!(
+                "blockms_drain_p{}_job{id}.ckpt",
+                std::process::id()
+            ))
+        });
+        ck.save(&path).ok().map(|_| path)
+    }
+
     /// Register the job on the pool and launch its first round.
     fn activate(&mut self, new: NewJob) {
         // Counters and the admission slot settle BEFORE the terminal
@@ -380,14 +558,19 @@ impl ServingLoop {
         // immediately and must see consistent numbers.
         if new.handle.cancel_requested() {
             // Cancelled before activation: never touched the pool.
+            self.open.lock().unwrap().remove(&new.id);
             self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
             self.admission.release();
             new.handle.set_status(JobStatus::Cancelled);
+            if self.draining.is_some() {
+                self.dispositions.push((new.id, "cancelled".to_string()));
+            }
             return;
         }
         match self.try_activate(&new) {
             Ok(()) => {}
             Err(e) => {
+                self.open.lock().unwrap().remove(&new.id);
                 self.stats.failed.fetch_add(1, Ordering::Relaxed);
                 self.admission.release();
                 new.handle.set_status(JobStatus::Failed(format!("{e:#}")));
@@ -524,14 +707,18 @@ impl ServingLoop {
             init_centroids,
             label_budget,
         );
+        // One fingerprint per job config: resume validation on the way
+        // in, deadline/drain checkpoints on the way out.
+        let fp = {
+            let (h, w, _) = spec.dims();
+            run_fingerprint(h, w, channels, &spec.cluster, spec.mode)
+        };
         // Service-side resume: rewind the freshly built machine to the
         // checkpointed round boundary before the first round launches.
         // The resumed job is bit-identical to an uninterrupted one (the
         // same contract the solo coordinator's `--resume` keeps).
         if let Some(path) = &spec.resume {
             let ck = Checkpoint::load(path)?;
-            let (h, w, _) = spec.dims();
-            let fp = run_fingerprint(h, w, channels, &spec.cluster, spec.mode);
             anyhow::ensure!(
                 ck.fingerprint == fp,
                 "checkpoint {} was taken by a different run configuration \
@@ -575,6 +762,9 @@ impl ServingLoop {
             // freshly decoded tile is immediately reused by siblings.
             self.pool.set_job_group(new.id, g);
         }
+        // QoS: higher-priority jobs drain first from the shared
+        // rotation (no-op at the default priority 0).
+        self.pool.set_job_priority(new.id, spec.exec.priority);
         self.pool.register_job(new.id, ctx);
         self.mirror_pool_stats();
         let jobs = machine.start_round(new.id);
@@ -603,6 +793,13 @@ impl ServingLoop {
                 retries,
                 round_jobs,
                 attempts: HashMap::new(),
+                deadline: (spec.exec.deadline_ms > 0).then(|| {
+                    Instant::now() + Duration::from_millis(spec.exec.deadline_ms as u64)
+                }),
+                deadline_ckpt: spec.deadline_checkpoint.clone(),
+                fingerprint: fp,
+                deadlined: None,
+                fault: spec.fault.clone(),
             },
         );
         Ok(())
@@ -642,13 +839,23 @@ impl ServingLoop {
         let Some(aj) = self.active.get_mut(&id) else {
             return; // late straggler of an already-finalized job
         };
-        aj.expected = aj.expected.saturating_sub(1);
         if aj.cancelling || aj.failed.is_some() {
+            aj.expected = aj.expected.saturating_sub(1);
             if aj.expected == 0 {
                 self.finalize(id);
             }
             return;
         }
+        // A hung worker escalated by the watchdog may deliver its copy
+        // of a block after the re-queued spare already did (or after
+        // the round moved on). Both copies computed the same pure
+        // function of the round's centroids, so dropping the loser is
+        // bit-exact; it owes no `expected` message (only first arrivals
+        // are counted).
+        if !aj.machine.wants(&outcome) {
+            return;
+        }
+        aj.expected = aj.expected.saturating_sub(1);
         // Cancellation may land between outcomes of one round.
         if aj.handle.cancel_requested() {
             self.cancel_job(id);
@@ -669,6 +876,11 @@ impl ServingLoop {
         let Some(aj) = self.active.get_mut(&id) else {
             return;
         };
+        // A late error for a block the round already has (the spare
+        // raced ahead of a faulty copy): superseded, drop it.
+        if aj.failed.is_none() && !aj.cancelling && !aj.machine.block_pending(jerr.block) {
+            return;
+        }
         // Retry path: re-queue the round's spare clone of the failed
         // block. `expected` is untouched — the fresh attempt owes one
         // more message. The failing worker already evicted its stale
@@ -732,22 +944,41 @@ impl ServingLoop {
         };
         if finished {
             self.finalize(id);
-        } else {
-            let aj = self.active.get_mut(&id).expect("still active");
-            let jobs = aj.machine.start_round(id);
-            aj.expected = jobs.len();
-            if aj.retries > 0 {
-                aj.round_jobs = jobs.iter().map(|j| (j.block, j.clone())).collect();
-                aj.attempts.clear();
-            }
-            self.pool.submit(jobs);
+            return;
         }
+        let aj = self.active.get_mut(&id).expect("still active");
+        // Deadline enforcement happens exactly here — the round
+        // boundary — where the snapshot is cheap, exact, and resumable.
+        // The checkpoint (best effort; global mode) captures every
+        // completed round, so a deadline costs at most one round of
+        // recomputation on resume.
+        if aj.deadline.is_some_and(|d| Instant::now() >= d) {
+            let saved = Self::save_boundary(aj, id);
+            aj.deadlined = Some(saved);
+            self.finalize(id);
+            return;
+        }
+        let jobs = aj.machine.start_round(id);
+        aj.expected = jobs.len();
+        if aj.retries > 0 {
+            aj.round_jobs = jobs.iter().map(|j| (j.block, j.clone())).collect();
+            aj.attempts.clear();
+        }
+        self.pool.submit(jobs);
     }
 
     /// Terminal transition: retire from the pool, publish the status,
     /// release the admission slot.
     fn finalize(&mut self, id: JobId) {
         let aj = self.active.remove(&id).expect("finalize on active job");
+        // Wake any worker still parked by this job's hang fault: the
+        // job is terminal, and a parked worker would stall its peers'
+        // blocks (and the pool's shutdown join) for the rest of the
+        // park. The latch is shared across clones, so this reaches the
+        // copy inside the worker context.
+        if let Some(f) = &aj.fault {
+            f.release();
+        }
         match aj.share {
             None => self.pool.retire_job(id),
             Some(g) => {
@@ -777,6 +1008,9 @@ impl ServingLoop {
         let status = if let Some(msg) = aj.failed {
             self.stats.failed.fetch_add(1, Ordering::Relaxed);
             JobStatus::Failed(msg)
+        } else if let Some(checkpoint) = aj.deadlined {
+            self.stats.deadlined.fetch_add(1, Ordering::Relaxed);
+            JobStatus::Deadline { checkpoint }
         } else if aj.cancelling {
             self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
             JobStatus::Cancelled
@@ -803,6 +1037,21 @@ impl ServingLoop {
                 }
             }
         };
+        if self.draining.is_some() {
+            let disp = match &status {
+                JobStatus::Done(_) => "done".to_string(),
+                JobStatus::Failed(msg) => format!("failed: {msg}"),
+                JobStatus::Deadline { checkpoint: Some(p) } => {
+                    format!("checkpointed to {} (resumable)", p.display())
+                }
+                JobStatus::Deadline { checkpoint: None } => {
+                    "deadline hit; no checkpoint (local mode or write failed)".to_string()
+                }
+                s => s.label().to_string(),
+            };
+            self.dispositions.push((id, disp));
+        }
+        self.open.lock().unwrap().remove(&id);
         // Release the slot before publishing: a client woken by wait()
         // may read stats() immediately and must see the slot returned.
         self.admission.release();
@@ -1113,6 +1362,111 @@ mod tests {
         }
         assert_eq!(server.stats().failed, 0);
         server.shutdown();
+    }
+
+    #[test]
+    fn deadlined_job_checkpoints_and_resumes_bit_identically() {
+        use crate::resilience::{FaultKind, FaultPlan};
+        // The doomed twin runs the same fixed-6-iteration spec as the
+        // clean one, but a 30ms hang on block 0 guarantees round 1
+        // outlives the 1ms deadline: the job must deadline at the first
+        // boundary with a checkpoint, and resuming from it (clean spec)
+        // must land on the clean twin's exact bits.
+        let dir = std::env::temp_dir().join("blockms_deadline_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = dir.join(format!("p{}_deadline.ckpt", std::process::id()));
+        let _ = std::fs::remove_file(&ckpt);
+        let server = ClusterServer::start(ServerConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let fixed = |seed| {
+            let mut s = spec(seed);
+            s.cluster.fixed_iters = Some(6);
+            s
+        };
+        let clean = server.submit(fixed(19)).unwrap().wait_output().unwrap();
+        let doomed = fixed(19)
+            .with_fault(FaultPlan::new(0, FaultKind::Hang { ms: 30 }, 1))
+            .with_deadline_ms(1)
+            .with_deadline_checkpoint(ckpt.clone());
+        let status = server.submit(doomed).unwrap().wait();
+        let JobStatus::Deadline { checkpoint: Some(p) } = status else {
+            panic!("expected a checkpointed deadline, got {}", status.label());
+        };
+        assert_eq!(p, ckpt);
+        assert!(ckpt.exists(), "checkpoint file missing");
+        let resumed = fixed(19).with_resume(ckpt.clone());
+        let out = server.submit(resumed).unwrap().wait_output().unwrap();
+        assert_eq!(out.labels, clean.labels);
+        assert_eq!(out.centroids, clean.centroids);
+        assert_eq!(out.inertia.to_bits(), clean.inertia.to_bits());
+        assert_eq!(server.stats().deadlined, 1);
+        server.shutdown();
+        let _ = std::fs::remove_file(&ckpt);
+    }
+
+    #[test]
+    fn overload_sheds_lowest_priority_first() {
+        // Gate of 1, occupied by a default-priority job that cannot
+        // finish on its own (a huge fixed iteration count): an equal-
+        // priority try_submit is shed outright, while a priority-5
+        // submission preempts the squatter and takes its slot.
+        let server = ClusterServer::start(ServerConfig {
+            workers: 2,
+            max_in_flight: 1,
+            ..Default::default()
+        });
+        let mut squatter = spec(3);
+        squatter.cluster.fixed_iters = Some(1_000_000);
+        let low = server.submit(squatter).unwrap();
+        assert!(
+            server.try_submit(spec(7)).unwrap().is_none(),
+            "equal priority must shed the incoming job"
+        );
+        let high = server
+            .try_submit(spec(5).with_priority(5))
+            .unwrap()
+            .expect("high-priority job must preempt, not shed");
+        assert!(high.wait_output().is_ok());
+        // The squatter can only end one way: preempted and cancelled.
+        assert!(matches!(low.wait(), JobStatus::Cancelled));
+        let stats = server.stats();
+        assert_eq!(
+            stats.shed, 2,
+            "the turned-away job and the preempted victim both count: {stats:?}"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn drain_reports_every_open_job() {
+        // A job already finished before the drain isn't "open" and owes
+        // no disposition; a job that cannot finish inside the drain
+        // window must be checkpointed and reported — admitted work is
+        // never silently lost.
+        let server = ClusterServer::start(ServerConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let fast = server.submit(spec(5)).unwrap();
+        fast.wait(); // done before the drain begins
+        let mut slow = spec(21);
+        slow.cluster.fixed_iters = Some(1_000_000); // cannot finish in 200ms
+        let slow = server.submit(slow).unwrap();
+        let report = server.drain(Duration::from_millis(200));
+        let disp: HashMap<JobId, &String> =
+            report.dispositions.iter().map(|(id, d)| (*id, d)).collect();
+        let slow_disp = disp.get(&slow.id()).expect("slow job must be reported");
+        assert!(
+            slow_disp.contains("checkpointed to"),
+            "expected a checkpoint disposition, got: {slow_disp}"
+        );
+        let JobStatus::Deadline { checkpoint: Some(p) } = slow.wait() else {
+            panic!("slow job should have deadlined with a checkpoint");
+        };
+        assert!(p.exists());
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

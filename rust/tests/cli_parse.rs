@@ -515,3 +515,115 @@ fn injected_fault_recovers_under_a_retry_budget_at_the_binary_level() {
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(stderr.contains("injected failure"), "{stderr}");
 }
+
+// ---------------------------------------------------------------------
+// Liveness hardening: deadlines, QoS, speculation, drain, hang faults
+// ---------------------------------------------------------------------
+
+#[test]
+fn hardening_flags_round_trip() {
+    let cli = blockms_cli();
+    let args = cli
+        .parse(vec![
+            "cluster", "--deadline-ms", "5000", "--priority", "2", "--speculate",
+            "--fault", "1:hang60000", "--retries", "1",
+        ])
+        .unwrap();
+    assert_eq!(args.get_parse::<usize>("deadline-ms").unwrap(), 5000);
+    assert_eq!(args.get_parse::<usize>("priority").unwrap(), 2);
+    assert!(args.flag("speculate"));
+    assert_eq!(args.get("fault"), Some("1:hang60000"));
+
+    let args = cli
+        .parse(vec!["serve", "--drain-timeout", "250", "--priority", "1"])
+        .unwrap();
+    assert_eq!(args.get_parse::<u64>("drain-timeout").unwrap(), 250);
+
+    let args = cli.parse(vec!["hardening", "--quick", "--out", "h.json"]).unwrap();
+    assert_eq!(args.subcommand(), Some("hardening"));
+    assert!(args.flag("quick"));
+    assert_eq!(args.get("out"), Some("h.json"));
+}
+
+#[test]
+fn bad_hardening_values_exit_2_naming_the_flag() {
+    // A hang duration must be a positive integer.
+    for bad in ["1:hang0", "1:hangxyz", "1:hang-5"] {
+        assert_usage_error(
+            &["cluster", "--width", "32", "--height", "32", "--fault", bad],
+            "--fault",
+        );
+    }
+    assert_usage_error(&["cluster", "--deadline-ms", "soon"], "--deadline-ms");
+    assert_usage_error(&["serve", "--drain-timeout", "abc"], "--drain-timeout");
+    assert_usage_error(&["serve", "--priority", "high"], "--priority");
+}
+
+#[test]
+fn hang_fault_without_retries_is_a_usage_error() {
+    // A parked worker with no retry budget can only stall out; the
+    // pairing is rejected up front (exit 2), naming the flag.
+    assert_usage_error(
+        &["cluster", "--width", "32", "--height", "32", "--fault", "1:hang"],
+        "--fault",
+    );
+}
+
+#[test]
+fn short_hang_recovers_at_the_binary_level() {
+    // A sub-heartbeat hang: the parked worker wakes and computes, the
+    // run completes normally under its retry budget (exit 0) — the
+    // hang grammar and the speculation flag both ride `cluster`.
+    let out = run(&[
+        "cluster", "--width", "48", "--height", "40", "--k", "2", "--iters", "2",
+        "--fault", "1:hang100", "--retries", "1", "--speculate",
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+}
+
+#[test]
+fn deadline_checkpoints_and_resumes_at_the_binary_level() {
+    let ckpt = std::env::temp_dir().join(format!(
+        "blockms_cli_deadline_p{}.ckpt",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&ckpt);
+    let ckpt_s = ckpt.to_str().unwrap();
+    // A 200ms hang in round 1 makes the round outlive the 1ms deadline
+    // deterministically: exit 1, checkpoint written, message says how
+    // to resume.
+    let out = run(&[
+        "cluster", "--width", "40", "--height", "32", "--k", "2", "--iters", "4",
+        "--deadline-ms", "1", "--fault", "1:hang200", "--retries", "1",
+        "--checkpoint", ckpt_s,
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(1), "stderr: {stderr}");
+    assert!(
+        stderr.contains("deadline") && stderr.contains("resume"),
+        "deadline failure must say it is resumable: {stderr}"
+    );
+    assert!(ckpt.exists(), "the deadline must leave a checkpoint behind");
+    // The checkpoint resumes cleanly to the finished result.
+    let out = run(&[
+        "cluster", "--width", "40", "--height", "32", "--k", "2", "--iters", "4",
+        "--resume", ckpt_s,
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+    let _ = std::fs::remove_file(&ckpt);
+}
+
+#[test]
+fn serve_drains_gracefully_at_the_binary_level() {
+    let out = run(&[
+        "serve", "--jobs", "2", "--workers", "2", "--max-in-flight", "2", "--k", "2",
+        "--width", "48", "--height", "40", "--iters", "2", "--drain-timeout", "2000",
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("shed 0"), "{stdout}");
+    assert!(stdout.contains("deadlined 0"), "{stdout}");
+}

