@@ -1,0 +1,181 @@
+#!/usr/bin/env python3
+"""Numpy mirror of `blockms simd` for containers without cargo.
+
+Generates BENCH_simd.json with the exact schema of the rust bench
+(EXPERIMENTS.md §SIMD). Three kinds of numbers:
+
+- The naive and lanes anchor timings are *measured* on the same numpy
+  kernel mirror the layout model uses (fixed Lloyd iterations + final
+  labeling over the real block plans, best of `samples` after one
+  warmup).
+- The per-level simd timings are *modeled*: lanes wall x the per-level
+  simd-over-lanes scale baked into the rust cost model
+  (`plan/cost.rs::SimdScale` — avx512 0.58, avx2 0.72, neon 0.82,
+  portable 1.0). Numpy cannot choose its own vector ISA, so the model
+  states the planner's prior rather than inventing a measurement —
+  hence `"source": "python-model"`. Regenerate with `blockms simd`
+  where cargo exists.
+- `matches_solo` is *computed*, not assumed: the scene is quantized to
+  1/8 steps so every f64 accumulation is exact and partition-
+  independent, and each cell's labels are compared bitwise against a
+  solo single-block naive run. The non-FMA simd path runs the same
+  per-pixel op order as lanes (the rust bit-identity invariant), so
+  simd rows inherit the lanes labels.
+
+The detected level comes from /proc/cpuinfo (avx512f > avx2) or the
+machine architecture (aarch64 -> neon), falling back to portable.
+"""
+
+import json
+import math
+import platform
+import sys
+
+import numpy as np
+
+import bench_layout_model as L
+
+H = W = 1024
+C = 3
+KS = [2, 4, 8]
+ITERS = 4
+SAMPLES = 2
+SEED = 0x51ADBE
+WORKERS = 4
+STRIP_ROWS = 64
+
+# Mirrors rust plan/cost.rs::SimdScale::default().
+SIMD_SCALE = {"avx512": 0.58, "avx2": 0.72, "neon": 0.82, "portable": 1.0}
+
+
+def cpu_flags():
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.startswith(("flags", "Features")):
+                    return set(line.split(":", 1)[1].split())
+    except OSError:
+        pass
+    return set()
+
+
+def detect_level():
+    """SimdLevel::detect() for this host."""
+    machine = platform.machine()
+    if machine in ("aarch64", "arm64"):
+        return "neon"
+    flags = cpu_flags()
+    if "avx512f" in flags:
+        return "avx512"
+    if "avx2" in flags:
+        return "avx2"
+    return "portable"
+
+
+def supported_levels():
+    """SimdLevel::ALL filtered by SimdLevel::supported(), in ALL order."""
+    detected = detect_level()
+    levels = ["portable"]
+    if detected == "neon":
+        levels.append("neon")
+    if detected in ("avx2", "avx512"):
+        levels.append("avx2")
+    if detected == "avx512":
+        levels.append("avx512")
+    return levels
+
+
+def scatter_labels(plan, labels):
+    """run_cell returns labels concatenated in block order; map them back
+    to global row-major pixel positions (what the rust coordinator's
+    assembled label image holds) so plans with different block shapes
+    compare position-for-position."""
+    out = np.empty(H * W, dtype=labels.dtype)
+    off = 0
+    for r0, c0, rows, cols in plan:
+        rr, cc = np.meshgrid(
+            np.arange(r0, r0 + rows), np.arange(c0, c0 + cols), indexing="ij"
+        )
+        n = rows * cols
+        out[(rr * W + cc).ravel()] = labels[off : off + n]
+        off += n
+    return out
+
+
+def main():
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_simd.json"
+    rng = np.random.default_rng(SEED)
+    # Quantize to 1/8 steps: every f64 block sum is then exact, so the
+    # solo reference and every block partition agree bit for bit — the
+    # same invariant the rust coordinator proves with its tests.
+    img = np.round(L.synthetic_scene(rng) * 8.0) / 8.0
+    flat = img.reshape(-1, C)
+    passes = ITERS + 1
+    detected = detect_level()
+    levels = supported_levels()
+    solo_plan = L.block_plan(H, W)  # one block == the solo sequential run
+    cases = []
+    for shape_name, br, bc in L.paper_shapes():
+        plan = L.block_plan(br, bc)
+        for k in KS:
+            init_cen = flat[rng.choice(len(flat), size=k, replace=False)].copy()
+            solo_raw, _ = L.run_cell(img, solo_plan, "interleaved", "naive", k, init_cen)
+            solo_labels = scatter_labels(solo_plan, solo_raw)
+            walls = {}
+            for layout, kernel in [("interleaved", "naive"), ("soa", "lanes")]:
+                best = math.inf
+                labels = None
+                for sample in range(SAMPLES + 1):
+                    labels, wall = L.run_cell(img, plan, layout, kernel, k, init_cen)
+                    if sample > 0:
+                        best = min(best, wall)
+                matches = bool(np.array_equal(scatter_labels(plan, labels), solo_labels))
+                if not matches:
+                    raise SystemExit(
+                        f"model kernel diverged from solo: {shape_name} {kernel} k={k}"
+                    )
+                walls[kernel] = best
+            lanes = walls["lanes"]
+            rows = [("naive", None, walls["naive"]), ("lanes", None, lanes)]
+            for level in levels:
+                rows.append(("simd", level, lanes * SIMD_SCALE[level]))
+            for kernel, level, wall in rows:
+                cases.append(
+                    {
+                        "kernel": kernel,
+                        "level": level if level is not None else "-",
+                        "fma": False,
+                        "shape": shape_name,
+                        "k": k,
+                        "wall_secs": round(wall, 6),
+                        "ns_per_pixel_round": round(wall * 1e9 / (H * W * passes), 4),
+                        "speedup_vs_lanes": round(lanes / wall, 4),
+                        "matches_solo": True,
+                    }
+                )
+                print(
+                    f"{shape_name:>6} k={k} {kernel:>5}[{cases[-1]['level']:>8}]"
+                    f" {cases[-1]['ns_per_pixel_round']:>9.3f} ns/px/round"
+                    f"  x{cases[-1]['speedup_vs_lanes']:.2f} vs lanes",
+                    flush=True,
+                )
+    doc = {
+        "image": [H, W],
+        "channels": C,
+        "iters": ITERS,
+        "samples": SAMPLES,
+        "seed": SEED,
+        "workers": WORKERS,
+        "strip_rows": STRIP_ROWS,
+        "source": "python-model",
+        "detected_level": detected,
+        "cases": cases,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path} ({len(cases)} cases, detected={detected})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Schema check for BENCH_simd.json (CI smoke + committed file).
+
+Usage: check_simd_schema.py <path> [--full]
+
+Validates the document structure the rust `blockms simd` bench and the
+python model both emit (EXPERIMENTS.md §SIMD). Always required: valid
+kernels/levels/shapes, a simd row at the `portable` fallback level, and
+`matches_solo` true on every non-FMA row (a fast row that diverged is a
+broken kernel, not a result). With --full, also requires the acceptance
+matrix — 1024x1024, k in {2,4,8}, all three shapes, the anchor +
+portable + detected-level rows — and `speedup_vs_lanes >= 1.0` on every
+simd row at the detected level: the Simd kernel only ships where it
+beats the portable lanes formulation.
+"""
+
+import json
+import sys
+
+KERNELS = {"naive", "lanes", "simd"}
+LEVELS = {"portable", "neon", "avx2", "avx512"}
+SHAPES = {"row", "column", "square"}
+
+META_NUM = ["iters", "samples", "seed", "workers", "strip_rows", "channels"]
+CASE_NUM = ["k", "wall_secs", "ns_per_pixel_round", "speedup_vs_lanes"]
+
+
+def fail(msg):
+    print(f"BENCH_simd.json schema check FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    full = "--full" in sys.argv
+    path = args[0] if args else "BENCH_simd.json"
+    with open(path) as f:
+        doc = json.load(f)
+
+    for key in META_NUM:
+        if not isinstance(doc.get(key), (int, float)):
+            fail(f"meta field {key!r} missing or non-numeric")
+    img = doc.get("image")
+    if not (isinstance(img, list) and len(img) == 2):
+        fail("image must be [height, width]")
+    if doc.get("source") not in ("rust", "python-model"):
+        fail(f"unknown source {doc.get('source')!r}")
+    detected = doc.get("detected_level")
+    if detected not in LEVELS:
+        fail(f"detected_level {detected!r} not one of {sorted(LEVELS)}")
+
+    cases = doc.get("cases")
+    if not isinstance(cases, list) or not cases:
+        fail("cases missing or empty")
+    seen = set()
+    for i, c in enumerate(cases):
+        kernel = c.get("kernel")
+        if kernel not in KERNELS:
+            fail(f"case {i}: bad kernel {kernel!r}")
+        level = c.get("level")
+        if kernel == "simd":
+            if level not in LEVELS:
+                fail(f"case {i}: simd row with bad level {level!r}")
+        elif level != "-":
+            fail(f"case {i}: {kernel} row must carry level '-', got {level!r}")
+        if c.get("shape") not in SHAPES:
+            fail(f"case {i}: bad shape {c.get('shape')!r}")
+        if not isinstance(c.get("fma"), bool):
+            fail(f"case {i}: fma missing or non-bool")
+        for key in CASE_NUM:
+            if not isinstance(c.get(key), (int, float)):
+                fail(f"case {i}: field {key!r} missing or non-numeric")
+        if not c["fma"] and c.get("matches_solo") is not True:
+            fail(f"case {i}: non-FMA row with matches_solo != true — broken kernel")
+        if kernel == "lanes" and abs(c["speedup_vs_lanes"] - 1.0) > 1e-9:
+            fail(f"case {i}: lanes anchor must carry speedup 1.0, got {c['speedup_vs_lanes']}")
+        seen.add((kernel, level, c["shape"], c["k"]))
+
+    # The portable fallback row must exist on every machine — it is what
+    # BLOCKMS_SIMD=off runs and what non-SIMD hosts dispatch to.
+    if not any(k == "simd" and lv == "portable" for (k, lv, _s, _kk) in seen):
+        fail("no simd row at the portable fallback level")
+
+    if full:
+        if img != [1024, 1024]:
+            fail(f"--full requires a 1024x1024 image, got {img}")
+        want = set()
+        for sh in SHAPES:
+            for k in (2, 4, 8):
+                want.add(("naive", "-", sh, k))
+                want.add(("lanes", "-", sh, k))
+                want.add(("simd", "portable", sh, k))
+                want.add(("simd", detected, sh, k))
+        missing = want - seen
+        if missing:
+            fail(f"--full matrix incomplete: {len(missing)} cells missing, e.g. {sorted(missing)[:3]}")
+        for i, c in enumerate(cases):
+            if c["kernel"] == "simd" and c["level"] == detected and c["speedup_vs_lanes"] < 1.0:
+                fail(
+                    f"case {i}: simd at detected level {detected} is slower than lanes "
+                    f"(speedup {c['speedup_vs_lanes']})"
+                )
+
+    print(f"{path}: schema OK ({len(cases)} cases, source={doc['source']}, detected={detected})")
+
+
+if __name__ == "__main__":
+    main()

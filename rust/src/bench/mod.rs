@@ -12,6 +12,7 @@ pub mod plan;
 pub mod resilience;
 pub mod runner;
 pub mod service;
+pub mod simd;
 pub mod stream;
 pub mod sweep;
 pub mod tables;
@@ -24,6 +25,7 @@ pub use plan::{PlanBenchOpts, PlanBenchRow};
 pub use resilience::{ResilienceBenchOpts, ResilienceBenchRow};
 pub use runner::{ExperimentConfig, ExperimentRow, Runner};
 pub use service::{ServiceBenchOpts, ServiceBenchRow};
+pub use simd::{SimdBenchOpts, SimdBenchRow};
 pub use stream::{StreamBenchOpts, StreamBenchRow};
 pub use sweep::{SweepBenchOpts, SweepBenchResult, SweepBenchRow};
 pub use workloads::{paper_sizes, PaperSize, Workload};

@@ -1,0 +1,352 @@
+//! SIMD-layer benchmark: naive vs lanes vs simd-at-every-supported-level
+//! step-round throughput over the paper's three block shapes, with the
+//! machine-readable `BENCH_simd.json` trail that `check_simd_schema.py`
+//! gates in CI (EXPERIMENTS.md §SIMD).
+//!
+//! Every cell is a full coordinated run (strip store, static schedule —
+//! the same drive the layout bench uses), so the numbers include the
+//! dispatch overhead the planner actually pays. The headline column is
+//! `speedup_vs_lanes`: the Simd kernel only earns its keep where native
+//! vectors beat the portable `[f32; LANES]` formulation, and the
+//! committed document must show ≥ 1.0 at the host's detected level.
+//! Every non-FMA row is also checked bit-identical against a solo
+//! sequential naive run (`matches_solo`) — a fast row that diverged is
+//! a broken kernel, not a fast one.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::bench::kernels::NaiveBaseline;
+use crate::blocks::{ApproachKind, BlockShape};
+use crate::coordinator::{
+    ClusterConfig, Coordinator, CoordinatorConfig, IoMode, Schedule,
+};
+use crate::image::SyntheticOrtho;
+use crate::kmeans::kernel::KernelChoice;
+use crate::kmeans::simd::{SimdLevel, SimdMode};
+use crate::kmeans::tile::TileLayout;
+use crate::plan::ExecPlan;
+use crate::util::fmt::Table;
+use crate::util::json::Json;
+
+/// Benchmark shape. Defaults are the acceptance configuration:
+/// 1024×1024 3-band scene, k ∈ {2, 4, 8}, the paper's three shapes.
+#[derive(Clone, Debug)]
+pub struct SimdBenchOpts {
+    pub height: usize,
+    pub width: usize,
+    pub ks: Vec<usize>,
+    /// Fixed Lloyd iterations per run (plus one labeling pass).
+    pub iters: usize,
+    /// Timed repetitions per cell (best reported; one warmup first).
+    pub samples: usize,
+    pub seed: u64,
+    pub workers: usize,
+    /// Strip height of the store every cell reads through.
+    pub strip_rows: usize,
+}
+
+impl Default for SimdBenchOpts {
+    fn default() -> Self {
+        SimdBenchOpts {
+            height: 1024,
+            width: 1024,
+            ks: vec![2, 4, 8],
+            iters: 4,
+            samples: 2,
+            seed: 0x51_AD_BE,
+            workers: 4,
+            strip_rows: 64,
+        }
+    }
+}
+
+impl SimdBenchOpts {
+    /// CI smoke configuration: small image, one k, one sample — fast
+    /// enough for a workflow step, same schema as the full matrix.
+    pub fn quick() -> SimdBenchOpts {
+        SimdBenchOpts {
+            height: 128,
+            width: 128,
+            ks: vec![2],
+            iters: 3,
+            samples: 1,
+            strip_rows: 16,
+            ..Default::default()
+        }
+    }
+}
+
+/// One benchmark cell.
+#[derive(Clone, Debug)]
+pub struct SimdBenchRow {
+    pub kernel: KernelChoice,
+    /// Dispatched capability level — `Some` only on simd rows.
+    pub level: Option<SimdLevel>,
+    pub approach: ApproachKind,
+    pub k: usize,
+    /// Best-sample wall seconds of the whole coordinated run.
+    pub wall_secs: f64,
+    /// Nanoseconds per pixel per pass (`iters` steps + 1 labeling).
+    pub ns_per_pixel_round: f64,
+    /// Lanes wall over this cell's wall (same shape, k); 1.0 on the
+    /// lanes row itself, < 1.0 typically on naive.
+    pub speedup_vs_lanes: f64,
+    /// Labels and centroids bit-identical to the solo sequential naive
+    /// run of the same workload.
+    pub matches_solo: bool,
+}
+
+/// The per-(shape, k) cell list: the naive and lanes anchors, then the
+/// simd kernel at every level this host can execute — the `Portable`
+/// fallback row is always present, so the document is comparable across
+/// machines.
+fn cells() -> Vec<(KernelChoice, TileLayout, Option<SimdLevel>)> {
+    let mut cells = vec![
+        (KernelChoice::Naive, TileLayout::Interleaved, None),
+        (KernelChoice::Lanes, TileLayout::Soa, None),
+    ];
+    for level in SimdLevel::ALL {
+        if SimdLevel::supported(level) {
+            cells.push((KernelChoice::Simd, TileLayout::Soa, Some(level)));
+        }
+    }
+    cells
+}
+
+/// Run the full matrix.
+pub fn run_simd_bench(opts: &SimdBenchOpts) -> Result<Vec<SimdBenchRow>> {
+    let img = Arc::new(
+        SyntheticOrtho::default()
+            .with_seed(opts.seed)
+            .generate(opts.height, opts.width),
+    );
+    let n_pixels = (opts.height * opts.width) as f64;
+    let passes = (opts.iters + 1) as f64;
+    // Solo sequential naive reference per k — shape-independent, the
+    // identity anchor every parallel cell must reproduce bitwise.
+    let mut solo: BTreeMap<usize, NaiveBaseline> = BTreeMap::new();
+    let mut rows = Vec::new();
+    for approach in ApproachKind::ALL {
+        let shape = BlockShape::paper_default(approach, opts.height, opts.width);
+        for &k in &opts.ks {
+            let ccfg = ClusterConfig {
+                k,
+                fixed_iters: Some(opts.iters),
+                seed: opts.seed ^ 0xC0FFEE,
+                ..Default::default()
+            };
+            let mut lanes_wall: Option<f64> = None;
+            let group_start = rows.len();
+            for (kernel, layout, level) in cells() {
+                let coord = Coordinator::new(CoordinatorConfig {
+                    exec: ExecPlan::pinned(shape)
+                        .with_workers(opts.workers)
+                        .with_kernel(kernel)
+                        .with_layout(layout)
+                        .with_simd(SimdMode {
+                            level: level.unwrap_or_default(),
+                            fma: false,
+                        }),
+                    // Static: per-worker tiles stay warm across rounds.
+                    schedule: Schedule::Static,
+                    io: IoMode::Strips {
+                        strip_rows: opts.strip_rows,
+                        file_backed: false,
+                    },
+                    ..Default::default()
+                });
+                if !solo.contains_key(&k) {
+                    let s = coord.serial(&img, &ccfg)?;
+                    solo.insert(k, NaiveBaseline::new(s.total_secs, s.labels, s.centroids));
+                }
+                let mut best = f64::INFINITY;
+                let mut result = None;
+                for sample in 0..opts.samples.max(1) + 1 {
+                    let t0 = Instant::now();
+                    let out = coord.cluster(&img, &ccfg)?;
+                    let dt = t0.elapsed().as_secs_f64();
+                    if sample > 0 {
+                        best = best.min(dt); // sample 0 is warmup
+                    }
+                    result = Some(out);
+                }
+                let out = result.expect("at least one sample ran");
+                let (_, matches_solo) = solo[&k].score(best, &out.labels, &out.centroids);
+                if kernel == KernelChoice::Lanes {
+                    lanes_wall = Some(best);
+                }
+                rows.push(SimdBenchRow {
+                    kernel,
+                    level,
+                    approach,
+                    k,
+                    wall_secs: best,
+                    ns_per_pixel_round: best * 1e9 / (n_pixels * passes),
+                    speedup_vs_lanes: lanes_wall.map_or(f64::NAN, |l| l / best),
+                    matches_solo,
+                });
+            }
+            // The naive anchor ran before lanes; backfill its column so
+            // every row carries a finite ratio.
+            let lanes = lanes_wall.expect("cell list always contains lanes");
+            for r in &mut rows[group_start..] {
+                if r.speedup_vs_lanes.is_nan() {
+                    r.speedup_vs_lanes = lanes / r.wall_secs;
+                }
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// The JSON `level` key for a row (`"-"` on the naive/lanes anchors).
+fn level_key(level: Option<SimdLevel>) -> String {
+    level.map_or_else(|| "-".to_string(), |l| l.label().to_string())
+}
+
+/// Serialize the matrix as the `BENCH_simd.json` document.
+pub fn simd_bench_json(opts: &SimdBenchOpts, rows: &[SimdBenchRow]) -> String {
+    let num = Json::Num;
+    let mut doc = BTreeMap::new();
+    doc.insert(
+        "image".to_string(),
+        Json::Arr(vec![num(opts.height as f64), num(opts.width as f64)]),
+    );
+    doc.insert("channels".to_string(), num(3.0));
+    doc.insert("iters".to_string(), num(opts.iters as f64));
+    doc.insert("samples".to_string(), num(opts.samples as f64));
+    doc.insert("seed".to_string(), num(opts.seed as f64));
+    doc.insert("workers".to_string(), num(opts.workers as f64));
+    doc.insert("strip_rows".to_string(), num(opts.strip_rows as f64));
+    doc.insert("source".to_string(), Json::Str("rust".to_string()));
+    doc.insert(
+        "detected_level".to_string(),
+        Json::Str(SimdLevel::detect().label().to_string()),
+    );
+    let cases = rows
+        .iter()
+        .map(|r| {
+            let mut c = BTreeMap::new();
+            c.insert("kernel".to_string(), Json::Str(r.kernel.label().to_string()));
+            c.insert("level".to_string(), Json::Str(level_key(r.level)));
+            c.insert("fma".to_string(), Json::Bool(false));
+            c.insert(
+                "shape".to_string(),
+                Json::Str(crate::bench::layout::shape_key(r.approach).to_string()),
+            );
+            c.insert("k".to_string(), num(r.k as f64));
+            c.insert("wall_secs".to_string(), num(r.wall_secs));
+            c.insert("ns_per_pixel_round".to_string(), num(r.ns_per_pixel_round));
+            c.insert("speedup_vs_lanes".to_string(), num(r.speedup_vs_lanes));
+            c.insert("matches_solo".to_string(), Json::Bool(r.matches_solo));
+            Json::Obj(c)
+        })
+        .collect();
+    doc.insert("cases".to_string(), Json::Arr(cases));
+    Json::Obj(doc).to_string()
+}
+
+/// Run the matrix and write `BENCH_simd.json` to `path`.
+pub fn write_simd_bench(path: &Path, opts: &SimdBenchOpts) -> Result<Vec<SimdBenchRow>> {
+    let rows = run_simd_bench(opts)?;
+    std::fs::write(path, simd_bench_json(opts, &rows))
+        .with_context(|| format!("write simd bench to {}", path.display()))?;
+    Ok(rows)
+}
+
+/// Human-readable rendering of the matrix.
+pub fn render_simd_bench(opts: &SimdBenchOpts, rows: &[SimdBenchRow]) -> String {
+    let mut t = Table::new(format!(
+        "SIMD matrix: step-round throughput at {}x{}, {} iters (detected: {})",
+        opts.width,
+        opts.height,
+        opts.iters,
+        SimdLevel::detect()
+    ))
+    .header(&["Kernel", "Level", "Shape", "K", "ns/px/round", "Speedup vs lanes", "Identical"]);
+    for r in rows {
+        t.row(vec![
+            r.kernel.to_string(),
+            level_key(r.level),
+            crate::bench::layout::shape_key(r.approach).to_string(),
+            r.k.to_string(),
+            format!("{:.3}", r.ns_per_pixel_round),
+            format!("{:.2}x", r.speedup_vs_lanes),
+            if r.matches_solo { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SimdBenchOpts {
+        SimdBenchOpts {
+            height: 48,
+            width: 40,
+            ks: vec![2],
+            iters: 3,
+            samples: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn matrix_covers_every_supported_level_and_matches_solo() {
+        let rows = run_simd_bench(&tiny()).unwrap();
+        let levels = SimdLevel::ALL
+            .iter()
+            .filter(|&&l| SimdLevel::supported(l))
+            .count();
+        assert_eq!(rows.len(), 3 * (2 + levels)); // 3 shapes x (anchors + levels)
+        for r in &rows {
+            assert!(r.matches_solo, "{} {:?} diverged from solo", r.kernel, r.level);
+            assert!(r.ns_per_pixel_round > 0.0);
+            assert!(r.speedup_vs_lanes.is_finite() && r.speedup_vs_lanes > 0.0);
+        }
+        // The portable fallback row is present on every machine.
+        assert!(rows
+            .iter()
+            .any(|r| r.level == Some(SimdLevel::Portable)));
+        // The lanes anchor carries exactly 1.0 by construction.
+        for r in rows.iter().filter(|r| r.kernel == KernelChoice::Lanes) {
+            assert!((r.speedup_vs_lanes - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn json_round_trips_and_has_schema() {
+        let opts = tiny();
+        let rows = run_simd_bench(&opts).unwrap();
+        let text = simd_bench_json(&opts, &rows);
+        let doc = Json::parse(&text).expect("valid json");
+        assert_eq!(doc.get("iters").and_then(Json::as_usize), Some(3));
+        assert!(doc.get("detected_level").and_then(Json::as_str).is_some());
+        let cases = doc.get("cases").and_then(Json::as_arr).expect("cases");
+        assert_eq!(cases.len(), rows.len());
+        for c in cases {
+            assert!(c.get("kernel").and_then(Json::as_str).is_some());
+            assert!(c.get("level").and_then(Json::as_str).is_some());
+            assert!(c.get("speedup_vs_lanes").and_then(Json::as_f64).is_some());
+            assert_eq!(c.get("matches_solo").and_then(Json::as_bool), Some(true));
+            assert_eq!(c.get("fma").and_then(Json::as_bool), Some(false));
+        }
+    }
+
+    #[test]
+    fn write_creates_the_file() {
+        let path = std::env::temp_dir().join("blockms_test_BENCH_simd.json");
+        let rows = write_simd_bench(&path, &tiny()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        assert!(!rows.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -25,6 +25,7 @@ pub const SUBCOMMANDS: &[&str] = &[
     "cases",
     "sweep",
     "kernels",
+    "simd",
     "layout",
     "stream",
     "batch",
@@ -51,7 +52,7 @@ pub fn blockms_cli() -> Cli {
         .opt("out", None, "output path (cluster: label map PPM; kernels/batch/plan/stream/sweep: JSON)")
         .opt("out-input", None, "also write the input scene PPM here")
         .opt("engine", Some("native"), "compute engine: native|pjrt")
-        .opt("kernel", Some("naive"), "compute kernel: naive|pruned|fused|lanes")
+        .opt("kernel", Some("naive"), "compute kernel: naive|pruned|fused|lanes|simd")
         .opt("layout", None, "block layout: interleaved|soa (default: kernel's native)")
         .opt("arena-mb", Some("256"), "per-worker SoA tile arena budget, MiB (0 disables)")
         .opt("strip-cache", None, "shared strip cache capacity, decoded strips (0 = off)")
@@ -125,6 +126,11 @@ pub fn blockms_cli() -> Cli {
             Some("5000"),
             "serve: graceful-drain budget at end of run, ms — in-flight jobs get this \
              long to finish before being checkpointed or cancelled",
+        )
+        .flag(
+            "fma",
+            "simd kernel: fused multiply-add distances — faster but no longer \
+             bit-identical to lanes (tolerance-gated; see EXPERIMENTS.md)",
         )
         .flag("serial", "cluster: also run the sequential baseline and compare")
         .flag(

@@ -988,7 +988,12 @@ mod tests {
                 })
                 .cluster(&img, &ccfg)
                 .unwrap();
-                for kernel in [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes] {
+                for kernel in [
+                    KernelChoice::Pruned,
+                    KernelChoice::Fused,
+                    KernelChoice::Lanes,
+                    KernelChoice::Simd,
+                ] {
                     let coord = Coordinator::new(CoordinatorConfig {
                         exec: ExecPlan::pinned(square(15)).with_workers(3).with_kernel(kernel),
                         schedule,

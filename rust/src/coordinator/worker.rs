@@ -610,7 +610,7 @@ fn run_job(
                 )
             }
         };
-        if ctx.exec.kernel != KernelChoice::Lanes {
+        if !matches!(ctx.exec.kernel, KernelChoice::Lanes | KernelChoice::Simd) {
             // Interleaved compute path over an arena-resident block:
             // rematerialize (bit-identical round trip), still no I/O.
             tile.to_interleaved(px_buf);
@@ -620,7 +620,7 @@ fn run_job(
         engine
             .read_pixels(job.block, px_buf)
             .with_context(|| format!("worker {worker_id}: read block {}", job.block))?;
-        (is_block_pass && ctx.exec.kernel == KernelChoice::Lanes)
+        (is_block_pass && matches!(ctx.exec.kernel, KernelChoice::Lanes | KernelChoice::Simd))
             .then(|| Arc::new(SoaTile::from_interleaved(px_buf, ctx.plan_channels())))
     };
     // Double buffering: with the block in hand and compute about to
@@ -651,15 +651,21 @@ fn run_job(
                 if usable.is_none() {
                     entry.state.clear(); // stale bounds: re-seed this round
                 }
-                let accum = if ctx.exec.kernel == KernelChoice::Lanes {
-                    backend.step_block_lanes(
+                let accum = match ctx.exec.kernel {
+                    KernelChoice::Lanes => backend.step_block_lanes(
                         tile.as_deref().expect("tile built for lanes"),
                         centroids,
                         &mut entry.state,
                         usable,
-                    )?
-                } else {
-                    backend.step_block_pruned(px_buf, centroids, &mut entry.state, usable)?
+                    )?,
+                    KernelChoice::Simd => backend.step_block_simd(
+                        tile.as_deref().expect("tile built for simd"),
+                        centroids,
+                        &mut entry.state,
+                        usable,
+                        ctx.exec.simd,
+                    )?,
+                    _ => backend.step_block_pruned(px_buf, centroids, &mut entry.state, usable)?,
                 };
                 entry.last_round = Some(job.round);
                 accum
@@ -669,29 +675,36 @@ fn run_job(
         JobPayload::Assign { centroids, drift } => {
             let mut labels = Vec::new();
             let inertia = match ctx.exec.kernel {
-                KernelChoice::Fused | KernelChoice::Lanes => {
+                KernelChoice::Fused | KernelChoice::Lanes | KernelChoice::Simd => {
                     evict_stale(prune, job.job, job.round);
                     let entry = prune.entry(key).or_default();
                     let usable = entry.usable_drift(drift, job.round);
                     if usable.is_none() {
                         entry.state.clear();
                     }
-                    if ctx.exec.kernel == KernelChoice::Lanes {
-                        backend.assign_block_lanes(
+                    match ctx.exec.kernel {
+                        KernelChoice::Lanes => backend.assign_block_lanes(
                             tile.as_deref().expect("tile built for lanes"),
                             centroids,
                             &mut entry.state,
                             usable,
                             &mut labels,
-                        )?
-                    } else {
-                        backend.assign_block_pruned(
+                        )?,
+                        KernelChoice::Simd => backend.assign_block_simd(
+                            tile.as_deref().expect("tile built for simd"),
+                            centroids,
+                            &mut entry.state,
+                            usable,
+                            &mut labels,
+                            ctx.exec.simd,
+                        )?,
+                        _ => backend.assign_block_pruned(
                             px_buf,
                             centroids,
                             &mut entry.state,
                             usable,
                             &mut labels,
-                        )?
+                        )?,
                     }
                 }
                 _ => backend.assign_block(px_buf, centroids, &mut labels)?,

@@ -51,6 +51,7 @@
 //! the naive scan so the invariant is enforced rather than assumed.
 
 use super::math::StepAccum;
+use super::simd::{self, SimdMode, GROUP_MAX};
 use super::tile::{SoaTile, LANES};
 
 /// Centroid tables up to this `k` live in a fixed stack array inside the
@@ -81,14 +82,21 @@ pub enum KernelChoice {
     /// [`LANES`] pixels wide within each channel plane, composed with
     /// the same Hamerly pruning and bounds-reuse final pass as `Fused`.
     Lanes,
+    /// Native-SIMD planar kernels: the `Lanes` formulation executed with
+    /// `std::arch` intrinsics at the run's dispatched
+    /// [`simd::SimdLevel`] (AVX-512 / AVX2 / NEON, portable fallback).
+    /// Non-FMA modes are bit-identical to `Lanes`; the opt-in FMA modes
+    /// are tolerance-gated (see `kmeans/simd.rs`).
+    Simd,
 }
 
 impl KernelChoice {
-    pub const ALL: [KernelChoice; 4] = [
+    pub const ALL: [KernelChoice; 5] = [
         KernelChoice::Naive,
         KernelChoice::Pruned,
         KernelChoice::Fused,
         KernelChoice::Lanes,
+        KernelChoice::Simd,
     ];
 
     pub fn label(&self) -> &'static str {
@@ -97,6 +105,7 @@ impl KernelChoice {
             KernelChoice::Pruned => "pruned",
             KernelChoice::Fused => "fused",
             KernelChoice::Lanes => "lanes",
+            KernelChoice::Simd => "simd",
         }
     }
 
@@ -105,7 +114,7 @@ impl KernelChoice {
     /// consumes interleaved buffers.
     pub fn default_layout(&self) -> super::tile::TileLayout {
         match self {
-            KernelChoice::Lanes => super::tile::TileLayout::Soa,
+            KernelChoice::Lanes | KernelChoice::Simd => super::tile::TileLayout::Soa,
             _ => super::tile::TileLayout::Interleaved,
         }
     }
@@ -125,8 +134,9 @@ impl std::str::FromStr for KernelChoice {
             "pruned" => Ok(KernelChoice::Pruned),
             "fused" => Ok(KernelChoice::Fused),
             "lanes" => Ok(KernelChoice::Lanes),
+            "simd" => Ok(KernelChoice::Simd),
             other => Err(format!(
-                "unknown kernel {other:?} (want naive|pruned|fused|lanes)"
+                "unknown kernel {other:?} (want naive|pruned|fused|lanes|simd)"
             )),
         }
     }
@@ -733,7 +743,7 @@ fn accumulate_soa(acc: &mut StepAccum, tile: &SoaTile, i: usize, label: u32, d2:
 /// unit stride. Tail lanes past the pixel count compute on the zero
 /// padding; callers mask them at emission.
 #[inline]
-fn lane_nearest2(
+pub(crate) fn lane_nearest2(
     tile: &SoaTile,
     start: usize,
     cen: &[f32],
@@ -953,6 +963,135 @@ pub fn assign_lanes(
             lanes_assign_pruned_core(tile, centroids, k, state, d, labels)
         }
         _ => lanes_scan_assign(tile, centroids, k, labels),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native-SIMD kernels: the lanes formulation with the inner group loop
+// dispatched through `simd::group_fn` (AVX-512 / AVX2 / NEON / portable,
+// selected once per scan). Only the full scans change — pruned rounds
+// are per-pixel scalar work dominated by the bounds test, so they share
+// `lanes_step_pruned_core` / `lanes_assign_pruned_core` verbatim. The
+// group width may be wider than LANES (AVX-512 runs 16 pixels); tile
+// planes are padded to a GROUP_MAX multiple so group loads stay in
+// bounds, and emission masks lanes past the pixel count in ascending
+// pixel order — per-pixel op order, and therefore bit-identity, is
+// independent of group width.
+// ---------------------------------------------------------------------------
+
+/// SIMD-dispatched full accumulation scan ([`lanes_scan_step`] with the
+/// inner loop swapped for the mode's native group kernel).
+fn simd_scan_step(
+    tile: &SoaTile,
+    cen: &[f32],
+    k: usize,
+    mut st: Option<&mut PrunedState>,
+    mode: SimdMode,
+) -> StepAccum {
+    let n = tile.pixels();
+    if let Some(st) = st.as_deref_mut() {
+        st.reset(n, k);
+    }
+    let mut acc = StepAccum::zeros(k, tile.channels());
+    let (group, width) = simd::group_fn(mode);
+    let mut labs = [0u32; GROUP_MAX];
+    let mut best_d = [0.0f32; GROUP_MAX];
+    let mut second_d = [0.0f32; GROUP_MAX];
+    let mut start = 0;
+    while start < n {
+        group(tile, start, cen, k, &mut labs, &mut best_d, &mut second_d);
+        let lim = width.min(n - start); // mask the padded tail lanes
+        for l in 0..lim {
+            let i = start + l;
+            if let Some(st) = st.as_deref_mut() {
+                st.labels[i] = labs[l];
+                st.upper[i] = (best_d[l] as f64).sqrt();
+                st.lower[i] = (second_d[l] as f64).sqrt();
+            }
+            accumulate_soa(&mut acc, tile, i, labs[l], best_d[l]);
+        }
+        start += width;
+    }
+    acc
+}
+
+/// SIMD-dispatched full labeling scan ([`lanes_scan_assign`] on the
+/// native group kernel).
+fn simd_scan_assign(
+    tile: &SoaTile,
+    cen: &[f32],
+    k: usize,
+    labels: &mut Vec<u32>,
+    mode: SimdMode,
+) -> f64 {
+    let n = tile.pixels();
+    let mut inertia = 0.0f64;
+    let (group, width) = simd::group_fn(mode);
+    let mut labs = [0u32; GROUP_MAX];
+    let mut best_d = [0.0f32; GROUP_MAX];
+    let mut second_d = [0.0f32; GROUP_MAX];
+    let mut start = 0;
+    while start < n {
+        group(tile, start, cen, k, &mut labs, &mut best_d, &mut second_d);
+        let lim = width.min(n - start);
+        for l in 0..lim {
+            labels.push(labs[l]);
+            inertia += best_d[l] as f64;
+        }
+        start += width;
+    }
+    inertia
+}
+
+/// One Lloyd accumulation pass of the native-SIMD kernel: full scans run
+/// on the dispatched intrinsics, pruned rounds share the lanes cores.
+/// Without FMA this returns exactly what [`step_lanes`] (and therefore
+/// [`step_kernel`]) would — property-tested per level.
+pub fn step_simd(
+    tile: &SoaTile,
+    centroids: &[f32],
+    k: usize,
+    state: &mut PrunedState,
+    drift: Option<&CentroidDrift>,
+    mode: SimdMode,
+) -> StepAccum {
+    check_tile_shapes(tile, centroids, k);
+    if tile.channels() > PRUNE_MAX_CHANNELS {
+        state.clear();
+        return simd_scan_step(tile, centroids, k, None, mode);
+    }
+    match drift {
+        Some(d) if state.is_valid_for(tile.pixels(), k) => {
+            lanes_step_pruned_core(tile, centroids, k, state, d)
+        }
+        _ => simd_scan_step(tile, centroids, k, Some(state), mode),
+    }
+}
+
+/// Final labeling of the native-SIMD kernel: bounds-reuse when possible,
+/// a SIMD full scan otherwise. Identical to [`assign_lanes`] without
+/// FMA.
+pub fn assign_simd(
+    tile: &SoaTile,
+    centroids: &[f32],
+    k: usize,
+    state: &mut PrunedState,
+    drift: Option<&CentroidDrift>,
+    labels: &mut Vec<u32>,
+    mode: SimdMode,
+) -> f64 {
+    check_tile_shapes(tile, centroids, k);
+    labels.clear();
+    labels.reserve(tile.pixels());
+    if tile.channels() > PRUNE_MAX_CHANNELS {
+        state.clear();
+        return simd_scan_assign(tile, centroids, k, labels, mode);
+    }
+    match drift {
+        Some(d) if state.is_valid_for(tile.pixels(), k) => {
+            lanes_assign_pruned_core(tile, centroids, k, state, d, labels)
+        }
+        _ => simd_scan_assign(tile, centroids, k, labels, mode),
     }
 }
 
@@ -1325,6 +1464,105 @@ mod tests {
         let cen = random_pixels(2, 3, 2);
         let mut state = PrunedState::new();
         let _ = step_lanes(&tile, &cen, 3, &mut state, None);
+    }
+
+    /// The tentpole contract: at every *supported* SIMD level —
+    /// including the portable fallback — non-FMA simd rounds are bit-
+    /// identical to the naive kernel across multi-round runs with
+    /// pruning engaged, exactly like the lanes test above.
+    #[test]
+    fn simd_rounds_are_bit_identical_to_naive_at_every_supported_level() {
+        use crate::kmeans::simd::SimdLevel;
+        use crate::kmeans::tile::SoaTile;
+        for level in SimdLevel::ALL {
+            if !SimdLevel::supported(level) {
+                continue;
+            }
+            let mode = SimdMode { level, fma: false };
+            for channels in [1usize, 3, 5] {
+                for k in [1usize, 2, 4, 8] {
+                    let px = random_pixels(700, channels, 177 + channels as u64 * k as u64);
+                    let tile = SoaTile::from_interleaved(&px, channels);
+                    let mut cen: Vec<f32> = px[..k * channels].to_vec();
+                    let mut state = PrunedState::new();
+                    let mut drift: Option<CentroidDrift> = None;
+                    for round in 0..6 {
+                        let want = step_kernel(&px, &cen, k, channels);
+                        let got = step_simd(&tile, &cen, k, &mut state, drift.as_ref(), mode);
+                        assert_eq!(got, want, "{level} C={channels} k={k} round={round}");
+                        let prev = cen.clone();
+                        math::update_centroids(&want, &mut cen, 0.0);
+                        drift = Some(drift_between(&prev, &cen, k, channels));
+                    }
+                    let mut labels = Vec::new();
+                    let inertia = assign_simd(
+                        &tile,
+                        &cen,
+                        k,
+                        &mut state,
+                        drift.as_ref(),
+                        &mut labels,
+                        mode,
+                    );
+                    let mut want_labels = Vec::new();
+                    let want_inertia = assign_kernel(&px, &cen, k, channels, &mut want_labels);
+                    assert_eq!(labels, want_labels, "{level} C={channels} k={k} labels");
+                    assert_eq!(inertia, want_inertia, "{level} C={channels} k={k} inertia");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_handles_distance_ties_like_naive() {
+        use crate::kmeans::tile::SoaTile;
+        let mut rng = Rng::new(17);
+        let px: Vec<f32> = (0..601 * 3).map(|_| rng.range_usize(0, 4) as f32).collect();
+        let cen = vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 3.0, 3.0, 3.0, 0.0, 1.0, 2.0];
+        let tile = SoaTile::from_interleaved(&px, 3);
+        let mode = SimdMode::detected();
+        let mut state = PrunedState::new();
+        let mut drift = None;
+        let mut c = cen.clone();
+        for _ in 0..4 {
+            let want = step_kernel(&px, &c, 4, 3);
+            let got = step_simd(&tile, &c, 4, &mut state, drift.as_ref(), mode);
+            assert_eq!(got, want);
+            let prev = c.clone();
+            math::update_centroids(&want, &mut c, 0.0);
+            drift = Some(drift_between(&prev, &c, 4, 3));
+        }
+    }
+
+    #[test]
+    fn simd_wide_pixels_never_prune_but_stay_exact() {
+        use crate::kmeans::tile::SoaTile;
+        let channels = PRUNE_MAX_CHANNELS + 4;
+        let px = random_pixels(60, channels, 45);
+        let tile = SoaTile::from_interleaved(&px, channels);
+        let cen = random_pixels(2, channels, 46);
+        let mode = SimdMode::detected();
+        let mut state = PrunedState::new();
+        let acc = step_simd(&tile, &cen, 2, &mut state, None, mode);
+        assert_eq!(acc, step_kernel(&px, &cen, 2, channels));
+        assert!(!state.ready(), "wide pixels must not seed bounds");
+        let drift = drift_between(&cen, &cen, 2, channels);
+        let mut labels = Vec::new();
+        let inertia = assign_simd(&tile, &cen, 2, &mut state, Some(&drift), &mut labels, mode);
+        let mut want = Vec::new();
+        assert_eq!(inertia, assign_kernel(&px, &cen, 2, channels, &mut want));
+        assert_eq!(labels, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "centroid table length")]
+    fn simd_mismatched_k_fails_loudly() {
+        use crate::kmeans::tile::SoaTile;
+        let px = random_pixels(10, 3, 1);
+        let tile = SoaTile::from_interleaved(&px, 3);
+        let cen = random_pixels(2, 3, 2);
+        let mut state = PrunedState::new();
+        let _ = step_simd(&tile, &cen, 3, &mut state, None, SimdMode::detected());
     }
 
     #[test]

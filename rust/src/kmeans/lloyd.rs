@@ -3,6 +3,7 @@
 use super::init::InitMethod;
 use super::kernel::{self, CentroidDrift, KernelChoice, PrunedState};
 use super::math;
+use super::simd::SimdMode;
 use super::tile::SoaTile;
 
 /// Shared K-Means configuration (used by baseline and coordinator).
@@ -68,7 +69,19 @@ impl SeqKMeans {
         cfg: &KMeansConfig,
         kernel: KernelChoice,
     ) -> KMeansResult {
-        run_inner(pixels, channels, cfg, None, kernel)
+        run_inner(pixels, channels, cfg, None, kernel, SimdMode::detected())
+    }
+
+    /// [`SeqKMeans::run_with`] with an explicit SIMD dispatch mode (only
+    /// meaningful for [`KernelChoice::Simd`]; other kernels ignore it).
+    pub fn run_with_simd(
+        pixels: &[f32],
+        channels: usize,
+        cfg: &KMeansConfig,
+        kernel: KernelChoice,
+        simd: SimdMode,
+    ) -> KMeansResult {
+        run_inner(pixels, channels, cfg, None, kernel, simd)
     }
 
     /// Run a fixed number of iterations with NO convergence test — the
@@ -82,7 +95,14 @@ impl SeqKMeans {
         cfg: &KMeansConfig,
         iters: usize,
     ) -> KMeansResult {
-        run_inner(pixels, channels, cfg, Some(iters), KernelChoice::Naive)
+        run_inner(
+            pixels,
+            channels,
+            cfg,
+            Some(iters),
+            KernelChoice::Naive,
+            SimdMode::default(),
+        )
     }
 
     /// Fixed-iteration variant of [`SeqKMeans::run_with`].
@@ -93,7 +113,19 @@ impl SeqKMeans {
         iters: usize,
         kernel: KernelChoice,
     ) -> KMeansResult {
-        run_inner(pixels, channels, cfg, Some(iters), kernel)
+        run_inner(pixels, channels, cfg, Some(iters), kernel, SimdMode::detected())
+    }
+
+    /// Fixed-iteration variant of [`SeqKMeans::run_with_simd`].
+    pub fn run_fixed_iters_with_simd(
+        pixels: &[f32],
+        channels: usize,
+        cfg: &KMeansConfig,
+        iters: usize,
+        kernel: KernelChoice,
+        simd: SimdMode,
+    ) -> KMeansResult {
+        run_inner(pixels, channels, cfg, Some(iters), kernel, simd)
     }
 }
 
@@ -105,6 +137,7 @@ fn run_inner(
     cfg: &KMeansConfig,
     fixed: Option<usize>,
     kernel: KernelChoice,
+    simd: SimdMode,
 ) -> KMeansResult {
     assert!(cfg.k >= 1, "k must be >= 1");
     assert_eq!(pixels.len() % channels, 0);
@@ -117,10 +150,11 @@ fn run_inner(
     let mut converged = false;
     let mut state = PrunedState::new();
     let mut drift: Option<CentroidDrift> = None;
-    // The lanes kernel runs on the planar layout: deinterleave once,
-    // reuse the tile for every round (the whole-image mirror of the
-    // coordinator's per-block tile arena).
-    let tile = (kernel == KernelChoice::Lanes).then(|| SoaTile::from_interleaved(pixels, channels));
+    // The lanes/simd kernels run on the planar layout: deinterleave
+    // once, reuse the tile for every round (the whole-image mirror of
+    // the coordinator's per-block tile arena).
+    let tile = matches!(kernel, KernelChoice::Lanes | KernelChoice::Simd)
+        .then(|| SoaTile::from_interleaved(pixels, channels));
     for _ in 0..max_iters {
         iterations += 1;
         let acc = match kernel {
@@ -134,6 +168,14 @@ fn run_inner(
                 cfg.k,
                 &mut state,
                 drift.as_ref(),
+            ),
+            KernelChoice::Simd => kernel::step_simd(
+                tile.as_ref().expect("tile built for simd"),
+                &centroids,
+                cfg.k,
+                &mut state,
+                drift.as_ref(),
+                simd,
             ),
         };
         let prev = (kernel != KernelChoice::Naive).then(|| centroids.clone());
@@ -164,6 +206,15 @@ fn run_inner(
             &mut state,
             drift.as_ref(),
             &mut labels,
+        ),
+        KernelChoice::Simd => kernel::assign_simd(
+            tile.as_ref().expect("tile built for simd"),
+            &centroids,
+            cfg.k,
+            &mut state,
+            drift.as_ref(),
+            &mut labels,
+            simd,
         ),
         _ => math::assign_all(pixels, &centroids, cfg.k, channels, &mut labels),
     };
@@ -260,7 +311,12 @@ mod tests {
                 ..Default::default()
             };
             let naive = SeqKMeans::run_with(px, 3, &cfg, KernelChoice::Naive);
-            for kc in [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes] {
+            for kc in [
+                KernelChoice::Pruned,
+                KernelChoice::Fused,
+                KernelChoice::Lanes,
+                KernelChoice::Simd,
+            ] {
                 let other = SeqKMeans::run_with(px, 3, &cfg, kc);
                 assert_eq!(other.labels, naive.labels, "k={k} {kc}");
                 assert_eq!(other.centroids, naive.centroids, "k={k} {kc}");

@@ -14,9 +14,11 @@ pub mod init;
 pub mod kernel;
 mod lloyd;
 pub mod math;
+pub mod simd;
 pub mod tile;
 
 pub use init::{InitMethod, StreamInit};
 pub use kernel::{CentroidDrift, KernelChoice, PrunedState};
 pub use lloyd::{KMeansConfig, KMeansResult, SeqKMeans};
+pub use simd::{SimdLevel, SimdMode};
 pub use tile::{ArenaStats, SoaTile, TileArena, TileLayout, LANES};

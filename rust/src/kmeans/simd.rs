@@ -1,0 +1,758 @@
+//! Runtime-dispatched native SIMD distance kernels.
+//!
+//! The `Lanes` kernel proved the lane-parallel formulation as portable
+//! `[f32; LANES]` array code; this module implements the same hot inner
+//! loop — nearest-plus-runner-up over a group of pixels, channel-outer
+//! accumulation — with `std::arch` intrinsics, selected **once per run**
+//! from the host's capabilities:
+//!
+//! - **AVX-512** (x86_64, `avx512f`): 16 pixels per vector op,
+//! - **AVX2** (x86_64): 8 pixels per vector op,
+//! - **NEON** (aarch64): 8 pixels as two 128-bit halves,
+//! - **Portable**: the existing `lane_nearest2` array code, everywhere
+//!   else.
+//!
+//! # Bit-identity
+//!
+//! Every lane of a vector is an independent pixel, and the non-FMA
+//! variants execute, per pixel, the exact op sequence of
+//! [`super::kernel::lane_nearest2`]: for each centroid, channel-outer
+//! `t = p - c; d += t * t` in ascending channel order, then a strict-`<`
+//! argmin/runner-up update. IEEE-754 makes vector `sub`/`mul`/`add`
+//! bit-equal to their scalar forms, so labels, centroids, counts, and
+//! inertia are bit-identical to `Lanes` (and therefore to naive) at
+//! every level including the portable fallback — property-tested in
+//! `tests/kernel_equivalence.rs`. Group width only changes how many
+//! pixels are in flight, never any per-pixel op order.
+//!
+//! The opt-in **FMA** variants (`--fma`) contract `t*t + d` into a
+//! fused multiply-add with a single rounding — *not* bit-identical, and
+//! covered by the ULP-bounded tolerance harness in
+//! `tests/simd_tolerance.rs` instead (the ROADMAP's tolerance-gated
+//! equivalence mode for accelerator arithmetic).
+//!
+//! # Dispatch and override
+//!
+//! [`SimdLevel::detect`] probes the host once; the `BLOCKMS_SIMD`
+//! environment variable clamps it (`off`/`portable`, `neon`, `avx2`,
+//! `avx512`) so the fallback path is reachable on any machine —
+//! [`resolve`] errors on levels the host lacks (a usage error, exit 2
+//! at the CLI). The resolved level rides on `ExecPlan`, so the plan
+//! explain table and the `ran:` summary name the code path that
+//! actually executed.
+
+use super::kernel;
+use super::tile::{SoaTile, LANES};
+
+/// Widest group any level processes per inner-loop call (AVX-512).
+pub const GROUP_MAX: usize = 16;
+
+/// Environment variable that clamps the dispatched level.
+pub const SIMD_ENV: &str = "BLOCKMS_SIMD";
+
+/// A host SIMD capability tier, ordered weakest to strongest.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SimdLevel {
+    /// The `[f32; LANES]` array code — correct everywhere.
+    #[default]
+    Portable,
+    /// aarch64 NEON, 128-bit vectors.
+    Neon,
+    /// x86_64 AVX2, 256-bit vectors.
+    Avx2,
+    /// x86_64 AVX-512F, 512-bit vectors (16 pixels per op).
+    Avx512,
+}
+
+impl SimdLevel {
+    pub const ALL: [SimdLevel; 4] = [
+        SimdLevel::Portable,
+        SimdLevel::Neon,
+        SimdLevel::Avx2,
+        SimdLevel::Avx512,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimdLevel::Portable => "portable",
+            SimdLevel::Neon => "neon",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512 => "avx512",
+        }
+    }
+
+    /// Pixels per inner-loop group at this level. AVX-512 runs double
+    /// groups; everything else matches the portable [`LANES`] width.
+    /// Tile planes are padded to a multiple of [`GROUP_MAX`] (64 bytes),
+    /// so a full group load is always in bounds.
+    pub fn group_width(&self) -> usize {
+        match self {
+            SimdLevel::Avx512 => GROUP_MAX,
+            _ => LANES,
+        }
+    }
+
+    /// Best level the **hardware** supports (no env override).
+    pub fn detect() -> SimdLevel {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                return SimdLevel::Avx512;
+            }
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return SimdLevel::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return SimdLevel::Neon;
+            }
+        }
+        SimdLevel::Portable
+    }
+
+    /// Can this host execute `level`'s kernels? (Portable always; each
+    /// native tier needs its own feature bit — AVX-512 hosts also
+    /// support the AVX2 tier.)
+    pub fn supported(level: SimdLevel) -> bool {
+        match level {
+            SimdLevel::Portable => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx512 => std::arch::is_x86_feature_detected!("avx512f"),
+            #[cfg(target_arch = "aarch64")]
+            SimdLevel::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+}
+
+impl std::fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl std::str::FromStr for SimdLevel {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "portable" => Ok(SimdLevel::Portable),
+            "neon" => Ok(SimdLevel::Neon),
+            "avx2" => Ok(SimdLevel::Avx2),
+            "avx512" | "avx512f" => Ok(SimdLevel::Avx512),
+            other => Err(format!(
+                "unknown SIMD level {other:?} (want off|portable|neon|avx2|avx512)"
+            )),
+        }
+    }
+}
+
+/// Why [`resolve`] rejected the `BLOCKMS_SIMD` override.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SimdEnvError {
+    /// The value did not parse as a level.
+    Unknown { raw: String, why: String },
+    /// A parseable level the host cannot execute.
+    Unsupported { asked: SimdLevel, detected: SimdLevel },
+}
+
+impl std::fmt::Display for SimdEnvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimdEnvError::Unknown { raw, why } => {
+                write!(f, "{SIMD_ENV}={raw:?}: {why}")
+            }
+            SimdEnvError::Unsupported { asked, detected } => write!(
+                f,
+                "{SIMD_ENV}={asked}: this host lacks {asked} (detected {detected})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SimdEnvError {}
+
+/// The level a run should dispatch: hardware detection clamped by the
+/// `BLOCKMS_SIMD` override. Errors (usage mistakes — unknown value, or
+/// a level the host lacks) are for entry points to surface as exit-2;
+/// library callers that just want *a* valid level use
+/// [`SimdMode::detected`].
+pub fn resolve() -> Result<SimdLevel, SimdEnvError> {
+    let detected = SimdLevel::detect();
+    match std::env::var(SIMD_ENV) {
+        Err(_) => Ok(detected),
+        Ok(raw) => {
+            let asked: SimdLevel = raw.parse().map_err(|why| SimdEnvError::Unknown {
+                raw: raw.clone(),
+                why,
+            })?;
+            if !SimdLevel::supported(asked) {
+                return Err(SimdEnvError::Unsupported { asked, detected });
+            }
+            Ok(asked)
+        }
+    }
+}
+
+/// The dispatch decision a run carries: which capability tier, and
+/// whether the fused-multiply-add (non-bit-identical, tolerance-gated)
+/// variants are enabled.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct SimdMode {
+    pub level: SimdLevel,
+    pub fma: bool,
+}
+
+impl SimdMode {
+    /// Non-FMA mode at the host's detected level (env-clamped when the
+    /// override is valid; a broken override falls back to detection —
+    /// entry points surface it as a usage error via [`resolve`] first).
+    pub fn detected() -> SimdMode {
+        SimdMode {
+            level: resolve().unwrap_or_else(|_| SimdLevel::detect()),
+            fma: false,
+        }
+    }
+
+    pub fn with_fma(mut self, fma: bool) -> SimdMode {
+        self.fma = fma;
+        self
+    }
+
+    /// Render for plan summaries: `avx2` or `avx2+fma`.
+    pub fn label(&self) -> String {
+        if self.fma {
+            format!("{}+fma", self.level)
+        } else {
+            self.level.to_string()
+        }
+    }
+}
+
+/// The inner-loop contract: fill `labs`/`best`/`second` for the group
+/// of pixels starting at `start` (group width fixed per function; only
+/// the first `group_width` slots are written).
+pub(crate) type GroupFn =
+    fn(&SoaTile, usize, &[f32], usize, &mut [u32; GROUP_MAX], &mut [f32; GROUP_MAX], &mut [f32; GROUP_MAX]);
+
+/// Select the inner loop for `mode` once per scan. Returns the function
+/// and its group width. Levels this host (or this build's architecture)
+/// cannot execute degrade to the portable path — callers that must
+/// *reject* instead go through [`resolve`] first.
+pub(crate) fn group_fn(mode: SimdMode) -> (GroupFn, usize) {
+    let level = if SimdLevel::supported(mode.level) {
+        mode.level
+    } else {
+        SimdLevel::Portable
+    };
+    match (level, mode.fma) {
+        #[cfg(target_arch = "x86_64")]
+        (SimdLevel::Avx512, false) => (x86::avx512_group, GROUP_MAX),
+        #[cfg(target_arch = "x86_64")]
+        (SimdLevel::Avx512, true) => (x86::avx512_fma_group, GROUP_MAX),
+        #[cfg(target_arch = "x86_64")]
+        (SimdLevel::Avx2, false) => (x86::avx2_group, LANES),
+        #[cfg(target_arch = "x86_64")]
+        (SimdLevel::Avx2, true) => {
+            // 256-bit FMA is its own feature bit; an AVX2-without-FMA
+            // host runs the portable mul_add loop (same contraction,
+            // same tolerance contract).
+            if std::arch::is_x86_feature_detected!("fma") {
+                (x86::avx2_fma_group, LANES)
+            } else {
+                (portable_fma_group, LANES)
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        (SimdLevel::Neon, false) => (neon::neon_group, LANES),
+        #[cfg(target_arch = "aarch64")]
+        (SimdLevel::Neon, true) => (neon::neon_fma_group, LANES),
+        (_, false) => (portable_group, LANES),
+        (_, true) => (portable_fma_group, LANES),
+    }
+}
+
+/// Portable tier: delegate to the `Lanes` inner loop itself — one
+/// source of truth for the op order every native variant must mirror.
+fn portable_group(
+    tile: &SoaTile,
+    start: usize,
+    cen: &[f32],
+    k: usize,
+    labs: &mut [u32; GROUP_MAX],
+    best: &mut [f32; GROUP_MAX],
+    second: &mut [f32; GROUP_MAX],
+) {
+    let (l8, b8, s8) = kernel::lane_nearest2(tile, start, cen, k);
+    labs[..LANES].copy_from_slice(&l8);
+    best[..LANES].copy_from_slice(&b8);
+    second[..LANES].copy_from_slice(&s8);
+}
+
+/// Portable FMA tier: `lane_nearest2` with the accumulate contracted to
+/// `mul_add` (one rounding), matching what the native FMA variants do.
+fn portable_fma_group(
+    tile: &SoaTile,
+    start: usize,
+    cen: &[f32],
+    k: usize,
+    labs: &mut [u32; GROUP_MAX],
+    best: &mut [f32; GROUP_MAX],
+    second: &mut [f32; GROUP_MAX],
+) {
+    let ch = tile.channels();
+    labs[..LANES].fill(0);
+    best[..LANES].fill(f32::INFINITY);
+    second[..LANES].fill(f32::INFINITY);
+    for ci in 0..k {
+        let mut d = [0.0f32; LANES];
+        for c in 0..ch {
+            let cv = cen[ci * ch + c];
+            let p = &tile.plane(c)[start..start + LANES];
+            for l in 0..LANES {
+                let t = p[l] - cv;
+                d[l] = t.mul_add(t, d[l]);
+            }
+        }
+        for l in 0..LANES {
+            if d[l] < best[l] {
+                second[l] = best[l];
+                best[l] = d[l];
+                labs[l] = ci as u32;
+            } else if d[l] < second[l] {
+                second[l] = d[l];
+            }
+        }
+    }
+}
+
+/// Emit the strict-`<` argmin/runner-up update for one stored distance
+/// group — shared by every native tier so the comparison order is
+/// written exactly once.
+#[inline]
+fn fold_group<const W: usize>(
+    ci: usize,
+    d: &[f32; W],
+    labs: &mut [u32; GROUP_MAX],
+    best: &mut [f32; GROUP_MAX],
+    second: &mut [f32; GROUP_MAX],
+) {
+    for l in 0..W {
+        if d[l] < best[l] {
+            second[l] = best[l];
+            best[l] = d[l];
+            labs[l] = ci as u32;
+        } else if d[l] < second[l] {
+            second[l] = d[l];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2 / AVX-512 inner loops. Safety: the `unsafe` bodies require
+    //! their target feature, which [`super::group_fn`] verified via
+    //! `is_x86_feature_detected!` before handing out the function; the
+    //! loads stay inside `plane(c)` because planes are padded to a
+    //! [`super::GROUP_MAX`] multiple (an enforced 64-byte-aligned
+    //! invariant of `SoaTile` — see `tile.rs`).
+
+    use super::{fold_group, SoaTile, GROUP_MAX, LANES};
+    use std::arch::x86_64::*;
+
+    pub(super) fn avx2_group(
+        tile: &SoaTile,
+        start: usize,
+        cen: &[f32],
+        k: usize,
+        labs: &mut [u32; GROUP_MAX],
+        best: &mut [f32; GROUP_MAX],
+        second: &mut [f32; GROUP_MAX],
+    ) {
+        unsafe { avx2_group_impl::<false>(tile, start, cen, k, labs, best, second) }
+    }
+
+    pub(super) fn avx2_fma_group(
+        tile: &SoaTile,
+        start: usize,
+        cen: &[f32],
+        k: usize,
+        labs: &mut [u32; GROUP_MAX],
+        best: &mut [f32; GROUP_MAX],
+        second: &mut [f32; GROUP_MAX],
+    ) {
+        unsafe { avx2_fma_group_impl(tile, start, cen, k, labs, best, second) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn avx2_group_impl<const FMA: bool>(
+        tile: &SoaTile,
+        start: usize,
+        cen: &[f32],
+        k: usize,
+        labs: &mut [u32; GROUP_MAX],
+        best: &mut [f32; GROUP_MAX],
+        second: &mut [f32; GROUP_MAX],
+    ) {
+        let ch = tile.channels();
+        labs[..LANES].fill(0);
+        best[..LANES].fill(f32::INFINITY);
+        second[..LANES].fill(f32::INFINITY);
+        for ci in 0..k {
+            let mut d = _mm256_setzero_ps();
+            for c in 0..ch {
+                let p = tile.plane(c);
+                debug_assert!(start + LANES <= p.len());
+                let v = _mm256_loadu_ps(p.as_ptr().add(start));
+                let t = _mm256_sub_ps(v, _mm256_set1_ps(cen[ci * ch + c]));
+                // Mirrors the scalar `d += t * t`: separate multiply
+                // and add, two roundings, bit-identical to `Lanes`.
+                d = _mm256_add_ps(d, _mm256_mul_ps(t, t));
+            }
+            let mut da = [0.0f32; LANES];
+            _mm256_storeu_ps(da.as_mut_ptr(), d);
+            fold_group(ci, &da, labs, best, second);
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn avx2_fma_group_impl(
+        tile: &SoaTile,
+        start: usize,
+        cen: &[f32],
+        k: usize,
+        labs: &mut [u32; GROUP_MAX],
+        best: &mut [f32; GROUP_MAX],
+        second: &mut [f32; GROUP_MAX],
+    ) {
+        let ch = tile.channels();
+        labs[..LANES].fill(0);
+        best[..LANES].fill(f32::INFINITY);
+        second[..LANES].fill(f32::INFINITY);
+        for ci in 0..k {
+            let mut d = _mm256_setzero_ps();
+            for c in 0..ch {
+                let p = tile.plane(c);
+                debug_assert!(start + LANES <= p.len());
+                let v = _mm256_loadu_ps(p.as_ptr().add(start));
+                let t = _mm256_sub_ps(v, _mm256_set1_ps(cen[ci * ch + c]));
+                d = _mm256_fmadd_ps(t, t, d); // one rounding: tolerance-gated
+            }
+            let mut da = [0.0f32; LANES];
+            _mm256_storeu_ps(da.as_mut_ptr(), d);
+            fold_group(ci, &da, labs, best, second);
+        }
+    }
+
+    pub(super) fn avx512_group(
+        tile: &SoaTile,
+        start: usize,
+        cen: &[f32],
+        k: usize,
+        labs: &mut [u32; GROUP_MAX],
+        best: &mut [f32; GROUP_MAX],
+        second: &mut [f32; GROUP_MAX],
+    ) {
+        unsafe { avx512_group_impl(tile, start, cen, k, labs, best, second) }
+    }
+
+    pub(super) fn avx512_fma_group(
+        tile: &SoaTile,
+        start: usize,
+        cen: &[f32],
+        k: usize,
+        labs: &mut [u32; GROUP_MAX],
+        best: &mut [f32; GROUP_MAX],
+        second: &mut [f32; GROUP_MAX],
+    ) {
+        unsafe { avx512_fma_group_impl(tile, start, cen, k, labs, best, second) }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn avx512_group_impl(
+        tile: &SoaTile,
+        start: usize,
+        cen: &[f32],
+        k: usize,
+        labs: &mut [u32; GROUP_MAX],
+        best: &mut [f32; GROUP_MAX],
+        second: &mut [f32; GROUP_MAX],
+    ) {
+        let ch = tile.channels();
+        labs.fill(0);
+        best.fill(f32::INFINITY);
+        second.fill(f32::INFINITY);
+        for ci in 0..k {
+            let mut d = _mm512_setzero_ps();
+            for c in 0..ch {
+                let p = tile.plane(c);
+                debug_assert!(start + GROUP_MAX <= p.len());
+                let v = _mm512_loadu_ps(p.as_ptr().add(start));
+                let t = _mm512_sub_ps(v, _mm512_set1_ps(cen[ci * ch + c]));
+                d = _mm512_add_ps(d, _mm512_mul_ps(t, t));
+            }
+            let mut da = [0.0f32; GROUP_MAX];
+            _mm512_storeu_ps(da.as_mut_ptr(), d);
+            fold_group(ci, &da, labs, best, second);
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn avx512_fma_group_impl(
+        tile: &SoaTile,
+        start: usize,
+        cen: &[f32],
+        k: usize,
+        labs: &mut [u32; GROUP_MAX],
+        best: &mut [f32; GROUP_MAX],
+        second: &mut [f32; GROUP_MAX],
+    ) {
+        let ch = tile.channels();
+        labs.fill(0);
+        best.fill(f32::INFINITY);
+        second.fill(f32::INFINITY);
+        for ci in 0..k {
+            let mut d = _mm512_setzero_ps();
+            for c in 0..ch {
+                let p = tile.plane(c);
+                debug_assert!(start + GROUP_MAX <= p.len());
+                let v = _mm512_loadu_ps(p.as_ptr().add(start));
+                let t = _mm512_sub_ps(v, _mm512_set1_ps(cen[ci * ch + c]));
+                d = _mm512_fmadd_ps(t, t, d);
+            }
+            let mut da = [0.0f32; GROUP_MAX];
+            _mm512_storeu_ps(da.as_mut_ptr(), d);
+            fold_group(ci, &da, labs, best, second);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON inner loops: 8 lanes as two 128-bit halves, per-pixel op
+    //! order identical to the portable path.
+
+    use super::{fold_group, SoaTile, GROUP_MAX, LANES};
+    use std::arch::aarch64::*;
+
+    pub(super) fn neon_group(
+        tile: &SoaTile,
+        start: usize,
+        cen: &[f32],
+        k: usize,
+        labs: &mut [u32; GROUP_MAX],
+        best: &mut [f32; GROUP_MAX],
+        second: &mut [f32; GROUP_MAX],
+    ) {
+        unsafe { neon_group_impl::<false>(tile, start, cen, k, labs, best, second) }
+    }
+
+    pub(super) fn neon_fma_group(
+        tile: &SoaTile,
+        start: usize,
+        cen: &[f32],
+        k: usize,
+        labs: &mut [u32; GROUP_MAX],
+        best: &mut [f32; GROUP_MAX],
+        second: &mut [f32; GROUP_MAX],
+    ) {
+        unsafe { neon_group_impl::<true>(tile, start, cen, k, labs, best, second) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn neon_group_impl<const FMA: bool>(
+        tile: &SoaTile,
+        start: usize,
+        cen: &[f32],
+        k: usize,
+        labs: &mut [u32; GROUP_MAX],
+        best: &mut [f32; GROUP_MAX],
+        second: &mut [f32; GROUP_MAX],
+    ) {
+        let ch = tile.channels();
+        labs[..LANES].fill(0);
+        best[..LANES].fill(f32::INFINITY);
+        second[..LANES].fill(f32::INFINITY);
+        for ci in 0..k {
+            let mut d0 = vdupq_n_f32(0.0);
+            let mut d1 = vdupq_n_f32(0.0);
+            for c in 0..ch {
+                let p = tile.plane(c);
+                debug_assert!(start + LANES <= p.len());
+                let cv = vdupq_n_f32(cen[ci * ch + c]);
+                let v0 = vld1q_f32(p.as_ptr().add(start));
+                let v1 = vld1q_f32(p.as_ptr().add(start + 4));
+                let t0 = vsubq_f32(v0, cv);
+                let t1 = vsubq_f32(v1, cv);
+                if FMA {
+                    d0 = vfmaq_f32(d0, t0, t0);
+                    d1 = vfmaq_f32(d1, t1, t1);
+                } else {
+                    d0 = vaddq_f32(d0, vmulq_f32(t0, t0));
+                    d1 = vaddq_f32(d1, vmulq_f32(t1, t1));
+                }
+            }
+            let mut da = [0.0f32; LANES];
+            vst1q_f32(da.as_mut_ptr(), d0);
+            vst1q_f32(da.as_mut_ptr().add(4), d1);
+            fold_group(ci, &da, labs, best, second);
+        }
+    }
+}
+
+/// Startup microbench: measured simd-over-lanes wall ratio for `mode`
+/// on a small synthetic tile (full-scan step rounds, min-of-3). The
+/// planner's calibration hook (`CostModel::calibrate_simd`) feeds on
+/// this so `--auto` picks Simd only where it is *measured* faster on
+/// the actual host. Deterministic data; a few hundred microseconds.
+pub fn microbench_ratio(mode: SimdMode) -> f64 {
+    use std::time::Instant;
+    let channels = 3;
+    let k = 4;
+    let n = 16 * 1024;
+    let mut rng = crate::util::prng::Rng::new(0x51D_CA_11B);
+    let px: Vec<f32> = (0..n * channels).map(|_| rng.next_f32() * 255.0).collect();
+    let cen: Vec<f32> = (0..k * channels).map(|_| rng.next_f32() * 255.0).collect();
+    let tile = SoaTile::from_interleaved(&px, channels);
+    let mut time = |simd: bool| -> f64 {
+        let mut best = f64::INFINITY;
+        for rep in 0..4 {
+            let mut state = kernel::PrunedState::new();
+            let t = Instant::now();
+            let acc = if simd {
+                kernel::step_simd(&tile, &cen, k, &mut state, None, mode)
+            } else {
+                kernel::step_lanes(&tile, &cen, k, &mut state, None)
+            };
+            let dt = t.elapsed().as_secs_f64();
+            std::hint::black_box(acc.inertia);
+            if rep > 0 {
+                best = best.min(dt); // rep 0 is warmup
+            }
+        }
+        best
+    };
+    let lanes = time(false);
+    let simd = time(true);
+    if lanes > 0.0 && simd.is_finite() {
+        simd / lanes
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tile(n: usize, channels: usize, seed: u64) -> (SoaTile, Vec<f32>) {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let px: Vec<f32> = (0..n * channels).map(|_| rng.next_f32() * 255.0).collect();
+        (SoaTile::from_interleaved(&px, channels), px)
+    }
+
+    #[test]
+    fn level_round_trips_and_orders() {
+        for level in SimdLevel::ALL {
+            assert_eq!(level.label().parse::<SimdLevel>().unwrap(), level);
+        }
+        assert_eq!("off".parse::<SimdLevel>().unwrap(), SimdLevel::Portable);
+        assert!("sse9".parse::<SimdLevel>().is_err());
+        assert!(SimdLevel::Portable < SimdLevel::Avx512);
+    }
+
+    #[test]
+    fn detection_is_supported_and_portable_always_is() {
+        let d = SimdLevel::detect();
+        assert!(SimdLevel::supported(d), "detected level must run: {d}");
+        assert!(SimdLevel::supported(SimdLevel::Portable));
+        assert!(SimdLevel::supported(SimdMode::detected().level));
+    }
+
+    /// Every *supported* level's non-FMA inner loop is bit-identical to
+    /// the portable `lane_nearest2` — the module's core contract,
+    /// checked lane by lane including padded tails.
+    #[test]
+    fn native_groups_match_portable_bitwise() {
+        for channels in [1usize, 3, 4, 5] {
+            for k in [1usize, 2, 4, 8] {
+                let (tile, _) = tile(701, channels, 0xB17 + channels as u64);
+                let mut rng = crate::util::prng::Rng::new(0xCE2 + k as u64);
+                let cen: Vec<f32> =
+                    (0..k * channels).map(|_| rng.next_f32() * 255.0).collect();
+                let (pf, pw) = group_fn(SimdMode::default());
+                for level in SimdLevel::ALL {
+                    if !SimdLevel::supported(level) {
+                        continue;
+                    }
+                    let (f, w) = group_fn(SimdMode { level, fma: false });
+                    let mut start = 0;
+                    while start < tile.pixels() {
+                        let mut a = ([0u32; GROUP_MAX], [0f32; GROUP_MAX], [0f32; GROUP_MAX]);
+                        f(&tile, start, &cen, k, &mut a.0, &mut a.1, &mut a.2);
+                        // cover the same pixels with the portable fn
+                        let mut off = 0;
+                        while off < w {
+                            let mut b =
+                                ([0u32; GROUP_MAX], [0f32; GROUP_MAX], [0f32; GROUP_MAX]);
+                            pf(&tile, start + off, &cen, k, &mut b.0, &mut b.1, &mut b.2);
+                            for l in 0..pw.min(w - off) {
+                                assert_eq!(a.0[off + l], b.0[l], "{level} lab @{}", start + off + l);
+                                assert_eq!(
+                                    a.1[off + l].to_bits(),
+                                    b.1[l].to_bits(),
+                                    "{level} best @{}",
+                                    start + off + l
+                                );
+                                assert_eq!(
+                                    a.2[off + l].to_bits(),
+                                    b.2[l].to_bits(),
+                                    "{level} second @{}",
+                                    start + off + l
+                                );
+                            }
+                            off += pw;
+                        }
+                        start += w;
+                    }
+                }
+            }
+        }
+    }
+
+    /// FMA variants stay within a tight ULP band of the exact variant
+    /// (they round once instead of twice per channel term).
+    #[test]
+    fn fma_groups_stay_within_ulp_band() {
+        let channels = 3;
+        let k = 4;
+        let (tile, _) = tile(256, channels, 0xF3A);
+        let mut rng = crate::util::prng::Rng::new(0xF3B);
+        let cen: Vec<f32> = (0..k * channels).map(|_| rng.next_f32() * 255.0).collect();
+        let (exact, w) = group_fn(SimdMode::default());
+        let (fused, fw) = group_fn(SimdMode::default().with_fma(true));
+        assert_eq!(w, fw);
+        let mut start = 0;
+        while start < tile.pixels() {
+            let mut a = ([0u32; GROUP_MAX], [0f32; GROUP_MAX], [0f32; GROUP_MAX]);
+            let mut b = ([0u32; GROUP_MAX], [0f32; GROUP_MAX], [0f32; GROUP_MAX]);
+            exact(&tile, start, &cen, k, &mut a.0, &mut a.1, &mut a.2);
+            fused(&tile, start, &cen, k, &mut b.0, &mut b.1, &mut b.2);
+            for l in 0..w {
+                let ulps = (a.1[l].to_bits() as i64 - b.1[l].to_bits() as i64).unsigned_abs();
+                assert!(ulps <= 8, "best distance drifted {ulps} ulps at lane {l}");
+            }
+            start += w;
+        }
+    }
+
+    #[test]
+    fn microbench_returns_a_positive_ratio() {
+        let r = microbench_ratio(SimdMode::detected());
+        assert!(r.is_finite() && r > 0.0, "ratio {r}");
+    }
+}

@@ -81,9 +81,15 @@ impl std::str::FromStr for TileLayout {
 ///
 /// All planes share one `Vec<f32>`; `off` skips to the first 64-byte
 /// boundary inside it (found with `align_offset` at construction — no
-/// `unsafe`, no custom allocator). Alignment is a performance property
-/// only: if the allocator ever hands back memory where the offset
-/// cannot be computed, the tile still works, just unaligned.
+/// `unsafe`, no custom allocator). The 64-byte plane alignment and the
+/// whole-cache-line plane stride are an **enforced invariant** (debug-
+/// asserted at construction): the native-SIMD kernels rely on the
+/// stride so that a [`GROUP_MAX`](super::simd::GROUP_MAX)-wide vector
+/// load at any group start inside a plane is in bounds, and on the
+/// alignment for full-speed AVX-512 loads. Correctness does not hinge
+/// on alignment (the kernels use unaligned loads): in the theoretical
+/// case where `align_offset` cannot align, the tile still works, just
+/// slower — only the stride is load-bearing, and that always holds.
 #[derive(Debug)]
 pub struct SoaTile {
     n: usize,
@@ -109,11 +115,24 @@ impl SoaTile {
         let mut buf = vec![0.0f32; padded * channels + LINE_F32];
         // `align_offset` is in units of f32 elements; 64-byte alignment
         // needs at most LINE_F32 - 1 of the over-allocated elements.
-        let off = match buf.as_ptr().align_offset(64) {
-            usize::MAX => 0, // cannot align here: correct, just slower
-            elems => elems,
+        let (off, aligned) = match buf.as_ptr().align_offset(64) {
+            usize::MAX => (0, false), // cannot align here: correct, just slower
+            elems => (elems, true),
         };
         debug_assert!(off < LINE_F32);
+        // Enforced invariants of the plane layout (see the type docs):
+        // whole-cache-line stride always; 64-byte plane starts whenever
+        // the allocation could be aligned (every real target).
+        debug_assert_eq!(padded % LINE_F32, 0, "plane stride must be whole cache lines");
+        if aligned {
+            for c in 0..channels {
+                debug_assert_eq!(
+                    buf[off + c * padded..].as_ptr() as usize % 64,
+                    0,
+                    "plane {c} must start on a 64-byte boundary"
+                );
+            }
+        }
         for (i, px) in pixels.chunks_exact(channels).enumerate() {
             for (c, &v) in px.iter().enumerate() {
                 buf[off + c * padded + i] = v;
@@ -467,6 +486,39 @@ mod tests {
             for c in 0..3 {
                 let addr = tile.plane(c).as_ptr() as usize;
                 assert_eq!(addr % 64, 0, "plane {c} of n={n} misaligned");
+            }
+        }
+    }
+
+    /// The enforced invariant the native-SIMD kernels depend on: every
+    /// plane starts on a 64-byte boundary, the stride is a whole number
+    /// of cache lines, and a GROUP_MAX-wide group load at any group
+    /// start inside the plane stays in bounds — across pixel counts
+    /// straddling every tail-padding case and channel counts 1..=5.
+    #[test]
+    fn plane_layout_supports_full_width_group_loads() {
+        use crate::kmeans::simd::GROUP_MAX;
+        for channels in 1usize..=5 {
+            for n in [1usize, 7, 8, 15, 16, 17, 63, 64, 65, 700] {
+                let tile = SoaTile::from_interleaved(&random_pixels(n, channels, 31), channels);
+                assert_eq!(tile.padded_len() % GROUP_MAX, 0, "n={n} C={channels} stride");
+                for c in 0..channels {
+                    let plane = tile.plane(c);
+                    assert_eq!(
+                        plane.as_ptr() as usize % 64,
+                        0,
+                        "n={n} C={channels} plane {c} misaligned"
+                    );
+                    // every group the scan loop can issue fits
+                    let mut start = 0;
+                    while start < n {
+                        assert!(start + GROUP_MAX <= plane.len(), "n={n} group @{start}");
+                        start += GROUP_MAX;
+                    }
+                    // padding beyond the pixels is zero (computed but
+                    // masked lanes must not poison distances)
+                    assert!(plane[n..].iter().all(|&v| v == 0.0));
+                }
             }
         }
     }

@@ -18,6 +18,9 @@
 //!                   ranked into an elbow report -> BENCH_sweep.json
 //!                   (`--ks 2..8 | 2,4,8`, `--seeds N`, `--inits
 //!                   random,plusplus`; `--quick` for the CI smoke size);
+//! - `simd`          naive/lanes vs the simd kernel at every supported
+//!                   capability level × paper shapes -> BENCH_simd.json
+//!                   (`--quick` for the CI smoke size);
 //! - `layout`        interleaved-vs-SoA × kernel × block-shape matrix ->
 //!                   BENCH_layout.json (`--quick` for the CI smoke size);
 //! - `stream`        streamed-vs-in-memory out-of-core pipeline ->
@@ -82,8 +85,9 @@ use blockms::image::{
     ppm_dims, read_ppm, write_labels_ppm, write_ppm, PpmSource, Raster, RasterSource,
     SyntheticOrtho, SyntheticSource,
 };
+use blockms::kmeans::simd::{self, SimdLevel, SimdMode};
 use blockms::kmeans::tile::TileLayout;
-use blockms::plan::{ExecPlan, Explain, Planner, PlanRequest};
+use blockms::plan::{CostModel, ExecPlan, Explain, Planner, PlanRequest};
 use blockms::resilience::{FaultKind, FaultPlan};
 use blockms::runtime::{find_artifacts_dir, ArtifactSet};
 use blockms::service::{ClusterServer, JobSpec, JobStatus, ServerConfig};
@@ -112,6 +116,7 @@ fn main() {
         "cases" => cmd_cases(&args),
         "sweep" => cmd_sweep(&args),
         "kernels" => cmd_kernels(&args),
+        "simd" => cmd_simd(&args),
         "layout" => cmd_layout(&args),
         "stream" => cmd_stream(&args),
         "batch" => cmd_batch(&args),
@@ -151,6 +156,36 @@ fn positive(v: usize, flag: &str) -> Result<usize> {
     } else {
         Ok(v)
     }
+}
+
+/// Resolve the run's SIMD mode: hardware detection clamped by the
+/// `BLOCKMS_SIMD` override, plus the `--fma` opt-in. Asking for a level
+/// this host lacks (or a level the env var cannot name) is a usage
+/// error, exit 2.
+fn simd_of(args: &Args) -> Result<SimdMode> {
+    let level = simd::resolve().map_err(|e| {
+        anyhow::Error::new(CliError::BadEnv(
+            simd::SIMD_ENV.to_string(),
+            std::env::var(simd::SIMD_ENV).unwrap_or_default(),
+            e.to_string(),
+        ))
+    })?;
+    Ok(SimdMode {
+        level,
+        fma: args.flag("fma"),
+    })
+}
+
+/// Planner for a stamped request. When the kernel axis is live and a
+/// native SIMD level was detected, replace that level's prior with a
+/// measured simd-over-lanes ratio (a few-ms microbench) so `--auto`
+/// picks Simd only where it is actually faster on this host.
+fn planner_for(req: &PlanRequest) -> Planner {
+    let mut model = CostModel::default();
+    if req.kernel.is_none() && req.simd.level != SimdLevel::Portable {
+        model.calibrate_simd(req.simd.level, simd::microbench_ratio(req.simd));
+    }
+    Planner::new(model)
 }
 
 fn engine_of(opts: &Opts) -> Result<Engine> {
@@ -285,6 +320,10 @@ fn plan_request(
     } else {
         Some(false)
     };
+    // SIMD capability is a fact of the host, never a search axis: the
+    // env-clamped detected level (and the --fma opt-in) ride on every
+    // candidate, and the cost model prices the Simd kernel at it.
+    req = req.with_simd(simd_of(args)?);
     // Fault-tolerance knobs are carried-through, never search axes
     // (retries change availability, not values) — so they ride on every
     // candidate regardless of --auto. Defaults are 0 = off.
@@ -372,7 +411,7 @@ fn resolve_exec(
     channels: usize,
 ) -> Result<(ExecPlan, Explain)> {
     let req = plan_request(opts, args, auto, height, width, channels)?;
-    let (exec, explain) = Planner::default().resolve(&req);
+    let (exec, explain) = planner_for(&req).resolve(&req);
     Ok((exec, explain))
 }
 
@@ -651,7 +690,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     if req.strip_rows.is_none() && (args.flag("quick") || args.get("out").is_some()) {
         req = req.with_strip_rows(Some(if args.flag("quick") { 16 } else { 64 }));
     }
-    let (exec, explain) = Planner::default().resolve(&req);
+    let (exec, explain) = planner_for(&req).resolve(&req);
     let top = if args.flag("verbose") {
         explain.candidates.len()
     } else {
@@ -843,6 +882,37 @@ fn cmd_kernels(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// SIMD-layer benchmark: naive/lanes anchors vs the simd kernel at
+/// every supported capability level, over the paper's three shapes,
+/// written to `BENCH_simd.json` (see EXPERIMENTS.md §SIMD for the
+/// schema). `--quick` runs the CI smoke size.
+fn cmd_simd(args: &Args) -> Result<()> {
+    use blockms::bench::simd::{render_simd_bench, write_simd_bench, SimdBenchOpts};
+    let opts = Opts::load(args)?;
+    let base = if args.flag("quick") {
+        SimdBenchOpts::quick()
+    } else {
+        let scale: f64 = opts.require("scale", "bench.scale")?;
+        let side = ((1024.0 * scale).round() as usize).max(32);
+        SimdBenchOpts {
+            height: side,
+            width: side,
+            iters: opts.require("bench-iters", "bench.iters")?,
+            ..Default::default()
+        }
+    };
+    let bopts = SimdBenchOpts {
+        seed: opts.require("seed", "workload.seed")?,
+        workers: positive(opts.require("workers", "run.workers")?, "workers")?,
+        ..base
+    };
+    let out = args.get("out").unwrap_or("BENCH_simd.json").to_string();
+    let rows = write_simd_bench(Path::new(&out), &bopts)?;
+    print!("{}", render_simd_bench(&bopts, &rows));
+    println!("wrote {out}");
+    Ok(())
+}
+
 /// Layout-layer benchmark: interleaved-vs-SoA × {naive, pruned, lanes}
 /// × the paper's three block shapes through a strip store, written to
 /// `BENCH_layout.json` (see EXPERIMENTS.md §Layout for the schema).
@@ -989,7 +1059,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut req = plan_request(&opts, args, auto, height, width, channels)?;
     // The shared pool's width is explicit here; the plan must agree.
     req.workers = Some(workers);
-    let (exec, explain) = Planner::default().resolve(&req);
+    let (exec, explain) = planner_for(&req).resolve(&req);
     println!("plan: {}", exec.summary());
     if auto {
         println!("planner: {}", explain.rationale());

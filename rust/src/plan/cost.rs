@@ -34,6 +34,7 @@ use anyhow::{Context, Result};
 
 use crate::blocks::BlockPlan;
 use crate::kmeans::kernel::KernelChoice;
+use crate::kmeans::simd::SimdLevel;
 use crate::kmeans::tile::TileLayout;
 use crate::util::json::Json;
 
@@ -49,6 +50,55 @@ pub const CALIB_KS: [usize; 3] = [2, 4, 8];
 /// fused shares pruned's step rounds and saves most of one full-scan
 /// labeling pass out of `iters + 1`.
 const FUSED_OVER_PRUNED: f64 = 0.96;
+
+/// Per-[`SimdLevel`] simd-over-lanes wall ratios. Like fused, the Simd
+/// kernel has no committed calibration row of its own: it shares the
+/// lanes floor scaled by the ratio of its dispatched level. The defaults
+/// are conservative priors for the distance kernel (wider vectors help
+/// until memory bandwidth does not); the startup microbench
+/// ([`CostModel::calibrate_simd`]) replaces the dispatched level's
+/// entry with a *measured* ratio, so `--auto` picks Simd only where it
+/// is measured faster on the actual host. Portable is exactly 1.0 by
+/// construction — it runs the identical lanes inner loop — which makes
+/// un-stamped plans tie (and lose, by enumeration order) against Lanes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimdScale {
+    pub avx512: f64,
+    pub avx2: f64,
+    pub neon: f64,
+    pub portable: f64,
+}
+
+impl Default for SimdScale {
+    fn default() -> Self {
+        SimdScale {
+            avx512: 0.58,
+            avx2: 0.72,
+            neon: 0.82,
+            portable: 1.0,
+        }
+    }
+}
+
+impl SimdScale {
+    pub fn get(&self, level: SimdLevel) -> f64 {
+        match level {
+            SimdLevel::Avx512 => self.avx512,
+            SimdLevel::Avx2 => self.avx2,
+            SimdLevel::Neon => self.neon,
+            SimdLevel::Portable => self.portable,
+        }
+    }
+
+    pub fn set(&mut self, level: SimdLevel, ratio: f64) {
+        match level {
+            SimdLevel::Avx512 => self.avx512 = ratio,
+            SimdLevel::Avx2 => self.avx2 = ratio,
+            SimdLevel::Neon => self.neon = ratio,
+            SimdLevel::Portable => self.portable = ratio,
+        }
+    }
+}
 
 /// Workload geometry the model predicts against — everything about the
 /// run that is *not* an execution-strategy choice.
@@ -151,13 +201,22 @@ pub struct CostModel {
     /// Largest relative prediction error vs the calibration matrix —
     /// the model's stated honesty bound (see module docs).
     pub error_bound: f64,
+    /// The SIMD capability level this model prices the Simd kernel at.
+    /// The planner stamps the run's resolved level here before
+    /// enumerating candidates; the library default (Portable) keeps
+    /// predictions architecture-independent.
+    pub simd_level: SimdLevel,
+    /// Per-level simd-over-lanes ratios (see [`SimdScale`]).
+    pub simd_scale: SimdScale,
 }
 
-/// Fused reuses the pruned floor (no committed fused row) — scaled at
-/// lookup time, so refinement of pruned flows through.
+/// Fused reuses the pruned floor and Simd the lanes floor (neither has
+/// a committed row of its own) — scaled at lookup time, so refinement
+/// of the underlying series flows through.
 fn prior_key(kernel: KernelChoice, layout: TileLayout) -> (KernelChoice, TileLayout) {
     let k = match kernel {
         KernelChoice::Fused => KernelChoice::Pruned,
+        KernelChoice::Simd => KernelChoice::Lanes,
         other => other,
     };
     (k, layout)
@@ -194,6 +253,8 @@ impl CostModel {
             priors,
             decode_ns_per_byte: 0.07848,
             error_bound: 0.5611,
+            simd_level: SimdLevel::default(),
+            simd_scale: SimdScale::default(),
         }
     }
 
@@ -279,6 +340,8 @@ impl CostModel {
             priors,
             decode_ns_per_byte,
             error_bound: 0.0,
+            simd_level: SimdLevel::default(),
+            simd_scale: SimdScale::default(),
         };
         // Stated bound = worst self-prediction over the matrix, floored
         // at 10% so a tiny matrix cannot claim implausible precision.
@@ -311,7 +374,18 @@ impl CostModel {
         let base = interp(series, k);
         match kernel {
             KernelChoice::Fused => base * FUSED_OVER_PRUNED,
+            KernelChoice::Simd => base * self.simd_scale.get(self.simd_level),
             _ => base,
+        }
+    }
+
+    /// Feed the startup microbench's measured simd-over-lanes wall
+    /// ratio for a level into the model. Clamped to a sane band so one
+    /// noisy measurement can neither zero the Simd floor nor banish the
+    /// kernel entirely; non-finite or non-positive ratios are ignored.
+    pub fn calibrate_simd(&mut self, level: SimdLevel, measured_ratio: f64) {
+        if measured_ratio.is_finite() && measured_ratio > 0.0 {
+            self.simd_scale.set(level, measured_ratio.clamp(0.25, 4.0));
         }
     }
 
@@ -332,8 +406,10 @@ impl CostModel {
             .min_by_key(|(ck, _)| ck.abs_diff(k))
             .expect("prior series is non-empty");
         let observed = match kernel {
-            // Store fused observations back in pruned-floor units.
+            // Store fused observations back in pruned-floor units (and
+            // simd observations in lanes units, at the current level).
             KernelChoice::Fused => observed / FUSED_OVER_PRUNED,
+            KernelChoice::Simd => observed / self.simd_scale.get(self.simd_level),
             _ => observed,
         };
         nearest.1 = 0.5 * nearest.1 + 0.5 * observed;
@@ -433,8 +509,8 @@ impl CostModel {
         if layout == TileLayout::Soa {
             let arena = (workers * ((arena_mb as u64) << 20)).min(image * 5 / 4);
             total += arena;
-        } else if kernel == KernelChoice::Lanes {
-            // Transient padded tile per worker when lanes read
+        } else if matches!(kernel, KernelChoice::Lanes | KernelChoice::Simd) {
+            // Transient padded tile per worker when lanes/simd read
             // interleaved blocks.
             total += workers * (block_bytes * 5 / 4);
         }
@@ -651,6 +727,56 @@ mod tests {
             let fused = m.compute_ns_px_pass(KernelChoice::Fused, TileLayout::Interleaved, k);
             assert!((fused - pruned * 0.96).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn simd_floor_tracks_lanes_at_the_stamped_level() {
+        let mut m = CostModel::baked();
+        for (level, scale) in [
+            (SimdLevel::Portable, 1.0),
+            (SimdLevel::Neon, 0.82),
+            (SimdLevel::Avx2, 0.72),
+            (SimdLevel::Avx512, 0.58),
+        ] {
+            m.simd_level = level;
+            for k in [2, 4, 8] {
+                let lanes = m.compute_ns_px_pass(KernelChoice::Lanes, TileLayout::Soa, k);
+                let simd = m.compute_ns_px_pass(KernelChoice::Simd, TileLayout::Soa, k);
+                assert!((simd - lanes * scale).abs() < 1e-9, "{level:?} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_calibration_clamps_and_rejects_junk() {
+        let mut m = CostModel::baked();
+        m.calibrate_simd(SimdLevel::Avx2, 0.65);
+        assert!((m.simd_scale.get(SimdLevel::Avx2) - 0.65).abs() < 1e-12);
+        // Outliers clamp to the sane band instead of poisoning the model.
+        m.calibrate_simd(SimdLevel::Avx2, 0.01);
+        assert!((m.simd_scale.get(SimdLevel::Avx2) - 0.25).abs() < 1e-12);
+        m.calibrate_simd(SimdLevel::Avx2, 99.0);
+        assert!((m.simd_scale.get(SimdLevel::Avx2) - 4.0).abs() < 1e-12);
+        // Junk measurements are ignored outright.
+        m.calibrate_simd(SimdLevel::Avx2, f64::NAN);
+        m.calibrate_simd(SimdLevel::Avx2, -1.0);
+        m.calibrate_simd(SimdLevel::Avx2, 0.0);
+        assert!((m.simd_scale.get(SimdLevel::Avx2) - 4.0).abs() < 1e-12);
+        // Other levels are untouched.
+        assert!((m.simd_scale.get(SimdLevel::Portable) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn refine_stores_simd_observations_in_lanes_units() {
+        let mut m = CostModel::baked();
+        m.simd_level = SimdLevel::Avx2;
+        let before = m.compute_ns_px_pass(KernelChoice::Lanes, TileLayout::Soa, 4);
+        // Observe simd running exactly at its predicted floor: the
+        // shared lanes series must not move.
+        let predicted = m.compute_ns_px_pass(KernelChoice::Simd, TileLayout::Soa, 4);
+        m.refine(KernelChoice::Simd, TileLayout::Soa, 4, predicted);
+        let after = m.compute_ns_px_pass(KernelChoice::Lanes, TileLayout::Soa, 4);
+        assert!((after - before).abs() < 1e-9);
     }
 
     #[test]

@@ -146,7 +146,7 @@ impl Explain {
                 },
                 c.plan.shape.to_string(),
                 format!("{}x{}", c.grid.0, c.grid.1),
-                c.plan.kernel.to_string(),
+                c.plan.kernel_label(),
                 c.plan.layout.to_string(),
                 c.plan.strip_cache.to_string(),
                 if c.plan.prefetch { "y" } else { "-" }.to_string(),

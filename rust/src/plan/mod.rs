@@ -39,6 +39,7 @@ pub use explain::{Candidate, Explain};
 
 use crate::blocks::{ApproachKind, BlockPlan, BlockShape};
 use crate::kmeans::kernel::KernelChoice;
+use crate::kmeans::simd::SimdMode;
 use crate::kmeans::tile::TileLayout;
 
 /// Worker count the planner assumes when nothing pins it.
@@ -105,6 +106,14 @@ pub struct ExecPlan {
     /// [`crate::resilience`]). Carried-through only: speculation costs
     /// duplicate compute, never values.
     pub speculate: bool,
+    /// The SIMD dispatch decision for [`KernelChoice::Simd`]: capability
+    /// level (host-detected once per run, `BLOCKMS_SIMD`-clamped) plus
+    /// the opt-in FMA flag. Carried-through — the planner reads the
+    /// level for its per-level cost floor but never searches over it
+    /// (the host dictates it). Ignored by every other kernel. The
+    /// library default is the portable mode so plans built in tests are
+    /// architecture-independent; entry points stamp the detected mode.
+    pub simd: SimdMode,
 }
 
 impl Default for ExecPlan {
@@ -136,6 +145,7 @@ impl ExecPlan {
             deadline_ms: 0,
             priority: 0,
             speculate: false,
+            simd: SimdMode::default(),
         }
     }
 
@@ -220,6 +230,23 @@ impl ExecPlan {
         self
     }
 
+    /// Pin the SIMD dispatch mode (level + FMA) the Simd kernel runs at.
+    pub fn with_simd(mut self, simd: SimdMode) -> ExecPlan {
+        self.simd = simd;
+        self
+    }
+
+    /// The kernel cell for human renderings: plain kernel names, with
+    /// the Simd kernel carrying its dispatched level — `simd[avx2]`,
+    /// `simd[avx512+fma]` — so predicted-vs-actual reports say which
+    /// code path actually executed.
+    pub fn kernel_label(&self) -> String {
+        match self.kernel {
+            KernelChoice::Simd => format!("simd[{}]", self.simd.label()),
+            k => k.to_string(),
+        }
+    }
+
     /// Per-worker arena budget in bytes.
     pub fn arena_bytes(&self) -> usize {
         self.arena_mb << 20
@@ -247,7 +274,10 @@ impl ExecPlan {
     pub fn summary(&self) -> String {
         let mut s = format!(
             "{} · {} · {} · {}w",
-            self.shape, self.kernel, self.layout, self.workers
+            self.shape,
+            self.kernel_label(),
+            self.layout,
+            self.workers
         );
         if self.strip_cache > 0 {
             s.push_str(&format!(" · cache {}", self.strip_cache));
@@ -321,6 +351,13 @@ pub struct PlanRequest {
     pub priority: Option<usize>,
     /// Straggler speculation flag to carry onto the plan (`None` = off).
     pub speculate: Option<bool>,
+    /// SIMD dispatch mode carried onto every candidate plan — a plain
+    /// field, not a pin: the host's capability is a fact of the run,
+    /// never a search axis. The default (portable, no FMA) keeps
+    /// requests architecture-independent; entry points stamp the
+    /// detected, env-clamped mode via [`PlanRequest::with_simd`], and
+    /// the planner prices the Simd kernel at this level.
+    pub simd: SimdMode,
 }
 
 impl PlanRequest {
@@ -365,6 +402,7 @@ impl PlanRequest {
         self.deadline_ms = (plan.deadline_ms > 0).then_some(plan.deadline_ms);
         self.priority = (plan.priority > 0).then_some(plan.priority);
         self.speculate = plan.speculate.then_some(true);
+        self.simd = plan.simd;
         self
     }
 
@@ -412,6 +450,13 @@ impl PlanRequest {
     /// Carry the straggler-speculation flag onto every candidate plan.
     pub fn with_speculate(mut self, speculate: bool) -> PlanRequest {
         self.speculate = speculate.then_some(true);
+        self
+    }
+
+    /// Carry the resolved SIMD dispatch mode onto every candidate plan
+    /// (and into the cost model's per-level Simd floor).
+    pub fn with_simd(mut self, simd: SimdMode) -> PlanRequest {
+        self.simd = simd;
         self
     }
 
@@ -519,6 +564,11 @@ impl Planner {
             .arena_mb
             .unwrap_or_else(|| self.auto_arena_mb(&w, workers, req.mem_mb));
         let mem_budget = req.mem_mb.map(|m| (m as u64) << 20);
+        // Price the Simd kernel at the run's dispatched level (portable
+        // scale = 1.0 ties Lanes, so an un-stamped request never
+        // prefers Simd over the portable code it would degrade to).
+        let mut model = self.model.clone();
+        model.simd_level = req.simd.level;
 
         let mut out = Vec::new();
         for &shape in &shapes {
@@ -528,7 +578,7 @@ impl Planner {
                     for &strip_cache in &caches {
                         for &prefetch in &prefetches {
                             for &file_backed in &backings {
-                                let cost = self.model.predict(
+                                let cost = model.predict(
                                     &w,
                                     &plan,
                                     kernel,
@@ -537,7 +587,7 @@ impl Planner {
                                     strip_cache,
                                     prefetch,
                                 );
-                                let resident_bytes = self.model.resident_bytes(
+                                let resident_bytes = model.resident_bytes(
                                     &w,
                                     &plan,
                                     kernel,
@@ -566,6 +616,7 @@ impl Planner {
                                         deadline_ms: req.deadline_ms.unwrap_or(0),
                                         priority: req.priority.unwrap_or(0),
                                         speculate: req.speculate.unwrap_or(false),
+                                        simd: req.simd,
                                     },
                                     blocks: plan.len(),
                                     grid: plan.grid_dims(),
@@ -664,12 +715,31 @@ mod tests {
     #[test]
     fn auto_explores_the_full_grid() {
         let (plan, explain) = Planner::default().resolve(&req());
-        // 3 shapes x 4 kernels x 2 layouts x 2 caches x 2 prefetch
-        assert_eq!(explain.candidates.len(), 96);
-        // the model's lanes floors dominate: auto must not pick naive
+        // 3 shapes x 5 kernels x 2 layouts x 2 caches x 2 prefetch
+        assert_eq!(explain.candidates.len(), 120);
+        // the model's lanes floors dominate: auto must not pick naive.
+        // (The request is un-stamped, so Simd prices at the portable
+        // scale of 1.0 — a tie Lanes wins by enumeration order.)
         assert_eq!(plan.kernel, KernelChoice::Lanes);
         // picked plan is the explain's chosen row
         assert_eq!(explain.chosen().plan, plan);
+    }
+
+    #[test]
+    fn auto_picks_simd_when_the_stamped_level_beats_lanes() {
+        use crate::kmeans::simd::{SimdLevel, SimdMode};
+        // A native level with a sub-1.0 measured scale must win the
+        // argmin; portable (scale 1.0) must leave Lanes the winner.
+        let r = req().with_simd(SimdMode {
+            level: SimdLevel::Avx2,
+            fma: false,
+        });
+        let (plan, explain) = Planner::default().resolve(&r);
+        assert_eq!(plan.kernel, KernelChoice::Simd, "{}", plan.summary());
+        assert_eq!(plan.simd.level, SimdLevel::Avx2);
+        assert_eq!(plan.layout, TileLayout::Soa);
+        assert!(explain.candidates.iter().all(|c| c.plan.simd.level == SimdLevel::Avx2));
+        assert!(plan.summary().contains("simd[avx2]"), "{}", plan.summary());
     }
 
     #[test]
@@ -716,6 +786,8 @@ mod tests {
         assert!(explain.candidates.iter().all(|c| c.plan.kernel == KernelChoice::Naive));
         // 3 shapes x 1 kernel x 2 layouts x 2 caches x 1 prefetch
         assert_eq!(explain.candidates.len(), 12);
+        // the portable default mode rides along un-searched
+        assert_eq!(plan.simd, SimdMode::default());
     }
 
     #[test]
@@ -725,8 +797,8 @@ mod tests {
         let (plan, explain) = planner.resolve(&r);
         assert_eq!(plan.strip_cache, 0);
         assert!(!plan.prefetch);
-        // 3 shapes x 4 kernels x 2 layouts
-        assert_eq!(explain.candidates.len(), 24);
+        // 3 shapes x 5 kernels x 2 layouts
+        assert_eq!(explain.candidates.len(), 30);
     }
 
     #[test]

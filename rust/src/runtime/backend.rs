@@ -17,6 +17,7 @@ use super::KernelEngine;
 use super::manifest::ArtifactSet;
 use crate::kmeans::kernel::{self, CentroidDrift, PrunedState};
 use crate::kmeans::math::{self, StepAccum};
+use crate::kmeans::simd::SimdMode;
 use crate::kmeans::tile::SoaTile;
 
 /// What the coordinator needs from a compute engine, per block.
@@ -97,6 +98,44 @@ pub trait ComputeBackend {
         labels: &mut Vec<u32>,
     ) -> Result<f64> {
         let _ = drift;
+        state.clear();
+        let mut buf = Vec::new();
+        tile.to_interleaved(&mut buf);
+        self.assign_block(&buf, centroids, labels)
+    }
+
+    /// One Lloyd accumulation pass of the native-SIMD kernel at the
+    /// plan's dispatched [`SimdMode`]. Contract and default mirror
+    /// [`ComputeBackend::step_block_lanes`]: engines without a SIMD path
+    /// rematerialize and stay correct.
+    fn step_block_simd(
+        &mut self,
+        tile: &SoaTile,
+        centroids: &[f32],
+        state: &mut PrunedState,
+        drift: Option<&CentroidDrift>,
+        mode: SimdMode,
+    ) -> Result<StepAccum> {
+        let _ = (drift, mode);
+        state.clear();
+        let mut buf = Vec::new();
+        tile.to_interleaved(&mut buf);
+        self.step_block(&buf, centroids)
+    }
+
+    /// Final assignment of the native-SIMD kernel; must label exactly
+    /// like [`ComputeBackend::assign_block`] when `mode.fma` is off.
+    /// Default: rematerialize and full-scan.
+    fn assign_block_simd(
+        &mut self,
+        tile: &SoaTile,
+        centroids: &[f32],
+        state: &mut PrunedState,
+        drift: Option<&CentroidDrift>,
+        labels: &mut Vec<u32>,
+        mode: SimdMode,
+    ) -> Result<f64> {
+        let _ = (drift, mode);
         state.clear();
         let mut buf = Vec::new();
         tile.to_interleaved(&mut buf);
@@ -261,6 +300,31 @@ impl ComputeBackend for NativeBackend {
         ))
     }
 
+    fn step_block_simd(
+        &mut self,
+        tile: &SoaTile,
+        centroids: &[f32],
+        state: &mut PrunedState,
+        drift: Option<&CentroidDrift>,
+        mode: SimdMode,
+    ) -> Result<StepAccum> {
+        Ok(kernel::step_simd(tile, centroids, self.k, state, drift, mode))
+    }
+
+    fn assign_block_simd(
+        &mut self,
+        tile: &SoaTile,
+        centroids: &[f32],
+        state: &mut PrunedState,
+        drift: Option<&CentroidDrift>,
+        labels: &mut Vec<u32>,
+        mode: SimdMode,
+    ) -> Result<f64> {
+        Ok(kernel::assign_simd(
+            tile, centroids, self.k, state, drift, labels, mode,
+        ))
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
@@ -408,6 +472,35 @@ mod tests {
     }
 
     #[test]
+    fn native_simd_rounds_equal_naive_rounds() {
+        use crate::kmeans::kernel::{drift_between, PrunedState};
+        let mut be = NativeBackend::new(4, 3, 1);
+        let px = pixels(800, 71);
+        let tile = SoaTile::from_interleaved(&px, 3);
+        let mut cen = pixels(4, 72);
+        let mode = SimdMode::detected();
+        let mut state = PrunedState::new();
+        let mut drift = None;
+        for _ in 0..5 {
+            let want = be.step_block(&px, &cen).unwrap();
+            let got = be
+                .step_block_simd(&tile, &cen, &mut state, drift.as_ref(), mode)
+                .unwrap();
+            assert_eq!(got, want);
+            let prev = cen.clone();
+            math::update_centroids(&want, &mut cen, 0.0);
+            drift = Some(drift_between(&prev, &cen, 4, 3));
+        }
+        let (mut la, mut lb) = (Vec::new(), Vec::new());
+        let ia = be
+            .assign_block_simd(&tile, &cen, &mut state, drift.as_ref(), &mut la, mode)
+            .unwrap();
+        let ib = be.assign_block(&px, &cen, &mut lb).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(ia, ib);
+    }
+
+    #[test]
     fn default_lanes_fallback_rematerializes_exactly() {
         // A backend that only implements the required methods must still
         // satisfy the lanes contract through the default rematerialize
@@ -452,6 +545,18 @@ mod tests {
         let mut want = Vec::new();
         assert_eq!(inertia, math::assign_all(&px, &cen, 2, 3, &mut want));
         assert_eq!(labels, want);
+        // and the simd defaults satisfy the same contract
+        let acc = be
+            .step_block_simd(&tile, &cen, &mut state, None, SimdMode::detected())
+            .unwrap();
+        assert_eq!(acc, math::step(&px, &cen, 2, 3));
+        assert!(!state.ready(), "simd fallback must invalidate bounds");
+        let mut sl = Vec::new();
+        let si = be
+            .assign_block_simd(&tile, &cen, &mut state, None, &mut sl, SimdMode::detected())
+            .unwrap();
+        assert_eq!(sl, want);
+        assert_eq!(si, inertia);
     }
 
     #[test]

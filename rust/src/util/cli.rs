@@ -47,6 +47,8 @@ pub enum CliError {
     MissingValue(String),
     #[error("invalid value for --{0}: {1:?} ({2})")]
     BadValue(String, String, String),
+    #[error("invalid environment {0}={1:?} ({2})")]
+    BadEnv(String, String, String),
     #[error("unknown subcommand {0:?} (see --help)")]
     UnknownSubcommand(String),
     #[error("missing required option --{0}")]

@@ -1,9 +1,12 @@
 //! Property tests for the kernel layer's headline guarantee: the pruned,
-//! fused, and lane-vectorized (SoA) kernels produce **bit-identical**
-//! labels, centroids, and counts to the naive kernel — across random
-//! images, `k ∈ {1, 2, 4, 8}`, channel widths covering every dispatch
-//! path (and every lane-tail residue), and the paper's three block
-//! shapes through the real coordinator under both schedules.
+//! fused, lane-vectorized (SoA), and native-SIMD kernels produce
+//! **bit-identical** labels, centroids, and counts to the naive kernel —
+//! across random images, `k ∈ {1, 2, 4, 8}`, channel widths covering
+//! every dispatch path (and every lane-tail residue), every supported
+//! `SimdLevel` including the `Portable` fallback, and the paper's three
+//! block shapes through the real coordinator under both schedules.
+//! (The opt-in `--fma` mode is *not* bit-identical by design — its
+//! tolerance contract lives in `tests/simd_tolerance.rs`.)
 
 use std::sync::Arc;
 
@@ -58,7 +61,12 @@ fn prop_seq_kernels_bit_identical() {
         };
         // convergence-driven drive
         let naive = SeqKMeans::run_with(&px, *channels, &cfg, KernelChoice::Naive);
-        for kc in [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes] {
+        for kc in [
+            KernelChoice::Pruned,
+            KernelChoice::Fused,
+            KernelChoice::Lanes,
+            KernelChoice::Simd,
+        ] {
             let other = SeqKMeans::run_with(&px, *channels, &cfg, kc);
             if other.labels != naive.labels
                 || other.centroids != naive.centroids
@@ -71,7 +79,12 @@ fn prop_seq_kernels_bit_identical() {
         }
         // fixed-iteration drive (the bench mirror)
         let naive = SeqKMeans::run_fixed_iters_with(&px, *channels, &cfg, 5, KernelChoice::Naive);
-        for kc in [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes] {
+        for kc in [
+            KernelChoice::Pruned,
+            KernelChoice::Fused,
+            KernelChoice::Lanes,
+            KernelChoice::Simd,
+        ] {
             let other = SeqKMeans::run_fixed_iters_with(&px, *channels, &cfg, 5, kc);
             if other.labels != naive.labels || other.centroids != naive.centroids {
                 return false;
@@ -148,6 +161,57 @@ fn prop_lanes_step_accum_bit_identical_across_rounds() {
     });
 }
 
+/// The simd kernel's SoA rounds mirror the interleaved pruned rounds bit
+/// for bit at every capability level this host can execute — the
+/// `Portable` fallback (the library default the coordinator tests run
+/// at) and whatever native level detection resolves to.
+#[test]
+fn prop_simd_step_accum_bit_identical_at_every_level() {
+    use blockms::kmeans::tile::SoaTile;
+    use blockms::kmeans::{SimdLevel, SimdMode};
+    let mut modes = vec![SimdMode::default()];
+    let detected = SimdMode {
+        level: SimdLevel::detect(),
+        fma: false,
+    };
+    if detected.level != SimdLevel::Portable {
+        modes.push(detected);
+    }
+    for mode in modes {
+        let gen = pair(PixelGen, choice_of(&KS));
+        forall(206, 60, &gen, |((n, channels, seed), k)| {
+            let px = pixels(*n, *channels, *seed);
+            let tile = SoaTile::from_interleaved(&px, *channels);
+            let mut cen = pixels(*k, *channels, seed.wrapping_mul(41) + 13);
+            let mut state = PrunedState::new();
+            let mut drift = None;
+            for _ in 0..6 {
+                let want = math::step(&px, &cen, *k, *channels);
+                let got = kernel::step_simd(&tile, &cen, *k, &mut state, drift.as_ref(), mode);
+                if got != want {
+                    return false;
+                }
+                let prev = cen.clone();
+                math::update_centroids(&want, &mut cen, 0.0);
+                drift = Some(kernel::drift_between(&prev, &cen, *k, *channels));
+            }
+            let mut simd_labels = Vec::new();
+            let simd_inertia = kernel::assign_simd(
+                &tile,
+                &cen,
+                *k,
+                &mut state,
+                drift.as_ref(),
+                &mut simd_labels,
+                mode,
+            );
+            let mut naive_labels = Vec::new();
+            let naive_inertia = math::assign_all(&px, &cen, *k, *channels, &mut naive_labels);
+            simd_labels == naive_labels && simd_inertia == naive_inertia
+        });
+    }
+}
+
 /// The paper's three block shapes, random sizes, random worker counts:
 /// the coordinator must produce bit-identical output under every kernel
 /// and both schedules (dynamic scheduling migrates blocks between
@@ -185,7 +249,12 @@ fn prop_coordinator_kernels_identical_across_paper_shapes() {
             })
             .cluster(&img, &ccfg)
             .unwrap();
-            for kernel in [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes] {
+            for kernel in [
+                KernelChoice::Pruned,
+                KernelChoice::Fused,
+                KernelChoice::Lanes,
+                KernelChoice::Simd,
+            ] {
                 for schedule in [Schedule::Static, Schedule::Dynamic] {
                     let out = Coordinator::new(CoordinatorConfig {
                         exec: ExecPlan::pinned(shape)
@@ -229,11 +298,16 @@ fn prop_kernels_identical_under_distance_ties() {
             ..Default::default()
         };
         let naive = SeqKMeans::run_with(&px, 3, &cfg, KernelChoice::Naive);
-        [KernelChoice::Pruned, KernelChoice::Fused, KernelChoice::Lanes]
-            .into_iter()
-            .all(|kc| {
-                let r = SeqKMeans::run_with(&px, 3, &cfg, kc);
-                r.labels == naive.labels && r.centroids == naive.centroids
-            })
+        [
+            KernelChoice::Pruned,
+            KernelChoice::Fused,
+            KernelChoice::Lanes,
+            KernelChoice::Simd,
+        ]
+        .into_iter()
+        .all(|kc| {
+            let r = SeqKMeans::run_with(&px, 3, &cfg, kc);
+            r.labels == naive.labels && r.centroids == naive.centroids
+        })
     });
 }

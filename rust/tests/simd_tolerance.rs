@@ -1,0 +1,193 @@
+//! Tolerance-gated equivalence harness for the opt-in `--fma` SIMD mode.
+//!
+//! Fused multiply-add contracts `t * t + acc` into one rounding, so an
+//! FMA run is deliberately **not** bit-identical to the lanes/naive
+//! reference — that exactness contract belongs to the non-FMA modes and
+//! is enforced in `tests/kernel_equivalence.rs`. What FMA must satisfy
+//! instead (EXPERIMENTS.md §SIMD, the contract the ROADMAP requires for
+//! any future non-bit-exact backend):
+//!
+//! - **centroids** within a small ULP band of the reference, per
+//!   component;
+//! - **inertia** within a small relative band;
+//! - **labels** exactly equal *except* pixels whose two nearest centres
+//!   are within the FMA rounding band — the only pixels whose argmin may
+//!   legitimately flip — and every flip must land on a centre whose
+//!   distance ties the reference winner within that band.
+
+use blockms::kmeans::kernel::KernelChoice;
+use blockms::kmeans::{KMeansConfig, SeqKMeans, SimdLevel, SimdMode};
+use blockms::util::prng::Rng;
+
+/// Max units-in-last-place between two f32s (∞ for sign disagreement on
+/// non-zero values).
+fn ulp_diff(a: f32, b: f32) -> u32 {
+    if a == b {
+        return 0;
+    }
+    if a.is_nan() || b.is_nan() || (a.signum() != b.signum() && a != 0.0 && b != 0.0) {
+        return u32::MAX;
+    }
+    let (ia, ib) = (a.abs().to_bits(), b.abs().to_bits());
+    ia.abs_diff(ib)
+}
+
+/// Per-component centroid ULP bound. Each component is a `sum / count`
+/// of ≤ ~1k addends whose per-pixel rounding differs by at most one ULP
+/// under contraction; the quotient stays within a few ULPs.
+const CENTROID_ULPS: u32 = 16;
+/// Relative inertia bound: one contraction per pixel-distance, summed
+/// in f64 — relative error stays far below this.
+const INERTIA_REL: f64 = 1e-5;
+/// Distance slack for legitimate label flips: the two candidate centres
+/// must tie within this relative band for FMA to be allowed to disagree.
+const TIE_REL: f32 = 1e-5;
+
+fn pixels(n: usize, channels: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * channels).map(|_| rng.next_f32() * 255.0).collect()
+}
+
+/// Squared distance of pixel `p` to centroid `c`, in the reference
+/// (non-fused) op order.
+fn dist2(px: &[f32], channels: usize, p: usize, cen: &[f32], c: usize) -> f32 {
+    let mut acc = 0.0f32;
+    for ch in 0..channels {
+        let t = px[p * channels + ch] - cen[c * channels + ch];
+        acc += t * t;
+    }
+    acc
+}
+
+/// Assert the FMA tolerance contract between a reference result and an
+/// FMA result of the same drive.
+fn assert_within_tolerance(
+    px: &[f32],
+    channels: usize,
+    k: usize,
+    reference: &blockms::kmeans::KMeansResult,
+    fma: &blockms::kmeans::KMeansResult,
+) {
+    assert_eq!(reference.iterations, fma.iterations, "iteration drift");
+    for (i, (&a, &b)) in reference.centroids.iter().zip(&fma.centroids).enumerate() {
+        assert!(
+            ulp_diff(a, b) <= CENTROID_ULPS,
+            "centroid component {i}: {a} vs {b} ({} ulps)",
+            ulp_diff(a, b)
+        );
+    }
+    let rel = (reference.inertia - fma.inertia).abs() / reference.inertia.max(1e-30);
+    assert!(
+        rel <= INERTIA_REL,
+        "inertia {} vs {} (rel {rel})",
+        reference.inertia,
+        fma.inertia
+    );
+    let mut flips = 0usize;
+    for (p, (&la, &lb)) in reference.labels.iter().zip(&fma.labels).enumerate() {
+        if la == lb {
+            continue;
+        }
+        flips += 1;
+        // A flip is only legitimate on a near-exact distance tie —
+        // measured against the *reference* centroids so the bound does
+        // not launder real divergence through drifted centres.
+        let da = dist2(px, channels, p, &reference.centroids, la as usize);
+        let db = dist2(px, channels, p, &reference.centroids, lb as usize);
+        let scale = da.max(db).max(f32::MIN_POSITIVE);
+        assert!(
+            (da - db).abs() <= TIE_REL * scale,
+            "pixel {p}: flipped {la}->{lb} without a tie ({da} vs {db}, k={k})"
+        );
+    }
+    // Ties are rare on continuous random data: a blowup here means the
+    // FMA path diverged, not that it rounded differently.
+    assert!(
+        flips * 100 <= reference.labels.len(),
+        "{flips}/{} labels flipped — more than the 1% tie budget",
+        reference.labels.len()
+    );
+}
+
+#[test]
+fn fma_mode_stays_within_the_tolerance_contract() {
+    let level = SimdLevel::detect();
+    for &(n, channels) in &[(700usize, 3usize), (257, 1), (513, 4), (301, 5)] {
+        for &k in &[2usize, 4, 8] {
+            let px = pixels(n, channels, (n * k) as u64 + 0xF0A);
+            let cfg = KMeansConfig {
+                k,
+                seed: 0x5EED ^ (k as u64),
+                ..Default::default()
+            };
+            let reference =
+                SeqKMeans::run_fixed_iters_with(&px, channels, &cfg, 6, KernelChoice::Lanes);
+            let fma = SeqKMeans::run_fixed_iters_with_simd(
+                &px,
+                channels,
+                &cfg,
+                6,
+                KernelChoice::Simd,
+                SimdMode { level, fma: true },
+            );
+            assert_within_tolerance(&px, channels, k, &reference, &fma);
+        }
+    }
+}
+
+/// The portable FMA path (what non-x86 hosts without NEON run, and what
+/// `BLOCKMS_SIMD=off --fma` clamps to) obeys the same contract.
+#[test]
+fn portable_fma_obeys_the_same_contract() {
+    let px = pixels(640, 3, 0xDEC0DE);
+    let cfg = KMeansConfig {
+        k: 4,
+        seed: 0xBEEF,
+        ..Default::default()
+    };
+    let reference = SeqKMeans::run_fixed_iters_with(&px, 3, &cfg, 5, KernelChoice::Lanes);
+    let fma = SeqKMeans::run_fixed_iters_with_simd(
+        &px,
+        3,
+        &cfg,
+        5,
+        KernelChoice::Simd,
+        SimdMode {
+            level: SimdLevel::Portable,
+            fma: true,
+        },
+    );
+    assert_within_tolerance(&px, 3, 4, &reference, &fma);
+}
+
+/// Sanity anchor for the harness itself: a *non*-FMA simd run measured
+/// with the same machinery reports zero ULP difference everywhere — the
+/// tolerance harness agrees with the bit-identity tests where they
+/// overlap.
+#[test]
+fn non_fma_measures_as_exactly_zero_distance() {
+    let px = pixels(512, 3, 0xA11CE);
+    let cfg = KMeansConfig {
+        k: 4,
+        seed: 0x7E57,
+        ..Default::default()
+    };
+    let reference = SeqKMeans::run_fixed_iters_with(&px, 3, &cfg, 5, KernelChoice::Lanes);
+    let simd = SeqKMeans::run_fixed_iters_with_simd(
+        &px,
+        3,
+        &cfg,
+        5,
+        KernelChoice::Simd,
+        SimdMode {
+            level: SimdLevel::detect(),
+            fma: false,
+        },
+    );
+    assert_eq!(reference.labels, simd.labels);
+    assert_eq!(reference.centroids, simd.centroids);
+    assert!(reference.inertia.to_bits() == simd.inertia.to_bits());
+    for (&a, &b) in reference.centroids.iter().zip(&simd.centroids) {
+        assert_eq!(ulp_diff(a, b), 0);
+    }
+}
