@@ -1,0 +1,259 @@
+#!/usr/bin/env python3
+"""Numpy mirror of `blockms distributed` for containers without cargo.
+
+Generates BENCH_distributed.json with the exact schema of the rust
+bench (EXPERIMENTS.md §Distributed). Three kinds of numbers:
+
+- `matches_solo` is *computed*, not assumed: the sharded twin computes
+  every block's f64 partial sums/counts/inertia shard-by-shard (shard-
+  major execution order) and the "leader" merges the outcomes in block
+  order — the same deterministic reduction the rust leader runs — then
+  every round's merged accumulators, the updated centroid bits, the
+  final labels, and the inertia bits are compared against a solo twin
+  that accumulates in block order as it computes. A divergence aborts.
+- Walls are *measured-then-modeled*: the single-lane wall is measured
+  on the same numpy lanes/SoA kernel mirror the layout model uses
+  (best of `samples` after one warmup), then scaled by the cost
+  model's lane-saturation law (ideal 1/W clamped to the block count,
+  barrier imbalance ceil(B/W)·W/B) and, for sharded rows, the wire
+  term (closed-form bytes x `wire_ns_per_byte`) is added unscaled —
+  numpy has no process fan-out to measure, so the model states the
+  planner's law rather than inventing a measurement, hence
+  `"source": "python-model"`. Regenerate with `blockms distributed`
+  where cargo exists.
+- `wire_bytes` and `model_wire_bytes` are both the closed form
+  (`rust/src/plan/cost.rs::sharded_wire_bytes`, re-derived below):
+  with no real transport there is nothing to count, and the rust bench
+  proves measured == closed form; the schema gate holds the equality
+  either way.
+"""
+
+import json
+import math
+import sys
+
+import numpy as np
+
+import bench_layout_model as L
+
+C = 3
+KS = [2, 4, 8]
+SHARD_COUNTS = [1, 2, 4]
+CONNS_PER_SHARD = 2
+ITERS = 4
+SAMPLES = 2
+SEED = 0xD15781
+GRID = 4  # the bench's 4x4 square block grid
+
+# Mirrors rust plan/cost.rs: the baked lanes/SoA compute floors
+# (ns/px/pass at the calibration ks, REF_WORKERS=4) and the wire rate.
+LANES_SOA_FLOOR = {2: 27.301, 4: 54.629, 8: 74.319}
+REF_WORKERS = 4
+WIRE_NS_PER_BYTE = 0.15
+
+# Frame-layout constants, mirrored from rust/src/shard/wire.rs.
+WIRE_FRAME_HEADER = 20
+WIRE_REGISTER_FIXED = WIRE_FRAME_HEADER + 8 + 118
+WIRE_BLOCK_FIXED = WIRE_FRAME_HEADER + 34
+WIRE_RESULT_FIXED = WIRE_FRAME_HEADER + 64
+WIRE_PING = WIRE_FRAME_HEADER + 8
+
+
+def sharded_wire_bytes(h, w, c, k, rounds, blocks, conns):
+    """(down, up) — rust plan/cost.rs::sharded_wire_bytes verbatim."""
+    image_bytes = 4 * h * w * c
+    centroids = 4 * k * c
+    drift = 8 * k + 8
+    block_frames = blocks * (rounds + 1)
+    down = (
+        conns * (WIRE_REGISTER_FIXED + image_bytes + WIRE_PING)
+        + block_frames * (WIRE_BLOCK_FIXED + centroids)
+        + blocks * rounds * drift
+        + conns * WIRE_FRAME_HEADER
+    )
+    up = (
+        conns * (WIRE_FRAME_HEADER + WIRE_PING)
+        + blocks * rounds * (WIRE_RESULT_FIXED + 8 * k + 8 * k * c)
+        + blocks * WIRE_RESULT_FIXED
+        + 4 * h * w
+    )
+    return down, up
+
+
+def lane_scale(lanes, blocks):
+    """Wall multiplier vs one lane: ideal 1/W clamped to the block
+    count, corrected by per-round barrier imbalance (cost.rs law)."""
+    eff = max(1, min(lanes, blocks))
+    imbalance = math.ceil(blocks / eff) * eff / blocks
+    return imbalance / eff
+
+
+def model_wall(k, n_px, blocks, lanes, wire_bytes):
+    """CostModel::predict_sharded for this bench's direct-I/O lanes/SoA
+    cell: prior floor x lane scaling (relative to REF_WORKERS), zero
+    excess decode, plus the unscaled wire term."""
+    passes = ITERS + 1
+    scale = lane_scale(lanes, blocks) / lane_scale(REF_WORKERS, blocks)
+    compute = n_px * passes * LANES_SOA_FLOOR[k] * scale / 1e9
+    return compute + wire_bytes * WIRE_NS_PER_BYTE / 1e9
+
+
+def block_tiles(img, plan):
+    """SoA tile per block (what the lanes kernel consumes)."""
+    tiles = []
+    for r0, c0, rows, cols in plan:
+        block = img[r0 : r0 + rows, c0 : c0 + cols].reshape(-1, C)
+        tiles.append(np.ascontiguousarray(block.T))
+    return tiles
+
+
+def block_outcome(tiles, bi, cen, k, state, drift):
+    """One block's job outcome: (labels, f64 sums, counts, inertia) —
+    a pure function of the round's shipped centroids (+ carried
+    per-block bounds), computed identically on any worker."""
+    labels, d2 = L.step_block("lanes", tiles[bi], cen, k, state, drift)
+    sums, counts = L.accum(tiles[bi].T.astype(np.float64), labels, k)
+    return labels, sums, counts, float(d2.astype(np.float64).sum())
+
+
+def advance(cen, sums, counts):
+    """Centroid update + the drift vector run_cell ships next round."""
+    new = L.update_centroids(cen, sums, counts)
+    per = np.sqrt(
+        ((new.astype(np.float64) - cen.astype(np.float64)) ** 2).sum(axis=1)
+    ) * (1 + 1e-12)
+    return new, (per, per.max() if len(per) else 0.0)
+
+
+def sharded_twin_matches(img, plan, k, init_cen, shards):
+    """Drive a solo twin (compute + merge in block order) and a sharded
+    twin (blocks computed shard-major, outcomes merged in block order)
+    in lockstep; True iff every round's accumulators, centroid bits,
+    and the final labels + inertia bits agree exactly."""
+    blocks = len(plan)
+    owner = [bi % shards for bi in range(blocks)]
+    tiles = block_tiles(img, plan)
+    cen_a, cen_b = init_cen.copy(), init_cen.copy()
+    st_a = [L.BlockState() for _ in plan]
+    st_b = [L.BlockState() for _ in plan]
+    drift_a = drift_b = None
+    for rnd in range(ITERS + 1):
+        # Solo: accumulate as it computes, block order.
+        sums_a = np.zeros((k, C), dtype=np.float64)
+        counts_a = np.zeros(k, dtype=np.int64)
+        inertia_a = 0.0
+        labels_a = []
+        for bi in range(blocks):
+            labels, s, c, inert = block_outcome(tiles, bi, cen_a, k, st_a[bi], drift_a)
+            sums_a += s
+            counts_a += c
+            inertia_a += inert
+            labels_a.append(labels)
+        # Sharded: every shard computes its own blocks (shard-major
+        # order — arrival order in the real system is arbitrary), then
+        # the leader reduces the outcomes in block order.
+        outcomes = {}
+        for shard in range(shards):
+            for bi in (b for b in range(blocks) if owner[b] == shard):
+                outcomes[bi] = block_outcome(tiles, bi, cen_b, k, st_b[bi], drift_b)
+        sums_b = np.zeros((k, C), dtype=np.float64)
+        counts_b = np.zeros(k, dtype=np.int64)
+        inertia_b = 0.0
+        labels_b = []
+        for bi in range(blocks):
+            labels, s, c, inert = outcomes[bi]
+            sums_b += s
+            counts_b += c
+            inertia_b += inert
+            labels_b.append(labels)
+        if not (
+            np.array_equal(sums_a.view(np.uint64), sums_b.view(np.uint64))
+            and np.array_equal(counts_a, counts_b)
+            and np.float64(inertia_a).view(np.uint64) == np.float64(inertia_b).view(np.uint64)
+        ):
+            return False
+        if rnd < ITERS:
+            cen_a, drift_a = advance(cen_a, sums_a, counts_a)
+            cen_b, drift_b = advance(cen_b, sums_b, counts_b)
+            if not np.array_equal(cen_a.view(np.uint32), cen_b.view(np.uint32)):
+                return False
+        else:
+            if not np.array_equal(np.concatenate(labels_a), np.concatenate(labels_b)):
+                return False
+    return True
+
+
+def main():
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_distributed.json"
+    h, w = L.H, L.W
+    n_px = h * w
+    passes = ITERS + 1
+    side = math.ceil(h / GRID)
+    plan = L.block_plan(side, side)
+    blocks = len(plan)
+    rng = np.random.default_rng(SEED)
+    img = L.synthetic_scene(rng)
+    flat = img.reshape(-1, C)
+    cases = []
+    for k in KS:
+        init_cen = flat[rng.choice(len(flat), size=k, replace=False)].copy()
+        # Measured single-lane wall on the same kernel mirror.
+        t1 = math.inf
+        for sample in range(SAMPLES + 1):
+            _labels, wall = L.run_cell(img, plan, "soa", "lanes", k, init_cen)
+            if sample > 0:
+                t1 = min(t1, wall)
+        solo_wall = t1 * lane_scale(CONNS_PER_SHARD, blocks)
+        for shards in [0] + SHARD_COUNTS:
+            if shards == 0:
+                wall, wire, matches = solo_wall, 0, True
+                model = model_wall(k, n_px, blocks, CONNS_PER_SHARD, 0)
+            else:
+                lanes = shards * CONNS_PER_SHARD
+                down, up = sharded_wire_bytes(h, w, C, k, ITERS, blocks, lanes)
+                wire = down + up
+                wall = t1 * lane_scale(lanes, blocks) + wire * WIRE_NS_PER_BYTE / 1e9
+                model = model_wall(k, n_px, blocks, lanes, wire)
+                matches = sharded_twin_matches(img, plan, k, init_cen, shards)
+                if not matches:
+                    raise SystemExit(f"sharded merge diverged from solo: {shards} shards k={k}")
+            cases.append(
+                {
+                    "shards": shards,
+                    "k": k,
+                    "wall_secs": round(wall, 6),
+                    "ns_per_pixel_round": round(wall * 1e9 / (n_px * passes), 4),
+                    "speedup_vs_solo": round(solo_wall / wall, 4),
+                    "matches_solo": matches,
+                    "wire_bytes": wire,
+                    "model_wire_bytes": wire,
+                    "model_wall_secs": round(model, 6),
+                }
+            )
+            name = "solo" if shards == 0 else f"{shards} shards"
+            print(
+                f"k={k} {name:>8}  {cases[-1]['wall_secs']:>9.4f} s"
+                f"  x{cases[-1]['speedup_vs_solo']:.2f} vs solo"
+                f"  {wire:>12} wire bytes",
+                flush=True,
+            )
+    doc = {
+        "image": [h, w],
+        "channels": C,
+        "iters": ITERS,
+        "samples": SAMPLES,
+        "seed": SEED,
+        "conns_per_shard": CONNS_PER_SHARD,
+        "blocks": blocks,
+        "wire_ns_per_byte": WIRE_NS_PER_BYTE,
+        "source": "python-model",
+        "cases": cases,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path} ({len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

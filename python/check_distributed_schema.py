@@ -1,0 +1,192 @@
+#!/usr/bin/env python3
+"""Schema check for BENCH_distributed.json (CI smoke + committed file).
+
+Usage: check_distributed_schema.py <path> [--full]
+
+Validates the document the rust `blockms distributed` bench and
+`bench_distributed_model.py` both emit (EXPERIMENTS.md §Distributed):
+
+- `matches_solo` must be true on **every** row — a fast distributed
+  run that diverged from solo is a broken merge, not a result;
+- `wire_bytes` and `model_wire_bytes` on every sharded row must equal
+  the bytes-per-round closed form re-derived here from the document's
+  own geometry (the planner prices exactly what moves);
+- within each k, `model_wall_secs` must be monotone non-increasing
+  from one shard through the modeled sweet spot (the argmin over the
+  shard rows), and the measured wall must track it with 1.25x slack
+  plus a 5 ms absolute guard (quick-geometry runs are spawn-noise
+  dominated).
+
+With --full, also requires the acceptance matrix — 1024x1024,
+k in {2,4,8}, shards {0,1,2,4} — and `speedup_vs_solo >= 1.0` at each
+k's modeled sweet spot: distribution must actually pay where the model
+says it does.
+"""
+
+import json
+import sys
+
+META_NUM = [
+    "channels",
+    "iters",
+    "samples",
+    "seed",
+    "conns_per_shard",
+    "blocks",
+    "wire_ns_per_byte",
+]
+CASE_NUM = [
+    "shards",
+    "k",
+    "wall_secs",
+    "ns_per_pixel_round",
+    "speedup_vs_solo",
+    "wire_bytes",
+    "model_wire_bytes",
+    "model_wall_secs",
+]
+
+# Frame-layout constants, mirrored from rust/src/shard/wire.rs.
+WIRE_FRAME_HEADER = 20
+WIRE_REGISTER_FIXED = WIRE_FRAME_HEADER + 8 + 118
+WIRE_BLOCK_FIXED = WIRE_FRAME_HEADER + 34
+WIRE_RESULT_FIXED = WIRE_FRAME_HEADER + 64
+WIRE_PING = WIRE_FRAME_HEADER + 8
+
+WALL_SLACK = 1.25
+WALL_EPS = 0.005
+
+
+def sharded_wire_bytes(h, w, c, k, rounds, blocks, conns):
+    """down + up — rust plan/cost.rs::sharded_wire_bytes verbatim."""
+    image_bytes = 4 * h * w * c
+    centroids = 4 * k * c
+    drift = 8 * k + 8
+    block_frames = blocks * (rounds + 1)
+    down = (
+        conns * (WIRE_REGISTER_FIXED + image_bytes + WIRE_PING)
+        + block_frames * (WIRE_BLOCK_FIXED + centroids)
+        + blocks * rounds * drift
+        + conns * WIRE_FRAME_HEADER
+    )
+    up = (
+        conns * (WIRE_FRAME_HEADER + WIRE_PING)
+        + blocks * rounds * (WIRE_RESULT_FIXED + 8 * k + 8 * k * c)
+        + blocks * WIRE_RESULT_FIXED
+        + 4 * h * w
+    )
+    return down + up
+
+
+def fail(msg):
+    print(f"BENCH_distributed.json schema check FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    full = "--full" in sys.argv
+    path = args[0] if args else "BENCH_distributed.json"
+    with open(path) as f:
+        doc = json.load(f)
+
+    for key in META_NUM:
+        if not isinstance(doc.get(key), (int, float)):
+            fail(f"meta field {key!r} missing or non-numeric")
+    img = doc.get("image")
+    if not (isinstance(img, list) and len(img) == 2):
+        fail("image must be [height, width]")
+    if doc.get("source") not in ("rust", "python-model"):
+        fail(f"unknown source {doc.get('source')!r}")
+    h, w = img
+    c = doc["channels"]
+    iters = doc["iters"]
+    blocks = doc["blocks"]
+    conns = doc["conns_per_shard"]
+
+    cases = doc.get("cases")
+    if not isinstance(cases, list) or not cases:
+        fail("cases missing or empty")
+    by_k = {}
+    for i, case in enumerate(cases):
+        for key in CASE_NUM:
+            if not isinstance(case.get(key), (int, float)):
+                fail(f"case {i}: field {key!r} missing or non-numeric")
+        if case.get("matches_solo") is not True:
+            fail(
+                f"case {i} (shards={case['shards']}, k={case['k']}): "
+                "matches_solo != true — the distributed merge diverged from solo"
+            )
+        by_k.setdefault(case["k"], []).append((i, case))
+
+    for k, rows in sorted(by_k.items()):
+        if rows[0][1]["shards"] != 0:
+            fail(f"k={k}: first row must be the solo anchor (shards=0)")
+        i0, solo = rows[0]
+        if solo["wire_bytes"] != 0 or solo["model_wire_bytes"] != 0:
+            fail(f"case {i0}: solo row must report zero wire bytes")
+        if abs(solo["speedup_vs_solo"] - 1.0) > 1e-6:
+            fail(f"case {i0}: solo anchor must carry speedup 1.0")
+        shard_rows = rows[1:]
+        if not shard_rows:
+            fail(f"k={k}: no sharded rows")
+        prev_shards = 0
+        for i, case in shard_rows:
+            shards = case["shards"]
+            if shards <= prev_shards:
+                fail(f"case {i}: shard counts must be ascending within k={k}")
+            prev_shards = shards
+            want = sharded_wire_bytes(h, w, c, k, iters, blocks, shards * conns)
+            if case["wire_bytes"] != want:
+                fail(
+                    f"case {i} ({shards} shards, k={k}): wire_bytes "
+                    f"{case['wire_bytes']} != closed form {want}"
+                )
+            if case["model_wire_bytes"] != want:
+                fail(
+                    f"case {i} ({shards} shards, k={k}): model_wire_bytes "
+                    f"{case['model_wire_bytes']} != closed form {want}"
+                )
+        # Monotone non-increasing through the modeled sweet spot: the
+        # model must not claim a dip it immediately takes back, and the
+        # measured wall must track the model's descent (with slack —
+        # quick-geometry walls are spawn-noise dominated).
+        walls = [case["wall_secs"] for _i, case in shard_rows]
+        model = [case["model_wall_secs"] for _i, case in shard_rows]
+        sweet = model.index(min(model))
+        for j in range(sweet):
+            if model[j + 1] > model[j] * (1 + 1e-9):
+                fail(
+                    f"k={k}: model_wall_secs rises before the sweet spot "
+                    f"({model[j]:.6f} -> {model[j + 1]:.6f} at "
+                    f"{shard_rows[j + 1][1]['shards']} shards)"
+                )
+            if walls[j + 1] > walls[j] * WALL_SLACK + WALL_EPS:
+                fail(
+                    f"k={k}: measured wall rises before the modeled sweet spot "
+                    f"({walls[j]:.6f} -> {walls[j + 1]:.6f} at "
+                    f"{shard_rows[j + 1][1]['shards']} shards)"
+                )
+        if full and shard_rows[sweet][1]["speedup_vs_solo"] < 1.0:
+            fail(
+                f"k={k}: modeled sweet spot ({shard_rows[sweet][1]['shards']} "
+                f"shards) is slower than solo "
+                f"(speedup {shard_rows[sweet][1]['speedup_vs_solo']})"
+            )
+
+    if full:
+        if img != [1024, 1024]:
+            fail(f"--full requires a 1024x1024 image, got {img}")
+        if sorted(by_k) != [2, 4, 8]:
+            fail(f"--full requires k in {{2,4,8}}, got {sorted(by_k)}")
+        for k, rows in by_k.items():
+            counts = [case["shards"] for _i, case in rows]
+            if counts != [0, 1, 2, 4]:
+                fail(f"--full requires shards [0,1,2,4] per k, k={k} has {counts}")
+
+    ks = ",".join(str(k) for k in sorted(by_k))
+    print(f"{path}: schema OK ({len(cases)} cases, k={{{ks}}}, source={doc['source']})")
+
+
+if __name__ == "__main__":
+    main()

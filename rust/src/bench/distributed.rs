@@ -1,0 +1,396 @@
+//! Distributed-scaling benchmark: the same workload solo and over
+//! loopback shard processes at increasing shard counts, with the
+//! machine-readable `BENCH_distributed.json` trail that
+//! `check_distributed_schema.py` gates in CI (EXPERIMENTS.md
+//! §Distributed).
+//!
+//! Every sharded cell is a full leader/shard run over the real wire
+//! protocol (framing, registration, fingerprint checks, byte
+//! accounting) — only the sockets are replaced by in-process loopback
+//! channels, so the rows measure protocol cost without network noise.
+//! Three properties are checked per row and recorded in the document:
+//!
+//! - `matches_solo` — labels, centroid bits, inertia bits, and
+//!   iteration count identical to the solo twin (the tentpole
+//!   bit-identity claim, also proven across the kernel × layout ×
+//!   backing matrix in `tests/shard_equivalence.rs`);
+//! - `wire_bytes` — measured bytes on the wire, which must equal the
+//!   closed form [`sharded_wire_bytes`] the planner prices;
+//! - `model_wall_secs` — the cost model's predicted wall, so the
+//!   schema gate can hold the measured scaling curve against the
+//!   modeled sweet spot.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::blocks::{BlockPlan, BlockShape};
+use crate::coordinator::{ClusterConfig, ClusterOutput, Coordinator, CoordinatorConfig, Schedule};
+use crate::image::SyntheticOrtho;
+use crate::kmeans::kernel::KernelChoice;
+use crate::kmeans::tile::TileLayout;
+use crate::plan::{sharded_wire_bytes, CostModel, ExecPlan, Workload};
+use crate::shard::{wire_stats, ShardEndpoints};
+use crate::util::fmt::Table;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Benchmark shape. Defaults are the acceptance configuration:
+/// 1024×1024 3-band scene, k ∈ {2, 4, 8}, shard counts 1/2/4 against
+/// the solo anchor, two connections per shard.
+#[derive(Clone, Debug)]
+pub struct DistributedBenchOpts {
+    pub height: usize,
+    pub width: usize,
+    pub ks: Vec<usize>,
+    /// Shard counts to sweep (the solo anchor row is always run).
+    pub shard_counts: Vec<usize>,
+    /// Leader connections per shard (= blocks pipelined per shard).
+    pub conns_per_shard: usize,
+    /// Fixed Lloyd iterations per run (plus one labeling pass).
+    pub iters: usize,
+    /// Timed repetitions per cell (best reported; one warmup first).
+    pub samples: usize,
+    pub seed: u64,
+}
+
+impl Default for DistributedBenchOpts {
+    fn default() -> Self {
+        DistributedBenchOpts {
+            height: 1024,
+            width: 1024,
+            ks: vec![2, 4, 8],
+            shard_counts: vec![1, 2, 4],
+            conns_per_shard: 2,
+            iters: 4,
+            samples: 2,
+            seed: 0xD1_57_81,
+        }
+    }
+}
+
+impl DistributedBenchOpts {
+    /// CI smoke configuration: small image, one k, one sample — fast
+    /// enough for a workflow step, same schema as the full matrix.
+    pub fn quick() -> DistributedBenchOpts {
+        DistributedBenchOpts {
+            height: 96,
+            width: 96,
+            ks: vec![2],
+            shard_counts: vec![1, 2],
+            iters: 3,
+            samples: 1,
+            ..Default::default()
+        }
+    }
+
+    /// The block grid every cell runs: a 4×4 square grid, so even the
+    /// widest shard sweep has blocks to balance (the paper's ~5-block
+    /// default would starve 4 shards × 2 connections).
+    pub fn shape(&self) -> BlockShape {
+        BlockShape::Square {
+            side: self.height.div_ceil(4).max(1),
+        }
+    }
+
+    fn workload(&self, k: usize) -> Workload {
+        Workload {
+            height: self.height,
+            width: self.width,
+            channels: 3,
+            k,
+            rounds: self.iters,
+            strip_rows: None,
+        }
+    }
+}
+
+/// One benchmark cell: this workload at `shards` shard processes
+/// (`0` = the solo in-process anchor).
+#[derive(Clone, Debug)]
+pub struct DistributedBenchRow {
+    pub shards: usize,
+    pub k: usize,
+    /// Best-sample wall seconds of the whole coordinated run.
+    pub wall_secs: f64,
+    /// Nanoseconds per pixel per pass (`iters` steps + 1 labeling).
+    pub ns_per_pixel_round: f64,
+    /// Solo wall over this cell's wall; 1.0 on the solo row.
+    pub speedup_vs_solo: f64,
+    /// Labels, centroid bits, inertia bits, and iterations identical
+    /// to the solo twin.
+    pub matches_solo: bool,
+    /// Measured bytes moved on the wire (one run; both directions).
+    pub wire_bytes: u64,
+    /// The planner's closed-form byte count for the same run.
+    pub model_wire_bytes: u64,
+    /// The cost model's predicted wall for this cell.
+    pub model_wall_secs: f64,
+}
+
+/// Bit-exact comparison of two runs: labels, centroid **bits**,
+/// inertia **bits**, and the iteration count. Centroids compare as
+/// `f32` bit patterns — an "equal within epsilon" match would hide a
+/// broken merge order.
+fn identical(a: &ClusterOutput, b: &ClusterOutput) -> bool {
+    a.labels == b.labels
+        && a.iterations == b.iterations
+        && a.centroids.len() == b.centroids.len()
+        && a.centroids
+            .iter()
+            .zip(&b.centroids)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.inertia.to_bits() == b.inertia.to_bits()
+}
+
+fn coordinator(opts: &DistributedBenchOpts, shards: usize) -> Coordinator {
+    let exec = ExecPlan::pinned(opts.shape())
+        .with_workers(opts.conns_per_shard)
+        .with_kernel(KernelChoice::Lanes)
+        .with_layout(TileLayout::Soa);
+    let coord = Coordinator::new(CoordinatorConfig {
+        exec,
+        schedule: Schedule::Dynamic,
+        ..Default::default()
+    });
+    if shards > 0 {
+        coord.with_shards(ShardEndpoints::Loopback { shards })
+    } else {
+        coord
+    }
+}
+
+/// Run the full matrix: for each k, the solo anchor then every shard
+/// count, bit-compared against the anchor and byte-checked against the
+/// closed form.
+pub fn run_distributed_bench(opts: &DistributedBenchOpts) -> Result<Vec<DistributedBenchRow>> {
+    let img = Arc::new(
+        SyntheticOrtho::default()
+            .with_seed(opts.seed)
+            .generate(opts.height, opts.width),
+    );
+    let n_pixels = (opts.height * opts.width) as f64;
+    let passes = (opts.iters + 1) as f64;
+    let model = CostModel::baked();
+    let plan = BlockPlan::new(opts.height, opts.width, opts.shape());
+    let mut rows = Vec::new();
+    for &k in &opts.ks {
+        let ccfg = ClusterConfig {
+            k,
+            fixed_iters: Some(opts.iters),
+            seed: opts.seed ^ 0xC0FFEE,
+            ..Default::default()
+        };
+        let w = opts.workload(k);
+        let mut solo_out: Option<ClusterOutput> = None;
+        let mut solo_wall = f64::NAN;
+        for shards in std::iter::once(0).chain(opts.shard_counts.iter().copied()) {
+            let coord = coordinator(opts, shards);
+            let mut best = f64::INFINITY;
+            let mut result = None;
+            let mut wire = 0u64;
+            for sample in 0..opts.samples.max(1) + 1 {
+                let (sent0, _) = wire_stats();
+                let t0 = Instant::now();
+                let out = coord.cluster(&img, &ccfg)?;
+                let dt = t0.elapsed().as_secs_f64();
+                let (sent1, _) = wire_stats();
+                if sample > 0 {
+                    best = best.min(dt); // sample 0 is warmup
+                }
+                // Every byte is sent exactly once (down by the leader,
+                // up by the shards), so the sent delta is the run's
+                // total traffic.
+                wire = sent1 - sent0;
+                result = Some(out);
+            }
+            let out = result.expect("at least one sample ran");
+            let matches_solo = match &solo_out {
+                None => true, // the anchor row is its own reference
+                Some(anchor) => identical(anchor, &out),
+            };
+            let lanes = shards * opts.conns_per_shard;
+            let (down, up) = if shards > 0 {
+                sharded_wire_bytes(&w, plan.len(), lanes)
+            } else {
+                (0, 0)
+            };
+            let cost = model.predict_sharded(
+                &w,
+                &plan,
+                KernelChoice::Lanes,
+                TileLayout::Soa,
+                opts.conns_per_shard,
+                0,
+                false,
+                shards,
+            );
+            if shards == 0 {
+                solo_wall = best;
+                solo_out = Some(out);
+            }
+            rows.push(DistributedBenchRow {
+                shards,
+                k,
+                wall_secs: best,
+                ns_per_pixel_round: best * 1e9 / (n_pixels * passes),
+                speedup_vs_solo: solo_wall / best,
+                matches_solo,
+                wire_bytes: wire,
+                model_wire_bytes: down + up,
+                model_wall_secs: cost.wall_secs,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Serialize the matrix as the `BENCH_distributed.json` document.
+pub fn distributed_bench_json(opts: &DistributedBenchOpts, rows: &[DistributedBenchRow]) -> String {
+    let num = Json::Num;
+    let mut doc = BTreeMap::new();
+    doc.insert(
+        "image".to_string(),
+        Json::Arr(vec![num(opts.height as f64), num(opts.width as f64)]),
+    );
+    doc.insert("channels".to_string(), num(3.0));
+    doc.insert("iters".to_string(), num(opts.iters as f64));
+    doc.insert("samples".to_string(), num(opts.samples as f64));
+    doc.insert("seed".to_string(), num(opts.seed as f64));
+    doc.insert("conns_per_shard".to_string(), num(opts.conns_per_shard as f64));
+    doc.insert("blocks".to_string(), {
+        let plan = BlockPlan::new(opts.height, opts.width, opts.shape());
+        num(plan.len() as f64)
+    });
+    doc.insert(
+        "wire_ns_per_byte".to_string(),
+        num(CostModel::baked().wire_ns_per_byte),
+    );
+    doc.insert("source".to_string(), Json::Str("rust".to_string()));
+    let cases = rows
+        .iter()
+        .map(|r| {
+            let mut c = BTreeMap::new();
+            c.insert("shards".to_string(), num(r.shards as f64));
+            c.insert("k".to_string(), num(r.k as f64));
+            c.insert("wall_secs".to_string(), num(r.wall_secs));
+            c.insert("ns_per_pixel_round".to_string(), num(r.ns_per_pixel_round));
+            c.insert("speedup_vs_solo".to_string(), num(r.speedup_vs_solo));
+            c.insert("matches_solo".to_string(), Json::Bool(r.matches_solo));
+            c.insert("wire_bytes".to_string(), num(r.wire_bytes as f64));
+            c.insert("model_wire_bytes".to_string(), num(r.model_wire_bytes as f64));
+            c.insert("model_wall_secs".to_string(), num(r.model_wall_secs));
+            Json::Obj(c)
+        })
+        .collect();
+    doc.insert("cases".to_string(), Json::Arr(cases));
+    Json::Obj(doc).to_string()
+}
+
+/// Run the matrix and write `BENCH_distributed.json` to `path`.
+pub fn write_distributed_bench(
+    path: &Path,
+    opts: &DistributedBenchOpts,
+) -> Result<Vec<DistributedBenchRow>> {
+    let rows = run_distributed_bench(opts)?;
+    std::fs::write(path, distributed_bench_json(opts, &rows))
+        .with_context(|| format!("write distributed bench to {}", path.display()))?;
+    Ok(rows)
+}
+
+/// Human-readable rendering of the matrix.
+pub fn render_distributed_bench(
+    opts: &DistributedBenchOpts,
+    rows: &[DistributedBenchRow],
+) -> String {
+    let mut t = Table::new(format!(
+        "Distributed scaling: solo vs loopback shards at {}x{}, {} iters, {} conns/shard",
+        opts.width, opts.height, opts.iters, opts.conns_per_shard
+    ))
+    .header(&[
+        "Shards",
+        "K",
+        "Wall (s)",
+        "Speedup vs solo",
+        "Wire bytes",
+        "Model wall (s)",
+        "Identical",
+    ]);
+    for r in rows {
+        t.row(vec![
+            match r.shards {
+                0 => "solo".to_string(),
+                s => s.to_string(),
+            },
+            r.k.to_string(),
+            format!("{:.4}", r.wall_secs),
+            format!("{:.2}x", r.speedup_vs_solo),
+            r.wire_bytes.to_string(),
+            format!("{:.4}", r.model_wall_secs),
+            if r.matches_solo { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> DistributedBenchOpts {
+        DistributedBenchOpts {
+            height: 48,
+            width: 48,
+            ks: vec![2],
+            shard_counts: vec![1, 2],
+            conns_per_shard: 1,
+            iters: 3,
+            samples: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn matrix_is_bit_identical_and_bytes_match_the_closed_form() {
+        let opts = tiny();
+        let rows = run_distributed_bench(&opts).unwrap();
+        assert_eq!(rows.len(), 3); // solo + 2 shard counts
+        assert_eq!(rows[0].shards, 0);
+        assert_eq!(rows[0].wire_bytes, 0);
+        for r in &rows {
+            assert!(r.matches_solo, "{} shards diverged from solo", r.shards);
+            assert!(r.wall_secs > 0.0 && r.model_wall_secs > 0.0);
+            // wire_stats is process-global (other tests may run
+            // concurrently), so measured is a floor, not an equality,
+            // here; the single-threaded `blockms distributed` binary
+            // asserts equality through check_distributed_schema.py.
+            assert!(
+                r.wire_bytes >= r.model_wire_bytes,
+                "{} shards moved {} bytes; closed form says {}",
+                r.shards,
+                r.wire_bytes,
+                r.model_wire_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn json_round_trips_and_has_schema() {
+        let opts = tiny();
+        let rows = run_distributed_bench(&opts).unwrap();
+        let text = distributed_bench_json(&opts, &rows);
+        let doc = Json::parse(&text).expect("valid json");
+        assert_eq!(doc.get("iters").and_then(Json::as_usize), Some(3));
+        assert!(doc.get("wire_ns_per_byte").and_then(Json::as_f64).is_some());
+        let cases = doc.get("cases").and_then(Json::as_arr).expect("cases");
+        assert_eq!(cases.len(), rows.len());
+        for c in cases {
+            assert!(c.get("shards").and_then(Json::as_usize).is_some());
+            assert!(c.get("wall_secs").and_then(Json::as_f64).is_some());
+            assert!(c.get("model_wire_bytes").and_then(Json::as_f64).is_some());
+            assert_eq!(c.get("matches_solo").and_then(Json::as_bool), Some(true));
+        }
+    }
+}

@@ -287,6 +287,7 @@ pub fn run_hardening_bench(opts: &HardeningBenchOpts) -> Result<Vec<HardeningBen
             workers: opts.workers,
             schedule: Schedule::Static,
             max_in_flight: cap,
+            ..Default::default()
         });
         // Low-priority squatters that cannot finish on their own fill
         // the gate; each high-priority offer must preempt one.

@@ -5,6 +5,7 @@
 //! `cargo bench` for the entry points.
 
 pub mod cases;
+pub mod distributed;
 pub mod hardening;
 pub mod kernels;
 pub mod layout;
@@ -18,6 +19,7 @@ pub mod sweep;
 pub mod tables;
 pub mod workloads;
 
+pub use distributed::{DistributedBenchOpts, DistributedBenchRow};
 pub use hardening::{HardeningBenchOpts, HardeningBenchRow};
 pub use kernels::{KernelBenchOpts, KernelBenchRow};
 pub use layout::{LayoutBenchOpts, LayoutBenchRow};

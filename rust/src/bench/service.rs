@@ -171,6 +171,7 @@ pub fn run_service_bench(opts: &ServiceBenchOpts) -> Result<Vec<ServiceBenchRow>
                 workers: pool,
                 schedule: opts.schedule,
                 max_in_flight: batch,
+                ..Default::default()
             });
             // Batched: submit everything, then wait.
             let t0 = Instant::now();

@@ -30,6 +30,8 @@ pub const SUBCOMMANDS: &[&str] = &[
     "stream",
     "batch",
     "serve",
+    "shard-worker",
+    "distributed",
     "resilience",
     "hardening",
     "info",
@@ -122,6 +124,24 @@ pub fn blockms_cli() -> Cli {
              gate sheds lowest-priority jobs to make room)",
         )
         .opt(
+            "shards",
+            None,
+            "cluster/serve/plan: distribute blocks over N shard processes, \
+             N[:addr,...] — bare N spawns in-process loopback shards; with \
+             addrs the leader connects to `blockms shard-worker` listeners \
+             (host:port or a UDS path); results stay bit-identical to solo",
+        )
+        .opt(
+            "heartbeat-ms",
+            Some("1500"),
+            "liveness probe timeout, ms (workers and shards); 0 is a usage error",
+        )
+        .opt(
+            "listen",
+            None,
+            "shard-worker: address to listen on (host:port or a UDS path)",
+        )
+        .opt(
             "drain-timeout",
             Some("5000"),
             "serve: graceful-drain budget at end of run, ms — in-flight jobs get this \
@@ -143,7 +163,14 @@ pub fn blockms_cli() -> Cli {
             "file-backed",
             "pin the strip store to a real file (otherwise the planner decides under --mem-mb)",
         )
-        .flag("quick", "layout/plan/stream/sweep: CI-sized matrix (pins image size, ks, iters)")
+        .flag(
+            "once",
+            "shard-worker: serve exactly one leader connection, then exit",
+        )
+        .flag(
+            "quick",
+            "layout/plan/stream/sweep/distributed: CI-sized matrix (pins image size, ks, iters)",
+        )
         .flag(
             "auto",
             "cluster/serve/plan: planner picks every knob not explicitly pinned \

@@ -49,6 +49,7 @@ use crate::kmeans::{InitMethod, KMeansConfig, SeqKMeans, StreamInit};
 use crate::plan::ExecPlan;
 use crate::resilience::{fnv1a, Checkpoint, FaultPlan};
 use crate::runtime::BackendSpec;
+use crate::shard::{spawn_shard_pool, ShardEndpoints, ShardSpec};
 use crate::stripstore::{Backing, StripStore};
 
 /// Which compute engine workers run.
@@ -531,12 +532,26 @@ fn solo_store_dir() -> PathBuf {
 #[derive(Clone, Debug, Default)]
 pub struct Coordinator {
     cfg: CoordinatorConfig,
+    /// When set, [`Coordinator::cluster`] distributes blocks to shard
+    /// processes instead of spawning in-process workers (see
+    /// [`crate::shard`]). Deliberately not a [`CoordinatorConfig`]
+    /// field: sharding changes where compute *runs*, not what the run
+    /// computes, and existing config construction sites stay valid.
+    shards: Option<ShardEndpoints>,
 }
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Coordinator {
         assert!(cfg.exec.workers > 0, "need at least one worker");
-        Coordinator { cfg }
+        Coordinator { cfg, shards: None }
+    }
+
+    /// Distribute this coordinator's runs across shard processes. The
+    /// plan's `workers` becomes the connection count **per shard** (so
+    /// blocks pipeline per shard exactly like local worker threads).
+    pub fn with_shards(mut self, endpoints: ShardEndpoints) -> Coordinator {
+        self.shards = Some(endpoints);
+        self
     }
 
     pub fn config(&self) -> &CoordinatorConfig {
@@ -621,6 +636,9 @@ impl Coordinator {
     /// from the plan's shape — there is no separate plan argument to
     /// drift out of sync).
     pub fn cluster(&self, img: &Arc<Raster>, ccfg: &ClusterConfig) -> Result<ClusterOutput> {
+        if let Some(endpoints) = &self.shards {
+            return self.cluster_sharded(img, ccfg, endpoints);
+        }
         let plan = Arc::new(self.block_plan(img));
         let t0 = std::time::Instant::now();
 
@@ -663,6 +681,9 @@ impl Coordinator {
             content: SOLO_JOB,
         });
         let pool = WorkerPool::spawn(self.cfg.exec.workers, self.cfg.schedule);
+        if self.cfg.exec.heartbeat_ms > 0 {
+            pool.set_heartbeat_timeout_ms(self.cfg.exec.heartbeat_ms as u64);
+        }
         pool.register_job(SOLO_JOB, ctx);
         let spawn_secs = pool.warmup(SOLO_JOB)?;
 
@@ -705,6 +726,92 @@ impl Coordinator {
         )
     }
 
+    /// Distributed clustering: the same round protocol as [`Coordinator::cluster`],
+    /// but every block executes in a shard process (or loopback shard
+    /// thread) reached over a [`crate::shard::ShardTransport`]. The
+    /// leader never touches pixels after the [`ShardSpec`] ships: it
+    /// sends centroids + drift down, merges per-block partial sums back
+    /// in deterministic block order, so labels, centroids, counts, and
+    /// inertia are bit-identical to a solo run of the same plan.
+    ///
+    /// A shard dying mid-round surfaces as transport errors on its
+    /// in-flight blocks; the dynamic queue plus the PR 6/8 retry and
+    /// watchdog machinery re-queues those blocks onto surviving shards
+    /// (every shard holds the full spec, so any shard can compute any
+    /// block).
+    fn cluster_sharded(
+        &self,
+        img: &Arc<Raster>,
+        ccfg: &ClusterConfig,
+        endpoints: &ShardEndpoints,
+    ) -> Result<ClusterOutput> {
+        if !matches!(self.cfg.engine, Engine::Native) {
+            anyhow::bail!(
+                "sharded execution supports the native engine only (PJRT artifacts are per-process)"
+            );
+        }
+        if self.cfg.fault.is_some() {
+            anyhow::bail!(
+                "fault injection targets in-process workers; it cannot cross the shard boundary"
+            );
+        }
+        let plan = Arc::new(self.block_plan(img));
+        let t0 = std::time::Instant::now();
+
+        // Same init draw as solo — the leader draws, shards receive.
+        let init_centroids = ccfg
+            .init
+            .centroids(img.as_pixels(), ccfg.k, img.channels(), ccfg.seed);
+
+        let spec = Arc::new(ShardSpec::from_run(
+            img,
+            ccfg,
+            self.cfg.mode,
+            &self.cfg.io,
+            &self.cfg.exec,
+        ));
+        // `--workers` becomes connections per shard: blocks pipeline
+        // into each shard with the same depth a local pool would have.
+        let (pool, guards) = spawn_shard_pool(endpoints, self.cfg.exec.workers)?;
+        if self.cfg.exec.heartbeat_ms > 0 {
+            pool.set_heartbeat_timeout_ms(self.cfg.exec.heartbeat_ms as u64);
+        }
+        pool.register_shard_spec(SOLO_JOB, spec);
+        // Warmup's per-connection Ping doubles as eager registration:
+        // every shard materializes the job before round 1, so byte
+        // counts are deterministic and round latency is flat.
+        let spawn_secs = pool.warmup(SOLO_JOB)?;
+
+        let mut machine = RunMachine::new(
+            self.cfg.mode,
+            Arc::clone(&plan),
+            img.channels(),
+            ccfg,
+            init_centroids,
+            None,
+        );
+        let fingerprint =
+            run_fingerprint(img.height(), img.width(), img.channels(), ccfg, self.cfg.mode);
+        let drove = self.drive(&mut machine, &pool, fingerprint);
+        // Teardown order matters for loopback shards: shutting the pool
+        // down drops the proxy-side transports, which is what lets the
+        // shard-side handler threads (joined by the guards' Drop) see
+        // `Closed` and exit.
+        pool.shutdown();
+        drop(guards);
+        drove?;
+        let m = machine.into_output()?;
+
+        ClusterOutput::from_machine(
+            m,
+            t0.elapsed().as_secs_f64(),
+            spawn_secs,
+            None, // I/O happens shard-side; the leader has no store to audit.
+            plan.len(),
+            self.cfg.exec.workers * endpoints.shards(),
+        )
+    }
+
     /// Out-of-core clustering: stream pixels from any [`RasterSource`]
     /// into a strip store (one strip resident at a time under file
     /// backing), draw initial centroids in the same single pass
@@ -729,6 +836,11 @@ impl Coordinator {
         source: &mut dyn RasterSource,
         ccfg: &ClusterConfig,
     ) -> Result<StreamRun> {
+        if self.shards.is_some() {
+            anyhow::bail!(
+                "streaming ingestion is not yet supported with --shards (shards need the full raster in the spec)"
+            );
+        }
         let IoMode::Strips {
             strip_rows,
             file_backed,
@@ -768,6 +880,9 @@ impl Coordinator {
             content: SOLO_JOB,
         });
         let pool = WorkerPool::spawn(self.cfg.exec.workers, self.cfg.schedule);
+        if self.cfg.exec.heartbeat_ms > 0 {
+            pool.set_heartbeat_timeout_ms(self.cfg.exec.heartbeat_ms as u64);
+        }
         pool.register_job(SOLO_JOB, ctx);
         let spawn_secs = pool.warmup(SOLO_JOB)?;
 

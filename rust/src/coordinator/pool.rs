@@ -22,6 +22,8 @@ use super::messages::{Job, JobError, JobId, JobOutcome, JobPayload};
 use super::queue::{JobQueue, Schedule};
 use super::worker::{panic_message, worker_main, ContextRegistry, WorkerContext};
 use crate::resilience::{Stall, Watchdog, DEFAULT_HEARTBEAT_TIMEOUT_MS};
+use crate::shard::proxy::{proxy_main, ShardSpecMap};
+use crate::shard::{ShardSpec, ShardTransport};
 
 /// How often a waiting leader wakes to scan the heartbeat table.
 const WATCHDOG_TICK: Duration = Duration::from_millis(25);
@@ -67,6 +69,9 @@ pub struct WorkerPool {
     /// Stalls scanned but not yet surfaced to a caller (one is
     /// delivered per `recv_result*` call; the rest wait here).
     pending_stalls: Mutex<VecDeque<Stall>>,
+    /// Shard specs proxies ship on first contact per connection
+    /// (sharded pools only; empty and unused for in-process pools).
+    shard_specs: Arc<ShardSpecMap>,
 }
 
 impl WorkerPool {
@@ -139,7 +144,64 @@ impl WorkerPool {
             watchdog,
             speculate: AtomicBool::new(false),
             pending_stalls: Mutex::new(VecDeque::new()),
+            shard_specs: Arc::new(Mutex::new(HashMap::new())),
         }
+    }
+
+    /// Spawn a **sharded** pool: one proxy thread per transport, each
+    /// forwarding blocks to a shard process instead of computing them
+    /// (see [`crate::shard::proxy`]). The leader-side protocol —
+    /// `run_round`, retry budgets, watchdog escalation, speculation —
+    /// is identical to an in-process pool; only the worker bodies
+    /// differ. Always dynamic scheduling: a static split would pin
+    /// blocks to connections and defeat dead-shard re-queueing.
+    ///
+    /// Proxies are *not* respawned on failure (their transport died
+    /// with them); the pool's capacity shrinks to the surviving
+    /// connections, which is the intended shard-death behaviour.
+    pub fn spawn_sharded(transports: Vec<Box<dyn ShardTransport + Send>>) -> WorkerPool {
+        let workers = transports.len();
+        assert!(workers > 0, "need at least one shard connection");
+        let queue = Arc::new(JobQueue::new(workers, Schedule::Dynamic));
+        let registry = Arc::new(ContextRegistry::new());
+        let last_panic: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let watchdog = Arc::new(Watchdog::new(workers, DEFAULT_HEARTBEAT_TIMEOUT_MS));
+        let shard_specs: Arc<ShardSpecMap> = Arc::new(Mutex::new(HashMap::new()));
+        let (tx, rx) = channel();
+        let mut handles = Vec::with_capacity(workers);
+        for (w, transport) in transports.into_iter().enumerate() {
+            let queue = Arc::clone(&queue);
+            let watchdog = Arc::clone(&watchdog);
+            let specs = Arc::clone(&shard_specs);
+            let tx = tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("blockms-shard-proxy-{w}"))
+                    .spawn(move || proxy_main(w, queue, tx, watchdog, specs, transport))
+                    .expect("spawn shard proxy thread"),
+            );
+        }
+        WorkerPool {
+            queue,
+            registry,
+            results: rx,
+            handles,
+            workers,
+            open_high_water: AtomicUsize::new(0),
+            last_panic,
+            watchdog,
+            speculate: AtomicBool::new(false),
+            pending_stalls: Mutex::new(VecDeque::new()),
+            shard_specs,
+        }
+    }
+
+    /// Register the spec proxies ship to shards for `job` (sharded
+    /// pools; the shard analogue of [`WorkerPool::register_job`]).
+    /// Must happen before the job's warmup ping or first block.
+    pub fn register_shard_spec(&self, job: JobId, spec: Arc<ShardSpec>) {
+        let fingerprint = spec.fingerprint();
+        self.shard_specs.lock().unwrap().insert(job, (fingerprint, spec));
     }
 
     /// The pool's heartbeat table (tests and benches retune its
@@ -191,6 +253,7 @@ impl WorkerPool {
     /// job's still-running share-group siblings.
     pub fn retire_job_with(&self, job: JobId, purge_content: Option<u64>) {
         self.registry.remove(job);
+        self.shard_specs.lock().unwrap().remove(&job);
         self.queue.drop_job_group(job);
         for w in 0..self.workers {
             self.queue.push_to_worker(

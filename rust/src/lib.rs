@@ -9,6 +9,8 @@
 //!   `blockproc` I/O behaviour ([`stripstore`]), an execution planner
 //!   that resolves every run into one cost-model-chosen [`plan::ExecPlan`]
 //!   ([`plan`]), a leader/worker SPMD pool ([`coordinator`]), a
+//!   leader/shard-worker split that distributes the same round protocol
+//!   across OS processes over a versioned wire format ([`shard`]), a
 //!   persistent multi-job serving layer that drives many clustering jobs
 //!   over one shared pool with admission control ([`service`]), an
 //!   amortized multi-variant sweep layer that runs a `(k, seed, init)`
@@ -34,6 +36,7 @@ pub mod plan;
 pub mod resilience;
 pub mod runtime;
 pub mod service;
+pub mod shard;
 pub mod simtime;
 pub mod stripstore;
 pub mod sweep;
@@ -58,6 +61,7 @@ pub mod prelude {
     pub use crate::service::{
         ClusterServer, DrainReport, JobHandle, JobInput, JobSpec, JobStatus, ServerConfig,
     };
+    pub use crate::shard::{ShardEndpoints, ShardSpec, ShardTransport};
     pub use crate::simtime::{SimParams, WorkerSim};
     pub use crate::stripstore::StripStore;
     pub use crate::sweep::{SweepGrid, SweepReport, SweepVariant};

@@ -29,6 +29,13 @@
 //!                   (`--input` benches a real PPM);
 //! - `serve`         drive N jobs through one persistent shared pool
 //!                   (`--mem-mb` admits jobs by path and streams them);
+//! - `shard-worker`  host shard-side block compute: listen on `--listen`
+//!                   (UDS path or host:port) for a leader's connections
+//!                   (`--once` exits after the first leader disconnects);
+//! - `distributed`   multi-process scaling bench: solo vs `--shards N`
+//!                   loopback shards, bit-identity checked per row ->
+//!                   BENCH_distributed.json (`--quick` for the CI smoke
+//!                   size);
 //! - `resilience`    fault-tolerance overhead bench: baseline vs retry vs
 //!                   checkpoint vs kill/resume -> BENCH_resilience.json
 //!                   (`--quick` for the CI smoke size);
@@ -37,6 +44,13 @@
 //!                   under overload -> BENCH_hardening.json (`--quick`
 //!                   for the CI smoke size);
 //! - `info`          show artifact/manifest status and environment.
+//!
+//! Distribution rides on `cluster` and `serve`: `--shards N` runs the
+//! block protocol over N in-process loopback shards, `--shards
+//! N:addr,...` connects to `blockms shard-worker` processes instead
+//! (results bit-identical to solo either way), and with `--auto` the
+//! planner's wire-cost terms decide whether distributing actually pays.
+//! `--heartbeat-ms` tunes the liveness probe both modes share.
 //!
 //! Fault tolerance rides on `cluster`: `--retries N` re-queues a failed
 //! block up to N times per round (bit-identical — a re-queued block is a
@@ -91,6 +105,7 @@ use blockms::plan::{CostModel, ExecPlan, Explain, Planner, PlanRequest};
 use blockms::resilience::{FaultKind, FaultPlan};
 use blockms::runtime::{find_artifacts_dir, ArtifactSet};
 use blockms::service::{ClusterServer, JobSpec, JobStatus, ServerConfig};
+use blockms::shard::{run_listener, ShardEndpoints};
 use blockms::util::cli::{Args, CliError};
 use blockms::util::fmt::duration;
 
@@ -121,6 +136,8 @@ fn main() {
         "stream" => cmd_stream(&args),
         "batch" => cmd_batch(&args),
         "serve" => cmd_serve(&args),
+        "shard-worker" => cmd_shard_worker(&args),
+        "distributed" => cmd_distributed(&args),
         "resilience" => cmd_resilience(&args),
         "hardening" => cmd_hardening(&args),
         "info" => cmd_info(),
@@ -156,6 +173,47 @@ fn positive(v: usize, flag: &str) -> Result<usize> {
     } else {
         Ok(v)
     }
+}
+
+/// Parse `--shards N[:addr,...]` into endpoints. A malformed spec —
+/// zero shards, or an address list whose length disagrees with N — is
+/// a usage error (exit 2).
+fn shards_of(opts: &Opts) -> Result<Option<ShardEndpoints>> {
+    match opts.get("shards", "run.shards") {
+        None => Ok(None),
+        Some(raw) => match ShardEndpoints::parse(&raw) {
+            Ok(endpoints) => Ok(Some(endpoints)),
+            Err(e) => Err(anyhow::Error::new(CliError::BadValue(
+                "shards".to_string(),
+                raw,
+                e.to_string(),
+            ))),
+        },
+    }
+}
+
+/// A typed `--shards` composes with neither fault injection (faults
+/// target in-process workers) nor `--mem-mb` streaming (shards need the
+/// whole raster in the spec). Both pairings are usage errors, exit 2.
+fn check_shard_conflicts(opts: &Opts, mem_mb: bool, fault: bool) -> Result<()> {
+    let raw = match opts.get("shards", "run.shards") {
+        Some(raw) => raw,
+        None => return Ok(()),
+    };
+    let conflict = |why: &str| {
+        Err(anyhow::Error::new(CliError::BadValue(
+            "shards".to_string(),
+            raw.clone(),
+            why.to_string(),
+        )))
+    };
+    if mem_mb {
+        return conflict("--shards ships the whole raster in the shard spec; drop --mem-mb");
+    }
+    if fault {
+        return conflict("fault injection targets in-process workers; drop --fault");
+    }
+    Ok(())
 }
 
 /// Resolve the run's SIMD mode: hardware detection clamped by the
@@ -320,6 +378,21 @@ fn plan_request(
     } else {
         Some(false)
     };
+    // Distribution: without --auto a typed --shards N pins the shard
+    // count; with --auto the same flag opens a solo-vs-N cost race and
+    // the planner's wire terms decide whether the freight pays. The
+    // heartbeat is a carried-through knob (0 = the pool default), but
+    // an explicit zero would disarm the watchdog: usage error, exit 2.
+    if let Some(endpoints) = shards_of(opts)? {
+        if auto {
+            req = req.with_shard_grid(vec![endpoints.shards()]);
+        } else {
+            req = req.with_shards(Some(endpoints.shards()));
+        }
+    }
+    if let Some(hb) = opts.pinned::<usize>("heartbeat-ms", "run.heartbeat_ms")? {
+        req = req.with_heartbeat_ms(Some(positive(hb, "heartbeat-ms")?));
+    }
     // SIMD capability is a fact of the host, never a search axis: the
     // env-clamped detected level (and the --fma opt-in) ride on every
     // candidate, and the cost model prices the Simd kernel at it.
@@ -448,6 +521,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             );
         }
     }
+    check_shard_conflicts(&opts, exec.mem_mb > 0, opts.get("fault", "run.fault").is_some())?;
     if exec.checkpoint_every > 0 && opts.get("checkpoint", "run.checkpoint").is_none() {
         // A cadence with nowhere to write is a usage mistake, not a
         // silently-ignored knob.
@@ -485,7 +559,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     // --- run ---------------------------------------------------------------
     let fault = fault_of(&opts)?;
     check_hang_retries(&fault, exec.retries)?;
-    let coord = Coordinator::new(CoordinatorConfig {
+    let mut coord = Coordinator::new(CoordinatorConfig {
         exec,
         engine: engine_of(&opts)?,
         mode: opts.require::<ClusterMode>("mode", "run.mode")?,
@@ -495,6 +569,21 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         checkpoint: opts.get("checkpoint", "run.checkpoint").map(PathBuf::from),
         resume: opts.get("resume", "run.resume").map(PathBuf::from),
     });
+    // exec.shards > 0 only when --shards was typed (the planner may
+    // still have picked solo under --auto — then the run stays local).
+    if exec.shards > 0 {
+        let endpoints = shards_of(&opts)?.expect("exec.shards implies --shards");
+        println!(
+            "distributed: {} shard(s) × {} connection(s), {}",
+            endpoints.shards(),
+            exec.workers,
+            match &endpoints {
+                ShardEndpoints::Loopback { .. } => "in-process loopback".to_string(),
+                ShardEndpoints::Remote { addrs } => addrs.join(", "),
+            }
+        );
+        coord = coord.with_shards(endpoints);
+    }
     let ccfg = ClusterConfig {
         k: positive(opts.require("k", "cluster.k")?, "k")?,
         max_iters: opts.require("max-iters", "cluster.max_iters")?,
@@ -1078,20 +1167,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let fault = fault_of(&opts)?;
     check_hang_retries(&fault, exec.retries)?;
+    check_shard_conflicts(&opts, streaming, fault.is_some())?;
     let drain_timeout: u64 = opts.require("drain-timeout", "serve.drain_timeout")?;
     // `--checkpoint P` under serve is the deadline escape hatch: a job
     // that hits `--deadline-ms` snapshots its last round boundary to
     // P.jobN and stays resumable via `cluster --resume`.
     let deadline_ckpt = opts.get("checkpoint", "run.checkpoint");
 
-    let server = ClusterServer::start(ServerConfig {
+    let shard_endpoints = (exec.shards > 0)
+        .then(|| shards_of(&opts))
+        .transpose()?
+        .flatten();
+    let server = ClusterServer::try_start(ServerConfig {
         workers,
         schedule,
         max_in_flight,
-    });
+        shards: shard_endpoints.clone(),
+        heartbeat_ms: exec.heartbeat_ms,
+    })?;
     println!(
         "serving {jobs} jobs over a {workers}-worker pool (admission cap {max_in_flight}, {schedule:?} schedule)"
     );
+    if let Some(endpoints) = &shard_endpoints {
+        println!(
+            "distributed: {} shard(s) × {workers} connection(s) each",
+            endpoints.shards()
+        );
+    }
     let t0 = Instant::now();
     let mut handles = Vec::with_capacity(jobs);
     for j in 0..jobs {
@@ -1190,6 +1292,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for (id, what) in &report.dispositions {
         println!("drain: job #{id}: {what}");
     }
+    Ok(())
+}
+
+/// Host shard-side block compute: bind `--listen` (a UDS path or
+/// `host:port`) and serve leader connections until killed (`--once`
+/// exits after the first leader disconnects — the CI drill mode).
+/// A missing `--listen` is a usage error, exit 2.
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    let opts = Opts::load(args)?;
+    let listen = opts
+        .get("listen", "shard.listen")
+        .ok_or_else(|| anyhow::Error::new(CliError::MissingRequired("listen".to_string())))?;
+    run_listener(&listen, args.flag("once"))
+}
+
+/// Distributed-scaling benchmark: solo vs loopback shard counts with
+/// per-row bit-identity checks and closed-form wire-byte validation,
+/// written to `BENCH_distributed.json` (see EXPERIMENTS.md §Distributed
+/// for the schema). `--quick` runs the CI smoke size.
+fn cmd_distributed(args: &Args) -> Result<()> {
+    use blockms::bench::distributed::{
+        render_distributed_bench, write_distributed_bench, DistributedBenchOpts,
+    };
+    let opts = Opts::load(args)?;
+    let base = if args.flag("quick") {
+        DistributedBenchOpts::quick()
+    } else {
+        let scale: f64 = opts.require("scale", "bench.scale")?;
+        let side = ((1024.0 * scale).round() as usize).max(32);
+        DistributedBenchOpts {
+            height: side,
+            width: side,
+            iters: opts.require("bench-iters", "bench.iters")?,
+            ..Default::default()
+        }
+    };
+    let bopts = DistributedBenchOpts {
+        seed: opts.require("seed", "workload.seed")?,
+        conns_per_shard: positive(opts.require("workers", "run.workers")?, "workers")?,
+        ..base
+    };
+    let out = args.get("out").unwrap_or("BENCH_distributed.json").to_string();
+    let rows = write_distributed_bench(Path::new(&out), &bopts)?;
+    print!("{}", render_distributed_bench(&bopts, &rows));
+    println!("wrote {out}");
     Ok(())
 }
 

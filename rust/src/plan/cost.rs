@@ -42,6 +42,12 @@ use crate::util::json::Json;
 /// worker counts scale from this reference.
 pub const REF_WORKERS: usize = 4;
 
+/// Default wall ns per wire byte when no calibration has run — a
+/// loopback/UDS-order figure (~6.7 GB/s effective through serialize +
+/// copy + wakeup), deliberately pessimistic for same-host transports so
+/// `--auto` only goes distributed when compute savings clearly dominate.
+pub const DEFAULT_WIRE_NS_PER_BYTE: f64 = 0.15;
+
 /// Calibration cluster counts of the committed layout matrix.
 pub const CALIB_KS: [usize; 3] = [2, 4, 8];
 
@@ -208,6 +214,61 @@ pub struct CostModel {
     pub simd_level: SimdLevel,
     /// Per-level simd-over-lanes ratios (see [`SimdScale`]).
     pub simd_scale: SimdScale,
+    /// Wall nanoseconds per byte moved over a shard transport
+    /// (serialize + copy + kernel crossing, loopback/UDS-calibrated).
+    /// Prices [`CostModel::predict_sharded`]'s closed-form byte count;
+    /// refinable the same way as `decode_ns_per_byte`.
+    pub wire_ns_per_byte: f64,
+}
+
+/// Fixed wire overhead terms, mirrored from `crate::shard::wire`'s
+/// frame layout (a test cross-checks them against the real encoder).
+const WIRE_FRAME_HEADER: u64 = 20;
+/// `Register` frame bytes beyond the shipped pixels: header + job id +
+/// the fixed [`crate::shard::spec`] encoding.
+const WIRE_REGISTER_FIXED: u64 = WIRE_FRAME_HEADER + 8 + 118;
+/// `Block` frame bytes beyond the centroid payload (+ drift when sent).
+const WIRE_BLOCK_FIXED: u64 = WIRE_FRAME_HEADER + 34;
+/// `StepResult`/`AssignResult` frame bytes beyond sums/labels.
+const WIRE_RESULT_FIXED: u64 = WIRE_FRAME_HEADER + 64;
+/// `Ping`/`Pong` frame bytes (header + job id).
+const WIRE_PING: u64 = WIRE_FRAME_HEADER + 8;
+
+/// Closed-form bytes a full sharded run moves over the wire, returned
+/// as `(down, up)` from the leader's perspective:
+///
+/// - **warmup** (per connection): one `Register` carrying the spec and
+///   the whole image (`4·h·w·c`), one `Ping` down; `RegisterAck` +
+///   `Pong` up.
+/// - **per step round** (per block): centroids down (`4·k·c` payload on
+///   a fixed 54-byte frame) plus the drift vector (`8·k + 8`) on every
+///   round after the first; `f64` partial sums up
+///   (`84 + 8·k + 8·k·c`).
+/// - **final assign round** (per block): centroids + drift down;
+///   fixed-84 frames plus `4` bytes per pixel of labels up.
+/// - **shutdown** (per connection): one bare frame down.
+///
+/// `EXPERIMENTS.md` §Distributed derives the same form;
+/// `python/check_distributed_schema.py` holds `BENCH_distributed.json`
+/// to it exactly.
+pub fn sharded_wire_bytes(w: &Workload, blocks: usize, connections: usize) -> (u64, u64) {
+    let (b, n_c) = (blocks as u64, connections as u64);
+    let (k, c) = (w.k as u64, w.channels as u64);
+    let step_rounds = w.rounds as u64;
+    let centroids = 4 * k * c;
+    let drift = 8 * k + 8;
+    let block_frames = b * (step_rounds + 1);
+    // Drift rides on every frame after round 1: (step_rounds - 1) step
+    // rounds plus the assign round = step_rounds frames per block.
+    let down = n_c * (WIRE_REGISTER_FIXED + w.image_bytes() + WIRE_PING)
+        + block_frames * (WIRE_BLOCK_FIXED + centroids)
+        + b * step_rounds * drift
+        + n_c * WIRE_FRAME_HEADER;
+    let up = n_c * (WIRE_FRAME_HEADER + WIRE_PING)
+        + b * step_rounds * (WIRE_RESULT_FIXED + 8 * k + 8 * k * c)
+        + b * WIRE_RESULT_FIXED
+        + (w.pixels() as u64) * 4;
+    (down, up)
 }
 
 /// Fused reuses the pruned floor and Simd the lanes floor (neither has
@@ -255,6 +316,7 @@ impl CostModel {
             error_bound: 0.5611,
             simd_level: SimdLevel::default(),
             simd_scale: SimdScale::default(),
+            wire_ns_per_byte: DEFAULT_WIRE_NS_PER_BYTE,
         }
     }
 
@@ -342,6 +404,9 @@ impl CostModel {
             error_bound: 0.0,
             simd_level: SimdLevel::default(),
             simd_scale: SimdScale::default(),
+            // The layout matrix carries no wire measurements; the
+            // default survives recalibration.
+            wire_ns_per_byte: DEFAULT_WIRE_NS_PER_BYTE,
         };
         // Stated bound = worst self-prediction over the matrix, floored
         // at 10% so a tiny matrix cannot claim implausible precision.
@@ -579,6 +644,52 @@ impl CostModel {
             io_secs,
             decode_bytes,
             strip_transfers,
+        }
+    }
+
+    /// Predict the cost of running `w` distributed over `shards` shard
+    /// processes with `conns_per_shard` connections into each
+    /// (`shards == 0` = solo: exactly [`CostModel::predict`] at
+    /// `conns_per_shard` workers).
+    ///
+    /// Compute and excess-decode terms reuse [`CostModel::predict`] at
+    /// `shards · conns_per_shard` effective lanes — shard kernels are
+    /// the same code, and the lane scaling already clamps to the block
+    /// count and prices barrier imbalance. On top rides the wire term:
+    /// [`sharded_wire_bytes`]'s closed form priced at
+    /// [`CostModel::wire_ns_per_byte`], charged *unscaled* because every
+    /// byte funnels through the single leader. The per-connection
+    /// `Register` cost (the whole image, per connection) is what makes
+    /// small workloads lose: distribution pays only when the saved
+    /// compute exceeds the freight, and `--auto` sees exactly that
+    /// trade.
+    #[allow(clippy::too_many_arguments)]
+    pub fn predict_sharded(
+        &self,
+        w: &Workload,
+        plan: &BlockPlan,
+        kernel: KernelChoice,
+        layout: TileLayout,
+        conns_per_shard: usize,
+        strip_cache: usize,
+        prefetch: bool,
+        shards: usize,
+    ) -> PlanCost {
+        if shards == 0 {
+            return self.predict(w, plan, kernel, layout, conns_per_shard, strip_cache, prefetch);
+        }
+        let lanes = shards * conns_per_shard.max(1);
+        let base = self.predict(w, plan, kernel, layout, lanes, strip_cache, prefetch);
+        let (down, up) = sharded_wire_bytes(w, plan.len(), lanes);
+        let wire_secs = (down + up) as f64 * self.wire_ns_per_byte / 1e9;
+        let wall_secs = base.wall_secs + wire_secs;
+        PlanCost {
+            wall_secs,
+            ns_per_pixel_pass: wall_secs * 1e9 / (w.pixels() as f64 * w.passes() as f64),
+            // The wire term reports as I/O: it is the same "moving
+            // bytes instead of computing" axis the explain table ranks.
+            io_secs: base.io_secs + wire_secs,
+            ..base
         }
     }
 
@@ -969,6 +1080,113 @@ mod tests {
         m.refine(KernelChoice::Naive, TileLayout::Soa, 4, f64::NAN);
         m.refine(KernelChoice::Naive, TileLayout::Soa, 4, -1.0);
         assert_eq!(m.compute_ns_px_pass(KernelChoice::Naive, TileLayout::Soa, 4), after);
+    }
+
+    #[test]
+    fn wire_constants_match_the_real_encoder() {
+        use crate::shard::spec::SPEC_FIXED_BYTES;
+        use crate::shard::wire::{FrameKind, ShardMsg, HEADER_LEN};
+        assert_eq!(WIRE_FRAME_HEADER as usize, HEADER_LEN);
+        assert_eq!(WIRE_REGISTER_FIXED as usize, HEADER_LEN + 8 + SPEC_FIXED_BYTES);
+        let ping = ShardMsg::Ping { job: 1 }.to_frame(0);
+        assert_eq!(WIRE_PING as usize, ping.wire_len());
+        assert_eq!(ping.kind, FrameKind::Ping);
+        // Block fixed bytes = an empty-payload block frame.
+        let block = ShardMsg::Block {
+            job: 1,
+            block: 0,
+            round: 1,
+            phase: crate::shard::wire::BlockPhase::Step,
+            k: 0,
+            channels: 0,
+            centroids: vec![],
+            drift: None,
+        }
+        .to_frame(0);
+        assert_eq!(WIRE_BLOCK_FIXED as usize, block.wire_len());
+        let step = ShardMsg::StepResult {
+            job: 1,
+            block: 0,
+            round: 1,
+            k: 0,
+            channels: 0,
+            counts: vec![],
+            sums: vec![],
+            inertia: 0.0,
+            io_secs: 0.0,
+            compute_secs: 0.0,
+            pixels: 0,
+        }
+        .to_frame(0);
+        assert_eq!(WIRE_RESULT_FIXED as usize, step.wire_len());
+    }
+
+    #[test]
+    fn wire_bytes_follow_the_closed_form() {
+        let w = workload(None); // 1024x1024x3, k=4, 4 rounds
+        let (down, up) = sharded_wire_bytes(&w, 4, 2);
+        // down: 2 conns * (146 + 12MiB + 28) + 4 blocks * 5 frames *
+        // (54 + 48) + 4 blocks * 4 drift rounds * 40 + 2 * 20
+        let image = 1024u64 * 1024 * 3 * 4;
+        assert_eq!(down, 2 * (146 + image + 28) + 4 * 5 * (54 + 48) + 4 * 4 * 40 + 2 * 20);
+        // up: 2 conns * (20 + 28) + 4 blocks * 4 step rounds *
+        // (84 + 32 + 96) + 4 blocks * 84 + 4MiB of labels
+        assert_eq!(up, 2 * 48 + 4 * 4 * (84 + 32 + 96) + 4 * 84 + 1024 * 1024 * 4);
+    }
+
+    #[test]
+    fn distribution_pays_at_scale_and_loses_when_tiny() {
+        let m = CostModel::baked();
+        let shape = BlockShape::Square { side: 512 };
+        // Big workload, many rounds: saved compute dwarfs the freight.
+        let big = Workload {
+            height: 4096,
+            width: 4096,
+            channels: 3,
+            k: 8,
+            rounds: 30,
+            strip_rows: None,
+        };
+        let plan = BlockPlan::new(4096, 4096, shape);
+        let solo =
+            m.predict_sharded(&big, &plan, KernelChoice::Lanes, TileLayout::Soa, 4, 0, false, 0);
+        let dist =
+            m.predict_sharded(&big, &plan, KernelChoice::Lanes, TileLayout::Soa, 4, 0, false, 4);
+        assert!(
+            dist.wall_secs < solo.wall_secs,
+            "4 shards {} vs solo {}",
+            dist.wall_secs,
+            solo.wall_secs
+        );
+        // Tiny workload whose 4 blocks the solo lanes already saturate:
+        // extra shards cannot save compute (the scaling clamps at the
+        // block count), so every wire byte — dominated by the whole
+        // image shipping per connection — is pure loss.
+        let tiny = Workload {
+            height: 64,
+            width: 64,
+            channels: 3,
+            k: 2,
+            rounds: 2,
+            strip_rows: None,
+        };
+        let tiny_plan = BlockPlan::new(64, 64, BlockShape::Square { side: 32 });
+        let solo = m.predict_sharded(
+            &tiny, &tiny_plan, KernelChoice::Lanes, TileLayout::Soa, 4, 0, false, 0,
+        );
+        let dist = m.predict_sharded(
+            &tiny, &tiny_plan, KernelChoice::Lanes, TileLayout::Soa, 4, 0, false, 4,
+        );
+        assert_eq!(dist.compute_secs, solo.compute_secs, "saturated: nothing to save");
+        assert!(
+            dist.wall_secs > solo.wall_secs,
+            "4 shards {} vs solo {}",
+            dist.wall_secs,
+            solo.wall_secs
+        );
+        // shards == 0 is exactly the solo prediction.
+        let plain = m.predict(&tiny, &tiny_plan, KernelChoice::Lanes, TileLayout::Soa, 4, 0, false);
+        assert_eq!(solo, plain);
     }
 
     #[test]

@@ -34,7 +34,10 @@
 mod cost;
 mod explain;
 
-pub use cost::{CostModel, PlanCost, SweepCost, Workload, CALIB_KS, REF_WORKERS};
+pub use cost::{
+    sharded_wire_bytes, CostModel, PlanCost, SweepCost, Workload, CALIB_KS,
+    DEFAULT_WIRE_NS_PER_BYTE, REF_WORKERS,
+};
 pub use explain::{Candidate, Explain};
 
 use crate::blocks::{ApproachKind, BlockPlan, BlockShape};
@@ -114,6 +117,19 @@ pub struct ExecPlan {
     /// library default is the portable mode so plans built in tests are
     /// architecture-independent; entry points stamp the detected mode.
     pub simd: SimdMode,
+    /// Shard process count for distributed execution (0 = solo, the
+    /// in-process pool). When nonzero, `workers` becomes the connection
+    /// count *per shard* and every block executes shard-side. A search
+    /// axis only when [`PlanRequest::shard_grid`] opens it; the model's
+    /// wire terms (see [`CostModel::predict_sharded`]) decide whether
+    /// distribution pays. Bit-identity is unconditional — shards change
+    /// where blocks run, never what they compute.
+    pub shards: usize,
+    /// Watchdog heartbeat timeout in milliseconds (0 = keep
+    /// [`crate::resilience::DEFAULT_HEARTBEAT_TIMEOUT_MS`]). A
+    /// carried-through liveness knob, never a search axis: it changes
+    /// when a stall *escalates*, not what runs.
+    pub heartbeat_ms: usize,
 }
 
 impl Default for ExecPlan {
@@ -146,6 +162,8 @@ impl ExecPlan {
             priority: 0,
             speculate: false,
             simd: SimdMode::default(),
+            shards: 0,
+            heartbeat_ms: 0,
         }
     }
 
@@ -236,6 +254,18 @@ impl ExecPlan {
         self
     }
 
+    /// Pin the shard process count (0 = solo in-process pool).
+    pub fn with_shards(mut self, shards: usize) -> ExecPlan {
+        self.shards = shards;
+        self
+    }
+
+    /// Pin the watchdog heartbeat timeout in ms (0 = library default).
+    pub fn with_heartbeat_ms(mut self, ms: usize) -> ExecPlan {
+        self.heartbeat_ms = ms;
+        self
+    }
+
     /// The kernel cell for human renderings: plain kernel names, with
     /// the Simd kernel carrying its dispatched level — `simd[avx2]`,
     /// `simd[avx512+fma]` — so predicted-vs-actual reports say which
@@ -306,6 +336,12 @@ impl ExecPlan {
         if self.speculate {
             s.push_str(" · spec");
         }
+        if self.shards > 0 {
+            s.push_str(&format!(" · shards {}", self.shards));
+        }
+        if self.heartbeat_ms > 0 {
+            s.push_str(&format!(" · hb {}ms", self.heartbeat_ms));
+        }
         s
     }
 }
@@ -358,6 +394,17 @@ pub struct PlanRequest {
     /// detected, env-clamped mode via [`PlanRequest::with_simd`], and
     /// the planner prices the Simd kernel at this level.
     pub simd: SimdMode,
+    /// Shard-count pin (`None` = solo unless [`PlanRequest::shard_grid`]
+    /// opens the axis). `Some(0)` pins solo explicitly.
+    pub shards: Option<usize>,
+    /// Shard counts for `--auto` to search over, always alongside the
+    /// implicit solo candidate (0). Empty (the default) keeps the grid
+    /// identical to the pre-distributed planner — existing
+    /// candidate-count contracts hold unless a caller opts in.
+    pub shard_grid: Vec<usize>,
+    /// Heartbeat timeout (ms) to carry onto the plan (`None` = library
+    /// default). Carried-through like `retries`, never a search axis.
+    pub heartbeat_ms: Option<usize>,
 }
 
 impl PlanRequest {
@@ -403,6 +450,8 @@ impl PlanRequest {
         self.priority = (plan.priority > 0).then_some(plan.priority);
         self.speculate = plan.speculate.then_some(true);
         self.simd = plan.simd;
+        self.shards = (plan.shards > 0).then_some(plan.shards);
+        self.heartbeat_ms = (plan.heartbeat_ms > 0).then_some(plan.heartbeat_ms);
         self
     }
 
@@ -457,6 +506,29 @@ impl PlanRequest {
     /// (and into the cost model's per-level Simd floor).
     pub fn with_simd(mut self, simd: SimdMode) -> PlanRequest {
         self.simd = simd;
+        self
+    }
+
+    /// Pin the shard count (`None` leaves the axis to `shard_grid`;
+    /// `Some(0)` pins solo).
+    pub fn with_shards(mut self, shards: Option<usize>) -> PlanRequest {
+        self.shards = shards;
+        self
+    }
+
+    /// Open the shard axis: `--auto` searches these counts against the
+    /// implicit solo candidate. Zeros and duplicates are dropped.
+    pub fn with_shard_grid(mut self, grid: Vec<usize>) -> PlanRequest {
+        let mut g: Vec<usize> = grid.into_iter().filter(|&s| s > 0).collect();
+        g.sort_unstable();
+        g.dedup();
+        self.shard_grid = g;
+        self
+    }
+
+    /// Carry a heartbeat timeout (ms) onto every candidate plan.
+    pub fn with_heartbeat_ms(mut self, ms: Option<usize>) -> PlanRequest {
+        self.heartbeat_ms = ms.filter(|&m| m > 0);
         self
     }
 
@@ -559,6 +631,19 @@ impl Planner {
             None if req.strip_rows.is_some() && req.mem_mb.is_some() => vec![false, true],
             None => vec![false],
         };
+        // The shard axis stays closed (solo only) unless a pin or an
+        // explicit grid opens it — existing candidate-count contracts
+        // hold for every caller that never mentions shards. Solo (0)
+        // enumerates first so cost ties never distribute.
+        let shard_counts: Vec<usize> = match req.shards {
+            Some(s) => vec![s],
+            None if !req.shard_grid.is_empty() => {
+                let mut v = vec![0];
+                v.extend(req.shard_grid.iter().copied());
+                v
+            }
+            None => vec![0],
+        };
         let workers = req.workers.unwrap_or(DEFAULT_WORKERS);
         let arena_mb = req
             .arena_mb
@@ -578,52 +663,57 @@ impl Planner {
                     for &strip_cache in &caches {
                         for &prefetch in &prefetches {
                             for &file_backed in &backings {
-                                let cost = model.predict(
-                                    &w,
-                                    &plan,
-                                    kernel,
-                                    layout,
-                                    workers,
-                                    strip_cache,
-                                    prefetch,
-                                );
-                                let resident_bytes = model.resident_bytes(
-                                    &w,
-                                    &plan,
-                                    kernel,
-                                    layout,
-                                    workers,
-                                    strip_cache,
-                                    prefetch,
-                                    arena_mb,
-                                    file_backed,
-                                    mem_budget,
-                                );
-                                let feasible = mem_budget.map_or(true, |b| resident_bytes <= b);
-                                out.push(Candidate {
-                                    plan: ExecPlan {
-                                        shape,
-                                        workers,
+                                for &shards in &shard_counts {
+                                    let cost = model.predict_sharded(
+                                        &w,
+                                        &plan,
                                         kernel,
                                         layout,
-                                        arena_mb,
-                                        prefetch,
+                                        workers,
                                         strip_cache,
-                                        mem_mb: req.mem_mb.unwrap_or(0),
+                                        prefetch,
+                                        shards,
+                                    );
+                                    let resident_bytes = model.resident_bytes(
+                                        &w,
+                                        &plan,
+                                        kernel,
+                                        layout,
+                                        workers,
+                                        strip_cache,
+                                        prefetch,
+                                        arena_mb,
                                         file_backed,
-                                        retries: req.retries.unwrap_or(0),
-                                        checkpoint_every: req.checkpoint_every.unwrap_or(0),
-                                        deadline_ms: req.deadline_ms.unwrap_or(0),
-                                        priority: req.priority.unwrap_or(0),
-                                        speculate: req.speculate.unwrap_or(false),
-                                        simd: req.simd,
-                                    },
-                                    blocks: plan.len(),
-                                    grid: plan.grid_dims(),
-                                    cost,
-                                    resident_bytes,
-                                    feasible,
-                                });
+                                        mem_budget,
+                                    );
+                                    let feasible = mem_budget.map_or(true, |b| resident_bytes <= b);
+                                    out.push(Candidate {
+                                        plan: ExecPlan {
+                                            shape,
+                                            workers,
+                                            kernel,
+                                            layout,
+                                            arena_mb,
+                                            prefetch,
+                                            strip_cache,
+                                            mem_mb: req.mem_mb.unwrap_or(0),
+                                            file_backed,
+                                            retries: req.retries.unwrap_or(0),
+                                            checkpoint_every: req.checkpoint_every.unwrap_or(0),
+                                            deadline_ms: req.deadline_ms.unwrap_or(0),
+                                            priority: req.priority.unwrap_or(0),
+                                            speculate: req.speculate.unwrap_or(false),
+                                            simd: req.simd,
+                                            shards,
+                                            heartbeat_ms: req.heartbeat_ms.unwrap_or(0),
+                                        },
+                                        blocks: plan.len(),
+                                        grid: plan.grid_dims(),
+                                        cost,
+                                        resident_bytes,
+                                        feasible,
+                                    });
+                                }
                             }
                         }
                     }
@@ -896,6 +986,70 @@ mod tests {
         let rt = req().pin_all(&plan);
         let (again, _) = planner.resolve(&rt);
         assert_eq!(again, plan);
+    }
+
+    #[test]
+    fn shard_axis_opens_only_on_request() {
+        let planner = Planner::default();
+        // Closed by default: the grid (and every count contract above)
+        // is exactly the pre-distributed planner's.
+        let (plan, closed) = planner.resolve(&req());
+        assert_eq!(plan.shards, 0);
+        assert!(closed.candidates.iter().all(|c| c.plan.shards == 0));
+        // An explicit grid triples the cells: solo + {2, 4} each
+        // (zeros and duplicates in the caller's list drop out).
+        let r = req().with_shard_grid(vec![4, 2, 2, 0]);
+        let (_, open) = planner.resolve(&r);
+        assert_eq!(open.candidates.len(), 3 * closed.candidates.len());
+        // A pin collapses the axis to one value, like every other knob.
+        let r = req().with_shards(Some(2));
+        let (pinned, e) = planner.resolve(&r);
+        assert_eq!(pinned.shards, 2);
+        assert_eq!(e.candidates.len(), closed.candidates.len());
+        assert!(e.candidates.iter().all(|c| c.plan.shards == 2));
+        assert!(pinned.summary().contains("shards 2"), "{}", pinned.summary());
+    }
+
+    #[test]
+    fn auto_distributes_only_when_the_freight_pays() {
+        let planner = Planner::default();
+        // Big workload, many rounds, lanes to spare: the model's saved
+        // compute dwarfs the closed-form wire freight.
+        let big = PlanRequest::new(8192, 8192, 3, 8)
+            .with_rounds(30)
+            .with_shard_grid(vec![2, 4]);
+        let (plan, explain) = planner.resolve(&big);
+        assert!(plan.shards > 0, "{}", plan.summary());
+        // No regret under its own model, shard candidates included.
+        for c in &explain.candidates {
+            assert!(explain.chosen().cost.wall_secs <= c.cost.wall_secs);
+        }
+        // Tiny workload with workers already saturating the block
+        // count: distribution cannot save compute, so solo must win.
+        let tiny = PlanRequest::new(128, 128, 3, 2)
+            .with_rounds(2)
+            .with_shard_grid(vec![2, 4]);
+        let tiny = PlanRequest {
+            workers: Some(8),
+            ..tiny
+        };
+        let (plan, _) = planner.resolve(&tiny);
+        assert_eq!(plan.shards, 0, "{}", plan.summary());
+    }
+
+    #[test]
+    fn distributed_knobs_ride_through_and_round_trip() {
+        let planner = Planner::default();
+        let r = req().with_shards(Some(3)).with_heartbeat_ms(Some(250));
+        let (plan, explain) = planner.resolve(&r);
+        assert_eq!(plan.shards, 3);
+        assert_eq!(plan.heartbeat_ms, 250);
+        assert!(explain.candidates.iter().all(|c| c.plan.heartbeat_ms == 250));
+        let rt = req().pin_all(&plan);
+        let (again, _) = planner.resolve(&rt);
+        assert_eq!(again, plan);
+        let s = plan.summary();
+        assert!(s.contains("shards 3") && s.contains("hb 250ms"), "{s}");
     }
 
     #[test]

@@ -35,12 +35,13 @@ use anyhow::{Context, Result};
 use super::admission::{Admission, AdmissionSnapshot};
 use super::job::{HandleShared, JobHandle, JobInput, JobSpec, JobStatus};
 use crate::coordinator::{
-    run_fingerprint, BlockSource, ClusterMode, ClusterOutput, IoMode, Job, JobError, JobId,
-    JobOutcome, RunMachine, Schedule, WorkerContext, WorkerPool,
+    run_fingerprint, BlockSource, ClusterMode, ClusterOutput, Engine, IoMode, Job, JobError,
+    JobId, JobOutcome, RunMachine, Schedule, WorkerContext, WorkerPool,
 };
 use crate::image::Raster;
 use crate::kmeans::StreamInit;
 use crate::resilience::{Checkpoint, FaultPlan};
+use crate::shard::{spawn_shard_pool, ShardEndpoints, ShardSpec};
 use crate::stripstore::{Backing, StripStore};
 
 /// Server construction parameters.
@@ -55,6 +56,14 @@ pub struct ServerConfig {
     /// Admission cap: at most this many jobs open at once; further
     /// `submit` calls block (backpressure) and `try_submit` calls shed.
     pub max_in_flight: usize,
+    /// Distribute block execution to shard processes: the shared pool
+    /// becomes `workers` proxy connections per shard instead of local
+    /// threads. Jobs must carry in-memory raster inputs with the native
+    /// engine; share groups and fault injection stay solo-only.
+    pub shards: Option<ShardEndpoints>,
+    /// Watchdog heartbeat timeout in ms for the shared pool
+    /// (0 = [`crate::resilience::DEFAULT_HEARTBEAT_TIMEOUT_MS`]).
+    pub heartbeat_ms: usize,
 }
 
 impl Default for ServerConfig {
@@ -63,6 +72,8 @@ impl Default for ServerConfig {
             workers: 4,
             schedule: Schedule::Dynamic,
             max_in_flight: 4,
+            shards: None,
+            heartbeat_ms: 0,
         }
     }
 }
@@ -154,8 +165,16 @@ pub struct ClusterServer {
 }
 
 impl ClusterServer {
-    /// Spawn the shared pool and serving thread.
+    /// Spawn the shared pool and serving thread. Panics when a shard
+    /// endpoint refuses the connection — use [`ClusterServer::try_start`]
+    /// where that is an expected runtime condition.
     pub fn start(cfg: ServerConfig) -> ClusterServer {
+        Self::try_start(cfg).expect("start cluster server")
+    }
+
+    /// Fallible start: connecting to remote shard endpoints is the only
+    /// step that can fail.
+    pub fn try_start(cfg: ServerConfig) -> Result<ClusterServer> {
         let admission = Arc::new(Admission::new(cfg.max_in_flight));
         let stats = Arc::new(StatsShared::default());
         let open: OpenJobs = Arc::default();
@@ -164,13 +183,28 @@ impl ClusterServer {
             let stats = Arc::clone(&stats);
             let admission = Arc::clone(&admission);
             let open = Arc::clone(&open);
-            let pool = WorkerPool::spawn(cfg.workers, cfg.schedule);
+            let (pool, guards, sharded) = match &cfg.shards {
+                Some(endpoints) => {
+                    let (pool, guards) = spawn_shard_pool(endpoints, cfg.workers)?;
+                    (pool, guards, true)
+                }
+                None => (WorkerPool::spawn(cfg.workers, cfg.schedule), Vec::new(), false),
+            };
+            if cfg.heartbeat_ms > 0 {
+                pool.set_heartbeat_timeout_ms(cfg.heartbeat_ms as u64);
+            }
             std::thread::Builder::new()
                 .name("blockms-serve".to_string())
-                .spawn(move || ServingLoop::new(pool, admission, stats, open).run(rx))
+                .spawn(move || {
+                    ServingLoop::new(pool, admission, stats, open, sharded).run(rx);
+                    // Loopback shard guards join their handler threads
+                    // only after the serving loop shut the pool down
+                    // (dropping the proxy transports unblocks them).
+                    drop(guards);
+                })
                 .expect("spawn serving thread")
         };
-        ClusterServer {
+        Ok(ClusterServer {
             cfg,
             tx: Some(tx),
             admission,
@@ -179,7 +213,7 @@ impl ClusterServer {
             // Solo Coordinator runs own SOLO_JOB = 0; service ids start at 1.
             next_id: AtomicU64::new(1),
             serving: Some(serving),
-        }
+        })
     }
 
     pub fn workers(&self) -> usize {
@@ -391,6 +425,9 @@ struct ServingLoop {
     /// worker drops its store handle (swept opportunistically and again
     /// after the pool joins).
     cleanup_dirs: Vec<PathBuf>,
+    /// The pool is shard proxies, not local workers: jobs register a
+    /// [`ShardSpec`] instead of a [`WorkerContext`].
+    sharded: bool,
 }
 
 impl ServingLoop {
@@ -399,6 +436,7 @@ impl ServingLoop {
         admission: Arc<Admission>,
         stats: Arc<StatsShared>,
         open: OpenJobs,
+        sharded: bool,
     ) -> ServingLoop {
         ServingLoop {
             pool,
@@ -410,6 +448,7 @@ impl ServingLoop {
             draining: None,
             dispositions: Vec::new(),
             cleanup_dirs: Vec::new(),
+            sharded,
         }
     }
 
@@ -581,6 +620,27 @@ impl ServingLoop {
     fn try_activate(&mut self, new: &NewJob) -> Result<()> {
         let spec = &new.spec;
         let (_, _, channels) = spec.dims();
+        if self.sharded {
+            // What cannot cross the shard boundary fails loudly at
+            // activation, never silently degrades to local compute.
+            anyhow::ensure!(
+                spec.raster().is_some(),
+                "sharded serving requires an in-memory raster input \
+                 (streaming admission decodes leader-side only)"
+            );
+            anyhow::ensure!(
+                matches!(spec.engine, Engine::Native),
+                "sharded serving supports the native engine only"
+            );
+            anyhow::ensure!(
+                spec.share.is_none(),
+                "share groups are per-process tile state; unavailable with shards"
+            );
+            anyhow::ensure!(
+                spec.fault.is_none(),
+                "fault injection targets in-process workers; unavailable with shards"
+            );
+        }
         // The tiling derives from the spec's ExecPlan exactly as the
         // solo coordinator derives it — same shape, same image, same
         // plan, hence bit-identical reduction order.
@@ -594,94 +654,108 @@ impl ServingLoop {
         // decoded tiles are shared; everyone else keys by their own id
         // (the seed behaviour).
         let mut content = new.id;
-        let (source, store, init_centroids) = match (&spec.input, &spec.io) {
-            (JobInput::Raster(img), IoMode::Direct) => {
-                // Same init draw as the solo Coordinator and the
-                // sequential baseline — the root of per-job determinism.
-                let init = spec.cluster.init.centroids(
-                    img.as_pixels(),
-                    spec.cluster.k,
-                    channels,
-                    spec.cluster.seed,
-                );
-                (BlockSource::Direct(Arc::clone(img)), None, init)
-            }
-            (JobInput::Raster(img), IoMode::Strips { strip_rows, file_backed }) => {
-                // Same init draw whether or not the job shares a store:
-                // sharing changes *where bytes come from*, never the
-                // model — bit-identity to the solo run starts here.
-                let init = spec.cluster.init.centroids(
-                    img.as_pixels(),
-                    spec.cluster.k,
-                    channels,
-                    spec.cluster.seed,
-                );
-                let store = match spec.share.and_then(|g| self.groups.get(&g)) {
-                    Some(sg) => {
-                        // Join the live group: one store, one content id
-                        // for N variants. Geometry must match exactly —
-                        // shared tiles over different pixels would
-                        // corrupt results, so mismatches fail loudly.
-                        anyhow::ensure!(
-                            Arc::ptr_eq(&sg.image, img),
-                            "share-group member was submitted with a different image \
-                             than the group's creator (same Arc<Raster> required)"
-                        );
-                        anyhow::ensure!(
-                            sg.strip_rows == *strip_rows,
-                            "share-group strip_rows mismatch: group uses {}, job wants {}",
-                            sg.strip_rows,
-                            strip_rows
-                        );
-                        content = sg.content;
-                        Arc::clone(&sg.store)
-                    }
-                    None => {
-                        let backing = if *file_backed {
-                            let dir = job_store_dir(new.id);
-                            store_dir = Some(dir.clone());
-                            Backing::File(dir)
-                        } else {
-                            Backing::Memory
-                        };
-                        let mut store = StripStore::new(img, *strip_rows, backing)?;
-                        store.enable_cache(spec.exec.strip_cache);
-                        Arc::new(store)
-                    }
-                };
-                (BlockSource::Strips(Arc::clone(&store)), Some(store), init)
-            }
-            (input, IoMode::Strips { strip_rows, file_backed }) => {
-                // Streaming admission (path / synthetic): the pixels are
-                // decoded here, strip by strip, straight into the job's
-                // store; the init sampler rides the same single pass and
-                // draws bit-identically to the in-memory init.
-                let backing = if *file_backed || spec.exec.file_backed {
-                    let dir = job_store_dir(new.id);
-                    store_dir = Some(dir.clone());
-                    Backing::File(dir)
-                } else {
-                    Backing::Memory
-                };
-                let mut sampler = StreamInit::new(
-                    &spec.cluster.init,
-                    spec.cluster.k,
-                    channels,
-                    Some(spec.pixels()),
-                    spec.cluster.seed,
-                )?;
-                let mut src = input.open_source()?;
-                let mut store =
-                    StripStore::ingest(src.as_mut(), *strip_rows, backing, |_, strip| {
-                        sampler.feed(strip)
-                    })?;
-                store.enable_cache(spec.exec.strip_cache);
-                let store = Arc::new(store);
-                let init = sampler.finish()?;
-                (BlockSource::Strips(Arc::clone(&store)), Some(store), init)
-            }
-            (_, IoMode::Direct) => {
-                anyhow::bail!("streaming inputs require strip I/O (validate() enforces this)")
+        let (source, store, init_centroids) = if self.sharded {
+            // The leader never reads pixels after the spec ships: no
+            // store, no strips — just the same init draw the shards'
+            // geometry fingerprints against.
+            let img = spec.raster().expect("ensured above");
+            let init = spec.cluster.init.centroids(
+                img.as_pixels(),
+                spec.cluster.k,
+                channels,
+                spec.cluster.seed,
+            );
+            (BlockSource::Direct(Arc::clone(img)), None, init)
+        } else {
+            match (&spec.input, &spec.io) {
+                (JobInput::Raster(img), IoMode::Direct) => {
+                    // Same init draw as the solo Coordinator and the
+                    // sequential baseline — the root of per-job determinism.
+                    let init = spec.cluster.init.centroids(
+                        img.as_pixels(),
+                        spec.cluster.k,
+                        channels,
+                        spec.cluster.seed,
+                    );
+                    (BlockSource::Direct(Arc::clone(img)), None, init)
+                }
+                (JobInput::Raster(img), IoMode::Strips { strip_rows, file_backed }) => {
+                    // Same init draw whether or not the job shares a store:
+                    // sharing changes *where bytes come from*, never the
+                    // model — bit-identity to the solo run starts here.
+                    let init = spec.cluster.init.centroids(
+                        img.as_pixels(),
+                        spec.cluster.k,
+                        channels,
+                        spec.cluster.seed,
+                    );
+                    let store = match spec.share.and_then(|g| self.groups.get(&g)) {
+                        Some(sg) => {
+                            // Join the live group: one store, one content id
+                            // for N variants. Geometry must match exactly —
+                            // shared tiles over different pixels would
+                            // corrupt results, so mismatches fail loudly.
+                            anyhow::ensure!(
+                                Arc::ptr_eq(&sg.image, img),
+                                "share-group member was submitted with a different image \
+                                 than the group's creator (same Arc<Raster> required)"
+                            );
+                            anyhow::ensure!(
+                                sg.strip_rows == *strip_rows,
+                                "share-group strip_rows mismatch: group uses {}, job wants {}",
+                                sg.strip_rows,
+                                strip_rows
+                            );
+                            content = sg.content;
+                            Arc::clone(&sg.store)
+                        }
+                        None => {
+                            let backing = if *file_backed {
+                                let dir = job_store_dir(new.id);
+                                store_dir = Some(dir.clone());
+                                Backing::File(dir)
+                            } else {
+                                Backing::Memory
+                            };
+                            let mut store = StripStore::new(img, *strip_rows, backing)?;
+                            store.enable_cache(spec.exec.strip_cache);
+                            Arc::new(store)
+                        }
+                    };
+                    (BlockSource::Strips(Arc::clone(&store)), Some(store), init)
+                }
+                (input, IoMode::Strips { strip_rows, file_backed }) => {
+                    // Streaming admission (path / synthetic): the pixels are
+                    // decoded here, strip by strip, straight into the job's
+                    // store; the init sampler rides the same single pass and
+                    // draws bit-identically to the in-memory init.
+                    let backing = if *file_backed || spec.exec.file_backed {
+                        let dir = job_store_dir(new.id);
+                        store_dir = Some(dir.clone());
+                        Backing::File(dir)
+                    } else {
+                        Backing::Memory
+                    };
+                    let mut sampler = StreamInit::new(
+                        &spec.cluster.init,
+                        spec.cluster.k,
+                        channels,
+                        Some(spec.pixels()),
+                        spec.cluster.seed,
+                    )?;
+                    let mut src = input.open_source()?;
+                    let mut store =
+                        StripStore::ingest(src.as_mut(), *strip_rows, backing, |_, strip| {
+                            sampler.feed(strip)
+                        })?;
+                    store.enable_cache(spec.exec.strip_cache);
+                    let store = Arc::new(store);
+                    let init = sampler.finish()?;
+                    (BlockSource::Strips(Arc::clone(&store)), Some(store), init)
+                }
+                (_, IoMode::Direct) => {
+                    anyhow::bail!("streaming inputs require strip I/O (validate() enforces this)")
+                }
             }
         };
         let ctx = Arc::new(WorkerContext {
@@ -765,7 +839,23 @@ impl ServingLoop {
         // QoS: higher-priority jobs drain first from the shared
         // rotation (no-op at the default priority 0).
         self.pool.set_job_priority(new.id, spec.exec.priority);
-        self.pool.register_job(new.id, ctx);
+        if self.sharded {
+            // Shard-workers rebuild the whole execution context from the
+            // spec; the leader-side ctx only feeds in-process workers.
+            let img = spec.raster().expect("ensured above");
+            self.pool.register_shard_spec(
+                new.id,
+                Arc::new(ShardSpec::from_run(
+                    img,
+                    &spec.cluster,
+                    spec.mode,
+                    &spec.io,
+                    &spec.exec,
+                )),
+            );
+        } else {
+            self.pool.register_job(new.id, ctx);
+        }
         self.mirror_pool_stats();
         let jobs = machine.start_round(new.id);
         let expected = jobs.len();

@@ -1,0 +1,488 @@
+//! Shard-side host: serves leader connections over any transport.
+//!
+//! One [`ShardHost`] per shard **process**; one connection handler per
+//! leader connection (the leader opens `--workers` connections per
+//! shard so blocks pipeline). Handlers share the host's job table —
+//! the first `Register` for a job materializes the [`ShardSpec`] into
+//! a [`WorkerContext`] (rebuilding the raster and strip store from the
+//! shipped bytes), later connections reuse the same `Arc`.
+//!
+//! Every handler owns a single-worker [`WorkerPool`] and drives each
+//! incoming `Block` frame through `run_round` — exactly the code path
+//! solo execution uses, which is the heart of the bit-identity
+//! argument: a shard computes the same pure function of the round's
+//! shipped centroids that a local worker would.
+//!
+//! Protocol violations are loud: a `Register` whose header fingerprint
+//! does not match the fingerprint recomputed from the shipped spec, or
+//! a `Block` for a different fingerprint than the job registered,
+//! aborts the connection with [`WireError::Fingerprint`] — the
+//! listener entry point turns that into exit code 2 so a shard never
+//! silently computes on stale geometry.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{
+    Job, JobId, JobOutcome, JobPayload, JobResult, Schedule, WorkerContext, WorkerPool,
+};
+use crate::kmeans::kernel::CentroidDrift;
+
+use super::spec::ShardSpec;
+use super::transport::{loopback_pair, ShardTransport, StreamTransport};
+use super::wire::{BlockPhase, ShardMsg, WireError};
+
+/// Shared fault hook for the kill tests: `(blocks_served, limit)`. The
+/// counter spans all of a shard's connections; once it passes the
+/// limit every handler "dies" (returns without replying) the next time
+/// it receives a block — modelling a whole shard process vanishing
+/// mid-round.
+pub type KillSwitch = (Arc<AtomicUsize>, usize);
+
+struct RegisteredJob {
+    fingerprint: u64,
+    ctx: Arc<WorkerContext>,
+}
+
+/// Per-process shard state: materialized job contexts keyed by job id,
+/// shared across connection handlers.
+pub struct ShardHost {
+    jobs: Mutex<HashMap<JobId, RegisteredJob>>,
+}
+
+impl ShardHost {
+    pub fn new() -> Arc<ShardHost> {
+        Arc::new(ShardHost { jobs: Mutex::new(HashMap::new()) })
+    }
+
+    /// Serve one leader connection until it closes, shuts down, or
+    /// violates the protocol. Blocking; runs on the connection thread.
+    pub fn serve_connection(
+        self: &Arc<ShardHost>,
+        transport: &mut dyn ShardTransport,
+        kill_after: Option<KillSwitch>,
+    ) -> Result<(), WireError> {
+        let pool = WorkerPool::spawn(1, Schedule::Dynamic);
+        let result = self.serve_loop(&pool, transport, kill_after);
+        pool.shutdown();
+        result
+    }
+
+    fn serve_loop(
+        &self,
+        pool: &WorkerPool,
+        transport: &mut dyn ShardTransport,
+        kill_after: Option<KillSwitch>,
+    ) -> Result<(), WireError> {
+        // Jobs registered into *this* connection's pool, with the
+        // fingerprint every later frame for the job must carry.
+        let mut known: HashMap<JobId, u64> = HashMap::new();
+        loop {
+            let frame = match transport.recv() {
+                Ok(frame) => frame,
+                Err(WireError::Closed) => return Ok(()),
+                Err(e) => return Err(e),
+            };
+            match ShardMsg::decode(&frame)? {
+                ShardMsg::Register { job, spec } => {
+                    let want = spec.fingerprint();
+                    if frame.fingerprint != want {
+                        return Err(WireError::Fingerprint { got: frame.fingerprint, want });
+                    }
+                    let ctx = {
+                        let mut jobs = self.jobs.lock().unwrap();
+                        match jobs.get(&job) {
+                            Some(reg) if reg.fingerprint == want => Arc::clone(&reg.ctx),
+                            _ => {
+                                let ctx = Arc::new(spec.materialize(job).map_err(|e| {
+                                    WireError::Mismatch(format!(
+                                        "materialize shard job {job}: {e:#}"
+                                    ))
+                                })?);
+                                jobs.insert(
+                                    job,
+                                    RegisteredJob { fingerprint: want, ctx: Arc::clone(&ctx) },
+                                );
+                                ctx
+                            }
+                        }
+                    };
+                    pool.register_job(job, ctx);
+                    known.insert(job, want);
+                    transport.send(&ShardMsg::RegisterAck.to_frame(want))?;
+                }
+                ShardMsg::Block { job, block, round, phase, centroids, drift, .. } => {
+                    let want = match known.get(&job) {
+                        Some(&fp) => fp,
+                        None => {
+                            return Err(WireError::Mismatch(format!(
+                                "block frame for unregistered job {job}"
+                            )))
+                        }
+                    };
+                    if frame.fingerprint != want {
+                        return Err(WireError::Fingerprint { got: frame.fingerprint, want });
+                    }
+                    if let Some((served, limit)) = &kill_after {
+                        if served.fetch_add(1, Ordering::SeqCst) >= *limit {
+                            // Simulated shard death: vanish without a
+                            // reply; the leader's watchdog + retry
+                            // budget re-queue the block elsewhere.
+                            return Ok(());
+                        }
+                    }
+                    let centroids = Arc::new(centroids);
+                    let drift = drift.map(|d| {
+                        Arc::new(CentroidDrift { per_centroid: d.per_centroid, max: d.max })
+                    });
+                    let payload = match phase {
+                        BlockPhase::Step => JobPayload::Step { centroids, drift },
+                        BlockPhase::Assign => JobPayload::Assign { centroids, drift },
+                        BlockPhase::Local => JobPayload::Local { init: centroids },
+                    };
+                    let work = Job { job, block: block as usize, round, payload };
+                    let reply = match pool.run_round(vec![work]) {
+                        Ok(mut outs) => match outs.pop() {
+                            Some(out) => outcome_to_msg(out),
+                            None => ShardMsg::ErrorResult {
+                                job,
+                                block,
+                                round,
+                                message: "round returned no outcome".into(),
+                            },
+                        },
+                        Err(e) => {
+                            ShardMsg::ErrorResult { job, block, round, message: format!("{e:#}") }
+                        }
+                    };
+                    transport.send(&reply.to_frame(want))?;
+                }
+                ShardMsg::Ping { job } => {
+                    transport.send(&ShardMsg::Pong { job }.to_frame(frame.fingerprint))?;
+                }
+                ShardMsg::Retire { job, purge_content: _ } => {
+                    // No reply — mirrors the in-process Retire payload.
+                    pool.retire_job(job);
+                    known.remove(&job);
+                    self.jobs.lock().unwrap().remove(&job);
+                }
+                ShardMsg::Shutdown => return Ok(()),
+                other => {
+                    return Err(WireError::Mismatch(format!(
+                        "unexpected {:?} frame on shard",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// Convert a pool outcome into its wire reply.
+fn outcome_to_msg(out: JobOutcome) -> ShardMsg {
+    let (job, block, round) = (out.job, out.block as u64, out.round);
+    let t = out.timing;
+    match out.result {
+        JobResult::Step { accum } => ShardMsg::StepResult {
+            job,
+            block,
+            round,
+            k: accum.k as u32,
+            channels: accum.channels as u32,
+            counts: accum.counts,
+            sums: accum.sums,
+            inertia: accum.inertia,
+            io_secs: t.io_secs,
+            compute_secs: t.compute_secs,
+            pixels: t.pixels as u64,
+        },
+        JobResult::Assign { labels, inertia } => ShardMsg::AssignResult {
+            job,
+            block,
+            round,
+            inertia,
+            io_secs: t.io_secs,
+            compute_secs: t.compute_secs,
+            pixels: t.pixels as u64,
+            labels,
+        },
+        JobResult::Local { labels, centroids, inertia, counts } => {
+            let k = counts.len();
+            let channels = if k > 0 { centroids.len() / k } else { 0 };
+            ShardMsg::LocalResult {
+                job,
+                block,
+                round,
+                k: k as u32,
+                channels: channels as u32,
+                labels,
+                centroids,
+                counts,
+                inertia,
+                io_secs: t.io_secs,
+                compute_secs: t.compute_secs,
+                pixels: t.pixels as u64,
+            }
+        }
+        JobResult::Pong => ShardMsg::Pong { job },
+    }
+}
+
+/// An in-process shard: connection handler threads serving the shard
+/// end of loopback transports. Drop joins the handlers, so drop this
+/// **after** shutting down the leader pool that holds the other ends —
+/// handlers exit when their transport closes.
+pub struct LoopbackShard {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Drop for LoopbackShard {
+    fn drop(&mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn one in-process shard with `conns` connections; returns the
+/// leader-side transport ends. `kill_after_blocks` arms the shared
+/// [`KillSwitch`] for shard-death tests.
+pub fn spawn_loopback_shard(
+    conns: usize,
+    kill_after_blocks: Option<usize>,
+) -> (Vec<Box<dyn ShardTransport + Send>>, LoopbackShard) {
+    assert!(conns > 0, "a shard needs at least one connection");
+    let host = ShardHost::new();
+    let kill = kill_after_blocks.map(|limit| (Arc::new(AtomicUsize::new(0)), limit));
+    let mut leader_ends: Vec<Box<dyn ShardTransport + Send>> = Vec::with_capacity(conns);
+    let mut handles = Vec::with_capacity(conns);
+    for c in 0..conns {
+        let (leader_end, mut shard_end) = loopback_pair();
+        let host = Arc::clone(&host);
+        let kill = kill.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("blockms-shard-conn-{c}"))
+            .spawn(move || {
+                if let Err(e) = host.serve_connection(&mut shard_end, kill) {
+                    eprintln!("loopback shard connection {c}: {e}");
+                }
+            })
+            .expect("spawn shard connection thread");
+        leader_ends.push(Box::new(leader_end));
+        handles.push(handle);
+    }
+    (leader_ends, LoopbackShard { handles })
+}
+
+/// Host a shard worker on `addr` (a path with `/` means a Unix-domain
+/// socket, otherwise `host:port` TCP). With `once`, serve exactly one
+/// connection sequentially and return — what the CI drill uses so the
+/// process exits deterministically. A protocol-version or fingerprint
+/// violation exits the process with code 2, both values named.
+pub fn run_listener(addr: &str, once: bool) -> Result<()> {
+    if addr.contains('/') {
+        #[cfg(unix)]
+        {
+            // Remove a stale socket from a previous run, else bind fails.
+            let _ = std::fs::remove_file(addr);
+            let listener = std::os::unix::net::UnixListener::bind(addr)
+                .with_context(|| format!("bind shard socket {addr}"))?;
+            eprintln!("blockms shard-worker: listening on unix socket {addr}");
+            return serve_streams(listener.incoming(), once);
+        }
+        #[cfg(not(unix))]
+        anyhow::bail!("unix-domain shard sockets are not supported on this platform: {addr}");
+    }
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("bind shard address {addr}"))?;
+    eprintln!("blockms shard-worker: listening on tcp {addr}");
+    serve_streams(listener.incoming(), once)
+}
+
+fn serve_streams<S, I>(incoming: I, once: bool) -> Result<()>
+where
+    S: Read + Write + Send + 'static,
+    I: Iterator<Item = std::io::Result<S>>,
+{
+    let host = ShardHost::new();
+    for (cid, stream) in incoming.enumerate() {
+        let stream = stream.context("accept shard connection")?;
+        if once {
+            let mut transport = StreamTransport::new(stream);
+            serve_or_exit(&host, &mut transport, cid);
+            return Ok(());
+        }
+        let host = Arc::clone(&host);
+        std::thread::Builder::new()
+            .name(format!("blockms-shard-conn-{cid}"))
+            .spawn(move || {
+                let mut transport = StreamTransport::new(stream);
+                serve_or_exit(&host, &mut transport, cid);
+            })
+            .context("spawn shard connection thread")?;
+    }
+    Ok(())
+}
+
+fn serve_or_exit(host: &Arc<ShardHost>, transport: &mut dyn ShardTransport, cid: usize) {
+    match host.serve_connection(transport, None) {
+        Ok(()) => {}
+        Err(e @ (WireError::Version { .. } | WireError::Fingerprint { .. })) => {
+            // Satellite: never silently compute on stale geometry.
+            eprintln!("shard-worker connection {cid}: {e}");
+            std::process::exit(2);
+        }
+        Err(e) => eprintln!("shard-worker connection {cid}: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockShape;
+    use crate::coordinator::ClusterMode;
+    use crate::image::SyntheticOrtho;
+    use crate::kmeans::InitMethod;
+    use crate::kmeans::kernel::KernelChoice;
+    use crate::kmeans::math;
+    use crate::kmeans::simd::SimdMode;
+    use crate::kmeans::tile::TileLayout;
+
+    const H: usize = 16;
+    const W: usize = 12;
+    const C: usize = 3;
+    const K: usize = 2;
+
+    fn tiny_spec() -> ShardSpec {
+        let img = SyntheticOrtho::default().with_seed(7).generate(H, W);
+        ShardSpec {
+            height: H,
+            width: W,
+            channels: C,
+            k: K,
+            seed: 7,
+            tol_bits: 0.0f32.to_bits(),
+            max_iters: 4,
+            fixed_iters: Some(4),
+            init: InitMethod::Fixed(vec![0.1, 0.2, 0.3, 0.8, 0.7, 0.6]),
+            mode: ClusterMode::Global,
+            shape: BlockShape::Square { side: 8 },
+            kernel: KernelChoice::Naive,
+            layout: TileLayout::Interleaved,
+            arena_mb: 0,
+            prefetch: false,
+            strip_cache: 0,
+            simd: SimdMode::default(),
+            strip_rows: 0,
+            file_backed: false,
+            pixels: Arc::new(img.as_pixels().to_vec()),
+        }
+    }
+
+    fn register(leader: &mut dyn ShardTransport, job: u64, spec: &ShardSpec) -> u64 {
+        let fp = spec.fingerprint();
+        leader.send(&ShardMsg::Register { job, spec: spec.clone() }.to_frame(fp)).unwrap();
+        let ack = ShardMsg::decode(&leader.recv().unwrap()).unwrap();
+        assert!(matches!(ack, ShardMsg::RegisterAck), "expected ack, got {:?}", ack.kind());
+        fp
+    }
+
+    #[test]
+    fn shard_step_partials_merge_to_the_whole_image_sums() {
+        let spec = tiny_spec();
+        let img = SyntheticOrtho::default().with_seed(7).generate(H, W);
+        let cen = vec![0.2f32, 0.3, 0.4, 0.7, 0.6, 0.5];
+        let (mut ends, shard) = spawn_loopback_shard(1, None);
+        let leader = &mut *ends[0];
+        let fp = register(leader, 5, &spec);
+        // 16x12 in side-8 squares -> 2x2 grid of 4 blocks.
+        let mut merged = math::StepAccum::zeros(K, C);
+        for block in 0..4u64 {
+            let msg = ShardMsg::Block {
+                job: 5,
+                block,
+                round: 1,
+                phase: BlockPhase::Step,
+                k: K as u32,
+                channels: C as u32,
+                centroids: cen.clone(),
+                drift: None,
+            };
+            leader.send(&msg.to_frame(fp)).unwrap();
+            match ShardMsg::decode(&leader.recv().unwrap()).unwrap() {
+                ShardMsg::StepResult { block: b, round, counts, sums, inertia, .. } => {
+                    assert_eq!(b, block);
+                    assert_eq!(round, 1);
+                    merged.merge(&math::StepAccum {
+                        k: K,
+                        channels: C,
+                        sums,
+                        counts,
+                        inertia,
+                    });
+                }
+                other => panic!("expected step result, got {:?}", other.kind()),
+            }
+        }
+        leader.send(&ShardMsg::Shutdown.to_frame(fp)).unwrap();
+        drop(ends);
+        drop(shard);
+        let want = math::step(img.as_pixels(), &cen, K, C);
+        assert_eq!(merged.counts, want.counts);
+        for (got, expect) in merged.sums.iter().zip(want.sums.iter()) {
+            assert_eq!(got.to_bits(), expect.to_bits(), "sums must merge bit-exactly");
+        }
+        assert_eq!(merged.inertia.to_bits(), want.inertia.to_bits());
+    }
+
+    #[test]
+    fn register_with_stale_fingerprint_is_refused() {
+        let host = ShardHost::new();
+        let (mut leader, mut shard_end) = loopback_pair();
+        let handle = std::thread::spawn(move || host.serve_connection(&mut shard_end, None));
+        let spec = tiny_spec();
+        let want = spec.fingerprint();
+        leader.send(&ShardMsg::Register { job: 9, spec }.to_frame(0xDEAD)).unwrap();
+        drop(leader);
+        let err = handle.join().unwrap().unwrap_err();
+        match err {
+            WireError::Fingerprint { got, want: w } => {
+                assert_eq!(got, 0xDEAD);
+                assert_eq!(w, want);
+            }
+            other => panic!("expected fingerprint refusal, got {other}"),
+        }
+    }
+
+    #[test]
+    fn kill_switch_drops_the_connection_without_a_reply() {
+        let spec = tiny_spec();
+        let cen = vec![0.2f32, 0.3, 0.4, 0.7, 0.6, 0.5];
+        let (mut ends, shard) = spawn_loopback_shard(1, Some(1));
+        let leader = &mut *ends[0];
+        let fp = register(leader, 1, &spec);
+        let block = |b: u64| ShardMsg::Block {
+            job: 1,
+            block: b,
+            round: 1,
+            phase: BlockPhase::Step,
+            k: K as u32,
+            channels: C as u32,
+            centroids: cen.clone(),
+            drift: None,
+        };
+        leader.send(&block(0).to_frame(fp)).unwrap();
+        let first = ShardMsg::decode(&leader.recv().unwrap()).unwrap();
+        assert!(matches!(first, ShardMsg::StepResult { .. }));
+        // Second block trips the kill switch: the shard vanishes.
+        leader.send(&block(1).to_frame(fp)).unwrap();
+        assert!(matches!(leader.recv(), Err(WireError::Closed)));
+        drop(ends);
+        drop(shard);
+    }
+}

@@ -1,0 +1,143 @@
+//! Multi-process shard execution: the leader/shard-worker split.
+//!
+//! The paper's block decomposition is exactly the unit that shards
+//! across OS processes: the leader runs the unchanged `RunMachine`
+//! round protocol, but its worker pool is a set of [`proxy`] threads
+//! that forward each block over a [`transport`] to shard processes
+//! hosting the real kernels ([`host`]). Per-block partial sums come
+//! back as fixed little-endian [`wire`] frames and merge through the
+//! same deterministic block-ordered reduction as solo — labels,
+//! centroids, counts, and inertia are **bit-identical** to a
+//! single-process run (see `EXPERIMENTS.md` §Distributed for the
+//! argument, and `tests/shard_equivalence.rs` for the proof matrix).
+//!
+//! Module map:
+//! - [`wire`] — versioned, fingerprinted frame codec + closed-form
+//!   payload layouts;
+//! - [`spec`] — the self-contained job description a shard
+//!   materializes (config + knobs + pixels);
+//! - [`transport`] — `ShardTransport` trait: UDS/TCP streams plus the
+//!   in-process loopback the tests and benches use;
+//! - [`host`] — shard-side connection handlers around a single-worker
+//!   pool (`blockms shard-worker` hosts one);
+//! - [`proxy`] — leader-side worker threads that forward instead of
+//!   compute.
+
+pub mod host;
+pub mod proxy;
+pub mod spec;
+pub mod transport;
+pub mod wire;
+
+use anyhow::{bail, Context, Result};
+
+pub use host::{run_listener, spawn_loopback_shard, LoopbackShard, ShardHost};
+pub use proxy::ShardSpecMap;
+pub use spec::ShardSpec;
+pub use transport::{connect, loopback_pair, LoopbackTransport, ShardTransport};
+pub use wire::{wire_stats, ShardMsg, WireError, WIRE_VERSION};
+
+use crate::coordinator::WorkerPool;
+
+/// Where a sharded run's compute lives.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardEndpoints {
+    /// In-process shard threads over loopback transports (tests,
+    /// benches, and `--shards N` without addresses).
+    Loopback { shards: usize },
+    /// One `blockms shard-worker` process per address (UDS path or
+    /// `host:port`).
+    Remote { addrs: Vec<String> },
+}
+
+impl ShardEndpoints {
+    /// Parse the `--shards N[:addr,...]` argument: a bare count means
+    /// in-process loopback shards; with addresses, the count must match
+    /// the address list.
+    pub fn parse(arg: &str) -> Result<ShardEndpoints> {
+        let (count, rest) = match arg.split_once(':') {
+            Some((n, rest)) => (n, Some(rest)),
+            None => (arg, None),
+        };
+        let shards: usize = count
+            .parse()
+            .ok()
+            .filter(|&n| n > 0)
+            .with_context(|| format!("--shards wants a positive count, got {arg:?}"))?;
+        match rest {
+            None => Ok(ShardEndpoints::Loopback { shards }),
+            Some(list) => {
+                let addrs: Vec<String> = list
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|a| !a.is_empty())
+                    .map(String::from)
+                    .collect();
+                if addrs.len() != shards {
+                    bail!(
+                        "--shards {shards} names {} address(es); want exactly {shards}",
+                        addrs.len()
+                    );
+                }
+                Ok(ShardEndpoints::Remote { addrs })
+            }
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        match self {
+            ShardEndpoints::Loopback { shards } => *shards,
+            ShardEndpoints::Remote { addrs } => addrs.len(),
+        }
+    }
+}
+
+/// Build a sharded worker pool: `conns_per_shard` connections to each
+/// shard (so blocks pipeline per shard exactly like `--workers` local
+/// threads), one proxy thread per connection. Returns the loopback
+/// shard guards — drop them **after** `pool.shutdown()`.
+pub fn spawn_shard_pool(
+    endpoints: &ShardEndpoints,
+    conns_per_shard: usize,
+) -> Result<(WorkerPool, Vec<LoopbackShard>)> {
+    assert!(conns_per_shard > 0, "need at least one connection per shard");
+    let mut transports: Vec<Box<dyn ShardTransport + Send>> = Vec::new();
+    let mut guards = Vec::new();
+    match endpoints {
+        ShardEndpoints::Loopback { shards } => {
+            assert!(*shards > 0, "need at least one shard");
+            for _ in 0..*shards {
+                let (ends, guard) = spawn_loopback_shard(conns_per_shard, None);
+                transports.extend(ends);
+                guards.push(guard);
+            }
+        }
+        ShardEndpoints::Remote { addrs } => {
+            for addr in addrs {
+                for _ in 0..conns_per_shard {
+                    transports.push(connect(addr)?);
+                }
+            }
+        }
+    }
+    Ok((WorkerPool::spawn_sharded(transports), guards))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_arg_parses_loopback_and_remote() {
+        assert_eq!(ShardEndpoints::parse("3").unwrap(), ShardEndpoints::Loopback { shards: 3 });
+        assert_eq!(
+            ShardEndpoints::parse("2:/tmp/a.sock,127.0.0.1:9001").unwrap(),
+            ShardEndpoints::Remote {
+                addrs: vec!["/tmp/a.sock".into(), "127.0.0.1:9001".into()]
+            }
+        );
+        assert!(ShardEndpoints::parse("0").is_err());
+        assert!(ShardEndpoints::parse("x").is_err());
+        assert!(ShardEndpoints::parse("2:/tmp/only-one.sock").is_err());
+    }
+}

@@ -1,0 +1,437 @@
+//! Leader-side shard proxies: worker threads that forward blocks over
+//! a transport instead of computing them.
+//!
+//! [`proxy_main`] is the shard analogue of the in-process
+//! `worker_main`: it pops tagged jobs from the same [`JobQueue`],
+//! brackets each block with the same [`Watchdog`] heartbeat stamps,
+//! and reports [`JobOutcome`]s/[`JobError`]s on the same results
+//! channel — so the leader's entire round protocol (retry budgets,
+//! stall escalation, speculation, deterministic block-ordered merge)
+//! works unchanged on top of remote shards.
+//!
+//! Registration is **eager and per-connection**: the first thing a
+//! proxy does (on the warmup ping every run issues) is ship the job's
+//! [`ShardSpec`] and await the ack, so by the time any timed round
+//! begins every connection is registered and the bytes-per-round
+//! closed form in `python/check_distributed_schema.py` is exact.
+//!
+//! Failure model: a shard-reported block error ([`ShardMsg::ErrorResult`])
+//! fails that block and keeps the connection; a transport error fails
+//! the in-flight block and **kills the proxy** — under dynamic
+//! scheduling the re-queued block lands on a surviving connection,
+//! which is precisely the dead-shard recovery path the kill tests
+//! exercise.
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail};
+
+use crate::coordinator::{
+    BlockTiming, Job, JobError, JobId, JobOutcome, JobPayload, JobQueue, JobResult,
+};
+use crate::kmeans::kernel::CentroidDrift;
+use crate::kmeans::math::StepAccum;
+use crate::resilience::Watchdog;
+
+use super::spec::ShardSpec;
+use super::transport::ShardTransport;
+use super::wire::{BlockPhase, ShardMsg, WireDrift};
+
+/// Pool-level spec table: what each proxy ships when it first sees a
+/// job on its connection. Keyed by job id, holding the precomputed
+/// config fingerprint every frame for the job carries.
+pub type ShardSpecMap = Mutex<HashMap<JobId, (u64, Arc<ShardSpec>)>>;
+
+/// What this connection has registered with its shard.
+#[derive(Clone, Copy)]
+struct RegisteredShard {
+    fingerprint: u64,
+    k: u32,
+    channels: u32,
+}
+
+/// Body of one leader-side proxy thread (worker slot `proxy_id` of a
+/// sharded [`crate::coordinator::WorkerPool`]).
+pub fn proxy_main(
+    proxy_id: usize,
+    queue: Arc<JobQueue>,
+    results: Sender<Result<JobOutcome, JobError>>,
+    watchdog: Arc<Watchdog>,
+    specs: Arc<ShardSpecMap>,
+    mut transport: Box<dyn ShardTransport + Send>,
+) {
+    let mut registered: HashMap<JobId, RegisteredShard> = HashMap::new();
+    while let Some(job) = queue.pop(proxy_id) {
+        let reply = match &job.payload {
+            JobPayload::Retire { purge_content } => {
+                // Mirrors the in-process contract: no reply message.
+                if let Some(reg) = registered.remove(&job.job) {
+                    let retire =
+                        ShardMsg::Retire { job: job.job, purge_content: *purge_content };
+                    if transport.send(&retire.to_frame(reg.fingerprint)).is_err() {
+                        return; // dead transport; nothing to report for a retire
+                    }
+                }
+                continue;
+            }
+            JobPayload::Ping => {
+                ping_roundtrip(&mut *transport, &specs, &mut registered, proxy_id, &job)
+                    .map(Ok)
+            }
+            JobPayload::Step { centroids, drift } => block_roundtrip(
+                &mut *transport,
+                &specs,
+                &mut registered,
+                &watchdog,
+                proxy_id,
+                &job,
+                BlockPhase::Step,
+                centroids,
+                drift.as_ref(),
+            ),
+            JobPayload::Assign { centroids, drift } => block_roundtrip(
+                &mut *transport,
+                &specs,
+                &mut registered,
+                &watchdog,
+                proxy_id,
+                &job,
+                BlockPhase::Assign,
+                centroids,
+                drift.as_ref(),
+            ),
+            JobPayload::Local { init } => block_roundtrip(
+                &mut *transport,
+                &specs,
+                &mut registered,
+                &watchdog,
+                proxy_id,
+                &job,
+                BlockPhase::Local,
+                init,
+                None,
+            ),
+        };
+        match reply {
+            Ok(Ok(outcome)) => {
+                if results.send(Ok(outcome)).is_err() {
+                    return; // leader gone
+                }
+            }
+            // The shard reported a block failure but the connection is
+            // healthy: fail the block (the leader's retry budget
+            // re-queues it) and keep serving.
+            Ok(Err(error)) => {
+                let _ = results.send(Err(JobError { job: job.job, block: job.block, error }));
+            }
+            // Transport-level failure: fail the in-flight block, then
+            // die — retries drain onto surviving connections.
+            Err(error) => {
+                let _ = results.send(Err(JobError { job: job.job, block: job.block, error }));
+                return;
+            }
+        }
+    }
+    // Queue closed: polite shutdown so a remote worker's handler exits
+    // promptly instead of waiting for the socket to drop.
+    let _ = transport.send(&ShardMsg::Shutdown.to_frame(0));
+}
+
+/// Ship the job's spec on first contact; later calls are free.
+fn ensure_registered(
+    transport: &mut dyn ShardTransport,
+    specs: &ShardSpecMap,
+    registered: &mut HashMap<JobId, RegisteredShard>,
+    job: JobId,
+) -> anyhow::Result<RegisteredShard> {
+    if let Some(reg) = registered.get(&job) {
+        return Ok(*reg);
+    }
+    let (fingerprint, spec) = {
+        let map = specs.lock().unwrap();
+        map.get(&job).cloned().ok_or_else(|| {
+            anyhow!("no shard spec registered for job {job} (register_shard_spec first)")
+        })?
+    };
+    let reg = RegisteredShard { fingerprint, k: spec.k as u32, channels: spec.channels as u32 };
+    let msg = ShardMsg::Register { job, spec: (*spec).clone() };
+    transport.send(&msg.to_frame(fingerprint))?;
+    match ShardMsg::decode(&transport.recv()?)? {
+        ShardMsg::RegisterAck => {
+            registered.insert(job, reg);
+            Ok(reg)
+        }
+        other => bail!("expected register ack, shard sent {:?}", other.kind()),
+    }
+}
+
+fn ping_roundtrip(
+    transport: &mut dyn ShardTransport,
+    specs: &ShardSpecMap,
+    registered: &mut HashMap<JobId, RegisteredShard>,
+    proxy_id: usize,
+    job: &Job,
+) -> anyhow::Result<JobOutcome> {
+    // Eager registration: the warmup barrier pays the spec-shipping
+    // cost, keeping every timed round's byte count a pure function of
+    // the geometry.
+    let reg = ensure_registered(transport, specs, registered, job.job)?;
+    transport.send(&ShardMsg::Ping { job: job.job }.to_frame(reg.fingerprint))?;
+    match ShardMsg::decode(&transport.recv()?)? {
+        ShardMsg::Pong { .. } => Ok(JobOutcome {
+            job: job.job,
+            block: job.block,
+            round: job.round,
+            worker: proxy_id,
+            timing: BlockTiming::default(),
+            result: JobResult::Pong,
+        }),
+        other => bail!("expected pong, shard sent {:?}", other.kind()),
+    }
+}
+
+/// One strict request/response block exchange. Outer `Err` = the
+/// connection is broken (caller dies); inner `Err` = the shard
+/// reported a block failure (caller keeps the connection).
+#[allow(clippy::too_many_arguments)]
+fn block_roundtrip(
+    transport: &mut dyn ShardTransport,
+    specs: &ShardSpecMap,
+    registered: &mut HashMap<JobId, RegisteredShard>,
+    watchdog: &Watchdog,
+    proxy_id: usize,
+    job: &Job,
+    phase: BlockPhase,
+    centroids: &Arc<Vec<f32>>,
+    drift: Option<&Arc<CentroidDrift>>,
+) -> anyhow::Result<anyhow::Result<JobOutcome>> {
+    let reg = ensure_registered(transport, specs, registered, job.job)?;
+    let msg = ShardMsg::Block {
+        job: job.job,
+        block: job.block as u64,
+        round: job.round,
+        phase,
+        k: reg.k,
+        channels: reg.channels,
+        centroids: centroids.as_ref().clone(),
+        drift: drift
+            .map(|d| WireDrift { per_centroid: d.per_centroid.clone(), max: d.max }),
+    };
+    // Heartbeat brackets the whole roundtrip: a shard that hangs (or
+    // dies without closing the stream) shows up as a stalled proxy and
+    // the leader's watchdog escalation re-queues the block elsewhere.
+    watchdog.begin(proxy_id, job.job, job.block, job.round);
+    let reply = transport.send(&msg.to_frame(reg.fingerprint)).and_then(|()| transport.recv());
+    watchdog.end(proxy_id);
+    msg_to_outcome(proxy_id, job, ShardMsg::decode(&reply?)?)
+}
+
+fn msg_to_outcome(
+    proxy_id: usize,
+    job: &Job,
+    msg: ShardMsg,
+) -> anyhow::Result<anyhow::Result<JobOutcome>> {
+    let check = |j: u64, b: u64, r: u64| -> anyhow::Result<()> {
+        if j != job.job || b != job.block as u64 || r != job.round {
+            bail!(
+                "shard connection out of sync: asked for job {} block {} round {}, \
+                 got job {j} block {b} round {r}",
+                job.job,
+                job.block,
+                job.round
+            );
+        }
+        Ok(())
+    };
+    let outcome = |timing: BlockTiming, result: JobResult| JobOutcome {
+        job: job.job,
+        block: job.block,
+        round: job.round,
+        worker: proxy_id,
+        timing,
+        result,
+    };
+    match msg {
+        ShardMsg::StepResult {
+            job: j,
+            block,
+            round,
+            k,
+            channels,
+            counts,
+            sums,
+            inertia,
+            io_secs,
+            compute_secs,
+            pixels,
+        } => {
+            check(j, block, round)?;
+            let accum = StepAccum {
+                k: k as usize,
+                channels: channels as usize,
+                sums,
+                counts,
+                inertia,
+            };
+            Ok(Ok(outcome(
+                BlockTiming { io_secs, compute_secs, pixels: pixels as usize },
+                JobResult::Step { accum },
+            )))
+        }
+        ShardMsg::AssignResult {
+            job: j,
+            block,
+            round,
+            inertia,
+            io_secs,
+            compute_secs,
+            pixels,
+            labels,
+        } => {
+            check(j, block, round)?;
+            Ok(Ok(outcome(
+                BlockTiming { io_secs, compute_secs, pixels: pixels as usize },
+                JobResult::Assign { labels, inertia },
+            )))
+        }
+        ShardMsg::LocalResult {
+            job: j,
+            block,
+            round,
+            labels,
+            centroids,
+            counts,
+            inertia,
+            io_secs,
+            compute_secs,
+            pixels,
+            ..
+        } => {
+            check(j, block, round)?;
+            Ok(Ok(outcome(
+                BlockTiming { io_secs, compute_secs, pixels: pixels as usize },
+                JobResult::Local { labels, centroids, inertia, counts },
+            )))
+        }
+        ShardMsg::ErrorResult { job: j, block, round, message } => {
+            check(j, block, round)?;
+            Ok(Err(anyhow!("shard reported: {message}")))
+        }
+        other => bail!("expected a result frame, shard sent {:?}", other.kind()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockShape;
+    use crate::coordinator::{ClusterMode, Schedule};
+    use crate::image::SyntheticOrtho;
+    use crate::kmeans::kernel::KernelChoice;
+    use crate::kmeans::math;
+    use crate::kmeans::simd::SimdMode;
+    use crate::kmeans::tile::TileLayout;
+    use crate::kmeans::InitMethod;
+    use crate::resilience::DEFAULT_HEARTBEAT_TIMEOUT_MS;
+    use crate::shard::host::spawn_loopback_shard;
+
+    fn tiny_spec() -> ShardSpec {
+        let img = SyntheticOrtho::default().with_seed(11).generate(16, 12);
+        ShardSpec {
+            height: 16,
+            width: 12,
+            channels: 3,
+            k: 2,
+            seed: 11,
+            tol_bits: 0.0f32.to_bits(),
+            max_iters: 4,
+            fixed_iters: Some(4),
+            init: InitMethod::Fixed(vec![0.1, 0.2, 0.3, 0.8, 0.7, 0.6]),
+            mode: ClusterMode::Global,
+            shape: BlockShape::Square { side: 8 },
+            kernel: KernelChoice::Naive,
+            layout: TileLayout::Interleaved,
+            arena_mb: 0,
+            prefetch: false,
+            strip_cache: 0,
+            simd: SimdMode::default(),
+            strip_rows: 0,
+            file_backed: false,
+            pixels: Arc::new(img.as_pixels().to_vec()),
+        }
+    }
+
+    #[test]
+    fn proxy_drives_blocks_through_a_loopback_shard() {
+        let spec = tiny_spec();
+        let (h, w, c, k) = (spec.height, spec.width, spec.channels, spec.k);
+        let img = SyntheticOrtho::default().with_seed(spec.seed).generate(h, w);
+        let (mut ends, shard) = spawn_loopback_shard(1, None);
+        let queue = Arc::new(JobQueue::new(1, Schedule::Dynamic));
+        let watchdog = Arc::new(Watchdog::new(1, DEFAULT_HEARTBEAT_TIMEOUT_MS));
+        let specs: Arc<ShardSpecMap> = Arc::new(Mutex::new(HashMap::new()));
+        let fp = spec.fingerprint();
+        specs.lock().unwrap().insert(3, (fp, Arc::new(spec)));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let transport = ends.pop().unwrap();
+        let qh = Arc::clone(&queue);
+        let handle = std::thread::spawn(move || {
+            proxy_main(0, qh, tx, watchdog, specs, transport);
+        });
+        let cen = Arc::new(vec![0.2f32, 0.3, 0.4, 0.7, 0.6, 0.5]);
+        let blocks = 4; // 16x12 in side-8 squares
+        queue.push_round(
+            (0..blocks)
+                .map(|b| Job {
+                    job: 3,
+                    block: b,
+                    round: 1,
+                    payload: JobPayload::Step { centroids: Arc::clone(&cen), drift: None },
+                })
+                .collect(),
+        );
+        let mut merged = StepAccum::zeros(k, c);
+        for _ in 0..blocks {
+            let out = rx.recv().unwrap().unwrap();
+            match out.result {
+                JobResult::Step { accum } => merged.merge(&accum),
+                other => panic!("expected step outcome, got {other:?}"),
+            }
+        }
+        queue.close();
+        handle.join().unwrap();
+        drop(ends);
+        drop(shard);
+        let want = math::step(img.as_pixels(), &cen, k, c);
+        assert_eq!(merged.counts, want.counts);
+        assert_eq!(merged.inertia.to_bits(), want.inertia.to_bits());
+    }
+
+    #[test]
+    fn missing_spec_fails_the_block_and_kills_the_proxy() {
+        let (mut ends, shard) = spawn_loopback_shard(1, None);
+        let queue = Arc::new(JobQueue::new(1, Schedule::Dynamic));
+        let watchdog = Arc::new(Watchdog::new(1, DEFAULT_HEARTBEAT_TIMEOUT_MS));
+        let specs: Arc<ShardSpecMap> = Arc::new(Mutex::new(HashMap::new()));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let transport = ends.pop().unwrap();
+        let qh = Arc::clone(&queue);
+        let handle = std::thread::spawn(move || {
+            proxy_main(0, qh, tx, watchdog, specs, transport);
+        });
+        queue.push_round(vec![Job {
+            job: 9,
+            block: 0,
+            round: 1,
+            payload: JobPayload::Step { centroids: Arc::new(vec![0.0; 6]), drift: None },
+        }]);
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.error.to_string().contains("no shard spec registered"), "{err}");
+        handle.join().unwrap();
+        queue.close();
+        drop(ends);
+        drop(shard);
+    }
+}

@@ -1,0 +1,434 @@
+//! The shard workload description: everything a `blockms shard-worker`
+//! needs to rebuild the leader's exact run — geometry, clustering
+//! config, execution knobs, and the raw pixels themselves.
+//!
+//! The spec rides in every `Register` frame. Shipping pixels (rather
+//! than assuming a shared filesystem) keeps the protocol self-contained
+//! over plain TCP and makes every shard able to compute **any** block
+//! of the job, which is what lets the leader re-queue a dead shard's
+//! blocks onto survivors without data movement at failure time. The
+//! shard recomputes [`run_fingerprint`] from the decoded spec and
+//! refuses the registration (exit 2) if it disagrees with the frame
+//! header — satellite hardening against silently computing on stale
+//! geometry.
+//!
+//! Payload layout (little-endian, after the Register frame's job u64):
+//!
+//! ```text
+//! height u64 · width u64 · channels u64 · k u64 · seed u64
+//! tol_bits u32 · max_iters u64 · has_fixed u8 · fixed_iters u64
+//! init_tag u8 (0 sample | 1 ++ | 2 fixed, then n u64 + n×f32)
+//! mode u8 (0 global | 1 local)
+//! shape_tag u8 (0 rows | 1 cols | 2 square | 3 custom) · a u64 · b u64
+//! kernel u8 (0 naive | 1 pruned | 2 fused | 3 lanes | 4 simd)
+//! layout u8 (0 interleaved | 1 soa)
+//! arena_mb u64 · prefetch u8 · strip_cache u64
+//! simd_level u8 (0 portable | 1 neon | 2 avx2 | 3 avx512) · fma u8
+//! strip_rows u64 (0 = direct crops) · file_backed u8
+//! pixel_len u64 · pixel_len×f32 interleaved samples
+//! ```
+//!
+//! Fixed part: 118 bytes (+ 8 + 4·len for a Fixed init), so a Register
+//! frame is `20 + 8 + 118 + 4·h·w·c` bytes — the closed form
+//! `python/check_distributed_schema.py` recomputes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::wire::{ByteReader, ByteWriter, WireError};
+use crate::blocks::{BlockPlan, BlockShape};
+use crate::coordinator::{
+    run_fingerprint, BlockSource, ClusterConfig, ClusterMode, Engine, IoMode, JobId, WorkerContext,
+};
+use crate::image::Raster;
+use crate::kmeans::kernel::KernelChoice;
+use crate::kmeans::simd::{SimdLevel, SimdMode};
+use crate::kmeans::tile::TileLayout;
+use crate::kmeans::InitMethod;
+use crate::plan::ExecPlan;
+use crate::stripstore::{Backing, StripStore};
+
+/// Size of the spec payload minus the pixel block and any Fixed-init
+/// centroids (see the module-level layout table).
+pub const SPEC_FIXED_BYTES: usize = 118;
+
+// Like the coordinator's solo-store sequence: two shard jobs with
+// file-backed strips must never share a backing file, and the pid keeps
+// cross-process TMPDIR sharing safe.
+static SHARD_STORE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn shard_store_dir() -> std::path::PathBuf {
+    let seq = SHARD_STORE_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("blockms_shard_p{}_{}", std::process::id(), seq))
+}
+
+/// Self-contained description of one sharded job (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardSpec {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub k: usize,
+    pub seed: u64,
+    /// `ClusterConfig::tol` as raw f32 bits — survives the wire exactly.
+    pub tol_bits: u32,
+    pub max_iters: usize,
+    pub fixed_iters: Option<usize>,
+    pub init: InitMethod,
+    pub mode: ClusterMode,
+    pub shape: BlockShape,
+    pub kernel: KernelChoice,
+    pub layout: TileLayout,
+    pub arena_mb: usize,
+    pub prefetch: bool,
+    pub strip_cache: usize,
+    pub simd: SimdMode,
+    /// Strip height of the shard's I/O model (0 = direct crops from the
+    /// rebuilt raster).
+    pub strip_rows: usize,
+    /// Back the shard's strip store with a real file (exercises the
+    /// same out-of-core path as solo file backing).
+    pub file_backed: bool,
+    /// The job's interleaved `h·w·c` samples, shipped verbatim.
+    pub pixels: Arc<Vec<f32>>,
+}
+
+impl ShardSpec {
+    /// Build the spec for a run the leader is about to distribute.
+    pub fn from_run(
+        img: &Raster,
+        ccfg: &ClusterConfig,
+        mode: ClusterMode,
+        io: &IoMode,
+        exec: &ExecPlan,
+    ) -> ShardSpec {
+        let (strip_rows, file_backed) = match *io {
+            IoMode::Direct => (0, false),
+            IoMode::Strips { strip_rows, file_backed } => (strip_rows, file_backed),
+        };
+        ShardSpec {
+            height: img.height(),
+            width: img.width(),
+            channels: img.channels(),
+            k: ccfg.k,
+            seed: ccfg.seed,
+            tol_bits: ccfg.tol.to_bits(),
+            max_iters: ccfg.max_iters,
+            fixed_iters: ccfg.fixed_iters,
+            init: ccfg.init.clone(),
+            mode,
+            shape: exec.shape,
+            kernel: exec.kernel,
+            layout: exec.layout,
+            arena_mb: exec.arena_mb,
+            prefetch: exec.prefetch,
+            strip_cache: exec.strip_cache,
+            simd: exec.simd,
+            strip_rows,
+            file_backed,
+            pixels: Arc::new(img.as_pixels().to_vec()),
+        }
+    }
+
+    /// The clustering config this spec round-trips — field-for-field
+    /// what the leader ran with, so the fingerprint below reproduces.
+    pub fn cluster_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            k: self.k,
+            max_iters: self.max_iters,
+            tol: f32::from_bits(self.tol_bits),
+            init: self.init.clone(),
+            seed: self.seed,
+            fixed_iters: self.fixed_iters,
+        }
+    }
+
+    /// The run fingerprint every frame of this job must carry.
+    pub fn fingerprint(&self) -> u64 {
+        run_fingerprint(self.height, self.width, self.channels, &self.cluster_config(), self.mode)
+    }
+
+    /// The single-worker execution plan a shard connection runs blocks
+    /// under (one pool worker per connection; shard-side parallelism is
+    /// the leader opening several connections).
+    pub fn exec_plan(&self) -> ExecPlan {
+        ExecPlan::pinned(self.shape)
+            .with_workers(1)
+            .with_kernel(self.kernel)
+            .with_layout(self.layout)
+            .with_arena_mb(self.arena_mb)
+            .with_prefetch(self.prefetch)
+            .with_strip_cache(self.strip_cache)
+            .with_file_backing(self.file_backed)
+            .with_simd(self.simd)
+    }
+
+    /// Rebuild the worker-facing context: raster from the shipped
+    /// pixels, block plan from the shipped shape, strip store per the
+    /// shipped I/O mode. Identical inputs produce bit-identical
+    /// per-block results on any host (see EXPERIMENTS.md §Distributed).
+    pub fn materialize(&self, job: JobId) -> Result<WorkerContext> {
+        let raster = Arc::new(Raster::from_vec(
+            self.height,
+            self.width,
+            self.channels,
+            self.pixels.as_ref().clone(),
+        ));
+        let plan = Arc::new(BlockPlan::new(self.height, self.width, self.shape));
+        let source = if self.strip_rows > 0 {
+            let backing = if self.file_backed {
+                Backing::File(shard_store_dir())
+            } else {
+                Backing::Memory
+            };
+            let mut store = StripStore::new(&raster, self.strip_rows, backing)
+                .context("shard strip store")?;
+            store.enable_cache(self.strip_cache);
+            BlockSource::Strips(Arc::new(store))
+        } else {
+            BlockSource::Direct(raster)
+        };
+        let backend = Engine::Native
+            .backend_spec(self.k, self.channels)
+            .context("shard backend spec")?;
+        Ok(WorkerContext {
+            plan,
+            source,
+            backend,
+            fault: None,
+            local_mode: self.mode == ClusterMode::Local,
+            exec: self.exec_plan(),
+            content: job,
+        })
+    }
+
+    pub fn encode_into(&self, w: &mut ByteWriter) {
+        w.put_u64(self.height as u64);
+        w.put_u64(self.width as u64);
+        w.put_u64(self.channels as u64);
+        w.put_u64(self.k as u64);
+        w.put_u64(self.seed);
+        w.put_u32(self.tol_bits);
+        w.put_u64(self.max_iters as u64);
+        w.put_u8(self.fixed_iters.is_some() as u8);
+        w.put_u64(self.fixed_iters.unwrap_or(0) as u64);
+        match &self.init {
+            InitMethod::RandomSample => w.put_u8(0),
+            InitMethod::PlusPlus => w.put_u8(1),
+            InitMethod::Fixed(c) => {
+                w.put_u8(2);
+                w.put_u64(c.len() as u64);
+                w.put_f32s(c);
+            }
+        }
+        w.put_u8(match self.mode {
+            ClusterMode::Global => 0,
+            ClusterMode::Local => 1,
+        });
+        let (tag, a, b) = match self.shape {
+            BlockShape::Rows { band_rows } => (0u8, band_rows as u64, 0u64),
+            BlockShape::Cols { band_cols } => (1, band_cols as u64, 0),
+            BlockShape::Square { side } => (2, side as u64, 0),
+            BlockShape::Custom { rows, cols } => (3, rows as u64, cols as u64),
+        };
+        w.put_u8(tag);
+        w.put_u64(a);
+        w.put_u64(b);
+        w.put_u8(match self.kernel {
+            KernelChoice::Naive => 0,
+            KernelChoice::Pruned => 1,
+            KernelChoice::Fused => 2,
+            KernelChoice::Lanes => 3,
+            KernelChoice::Simd => 4,
+        });
+        w.put_u8(match self.layout {
+            TileLayout::Interleaved => 0,
+            TileLayout::Soa => 1,
+        });
+        w.put_u64(self.arena_mb as u64);
+        w.put_u8(self.prefetch as u8);
+        w.put_u64(self.strip_cache as u64);
+        w.put_u8(match self.simd.level {
+            SimdLevel::Portable => 0,
+            SimdLevel::Neon => 1,
+            SimdLevel::Avx2 => 2,
+            SimdLevel::Avx512 => 3,
+        });
+        w.put_u8(self.simd.fma as u8);
+        w.put_u64(self.strip_rows as u64);
+        w.put_u8(self.file_backed as u8);
+        w.put_u64(self.pixels.len() as u64);
+        w.put_f32s(&self.pixels);
+    }
+
+    pub fn decode_from(r: &mut ByteReader<'_>) -> Result<ShardSpec, WireError> {
+        let height = r.get_u64()? as usize;
+        let width = r.get_u64()? as usize;
+        let channels = r.get_u64()? as usize;
+        let k = r.get_u64()? as usize;
+        let seed = r.get_u64()?;
+        let tol_bits = r.get_u32()?;
+        let max_iters = r.get_u64()? as usize;
+        let has_fixed = r.get_u8()? != 0;
+        let fixed = r.get_u64()? as usize;
+        let init = match r.get_u8()? {
+            0 => InitMethod::RandomSample,
+            1 => InitMethod::PlusPlus,
+            2 => {
+                let n = r.get_u64()? as usize;
+                InitMethod::Fixed(r.get_f32s(n)?)
+            }
+            other => return Err(WireError::Mismatch(format!("unknown init tag {other}"))),
+        };
+        let mode = match r.get_u8()? {
+            0 => ClusterMode::Global,
+            1 => ClusterMode::Local,
+            other => return Err(WireError::Mismatch(format!("unknown mode tag {other}"))),
+        };
+        let shape_tag = r.get_u8()?;
+        let a = r.get_u64()? as usize;
+        let b = r.get_u64()? as usize;
+        let shape = match shape_tag {
+            0 => BlockShape::Rows { band_rows: a },
+            1 => BlockShape::Cols { band_cols: a },
+            2 => BlockShape::Square { side: a },
+            3 => BlockShape::Custom { rows: a, cols: b },
+            other => return Err(WireError::Mismatch(format!("unknown shape tag {other}"))),
+        };
+        let kernel = match r.get_u8()? {
+            0 => KernelChoice::Naive,
+            1 => KernelChoice::Pruned,
+            2 => KernelChoice::Fused,
+            3 => KernelChoice::Lanes,
+            4 => KernelChoice::Simd,
+            other => return Err(WireError::Mismatch(format!("unknown kernel tag {other}"))),
+        };
+        let layout = match r.get_u8()? {
+            0 => TileLayout::Interleaved,
+            1 => TileLayout::Soa,
+            other => return Err(WireError::Mismatch(format!("unknown layout tag {other}"))),
+        };
+        let arena_mb = r.get_u64()? as usize;
+        let prefetch = r.get_u8()? != 0;
+        let strip_cache = r.get_u64()? as usize;
+        let level = match r.get_u8()? {
+            0 => SimdLevel::Portable,
+            1 => SimdLevel::Neon,
+            2 => SimdLevel::Avx2,
+            3 => SimdLevel::Avx512,
+            other => return Err(WireError::Mismatch(format!("unknown simd level tag {other}"))),
+        };
+        let fma = r.get_u8()? != 0;
+        let strip_rows = r.get_u64()? as usize;
+        let file_backed = r.get_u8()? != 0;
+        let pixel_len = r.get_u64()? as usize;
+        if pixel_len != height * width * channels {
+            return Err(WireError::Mismatch(format!(
+                "pixel payload {pixel_len} does not cover {height}x{width}x{channels}"
+            )));
+        }
+        let pixels = Arc::new(r.get_f32s(pixel_len)?);
+        Ok(ShardSpec {
+            height,
+            width,
+            channels,
+            k,
+            seed,
+            tol_bits,
+            max_iters,
+            fixed_iters: has_fixed.then_some(fixed),
+            init,
+            mode,
+            shape,
+            kernel,
+            layout,
+            arena_mb,
+            prefetch,
+            strip_cache,
+            simd: SimdMode { level, fma },
+            strip_rows,
+            file_backed,
+            pixels,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::SyntheticOrtho;
+
+    fn spec() -> ShardSpec {
+        let img = SyntheticOrtho::default().with_seed(7).generate(24, 20);
+        let ccfg = ClusterConfig {
+            k: 3,
+            max_iters: 5,
+            tol: 0.25,
+            init: InitMethod::RandomSample,
+            seed: 11,
+            fixed_iters: Some(4),
+        };
+        let io = IoMode::Strips { strip_rows: 8, file_backed: false };
+        let exec = ExecPlan::pinned(BlockShape::Square { side: 8 })
+            .with_kernel(KernelChoice::Lanes)
+            .with_strip_cache(2);
+        ShardSpec::from_run(&img, &ccfg, ClusterMode::Global, &io, &exec)
+    }
+
+    #[test]
+    fn roundtrips_bit_exact() {
+        let s = spec();
+        let mut w = ByteWriter::new();
+        s.encode_into(&mut w);
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), SPEC_FIXED_BYTES + 4 * s.pixels.len());
+        let back = ShardSpec::decode_from(&mut ByteReader::new(&bytes)).unwrap();
+        assert_eq!(back, s);
+        for (a, b) in s.pixels.iter().zip(back.pixels.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fingerprint_matches_leader_formula() {
+        let s = spec();
+        assert_eq!(
+            s.fingerprint(),
+            run_fingerprint(24, 20, 3, &s.cluster_config(), ClusterMode::Global)
+        );
+        // Any config drift must change the fingerprint.
+        let mut other = s.clone();
+        other.seed ^= 1;
+        assert_ne!(other.fingerprint(), s.fingerprint());
+    }
+
+    #[test]
+    fn fixed_init_roundtrips() {
+        let mut s = spec();
+        s.init = InitMethod::Fixed(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+        let mut w = ByteWriter::new();
+        s.encode_into(&mut w);
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), SPEC_FIXED_BYTES + 8 + 9 * 4 + 4 * s.pixels.len());
+        let back = ShardSpec::decode_from(&mut ByteReader::new(&bytes)).unwrap();
+        assert_eq!(back.init, s.init);
+    }
+
+    #[test]
+    fn materialize_rebuilds_the_exact_raster() {
+        let s = spec();
+        let ctx = s.materialize(9).unwrap();
+        assert_eq!(ctx.content, 9);
+        assert_eq!(ctx.plan.len(), BlockPlan::new(24, 20, s.shape).len());
+        match &ctx.source {
+            BlockSource::Strips(store) => {
+                assert_eq!(store.height(), 24);
+            }
+            other => panic!("expected strip source, got {:?}", std::mem::discriminant(other)),
+        }
+        assert_eq!(ctx.exec.workers, 1);
+        assert_eq!(ctx.exec.kernel, KernelChoice::Lanes);
+    }
+}

@@ -1,0 +1,164 @@
+//! Transports that move [`Frame`]s between leader and shard.
+//!
+//! Three implementations of one trait:
+//!
+//! - [`StreamTransport`] over any `Read + Write` stream — the real
+//!   deployment paths, Unix-domain sockets and TCP ([`connect`] picks
+//!   by address shape: a `/` means a socket path, otherwise host:port).
+//! - [`LoopbackTransport`] over in-process channels — what the
+//!   equivalence tests and the `blockms distributed` bench use, so the
+//!   full protocol (framing, registration, fingerprint checks, byte
+//!   accounting) is exercised without sockets.
+//!
+//! Every implementation counts bytes both per-instance and into the
+//! process-wide [`super::wire::wire_stats`] totals the bench reports.
+
+use std::io::{Read, Write};
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{Context, Result};
+
+use super::wire::{note_received, note_sent, read_frame, write_frame, Frame, WireError};
+
+/// A bidirectional, frame-oriented link to one peer. Exactly one
+/// request is in flight per connection (strict request/response), so
+/// implementations need no internal demultiplexing.
+pub trait ShardTransport: Send {
+    fn send(&mut self, frame: &Frame) -> Result<(), WireError>;
+    fn recv(&mut self) -> Result<Frame, WireError>;
+    /// Bytes this instance has written to the wire.
+    fn bytes_sent(&self) -> u64;
+    /// Bytes this instance has read off the wire.
+    fn bytes_received(&self) -> u64;
+}
+
+/// Frame transport over any byte stream (UnixStream, TcpStream).
+pub struct StreamTransport<S> {
+    stream: S,
+    sent: u64,
+    received: u64,
+}
+
+impl<S: Read + Write + Send> StreamTransport<S> {
+    pub fn new(stream: S) -> StreamTransport<S> {
+        StreamTransport { stream, sent: 0, received: 0 }
+    }
+}
+
+impl<S: Read + Write + Send> ShardTransport for StreamTransport<S> {
+    fn send(&mut self, frame: &Frame) -> Result<(), WireError> {
+        write_frame(&mut self.stream, frame)?;
+        let n = frame.wire_len() as u64;
+        self.sent += n;
+        note_sent(n);
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Frame, WireError> {
+        let frame = read_frame(&mut self.stream)?;
+        let n = frame.wire_len() as u64;
+        self.received += n;
+        note_received(n);
+        Ok(frame)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received
+    }
+}
+
+/// Open a leader-side connection to a shard worker. Addresses with a
+/// `/` are Unix-domain socket paths; anything else is `host:port` TCP.
+pub fn connect(addr: &str) -> Result<Box<dyn ShardTransport + Send>> {
+    if addr.contains('/') {
+        #[cfg(unix)]
+        {
+            let stream = std::os::unix::net::UnixStream::connect(addr)
+                .with_context(|| format!("connect shard socket {addr}"))?;
+            return Ok(Box::new(StreamTransport::new(stream)));
+        }
+        #[cfg(not(unix))]
+        anyhow::bail!("unix-domain shard sockets are not supported on this platform: {addr}");
+    }
+    let stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connect shard address {addr}"))?;
+    stream.set_nodelay(true).ok();
+    Ok(Box::new(StreamTransport::new(stream)))
+}
+
+/// In-process transport: whole frames over unbounded channels. Dropping
+/// either end surfaces as [`WireError::Closed`] on the other — which is
+/// exactly how the kill-one-shard tests simulate shard death.
+pub struct LoopbackTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    sent: u64,
+    received: u64,
+}
+
+/// A connected pair of loopback ends (leader end, shard end).
+pub fn loopback_pair() -> (LoopbackTransport, LoopbackTransport) {
+    let (atx, brx) = channel();
+    let (btx, arx) = channel();
+    (
+        LoopbackTransport { tx: atx, rx: arx, sent: 0, received: 0 },
+        LoopbackTransport { tx: btx, rx: brx, sent: 0, received: 0 },
+    )
+}
+
+impl ShardTransport for LoopbackTransport {
+    fn send(&mut self, frame: &Frame) -> Result<(), WireError> {
+        let bytes = frame.to_bytes();
+        let n = bytes.len() as u64;
+        self.tx.send(bytes).map_err(|_| WireError::Closed)?;
+        self.sent += n;
+        note_sent(n);
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Frame, WireError> {
+        let bytes = self.rx.recv().map_err(|_| WireError::Closed)?;
+        let n = bytes.len() as u64;
+        self.received += n;
+        note_received(n);
+        Frame::from_bytes(&bytes)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::wire::ShardMsg;
+
+    #[test]
+    fn loopback_roundtrip_counts_bytes() {
+        let (mut leader, mut shard) = loopback_pair();
+        let frame = ShardMsg::Ping { job: 1 }.to_frame(0xAB);
+        leader.send(&frame).unwrap();
+        let got = shard.recv().unwrap();
+        assert_eq!(got.fingerprint, 0xAB);
+        assert_eq!(leader.bytes_sent(), frame.wire_len() as u64);
+        assert_eq!(shard.bytes_received(), frame.wire_len() as u64);
+    }
+
+    #[test]
+    fn dropped_peer_reads_as_closed() {
+        let (mut leader, shard) = loopback_pair();
+        drop(shard);
+        assert!(matches!(leader.recv(), Err(WireError::Closed)));
+        let frame = ShardMsg::Shutdown.to_frame(0);
+        assert!(matches!(leader.send(&frame), Err(WireError::Closed)));
+    }
+}

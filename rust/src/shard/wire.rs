@@ -1,0 +1,849 @@
+//! Fixed little-endian wire protocol for leader ↔ shard-worker traffic.
+//!
+//! Every frame is a 20-byte header followed by a kind-specific payload:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic        b"BMSH"
+//!      4     1  version      WIRE_VERSION (1)
+//!      5     1  kind         FrameKind discriminant
+//!      6     2  reserved     0
+//!      8     8  fingerprint  run_fingerprint() of the job's config (LE)
+//!     16     4  payload_len  bytes following the header (LE)
+//! ```
+//!
+//! All multi-byte integers and floats are little-endian, independent of
+//! the host: a frame written on any machine parses identically on any
+//! other. The header's `fingerprint` binds every frame to the exact run
+//! configuration (geometry + clustering config + mode, see
+//! [`crate::coordinator::run_fingerprint`]); a shard that receives a
+//! frame whose version or fingerprint does not match what it registered
+//! fails loudly ([`WireError::Version`] / [`WireError::Fingerprint`],
+//! both values named) instead of silently computing on stale geometry.
+//!
+//! Payload layouts are documented per-variant on [`ShardMsg`] and in
+//! EXPERIMENTS.md §Distributed; `python/check_distributed_schema.py`
+//! recomputes the closed-form byte counts from the same tables.
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::spec::ShardSpec;
+
+/// First four bytes of every frame.
+pub const WIRE_MAGIC: [u8; 4] = *b"BMSH";
+/// Protocol version carried in byte 4 of every frame header.
+pub const WIRE_VERSION: u8 = 1;
+/// Fixed frame header size in bytes.
+pub const HEADER_LEN: usize = 20;
+
+// Process-wide transport byte counters. Every transport implementation
+// bumps these so the distributed bench can report exact wire traffic
+// without threading counter handles through the pool.
+static WIRE_SENT: AtomicU64 = AtomicU64::new(0);
+static WIRE_RECEIVED: AtomicU64 = AtomicU64::new(0);
+
+/// Total (sent, received) wire bytes moved by every transport in this
+/// process since start. Loopback traffic counts each frame once on each
+/// side, so for an in-process leader+shard pair sent == received.
+pub fn wire_stats() -> (u64, u64) {
+    (WIRE_SENT.load(Ordering::Relaxed), WIRE_RECEIVED.load(Ordering::Relaxed))
+}
+
+pub(crate) fn note_sent(n: u64) {
+    WIRE_SENT.fetch_add(n, Ordering::Relaxed);
+}
+
+pub(crate) fn note_received(n: u64) {
+    WIRE_RECEIVED.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Frame kind discriminants (header byte 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    Register = 1,
+    RegisterAck = 2,
+    Block = 3,
+    StepResult = 4,
+    AssignResult = 5,
+    LocalResult = 6,
+    ErrorResult = 7,
+    Ping = 8,
+    Pong = 9,
+    Retire = 10,
+    Shutdown = 11,
+}
+
+impl FrameKind {
+    fn from_u8(v: u8) -> Option<FrameKind> {
+        Some(match v {
+            1 => FrameKind::Register,
+            2 => FrameKind::RegisterAck,
+            3 => FrameKind::Block,
+            4 => FrameKind::StepResult,
+            5 => FrameKind::AssignResult,
+            6 => FrameKind::LocalResult,
+            7 => FrameKind::ErrorResult,
+            8 => FrameKind::Ping,
+            9 => FrameKind::Pong,
+            10 => FrameKind::Retire,
+            11 => FrameKind::Shutdown,
+            _ => return None,
+        })
+    }
+}
+
+/// Errors produced by the wire codec and transports.
+#[derive(Debug)]
+pub enum WireError {
+    /// Underlying socket/pipe error.
+    Io(std::io::Error),
+    /// Peer closed the connection (clean close between frames, or a
+    /// loopback channel whose other end dropped).
+    Closed,
+    /// First four bytes were not `BMSH`.
+    BadMagic([u8; 4]),
+    /// Peer speaks a different protocol version. Fatal: a shard exits 2.
+    Version { got: u8, want: u8 },
+    /// Frame fingerprint does not match the shard's registered run
+    /// config. Fatal: a shard exits 2 instead of computing on stale
+    /// geometry.
+    Fingerprint { got: u64, want: u64 },
+    /// Payload ended before a field could be decoded.
+    Truncated { need: usize, have: usize },
+    /// Unknown frame kind byte.
+    BadKind(u8),
+    /// Structurally valid frame that violates the request/response
+    /// protocol (e.g. a result frame arriving at a shard).
+    Mismatch(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+            WireError::Closed => write!(f, "peer closed the shard connection"),
+            WireError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:02x?} (want {WIRE_MAGIC:02x?})")
+            }
+            WireError::Version { got, want } => write!(
+                f,
+                "shard wire protocol version mismatch: peer speaks v{got}, this build speaks v{want}"
+            ),
+            WireError::Fingerprint { got, want } => write!(
+                f,
+                "shard config fingerprint mismatch: frame carries {got:#018x}, \
+                 shard registered {want:#018x} — refusing to compute on stale geometry"
+            ),
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame payload: need {need} bytes, have {have}")
+            }
+            WireError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Mismatch(msg) => write!(f, "shard protocol violation: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// A parsed frame: header fields plus raw payload bytes.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub fingerprint: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Total bytes this frame occupies on the wire.
+    pub fn wire_len(&self) -> usize {
+        HEADER_LEN + self.payload.len()
+    }
+
+    /// Serialize header + payload into one buffer.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.wire_len());
+        buf.extend_from_slice(&WIRE_MAGIC);
+        buf.push(WIRE_VERSION);
+        buf.push(self.kind as u8);
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&self.fingerprint.to_le_bytes());
+        buf.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&self.payload);
+        buf
+    }
+
+    /// Parse one frame from a byte slice (loopback path). The slice must
+    /// hold exactly one frame.
+    pub fn from_bytes(buf: &[u8]) -> Result<Frame, WireError> {
+        let mut cursor = buf;
+        let frame = read_frame(&mut cursor)?;
+        if !cursor.is_empty() {
+            return Err(WireError::Mismatch(format!(
+                "{} trailing bytes after frame payload",
+                cursor.len()
+            )));
+        }
+        Ok(frame)
+    }
+}
+
+/// Write one frame to a stream and flush it.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), WireError> {
+    w.write_all(&frame.to_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame from a stream. EOF at a frame boundary maps to
+/// [`WireError::Closed`]; magic and version are validated here so every
+/// receive path rejects foreign or stale-version peers.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    if let Err(e) = r.read_exact(&mut header) {
+        return Err(if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Closed
+        } else {
+            WireError::Io(e)
+        });
+    }
+    let magic: [u8; 4] = header[0..4].try_into().unwrap();
+    if magic != WIRE_MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = header[4];
+    if version != WIRE_VERSION {
+        return Err(WireError::Version { got: version, want: WIRE_VERSION });
+    }
+    let kind = FrameKind::from_u8(header[5]).ok_or(WireError::BadKind(header[5]))?;
+    let fingerprint = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let payload_len = u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
+    let mut payload = vec![0u8; payload_len];
+    r.read_exact(&mut payload).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Truncated { need: payload_len, have: 0 }
+        } else {
+            WireError::Io(e)
+        }
+    })?;
+    Ok(Frame { kind, fingerprint, payload })
+}
+
+/// Little-endian payload builder.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.buf.reserve(vs.len() * 4);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn put_f64s(&mut self, vs: &[f64]) {
+        self.buf.reserve(vs.len() * 8);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn put_u32s(&mut self, vs: &[u32]) {
+        self.buf.reserve(vs.len() * 4);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn put_u64s(&mut self, vs: &[u64]) {
+        self.buf.reserve(vs.len() * 8);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Little-endian payload cursor; every read is bounds-checked and maps
+/// overruns to [`WireError::Truncated`].
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return Err(WireError::Truncated { need: n, have: self.buf.len() - self.pos });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn get_f64s(&mut self, n: usize) -> Result<Vec<f64>, WireError> {
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn get_u32s(&mut self, n: usize) -> Result<Vec<u32>, WireError> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn get_u64s(&mut self, n: usize) -> Result<Vec<u64>, WireError> {
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn get_str(&mut self) -> Result<String, WireError> {
+        let n = self.get_u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| WireError::Mismatch("non-utf8 string field".into()))
+    }
+}
+
+/// Which kernel pass a [`ShardMsg::Block`] frame requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockPhase {
+    /// Step pass: accumulate per-cluster sums/counts/inertia.
+    Step = 0,
+    /// Assign pass: final labels + inertia.
+    Assign = 1,
+    /// Local per-block clustering (labels + block centroids + counts).
+    Local = 2,
+}
+
+impl BlockPhase {
+    fn from_u8(v: u8) -> Result<BlockPhase, WireError> {
+        match v {
+            0 => Ok(BlockPhase::Step),
+            1 => Ok(BlockPhase::Assign),
+            2 => Ok(BlockPhase::Local),
+            other => Err(WireError::Mismatch(format!("unknown block phase {other}"))),
+        }
+    }
+}
+
+/// Centroid drift rider for pruned/lanes/simd kernels: per-centroid
+/// movement plus the round max, both f64 (exactly what
+/// `CentroidDrift` holds — shipping f64 preserves bit-identity of the
+/// Hamerly bound updates).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireDrift {
+    pub per_centroid: Vec<f64>,
+    pub max: f64,
+}
+
+/// Typed view of every frame the protocol exchanges.
+///
+/// Payload layouts (after the 20-byte header; all little-endian):
+///
+/// | kind          | payload                                                                 |
+/// |---------------|-------------------------------------------------------------------------|
+/// | `Register`    | job u64, then [`ShardSpec`] (see `spec.rs` for the field table)         |
+/// | `RegisterAck` | empty                                                                   |
+/// | `Block`       | job u64, block u64, round u64, phase u8, has_drift u8, k u32, c u32, centroids k·c×f32, drift? (k×f64 + max f64) |
+/// | `StepResult`  | job u64, block u64, round u64, k u32, c u32, counts k×u64, sums k·c×f64, inertia f64, io_secs f64, compute_secs f64, pixels u64 |
+/// | `AssignResult`| job u64, block u64, round u64, inertia f64, io_secs f64, compute_secs f64, pixels u64, n u64, labels n×u32 |
+/// | `LocalResult` | job u64, block u64, round u64, k u32, c u32, n u64, labels n×u32, centroids k·c×f32, counts k×u64, inertia f64, io_secs f64, compute_secs f64, pixels u64 |
+/// | `ErrorResult` | job u64, block u64, round u64, message (u32 len + utf8)                 |
+/// | `Ping`/`Pong` | job u64                                                                 |
+/// | `Retire`      | job u64, has_purge u8, purge_content u64                                |
+/// | `Shutdown`    | empty                                                                   |
+#[derive(Clone, Debug)]
+pub enum ShardMsg {
+    Register {
+        job: u64,
+        spec: ShardSpec,
+    },
+    RegisterAck,
+    Block {
+        job: u64,
+        block: u64,
+        round: u64,
+        phase: BlockPhase,
+        k: u32,
+        channels: u32,
+        centroids: Vec<f32>,
+        drift: Option<WireDrift>,
+    },
+    StepResult {
+        job: u64,
+        block: u64,
+        round: u64,
+        k: u32,
+        channels: u32,
+        counts: Vec<u64>,
+        sums: Vec<f64>,
+        inertia: f64,
+        io_secs: f64,
+        compute_secs: f64,
+        pixels: u64,
+    },
+    AssignResult {
+        job: u64,
+        block: u64,
+        round: u64,
+        inertia: f64,
+        io_secs: f64,
+        compute_secs: f64,
+        pixels: u64,
+        labels: Vec<u32>,
+    },
+    LocalResult {
+        job: u64,
+        block: u64,
+        round: u64,
+        k: u32,
+        channels: u32,
+        labels: Vec<u32>,
+        centroids: Vec<f32>,
+        counts: Vec<u64>,
+        inertia: f64,
+        io_secs: f64,
+        compute_secs: f64,
+        pixels: u64,
+    },
+    ErrorResult {
+        job: u64,
+        block: u64,
+        round: u64,
+        message: String,
+    },
+    Ping {
+        job: u64,
+    },
+    Pong {
+        job: u64,
+    },
+    Retire {
+        job: u64,
+        purge_content: Option<u64>,
+    },
+    Shutdown,
+}
+
+impl ShardMsg {
+    pub fn kind(&self) -> FrameKind {
+        match self {
+            ShardMsg::Register { .. } => FrameKind::Register,
+            ShardMsg::RegisterAck => FrameKind::RegisterAck,
+            ShardMsg::Block { .. } => FrameKind::Block,
+            ShardMsg::StepResult { .. } => FrameKind::StepResult,
+            ShardMsg::AssignResult { .. } => FrameKind::AssignResult,
+            ShardMsg::LocalResult { .. } => FrameKind::LocalResult,
+            ShardMsg::ErrorResult { .. } => FrameKind::ErrorResult,
+            ShardMsg::Ping { .. } => FrameKind::Ping,
+            ShardMsg::Pong { .. } => FrameKind::Pong,
+            ShardMsg::Retire { .. } => FrameKind::Retire,
+            ShardMsg::Shutdown => FrameKind::Shutdown,
+        }
+    }
+
+    /// Encode into a full frame carrying `fingerprint` in the header.
+    pub fn to_frame(&self, fingerprint: u64) -> Frame {
+        Frame { kind: self.kind(), fingerprint, payload: self.encode_payload() }
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            ShardMsg::Register { job, spec } => {
+                w.put_u64(*job);
+                spec.encode_into(&mut w);
+            }
+            ShardMsg::RegisterAck | ShardMsg::Shutdown => {}
+            ShardMsg::Block { job, block, round, phase, k, channels, centroids, drift } => {
+                w.put_u64(*job);
+                w.put_u64(*block);
+                w.put_u64(*round);
+                w.put_u8(*phase as u8);
+                w.put_u8(drift.is_some() as u8);
+                w.put_u32(*k);
+                w.put_u32(*channels);
+                w.put_f32s(centroids);
+                if let Some(d) = drift {
+                    w.put_f64s(&d.per_centroid);
+                    w.put_f64(d.max);
+                }
+            }
+            ShardMsg::StepResult {
+                job,
+                block,
+                round,
+                k,
+                channels,
+                counts,
+                sums,
+                inertia,
+                io_secs,
+                compute_secs,
+                pixels,
+            } => {
+                w.put_u64(*job);
+                w.put_u64(*block);
+                w.put_u64(*round);
+                w.put_u32(*k);
+                w.put_u32(*channels);
+                w.put_u64s(counts);
+                w.put_f64s(sums);
+                w.put_f64(*inertia);
+                w.put_f64(*io_secs);
+                w.put_f64(*compute_secs);
+                w.put_u64(*pixels);
+            }
+            ShardMsg::AssignResult {
+                job,
+                block,
+                round,
+                inertia,
+                io_secs,
+                compute_secs,
+                pixels,
+                labels,
+            } => {
+                w.put_u64(*job);
+                w.put_u64(*block);
+                w.put_u64(*round);
+                w.put_f64(*inertia);
+                w.put_f64(*io_secs);
+                w.put_f64(*compute_secs);
+                w.put_u64(*pixels);
+                w.put_u64(labels.len() as u64);
+                w.put_u32s(labels);
+            }
+            ShardMsg::LocalResult {
+                job,
+                block,
+                round,
+                k,
+                channels,
+                labels,
+                centroids,
+                counts,
+                inertia,
+                io_secs,
+                compute_secs,
+                pixels,
+            } => {
+                w.put_u64(*job);
+                w.put_u64(*block);
+                w.put_u64(*round);
+                w.put_u32(*k);
+                w.put_u32(*channels);
+                w.put_u64(labels.len() as u64);
+                w.put_u32s(labels);
+                w.put_f32s(centroids);
+                w.put_u64s(counts);
+                w.put_f64(*inertia);
+                w.put_f64(*io_secs);
+                w.put_f64(*compute_secs);
+                w.put_u64(*pixels);
+            }
+            ShardMsg::ErrorResult { job, block, round, message } => {
+                w.put_u64(*job);
+                w.put_u64(*block);
+                w.put_u64(*round);
+                w.put_str(message);
+            }
+            ShardMsg::Ping { job } | ShardMsg::Pong { job } => {
+                w.put_u64(*job);
+            }
+            ShardMsg::Retire { job, purge_content } => {
+                w.put_u64(*job);
+                w.put_u8(purge_content.is_some() as u8);
+                w.put_u64(purge_content.unwrap_or(0));
+            }
+        }
+        w.finish()
+    }
+
+    /// Decode a frame's payload according to its kind.
+    pub fn decode(frame: &Frame) -> Result<ShardMsg, WireError> {
+        let mut r = ByteReader::new(&frame.payload);
+        let msg = match frame.kind {
+            FrameKind::Register => {
+                let job = r.get_u64()?;
+                let spec = ShardSpec::decode_from(&mut r)?;
+                ShardMsg::Register { job, spec }
+            }
+            FrameKind::RegisterAck => ShardMsg::RegisterAck,
+            FrameKind::Block => {
+                let job = r.get_u64()?;
+                let block = r.get_u64()?;
+                let round = r.get_u64()?;
+                let phase = BlockPhase::from_u8(r.get_u8()?)?;
+                let has_drift = r.get_u8()? != 0;
+                let k = r.get_u32()?;
+                let channels = r.get_u32()?;
+                let centroids = r.get_f32s(k as usize * channels as usize)?;
+                let drift = if has_drift {
+                    let per_centroid = r.get_f64s(k as usize)?;
+                    let max = r.get_f64()?;
+                    Some(WireDrift { per_centroid, max })
+                } else {
+                    None
+                };
+                ShardMsg::Block { job, block, round, phase, k, channels, centroids, drift }
+            }
+            FrameKind::StepResult => {
+                let job = r.get_u64()?;
+                let block = r.get_u64()?;
+                let round = r.get_u64()?;
+                let k = r.get_u32()?;
+                let channels = r.get_u32()?;
+                let counts = r.get_u64s(k as usize)?;
+                let sums = r.get_f64s(k as usize * channels as usize)?;
+                let inertia = r.get_f64()?;
+                let io_secs = r.get_f64()?;
+                let compute_secs = r.get_f64()?;
+                let pixels = r.get_u64()?;
+                ShardMsg::StepResult {
+                    job,
+                    block,
+                    round,
+                    k,
+                    channels,
+                    counts,
+                    sums,
+                    inertia,
+                    io_secs,
+                    compute_secs,
+                    pixels,
+                }
+            }
+            FrameKind::AssignResult => {
+                let job = r.get_u64()?;
+                let block = r.get_u64()?;
+                let round = r.get_u64()?;
+                let inertia = r.get_f64()?;
+                let io_secs = r.get_f64()?;
+                let compute_secs = r.get_f64()?;
+                let pixels = r.get_u64()?;
+                let n = r.get_u64()? as usize;
+                let labels = r.get_u32s(n)?;
+                ShardMsg::AssignResult {
+                    job,
+                    block,
+                    round,
+                    inertia,
+                    io_secs,
+                    compute_secs,
+                    pixels,
+                    labels,
+                }
+            }
+            FrameKind::LocalResult => {
+                let job = r.get_u64()?;
+                let block = r.get_u64()?;
+                let round = r.get_u64()?;
+                let k = r.get_u32()?;
+                let channels = r.get_u32()?;
+                let n = r.get_u64()? as usize;
+                let labels = r.get_u32s(n)?;
+                let centroids = r.get_f32s(k as usize * channels as usize)?;
+                let counts = r.get_u64s(k as usize)?;
+                let inertia = r.get_f64()?;
+                let io_secs = r.get_f64()?;
+                let compute_secs = r.get_f64()?;
+                let pixels = r.get_u64()?;
+                ShardMsg::LocalResult {
+                    job,
+                    block,
+                    round,
+                    k,
+                    channels,
+                    labels,
+                    centroids,
+                    counts,
+                    inertia,
+                    io_secs,
+                    compute_secs,
+                    pixels,
+                }
+            }
+            FrameKind::ErrorResult => {
+                let job = r.get_u64()?;
+                let block = r.get_u64()?;
+                let round = r.get_u64()?;
+                let message = r.get_str()?;
+                ShardMsg::ErrorResult { job, block, round, message }
+            }
+            FrameKind::Ping => ShardMsg::Ping { job: r.get_u64()? },
+            FrameKind::Pong => ShardMsg::Pong { job: r.get_u64()? },
+            FrameKind::Retire => {
+                let job = r.get_u64()?;
+                let has_purge = r.get_u8()? != 0;
+                let purge = r.get_u64()?;
+                ShardMsg::Retire { job, purge_content: has_purge.then_some(purge) }
+            }
+            FrameKind::Shutdown => ShardMsg::Shutdown,
+        };
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let msg = ShardMsg::Ping { job: 7 };
+        let frame = msg.to_frame(0xDEAD_BEEF_CAFE_F00D);
+        let bytes = frame.to_bytes();
+        assert_eq!(bytes.len(), HEADER_LEN + 8);
+        assert_eq!(&bytes[0..4], b"BMSH");
+        assert_eq!(bytes[4], WIRE_VERSION);
+        let back = Frame::from_bytes(&bytes).unwrap();
+        assert_eq!(back.kind, FrameKind::Ping);
+        assert_eq!(back.fingerprint, 0xDEAD_BEEF_CAFE_F00D);
+        match ShardMsg::decode(&back).unwrap() {
+            ShardMsg::Ping { job } => assert_eq!(job, 7),
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_mismatch_names_both_versions() {
+        let mut bytes = ShardMsg::Shutdown.to_frame(0).to_bytes();
+        bytes[4] = 9;
+        let err = Frame::from_bytes(&bytes).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("v9") && msg.contains(&format!("v{WIRE_VERSION}")), "{msg}");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = ShardMsg::Shutdown.to_frame(0).to_bytes();
+        bytes[0] = b'X';
+        assert!(matches!(Frame::from_bytes(&bytes), Err(WireError::BadMagic(_))));
+    }
+
+    #[test]
+    fn block_frame_roundtrip_with_drift() {
+        let msg = ShardMsg::Block {
+            job: 3,
+            block: 11,
+            round: 4,
+            phase: BlockPhase::Step,
+            k: 2,
+            channels: 3,
+            centroids: vec![0.5, 1.0, -2.25, 8.0, 0.125, 3.5],
+            drift: Some(WireDrift { per_centroid: vec![0.25, 0.0625], max: 0.25 }),
+        };
+        let frame = msg.to_frame(42);
+        // job+block+round (24) + phase+has_drift (2) + k+c (8) + 6 f32 (24)
+        // + 2 f64 + max (24) — the closed form the python checker uses.
+        assert_eq!(frame.payload.len(), 24 + 2 + 8 + 6 * 4 + 2 * 8 + 8);
+        match ShardMsg::decode(&Frame::from_bytes(&frame.to_bytes()).unwrap()).unwrap() {
+            ShardMsg::Block { block, phase, centroids, drift, .. } => {
+                assert_eq!(block, 11);
+                assert_eq!(phase, BlockPhase::Step);
+                assert_eq!(centroids[2].to_bits(), (-2.25f32).to_bits());
+                assert_eq!(drift.unwrap().max, 0.25);
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn step_result_payload_len_matches_closed_form() {
+        let (k, c) = (4usize, 3usize);
+        let msg = ShardMsg::StepResult {
+            job: 0,
+            block: 1,
+            round: 2,
+            k: k as u32,
+            channels: c as u32,
+            counts: vec![0; k],
+            sums: vec![0.0; k * c],
+            inertia: 0.0,
+            io_secs: 0.0,
+            compute_secs: 0.0,
+            pixels: 0,
+        };
+        // 24 + 8 + 8k + 8kc + 32.
+        assert_eq!(msg.to_frame(0).payload.len(), 64 + 8 * k + 8 * k * c);
+    }
+
+    #[test]
+    fn truncated_payload_detected() {
+        let frame = ShardMsg::Ping { job: 1 }.to_frame(0);
+        let truncated = Frame { kind: frame.kind, fingerprint: 0, payload: vec![0u8; 4] };
+        assert!(matches!(ShardMsg::decode(&truncated), Err(WireError::Truncated { .. })));
+    }
+}

@@ -115,6 +115,7 @@ fn mixed_jobs_bit_identical_to_solo() {
         workers: 4,
         schedule: Schedule::Dynamic,
         max_in_flight: 8,
+        ..Default::default()
     });
     // Submission from one thread: the admission gate (cap 8) provides
     // the backpressure while earlier jobs are still in flight.
@@ -155,6 +156,7 @@ fn static_schedule_and_local_mode_match_solo() {
         workers: 3,
         schedule: Schedule::Static,
         max_in_flight: 4,
+        ..Default::default()
     });
     let mut pairs = Vec::new();
     for (i, mode) in [ClusterMode::Global, ClusterMode::Local, ClusterMode::Global]
@@ -192,6 +194,7 @@ fn strip_io_jobs_are_isolated_and_exact() {
         workers: 2,
         schedule: Schedule::Dynamic,
         max_in_flight: 4,
+        ..Default::default()
     });
     // Two same-shaped jobs at once: with per-job backing files a name
     // collision would corrupt one of them.
@@ -240,6 +243,7 @@ fn lanes_service_job_fills_tiles_once_and_matches_solo() {
         workers: 2,
         schedule: Schedule::Static,
         max_in_flight: 2,
+        ..Default::default()
     });
     let img = image(3, h, w, 91);
     let spec = JobSpec::new(
@@ -277,6 +281,7 @@ fn cancellation_mid_round_leaves_others_untouched() {
         workers: 3,
         schedule: Schedule::Dynamic,
         max_in_flight: 4,
+        ..Default::default()
     });
     let mut specs = Vec::new();
     for i in 0..3u64 {
@@ -327,6 +332,7 @@ fn failed_job_does_not_poison_the_pool() {
         workers: 2,
         schedule: Schedule::Dynamic,
         max_in_flight: 3,
+        ..Default::default()
     });
     let mut failing = JobSpec::new(
         image(3, h, w, 1),
@@ -386,6 +392,7 @@ fn admission_cap_never_exceeded() {
         workers: 2,
         schedule: Schedule::Dynamic,
         max_in_flight: cap,
+        ..Default::default()
     }));
     let mut threads = Vec::new();
     for t in 0..12u64 {
@@ -433,6 +440,7 @@ fn try_submit_sheds_at_capacity() {
         workers: 1,
         schedule: Schedule::Dynamic,
         max_in_flight: 2,
+        ..Default::default()
     });
     let heavy: Vec<_> = (0..2u64)
         .map(|i| {

@@ -1,0 +1,167 @@
+//! Distributed execution's headline guarantee: a sharded run is
+//! **bit-identical** to a solo run of the same configuration — same
+//! labels, same centroid bits, same counts, same inertia bits — across
+//! shard counts, kernels, the paper's three block shapes, and both
+//! strip-store backings. The argument (leader-side deterministic
+//! block-ordered reduction over pure per-block functions of the
+//! shipped centroids) lives in EXPERIMENTS.md §Distributed; this file
+//! is the proof matrix, plus the failure half of the contract: a shard
+//! killed mid-round has its blocks re-queued onto survivors and the
+//! recovered run is still bit-identical.
+
+use std::sync::Arc;
+
+use blockms::blocks::BlockShape;
+use blockms::coordinator::{
+    ClusterConfig, ClusterMode, ClusterOutput, Coordinator, CoordinatorConfig, IoMode,
+    RunMachine, WorkerPool, SOLO_JOB,
+};
+use blockms::image::SyntheticOrtho;
+use blockms::kmeans::kernel::KernelChoice;
+use blockms::plan::ExecPlan;
+use blockms::shard::{spawn_loopback_shard, ShardEndpoints, ShardSpec};
+
+fn counts_of(labels: &[u32], k: usize) -> Vec<u64> {
+    let mut counts = vec![0u64; k];
+    for &l in labels {
+        counts[l as usize] += 1;
+    }
+    counts
+}
+
+/// Exact-bits comparison: labels and counts by value, centroids and
+/// inertia by raw bit pattern (`==` on floats would also pass for
+/// -0.0 vs 0.0, which the wire must not conflate).
+fn assert_bit_identical(tag: &str, got: &ClusterOutput, want: &ClusterOutput, k: usize) {
+    assert_eq!(got.labels, want.labels, "{tag}: labels diverged");
+    assert_eq!(got.iterations, want.iterations, "{tag}: iteration count diverged");
+    assert_eq!(got.centroids.len(), want.centroids.len(), "{tag}: centroid count diverged");
+    for (i, (a, b)) in got.centroids.iter().zip(want.centroids.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: centroid component {i} diverged");
+    }
+    assert_eq!(got.inertia.to_bits(), want.inertia.to_bits(), "{tag}: inertia bits diverged");
+    assert_eq!(
+        counts_of(&got.labels, k),
+        counts_of(&want.labels, k),
+        "{tag}: cluster counts diverged"
+    );
+}
+
+/// The matrix: {2, 4} shards × every kernel the shards can host × the
+/// paper's three block shapes × memory- and file-backed strip stores,
+/// each against a fresh solo twin of the identical configuration.
+#[test]
+fn sharded_matrix_is_bit_identical_to_solo() {
+    let img = Arc::new(SyntheticOrtho::default().with_seed(42).generate(40, 36));
+    let ccfg = ClusterConfig { k: 3, max_iters: 6, ..Default::default() };
+    let shapes = [
+        BlockShape::Rows { band_rows: 7 },
+        BlockShape::Cols { band_cols: 9 },
+        BlockShape::Square { side: 11 },
+    ];
+    let kernels = [
+        KernelChoice::Naive,
+        KernelChoice::Pruned,
+        KernelChoice::Lanes,
+        KernelChoice::Simd,
+    ];
+    for shape in shapes {
+        for kernel in kernels {
+            for file_backed in [false, true] {
+                let cfg = CoordinatorConfig {
+                    exec: ExecPlan::pinned(shape).with_workers(2).with_kernel(kernel),
+                    io: IoMode::Strips { strip_rows: 8, file_backed },
+                    ..Default::default()
+                };
+                let solo = Coordinator::new(cfg.clone()).cluster(&img, &ccfg).unwrap();
+                for shards in [2usize, 4] {
+                    let out = Coordinator::new(cfg.clone())
+                        .with_shards(ShardEndpoints::Loopback { shards })
+                        .cluster(&img, &ccfg)
+                        .unwrap();
+                    let tag = format!(
+                        "{shards} shards, {kernel:?}, {shape:?}, file_backed={file_backed}"
+                    );
+                    assert_bit_identical(&tag, &out, &solo, ccfg.k);
+                }
+            }
+        }
+    }
+}
+
+/// Direct (non-strip) block sourcing shards identically too — the spec
+/// ships `strip_rows = 0` and shards crop from the rebuilt raster.
+#[test]
+fn sharded_direct_io_is_bit_identical_to_solo() {
+    let img = Arc::new(SyntheticOrtho::default().with_seed(17).generate(33, 29));
+    let ccfg = ClusterConfig { k: 4, max_iters: 5, ..Default::default() };
+    let cfg = CoordinatorConfig {
+        exec: ExecPlan::pinned(BlockShape::Square { side: 9 })
+            .with_workers(2)
+            .with_kernel(KernelChoice::Pruned),
+        ..Default::default()
+    };
+    let solo = Coordinator::new(cfg.clone()).cluster(&img, &ccfg).unwrap();
+    let out = Coordinator::new(cfg)
+        .with_shards(ShardEndpoints::Loopback { shards: 3 })
+        .cluster(&img, &ccfg)
+        .unwrap();
+    assert_bit_identical("3 shards, direct I/O", &out, &solo, ccfg.k);
+}
+
+/// Kill one of two shards mid-round: its in-flight block fails with a
+/// transport error, the proxy dies, and the retry budget re-queues the
+/// block onto the surviving shard — the run completes and stays
+/// bit-identical to solo. This drives the round protocol by hand with
+/// [`spawn_loopback_shard`]'s kill switch (the coordinator's sharded
+/// pool never arms one).
+#[test]
+fn killed_shard_mid_round_recovers_bit_identically() {
+    let img = Arc::new(SyntheticOrtho::default().with_seed(7).generate(40, 32));
+    let ccfg = ClusterConfig { k: 3, max_iters: 5, fixed_iters: Some(4), ..Default::default() };
+    let exec = ExecPlan::pinned(BlockShape::Square { side: 8 })
+        .with_workers(1)
+        .with_kernel(KernelChoice::Lanes);
+    let solo = Coordinator::new(CoordinatorConfig { exec, ..Default::default() })
+        .cluster(&img, &ccfg)
+        .unwrap();
+
+    // One connection per shard; shard A's whole process "dies" after
+    // serving 3 blocks (round 1 has 20, so it dies mid-round with a
+    // block in flight on its connection).
+    let (ends_a, guard_a) = spawn_loopback_shard(1, Some(3));
+    let (ends_b, guard_b) = spawn_loopback_shard(1, None);
+    let transports: Vec<_> = ends_a.into_iter().chain(ends_b).collect();
+    let pool = WorkerPool::spawn_sharded(transports);
+    let spec = ShardSpec::from_run(&img, &ccfg, ClusterMode::Global, &IoMode::Direct, &exec);
+    pool.register_shard_spec(SOLO_JOB, Arc::new(spec));
+    pool.warmup(SOLO_JOB).unwrap();
+
+    let plan = Arc::new(exec.block_plan(img.height(), img.width()));
+    let init = ccfg.init.centroids(img.as_pixels(), ccfg.k, img.channels(), ccfg.seed);
+    let mut machine =
+        RunMachine::new(ClusterMode::Global, plan, img.channels(), &ccfg, init, None);
+    while !machine.done() {
+        let jobs = machine.start_round(SOLO_JOB);
+        for outcome in pool.run_round_resilient(jobs, 2).unwrap() {
+            if machine.wants(&outcome) {
+                machine.absorb(outcome).unwrap();
+            }
+        }
+        machine.finish_round().unwrap();
+    }
+    pool.shutdown();
+    drop(guard_a);
+    drop(guard_b);
+
+    let m = machine.into_output().unwrap();
+    let labels = m.labels.into_dense().unwrap();
+    assert_eq!(labels, solo.labels, "recovered labels diverged from solo");
+    assert_eq!(m.iterations, solo.iterations);
+    assert_eq!(m.centroids.len(), solo.centroids.len());
+    for (i, (a, b)) in m.centroids.iter().zip(solo.centroids.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "recovered centroid component {i} diverged");
+    }
+    assert_eq!(m.inertia.to_bits(), solo.inertia.to_bits(), "recovered inertia bits diverged");
+    assert_eq!(counts_of(&labels, ccfg.k), counts_of(&solo.labels, ccfg.k));
+}
